@@ -1,0 +1,71 @@
+//! A tour of the compressor zoo: contraction quality, adaptivity and
+//! wire cost of each compressor on the same Hessian-difference input —
+//! the paper's §8/App. C-D story in one screen.
+//!
+//!     cargo run --release --example compressor_tour
+
+use fednl::compressors::{by_name, distortion_sq, weighted_norm_sq, ALL_NAMES};
+use fednl::linalg::packed::PackedUpper;
+use fednl::metrics::report::Table;
+use fednl::rng::{Pcg64, Rng};
+use fednl::utils::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let d = 64;
+    let pu = PackedUpper::new(d);
+    let mut rng = Pcg64::seed_from_u64(2024);
+    // A realistic Hessian difference: mostly small entries, a few large
+    // (the structure TopLEK exploits).
+    let src: Vec<f64> = (0..pu.len())
+        .map(|i| {
+            let base = rng.next_gaussian() * 0.01;
+            if i % 97 == 0 {
+                base + rng.next_gaussian() * 2.0
+            } else {
+                base
+            }
+        })
+        .collect();
+    let total = weighted_norm_sq(&pu, &src);
+
+    let trials = 300u64;
+    let mut table = Table::new(&[
+        "Compressor",
+        "δ (theory)",
+        "α = 1−√(1−δ)",
+        "E‖C(x)−x‖²/‖x‖²",
+        "bound 1−δ",
+        "E[#values]",
+        "E[wire]",
+    ]);
+    for name in ALL_NAMES {
+        let mut c = by_name(name, d, 8, 1)?;
+        let kind = c.kind(pu.len());
+        let mut dist = 0.0;
+        let mut nvals = 0.0;
+        let mut bytes = 0.0;
+        for r in 0..trials {
+            let out = c.compress(&pu, &src, r);
+            dist += distortion_sq(&pu, &src, &out) / total;
+            nvals += out.values.len() as f64;
+            bytes += out.wire_bytes() as f64;
+        }
+        table.row(&[
+            c.name(),
+            format!("{:.4}", kind.delta()),
+            format!("{:.4}", kind.alpha()),
+            format!("{:.4}", dist / trials as f64),
+            format!("{:.4}", 1.0 - kind.delta()),
+            format!("{:.1}", nvals / trials as f64),
+            human_bytes((bytes / trials as f64) as u64),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    println!(
+        "Note how TopLEK's realized contraction ≈ the bound (tight by \n\
+         construction) while sending far fewer than k values, and how\n\
+         RandSeqK matches RandK's statistics with a 1-call PRG + a\n\
+         contiguous memory window."
+    );
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: train L2-regularized logistic regression with FedNL
+//! (TopK compression) on a synthetic dataset, in-process.
+//!
+//!     cargo run --release --example quickstart
+
+use fednl::algorithms::{run_fednl, ClientState, Options};
+use fednl::compressors::by_name;
+use fednl::data::{generate_synthetic, Dataset, LibsvmSample, SynthSpec};
+use fednl::oracle::LogisticOracle;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A small synthetic classification problem (d = 64 features).
+    let spec = SynthSpec::preset("quickstart").unwrap();
+    let synth = generate_synthetic(&spec);
+    let samples: Vec<LibsvmSample> = synth
+        .labels
+        .iter()
+        .zip(&synth.rows)
+        .map(|(l, r)| LibsvmSample { label: *l, features: r.clone() })
+        .collect();
+    let mut ds = Dataset::from_libsvm(&samples, spec.d_raw);
+    ds.reshuffle(42);
+    let d = ds.d;
+
+    // 2. Split across 8 federated clients; each owns a private shard.
+    let clients: Vec<ClientState> = ds
+        .split_even(8)?
+        .into_iter()
+        .enumerate()
+        .map(|(i, shard)| {
+            ClientState::new(
+                i,
+                Box::new(LogisticOracle::new(shard, 1e-3)),
+                by_name("topk", d, 8, 7 + i as u64).unwrap(),
+                None, // theoretical α from the compressor class
+            )
+        })
+        .collect();
+
+    // 3. Run FedNL (Algorithm 1, Option 2) for 50 rounds.
+    let opts = Options { rounds: 90, track_loss: true, ..Default::default() };
+    let mut clients = clients;
+    let trace = run_fednl(&mut clients, &opts, vec![0.0; d]);
+
+    // 4. Superlinear convergence: the grad norm collapses within dozens
+    //    of rounds while only k = 8d of d(d+1)/2 Hessian entries move
+    //    per client per round.
+    println!("round  ||grad||      f(x)");
+    for r in trace.records.iter().step_by(5) {
+        println!("{:>5}  {:<12.3e}  {:.6}", r.round, r.grad_norm, r.loss);
+    }
+    println!(
+        "\nfinal ||grad|| = {:.3e} after {} rounds, {} uploaded",
+        trace.last_grad_norm(),
+        trace.records.len(),
+        fednl::utils::human_bytes(trace.total_bytes_up())
+    );
+    assert!(trace.last_grad_norm() < 1e-8);
+    Ok(())
+}

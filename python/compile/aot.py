@@ -1,0 +1,112 @@
+"""AOT export: lower the Layer-2 oracle to HLO *text* artifacts.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Artifacts (one per padded dataset shape, plus the grad-only variant used
+by line search / baselines):
+
+    artifacts/logistic_oracle_d{D}_n{N}.hlo.txt
+    artifacts/logistic_grad_d{D}_n{N}.hlo.txt
+    artifacts/manifest.json      — shape registry consumed by rust runtime
+
+Shapes cover the paper's three datasets (padded) plus the small shapes the
+examples, integration tests and benches use.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+
+# (name, raw d, raw n_i) — paper Table 2 dataset shapes + harness shapes.
+SHAPES: list[tuple[str, int, int]] = [
+    ("w8a", 301, 350),        # paper §5: d=301, n_i=350
+    ("a9a", 124, 229),        # Table 2
+    ("phishing", 69, 77),     # Table 2
+    ("quickstart", 64, 128),  # examples/quickstart
+    ("tiny", 16, 64),         # integration tests
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_shape(d_raw: int, n_raw: int) -> tuple[int, int, str, str]:
+    d, n = model.pad_shapes(d_raw, n_raw)
+    args = model.make_example_args(d, n)
+    oracle_hlo = to_hlo_text(jax.jit(model.oracle).lower(*args))
+    grad_hlo = to_hlo_text(jax.jit(model.grad_only).lower(*args))
+    return d, n, oracle_hlo, grad_hlo
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact dir")
+    ap.add_argument(
+        "--shapes",
+        default="",
+        help="comma-separated name list to restrict (default: all)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = {s for s in args.shapes.split(",") if s}
+
+    manifest = {"format": "hlo-text", "dtype": "f64", "entries": []}
+    for name, d_raw, n_raw in SHAPES:
+        if only and name not in only:
+            continue
+        d, n, oracle_hlo, grad_hlo = lower_shape(d_raw, n_raw)
+        o_file = f"logistic_oracle_d{d}_n{n}.hlo.txt"
+        g_file = f"logistic_grad_d{d}_n{n}.hlo.txt"
+        with open(os.path.join(args.out, o_file), "w") as f:
+            f.write(oracle_hlo)
+        with open(os.path.join(args.out, g_file), "w") as f:
+            f.write(grad_hlo)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "d_raw": d_raw,
+                "n_raw": n_raw,
+                "d_pad": d,
+                "n_pad": n,
+                "oracle": o_file,
+                "grad": g_file,
+            }
+        )
+        print(f"[aot] {name}: ({d_raw},{n_raw}) -> padded ({d},{n})")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # TSV twin for the self-contained Rust loader (no JSON dependency).
+    with open(os.path.join(args.out, "manifest.tsv"), "w") as f:
+        for e in manifest["entries"]:
+            f.write(
+                f"{e['name']}\t{e['d_raw']}\t{e['n_raw']}\t{e['d_pad']}\t"
+                f"{e['n_pad']}\t{e['oracle']}\t{e['grad']}\n"
+            )
+    print(f"[aot] wrote {len(manifest['entries'])} shapes to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Layer-1 Pallas kernels for the L2-regularized logistic-regression oracle.
+
+The FedNL compute hot-spot (paper §5.10) is the local Hessian oracle
+
+    H_i = A_i · diag(h) · A_iᵀ + λ I            (Eq. 4)
+
+with h_j = w_j · σ(z_j)·(1-σ(z_j)), z = A_iᵀ x the classification margins
+(labels are absorbed into the columns of A_i, paper §5.13). The paper's
+AVX-512 strategy — accumulate symmetric rank-1 updates 4 samples at a time,
+reusing margins/sigmoids across all three oracles (§5.7) — maps to TPU as
+*tiled MXU matmuls*: each grid step loads a (bd × bn) slab of A into VMEM
+and accumulates `slab · diag(h_blk) · slabᵀ` into a (bd × bd) output tile.
+
+All kernels run under ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowering produces plain
+HLO loops that XLA compiles to native code on the Rust side.
+
+Hardware-adaptation notes (DESIGN.md §3):
+  * VMEM budget per grid step ≈ bd·bn + bn + bd·bd doubles. Defaults
+    (bd=16, bn=128) keep this ≈ 2.3 KB·8 = 18 KB ≪ 16 MB VMEM; larger
+    shapes raise bd/bn via `pick_blocks`.
+  * The systolic-array matmul replaces the paper's hand-unrolled rank-1
+    AVX updates; symmetry is *not* exploited inside the kernel (MXU tiles
+    are dense); the Rust-side native oracle does exploit it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_blocks(d: int, n: int) -> tuple[int, int]:
+    """Choose (bd, bn) tile sizes dividing the padded (d, n).
+
+    Shapes fed to the AOT path are pre-padded (see model.pad_shapes) so a
+    divisor always exists; for arbitrary test shapes we fall back to the
+    largest divisor ≤ the target.
+
+    Perf iteration (EXPERIMENTS.md §Perf L1-1): targets raised from
+    (16, 128) to (128, 256). VMEM per grid step for the Gram kernel is
+    2·bd·bn + bd² + bn doubles ≤ 1.3 MB ≪ 16 MB, and the grid shrinks
+    ~30× (d=304: 1083 → 32 steps), which dominates the CPU-PJRT runtime
+    (each step is a loop iteration with dynamic-slice traffic) and on
+    TPU amortizes MXU pipeline fills over 128-wide tiles.
+    """
+
+    def largest_divisor_leq(x: int, cap: int) -> int:
+        for c in range(min(x, cap), 0, -1):
+            if x % c == 0:
+                return c
+        return 1
+
+    return largest_divisor_leq(d, 128), largest_divisor_leq(n, 256)
+
+
+# ---------------------------------------------------------------------------
+# margins: z = Aᵀ x
+# ---------------------------------------------------------------------------
+
+
+def _margins_kernel(a_ref, x_ref, z_ref):
+    # a_ref: (d, bn) slab; x_ref: (d,) full; z_ref: (bn,) output block.
+    z_ref[...] = jnp.dot(
+        a_ref[...].T, x_ref[...], preferred_element_type=a_ref.dtype
+    )
+
+
+def margins(a: jax.Array, x: jax.Array, *, bn: int | None = None) -> jax.Array:
+    """Classification margins z = Aᵀx via a Pallas kernel.
+
+    A is (d, n) with labels absorbed; x is (d,). Returns (n,).
+    """
+    d, n = a.shape
+    if bn is None:
+        _, bn = pick_blocks(d, n)
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _margins_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, bn), lambda j: (0, j)),
+            pl.BlockSpec((d,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a, x)
+
+
+# ---------------------------------------------------------------------------
+# gradient mat-vec: g = A c  (c = per-sample gradient coefficients)
+# ---------------------------------------------------------------------------
+
+
+def _matvec_kernel(a_ref, c_ref, o_ref):
+    # Grid: (d/bd, n/bn); accumulate partial dot over the n dimension.
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], c_ref[...], preferred_element_type=a_ref.dtype
+    )
+
+
+def matvec(
+    a: jax.Array, c: jax.Array, *, bd: int | None = None, bn: int | None = None
+) -> jax.Array:
+    """g = A·c with A (d, n), c (n,) → (d,), tiled over both dims."""
+    d, n = a.shape
+    dbd, dbn = pick_blocks(d, n)
+    bd = bd or dbd
+    bn = bn or dbn
+    grid = (d // bd, n // bn)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bd, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), a.dtype),
+        interpret=True,
+    )(a, c)
+
+
+# ---------------------------------------------------------------------------
+# weighted Gram: H = A · diag(h) · Aᵀ  (the Eq. 4 hot-spot)
+# ---------------------------------------------------------------------------
+
+
+def _wgram_kernel(ai_ref, aj_ref, h_ref, o_ref):
+    # Grid: (d/bd, d/bd, n/bn). Each step accumulates
+    #   (A_i-slab * h-block) @ A_j-slabᵀ  into output tile (i, j).
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    scaled = ai_ref[...] * h_ref[...][None, :]
+    o_ref[...] += jnp.dot(
+        scaled, aj_ref[...].T, preferred_element_type=ai_ref.dtype
+    )
+
+
+def weighted_gram(
+    a: jax.Array, h: jax.Array, *, bd: int | None = None, bn: int | None = None
+) -> jax.Array:
+    """H = A·diag(h)·Aᵀ with A (d, n), h (n,) → (d, d)."""
+    d, n = a.shape
+    dbd, dbn = pick_blocks(d, n)
+    bd = bd or dbd
+    bn = bn or dbn
+    grid = (d // bd, d // bd, n // bn)
+    return pl.pallas_call(
+        _wgram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bd, bn), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bd, bn), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn,), lambda i, j, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((bd, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, d), a.dtype),
+        interpret=True,
+    )(a, a, h)
+
+
+__all__ = ["margins", "matvec", "weighted_gram", "pick_blocks"]

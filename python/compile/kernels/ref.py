@@ -1,0 +1,55 @@
+"""Pure-jnp reference oracle — the correctness ground truth for the Pallas
+kernels (Layer 1) and for the Rust native oracle (which is cross-checked
+against the same closed forms via finite differences on the Rust side).
+
+Implements Eq. (2)-(5) of the paper verbatim, with labels absorbed into the
+columns of A (paper §5.13) and a per-sample weight vector w generalizing
+the 1/n_i factor (w_j = 1/n_real for real samples, 0 for padding — see
+model.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def margins_ref(a: jax.Array, x: jax.Array) -> jax.Array:
+    """z = Aᵀx, A (d, n), x (d,) → (n,)."""
+    return a.T @ x
+
+
+def loss_ref(a: jax.Array, x: jax.Array, w: jax.Array, lam: jax.Array) -> jax.Array:
+    """f(x) = Σ_j w_j · log(1 + exp(-z_j)) + λ/2 ‖x‖²  (Eq. 2)."""
+    z = margins_ref(a, x)
+    # log1p(exp(-z)) computed stably: logaddexp(0, -z).
+    return jnp.sum(w * jnp.logaddexp(0.0, -z)) + 0.5 * lam * jnp.dot(x, x)
+
+
+def grad_ref(a: jax.Array, x: jax.Array, w: jax.Array, lam: jax.Array) -> jax.Array:
+    """∇f(x) = A · (-w · σ(-z)) + λx  (Eq. 3); σ(-z) = 1/(1+exp(z))."""
+    z = margins_ref(a, x)
+    c = -w * jax.nn.sigmoid(-z)
+    return a @ c + lam * x
+
+
+def hessian_ref(a: jax.Array, x: jax.Array, w: jax.Array, lam: jax.Array) -> jax.Array:
+    """∇²f(x) = A · diag(w · σ(z)σ(-z)) · Aᵀ + λI  (Eq. 4, 5)."""
+    d = a.shape[0]
+    z = margins_ref(a, x)
+    h = w * jax.nn.sigmoid(z) * jax.nn.sigmoid(-z)
+    return (a * h[None, :]) @ a.T + lam * jnp.eye(d, dtype=a.dtype)
+
+
+def oracle_ref(
+    a: jax.Array, x: jax.Array, w: jax.Array, lam: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(f, ∇f, ∇²f) in one call — the semantic contract of model.oracle."""
+    return (
+        loss_ref(a, x, w, lam),
+        grad_ref(a, x, w, lam),
+        hessian_ref(a, x, w, lam),
+    )
+
+
+__all__ = ["margins_ref", "loss_ref", "grad_ref", "hessian_ref", "oracle_ref"]

@@ -1,0 +1,97 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp reference.
+
+Hypothesis sweeps shapes and data; every kernel must match ref.py to
+float64 tolerance. This is the CORE correctness signal for the compile
+path — the Rust side trusts these numerics.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from compile.kernels import logistic as k  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+DIMS = st.integers(min_value=1, max_value=24)
+SAMPLES = st.integers(min_value=1, max_value=48)
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _data(d, n, seed, dtype=np.float64):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(d, n)).astype(dtype)
+    x = rng.normal(size=(d,)).astype(dtype)
+    w = (np.full(n, 1.0 / n)).astype(dtype)
+    return jnp.asarray(a), jnp.asarray(x), jnp.asarray(w)
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=DIMS, n=SAMPLES, seed=SEEDS)
+def test_margins_matches_ref(d, n, seed):
+    a, x, _ = _data(d, n, seed)
+    np.testing.assert_allclose(
+        k.margins(a, x), ref.margins_ref(a, x), rtol=1e-12, atol=1e-12
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=DIMS, n=SAMPLES, seed=SEEDS)
+def test_matvec_matches_ref(d, n, seed):
+    a, _, _ = _data(d, n, seed)
+    rng = np.random.default_rng(seed + 1)
+    c = jnp.asarray(rng.normal(size=(n,)))
+    np.testing.assert_allclose(k.matvec(a, c), a @ c, rtol=1e-11, atol=1e-11)
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=DIMS, n=SAMPLES, seed=SEEDS)
+def test_weighted_gram_matches_ref(d, n, seed):
+    a, _, _ = _data(d, n, seed)
+    rng = np.random.default_rng(seed + 2)
+    h = jnp.asarray(np.abs(rng.normal(size=(n,))))
+    expect = (np.asarray(a) * np.asarray(h)[None, :]) @ np.asarray(a).T
+    np.testing.assert_allclose(
+        k.weighted_gram(a, h), expect, rtol=1e-10, atol=1e-10
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=SEEDS)
+def test_weighted_gram_symmetric(seed):
+    a, _, _ = _data(12, 32, seed)
+    h = jnp.abs(jnp.asarray(np.random.default_rng(seed).normal(size=(32,))))
+    g = np.asarray(k.weighted_gram(a, h))
+    np.testing.assert_allclose(g, g.T, rtol=0, atol=1e-12)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_kernels_dtype_preserved(dtype):
+    a, x, w = _data(8, 16, 0, dtype=dtype)
+    assert k.margins(a, x).dtype == dtype
+    assert k.weighted_gram(a, w).dtype == dtype
+
+
+def test_pick_blocks_divides():
+    for d in range(1, 40):
+        for n in range(1, 40):
+            bd, bn = k.pick_blocks(d, n)
+            assert d % bd == 0 and n % bn == 0
+
+
+def test_zero_weight_columns_do_not_contribute():
+    # Padding contract: w_j = 0 ⇒ column j is invisible to grad/Hessian.
+    a, x, _ = _data(8, 32, 7)
+    w = np.zeros(32)
+    w[:10] = 1.0 / 10
+    w = jnp.asarray(w)
+    h = w * jax.nn.sigmoid(k.margins(a, x)) * jax.nn.sigmoid(-k.margins(a, x))
+    full = np.asarray(k.weighted_gram(a, h))
+    trunc = np.asarray(
+        k.weighted_gram(a[:, :10], h[:10] * 0 + np.asarray(h)[:10])
+    )
+    np.testing.assert_allclose(full, trunc, rtol=1e-10, atol=1e-12)

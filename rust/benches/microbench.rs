@@ -1,0 +1,161 @@
+//! Micro-benchmarks of the hot kernels (harness = false; self-contained
+//! criterion-style statistics via `fednl::utils::TimerStats`).
+//!
+//! Run: `cargo bench --bench microbench [-- filter]`
+
+use fednl::compressors::{by_name, ALL_NAMES};
+use fednl::data::ClientShard;
+use fednl::linalg::packed::PackedUpper;
+use fednl::linalg::{cholesky, gauss, iterative, Mat};
+use fednl::oracle::{LogisticOracle, Oracle};
+use fednl::rng::{Pcg64, Rng};
+use fednl::utils::TimerStats;
+
+fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut st = TimerStats::new();
+    for _ in 0..iters {
+        st.time(&mut f);
+    }
+    println!(
+        "{name:<46} min {:>10.3?}µs  median {:>10.3?}µs  mean {:>10.3?}µs ±{:>8.3?}",
+        st.min() * 1e6,
+        st.median() * 1e6,
+        st.mean() * 1e6,
+        st.stddev() * 1e6
+    );
+}
+
+fn random_shard(d: usize, n: usize, seed: u64) -> ClientShard {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut at = Mat::zeros(n, d);
+    for r in 0..n {
+        let lab = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+        for c in 0..d - 1 {
+            at.set(r, c, lab * rng.next_gaussian());
+        }
+        at.set(r, d - 1, lab);
+    }
+    ClientShard { client_id: 0, at }
+}
+
+fn random_spd(d: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let b = Mat::from_vec(d, d, (0..d * d).map(|_| rng.next_gaussian()).collect());
+    let mut a = Mat::zeros(d, d);
+    for i in 0..d {
+        for j in 0..d {
+            let mut s = 0.0;
+            for k in 0..d {
+                s += b.get(k, i) * b.get(k, j);
+            }
+            a.set(i, j, s / d as f64);
+        }
+    }
+    a.add_diag(1.0);
+    a
+}
+
+fn main() {
+    // cargo bench appends `--bench`; ignore flag-like args.
+    let filter = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'))
+        .unwrap_or_default();
+    let want = |n: &str| filter.is_empty() || n.contains(&filter);
+    println!("== microbench (W8A client shape d=301, n_i=350) ==");
+
+    let d = 301;
+    let n_i = 350;
+    let shard = random_shard(d, n_i, 1);
+
+    if want("oracle") {
+        let mut oracle = LogisticOracle::new(shard.clone(), 1e-3);
+        let x = vec![0.05; d];
+        let mut g = vec![0.0; d];
+        let mut h = Mat::zeros(d, d);
+        bench("oracle/fused loss+grad+hessian", 3, 20, || {
+            let _ = oracle.loss_grad_hessian(&x, &mut g, &mut h);
+        });
+        bench("oracle/loss+grad only", 3, 50, || {
+            let _ = oracle.loss_grad(&x, &mut g);
+        });
+        // §5.7 ablation-style: three separate evaluations recompute the
+        // margins three times.
+        bench("oracle/separate loss,grad,hess (3x margins)", 3, 20, || {
+            let _ = oracle.loss(&x);
+            oracle.grad(&x, &mut g);
+            oracle.hessian(&x, &mut h);
+        });
+    }
+
+    if want("solve") {
+        let a = random_spd(d, 2);
+        let mut rng = Pcg64::seed_from_u64(3);
+        let b: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        bench("solve/cholesky (factor+subst)", 2, 20, || {
+            let _ = cholesky::solve_spd(&a, 0.0, &b).unwrap();
+        });
+        bench("solve/gauss elimination", 2, 10, || {
+            let _ = gauss::solve_gauss(&a, &b).unwrap();
+        });
+        bench("solve/conjugate gradient 1e-10", 2, 10, || {
+            let _ = iterative::cg(&a, &b, 1e-10, 2000);
+        });
+    }
+
+    if want("compress") {
+        let pu = PackedUpper::new(d);
+        let mut rng = Pcg64::seed_from_u64(4);
+        let src: Vec<f64> =
+            (0..pu.len()).map(|_| rng.next_gaussian()).collect();
+        for name in ALL_NAMES {
+            let mut c = by_name(name, d, 8, 5).unwrap();
+            let mut round = 0u64;
+            bench(&format!("compress/{name} (packed n={})", pu.len()), 3, 30, || {
+                let out = c.compress(&pu, &src, round);
+                round += 1;
+                std::hint::black_box(out);
+            });
+        }
+    }
+
+    if want("matmul") {
+        let a = random_spd(128, 6);
+        let b = random_spd(128, 7);
+        bench("matmul/naive 128", 2, 10, || {
+            std::hint::black_box(a.matmul_naive(&b));
+        });
+        for tile in [8, 32, 64] {
+            bench(&format!("matmul/tiled{tile} 128"), 2, 10, || {
+                std::hint::black_box(a.matmul_tiled(&b, tile));
+            });
+        }
+    }
+
+    if want("pjrt") {
+        match fednl::runtime::PjrtRuntime::load("artifacts") {
+            Ok(rt) => {
+                let sh = random_shard(301, 350, 8);
+                let mut native = LogisticOracle::new(sh.clone(), 1e-3);
+                match rt.oracle_for_shard(&sh, 1e-3) {
+                    Ok(mut pj) => {
+                        let x = vec![0.05; 301];
+                        let mut g = vec![0.0; 301];
+                        let mut h = Mat::zeros(301, 301);
+                        bench("pjrt/oracle fused (AOT JAX+Pallas)", 2, 10, || {
+                            let _ = pj.loss_grad_hessian(&x, &mut g, &mut h);
+                        });
+                        bench("pjrt/native oracle (same shape)", 2, 10, || {
+                            let _ = native.loss_grad_hessian(&x, &mut g, &mut h);
+                        });
+                    }
+                    Err(e) => println!("pjrt oracle unavailable: {e}"),
+                }
+            }
+            Err(_) => println!("(artifacts not built; skipping pjrt bench)"),
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! End-to-end benches mirroring the paper's tables at bench scale:
+//! Table 1 (single-node per-compressor wall time), Table 3 (multi-node
+//! TCP), and the §4 cost-model sanity row.
+//!
+//! Run: `cargo bench --bench paper_tables`
+//! Full-scale regeneration lives in `fednl experiment table1 --full`.
+
+use fednl::algorithms::{run_fednl_pool, Options};
+use fednl::compressors::ALL_NAMES;
+use fednl::harness::{
+    prepare_problem, run_tcp_experiment, HarnessCfg, TcpAlgo, K_MULT, W8A,
+};
+use fednl::utils::{human_bytes, Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = HarnessCfg {
+        out_dir: std::env::temp_dir()
+            .join("fednl_bench")
+            .to_string_lossy()
+            .into_owned(),
+        ..Default::default()
+    };
+    cfg.ensure_out_dir()?;
+    let problem = prepare_problem(&W8A, &cfg)?;
+
+    println!(
+        "== bench: Table 1 shape (d={}, n={}, n_i={}, r={}) ==",
+        problem.d(),
+        problem.n_clients,
+        problem.n_i,
+        problem.rounds
+    );
+    println!(
+        "{:<24} {:>10} {:>14} {:>12} {:>10}",
+        "compressor", "time (s)", "||grad||", "MB up", "s/round"
+    );
+    for comp in ALL_NAMES {
+        let mut pool = problem.threaded_pool(comp, K_MULT, &cfg)?;
+        let opts = Options { rounds: problem.rounds, ..Default::default() };
+        let sw = Stopwatch::start();
+        let tr = run_fednl_pool(
+            &mut pool,
+            &opts,
+            vec![0.0; problem.d()],
+            comp,
+        );
+        let secs = sw.elapsed_secs();
+        println!(
+            "{:<24} {:>10.3} {:>14.3e} {:>12} {:>10.4}",
+            comp,
+            secs,
+            tr.last_grad_norm(),
+            human_bytes(tr.total_bytes_up()),
+            secs / tr.records.len() as f64
+        );
+    }
+
+    println!("\n== bench: Table 3 shape (multi-node TCP loopback) ==");
+    let mut p = prepare_problem(&W8A, &cfg)?;
+    p.n_clients = 8;
+    p.n_i = p.dataset.n_samples() / (p.n_clients + 1);
+    println!(
+        "{:<24} {:>10} {:>10} {:>12}",
+        "run", "solve (s)", "rounds", "wire up"
+    );
+    for (name, comp, algo) in [
+        ("FedNL/topk", "topk", TcpAlgo::FedNL),
+        ("FedNL/randseqk", "randseqk", TcpAlgo::FedNL),
+        ("FedNL-LS/toplek", "toplek", TcpAlgo::FedNLLS),
+        ("GD/identity", "identity", TcpAlgo::Gd),
+        ("LBFGS/identity", "identity", TcpAlgo::Lbfgs),
+    ] {
+        let (tr, solve, _init) =
+            run_tcp_experiment(&p, comp, algo, 20_000, Some(1e-9), &cfg)?;
+        println!(
+            "{:<24} {:>10.3} {:>10} {:>12}",
+            name,
+            solve,
+            tr.records.len(),
+            human_bytes(tr.total_bytes_up())
+        );
+    }
+
+    println!("\n== §4 cost model ==");
+    println!("{}", fednl::harness::costmodel());
+    Ok(())
+}

@@ -1,0 +1,283 @@
+//! FedNL (paper Algorithm 1).
+//!
+//! One round:
+//! 1. every client evaluates (∇fᵢ, ∇²fᵢ) at xᵏ, sends ∇fᵢ,
+//!    Sᵢᵏ = Cᵢᵏ(∇²fᵢ − Hᵢᵏ) and lᵢᵏ, and updates Hᵢᵏ⁺¹ = Hᵢᵏ + αSᵢᵏ;
+//! 2. the master averages gradients and lᵢ, applies the sparse Hessian
+//!    updates, and takes the Newton-type step of line 11.
+//!
+//! The driver is transport-generic: it talks to a
+//! [`crate::coordinator::ClientPool`], so the sequential reference pool,
+//! the multi-threaded simulator and the TCP master all execute the
+//! exact same algorithm.
+
+use super::{ClientState, Options, ServerState};
+use crate::coordinator::ClientPool;
+use crate::linalg::vector;
+use crate::metrics::{RoundRecord, Trace};
+use crate::utils::Stopwatch;
+
+/// Run FedNL against any client transport.
+pub fn run_fednl_pool(
+    pool: &mut dyn ClientPool,
+    opts: &Options,
+    x0: Vec<f64>,
+    label: &str,
+) -> Trace {
+    let d = pool.dim();
+    let alpha = opts.alpha.unwrap_or_else(|| pool.default_alpha());
+    pool.set_alpha(alpha);
+    let mut server = ServerState::new(d, pool.n_clients(), alpha, x0);
+    let mut trace = Trace::new(label.to_string());
+    let sw = Stopwatch::start();
+    let mut bytes_up = 0u64;
+    let mut bytes_down = 0u64;
+
+    if opts.warm_start {
+        let x = server.x.clone();
+        let packed = pool.warm_start(&x);
+        bytes_up += packed.iter().map(|p| p.len() as u64 * 8).sum::<u64>();
+        server.init_h_from_packed(&packed);
+    }
+
+    for round in 0..opts.rounds {
+        let x = server.x.clone();
+        bytes_down += (x.len() as u64 * 8) * pool.n_clients() as u64;
+        let msgs = pool.round(&x, round, opts.track_loss);
+        bytes_up += msgs.iter().map(|m| m.wire_bytes()).sum::<u64>();
+        let (grad, loss) = server.aggregate(&msgs);
+        let gnorm = vector::norm2(&grad);
+        let (up, down) =
+            pool.transport_bytes().unwrap_or((bytes_up, bytes_down));
+        trace.push(RoundRecord {
+            round,
+            grad_norm: gnorm,
+            loss: loss.unwrap_or(f64::NAN),
+            bytes_up: up,
+            bytes_down: down,
+            elapsed: sw.elapsed_secs(),
+        });
+        if let Some(tol) = opts.tol_grad {
+            if gnorm <= tol {
+                break;
+            }
+        }
+        let dir = server.newton_direction(&grad, opts.rule);
+        vector::axpy(1.0, &dir, &mut server.x);
+    }
+    trace
+}
+
+/// Convenience: run FedNL over in-process clients, sequentially.
+pub fn run_fednl(
+    clients: &mut [ClientState],
+    opts: &Options,
+    x0: Vec<f64>,
+) -> Trace {
+    assert!(!clients.is_empty());
+    let label = format!("FedNL/{}", clients[0].compressor.name());
+    run_fednl_pool(&mut SlicePool(clients), opts, x0, &label)
+}
+
+/// Adapter: a mutable client slice as a sequential pool.
+pub(crate) struct SlicePool<'a>(pub &'a mut [ClientState]);
+
+impl ClientPool for SlicePool<'_> {
+    fn n_clients(&self) -> usize {
+        self.0.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.0[0].dim()
+    }
+
+    fn default_alpha(&self) -> f64 {
+        self.0[0].alpha
+    }
+
+    fn set_alpha(&mut self, alpha: f64) {
+        for c in self.0.iter_mut() {
+            c.alpha = alpha;
+        }
+    }
+
+    fn round(
+        &mut self,
+        x: &[f64],
+        round: u64,
+        need_loss: bool,
+    ) -> Vec<super::ClientMsg> {
+        self.0.iter_mut().map(|c| c.round(x, round, need_loss)).collect()
+    }
+
+    fn eval_loss(&mut self, x: &[f64]) -> f64 {
+        let n = self.0.len() as f64;
+        self.0.iter_mut().map(|c| c.eval_loss(x)).sum::<f64>() / n
+    }
+
+    fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {
+        self.0.iter_mut().map(|c| c.warm_start(x)).collect()
+    }
+
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        let inv_n = 1.0 / self.0.len() as f64;
+        let mut g = vec![0.0; x.len()];
+        let mut loss = 0.0;
+        for c in self.0.iter_mut() {
+            let (l, gi) = c.eval_loss_grad(x);
+            loss += l;
+            crate::linalg::vector::axpy(inv_n, &gi, &mut g);
+        }
+        (loss * inv_n, g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::UpdateRule;
+    use crate::compressors::{by_name, Identity};
+    use crate::data::{generate_synthetic, Dataset, SynthSpec};
+    use crate::linalg::Mat;
+    use crate::oracle::{LogisticOracle, QuadraticOracle};
+
+    fn logistic_clients(
+        n_clients: usize,
+        compressor: &str,
+        seed: u64,
+    ) -> (Vec<ClientState>, usize) {
+        let spec = SynthSpec {
+            d_raw: 9,
+            n_samples: n_clients * 40,
+            density: 0.6,
+            noise: 1.0,
+            seed,
+        };
+        let synth = generate_synthetic(&spec);
+        let samples: Vec<crate::data::LibsvmSample> = synth
+            .labels
+            .iter()
+            .zip(&synth.rows)
+            .map(|(l, r)| crate::data::LibsvmSample {
+                label: *l,
+                features: r.clone(),
+            })
+            .collect();
+        let ds = Dataset::from_libsvm(&samples, spec.d_raw);
+        let d = ds.d;
+        let shards = ds.split_even(n_clients).unwrap();
+        let clients = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, sh)| {
+                let oracle = LogisticOracle::new(sh, 1e-3);
+                let comp = by_name(compressor, d, 2, seed + i as u64).unwrap();
+                ClientState::new(i, Box::new(oracle), comp, None)
+            })
+            .collect();
+        (clients, d)
+    }
+
+    #[test]
+    fn quadratic_identity_converges_superfast() {
+        let q = Mat::from_rows(&[&[3.0, 1.0], &[1.0, 2.0]]);
+        let mut clients = vec![ClientState::new(
+            0,
+            Box::new(QuadraticOracle::new(q, vec![1.0, 2.0])),
+            Box::new(Identity),
+            None,
+        )];
+        let opts = Options { rounds: 30, ..Default::default() };
+        let trace = run_fednl(&mut clients, &opts, vec![0.0, 0.0]);
+        assert!(
+            trace.last_grad_norm() < 1e-10,
+            "final ‖∇f‖ = {}",
+            trace.last_grad_norm()
+        );
+    }
+
+    #[test]
+    fn logistic_all_compressors_converge() {
+        for comp in crate::compressors::ALL_NAMES {
+            let (mut clients, d) = logistic_clients(4, comp, 7);
+            let opts =
+                Options { rounds: 60, track_loss: true, ..Default::default() };
+            let trace = run_fednl(&mut clients, &opts, vec![0.0; d]);
+            assert!(
+                trace.last_grad_norm() < 1e-8,
+                "{comp}: ‖∇f‖ = {}",
+                trace.last_grad_norm()
+            );
+            let first = trace.records.first().unwrap().loss;
+            let last = trace.records.last().unwrap().loss;
+            assert!(last < first, "{comp}: loss {first} → {last}");
+        }
+    }
+
+    #[test]
+    fn grad_norm_superlinear_drop() {
+        let (mut clients, d) = logistic_clients(3, "topk", 3);
+        let opts = Options { rounds: 80, ..Default::default() };
+        let trace = run_fednl(&mut clients, &opts, vec![0.0; d]);
+        let g0 = trace.records[0].grad_norm;
+        assert!(trace.last_grad_norm() < g0 * 1e-6);
+    }
+
+    #[test]
+    fn early_stop_on_tolerance() {
+        let (mut clients, d) = logistic_clients(3, "identity", 4);
+        let opts = Options {
+            rounds: 500,
+            tol_grad: Some(1e-6),
+            ..Default::default()
+        };
+        let trace = run_fednl(&mut clients, &opts, vec![0.0; d]);
+        assert!(trace.records.len() < 100, "{} rounds", trace.records.len());
+        assert!(trace.last_grad_norm() <= 1e-6);
+    }
+
+    #[test]
+    fn project_mu_rule_also_converges() {
+        let (mut clients, d) = logistic_clients(3, "randk", 5);
+        let opts = Options {
+            rounds: 80,
+            rule: UpdateRule::ProjectMu(1e-3),
+            warm_start: true,
+            ..Default::default()
+        };
+        let trace = run_fednl(&mut clients, &opts, vec![0.0; d]);
+        assert!(
+            trace.last_grad_norm() < 1e-6,
+            "‖∇f‖ = {}",
+            trace.last_grad_norm()
+        );
+    }
+
+    #[test]
+    fn bytes_accounting_monotone() {
+        let (mut clients, d) = logistic_clients(2, "randseqk", 6);
+        let opts = Options { rounds: 10, ..Default::default() };
+        let trace = run_fednl(&mut clients, &opts, vec![0.0; d]);
+        let mut prev = 0;
+        for r in &trace.records {
+            assert!(r.bytes_up > prev);
+            prev = r.bytes_up;
+        }
+    }
+
+    #[test]
+    fn threaded_pool_trajectory_matches_sequential() {
+        let (mut c1, d) = logistic_clients(6, "toplek", 8);
+        let (c2, _) = logistic_clients(6, "toplek", 8);
+        let opts = Options { rounds: 25, track_loss: true, ..Default::default() };
+        let t_seq = run_fednl(&mut c1, &opts, vec![0.0; d]);
+        let mut thr = crate::coordinator::ThreadedPool::new(c2, 3);
+        let t_thr =
+            run_fednl_pool(&mut thr, &opts, vec![0.0; d], "FedNL/threaded");
+        assert_eq!(t_seq.records.len(), t_thr.records.len());
+        for (a, b) in t_seq.records.iter().zip(&t_thr.records) {
+            assert_eq!(a.grad_norm, b.grad_norm, "round {}", a.round);
+            assert_eq!(a.loss, b.loss);
+        }
+    }
+}

@@ -1,0 +1,386 @@
+//! FedNL-PP (paper Algorithm 3): partial participation — only a
+//! τ-subset Sᵏ of clients, chosen uniformly at random, works each round.
+//!
+//! The server maintains gᵏ = (1/n)Σ gᵢᵏ, lᵏ = (1/n)Σ lᵢᵏ and
+//! Hᵏ = (1/n)Σ Hᵢᵏ incrementally from participant deltas; the model
+//! update xᵏ⁺¹ = (Hᵏ + lᵏI)⁻¹ gᵏ happens *before* sampling (line 4).
+//! Non-participants change nothing. gᵢ is the "Hessian-corrected local
+//! gradient" (Hᵢ + lᵢI)wᵢ − ∇fᵢ(wᵢ), evaluated on the packed Hᵢ without
+//! densifying.
+//!
+//! The trace's ‖∇f(xᵏ)‖ is computed out-of-band over all clients — the
+//! paper makes the same caveat ("FedNL-PP lacks explicit support for the
+//! computation of ∇f(xᵏ) as part of the training process").
+
+use super::Options;
+use crate::compressors::Compressor;
+use crate::linalg::packed::PackedUpper;
+use crate::linalg::{vector, Cholesky, Mat};
+use crate::metrics::{RoundRecord, Trace};
+use crate::oracle::Oracle;
+use crate::rng::{sample_distinct, Pcg64};
+use crate::utils::Stopwatch;
+
+/// Per-client FedNL-PP state (Alg. 3 initialization, line 2).
+pub struct PPClientState {
+    pub id: usize,
+    pub oracle: Box<dyn Oracle>,
+    pub compressor: Box<dyn Compressor>,
+    pub alpha: f64,
+    /// Local model copy wᵢ.
+    pub w: Vec<f64>,
+    /// Hᵢ packed.
+    pub h_shift: Vec<f64>,
+    pub l_i: f64,
+    pub g_i: Vec<f64>,
+    pu: PackedUpper,
+    hess: Mat,
+    hess_packed: Vec<f64>,
+    diff: Vec<f64>,
+    grad_buf: Vec<f64>,
+}
+
+/// Participant → server message (Alg. 3 line 13).
+pub struct PPMsg {
+    pub client_id: usize,
+    pub update: crate::compressors::Compressed,
+    pub dl: f64,
+    pub dg: Vec<f64>,
+}
+
+impl PPClientState {
+    pub fn new(
+        id: usize,
+        mut oracle: Box<dyn Oracle>,
+        compressor: Box<dyn Compressor>,
+        alpha: Option<f64>,
+        x0: &[f64],
+    ) -> Self {
+        let d = oracle.dim();
+        let pu = PackedUpper::new(d);
+        let n = pu.len();
+        let alpha = alpha.unwrap_or_else(|| compressor.kind(n).alpha());
+        // Initialization with Hᵢ⁰ = 0:
+        //   lᵢ⁰ = ‖0 − ∇²fᵢ(x⁰)‖_F, gᵢ⁰ = lᵢ⁰·x⁰ − ∇fᵢ(x⁰).
+        let mut hess = Mat::zeros(d, d);
+        let mut grad = vec![0.0; d];
+        let _ = oracle.loss_grad_hessian(x0, &mut grad, &mut hess);
+        let mut hess_packed = vec![0.0; n];
+        pu.pack(&hess, &mut hess_packed);
+        let l0 = pu.frobenius_sq_packed(&hess_packed).sqrt();
+        let mut g0 = vec![0.0; d];
+        for i in 0..d {
+            g0[i] = l0 * x0[i] - grad[i];
+        }
+        Self {
+            id,
+            oracle,
+            compressor,
+            alpha,
+            w: x0.to_vec(),
+            h_shift: vec![0.0; n],
+            l_i: l0,
+            g_i: g0,
+            pu,
+            hess,
+            hess_packed,
+            diff: vec![0.0; n],
+            grad_buf: vec![0.0; d],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.grad_buf.len()
+    }
+
+    /// Participate in round `round` with new model `x` (lines 9–13).
+    pub fn participate(&mut self, x: &[f64], round: u64) -> PPMsg {
+        let d = self.dim();
+        self.w.copy_from_slice(x);
+        let _ = self.oracle.loss_grad_hessian(
+            x,
+            &mut self.grad_buf,
+            &mut self.hess,
+        );
+        self.pu.pack(&self.hess, &mut self.hess_packed);
+        vector::sub(&self.hess_packed, &self.h_shift, &mut self.diff);
+        let update = self.compressor.compress(&self.pu, &self.diff, round);
+        // Hᵢ ← Hᵢ + α·C(∇²fᵢ − Hᵢ) (line 10).
+        let a = self.alpha * update.scale;
+        for (v, idx) in update.values.iter().zip(update.indices()) {
+            self.h_shift[idx as usize] += a * v;
+        }
+        // lᵢ ← ‖Hᵢ − ∇²fᵢ‖_F (line 11) — recompute on the updated shift.
+        vector::sub(&self.h_shift, &self.hess_packed, &mut self.diff);
+        let l_new = self.pu.frobenius_sq_packed(&self.diff).sqrt();
+        // gᵢ ← (Hᵢ + lᵢI)wᵢ − ∇fᵢ(wᵢ) (line 12), packed matvec.
+        let mut g_new = vec![0.0; d];
+        self.pu.matvec_packed(&self.h_shift, &self.w, &mut g_new);
+        for i in 0..d {
+            g_new[i] += l_new * self.w[i] - self.grad_buf[i];
+        }
+        let dl = l_new - self.l_i;
+        let mut dg = vec![0.0; d];
+        vector::sub(&g_new, &self.g_i, &mut dg);
+        self.l_i = l_new;
+        self.g_i = g_new;
+        PPMsg { client_id: self.id, update, dl, dg }
+    }
+
+    /// Out-of-band full-gradient contribution at `x` (trace only).
+    pub fn grad_at(&mut self, x: &[f64], g: &mut [f64]) -> f64 {
+        self.oracle.loss_grad(x, g)
+    }
+}
+
+/// Transport abstraction for FedNL-PP (in-process slice or TCP master).
+pub trait PPTransport {
+    fn n_clients(&self) -> usize;
+    fn dim(&self) -> usize;
+    fn default_alpha(&self) -> f64;
+    fn set_alpha(&mut self, a: f64);
+    /// Collect (lᵢ⁰, gᵢ⁰) from every client (Alg. 3 line 2).
+    fn pp_init(&mut self) -> Vec<(f64, Vec<f64>)>;
+    /// Run the participant round on the selected clients.
+    fn pp_round(&mut self, x: &[f64], round: u64, selected: &[u32])
+        -> Vec<PPMsg>;
+    /// Out-of-band (f, ∇f) reduction over all clients (trace only).
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>);
+    fn transport_bytes(&self) -> Option<(u64, u64)> {
+        None
+    }
+}
+
+/// In-process PP transport over a mutable client slice.
+pub struct PPSlice<'a>(pub &'a mut [PPClientState]);
+
+impl PPTransport for PPSlice<'_> {
+    fn n_clients(&self) -> usize {
+        self.0.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.0[0].dim()
+    }
+
+    fn default_alpha(&self) -> f64 {
+        self.0[0].alpha
+    }
+
+    fn set_alpha(&mut self, a: f64) {
+        for c in self.0.iter_mut() {
+            c.alpha = a;
+        }
+    }
+
+    fn pp_init(&mut self) -> Vec<(f64, Vec<f64>)> {
+        self.0.iter().map(|c| (c.l_i, c.g_i.clone())).collect()
+    }
+
+    fn pp_round(
+        &mut self,
+        x: &[f64],
+        round: u64,
+        selected: &[u32],
+    ) -> Vec<PPMsg> {
+        selected
+            .iter()
+            .map(|&ci| self.0[ci as usize].participate(x, round))
+            .collect()
+    }
+
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        let inv_n = 1.0 / self.0.len() as f64;
+        let mut g = vec![0.0; x.len()];
+        let mut buf = vec![0.0; x.len()];
+        let mut loss = 0.0;
+        for c in self.0.iter_mut() {
+            loss += c.grad_at(x, &mut buf);
+            vector::axpy(inv_n, &buf, &mut g);
+        }
+        (loss * inv_n, g)
+    }
+}
+
+/// Run FedNL-PP with `tau` participating clients per round, over any
+/// transport.
+pub fn run_fednl_pp_transport(
+    transport: &mut dyn PPTransport,
+    opts: &Options,
+    tau: usize,
+    seed: u64,
+    x0: Vec<f64>,
+    label: &str,
+) -> Trace {
+    let n = transport.n_clients();
+    assert!(tau >= 1 && tau <= n, "tau must be in [1, n]");
+    let d = transport.dim();
+    let inv_n = 1.0 / n as f64;
+    let alpha = opts.alpha.unwrap_or_else(|| transport.default_alpha());
+    transport.set_alpha(alpha);
+    // Server init from client initials (line 2), H⁰ = 0.
+    let mut h = Mat::zeros(d, d);
+    let pu = PackedUpper::new(d);
+    let init = transport.pp_init();
+    let mut l: f64 = init.iter().map(|(li, _)| li).sum::<f64>() * inv_n;
+    let mut g = vec![0.0; d];
+    for (_, gi) in &init {
+        vector::axpy(inv_n, gi, &mut g);
+    }
+    let mut x = x0;
+    let mut trace = Trace::new(label.to_string());
+    let sw = Stopwatch::start();
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut bytes_up = init.len() as u64 * (8 + d as u64 * 8);
+    let mut bytes_down = 0u64;
+
+    for round in 0..opts.rounds {
+        // Line 4: xᵏ⁺¹ = (Hᵏ + lᵏI)⁻¹ gᵏ.
+        let mut shift = l.max(0.0);
+        for _ in 0..60 {
+            if let Some(ch) = Cholesky::factor(&h, shift) {
+                x = ch.solve_vec(&g);
+                break;
+            }
+            shift = (shift * 2.0).max(1e-12);
+        }
+        // Lines 5-6: sample Sᵏ, send xᵏ⁺¹ to the τ participants.
+        let selected = sample_distinct(&mut rng, n, tau);
+        bytes_down += (d as u64 * 8) * tau as u64;
+        for msg in transport.pp_round(&x, round, &selected) {
+            bytes_up += msg.update.wire_bytes() + 8 + msg.dg.len() as u64 * 8;
+            // Lines 18-20: incremental server state.
+            vector::axpy(inv_n, &msg.dg, &mut g);
+            l += inv_n * msg.dl;
+            pu.apply_sparse(
+                &mut h,
+                alpha * msg.update.scale * inv_n,
+                &msg.update.indices(),
+                &msg.update.values,
+            );
+        }
+        // Out-of-band convergence measurement at xᵏ⁺¹.
+        let (loss, grad) = transport.loss_grad(&x);
+        let gnorm = vector::norm2(&grad);
+        let (up, down) =
+            transport.transport_bytes().unwrap_or((bytes_up, bytes_down));
+        trace.push(RoundRecord {
+            round,
+            grad_norm: gnorm,
+            loss,
+            bytes_up: up,
+            bytes_down: down,
+            elapsed: sw.elapsed_secs(),
+        });
+        if let Some(tol) = opts.tol_grad {
+            if gnorm <= tol {
+                break;
+            }
+        }
+    }
+    trace
+}
+
+/// Convenience: FedNL-PP over in-process clients.
+pub fn run_fednl_pp(
+    clients: &mut [PPClientState],
+    opts: &Options,
+    tau: usize,
+    seed: u64,
+    x0: Vec<f64>,
+) -> Trace {
+    assert!(!clients.is_empty());
+    let label = format!("FedNL-PP/{}", clients[0].compressor.name());
+    run_fednl_pp_transport(&mut PPSlice(clients), opts, tau, seed, x0, &label)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::by_name;
+    use crate::data::{generate_synthetic, Dataset, SynthSpec};
+    use crate::oracle::LogisticOracle;
+
+    fn pp_clients(
+        n: usize,
+        comp: &str,
+        seed: u64,
+        x0: &[f64],
+        d_raw: usize,
+    ) -> Vec<PPClientState> {
+        let spec = SynthSpec {
+            d_raw,
+            n_samples: n * 40,
+            density: 0.6,
+            noise: 1.0,
+            seed,
+        };
+        let synth = generate_synthetic(&spec);
+        let samples: Vec<crate::data::LibsvmSample> = synth
+            .labels
+            .iter()
+            .zip(&synth.rows)
+            .map(|(l, r)| crate::data::LibsvmSample {
+                label: *l,
+                features: r.clone(),
+            })
+            .collect();
+        let ds = Dataset::from_libsvm(&samples, spec.d_raw);
+        let d = ds.d;
+        ds.split_even(n)
+            .unwrap()
+            .into_iter()
+            .enumerate()
+            .map(|(i, sh)| {
+                PPClientState::new(
+                    i,
+                    Box::new(LogisticOracle::new(sh, 1e-3)),
+                    by_name(comp, d, 2, seed + i as u64).unwrap(),
+                    None,
+                    x0,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn full_participation_converges() {
+        let d = 9;
+        let x0 = vec![0.0; d];
+        let mut cs = pp_clients(4, "topk", 21, &x0, d - 1);
+        let opts = Options { rounds: 120, ..Default::default() };
+        let tr = run_fednl_pp(&mut cs, &opts, 4, 1, x0);
+        assert!(tr.last_grad_norm() < 1e-8, "‖∇f‖={}", tr.last_grad_norm());
+    }
+
+    #[test]
+    fn partial_participation_converges_slower_but_converges() {
+        let d = 9;
+        let x0 = vec![0.0; d];
+        let mut full = pp_clients(6, "randk", 22, &x0, d - 1);
+        let mut part = pp_clients(6, "randk", 22, &x0, d - 1);
+        let opts = Options { rounds: 200, ..Default::default() };
+        let tr_full = run_fednl_pp(&mut full, &opts, 6, 2, x0.clone());
+        let tr_part = run_fednl_pp(&mut part, &opts, 2, 2, x0);
+        assert!(tr_full.last_grad_norm() < 1e-8);
+        assert!(tr_part.last_grad_norm() < 1e-5, "partial: {}", tr_part.last_grad_norm());
+        // Partial needs more rounds to a fixed tolerance.
+        let rf = tr_full.rounds_to_tolerance(1e-6).unwrap();
+        let rp = tr_part.rounds_to_tolerance(1e-6).unwrap_or(u64::MAX);
+        assert!(rp >= rf, "partial {rp} < full {rf}");
+    }
+
+    #[test]
+    fn selection_is_seeded_deterministic() {
+        let d = 7;
+        let x0 = vec![0.0; d];
+        let mut a = pp_clients(5, "randseqk", 23, &x0, d - 1);
+        let mut b = pp_clients(5, "randseqk", 23, &x0, d - 1);
+        let opts = Options { rounds: 30, ..Default::default() };
+        let ta = run_fednl_pp(&mut a, &opts, 2, 9, x0.clone());
+        let tb = run_fednl_pp(&mut b, &opts, 2, 9, x0);
+        for (ra, rb) in ta.records.iter().zip(&tb.records) {
+            assert_eq!(ra.grad_norm, rb.grad_norm);
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! The FedNL algorithm family (paper Alg. 1–3).
+//!
+//! Each algorithm is factored into *pure round functions* —
+//! `client_round(state, x) → message` and `server_round(state, messages)
+//! → next x` — so the same logic drives all three transports:
+//! the sequential reference loop (tests), the multi-threaded single-node
+//! simulator (`coordinator::local_sim`), and the TCP multi-node runtime
+//! (`coordinator::{server, client}`).
+
+pub mod fednl;
+pub mod fednl_ls;
+pub mod fednl_pp;
+pub mod state;
+
+pub use fednl::{run_fednl, run_fednl_pool};
+pub use fednl_ls::{run_fednl_ls, run_fednl_ls_pool, LineSearchParams};
+pub use fednl_pp::{run_fednl_pp, run_fednl_pp_transport, PPClientState};
+pub use state::{ClientMsg, ClientState, ServerState};
+
+/// How the server forms the system matrix for the Newton step
+/// (Alg. 1 line 11).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum UpdateRule {
+    /// Option 1 (a): x⁺ = x − [Hᵏ]_μ⁻¹ ∇f(x) — eigenvalue clipping at μ.
+    ProjectMu(f64),
+    /// Option 2 (b): x⁺ = x − [Hᵏ + lᵏI]⁻¹ ∇f(x) — the variant all the
+    /// paper's experiments use ("α - option 2" in Table 1).
+    LkShift,
+}
+
+/// Shared options for the FedNL family.
+#[derive(Debug, Clone)]
+pub struct Options {
+    /// Number of communication rounds r.
+    pub rounds: u64,
+    /// Hessian learning rate; `None` → theoretical α = 1 − √(1−δ) from
+    /// the compressor class (the paper's "theoretical step-size").
+    pub alpha: Option<f64>,
+    pub rule: UpdateRule,
+    /// Stop early once ‖∇f(xᵏ)‖ ≤ tol (used by the Table 2/3 harness
+    /// which runs to ≈1e-9 rather than a fixed round budget).
+    pub tol_grad: Option<f64>,
+    /// Track f(xᵏ) in the trace (costs one reduction; optional in the
+    /// paper too).
+    pub track_loss: bool,
+    /// Initialize Hᵢ⁰ = ∇²fᵢ(x⁰) (FedNL paper's warm start) instead of
+    /// Hᵢ⁰ = 0. Costs one uncompressed d(d+1)/2 upload per client.
+    pub warm_start: bool,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Self {
+            rounds: 100,
+            alpha: None,
+            rule: UpdateRule::LkShift,
+            tol_grad: None,
+            track_loss: false,
+            warm_start: false,
+        }
+    }
+}

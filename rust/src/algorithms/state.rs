@@ -1,0 +1,306 @@
+//! Client/server state for the FedNL family.
+//!
+//! The client keeps its Hessian shift Hᵢᵏ in **packed upper-triangle
+//! form** — compression, the shift update (line 6) and the Frobenius
+//! distance lᵢᵏ (line 5) all live in packed coordinates, so nothing ever
+//! materializes a second d×d matrix per client. The server keeps Hᵏ as a
+//! dense symmetric matrix (the Newton solve wants it dense) and applies
+//! the sparse compressed updates in O(k) (paper §5.6).
+
+use crate::compressors::{Compressed, Compressor};
+use crate::linalg::packed::PackedUpper;
+use crate::linalg::{vector, Cholesky, Mat};
+use crate::oracle::Oracle;
+
+/// What a client sends the master each FedNL round (Alg. 1 line 5).
+#[derive(Debug, Clone)]
+pub struct ClientMsg {
+    pub client_id: usize,
+    /// ∇fᵢ(xᵏ), dense d-vector.
+    pub grad: Vec<f64>,
+    /// Sᵢᵏ = Cᵢᵏ(∇²fᵢ(xᵏ) − Hᵢᵏ).
+    pub update: Compressed,
+    /// lᵢᵏ = ‖Hᵢᵏ − ∇²fᵢ(xᵏ)‖_F.
+    pub l_i: f64,
+    /// fᵢ(xᵏ) when the server tracks loss / runs line search.
+    pub loss: Option<f64>,
+}
+
+impl ClientMsg {
+    /// Wire accounting: gradient + compressed Hessian + lᵢ (+ loss).
+    pub fn wire_bytes(&self) -> u64 {
+        self.grad.len() as u64 * 8
+            + self.update.wire_bytes()
+            + 8
+            + if self.loss.is_some() { 8 } else { 0 }
+    }
+}
+
+/// Per-client FedNL state: local oracle + Hessian shift + compressor.
+pub struct ClientState {
+    pub id: usize,
+    pub oracle: Box<dyn Oracle>,
+    pub compressor: Box<dyn Compressor>,
+    /// Hᵢᵏ in packed upper-triangle coordinates.
+    pub h_shift: Vec<f64>,
+    /// Hessian learning rate α (same value server-side).
+    pub alpha: f64,
+    pub pu: PackedUpper,
+    // Reused round buffers (no allocation in the loop, §5.13):
+    hess: Mat,
+    hess_packed: Vec<f64>,
+    diff: Vec<f64>,
+    grad_buf: Vec<f64>,
+}
+
+impl ClientState {
+    /// `alpha = None` → theoretical α from the compressor class.
+    pub fn new(
+        id: usize,
+        oracle: Box<dyn Oracle>,
+        compressor: Box<dyn Compressor>,
+        alpha: Option<f64>,
+    ) -> Self {
+        let d = oracle.dim();
+        let pu = PackedUpper::new(d);
+        let n = pu.len();
+        let alpha = alpha.unwrap_or_else(|| compressor.kind(n).alpha());
+        Self {
+            id,
+            oracle,
+            compressor,
+            h_shift: vec![0.0; n],
+            alpha,
+            pu,
+            hess: Mat::zeros(d, d),
+            hess_packed: vec![0.0; n],
+            diff: vec![0.0; n],
+            grad_buf: vec![0.0; d],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.grad_buf.len()
+    }
+
+    /// Initialize Hᵢ⁰ = ∇²fᵢ(x⁰) (the FedNL paper's warm start; the
+    /// cold start Hᵢ⁰ = 0 also satisfies the theory but Option 1 then
+    /// takes −(1/μ)∇f first steps). Returns the packed Hᵢ⁰ so the
+    /// server can form H⁰ = (1/n)ΣHᵢ⁰.
+    pub fn warm_start(&mut self, x0: &[f64]) -> Vec<f64> {
+        self.oracle.hessian(x0, &mut self.hess);
+        self.pu.pack(&self.hess, &mut self.hess_packed);
+        self.h_shift.copy_from_slice(&self.hess_packed);
+        self.hess_packed.clone()
+    }
+
+    /// One FedNL client round at iterate `x` (Alg. 1 lines 4–6).
+    /// `need_loss` additionally returns fᵢ(xᵏ) (FedNL-LS line 5).
+    pub fn round(&mut self, x: &[f64], round: u64, need_loss: bool) -> ClientMsg {
+        let loss = self.oracle.loss_grad_hessian(
+            x,
+            &mut self.grad_buf,
+            &mut self.hess,
+        );
+        self.pu.pack(&self.hess, &mut self.hess_packed);
+        // diff = ∇²fᵢ(xᵏ) − Hᵢᵏ (packed).
+        vector::sub(&self.hess_packed, &self.h_shift, &mut self.diff);
+        // lᵢᵏ before the shift update (line 5).
+        let l_i = self.pu.frobenius_sq_packed(&self.diff).sqrt();
+        let update = self.compressor.compress(&self.pu, &self.diff, round);
+        // Hᵢᵏ⁺¹ = Hᵢᵏ + α Sᵢᵏ, sparse in packed coords (line 6).
+        let a = self.alpha * update.scale;
+        for (v, idx) in update.values.iter().zip(update.indices()) {
+            self.h_shift[idx as usize] += a * v;
+        }
+        ClientMsg {
+            client_id: self.id,
+            grad: self.grad_buf.clone(),
+            update,
+            l_i,
+            loss: if need_loss { Some(loss) } else { None },
+        }
+    }
+
+    /// Loss-only evaluation (line-search probes).
+    pub fn eval_loss(&mut self, x: &[f64]) -> f64 {
+        self.oracle.loss(x)
+    }
+
+    /// First-order evaluation (baseline solvers' round primitive).
+    pub fn eval_loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        let l = self.oracle.loss_grad(x, &mut self.grad_buf);
+        (l, self.grad_buf.clone())
+    }
+}
+
+/// Master state (Alg. 1 lines 8–11).
+pub struct ServerState {
+    pub d: usize,
+    pub n_clients: usize,
+    /// Hᵏ = (1/n) Σ Hᵢᵏ, dense symmetric.
+    pub h: Mat,
+    /// lᵏ = (1/n) Σ lᵢᵏ.
+    pub l: f64,
+    pub alpha: f64,
+    pub pu: PackedUpper,
+    /// Current iterate xᵏ.
+    pub x: Vec<f64>,
+    // Round scratch:
+    grad_acc: Vec<f64>,
+    sys: Mat,
+}
+
+impl ServerState {
+    pub fn new(d: usize, n_clients: usize, alpha: f64, x0: Vec<f64>) -> Self {
+        assert_eq!(x0.len(), d);
+        Self {
+            d,
+            n_clients,
+            h: Mat::zeros(d, d),
+            l: 0.0,
+            alpha,
+            pu: PackedUpper::new(d),
+            x: x0,
+            grad_acc: vec![0.0; d],
+            sys: Mat::zeros(d, d),
+        }
+    }
+
+    /// Install H⁰ = (1/n) Σ Hᵢ⁰ from warm-started clients.
+    pub fn init_h_from_packed(&mut self, packed: &[Vec<f64>]) {
+        let inv_n = 1.0 / packed.len() as f64;
+        let mut acc = vec![0.0; self.pu.len()];
+        for p in packed {
+            vector::axpy(inv_n, p, &mut acc);
+        }
+        self.pu.unpack(&acc, &mut self.h);
+    }
+
+    /// Aggregate client messages: ∇f(xᵏ), lᵏ, and Hᵏ⁺¹ = Hᵏ + α·Sᵏ
+    /// (Alg. 1 lines 9–10). Returns (grad, mean loss if all present).
+    pub fn aggregate(&mut self, msgs: &[ClientMsg]) -> (Vec<f64>, Option<f64>) {
+        assert_eq!(msgs.len(), self.n_clients, "missing client messages");
+        let inv_n = 1.0 / self.n_clients as f64;
+        vector::fill_zero(&mut self.grad_acc);
+        let mut l_acc = 0.0;
+        let mut loss_acc = 0.0;
+        let mut have_loss = true;
+        for m in msgs {
+            vector::axpy(inv_n, &m.grad, &mut self.grad_acc);
+            l_acc += m.l_i;
+            match m.loss {
+                Some(l) => loss_acc += l,
+                None => have_loss = false,
+            }
+            // Hᵏ ← Hᵏ + (α/n)·Sᵢᵏ, sparse (paper §5.6).
+            self.pu.apply_sparse(
+                &mut self.h,
+                self.alpha * m.update.scale * inv_n,
+                &m.update.indices(),
+                &m.update.values,
+            );
+        }
+        self.l = l_acc * inv_n;
+        let loss = if have_loss { Some(loss_acc * inv_n) } else { None };
+        (self.grad_acc.clone(), loss)
+    }
+
+    /// Newton direction −[system]⁻¹ g under the given rule
+    /// (Alg. 1 line 11). Falls back to growing diagonal jitter if the
+    /// factorization fails numerically.
+    pub fn newton_direction(
+        &mut self,
+        g: &[f64],
+        rule: super::UpdateRule,
+    ) -> Vec<f64> {
+        match rule {
+            super::UpdateRule::LkShift => {
+                self.sys.as_mut_slice().copy_from_slice(self.h.as_slice());
+                let mut shift = self.l;
+                for _ in 0..60 {
+                    if let Some(ch) = Cholesky::factor(&self.sys, shift) {
+                        let mut dir = ch.solve_vec(g);
+                        vector::scale(-1.0, &mut dir);
+                        return dir;
+                    }
+                    shift = (shift * 2.0).max(1e-12);
+                }
+                // Pathological: fall back to −g.
+                let mut dir = g.to_vec();
+                vector::scale(-1.0, &mut dir);
+                dir
+            }
+            super::UpdateRule::ProjectMu(mu) => {
+                let proj = crate::linalg::eigen::project_psd_mu(&self.h, mu);
+                match Cholesky::factor(&proj, 0.0) {
+                    Some(ch) => {
+                        let mut dir = ch.solve_vec(g);
+                        vector::scale(-1.0, &mut dir);
+                        dir
+                    }
+                    None => {
+                        let mut dir = g.to_vec();
+                        vector::scale(-1.0, &mut dir);
+                        dir
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::Identity;
+    use crate::oracle::QuadraticOracle;
+
+    fn quad_client(id: usize) -> ClientState {
+        let q = Mat::from_rows(&[&[2.0, 0.5], &[0.5, 1.5]]);
+        let oracle = QuadraticOracle::new(q, vec![1.0, -1.0]);
+        ClientState::new(id, Box::new(oracle), Box::new(Identity), None)
+    }
+
+    #[test]
+    fn identity_alpha_is_one() {
+        let c = quad_client(0);
+        assert_eq!(c.alpha, 1.0);
+    }
+
+    #[test]
+    fn client_learns_exact_hessian_in_one_round_with_identity() {
+        let mut c = quad_client(0);
+        let msg = c.round(&[0.0, 0.0], 0, false);
+        // l⁰ = ‖0 − Q‖_F > 0; after the update Hᵢ¹ = Q exactly.
+        assert!(msg.l_i > 0.0);
+        let msg2 = c.round(&[0.0, 0.0], 1, false);
+        assert!(msg2.l_i < 1e-14, "l after identity update: {}", msg2.l_i);
+    }
+
+    #[test]
+    fn server_aggregate_and_newton() {
+        let mut s = ServerState::new(2, 2, 1.0, vec![0.0, 0.0]);
+        let mut c0 = quad_client(0);
+        let mut c1 = quad_client(1);
+        let msgs =
+            vec![c0.round(&s.x.clone(), 0, true), c1.round(&s.x.clone(), 0, true)];
+        let (g, loss) = s.aggregate(&msgs);
+        assert!(loss.is_some());
+        // Both clients identical → ∇f = ∇f₀ = Q·0 − b = −b = [−1, 1].
+        assert!((g[0] + 1.0).abs() < 1e-14);
+        assert!((g[1] - 1.0).abs() < 1e-14);
+        // After identity aggregation H = Q; direction solves Newton.
+        let dir = s.newton_direction(&g, super::super::UpdateRule::LkShift);
+        assert_eq!(dir.len(), 2);
+        // With l⁰ > 0 the step is damped but still a descent direction.
+        assert!(vector::dot(&dir, &g) < 0.0);
+    }
+
+    #[test]
+    fn wire_bytes_positive() {
+        let mut c = quad_client(0);
+        let msg = c.round(&[0.1, 0.2], 0, false);
+        assert!(msg.wire_bytes() > 16);
+    }
+}

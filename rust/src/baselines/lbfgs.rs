@@ -1,0 +1,129 @@
+//! L-BFGS (two-loop recursion, m-pair history, Armijo backtracking) —
+//! the quasi-Newton comparator standing in for Ray/Scikit-Learn's
+//! `lbfgs` solver and Spark MLlib's LogisticRegressionWithLBFGS
+//! (DESIGN.md §2): same communication pattern as GD (one d-vector per
+//! client per round) but curvature-aware.
+
+use super::{armijo, BaselineOptions};
+use crate::coordinator::ClientPool;
+use crate::linalg::vector;
+use crate::metrics::{RoundRecord, Trace};
+use crate::utils::Stopwatch;
+use std::collections::VecDeque;
+
+/// Run L-BFGS with history size `m`.
+pub fn run_lbfgs(
+    pool: &mut dyn ClientPool,
+    opts: &BaselineOptions,
+    m: usize,
+    x0: Vec<f64>,
+) -> Trace {
+    let d = x0.len();
+    let n = pool.n_clients() as u64;
+    let mut x = x0;
+    let mut trace = Trace::new(format!("L-BFGS[m={m}]"));
+    let sw = Stopwatch::start();
+    let mut bytes_up = 0u64;
+    let mut bytes_down = 0u64;
+
+    // (s, y, ρ) pairs, newest at the back.
+    let mut hist: VecDeque<(Vec<f64>, Vec<f64>, f64)> = VecDeque::new();
+    let (mut f_x, mut grad) = pool.loss_grad(&x);
+    bytes_down += d as u64 * 8 * n;
+    bytes_up += (d as u64 * 8 + 8) * n;
+
+    for round in 0..opts.max_rounds {
+        let gnorm = vector::norm2(&grad);
+        trace.push(RoundRecord {
+            round,
+            grad_norm: gnorm,
+            loss: f_x,
+            bytes_up,
+            bytes_down,
+            elapsed: sw.elapsed_secs(),
+        });
+        if gnorm <= opts.tol_grad {
+            break;
+        }
+        // Two-loop recursion for dir = −H·∇f.
+        let mut q = grad.clone();
+        let mut alphas = Vec::with_capacity(hist.len());
+        for (s, yv, rho) in hist.iter().rev() {
+            let a = rho * vector::dot(s, &q);
+            vector::axpy(-a, yv, &mut q);
+            alphas.push(a);
+        }
+        // Initial scaling γ = sᵀy / yᵀy of the newest pair.
+        if let Some((s, yv, _)) = hist.back() {
+            let gamma = vector::dot(s, yv) / vector::dot(yv, yv).max(1e-300);
+            vector::scale(gamma.max(1e-12), &mut q);
+        }
+        for ((s, yv, rho), a) in hist.iter().zip(alphas.iter().rev()) {
+            let b = rho * vector::dot(yv, &q);
+            vector::axpy(a - b, s, &mut q);
+        }
+        let mut dir = q;
+        vector::scale(-1.0, &mut dir);
+        // Safeguard: fall back to steepest descent on a bad direction.
+        if vector::dot(&dir, &grad) >= 0.0 {
+            dir = grad.clone();
+            vector::scale(-1.0, &mut dir);
+            hist.clear();
+        }
+        let step = armijo(pool, &x, f_x, &grad, &dir, 1.0, 1e-4, 0.5, 60);
+        bytes_down += d as u64 * 8 * n;
+        bytes_up += 8 * n;
+        if step == 0.0 {
+            break;
+        }
+        let mut x_new = vec![0.0; d];
+        vector::add_scaled(&x, step, &dir, &mut x_new);
+        let (f_new, g_new) = pool.loss_grad(&x_new);
+        bytes_down += d as u64 * 8 * n;
+        bytes_up += (d as u64 * 8 + 8) * n;
+        // Curvature pair.
+        let mut s_vec = vec![0.0; d];
+        vector::sub(&x_new, &x, &mut s_vec);
+        let mut y_vec = vec![0.0; d];
+        vector::sub(&g_new, &grad, &mut y_vec);
+        let sy = vector::dot(&s_vec, &y_vec);
+        if sy > 1e-12 * vector::norm2(&s_vec) * vector::norm2(&y_vec) {
+            let rho = 1.0 / sy;
+            hist.push_back((s_vec, y_vec, rho));
+            if hist.len() > m {
+                hist.pop_front();
+            }
+        }
+        x = x_new;
+        f_x = f_new;
+        grad = g_new;
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::gd::tests::pool;
+    use crate::baselines::run_gd;
+
+    #[test]
+    fn lbfgs_converges_tight() {
+        let (mut p, d) = pool(3, 61);
+        let opts = BaselineOptions { max_rounds: 500, tol_grad: 1e-9 };
+        let tr = run_lbfgs(&mut p, &opts, 10, vec![0.0; d]);
+        assert!(tr.last_grad_norm() <= 1e-9, "‖∇f‖={}", tr.last_grad_norm());
+    }
+
+    #[test]
+    fn lbfgs_much_faster_than_gd() {
+        let (mut p1, d) = pool(3, 62);
+        let (mut p2, _) = pool(3, 62);
+        let opts = BaselineOptions { max_rounds: 4000, tol_grad: 1e-8 };
+        let tl = run_lbfgs(&mut p1, &opts, 10, vec![0.0; d]);
+        let tg = run_gd(&mut p2, &opts, vec![0.0; d]);
+        let rl = tl.rounds_to_tolerance(1e-8).unwrap();
+        let rg = tg.rounds_to_tolerance(1e-8).unwrap_or(u64::MAX);
+        assert!(rl * 2 < rg, "lbfgs {rl} vs gd {rg}");
+    }
+}

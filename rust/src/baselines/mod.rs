@@ -1,0 +1,73 @@
+//! Baseline solvers (DESIGN.md §2 substitution for CVXPY / MOSEK /
+//! Spark MLlib / Ray-Scikit-Learn, which are unavailable offline).
+//!
+//! All baselines are *first-order or quasi-Newton* methods driven
+//! through the same [`ClientPool`] transport as FedNL, so the
+//! single-node (Table 2) and multi-node TCP (Table 3) comparisons
+//! exercise identical substrates: per round they move a dense d-vector
+//! per client — no Hessian compression, many more rounds. The
+//! *uncompressed Newton* comparator is FedNL itself with the Identity
+//! compressor and warm start (exact distributed Newton from round 1).
+
+pub mod gd;
+pub mod lbfgs;
+pub mod nesterov;
+
+pub use gd::run_gd;
+pub use lbfgs::run_lbfgs;
+pub use nesterov::run_nesterov;
+
+use crate::coordinator::ClientPool;
+use crate::linalg::vector;
+
+/// One full-gradient reduction over the pool: (f(x), ∇f(x)).
+///
+/// Implemented on top of `ClientPool::round` would waste a Hessian
+/// evaluation per probe, so baselines use the dedicated
+/// [`ClientPool::loss_grad`] reduction.
+pub(crate) fn pool_loss_grad(
+    pool: &mut dyn ClientPool,
+    x: &[f64],
+) -> (f64, Vec<f64>) {
+    pool.loss_grad(x)
+}
+
+/// Shared Armijo backtracking on f along direction `dir` from `x`.
+/// Returns the accepted step (0.0 if even the smallest trial fails).
+pub(crate) fn armijo(
+    pool: &mut dyn ClientPool,
+    x: &[f64],
+    f_x: f64,
+    grad: &[f64],
+    dir: &[f64],
+    step0: f64,
+    c: f64,
+    gamma: f64,
+    max_backtracks: u32,
+) -> f64 {
+    let slope = vector::dot(grad, dir);
+    let mut step = step0;
+    let mut trial = vec![0.0; x.len()];
+    for _ in 0..=max_backtracks {
+        vector::add_scaled(x, step, dir, &mut trial);
+        let f_t = pool.eval_loss(&trial);
+        if f_t <= f_x + c * step * slope {
+            return step;
+        }
+        step *= gamma;
+    }
+    0.0
+}
+
+/// Common options for baseline solvers.
+#[derive(Debug, Clone)]
+pub struct BaselineOptions {
+    pub max_rounds: u64,
+    pub tol_grad: f64,
+}
+
+impl Default for BaselineOptions {
+    fn default() -> Self {
+        Self { max_rounds: 10_000, tol_grad: 1e-9 }
+    }
+}

@@ -1,0 +1,287 @@
+//! Communication compressors for Hessian learning (paper §8, App. C, D).
+//!
+//! All compressors act on the *packed upper triangle* of the symmetric
+//! difference `∇²fᵢ(xᵏ) − Hᵢᵏ` (length n = d(d+1)/2), exactly as the
+//! paper's implementation does (App. C.1). Contraction/variance is
+//! accounted in the Frobenius norm of the full symmetric matrix, i.e.
+//! off-diagonal entries carry weight 2.
+//!
+//! Compressor zoo (paper Table 1):
+//! * [`TopK`]      — k largest energy entries, via a 4-ary min-heap
+//!                   (§5.11: the winning strategy among quick/merge/radix
+//!                   sorts and CO sorts).
+//! * [`RandK`]     — k-subset u.a.r., seed-reconstructible (§7).
+//! * [`RandSeqK`]  — NEW in paper (App. C): one PRG call, contiguous
+//!                   wrap-around window → cache-aware.
+//! * [`TopLEK`]    — NEW in paper (App. D): adaptive k' ≤ k making the
+//!                   contractive inequality *tight* in expectation.
+//! * [`Natural`]   — unbiased exponent rounding (Horváth et al.), ω=1/8,
+//!                   bit-level implementation.
+//! * [`Identity`]  — C(x) = x (δ = 1), the uncompressed baseline.
+//!
+//! The FedNL Hessian learning rate is derived from the compressor class
+//! (paper §2: "the only quantity not evaluated in runtime is α"):
+//! contractive with parameter δ → α = 1 − √(1−δ); unbiased with variance
+//! ω → the compressor is used in its scaled contractive form
+//! (values · 1/(1+ω)) with δ = 1/(1+ω).
+
+pub mod natural;
+pub mod randk;
+pub mod randseqk;
+pub mod toplek;
+pub mod topk;
+
+pub use natural::Natural;
+pub use randk::RandK;
+pub use randseqk::RandSeqK;
+pub use topk::TopK;
+pub use toplek::TopLEK;
+
+use crate::linalg::packed::PackedUpper;
+
+/// How the chosen coordinates travel on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum IndexPayload {
+    /// Explicit fixed-width 32-bit indices (TopK/TopLEK; §7: fixed-width
+    /// beat varint).
+    Explicit(Vec<u32>),
+    /// PRG seed; the master regenerates the k-subset (RandK mode (ii)).
+    Seed { seed: u64, k: u32 },
+    /// Single start index; indices are (start..start+k) mod n (RandSeqK).
+    SeqStart { start: u32, k: u32 },
+    /// All coordinates, in order (Identity / Natural).
+    Dense,
+}
+
+/// How values are represented on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ValueEncoding {
+    /// Raw IEEE-754 doubles (8 bytes each).
+    F64,
+    /// Signed powers of two in 16 bits (Natural compressor: sign +
+    /// 11-bit exponent — the paper's "granularity of bits").
+    Pow2x16,
+}
+
+/// A compressed symmetric-matrix update in packed coordinates.
+#[derive(Debug, Clone)]
+pub struct Compressed {
+    pub payload: IndexPayload,
+    /// Selected values. Consumers must apply `scale` (contractive form):
+    /// H ← H + α·scale·values.
+    pub values: Vec<f64>,
+    /// Post-scaling factor (1.0 for most; 1/(1+ω) for unbiased
+    /// compressors used in scaled contractive form). Kept separate so
+    /// `values` stay bit-exactly encodable (Natural: pure powers of 2).
+    pub scale: f64,
+    pub encoding: ValueEncoding,
+    /// Packed length n of the source vector (for index reconstruction).
+    pub n: u32,
+}
+
+impl Compressed {
+    /// Materialize the packed indices this update touches.
+    pub fn indices(&self) -> Vec<u32> {
+        match &self.payload {
+            IndexPayload::Explicit(ix) => ix.clone(),
+            IndexPayload::Seed { seed, k } => {
+                let mut rng = crate::rng::Pcg64::seed_from_u64(*seed);
+                crate::rng::sample_distinct(&mut rng, self.n as usize, *k as usize)
+            }
+            IndexPayload::SeqStart { start, k } => {
+                (0..*k).map(|t| (*start + t) % self.n).collect()
+            }
+            IndexPayload::Dense => (0..self.n).collect(),
+        }
+    }
+
+    /// Scatter into a dense packed buffer (zero elsewhere), applying
+    /// `scale`.
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.n as usize];
+        for (i, &ix) in self.indices().iter().enumerate() {
+            out[ix as usize] = self.scale * self.values[i];
+        }
+        out
+    }
+
+    /// Bytes this update occupies on the wire (paper's "communicated
+    /// bits" accounting, App. E.1): values + index side-channel.
+    pub fn wire_bytes(&self) -> u64 {
+        let per_value = match self.encoding {
+            ValueEncoding::F64 => 8,
+            ValueEncoding::Pow2x16 => 2,
+        };
+        let vals = self.values.len() as u64 * per_value;
+        let idx = match &self.payload {
+            IndexPayload::Explicit(ix) => 4 * ix.len() as u64 + 4,
+            IndexPayload::Seed { .. } => 12,
+            IndexPayload::SeqStart { .. } => 8,
+            IndexPayload::Dense => 0,
+        };
+        vals + idx
+    }
+}
+
+/// Compressor class, as used for the theoretical α.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CompressorKind {
+    /// E‖C(x)−x‖² ≤ (1−δ)‖x‖².
+    Contractive { delta: f64 },
+    /// E C(x) = x, E‖C(x)−x‖² ≤ ω‖x‖² — used in scaled contractive form.
+    Unbiased { omega: f64 },
+}
+
+impl CompressorKind {
+    /// δ of the (possibly scaled) contractive form.
+    pub fn delta(&self) -> f64 {
+        match *self {
+            CompressorKind::Contractive { delta } => delta,
+            CompressorKind::Unbiased { omega } => 1.0 / (1.0 + omega),
+        }
+    }
+
+    /// Default FedNL Hessian learning rate for this compressor class.
+    ///
+    /// α = 1 is admissible for the whole (scaled-)contractive class:
+    /// with Hᵏ⁺¹ = Hᵏ + C(D), E‖Hᵏ⁺¹ − ∇²f‖² = E‖D − C(D)‖² ≤
+    /// (1−δ)‖D‖², i.e. the Hessian error already contracts at (1−δ)
+    /// per round — this is what the reference implementation runs and
+    /// what reproduces the paper's ‖∇f‖ ≈ 1e-18 at r = 1000. The
+    /// conservative worst-case Lyapunov rate 1 − √(1−δ) can be forced
+    /// via [`crate::algorithms::Options::alpha`].
+    pub fn alpha(&self) -> f64 {
+        1.0
+    }
+
+    /// The conservative theory rate 1 − √(1−δ).
+    pub fn alpha_conservative(&self) -> f64 {
+        1.0 - (1.0 - self.delta()).sqrt()
+    }
+}
+
+/// A (possibly stateful) compression operator on packed upper triangles.
+pub trait Compressor: Send {
+    /// Display name matching the paper's tables.
+    fn name(&self) -> String;
+
+    /// Class parameters (δ / ω) for the given packed length.
+    fn kind(&self, n: usize) -> CompressorKind;
+
+    /// Compress `src` (packed upper triangle, already weighted per the
+    /// layout — see [`PackedUpper`]). `round` feeds per-round seeds.
+    fn compress(
+        &mut self,
+        pu: &PackedUpper,
+        src: &[f64],
+        round: u64,
+    ) -> Compressed;
+}
+
+/// Construct a compressor by table name ("topk", "randk", "randseqk",
+/// "toplek", "natural", "identity"), with k given in *multiples of d*
+/// for the sparsifiers (the paper uses K = 8d).
+pub fn by_name(
+    name: &str,
+    d: usize,
+    k_mult_d: usize,
+    seed: u64,
+) -> anyhow::Result<Box<dyn Compressor>> {
+    let k = k_mult_d * d;
+    Ok(match name {
+        "topk" => Box::new(TopK::new(k)),
+        "randk" => Box::new(RandK::new(k, seed)),
+        "randseqk" => Box::new(RandSeqK::new(k, seed)),
+        "toplek" => Box::new(TopLEK::new(k, seed)),
+        "natural" => Box::new(Natural::new()),
+        "identity" | "ident" => Box::new(Identity),
+        other => anyhow::bail!("unknown compressor '{other}'"),
+    })
+}
+
+/// All compressor names, in the order of the paper's Table 1.
+pub const ALL_NAMES: [&str; 6] =
+    ["randk", "topk", "randseqk", "toplek", "natural", "identity"];
+
+/// C(x) = x — the dense baseline (Table 1 row "Ident").
+#[derive(Debug, Clone, Default)]
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> String {
+        "Ident".into()
+    }
+
+    fn kind(&self, _n: usize) -> CompressorKind {
+        CompressorKind::Contractive { delta: 1.0 }
+    }
+
+    fn compress(
+        &mut self,
+        _pu: &PackedUpper,
+        src: &[f64],
+        _round: u64,
+    ) -> Compressed {
+        Compressed {
+            payload: IndexPayload::Dense,
+            values: src.to_vec(),
+            scale: 1.0,
+            encoding: ValueEncoding::F64,
+            n: src.len() as u32,
+        }
+    }
+}
+
+/// Frobenius-weighted squared norm of a packed vector (helper shared by
+/// compressors and tests): diagonal weight 1, off-diagonal weight 2.
+pub fn weighted_norm_sq(pu: &PackedUpper, src: &[f64]) -> f64 {
+    pu.frobenius_sq_packed(src)
+}
+
+/// Frobenius-weighted squared distortion ‖C(x) − x‖² of a compressed
+/// update against its source (test/diagnostic helper).
+pub fn distortion_sq(pu: &PackedUpper, src: &[f64], c: &Compressed) -> f64 {
+    let dense = c.to_dense();
+    let mut diff = vec![0.0; src.len()];
+    for i in 0..src.len() {
+        diff[i] = dense[i] - src[i];
+    }
+    pu.frobenius_sq_packed(&diff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_from_kind() {
+        let c = CompressorKind::Contractive { delta: 1.0 };
+        assert_eq!(c.alpha(), 1.0);
+        assert_eq!(c.alpha_conservative(), 1.0);
+        let u = CompressorKind::Unbiased { omega: 1.0 / 8.0 };
+        assert!((u.delta() - 8.0 / 9.0).abs() < 1e-15);
+        assert_eq!(u.alpha(), 1.0);
+        assert!(
+            (u.alpha_conservative() - (1.0 - (1.0f64 / 9.0).sqrt())).abs()
+                < 1e-15
+        );
+    }
+
+    #[test]
+    fn identity_roundtrip() {
+        let pu = PackedUpper::new(4);
+        let src: Vec<f64> = (0..pu.len()).map(|i| i as f64 - 3.0).collect();
+        let mut c = Identity;
+        let out = c.compress(&pu, &src, 0);
+        assert_eq!(out.to_dense(), src);
+        assert_eq!(distortion_sq(&pu, &src, &out), 0.0);
+    }
+
+    #[test]
+    fn by_name_all() {
+        for n in ALL_NAMES {
+            assert!(by_name(n, 8, 2, 1).is_ok(), "{n}");
+        }
+        assert!(by_name("bogus", 8, 2, 1).is_err());
+    }
+}

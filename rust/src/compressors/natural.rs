@@ -1,0 +1,220 @@
+//! Natural compression (Horváth et al. 2022) — unbiased stochastic
+//! rounding of the mantissa to a power of two, ω = 1/8.
+//!
+//! The paper added it out of scientific curiosity and found it "behaves
+//! remarkably well for FedNL" (§9, App. E.2), noting it "operates at the
+//! granularity of bits". We implement it with FP64 bit tricks: for
+//! v = ±2ᵉ·m, m ∈ [1, 2), round to ±2ᵉ with probability 2−m and ±2ᵉ⁺¹
+//! with probability m−1 (E = 2ᵉ(2−m) + 2ᵉ⁺¹(m−1) = 2ᵉ·m = v).
+//!
+//! A compressed value is a sign bit + 11-bit exponent; the wire packs it
+//! in 16 bits (see [`pack16`]/[`unpack16`]) — a 4× payload shrink over
+//! raw f64. FedNL consumes the scaled contractive form: values divided
+//! by (1+ω) = 9/8, δ = 8/9.
+
+use super::{Compressed, Compressor, CompressorKind, IndexPayload};
+use crate::linalg::packed::PackedUpper;
+use crate::rng::{Pcg64, Rng};
+
+/// Unbiased power-of-two stochastic rounding, in scaled contractive form.
+#[derive(Debug, Clone)]
+pub struct Natural {
+    rng: Pcg64,
+}
+
+pub const OMEGA: f64 = 1.0 / 8.0;
+
+impl Natural {
+    pub fn new() -> Self {
+        Self { rng: Pcg64::seed_from_u64(0x4E41_5455_5241_4C21) }
+    }
+
+    pub fn with_seed(seed: u64) -> Self {
+        Self { rng: Pcg64::seed_from_u64(seed) }
+    }
+
+    /// One unbiased natural-rounding draw (bit-trick fast path).
+    #[inline]
+    pub fn round_natural<R: Rng>(rng: &mut R, v: f64) -> f64 {
+        if v == 0.0 || !v.is_finite() {
+            return v;
+        }
+        let bits = v.to_bits();
+        let exp_bits = (bits >> 52) & 0x7FF;
+        if exp_bits == 0 {
+            // Subnormal: magnitude < 2^-1022 — flush via generic path.
+            let mag = v.abs();
+            let e = mag.log2().floor();
+            let lo = e.exp2();
+            let m = mag / lo;
+            let up = rng.bernoulli(m - 1.0);
+            let out = if up { lo * 2.0 } else { lo };
+            return out.copysign(v);
+        }
+        // m − 1 ∈ [0,1) is exactly the mantissa fraction.
+        let frac = f64::from_bits((bits & 0x000F_FFFF_FFFF_FFFF) | (1023u64 << 52)) - 1.0;
+        let up = rng.bernoulli(frac);
+        let new_exp = if up { exp_bits + 1 } else { exp_bits };
+        let sign = bits & 0x8000_0000_0000_0000;
+        f64::from_bits(sign | (new_exp.min(0x7FE) << 52))
+    }
+}
+
+impl Default for Natural {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Compressor for Natural {
+    fn name(&self) -> String {
+        "Natural".into()
+    }
+
+    fn kind(&self, _n: usize) -> CompressorKind {
+        CompressorKind::Unbiased { omega: OMEGA }
+    }
+
+    fn compress(
+        &mut self,
+        _pu: &PackedUpper,
+        src: &[f64],
+        _round: u64,
+    ) -> Compressed {
+        // Values stay pure ± powers of two (16-bit encodable, paper's
+        // "granularity of bits"); the contractive 1/(1+ω) factor rides
+        // in `scale` and is applied by the consumer.
+        let values = src
+            .iter()
+            .map(|&v| Self::round_natural(&mut self.rng, v))
+            .collect();
+        Compressed {
+            payload: IndexPayload::Dense,
+            values,
+            scale: 1.0 / (1.0 + OMEGA),
+            encoding: super::ValueEncoding::Pow2x16,
+            n: src.len() as u32,
+        }
+    }
+}
+
+/// Pack a natural-compressed value (± power of two, pre-scaling) into
+/// 16 bits: bit 15 = sign, bits 0..11 = biased exponent, 0 = zero.
+pub fn pack16(v: f64) -> u16 {
+    if v == 0.0 {
+        return 0;
+    }
+    let bits = v.to_bits();
+    let sign = ((bits >> 63) as u16) << 15;
+    let exp = ((bits >> 52) & 0x7FF) as u16;
+    sign | exp
+}
+
+/// Inverse of [`pack16`].
+pub fn unpack16(p: u16) -> f64 {
+    if p & 0x7FFF == 0 {
+        return 0.0;
+    }
+    let sign = ((p >> 15) as u64) << 63;
+    let exp = ((p & 0x7FF) as u64) << 52;
+    f64::from_bits(sign | exp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::weighted_norm_sq;
+
+    #[test]
+    fn rounds_to_powers_of_two() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        for &v in &[3.7, -0.3, 1.0, -1024.5, 1e-10, 2.0f64.powi(100)] {
+            let r = Natural::round_natural(&mut rng, v);
+            let mag = r.abs();
+            assert_eq!(mag.log2().fract(), 0.0, "{v} -> {r}");
+            assert_eq!(r.signum(), v.signum());
+            // Bracketing: |v|/2 < |r| ≤ 2|v| roughly.
+            assert!(mag >= v.abs() / 2.0 - 1e-300 && mag <= v.abs() * 2.0);
+        }
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        for &v in &[3.3, -7.9, 0.011, 1.5] {
+            let trials = 60_000;
+            let mean: f64 = (0..trials)
+                .map(|_| Natural::round_natural(&mut rng, v))
+                .sum::<f64>()
+                / trials as f64;
+            assert!((mean - v).abs() < 0.02 * v.abs(), "{v}: mean {mean}");
+        }
+    }
+
+    #[test]
+    fn exact_powers_are_fixed_points() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        for e in [-5, 0, 1, 10] {
+            let v = 2.0f64.powi(e);
+            for _ in 0..100 {
+                assert_eq!(Natural::round_natural(&mut rng, v), v);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_and_nonfinite_passthrough() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        assert_eq!(Natural::round_natural(&mut rng, 0.0), 0.0);
+        assert!(Natural::round_natural(&mut rng, f64::INFINITY).is_infinite());
+    }
+
+    #[test]
+    fn variance_bound_omega() {
+        // E‖C(x)−x‖² ≤ ω‖x‖² with ω = 1/8 (unscaled form).
+        let pu = PackedUpper::new(6);
+        let mut rng = Pcg64::seed_from_u64(5);
+        let src: Vec<f64> =
+            (0..pu.len()).map(|_| rng.next_gaussian()).collect();
+        let total = weighted_norm_sq(&pu, &src);
+        let mut acc = 0.0;
+        let trials = 3000;
+        let mut r2 = Pcg64::seed_from_u64(6);
+        for _ in 0..trials {
+            let mut diff = vec![0.0; src.len()];
+            for (i, &v) in src.iter().enumerate() {
+                diff[i] = Natural::round_natural(&mut r2, v) - v;
+            }
+            acc += pu.frobenius_sq_packed(&diff);
+        }
+        let mean = acc / trials as f64;
+        assert!(mean <= OMEGA * total * 1.05, "{mean} > ω·{total}");
+    }
+
+    #[test]
+    fn pack16_roundtrip() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        for &v in &[1.0, -2.0, 0.5, -1024.0, 2.0f64.powi(-300), 0.0] {
+            let r = Natural::round_natural(&mut rng, v);
+            assert_eq!(unpack16(pack16(r)), r, "v={v} r={r}");
+        }
+    }
+
+    #[test]
+    fn compressor_carries_contractive_scale() {
+        let pu = PackedUpper::new(4);
+        let src = vec![2.0; pu.len()];
+        let mut c = Natural::with_seed(8);
+        let out = c.compress(&pu, &src, 0);
+        assert_eq!(out.values.len(), src.len());
+        assert!((out.scale - 8.0 / 9.0).abs() < 1e-16);
+        for v in &out.values {
+            // 2.0 is a power of two → fixed point; raw value unscaled.
+            assert_eq!(*v, 2.0);
+        }
+        // to_dense applies the scale.
+        assert!((out.to_dense()[0] - 2.0 * 8.0 / 9.0).abs() < 1e-15);
+        // 16-bit wire accounting.
+        assert_eq!(out.wire_bytes(), src.len() as u64 * 2);
+    }
+}

@@ -1,0 +1,181 @@
+//! RandK: a u.a.r. k-subset of the packed upper triangle.
+//!
+//! Used in its *scaled contractive form*: the unbiased RandK multiplies
+//! kept entries by n/k (ω = n/k − 1); dividing by (1+ω) = n/k yields
+//! kept entries **unscaled** with contraction δ = k/n — this is the form
+//! FedNL's Hessian learning consumes (mod. §2 of the FedNL paper).
+//!
+//! The subset is drawn via partial Fisher–Yates from a per-round PRG
+//! seeded as `seed_base ⊕ round`; the wire carries only the seed and the
+//! master regenerates indices bit-identically (paper §7 mode (ii) —
+//! "index reconstruction using a pseudo-random generator"). Indices are
+//! locally sorted before the Hessian-shift update for cache-friendly
+//! application (v41), which does not affect the chosen set.
+
+use super::{Compressed, Compressor, CompressorKind, IndexPayload};
+use crate::linalg::packed::PackedUpper;
+use crate::rng::{sample_distinct, Pcg64};
+
+/// Uniform random-k sparsifier with seed-reconstructible indices.
+#[derive(Debug, Clone)]
+pub struct RandK {
+    k: usize,
+    seed_base: u64,
+}
+
+impl RandK {
+    pub fn new(k: usize, seed_base: u64) -> Self {
+        assert!(k > 0);
+        Self { k, seed_base }
+    }
+
+    /// The per-round seed both sides derive (client compress / master
+    /// reconstruct must agree bit-for-bit).
+    pub fn round_seed(&self, round: u64) -> u64 {
+        crate::rng::pcg::splitmix64(self.seed_base ^ round.wrapping_mul(0x9E37_79B9))
+    }
+}
+
+impl Compressor for RandK {
+    fn name(&self) -> String {
+        format!("RandK[k={}]", self.k)
+    }
+
+    fn kind(&self, n: usize) -> CompressorKind {
+        // Scaled-contractive form of the ω = n/k − 1 unbiased compressor.
+        CompressorKind::Contractive { delta: self.k.min(n) as f64 / n as f64 }
+    }
+
+    fn compress(
+        &mut self,
+        _pu: &PackedUpper,
+        src: &[f64],
+        round: u64,
+    ) -> Compressed {
+        let n = src.len();
+        let k = self.k.min(n);
+        let seed = self.round_seed(round);
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let idx = sample_distinct(&mut rng, n, k);
+        let values = idx.iter().map(|&i| src[i as usize]).collect();
+        Compressed {
+            payload: IndexPayload::Seed { seed, k: k as u32 },
+            values,
+            scale: 1.0,
+            encoding: super::ValueEncoding::F64,
+            n: n as u32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::{distortion_sq, weighted_norm_sq};
+    use crate::rng::Rng;
+
+    fn packed_src(d: usize, seed: u64) -> (PackedUpper, Vec<f64>) {
+        let pu = PackedUpper::new(d);
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let src = (0..pu.len()).map(|_| rng.next_gaussian()).collect();
+        (pu, src)
+    }
+
+    #[test]
+    fn seed_reconstruction_matches() {
+        let (pu, src) = packed_src(10, 1);
+        let mut c = RandK::new(12, 777);
+        let out = c.compress(&pu, &src, 42);
+        // The master only has the payload; regenerate and compare the
+        // values against a fresh local selection.
+        let idx = out.indices();
+        assert_eq!(idx.len(), 12);
+        for (v, &i) in out.values.iter().zip(&idx) {
+            assert_eq!(*v, src[i as usize]);
+        }
+    }
+
+    #[test]
+    fn different_rounds_different_sets() {
+        let (pu, src) = packed_src(10, 2);
+        let mut c = RandK::new(8, 5);
+        let a = c.compress(&pu, &src, 1).indices();
+        let b = c.compress(&pu, &src, 2).indices();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn unbiased_selection_probability() {
+        // Each coordinate selected with probability ≈ k/n (App. C.1).
+        let (pu, src) = packed_src(8, 3);
+        let n = src.len(); // 36
+        let k = 9;
+        let mut counts = vec![0u32; n];
+        let mut c = RandK::new(k, 11);
+        let trials = 4000;
+        for r in 0..trials {
+            for i in c.compress(&pu, &src, r).indices() {
+                counts[i as usize] += 1;
+            }
+        }
+        let expect = trials as f64 * k as f64 / n as f64;
+        for (i, &cnt) in counts.iter().enumerate() {
+            assert!(
+                (cnt as f64 - expect).abs() < expect * 0.25,
+                "coord {i}: {cnt} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn unbiasedness_of_scaled_estimator() {
+        // E[(n/k)·C(x)] = x for the unscaled-kept-values form.
+        let (pu, src) = packed_src(6, 4);
+        let n = src.len();
+        let k = 5;
+        let mut c = RandK::new(k, 17);
+        let trials = 20_000;
+        let mut acc = vec![0.0; n];
+        for r in 0..trials {
+            let out = c.compress(&pu, &src, r);
+            for (v, i) in out.values.iter().zip(out.indices()) {
+                acc[i as usize] += v * n as f64 / k as f64;
+            }
+        }
+        for i in 0..n {
+            let mean = acc[i] / trials as f64;
+            assert!(
+                (mean - src[i]).abs() < 0.12 * src[i].abs().max(0.4),
+                "coord {i}: {mean} vs {}",
+                src[i]
+            );
+        }
+    }
+
+    #[test]
+    fn expected_contraction_holds() {
+        // E‖C(x) − x‖² = (1 − k/n)‖x‖² for the contractive form.
+        let (pu, src) = packed_src(7, 5);
+        let n = src.len();
+        let k = 7;
+        let mut c = RandK::new(k, 23);
+        let trials = 3000;
+        let mut acc = 0.0;
+        for r in 0..trials {
+            let out = c.compress(&pu, &src, r);
+            acc += distortion_sq(&pu, &src, &out);
+        }
+        let mean = acc / trials as f64;
+        let expect = (1.0 - k as f64 / n as f64) * weighted_norm_sq(&pu, &src);
+        assert!((mean - expect).abs() < 0.05 * expect, "{mean} vs {expect}");
+    }
+
+    #[test]
+    fn wire_is_seed_only() {
+        let (pu, src) = packed_src(9, 6);
+        let mut c = RandK::new(10, 3);
+        let out = c.compress(&pu, &src, 0);
+        // 10 f64 values + 12 bytes of seed material ≪ explicit indices.
+        assert_eq!(out.wire_bytes(), 10 * 8 + 12);
+    }
+}

@@ -1,0 +1,165 @@
+//! RandSeqK — the paper's NEW cache-aware RandK variant (Appendix C).
+//!
+//! Only the start index s ~ U[0, n) is random; the selected set is the
+//! contiguous wrap-around window {s, s+1, …, s+k−1} (mod n). Each
+//! coordinate is still covered by exactly k of the n possible windows,
+//! so P[Z_ij = 1] = k/n — the marginal inclusion probability matches
+//! RandK exactly, and by App. C.1's Observations 1-2 (the analysis never
+//! uses joint independence) unbiasedness and the ω = n/k − 1 variance
+//! bound carry over verbatim.
+//!
+//! Practical wins reproduced here (App. C.4):
+//! * 1 PRG invocation instead of k;
+//! * the window is two `memcpy`-able slices (kb/L + 2 cache-line
+//!   transactions instead of k random ones);
+//! * the wire carries a single u32 start index.
+
+use super::{Compressed, Compressor, CompressorKind, IndexPayload};
+use crate::linalg::packed::PackedUpper;
+use crate::rng::{Pcg64, Rng};
+
+/// Sequential-window random sparsifier.
+#[derive(Debug, Clone)]
+pub struct RandSeqK {
+    k: usize,
+    seed_base: u64,
+}
+
+impl RandSeqK {
+    pub fn new(k: usize, seed_base: u64) -> Self {
+        assert!(k > 0);
+        Self { k, seed_base }
+    }
+
+    fn start_for_round(&self, n: usize, round: u64) -> u32 {
+        let seed = crate::rng::pcg::splitmix64(
+            self.seed_base ^ round.wrapping_mul(0xA24B_AED4),
+        );
+        let mut rng = Pcg64::seed_from_u64(seed);
+        rng.next_below(n as u64) as u32 // the single PRG call
+    }
+}
+
+impl Compressor for RandSeqK {
+    fn name(&self) -> String {
+        format!("RandSeqK[k={}]", self.k)
+    }
+
+    fn kind(&self, n: usize) -> CompressorKind {
+        CompressorKind::Contractive { delta: self.k.min(n) as f64 / n as f64 }
+    }
+
+    fn compress(
+        &mut self,
+        _pu: &PackedUpper,
+        src: &[f64],
+        round: u64,
+    ) -> Compressed {
+        let n = src.len();
+        let k = self.k.min(n);
+        let start = self.start_for_round(n, round) as usize;
+        // Contiguous gather: at most two slice copies (cache-aware).
+        let mut values = Vec::with_capacity(k);
+        let first_len = (n - start).min(k);
+        values.extend_from_slice(&src[start..start + first_len]);
+        values.extend_from_slice(&src[..k - first_len]);
+        Compressed {
+            payload: IndexPayload::SeqStart { start: start as u32, k: k as u32 },
+            values,
+            scale: 1.0,
+            encoding: super::ValueEncoding::F64,
+            n: n as u32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::{distortion_sq, weighted_norm_sq};
+
+    fn packed_src(d: usize, seed: u64) -> (PackedUpper, Vec<f64>) {
+        let pu = PackedUpper::new(d);
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let src = (0..pu.len()).map(|_| rng.next_gaussian()).collect();
+        (pu, src)
+    }
+
+    #[test]
+    fn window_wraps_correctly() {
+        let (pu, src) = packed_src(4, 1); // n = 10
+        let mut c = RandSeqK::new(7, 0);
+        for round in 0..50 {
+            let out = c.compress(&pu, &src, round);
+            let idx = out.indices();
+            assert_eq!(idx.len(), 7);
+            // Consecutive mod n.
+            for w in idx.windows(2) {
+                assert_eq!((w[0] + 1) % out.n, w[1]);
+            }
+            for (v, i) in out.values.iter().zip(&idx) {
+                assert_eq!(*v, src[*i as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn marginal_inclusion_is_k_over_n() {
+        let (pu, src) = packed_src(8, 2);
+        let n = src.len(); // 36
+        let k = 9;
+        let mut counts = vec![0u32; n];
+        let mut c = RandSeqK::new(k, 7);
+        let trials = 6000;
+        for r in 0..trials {
+            for i in c.compress(&pu, &src, r).indices() {
+                counts[i as usize] += 1;
+            }
+        }
+        let expect = trials as f64 * k as f64 / n as f64;
+        for (i, &cnt) in counts.iter().enumerate() {
+            assert!(
+                (cnt as f64 - expect).abs() < expect * 0.2,
+                "coord {i}: {cnt} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn same_variance_as_randk_in_expectation() {
+        // E‖C(x) − x‖² = (1 − k/n)‖x‖² — identical to RandK (App. C).
+        let (pu, src) = packed_src(7, 3);
+        let n = src.len();
+        let k = 7;
+        let mut c = RandSeqK::new(k, 13);
+        let trials = 6000;
+        let mut acc = 0.0;
+        for r in 0..trials {
+            let out = c.compress(&pu, &src, r);
+            acc += distortion_sq(&pu, &src, &out);
+        }
+        let mean = acc / trials as f64;
+        let expect = (1.0 - k as f64 / n as f64) * weighted_norm_sq(&pu, &src);
+        assert!((mean - expect).abs() < 0.06 * expect, "{mean} vs {expect}");
+    }
+
+    #[test]
+    fn wire_carries_single_start_index() {
+        let (pu, src) = packed_src(9, 4);
+        let mut c = RandSeqK::new(10, 3);
+        let out = c.compress(&pu, &src, 0);
+        assert_eq!(out.wire_bytes(), 10 * 8 + 8);
+        assert!(matches!(out.payload, IndexPayload::SeqStart { .. }));
+    }
+
+    #[test]
+    fn deterministic_per_round() {
+        let (pu, src) = packed_src(6, 5);
+        let mut c1 = RandSeqK::new(5, 99);
+        let mut c2 = RandSeqK::new(5, 99);
+        let a = c1.compress(&pu, &src, 3);
+        let b = c2.compress(&pu, &src, 3);
+        assert_eq!(a.indices(), b.indices());
+        assert_eq!(a.values, b.values);
+    }
+}

@@ -1,0 +1,260 @@
+//! TopK: keep the k entries with the largest Frobenius-weighted energy.
+//!
+//! Selection uses a **4-ary min-heap of the k best seen so far** — the
+//! paper benchmarked quicksort, merge sort, multi-way merge sort, CO
+//! Funnelsort and radix sort and found the D-way heap fastest (§5.11,
+//! v37). Selected indices are sorted ascending before transmission so
+//! the master's sparse update walks memory monotonically (§5.11 v41,
+//! ×1.0182).
+//!
+//! Contraction: picking the top-k energies e_i = w_i·v_i² guarantees
+//! Σ_kept e ≥ (k/n)·Σ e, i.e. δ = k/n in the Frobenius norm — the
+//! worst-case bound of App. D.2.
+
+use super::{Compressed, Compressor, CompressorKind, IndexPayload};
+use crate::linalg::packed::PackedUpper;
+
+/// Deterministic TopK sparsifier.
+#[derive(Debug, Clone)]
+pub struct TopK {
+    k: usize,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "TopK requires k ≥ 1");
+        Self { k }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+/// Min-heap over (energy, index) with arity 4: shallower than binary →
+/// fewer cache-missing levels per sift (§5.11).
+pub(crate) struct MinHeap4 {
+    heap: Vec<(f64, u32)>,
+}
+
+impl MinHeap4 {
+    pub fn with_capacity(k: usize) -> Self {
+        Self { heap: Vec::with_capacity(k) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.heap[0].0
+    }
+
+    pub fn push(&mut self, e: f64, idx: u32) {
+        self.heap.push((e, idx));
+        let mut i = self.heap.len() - 1;
+        while i > 0 {
+            let parent = (i - 1) / 4;
+            if self.heap[parent].0 > self.heap[i].0 {
+                self.heap.swap(parent, i);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Replace the minimum with (e, idx) and sift down.
+    pub fn replace_min(&mut self, e: f64, idx: u32) {
+        self.heap[0] = (e, idx);
+        let n = self.heap.len();
+        let mut i = 0;
+        loop {
+            let first_child = i * 4 + 1;
+            if first_child >= n {
+                break;
+            }
+            let mut smallest = first_child;
+            let last = (first_child + 4).min(n);
+            for c in first_child + 1..last {
+                if self.heap[c].0 < self.heap[smallest].0 {
+                    smallest = c;
+                }
+            }
+            if self.heap[smallest].0 < self.heap[i].0 {
+                self.heap.swap(i, smallest);
+                i = smallest;
+            } else {
+                break;
+            }
+        }
+    }
+
+    pub fn into_items(self) -> Vec<(f64, u32)> {
+        self.heap
+    }
+}
+
+/// Select the indices of the k largest energies (ties broken towards
+/// lower index for determinism). Returns indices sorted ascending.
+pub(crate) fn select_topk_energy(
+    pu: &PackedUpper,
+    src: &[f64],
+    k: usize,
+) -> Vec<u32> {
+    let n = src.len();
+    let k = k.min(n);
+    let mut heap = MinHeap4::with_capacity(k);
+    for (i, &v) in src.iter().enumerate() {
+        let (r, c) = pu.pair(i);
+        let w = if r == c { 1.0 } else { 2.0 };
+        let e = w * v * v;
+        if heap.len() < k {
+            heap.push(e, i as u32);
+        } else if e > heap.min() {
+            heap.replace_min(e, i as u32);
+        }
+    }
+    let mut idx: Vec<u32> =
+        heap.into_items().into_iter().map(|(_, i)| i).collect();
+    idx.sort_unstable(); // ascending: cache-friendly master update (v41)
+    idx
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> String {
+        format!("TopK[k={}]", self.k)
+    }
+
+    fn kind(&self, n: usize) -> CompressorKind {
+        CompressorKind::Contractive { delta: (self.k.min(n)) as f64 / n as f64 }
+    }
+
+    fn compress(
+        &mut self,
+        pu: &PackedUpper,
+        src: &[f64],
+        _round: u64,
+    ) -> Compressed {
+        let idx = select_topk_energy(pu, src, self.k);
+        let values = idx.iter().map(|&i| src[i as usize]).collect();
+        Compressed {
+            payload: IndexPayload::Explicit(idx),
+            values,
+            scale: 1.0,
+            encoding: super::ValueEncoding::F64,
+            n: src.len() as u32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::{distortion_sq, weighted_norm_sq};
+    use crate::rng::{Pcg64, Rng};
+
+    fn packed_src(d: usize, seed: u64) -> (PackedUpper, Vec<f64>) {
+        let pu = PackedUpper::new(d);
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let src = (0..pu.len()).map(|_| rng.next_gaussian()).collect();
+        (pu, src)
+    }
+
+    #[test]
+    fn selects_largest_magnitudes_on_diagonal_free_layout() {
+        // d=1: single entry; d=2: entries (0,0),(0,1),(1,1).
+        let pu = PackedUpper::new(2);
+        let src = vec![3.0, -1.0, 0.5];
+        let idx = select_topk_energy(&pu, &src, 1);
+        assert_eq!(idx, vec![0]); // 3² = 9 beats 2·1 and 0.25
+    }
+
+    #[test]
+    fn off_diagonal_weighting_matters() {
+        // (0,1) has weight 2: 2·2² = 8 > 2.5² = 6.25 of the diagonal.
+        let pu = PackedUpper::new(2);
+        let src = vec![2.5, 2.0, 0.0];
+        let idx = select_topk_energy(&pu, &src, 1);
+        assert_eq!(idx, vec![1]);
+    }
+
+    #[test]
+    fn contraction_bound_holds() {
+        // ‖TopK(x) − x‖²_F ≤ (1 − k/n) ‖x‖²_F for many random inputs.
+        for seed in 0..20 {
+            let (pu, src) = packed_src(9, seed);
+            let n = src.len();
+            for k in [1, 4, n / 2, n] {
+                let mut c = TopK::new(k);
+                let out = c.compress(&pu, &src, 0);
+                let dist = distortion_sq(&pu, &src, &out);
+                let bound = (1.0 - k as f64 / n as f64)
+                    * weighted_norm_sq(&pu, &src)
+                    + 1e-12;
+                assert!(dist <= bound, "seed={seed} k={k}: {dist} > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn k_equals_n_is_lossless() {
+        let (pu, src) = packed_src(6, 3);
+        let mut c = TopK::new(src.len());
+        let out = c.compress(&pu, &src, 0);
+        assert_eq!(out.to_dense(), src);
+    }
+
+    #[test]
+    fn indices_sorted_and_unique() {
+        let (pu, src) = packed_src(12, 4);
+        let mut c = TopK::new(20);
+        let out = c.compress(&pu, &src, 0);
+        let idx = out.indices();
+        assert_eq!(idx.len(), 20);
+        assert!(idx.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn heap_extracts_true_topk() {
+        let (pu, src) = packed_src(15, 5);
+        let k = 17;
+        let got = select_topk_energy(&pu, &src, k);
+        // Brute-force expected set.
+        let mut energies: Vec<(f64, u32)> = src
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let (r, c) = pu.pair(i);
+                let w = if r == c { 1.0 } else { 2.0 };
+                (w * v * v, i as u32)
+            })
+            .collect();
+        energies
+            .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        let mut expect: Vec<u32> =
+            energies[..k].iter().map(|&(_, i)| i).collect();
+        expect.sort_unstable();
+        let mut got_sorted = got.clone();
+        got_sorted.sort_unstable();
+        // Energy multiset must match even if tie order differs.
+        let sum_got: f64 = got
+            .iter()
+            .map(|&i| {
+                let (r, c) = pu.pair(i as usize);
+                let w = if r == c { 1.0 } else { 2.0 };
+                w * src[i as usize] * src[i as usize]
+            })
+            .sum();
+        let sum_expect: f64 = energies[..k].iter().map(|&(e, _)| e).sum();
+        assert!((sum_got - sum_expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wire_bytes_accounts_values_and_indices() {
+        let (pu, src) = packed_src(8, 6);
+        let mut c = TopK::new(5);
+        let out = c.compress(&pu, &src, 0);
+        assert_eq!(out.wire_bytes(), 5 * 8 + 5 * 4 + 4);
+    }
+}

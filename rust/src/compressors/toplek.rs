@@ -1,0 +1,229 @@
+//! TopLEK — the paper's NEW adaptive "Top Less-Equal K" compressor
+//! (Appendix D, Algorithm 4).
+//!
+//! TopK's worst-case contraction δ = k/n is attained only on the
+//! diagonal of ℝⁿ (App. D.2) — on real inputs TopK over-delivers. TopLEK
+//! compresses *as much as the theory allows, but not more*: it returns
+//! k' ≤ k entries such that the contractive inequality holds with
+//! **tight equality in expectation**: E‖C(x) − x‖² = (1 − k/n)‖x‖².
+//!
+//! Construction (Alg. 4): let r(m) = 1 − (top-m energy)/(total energy)
+//! be the residual after keeping m entries (r decreasing in m, r(0)=1).
+//! Find the bracketing pair r(m) ≤ 1−δ ≤ r(m−1), then keep m entries
+//! with probability p = (r(m−1) − (1−δ))/(r(m−1) − r(m)) and m−1
+//! otherwise. Keeping TopK's worst case as a guard, m ≤ k always, so
+//! clients "transmit not k components but at most k; in fortuitous
+//! scenarios 0" (App. D.3).
+
+use super::topk::select_topk_energy;
+use super::{Compressed, Compressor, CompressorKind, IndexPayload};
+use crate::linalg::packed::PackedUpper;
+use crate::rng::{Pcg64, Rng};
+
+/// Adaptive randomized Top-(≤k) sparsifier.
+#[derive(Debug, Clone)]
+pub struct TopLEK {
+    k: usize,
+    seed_base: u64,
+}
+
+impl TopLEK {
+    pub fn new(k: usize, seed_base: u64) -> Self {
+        assert!(k > 0);
+        Self { k, seed_base }
+    }
+}
+
+impl Compressor for TopLEK {
+    fn name(&self) -> String {
+        format!("TopLEK[k={}]", self.k)
+    }
+
+    fn kind(&self, n: usize) -> CompressorKind {
+        CompressorKind::Contractive { delta: self.k.min(n) as f64 / n as f64 }
+    }
+
+    fn compress(
+        &mut self,
+        pu: &PackedUpper,
+        src: &[f64],
+        round: u64,
+    ) -> Compressed {
+        let n = src.len();
+        let k = self.k.min(n);
+        let target_residual = 1.0 - k as f64 / n as f64; // 1 − δ
+
+        // Top-k indices by weighted energy, then order them by energy
+        // descending to form prefixes.
+        let idx = select_topk_energy(pu, src, k);
+        let mut by_energy: Vec<(f64, u32)> = idx
+            .iter()
+            .map(|&i| {
+                let (r, c) = pu.pair(i as usize);
+                let w = if r == c { 1.0 } else { 2.0 };
+                (w * src[i as usize] * src[i as usize], i)
+            })
+            .collect();
+        by_energy.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+        let total: f64 = pu.frobenius_sq_packed(src);
+        if total <= 0.0 {
+            // Zero input: nothing to send (the fortuitous 0-component case).
+            return Compressed {
+                payload: IndexPayload::Explicit(Vec::new()),
+                values: Vec::new(),
+                scale: 1.0,
+                encoding: super::ValueEncoding::F64,
+                n: n as u32,
+            };
+        }
+
+        // Residuals r(m) for m = 0..=k; r(0) = 1.
+        let mut kept = 0.0;
+        let mut m_star = k; // smallest m with r(m) ≤ 1 − δ
+        let mut r_prev = 1.0; // r(m−1) at the bracket
+        let mut r_at = 1.0 - 0.0;
+        let mut found = false;
+        for (m, &(e, _)) in by_energy.iter().enumerate() {
+            kept += e;
+            let r_m = (1.0 - kept / total).max(0.0);
+            if r_m <= target_residual + 1e-15 {
+                m_star = m + 1;
+                r_prev = if m == 0 { 1.0 } else { r_at };
+                r_at = r_m;
+                found = true;
+                break;
+            }
+            r_at = r_m;
+        }
+        // TopK's worst-case guarantee ensures r(k) ≤ 1−δ, so `found`
+        // is always true for k ≥ 1; guard anyway.
+        if !found {
+            m_star = k;
+            r_prev = r_at;
+            r_at = (1.0
+                - by_energy.iter().map(|&(e, _)| e).sum::<f64>() / total)
+                .max(0.0);
+        }
+
+        // Bernoulli tie between m* (prob p) and m*−1 (prob 1−p) so the
+        // expected residual equals the target exactly.
+        let denom = r_prev - r_at;
+        let p = if denom > 1e-300 {
+            ((r_prev - target_residual) / denom).clamp(0.0, 1.0)
+        } else {
+            1.0
+        };
+        let seed = crate::rng::pcg::splitmix64(
+            self.seed_base ^ round.wrapping_mul(0xC2B2_AE35),
+        );
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let m_used = if rng.bernoulli(p) { m_star } else { m_star - 1 };
+
+        let mut chosen: Vec<u32> =
+            by_energy[..m_used].iter().map(|&(_, i)| i).collect();
+        chosen.sort_unstable(); // v41 cache-friendly master update
+        let values = chosen.iter().map(|&i| src[i as usize]).collect();
+        Compressed {
+            payload: IndexPayload::Explicit(chosen),
+            values,
+            scale: 1.0,
+            encoding: super::ValueEncoding::F64,
+            n: n as u32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::{distortion_sq, weighted_norm_sq, TopK};
+
+    fn packed_src(d: usize, seed: u64) -> (PackedUpper, Vec<f64>) {
+        let pu = PackedUpper::new(d);
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let src = (0..pu.len()).map(|_| rng.next_gaussian()).collect();
+        (pu, src)
+    }
+
+    #[test]
+    fn never_sends_more_than_k() {
+        for seed in 0..30 {
+            let (pu, src) = packed_src(8, seed);
+            let mut c = TopLEK::new(10, seed);
+            let out = c.compress(&pu, &src, seed);
+            assert!(out.values.len() <= 10, "sent {} > k", out.values.len());
+        }
+    }
+
+    #[test]
+    fn sends_fewer_than_topk_on_concentrated_input() {
+        // One dominant coordinate: TopLEK should send ≈1 entry while
+        // TopK always sends k.
+        let pu = PackedUpper::new(8);
+        let mut src = vec![1e-6; pu.len()];
+        src[5] = 100.0;
+        let mut lek = TopLEK::new(12, 1);
+        let mut top = TopK::new(12);
+        let out_lek = lek.compress(&pu, &src, 0);
+        let out_top = top.compress(&pu, &src, 0);
+        assert_eq!(out_top.values.len(), 12);
+        assert!(out_lek.values.len() <= 2, "sent {}", out_lek.values.len());
+    }
+
+    #[test]
+    fn contraction_tight_in_expectation() {
+        // E‖C(x)−x‖² should equal (1−δ)‖x‖² (not merely bound it).
+        let (pu, src) = packed_src(7, 9);
+        let n = src.len();
+        let k = 6;
+        let total = weighted_norm_sq(&pu, &src);
+        let target = (1.0 - k as f64 / n as f64) * total;
+        let trials = 4000;
+        let mut acc = 0.0;
+        let mut c = TopLEK::new(k, 5);
+        for r in 0..trials {
+            let out = c.compress(&pu, &src, r);
+            acc += distortion_sq(&pu, &src, &out);
+        }
+        let mean = acc / trials as f64;
+        assert!(
+            (mean - target).abs() < 0.02 * total,
+            "mean {mean} vs target {target} (total {total})"
+        );
+    }
+
+    #[test]
+    fn per_draw_contraction_never_exceeds_bracket_upper() {
+        // Each realized draw keeps at least m*−1 top entries, so the
+        // distortion never exceeds r(m*−1)·‖x‖² which itself brackets
+        // the target from above by construction; sanity: distortion
+        // is always ≤ ‖x‖².
+        for seed in 0..20 {
+            let (pu, src) = packed_src(6, 100 + seed);
+            let mut c = TopLEK::new(5, seed);
+            let out = c.compress(&pu, &src, seed * 3);
+            let dist = distortion_sq(&pu, &src, &out);
+            assert!(dist <= weighted_norm_sq(&pu, &src) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_input_sends_nothing() {
+        let pu = PackedUpper::new(5);
+        let src = vec![0.0; pu.len()];
+        let mut c = TopLEK::new(4, 2);
+        let out = c.compress(&pu, &src, 0);
+        assert!(out.values.is_empty());
+    }
+
+    #[test]
+    fn values_match_indices() {
+        let (pu, src) = packed_src(9, 11);
+        let mut c = TopLEK::new(15, 3);
+        let out = c.compress(&pu, &src, 7);
+        for (v, i) in out.values.iter().zip(out.indices()) {
+            assert_eq!(*v, src[i as usize]);
+        }
+    }
+}

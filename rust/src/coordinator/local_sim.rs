@@ -1,0 +1,344 @@
+//! Single-node multi-core simulation (paper §5.12, v39):
+//! a persistent worker pool sized to the available cores, clients
+//! *statically dispatched* to workers (no work stealing → no
+//! congestion), one message channel per direction, master processes
+//! replies as they arrive.
+//!
+//! Determinism: workers compute in parallel but the master re-orders
+//! replies by client id before aggregation, so the f64 reduction order —
+//! and hence the whole trajectory — is identical to [`super::SeqPool`].
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::ClientPool;
+use crate::algorithms::{ClientMsg, ClientState};
+
+enum Cmd {
+    Round { x: Arc<Vec<f64>>, round: u64, need_loss: bool },
+    EvalLoss { x: Arc<Vec<f64>> },
+    LossGrad { x: Arc<Vec<f64>> },
+    WarmStart { x: Arc<Vec<f64>> },
+    SetAlpha(f64),
+    Shutdown,
+}
+
+enum Reply {
+    Msgs(Vec<ClientMsg>),
+    /// Sum of local losses over the worker's clients + client count.
+    Loss(f64, usize),
+    /// Sum of local losses + sum of local gradients + client count.
+    LossGrad(f64, Vec<f64>, usize),
+    /// (client_id, packed H⁰) pairs.
+    Warm(Vec<(usize, Vec<f64>)>),
+    Ack,
+}
+
+struct Worker {
+    cmd_tx: Sender<Cmd>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Thread-pool client simulator.
+pub struct ThreadedPool {
+    workers: Vec<Worker>,
+    reply_rx: Receiver<Reply>,
+    n_clients: usize,
+    dim: usize,
+    default_alpha: f64,
+}
+
+impl ThreadedPool {
+    /// Distribute `clients` over `n_workers` threads (0 → #cores,
+    /// clamped to the client count).
+    pub fn new(clients: Vec<ClientState>, n_workers: usize) -> Self {
+        assert!(!clients.is_empty());
+        let n_clients = clients.len();
+        let dim = clients[0].dim();
+        let default_alpha = clients[0].alpha;
+        let n_workers = if n_workers == 0 {
+            crate::utils::available_cores()
+        } else {
+            n_workers
+        }
+        .min(n_clients)
+        .max(1);
+
+        // Static round-robin dispatch (paper: "clients were statically
+        // dispatched to this pool").
+        let mut buckets: Vec<Vec<ClientState>> =
+            (0..n_workers).map(|_| Vec::new()).collect();
+        for (i, c) in clients.into_iter().enumerate() {
+            buckets[i % n_workers].push(c);
+        }
+
+        let (reply_tx, reply_rx) = channel::<Reply>();
+        let workers = buckets
+            .into_iter()
+            .map(|mut bucket| {
+                let (cmd_tx, cmd_rx) = channel::<Cmd>();
+                let tx = reply_tx.clone();
+                let handle = std::thread::spawn(move || {
+                    while let Ok(cmd) = cmd_rx.recv() {
+                        match cmd {
+                            Cmd::Round { x, round, need_loss } => {
+                                let msgs: Vec<ClientMsg> = bucket
+                                    .iter_mut()
+                                    .map(|c| c.round(&x, round, need_loss))
+                                    .collect();
+                                let _ = tx.send(Reply::Msgs(msgs));
+                            }
+                            Cmd::EvalLoss { x } => {
+                                let s: f64 = bucket
+                                    .iter_mut()
+                                    .map(|c| c.eval_loss(&x))
+                                    .sum();
+                                let _ = tx.send(Reply::Loss(s, bucket.len()));
+                            }
+                            Cmd::LossGrad { x } => {
+                                let mut g = vec![0.0; x.len()];
+                                let mut s = 0.0;
+                                for c in bucket.iter_mut() {
+                                    let (l, gi) = c.eval_loss_grad(&x);
+                                    s += l;
+                                    crate::linalg::vector::axpy(
+                                        1.0, &gi, &mut g,
+                                    );
+                                }
+                                let _ = tx.send(Reply::LossGrad(
+                                    s,
+                                    g,
+                                    bucket.len(),
+                                ));
+                            }
+                            Cmd::WarmStart { x } => {
+                                let w = bucket
+                                    .iter_mut()
+                                    .map(|c| (c.id, c.warm_start(&x)))
+                                    .collect();
+                                let _ = tx.send(Reply::Warm(w));
+                            }
+                            Cmd::SetAlpha(a) => {
+                                for c in bucket.iter_mut() {
+                                    c.alpha = a;
+                                }
+                                let _ = tx.send(Reply::Ack);
+                            }
+                            Cmd::Shutdown => break,
+                        }
+                    }
+                });
+                Worker { cmd_tx, handle: Some(handle) }
+            })
+            .collect();
+
+        Self { workers, reply_rx, n_clients, dim, default_alpha }
+    }
+
+    fn broadcast(&self, make: impl Fn() -> Cmd) {
+        for w in &self.workers {
+            let _ = w.cmd_tx.send(make());
+        }
+    }
+}
+
+impl ClientPool for ThreadedPool {
+    fn n_clients(&self) -> usize {
+        self.n_clients
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn default_alpha(&self) -> f64 {
+        self.default_alpha
+    }
+
+    fn set_alpha(&mut self, alpha: f64) {
+        self.broadcast(|| Cmd::SetAlpha(alpha));
+        for _ in 0..self.workers.len() {
+            let _ = self.reply_rx.recv();
+        }
+    }
+
+    fn round(
+        &mut self,
+        x: &[f64],
+        round: u64,
+        need_loss: bool,
+    ) -> Vec<ClientMsg> {
+        let x = Arc::new(x.to_vec());
+        self.broadcast(|| Cmd::Round { x: Arc::clone(&x), round, need_loss });
+        // Process replies as they arrive (paper: "processed messages
+        // from clients as they became available"), then restore client
+        // order for a deterministic reduction.
+        let mut msgs = Vec::with_capacity(self.n_clients);
+        for _ in 0..self.workers.len() {
+            match self.reply_rx.recv() {
+                Ok(Reply::Msgs(m)) => msgs.extend(m),
+                _ => panic!("worker died"),
+            }
+        }
+        msgs.sort_by_key(|m| m.client_id);
+        msgs
+    }
+
+    fn eval_loss(&mut self, x: &[f64]) -> f64 {
+        let x = Arc::new(x.to_vec());
+        self.broadcast(|| Cmd::EvalLoss { x: Arc::clone(&x) });
+        let mut sum = 0.0;
+        let mut cnt = 0usize;
+        for _ in 0..self.workers.len() {
+            match self.reply_rx.recv() {
+                Ok(Reply::Loss(s, c)) => {
+                    sum += s;
+                    cnt += c;
+                }
+                _ => panic!("worker died"),
+            }
+        }
+        debug_assert_eq!(cnt, self.n_clients);
+        sum / self.n_clients as f64
+    }
+
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        let x = Arc::new(x.to_vec());
+        self.broadcast(|| Cmd::LossGrad { x: Arc::clone(&x) });
+        let mut loss = 0.0;
+        let mut g = vec![0.0; x.len()];
+        let mut cnt = 0usize;
+        for _ in 0..self.workers.len() {
+            match self.reply_rx.recv() {
+                Ok(Reply::LossGrad(s, gi, c)) => {
+                    loss += s;
+                    crate::linalg::vector::axpy(1.0, &gi, &mut g);
+                    cnt += c;
+                }
+                _ => panic!("worker died"),
+            }
+        }
+        debug_assert_eq!(cnt, self.n_clients);
+        let inv_n = 1.0 / self.n_clients as f64;
+        crate::linalg::vector::scale(inv_n, &mut g);
+        (loss * inv_n, g)
+    }
+
+    fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {
+        let x = Arc::new(x.to_vec());
+        self.broadcast(|| Cmd::WarmStart { x: Arc::clone(&x) });
+        let mut all: Vec<(usize, Vec<f64>)> = Vec::with_capacity(self.n_clients);
+        for _ in 0..self.workers.len() {
+            match self.reply_rx.recv() {
+                Ok(Reply::Warm(w)) => all.extend(w),
+                _ => panic!("worker died"),
+            }
+        }
+        all.sort_by_key(|(id, _)| *id);
+        all.into_iter().map(|(_, p)| p).collect()
+    }
+}
+
+impl Drop for ThreadedPool {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.cmd_tx.send(Cmd::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::by_name;
+    use crate::coordinator::SeqPool;
+    use crate::data::{generate_synthetic, Dataset, SynthSpec};
+    use crate::oracle::LogisticOracle;
+
+    fn make_clients(n: usize, seed: u64) -> (Vec<ClientState>, usize) {
+        let spec = SynthSpec {
+            d_raw: 7,
+            n_samples: n * 30,
+            density: 0.6,
+            noise: 1.0,
+            seed,
+        };
+        let synth = generate_synthetic(&spec);
+        let samples: Vec<crate::data::LibsvmSample> = synth
+            .labels
+            .iter()
+            .zip(&synth.rows)
+            .map(|(l, r)| crate::data::LibsvmSample {
+                label: *l,
+                features: r.clone(),
+            })
+            .collect();
+        let ds = Dataset::from_libsvm(&samples, spec.d_raw);
+        let d = ds.d;
+        let cs = ds
+            .split_even(n)
+            .unwrap()
+            .into_iter()
+            .enumerate()
+            .map(|(i, sh)| {
+                ClientState::new(
+                    i,
+                    Box::new(LogisticOracle::new(sh, 1e-3)),
+                    by_name("topk", d, 2, seed + i as u64).unwrap(),
+                    None,
+                )
+            })
+            .collect();
+        (cs, d)
+    }
+
+    #[test]
+    fn threaded_matches_sequential_bitwise() {
+        let (cs1, d) = make_clients(6, 31);
+        let (cs2, _) = make_clients(6, 31);
+        let mut seq = SeqPool::new(cs1);
+        let mut thr = ThreadedPool::new(cs2, 3);
+        let x = vec![0.1; d];
+        for round in 0..5 {
+            let a = seq.round(&x, round, true);
+            let b = thr.round(&x, round, true);
+            assert_eq!(a.len(), b.len());
+            for (ma, mb) in a.iter().zip(&b) {
+                assert_eq!(ma.client_id, mb.client_id);
+                assert_eq!(ma.grad, mb.grad);
+                assert_eq!(ma.l_i, mb.l_i);
+                assert_eq!(ma.update.values, mb.update.values);
+                assert_eq!(ma.loss, mb.loss);
+            }
+        }
+        let la = seq.eval_loss(&x);
+        let lb = thr.eval_loss(&x);
+        assert!((la - lb).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pool_sizes() {
+        let (cs, _) = make_clients(4, 32);
+        let thr = ThreadedPool::new(cs, 0); // auto
+        assert_eq!(thr.n_clients(), 4);
+        assert!(thr.workers.len() >= 1 && thr.workers.len() <= 4);
+    }
+
+    #[test]
+    fn warm_start_order_preserved() {
+        let (cs, d) = make_clients(5, 33);
+        let mut thr = ThreadedPool::new(cs, 2);
+        let packs = thr.warm_start(&vec![0.0; d]);
+        assert_eq!(packs.len(), 5);
+        let plen = d * (d + 1) / 2;
+        for p in packs {
+            assert_eq!(p.len(), plen);
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Coordination layer: how the master reaches its clients.
+//!
+//! The FedNL drivers (`algorithms::*`) are written against the
+//! [`ClientPool`] trait; three transports implement it:
+//!
+//! * [`SeqPool`] — in-process, sequential (reference semantics / tests);
+//! * [`local_sim::ThreadedPool`] — the paper's single-node multi-core
+//!   simulator (§5.12): a worker pool sized to the physical cores,
+//!   clients statically dispatched, messages processed as available;
+//! * `net::server::RemotePool` — the multi-node TCP master (§7).
+//!
+//! All three produce bit-identical optimization trajectories (messages
+//! are aggregated in client order; f64 reduction order is fixed), which
+//! the integration tests assert.
+
+pub mod local_sim;
+
+pub use local_sim::ThreadedPool;
+
+use crate::algorithms::{ClientMsg, ClientState};
+
+/// Master-side view of a set of FedNL clients.
+pub trait ClientPool {
+    fn n_clients(&self) -> usize;
+    fn dim(&self) -> usize;
+
+    /// Theoretical α of the clients' compressor class.
+    fn default_alpha(&self) -> f64;
+
+    /// Set the Hessian learning rate on every client.
+    fn set_alpha(&mut self, alpha: f64);
+
+    /// Execute one FedNL client round on every client; messages are
+    /// returned sorted by client id.
+    fn round(&mut self, x: &[f64], round: u64, need_loss: bool)
+        -> Vec<ClientMsg>;
+
+    /// Average local loss at `x` (line-search probe).
+    fn eval_loss(&mut self, x: &[f64]) -> f64;
+
+    /// Average (f(x), ∇f(x)) reduction — the first-order baselines'
+    /// round primitive (one d-vector per client per call).
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>);
+
+    /// Warm-start Hᵢ⁰ = ∇²fᵢ(x⁰); returns packed Hᵢ⁰ per client
+    /// (client-id order).
+    fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>>;
+
+    /// Cumulative transport-level bytes (up, down) if the transport
+    /// meters them itself; in-process pools return `None` and the driver
+    /// keeps the logical count.
+    fn transport_bytes(&self) -> Option<(u64, u64)> {
+        None
+    }
+}
+
+/// Sequential in-process pool — the reference implementation.
+pub struct SeqPool {
+    pub clients: Vec<ClientState>,
+}
+
+impl SeqPool {
+    pub fn new(clients: Vec<ClientState>) -> Self {
+        assert!(!clients.is_empty());
+        Self { clients }
+    }
+}
+
+impl ClientPool for SeqPool {
+    fn n_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.clients[0].dim()
+    }
+
+    fn default_alpha(&self) -> f64 {
+        self.clients[0].alpha
+    }
+
+    fn set_alpha(&mut self, alpha: f64) {
+        for c in &mut self.clients {
+            c.alpha = alpha;
+        }
+    }
+
+    fn round(
+        &mut self,
+        x: &[f64],
+        round: u64,
+        need_loss: bool,
+    ) -> Vec<ClientMsg> {
+        self.clients.iter_mut().map(|c| c.round(x, round, need_loss)).collect()
+    }
+
+    fn eval_loss(&mut self, x: &[f64]) -> f64 {
+        let n = self.clients.len() as f64;
+        self.clients.iter_mut().map(|c| c.eval_loss(x)).sum::<f64>() / n
+    }
+
+    fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {
+        self.clients.iter_mut().map(|c| c.warm_start(x)).collect()
+    }
+
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        let inv_n = 1.0 / self.clients.len() as f64;
+        let mut g = vec![0.0; x.len()];
+        let mut loss = 0.0;
+        for c in &mut self.clients {
+            let (l, gi) = c.eval_loss_grad(x);
+            loss += l;
+            crate::linalg::vector::axpy(inv_n, &gi, &mut g);
+        }
+        (loss * inv_n, g)
+    }
+}

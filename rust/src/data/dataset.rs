@@ -1,0 +1,178 @@
+//! Dense training dataset + client sharding.
+//!
+//! Follows the paper's preparation pipeline exactly (§5, App. B): every
+//! sample is augmented with a constant-1 intercept feature, labels are
+//! absorbed into the design matrix (column_j = b_j·a_j, §5.13 — so
+//! labels need not be stored), the dataset is reshuffled u.a.r., split
+//! into equal nᵢ-sized shards across n clients, and leftovers dropped.
+//!
+//! Storage is `At`: an (n_samples × d) row-major matrix whose *rows* are
+//! samples — so margins (row·x) and rank-1 Hessian updates touch
+//! contiguous memory (paper v53 stores only one orientation).
+
+use super::libsvm::LibsvmSample;
+use crate::linalg::Mat;
+use crate::rng::{shuffle, Pcg64};
+
+/// Dense dataset with labels absorbed and intercept appended.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// (n × d) row-major; row j is b_j · [a_j, 1].
+    pub at: Mat,
+    /// Feature dimension *including* the intercept column.
+    pub d: usize,
+}
+
+impl Dataset {
+    /// Densify parsed LIBSVM samples; `d_raw` excludes the intercept.
+    pub fn from_libsvm(samples: &[LibsvmSample], d_raw: usize) -> Self {
+        let d = d_raw + 1; // +1 intercept (paper: "augmented each sample")
+        let n = samples.len();
+        let mut at = Mat::zeros(n, d);
+        for (r, s) in samples.iter().enumerate() {
+            let row = at.row_mut(r);
+            for &(idx, val) in &s.features {
+                row[idx as usize] = s.label * val;
+            }
+            row[d - 1] = s.label; // b_j · 1
+        }
+        Self { at, d }
+    }
+
+    /// Build directly from a dense matrix whose rows already absorb
+    /// labels and intercept (synthetic generator path).
+    pub fn from_dense(at: Mat) -> Self {
+        let d = at.cols();
+        Self { at, d }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.at.rows()
+    }
+
+    /// Reshuffle samples u.a.r. in place with the given seed.
+    pub fn reshuffle(&mut self, seed: u64) {
+        let n = self.n_samples();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        let mut rng = Pcg64::seed_from_u64(seed);
+        shuffle(&mut rng, &mut order);
+        let mut shuffled = Mat::zeros(n, self.d);
+        for (dst, &src) in order.iter().enumerate() {
+            shuffled.row_mut(dst).copy_from_slice(self.at.row(src as usize));
+        }
+        self.at = shuffled;
+    }
+
+    /// Split into `n_clients` equal shards of `n_i` samples each
+    /// (leftover samples are excluded, as in the paper: "the remaining
+    /// 49 samples were excluded"). Returns an error if there is not
+    /// enough data.
+    pub fn split(
+        &self,
+        n_clients: usize,
+        n_i: usize,
+    ) -> anyhow::Result<Vec<ClientShard>> {
+        anyhow::ensure!(n_clients > 0 && n_i > 0, "empty split");
+        anyhow::ensure!(
+            n_clients * n_i <= self.n_samples(),
+            "split needs {} samples, dataset has {}",
+            n_clients * n_i,
+            self.n_samples()
+        );
+        let mut shards = Vec::with_capacity(n_clients);
+        for c in 0..n_clients {
+            let mut at = Mat::zeros(n_i, self.d);
+            for r in 0..n_i {
+                at.row_mut(r).copy_from_slice(self.at.row(c * n_i + r));
+            }
+            shards.push(ClientShard { client_id: c, at });
+        }
+        Ok(shards)
+    }
+
+    /// Split into `n_clients` shards of `total / n_clients` samples.
+    pub fn split_even(&self, n_clients: usize) -> anyhow::Result<Vec<ClientShard>> {
+        let n_i = self.n_samples() / n_clients;
+        self.split(n_clients, n_i)
+    }
+}
+
+/// One client's local data (FedNL never moves raw data off the client).
+#[derive(Debug, Clone)]
+pub struct ClientShard {
+    pub client_id: usize,
+    /// (n_i × d) rows = local samples with labels/intercept absorbed.
+    pub at: Mat,
+}
+
+impl ClientShard {
+    pub fn n_i(&self) -> usize {
+        self.at.rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.at.cols()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::libsvm::parse_libsvm_bytes;
+
+    fn toy() -> Dataset {
+        let (s, d) =
+            parse_libsvm_bytes(b"+1 1:2 2:3\n-1 1:-1\n+1 2:5\n-1 2:-4\n")
+                .unwrap();
+        Dataset::from_libsvm(&s, d)
+    }
+
+    #[test]
+    fn densify_absorbs_labels_and_intercept() {
+        let ds = toy();
+        assert_eq!(ds.d, 3);
+        assert_eq!(ds.n_samples(), 4);
+        // Sample 0: +1 * [2, 3, 1]
+        assert_eq!(ds.at.row(0), &[2.0, 3.0, 1.0]);
+        // Sample 1: -1 * [-1, 0, 1]
+        assert_eq!(ds.at.row(1), &[1.0, 0.0, -1.0]);
+    }
+
+    #[test]
+    fn reshuffle_preserves_multiset() {
+        let mut ds = toy();
+        let before: Vec<Vec<f64>> =
+            (0..4).map(|i| ds.at.row(i).to_vec()).collect();
+        ds.reshuffle(42);
+        let mut after: Vec<Vec<f64>> =
+            (0..4).map(|i| ds.at.row(i).to_vec()).collect();
+        let mut b = before.clone();
+        b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        after.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert_eq!(b, after);
+    }
+
+    #[test]
+    fn reshuffle_deterministic() {
+        let mut a = toy();
+        let mut b = toy();
+        a.reshuffle(7);
+        b.reshuffle(7);
+        assert_eq!(a.at, b.at);
+    }
+
+    #[test]
+    fn split_shapes_and_leftovers() {
+        let ds = toy();
+        let shards = ds.split(2, 2).unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].n_i(), 2);
+        assert_eq!(shards[1].client_id, 1);
+        // 3 clients × 2 samples needs 6 > 4 → error
+        assert!(ds.split(3, 2).is_err());
+        // uneven split drops leftovers
+        let se = ds.split_even(3).unwrap();
+        assert_eq!(se.len(), 3);
+        assert_eq!(se[0].n_i(), 1);
+    }
+}

@@ -1,0 +1,374 @@
+//! LIBSVM text format parser over a memory-mapped file (paper §5.2:
+//! "moving from sequential I/O to memory-mapped files ... coupled with
+//! custom string to FP64 parsing", and Appendix L.2).
+//!
+//! Format, one sample per line:   `label idx:val idx:val ...`
+//! with 1-based feature indices. Parsing never allocates temporary
+//! strings (paper v38: "elimination of creating temporary strings").
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed sparse sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LibsvmSample {
+    /// Label, normalized to ±1.0 (0/−1 → −1.0, everything > 0 → +1.0).
+    pub label: f64,
+    /// (0-based feature index, value) pairs in file order.
+    pub features: Vec<(u32, f64)>,
+}
+
+/// Memory-map a file read-only via `mmap(2)` and parse it.
+///
+/// Falls back to `std::fs::read` if mapping fails (e.g. special files),
+/// so behaviour is identical either way — mapping is purely a systems
+/// optimization (paper measured ×1.077 from this step).
+pub fn parse_libsvm_file(path: &str) -> Result<(Vec<LibsvmSample>, usize)> {
+    let mapped = Mmap::open(path);
+    match mapped {
+        Ok(m) => parse_libsvm_bytes(m.as_slice())
+            .with_context(|| format!("parsing {path}")),
+        Err(_) => {
+            let bytes = std::fs::read(path)
+                .with_context(|| format!("reading {path}"))?;
+            parse_libsvm_bytes(&bytes).with_context(|| format!("parsing {path}"))
+        }
+    }
+}
+
+/// Parse LIBSVM-format bytes. Returns (samples, max feature count d_raw).
+pub fn parse_libsvm_bytes(bytes: &[u8]) -> Result<(Vec<LibsvmSample>, usize)> {
+    let mut samples = Vec::new();
+    let mut d_raw = 0usize;
+    for (lineno, line) in bytes.split(|&b| b == b'\n').enumerate() {
+        let line = trim(line);
+        if line.is_empty() || line[0] == b'#' {
+            continue;
+        }
+        let mut cur = Cursor { buf: line, pos: 0 };
+        let label_raw = cur
+            .parse_f64()
+            .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        let label = if label_raw > 0.0 { 1.0 } else { -1.0 };
+        let mut features = Vec::new();
+        loop {
+            cur.skip_ws();
+            if cur.eof() {
+                break;
+            }
+            let idx = cur
+                .parse_u32()
+                .with_context(|| format!("line {}: bad index", lineno + 1))?;
+            if !cur.eat(b':') {
+                bail!("line {}: expected ':' after index", lineno + 1);
+            }
+            let val = cur
+                .parse_f64()
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            if idx == 0 {
+                bail!("line {}: LIBSVM indices are 1-based", lineno + 1);
+            }
+            let zero_based = idx - 1;
+            d_raw = d_raw.max(idx as usize);
+            features.push((zero_based, val));
+        }
+        samples.push(LibsvmSample { label, features });
+    }
+    Ok((samples, d_raw))
+}
+
+fn trim(mut s: &[u8]) -> &[u8] {
+    while let Some((&f, rest)) = s.split_first() {
+        if f == b' ' || f == b'\t' || f == b'\r' {
+            s = rest;
+        } else {
+            break;
+        }
+    }
+    while let Some((&l, rest)) = s.split_last() {
+        if l == b' ' || l == b'\t' || l == b'\r' {
+            s = rest;
+        } else {
+            break;
+        }
+    }
+    s
+}
+
+/// Zero-allocation cursor with custom numeric parsing (paper §5.2
+/// "custom string to FP64 parsing").
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn eof(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.buf.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ') | Some(b'\t')) {
+            self.pos += 1;
+        }
+    }
+
+    fn eat(&mut self, b: u8) -> bool {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn parse_u32(&mut self) -> Result<u32> {
+        self.skip_ws();
+        let start = self.pos;
+        let mut v: u64 = 0;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() {
+                v = v * 10 + (c - b'0') as u64;
+                if v > u32::MAX as u64 {
+                    bail!("index overflow");
+                }
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        if self.pos == start {
+            bail!("expected integer");
+        }
+        Ok(v as u32)
+    }
+
+    /// Hand-rolled decimal float parser: sign, integer part, fraction,
+    /// exponent. Exactly matches `str::parse::<f64>` for round-trippable
+    /// inputs up to 1 ULP; LIBSVM values are short decimals where the
+    /// accumulation is exact.
+    fn parse_f64(&mut self) -> Result<f64> {
+        self.skip_ws();
+        let start = self.pos;
+        let neg = if self.eat(b'-') {
+            true
+        } else {
+            self.eat(b'+');
+            false
+        };
+        let mut mant: f64 = 0.0;
+        let mut digits = 0u32;
+        let mut any = false;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() {
+                mant = mant * 10.0 + (c - b'0') as f64;
+                digits += 1;
+                any = true;
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let mut exp10: i32 = 0;
+        if self.eat(b'.') {
+            while let Some(c) = self.peek() {
+                if c.is_ascii_digit() {
+                    mant = mant * 10.0 + (c - b'0') as f64;
+                    digits += 1;
+                    exp10 -= 1;
+                    any = true;
+                    self.pos += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+        if !any {
+            bail!("expected number");
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            self.pos += 1;
+            let eneg = if self.eat(b'-') {
+                true
+            } else {
+                self.eat(b'+');
+                false
+            };
+            let mut e: i32 = 0;
+            let estart = self.pos;
+            while let Some(c) = self.peek() {
+                if c.is_ascii_digit() {
+                    e = e.saturating_mul(10).saturating_add((c - b'0') as i32);
+                    self.pos += 1;
+                } else {
+                    break;
+                }
+            }
+            if self.pos == estart {
+                bail!("expected exponent digits");
+            }
+            exp10 += if eneg { -e } else { e };
+        }
+        // For long mantissas / extreme exponents defer to std for exact
+        // rounding; the fast path covers typical LIBSVM data. 15
+        // significant digits keep the integer mantissa < 2⁵³ (exact).
+        let token = &self.buf[start..self.pos];
+        if digits > 15 || !(-15..=15).contains(&exp10) {
+            // Token includes the sign — return std's exact rounding as-is.
+            return std::str::from_utf8(token)
+                .ok()
+                .and_then(|s| s.parse::<f64>().ok())
+                .context("float parse");
+        }
+        let v = mant * pow10(exp10);
+        Ok(if neg { -v } else { v })
+    }
+}
+
+fn pow10(e: i32) -> f64 {
+    const POS: [f64; 19] = [
+        1e0, 1e1, 1e2, 1e3, 1e4, 1e5, 1e6, 1e7, 1e8, 1e9, 1e10, 1e11, 1e12,
+        1e13, 1e14, 1e15, 1e16, 1e17, 1e18,
+    ];
+    if e >= 0 {
+        POS[e as usize]
+    } else {
+        1.0 / POS[(-e) as usize]
+    }
+}
+
+/// Minimal read-only mmap wrapper over `libc::mmap` (Appendix L.2).
+pub struct Mmap {
+    ptr: *mut libc::c_void,
+    len: usize,
+}
+
+impl Mmap {
+    pub fn open(path: &str) -> Result<Self> {
+        use std::os::unix::io::AsRawFd;
+        let f = std::fs::File::open(path)?;
+        let len = f.metadata()?.len() as usize;
+        if len == 0 {
+            return Ok(Self { ptr: std::ptr::null_mut(), len: 0 });
+        }
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ,
+                libc::MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            bail!("mmap failed: {}", std::io::Error::last_os_error());
+        }
+        // Hint sequential access — the parser streams forward.
+        unsafe {
+            libc::madvise(ptr, len, libc::MADV_SEQUENTIAL);
+        }
+        Ok(Self { ptr, len })
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        if self.len == 0 {
+            &[]
+        } else {
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        if !self.ptr.is_null() {
+            unsafe {
+                libc::munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+// SAFETY: read-only mapping of an immutable file region.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_lines() {
+        let text = b"+1 1:0.5 3:-2\n-1 2:1e-3\n";
+        let (samples, d) = parse_libsvm_bytes(text).unwrap();
+        assert_eq!(d, 3);
+        assert_eq!(samples.len(), 2);
+        assert_eq!(samples[0].label, 1.0);
+        assert_eq!(samples[0].features, vec![(0, 0.5), (2, -2.0)]);
+        assert_eq!(samples[1].label, -1.0);
+        assert!((samples[1].features[0].1 - 1e-3).abs() < 1e-18);
+    }
+
+    #[test]
+    fn label_normalization() {
+        let (s, _) = parse_libsvm_bytes(b"0 1:1\n2 1:1\n-1 1:1\n").unwrap();
+        assert_eq!(s[0].label, -1.0);
+        assert_eq!(s[1].label, 1.0);
+        assert_eq!(s[2].label, -1.0);
+    }
+
+    #[test]
+    fn skips_blank_and_comment_lines() {
+        let (s, _) =
+            parse_libsvm_bytes(b"\n# comment\n+1 1:2.0\n\r\n").unwrap();
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn float_parser_matches_std() {
+        let cases = [
+            "1", "-1", "0.5", "3.14159", "1e3", "-2.5E-4", "+0.001",
+            "123456.789", "9.999999999e17", "1.7976931348623157e308",
+        ];
+        for c in cases {
+            let mut cur = Cursor { buf: c.as_bytes(), pos: 0 };
+            let got = cur.parse_f64().unwrap();
+            let want: f64 = c.parse().unwrap();
+            let tol = want.abs() * 1e-15;
+            assert!((got - want).abs() <= tol, "{c}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_libsvm_bytes(b"abc 1:2\n").is_err());
+        assert!(parse_libsvm_bytes(b"+1 0:2\n").is_err()); // 0-based idx
+        assert!(parse_libsvm_bytes(b"+1 3=4\n").is_err());
+    }
+
+    #[test]
+    fn mmap_roundtrip() {
+        let path = std::env::temp_dir().join("fednl_mmap_test.libsvm");
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(&path, b"+1 1:1.5 2:-0.5\n-1 1:0.25\n").unwrap();
+        let (samples, d) = parse_libsvm_file(&path).unwrap();
+        assert_eq!(d, 2);
+        assert_eq!(samples.len(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_ok() {
+        let path = std::env::temp_dir().join("fednl_empty_test.libsvm");
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(&path, b"").unwrap();
+        let (samples, d) = parse_libsvm_file(&path).unwrap();
+        assert!(samples.is_empty());
+        assert_eq!(d, 0);
+        std::fs::remove_file(&path).ok();
+    }
+}

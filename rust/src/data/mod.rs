@@ -1,0 +1,13 @@
+//! Dataset handling (paper components `fs`, `bin_split`,
+//! `bin_opt_problem_generator`): memory-mapped LIBSVM parsing, dataset
+//! densification with intercept augmentation and label absorption, u.a.r.
+//! re-shuffling, equal splitting across clients, and a synthetic
+//! logistic-regression problem generator that writes LIBSVM text.
+
+pub mod dataset;
+pub mod libsvm;
+pub mod synth;
+
+pub use dataset::{ClientShard, Dataset};
+pub use libsvm::{parse_libsvm_bytes, parse_libsvm_file, LibsvmSample};
+pub use synth::{generate_synthetic, write_libsvm, SynthSpec};

@@ -1,0 +1,174 @@
+//! Synthetic logistic-regression problem generator (paper component
+//! `bin_opt_problem_generator`).
+//!
+//! The paper's datasets (LIBSVM W8A/A9A/PHISHING) are not redistributable
+//! here, so the harness generates datasets with the *same shapes and
+//! conditioning regime* and writes them in LIBSVM text format — the
+//! loader then exercises the identical mmap→parse→densify→shuffle→split
+//! pipeline (DESIGN.md §2 substitution table).
+//!
+//! Model: a ground-truth hyperplane w*, features ~ N(0, 1)·scale with a
+//! sparsity mask (LIBSVM datasets are sparse), labels sampled from the
+//! logistic model with temperature `noise` (so the problem is realizable
+//! but not separable — keeping the Hessian well-conditioned like W8A's
+//! λ(∇²f) ∈ [1e-3, 5.8e-3] regime under λ=1e-3 regularization).
+
+use crate::rng::{Pcg64, Rng};
+
+/// Specification for a synthetic dataset.
+#[derive(Debug, Clone)]
+pub struct SynthSpec {
+    /// Feature dimension excluding intercept (e.g. 300 for w8a-like).
+    pub d_raw: usize,
+    /// Number of samples.
+    pub n_samples: usize,
+    /// Fraction of non-zero features per sample (W8A ≈ 0.04).
+    pub density: f64,
+    /// Label noise temperature; 0 = deterministic labels.
+    pub noise: f64,
+    /// PRG seed.
+    pub seed: u64,
+}
+
+impl SynthSpec {
+    /// Shape presets mirroring the paper's three benchmark datasets.
+    pub fn preset(name: &str) -> Option<Self> {
+        let (d_raw, n_samples, density) = match name {
+            // W8A: d=301 incl. intercept, 49 749 samples, sparse binary
+            "w8a" => (300, 49_749, 0.04),
+            "a9a" => (123, 32_561, 0.11),
+            "phishing" => (68, 11_055, 0.44),
+            "quickstart" => (63, 8_192, 0.25),
+            "tiny" => (15, 1_024, 0.5),
+            _ => return None,
+        };
+        Some(Self { d_raw, n_samples, density, noise: 1.0, seed: 0x5EED })
+    }
+}
+
+/// A generated sample in sparse form (pre-densification).
+pub struct SynthData {
+    pub labels: Vec<f64>,
+    /// Per-sample (idx0, value) lists, 0-based.
+    pub rows: Vec<Vec<(u32, f64)>>,
+    pub d_raw: usize,
+}
+
+/// Generate a synthetic dataset according to `spec`.
+pub fn generate_synthetic(spec: &SynthSpec) -> SynthData {
+    let mut rng = Pcg64::seed_from_u64(spec.seed);
+    // Ground-truth weights (including an intercept term).
+    let w_star: Vec<f64> =
+        (0..spec.d_raw + 1).map(|_| rng.next_gaussian()).collect();
+    let mut labels = Vec::with_capacity(spec.n_samples);
+    let mut rows = Vec::with_capacity(spec.n_samples);
+    for _ in 0..spec.n_samples {
+        let mut feats: Vec<(u32, f64)> = Vec::new();
+        let mut margin = w_star[spec.d_raw]; // intercept
+        for j in 0..spec.d_raw {
+            if rng.bernoulli(spec.density) {
+                let v = rng.next_gaussian();
+                feats.push((j as u32, v));
+                margin += w_star[j] * v;
+            }
+        }
+        let label = if spec.noise > 0.0 {
+            let p = 1.0 / (1.0 + (-margin / spec.noise).exp());
+            if rng.bernoulli(p) {
+                1.0
+            } else {
+                -1.0
+            }
+        } else if margin >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        };
+        labels.push(label);
+        rows.push(feats);
+    }
+    SynthData { labels, rows, d_raw: spec.d_raw }
+}
+
+/// Serialize to LIBSVM text (1-based indices), as `bin_split`'s input.
+pub fn write_libsvm(data: &SynthData) -> String {
+    let mut out = String::with_capacity(data.rows.len() * 64);
+    for (label, feats) in data.labels.iter().zip(&data.rows) {
+        if *label > 0.0 {
+            out.push_str("+1");
+        } else {
+            out.push_str("-1");
+        }
+        for (idx, val) in feats {
+            out.push(' ');
+            out.push_str(&(idx + 1).to_string());
+            out.push(':');
+            // Shortest round-trippable representation.
+            out.push_str(&format!("{val}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::libsvm::parse_libsvm_bytes;
+
+    #[test]
+    fn presets_exist() {
+        for name in ["w8a", "a9a", "phishing", "quickstart", "tiny"] {
+            assert!(SynthSpec::preset(name).is_some(), "{name}");
+        }
+        assert!(SynthSpec::preset("nope").is_none());
+    }
+
+    #[test]
+    fn generator_is_deterministic() {
+        let spec = SynthSpec { d_raw: 10, n_samples: 50, density: 0.3, noise: 1.0, seed: 1 };
+        let a = generate_synthetic(&spec);
+        let b = generate_synthetic(&spec);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.rows.len(), b.rows.len());
+        assert_eq!(a.rows[7], b.rows[7]);
+    }
+
+    #[test]
+    fn labels_are_pm_one_and_mixed() {
+        let spec = SynthSpec { d_raw: 20, n_samples: 500, density: 0.5, noise: 1.0, seed: 2 };
+        let d = generate_synthetic(&spec);
+        assert!(d.labels.iter().all(|&l| l == 1.0 || l == -1.0));
+        let pos = d.labels.iter().filter(|&&l| l == 1.0).count();
+        assert!(pos > 50 && pos < 450, "degenerate label split: {pos}");
+    }
+
+    #[test]
+    fn libsvm_roundtrip() {
+        let spec = SynthSpec { d_raw: 8, n_samples: 40, density: 0.6, noise: 0.5, seed: 3 };
+        let d = generate_synthetic(&spec);
+        let text = write_libsvm(&d);
+        let (samples, d_raw) = parse_libsvm_bytes(text.as_bytes()).unwrap();
+        assert_eq!(samples.len(), 40);
+        assert!(d_raw <= 8);
+        for (s, (lab, row)) in
+            samples.iter().zip(d.labels.iter().zip(&d.rows))
+        {
+            assert_eq!(s.label, *lab);
+            assert_eq!(s.features.len(), row.len());
+            for ((gi, gv), (ei, ev)) in s.features.iter().zip(row) {
+                assert_eq!(gi, ei);
+                assert!((gv - ev).abs() < 1e-12 * ev.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn density_respected() {
+        let spec = SynthSpec { d_raw: 100, n_samples: 200, density: 0.1, noise: 1.0, seed: 4 };
+        let d = generate_synthetic(&spec);
+        let nnz: usize = d.rows.iter().map(|r| r.len()).sum();
+        let rate = nnz as f64 / (200.0 * 100.0);
+        assert!((rate - 0.1).abs() < 0.02, "rate={rate}");
+    }
+}

@@ -1,0 +1,59 @@
+//! Experiment harness: regenerates every table and figure of the paper
+//! (DESIGN.md §4 experiment index).
+//!
+//! Each experiment has two scales:
+//! * **ci** (default) — shrunk clients/rounds so the full suite runs in
+//!   minutes on a laptop;
+//! * **full** (`--full`) — the paper's parameters (n=142, r=1000,
+//!   d=301 W8A shape; n=50 TCP clients for Table 3).
+//!
+//! Shapes, λ, x⁰=0, α=theoretical and the compressor set all follow the
+//! paper; datasets are synthetic with matched shapes (DESIGN.md §2).
+
+pub mod experiments;
+pub mod setup;
+
+pub use experiments::*;
+pub use setup::*;
+
+/// Experiment scale.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scale {
+    Ci,
+    Full,
+}
+
+/// Shared harness configuration.
+#[derive(Debug, Clone)]
+pub struct HarnessCfg {
+    pub scale: Scale,
+    /// Output directory for CSV traces and markdown tables.
+    pub out_dir: String,
+    /// Worker threads for the local simulator (0 = #cores).
+    pub threads: usize,
+    /// Use the PJRT (AOT JAX/Pallas) oracle instead of the native one.
+    pub pjrt: bool,
+    /// Artifact dir for PJRT oracles.
+    pub artifacts: String,
+    pub seed: u64,
+}
+
+impl Default for HarnessCfg {
+    fn default() -> Self {
+        Self {
+            scale: Scale::Ci,
+            out_dir: "results".into(),
+            threads: 0,
+            pjrt: false,
+            artifacts: "artifacts".into(),
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl HarnessCfg {
+    pub fn ensure_out_dir(&self) -> anyhow::Result<()> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        Ok(())
+    }
+}

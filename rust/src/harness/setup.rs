@@ -1,0 +1,203 @@
+//! Problem construction shared by experiments, examples and benches:
+//! synthetic dataset → LIBSVM text → mmap parse → densify → shuffle →
+//! split → client pools (the paper's full preparation pipeline §5,
+//! steps (1)–(2) of its timing breakdown).
+
+use anyhow::{Context, Result};
+
+use super::{HarnessCfg, Scale};
+use crate::algorithms::{ClientState, PPClientState};
+use crate::compressors::by_name;
+use crate::coordinator::{SeqPool, ThreadedPool};
+use crate::data::{
+    generate_synthetic, parse_libsvm_bytes, write_libsvm, Dataset, SynthSpec,
+};
+use crate::oracle::LogisticOracle;
+use crate::runtime::PjrtRuntime;
+
+/// Paper-matched problem shape.
+#[derive(Debug, Clone)]
+pub struct ProblemSpec {
+    pub name: &'static str,
+    /// d including intercept (W8A: 301).
+    pub d: usize,
+    /// Per-client samples at full scale.
+    pub n_i_full: usize,
+    /// Clients at full scale.
+    pub n_clients_full: usize,
+    pub lam: f64,
+}
+
+/// The paper's three benchmark datasets (Tables 1–3).
+pub const W8A: ProblemSpec =
+    ProblemSpec { name: "w8a", d: 301, n_i_full: 350, n_clients_full: 142, lam: 1e-3 };
+pub const A9A: ProblemSpec =
+    ProblemSpec { name: "a9a", d: 124, n_i_full: 229, n_clients_full: 142, lam: 1e-3 };
+pub const PHISHING: ProblemSpec =
+    ProblemSpec { name: "phishing", d: 69, n_i_full: 77, n_clients_full: 142, lam: 1e-3 };
+
+impl ProblemSpec {
+    /// (n_clients, n_i, rounds) at a given scale.
+    pub fn dims(&self, scale: Scale) -> (usize, usize, u64) {
+        match scale {
+            Scale::Full => (self.n_clients_full, self.n_i_full, 1000),
+            // CI scale: fewer clients/samples, but enough rounds for the
+            // low-δ sparsifiers (δ = 8d / (d(d+1)/2) ≈ 16/d) to finish
+            // their Hessian-learning phase at d ≈ 300.
+            Scale::Ci => (16, self.n_i_full.min(128), 400),
+        }
+    }
+}
+
+/// A fully prepared problem: shards + initial point + metadata.
+pub struct Problem {
+    pub spec: ProblemSpec,
+    pub dataset: Dataset,
+    pub n_clients: usize,
+    pub n_i: usize,
+    pub rounds: u64,
+    /// Seconds spent in data load+parse+split (paper's "initialization
+    /// time", Tables 2–3).
+    pub init_secs: f64,
+}
+
+/// Generate (through the real LIBSVM text round-trip) and split.
+pub fn prepare_problem(
+    spec: &ProblemSpec,
+    cfg: &HarnessCfg,
+) -> Result<Problem> {
+    let sw = crate::utils::Stopwatch::start();
+    let (n_clients, n_i, rounds) = spec.dims(cfg.scale);
+    let total = n_clients * n_i + n_i; // headroom so leftovers exist
+    let synth = generate_synthetic(&SynthSpec {
+        d_raw: spec.d - 1,
+        n_samples: total,
+        density: 0.25,
+        noise: 1.0,
+        seed: cfg.seed,
+    });
+    // Real text round-trip: serializer → parser (exercises the paper's
+    // §5.2 data path; at full scale this is tens of MB).
+    let text = write_libsvm(&synth);
+    let (samples, d_raw) =
+        parse_libsvm_bytes(text.as_bytes()).context("parse synthetic")?;
+    let mut ds = Dataset::from_libsvm(&samples, d_raw.max(spec.d - 1));
+    ds.reshuffle(cfg.seed ^ 0xD5);
+    let init_secs = sw.elapsed_secs();
+    Ok(Problem {
+        spec: spec.clone(),
+        dataset: ds,
+        n_clients,
+        n_i,
+        rounds,
+        init_secs,
+    })
+}
+
+impl Problem {
+    pub fn d(&self) -> usize {
+        self.dataset.d
+    }
+
+    /// Fresh FedNL clients with the given compressor ("topk", ...).
+    pub fn clients(
+        &self,
+        compressor: &str,
+        k_mult: usize,
+        cfg: &HarnessCfg,
+    ) -> Result<Vec<ClientState>> {
+        let d = self.d();
+        let shards = self.dataset.split(self.n_clients, self.n_i)?;
+        let runtime = if cfg.pjrt {
+            Some(PjrtRuntime::load(&cfg.artifacts)?)
+        } else {
+            None
+        };
+        shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, sh)| {
+                let comp = by_name(compressor, d, k_mult, cfg.seed + i as u64)?;
+                let oracle: Box<dyn crate::oracle::Oracle> = match &runtime {
+                    Some(rt) => {
+                        Box::new(rt.oracle_for_shard(&sh, self.spec.lam)?)
+                    }
+                    None => Box::new(LogisticOracle::new(sh, self.spec.lam)),
+                };
+                Ok(ClientState::new(i, oracle, comp, None))
+            })
+            .collect()
+    }
+
+    /// FedNL-PP clients.
+    pub fn pp_clients(
+        &self,
+        compressor: &str,
+        k_mult: usize,
+        cfg: &HarnessCfg,
+        x0: &[f64],
+    ) -> Result<Vec<PPClientState>> {
+        let d = self.d();
+        let shards = self.dataset.split(self.n_clients, self.n_i)?;
+        shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, sh)| {
+                let comp = by_name(compressor, d, k_mult, cfg.seed + i as u64)?;
+                Ok(PPClientState::new(
+                    i,
+                    Box::new(LogisticOracle::new(sh, self.spec.lam)),
+                    comp,
+                    None,
+                    x0,
+                ))
+            })
+            .collect()
+    }
+
+    /// Sequential pool.
+    pub fn seq_pool(
+        &self,
+        compressor: &str,
+        k_mult: usize,
+        cfg: &HarnessCfg,
+    ) -> Result<SeqPool> {
+        Ok(SeqPool::new(self.clients(compressor, k_mult, cfg)?))
+    }
+
+    /// Threaded pool (the paper's single-node simulator).
+    pub fn threaded_pool(
+        &self,
+        compressor: &str,
+        k_mult: usize,
+        cfg: &HarnessCfg,
+    ) -> Result<ThreadedPool> {
+        Ok(ThreadedPool::new(
+            self.clients(compressor, k_mult, cfg)?,
+            cfg.threads,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prepare_ci_problem() {
+        let cfg = HarnessCfg::default();
+        let p = prepare_problem(&PHISHING, &cfg).unwrap();
+        assert_eq!(p.d(), 69);
+        assert_eq!(p.n_clients, 16);
+        assert!(p.init_secs > 0.0);
+        let pool = p.seq_pool("topk", 8, &cfg).unwrap();
+        assert_eq!(pool.clients.len(), 16);
+    }
+
+    #[test]
+    fn spec_dims_scale() {
+        assert_eq!(W8A.dims(Scale::Full), (142, 350, 1000));
+        let (n, ni, r) = W8A.dims(Scale::Ci);
+        assert!(n < 142 && ni <= 350 && r < 1000);
+    }
+}

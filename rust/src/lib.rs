@@ -1,0 +1,40 @@
+//! # Unlocking FedNL — self-contained compute-optimized implementation
+//!
+//! Reproduction of Burlachenko & Richtárik, *"Unlocking FedNL: Self-Contained
+//! Compute-Optimized Implementation"* (2024), as a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: the FedNL /
+//!   FedNL-LS / FedNL-PP algorithm family, communication compressors
+//!   (TopK, RandK, RandSeqK, TopLEK, Natural, Identity), a single-node
+//!   multi-threaded simulator, and a multi-node TCP master/client runtime.
+//! * **Layer 2 (python/compile/model.py)** — the logistic-regression oracle
+//!   (loss, gradient, Hessian) expressed in JAX, AOT-lowered to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — the oracle hot-spot as a Pallas
+//!   kernel, validated against a pure-jnp reference.
+//!
+//! The crate is deliberately *self-contained*: every substrate the paper's
+//! C++ implementation built in-house (dense linear algebra, direct and
+//! iterative linear solvers, LIBSVM parsing, PRNGs, thread pools, TCP
+//! framing, CLI parsing, benchmarking) is implemented here from scratch on
+//! top of `std` only, mirroring the paper's "relies only on OS interfaces"
+//! design philosophy. The only external dependencies are the `xla` crate
+//! (PJRT bridge to the AOT artifacts) and `anyhow` (error handling).
+
+pub mod algorithms;
+pub mod baselines;
+pub mod cli;
+pub mod compressors;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod linalg;
+pub mod metrics;
+pub mod net;
+pub mod oracle;
+pub mod rng;
+pub mod runtime;
+pub mod utils;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,172 @@
+//! Cholesky–Banachiewicz factorization + forward/backward substitution.
+//!
+//! The paper replaced Gaussian elimination with Cholesky for the master's
+//! Newton solve (§5.9, v10, ×1.31): the system matrix `Hᵏ + lᵏI` is
+//! symmetric positive definite by construction (Alg. 1 Option 2). The
+//! row-oriented Banachiewicz order makes every inner loop a contiguous
+//! dot over previously computed rows of L — the "cache-friendly
+//! implementation which produces both L and Lᵀ factors" of v30 (we store
+//! L row-major; forward substitution reads rows of L, backward
+//! substitution walks the same storage as Lᵀ columns).
+
+use super::matrix::Mat;
+use super::vector;
+
+/// Lower-triangular Cholesky factor (row-major dense storage).
+#[derive(Debug, Clone)]
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    /// Factor `a + shift·I = L Lᵀ`. Returns `None` if the shifted matrix
+    /// is not numerically positive definite.
+    pub fn factor(a: &Mat, shift: f64) -> Option<Self> {
+        let d = a.rows();
+        assert_eq!(a.cols(), d, "cholesky: square matrix required");
+        let mut l = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in 0..=i {
+                // s = a_ij − Σ_{k<j} L_ik L_jk : contiguous row dots.
+                let (li, lj) = (l.row(i), l.row(j));
+                let acc = vector::dot(&li[..j], &lj[..j]);
+                let mut s = a.get(i, j) - acc;
+                if i == j {
+                    s += shift;
+                    if s <= 0.0 || !s.is_finite() {
+                        return None;
+                    }
+                    l.set(i, j, s.sqrt());
+                } else {
+                    l.set(i, j, s / l.get(j, j));
+                }
+            }
+        }
+        Some(Self { l })
+    }
+
+    /// Dimension of the factored matrix.
+    pub fn dim(&self) -> usize {
+        self.l.rows()
+    }
+
+    /// Solve `L Lᵀ x = b` by forward then backward substitution,
+    /// writing into `x` (in-place vector arithmetic, §5.9).
+    pub fn solve(&self, b: &[f64], x: &mut [f64]) {
+        let d = self.dim();
+        debug_assert!(b.len() == d && x.len() == d);
+        // Forward: L y = b. Row i's prefix is contiguous.
+        for i in 0..d {
+            let row = self.l.row(i);
+            let s = vector::dot(&row[..i], &x[..i]);
+            x[i] = (b[i] - s) / row[i];
+        }
+        // Backward: Lᵀ z = y. Walk columns of L (rows of Lᵀ) bottom-up;
+        // eliminate x[i] from all earlier entries so the inner loop is a
+        // contiguous AXPY over L's row i — cache-friendly (v30).
+        for i in (0..d).rev() {
+            let row = self.l.row(i);
+            x[i] /= row[i];
+            let xi = x[i];
+            for k in 0..i {
+                x[k] -= row[k] * xi;
+            }
+        }
+    }
+
+    /// Convenience allocating solve.
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = vec![0.0; b.len()];
+        self.solve(b, &mut x);
+        x
+    }
+
+    /// Access the factor (tests/benches).
+    pub fn factor_l(&self) -> &Mat {
+        &self.l
+    }
+}
+
+/// One-shot SPD solve of `(a + shift·I) x = b`.
+pub fn solve_spd(a: &Mat, shift: f64, b: &[f64]) -> Option<Vec<f64>> {
+    Cholesky::factor(a, shift).map(|ch| ch.solve_vec(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    /// Random SPD matrix A = BᵀB + εI.
+    fn random_spd(d: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let b = Mat::from_vec(
+            d,
+            d,
+            (0..d * d).map(|_| rng.next_gaussian()).collect(),
+        );
+        let mut a = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                let mut s = 0.0;
+                for k in 0..d {
+                    s += b.get(k, i) * b.get(k, j);
+                }
+                a.set(i, j, s);
+            }
+        }
+        a.add_diag(0.1);
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = random_spd(8, 1);
+        let ch = Cholesky::factor(&a, 0.0).unwrap();
+        let l = ch.factor_l();
+        let mut rec = Mat::zeros(8, 8);
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut s = 0.0;
+                for k in 0..8 {
+                    s += l.get(i, k) * l.get(j, k);
+                }
+                rec.set(i, j, s);
+            }
+        }
+        assert!(a.max_abs_diff(&rec) < 1e-10);
+    }
+
+    #[test]
+    fn solve_matches_residual() {
+        for d in [1, 2, 5, 17, 40] {
+            let a = random_spd(d, d as u64);
+            let mut rng = Pcg64::seed_from_u64(99 + d as u64);
+            let b: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+            let x = solve_spd(&a, 0.0, &b).unwrap();
+            let mut ax = vec![0.0; d];
+            a.matvec(&x, &mut ax);
+            for i in 0..d {
+                assert!((ax[i] - b[i]).abs() < 1e-8, "d={d} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn shift_regularizes_indefinite() {
+        // A = -I is not PD; A + 2I is.
+        let a = Mat::identity_scaled(4, -1.0);
+        assert!(Cholesky::factor(&a, 0.0).is_none());
+        let ch = Cholesky::factor(&a, 2.0).unwrap();
+        let x = ch.solve_vec(&[1.0, 2.0, 3.0, 4.0]);
+        // (A + 2I) = I  ⇒  x = b.
+        assert!((x[2] - 3.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn rejects_nan() {
+        let mut a = Mat::identity_scaled(3, 1.0);
+        a.set(1, 1, f64::NAN);
+        assert!(Cholesky::factor(&a, 0.0).is_none());
+    }
+}

@@ -1,0 +1,212 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi rotation method,
+//! and the `[M]_μ` PSD projection FedNL's Option-1 model update needs
+//! (Alg. 1 line 11a: project the learned Hessian onto {A : A ⪰ μI} in
+//! the Frobenius norm — i.e. clip eigenvalues from below at μ).
+//!
+//! Jacobi is chosen over QR for self-containedness and robustness: it is
+//! a few dozen lines, unconditionally stable for symmetric matrices, and
+//! the master only projects d×d with d ≤ a few hundred.
+
+use super::matrix::Mat;
+
+/// Eigendecomposition M = V · diag(λ) · Vᵀ of a symmetric matrix.
+#[derive(Debug, Clone)]
+pub struct SymEigen {
+    /// Eigenvalues, ascending.
+    pub values: Vec<f64>,
+    /// Column i of `vectors` is the eigenvector for `values[i]`.
+    pub vectors: Mat,
+}
+
+/// Cyclic Jacobi eigensolver. `tol` bounds the off-diagonal Frobenius
+/// mass at convergence (relative to ‖M‖_F).
+pub fn sym_eigen(m: &Mat, tol: f64, max_sweeps: usize) -> SymEigen {
+    let d = m.rows();
+    assert_eq!(m.cols(), d, "sym_eigen: square required");
+    let mut a = m.clone();
+    let mut v = Mat::identity_scaled(d, 1.0);
+    let norm = a.frobenius_sq().sqrt().max(1e-300);
+
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal mass.
+        let mut off = 0.0;
+        for i in 0..d {
+            for j in i + 1..d {
+                off += 2.0 * a.get(i, j) * a.get(i, j);
+            }
+        }
+        if off.sqrt() <= tol * norm {
+            break;
+        }
+        for p in 0..d {
+            for q in p + 1..d {
+                let apq = a.get(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a.get(p, p);
+                let aqq = a.get(q, q);
+                // Rotation angle.
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (1.0 + theta * theta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // A ← JᵀAJ applied to rows/cols p, q.
+                for k in 0..d {
+                    let akp = a.get(k, p);
+                    let akq = a.get(k, q);
+                    a.set(k, p, c * akp - s * akq);
+                    a.set(k, q, s * akp + c * akq);
+                }
+                for k in 0..d {
+                    let apk = a.get(p, k);
+                    let aqk = a.get(q, k);
+                    a.set(p, k, c * apk - s * aqk);
+                    a.set(q, k, s * apk + c * aqk);
+                }
+                // Accumulate V ← VJ.
+                for k in 0..d {
+                    let vkp = v.get(k, p);
+                    let vkq = v.get(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+    // Extract and sort ascending.
+    let mut order: Vec<usize> = (0..d).collect();
+    let diag: Vec<f64> = (0..d).map(|i| a.get(i, i)).collect();
+    order.sort_by(|&i, &j| diag[i].partial_cmp(&diag[j]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&i| diag[i]).collect();
+    let mut vectors = Mat::zeros(d, d);
+    for (new_col, &old_col) in order.iter().enumerate() {
+        for r in 0..d {
+            vectors.set(r, new_col, v.get(r, old_col));
+        }
+    }
+    SymEigen { values, vectors }
+}
+
+/// `[M]_μ`: the nearest (Frobenius) matrix with all eigenvalues ≥ μ —
+/// clip λᵢ ← max(λᵢ, μ) and reassemble (FedNL Option 1).
+pub fn project_psd_mu(m: &Mat, mu: f64) -> Mat {
+    let d = m.rows();
+    let eig = sym_eigen(m, 1e-12, 64);
+    let mut out = Mat::zeros(d, d);
+    for (i, &lam) in eig.values.iter().enumerate() {
+        let l = lam.max(mu);
+        // out += l · vᵢ vᵢᵀ (upper triangle, symmetrize once).
+        for r in 0..d {
+            let vr = eig.vectors.get(r, i) * l;
+            for c in r..d {
+                out.add_at(r, c, vr * eig.vectors.get(c, i));
+            }
+        }
+    }
+    out.symmetrize_from_upper();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    fn random_sym(d: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut m = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in i..d {
+                let v = rng.next_gaussian();
+                m.set(i, j, v);
+                m.set(j, i, v);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn diagonal_matrix_eigen() {
+        let mut m = Mat::zeros(3, 3);
+        m.set(0, 0, 3.0);
+        m.set(1, 1, -1.0);
+        m.set(2, 2, 2.0);
+        let e = sym_eigen(&m, 1e-14, 32);
+        assert!((e.values[0] + 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 2.0).abs() < 1e-12);
+        assert!((e.values[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction() {
+        let m = random_sym(8, 1);
+        let e = sym_eigen(&m, 1e-13, 64);
+        // M ≈ V diag(λ) Vᵀ
+        let d = 8;
+        let mut rec = Mat::zeros(d, d);
+        for i in 0..d {
+            for r in 0..d {
+                for c in 0..d {
+                    rec.add_at(
+                        r,
+                        c,
+                        e.values[i] * e.vectors.get(r, i) * e.vectors.get(c, i),
+                    );
+                }
+            }
+        }
+        assert!(m.max_abs_diff(&rec) < 1e-9);
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let m = random_sym(6, 2);
+        let e = sym_eigen(&m, 1e-13, 64);
+        for i in 0..6 {
+            for j in 0..6 {
+                let mut dot = 0.0;
+                for r in 0..6 {
+                    dot += e.vectors.get(r, i) * e.vectors.get(r, j);
+                }
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-10, "({i},{j}): {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn projection_clips_spectrum() {
+        let m = random_sym(7, 3);
+        let mu = 0.5;
+        let p = project_psd_mu(&m, mu);
+        let e = sym_eigen(&p, 1e-12, 64);
+        for &lam in &e.values {
+            assert!(lam >= mu - 1e-8, "λ={lam}");
+        }
+        // Projection is idempotent on already-feasible matrices.
+        let p2 = project_psd_mu(&p, mu);
+        assert!(p.max_abs_diff(&p2) < 1e-8);
+    }
+
+    #[test]
+    fn projection_preserves_feasible_matrix() {
+        // SPD with λmin > μ must be (numerically) unchanged.
+        let mut m = random_sym(5, 4);
+        // Make strongly PD: M ← MᵀM/d + 2I.
+        let mm = m.matmul_naive(&m);
+        m = mm;
+        for v in [0usize] {
+            let _ = v;
+        }
+        let mut spd = Mat::zeros(5, 5);
+        for i in 0..5 {
+            for j in 0..5 {
+                spd.set(i, j, m.get(i, j) / 5.0);
+            }
+        }
+        spd.add_diag(2.0);
+        let p = project_psd_mu(&spd, 0.1);
+        assert!(spd.max_abs_diff(&p) < 1e-8);
+    }
+}

@@ -1,0 +1,121 @@
+//! Gaussian elimination with partial pivoting — the paper's *pre-v10*
+//! linear solver, retained as the ablation baseline for §5.9 ("we
+//! transitioned from dense Gaussian elimination to ... Cholesky").
+
+use super::matrix::Mat;
+
+/// Solve `A x = b` by Gaussian elimination with partial pivoting.
+/// Returns `None` when a pivot underflows (singular to working precision).
+pub fn solve_gauss(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let d = a.rows();
+    assert_eq!(a.cols(), d);
+    assert_eq!(b.len(), d);
+    // Augmented working copy.
+    let mut m = a.clone();
+    let mut rhs = b.to_vec();
+
+    for col in 0..d {
+        // Partial pivot: largest |entry| in the column at/below `col`.
+        let mut piv = col;
+        let mut best = m.get(col, col).abs();
+        for r in col + 1..d {
+            let v = m.get(r, col).abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best < 1e-300 || !best.is_finite() {
+            return None;
+        }
+        if piv != col {
+            for j in 0..d {
+                let tmp = m.get(col, j);
+                m.set(col, j, m.get(piv, j));
+                m.set(piv, j, tmp);
+            }
+            rhs.swap(col, piv);
+        }
+        // Eliminate below.
+        let pivot = m.get(col, col);
+        for r in col + 1..d {
+            let f = m.get(r, col) / pivot;
+            if f == 0.0 {
+                continue;
+            }
+            m.set(r, col, 0.0);
+            for j in col + 1..d {
+                let v = m.get(r, j) - f * m.get(col, j);
+                m.set(r, j, v);
+            }
+            rhs[r] -= f * rhs[col];
+        }
+    }
+    // Back substitution.
+    let mut x = vec![0.0; d];
+    for i in (0..d).rev() {
+        let mut s = rhs[i];
+        for j in i + 1..d {
+            s -= m.get(i, j) * x[j];
+        }
+        x[i] = s / m.get(i, i);
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky;
+    use crate::rng::{Pcg64, Rng};
+
+    #[test]
+    fn solves_small_known_system() {
+        // [2 1; 1 3] x = [3; 5]  ⇒  x = [4/5, 7/5]
+        let a = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 3.0]]);
+        let x = solve_gauss(&a, &[3.0, 5.0]).unwrap();
+        assert!((x[0] - 0.8).abs() < 1e-14);
+        assert!((x[1] - 1.4).abs() < 1e-14);
+    }
+
+    #[test]
+    fn pivoting_handles_zero_diagonal() {
+        let a = Mat::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let x = solve_gauss(&a, &[2.0, 3.0]).unwrap();
+        assert_eq!(x, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn singular_returns_none() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(solve_gauss(&a, &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn agrees_with_cholesky_on_spd() {
+        let d = 20;
+        let mut rng = Pcg64::seed_from_u64(7);
+        let bmat = Mat::from_vec(
+            d,
+            d,
+            (0..d * d).map(|_| rng.next_gaussian()).collect(),
+        );
+        let mut a = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                let mut s = 0.0;
+                for k in 0..d {
+                    s += bmat.get(k, i) * bmat.get(k, j);
+                }
+                a.set(i, j, s);
+            }
+        }
+        a.add_diag(0.5);
+        let b: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let xg = solve_gauss(&a, &b).unwrap();
+        let xc = cholesky::solve_spd(&a, 0.0, &b).unwrap();
+        for i in 0..d {
+            assert!((xg[i] - xc[i]).abs() < 1e-8);
+        }
+    }
+}

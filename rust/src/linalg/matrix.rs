@@ -1,0 +1,400 @@
+//! Dense row-major f64 matrix (paper component `linalg_matrices`).
+//!
+//! Design notes carried over from the paper:
+//! * rows/cols are stored explicitly (v34: "store information about the
+//!   number of columns ... explicitly");
+//! * `sym_rank1_block_upper` accumulates the Hessian as a sum of
+//!   symmetric rank-1 matrices over the *upper triangle only*, 4 samples
+//!   per pass (§5.10 / v26+v52) — the single hottest kernel in FedNL;
+//! * `frobenius_sq_symmetric` exploits symmetry (v51);
+//! * `add_diag` is the careful diagonal-update of §5.8 (v14);
+//! * `matmul_tiled` is the cache-aware tiled multiply of §5.10, kept for
+//!   benches/ablation (the Hessian path does not use a general matmul).
+
+use super::vector;
+
+/// Dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity scaled by `s`.
+    pub fn identity_scaled(n: usize, s: f64) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, s);
+        }
+        m
+    }
+
+    /// Build from row slices.
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    /// Build from a flat row-major vec.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn add_at(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] += v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Reset to zero without reallocating (buffer reuse, §5.13).
+    pub fn fill_zero(&mut self) {
+        vector::fill_zero(&mut self.data);
+    }
+
+    /// `self += alpha * other` (elementwise).
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        vector::axpy(alpha, &other.data, &mut self.data);
+    }
+
+    /// `self[i][i] += s` for all i (§5.8 custom diagonal update).
+    pub fn add_diag(&mut self, s: f64) {
+        let n = self.rows.min(self.cols);
+        let stride = self.cols + 1;
+        let mut idx = 0;
+        for _ in 0..n {
+            self.data[idx] += s;
+            idx += stride;
+        }
+    }
+
+    /// y = A x (row-major: each row dot x — contiguous access).
+    pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            y[i] = vector::dot(self.row(i), x);
+        }
+    }
+
+    /// y = Aᵀ x without materializing Aᵀ (paper v53: operate on the
+    /// transposed argument instead of storing both A and Aᵀ).
+    pub fn matvec_t(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        vector::fill_zero(y);
+        for i in 0..self.rows {
+            vector::axpy(x[i], self.row(i), y);
+        }
+    }
+
+    /// Naive 3-loop matmul (the §5.10 baseline; kept for the ablation).
+    pub fn matmul_naive(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows);
+        let mut c = Mat::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..self.cols {
+                    s += self.get(i, k) * b.get(k, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    /// Cache-aware tiled matmul (§5.10): i-k-j loop order inside tiles so
+    /// the innermost loop is a contiguous AXPY over C's row.
+    pub fn matmul_tiled(&self, b: &Mat, tile: usize) -> Mat {
+        assert_eq!(self.cols, b.rows);
+        assert!(tile > 0);
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut c = Mat::zeros(m, n);
+        for it in (0..m).step_by(tile) {
+            let imax = (it + tile).min(m);
+            for kt in (0..k).step_by(tile) {
+                let kmax = (kt + tile).min(k);
+                for jt in (0..n).step_by(tile) {
+                    let jmax = (jt + tile).min(n);
+                    for i in it..imax {
+                        for kk in kt..kmax {
+                            let aik = self.get(i, kk);
+                            if aik == 0.0 {
+                                continue;
+                            }
+                            let brow = &b.data[kk * n + jt..kk * n + jmax];
+                            let crow = &mut c.data[i * n + jt..i * n + jmax];
+                            vector::axpy(aik, brow, crow);
+                        }
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    /// Accumulate `self += Σ_b h_b · a_b a_bᵀ` over the **upper triangle
+    /// only**, processing up to 4 samples per sweep (§5.10 "better
+    /// strategy": symmetric rank-1 sum, 4-sample ILP blocking).
+    ///
+    /// `samples` are row-slices of length d; `h` the per-sample weights.
+    /// Call [`Mat::symmetrize_from_upper`] once after all batches.
+    pub fn sym_rank1_block_upper(&mut self, samples: &[&[f64]], h: &[f64]) {
+        let d = self.rows;
+        debug_assert_eq!(self.cols, d);
+        debug_assert_eq!(samples.len(), h.len());
+        let mut b = 0;
+        while b + 4 <= samples.len() {
+            let (a0, a1, a2, a3) =
+                (samples[b], samples[b + 1], samples[b + 2], samples[b + 3]);
+            let (h0, h1, h2, h3) = (h[b], h[b + 1], h[b + 2], h[b + 3]);
+            for u in 0..d {
+                // Four independent scalar chains → ILP (paper v52).
+                let c0 = h0 * a0[u];
+                let c1 = h1 * a1[u];
+                let c2 = h2 * a2[u];
+                let c3 = h3 * a3[u];
+                let row = &mut self.data[u * d..(u + 1) * d];
+                for v in u..d {
+                    row[v] += c0 * a0[v] + c1 * a1[v] + c2 * a2[v] + c3 * a3[v];
+                }
+            }
+            b += 4;
+        }
+        while b < samples.len() {
+            let a = samples[b];
+            let hb = h[b];
+            for u in 0..d {
+                let c = hb * a[u];
+                let row = &mut self.data[u * d..(u + 1) * d];
+                for v in u..d {
+                    row[v] += c * a[v];
+                }
+            }
+            b += 1;
+        }
+    }
+
+    /// Mirror the upper triangle into the lower one (one pass, §5.10).
+    pub fn symmetrize_from_upper(&mut self) {
+        let d = self.rows;
+        debug_assert_eq!(self.cols, d);
+        for i in 1..d {
+            for j in 0..i {
+                self.data[i * d + j] = self.data[j * d + i];
+            }
+        }
+    }
+
+    /// Squared Frobenius norm, generic.
+    pub fn frobenius_sq(&self) -> f64 {
+        vector::norm2_sq(&self.data)
+    }
+
+    /// Squared Frobenius norm for a symmetric matrix using only the
+    /// upper triangle: ‖M‖²_F = Σ_i m_ii² + 2 Σ_{i<j} m_ij² (v51).
+    pub fn frobenius_sq_symmetric(&self) -> f64 {
+        let d = self.rows;
+        debug_assert_eq!(self.cols, d);
+        let mut diag = 0.0;
+        let mut off = 0.0;
+        for i in 0..d {
+            let row = self.row(i);
+            diag += row[i] * row[i];
+            off += vector::norm2_sq(&row[i + 1..]);
+        }
+        diag + 2.0 * off
+    }
+
+    /// Max |a_ij - b_ij| (test helper).
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f64, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    /// Strict symmetry check within tolerance.
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for i in 0..self.rows {
+            for j in i + 1..self.cols {
+                if (self.get(i, j) - self.get(j, i)).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    fn random_mat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        Mat::from_vec(r, c, (0..r * c).map(|_| rng.next_gaussian()).collect())
+    }
+
+    #[test]
+    fn get_set_row() {
+        let mut m = Mat::zeros(2, 3);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn add_diag_rect_safe() {
+        let mut m = Mat::zeros(2, 3);
+        m.add_diag(1.5);
+        assert_eq!(m.get(0, 0), 1.5);
+        assert_eq!(m.get(1, 1), 1.5);
+        assert_eq!(m.get(1, 2), 0.0);
+    }
+
+    #[test]
+    fn matvec_and_transpose() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let mut y = vec![0.0; 3];
+        m.matvec(&[1.0, 1.0], &mut y);
+        assert_eq!(y, vec![3.0, 7.0, 11.0]);
+        let mut z = vec![0.0; 2];
+        m.matvec_t(&[1.0, 1.0, 1.0], &mut z);
+        assert_eq!(z, vec![9.0, 12.0]);
+    }
+
+    #[test]
+    fn tiled_matches_naive() {
+        let a = random_mat(17, 13, 1);
+        let b = random_mat(13, 19, 2);
+        let c0 = a.matmul_naive(&b);
+        for tile in [1, 4, 8, 32] {
+            let c1 = a.matmul_tiled(&b, tile);
+            assert!(c0.max_abs_diff(&c1) < 1e-12, "tile={tile}");
+        }
+    }
+
+    #[test]
+    fn sym_rank1_matches_dense() {
+        // H = A diag(h) Aᵀ via rank-1 blocking vs explicit matmul.
+        let d = 9;
+        let n = 14; // not a multiple of 4 → exercises the tail loop
+        let at = random_mat(n, d, 3);
+        let mut rng = Pcg64::seed_from_u64(4);
+        let h: Vec<f64> = (0..n).map(|_| rng.next_f64() + 0.1).collect();
+
+        let mut hess = Mat::zeros(d, d);
+        let rows: Vec<&[f64]> = (0..n).map(|i| at.row(i)).collect();
+        hess.sym_rank1_block_upper(&rows, &h);
+        hess.symmetrize_from_upper();
+
+        let mut expect = Mat::zeros(d, d);
+        for s in 0..n {
+            for u in 0..d {
+                for v in 0..d {
+                    expect.add_at(u, v, h[s] * at.get(s, u) * at.get(s, v));
+                }
+            }
+        }
+        assert!(hess.max_abs_diff(&expect) < 1e-12);
+        assert!(hess.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn frobenius_symmetric_matches_generic() {
+        let d = 11;
+        let a = random_mat(d, d, 5);
+        let mut sym = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                sym.set(i, j, 0.5 * (a.get(i, j) + a.get(j, i)));
+            }
+        }
+        let f1 = sym.frobenius_sq();
+        let f2 = sym.frobenius_sq_symmetric();
+        assert!((f1 - f2).abs() < 1e-10 * f1.max(1.0));
+    }
+
+    #[test]
+    fn symmetrize_from_upper_works() {
+        let mut m = Mat::zeros(3, 3);
+        m.set(0, 1, 2.0);
+        m.set(0, 2, 3.0);
+        m.set(1, 2, 4.0);
+        m.symmetrize_from_upper();
+        assert!(m.is_symmetric(0.0));
+        assert_eq!(m.get(2, 0), 3.0);
+    }
+
+    #[test]
+    fn axpy_matrix() {
+        let mut a = Mat::identity_scaled(2, 1.0);
+        let b = Mat::identity_scaled(2, 2.0);
+        a.axpy(0.5, &b);
+        assert_eq!(a.get(0, 0), 2.0);
+        assert_eq!(a.get(0, 1), 0.0);
+    }
+}

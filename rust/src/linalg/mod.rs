@@ -1,0 +1,22 @@
+//! Self-contained dense linear algebra (paper components
+//! `linalg_vectors`, `linalg_matrices`, `linalg_linsolvers`).
+//!
+//! Everything FedNL needs: dense vectors/matrices (f64), the packed
+//! upper-triangle representation the compressors operate on, a
+//! Cholesky–Banachiewicz direct solver with forward/backward
+//! substitution (§5.9), Gaussian elimination (the paper's pre-v10
+//! baseline, kept for the ablation bench), and the iterative solvers the
+//! paper ships (Jacobi, Gauss–Seidel, Conjugate Gradient).
+
+pub mod cholesky;
+pub mod eigen;
+pub mod gauss;
+pub mod iterative;
+pub mod matrix;
+pub mod packed;
+pub mod qr;
+pub mod vector;
+
+pub use cholesky::Cholesky;
+pub use matrix::Mat;
+pub use packed::{packed_idx, packed_len, PackedUpper};

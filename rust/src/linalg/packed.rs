@@ -1,0 +1,222 @@
+//! Packed upper-triangle representation of symmetric d×d matrices.
+//!
+//! FedNL compresses the *difference of symmetric matrices*
+//! `∇²f_i(xᵏ) − H_iᵏ`; all compressors therefore operate on the packed
+//! upper triangle (length d(d+1)/2), exactly as the paper's RandK/TopK
+//! act on "elements from the upper triangular part" (Appendix C.1).
+//! Index tables are precomputed once and reused every round (§5.11 v31).
+
+use super::matrix::Mat;
+
+// (see tests: packed_idx is validated against full enumeration)
+
+/// Number of packed entries for a d×d symmetric matrix.
+#[inline]
+pub const fn packed_len(d: usize) -> usize {
+    d * (d + 1) / 2
+}
+
+/// Flat index of (i, j), i ≤ j, in row-major packed upper-triangle order.
+#[inline]
+pub fn packed_idx(d: usize, i: usize, j: usize) -> usize {
+    debug_assert!(i <= j && j < d);
+    // Row i starts after rows 0..i, whose lengths are d, d-1, ..., d-i+1.
+    i * d - (i * i - i) / 2 + (j - i)
+}
+
+/// Precomputed (i, j) pair for every packed index, plus the weight used
+/// in Frobenius accounting (1 for diagonal, 2 for off-diagonal).
+#[derive(Debug, Clone)]
+pub struct PackedUpper {
+    d: usize,
+    pairs: Vec<(u32, u32)>,
+}
+
+impl PackedUpper {
+    /// Build the index table for dimension `d` (done once per client).
+    pub fn new(d: usize) -> Self {
+        let mut pairs = Vec::with_capacity(packed_len(d));
+        for i in 0..d {
+            for j in i..d {
+                pairs.push((i as u32, j as u32));
+            }
+        }
+        Self { d, pairs }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    /// (i, j) for packed index `k`.
+    #[inline]
+    pub fn pair(&self, k: usize) -> (usize, usize) {
+        let (i, j) = self.pairs[k];
+        (i as usize, j as usize)
+    }
+
+    /// Extract `mat`'s upper triangle into `out` (len = packed_len(d)).
+    pub fn pack(&self, mat: &Mat, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.len());
+        let d = self.d;
+        let mut k = 0;
+        for i in 0..d {
+            let row = &mat.row(i)[i..];
+            out[k..k + row.len()].copy_from_slice(row);
+            k += row.len();
+        }
+    }
+
+    /// Scatter packed values into a full symmetric matrix.
+    pub fn unpack(&self, packed: &[f64], mat: &mut Mat) {
+        debug_assert_eq!(packed.len(), self.len());
+        let d = self.d;
+        let mut k = 0;
+        for i in 0..d {
+            for j in i..d {
+                mat.set(i, j, packed[k]);
+                mat.set(j, i, packed[k]);
+                k += 1;
+            }
+        }
+    }
+
+    /// Apply a sparse symmetric update `mat += α · Σ values[t] e_{i,j}`
+    /// at the given packed indices — the master-side Line 10 update.
+    /// Sparse (skips untouched entries, §5.6): cost O(k) not O(d²).
+    pub fn apply_sparse(
+        &self,
+        mat: &mut Mat,
+        alpha: f64,
+        indices: &[u32],
+        values: &[f64],
+    ) {
+        debug_assert_eq!(indices.len(), values.len());
+        for (&k, &v) in indices.iter().zip(values) {
+            let (i, j) = self.pair(k as usize);
+            mat.add_at(i, j, alpha * v);
+            if i != j {
+                mat.add_at(j, i, alpha * v);
+            }
+        }
+    }
+
+    /// y = M·x where M is the symmetric matrix with packed upper
+    /// triangle `packed` (used by FedNL-PP's Hessian-corrected local
+    /// gradient gᵢ = (Hᵢ + lᵢI)wᵢ − ∇fᵢ without densifying Hᵢ).
+    pub fn matvec_packed(&self, packed: &[f64], x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(packed.len(), self.len());
+        let d = self.d;
+        debug_assert!(x.len() == d && y.len() == d);
+        for yi in y.iter_mut() {
+            *yi = 0.0;
+        }
+        let mut k = 0;
+        for i in 0..d {
+            // diagonal
+            y[i] += packed[k] * x[i];
+            k += 1;
+            for j in i + 1..d {
+                let v = packed[k];
+                y[i] += v * x[j];
+                y[j] += v * x[i];
+                k += 1;
+            }
+        }
+    }
+
+    /// Frobenius-squared of the symmetric matrix whose packed form is
+    /// `packed`: diagonal entries count once, off-diagonal twice.
+    pub fn frobenius_sq_packed(&self, packed: &[f64]) -> f64 {
+        debug_assert_eq!(packed.len(), self.len());
+        let mut s = 0.0;
+        for (k, &v) in packed.iter().enumerate() {
+            let (i, j) = self.pairs[k];
+            let w = if i == j { 1.0 } else { 2.0 };
+            s += w * v * v;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    #[test]
+    fn idx_matches_enumeration() {
+        for d in 1..12 {
+            let pu = PackedUpper::new(d);
+            for k in 0..pu.len() {
+                let (i, j) = pu.pair(k);
+                assert_eq!(packed_idx(d, i, j), k);
+            }
+            assert_eq!(pu.len(), packed_len(d));
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let d = 7;
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut m = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in i..d {
+                let v = rng.next_gaussian();
+                m.set(i, j, v);
+                m.set(j, i, v);
+            }
+        }
+        let pu = PackedUpper::new(d);
+        let mut packed = vec![0.0; pu.len()];
+        pu.pack(&m, &mut packed);
+        let mut back = Mat::zeros(d, d);
+        pu.unpack(&packed, &mut back);
+        assert!(m.max_abs_diff(&back) < 1e-15);
+    }
+
+    #[test]
+    fn frobenius_packed_matches_dense() {
+        let d = 9;
+        let mut rng = Pcg64::seed_from_u64(2);
+        let mut m = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in i..d {
+                let v = rng.next_gaussian();
+                m.set(i, j, v);
+                m.set(j, i, v);
+            }
+        }
+        let pu = PackedUpper::new(d);
+        let mut packed = vec![0.0; pu.len()];
+        pu.pack(&m, &mut packed);
+        let f1 = pu.frobenius_sq_packed(&packed);
+        let f2 = m.frobenius_sq();
+        assert!((f1 - f2).abs() < 1e-10 * f2.max(1.0));
+    }
+
+    #[test]
+    fn apply_sparse_symmetric() {
+        let d = 5;
+        let pu = PackedUpper::new(d);
+        let mut m = Mat::zeros(d, d);
+        let idx = [packed_idx(d, 0, 0) as u32, packed_idx(d, 1, 3) as u32];
+        pu.apply_sparse(&mut m, 2.0, &idx, &[1.0, 5.0]);
+        assert_eq!(m.get(0, 0), 2.0);
+        assert_eq!(m.get(1, 3), 10.0);
+        assert_eq!(m.get(3, 1), 10.0);
+        assert!(m.is_symmetric(0.0));
+    }
+}

@@ -1,0 +1,219 @@
+//! Householder QR factorization (paper component `linalg_matrices`:
+//! "Dense matrix implementation for BLAS operations, Cholesky, and QR
+//! factorization").
+//!
+//! Used as a robust least-squares / non-SPD fallback and by the test
+//! suite as an independent check on the Cholesky solver.
+
+use super::matrix::Mat;
+use super::vector;
+
+/// Compact QR: A (m×n, m ≥ n) = Q·R with Q implicit in Householder
+/// reflectors.
+pub struct Qr {
+    /// Reflectors below the diagonal + R on/above it.
+    qr: Mat,
+    /// Householder βs.
+    betas: Vec<f64>,
+}
+
+/// Factor A (m ≥ n required).
+pub fn qr(a: &Mat) -> Qr {
+    let (m, n) = (a.rows(), a.cols());
+    assert!(m >= n, "qr: need m ≥ n");
+    let mut qr = a.clone();
+    let mut betas = vec![0.0; n];
+    for k in 0..n {
+        // Householder vector for column k below row k.
+        let mut norm = 0.0;
+        for i in k..m {
+            norm += qr.get(i, k) * qr.get(i, k);
+        }
+        let norm = norm.sqrt();
+        if norm < 1e-300 {
+            betas[k] = 0.0;
+            continue;
+        }
+        let alpha = if qr.get(k, k) >= 0.0 { -norm } else { norm };
+        let v0 = qr.get(k, k) - alpha;
+        // v = [v0, a_{k+1,k}, ..., a_{m-1,k}]; β = 2/(vᵀv). Snapshot v
+        // before the update loop — column k is rewritten below.
+        let v: Vec<f64> = std::iter::once(v0)
+            .chain((k + 1..m).map(|i| qr.get(i, k)))
+            .collect();
+        let vtv: f64 = vector::norm2_sq(&v);
+        let beta = if vtv > 0.0 { 2.0 / vtv } else { 0.0 };
+        // Apply H = I − βvvᵀ to the trailing columns k+1..n.
+        for j in k + 1..n {
+            let mut dot = 0.0;
+            for (t, &vi) in v.iter().enumerate() {
+                dot += vi * qr.get(k + t, j);
+            }
+            let s = beta * dot;
+            for (t, &vi) in v.iter().enumerate() {
+                qr.set(k + t, j, qr.get(k + t, j) - s * vi);
+            }
+        }
+        // Column k becomes [α, 0...0]; store the normalized reflector
+        // tail (v/v0) below the diagonal instead of the zeros.
+        qr.set(k, k, alpha);
+        if v0.abs() > 1e-300 {
+            for i in k + 1..m {
+                qr.set(i, k, v[i - k] / v0);
+            }
+            betas[k] = beta * v0 * v0;
+        } else {
+            for i in k + 1..m {
+                qr.set(i, k, 0.0);
+            }
+            betas[k] = 0.0;
+        }
+    }
+    Qr { qr, betas }
+}
+
+impl Qr {
+    /// Least-squares solve min ‖Ax − b‖₂ via Qᵀb then back-substitution.
+    pub fn solve(&self, b: &[f64]) -> Option<Vec<f64>> {
+        let (m, n) = (self.qr.rows(), self.qr.cols());
+        assert_eq!(b.len(), m);
+        let mut y = b.to_vec();
+        // y ← Qᵀ y (apply reflectors in order).
+        for k in 0..n {
+            if self.betas[k] == 0.0 {
+                continue;
+            }
+            let mut dot = y[k];
+            for i in k + 1..m {
+                dot += self.qr.get(i, k) * y[i];
+            }
+            let s = self.betas[k] * dot;
+            y[k] -= s;
+            for i in k + 1..m {
+                y[i] -= s * self.qr.get(i, k);
+            }
+        }
+        // Back-substitute R x = y[..n]. Rank deficiency = a diagonal
+        // entry negligible relative to the largest.
+        let rmax = (0..n)
+            .map(|i| self.qr.get(i, i).abs())
+            .fold(0.0f64, f64::max);
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for j in i + 1..n {
+                s -= self.qr.get(i, j) * x[j];
+            }
+            let rii = self.qr.get(i, i);
+            if rii.abs() <= 1e-12 * rmax.max(1e-300) {
+                return None;
+            }
+            x[i] = s / rii;
+        }
+        Some(x)
+    }
+
+    /// |det(A)| for square A = Π |r_ii|.
+    pub fn abs_det(&self) -> f64 {
+        let n = self.qr.cols().min(self.qr.rows());
+        (0..n).map(|i| self.qr.get(i, i).abs()).product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky;
+    use crate::rng::{Pcg64, Rng};
+
+    fn randmat(m: usize, n: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        Mat::from_vec(m, n, (0..m * n).map(|_| rng.next_gaussian()).collect())
+    }
+
+    #[test]
+    fn square_solve_matches_residual() {
+        for seed in 0..10 {
+            let d = 3 + (seed as usize % 10);
+            let a = randmat(d, d, seed);
+            let mut rng = Pcg64::seed_from_u64(100 + seed);
+            let b: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+            let x = qr(&a).solve(&b).unwrap();
+            let mut ax = vec![0.0; d];
+            a.matvec(&x, &mut ax);
+            for i in 0..d {
+                assert!((ax[i] - b[i]).abs() < 1e-8, "seed {seed} i {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn agrees_with_cholesky_on_spd() {
+        let d = 12;
+        let g = randmat(d, d, 3);
+        let mut a = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                let mut s = 0.0;
+                for k in 0..d {
+                    s += g.get(k, i) * g.get(k, j);
+                }
+                a.set(i, j, s);
+            }
+        }
+        a.add_diag(0.5);
+        let b: Vec<f64> = (0..d).map(|i| i as f64 - 3.0).collect();
+        let x1 = qr(&a).solve(&b).unwrap();
+        let x2 = cholesky::solve_spd(&a, 0.0, &b).unwrap();
+        for i in 0..d {
+            assert!((x1[i] - x2[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn least_squares_overdetermined() {
+        // Fit y = 2t + 1 from noisy-free samples: exact recovery.
+        let m = 20;
+        let mut a = Mat::zeros(m, 2);
+        let mut b = vec![0.0; m];
+        for t in 0..m {
+            a.set(t, 0, t as f64);
+            a.set(t, 1, 1.0);
+            b[t] = 2.0 * t as f64 + 1.0;
+        }
+        let x = qr(&a).solve(&b).unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-10);
+        assert!((x[1] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(qr(&a).solve(&[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn abs_det_identity() {
+        let a = Mat::identity_scaled(5, 3.0);
+        let f = qr(&a);
+        assert!((f.abs_det() - 243.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn residual_orthogonal_to_columns() {
+        // LS optimality: Aᵀ(Ax − b) = 0.
+        let a = randmat(15, 4, 7);
+        let mut rng = Pcg64::seed_from_u64(8);
+        let b: Vec<f64> = (0..15).map(|_| rng.next_gaussian()).collect();
+        let x = qr(&a).solve(&b).unwrap();
+        let mut ax = vec![0.0; 15];
+        a.matvec(&x, &mut ax);
+        let mut r = vec![0.0; 15];
+        vector::sub(&ax, &b, &mut r);
+        let mut atr = vec![0.0; 4];
+        a.matvec_t(&r, &mut atr);
+        for v in atr {
+            assert!(v.abs() < 1e-9, "AᵀR = {v}");
+        }
+    }
+}

@@ -1,0 +1,441 @@
+//! `fednl` — leader entrypoint and CLI.
+//!
+//! Subcommands (paper App. L.5 binaries, unified):
+//!   datagen      synthetic LIBSVM dataset generator (bin_opt_problem_generator)
+//!   split        split a LIBSVM file into per-client shards (bin_split)
+//!   train        single-node multi-core simulation (bin_fednl_local[_pp])
+//!   master       multi-node master (bin_fednl_distr_master)
+//!   client       multi-node client (bin_fednl_distr_client)
+//!   verify       finite-difference oracle verification (numerics)
+//!   experiment   regenerate a paper table/figure (see DESIGN.md §4)
+//!   sysinfo      host introspection (bin_host_view)
+
+use anyhow::{bail, Context, Result};
+use fednl::algorithms::fednl_pp::PPSlice;
+use fednl::algorithms::{
+    run_fednl_ls_pool, run_fednl_pool, run_fednl_pp_transport, ClientState,
+    LineSearchParams, Options, PPClientState, UpdateRule,
+};
+use fednl::cli::Args;
+use fednl::compressors::by_name;
+use fednl::coordinator::ThreadedPool;
+use fednl::data::{
+    generate_synthetic, parse_libsvm_file, write_libsvm, Dataset, SynthSpec,
+};
+use fednl::harness::{self, HarnessCfg, Scale};
+use fednl::metrics::rusage::ResourceSnapshot;
+use fednl::net::client::ClientMode;
+use fednl::net::{run_client, RemotePool};
+use fednl::oracle::{numerics, LogisticOracle, Oracle};
+use fednl::runtime::PjrtRuntime;
+use fednl::utils::{human_secs, Stopwatch};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("datagen") => cmd_datagen(&args),
+        Some("split") => cmd_split(&args),
+        Some("train") => cmd_train(&args),
+        Some("master") => cmd_master(&args),
+        Some("client") => cmd_client(&args),
+        Some("verify") => cmd_verify(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("sysinfo") => cmd_sysinfo(),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "fednl — self-contained compute-optimized FedNL (paper reproduction)\n\n\
+         USAGE: fednl <subcommand> [options]\n\n\
+         SUBCOMMANDS:\n\
+         \x20 datagen    --preset w8a|a9a|phishing|quickstart|tiny --out FILE [--seed N]\n\
+         \x20 split      FILE OUTDIR --clients N [--ni M] [--seed N]\n\
+         \x20 train      --data FILE --algo fednl|fednl-ls|fednl-pp [--compressor topk]\n\
+         \x20            [--k-mult 8] [--rounds 1000] [--clients 16] [--threads 0]\n\
+         \x20            [--lam 1e-3] [--tau 12] [--tol T] [--oracle native|pjrt]\n\
+         \x20            [--trace out.csv] [--warm-start] [--rule lk|mu] [--mu 1e-3]\n\
+         \x20 master     --listen ADDR --clients N --algo ... [--rounds R] [--tol T]\n\
+         \x20 client     --connect ADDR --id I --data SHARD [--algo fednl|fednl-pp]\n\
+         \x20            [--compressor topk] [--k-mult 8] [--lam 1e-3]\n\
+         \x20 verify     --data FILE [--lam 1e-3]   (finite-difference oracle check)\n\
+         \x20 experiment table1|table2|table3|table5|fig1..fig12|costmodel|all\n\
+         \x20            [--full] [--out-dir results] [--pjrt] [--threads N]\n\
+         \x20 sysinfo"
+    );
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "quickstart");
+    let out = args.get("out").context("--out required")?;
+    let seed = args.get_u64("seed", 0x5EED)?;
+    let mut spec = SynthSpec::preset(preset)
+        .with_context(|| format!("unknown preset '{preset}'"))?;
+    spec.seed = seed;
+    let sw = Stopwatch::start();
+    let data = generate_synthetic(&spec);
+    let text = write_libsvm(&data);
+    std::fs::write(out, &text)?;
+    println!(
+        "wrote {} samples (d_raw={}) to {out} in {}",
+        data.labels.len(),
+        data.d_raw,
+        human_secs(sw.elapsed_secs())
+    );
+    Ok(())
+}
+
+fn cmd_split(args: &Args) -> Result<()> {
+    let input = args.positional.first().context("input file required")?;
+    let outdir = args.positional.get(1).context("output dir required")?;
+    let n = args.get_usize("clients", 4)?;
+    let seed = args.get_u64("seed", 1)?;
+    let (samples, d_raw) = parse_libsvm_file(input)?;
+    let mut ds = Dataset::from_libsvm(&samples, d_raw);
+    ds.reshuffle(seed);
+    let ni = args.get_usize("ni", ds.n_samples() / n)?;
+    std::fs::create_dir_all(outdir)?;
+    // Re-emit per-shard LIBSVM files (labels reconstructed from the
+    // intercept column sign).
+    let shards = ds.split(n, ni)?;
+    for sh in &shards {
+        let mut text = String::new();
+        for r in 0..sh.n_i() {
+            let row = sh.at.row(r);
+            let label = if row[ds.d - 1] > 0.0 { 1.0 } else { -1.0 };
+            text.push_str(if label > 0.0 { "+1" } else { "-1" });
+            for (j, &v) in row.iter().enumerate().take(ds.d - 1) {
+                if v != 0.0 {
+                    text.push_str(&format!(" {}:{}", j + 1, v * label));
+                }
+            }
+            text.push('\n');
+        }
+        std::fs::write(
+            format!("{outdir}/shard_{:04}.libsvm", sh.client_id),
+            text,
+        )?;
+    }
+    println!("split {input} into {n} shards of {ni} samples in {outdir}/");
+    Ok(())
+}
+
+fn load_shards(
+    path: &str,
+    n_clients: usize,
+    seed: u64,
+) -> Result<(Dataset, Vec<fednl::data::ClientShard>)> {
+    let (samples, d_raw) = parse_libsvm_file(path)?;
+    let mut ds = Dataset::from_libsvm(&samples, d_raw);
+    ds.reshuffle(seed);
+    let shards = ds.split_even(n_clients)?;
+    Ok((ds, shards))
+}
+
+fn build_oracle(
+    shard: fednl::data::ClientShard,
+    lam: f64,
+    kind: &str,
+    artifacts: &str,
+    rt: &mut Option<PjrtRuntime>,
+) -> Result<Box<dyn Oracle>> {
+    match kind {
+        "native" => Ok(Box::new(LogisticOracle::new(shard, lam))),
+        "pjrt" => {
+            if rt.is_none() {
+                *rt = Some(PjrtRuntime::load(artifacts)?);
+            }
+            Ok(Box::new(rt.as_ref().unwrap().oracle_for_shard(&shard, lam)?))
+        }
+        other => bail!("unknown oracle kind '{other}'"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let data = args.get("data").context("--data required")?;
+    let algo = args.get_or("algo", "fednl");
+    let comp = args.get_or("compressor", "topk");
+    let k_mult = args.get_usize("k-mult", 8)?;
+    let rounds = args.get_u64("rounds", 100)?;
+    let n_clients = args.get_usize("clients", 16)?;
+    let threads = args.get_usize("threads", 0)?;
+    let lam = args.get_f64("lam", 1e-3)?;
+    let seed = args.get_u64("seed", 0x5EED)?;
+    let oracle_kind = args.get_or("oracle", "native");
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let tol = args.get("tol").map(|t| t.parse::<f64>()).transpose()?;
+    let rule = match args.get_or("rule", "lk") {
+        "mu" => UpdateRule::ProjectMu(args.get_f64("mu", 1e-3)?),
+        _ => UpdateRule::LkShift,
+    };
+    let sw = Stopwatch::start();
+    let (ds, shards) = load_shards(data, n_clients, seed)?;
+    let d = ds.d;
+    let init = sw.elapsed_secs();
+    let opts = Options {
+        rounds,
+        rule,
+        tol_grad: tol,
+        track_loss: true,
+        warm_start: args.flag("warm-start"),
+        ..Default::default()
+    };
+    let x0 = vec![0.0; d];
+    let mut rt: Option<PjrtRuntime> = None;
+
+    let trace = match algo {
+        "fednl" | "fednl-ls" => {
+            let clients: Vec<ClientState> = shards
+                .into_iter()
+                .enumerate()
+                .map(|(i, sh)| -> Result<ClientState> {
+                    Ok(ClientState::new(
+                        i,
+                        build_oracle(sh, lam, oracle_kind, artifacts, &mut rt)?,
+                        by_name(comp, d, k_mult, seed + i as u64)?,
+                        None,
+                    ))
+                })
+                .collect::<Result<_>>()?;
+            let mut pool = ThreadedPool::new(clients, threads);
+            if algo == "fednl" {
+                run_fednl_pool(&mut pool, &opts, x0, &format!("FedNL/{comp}"))
+            } else {
+                run_fednl_ls_pool(
+                    &mut pool,
+                    &opts,
+                    &LineSearchParams::default(),
+                    x0,
+                    &format!("FedNL-LS/{comp}"),
+                )
+            }
+        }
+        "fednl-pp" => {
+            let tau = args.get_usize("tau", (n_clients / 4).max(1))?;
+            let mut clients: Vec<PPClientState> = shards
+                .into_iter()
+                .enumerate()
+                .map(|(i, sh)| -> Result<PPClientState> {
+                    Ok(PPClientState::new(
+                        i,
+                        build_oracle(sh, lam, oracle_kind, artifacts, &mut rt)?,
+                        by_name(comp, d, k_mult, seed + i as u64)?,
+                        None,
+                        &x0,
+                    ))
+                })
+                .collect::<Result<_>>()?;
+            run_fednl_pp_transport(
+                &mut PPSlice(&mut clients),
+                &opts,
+                tau,
+                seed,
+                x0,
+                &format!("FedNL-PP/{comp}"),
+            )
+        }
+        other => bail!("unknown algo '{other}'"),
+    };
+
+    println!(
+        "{}: {} rounds, init {}, solve {}, ||grad|| = {:.3e}, up {}",
+        trace.label,
+        trace.records.len(),
+        human_secs(init),
+        human_secs(trace.total_elapsed()),
+        trace.last_grad_norm(),
+        fednl::utils::human_bytes(trace.total_bytes_up()),
+    );
+    if let Some(path) = args.get("trace") {
+        trace.write_csv(path)?;
+        println!("trace written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_master(args: &Args) -> Result<()> {
+    let listen = args.get_or("listen", "0.0.0.0:7700");
+    let n_clients = args.get_usize("clients", 2)?;
+    let algo = args.get_or("algo", "fednl");
+    let rounds = args.get_u64("rounds", 100)?;
+    let tol = args.get("tol").map(|t| t.parse::<f64>()).transpose()?;
+    let seed = args.get_u64("seed", 0x5EED)?;
+    println!("master: waiting for {n_clients} clients on {listen} ...");
+    let mut pool = RemotePool::listen(listen, n_clients)?;
+    let d = {
+        use fednl::coordinator::ClientPool;
+        pool.dim()
+    };
+    println!("master: all clients registered (d = {d})");
+    let opts = Options {
+        rounds,
+        tol_grad: tol,
+        track_loss: algo == "fednl-ls",
+        ..Default::default()
+    };
+    let x0 = vec![0.0; d];
+    let trace = match algo {
+        "fednl" => run_fednl_pool(&mut pool, &opts, x0, "FedNL/tcp"),
+        "fednl-ls" => run_fednl_ls_pool(
+            &mut pool,
+            &opts,
+            &LineSearchParams::default(),
+            x0,
+            "FedNL-LS/tcp",
+        ),
+        "fednl-pp" => {
+            let tau = args.get_usize("tau", (n_clients / 4).max(1))?;
+            run_fednl_pp_transport(&mut pool, &opts, tau, seed, x0, "FedNL-PP/tcp")
+        }
+        other => bail!("unknown algo '{other}'"),
+    };
+    pool.shutdown();
+    println!(
+        "done: {} rounds, ||grad|| = {:.3e}, wall {}",
+        trace.records.len(),
+        trace.last_grad_norm(),
+        human_secs(trace.total_elapsed())
+    );
+    if let Some(path) = args.get("trace") {
+        trace.write_csv(path)?;
+    }
+    Ok(())
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get("connect").context("--connect required")?;
+    let id = args.get_usize("id", 0)?;
+    let data = args.get("data").context("--data required")?;
+    let comp = args.get_or("compressor", "topk");
+    let k_mult = args.get_usize("k-mult", 8)?;
+    let lam = args.get_f64("lam", 1e-3)?;
+    let seed = args.get_u64("seed", 0x5EED)?;
+    let algo = args.get_or("algo", "fednl");
+    // Interleave dataset parsing with connection establishment (§7).
+    let (samples, d_raw) = parse_libsvm_file(data)?;
+    let ds = Dataset::from_libsvm(&samples, d_raw);
+    let d = ds.d;
+    let shard = fednl::data::ClientShard { client_id: id, at: ds.at };
+    let oracle = Box::new(LogisticOracle::new(shard, lam));
+    let compressor = by_name(comp, d, k_mult, seed + id as u64)?;
+    let mode = match algo {
+        "fednl-pp" => ClientMode::PP(PPClientState::new(
+            id,
+            oracle,
+            compressor,
+            None,
+            &vec![0.0; d],
+        )),
+        _ => ClientMode::FedNL(ClientState::new(id, oracle, compressor, None)),
+    };
+    let (sent, recv) = run_client(addr, id, mode)?;
+    println!("client {id}: sent {sent} B, received {recv} B");
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let data = args.get("data").context("--data required")?;
+    let lam = args.get_f64("lam", 1e-3)?;
+    let (samples, d_raw) = parse_libsvm_file(data)?;
+    let ds = Dataset::from_libsvm(&samples, d_raw);
+    let d = ds.d;
+    let shard = fednl::data::ClientShard { client_id: 0, at: ds.at };
+    let mut oracle = LogisticOracle::new(shard, lam);
+    let mut rng = fednl::rng::Pcg64::seed_from_u64(7);
+    use fednl::rng::Rng;
+    let x: Vec<f64> = (0..d).map(|_| rng.next_gaussian() * 0.2).collect();
+    let ge = numerics::check_grad(&mut oracle, &x);
+    let he = numerics::check_hessian(&mut oracle, &x);
+    println!("gradient FD error: {ge:.3e}\nhessian  FD error: {he:.3e}");
+    anyhow::ensure!(ge < 1e-5 && he < 1e-3, "oracle verification FAILED");
+    println!("oracle verification OK");
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let cfg = HarnessCfg {
+        scale: if args.flag("full") { Scale::Full } else { Scale::Ci },
+        out_dir: args.get_or("out-dir", "results").to_string(),
+        threads: args.get_usize("threads", 0)?,
+        pjrt: args.flag("pjrt"),
+        artifacts: args.get_or("artifacts", "artifacts").to_string(),
+        seed: args.get_u64("seed", 0x5EED)?,
+    };
+    cfg.ensure_out_dir()?;
+    let run = |name: &str| -> Result<String> {
+        let sw = Stopwatch::start();
+        let body = match name {
+            "table1" => harness::table1(&cfg)?,
+            "table2" => harness::table2(&cfg)?,
+            "table3" => harness::table3(&cfg)?,
+            "table5" => harness::table5(&cfg)?,
+            "costmodel" => harness::costmodel(),
+            f if f.starts_with("fig") => {
+                let n: usize = f[3..].parse().context("figN")?;
+                if n <= 3 {
+                    harness::fig_single_node(n, &cfg)?
+                } else if n <= 12 {
+                    harness::fig_multi_node(n, &cfg)?
+                } else {
+                    bail!("figures are fig1..fig12")
+                }
+            }
+            other => bail!("unknown experiment '{other}'"),
+        };
+        Ok(format!(
+            "{body}\n_(regenerated in {})_\n",
+            human_secs(sw.elapsed_secs())
+        ))
+    };
+    let all = [
+        "costmodel", "table1", "table2", "table3", "table5", "fig1", "fig2",
+        "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
+        "fig11", "fig12",
+    ];
+    let list: Vec<&str> =
+        if which == "all" { all.to_vec() } else { vec![which] };
+    let mut report = String::new();
+    for name in list {
+        eprintln!("[experiment] running {name} ...");
+        let body = run(name)?;
+        println!("{body}");
+        report.push_str(&body);
+        report.push('\n');
+    }
+    let path = format!("{}/report.md", cfg.out_dir);
+    std::fs::write(&path, &report)?;
+    eprintln!("[experiment] report written to {path}");
+    Ok(())
+}
+
+fn cmd_sysinfo() -> Result<()> {
+    let snap = ResourceSnapshot::capture();
+    println!(
+        "cores: {}\nopen fds: {}\nVmSize: {} K\nVmPeak: {} K\nVmRSS: {} K\nVmHWM: {} K\nthreads: {}",
+        fednl::utils::available_cores(),
+        snap.open_fds,
+        snap.vm_size_kib,
+        snap.vm_peak_kib,
+        snap.vm_rss_kib,
+        snap.vm_hwm_kib,
+        snap.threads
+    );
+    match PjrtRuntime::load("artifacts") {
+        Ok(rt) => {
+            println!("artifacts: {} shapes", rt.entries.len());
+            for e in &rt.entries {
+                println!(
+                    "  {} d={} n_i<={} (padded {}x{})",
+                    e.name, e.d_raw, e.n_raw, e.d_pad, e.n_pad
+                );
+            }
+        }
+        Err(_) => println!("artifacts: not built (run `make artifacts`)"),
+    }
+    Ok(())
+}

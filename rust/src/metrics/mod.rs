@@ -1,0 +1,11 @@
+//! Experiment metrics: per-round convergence traces (the series behind
+//! the paper's Figures 1–12), table/report writers, process-level
+//! resource introspection (Tables 5–7), and the §4 back-of-envelope cost
+//! model.
+
+pub mod costmodel;
+pub mod report;
+pub mod rusage;
+pub mod trace;
+
+pub use trace::{RoundRecord, Trace};

@@ -1,0 +1,76 @@
+//! Process-level resource introspection (paper Appendix F, Tables 5–7:
+//! peak kernel handles / private bytes / peak working set).
+//!
+//! The paper measures Windows kernel objects; the Linux analogues we
+//! report are open file descriptors (`/proc/self/fd`), virtual memory
+//! (`VmSize`/`VmPeak`) and resident set (`VmRSS`/`VmHWM`).
+
+/// A point-in-time resource snapshot.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ResourceSnapshot {
+    /// Open file descriptors (≈ kernel handles, Table 5).
+    pub open_fds: u64,
+    /// Current virtual memory (KiB) (≈ private bytes, Table 6).
+    pub vm_size_kib: u64,
+    /// Peak virtual memory (KiB).
+    pub vm_peak_kib: u64,
+    /// Current resident set (KiB) (≈ working set, Table 7).
+    pub vm_rss_kib: u64,
+    /// Peak resident set (KiB).
+    pub vm_hwm_kib: u64,
+    /// Kernel-visible threads.
+    pub threads: u64,
+}
+
+impl ResourceSnapshot {
+    /// Capture from /proc/self (Linux only; zeros elsewhere).
+    pub fn capture() -> Self {
+        let mut snap = Self::default();
+        if let Ok(dir) = std::fs::read_dir("/proc/self/fd") {
+            snap.open_fds = dir.count() as u64;
+        }
+        if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+            for line in status.lines() {
+                let mut parts = line.split_whitespace();
+                match parts.next() {
+                    Some("VmSize:") => snap.vm_size_kib = parse_kib(parts.next()),
+                    Some("VmPeak:") => snap.vm_peak_kib = parse_kib(parts.next()),
+                    Some("VmRSS:") => snap.vm_rss_kib = parse_kib(parts.next()),
+                    Some("VmHWM:") => snap.vm_hwm_kib = parse_kib(parts.next()),
+                    Some("Threads:") => snap.threads = parse_kib(parts.next()),
+                    _ => {}
+                }
+            }
+        }
+        snap
+    }
+}
+
+fn parse_kib(s: Option<&str>) -> u64 {
+    s.and_then(|v| v.parse().ok()).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_is_sane_on_linux() {
+        let s = ResourceSnapshot::capture();
+        // We are on Linux in CI; these should all be populated.
+        assert!(s.open_fds > 0);
+        assert!(s.vm_size_kib > 0);
+        assert!(s.vm_rss_kib > 0);
+        assert!(s.vm_peak_kib >= s.vm_size_kib);
+        assert!(s.threads >= 1);
+    }
+
+    #[test]
+    fn rss_grows_with_allocation() {
+        let before = ResourceSnapshot::capture();
+        let blob: Vec<u8> = vec![1u8; 64 << 20]; // 64 MiB touched
+        let after = ResourceSnapshot::capture();
+        assert!(after.vm_hwm_kib >= before.vm_hwm_kib);
+        drop(blob);
+    }
+}

@@ -1,0 +1,135 @@
+//! Convergence traces: one record per round, CSV-serializable.
+//!
+//! Every figure in the paper plots ‖∇f(xᵏ)‖ (or f(xᵏ) − f*) against one
+//! of {rounds, communicated bits, wall-clock seconds}; a [`Trace`]
+//! captures all three x-axes at once so a single run regenerates all
+//! panels of a figure.
+
+use std::io::Write;
+
+/// One optimization round's measurements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundRecord {
+    pub round: u64,
+    /// ‖∇f(xᵏ)‖₂ at the round's iterate.
+    pub grad_norm: f64,
+    /// f(xᵏ) if tracked (the paper tracks it optionally), else NaN.
+    pub loss: f64,
+    /// Cumulative bytes every client sent to the master.
+    pub bytes_up: u64,
+    /// Cumulative bytes the master sent to clients.
+    pub bytes_down: u64,
+    /// Wall-clock seconds since training start.
+    pub elapsed: f64,
+}
+
+/// A full training trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub records: Vec<RoundRecord>,
+    /// Name tag (algorithm/compressor) for report labels.
+    pub label: String,
+}
+
+impl Trace {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { records: Vec::new(), label: label.into() }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    pub fn last_grad_norm(&self) -> f64 {
+        self.records.last().map(|r| r.grad_norm).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_bytes_up(&self) -> u64 {
+        self.records.last().map(|r| r.bytes_up).unwrap_or(0)
+    }
+
+    pub fn total_elapsed(&self) -> f64 {
+        self.records.last().map(|r| r.elapsed).unwrap_or(0.0)
+    }
+
+    /// First round at which ‖∇f‖ ≤ tol, if reached.
+    pub fn rounds_to_tolerance(&self, tol: f64) -> Option<u64> {
+        self.records.iter().find(|r| r.grad_norm <= tol).map(|r| r.round)
+    }
+
+    /// Wall-clock seconds to reach tolerance, if reached.
+    pub fn time_to_tolerance(&self, tol: f64) -> Option<f64> {
+        self.records.iter().find(|r| r.grad_norm <= tol).map(|r| r.elapsed)
+    }
+
+    /// CSV with header; the figure-regeneration format.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("round,grad_norm,loss,bytes_up,bytes_down,elapsed_s\n");
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{:e},{:e},{},{},{:.6}\n",
+                r.round, r.grad_norm, r.loss, r.bytes_up, r.bytes_down, r.elapsed
+            ));
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: &str) -> anyhow::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: u64, g: f64, t: f64, up: u64) -> RoundRecord {
+        RoundRecord {
+            round,
+            grad_norm: g,
+            loss: 0.5,
+            bytes_up: up,
+            bytes_down: up / 2,
+            elapsed: t,
+        }
+    }
+
+    #[test]
+    fn tolerance_queries() {
+        let mut t = Trace::new("test");
+        t.push(rec(0, 1.0, 0.1, 100));
+        t.push(rec(1, 1e-3, 0.2, 200));
+        t.push(rec(2, 1e-9, 0.3, 300));
+        assert_eq!(t.rounds_to_tolerance(1e-2), Some(1));
+        assert_eq!(t.time_to_tolerance(1e-8), Some(0.3));
+        assert_eq!(t.rounds_to_tolerance(1e-20), None);
+        assert_eq!(t.last_grad_norm(), 1e-9);
+        assert_eq!(t.total_bytes_up(), 300);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut t = Trace::new("csv");
+        t.push(rec(0, 0.5, 0.01, 42));
+        let csv = t.to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("round,"));
+        assert!(lines[1].starts_with("0,"));
+        assert_eq!(lines[1].split(',').count(), 6);
+    }
+
+    #[test]
+    fn csv_file_roundtrip() {
+        let mut t = Trace::new("file");
+        t.push(rec(0, 1.0, 0.0, 1));
+        let path = std::env::temp_dir().join("fednl_trace_test.csv");
+        let path = path.to_str().unwrap().to_string();
+        t.write_csv(&path).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(content, t.to_csv());
+        std::fs::remove_file(&path).ok();
+    }
+}

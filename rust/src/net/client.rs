@@ -1,0 +1,148 @@
+//! Multi-node client: connects to the master, registers its shard id,
+//! then serves FedNL / FedNL-LS / FedNL-PP commands until shutdown.
+//!
+//! Connection establishment is interleaved with dataset loading by the
+//! caller (paper §7): the caller parses its shard while the TCP connect
+//! happens, then hands both to [`run_client`].
+
+use std::net::TcpStream;
+
+use anyhow::{Context, Result};
+
+use super::framing::Channel;
+use super::wire::{self, c2s, s2c};
+use crate::algorithms::{ClientState, PPClientState};
+
+/// Which algorithm family this client serves.
+pub enum ClientMode {
+    /// FedNL / FedNL-LS (Alg. 1/2 client loop).
+    FedNL(ClientState),
+    /// FedNL-PP (Alg. 3 client loop).
+    PP(PPClientState),
+}
+
+/// Connect to `addr`, register as `client_id`, serve until SHUTDOWN.
+/// Returns (bytes_sent, bytes_received).
+pub fn run_client(
+    addr: &str,
+    client_id: usize,
+    mut mode: ClientMode,
+) -> Result<(u64, u64)> {
+    let d = match &mode {
+        ClientMode::FedNL(c) => c.dim(),
+        ClientMode::PP(c) => c.dim(),
+    };
+    let stream = connect_with_retry(addr, 50)?;
+    let mut ch = Channel::new(stream)?;
+    ch.send(c2s::REGISTER, &wire::encode_register(client_id as u32, d as u32))?;
+
+    loop {
+        let (tag, payload) = ch.recv()?;
+        match tag {
+            s2c::ROUND => {
+                let (x, round, need_loss) = wire::decode_round(&payload)?;
+                let c = match &mut mode {
+                    ClientMode::FedNL(c) => c,
+                    _ => anyhow::bail!("ROUND sent to a PP client"),
+                };
+                let msg = c.round(&x, round, need_loss);
+                ch.send(c2s::MSG, &wire::encode_client_msg(&msg))?;
+            }
+            s2c::EVAL_LOSS => {
+                let x = wire::decode_vec(&payload)?;
+                let l = match &mut mode {
+                    ClientMode::FedNL(c) => c.eval_loss(&x),
+                    ClientMode::PP(c) => c.oracle.loss(&x),
+                };
+                ch.send(c2s::LOSS, &wire::encode_scalar(l))?;
+            }
+            s2c::WARM_START => {
+                let x = wire::decode_vec(&payload)?;
+                let packed = match &mut mode {
+                    ClientMode::FedNL(c) => c.warm_start(&x),
+                    _ => anyhow::bail!("WARM_START sent to a PP client"),
+                };
+                ch.send(c2s::WARM, &wire::encode_vec(&packed))?;
+            }
+            s2c::LOSS_GRAD => {
+                let x = wire::decode_vec(&payload)?;
+                let (l, g) = match &mut mode {
+                    ClientMode::FedNL(c) => c.eval_loss_grad(&x),
+                    ClientMode::PP(c) => {
+                        let mut g = vec![0.0; x.len()];
+                        let l = c.oracle.loss_grad(&x, &mut g);
+                        (l, g)
+                    }
+                };
+                ch.send(c2s::GRAD, &wire::encode_loss_grad(l, &g))?;
+            }
+            s2c::PP_ROUND => {
+                let (x, round, _) = wire::decode_round(&payload)?;
+                let c = match &mut mode {
+                    ClientMode::PP(c) => c,
+                    _ => anyhow::bail!("PP_ROUND sent to a FedNL client"),
+                };
+                let msg = c.participate(&x, round);
+                ch.send(
+                    c2s::PP_MSG,
+                    &wire::encode_pp_msg(
+                        msg.client_id as u32,
+                        &msg.update,
+                        msg.dl,
+                        &msg.dg,
+                    ),
+                )?;
+            }
+            s2c::PP_INIT => {
+                let c = match &mut mode {
+                    ClientMode::PP(c) => c,
+                    _ => anyhow::bail!("PP_INIT sent to a FedNL client"),
+                };
+                ch.send(
+                    c2s::PP_STATE,
+                    &wire::encode_loss_grad(c.l_i, &c.g_i),
+                )?;
+            }
+            s2c::SET_ALPHA => {
+                let a = wire::decode_scalar(&payload)?;
+                let effective = match &mut mode {
+                    ClientMode::FedNL(c) => {
+                        if a.is_finite() && a > 0.0 {
+                            c.alpha = a;
+                        }
+                        c.alpha
+                    }
+                    ClientMode::PP(c) => {
+                        if a.is_finite() && a > 0.0 {
+                            c.alpha = a;
+                        }
+                        c.alpha
+                    }
+                };
+                ch.send(c2s::ACK, &wire::encode_scalar(effective))?;
+            }
+            s2c::SHUTDOWN => break,
+            other => anyhow::bail!("unknown command tag {other}"),
+        }
+    }
+    Ok((ch.bytes_sent, ch.bytes_received))
+}
+
+/// The master may come up after the clients (Slurm-style co-scheduling):
+/// retry the connect with backoff.
+fn connect_with_retry(addr: &str, attempts: u32) -> Result<TcpStream> {
+    let mut delay = std::time::Duration::from_millis(20);
+    for i in 0..attempts {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(_) if i + 1 < attempts => {
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(std::time::Duration::from_secs(1));
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("connect {addr}"))
+            }
+        }
+    }
+    unreachable!()
+}

@@ -1,0 +1,20 @@
+//! Multi-node networking over raw TCP (paper §7, App. L.1, J.2).
+//!
+//! Design decisions carried over from the paper:
+//! * plain TCP/IP — no HTTP/gRPC layers ("any unnecessary abstractions
+//!   ... take resources and are not free");
+//! * **one** connection per client (the paper found a single channel
+//!   beats per-stream connections);
+//! * Nagle's algorithm disabled (`TCP_NODELAY`) because frames are
+//!   explicitly sized and often small;
+//! * fixed-width 32-bit indices on the wire (beat varints);
+//! * RandK/RandSeqK transmit a PRG seed / start index, and the master
+//!   reconstructs the coordinate set.
+
+pub mod client;
+pub mod framing;
+pub mod server;
+pub mod wire;
+
+pub use client::run_client;
+pub use server::RemotePool;

@@ -1,0 +1,266 @@
+//! Multi-node master: accepts n client connections and exposes them as a
+//! [`ClientPool`], so `run_fednl_pool` / `run_fednl_ls_pool` drive real
+//! distributed training unchanged (paper §9.3 setting: n clients + one
+//! master, star topology, one TCP connection per client).
+
+use std::net::TcpListener;
+
+use anyhow::{Context, Result};
+
+use super::framing::Channel;
+use super::wire::{self, c2s, s2c};
+use crate::algorithms::ClientMsg;
+use crate::coordinator::ClientPool;
+
+/// Master-side handle to n connected remote clients.
+pub struct RemotePool {
+    /// Channels indexed by registered client id.
+    channels: Vec<Channel>,
+    d: usize,
+    alpha: f64,
+}
+
+/// A bound-but-not-yet-populated master socket; lets callers learn the
+/// ephemeral port before spawning clients.
+pub struct Bound {
+    listener: TcpListener,
+}
+
+impl Bound {
+    pub fn bind(addr: &str) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        Ok(Self { listener })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept until exactly `n_clients` clients register.
+    pub fn accept(self, n_clients: usize) -> Result<RemotePool> {
+        RemotePool::accept_on(self.listener, n_clients)
+    }
+}
+
+impl RemotePool {
+    /// Listen on `addr` until exactly `n_clients` clients register.
+    /// Clients may connect in any order; they self-identify with their
+    /// id (dataset shard index).
+    pub fn listen(addr: &str, n_clients: usize) -> Result<Self> {
+        Bound::bind(addr)?.accept(n_clients)
+    }
+
+    fn accept_on(listener: TcpListener, n_clients: usize) -> Result<Self> {
+        let mut slots: Vec<Option<Channel>> =
+            (0..n_clients).map(|_| None).collect();
+        let mut d = 0usize;
+        let mut registered = 0;
+        while registered < n_clients {
+            let (stream, _) = listener.accept()?;
+            let mut ch = Channel::new(stream)?;
+            let (tag, payload) = ch.recv()?;
+            anyhow::ensure!(tag == c2s::REGISTER, "expected REGISTER");
+            let (id, dim) = wire::decode_register(&payload)?;
+            let id = id as usize;
+            anyhow::ensure!(id < n_clients, "client id {id} out of range");
+            anyhow::ensure!(slots[id].is_none(), "duplicate client id {id}");
+            if d == 0 {
+                d = dim as usize;
+            } else {
+                anyhow::ensure!(d == dim as usize, "dimension mismatch");
+            }
+            slots[id] = Some(ch);
+            registered += 1;
+        }
+        let channels = slots.into_iter().map(|s| s.unwrap()).collect();
+        Ok(Self { channels, d, alpha: 0.0 })
+    }
+
+    fn broadcast(&mut self, tag: u8, payload: &[u8]) -> Result<()> {
+        for ch in &mut self.channels {
+            ch.send(tag, payload)?;
+        }
+        Ok(())
+    }
+
+    /// Politely shut all clients down.
+    pub fn shutdown(&mut self) {
+        let _ = self.broadcast(s2c::SHUTDOWN, &[]);
+    }
+}
+
+impl crate::algorithms::fednl_pp::PPTransport for RemotePool {
+    fn n_clients(&self) -> usize {
+        self.channels.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn default_alpha(&self) -> f64 {
+        <Self as ClientPool>::default_alpha(self)
+    }
+
+    fn set_alpha(&mut self, a: f64) {
+        <Self as ClientPool>::set_alpha(self, a)
+    }
+
+    fn pp_init(&mut self) -> Vec<(f64, Vec<f64>)> {
+        self.broadcast(s2c::PP_INIT, &[]).expect("pp_init broadcast");
+        self.channels
+            .iter_mut()
+            .map(|ch| {
+                let (tag, p) = ch.recv().expect("pp_init reply");
+                assert_eq!(tag, c2s::PP_STATE);
+                wire::decode_loss_grad(&p).expect("pp state")
+            })
+            .collect()
+    }
+
+    fn pp_round(
+        &mut self,
+        x: &[f64],
+        round: u64,
+        selected: &[u32],
+    ) -> Vec<crate::algorithms::fednl_pp::PPMsg> {
+        let payload = wire::encode_round(x, round, false);
+        for &ci in selected {
+            self.channels[ci as usize]
+                .send(s2c::PP_ROUND, &payload)
+                .expect("pp send");
+        }
+        selected
+            .iter()
+            .map(|&ci| {
+                let (tag, p) =
+                    self.channels[ci as usize].recv().expect("pp reply");
+                assert_eq!(tag, c2s::PP_MSG);
+                let (id, update, dl, dg) =
+                    wire::decode_pp_msg(&p).expect("pp decode");
+                crate::algorithms::fednl_pp::PPMsg {
+                    client_id: id as usize,
+                    update,
+                    dl,
+                    dg,
+                }
+            })
+            .collect()
+    }
+
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        <Self as ClientPool>::loss_grad(self, x)
+    }
+
+    fn transport_bytes(&self) -> Option<(u64, u64)> {
+        <Self as ClientPool>::transport_bytes(self)
+    }
+}
+
+impl ClientPool for RemotePool {
+    fn n_clients(&self) -> usize {
+        self.channels.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn default_alpha(&self) -> f64 {
+        // The master does not know the remote compressor class until it
+        // asks; clients reply to SET_ALPHA(NaN) with their α via ACK
+        // payload — handled in `set_alpha`. Default conservative 1.0.
+        if self.alpha > 0.0 {
+            self.alpha
+        } else {
+            1.0
+        }
+    }
+
+    fn set_alpha(&mut self, alpha: f64) {
+        let payload = wire::encode_scalar(alpha);
+        for ch in &mut self.channels {
+            ch.send(s2c::SET_ALPHA, &payload).expect("set_alpha send");
+        }
+        let mut resolved = alpha;
+        for ch in &mut self.channels {
+            let (tag, p) = ch.recv().expect("set_alpha ack");
+            assert_eq!(tag, c2s::ACK);
+            if let Ok(a) = wire::decode_scalar(&p) {
+                resolved = a; // clients echo the α they actually use
+            }
+        }
+        self.alpha = resolved;
+    }
+
+    fn round(
+        &mut self,
+        x: &[f64],
+        round: u64,
+        need_loss: bool,
+    ) -> Vec<ClientMsg> {
+        let payload = wire::encode_round(x, round, need_loss);
+        self.broadcast(s2c::ROUND, &payload).expect("round broadcast");
+        // Collect replies; channel order == client id order, but clients
+        // compute concurrently because all sends complete first.
+        let mut msgs: Vec<ClientMsg> = self
+            .channels
+            .iter_mut()
+            .map(|ch| {
+                let (tag, p) = ch.recv().expect("round reply");
+                assert_eq!(tag, c2s::MSG);
+                wire::decode_client_msg(&p).expect("decode client msg")
+            })
+            .collect();
+        msgs.sort_by_key(|m| m.client_id);
+        msgs
+    }
+
+    fn eval_loss(&mut self, x: &[f64]) -> f64 {
+        let payload = wire::encode_vec(x);
+        self.broadcast(s2c::EVAL_LOSS, &payload).expect("eval broadcast");
+        let mut sum = 0.0;
+        for ch in &mut self.channels {
+            let (tag, p) = ch.recv().expect("eval reply");
+            assert_eq!(tag, c2s::LOSS);
+            sum += wire::decode_scalar(&p).expect("loss");
+        }
+        sum / self.channels.len() as f64
+    }
+
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        let payload = wire::encode_vec(x);
+        self.broadcast(s2c::LOSS_GRAD, &payload).expect("grad broadcast");
+        let inv_n = 1.0 / self.channels.len() as f64;
+        let mut loss = 0.0;
+        let mut g = vec![0.0; x.len()];
+        for ch in &mut self.channels {
+            let (tag, p) = ch.recv().expect("grad reply");
+            assert_eq!(tag, c2s::GRAD);
+            let (l, gi) = wire::decode_loss_grad(&p).expect("grad decode");
+            loss += l;
+            crate::linalg::vector::axpy(inv_n, &gi, &mut g);
+        }
+        (loss * inv_n, g)
+    }
+
+    fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {
+        let payload = wire::encode_vec(x);
+        self.broadcast(s2c::WARM_START, &payload).expect("warm broadcast");
+        self.channels
+            .iter_mut()
+            .map(|ch| {
+                let (tag, p) = ch.recv().expect("warm reply");
+                assert_eq!(tag, c2s::WARM);
+                wire::decode_vec(&p).expect("warm decode")
+            })
+            .collect()
+    }
+
+    fn transport_bytes(&self) -> Option<(u64, u64)> {
+        let up = self.channels.iter().map(|c| c.bytes_received).sum();
+        let down = self.channels.iter().map(|c| c.bytes_sent).sum();
+        Some((up, down))
+    }
+}

@@ -1,0 +1,330 @@
+//! Wire encoding of the FedNL protocol messages (fixed-width LE fields;
+//! paper §7 found fixed 32-bit index framing beats variable-width).
+
+use anyhow::Result;
+
+use crate::algorithms::ClientMsg;
+use crate::compressors::natural::{pack16, unpack16};
+use crate::compressors::{Compressed, IndexPayload, ValueEncoding};
+use crate::utils::{ByteReader, ByteWriter};
+
+/// Frame tags, master → client.
+pub mod s2c {
+    pub const ROUND: u8 = 1;
+    pub const EVAL_LOSS: u8 = 2;
+    pub const WARM_START: u8 = 3;
+    pub const PP_ROUND: u8 = 4;
+    pub const SET_ALPHA: u8 = 5;
+    pub const SHUTDOWN: u8 = 6;
+    /// First-order reduction (baselines): client replies GRAD.
+    pub const LOSS_GRAD: u8 = 7;
+    /// FedNL-PP state bootstrap: client replies PP_STATE with (lᵢ⁰, gᵢ⁰).
+    pub const PP_INIT: u8 = 8;
+}
+
+/// Frame tags, client → master.
+pub mod c2s {
+    pub const REGISTER: u8 = 10;
+    pub const MSG: u8 = 11;
+    pub const LOSS: u8 = 12;
+    pub const WARM: u8 = 13;
+    pub const PP_MSG: u8 = 14;
+    pub const ACK: u8 = 15;
+    /// (loss, gradient) reply to LOSS_GRAD.
+    pub const GRAD: u8 = 16;
+    /// (lᵢ⁰, gᵢ⁰) reply to PP_INIT (same codec as GRAD).
+    pub const PP_STATE: u8 = 17;
+}
+
+// --- payload codecs -------------------------------------------------------
+
+pub fn encode_round(x: &[f64], round: u64, need_loss: bool) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(x.len() * 8 + 16);
+    w.put_u64(round);
+    w.put_u8(need_loss as u8);
+    w.put_u32(x.len() as u32);
+    w.put_f64_slice(x);
+    w.into_vec()
+}
+
+pub fn decode_round(p: &[u8]) -> Result<(Vec<f64>, u64, bool)> {
+    let mut r = ByteReader::new(p);
+    let round = r.get_u64()?;
+    let need_loss = r.get_u8()? != 0;
+    let n = r.get_u32()? as usize;
+    Ok((r.get_f64_vec(n)?, round, need_loss))
+}
+
+pub fn encode_vec(x: &[f64]) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(x.len() * 8 + 4);
+    w.put_u32(x.len() as u32);
+    w.put_f64_slice(x);
+    w.into_vec()
+}
+
+pub fn decode_vec(p: &[u8]) -> Result<Vec<f64>> {
+    let mut r = ByteReader::new(p);
+    let n = r.get_u32()? as usize;
+    r.get_f64_vec(n)
+}
+
+pub fn encode_scalar(v: f64) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(8);
+    w.put_f64(v);
+    w.into_vec()
+}
+
+pub fn decode_scalar(p: &[u8]) -> Result<f64> {
+    ByteReader::new(p).get_f64()
+}
+
+pub fn encode_register(client_id: u32, d: u32) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(8);
+    w.put_u32(client_id);
+    w.put_u32(d);
+    w.into_vec()
+}
+
+pub fn decode_register(p: &[u8]) -> Result<(u32, u32)> {
+    let mut r = ByteReader::new(p);
+    Ok((r.get_u32()?, r.get_u32()?))
+}
+
+fn put_compressed(w: &mut ByteWriter, c: &Compressed) {
+    w.put_u32(c.n);
+    match &c.payload {
+        IndexPayload::Explicit(ix) => {
+            w.put_u8(0);
+            w.put_u32(ix.len() as u32);
+            w.put_u32_slice(ix);
+        }
+        IndexPayload::Seed { seed, k } => {
+            w.put_u8(1);
+            w.put_u64(*seed);
+            w.put_u32(*k);
+        }
+        IndexPayload::SeqStart { start, k } => {
+            w.put_u8(2);
+            w.put_u32(*start);
+            w.put_u32(*k);
+        }
+        IndexPayload::Dense => w.put_u8(3),
+    }
+    w.put_f64(c.scale);
+    w.put_u32(c.values.len() as u32);
+    match c.encoding {
+        ValueEncoding::F64 => {
+            w.put_u8(0);
+            w.put_f64_slice(&c.values);
+        }
+        ValueEncoding::Pow2x16 => {
+            // The paper's bit-granularity Natural payload: 16 bits per
+            // coordinate (sign + exponent of a pure power of two).
+            w.put_u8(1);
+            for &v in &c.values {
+                let p = pack16(v);
+                w.put_u8(p as u8);
+                w.put_u8((p >> 8) as u8);
+            }
+        }
+    }
+}
+
+fn get_compressed(r: &mut ByteReader) -> Result<Compressed> {
+    let n = r.get_u32()?;
+    let payload = match r.get_u8()? {
+        0 => {
+            let k = r.get_u32()? as usize;
+            IndexPayload::Explicit(r.get_u32_vec(k)?)
+        }
+        1 => IndexPayload::Seed { seed: r.get_u64()?, k: r.get_u32()? },
+        2 => IndexPayload::SeqStart { start: r.get_u32()?, k: r.get_u32()? },
+        3 => IndexPayload::Dense,
+        t => anyhow::bail!("bad payload tag {t}"),
+    };
+    let scale = r.get_f64()?;
+    let nv = r.get_u32()? as usize;
+    let (values, encoding) = match r.get_u8()? {
+        0 => (r.get_f64_vec(nv)?, ValueEncoding::F64),
+        1 => {
+            let mut vs = Vec::with_capacity(nv);
+            for _ in 0..nv {
+                let lo = r.get_u8()? as u16;
+                let hi = r.get_u8()? as u16;
+                vs.push(unpack16(lo | (hi << 8)));
+            }
+            (vs, ValueEncoding::Pow2x16)
+        }
+        t => anyhow::bail!("bad value encoding {t}"),
+    };
+    Ok(Compressed { payload, values, scale, encoding, n })
+}
+
+pub fn encode_client_msg(m: &ClientMsg) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(m.grad.len() * 8 + 64);
+    w.put_u32(m.client_id as u32);
+    w.put_u32(m.grad.len() as u32);
+    w.put_f64_slice(&m.grad);
+    w.put_f64(m.l_i);
+    match m.loss {
+        Some(l) => {
+            w.put_u8(1);
+            w.put_f64(l);
+        }
+        None => w.put_u8(0),
+    }
+    put_compressed(&mut w, &m.update);
+    w.into_vec()
+}
+
+pub fn decode_client_msg(p: &[u8]) -> Result<ClientMsg> {
+    let mut r = ByteReader::new(p);
+    let client_id = r.get_u32()? as usize;
+    let d = r.get_u32()? as usize;
+    let grad = r.get_f64_vec(d)?;
+    let l_i = r.get_f64()?;
+    let loss = if r.get_u8()? != 0 { Some(r.get_f64()?) } else { None };
+    let update = get_compressed(&mut r)?;
+    Ok(ClientMsg { client_id, grad, update, l_i, loss })
+}
+
+pub fn encode_loss_grad(loss: f64, g: &[f64]) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(g.len() * 8 + 12);
+    w.put_f64(loss);
+    w.put_u32(g.len() as u32);
+    w.put_f64_slice(g);
+    w.into_vec()
+}
+
+pub fn decode_loss_grad(p: &[u8]) -> Result<(f64, Vec<f64>)> {
+    let mut r = ByteReader::new(p);
+    let loss = r.get_f64()?;
+    let n = r.get_u32()? as usize;
+    Ok((loss, r.get_f64_vec(n)?))
+}
+
+/// FedNL-PP participant message.
+pub fn encode_pp_msg(
+    client_id: u32,
+    update: &Compressed,
+    dl: f64,
+    dg: &[f64],
+) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(dg.len() * 8 + 64);
+    w.put_u32(client_id);
+    w.put_f64(dl);
+    w.put_u32(dg.len() as u32);
+    w.put_f64_slice(dg);
+    put_compressed(&mut w, update);
+    w.into_vec()
+}
+
+pub fn decode_pp_msg(p: &[u8]) -> Result<(u32, Compressed, f64, Vec<f64>)> {
+    let mut r = ByteReader::new(p);
+    let id = r.get_u32()?;
+    let dl = r.get_f64()?;
+    let d = r.get_u32()? as usize;
+    let dg = r.get_f64_vec(d)?;
+    let update = get_compressed(&mut r)?;
+    Ok((id, update, dl, dg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_roundtrip() {
+        let x = vec![1.0, -2.5, 3.25];
+        let enc = encode_round(&x, 42, true);
+        let (x2, round, need_loss) = decode_round(&enc).unwrap();
+        assert_eq!(x2, x);
+        assert_eq!(round, 42);
+        assert!(need_loss);
+    }
+
+    #[test]
+    fn client_msg_roundtrip_all_payloads() {
+        let payloads = vec![
+            IndexPayload::Explicit(vec![0, 5, 9]),
+            IndexPayload::Seed { seed: 0xDEAD, k: 3 },
+            IndexPayload::SeqStart { start: 7, k: 3 },
+            IndexPayload::Dense,
+        ];
+        for p in payloads {
+            let values = match &p {
+                IndexPayload::Dense => vec![1.0; 10],
+                _ => vec![1.5, -2.0, 0.0],
+            };
+            let m = ClientMsg {
+                client_id: 3,
+                grad: vec![0.5; 4],
+                update: Compressed {
+                    payload: p.clone(),
+                    values,
+                    scale: 1.0,
+                    encoding: ValueEncoding::F64,
+                    n: 10,
+                },
+                l_i: 2.25,
+                loss: Some(-0.75),
+            };
+            let dec = decode_client_msg(&encode_client_msg(&m)).unwrap();
+            assert_eq!(dec.client_id, 3);
+            assert_eq!(dec.grad, m.grad);
+            assert_eq!(dec.l_i, m.l_i);
+            assert_eq!(dec.loss, m.loss);
+            assert_eq!(dec.update.payload, m.update.payload);
+            assert_eq!(dec.update.values, m.update.values);
+            // Critical: reconstructed indices identical on both sides.
+            assert_eq!(dec.update.indices(), m.update.indices());
+        }
+    }
+
+    #[test]
+    fn pp_roundtrip() {
+        let c = Compressed {
+            payload: IndexPayload::Explicit(vec![1, 2]),
+            values: vec![0.5, -0.5],
+            scale: 1.0,
+            encoding: ValueEncoding::F64,
+            n: 6,
+        };
+        let enc = encode_pp_msg(9, &c, -0.125, &[1.0, 2.0]);
+        let (id, c2, dl, dg) = decode_pp_msg(&enc).unwrap();
+        assert_eq!(id, 9);
+        assert_eq!(dl, -0.125);
+        assert_eq!(dg, vec![1.0, 2.0]);
+        assert_eq!(c2.values, c.values);
+    }
+
+    #[test]
+    fn pow2x16_wire_roundtrip_bitexact() {
+        // Natural's 16-bit payload must reconstruct the exact powers of
+        // two (and the scale travels separately).
+        let values = vec![2.0, -0.5, 1024.0, 0.0, 2.0f64.powi(-300)];
+        let m = ClientMsg {
+            client_id: 1,
+            grad: vec![0.0; 3],
+            update: Compressed {
+                payload: IndexPayload::Dense,
+                values: values.clone(),
+                scale: 8.0 / 9.0,
+                encoding: ValueEncoding::Pow2x16,
+                n: 5,
+            },
+            l_i: 0.0,
+            loss: None,
+        };
+        let dec = decode_client_msg(&encode_client_msg(&m)).unwrap();
+        assert_eq!(dec.update.values, values);
+        assert_eq!(dec.update.scale, 8.0 / 9.0);
+        assert_eq!(dec.update.encoding, ValueEncoding::Pow2x16);
+    }
+
+    #[test]
+    fn corrupt_rejected() {
+        assert!(decode_client_msg(&[1, 2, 3]).is_err());
+        assert!(decode_round(&[]).is_err());
+    }
+}

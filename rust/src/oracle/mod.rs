@@ -1,0 +1,108 @@
+//! Local objective oracles (paper component `optimization_problems` +
+//! `numerics`).
+//!
+//! A FedNL client owns an [`Oracle`] for its local fᵢ and evaluates
+//! (fᵢ, ∇fᵢ, ∇²fᵢ) each round. The logistic oracle implements the
+//! paper's fused evaluation (§5.7): classification margins and sigmoid
+//! values are computed once per point and shared by all three outputs.
+//! `numerics` provides the finite-difference verification tools the
+//! paper ships for user-defined oracles (Appendix L.4 item 8).
+
+pub mod logistic;
+pub mod numerics;
+pub mod quadratic;
+
+pub use logistic::LogisticOracle;
+pub use quadratic::QuadraticOracle;
+
+use crate::linalg::Mat;
+
+/// A twice-differentiable local objective fᵢ: ℝᵈ → ℝ.
+///
+/// Methods take `&mut self` so implementations can reuse internal
+/// buffers (margins, sigmoids) across calls — the round loop performs
+/// zero allocations (§5.13).
+pub trait Oracle: Send {
+    /// Problem dimension d.
+    fn dim(&self) -> usize;
+
+    /// f(x).
+    fn loss(&mut self, x: &[f64]) -> f64;
+
+    /// ∇f(x) into `g`; returns f(x) (margins shared — §5.7).
+    fn loss_grad(&mut self, x: &[f64], g: &mut [f64]) -> f64;
+
+    /// f, ∇f and ∇²f in one fused pass.
+    fn loss_grad_hessian(
+        &mut self,
+        x: &[f64],
+        g: &mut [f64],
+        h: &mut Mat,
+    ) -> f64;
+
+    /// ∇f(x) only (default: discard the fused loss).
+    fn grad(&mut self, x: &[f64], g: &mut [f64]) {
+        let _ = self.loss_grad(x, g);
+    }
+
+    /// ∇²f(x) only (default: discard loss/grad).
+    fn hessian(&mut self, x: &[f64], h: &mut Mat) {
+        let mut g = vec![0.0; self.dim()];
+        let _ = self.loss_grad_hessian(x, &mut g, h);
+    }
+}
+
+/// Numerically stable softplus: log(1 + eˣ).
+#[inline]
+pub fn softplus(x: f64) -> f64 {
+    if x > 36.0 {
+        // exp(-x) < 2e-16: log1p(exp(x)) = x to double precision.
+        x
+    } else if x < -36.0 {
+        0.0
+    } else {
+        x.max(0.0) + (-(x.abs())).exp().ln_1p()
+    }
+}
+
+/// Numerically stable sigmoid σ(x) = 1/(1+e⁻ˣ).
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        let e = (-x).exp();
+        1.0 / (1.0 + e)
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softplus_stable_extremes() {
+        assert_eq!(softplus(1000.0), 1000.0);
+        assert_eq!(softplus(-1000.0), 0.0);
+        assert!((softplus(0.0) - std::f64::consts::LN_2).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sigmoid_symmetry() {
+        for x in [-30.0, -2.0, 0.0, 0.7, 50.0] {
+            let s = sigmoid(x);
+            assert!((s + sigmoid(-x) - 1.0).abs() < 1e-15);
+            assert!((0.0..=1.0).contains(&s));
+        }
+    }
+
+    #[test]
+    fn softplus_derivative_is_sigmoid() {
+        let eps = 1e-6;
+        for x in [-3.0, -0.5, 0.0, 1.5, 4.0] {
+            let num = (softplus(x + eps) - softplus(x - eps)) / (2.0 * eps);
+            assert!((num - sigmoid(x)).abs() < 1e-9);
+        }
+    }
+}

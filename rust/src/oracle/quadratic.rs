@@ -1,0 +1,94 @@
+//! Symmetric quadratic objective f(x) = ½ xᵀQx − bᵀx (paper ships
+//! "logistic regression and Symmetric Quadratic Objectives" out of the
+//! box, Appendix L.5). Closed-form optimum x* = Q⁻¹b makes it the ideal
+//! convergence test fixture: FedNL must reach x* superlinearly, and for
+//! the Identity compressor the very first Newton step is exact.
+
+use super::Oracle;
+use crate::linalg::{vector, Mat};
+
+/// ½ xᵀQx − bᵀx with SPD Q.
+#[derive(Debug, Clone)]
+pub struct QuadraticOracle {
+    q: Mat,
+    b: Vec<f64>,
+}
+
+impl QuadraticOracle {
+    pub fn new(q: Mat, b: Vec<f64>) -> Self {
+        assert_eq!(q.rows(), q.cols());
+        assert_eq!(q.rows(), b.len());
+        Self { q, b }
+    }
+
+    /// The exact minimizer Q⁻¹ b (via Cholesky).
+    pub fn solution(&self) -> Option<Vec<f64>> {
+        crate::linalg::cholesky::solve_spd(&self.q, 0.0, &self.b)
+    }
+}
+
+impl Oracle for QuadraticOracle {
+    fn dim(&self) -> usize {
+        self.b.len()
+    }
+
+    fn loss(&mut self, x: &[f64]) -> f64 {
+        let mut qx = vec![0.0; x.len()];
+        self.q.matvec(x, &mut qx);
+        0.5 * vector::dot(x, &qx) - vector::dot(&self.b, x)
+    }
+
+    fn loss_grad(&mut self, x: &[f64], g: &mut [f64]) -> f64 {
+        self.q.matvec(x, g); // g = Qx
+        let half_quad = 0.5 * vector::dot(x, g);
+        let lin = vector::dot(&self.b, x);
+        vector::axpy(-1.0, &self.b, g); // g = Qx − b
+        half_quad - lin
+    }
+
+    fn loss_grad_hessian(
+        &mut self,
+        x: &[f64],
+        g: &mut [f64],
+        h: &mut Mat,
+    ) -> f64 {
+        let l = self.loss_grad(x, g);
+        h.as_mut_slice().copy_from_slice(self.q.as_slice());
+        l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::numerics::{check_grad, check_hessian};
+
+    fn fixture() -> QuadraticOracle {
+        let q = Mat::from_rows(&[&[4.0, 1.0], &[1.0, 3.0]]);
+        QuadraticOracle::new(q, vec![1.0, 2.0])
+    }
+
+    #[test]
+    fn gradient_zero_at_solution() {
+        let mut o = fixture();
+        let x = o.solution().unwrap();
+        let mut g = vec![0.0; 2];
+        o.grad(&x, &mut g);
+        assert!(vector::norm2(&g) < 1e-12);
+    }
+
+    #[test]
+    fn fd_checks() {
+        let mut o = fixture();
+        assert!(check_grad(&mut o, &[0.3, -0.7]) < 1e-7);
+        assert!(check_hessian(&mut o, &[0.3, -0.7]) < 1e-5);
+    }
+
+    #[test]
+    fn loss_value_known() {
+        let mut o = fixture();
+        // f(0) = 0; f(e1) = 2 − 1 = 1.
+        assert_eq!(o.loss(&[0.0, 0.0]), 0.0);
+        assert_eq!(o.loss(&[1.0, 0.0]), 1.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Self-contained pseudo-random generation (paper component `random`).
+//!
+//! Deterministic, seedable PRNGs are *functionally* required by the
+//! paper's wire protocol: for RandK/RandSeqK the master reconstructs the
+//! sparsification indices from the client's PRG seed instead of
+//! receiving them (§7, §9 "we leveraged our implementation's ability to
+//! reconstruct indices"). Both sides therefore need a bit-identical
+//! generator — hence an in-repo PCG64, not an external crate.
+
+pub mod pcg;
+
+pub use pcg::Pcg64;
+
+/// Minimal RNG interface used across the crate.
+pub trait Rng {
+    /// Next 64 uniformly random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform f64 in [0, 1) with 53-bit resolution.
+    fn next_f64(&mut self) -> f64 {
+        // Take the top 53 bits — the standard bit-to-double construction.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, bound) via Lemire's multiply-shift with
+    /// rejection (unbiased).
+    fn next_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "next_below(0)");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= (u64::MAX - bound + 1) % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Bernoulli(p) draw.
+    fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via Box–Muller (used by the synthetic generator).
+    fn next_gaussian(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+}
+
+/// In-place Fisher–Yates shuffle (paper v12: "shuffle the array in place
+/// instead of shuffling a separate array").
+pub fn shuffle<T, R: Rng>(rng: &mut R, xs: &mut [T]) {
+    let n = xs.len();
+    for i in (1..n).rev() {
+        let j = rng.next_below(i as u64 + 1) as usize;
+        xs.swap(i, j);
+    }
+}
+
+/// Sample `k` distinct indices from `[0, n)` u.a.r. via a partial
+/// Fisher–Yates with early stopping (paper `random`: "shuffling with
+/// early stopping"). O(n) memory, O(k) swaps; the returned indices are
+/// in shuffle order (unsorted).
+pub fn sample_distinct<R: Rng>(rng: &mut R, n: usize, k: usize) -> Vec<u32> {
+    assert!(k <= n, "sample_distinct: k={k} > n={n}");
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    for i in 0..k {
+        let j = i + rng.next_below((n - i) as u64) as usize;
+        idx.swap(i, j);
+    }
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::seed_from_u64(1);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut r = Pcg64::seed_from_u64(2);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = r.next_below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seed_from_u64(3);
+        let mut xs: Vec<u32> = (0..100).collect();
+        shuffle(&mut r, &mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_distinct_properties() {
+        let mut r = Pcg64::seed_from_u64(4);
+        let s = sample_distinct(&mut r, 50, 20);
+        assert_eq!(s.len(), 20);
+        let mut dedup = s.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 20);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn sample_distinct_full() {
+        let mut r = Pcg64::seed_from_u64(5);
+        let mut s = sample_distinct(&mut r, 10, 10);
+        s.sort_unstable();
+        assert_eq!(s, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = Pcg64::seed_from_u64(6);
+        let hits = (0..100_000).filter(|_| r.bernoulli(0.3)).count();
+        let rate = hits as f64 / 100_000.0;
+        assert!((rate - 0.3).abs() < 0.01, "rate={rate}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg64::seed_from_u64(7);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt` produced
+//! by `python/compile/aot.py`) and run the Layer-2 JAX oracle from the
+//! Rust hot path.
+//!
+//! Python never runs at request time: `make artifacts` lowers the jitted
+//! oracle to HLO **text** once; here `HloModuleProto::from_text_file` →
+//! `PjRtClient::compile` produces a native executable per dataset shape.
+//! A client's design matrix is uploaded once as a device-resident buffer
+//! and reused every round; only the d-vector x travels per call.
+
+pub mod pjrt;
+
+pub use pjrt::{PjrtOracle, PjrtRuntime, ShapeEntry};

@@ -1,0 +1,197 @@
+//! PJRT artifact registry and the PJRT-backed logistic oracle.
+
+use anyhow::{Context, Result};
+
+use crate::data::ClientShard;
+use crate::linalg::Mat;
+use crate::oracle::Oracle;
+
+/// One AOT-compiled shape from `artifacts/manifest.tsv`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShapeEntry {
+    pub name: String,
+    /// Problem dimension d (including intercept) the shape was built for.
+    pub d_raw: usize,
+    /// Max per-client samples the shape accommodates.
+    pub n_raw: usize,
+    pub d_pad: usize,
+    pub n_pad: usize,
+    pub oracle_file: String,
+    pub grad_file: String,
+}
+
+/// PJRT CPU client + artifact manifest.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: String,
+    pub entries: Vec<ShapeEntry>,
+}
+
+impl PjrtRuntime {
+    /// Load the manifest from an artifact directory.
+    pub fn load(dir: &str) -> Result<Self> {
+        let manifest = std::fs::read_to_string(format!("{dir}/manifest.tsv"))
+            .with_context(|| format!("reading {dir}/manifest.tsv — run `make artifacts`"))?;
+        let mut entries = Vec::new();
+        for line in manifest.lines() {
+            let f: Vec<&str> = line.split('\t').collect();
+            anyhow::ensure!(f.len() == 7, "malformed manifest line: {line}");
+            entries.push(ShapeEntry {
+                name: f[0].to_string(),
+                d_raw: f[1].parse()?,
+                n_raw: f[2].parse()?,
+                d_pad: f[3].parse()?,
+                n_pad: f[4].parse()?,
+                oracle_file: f[5].to_string(),
+                grad_file: f[6].to_string(),
+            });
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, dir: dir.to_string(), entries })
+    }
+
+    /// Smallest artifact shape that fits a (d, n_i) client problem.
+    pub fn find_shape(&self, d: usize, n_i: usize) -> Option<&ShapeEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.d_pad >= d && e.n_pad >= n_i)
+            .min_by_key(|e| (e.d_pad, e.n_pad))
+    }
+
+    fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = format!("{}/{}", self.dir, file);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Build a PJRT-backed oracle for one client shard.
+    pub fn oracle_for_shard(
+        &self,
+        shard: &ClientShard,
+        lam: f64,
+    ) -> Result<PjrtOracle> {
+        let d = shard.d();
+        let n_i = shard.n_i();
+        let entry = self
+            .find_shape(d, n_i)
+            .with_context(|| format!("no artifact fits (d={d}, n_i={n_i})"))?
+            .clone();
+        let exe = self.compile(&entry.oracle_file)?;
+        // Pad A into (d_pad, n_pad), column j = sample j (zeros beyond).
+        let (dp, np) = (entry.d_pad, entry.n_pad);
+        let mut a = vec![0.0f64; dp * np];
+        for s in 0..n_i {
+            let row = shard.at.row(s);
+            for r in 0..d {
+                a[r * np + s] = row[r];
+            }
+        }
+        // w: 1/n_i for real columns, 0 padding.
+        let mut w = vec![0.0f64; np];
+        for ws in w.iter_mut().take(n_i) {
+            *ws = 1.0 / n_i as f64;
+        }
+        let a_lit =
+            xla::Literal::vec1(&a).reshape(&[dp as i64, np as i64])?;
+        let w_lit = xla::Literal::vec1(&w).reshape(&[np as i64])?;
+        let lam_lit = xla::Literal::scalar(lam);
+        // Perf note (EXPERIMENTS.md §Perf RT-1, tried & reverted):
+        // keeping A/w/λ device-resident via `buffer_from_host_literal` +
+        // `execute_b` would avoid re-staging ~1 MB per call, but this
+        // xla_extension build cannot read tuple outputs from the buffer
+        // path (`to_literal_sync` aborts on tuple-shaped buffers), and
+        // the staging cost (~0.1 ms) is ≪ the 28 ms kernel anyway.
+        Ok(PjrtOracle { exe, a_lit, w_lit, lam_lit, d, d_pad: dp })
+    }
+}
+
+/// Logistic oracle evaluated through the AOT-compiled JAX/Pallas model.
+///
+/// Semantics are identical to [`crate::oracle::LogisticOracle`]
+/// (cross-checked by integration tests); the compute runs in the XLA
+/// executable compiled from the Pallas kernels.
+pub struct PjrtOracle {
+    exe: xla::PjRtLoadedExecutable,
+    a_lit: xla::Literal,
+    w_lit: xla::Literal,
+    lam_lit: xla::Literal,
+    d: usize,
+    d_pad: usize,
+}
+
+// SAFETY: the PJRT CPU client is thread-safe for compilation and
+// execution; the oracle is only ever used by one worker at a time
+// (Oracle methods take &mut self).
+unsafe impl Send for PjrtOracle {}
+
+impl PjrtOracle {
+    fn run(&self, x: &[f64]) -> (f64, Vec<f64>, Option<Mat>) {
+        let mut xp = vec![0.0f64; self.d_pad];
+        xp[..self.d].copy_from_slice(x);
+        let x_lit = xla::Literal::vec1(&xp)
+            .reshape(&[self.d_pad as i64])
+            .expect("reshape x");
+        let res = self
+            .exe
+            .execute::<xla::Literal>(&[
+                self.a_lit.clone(),
+                x_lit,
+                self.w_lit.clone(),
+                self.lam_lit.clone(),
+            ])
+            .expect("pjrt execute");
+        // `execute` returns one tuple buffer; `execute_b` may untuple
+        // into three buffers — handle both layouts.
+        let (loss_l, grad_l, hess_l) = if res[0].len() == 3 {
+            (
+                res[0][0].to_literal_sync().expect("loss buf"),
+                res[0][1].to_literal_sync().expect("grad buf"),
+                res[0][2].to_literal_sync().expect("hess buf"),
+            )
+        } else {
+            let out = res[0][0].to_literal_sync().expect("to_literal");
+            out.to_tuple3().expect("oracle returns (loss, grad, hess)")
+        };
+        let loss = loss_l.to_vec::<f64>().expect("loss")[0];
+        let grad_full = grad_l.to_vec::<f64>().expect("grad");
+        let grad = grad_full[..self.d].to_vec();
+        let hess_full = hess_l.to_vec::<f64>().expect("hess");
+        let mut h = Mat::zeros(self.d, self.d);
+        for r in 0..self.d {
+            for c in 0..self.d {
+                h.set(r, c, hess_full[r * self.d_pad + c]);
+            }
+        }
+        (loss, grad, Some(h))
+    }
+}
+
+impl Oracle for PjrtOracle {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn loss(&mut self, x: &[f64]) -> f64 {
+        self.run(x).0
+    }
+
+    fn loss_grad(&mut self, x: &[f64], g: &mut [f64]) -> f64 {
+        let (l, grad, _) = self.run(x);
+        g.copy_from_slice(&grad);
+        l
+    }
+
+    fn loss_grad_hessian(
+        &mut self,
+        x: &[f64],
+        g: &mut [f64],
+        h: &mut Mat,
+    ) -> f64 {
+        let (l, grad, hess) = self.run(x);
+        g.copy_from_slice(&grad);
+        let hess = hess.unwrap();
+        h.as_mut_slice().copy_from_slice(hess.as_slice());
+        l
+    }
+}

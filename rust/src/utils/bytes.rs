@@ -1,0 +1,195 @@
+//! Explicit little-endian byte buffers (paper component `copylocal` +
+//! the client→master "byte buffers" of §5.13/v36).
+//!
+//! The wire format (net::wire) and the compressed-update serialization
+//! are built on these. Fixed-width 32-bit indices are used throughout —
+//! the paper found fixed-width transfers beat varint encodings (§7).
+
+/// Growable write buffer with explicit little-endian primitives.
+#[derive(Debug, Default, Clone)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Bulk-write a f64 slice (hot path: gradient / Hessian payloads).
+    pub fn put_f64_slice(&mut self, vs: &[f64]) {
+        self.buf.reserve(vs.len() * 8);
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Bulk-write u32 indices (compressor index streams).
+    pub fn put_u32_slice(&mut self, vs: &[u32]) {
+        self.buf.reserve(vs.len() * 4);
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn put_bytes(&mut self, vs: &[u8]) {
+        self.buf.extend_from_slice(vs);
+    }
+}
+
+/// Zero-copy reader over a byte slice; all reads are checked.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        if self.remaining() < n {
+            anyhow::bail!(
+                "byte reader underrun: need {n}, have {}",
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64_vec(&mut self, n: usize) -> anyhow::Result<Vec<f64>> {
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn get_u32_vec(&mut self, n: usize) -> anyhow::Result<Vec<u32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn get_bytes(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        self.take(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u32(0xDEADBEEF);
+        w.put_u64(u64::MAX - 3);
+        w.put_f64(-1.5e300);
+        let mut r = ByteReader::new(w.as_slice());
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.get_f64().unwrap(), -1.5e300);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn roundtrip_slices() {
+        let mut w = ByteWriter::new();
+        let fs = [1.0, -2.0, f64::MIN_POSITIVE, 0.0];
+        let us = [0u32, 42, u32::MAX];
+        w.put_f64_slice(&fs);
+        w.put_u32_slice(&us);
+        let mut r = ByteReader::new(w.as_slice());
+        assert_eq!(r.get_f64_vec(4).unwrap(), fs);
+        assert_eq!(r.get_u32_vec(3).unwrap(), us);
+    }
+
+    #[test]
+    fn underrun_is_error() {
+        let w = ByteWriter::new();
+        let mut r = ByteReader::new(w.as_slice());
+        assert!(r.get_u32().is_err());
+    }
+
+    #[test]
+    fn nan_roundtrip_bitexact() {
+        let mut w = ByteWriter::new();
+        let weird = f64::from_bits(0x7ff8_0000_dead_beef);
+        w.put_f64(weird);
+        let mut r = ByteReader::new(w.as_slice());
+        assert_eq!(r.get_f64().unwrap().to_bits(), weird.to_bits());
+    }
+}

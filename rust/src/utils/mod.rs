@@ -1,0 +1,70 @@
+//! Small self-contained system utilities (paper components `timers`,
+//! `copylocal`, `fs`): wall-clock timers, byte buffers with explicit
+//! little-endian layout, and human-readable formatting.
+
+pub mod bytes;
+pub mod digest;
+pub mod timer;
+
+pub use bytes::{ByteReader, ByteWriter};
+pub use timer::{Stopwatch, TimerStats};
+
+/// Format a byte count like the paper's tables ("2 937.0 MBytes").
+pub fn human_bytes(b: u64) -> String {
+    const KB: f64 = 1024.0;
+    let b = b as f64;
+    if b >= KB * KB * KB {
+        format!("{:.2} GB", b / (KB * KB * KB))
+    } else if b >= KB * KB {
+        format!("{:.2} MB", b / (KB * KB))
+    } else if b >= KB {
+        format!("{:.2} KB", b / KB)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Format seconds with adaptive precision.
+pub fn human_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.1} s")
+    } else if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} µs", s * 1e6)
+    }
+}
+
+/// Number of cores to size thread pools (paper §5.12 sizes the worker
+/// pool to physical cores; std only exposes logical CPUs, so we use
+/// that, clamped to at least 1).
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_scales() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MB");
+        assert!(human_bytes(5 * 1024 * 1024 * 1024).ends_with("GB"));
+    }
+
+    #[test]
+    fn human_secs_scales() {
+        assert!(human_secs(123.4).contains("123.4"));
+        assert!(human_secs(0.5).contains("ms"));
+        assert!(human_secs(2e-6).contains("µs"));
+    }
+
+    #[test]
+    fn cores_positive() {
+        assert!(available_cores() >= 1);
+    }
+}

@@ -1,0 +1,143 @@
+//! Wall-clock timing (paper component `timers`).
+//!
+//! The paper's measurement protocol (Appendix G.3) takes the minimum of
+//! repeated launches on a frequency-pinned CPU; [`TimerStats`] mirrors
+//! that by tracking min/mean/median over samples.
+
+use std::time::Instant;
+
+/// A simple stopwatch over `std::time::Instant`.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start a new stopwatch.
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Seconds elapsed since start.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the lap time in seconds.
+    pub fn lap(&mut self) -> f64 {
+        let t = self.elapsed_secs();
+        self.start = Instant::now();
+        t
+    }
+}
+
+/// Aggregate statistics over repeated timing samples.
+#[derive(Debug, Clone, Default)]
+pub struct TimerStats {
+    samples: Vec<f64>,
+}
+
+impl TimerStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        self.samples.push(secs);
+    }
+
+    /// Time `f` once and record it; returns `f`'s output.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let sw = Stopwatch::start();
+        let out = f();
+        self.record(sw.elapsed_secs());
+        out
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(0.0f64, f64::max)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.samples.iter().map(|s| (s - m) * (s - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        var.sqrt()
+    }
+
+    pub fn median(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_secs();
+        let b = sw.elapsed_secs();
+        assert!(b >= a && a >= 0.0);
+    }
+
+    #[test]
+    fn stats_basic() {
+        let mut st = TimerStats::new();
+        for v in [3.0, 1.0, 2.0] {
+            st.record(v);
+        }
+        assert_eq!(st.count(), 3);
+        assert_eq!(st.min(), 1.0);
+        assert_eq!(st.max(), 3.0);
+        assert!((st.mean() - 2.0).abs() < 1e-12);
+        assert!((st.median() - 2.0).abs() < 1e-12);
+        assert!((st.stddev() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_even_median() {
+        let mut st = TimerStats::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            st.record(v);
+        }
+        assert!((st.median() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_records() {
+        let mut st = TimerStats::new();
+        let out = st.time(|| 41 + 1);
+        assert_eq!(out, 42);
+        assert_eq!(st.count(), 1);
+    }
+}

@@ -1,0 +1,171 @@
+//! PJRT runtime integration: the AOT-compiled JAX/Pallas oracle must
+//! agree with the native Rust oracle to near machine precision, and
+//! FedNL must converge when driven by it.
+//!
+//! Requires `make artifacts`; tests are skipped (pass vacuously, with a
+//! notice) when the artifact directory is missing so `cargo test` works
+//! before the Python step.
+
+use fednl::algorithms::{run_fednl, ClientState, Options};
+use fednl::compressors::by_name;
+use fednl::data::ClientShard;
+use fednl::linalg::Mat;
+use fednl::oracle::{LogisticOracle, Oracle};
+use fednl::rng::{Pcg64, Rng};
+use fednl::runtime::PjrtRuntime;
+
+fn artifacts_dir() -> Option<String> {
+    for dir in ["artifacts", "../artifacts", "../../artifacts"] {
+        if std::path::Path::new(&format!("{dir}/manifest.tsv")).exists() {
+            return Some(dir.to_string());
+        }
+    }
+    None
+}
+
+fn random_shard(d: usize, n: usize, seed: u64) -> ClientShard {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut at = Mat::zeros(n, d);
+    for r in 0..n {
+        let lab = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+        for c in 0..d - 1 {
+            at.set(r, c, lab * rng.next_gaussian());
+        }
+        at.set(r, d - 1, lab);
+    }
+    ClientShard { client_id: 0, at }
+}
+
+#[test]
+fn pjrt_oracle_matches_native() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    // The 'tiny' artifact shape: d ≤ 16, n_i ≤ 128.
+    let d = 16;
+    let n_i = 100;
+    let shard = random_shard(d, n_i, 42);
+    let mut native = LogisticOracle::new(shard.clone(), 1e-3);
+    let mut pjrt = rt.oracle_for_shard(&shard, 1e-3).unwrap();
+    assert_eq!(pjrt.dim(), d);
+
+    let mut rng = Pcg64::seed_from_u64(43);
+    for trial in 0..5 {
+        let x: Vec<f64> = (0..d).map(|_| rng.next_gaussian() * 0.4).collect();
+        let mut g1 = vec![0.0; d];
+        let mut g2 = vec![0.0; d];
+        let mut h1 = Mat::zeros(d, d);
+        let mut h2 = Mat::zeros(d, d);
+        let l1 = native.loss_grad_hessian(&x, &mut g1, &mut h1);
+        let l2 = pjrt.loss_grad_hessian(&x, &mut g2, &mut h2);
+        assert!(
+            (l1 - l2).abs() < 1e-12 * l1.abs().max(1.0),
+            "trial {trial}: loss {l1} vs {l2}"
+        );
+        for i in 0..d {
+            assert!(
+                (g1[i] - g2[i]).abs() < 1e-11,
+                "trial {trial}: grad[{i}] {} vs {}",
+                g1[i],
+                g2[i]
+            );
+        }
+        assert!(
+            h1.max_abs_diff(&h2) < 1e-10,
+            "trial {trial}: hessian diff {}",
+            h1.max_abs_diff(&h2)
+        );
+    }
+}
+
+#[test]
+fn fednl_converges_on_pjrt_oracle() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    let d = 16;
+    let n_clients = 3;
+    let mut clients = Vec::new();
+    for i in 0..n_clients {
+        let shard = random_shard(d, 96, 50 + i as u64);
+        let oracle = rt.oracle_for_shard(&shard, 1e-3).unwrap();
+        clients.push(ClientState::new(
+            i,
+            Box::new(oracle),
+            by_name("topk", d, 4, i as u64).unwrap(),
+            None,
+        ));
+    }
+    let opts = Options { rounds: 40, ..Default::default() };
+    let trace = run_fednl(&mut clients, &opts, vec![0.0; d]);
+    assert!(
+        trace.last_grad_norm() < 1e-8,
+        "PJRT-driven FedNL: {}",
+        trace.last_grad_norm()
+    );
+}
+
+#[test]
+fn pjrt_and_native_produce_same_trajectory() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    let d = 16;
+    let shards: Vec<ClientShard> =
+        (0..2).map(|i| random_shard(d, 80, 60 + i)).collect();
+    let opts = Options { rounds: 15, track_loss: true, ..Default::default() };
+
+    let mut native: Vec<ClientState> = shards
+        .iter()
+        .enumerate()
+        .map(|(i, sh)| {
+            ClientState::new(
+                i,
+                Box::new(LogisticOracle::new(sh.clone(), 1e-3)),
+                by_name("randseqk", d, 4, i as u64).unwrap(),
+                None,
+            )
+        })
+        .collect();
+    let t_native = run_fednl(&mut native, &opts, vec![0.0; d]);
+
+    let mut pjrt: Vec<ClientState> = shards
+        .iter()
+        .enumerate()
+        .map(|(i, sh)| {
+            ClientState::new(
+                i,
+                Box::new(rt.oracle_for_shard(sh, 1e-3).unwrap()),
+                by_name("randseqk", d, 4, i as u64).unwrap(),
+                None,
+            )
+        })
+        .collect();
+    let t_pjrt = run_fednl(&mut pjrt, &opts, vec![0.0; d]);
+
+    for (a, b) in t_native.records.iter().zip(&t_pjrt.records) {
+        let rel = (a.grad_norm - b.grad_norm).abs() / (1.0 + a.grad_norm);
+        assert!(rel < 1e-9, "round {}: {} vs {}", a.round, a.grad_norm, b.grad_norm);
+    }
+}
+
+#[test]
+fn manifest_shape_selection() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let rt = PjrtRuntime::load(&dir).unwrap();
+    assert!(!rt.entries.is_empty());
+    // Exact fit for the w8a shape.
+    let e = rt.find_shape(301, 350).expect("w8a artifact");
+    assert!(e.d_pad >= 301 && e.n_pad >= 350);
+    // Impossible shape → None.
+    assert!(rt.find_shape(100_000, 10).is_none());
+}

@@ -1,0 +1,231 @@
+//! Multi-node TCP integration: real sockets on loopback, the full wire
+//! protocol, all three algorithms — and trajectory equivalence with the
+//! in-process reference (the wire codec is bit-exact for f64).
+
+use fednl::algorithms::{
+    run_fednl, run_fednl_ls_pool, run_fednl_pool, run_fednl_pp,
+    run_fednl_pp_transport, ClientState, LineSearchParams, Options,
+    PPClientState,
+};
+use fednl::compressors::by_name;
+use fednl::coordinator::ClientPool;
+use fednl::data::{generate_synthetic, Dataset, LibsvmSample, SynthSpec};
+use fednl::net::client::ClientMode;
+use fednl::net::run_client;
+use fednl::net::server::Bound;
+use fednl::oracle::LogisticOracle;
+
+fn dataset(d_raw: usize, n: usize, seed: u64) -> Dataset {
+    let spec =
+        SynthSpec { d_raw, n_samples: n, density: 0.5, noise: 1.0, seed };
+    let synth = generate_synthetic(&spec);
+    let samples: Vec<LibsvmSample> = synth
+        .labels
+        .iter()
+        .zip(&synth.rows)
+        .map(|(l, r)| LibsvmSample { label: *l, features: r.clone() })
+        .collect();
+    let mut ds = Dataset::from_libsvm(&samples, d_raw);
+    ds.reshuffle(seed);
+    ds
+}
+
+fn spawn_clients(
+    ds: &Dataset,
+    n: usize,
+    comp: &str,
+    addr: &str,
+    pp: bool,
+) -> Vec<std::thread::JoinHandle<anyhow::Result<(u64, u64)>>> {
+    let d = ds.d;
+    ds.split_even(n)
+        .unwrap()
+        .into_iter()
+        .map(|shard| {
+            let addr = addr.to_string();
+            let comp = by_name(comp, d, 8, 100 + shard.client_id as u64).unwrap();
+            std::thread::spawn(move || {
+                let id = shard.client_id;
+                let oracle = Box::new(LogisticOracle::new(shard, 1e-3));
+                let mode = if pp {
+                    ClientMode::PP(PPClientState::new(
+                        id,
+                        oracle,
+                        comp,
+                        None,
+                        &vec![0.0; d],
+                    ))
+                } else {
+                    ClientMode::FedNL(ClientState::new(id, oracle, comp, None))
+                };
+                run_client(&addr, id, mode)
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn tcp_fednl_matches_in_process_reference() {
+    let ds = dataset(9, 150, 7);
+    let d = ds.d;
+    const N: usize = 5;
+    let opts = Options { rounds: 25, track_loss: true, ..Default::default() };
+
+    // Reference: sequential in-process (identical seeds).
+    let mut ref_clients: Vec<ClientState> = ds
+        .split_even(N)
+        .unwrap()
+        .into_iter()
+        .map(|sh| {
+            let id = sh.client_id;
+            ClientState::new(
+                id,
+                Box::new(LogisticOracle::new(sh, 1e-3)),
+                by_name("randseqk", d, 8, 100 + id as u64).unwrap(),
+                None,
+            )
+        })
+        .collect();
+    let t_ref = run_fednl(&mut ref_clients, &opts, vec![0.0; d]);
+
+    // TCP run.
+    let bound = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = bound.local_addr().unwrap().to_string();
+    let handles = spawn_clients(&ds, N, "randseqk", &addr, false);
+    let mut pool = bound.accept(N).unwrap();
+    let t_tcp = run_fednl_pool(&mut pool, &opts, vec![0.0; d], "tcp");
+    pool.shutdown();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+
+    assert_eq!(t_ref.records.len(), t_tcp.records.len());
+    for (a, b) in t_ref.records.iter().zip(&t_tcp.records) {
+        // f64 wire encoding is bit-exact; trajectories must be identical.
+        assert_eq!(a.grad_norm, b.grad_norm, "round {}", a.round);
+        assert_eq!(a.loss, b.loss);
+    }
+    assert!(t_tcp.last_grad_norm() < 1e-8);
+}
+
+#[test]
+fn tcp_fednl_ls_converges() {
+    let ds = dataset(8, 120, 8);
+    let d = ds.d;
+    const N: usize = 4;
+    let bound = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = bound.local_addr().unwrap().to_string();
+    let handles = spawn_clients(&ds, N, "toplek", &addr, false);
+    let mut pool = bound.accept(N).unwrap();
+    let opts = Options { rounds: 40, ..Default::default() };
+    let t = run_fednl_ls_pool(
+        &mut pool,
+        &opts,
+        &LineSearchParams::default(),
+        vec![0.0; d],
+        "tcp-ls",
+    );
+    pool.shutdown();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    assert!(t.last_grad_norm() < 1e-8, "{}", t.last_grad_norm());
+}
+
+#[test]
+fn tcp_fednl_pp_matches_in_process() {
+    let ds = dataset(7, 120, 9);
+    let d = ds.d;
+    const N: usize = 4;
+    let opts = Options { rounds: 60, ..Default::default() };
+
+    let mut ref_pps: Vec<PPClientState> = ds
+        .split_even(N)
+        .unwrap()
+        .into_iter()
+        .map(|sh| {
+            let id = sh.client_id;
+            PPClientState::new(
+                id,
+                Box::new(LogisticOracle::new(sh, 1e-3)),
+                by_name("topk", d, 8, 100 + id as u64).unwrap(),
+                None,
+                &vec![0.0; d],
+            )
+        })
+        .collect();
+    let t_ref = run_fednl_pp(&mut ref_pps, &opts, 2, 77, vec![0.0; d]);
+
+    let bound = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = bound.local_addr().unwrap().to_string();
+    let handles = spawn_clients(&ds, N, "topk", &addr, true);
+    let mut pool = bound.accept(N).unwrap();
+    let t_tcp = run_fednl_pp_transport(
+        &mut pool,
+        &opts,
+        2,
+        77,
+        vec![0.0; d],
+        "tcp-pp",
+    );
+    pool.shutdown();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    for (a, b) in t_ref.records.iter().zip(&t_tcp.records) {
+        assert_eq!(a.grad_norm, b.grad_norm, "round {}", a.round);
+    }
+    assert!(t_tcp.last_grad_norm() < 1e-6);
+}
+
+#[test]
+fn transport_bytes_metered() {
+    let ds = dataset(6, 80, 10);
+    let d = ds.d;
+    const N: usize = 3;
+    let bound = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = bound.local_addr().unwrap().to_string();
+    let handles = spawn_clients(&ds, N, "randk", &addr, false);
+    let mut pool = bound.accept(N).unwrap();
+    let opts = Options { rounds: 5, ..Default::default() };
+    let t = run_fednl_pool(&mut pool, &opts, vec![0.0; d], "meter");
+    let (up, down) = pool.transport_bytes().unwrap();
+    pool.shutdown();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    // Real socket-level byte counts: nonzero, and up-dominated (Hessian
+    // updates + gradients vs broadcast x).
+    assert!(up > 0 && down > 0);
+    assert!(up > down, "up {up} ≤ down {down}");
+    assert_eq!(t.records.len(), 5);
+}
+
+#[test]
+fn duplicate_client_id_rejected() {
+    let ds = dataset(5, 40, 11);
+    let d = ds.d;
+    let bound = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = bound.local_addr().unwrap().to_string();
+    // Two clients both claiming id 0.
+    let mk = |_i: usize| {
+        let sh = ds.split_even(2).unwrap().remove(0);
+        let addr = addr.clone();
+        let comp = by_name("identity", d, 8, 0).unwrap();
+        std::thread::spawn(move || {
+            let oracle = Box::new(LogisticOracle::new(sh, 1e-3));
+            run_client(
+                &addr,
+                0,
+                ClientMode::FedNL(ClientState::new(0, oracle, comp, None)),
+            )
+        })
+    };
+    let h1 = mk(0);
+    let h2 = mk(1);
+    let res = bound.accept(2);
+    assert!(res.is_err(), "duplicate registration must fail");
+    // The client threads will error out when the master drops; ignore.
+    let _ = h1.join();
+    let _ = h2.join();
+}

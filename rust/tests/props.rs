@@ -1,0 +1,251 @@
+//! Property-based suites (self-contained mini-framework: seeded random
+//! generation, many cases per property, failing seed reported in the
+//! assert message — the role proptest would play).
+
+use fednl::compressors::{
+    by_name, distortion_sq, weighted_norm_sq, ALL_NAMES,
+};
+use fednl::data::parse_libsvm_bytes;
+use fednl::linalg::packed::PackedUpper;
+use fednl::linalg::{cholesky, gauss, iterative, Mat};
+use fednl::oracle::{numerics, LogisticOracle};
+use fednl::rng::{Pcg64, Rng};
+
+fn random_packed(d: usize, rng: &mut Pcg64) -> (PackedUpper, Vec<f64>) {
+    let pu = PackedUpper::new(d);
+    let src = (0..pu.len()).map(|_| rng.next_gaussian()).collect();
+    (pu, src)
+}
+
+/// Every compressor's *scaled contractive form* must satisfy
+/// E‖C(x)−x‖² ≤ (1−δ)‖x‖² on arbitrary inputs (averaged over rounds for
+/// the randomized ones).
+#[test]
+fn prop_contraction_bound_all_compressors() {
+    let mut rng = Pcg64::seed_from_u64(1);
+    for case in 0..30 {
+        let d = 2 + (rng.next_below(10) as usize);
+        let (pu, src) = random_packed(d, &mut rng);
+        let total = weighted_norm_sq(&pu, &src);
+        if total < 1e-12 {
+            continue;
+        }
+        for name in ALL_NAMES {
+            let mut c = by_name(name, d, 2, case).unwrap();
+            let delta = c.kind(pu.len()).delta();
+            let trials = 400;
+            let mut acc = 0.0;
+            for r in 0..trials {
+                let out = c.compress(&pu, &src, r);
+                acc += distortion_sq(&pu, &src, &out);
+            }
+            let mean = acc / trials as f64;
+            let bound = (1.0 - delta) * total;
+            assert!(
+                mean <= bound * 1.12 + 1e-12,
+                "case {case} {name} d={d}: E dist {mean} > (1-δ)‖x‖² {bound}"
+            );
+        }
+    }
+}
+
+/// Decompressed values must always equal the source at their indices
+/// (no compressor corrupts data — only selects/quantizes).
+#[test]
+fn prop_selected_values_faithful() {
+    let mut rng = Pcg64::seed_from_u64(2);
+    for case in 0..50 {
+        let d = 2 + (rng.next_below(12) as usize);
+        let (pu, src) = random_packed(d, &mut rng);
+        for name in ["topk", "randk", "randseqk", "toplek", "identity"] {
+            let mut c = by_name(name, d, 2, case).unwrap();
+            let out = c.compress(&pu, &src, case);
+            for (v, i) in out.values.iter().zip(out.indices()) {
+                assert_eq!(
+                    *v, src[i as usize],
+                    "case {case} {name}: value mismatch at {i}"
+                );
+            }
+        }
+    }
+}
+
+/// Linear-solver agreement: Cholesky, Gaussian elimination and CG agree
+/// on random SPD systems.
+#[test]
+fn prop_solver_agreement() {
+    let mut rng = Pcg64::seed_from_u64(3);
+    for case in 0..25 {
+        let d = 2 + (rng.next_below(20) as usize);
+        let b_mat = Mat::from_vec(
+            d,
+            d,
+            (0..d * d).map(|_| rng.next_gaussian()).collect(),
+        );
+        let mut a = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                let mut s = 0.0;
+                for k in 0..d {
+                    s += b_mat.get(k, i) * b_mat.get(k, j);
+                }
+                a.set(i, j, s / d as f64);
+            }
+        }
+        a.add_diag(0.5);
+        let rhs: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let x1 = cholesky::solve_spd(&a, 0.0, &rhs).unwrap();
+        let x2 = gauss::solve_gauss(&a, &rhs).unwrap();
+        let x3 = iterative::cg(&a, &rhs, 1e-13, 10 * d).x;
+        for i in 0..d {
+            assert!((x1[i] - x2[i]).abs() < 1e-7, "case {case} chol vs gauss");
+            assert!((x1[i] - x3[i]).abs() < 1e-6, "case {case} chol vs cg");
+        }
+    }
+}
+
+/// The logistic oracle's analytic derivatives match finite differences
+/// at random points of random problems.
+#[test]
+fn prop_oracle_derivatives() {
+    let mut rng = Pcg64::seed_from_u64(4);
+    for case in 0..10 {
+        let d = 3 + (rng.next_below(6) as usize);
+        let n = 10 + (rng.next_below(30) as usize);
+        let mut at = Mat::zeros(n, d);
+        for r in 0..n {
+            let lab = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+            for c in 0..d - 1 {
+                at.set(r, c, lab * rng.next_gaussian());
+            }
+            at.set(r, d - 1, lab);
+        }
+        let mut o = LogisticOracle::from_matrix(at, 1e-3);
+        let x: Vec<f64> = (0..d).map(|_| rng.next_gaussian() * 0.3).collect();
+        let ge = numerics::check_grad(&mut o, &x);
+        let he = numerics::check_hessian(&mut o, &x);
+        assert!(ge < 1e-6, "case {case}: grad FD err {ge}");
+        assert!(he < 1e-4, "case {case}: hess FD err {he}");
+    }
+}
+
+/// LIBSVM writer→parser round-trip for random datasets (fuzz-lite).
+#[test]
+fn prop_libsvm_roundtrip_fuzz() {
+    let mut rng = Pcg64::seed_from_u64(5);
+    for case in 0..40 {
+        let n = 1 + rng.next_below(30) as usize;
+        let d = 1 + rng.next_below(20) as usize;
+        let mut text = String::new();
+        let mut expect = Vec::new();
+        for _ in 0..n {
+            let label = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+            text.push_str(if label > 0.0 { "+1" } else { "-1" });
+            let mut feats = Vec::new();
+            for j in 0..d {
+                if rng.bernoulli(0.4) {
+                    // Mixed formats: plain, exponent, high precision.
+                    let v = match rng.next_below(3) {
+                        0 => rng.next_gaussian(),
+                        1 => rng.next_gaussian() * 1e-7,
+                        _ => (rng.next_below(1000) as f64) / 8.0,
+                    };
+                    text.push_str(&format!(" {}:{}", j + 1, v));
+                    feats.push((j as u32, v));
+                }
+            }
+            text.push('\n');
+            expect.push((label, feats));
+        }
+        let (samples, _) = parse_libsvm_bytes(text.as_bytes()).unwrap();
+        assert_eq!(samples.len(), n, "case {case}");
+        for (s, (lab, feats)) in samples.iter().zip(&expect) {
+            assert_eq!(s.label, *lab, "case {case}");
+            assert_eq!(s.features.len(), feats.len(), "case {case}");
+            for ((gi, gv), (ei, ev)) in s.features.iter().zip(feats) {
+                assert_eq!(gi, ei);
+                assert!(
+                    (gv - ev).abs() <= 1e-13 * ev.abs().max(1e-3),
+                    "case {case}: {gv} vs {ev}"
+                );
+            }
+        }
+    }
+}
+
+/// Wire codec fuzz: random ClientMsgs survive encode→decode bit-exactly.
+#[test]
+fn prop_wire_roundtrip_fuzz() {
+    use fednl::algorithms::ClientMsg;
+    use fednl::compressors::{Compressed, IndexPayload};
+    use fednl::net::wire;
+    let mut rng = Pcg64::seed_from_u64(6);
+    for case in 0..100 {
+        let d = 1 + rng.next_below(40) as usize;
+        let n = 1 + rng.next_below(200) as u32;
+        let k = 1 + rng.next_below(n as u64 % 50 + 1) as u32;
+        let payload = match rng.next_below(4) {
+            0 => IndexPayload::Explicit(
+                (0..k).map(|_| rng.next_below(n as u64) as u32).collect(),
+            ),
+            1 => IndexPayload::Seed { seed: rng.next_u64(), k },
+            2 => IndexPayload::SeqStart {
+                start: rng.next_below(n as u64) as u32,
+                k,
+            },
+            _ => IndexPayload::Dense,
+        };
+        let nvals = match &payload {
+            IndexPayload::Dense => n as usize,
+            IndexPayload::Explicit(ix) => ix.len(),
+            IndexPayload::Seed { k, .. } | IndexPayload::SeqStart { k, .. } => {
+                *k as usize
+            }
+        };
+        let msg = ClientMsg {
+            client_id: rng.next_below(1000) as usize,
+            grad: (0..d).map(|_| rng.next_gaussian()).collect(),
+            update: Compressed {
+                payload,
+                values: (0..nvals).map(|_| rng.next_gaussian()).collect(),
+                scale: if rng.bernoulli(0.3) { 8.0 / 9.0 } else { 1.0 },
+                encoding: fednl::compressors::ValueEncoding::F64,
+                n,
+            },
+            l_i: rng.next_f64(),
+            loss: if rng.bernoulli(0.5) {
+                Some(rng.next_gaussian())
+            } else {
+                None
+            },
+        };
+        let dec = wire::decode_client_msg(&wire::encode_client_msg(&msg))
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(dec.client_id, msg.client_id);
+        assert_eq!(dec.grad, msg.grad);
+        assert_eq!(dec.l_i, msg.l_i);
+        assert_eq!(dec.loss, msg.loss);
+        assert_eq!(dec.update.values, msg.update.values);
+        assert_eq!(dec.update.scale, msg.update.scale);
+        assert_eq!(dec.update.payload, msg.update.payload);
+    }
+}
+
+/// TopLEK never sends more than TopK would, over many random inputs.
+#[test]
+fn prop_toplek_never_exceeds_k() {
+    let mut rng = Pcg64::seed_from_u64(7);
+    for case in 0..60 {
+        let d = 2 + rng.next_below(12) as usize;
+        let (pu, src) = random_packed(d, &mut rng);
+        let k = 1 + rng.next_below(pu.len() as u64) as usize;
+        let mut lek = fednl::compressors::TopLEK::new(k, case);
+        use fednl::compressors::Compressor;
+        let out = lek.compress(&pu, &src, case);
+        assert!(
+            out.values.len() <= k,
+            "case {case}: sent {} > k={k}",
+            out.values.len()
+        );
+    }
+}
