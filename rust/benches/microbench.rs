@@ -1,12 +1,18 @@
 //! Micro-benchmarks of the hot kernels (harness = false; self-contained
 //! criterion-style statistics via `fednl::utils::TimerStats`).
 //!
-//! Run: `cargo bench --bench microbench [-- filter]`
+//! Run: `cargo bench --bench microbench [-- filter] [--bench-json]`
+//!
+//! The `kernels` section A/Bs every runtime-dispatched SIMD kernel
+//! against its portable scalar fallback; with `--bench-json` the
+//! per-kernel timings are written to `BENCH_kernels.json` (see
+//! ROADMAP.md for the schema) so the perf trajectory is tracked across
+//! PRs.
 
 use fednl::compressors::{by_name, ALL_NAMES};
 use fednl::data::ClientShard;
 use fednl::linalg::packed::PackedUpper;
-use fednl::linalg::{cholesky, gauss, iterative, Mat};
+use fednl::linalg::{cholesky, gauss, iterative, simd, Mat};
 use fednl::oracle::{LogisticOracle, Oracle};
 use fednl::rng::{Pcg64, Rng};
 use fednl::utils::TimerStats;
@@ -26,6 +32,210 @@ fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) {
         st.mean() * 1e6,
         st.stddev() * 1e6
     );
+}
+
+/// Minimum-of-samples timing (paper App. G.3 protocol) in seconds.
+fn time_min<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut st = TimerStats::new();
+    for _ in 0..iters {
+        st.time(&mut f);
+    }
+    st.min()
+}
+
+/// One scalar-vs-dispatched A/B row for `BENCH_kernels.json`.
+struct KernelRow {
+    name: &'static str,
+    n: usize,
+    scalar_ns: f64,
+    simd_ns: f64,
+}
+
+impl KernelRow {
+    fn speedup(&self) -> f64 {
+        if self.simd_ns > 0.0 {
+            self.scalar_ns / self.simd_ns
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A/B every dispatched kernel against its scalar fallback.
+fn bench_kernels() -> Vec<KernelRow> {
+    let mut rng = Pcg64::seed_from_u64(0xBE_AC_11);
+    let mut rows = Vec::new();
+    let d = 301; // W8A shape
+    let pu = PackedUpper::new(d);
+    let n_packed = pu.len();
+
+    // dot / norm2_sq (margin-length and packed-length vectors).
+    for &n in &[d, 4096] {
+        let a: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let scalar_ns = time_min(50, 400, || {
+            std::hint::black_box(simd::scalar::dot(
+                std::hint::black_box(&a),
+                std::hint::black_box(&b),
+            ));
+        }) * 1e9;
+        let simd_ns = time_min(50, 400, || {
+            std::hint::black_box(simd::dot(
+                std::hint::black_box(&a),
+                std::hint::black_box(&b),
+            ));
+        }) * 1e9;
+        rows.push(KernelRow { name: "dot", n, scalar_ns, simd_ns });
+    }
+
+    // axpy (gradient accumulation sweep length).
+    {
+        let n = 4096;
+        let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let mut y1: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let mut y2 = y1.clone();
+        let scalar_ns = time_min(50, 400, || {
+            simd::scalar::axpy(1.000000001, std::hint::black_box(&x), &mut y1);
+        }) * 1e9;
+        let simd_ns = time_min(50, 400, || {
+            simd::axpy(1.000000001, std::hint::black_box(&x), &mut y2);
+        }) * 1e9;
+        rows.push(KernelRow { name: "axpy", n, scalar_ns, simd_ns });
+    }
+
+    // §5.10 rank-1 Hessian accumulate (the hottest FedNL kernel).
+    {
+        let n_i = 64;
+        let samples: Vec<Vec<f64>> = (0..n_i)
+            .map(|_| (0..d).map(|_| rng.next_gaussian()).collect())
+            .collect();
+        let refs: Vec<&[f64]> = samples.iter().map(|s| s.as_slice()).collect();
+        let h: Vec<f64> = (0..n_i).map(|_| rng.next_f64() + 0.1).collect();
+        let mut m = vec![0.0; d * d];
+        let scalar_ns = time_min(3, 30, || {
+            simd::scalar::sym_rank1_upper(&mut m, d, &refs, &h);
+        }) * 1e9;
+        let simd_ns = time_min(3, 30, || {
+            simd::sym_rank1_upper(&mut m, d, &refs, &h);
+        }) * 1e9;
+        rows.push(KernelRow {
+            name: "sym_rank1_upper",
+            n: d * n_i,
+            scalar_ns,
+            simd_ns,
+        });
+    }
+
+    // Compressor scans over the packed upper triangle.
+    {
+        let v: Vec<f64> = (0..n_packed).map(|_| rng.next_gaussian()).collect();
+        let mut e = vec![0.0; n_packed];
+        let scalar_ns = time_min(20, 200, || {
+            simd::scalar::energy_scan(pu.weights(), std::hint::black_box(&v), &mut e);
+        }) * 1e9;
+        let simd_ns = time_min(20, 200, || {
+            simd::energy_scan(pu.weights(), std::hint::black_box(&v), &mut e);
+        }) * 1e9;
+        rows.push(KernelRow {
+            name: "energy_scan",
+            n: n_packed,
+            scalar_ns,
+            simd_ns,
+        });
+
+        let scalar_ns = time_min(20, 200, || {
+            std::hint::black_box(simd::scalar::weighted_norm2_sq(
+                pu.weights(),
+                std::hint::black_box(&v),
+            ));
+        }) * 1e9;
+        let simd_ns = time_min(20, 200, || {
+            std::hint::black_box(simd::weighted_norm2_sq(
+                pu.weights(),
+                std::hint::black_box(&v),
+            ));
+        }) * 1e9;
+        rows.push(KernelRow {
+            name: "weighted_norm2_sq",
+            n: n_packed,
+            scalar_ns,
+            simd_ns,
+        });
+
+        let scalar_ns = time_min(20, 200, || {
+            std::hint::black_box(simd::scalar::abs_max(std::hint::black_box(&v)));
+        }) * 1e9;
+        let simd_ns = time_min(20, 200, || {
+            std::hint::black_box(simd::abs_max(std::hint::black_box(&v)));
+        }) * 1e9;
+        rows.push(KernelRow {
+            name: "abs_max",
+            n: n_packed,
+            scalar_ns,
+            simd_ns,
+        });
+    }
+
+    // §5.7 sigmoid-variance weight scan.
+    {
+        let n = 4096;
+        let s: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let mut out = vec![0.0; n];
+        let scalar_ns = time_min(50, 400, || {
+            simd::scalar::sigmoid_variance_scan(std::hint::black_box(&s), 0.01, &mut out);
+        }) * 1e9;
+        let simd_ns = time_min(50, 400, || {
+            simd::sigmoid_variance_scan(std::hint::black_box(&s), 0.01, &mut out);
+        }) * 1e9;
+        rows.push(KernelRow {
+            name: "sigmoid_variance_scan",
+            n,
+            scalar_ns,
+            simd_ns,
+        });
+    }
+
+    for r in &rows {
+        println!(
+            "kernel/{:<24} n={:<6} scalar {:>9.1}ns  simd {:>9.1}ns  ×{:.2}",
+            r.name,
+            r.n,
+            r.scalar_ns,
+            r.simd_ns,
+            r.speedup()
+        );
+    }
+    rows
+}
+
+/// Serialize the kernel A/B rows to `BENCH_kernels.json` (schema in
+/// ROADMAP.md; hand-rolled writer — the crate stays dependency-free).
+fn write_bench_json(rows: &[KernelRow]) -> std::io::Result<()> {
+    let mut s = String::from("{\n");
+    s.push_str(&format!("  \"isa\": \"{}\",\n", simd::isa_name()));
+    s.push_str(&format!(
+        "  \"cores\": {},\n",
+        fednl::utils::available_cores()
+    ));
+    s.push_str("  \"kernels\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"n\": {}, \"scalar_ns\": {:.1}, \"simd_ns\": {:.1}, \"speedup\": {:.3}}}{}\n",
+            r.name,
+            r.n,
+            r.scalar_ns,
+            r.simd_ns,
+            r.speedup(),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write("BENCH_kernels.json", s)?;
+    println!("kernel timings written to BENCH_kernels.json");
+    Ok(())
 }
 
 fn random_shard(d: usize, n: usize, seed: u64) -> ClientShard {
@@ -64,12 +274,23 @@ fn main() {
         .skip(1)
         .find(|a| !a.starts_with('-'))
         .unwrap_or_default();
+    let json = std::env::args().any(|a| a == "--bench-json");
     let want = |n: &str| filter.is_empty() || n.contains(&filter);
     println!("== microbench (W8A client shape d=301, n_i=350) ==");
+    println!("dispatched SIMD path: {}", simd::isa_name());
 
     let d = 301;
     let n_i = 350;
     let shard = random_shard(d, n_i, 1);
+
+    if want("kernels") || json {
+        let rows = bench_kernels();
+        if json {
+            if let Err(e) = write_bench_json(&rows) {
+                eprintln!("failed to write BENCH_kernels.json: {e}");
+            }
+        }
+    }
 
     if want("oracle") {
         let mut oracle = LogisticOracle::new(shard.clone(), 1e-3);

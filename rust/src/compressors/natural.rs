@@ -40,6 +40,12 @@ impl Natural {
             return v;
         }
         let bits = v.to_bits();
+        // Exact powers of two are fixed points: the mantissa-fraction
+        // scan (paper's "granularity of bits") skips the Bernoulli draw
+        // entirely — p would be 0, so no randomness is consumed.
+        if bits & 0x000F_FFFF_FFFF_FFFF == 0 {
+            return v;
+        }
         let exp_bits = (bits >> 52) & 0x7FF;
         if exp_bits == 0 {
             // Subnormal: magnitude < 2^-1022 — flush via generic path.

@@ -16,6 +16,7 @@
 
 use super::{Compressed, Compressor, CompressorKind, IndexPayload};
 use crate::linalg::packed::PackedUpper;
+use crate::linalg::simd;
 use crate::rng::{Pcg64, Rng};
 
 /// Sequential-window random sparsifier.
@@ -58,11 +59,10 @@ impl Compressor for RandSeqK {
         let n = src.len();
         let k = self.k.min(n);
         let start = self.start_for_round(n, round) as usize;
-        // Contiguous gather: at most two slice copies (cache-aware).
+        // Contiguous gather through the kernel layer: at most two slice
+        // copies (cache-aware, App. C.4).
         let mut values = Vec::with_capacity(k);
-        let first_len = (n - start).min(k);
-        values.extend_from_slice(&src[start..start + first_len]);
-        values.extend_from_slice(&src[..k - first_len]);
+        simd::gather_window(src, start, k, &mut values);
         Compressed {
             payload: IndexPayload::SeqStart { start: start as u32, k: k as u32 },
             values,

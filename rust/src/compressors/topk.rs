@@ -10,20 +10,28 @@
 //! Contraction: picking the top-k energies e_i = w_i·v_i² guarantees
 //! Σ_kept e ≥ (k/n)·Σ e, i.e. δ = k/n in the Frobenius norm — the
 //! worst-case bound of App. D.2.
+//!
+//! The energy pass e_i = w_i·v_i² runs as a vectorized scan
+//! ([`crate::linalg::simd::energy_scan`]) into a buffer reused across
+//! rounds (§5.13), so the heap walks a dense array instead of
+//! recomputing the (i, j) weight per element.
 
 use super::{Compressed, Compressor, CompressorKind, IndexPayload};
 use crate::linalg::packed::PackedUpper;
+use crate::linalg::simd;
 
 /// Deterministic TopK sparsifier.
 #[derive(Debug, Clone)]
 pub struct TopK {
     k: usize,
+    /// Reused energy-scan buffer (zero allocation per round, §5.13).
+    energy: Vec<f64>,
 }
 
 impl TopK {
     pub fn new(k: usize) -> Self {
         assert!(k > 0, "TopK requires k ≥ 1");
-        Self { k }
+        Self { k, energy: Vec::new() }
     }
 
     pub fn k(&self) -> usize {
@@ -97,18 +105,20 @@ impl MinHeap4 {
 
 /// Select the indices of the k largest energies (ties broken towards
 /// lower index for determinism). Returns indices sorted ascending.
+/// `scratch` holds the vectorized energy scan and is reused by stateful
+/// callers to avoid per-round allocation.
 pub(crate) fn select_topk_energy(
     pu: &PackedUpper,
     src: &[f64],
     k: usize,
+    scratch: &mut Vec<f64>,
 ) -> Vec<u32> {
     let n = src.len();
     let k = k.min(n);
+    scratch.resize(n, 0.0);
+    simd::energy_scan(pu.weights(), src, scratch);
     let mut heap = MinHeap4::with_capacity(k);
-    for (i, &v) in src.iter().enumerate() {
-        let (r, c) = pu.pair(i);
-        let w = if r == c { 1.0 } else { 2.0 };
-        let e = w * v * v;
+    for (i, &e) in scratch.iter().enumerate() {
         if heap.len() < k {
             heap.push(e, i as u32);
         } else if e > heap.min() {
@@ -136,7 +146,7 @@ impl Compressor for TopK {
         src: &[f64],
         _round: u64,
     ) -> Compressed {
-        let idx = select_topk_energy(pu, src, self.k);
+        let idx = select_topk_energy(pu, src, self.k, &mut self.energy);
         let values = idx.iter().map(|&i| src[i as usize]).collect();
         Compressed {
             payload: IndexPayload::Explicit(idx),
@@ -166,7 +176,7 @@ mod tests {
         // d=1: single entry; d=2: entries (0,0),(0,1),(1,1).
         let pu = PackedUpper::new(2);
         let src = vec![3.0, -1.0, 0.5];
-        let idx = select_topk_energy(&pu, &src, 1);
+        let idx = select_topk_energy(&pu, &src, 1, &mut Vec::new());
         assert_eq!(idx, vec![0]); // 3² = 9 beats 2·1 and 0.25
     }
 
@@ -175,7 +185,7 @@ mod tests {
         // (0,1) has weight 2: 2·2² = 8 > 2.5² = 6.25 of the diagonal.
         let pu = PackedUpper::new(2);
         let src = vec![2.5, 2.0, 0.0];
-        let idx = select_topk_energy(&pu, &src, 1);
+        let idx = select_topk_energy(&pu, &src, 1, &mut Vec::new());
         assert_eq!(idx, vec![1]);
     }
 
@@ -219,7 +229,7 @@ mod tests {
     fn heap_extracts_true_topk() {
         let (pu, src) = packed_src(15, 5);
         let k = 17;
-        let got = select_topk_energy(&pu, &src, k);
+        let got = select_topk_energy(&pu, &src, k, &mut Vec::new());
         // Brute-force expected set.
         let mut energies: Vec<(f64, u32)> = src
             .iter()

@@ -25,12 +25,14 @@ use crate::rng::{Pcg64, Rng};
 pub struct TopLEK {
     k: usize,
     seed_base: u64,
+    /// Reused energy-scan buffer (zero allocation per round, §5.13).
+    scratch: Vec<f64>,
 }
 
 impl TopLEK {
     pub fn new(k: usize, seed_base: u64) -> Self {
         assert!(k > 0);
-        Self { k, seed_base }
+        Self { k, seed_base, scratch: Vec::new() }
     }
 }
 
@@ -53,17 +55,13 @@ impl Compressor for TopLEK {
         let k = self.k.min(n);
         let target_residual = 1.0 - k as f64 / n as f64; // 1 − δ
 
-        // Top-k indices by weighted energy, then order them by energy
-        // descending to form prefixes.
-        let idx = select_topk_energy(pu, src, k);
-        let mut by_energy: Vec<(f64, u32)> = idx
-            .iter()
-            .map(|&i| {
-                let (r, c) = pu.pair(i as usize);
-                let w = if r == c { 1.0 } else { 2.0 };
-                (w * src[i as usize] * src[i as usize], i)
-            })
-            .collect();
+        // Top-k indices by weighted energy (vectorized scan + 4-ary
+        // heap), then order them by energy descending to form prefixes.
+        // `scratch` holds every index's energy after the call — reuse
+        // it so the sort keys are bit-identical to the selection keys.
+        let idx = select_topk_energy(pu, src, k, &mut self.scratch);
+        let mut by_energy: Vec<(f64, u32)> =
+            idx.iter().map(|&i| (self.scratch[i as usize], i)).collect();
         by_energy.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
 
         let total: f64 = pu.frobenius_sq_packed(src);

@@ -5,8 +5,11 @@
 //! replies as they arrive.
 //!
 //! Determinism: workers compute in parallel but the master re-orders
-//! replies by client id before aggregation, so the f64 reduction order —
-//! and hence the whole trajectory — is identical to [`super::SeqPool`].
+//! replies before aggregation — round/warm-start messages by client id
+//! (f64 reduction order, and hence the FedNL trajectory, identical to
+//! [`super::SeqPool`]), loss/gradient partial sums by worker id (fixed
+//! reduction order → bit-identical run-to-run; the bucketed association
+//! differs from SeqPool's flat sum by normal f64 reassociation).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -26,10 +29,13 @@ enum Cmd {
 
 enum Reply {
     Msgs(Vec<ClientMsg>),
-    /// Sum of local losses over the worker's clients + client count.
-    Loss(f64, usize),
-    /// Sum of local losses + sum of local gradients + client count.
-    LossGrad(f64, Vec<f64>, usize),
+    /// (worker id, sum of local losses over the worker's clients,
+    /// client count). The worker id lets the master reduce in a fixed
+    /// order even though replies arrive in completion order.
+    Loss(usize, f64, usize),
+    /// (worker id, sum of local losses, sum of local gradients,
+    /// client count).
+    LossGrad(usize, f64, Vec<f64>, usize),
     /// (client_id, packed H⁰) pairs.
     Warm(Vec<(usize, Vec<f64>)>),
     Ack,
@@ -76,7 +82,8 @@ impl ThreadedPool {
         let (reply_tx, reply_rx) = channel::<Reply>();
         let workers = buckets
             .into_iter()
-            .map(|mut bucket| {
+            .enumerate()
+            .map(|(wid, mut bucket)| {
                 let (cmd_tx, cmd_rx) = channel::<Cmd>();
                 let tx = reply_tx.clone();
                 let handle = std::thread::spawn(move || {
@@ -94,7 +101,8 @@ impl ThreadedPool {
                                     .iter_mut()
                                     .map(|c| c.eval_loss(&x))
                                     .sum();
-                                let _ = tx.send(Reply::Loss(s, bucket.len()));
+                                let _ = tx
+                                    .send(Reply::Loss(wid, s, bucket.len()));
                             }
                             Cmd::LossGrad { x } => {
                                 let mut g = vec![0.0; x.len()];
@@ -107,6 +115,7 @@ impl ThreadedPool {
                                     );
                                 }
                                 let _ = tx.send(Reply::LossGrad(
+                                    wid,
                                     s,
                                     g,
                                     bucket.len(),
@@ -152,6 +161,10 @@ impl ClientPool for ThreadedPool {
         self.dim
     }
 
+    fn kind_name(&self) -> &'static str {
+        "threaded"
+    }
+
     fn default_alpha(&self) -> f64 {
         self.default_alpha
     }
@@ -188,16 +201,22 @@ impl ClientPool for ThreadedPool {
     fn eval_loss(&mut self, x: &[f64]) -> f64 {
         let x = Arc::new(x.to_vec());
         self.broadcast(|| Cmd::EvalLoss { x: Arc::clone(&x) });
-        let mut sum = 0.0;
-        let mut cnt = 0usize;
+        // Collect in arrival order, reduce in worker order: the f64
+        // summation order is fixed, so repeated runs are bit-identical.
+        let mut parts: Vec<(usize, f64, usize)> =
+            Vec::with_capacity(self.workers.len());
         for _ in 0..self.workers.len() {
             match self.reply_rx.recv() {
-                Ok(Reply::Loss(s, c)) => {
-                    sum += s;
-                    cnt += c;
-                }
+                Ok(Reply::Loss(wid, s, c)) => parts.push((wid, s, c)),
                 _ => panic!("worker died"),
             }
+        }
+        parts.sort_by_key(|&(wid, _, _)| wid);
+        let mut sum = 0.0;
+        let mut cnt = 0usize;
+        for (_, s, c) in parts {
+            sum += s;
+            cnt += c;
         }
         debug_assert_eq!(cnt, self.n_clients);
         sum / self.n_clients as f64
@@ -206,18 +225,26 @@ impl ClientPool for ThreadedPool {
     fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
         let x = Arc::new(x.to_vec());
         self.broadcast(|| Cmd::LossGrad { x: Arc::clone(&x) });
-        let mut loss = 0.0;
-        let mut g = vec![0.0; x.len()];
-        let mut cnt = 0usize;
+        // Same deterministic reduction: sort partial sums by worker id
+        // before accumulating.
+        let mut parts: Vec<(usize, f64, Vec<f64>, usize)> =
+            Vec::with_capacity(self.workers.len());
         for _ in 0..self.workers.len() {
             match self.reply_rx.recv() {
-                Ok(Reply::LossGrad(s, gi, c)) => {
-                    loss += s;
-                    crate::linalg::vector::axpy(1.0, &gi, &mut g);
-                    cnt += c;
+                Ok(Reply::LossGrad(wid, s, gi, c)) => {
+                    parts.push((wid, s, gi, c))
                 }
                 _ => panic!("worker died"),
             }
+        }
+        parts.sort_by_key(|&(wid, _, _, _)| wid);
+        let mut loss = 0.0;
+        let mut g = vec![0.0; x.len()];
+        let mut cnt = 0usize;
+        for (_, s, gi, c) in parts {
+            loss += s;
+            crate::linalg::vector::axpy(1.0, &gi, &mut g);
+            cnt += c;
         }
         debug_assert_eq!(cnt, self.n_clients);
         let inv_n = 1.0 / self.n_clients as f64;

@@ -24,6 +24,12 @@ pub trait ClientPool {
     fn n_clients(&self) -> usize;
     fn dim(&self) -> usize;
 
+    /// Short implementation name ("seq", "threaded", "remote") for
+    /// logs and tests.
+    fn kind_name(&self) -> &'static str {
+        "pool"
+    }
+
     /// Theoretical α of the clients' compressor class.
     fn default_alpha(&self) -> f64;
 
@@ -73,6 +79,10 @@ impl ClientPool for SeqPool {
 
     fn dim(&self) -> usize {
         self.clients[0].dim()
+    }
+
+    fn kind_name(&self) -> &'static str {
+        "seq"
     }
 
     fn default_alpha(&self) -> f64 {

@@ -45,14 +45,14 @@ pub fn table1(cfg: &HarnessCfg) -> Result<String> {
     );
     for comp in TABLE1_ROWS {
         let sw = Stopwatch::start();
-        let mut pool = problem.threaded_pool(comp, K_MULT, cfg)?;
+        let mut pool = problem.pool(comp, K_MULT, cfg)?;
         let opts = Options {
             rounds: problem.rounds,
             warm_start: true,
             ..Default::default()
         };
         let trace = run_fednl_pool(
-            &mut pool,
+            pool.as_mut(),
             &opts,
             vec![0.0; problem.d()],
             &format!("FedNL/{comp}"),
@@ -106,9 +106,11 @@ pub fn table2(cfg: &HarnessCfg) -> Result<String> {
             ),
         ];
         for (name, run) in runs {
-            let mut pool = problem.seq_pool("identity", K_MULT, cfg)?;
+            // Default pool: multi-threaded simulator (--seq falls back
+            // to the sequential reference; identical trajectories).
+            let mut pool = problem.pool("identity", K_MULT, cfg)?;
             let sw = Stopwatch::start();
-            let tr = run(&mut pool, &bopts);
+            let tr = run(pool.as_mut(), &bopts);
             table.row(&[
                 name.to_string(),
                 format!("+{:.3}", problem.init_secs),
@@ -118,7 +120,7 @@ pub fn table2(cfg: &HarnessCfg) -> Result<String> {
         }
         // FedNL-LS with every compressor.
         for comp in TABLE1_ROWS {
-            let mut pool = problem.threaded_pool(comp, K_MULT, cfg)?;
+            let mut pool = problem.pool(comp, K_MULT, cfg)?;
             let opts = Options {
                 rounds: 100_000,
                 tol_grad: Some(tol),
@@ -127,7 +129,7 @@ pub fn table2(cfg: &HarnessCfg) -> Result<String> {
             };
             let sw = Stopwatch::start();
             let tr = run_fednl_ls_pool(
-                &mut pool,
+                pool.as_mut(),
                 &opts,
                 &LineSearchParams::default(),
                 vec![0.0; d],
@@ -343,13 +345,13 @@ pub fn table5(cfg: &HarnessCfg) -> Result<String> {
     ]);
     let problem = prepare_problem(&W8A, cfg)?;
     for comp in TABLE1_ROWS {
-        let mut pool = problem.threaded_pool(comp, K_MULT, cfg)?;
+        let mut pool = problem.pool(comp, K_MULT, cfg)?;
         let opts = Options {
             rounds: problem.rounds.min(20),
             ..Default::default()
         };
         let _ = run_fednl_pool(
-            &mut pool,
+            pool.as_mut(),
             &opts,
             vec![0.0; problem.d()],
             "rusage",
@@ -397,11 +399,11 @@ pub fn fig_single_node(fig: usize, cfg: &HarnessCfg) -> Result<String> {
     let mut table =
         Table::new(&["Compressor", "||∇f||_final", "MB up", "Rounds"]);
     for comp in TABLE1_ROWS {
-        let mut pool = problem.threaded_pool(comp, K_MULT, cfg)?;
+        let mut pool = problem.pool(comp, K_MULT, cfg)?;
         let opts =
             Options { rounds, warm_start: true, ..Default::default() };
         let tr = run_fednl_ls_pool(
-            &mut pool,
+            pool.as_mut(),
             &opts,
             &LineSearchParams { c: 0.49, gamma: 0.5, max_backtracks: 40 },
             vec![0.0; problem.d()],

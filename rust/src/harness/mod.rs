@@ -31,6 +31,9 @@ pub struct HarnessCfg {
     pub out_dir: String,
     /// Worker threads for the local simulator (0 = #cores).
     pub threads: usize,
+    /// Force the sequential reference pool (`--seq`); by default
+    /// experiments run on the multi-threaded simulator.
+    pub seq: bool,
     /// Use the PJRT (AOT JAX/Pallas) oracle instead of the native one.
     pub pjrt: bool,
     /// Artifact dir for PJRT oracles.
@@ -44,6 +47,7 @@ impl Default for HarnessCfg {
             scale: Scale::Ci,
             out_dir: "results".into(),
             threads: 0,
+            seq: false,
             pjrt: false,
             artifacts: "artifacts".into(),
             seed: 0x5EED,

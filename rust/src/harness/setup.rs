@@ -8,7 +8,7 @@ use anyhow::{Context, Result};
 use super::{HarnessCfg, Scale};
 use crate::algorithms::{ClientState, PPClientState};
 use crate::compressors::by_name;
-use crate::coordinator::{SeqPool, ThreadedPool};
+use crate::coordinator::{ClientPool, SeqPool, ThreadedPool};
 use crate::data::{
     generate_synthetic, parse_libsvm_bytes, write_libsvm, Dataset, SynthSpec,
 };
@@ -155,6 +155,28 @@ impl Problem {
             .collect()
     }
 
+    /// Default pool: the multi-threaded simulator, so single-node runs
+    /// use all cores out of the box. Falls back to the sequential
+    /// reference pool when it cannot help (one client) or when the user
+    /// forces it (`--seq` / `cfg.seq`). FedNL trajectories are
+    /// bit-identical across the two pools (round replies re-ordered by
+    /// client id before reduction); the baselines' pooled loss/grad
+    /// reductions are deterministic run-to-run on either pool, though
+    /// the threaded bucketing associates the f64 sums differently than
+    /// the flat sequential sum.
+    pub fn pool(
+        &self,
+        compressor: &str,
+        k_mult: usize,
+        cfg: &HarnessCfg,
+    ) -> Result<Box<dyn ClientPool>> {
+        if cfg.seq || self.n_clients == 1 {
+            Ok(Box::new(self.seq_pool(compressor, k_mult, cfg)?))
+        } else {
+            Ok(Box::new(self.threaded_pool(compressor, k_mult, cfg)?))
+        }
+    }
+
     /// Sequential pool.
     pub fn seq_pool(
         &self,
@@ -192,6 +214,19 @@ mod tests {
         assert!(p.init_secs > 0.0);
         let pool = p.seq_pool("topk", 8, &cfg).unwrap();
         assert_eq!(pool.clients.len(), 16);
+    }
+
+    #[test]
+    fn default_pool_is_threaded_unless_forced() {
+        let cfg = HarnessCfg::default();
+        let p = prepare_problem(&PHISHING, &cfg).unwrap();
+        let pool = p.pool("topk", 2, &cfg).unwrap();
+        assert_eq!(pool.kind_name(), "threaded");
+        assert_eq!(pool.n_clients(), 16);
+        let seq_cfg = HarnessCfg { seq: true, ..HarnessCfg::default() };
+        let pool = p.pool("topk", 2, &seq_cfg).unwrap();
+        assert_eq!(pool.kind_name(), "seq");
+        assert_eq!(pool.n_clients(), 16);
     }
 
     #[test]

@@ -8,6 +8,12 @@
 //!   FedNL-LS / FedNL-PP algorithm family, communication compressors
 //!   (TopK, RandK, RandSeqK, TopLEK, Natural, Identity), a single-node
 //!   multi-threaded simulator, and a multi-node TCP master/client runtime.
+//!   Its dense hot path (dot/AXPY, the §5.10 rank-1 Hessian accumulate,
+//!   the §5.7 fused sigmoid pass, the §5.11 compressor energy scans) runs
+//!   on [`linalg::simd`], a runtime-dispatched kernel layer: AVX2+FMA
+//!   intrinsics when the host CPU supports them, portable 4-way-unrolled
+//!   scalar fallbacks otherwise — no compile-time feature flags, fixed
+//!   reduction orders, bit-reproducible trajectories per machine.
 //! * **Layer 2 (python/compile/model.py)** — the logistic-regression oracle
 //!   (loss, gradient, Hessian) expressed in JAX, AOT-lowered to HLO text.
 //! * **Layer 1 (python/compile/kernels/)** — the oracle hot-spot as a Pallas
@@ -18,8 +24,9 @@
 //! iterative linear solvers, LIBSVM parsing, PRNGs, thread pools, TCP
 //! framing, CLI parsing, benchmarking) is implemented here from scratch on
 //! top of `std` only, mirroring the paper's "relies only on OS interfaces"
-//! design philosophy. The only external dependencies are the `xla` crate
-//! (PJRT bridge to the AOT artifacts) and `anyhow` (error handling).
+//! design philosophy. The only required external dependency is `anyhow`
+//! (error handling); the `xla` crate (PJRT bridge to the AOT artifacts) is
+//! optional behind the `xla` cargo feature, with a stub runtime otherwise.
 
 pub mod algorithms;
 pub mod baselines;

@@ -5,7 +5,8 @@
 //!   number of columns ... explicitly");
 //! * `sym_rank1_block_upper` accumulates the Hessian as a sum of
 //!   symmetric rank-1 matrices over the *upper triangle only*, 4 samples
-//!   per pass (§5.10 / v26+v52) — the single hottest kernel in FedNL;
+//!   per pass (§5.10 / v26+v52) — the single hottest kernel in FedNL,
+//!   dispatched through [`super::simd`] (AVX2+FMA when available);
 //! * `frobenius_sq_symmetric` exploits symmetry (v51);
 //! * `add_diag` is the careful diagonal-update of §5.8 (v14);
 //! * `matmul_tiled` is the cache-aware tiled multiply of §5.10, kept for
@@ -196,40 +197,13 @@ impl Mat {
     ///
     /// `samples` are row-slices of length d; `h` the per-sample weights.
     /// Call [`Mat::symmetrize_from_upper`] once after all batches.
+    /// Dispatches to the AVX2+FMA kernel when available (4 FMAs per 4
+    /// columns), with the 4-chain ILP scalar loop as fallback.
     pub fn sym_rank1_block_upper(&mut self, samples: &[&[f64]], h: &[f64]) {
         let d = self.rows;
         debug_assert_eq!(self.cols, d);
         debug_assert_eq!(samples.len(), h.len());
-        let mut b = 0;
-        while b + 4 <= samples.len() {
-            let (a0, a1, a2, a3) =
-                (samples[b], samples[b + 1], samples[b + 2], samples[b + 3]);
-            let (h0, h1, h2, h3) = (h[b], h[b + 1], h[b + 2], h[b + 3]);
-            for u in 0..d {
-                // Four independent scalar chains → ILP (paper v52).
-                let c0 = h0 * a0[u];
-                let c1 = h1 * a1[u];
-                let c2 = h2 * a2[u];
-                let c3 = h3 * a3[u];
-                let row = &mut self.data[u * d..(u + 1) * d];
-                for v in u..d {
-                    row[v] += c0 * a0[v] + c1 * a1[v] + c2 * a2[v] + c3 * a3[v];
-                }
-            }
-            b += 4;
-        }
-        while b < samples.len() {
-            let a = samples[b];
-            let hb = h[b];
-            for u in 0..d {
-                let c = hb * a[u];
-                let row = &mut self.data[u * d..(u + 1) * d];
-                for v in u..d {
-                    row[v] += c * a[v];
-                }
-            }
-            b += 1;
-        }
+        super::simd::sym_rank1_upper(&mut self.data, d, samples, h);
     }
 
     /// Mirror the upper triangle into the lower one (one pass, §5.10).

@@ -7,6 +7,11 @@
 //! substitution (§5.9), Gaussian elimination (the paper's pre-v10
 //! baseline, kept for the ablation bench), and the iterative solvers the
 //! paper ships (Jacobi, Gauss–Seidel, Conjugate Gradient).
+//!
+//! All hot primitives (dot, AXPY, rank-1 Hessian accumulate, compressor
+//! energy scans) route through [`simd`] — a runtime-dispatched kernel
+//! layer that selects AVX2+FMA intrinsics when the host supports them
+//! and falls back to portable 4-way-unrolled scalar loops otherwise.
 
 pub mod cholesky;
 pub mod eigen;
@@ -15,6 +20,7 @@ pub mod iterative;
 pub mod matrix;
 pub mod packed;
 pub mod qr;
+pub mod simd;
 pub mod vector;
 
 pub use cholesky::Cholesky;

@@ -7,6 +7,7 @@
 //! Index tables are precomputed once and reused every round (§5.11 v31).
 
 use super::matrix::Mat;
+use super::simd;
 
 // (see tests: packed_idx is validated against full enumeration)
 
@@ -30,18 +31,24 @@ pub fn packed_idx(d: usize, i: usize, j: usize) -> usize {
 pub struct PackedUpper {
     d: usize,
     pairs: Vec<(u32, u32)>,
+    /// Frobenius weight per packed index (1 diagonal, 2 off-diagonal),
+    /// stored densely so energy scans vectorize (§5.11 precomputed
+    /// tables + SIMD kernel layer).
+    weights: Vec<f64>,
 }
 
 impl PackedUpper {
     /// Build the index table for dimension `d` (done once per client).
     pub fn new(d: usize) -> Self {
         let mut pairs = Vec::with_capacity(packed_len(d));
+        let mut weights = Vec::with_capacity(packed_len(d));
         for i in 0..d {
             for j in i..d {
                 pairs.push((i as u32, j as u32));
+                weights.push(if i == j { 1.0 } else { 2.0 });
             }
         }
-        Self { d, pairs }
+        Self { d, pairs, weights }
     }
 
     #[inline]
@@ -64,6 +71,19 @@ impl PackedUpper {
     pub fn pair(&self, k: usize) -> (usize, usize) {
         let (i, j) = self.pairs[k];
         (i as usize, j as usize)
+    }
+
+    /// Frobenius weight of packed index `k` (1 diagonal, 2 off-diagonal).
+    #[inline]
+    pub fn weight(&self, k: usize) -> f64 {
+        self.weights[k]
+    }
+
+    /// Dense per-index Frobenius weights (length = `len()`), for
+    /// vectorized energy scans.
+    #[inline]
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
     }
 
     /// Extract `mat`'s upper triangle into `out` (len = packed_len(d)).
@@ -115,6 +135,8 @@ impl PackedUpper {
     /// y = M·x where M is the symmetric matrix with packed upper
     /// triangle `packed` (used by FedNL-PP's Hessian-corrected local
     /// gradient gᵢ = (Hᵢ + lᵢI)wᵢ − ∇fᵢ without densifying Hᵢ).
+    /// Each packed row contributes one contiguous dot (row · x[i..]) and
+    /// one contiguous AXPY (the mirrored lower part) — both dispatched.
     pub fn matvec_packed(&self, packed: &[f64], x: &[f64], y: &mut [f64]) {
         debug_assert_eq!(packed.len(), self.len());
         let d = self.d;
@@ -124,29 +146,20 @@ impl PackedUpper {
         }
         let mut k = 0;
         for i in 0..d {
-            // diagonal
-            y[i] += packed[k] * x[i];
-            k += 1;
-            for j in i + 1..d {
-                let v = packed[k];
-                y[i] += v * x[j];
-                y[j] += v * x[i];
-                k += 1;
-            }
+            let len = d - i;
+            let row = &packed[k..k + len];
+            y[i] += simd::dot(row, &x[i..]);
+            simd::axpy(x[i], &row[1..], &mut y[i + 1..]);
+            k += len;
         }
     }
 
     /// Frobenius-squared of the symmetric matrix whose packed form is
-    /// `packed`: diagonal entries count once, off-diagonal twice.
+    /// `packed`: diagonal entries count once, off-diagonal twice
+    /// (vectorized weighted-norm scan over the precomputed weights).
     pub fn frobenius_sq_packed(&self, packed: &[f64]) -> f64 {
         debug_assert_eq!(packed.len(), self.len());
-        let mut s = 0.0;
-        for (k, &v) in packed.iter().enumerate() {
-            let (i, j) = self.pairs[k];
-            let w = if i == j { 1.0 } else { 2.0 };
-            s += w * v * v;
-        }
-        s
+        simd::weighted_norm2_sq(&self.weights, packed)
     }
 }
 

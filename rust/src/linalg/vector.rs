@@ -1,39 +1,27 @@
 //! Dense-vector kernels over `&[f64]`.
 //!
-//! Hot paths are written as 4-way manually unrolled loops with
-//! independent accumulators (paper v32 "manually unroll loops for vector
-//! and vector-scalar operations"): the unrolling breaks the dependence
-//! chain so LLVM autovectorizes to SIMD adds/FMAs — the portable
-//! equivalent of the paper's AVX-512 intrinsics (§5.4).
+//! Hot operations (dot, AXPY, norms, fused add-scaled) delegate to the
+//! runtime-dispatched kernel layer in [`super::simd`]: AVX2+FMA
+//! intrinsics when the host CPU has them, portable 4-way manually
+//! unrolled loops otherwise (paper v32 "manually unroll loops for vector
+//! and vector-scalar operations" / §5.4 AVX intrinsics). The remaining
+//! operations are bandwidth-bound copies the autovectorizer already
+//! handles.
 
-/// Dot product with 4 independent accumulators.
+use super::simd;
+
+/// Dot product (runtime-dispatched SIMD).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for i in chunks * 4..n {
-        s += a[i] * b[i];
-    }
-    s
+    simd::dot(a, b)
 }
 
-/// `y += alpha * x` (AXPY).
+/// `y += alpha * x` (AXPY, runtime-dispatched SIMD).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += alpha * *xi;
-    }
+    simd::axpy(alpha, x, y)
 }
 
 /// `y = x` fast copy.
@@ -71,19 +59,19 @@ pub fn add(a: &[f64], b: &[f64], out: &mut [f64]) {
 /// Euclidean norm ‖x‖₂.
 #[inline]
 pub fn norm2(x: &[f64]) -> f64 {
-    dot(x, x).sqrt()
+    simd::norm2_sq(x).sqrt()
 }
 
 /// Squared Euclidean norm.
 #[inline]
 pub fn norm2_sq(x: &[f64]) -> f64 {
-    dot(x, x)
+    simd::norm2_sq(x)
 }
 
-/// ℓ∞ norm.
+/// ℓ∞ norm (runtime-dispatched abs-max scan).
 #[inline]
 pub fn norm_inf(x: &[f64]) -> f64 {
-    x.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+    simd::abs_max(x)
 }
 
 /// Set all entries to zero (allocation-free reset of reused buffers).
@@ -99,9 +87,7 @@ pub fn fill_zero(x: &mut [f64]) {
 #[inline]
 pub fn add_scaled(a: &[f64], alpha: f64, b: &[f64], out: &mut [f64]) {
     debug_assert!(a.len() == b.len() && b.len() == out.len());
-    for i in 0..a.len() {
-        out[i] = a[i] + alpha * b[i];
-    }
+    simd::add_scaled(a, alpha, b, out)
 }
 
 #[cfg(test)]
@@ -129,6 +115,18 @@ mod tests {
         let mut y = [10.0, 20.0, 30.0];
         axpy(2.0, &x, &mut y);
         assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn axpy_long_matches_scalar() {
+        let x: Vec<f64> = (0..131).map(|i| (i as f64).cos()).collect();
+        let mut y1: Vec<f64> = (0..131).map(|i| i as f64 * 0.1).collect();
+        let mut y2 = y1.clone();
+        axpy(-1.7, &x, &mut y1);
+        crate::linalg::simd::scalar::axpy(-1.7, &x, &mut y2);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() <= 4.0 * f64::EPSILON * a.abs().max(1.0));
+        }
     }
 
     #[test]

@@ -64,7 +64,7 @@ fn print_usage() {
          \x20            [--compressor topk] [--k-mult 8] [--lam 1e-3]\n\
          \x20 verify     --data FILE [--lam 1e-3]   (finite-difference oracle check)\n\
          \x20 experiment table1|table2|table3|table5|fig1..fig12|costmodel|all\n\
-         \x20            [--full] [--out-dir results] [--pjrt] [--threads N]\n\
+         \x20            [--full] [--out-dir results] [--pjrt] [--threads N] [--seq]\n\
          \x20 sysinfo"
     );
 }
@@ -362,6 +362,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         scale: if args.flag("full") { Scale::Full } else { Scale::Ci },
         out_dir: args.get_or("out-dir", "results").to_string(),
         threads: args.get_usize("threads", 0)?,
+        seq: args.flag("seq"),
         pjrt: args.flag("pjrt"),
         artifacts: args.get_or("artifacts", "artifacts").to_string(),
         seed: args.get_u64("seed", 0x5EED)?,

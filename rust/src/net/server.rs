@@ -167,6 +167,10 @@ impl ClientPool for RemotePool {
         self.d
     }
 
+    fn kind_name(&self) -> &'static str {
+        "remote"
+    }
+
     fn default_alpha(&self) -> f64 {
         // The master does not know the remote compressor class until it
         // asks; clients reply to SET_ALPHA(NaN) with their α via ACK

@@ -10,11 +10,14 @@
 //!   ×3.07);
 //! * labels absorbed into the data rows, no label vector (§5.13);
 //! * all buffers owned by the oracle and reused — zero allocation per
-//!   evaluation (§5.13).
+//!   evaluation (§5.13);
+//! * margin dots, the gradient AXPY sweep, the s·(1−s) weight scan and
+//!   the rank-1 Hessian accumulate all run on the runtime-dispatched
+//!   SIMD kernels in [`crate::linalg::simd`] (§5.4).
 
 use super::{sigmoid, softplus, Oracle};
 use crate::data::ClientShard;
-use crate::linalg::{vector, Mat};
+use crate::linalg::{simd, vector, Mat};
 
 /// Logistic-regression local oracle over one client shard.
 #[derive(Debug, Clone)]
@@ -56,12 +59,14 @@ impl LogisticOracle {
     }
 
     /// Stage 1: margins + sigmoids at `x` (shared by everything below).
+    /// One fused pass per sample row (§5.7): the margin dot product runs
+    /// on the dispatched SIMD kernel and the sigmoid is evaluated while
+    /// the row is still hot in cache.
     fn compute_margins(&mut self, x: &[f64]) {
         for j in 0..self.at.rows() {
-            self.z[j] = vector::dot(self.at.row(j), x);
-        }
-        for j in 0..self.z.len() {
-            self.sig_neg[j] = sigmoid(-self.z[j]);
+            let zj = simd::dot(self.at.row(j), x);
+            self.z[j] = zj;
+            self.sig_neg[j] = sigmoid(-zj);
         }
     }
 
@@ -86,11 +91,9 @@ impl LogisticOracle {
 
     fn hessian_from_margins(&mut self, h: &mut Mat) {
         debug_assert_eq!(h.rows(), self.dim());
-        // Hessian weights h_j = σ(z)σ(−z)/n from the cached sigmoids.
-        for j in 0..self.z.len() {
-            let s = self.sig_neg[j];
-            self.hw[j] = self.inv_n * s * (1.0 - s);
-        }
+        // Hessian weights h_j = σ(z)σ(−z)/n from the cached sigmoids —
+        // a vectorized s·(1−s) scan, no second transcendental (§5.7).
+        simd::sigmoid_variance_scan(&self.sig_neg, self.inv_n, &mut self.hw);
         h.fill_zero();
         let rows: Vec<&[f64]> =
             (0..self.at.rows()).map(|j| self.at.row(j)).collect();

@@ -7,7 +7,18 @@
 //! `PjRtClient::compile` produces a native executable per dataset shape.
 //! A client's design matrix is uploaded once as a device-resident buffer
 //! and reused every round; only the d-vector x travels per call.
+//!
+//! The real implementation needs the `xla` crate and is gated behind the
+//! off-by-default `xla` cargo feature so the crate builds with zero
+//! native dependencies; without it a stub with the identical public API
+//! returns a descriptive error from [`PjrtRuntime::load`] (callers
+//! already treat a load failure as "artifacts unavailable").
 
+#[cfg(feature = "xla")]
+pub mod pjrt;
+
+#[cfg(not(feature = "xla"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use pjrt::{PjrtOracle, PjrtRuntime, ShapeEntry};

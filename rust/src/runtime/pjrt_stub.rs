@@ -1,0 +1,87 @@
+//! API-compatible stub for the PJRT runtime, compiled when the `xla`
+//! cargo feature is off (the default). Keeps every call site building —
+//! `PjrtRuntime::load` fails with a descriptive error, which callers
+//! already handle as "artifacts unavailable" (the CLI prints a notice,
+//! the PJRT integration tests skip).
+
+use anyhow::{bail, Result};
+
+use crate::data::ClientShard;
+use crate::linalg::Mat;
+use crate::oracle::Oracle;
+
+/// One AOT-compiled shape from `artifacts/manifest.tsv`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShapeEntry {
+    pub name: String,
+    /// Problem dimension d (including intercept) the shape was built for.
+    pub d_raw: usize,
+    /// Max per-client samples the shape accommodates.
+    pub n_raw: usize,
+    pub d_pad: usize,
+    pub n_pad: usize,
+    pub oracle_file: String,
+    pub grad_file: String,
+}
+
+/// Stub PJRT client: construction always fails.
+pub struct PjrtRuntime {
+    pub entries: Vec<ShapeEntry>,
+}
+
+impl PjrtRuntime {
+    /// Always fails: PJRT support is not compiled into this build.
+    pub fn load(dir: &str) -> Result<Self> {
+        bail!(
+            "PJRT runtime unavailable: this binary was built without the \
+             `xla` cargo feature (artifacts dir requested: {dir}). \
+             Rebuild with `--features xla` (and the xla dependency) to \
+             use the AOT JAX/Pallas oracle."
+        )
+    }
+
+    /// Smallest artifact shape that fits a (d, n_i) client problem.
+    pub fn find_shape(&self, d: usize, n_i: usize) -> Option<&ShapeEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.d_pad >= d && e.n_pad >= n_i)
+            .min_by_key(|e| (e.d_pad, e.n_pad))
+    }
+
+    /// Always fails (a stub runtime cannot be constructed anyway).
+    pub fn oracle_for_shard(
+        &self,
+        _shard: &ClientShard,
+        _lam: f64,
+    ) -> Result<PjrtOracle> {
+        bail!("PJRT runtime unavailable (built without the `xla` feature)")
+    }
+}
+
+/// Uninstantiable stand-in for the PJRT-backed oracle.
+pub struct PjrtOracle {
+    _private: (),
+}
+
+impl Oracle for PjrtOracle {
+    fn dim(&self) -> usize {
+        unreachable!("stub PjrtOracle cannot be constructed")
+    }
+
+    fn loss(&mut self, _x: &[f64]) -> f64 {
+        unreachable!("stub PjrtOracle cannot be constructed")
+    }
+
+    fn loss_grad(&mut self, _x: &[f64], _g: &mut [f64]) -> f64 {
+        unreachable!("stub PjrtOracle cannot be constructed")
+    }
+
+    fn loss_grad_hessian(
+        &mut self,
+        _x: &[f64],
+        _g: &mut [f64],
+        _h: &mut Mat,
+    ) -> f64 {
+        unreachable!("stub PjrtOracle cannot be constructed")
+    }
+}

@@ -1,0 +1,275 @@
+//! SIMD kernel layer verification (tier-1):
+//!
+//! 1. **Equivalence**: every runtime-dispatched kernel must match its
+//!    portable scalar fallback within an n·ε-scaled tolerance (the two
+//!    paths may reassociate reductions, nothing more), across the edge
+//!    lengths 0, 1, 3, 4, 7, 64, 1000 that exercise empty inputs, pure
+//!    tails, exact lane multiples and long streams.
+//! 2. **Determinism**: two identical FedNL runs must produce
+//!    bit-identical trajectories — the dispatch decision is fixed per
+//!    process and every kernel reduces in a fixed order.
+
+use fednl::algorithms::{run_fednl, ClientState, Options};
+use fednl::compressors::by_name;
+use fednl::coordinator::{ClientPool, ThreadedPool};
+use fednl::data::{generate_synthetic, Dataset, LibsvmSample, SynthSpec};
+use fednl::linalg::simd::{self, scalar};
+use fednl::oracle::LogisticOracle;
+use fednl::rng::{Pcg64, Rng};
+
+const LENS: [usize; 7] = [0, 1, 3, 4, 7, 64, 1000];
+
+fn rvec(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    (0..n).map(|_| rng.next_gaussian()).collect()
+}
+
+/// Tolerance for comparing two summation orders of ~n terms with total
+/// absolute mass `mag`: a few n·ε, plus a denormal floor for n = 0.
+fn sum_tol(mag: f64, n: usize) -> f64 {
+    4.0 * (n as f64 + 1.0) * f64::EPSILON * mag + 1e-300
+}
+
+#[test]
+fn prop_dot_matches_scalar() {
+    for &n in &LENS {
+        let a = rvec(n, 1000 + n as u64);
+        let b = rvec(n, 2000 + n as u64);
+        let got = simd::dot(&a, &b);
+        let want = scalar::dot(&a, &b);
+        let mag: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+        assert!(
+            (got - want).abs() <= sum_tol(mag, n),
+            "dot n={n}: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn prop_axpy_matches_scalar() {
+    for &n in &LENS {
+        let x = rvec(n, 3000 + n as u64);
+        let mut y1 = rvec(n, 4000 + n as u64);
+        let mut y2 = y1.clone();
+        simd::axpy(-0.7312, &x, &mut y1);
+        scalar::axpy(-0.7312, &x, &mut y2);
+        for i in 0..n {
+            // Elementwise: one FMA vs one mul+add — ≤ 1 ULP apart.
+            let m = y2[i].abs().max((0.7312 * x[i]).abs());
+            assert!(
+                (y1[i] - y2[i]).abs() <= 4.0 * f64::EPSILON * m + 1e-300,
+                "axpy n={n} i={i}: {} vs {}",
+                y1[i],
+                y2[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_norm2_sq_matches_scalar() {
+    for &n in &LENS {
+        let x = rvec(n, 5000 + n as u64);
+        let got = simd::norm2_sq(&x);
+        let want = scalar::dot(&x, &x);
+        assert!(
+            (got - want).abs() <= sum_tol(want, n),
+            "norm2_sq n={n}: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn prop_add_scaled_matches_scalar() {
+    for &n in &LENS {
+        let a = rvec(n, 6000 + n as u64);
+        let b = rvec(n, 7000 + n as u64);
+        let mut o1 = vec![0.0; n];
+        let mut o2 = vec![0.0; n];
+        simd::add_scaled(&a, 1.618, &b, &mut o1);
+        scalar::add_scaled(&a, 1.618, &b, &mut o2);
+        for i in 0..n {
+            let m = o2[i].abs().max(1.0);
+            assert!(
+                (o1[i] - o2[i]).abs() <= 4.0 * f64::EPSILON * m,
+                "add_scaled n={n} i={i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_abs_max_is_exact() {
+    // max has no rounding: the dispatched scan must agree exactly.
+    for &n in &LENS {
+        let x = rvec(n, 8000 + n as u64);
+        assert_eq!(simd::abs_max(&x), scalar::abs_max(&x), "abs_max n={n}");
+    }
+}
+
+#[test]
+fn prop_energy_and_weighted_norm_match_scalar() {
+    for &n in &LENS {
+        let v = rvec(n, 9000 + n as u64);
+        let w: Vec<f64> =
+            (0..n).map(|i| if i % 3 == 0 { 1.0 } else { 2.0 }).collect();
+        let mut e1 = vec![0.0; n];
+        let mut e2 = vec![0.0; n];
+        simd::energy_scan(&w, &v, &mut e1);
+        scalar::energy_scan(&w, &v, &mut e2);
+        for i in 0..n {
+            assert!(
+                (e1[i] - e2[i]).abs() <= 4.0 * f64::EPSILON * e2[i].abs(),
+                "energy_scan n={n} i={i}"
+            );
+        }
+        let got = simd::weighted_norm2_sq(&w, &v);
+        let want = scalar::weighted_norm2_sq(&w, &v);
+        assert!(
+            (got - want).abs() <= sum_tol(want, n),
+            "weighted_norm2_sq n={n}: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn prop_sigmoid_variance_scan_matches_scalar() {
+    for &n in &LENS {
+        let mut rng = Pcg64::seed_from_u64(123 + n as u64);
+        let s: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+        let mut o1 = vec![0.0; n];
+        let mut o2 = vec![0.0; n];
+        simd::sigmoid_variance_scan(&s, 0.0125, &mut o1);
+        scalar::sigmoid_variance_scan(&s, 0.0125, &mut o2);
+        for i in 0..n {
+            assert!(
+                (o1[i] - o2[i]).abs() <= 4.0 * f64::EPSILON * o2[i].abs(),
+                "sigmoid_variance_scan n={n} i={i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_sym_rank1_matches_scalar_odd_shapes() {
+    // Odd d exercises every vector-tail length; odd sample counts
+    // exercise the 4-sample blocking tail.
+    for &d in &[1usize, 2, 3, 4, 5, 7, 8, 13, 31] {
+        for &ns in &[0usize, 1, 3, 4, 5, 8, 11] {
+            let rows: Vec<Vec<f64>> = (0..ns)
+                .map(|i| rvec(d, 77 + (d * 100 + i) as u64))
+                .collect();
+            let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+            let h = rvec(ns, 31337 + d as u64);
+            let mut m1 = vec![0.0; d * d];
+            let mut m2 = vec![0.0; d * d];
+            simd::sym_rank1_upper(&mut m1, d, &refs, &h);
+            scalar::sym_rank1_upper(&mut m2, d, &refs, &h);
+            for i in 0..d * d {
+                let (u, v) = (i / d, i % d);
+                let mag: f64 = (0..ns)
+                    .map(|s| (h[s] * rows[s][u] * rows[s][v]).abs())
+                    .sum();
+                assert!(
+                    (m1[i] - m2[i]).abs() <= sum_tol(mag, ns),
+                    "sym_rank1 d={d} ns={ns} ({u},{v}): {} vs {}",
+                    m1[i],
+                    m2[i]
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Determinism: identical runs → bit-identical trajectories.
+// ---------------------------------------------------------------------
+
+fn make_clients(n: usize, compressor: &str, seed: u64) -> (Vec<ClientState>, usize) {
+    let spec = SynthSpec {
+        d_raw: 9,
+        n_samples: n * 40,
+        density: 0.6,
+        noise: 1.0,
+        seed,
+    };
+    let synth = generate_synthetic(&spec);
+    let samples: Vec<LibsvmSample> = synth
+        .labels
+        .iter()
+        .zip(&synth.rows)
+        .map(|(l, r)| LibsvmSample { label: *l, features: r.clone() })
+        .collect();
+    let ds = Dataset::from_libsvm(&samples, spec.d_raw);
+    let d = ds.d;
+    let clients = ds
+        .split_even(n)
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .map(|(i, sh)| {
+            ClientState::new(
+                i,
+                Box::new(LogisticOracle::new(sh, 1e-3)),
+                by_name(compressor, d, 2, seed + i as u64).unwrap(),
+                None,
+            )
+        })
+        .collect();
+    (clients, d)
+}
+
+#[test]
+fn threaded_pool_reductions_are_bit_reproducible() {
+    // eval_loss / loss_grad reduce worker partial sums in worker order,
+    // so two identical pools must agree bitwise even though reply
+    // arrival order differs run to run.
+    let (c1, d) = make_clients(7, "topk", 0xAB);
+    let (c2, _) = make_clients(7, "topk", 0xAB);
+    let mut p1 = ThreadedPool::new(c1, 3);
+    let mut p2 = ThreadedPool::new(c2, 3);
+    let mut rng = Pcg64::seed_from_u64(99);
+    for _ in 0..5 {
+        let x: Vec<f64> = (0..d).map(|_| rng.next_gaussian() * 0.2).collect();
+        let l1 = p1.eval_loss(&x);
+        let l2 = p2.eval_loss(&x);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        let (f1, g1) = p1.loss_grad(&x);
+        let (f2, g2) = p2.loss_grad(&x);
+        assert_eq!(f1.to_bits(), f2.to_bits());
+        for (a, b) in g1.iter().zip(&g2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}
+
+#[test]
+fn fednl_trajectory_is_bit_reproducible() {
+    for compressor in ["topk", "toplek", "randseqk", "natural"] {
+        let (mut c1, d) = make_clients(5, compressor, 0xD5EED);
+        let (mut c2, _) = make_clients(5, compressor, 0xD5EED);
+        let opts = Options {
+            rounds: 12,
+            track_loss: true,
+            warm_start: true,
+            ..Default::default()
+        };
+        let t1 = run_fednl(&mut c1, &opts, vec![0.0; d]);
+        let t2 = run_fednl(&mut c2, &opts, vec![0.0; d]);
+        assert_eq!(t1.records.len(), t2.records.len(), "{compressor}");
+        for (r1, r2) in t1.records.iter().zip(&t2.records) {
+            assert_eq!(
+                r1.grad_norm.to_bits(),
+                r2.grad_norm.to_bits(),
+                "{compressor} round {}: grad norms diverge",
+                r1.round
+            );
+            assert_eq!(
+                r1.loss.to_bits(),
+                r2.loss.to_bits(),
+                "{compressor} round {}: losses diverge",
+                r1.round
+            );
+        }
+    }
+}
