@@ -129,6 +129,33 @@ fn bench_kernels() -> Vec<KernelRow> {
         });
     }
 
+    // §5.10 accumulate threaded across samples *within* one client
+    // (ROADMAP perf item): 1 thread vs all cores, bit-identical
+    // results. In this row "scalar_ns" = single-threaded dispatched
+    // kernel, "simd_ns" = row-block threaded kernel.
+    {
+        let n_i = 256;
+        let samples: Vec<Vec<f64>> = (0..n_i)
+            .map(|_| (0..d).map(|_| rng.next_gaussian()).collect())
+            .collect();
+        let refs: Vec<&[f64]> = samples.iter().map(|s| s.as_slice()).collect();
+        let h: Vec<f64> = (0..n_i).map(|_| rng.next_f64() + 0.1).collect();
+        let cores = fednl::utils::available_cores();
+        let mut m = vec![0.0; d * d];
+        let scalar_ns = time_min(2, 20, || {
+            simd::sym_rank1_upper_threaded(&mut m, d, &refs, &h, 1);
+        }) * 1e9;
+        let simd_ns = time_min(2, 20, || {
+            simd::sym_rank1_upper_threaded(&mut m, d, &refs, &h, cores);
+        }) * 1e9;
+        rows.push(KernelRow {
+            name: "sym_rank1_upper_mt",
+            n: d * n_i,
+            scalar_ns,
+            simd_ns,
+        });
+    }
+
     // Compressor scans over the packed upper triangle.
     {
         let v: Vec<f64> = (0..n_packed).map(|_| rng.next_gaussian()).collect();
@@ -283,11 +310,91 @@ fn main() {
     let n_i = 350;
     let shard = random_shard(d, n_i, 1);
 
-    if want("kernels") || json {
+    if want("kernels") {
         let rows = bench_kernels();
         if json {
             if let Err(e) = write_bench_json(&rows) {
                 eprintln!("failed to write BENCH_kernels.json: {e}");
+            }
+        }
+    }
+
+    if want("coordinator") {
+        // Streaming-pool wait vs aggregate wall-clock split: how much
+        // of a FedNL run the master spends blocked on `drain()` vs
+        // committing replies (buffer-and-commit). Emitted as
+        // BENCH_coordinator.json with --bench-json.
+        use fednl::algorithms::{run_fednl_pool, ClientState, Options};
+        use fednl::coordinator::{ClientPool, SeqPool, ThreadedPool};
+
+        let n_clients = 8;
+        let dd = 61;
+        let rounds = 40u64;
+        let make = || -> Vec<ClientState> {
+            (0..n_clients)
+                .map(|i| {
+                    let sh = random_shard(dd, 80, 100 + i as u64);
+                    ClientState::new(
+                        i,
+                        Box::new(LogisticOracle::new(sh, 1e-3)),
+                        by_name("topk", dd, 8, 500 + i as u64).unwrap(),
+                        None,
+                    )
+                })
+                .collect()
+        };
+        let opts = Options { rounds, track_loss: true, ..Default::default() };
+        let mut results: Vec<(String, f64, f64, f64)> = Vec::new();
+        {
+            let mut pool = SeqPool::new(make());
+            let tr = run_fednl_pool(&mut pool, &opts, vec![0.0; dd], "coord/seq");
+            results.push((
+                pool.kind_name().to_string(),
+                tr.wait_secs,
+                tr.aggregate_secs,
+                tr.total_elapsed(),
+            ));
+        }
+        {
+            let mut pool = ThreadedPool::new(make(), 0);
+            let tr =
+                run_fednl_pool(&mut pool, &opts, vec![0.0; dd], "coord/thr");
+            results.push((
+                pool.kind_name().to_string(),
+                tr.wait_secs,
+                tr.aggregate_secs,
+                tr.total_elapsed(),
+            ));
+        }
+        for (pool, wait, agg, total) in &results {
+            println!(
+                "coordinator/{pool:<10} rounds={rounds}  wait {:>9.3}ms  aggregate {:>9.3}ms  total {:>9.3}ms",
+                wait * 1e3,
+                agg * 1e3,
+                total * 1e3
+            );
+        }
+        if json {
+            let mut s = String::from("{\n");
+            s.push_str(&format!(
+                "  \"rounds\": {rounds}, \"n_clients\": {n_clients}, \"d\": {dd}, \"cores\": {},\n",
+                fednl::utils::available_cores()
+            ));
+            s.push_str("  \"pools\": [\n");
+            for (i, (pool, wait, agg, total)) in results.iter().enumerate() {
+                s.push_str(&format!(
+                    "    {{\"pool\": \"{pool}\", \"wait_s\": {wait:.6}, \"aggregate_s\": {agg:.6}, \"total_s\": {total:.6}}}{}\n",
+                    if i + 1 < results.len() { "," } else { "" }
+                ));
+            }
+            s.push_str("  ]\n}\n");
+            match std::fs::write("BENCH_coordinator.json", s) {
+                Ok(()) => println!(
+                    "coordinator timings written to BENCH_coordinator.json"
+                ),
+                Err(e) => {
+                    eprintln!("failed to write BENCH_coordinator.json: {e}")
+                }
             }
         }
     }

@@ -1,0 +1,453 @@
+//! The unified round engine: one driver loop for the whole FedNL
+//! family (Alg. 1–3), over any [`ClientPool`] transport.
+//!
+//! The engine owns everything the three per-algorithm drivers used to
+//! triplicate — α resolution, warm start, the streaming
+//! submit/drain/commit loop, byte accounting, trace recording and the
+//! tolerance check — and delegates what actually differs to a
+//! [`StepPolicy`]:
+//!
+//! * [`StepPolicy::Newton`] — FedNL (Alg. 1): aggregate, then
+//!   xᵏ⁺¹ = xᵏ − [system]⁻¹ ∇f(xᵏ);
+//! * [`StepPolicy::LineSearch`] — FedNL-LS (Alg. 2): the same
+//!   aggregation, then Armijo backtracking with `eval_loss` probes;
+//! * [`StepPolicy::PartialParticipation`] — FedNL-PP (Alg. 3): solve
+//!   xᵏ⁺¹ from the persistent (Hᵏ, lᵏ, gᵏ) *before* sampling, then
+//!   stream the τ participants' deltas into the persistent state.
+//!
+//! # Incremental aggregation and the buffer-and-commit rule
+//!
+//! Replies stream out of [`ClientPool::drain`] in arrival order; the
+//! engine hands each to a [`CommitBuffer`], which re-establishes the
+//! round's deterministic commit order (subset order; ascending client
+//! id for a full round) and applies a message the moment its turn
+//! arrives. Early arrivals are buffered, so aggregation work —
+//! `Hᵏ += (α/n)·Sᵢᵏ`, gradient partial sums — overlaps with the slower
+//! clients' compute and in-flight network transfer, while the
+//! resulting f64 reduction stays bit-identical to the blocking
+//! sort-then-aggregate it replaces.
+
+use super::fednl_ls::LineSearchParams;
+use super::{ClientMsg, Options, ServerState};
+use crate::coordinator::{ClientFamily, ClientPool};
+use crate::linalg::packed::PackedUpper;
+use crate::linalg::{vector, Cholesky, Mat};
+use crate::metrics::{RoundRecord, Trace};
+use crate::net::wire;
+use crate::rng::{sample_distinct, Pcg64};
+use crate::utils::Stopwatch;
+
+/// What the master does with an aggregated round (the only part of the
+/// driver loop that differs between Alg. 1, 2 and 3).
+#[derive(Clone, Copy)]
+pub enum StepPolicy<'a> {
+    /// FedNL (Alg. 1): plain Newton-type step under `Options::rule`.
+    Newton,
+    /// FedNL-LS (Alg. 2): Armijo backtracking line search.
+    LineSearch(&'a LineSearchParams),
+    /// FedNL-PP (Alg. 3): τ-subset participation with a seeded sampler
+    /// (the sampler lives here, in the driver — transports only see the
+    /// subset).
+    PartialParticipation { tau: usize, seed: u64 },
+}
+
+/// Buffer-and-commit: replies may arrive in any order, but `commit`
+/// sees them in the round's subset order (ascending client id for a
+/// full round). Early arrivals wait in `pending`.
+pub(crate) struct CommitBuffer {
+    /// client id → slot in the subset (usize::MAX = not participating).
+    slot_of: Vec<usize>,
+    pending: Vec<Option<ClientMsg>>,
+    next: usize,
+}
+
+impl CommitBuffer {
+    pub fn new(n_clients: usize, subset: Option<&[u32]>) -> Self {
+        let mut slot_of = vec![usize::MAX; n_clients];
+        let m = match subset {
+            None => {
+                for (i, s) in slot_of.iter_mut().enumerate() {
+                    *s = i;
+                }
+                n_clients
+            }
+            Some(s) => {
+                for (pos, &ci) in s.iter().enumerate() {
+                    slot_of[ci as usize] = pos;
+                }
+                s.len()
+            }
+        };
+        Self {
+            slot_of,
+            pending: (0..m).map(|_| None).collect(),
+            next: 0,
+        }
+    }
+
+    /// Accept one arrived message; fire `commit` for it and for any
+    /// buffered successors whose turn it unblocks.
+    pub fn offer(
+        &mut self,
+        m: ClientMsg,
+        mut commit: impl FnMut(&ClientMsg),
+    ) {
+        let slot = *self
+            .slot_of
+            .get(m.client_id)
+            .expect("client id out of range");
+        assert!(
+            slot != usize::MAX,
+            "reply from non-participating client {}",
+            m.client_id
+        );
+        // A slot below `next` was already committed (and taken back to
+        // None), so `is_none()` alone would silently swallow a late
+        // duplicate — check both sides of the commit ladder.
+        assert!(
+            slot >= self.next && self.pending[slot].is_none(),
+            "duplicate reply from client {}",
+            m.client_id
+        );
+        self.pending[slot] = Some(m);
+        while self.next < self.pending.len() {
+            match self.pending[self.next].take() {
+                Some(msg) => {
+                    commit(&msg);
+                    self.next += 1;
+                }
+                None => break,
+            }
+        }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.next == self.pending.len()
+    }
+}
+
+/// Run one member of the FedNL family against any client transport.
+pub fn run_engine(
+    pool: &mut dyn ClientPool,
+    opts: &Options,
+    policy: StepPolicy<'_>,
+    x0: Vec<f64>,
+    label: &str,
+) -> Trace {
+    match policy {
+        StepPolicy::PartialParticipation { tau, seed } => {
+            run_pp(pool, opts, tau, seed, x0, label)
+        }
+        _ => run_newton_family(pool, opts, policy, x0, label),
+    }
+}
+
+/// FedNL / FedNL-LS: full-participation rounds over a [`ServerState`].
+fn run_newton_family(
+    pool: &mut dyn ClientPool,
+    opts: &Options,
+    policy: StepPolicy<'_>,
+    x0: Vec<f64>,
+    label: &str,
+) -> Trace {
+    let ls: Option<&LineSearchParams> = match policy {
+        StepPolicy::LineSearch(p) => Some(p),
+        _ => None,
+    };
+    // The unified ROUND/MSG exchange is family-agnostic, so guard here:
+    // aggregating a PP client's deltas as absolute gradients would be
+    // silently wrong math on any transport.
+    assert_eq!(
+        pool.family(),
+        ClientFamily::FedNL,
+        "FedNL/FedNL-LS requires FedNL-family clients, but this pool \
+         serves FedNL-PP clients"
+    );
+    let d = pool.dim();
+    let n = pool.n_clients();
+    let alpha = opts.alpha.unwrap_or_else(|| pool.default_alpha());
+    pool.set_alpha(alpha);
+    let mut server = ServerState::new(d, n, alpha, x0);
+    let mut trace = Trace::new(label.to_string());
+    let sw = Stopwatch::start();
+    let mut bytes_up = 0u64;
+    let mut bytes_down = 0u64;
+    // (seconds blocked waiting for replies, seconds committing them) —
+    // the wait/aggregate wall-clock split reported by the coordinator
+    // bench.
+    let mut timing = (0.0f64, 0.0f64);
+
+    if opts.warm_start {
+        let x = server.x.clone();
+        bytes_down += wire::vec_frame_bytes(d) * n as u64;
+        let packed = pool.warm_start(&x);
+        bytes_up += packed
+            .iter()
+            .map(|p| wire::vec_frame_bytes(p.len()))
+            .sum::<u64>();
+        server.init_h_from_packed(&packed);
+    }
+
+    for round in 0..opts.rounds {
+        let x = server.x.clone();
+        bytes_down += wire::round_frame_bytes(d) * n as u64;
+        // LS always needs fᵢ(xᵏ) (Alg. 2 line 5).
+        let need_loss = opts.track_loss || ls.is_some();
+        pool.submit_round(&x, None, round, need_loss);
+        server.begin_round();
+        let mut buf = CommitBuffer::new(n, None);
+        drain_and_commit(pool, &mut buf, &mut bytes_up, &mut timing, |m| {
+            server.apply_msg(m)
+        });
+        let (grad, loss) = server.finish_round();
+        let gnorm = vector::norm2(&grad);
+        let (up, down) =
+            pool.transport_bytes().unwrap_or((bytes_up, bytes_down));
+        trace.push(RoundRecord {
+            round,
+            grad_norm: gnorm,
+            loss: loss.unwrap_or(f64::NAN),
+            bytes_up: up,
+            bytes_down: down,
+            elapsed: sw.elapsed_secs(),
+        });
+        if let Some(tol) = opts.tol_grad {
+            if gnorm <= tol {
+                break;
+            }
+        }
+        let dir = server.newton_direction(&grad, opts.rule);
+        match ls {
+            None => {
+                // Alg. 1 line 11.
+                vector::axpy(1.0, &dir, &mut server.x);
+            }
+            Some(ls) => {
+                // Alg. 2 line 12: backtracking; each probe is one
+                // f-reduction over the clients.
+                let f_x = loss.expect("LS requires client losses");
+                let slope = vector::dot(&grad, &dir); // < 0 for descent
+                let mut step = 1.0;
+                let mut trial = vec![0.0; d];
+                for _bt in 0..=ls.max_backtracks {
+                    vector::add_scaled(&server.x, step, &dir, &mut trial);
+                    let f_trial = pool.eval_loss(&trial);
+                    bytes_down += wire::vec_frame_bytes(d) * n as u64;
+                    bytes_up += wire::scalar_frame_bytes() * n as u64;
+                    if f_trial <= f_x + ls.c * step * slope {
+                        break;
+                    }
+                    step *= ls.gamma;
+                }
+                vector::add_scaled(
+                    &server.x.clone(),
+                    step,
+                    &dir,
+                    &mut server.x,
+                );
+            }
+        }
+    }
+    trace.wait_secs = timing.0;
+    trace.aggregate_secs = timing.1;
+    trace
+}
+
+/// FedNL-PP (Alg. 3): the model update happens *before* sampling; the
+/// server state (Hᵏ, lᵏ, gᵏ) is persistent and updated incrementally
+/// from the participants' deltas.
+fn run_pp(
+    pool: &mut dyn ClientPool,
+    opts: &Options,
+    tau: usize,
+    seed: u64,
+    x0: Vec<f64>,
+    label: &str,
+) -> Trace {
+    let n = pool.n_clients();
+    assert!(tau >= 1 && tau <= n, "tau must be in [1, n]");
+    assert_eq!(
+        pool.family(),
+        ClientFamily::PP,
+        "FedNL-PP requires FedNL-PP-family clients, but this pool \
+         serves FedNL clients"
+    );
+    let d = pool.dim();
+    let inv_n = 1.0 / n as f64;
+    let alpha = opts.alpha.unwrap_or_else(|| pool.default_alpha());
+    pool.set_alpha(alpha);
+    // Server init from client initials (line 2), H⁰ = 0.
+    let mut h = Mat::zeros(d, d);
+    let pu = PackedUpper::new(d);
+    let init = pool.init_state();
+    let mut l: f64 = init.iter().map(|(li, _)| li).sum::<f64>() * inv_n;
+    let mut g = vec![0.0; d];
+    for (_, gi) in &init {
+        vector::axpy(inv_n, gi, &mut g);
+    }
+    let mut x = x0;
+    let mut trace = Trace::new(label.to_string());
+    let sw = Stopwatch::start();
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut bytes_up =
+        wire::scalar_vec_frame_bytes(d) * init.len() as u64;
+    let mut bytes_down = wire::empty_frame_bytes() * init.len() as u64;
+    let mut timing = (0.0f64, 0.0f64);
+
+    for round in 0..opts.rounds {
+        // Line 4: xᵏ⁺¹ = (Hᵏ + lᵏI)⁻¹ gᵏ.
+        let mut shift = l.max(0.0);
+        for _ in 0..60 {
+            if let Some(ch) = Cholesky::factor(&h, shift) {
+                x = ch.solve_vec(&g);
+                break;
+            }
+            shift = (shift * 2.0).max(1e-12);
+        }
+        // Lines 5-6: sample Sᵏ, send xᵏ⁺¹ to the τ participants. The
+        // seeded sampler lives here in the driver; every transport
+        // receives the same subset in the same order.
+        let selected = sample_distinct(&mut rng, n, tau);
+        bytes_down += wire::round_frame_bytes(d) * tau as u64;
+        pool.submit_round(&x, Some(&selected), round, false);
+        let mut buf = CommitBuffer::new(n, Some(&selected));
+        drain_and_commit(pool, &mut buf, &mut bytes_up, &mut timing, |m| {
+            // Lines 18-20: incremental server state, committed in
+            // selection order.
+            vector::axpy(inv_n, &m.grad, &mut g);
+            l += inv_n * m.l_i;
+            pu.apply_sparse(
+                &mut h,
+                alpha * m.update.scale * inv_n,
+                &m.update.indices(),
+                &m.update.values,
+            );
+        });
+        // Out-of-band convergence measurement at xᵏ⁺¹ (the paper makes
+        // the same caveat: ∇f(xᵏ) is not part of PP training). Because
+        // this probe is measurement-only, it does NOT count toward the
+        // communicated-bytes totals (paper App. E.1 accounting) — and
+        // for the same reason the PP trace always reports the logical
+        // counters, since a transport's metered totals would include
+        // the probe's LOSS_GRAD/GRAD frames.
+        let (loss, grad) = pool.loss_grad(&x);
+        let gnorm = vector::norm2(&grad);
+        let (up, down) = (bytes_up, bytes_down);
+        trace.push(RoundRecord {
+            round,
+            grad_norm: gnorm,
+            loss,
+            bytes_up: up,
+            bytes_down: down,
+            elapsed: sw.elapsed_secs(),
+        });
+        if let Some(tol) = opts.tol_grad {
+            if gnorm <= tol {
+                break;
+            }
+        }
+    }
+    trace.wait_secs = timing.0;
+    trace.aggregate_secs = timing.1;
+    trace
+}
+
+/// Pump the pool until the round completes, feeding every arrival into
+/// the commit buffer. `timing` accumulates (wait, aggregate) seconds.
+fn drain_and_commit(
+    pool: &mut dyn ClientPool,
+    buf: &mut CommitBuffer,
+    bytes_up: &mut u64,
+    timing: &mut (f64, f64),
+    mut commit: impl FnMut(&ClientMsg),
+) {
+    loop {
+        let sw = Stopwatch::start();
+        let batch = pool.drain();
+        timing.0 += sw.elapsed_secs();
+        if batch.is_empty() {
+            break;
+        }
+        let sw = Stopwatch::start();
+        for m in batch {
+            *bytes_up += m.wire_bytes();
+            buf.offer(m, &mut commit);
+        }
+        timing.1 += sw.elapsed_secs();
+    }
+    assert!(buf.is_complete(), "round ended with missing client replies");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::{Compressed, IndexPayload, ValueEncoding};
+
+    fn msg(id: usize) -> ClientMsg {
+        ClientMsg {
+            client_id: id,
+            grad: vec![id as f64],
+            update: Compressed {
+                payload: IndexPayload::Explicit(Vec::new()),
+                values: Vec::new(),
+                scale: 1.0,
+                encoding: ValueEncoding::F64,
+                n: 4,
+            },
+            l_i: 0.0,
+            loss: None,
+        }
+    }
+
+    #[test]
+    fn commit_buffer_full_round_commits_in_client_order() {
+        let mut buf = CommitBuffer::new(4, None);
+        let mut order = Vec::new();
+        // Arrival order 2, 0, 3, 1 → commit order 0, 1, 2, 3.
+        for id in [2usize, 0, 3, 1] {
+            buf.offer(msg(id), |m| order.push(m.client_id));
+        }
+        assert!(buf.is_complete());
+        assert_eq!(order, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn commit_buffer_subset_commits_in_selection_order() {
+        // Subset [3, 1, 2]: commit order must follow the sampler, not
+        // ascending ids (matches the sequential PP reference).
+        let subset = [3u32, 1, 2];
+        let mut buf = CommitBuffer::new(5, Some(&subset));
+        let mut order = Vec::new();
+        for id in [2usize, 3, 1] {
+            buf.offer(msg(id), |m| order.push(m.client_id));
+        }
+        assert!(buf.is_complete());
+        assert_eq!(order, vec![3, 1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-participating")]
+    fn commit_buffer_rejects_foreign_client() {
+        let subset = [1u32];
+        let mut buf = CommitBuffer::new(3, Some(&subset));
+        buf.offer(msg(2), |_| {});
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn commit_buffer_rejects_duplicates() {
+        let mut buf = CommitBuffer::new(2, None);
+        buf.offer(msg(1), |_| {});
+        buf.offer(msg(1), |_| {});
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn commit_buffer_rejects_duplicates_after_commit() {
+        // The slot was committed (taken back to None) — the guard must
+        // still fire rather than silently re-buffering the message.
+        let mut buf = CommitBuffer::new(2, None);
+        buf.offer(msg(0), |_| {});
+        buf.offer(msg(0), |_| {});
+    }
+}

@@ -3,19 +3,19 @@
 //! One round:
 //! 1. every client evaluates (∇fᵢ, ∇²fᵢ) at xᵏ, sends ∇fᵢ,
 //!    Sᵢᵏ = Cᵢᵏ(∇²fᵢ − Hᵢᵏ) and lᵢᵏ, and updates Hᵢᵏ⁺¹ = Hᵢᵏ + αSᵢᵏ;
-//! 2. the master averages gradients and lᵢ, applies the sparse Hessian
-//!    updates, and takes the Newton-type step of line 11.
+//! 2. the master folds each message into ∇f / lᵏ / Hᵏ **as it
+//!    arrives** (buffer-and-commit, ascending client id) and takes the
+//!    Newton-type step of line 11.
 //!
-//! The driver is transport-generic: it talks to a
-//! [`crate::coordinator::ClientPool`], so the sequential reference pool,
-//! the multi-threaded simulator and the TCP master all execute the
-//! exact same algorithm.
+//! The driver is a thin wrapper over the unified round engine
+//! ([`crate::algorithms::engine`]) with the plain-Newton step policy,
+//! so the sequential reference pool, the multi-threaded simulator and
+//! the TCP master all execute the exact same algorithm.
 
-use super::{ClientState, Options, ServerState};
-use crate::coordinator::ClientPool;
-use crate::linalg::vector;
-use crate::metrics::{RoundRecord, Trace};
-use crate::utils::Stopwatch;
+use super::engine::{run_engine, StepPolicy};
+use super::{ClientState, Options};
+use crate::coordinator::{ClientPool, SlicePool};
+use crate::metrics::Trace;
 
 /// Run FedNL against any client transport.
 pub fn run_fednl_pool(
@@ -24,48 +24,7 @@ pub fn run_fednl_pool(
     x0: Vec<f64>,
     label: &str,
 ) -> Trace {
-    let d = pool.dim();
-    let alpha = opts.alpha.unwrap_or_else(|| pool.default_alpha());
-    pool.set_alpha(alpha);
-    let mut server = ServerState::new(d, pool.n_clients(), alpha, x0);
-    let mut trace = Trace::new(label.to_string());
-    let sw = Stopwatch::start();
-    let mut bytes_up = 0u64;
-    let mut bytes_down = 0u64;
-
-    if opts.warm_start {
-        let x = server.x.clone();
-        let packed = pool.warm_start(&x);
-        bytes_up += packed.iter().map(|p| p.len() as u64 * 8).sum::<u64>();
-        server.init_h_from_packed(&packed);
-    }
-
-    for round in 0..opts.rounds {
-        let x = server.x.clone();
-        bytes_down += (x.len() as u64 * 8) * pool.n_clients() as u64;
-        let msgs = pool.round(&x, round, opts.track_loss);
-        bytes_up += msgs.iter().map(|m| m.wire_bytes()).sum::<u64>();
-        let (grad, loss) = server.aggregate(&msgs);
-        let gnorm = vector::norm2(&grad);
-        let (up, down) =
-            pool.transport_bytes().unwrap_or((bytes_up, bytes_down));
-        trace.push(RoundRecord {
-            round,
-            grad_norm: gnorm,
-            loss: loss.unwrap_or(f64::NAN),
-            bytes_up: up,
-            bytes_down: down,
-            elapsed: sw.elapsed_secs(),
-        });
-        if let Some(tol) = opts.tol_grad {
-            if gnorm <= tol {
-                break;
-            }
-        }
-        let dir = server.newton_direction(&grad, opts.rule);
-        vector::axpy(1.0, &dir, &mut server.x);
-    }
-    trace
+    run_engine(pool, opts, StepPolicy::Newton, x0, label)
 }
 
 /// Convenience: run FedNL over in-process clients, sequentially.
@@ -76,60 +35,7 @@ pub fn run_fednl(
 ) -> Trace {
     assert!(!clients.is_empty());
     let label = format!("FedNL/{}", clients[0].compressor.name());
-    run_fednl_pool(&mut SlicePool(clients), opts, x0, &label)
-}
-
-/// Adapter: a mutable client slice as a sequential pool.
-pub(crate) struct SlicePool<'a>(pub &'a mut [ClientState]);
-
-impl ClientPool for SlicePool<'_> {
-    fn n_clients(&self) -> usize {
-        self.0.len()
-    }
-
-    fn dim(&self) -> usize {
-        self.0[0].dim()
-    }
-
-    fn default_alpha(&self) -> f64 {
-        self.0[0].alpha
-    }
-
-    fn set_alpha(&mut self, alpha: f64) {
-        for c in self.0.iter_mut() {
-            c.alpha = alpha;
-        }
-    }
-
-    fn round(
-        &mut self,
-        x: &[f64],
-        round: u64,
-        need_loss: bool,
-    ) -> Vec<super::ClientMsg> {
-        self.0.iter_mut().map(|c| c.round(x, round, need_loss)).collect()
-    }
-
-    fn eval_loss(&mut self, x: &[f64]) -> f64 {
-        let n = self.0.len() as f64;
-        self.0.iter_mut().map(|c| c.eval_loss(x)).sum::<f64>() / n
-    }
-
-    fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {
-        self.0.iter_mut().map(|c| c.warm_start(x)).collect()
-    }
-
-    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
-        let inv_n = 1.0 / self.0.len() as f64;
-        let mut g = vec![0.0; x.len()];
-        let mut loss = 0.0;
-        for c in self.0.iter_mut() {
-            let (l, gi) = c.eval_loss_grad(x);
-            loss += l;
-            crate::linalg::vector::axpy(inv_n, &gi, &mut g);
-        }
-        (loss * inv_n, g)
-    }
+    run_fednl_pool(&mut SlicePool::new(clients), opts, x0, &label)
 }
 
 #[cfg(test)]

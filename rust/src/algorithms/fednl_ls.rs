@@ -1,19 +1,19 @@
 //! FedNL-LS (paper Algorithm 2): FedNL with backtracking line search —
 //! the globalization variant whose step needs no problem constants.
 //!
-//! Per round, after the usual FedNL aggregation the master computes the
-//! search direction dᵏ = −[Hᵏ]⁻¹ ∇f(xᵏ) and finds the smallest s ≥ 0
-//! with the Armijo condition
-//! f(xᵏ + γˢ dᵏ) ≤ f(xᵏ) + c·γˢ⟨∇f(xᵏ), dᵏ⟩, each probe costing one
-//! f-reduction over the clients (extra communication the paper measures
-//! as the ×1.14 slowdown of LS). Defaults c = 0.49, γ = 0.5.
+//! Per round, after the usual (streamed, incrementally committed) FedNL
+//! aggregation the master computes the search direction
+//! dᵏ = −[Hᵏ]⁻¹ ∇f(xᵏ) and finds the smallest s ≥ 0 with the Armijo
+//! condition f(xᵏ + γˢ dᵏ) ≤ f(xᵏ) + c·γˢ⟨∇f(xᵏ), dᵏ⟩, each probe
+//! costing one f-reduction over the clients (extra communication the
+//! paper measures as the ×1.14 slowdown of LS). Defaults c = 0.49,
+//! γ = 0.5. The loop itself lives in the unified round engine
+//! ([`crate::algorithms::engine`]) under the line-search step policy.
 
-use super::fednl::SlicePool;
-use super::{ClientState, Options, ServerState};
-use crate::coordinator::ClientPool;
-use crate::linalg::vector;
-use crate::metrics::{RoundRecord, Trace};
-use crate::utils::Stopwatch;
+use super::engine::{run_engine, StepPolicy};
+use super::{ClientState, Options};
+use crate::coordinator::{ClientPool, SlicePool};
+use crate::metrics::Trace;
 
 /// Armijo backtracking parameters (c ∈ (0, ½], γ ∈ (0, 1)).
 #[derive(Debug, Clone, Copy)]
@@ -38,65 +38,7 @@ pub fn run_fednl_ls_pool(
     x0: Vec<f64>,
     label: &str,
 ) -> Trace {
-    let d = pool.dim();
-    let n = pool.n_clients();
-    let alpha = opts.alpha.unwrap_or_else(|| pool.default_alpha());
-    pool.set_alpha(alpha);
-    let mut server = ServerState::new(d, n, alpha, x0);
-    let mut trace = Trace::new(label.to_string());
-    let sw = Stopwatch::start();
-    let mut bytes_up = 0u64;
-    let mut bytes_down = 0u64;
-
-    if opts.warm_start {
-        let x = server.x.clone();
-        let packed = pool.warm_start(&x);
-        bytes_up += packed.iter().map(|p| p.len() as u64 * 8).sum::<u64>();
-        server.init_h_from_packed(&packed);
-    }
-
-    for round in 0..opts.rounds {
-        let x = server.x.clone();
-        bytes_down += (x.len() as u64 * 8) * n as u64;
-        // LS always needs fᵢ(xᵏ) (Alg. 2 line 5).
-        let msgs = pool.round(&x, round, true);
-        bytes_up += msgs.iter().map(|m| m.wire_bytes()).sum::<u64>();
-        let (grad, loss) = server.aggregate(&msgs);
-        let f_x = loss.expect("LS requires client losses");
-        let gnorm = vector::norm2(&grad);
-        let (up, down) =
-            pool.transport_bytes().unwrap_or((bytes_up, bytes_down));
-        trace.push(RoundRecord {
-            round,
-            grad_norm: gnorm,
-            loss: f_x,
-            bytes_up: up,
-            bytes_down: down,
-            elapsed: sw.elapsed_secs(),
-        });
-        if let Some(tol) = opts.tol_grad {
-            if gnorm <= tol {
-                break;
-            }
-        }
-        let dir = server.newton_direction(&grad, opts.rule);
-        let slope = vector::dot(&grad, &dir); // < 0 for a descent dir
-        // Backtracking (Alg. 2 line 12). Each probe = one f-reduction.
-        let mut step = 1.0;
-        let mut trial = vec![0.0; d];
-        for _bt in 0..=ls.max_backtracks {
-            vector::add_scaled(&server.x, step, &dir, &mut trial);
-            let f_trial = pool.eval_loss(&trial);
-            bytes_down += (d as u64 * 8) * n as u64;
-            bytes_up += 8 * n as u64;
-            if f_trial <= f_x + ls.c * step * slope {
-                break;
-            }
-            step *= ls.gamma;
-        }
-        vector::add_scaled(&server.x.clone(), step, &dir, &mut server.x);
-    }
-    trace
+    run_engine(pool, opts, StepPolicy::LineSearch(ls), x0, label)
 }
 
 /// Convenience: FedNL-LS over in-process clients, sequentially.
@@ -108,7 +50,7 @@ pub fn run_fednl_ls(
 ) -> Trace {
     assert!(!clients.is_empty());
     let label = format!("FedNL-LS/{}", clients[0].compressor.name());
-    run_fednl_ls_pool(&mut SlicePool(clients), opts, ls, x0, &label)
+    run_fednl_ls_pool(&mut SlicePool::new(clients), opts, ls, x0, &label)
 }
 
 #[cfg(test)]
@@ -206,18 +148,16 @@ mod tests {
         let mut thr = crate::coordinator::ThreadedPool::new(c2, 2);
         let t2 = run_fednl_ls_pool(&mut thr, &opts, &ls, vec![0.0; d], "x");
         for (a, b) in t1.records.iter().zip(&t2.records) {
-            // eval_loss reduction order differs between transports
-            // (per-worker partial sums), so line-search probes can
-            // differ in the last ulp; trajectories must still agree to
-            // near machine precision.
-            assert!(
-                (a.grad_norm - b.grad_norm).abs()
-                    <= 1e-9 * (1.0 + a.grad_norm),
+            // Every pool reduction (round messages AND line-search
+            // eval_loss probes) commits in ascending client-id order,
+            // so threaded trajectories are bit-identical to the
+            // sequential reference — not merely close.
+            assert_eq!(
+                a.grad_norm, b.grad_norm,
                 "round {}: {} vs {}",
-                a.round,
-                a.grad_norm,
-                b.grad_norm
+                a.round, a.grad_norm, b.grad_norm
             );
+            assert_eq!(a.loss, b.loss, "round {}", a.round);
         }
     }
 }

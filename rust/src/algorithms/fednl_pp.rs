@@ -8,18 +8,26 @@
 //! gradient" (Hᵢ + lᵢI)wᵢ − ∇fᵢ(wᵢ), evaluated on the packed Hᵢ without
 //! densifying.
 //!
+//! Since the streaming-coordination refactor PP is an ordinary client
+//! of the unified round engine: a [`PPClientState`] implements
+//! [`crate::coordinator::PoolClient`] (its round = Alg. 3's
+//! `participate`, its message fields carry the deltas), so FedNL-PP
+//! runs over **every** [`crate::coordinator::ClientPool`] transport —
+//! `SeqPool`, `ThreadedPool` and the TCP `RemotePool` — with the seeded
+//! participation sampler living in the driver.
+//!
 //! The trace's ‖∇f(xᵏ)‖ is computed out-of-band over all clients — the
 //! paper makes the same caveat ("FedNL-PP lacks explicit support for the
 //! computation of ∇f(xᵏ) as part of the training process").
 
-use super::Options;
+use super::engine::{run_engine, StepPolicy};
+use super::{ClientMsg, Options};
 use crate::compressors::Compressor;
+use crate::coordinator::{ClientPool, SlicePool};
 use crate::linalg::packed::PackedUpper;
-use crate::linalg::{vector, Cholesky, Mat};
-use crate::metrics::{RoundRecord, Trace};
+use crate::linalg::{vector, Mat};
+use crate::metrics::Trace;
 use crate::oracle::Oracle;
-use crate::rng::{sample_distinct, Pcg64};
-use crate::utils::Stopwatch;
 
 /// Per-client FedNL-PP state (Alg. 3 initialization, line 2).
 pub struct PPClientState {
@@ -38,14 +46,6 @@ pub struct PPClientState {
     hess_packed: Vec<f64>,
     diff: Vec<f64>,
     grad_buf: Vec<f64>,
-}
-
-/// Participant → server message (Alg. 3 line 13).
-pub struct PPMsg {
-    pub client_id: usize,
-    pub update: crate::compressors::Compressed,
-    pub dl: f64,
-    pub dg: Vec<f64>,
 }
 
 impl PPClientState {
@@ -94,10 +94,17 @@ impl PPClientState {
     }
 
     /// Participate in round `round` with new model `x` (lines 9–13).
-    pub fn participate(&mut self, x: &[f64], round: u64) -> PPMsg {
+    /// Returns the unified [`ClientMsg`]: `grad` carries Δgᵢ and `l_i`
+    /// carries Δlᵢ (the server adds them to its running sums).
+    pub fn participate(
+        &mut self,
+        x: &[f64],
+        round: u64,
+        need_loss: bool,
+    ) -> ClientMsg {
         let d = self.dim();
         self.w.copy_from_slice(x);
-        let _ = self.oracle.loss_grad_hessian(
+        let loss = self.oracle.loss_grad_hessian(
             x,
             &mut self.grad_buf,
             &mut self.hess,
@@ -124,161 +131,34 @@ impl PPClientState {
         vector::sub(&g_new, &self.g_i, &mut dg);
         self.l_i = l_new;
         self.g_i = g_new;
-        PPMsg { client_id: self.id, update, dl, dg }
-    }
-
-    /// Out-of-band full-gradient contribution at `x` (trace only).
-    pub fn grad_at(&mut self, x: &[f64], g: &mut [f64]) -> f64 {
-        self.oracle.loss_grad(x, g)
-    }
-}
-
-/// Transport abstraction for FedNL-PP (in-process slice or TCP master).
-pub trait PPTransport {
-    fn n_clients(&self) -> usize;
-    fn dim(&self) -> usize;
-    fn default_alpha(&self) -> f64;
-    fn set_alpha(&mut self, a: f64);
-    /// Collect (lᵢ⁰, gᵢ⁰) from every client (Alg. 3 line 2).
-    fn pp_init(&mut self) -> Vec<(f64, Vec<f64>)>;
-    /// Run the participant round on the selected clients.
-    fn pp_round(&mut self, x: &[f64], round: u64, selected: &[u32])
-        -> Vec<PPMsg>;
-    /// Out-of-band (f, ∇f) reduction over all clients (trace only).
-    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>);
-    fn transport_bytes(&self) -> Option<(u64, u64)> {
-        None
-    }
-}
-
-/// In-process PP transport over a mutable client slice.
-pub struct PPSlice<'a>(pub &'a mut [PPClientState]);
-
-impl PPTransport for PPSlice<'_> {
-    fn n_clients(&self) -> usize {
-        self.0.len()
-    }
-
-    fn dim(&self) -> usize {
-        self.0[0].dim()
-    }
-
-    fn default_alpha(&self) -> f64 {
-        self.0[0].alpha
-    }
-
-    fn set_alpha(&mut self, a: f64) {
-        for c in self.0.iter_mut() {
-            c.alpha = a;
+        ClientMsg {
+            client_id: self.id,
+            grad: dg,
+            update,
+            l_i: dl,
+            loss: if need_loss { Some(loss) } else { None },
         }
-    }
-
-    fn pp_init(&mut self) -> Vec<(f64, Vec<f64>)> {
-        self.0.iter().map(|c| (c.l_i, c.g_i.clone())).collect()
-    }
-
-    fn pp_round(
-        &mut self,
-        x: &[f64],
-        round: u64,
-        selected: &[u32],
-    ) -> Vec<PPMsg> {
-        selected
-            .iter()
-            .map(|&ci| self.0[ci as usize].participate(x, round))
-            .collect()
-    }
-
-    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
-        let inv_n = 1.0 / self.0.len() as f64;
-        let mut g = vec![0.0; x.len()];
-        let mut buf = vec![0.0; x.len()];
-        let mut loss = 0.0;
-        for c in self.0.iter_mut() {
-            loss += c.grad_at(x, &mut buf);
-            vector::axpy(inv_n, &buf, &mut g);
-        }
-        (loss * inv_n, g)
     }
 }
 
 /// Run FedNL-PP with `tau` participating clients per round, over any
-/// transport.
-pub fn run_fednl_pp_transport(
-    transport: &mut dyn PPTransport,
+/// client transport (the pool's clients must be [`PPClientState`]s —
+/// in-process — or TCP clients running in PP mode).
+pub fn run_fednl_pp_pool(
+    pool: &mut dyn ClientPool,
     opts: &Options,
     tau: usize,
     seed: u64,
     x0: Vec<f64>,
     label: &str,
 ) -> Trace {
-    let n = transport.n_clients();
-    assert!(tau >= 1 && tau <= n, "tau must be in [1, n]");
-    let d = transport.dim();
-    let inv_n = 1.0 / n as f64;
-    let alpha = opts.alpha.unwrap_or_else(|| transport.default_alpha());
-    transport.set_alpha(alpha);
-    // Server init from client initials (line 2), H⁰ = 0.
-    let mut h = Mat::zeros(d, d);
-    let pu = PackedUpper::new(d);
-    let init = transport.pp_init();
-    let mut l: f64 = init.iter().map(|(li, _)| li).sum::<f64>() * inv_n;
-    let mut g = vec![0.0; d];
-    for (_, gi) in &init {
-        vector::axpy(inv_n, gi, &mut g);
-    }
-    let mut x = x0;
-    let mut trace = Trace::new(label.to_string());
-    let sw = Stopwatch::start();
-    let mut rng = Pcg64::seed_from_u64(seed);
-    let mut bytes_up = init.len() as u64 * (8 + d as u64 * 8);
-    let mut bytes_down = 0u64;
-
-    for round in 0..opts.rounds {
-        // Line 4: xᵏ⁺¹ = (Hᵏ + lᵏI)⁻¹ gᵏ.
-        let mut shift = l.max(0.0);
-        for _ in 0..60 {
-            if let Some(ch) = Cholesky::factor(&h, shift) {
-                x = ch.solve_vec(&g);
-                break;
-            }
-            shift = (shift * 2.0).max(1e-12);
-        }
-        // Lines 5-6: sample Sᵏ, send xᵏ⁺¹ to the τ participants.
-        let selected = sample_distinct(&mut rng, n, tau);
-        bytes_down += (d as u64 * 8) * tau as u64;
-        for msg in transport.pp_round(&x, round, &selected) {
-            bytes_up += msg.update.wire_bytes() + 8 + msg.dg.len() as u64 * 8;
-            // Lines 18-20: incremental server state.
-            vector::axpy(inv_n, &msg.dg, &mut g);
-            l += inv_n * msg.dl;
-            pu.apply_sparse(
-                &mut h,
-                alpha * msg.update.scale * inv_n,
-                &msg.update.indices(),
-                &msg.update.values,
-            );
-        }
-        // Out-of-band convergence measurement at xᵏ⁺¹.
-        let (loss, grad) = transport.loss_grad(&x);
-        let gnorm = vector::norm2(&grad);
-        let (up, down) =
-            transport.transport_bytes().unwrap_or((bytes_up, bytes_down));
-        trace.push(RoundRecord {
-            round,
-            grad_norm: gnorm,
-            loss,
-            bytes_up: up,
-            bytes_down: down,
-            elapsed: sw.elapsed_secs(),
-        });
-        if let Some(tol) = opts.tol_grad {
-            if gnorm <= tol {
-                break;
-            }
-        }
-    }
-    trace
+    run_engine(
+        pool,
+        opts,
+        StepPolicy::PartialParticipation { tau, seed },
+        x0,
+        label,
+    )
 }
 
 /// Convenience: FedNL-PP over in-process clients.
@@ -291,7 +171,7 @@ pub fn run_fednl_pp(
 ) -> Trace {
     assert!(!clients.is_empty());
     let label = format!("FedNL-PP/{}", clients[0].compressor.name());
-    run_fednl_pp_transport(&mut PPSlice(clients), opts, tau, seed, x0, &label)
+    run_fednl_pp_pool(&mut SlicePool::new(clients), opts, tau, seed, x0, &label)
 }
 
 #[cfg(test)]

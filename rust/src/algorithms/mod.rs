@@ -1,20 +1,24 @@
 //! The FedNL algorithm family (paper Alg. 1–3).
 //!
-//! Each algorithm is factored into *pure round functions* —
-//! `client_round(state, x) → message` and `server_round(state, messages)
-//! → next x` — so the same logic drives all three transports:
-//! the sequential reference loop (tests), the multi-threaded single-node
-//! simulator (`coordinator::local_sim`), and the TCP multi-node runtime
-//! (`coordinator::{server, client}`).
+//! One **round engine** ([`engine`]) drives every member of the family:
+//! the algorithms differ only in their [`engine::StepPolicy`] (plain
+//! Newton step, backtracking line search, or partial-participation
+//! incremental state), and every policy runs over every
+//! [`crate::coordinator::ClientPool`] transport — the sequential
+//! reference pool, the multi-threaded single-node simulator, and the
+//! TCP multi-node runtime — through the streaming
+//! `submit_round`/`drain` API with buffer-and-commit aggregation.
 
+pub mod engine;
 pub mod fednl;
 pub mod fednl_ls;
 pub mod fednl_pp;
 pub mod state;
 
+pub use engine::{run_engine, StepPolicy};
 pub use fednl::{run_fednl, run_fednl_pool};
 pub use fednl_ls::{run_fednl_ls, run_fednl_ls_pool, LineSearchParams};
-pub use fednl_pp::{run_fednl_pp, run_fednl_pp_transport, PPClientState};
+pub use fednl_pp::{run_fednl_pp, run_fednl_pp_pool, PPClientState};
 pub use state::{ClientMsg, ClientState, ServerState};
 
 /// How the server forms the system matrix for the Newton step

@@ -12,27 +12,47 @@ use crate::linalg::packed::PackedUpper;
 use crate::linalg::{vector, Cholesky, Mat};
 use crate::oracle::Oracle;
 
-/// What a client sends the master each FedNL round (Alg. 1 line 5).
+/// What a client sends the master each round — the **unified** message
+/// of the whole algorithm family:
+///
+/// * FedNL / FedNL-LS (Alg. 1–2 line 5): `grad` = ∇fᵢ(xᵏ),
+///   `l_i` = lᵢᵏ, `update` = Cᵢᵏ(∇²fᵢ(xᵏ) − Hᵢᵏ);
+/// * FedNL-PP (Alg. 3 line 13): the same fields carry **deltas** of the
+///   participant's server-tracked state — `grad` = Δgᵢ, `l_i` = Δlᵢ —
+///   plus the compressed shift update.
+///
+/// One message type means one wire codec (`net::wire::encode_client_msg`)
+/// and one streaming pool API for all three algorithms.
 #[derive(Debug, Clone)]
 pub struct ClientMsg {
     pub client_id: usize,
-    /// ∇fᵢ(xᵏ), dense d-vector.
+    /// ∇fᵢ(xᵏ) (FedNL) or Δgᵢ (FedNL-PP), dense d-vector.
     pub grad: Vec<f64>,
     /// Sᵢᵏ = Cᵢᵏ(∇²fᵢ(xᵏ) − Hᵢᵏ).
     pub update: Compressed,
-    /// lᵢᵏ = ‖Hᵢᵏ − ∇²fᵢ(xᵏ)‖_F.
+    /// lᵢᵏ = ‖Hᵢᵏ − ∇²fᵢ(xᵏ)‖_F (FedNL) or Δlᵢ (FedNL-PP).
     pub l_i: f64,
     /// fᵢ(xᵏ) when the server tracks loss / runs line search.
     pub loss: Option<f64>,
 }
 
 impl ClientMsg {
-    /// Wire accounting: gradient + compressed Hessian + lᵢ (+ loss).
+    /// Exact framed size of this message on the TCP wire: frame header
+    /// (payload length + tag) + client id + gradient (count + f64s) +
+    /// lᵢ + loss flag (+ loss) + the compressed update. Kept
+    /// byte-for-byte in sync with `net::wire::encode_client_msg` (a
+    /// codec test asserts the agreement), so the in-process pools'
+    /// logical byte accounting matches the TCP transport's metered
+    /// counts.
     pub fn wire_bytes(&self) -> u64 {
-        self.grad.len() as u64 * 8
-            + self.update.wire_bytes()
-            + 8
+        crate::net::FRAME_HEADER_BYTES
+            + 4 // client id
+            + 4 // gradient length
+            + self.grad.len() as u64 * 8
+            + 8 // lᵢ
+            + 1 // loss presence flag
             + if self.loss.is_some() { 8 } else { 0 }
+            + self.update.wire_bytes()
     }
 }
 
@@ -149,6 +169,11 @@ pub struct ServerState {
     // Round scratch:
     grad_acc: Vec<f64>,
     sys: Mat,
+    // Incremental-aggregation accumulators (begin_round/apply_msg/
+    // finish_round):
+    l_acc: f64,
+    loss_acc: f64,
+    have_loss: bool,
 }
 
 impl ServerState {
@@ -164,6 +189,9 @@ impl ServerState {
             x: x0,
             grad_acc: vec![0.0; d],
             sys: Mat::zeros(d, d),
+            l_acc: 0.0,
+            loss_acc: 0.0,
+            have_loss: true,
         }
     }
 
@@ -177,32 +205,48 @@ impl ServerState {
         self.pu.unpack(&acc, &mut self.h);
     }
 
-    /// Aggregate client messages: ∇f(xᵏ), lᵏ, and Hᵏ⁺¹ = Hᵏ + α·Sᵏ
-    /// (Alg. 1 lines 9–10). Returns (grad, mean loss if all present).
-    pub fn aggregate(&mut self, msgs: &[ClientMsg]) -> (Vec<f64>, Option<f64>) {
-        assert_eq!(msgs.len(), self.n_clients, "missing client messages");
-        let inv_n = 1.0 / self.n_clients as f64;
+    /// Reset the round accumulators before streaming messages into
+    /// [`ServerState::apply_msg`].
+    pub fn begin_round(&mut self) {
         vector::fill_zero(&mut self.grad_acc);
-        let mut l_acc = 0.0;
-        let mut loss_acc = 0.0;
-        let mut have_loss = true;
-        for m in msgs {
-            vector::axpy(inv_n, &m.grad, &mut self.grad_acc);
-            l_acc += m.l_i;
-            match m.loss {
-                Some(l) => loss_acc += l,
-                None => have_loss = false,
-            }
-            // Hᵏ ← Hᵏ + (α/n)·Sᵢᵏ, sparse (paper §5.6).
-            self.pu.apply_sparse(
-                &mut self.h,
-                self.alpha * m.update.scale * inv_n,
-                &m.update.indices(),
-                &m.update.values,
-            );
+        self.l_acc = 0.0;
+        self.loss_acc = 0.0;
+        self.have_loss = true;
+    }
+
+    /// Fold one client's message into the round state: gradient partial
+    /// sum, lᵢ / loss accumulators, and the sparse Hessian update
+    /// Hᵏ ← Hᵏ + (α/n)·Sᵢᵏ (paper §5.6), applied **as the message
+    /// commits** so aggregation overlaps with the remaining clients'
+    /// compute / network latency. The caller commits messages in a
+    /// deterministic order (buffer-and-commit, ascending client id) so
+    /// the f64 reduction is bit-identical to the blocking aggregation.
+    pub fn apply_msg(&mut self, m: &ClientMsg) {
+        let inv_n = 1.0 / self.n_clients as f64;
+        vector::axpy(inv_n, &m.grad, &mut self.grad_acc);
+        self.l_acc += m.l_i;
+        match m.loss {
+            Some(l) => self.loss_acc += l,
+            None => self.have_loss = false,
         }
-        self.l = l_acc * inv_n;
-        let loss = if have_loss { Some(loss_acc * inv_n) } else { None };
+        self.pu.apply_sparse(
+            &mut self.h,
+            self.alpha * m.update.scale * inv_n,
+            &m.update.indices(),
+            &m.update.values,
+        );
+    }
+
+    /// Close the round (Alg. 1 lines 9–10): install lᵏ and return
+    /// (∇f(xᵏ), mean loss if every message carried one).
+    pub fn finish_round(&mut self) -> (Vec<f64>, Option<f64>) {
+        let inv_n = 1.0 / self.n_clients as f64;
+        self.l = self.l_acc * inv_n;
+        let loss = if self.have_loss {
+            Some(self.loss_acc * inv_n)
+        } else {
+            None
+        };
         (self.grad_acc.clone(), loss)
     }
 
@@ -285,7 +329,13 @@ mod tests {
         let mut c1 = quad_client(1);
         let msgs =
             vec![c0.round(&s.x.clone(), 0, true), c1.round(&s.x.clone(), 0, true)];
-        let (g, loss) = s.aggregate(&msgs);
+        // The incremental commit path, exactly as the round engine
+        // drives it.
+        s.begin_round();
+        for m in &msgs {
+            s.apply_msg(m);
+        }
+        let (g, loss) = s.finish_round();
         assert!(loss.is_some());
         // Both clients identical → ∇f = ∇f₀ = Q·0 − b = −b = [−1, 1].
         assert!((g[0] + 1.0).abs() < 1e-14);

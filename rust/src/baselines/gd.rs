@@ -7,6 +7,7 @@ use super::{armijo, pool_loss_grad, BaselineOptions};
 use crate::coordinator::ClientPool;
 use crate::linalg::vector;
 use crate::metrics::{RoundRecord, Trace};
+use crate::net::wire;
 use crate::utils::Stopwatch;
 
 /// Run GD until ‖∇f‖ ≤ tol or the round budget is exhausted.
@@ -28,8 +29,9 @@ pub fn run_gd(
 
     for round in 0..opts.max_rounds {
         let (f_x, grad) = pool_loss_grad(pool, &x);
-        bytes_down += d as u64 * 8 * n;
-        bytes_up += (d as u64 * 8 + 8) * n;
+        // Exact framed sizes (LOSS_GRAD command down, GRAD reply up).
+        bytes_down += wire::vec_frame_bytes(d) * n;
+        bytes_up += wire::scalar_vec_frame_bytes(d) * n;
         let gnorm = vector::norm2(&grad);
         trace.push(RoundRecord {
             round,
@@ -46,8 +48,8 @@ pub fn run_gd(
         vector::scale(-1.0, &mut dir);
         let accepted =
             armijo(pool, &x, f_x, &grad, &dir, step * 2.0, 1e-4, 0.5, 60);
-        bytes_down += d as u64 * 8 * n; // probes (≥1)
-        bytes_up += 8 * n;
+        bytes_down += wire::vec_frame_bytes(d) * n; // probes (≥1)
+        bytes_up += wire::scalar_frame_bytes() * n;
         if accepted == 0.0 {
             break; // numerically stuck
         }

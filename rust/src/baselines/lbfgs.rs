@@ -8,6 +8,7 @@ use super::{armijo, BaselineOptions};
 use crate::coordinator::ClientPool;
 use crate::linalg::vector;
 use crate::metrics::{RoundRecord, Trace};
+use crate::net::wire;
 use crate::utils::Stopwatch;
 use std::collections::VecDeque;
 
@@ -29,8 +30,9 @@ pub fn run_lbfgs(
     // (s, y, ρ) pairs, newest at the back.
     let mut hist: VecDeque<(Vec<f64>, Vec<f64>, f64)> = VecDeque::new();
     let (mut f_x, mut grad) = pool.loss_grad(&x);
-    bytes_down += d as u64 * 8 * n;
-    bytes_up += (d as u64 * 8 + 8) * n;
+    // Exact framed sizes (LOSS_GRAD command down, GRAD reply up).
+    bytes_down += wire::vec_frame_bytes(d) * n;
+    bytes_up += wire::scalar_vec_frame_bytes(d) * n;
 
     for round in 0..opts.max_rounds {
         let gnorm = vector::norm2(&grad);
@@ -71,16 +73,16 @@ pub fn run_lbfgs(
             hist.clear();
         }
         let step = armijo(pool, &x, f_x, &grad, &dir, 1.0, 1e-4, 0.5, 60);
-        bytes_down += d as u64 * 8 * n;
-        bytes_up += 8 * n;
+        bytes_down += wire::vec_frame_bytes(d) * n;
+        bytes_up += wire::scalar_frame_bytes() * n;
         if step == 0.0 {
             break;
         }
         let mut x_new = vec![0.0; d];
         vector::add_scaled(&x, step, &dir, &mut x_new);
         let (f_new, g_new) = pool.loss_grad(&x_new);
-        bytes_down += d as u64 * 8 * n;
-        bytes_up += (d as u64 * 8 + 8) * n;
+        bytes_down += wire::vec_frame_bytes(d) * n;
+        bytes_up += wire::scalar_vec_frame_bytes(d) * n;
         // Curvature pair.
         let mut s_vec = vec![0.0; d];
         vector::sub(&x_new, &x, &mut s_vec);

@@ -5,6 +5,7 @@ use super::BaselineOptions;
 use crate::coordinator::ClientPool;
 use crate::linalg::vector;
 use crate::metrics::{RoundRecord, Trace};
+use crate::net::wire;
 use crate::utils::Stopwatch;
 
 /// Run Nesterov-AGD until ‖∇f‖ ≤ tol or the round budget runs out.
@@ -28,8 +29,9 @@ pub fn run_nesterov(
 
     for round in 0..opts.max_rounds {
         let (f_y, g_y) = pool.loss_grad(&y);
-        bytes_down += d as u64 * 8 * n;
-        bytes_up += (d as u64 * 8 + 8) * n;
+        // Exact framed sizes (LOSS_GRAD command down, GRAD reply up).
+        bytes_down += wire::vec_frame_bytes(d) * n;
+        bytes_up += wire::scalar_vec_frame_bytes(d) * n;
         let gnorm = vector::norm2(&g_y);
         trace.push(RoundRecord {
             round,
@@ -50,8 +52,8 @@ pub fn run_nesterov(
         for _ in 0..60 {
             vector::add_scaled(&y, -s, &g_y, &mut x_new);
             let f_new = pool.eval_loss(&x_new);
-            bytes_down += d as u64 * 8 * n;
-            bytes_up += 8 * n;
+            bytes_down += wire::vec_frame_bytes(d) * n;
+            bytes_up += wire::scalar_frame_bytes() * n;
             if f_new <= f_y - 0.5 * s * gsq {
                 accepted = true;
                 // Function-value restart: if progress stalls, reset

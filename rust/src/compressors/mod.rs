@@ -106,7 +106,10 @@ impl Compressed {
     }
 
     /// Bytes this update occupies on the wire (paper's "communicated
-    /// bits" accounting, App. E.1): values + index side-channel.
+    /// bits" accounting, App. E.1): values + index side-channel + the
+    /// fixed codec fields. Matches `net::wire`'s `put_compressed`
+    /// byte-for-byte (asserted by the codec tests), so logical and
+    /// transport-metered accounting agree.
     pub fn wire_bytes(&self) -> u64 {
         let per_value = match self.encoding {
             ValueEncoding::F64 => 8,
@@ -119,9 +122,15 @@ impl Compressed {
             IndexPayload::SeqStart { .. } => 8,
             IndexPayload::Dense => 0,
         };
-        vals + idx
+        vals + idx + CODEC_OVERHEAD_BYTES
     }
 }
+
+/// Fixed per-update codec bytes the wire encoder adds around the index
+/// and value payloads: n (4) + payload tag (1) + scale (8) + value
+/// count (4) + encoding tag (1). Kept in sync with `net::wire`'s
+/// `put_compressed` by the codec tests.
+pub const CODEC_OVERHEAD_BYTES: u64 = 18;
 
 /// Compressor class, as used for the theoretical α.
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -220,7 +220,10 @@ mod tests {
         }
         // to_dense applies the scale.
         assert!((out.to_dense()[0] - 2.0 * 8.0 / 9.0).abs() < 1e-15);
-        // 16-bit wire accounting.
-        assert_eq!(out.wire_bytes(), src.len() as u64 * 2);
+        // 16-bit wire accounting (+ fixed codec fields).
+        assert_eq!(
+            out.wire_bytes(),
+            src.len() as u64 * 2 + crate::compressors::CODEC_OVERHEAD_BYTES
+        );
     }
 }

@@ -175,7 +175,11 @@ mod tests {
         let (pu, src) = packed_src(9, 6);
         let mut c = RandK::new(10, 3);
         let out = c.compress(&pu, &src, 0);
-        // 10 f64 values + 12 bytes of seed material ≪ explicit indices.
-        assert_eq!(out.wire_bytes(), 10 * 8 + 12);
+        // 10 f64 values + 12 bytes of seed material (≪ explicit
+        // indices) + the fixed codec fields.
+        assert_eq!(
+            out.wire_bytes(),
+            10 * 8 + 12 + crate::compressors::CODEC_OVERHEAD_BYTES
+        );
     }
 }

@@ -148,7 +148,10 @@ mod tests {
         let (pu, src) = packed_src(9, 4);
         let mut c = RandSeqK::new(10, 3);
         let out = c.compress(&pu, &src, 0);
-        assert_eq!(out.wire_bytes(), 10 * 8 + 8);
+        assert_eq!(
+            out.wire_bytes(),
+            10 * 8 + 8 + crate::compressors::CODEC_OVERHEAD_BYTES
+        );
         assert!(matches!(out.payload, IndexPayload::SeqStart { .. }));
     }
 

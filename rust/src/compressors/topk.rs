@@ -265,6 +265,9 @@ mod tests {
         let (pu, src) = packed_src(8, 6);
         let mut c = TopK::new(5);
         let out = c.compress(&pu, &src, 0);
-        assert_eq!(out.wire_bytes(), 5 * 8 + 5 * 4 + 4);
+        assert_eq!(
+            out.wire_bytes(),
+            5 * 8 + 5 * 4 + 4 + crate::compressors::CODEC_OVERHEAD_BYTES
+        );
     }
 }

@@ -1,43 +1,58 @@
 //! Single-node multi-core simulation (paper §5.12, v39):
 //! a persistent worker pool sized to the available cores, clients
 //! *statically dispatched* to workers (no work stealing → no
-//! congestion), one message channel per direction, master processes
-//! replies as they arrive.
+//! congestion), one message channel per direction.
 //!
-//! Determinism: workers compute in parallel but the master re-orders
-//! replies before aggregation — round/warm-start messages by client id
-//! (f64 reduction order, and hence the FedNL trajectory, identical to
-//! [`super::SeqPool`]), loss/gradient partial sums by worker id (fixed
-//! reduction order → bit-identical run-to-run; the bucketed association
-//! differs from SeqPool's flat sum by normal f64 reassociation).
+//! Round replies are **streamed**: each worker sends every client's
+//! message to the master the moment it is computed, so the master's
+//! incremental aggregation (buffer-and-commit, see the module docs of
+//! [`crate::coordinator`]) overlaps with the remaining clients' compute.
+//! A round may also target a participation subset (FedNL-PP): workers
+//! skip non-selected clients and the master expects exactly one reply
+//! per participant.
+//!
+//! Determinism: workers compute in parallel and replies arrive in
+//! completion order, but every reduction commits in a fixed order —
+//! round messages in round-subset order (driver side), and the
+//! loss / gradient / warm-start / state reductions in ascending client
+//! id order, replicating [`super::SeqPool`]'s flat sums bit-for-bit.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use super::ClientPool;
-use crate::algorithms::{ClientMsg, ClientState};
+use super::{ClientFamily, ClientPool, PoolClient};
+use crate::algorithms::ClientMsg;
+use crate::linalg::vector;
 
 enum Cmd {
-    Round { x: Arc<Vec<f64>>, round: u64, need_loss: bool },
+    Round {
+        x: Arc<Vec<f64>>,
+        round: u64,
+        need_loss: bool,
+        /// Participating client ids; `None` = the full round.
+        subset: Option<Arc<Vec<u32>>>,
+    },
     EvalLoss { x: Arc<Vec<f64>> },
     LossGrad { x: Arc<Vec<f64>> },
     WarmStart { x: Arc<Vec<f64>> },
+    InitState,
     SetAlpha(f64),
     Shutdown,
 }
 
 enum Reply {
-    Msgs(Vec<ClientMsg>),
-    /// (worker id, sum of local losses over the worker's clients,
-    /// client count). The worker id lets the master reduce in a fixed
-    /// order even though replies arrive in completion order.
-    Loss(usize, f64, usize),
-    /// (worker id, sum of local losses, sum of local gradients,
-    /// client count).
-    LossGrad(usize, f64, Vec<f64>, usize),
-    /// (client_id, packed H⁰) pairs.
-    Warm(Vec<(usize, Vec<f64>)>),
+    /// One client's round message, streamed as soon as it is computed.
+    Msg(Box<ClientMsg>),
+    /// (client id, local loss). Per-client so the master can reduce in
+    /// client-id order regardless of arrival order.
+    Loss(usize, f64),
+    /// (client id, local loss, local gradient).
+    LossGrad(usize, f64, Vec<f64>),
+    /// (client id, packed Hᵢ⁰).
+    Warm(usize, Vec<f64>),
+    /// (client id, lᵢ, gᵢ) — FedNL-PP bootstrap.
+    State(usize, f64, Vec<f64>),
     Ack,
 }
 
@@ -52,17 +67,43 @@ pub struct ThreadedPool {
     reply_rx: Receiver<Reply>,
     n_clients: usize,
     dim: usize,
+    family: ClientFamily,
     default_alpha: f64,
+    /// Replies still expected for the round in flight.
+    outstanding: usize,
 }
 
 impl ThreadedPool {
     /// Distribute `clients` over `n_workers` threads (0 → #cores,
-    /// clamped to the client count).
-    pub fn new(clients: Vec<ClientState>, n_workers: usize) -> Self {
+    /// clamped to the client count). Accepts either client family
+    /// (FedNL [`crate::algorithms::ClientState`] or FedNL-PP
+    /// [`crate::algorithms::PPClientState`]).
+    pub fn new<C: PoolClient + 'static>(
+        clients: Vec<C>,
+        n_workers: usize,
+    ) -> Self {
+        let boxed = clients
+            .into_iter()
+            .map(|c| Box::new(c) as Box<dyn PoolClient>)
+            .collect();
+        Self::from_boxed(boxed, n_workers)
+    }
+
+    /// As [`ThreadedPool::new`], over pre-boxed clients.
+    pub fn from_boxed(
+        clients: Vec<Box<dyn PoolClient>>,
+        n_workers: usize,
+    ) -> Self {
         assert!(!clients.is_empty());
         let n_clients = clients.len();
         let dim = clients[0].dim();
-        let default_alpha = clients[0].alpha;
+        let family = clients[0].family();
+        assert!(
+            clients.iter().all(|c| c.family() == family),
+            "pools are family-homogeneous: cannot mix FedNL and \
+             FedNL-PP clients"
+        );
+        let default_alpha = clients[0].alpha();
         let n_workers = if n_workers == 0 {
             crate::utils::available_cores()
         } else {
@@ -73,7 +114,7 @@ impl ThreadedPool {
 
         // Static round-robin dispatch (paper: "clients were statically
         // dispatched to this pool").
-        let mut buckets: Vec<Vec<ClientState>> =
+        let mut buckets: Vec<Vec<Box<dyn PoolClient>>> =
             (0..n_workers).map(|_| Vec::new()).collect();
         for (i, c) in clients.into_iter().enumerate() {
             buckets[i % n_workers].push(c);
@@ -82,55 +123,53 @@ impl ThreadedPool {
         let (reply_tx, reply_rx) = channel::<Reply>();
         let workers = buckets
             .into_iter()
-            .enumerate()
-            .map(|(wid, mut bucket)| {
+            .map(|mut bucket| {
                 let (cmd_tx, cmd_rx) = channel::<Cmd>();
                 let tx = reply_tx.clone();
                 let handle = std::thread::spawn(move || {
                     while let Ok(cmd) = cmd_rx.recv() {
                         match cmd {
-                            Cmd::Round { x, round, need_loss } => {
-                                let msgs: Vec<ClientMsg> = bucket
-                                    .iter_mut()
-                                    .map(|c| c.round(&x, round, need_loss))
-                                    .collect();
-                                let _ = tx.send(Reply::Msgs(msgs));
+                            Cmd::Round { x, round, need_loss, subset } => {
+                                for c in bucket.iter_mut() {
+                                    if let Some(s) = subset.as_deref() {
+                                        if !s.contains(&(c.id() as u32)) {
+                                            continue;
+                                        }
+                                    }
+                                    let m = c.round(&x, round, need_loss);
+                                    let _ =
+                                        tx.send(Reply::Msg(Box::new(m)));
+                                }
                             }
                             Cmd::EvalLoss { x } => {
-                                let s: f64 = bucket
-                                    .iter_mut()
-                                    .map(|c| c.eval_loss(&x))
-                                    .sum();
-                                let _ = tx
-                                    .send(Reply::Loss(wid, s, bucket.len()));
+                                for c in bucket.iter_mut() {
+                                    let l = c.eval_loss(&x);
+                                    let _ = tx.send(Reply::Loss(c.id(), l));
+                                }
                             }
                             Cmd::LossGrad { x } => {
-                                let mut g = vec![0.0; x.len()];
-                                let mut s = 0.0;
                                 for c in bucket.iter_mut() {
-                                    let (l, gi) = c.eval_loss_grad(&x);
-                                    s += l;
-                                    crate::linalg::vector::axpy(
-                                        1.0, &gi, &mut g,
-                                    );
+                                    let (l, g) = c.eval_loss_grad(&x);
+                                    let _ = tx
+                                        .send(Reply::LossGrad(c.id(), l, g));
                                 }
-                                let _ = tx.send(Reply::LossGrad(
-                                    wid,
-                                    s,
-                                    g,
-                                    bucket.len(),
-                                ));
                             }
                             Cmd::WarmStart { x } => {
-                                let w = bucket
-                                    .iter_mut()
-                                    .map(|c| (c.id, c.warm_start(&x)))
-                                    .collect();
-                                let _ = tx.send(Reply::Warm(w));
+                                for c in bucket.iter_mut() {
+                                    let p = c.warm_start(&x);
+                                    let _ = tx.send(Reply::Warm(c.id(), p));
+                                }
+                            }
+                            Cmd::InitState => {
+                                for c in bucket.iter() {
+                                    let (l, g) = c.state();
+                                    let _ =
+                                        tx.send(Reply::State(c.id(), l, g));
+                                }
                             }
                             Cmd::SetAlpha(a) => {
                                 for c in bucket.iter_mut() {
-                                    c.alpha = a;
+                                    c.set_alpha(a);
                                 }
                                 let _ = tx.send(Reply::Ack);
                             }
@@ -142,7 +181,15 @@ impl ThreadedPool {
             })
             .collect();
 
-        Self { workers, reply_rx, n_clients, dim, default_alpha }
+        Self {
+            workers,
+            reply_rx,
+            n_clients,
+            dim,
+            family,
+            default_alpha,
+            outstanding: 0,
+        }
     }
 
     fn broadcast(&self, make: impl Fn() -> Cmd) {
@@ -165,6 +212,10 @@ impl ClientPool for ThreadedPool {
         "threaded"
     }
 
+    fn family(&self) -> ClientFamily {
+        self.family
+    }
+
     fn default_alpha(&self) -> f64 {
         self.default_alpha
     }
@@ -176,94 +227,125 @@ impl ClientPool for ThreadedPool {
         }
     }
 
-    fn round(
+    fn submit_round(
         &mut self,
         x: &[f64],
+        subset: Option<&[u32]>,
         round: u64,
         need_loss: bool,
-    ) -> Vec<ClientMsg> {
+    ) {
+        assert_eq!(self.outstanding, 0, "previous round not fully drained");
+        self.outstanding =
+            subset.map(|s| s.len()).unwrap_or(self.n_clients);
         let x = Arc::new(x.to_vec());
-        self.broadcast(|| Cmd::Round { x: Arc::clone(&x), round, need_loss });
-        // Process replies as they arrive (paper: "processed messages
-        // from clients as they became available"), then restore client
-        // order for a deterministic reduction.
-        let mut msgs = Vec::with_capacity(self.n_clients);
-        for _ in 0..self.workers.len() {
-            match self.reply_rx.recv() {
-                Ok(Reply::Msgs(m)) => msgs.extend(m),
-                _ => panic!("worker died"),
+        let subset = subset.map(|s| Arc::new(s.to_vec()));
+        self.broadcast(|| Cmd::Round {
+            x: Arc::clone(&x),
+            round,
+            need_loss,
+            subset: subset.clone(),
+        });
+    }
+
+    fn drain(&mut self) -> Vec<ClientMsg> {
+        if self.outstanding == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        // Block for the first reply, then grab whatever else has
+        // already arrived without blocking again.
+        match self.reply_rx.recv() {
+            Ok(Reply::Msg(m)) => {
+                out.push(*m);
+                self.outstanding -= 1;
+            }
+            Ok(_) => panic!("unexpected reply during round"),
+            Err(_) => panic!("worker died"),
+        }
+        while self.outstanding > 0 {
+            match self.reply_rx.try_recv() {
+                Ok(Reply::Msg(m)) => {
+                    out.push(*m);
+                    self.outstanding -= 1;
+                }
+                Ok(_) => panic!("unexpected reply during round"),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => panic!("worker died"),
             }
         }
-        msgs.sort_by_key(|m| m.client_id);
-        msgs
+        out
     }
 
     fn eval_loss(&mut self, x: &[f64]) -> f64 {
         let x = Arc::new(x.to_vec());
         self.broadcast(|| Cmd::EvalLoss { x: Arc::clone(&x) });
-        // Collect in arrival order, reduce in worker order: the f64
-        // summation order is fixed, so repeated runs are bit-identical.
-        let mut parts: Vec<(usize, f64, usize)> =
-            Vec::with_capacity(self.workers.len());
-        for _ in 0..self.workers.len() {
+        // Collect in arrival order, reduce in client-id order: the f64
+        // summation order matches SeqPool's flat sum bit-for-bit.
+        let mut parts: Vec<(usize, f64)> =
+            Vec::with_capacity(self.n_clients);
+        for _ in 0..self.n_clients {
             match self.reply_rx.recv() {
-                Ok(Reply::Loss(wid, s, c)) => parts.push((wid, s, c)),
+                Ok(Reply::Loss(id, l)) => parts.push((id, l)),
                 _ => panic!("worker died"),
             }
         }
-        parts.sort_by_key(|&(wid, _, _)| wid);
+        parts.sort_by_key(|&(id, _)| id);
         let mut sum = 0.0;
-        let mut cnt = 0usize;
-        for (_, s, c) in parts {
-            sum += s;
-            cnt += c;
+        for &(_, l) in &parts {
+            sum += l;
         }
-        debug_assert_eq!(cnt, self.n_clients);
         sum / self.n_clients as f64
     }
 
     fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
         let x = Arc::new(x.to_vec());
         self.broadcast(|| Cmd::LossGrad { x: Arc::clone(&x) });
-        // Same deterministic reduction: sort partial sums by worker id
-        // before accumulating.
-        let mut parts: Vec<(usize, f64, Vec<f64>, usize)> =
-            Vec::with_capacity(self.workers.len());
-        for _ in 0..self.workers.len() {
+        let mut parts: Vec<(usize, f64, Vec<f64>)> =
+            Vec::with_capacity(self.n_clients);
+        for _ in 0..self.n_clients {
             match self.reply_rx.recv() {
-                Ok(Reply::LossGrad(wid, s, gi, c)) => {
-                    parts.push((wid, s, gi, c))
-                }
+                Ok(Reply::LossGrad(id, l, g)) => parts.push((id, l, g)),
                 _ => panic!("worker died"),
             }
         }
-        parts.sort_by_key(|&(wid, _, _, _)| wid);
+        parts.sort_by_key(|&(id, _, _)| id);
+        let inv_n = 1.0 / self.n_clients as f64;
         let mut loss = 0.0;
         let mut g = vec![0.0; x.len()];
-        let mut cnt = 0usize;
-        for (_, s, gi, c) in parts {
-            loss += s;
-            crate::linalg::vector::axpy(1.0, &gi, &mut g);
-            cnt += c;
+        for (_, l, gi) in &parts {
+            loss += l;
+            vector::axpy(inv_n, gi, &mut g);
         }
-        debug_assert_eq!(cnt, self.n_clients);
-        let inv_n = 1.0 / self.n_clients as f64;
-        crate::linalg::vector::scale(inv_n, &mut g);
         (loss * inv_n, g)
     }
 
     fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {
         let x = Arc::new(x.to_vec());
         self.broadcast(|| Cmd::WarmStart { x: Arc::clone(&x) });
-        let mut all: Vec<(usize, Vec<f64>)> = Vec::with_capacity(self.n_clients);
-        for _ in 0..self.workers.len() {
+        let mut all: Vec<(usize, Vec<f64>)> =
+            Vec::with_capacity(self.n_clients);
+        for _ in 0..self.n_clients {
             match self.reply_rx.recv() {
-                Ok(Reply::Warm(w)) => all.extend(w),
+                Ok(Reply::Warm(id, p)) => all.push((id, p)),
                 _ => panic!("worker died"),
             }
         }
         all.sort_by_key(|(id, _)| *id);
         all.into_iter().map(|(_, p)| p).collect()
+    }
+
+    fn init_state(&mut self) -> Vec<(f64, Vec<f64>)> {
+        self.broadcast(|| Cmd::InitState);
+        let mut all: Vec<(usize, f64, Vec<f64>)> =
+            Vec::with_capacity(self.n_clients);
+        for _ in 0..self.n_clients {
+            match self.reply_rx.recv() {
+                Ok(Reply::State(id, l, g)) => all.push((id, l, g)),
+                _ => panic!("worker died"),
+            }
+        }
+        all.sort_by_key(|&(id, _, _)| id);
+        all.into_iter().map(|(_, l, g)| (l, g)).collect()
     }
 }
 
@@ -283,6 +365,7 @@ impl Drop for ThreadedPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algorithms::ClientState;
     use crate::compressors::by_name;
     use crate::coordinator::SeqPool;
     use crate::data::{generate_synthetic, Dataset, SynthSpec};
@@ -346,7 +429,7 @@ mod tests {
         }
         let la = seq.eval_loss(&x);
         let lb = thr.eval_loss(&x);
-        assert!((la - lb).abs() < 1e-12);
+        assert_eq!(la, lb, "client-id-ordered reductions must agree bitwise");
     }
 
     #[test]
@@ -367,5 +450,27 @@ mod tests {
         for p in packs {
             assert_eq!(p.len(), plen);
         }
+    }
+
+    #[test]
+    fn subset_round_streams_only_participants() {
+        let (cs, d) = make_clients(5, 34);
+        let mut thr = ThreadedPool::new(cs, 2);
+        let x = vec![0.05; d];
+        let subset = [3u32, 0, 4];
+        thr.submit_round(&x, Some(&subset), 0, false);
+        let mut got = Vec::new();
+        loop {
+            let batch = thr.drain();
+            if batch.is_empty() {
+                break;
+            }
+            got.extend(batch.into_iter().map(|m| m.client_id as u32));
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 3, 4]);
+        // Pool is reusable afterwards.
+        let msgs = thr.round(&x, 1, false);
+        assert_eq!(msgs.len(), 5);
     }
 }

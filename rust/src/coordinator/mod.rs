@@ -1,28 +1,198 @@
 //! Coordination layer: how the master reaches its clients.
 //!
-//! The FedNL drivers (`algorithms::*`) are written against the
-//! [`ClientPool`] trait; three transports implement it:
+//! # The streaming pool API
 //!
-//! * [`SeqPool`] — in-process, sequential (reference semantics / tests);
+//! The FedNL drivers (`algorithms::engine`) talk to a [`ClientPool`],
+//! whose round primitive is **non-blocking and subset-aware**:
+//!
+//! * [`ClientPool::submit_round`] dispatches one client round — to every
+//!   client, or to a participation subset (FedNL-PP, Alg. 3) — and
+//!   returns immediately;
+//! * [`ClientPool::drain`] blocks until at least one outstanding reply
+//!   is available and returns whatever has arrived (any order); an
+//!   empty batch means the round is complete;
+//! * [`ClientPool::round`] is the blocking shim built on the two
+//!   (collect everything, sort by client id) for callers that do not
+//!   stream.
+//!
+//! The master processes replies **as they arrive** (paper §7, §9.3):
+//! the server-side aggregation of client i's sparse Hessian update and
+//! gradient overlaps with client j's compute and in-flight network
+//! transfer.
+//!
+//! # The buffer-and-commit determinism rule
+//!
+//! Streaming must not cost reproducibility. Replies may *arrive* in any
+//! order, but state is *committed* in a fixed order: the driver buffers
+//! early arrivals and applies messages in **round-subset order** (for a
+//! full round that is ascending client id; for a FedNL-PP round it is
+//! the seeded sampler's selection order, matching the sequential
+//! reference). All f64 reductions — message aggregation, `eval_loss`,
+//! `loss_grad`, `warm_start`, `init_state` — reduce in ascending client
+//! id order on every transport, so the three pools produce
+//! **bit-identical optimization trajectories** (asserted by the
+//! integration tests).
+//!
+//! # Transports
+//!
+//! * [`SeqPool`] — in-process, sequential (reference semantics; owns its
+//!   clients);
+//! * [`SlicePool`] — the same over a borrowed `&mut [C]` client slice;
 //! * [`local_sim::ThreadedPool`] — the paper's single-node multi-core
 //!   simulator (§5.12): a worker pool sized to the physical cores,
-//!   clients statically dispatched, messages processed as available;
+//!   clients statically dispatched, every reply streamed to the master
+//!   the moment it is computed;
 //! * `net::server::RemotePool` — the multi-node TCP master (§7).
 //!
-//! All three produce bit-identical optimization trajectories (messages
-//! are aggregated in client order; f64 reduction order is fixed), which
-//! the integration tests assert.
+//! All four drive either algorithm family: a pool is generic over a
+//! [`PoolClient`] (plain FedNL / FedNL-LS clients *or* FedNL-PP
+//! clients), and the wire protocol uses one unified ROUND/MSG exchange
+//! for both (see `net::wire`).
 
 pub mod local_sim;
 
 pub use local_sim::ThreadedPool;
 
-use crate::algorithms::{ClientMsg, ClientState};
+use crate::algorithms::{ClientMsg, ClientState, PPClientState};
+use crate::linalg::vector;
+
+/// Algorithm family of a client. The unified round exchange is
+/// family-agnostic on the wire, so the **driver** checks that its pool
+/// serves the family it expects (a FedNL server aggregating FedNL-PP
+/// deltas as absolute quantities would be silently wrong math).
+/// Mirrors `net::wire::{FAMILY_FEDNL, FAMILY_PP}` on the TCP transport.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientFamily {
+    /// FedNL / FedNL-LS clients (Alg. 1–2): absolute ∇fᵢ, lᵢ.
+    FedNL,
+    /// FedNL-PP clients (Alg. 3): Δgᵢ, Δlᵢ deltas.
+    PP,
+}
+
+/// One simulated client, driveable by any in-process pool.
+///
+/// Implemented by [`ClientState`] (FedNL / FedNL-LS, Alg. 1–2) and
+/// [`PPClientState`] (FedNL-PP, Alg. 3). The message fields carry
+/// absolute quantities for the former and deltas for the latter; the
+/// pools do not care — the drivers check [`PoolClient::family`].
+pub trait PoolClient: Send {
+    fn id(&self) -> usize;
+    fn dim(&self) -> usize;
+    fn family(&self) -> ClientFamily;
+    fn alpha(&self) -> f64;
+    fn set_alpha(&mut self, alpha: f64);
+
+    /// Execute one client round at iterate `x`.
+    fn round(&mut self, x: &[f64], round: u64, need_loss: bool) -> ClientMsg;
+
+    /// fᵢ(x) (line-search probes).
+    fn eval_loss(&mut self, x: &[f64]) -> f64;
+
+    /// (fᵢ(x), ∇fᵢ(x)) — the first-order reduction primitive.
+    fn eval_loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>);
+
+    /// Hᵢ⁰ = ∇²fᵢ(x⁰), returned packed (FedNL warm start).
+    fn warm_start(&mut self, x: &[f64]) -> Vec<f64>;
+
+    /// Current (lᵢ, gᵢ) pair (FedNL-PP bootstrap, Alg. 3 line 2).
+    fn state(&self) -> (f64, Vec<f64>);
+}
+
+impl PoolClient for ClientState {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn dim(&self) -> usize {
+        ClientState::dim(self)
+    }
+
+    fn family(&self) -> ClientFamily {
+        ClientFamily::FedNL
+    }
+
+    fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    fn set_alpha(&mut self, alpha: f64) {
+        self.alpha = alpha;
+    }
+
+    fn round(&mut self, x: &[f64], round: u64, need_loss: bool) -> ClientMsg {
+        ClientState::round(self, x, round, need_loss)
+    }
+
+    fn eval_loss(&mut self, x: &[f64]) -> f64 {
+        ClientState::eval_loss(self, x)
+    }
+
+    fn eval_loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        ClientState::eval_loss_grad(self, x)
+    }
+
+    fn warm_start(&mut self, x: &[f64]) -> Vec<f64> {
+        ClientState::warm_start(self, x)
+    }
+
+    fn state(&self) -> (f64, Vec<f64>) {
+        panic!("STATE requested from a FedNL client (PP-only primitive)")
+    }
+}
+
+impl PoolClient for PPClientState {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn dim(&self) -> usize {
+        PPClientState::dim(self)
+    }
+
+    fn family(&self) -> ClientFamily {
+        ClientFamily::PP
+    }
+
+    fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    fn set_alpha(&mut self, alpha: f64) {
+        self.alpha = alpha;
+    }
+
+    fn round(&mut self, x: &[f64], round: u64, need_loss: bool) -> ClientMsg {
+        self.participate(x, round, need_loss)
+    }
+
+    fn eval_loss(&mut self, x: &[f64]) -> f64 {
+        self.oracle.loss(x)
+    }
+
+    fn eval_loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        let mut g = vec![0.0; x.len()];
+        let l = self.oracle.loss_grad(x, &mut g);
+        (l, g)
+    }
+
+    fn warm_start(&mut self, _x: &[f64]) -> Vec<f64> {
+        panic!("WARM_START requested from a FedNL-PP client (Alg. 3 initializes Hᵢ⁰ = 0)")
+    }
+
+    fn state(&self) -> (f64, Vec<f64>) {
+        (self.l_i, self.g_i.clone())
+    }
+}
 
 /// Master-side view of a set of FedNL clients.
 pub trait ClientPool {
     fn n_clients(&self) -> usize;
     fn dim(&self) -> usize;
+
+    /// Algorithm family every client of this pool serves (pools are
+    /// family-homogeneous; enforced at construction). The round engine
+    /// asserts this against the algorithm it is about to run.
+    fn family(&self) -> ClientFamily;
 
     /// Short implementation name ("seq", "threaded", "remote") for
     /// logs and tests.
@@ -36,21 +206,62 @@ pub trait ClientPool {
     /// Set the Hessian learning rate on every client.
     fn set_alpha(&mut self, alpha: f64);
 
-    /// Execute one FedNL client round on every client; messages are
-    /// returned sorted by client id.
-    fn round(&mut self, x: &[f64], round: u64, need_loss: bool)
-        -> Vec<ClientMsg>;
+    /// Dispatch one client round without waiting for replies. `subset`
+    /// is the participating client ids (`None` = all clients). Exactly
+    /// one reply per participant is later surfaced through [`drain`].
+    ///
+    /// [`drain`]: ClientPool::drain
+    fn submit_round(
+        &mut self,
+        x: &[f64],
+        subset: Option<&[u32]>,
+        round: u64,
+        need_loss: bool,
+    );
 
-    /// Average local loss at `x` (line-search probe).
+    /// Retrieve replies to the outstanding round: blocks until at least
+    /// one is available, returns every reply that has arrived (in
+    /// arrival order — **not** client order), and returns an empty
+    /// batch once all participants have answered.
+    fn drain(&mut self) -> Vec<ClientMsg>;
+
+    /// Blocking shim: execute one round on every client and return the
+    /// messages sorted by client id.
+    fn round(
+        &mut self,
+        x: &[f64],
+        round: u64,
+        need_loss: bool,
+    ) -> Vec<ClientMsg> {
+        self.submit_round(x, None, round, need_loss);
+        let mut msgs = Vec::with_capacity(self.n_clients());
+        loop {
+            let batch = self.drain();
+            if batch.is_empty() {
+                break;
+            }
+            msgs.extend(batch);
+        }
+        msgs.sort_by_key(|m| m.client_id);
+        msgs
+    }
+
+    /// Average local loss at `x` (line-search probe). Reduced in
+    /// ascending client id order on every transport.
     fn eval_loss(&mut self, x: &[f64]) -> f64;
 
     /// Average (f(x), ∇f(x)) reduction — the first-order baselines'
-    /// round primitive (one d-vector per client per call).
+    /// round primitive (one d-vector per client per call). Reduced in
+    /// ascending client id order on every transport.
     fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>);
 
     /// Warm-start Hᵢ⁰ = ∇²fᵢ(x⁰); returns packed Hᵢ⁰ per client
     /// (client-id order).
     fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>>;
+
+    /// FedNL-PP bootstrap: every client's current (lᵢ, gᵢ) pair, in
+    /// client-id order (Alg. 3 line 2).
+    fn init_state(&mut self) -> Vec<(f64, Vec<f64>)>;
 
     /// Cumulative transport-level bytes (up, down) if the transport
     /// meters them itself; in-process pools return `None` and the driver
@@ -60,19 +271,67 @@ pub trait ClientPool {
     }
 }
 
-/// Sequential in-process pool — the reference implementation.
-pub struct SeqPool {
-    pub clients: Vec<ClientState>,
-}
+// --- shared sequential primitives (SeqPool / SlicePool) ---------------
 
-impl SeqPool {
-    pub fn new(clients: Vec<ClientState>) -> Self {
-        assert!(!clients.is_empty());
-        Self { clients }
+fn submit_seq<C: PoolClient>(
+    clients: &mut [C],
+    queue: &mut Vec<ClientMsg>,
+    x: &[f64],
+    subset: Option<&[u32]>,
+    round: u64,
+    need_loss: bool,
+) {
+    assert!(queue.is_empty(), "previous round not fully drained");
+    match subset {
+        None => {
+            for c in clients.iter_mut() {
+                queue.push(c.round(x, round, need_loss));
+            }
+        }
+        Some(s) => {
+            for &ci in s {
+                queue.push(clients[ci as usize].round(x, round, need_loss));
+            }
+        }
     }
 }
 
-impl ClientPool for SeqPool {
+fn eval_loss_seq<C: PoolClient>(clients: &mut [C], x: &[f64]) -> f64 {
+    let n = clients.len() as f64;
+    clients.iter_mut().map(|c| c.eval_loss(x)).sum::<f64>() / n
+}
+
+fn loss_grad_seq<C: PoolClient>(
+    clients: &mut [C],
+    x: &[f64],
+) -> (f64, Vec<f64>) {
+    let inv_n = 1.0 / clients.len() as f64;
+    let mut g = vec![0.0; x.len()];
+    let mut loss = 0.0;
+    for c in clients.iter_mut() {
+        let (l, gi) = c.eval_loss_grad(x);
+        loss += l;
+        vector::axpy(inv_n, &gi, &mut g);
+    }
+    (loss * inv_n, g)
+}
+
+/// Sequential in-process pool — the reference implementation. Generic
+/// over the client family: `SeqPool<ClientState>` (the default) drives
+/// FedNL / FedNL-LS, `SeqPool<PPClientState>` drives FedNL-PP.
+pub struct SeqPool<C: PoolClient = ClientState> {
+    pub clients: Vec<C>,
+    queue: Vec<ClientMsg>,
+}
+
+impl<C: PoolClient> SeqPool<C> {
+    pub fn new(clients: Vec<C>) -> Self {
+        assert!(!clients.is_empty());
+        Self { clients, queue: Vec::new() }
+    }
+}
+
+impl<C: PoolClient> ClientPool for SeqPool<C> {
     fn n_clients(&self) -> usize {
         self.clients.len()
     }
@@ -81,47 +340,130 @@ impl ClientPool for SeqPool {
         self.clients[0].dim()
     }
 
+    fn family(&self) -> ClientFamily {
+        self.clients[0].family()
+    }
+
     fn kind_name(&self) -> &'static str {
         "seq"
     }
 
     fn default_alpha(&self) -> f64 {
-        self.clients[0].alpha
+        self.clients[0].alpha()
     }
 
     fn set_alpha(&mut self, alpha: f64) {
         for c in &mut self.clients {
-            c.alpha = alpha;
+            c.set_alpha(alpha);
         }
     }
 
-    fn round(
+    fn submit_round(
         &mut self,
         x: &[f64],
+        subset: Option<&[u32]>,
         round: u64,
         need_loss: bool,
-    ) -> Vec<ClientMsg> {
-        self.clients.iter_mut().map(|c| c.round(x, round, need_loss)).collect()
+    ) {
+        submit_seq(&mut self.clients, &mut self.queue, x, subset, round, need_loss);
+    }
+
+    fn drain(&mut self) -> Vec<ClientMsg> {
+        std::mem::take(&mut self.queue)
     }
 
     fn eval_loss(&mut self, x: &[f64]) -> f64 {
-        let n = self.clients.len() as f64;
-        self.clients.iter_mut().map(|c| c.eval_loss(x)).sum::<f64>() / n
+        eval_loss_seq(&mut self.clients, x)
+    }
+
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        loss_grad_seq(&mut self.clients, x)
     }
 
     fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {
         self.clients.iter_mut().map(|c| c.warm_start(x)).collect()
     }
 
-    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
-        let inv_n = 1.0 / self.clients.len() as f64;
-        let mut g = vec![0.0; x.len()];
-        let mut loss = 0.0;
-        for c in &mut self.clients {
-            let (l, gi) = c.eval_loss_grad(x);
-            loss += l;
-            crate::linalg::vector::axpy(inv_n, &gi, &mut g);
+    fn init_state(&mut self) -> Vec<(f64, Vec<f64>)> {
+        self.clients.iter().map(|c| c.state()).collect()
+    }
+}
+
+/// Adapter: a mutable client slice as a sequential pool (borrowing
+/// sibling of [`SeqPool`]; used by the `run_*` slice conveniences).
+pub struct SlicePool<'a, C: PoolClient = ClientState> {
+    clients: &'a mut [C],
+    queue: Vec<ClientMsg>,
+}
+
+impl<'a, C: PoolClient> SlicePool<'a, C> {
+    pub fn new(clients: &'a mut [C]) -> Self {
+        assert!(!clients.is_empty());
+        Self { clients, queue: Vec::new() }
+    }
+}
+
+impl<C: PoolClient> ClientPool for SlicePool<'_, C> {
+    fn n_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.clients[0].dim()
+    }
+
+    fn family(&self) -> ClientFamily {
+        self.clients[0].family()
+    }
+
+    fn kind_name(&self) -> &'static str {
+        "seq"
+    }
+
+    fn default_alpha(&self) -> f64 {
+        self.clients[0].alpha()
+    }
+
+    fn set_alpha(&mut self, alpha: f64) {
+        for c in self.clients.iter_mut() {
+            c.set_alpha(alpha);
         }
-        (loss * inv_n, g)
+    }
+
+    fn submit_round(
+        &mut self,
+        x: &[f64],
+        subset: Option<&[u32]>,
+        round: u64,
+        need_loss: bool,
+    ) {
+        submit_seq(
+            &mut *self.clients,
+            &mut self.queue,
+            x,
+            subset,
+            round,
+            need_loss,
+        );
+    }
+
+    fn drain(&mut self) -> Vec<ClientMsg> {
+        std::mem::take(&mut self.queue)
+    }
+
+    fn eval_loss(&mut self, x: &[f64]) -> f64 {
+        eval_loss_seq(&mut *self.clients, x)
+    }
+
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        loss_grad_seq(&mut *self.clients, x)
+    }
+
+    fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {
+        self.clients.iter_mut().map(|c| c.warm_start(x)).collect()
+    }
+
+    fn init_state(&mut self) -> Vec<(f64, Vec<f64>)> {
+        self.clients.iter().map(|c| c.state()).collect()
     }
 }

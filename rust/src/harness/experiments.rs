@@ -5,8 +5,8 @@ use anyhow::Result;
 use super::{prepare_problem, HarnessCfg, Problem, ProblemSpec, Scale};
 use super::{A9A, PHISHING, W8A};
 use crate::algorithms::{
-    run_fednl_ls_pool, run_fednl_pool, run_fednl_pp_transport,
-    LineSearchParams, Options,
+    run_fednl_ls_pool, run_fednl_pool, run_fednl_pp_pool, LineSearchParams,
+    Options,
 };
 use crate::baselines::{run_gd, run_lbfgs, run_nesterov, BaselineOptions};
 use crate::coordinator::ClientPool;
@@ -252,7 +252,7 @@ pub fn run_tcp_experiment(
         TcpAlgo::FedNLPP { tau } => {
             let opts =
                 Options { rounds, tol_grad: tol, ..Default::default() };
-            run_fednl_pp_transport(&mut pool, &opts, tau, cfg.seed, x0, &label)
+            run_fednl_pp_pool(&mut pool, &opts, tau, cfg.seed, x0, &label)
         }
         TcpAlgo::Gd => {
             let bopts = BaselineOptions {
@@ -275,6 +275,60 @@ pub fn run_tcp_experiment(
         let _ = h.join();
     }
     Ok((trace, solve_secs, init_secs))
+}
+
+/// CI loopback smoke: all three algorithms of the family over real TCP
+/// sockets on a tiny synthetic problem — exercises the unified wire
+/// protocol, the streaming master and the PP participation subsets in
+/// seconds. Fails if any run diverges or makes no progress.
+pub fn tcp_smoke(cfg: &HarnessCfg) -> Result<String> {
+    let spec = ProblemSpec {
+        name: "smoke",
+        d: 21,
+        n_i_full: 40,
+        n_clients_full: 4,
+        lam: 1e-3,
+    };
+    let mut p = prepare_problem(&spec, cfg)?;
+    p.n_clients = 4;
+    p.n_i = 40;
+    let mut out = format!(
+        "## TCP loopback smoke (d={}, n={}, n_i={})\n\n",
+        p.d(),
+        p.n_clients,
+        p.n_i
+    );
+    let mut table = Table::new(&[
+        "Algo",
+        "||∇f||_final",
+        "Rounds",
+        "Up",
+        "Wall (s)",
+    ]);
+    let runs: [(&str, TcpAlgo, u64); 3] = [
+        ("FedNL", TcpAlgo::FedNL, 15),
+        ("FedNL-LS", TcpAlgo::FedNLLS, 15),
+        ("FedNL-PP (τ=2)", TcpAlgo::FedNLPP { tau: 2 }, 30),
+    ];
+    for (name, algo, rounds) in runs {
+        let (tr, solve, _) =
+            run_tcp_experiment(&p, "topk", algo, rounds, None, cfg)?;
+        let first = tr.records.first().map(|r| r.grad_norm).unwrap_or(0.0);
+        let last = tr.last_grad_norm();
+        anyhow::ensure!(
+            last.is_finite() && last < first,
+            "{name}: no progress over TCP ({first:.3e} → {last:.3e})"
+        );
+        table.row(&[
+            name.to_string(),
+            sci(last),
+            format!("{}", tr.records.len()),
+            human_bytes(tr.total_bytes_up()),
+            format!("{solve:.2}"),
+        ]);
+    }
+    out.push_str(&table.to_markdown());
+    Ok(out)
 }
 
 pub fn table3(cfg: &HarnessCfg) -> Result<String> {

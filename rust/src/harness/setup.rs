@@ -158,12 +158,10 @@ impl Problem {
     /// Default pool: the multi-threaded simulator, so single-node runs
     /// use all cores out of the box. Falls back to the sequential
     /// reference pool when it cannot help (one client) or when the user
-    /// forces it (`--seq` / `cfg.seq`). FedNL trajectories are
-    /// bit-identical across the two pools (round replies re-ordered by
-    /// client id before reduction); the baselines' pooled loss/grad
-    /// reductions are deterministic run-to-run on either pool, though
-    /// the threaded bucketing associates the f64 sums differently than
-    /// the flat sequential sum.
+    /// forces it (`--seq` / `cfg.seq`). Trajectories are bit-identical
+    /// across the two pools for the whole algorithm family: round
+    /// replies commit in client-id order (buffer-and-commit) and the
+    /// loss/gradient reductions also reduce in client-id order.
     pub fn pool(
         &self,
         compressor: &str,

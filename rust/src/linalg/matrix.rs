@@ -206,6 +206,30 @@ impl Mat {
         super::simd::sym_rank1_upper(&mut self.data, d, samples, h);
     }
 
+    /// Multi-threaded [`Mat::sym_rank1_block_upper`]: row-block
+    /// partition of the upper triangle across `n_threads` scoped
+    /// threads, bit-identical to the single-threaded accumulate for
+    /// any thread count (each entry is written by exactly one thread
+    /// in the same per-sample order). `n_threads = 1` is exactly the
+    /// single-threaded kernel.
+    pub fn sym_rank1_block_upper_mt(
+        &mut self,
+        samples: &[&[f64]],
+        h: &[f64],
+        n_threads: usize,
+    ) {
+        let d = self.rows;
+        debug_assert_eq!(self.cols, d);
+        debug_assert_eq!(samples.len(), h.len());
+        super::simd::sym_rank1_upper_threaded(
+            &mut self.data,
+            d,
+            samples,
+            h,
+            n_threads,
+        );
+    }
+
     /// Mirror the upper triangle into the lower one (one pass, §5.10).
     pub fn symmetrize_from_upper(&mut self) {
         let d = self.rows;

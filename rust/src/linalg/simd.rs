@@ -193,16 +193,113 @@ pub fn sym_rank1_upper(
     // Release-mode checks: the AVX2 path reads d elements per sample
     // and writes rows of `data` through raw pointers.
     assert_eq!(data.len(), d * d);
+    sym_rank1_upper_rows(data, d, 0, d, samples, h)
+}
+
+/// Row-ranged rank-1 accumulate: `block` holds rows `u0..u1` of a d×d
+/// row-major matrix and receives `block[(u−u0)·d + v] += Σ_b h_b ·
+/// a_b[u] · a_b[v]` for `u0 ≤ u < u1`, `u ≤ v`. The building block of
+/// [`sym_rank1_upper_threaded`]; per-entry accumulation order is
+/// identical to [`sym_rank1_upper`].
+pub fn sym_rank1_upper_rows(
+    block: &mut [f64],
+    d: usize,
+    u0: usize,
+    u1: usize,
+    samples: &[&[f64]],
+    h: &[f64],
+) {
+    assert!(u0 <= u1 && u1 <= d);
+    assert_eq!(block.len(), (u1 - u0) * d);
     assert_eq!(samples.len(), h.len());
     assert!(samples.iter().all(|s| s.len() == d));
     #[cfg(target_arch = "x86_64")]
     {
         if use_avx2() {
-            unsafe { avx2::sym_rank1_upper(data, d, samples, h) };
+            unsafe { avx2::sym_rank1_upper_rows(block, d, u0, u1, samples, h) };
             return;
         }
     }
-    scalar::sym_rank1_upper(data, d, samples, h)
+    scalar::sym_rank1_upper_rows(block, d, u0, u1, samples, h)
+}
+
+/// Multi-threaded rank-1 accumulate (the ROADMAP's "thread the §5.10
+/// accumulate across samples *within* one client"): the packed upper
+/// triangle is partitioned into contiguous **row blocks** of roughly
+/// equal triangle area, one scoped thread per block, each sweeping all
+/// samples over its own rows. Every matrix entry is written by exactly
+/// one thread with the same per-sample accumulation order as the
+/// single-threaded kernel, so the result is **bit-identical for any
+/// thread count** — trajectories do not change when intra-client
+/// threading is enabled.
+pub fn sym_rank1_upper_threaded(
+    data: &mut [f64],
+    d: usize,
+    samples: &[&[f64]],
+    h: &[f64],
+    n_threads: usize,
+) {
+    assert_eq!(data.len(), d * d);
+    assert_eq!(samples.len(), h.len());
+    assert!(samples.iter().all(|s| s.len() == d));
+    let t = n_threads.max(1).min(d.max(1));
+    // Tiny problems: the spawn overhead dwarfs the work.
+    if t == 1 || d < 32 {
+        return sym_rank1_upper_rows(data, d, 0, d, samples, h);
+    }
+    let bounds = triangle_row_blocks(d, t);
+    std::thread::scope(|scope| {
+        let mut rest: &mut [f64] = data;
+        for w in bounds.windows(2) {
+            let (u0, u1) = (w[0], w[1]);
+            if u0 == u1 {
+                continue;
+            }
+            let r = std::mem::take(&mut rest);
+            let (block, tail) = r.split_at_mut((u1 - u0) * d);
+            rest = tail;
+            scope.spawn(move || {
+                sym_rank1_upper_rows(block, d, u0, u1, samples, h)
+            });
+        }
+    });
+}
+
+/// Partition rows `0..d` into `t` contiguous blocks with approximately
+/// equal upper-triangle area (row u owns d−u entries). Returns t+1
+/// boundaries starting at 0 and ending at d; deterministic in (d, t).
+fn triangle_row_blocks(d: usize, t: usize) -> Vec<usize> {
+    let total = d * (d + 1) / 2;
+    let mut bounds = Vec::with_capacity(t + 1);
+    bounds.push(0);
+    let mut acc = 0usize;
+    let mut next = 1usize;
+    for u in 0..d {
+        acc += d - u;
+        if next < t && acc * t >= total * next {
+            bounds.push(u + 1);
+            next += 1;
+        }
+    }
+    while bounds.len() < t + 1 {
+        bounds.push(d);
+    }
+    bounds
+}
+
+/// Intra-client threads for the rank-1 Hessian accumulate (1 = off,
+/// the default — client-level parallelism via `ThreadedPool` already
+/// saturates multi-core hosts; raise it for few-client / sequential
+/// runs, e.g. `fednl train --intra-threads N`).
+static INTRA_THREADS: std::sync::atomic::AtomicUsize =
+    std::sync::atomic::AtomicUsize::new(1);
+
+pub fn set_intra_threads(n: usize) {
+    INTRA_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+pub fn intra_threads() -> usize {
+    INTRA_THREADS.load(Ordering::Relaxed)
 }
 
 /// Wrap-around contiguous gather: `out = src[(start + t) mod n]` for
@@ -317,17 +414,35 @@ pub mod scalar {
         samples: &[&[f64]],
         h: &[f64],
     ) {
+        sym_rank1_upper_rows(data, d, 0, d, samples, h)
+    }
+
+    /// Row-ranged variant of [`sym_rank1_upper`]: accumulates rows
+    /// `u0..u1` only, with `block` holding exactly those rows
+    /// (`block.len() == (u1 − u0) · d`). The per-entry accumulation
+    /// order is identical to the full kernel — the row partition of the
+    /// threaded accumulate stays bit-identical to single-threaded.
+    pub fn sym_rank1_upper_rows(
+        block: &mut [f64],
+        d: usize,
+        u0: usize,
+        u1: usize,
+        samples: &[&[f64]],
+        h: &[f64],
+    ) {
+        debug_assert_eq!(block.len(), (u1 - u0) * d);
         let mut b = 0;
         while b + 4 <= samples.len() {
             let (a0, a1, a2, a3) =
                 (samples[b], samples[b + 1], samples[b + 2], samples[b + 3]);
             let (h0, h1, h2, h3) = (h[b], h[b + 1], h[b + 2], h[b + 3]);
-            for u in 0..d {
+            for u in u0..u1 {
                 let c0 = h0 * a0[u];
                 let c1 = h1 * a1[u];
                 let c2 = h2 * a2[u];
                 let c3 = h3 * a3[u];
-                let row = &mut data[u * d..(u + 1) * d];
+                let r = u - u0;
+                let row = &mut block[r * d..(r + 1) * d];
                 for v in u..d {
                     row[v] +=
                         c0 * a0[v] + c1 * a1[v] + c2 * a2[v] + c3 * a3[v];
@@ -338,9 +453,10 @@ pub mod scalar {
         while b < samples.len() {
             let a = samples[b];
             let hb = h[b];
-            for u in 0..d {
+            for u in u0..u1 {
                 let c = hb * a[u];
-                let row = &mut data[u * d..(u + 1) * d];
+                let r = u - u0;
+                let row = &mut block[r * d..(r + 1) * d];
                 for v in u..d {
                     row[v] += c * a[v];
                 }
@@ -594,13 +710,21 @@ mod avx2 {
         }
     }
 
+    /// Row-ranged rank-1 accumulate (see `scalar::sym_rank1_upper_rows`):
+    /// `block` holds rows `u0..u1` of the matrix; per-entry op order is
+    /// identical regardless of the row partition. The full-matrix entry
+    /// point is the dispatcher's `sym_rank1_upper`, which calls this
+    /// with rows `0..d`.
     #[target_feature(enable = "avx2", enable = "fma")]
-    pub unsafe fn sym_rank1_upper(
-        data: &mut [f64],
+    pub unsafe fn sym_rank1_upper_rows(
+        block: &mut [f64],
         d: usize,
+        u0: usize,
+        u1: usize,
         samples: &[&[f64]],
         h: &[f64],
     ) {
+        debug_assert_eq!(block.len(), (u1 - u0) * d);
         let mut b = 0;
         while b + 4 <= samples.len() {
             let (a0, a1, a2, a3) =
@@ -608,7 +732,7 @@ mod avx2 {
             let (h0, h1, h2, h3) = (h[b], h[b + 1], h[b + 2], h[b + 3]);
             let (p0, p1, p2, p3) =
                 (a0.as_ptr(), a1.as_ptr(), a2.as_ptr(), a3.as_ptr());
-            for u in 0..d {
+            for u in u0..u1 {
                 let s0 = h0 * a0[u];
                 let s1 = h1 * a1[u];
                 let s2 = h2 * a2[u];
@@ -617,7 +741,7 @@ mod avx2 {
                 let c1 = _mm256_set1_pd(s1);
                 let c2 = _mm256_set1_pd(s2);
                 let c3 = _mm256_set1_pd(s3);
-                let row = data.as_mut_ptr().add(u * d);
+                let row = block.as_mut_ptr().add((u - u0) * d);
                 let mut v = u;
                 while v + 4 <= d {
                     let mut acc = _mm256_loadu_pd(row.add(v));
@@ -640,10 +764,10 @@ mod avx2 {
             let a = samples[b];
             let hb = h[b];
             let pa = a.as_ptr();
-            for u in 0..d {
+            for u in u0..u1 {
                 let s = hb * a[u];
                 let c = _mm256_set1_pd(s);
-                let row = data.as_mut_ptr().add(u * d);
+                let row = block.as_mut_ptr().add((u - u0) * d);
                 let mut v = u;
                 while v + 4 <= d {
                     let acc = _mm256_fmadd_pd(
@@ -697,5 +821,32 @@ mod tests {
         x.extend(std::iter::repeat(0.1).take(9)); // force a scalar tail
         assert_eq!(abs_max(&x), 5.0);
         assert_eq!(scalar::abs_max(&x), 5.0);
+    }
+
+    #[test]
+    fn triangle_row_blocks_partition_properties() {
+        for (d, t) in [(1usize, 1usize), (5, 2), (37, 4), (301, 8), (8, 16)] {
+            let t = t.min(d);
+            let b = triangle_row_blocks(d, t);
+            assert_eq!(b.len(), t + 1);
+            assert_eq!(b[0], 0);
+            assert_eq!(b[t], d);
+            for w in b.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+            // Deterministic in (d, t).
+            assert_eq!(b, triangle_row_blocks(d, t));
+        }
+        // Balance: no block should carry more than ~2× the ideal
+        // triangle area (coarse bound; exact balance is impossible with
+        // whole rows).
+        let d = 301;
+        let t = 8;
+        let b = triangle_row_blocks(d, t);
+        let total = d * (d + 1) / 2;
+        for w in b.windows(2) {
+            let area: usize = (w[0]..w[1]).map(|u| d - u).sum();
+            assert!(area * t <= total * 2, "block {w:?} area {area}");
+        }
     }
 }

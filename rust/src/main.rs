@@ -11,9 +11,8 @@
 //!   sysinfo      host introspection (bin_host_view)
 
 use anyhow::{bail, Context, Result};
-use fednl::algorithms::fednl_pp::PPSlice;
 use fednl::algorithms::{
-    run_fednl_ls_pool, run_fednl_pool, run_fednl_pp_transport, ClientState,
+    run_fednl_ls_pool, run_fednl_pool, run_fednl_pp_pool, ClientState,
     LineSearchParams, Options, PPClientState, UpdateRule,
 };
 use fednl::cli::Args;
@@ -59,11 +58,12 @@ fn print_usage() {
          \x20            [--k-mult 8] [--rounds 1000] [--clients 16] [--threads 0]\n\
          \x20            [--lam 1e-3] [--tau 12] [--tol T] [--oracle native|pjrt]\n\
          \x20            [--trace out.csv] [--warm-start] [--rule lk|mu] [--mu 1e-3]\n\
+         \x20            [--intra-threads 1]\n\
          \x20 master     --listen ADDR --clients N --algo ... [--rounds R] [--tol T]\n\
          \x20 client     --connect ADDR --id I --data SHARD [--algo fednl|fednl-pp]\n\
          \x20            [--compressor topk] [--k-mult 8] [--lam 1e-3]\n\
          \x20 verify     --data FILE [--lam 1e-3]   (finite-difference oracle check)\n\
-         \x20 experiment table1|table2|table3|table5|fig1..fig12|costmodel|all\n\
+         \x20 experiment table1|table2|table3|table5|fig1..fig12|costmodel|tcpsmoke|all\n\
          \x20            [--full] [--out-dir results] [--pjrt] [--threads N] [--seq]\n\
          \x20 sysinfo"
     );
@@ -172,6 +172,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         "mu" => UpdateRule::ProjectMu(args.get_f64("mu", 1e-3)?),
         _ => UpdateRule::LkShift,
     };
+    // §5.10 intra-client Hessian-accumulate threading (bit-identical
+    // at any setting; useful for few-client or --threads 1 runs).
+    fednl::linalg::simd::set_intra_threads(
+        args.get_usize("intra-threads", 1)?,
+    );
     let sw = Stopwatch::start();
     let (ds, shards) = load_shards(data, n_clients, seed)?;
     let d = ds.d;
@@ -216,7 +221,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         "fednl-pp" => {
             let tau = args.get_usize("tau", (n_clients / 4).max(1))?;
-            let mut clients: Vec<PPClientState> = shards
+            let clients: Vec<PPClientState> = shards
                 .into_iter()
                 .enumerate()
                 .map(|(i, sh)| -> Result<PPClientState> {
@@ -229,8 +234,11 @@ fn cmd_train(args: &Args) -> Result<()> {
                     ))
                 })
                 .collect::<Result<_>>()?;
-            run_fednl_pp_transport(
-                &mut PPSlice(&mut clients),
+            // PP runs on the same multi-core pool as FedNL/LS now that
+            // participation subsets are part of the pool API.
+            let mut pool = ThreadedPool::new(clients, threads);
+            run_fednl_pp_pool(
+                &mut pool,
                 &opts,
                 tau,
                 seed,
@@ -289,7 +297,7 @@ fn cmd_master(args: &Args) -> Result<()> {
         ),
         "fednl-pp" => {
             let tau = args.get_usize("tau", (n_clients / 4).max(1))?;
-            run_fednl_pp_transport(&mut pool, &opts, tau, seed, x0, "FedNL-PP/tcp")
+            run_fednl_pp_pool(&mut pool, &opts, tau, seed, x0, "FedNL-PP/tcp")
         }
         other => bail!("unknown algo '{other}'"),
     };
@@ -376,6 +384,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             "table3" => harness::table3(&cfg)?,
             "table5" => harness::table5(&cfg)?,
             "costmodel" => harness::costmodel(),
+            "tcpsmoke" => harness::tcp_smoke(&cfg)?,
             f if f.starts_with("fig") => {
                 let n: usize = f[3..].parse().context("figN")?;
                 if n <= 3 {
@@ -394,9 +403,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         ))
     };
     let all = [
-        "costmodel", "table1", "table2", "table3", "table5", "fig1", "fig2",
-        "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
-        "fig11", "fig12",
+        "costmodel", "tcpsmoke", "table1", "table2", "table3", "table5",
+        "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
+        "fig9", "fig10", "fig11", "fig12",
     ];
     let list: Vec<&str> =
         if which == "all" { all.to_vec() } else { vec![which] };

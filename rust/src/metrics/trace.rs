@@ -29,11 +29,24 @@ pub struct Trace {
     pub records: Vec<RoundRecord>,
     /// Name tag (algorithm/compressor) for report labels.
     pub label: String,
+    /// Total seconds the master spent blocked in `ClientPool::drain`
+    /// waiting for client replies (streaming coordination layer).
+    pub wait_secs: f64,
+    /// Total seconds the master spent committing replies (incremental
+    /// aggregation). `wait_secs`/`aggregate_secs` together are the
+    /// per-run wait-vs-aggregate wall-clock split reported by
+    /// `BENCH_coordinator.json`.
+    pub aggregate_secs: f64,
 }
 
 impl Trace {
     pub fn new(label: impl Into<String>) -> Self {
-        Self { records: Vec::new(), label: label.into() }
+        Self {
+            records: Vec::new(),
+            label: label.into(),
+            wait_secs: 0.0,
+            aggregate_secs: 0.0,
+        }
     }
 
     pub fn push(&mut self, r: RoundRecord) {

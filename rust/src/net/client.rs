@@ -28,24 +28,29 @@ pub fn run_client(
     client_id: usize,
     mut mode: ClientMode,
 ) -> Result<(u64, u64)> {
-    let d = match &mode {
-        ClientMode::FedNL(c) => c.dim(),
-        ClientMode::PP(c) => c.dim(),
+    let (d, family) = match &mode {
+        ClientMode::FedNL(c) => (c.dim(), wire::FAMILY_FEDNL),
+        ClientMode::PP(c) => (c.dim(), wire::FAMILY_PP),
     };
     let stream = connect_with_retry(addr, 50)?;
     let mut ch = Channel::new(stream)?;
-    ch.send(c2s::REGISTER, &wire::encode_register(client_id as u32, d as u32))?;
+    ch.send(
+        c2s::REGISTER,
+        &wire::encode_register(client_id as u32, d as u32, family),
+    )?;
 
     loop {
         let (tag, payload) = ch.recv()?;
         match tag {
             s2c::ROUND => {
+                // Unified round command: a FedNL client answers with
+                // its Alg. 1 message, a PP client with its Alg. 3
+                // participation deltas — same MSG codec either way.
                 let (x, round, need_loss) = wire::decode_round(&payload)?;
-                let c = match &mut mode {
-                    ClientMode::FedNL(c) => c,
-                    _ => anyhow::bail!("ROUND sent to a PP client"),
+                let msg = match &mut mode {
+                    ClientMode::FedNL(c) => c.round(&x, round, need_loss),
+                    ClientMode::PP(c) => c.participate(&x, round, need_loss),
                 };
-                let msg = c.round(&x, round, need_loss);
                 ch.send(c2s::MSG, &wire::encode_client_msg(&msg))?;
             }
             s2c::EVAL_LOSS => {
@@ -76,30 +81,13 @@ pub fn run_client(
                 };
                 ch.send(c2s::GRAD, &wire::encode_loss_grad(l, &g))?;
             }
-            s2c::PP_ROUND => {
-                let (x, round, _) = wire::decode_round(&payload)?;
+            s2c::STATE => {
                 let c = match &mut mode {
                     ClientMode::PP(c) => c,
-                    _ => anyhow::bail!("PP_ROUND sent to a FedNL client"),
-                };
-                let msg = c.participate(&x, round);
-                ch.send(
-                    c2s::PP_MSG,
-                    &wire::encode_pp_msg(
-                        msg.client_id as u32,
-                        &msg.update,
-                        msg.dl,
-                        &msg.dg,
-                    ),
-                )?;
-            }
-            s2c::PP_INIT => {
-                let c = match &mut mode {
-                    ClientMode::PP(c) => c,
-                    _ => anyhow::bail!("PP_INIT sent to a FedNL client"),
+                    _ => anyhow::bail!("STATE sent to a FedNL client"),
                 };
                 ch.send(
-                    c2s::PP_STATE,
+                    c2s::STATE,
                     &wire::encode_loss_grad(c.l_i, &c.g_i),
                 )?;
             }

@@ -14,6 +14,11 @@ use anyhow::{Context, Result};
 /// is 32 MiB; anything above 256 MiB is a protocol error).
 pub const MAX_FRAME: usize = 256 << 20;
 
+/// Bytes of framing around every payload: u32 length + u8 tag. The
+/// drivers' logical byte accounting includes this so it matches the
+/// transport's metered counts exactly.
+pub const FRAME_HEADER_BYTES: u64 = 5;
+
 /// A framed, metered TCP channel.
 pub struct Channel {
     stream: TcpStream,
@@ -35,7 +40,7 @@ impl Channel {
         self.stream.write_all(&header)?;
         self.stream.write_all(payload)?;
         self.stream.flush()?;
-        self.bytes_sent += 5 + payload.len() as u64;
+        self.bytes_sent += FRAME_HEADER_BYTES + payload.len() as u64;
         Ok(())
     }
 
@@ -47,7 +52,7 @@ impl Channel {
         anyhow::ensure!(len <= MAX_FRAME, "oversized frame: {len}");
         let mut payload = vec![0u8; len];
         self.stream.read_exact(&mut payload).context("frame payload")?;
-        self.bytes_received += 5 + len as u64;
+        self.bytes_received += FRAME_HEADER_BYTES + len as u64;
         Ok((tag, payload))
     }
 

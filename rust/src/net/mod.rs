@@ -17,4 +17,5 @@ pub mod server;
 pub mod wire;
 
 pub use client::run_client;
+pub use framing::FRAME_HEADER_BYTES;
 pub use server::RemotePool;

@@ -1,8 +1,17 @@
 //! Multi-node master: accepts n client connections and exposes them as a
-//! [`ClientPool`], so `run_fednl_pool` / `run_fednl_ls_pool` drive real
-//! distributed training unchanged (paper §9.3 setting: n clients + one
-//! master, star topology, one TCP connection per client).
+//! [`ClientPool`], so the unified round engine drives real distributed
+//! training unchanged (paper §9.3 setting: n clients + one master, star
+//! topology, one TCP connection per client).
+//!
+//! The pool is **streaming**: `submit_round` pushes the ROUND frame to
+//! every participant before any reply is read, and `drain` surfaces one
+//! decoded reply at a time, so the driver's incremental aggregation of
+//! client i overlaps with the *other* clients' compute and network
+//! transfer (their frames accumulate in the OS socket buffers while the
+//! master aggregates; recv + decode themselves run on the master thread,
+//! between commits).
 
+use std::collections::VecDeque;
 use std::net::TcpListener;
 
 use anyhow::{Context, Result};
@@ -10,14 +19,20 @@ use anyhow::{Context, Result};
 use super::framing::Channel;
 use super::wire::{self, c2s, s2c};
 use crate::algorithms::ClientMsg;
-use crate::coordinator::ClientPool;
+use crate::coordinator::{ClientFamily, ClientPool};
 
 /// Master-side handle to n connected remote clients.
 pub struct RemotePool {
     /// Channels indexed by registered client id.
     channels: Vec<Channel>,
+    /// Algorithm family all clients declared at registration (pools
+    /// are family-homogeneous; enforced during accept).
+    family: ClientFamily,
     d: usize,
     alpha: f64,
+    /// Client ids of the round in flight, in subset order; replies are
+    /// read (and surfaced to `drain`) in this order.
+    pending: VecDeque<u32>,
 }
 
 /// A bound-but-not-yet-populated master socket; lets callers learn the
@@ -52,7 +67,7 @@ impl RemotePool {
     }
 
     fn accept_on(listener: TcpListener, n_clients: usize) -> Result<Self> {
-        let mut slots: Vec<Option<Channel>> =
+        let mut slots: Vec<Option<(Channel, u8)>> =
             (0..n_clients).map(|_| None).collect();
         let mut d = 0usize;
         let mut registered = 0;
@@ -61,7 +76,7 @@ impl RemotePool {
             let mut ch = Channel::new(stream)?;
             let (tag, payload) = ch.recv()?;
             anyhow::ensure!(tag == c2s::REGISTER, "expected REGISTER");
-            let (id, dim) = wire::decode_register(&payload)?;
+            let (id, dim, family) = wire::decode_register(&payload)?;
             let id = id as usize;
             anyhow::ensure!(id < n_clients, "client id {id} out of range");
             anyhow::ensure!(slots[id].is_none(), "duplicate client id {id}");
@@ -70,11 +85,34 @@ impl RemotePool {
             } else {
                 anyhow::ensure!(d == dim as usize, "dimension mismatch");
             }
-            slots[id] = Some(ch);
+            slots[id] = Some((ch, family));
             registered += 1;
         }
-        let channels = slots.into_iter().map(|s| s.unwrap()).collect();
-        Ok(Self { channels, d, alpha: 0.0 })
+        let mut channels = Vec::with_capacity(n_clients);
+        let mut family = None;
+        for (id, s) in slots.into_iter().enumerate() {
+            let (ch, f) = s.unwrap();
+            let f = match f {
+                wire::FAMILY_FEDNL => ClientFamily::FedNL,
+                _ => ClientFamily::PP,
+            };
+            match family {
+                None => family = Some(f),
+                Some(prev) => anyhow::ensure!(
+                    prev == f,
+                    "client {id} registered as {f:?} but earlier clients \
+                     registered as {prev:?}: pools are family-homogeneous"
+                ),
+            }
+            channels.push(ch);
+        }
+        Ok(Self {
+            channels,
+            family: family.unwrap(),
+            d,
+            alpha: 0.0,
+            pending: VecDeque::new(),
+        })
     }
 
     fn broadcast(&mut self, tag: u8, payload: &[u8]) -> Result<()> {
@@ -90,74 +128,6 @@ impl RemotePool {
     }
 }
 
-impl crate::algorithms::fednl_pp::PPTransport for RemotePool {
-    fn n_clients(&self) -> usize {
-        self.channels.len()
-    }
-
-    fn dim(&self) -> usize {
-        self.d
-    }
-
-    fn default_alpha(&self) -> f64 {
-        <Self as ClientPool>::default_alpha(self)
-    }
-
-    fn set_alpha(&mut self, a: f64) {
-        <Self as ClientPool>::set_alpha(self, a)
-    }
-
-    fn pp_init(&mut self) -> Vec<(f64, Vec<f64>)> {
-        self.broadcast(s2c::PP_INIT, &[]).expect("pp_init broadcast");
-        self.channels
-            .iter_mut()
-            .map(|ch| {
-                let (tag, p) = ch.recv().expect("pp_init reply");
-                assert_eq!(tag, c2s::PP_STATE);
-                wire::decode_loss_grad(&p).expect("pp state")
-            })
-            .collect()
-    }
-
-    fn pp_round(
-        &mut self,
-        x: &[f64],
-        round: u64,
-        selected: &[u32],
-    ) -> Vec<crate::algorithms::fednl_pp::PPMsg> {
-        let payload = wire::encode_round(x, round, false);
-        for &ci in selected {
-            self.channels[ci as usize]
-                .send(s2c::PP_ROUND, &payload)
-                .expect("pp send");
-        }
-        selected
-            .iter()
-            .map(|&ci| {
-                let (tag, p) =
-                    self.channels[ci as usize].recv().expect("pp reply");
-                assert_eq!(tag, c2s::PP_MSG);
-                let (id, update, dl, dg) =
-                    wire::decode_pp_msg(&p).expect("pp decode");
-                crate::algorithms::fednl_pp::PPMsg {
-                    client_id: id as usize,
-                    update,
-                    dl,
-                    dg,
-                }
-            })
-            .collect()
-    }
-
-    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
-        <Self as ClientPool>::loss_grad(self, x)
-    }
-
-    fn transport_bytes(&self) -> Option<(u64, u64)> {
-        <Self as ClientPool>::transport_bytes(self)
-    }
-}
-
 impl ClientPool for RemotePool {
     fn n_clients(&self) -> usize {
         self.channels.len()
@@ -169,6 +139,10 @@ impl ClientPool for RemotePool {
 
     fn kind_name(&self) -> &'static str {
         "remote"
+    }
+
+    fn family(&self) -> ClientFamily {
+        self.family
     }
 
     fn default_alpha(&self) -> f64 {
@@ -198,27 +172,61 @@ impl ClientPool for RemotePool {
         self.alpha = resolved;
     }
 
-    fn round(
+    fn submit_round(
         &mut self,
         x: &[f64],
+        subset: Option<&[u32]>,
         round: u64,
         need_loss: bool,
-    ) -> Vec<ClientMsg> {
+    ) {
+        assert!(self.pending.is_empty(), "previous round not fully drained");
         let payload = wire::encode_round(x, round, need_loss);
-        self.broadcast(s2c::ROUND, &payload).expect("round broadcast");
-        // Collect replies; channel order == client id order, but clients
-        // compute concurrently because all sends complete first.
-        let mut msgs: Vec<ClientMsg> = self
-            .channels
-            .iter_mut()
-            .map(|ch| {
-                let (tag, p) = ch.recv().expect("round reply");
+        // All sends complete before any receive: every participant
+        // computes concurrently. (Family mismatches are caught by the
+        // round engine against `self.family`, which the clients
+        // declared at registration.)
+        match subset {
+            None => {
+                for (ci, ch) in self.channels.iter_mut().enumerate() {
+                    ch.send(s2c::ROUND, &payload).expect("round send");
+                    self.pending.push_back(ci as u32);
+                }
+            }
+            Some(s) => {
+                for &ci in s {
+                    self.channels[ci as usize]
+                        .send(s2c::ROUND, &payload)
+                        .expect("round send");
+                    self.pending.push_back(ci);
+                }
+            }
+        }
+    }
+
+    fn drain(&mut self) -> Vec<ClientMsg> {
+        // One decoded reply per call, in subset order: while the caller
+        // aggregates this message, the remaining clients keep computing
+        // and their frames accumulate in the kernel socket buffers, so
+        // the next recv rarely blocks on a non-straggler.
+        match self.pending.pop_front() {
+            None => Vec::new(),
+            Some(ci) => {
+                let (tag, p) =
+                    self.channels[ci as usize].recv().expect("round reply");
                 assert_eq!(tag, c2s::MSG);
-                wire::decode_client_msg(&p).expect("decode client msg")
-            })
-            .collect();
-        msgs.sort_by_key(|m| m.client_id);
-        msgs
+                let m =
+                    wire::decode_client_msg(&p).expect("decode client msg");
+                // A reply must identify as the client whose channel it
+                // came over — fail at the culprit, not later at the
+                // commit buffer under an innocent client's id.
+                assert_eq!(
+                    m.client_id, ci as usize,
+                    "client on channel {ci} replied with id {}",
+                    m.client_id
+                );
+                vec![m]
+            }
+        }
     }
 
     fn eval_loss(&mut self, x: &[f64]) -> f64 {
@@ -258,6 +266,18 @@ impl ClientPool for RemotePool {
                 let (tag, p) = ch.recv().expect("warm reply");
                 assert_eq!(tag, c2s::WARM);
                 wire::decode_vec(&p).expect("warm decode")
+            })
+            .collect()
+    }
+
+    fn init_state(&mut self) -> Vec<(f64, Vec<f64>)> {
+        self.broadcast(s2c::STATE, &[]).expect("state broadcast");
+        self.channels
+            .iter_mut()
+            .map(|ch| {
+                let (tag, p) = ch.recv().expect("state reply");
+                assert_eq!(tag, c2s::STATE);
+                wire::decode_loss_grad(&p).expect("state decode")
             })
             .collect()
     }

@@ -1,5 +1,42 @@
 //! Wire encoding of the FedNL protocol messages (fixed-width LE fields;
 //! paper §7 found fixed 32-bit index framing beats variable-width).
+//!
+//! # Unified tag table
+//!
+//! Since the streaming-coordination refactor the FedNL and FedNL-PP
+//! command sets are **one protocol** — a client's algorithm family is
+//! fixed at registration (its `ClientMode`), so the round exchange needs
+//! no per-algorithm tags:
+//!
+//! | dir | tag            | payload                    | reply          |
+//! |-----|----------------|----------------------------|----------------|
+//! | s2c | `ROUND`      1 | round, need_loss, x        | `MSG`          |
+//! | s2c | `EVAL_LOSS`  2 | x                          | `LOSS`         |
+//! | s2c | `WARM_START` 3 | x⁰                         | `WARM`         |
+//! | s2c | `SET_ALPHA`  5 | α                          | `ACK` (echo α) |
+//! | s2c | `SHUTDOWN`   6 | —                          | —              |
+//! | s2c | `LOSS_GRAD`  7 | x                          | `GRAD`         |
+//! | s2c | `STATE`      8 | —                          | `STATE`        |
+//! | c2s | `REGISTER`  10 | client id, d, family       | —              |
+//! | c2s | `MSG`       11 | unified [`ClientMsg`]      |                |
+//! | c2s | `LOSS`      12 | f64                        |                |
+//! | c2s | `WARM`      13 | packed Hᵢ⁰                 |                |
+//! | c2s | `ACK`       15 | f64                        |                |
+//! | c2s | `GRAD`      16 | (f, ∇f)                    |                |
+//! | c2s | `STATE`     17 | (lᵢ, gᵢ)                   |                |
+//!
+//! A FedNL client answers `ROUND` with its Alg. 1 message; a PP client
+//! answers the *same* tag with its Alg. 3 participation deltas — both
+//! travel as the unified [`ClientMsg`] codec. The retired PP-specific
+//! tags (`PP_ROUND` = 4, `PP_MSG` = 14) are left unassigned.
+//!
+//! # Byte accounting
+//!
+//! The `*_frame_bytes` helpers return the **exact** framed size
+//! (header + payload) of each fixed-shape frame; together with
+//! [`ClientMsg::wire_bytes`] they keep the drivers' logical byte
+//! accounting equal to the TCP transport's metered counts (asserted by
+//! the codec tests below and the TCP integration test).
 
 use anyhow::Result;
 
@@ -8,18 +45,19 @@ use crate::compressors::natural::{pack16, unpack16};
 use crate::compressors::{Compressed, IndexPayload, ValueEncoding};
 use crate::utils::{ByteReader, ByteWriter};
 
+pub use super::framing::FRAME_HEADER_BYTES;
+
 /// Frame tags, master → client.
 pub mod s2c {
     pub const ROUND: u8 = 1;
     pub const EVAL_LOSS: u8 = 2;
     pub const WARM_START: u8 = 3;
-    pub const PP_ROUND: u8 = 4;
     pub const SET_ALPHA: u8 = 5;
     pub const SHUTDOWN: u8 = 6;
     /// First-order reduction (baselines): client replies GRAD.
     pub const LOSS_GRAD: u8 = 7;
-    /// FedNL-PP state bootstrap: client replies PP_STATE with (lᵢ⁰, gᵢ⁰).
-    pub const PP_INIT: u8 = 8;
+    /// State pull: PP client replies STATE with its current (lᵢ, gᵢ).
+    pub const STATE: u8 = 8;
 }
 
 /// Frame tags, client → master.
@@ -28,12 +66,39 @@ pub mod c2s {
     pub const MSG: u8 = 11;
     pub const LOSS: u8 = 12;
     pub const WARM: u8 = 13;
-    pub const PP_MSG: u8 = 14;
     pub const ACK: u8 = 15;
     /// (loss, gradient) reply to LOSS_GRAD.
     pub const GRAD: u8 = 16;
-    /// (lᵢ⁰, gᵢ⁰) reply to PP_INIT (same codec as GRAD).
-    pub const PP_STATE: u8 = 17;
+    /// (lᵢ, gᵢ) reply to STATE (same codec as GRAD).
+    pub const STATE: u8 = 17;
+}
+
+// --- exact frame sizes ----------------------------------------------------
+
+/// Framed size of a ROUND command: header + round + need_loss + len + x.
+pub fn round_frame_bytes(d: usize) -> u64 {
+    FRAME_HEADER_BYTES + 8 + 1 + 4 + 8 * d as u64
+}
+
+/// Framed size of a bare f64 vector (EVAL_LOSS / WARM_START commands,
+/// WARM replies): header + len + values.
+pub fn vec_frame_bytes(len: usize) -> u64 {
+    FRAME_HEADER_BYTES + 4 + 8 * len as u64
+}
+
+/// Framed size of a single f64 (LOSS / ACK / SET_ALPHA).
+pub fn scalar_frame_bytes() -> u64 {
+    FRAME_HEADER_BYTES + 8
+}
+
+/// Framed size of an (f64, vector) pair (GRAD / STATE replies).
+pub fn scalar_vec_frame_bytes(len: usize) -> u64 {
+    FRAME_HEADER_BYTES + 8 + 4 + 8 * len as u64
+}
+
+/// Framed size of a payload-less command (STATE / SHUTDOWN).
+pub fn empty_frame_bytes() -> u64 {
+    FRAME_HEADER_BYTES
 }
 
 // --- payload codecs -------------------------------------------------------
@@ -78,16 +143,36 @@ pub fn decode_scalar(p: &[u8]) -> Result<f64> {
     ByteReader::new(p).get_f64()
 }
 
-pub fn encode_register(client_id: u32, d: u32) -> Vec<u8> {
-    let mut w = ByteWriter::with_capacity(8);
+/// Client algorithm family, declared at registration. The round
+/// exchange is family-agnostic (one ROUND/MSG tag pair), so the master
+/// validates at dispatch time that a round is going to clients of the
+/// right family instead of silently aggregating mismatched math.
+pub const FAMILY_FEDNL: u8 = 0;
+pub const FAMILY_PP: u8 = 1;
+
+pub fn encode_register(client_id: u32, d: u32, family: u8) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(9);
     w.put_u32(client_id);
     w.put_u32(d);
+    w.put_u8(family);
     w.into_vec()
 }
 
-pub fn decode_register(p: &[u8]) -> Result<(u32, u32)> {
+pub fn decode_register(p: &[u8]) -> Result<(u32, u32, u8)> {
     let mut r = ByteReader::new(p);
-    Ok((r.get_u32()?, r.get_u32()?))
+    let id = r.get_u32()?;
+    let d = r.get_u32()?;
+    let family = r.get_u8()?;
+    anyhow::ensure!(
+        family == FAMILY_FEDNL || family == FAMILY_PP,
+        "bad client family {family}"
+    );
+    Ok((id, d, family))
+}
+
+/// Framed size of a REGISTER frame (id + d + family byte).
+pub fn register_frame_bytes() -> u64 {
+    FRAME_HEADER_BYTES + 9
 }
 
 fn put_compressed(w: &mut ByteWriter, c: &Compressed) {
@@ -160,6 +245,8 @@ fn get_compressed(r: &mut ByteReader) -> Result<Compressed> {
     Ok(Compressed { payload, values, scale, encoding, n })
 }
 
+/// The unified round reply — FedNL messages and FedNL-PP participation
+/// deltas share this codec (see [`ClientMsg`]).
 pub fn encode_client_msg(m: &ClientMsg) -> Vec<u8> {
     let mut w = ByteWriter::with_capacity(m.grad.len() * 8 + 64);
     w.put_u32(m.client_id as u32);
@@ -188,6 +275,7 @@ pub fn decode_client_msg(p: &[u8]) -> Result<ClientMsg> {
     Ok(ClientMsg { client_id, grad, update, l_i, loss })
 }
 
+/// (scalar, vector) codec shared by the GRAD and STATE replies.
 pub fn encode_loss_grad(loss: f64, g: &[f64]) -> Vec<u8> {
     let mut w = ByteWriter::with_capacity(g.len() * 8 + 12);
     w.put_f64(loss);
@@ -201,32 +289,6 @@ pub fn decode_loss_grad(p: &[u8]) -> Result<(f64, Vec<f64>)> {
     let loss = r.get_f64()?;
     let n = r.get_u32()? as usize;
     Ok((loss, r.get_f64_vec(n)?))
-}
-
-/// FedNL-PP participant message.
-pub fn encode_pp_msg(
-    client_id: u32,
-    update: &Compressed,
-    dl: f64,
-    dg: &[f64],
-) -> Vec<u8> {
-    let mut w = ByteWriter::with_capacity(dg.len() * 8 + 64);
-    w.put_u32(client_id);
-    w.put_f64(dl);
-    w.put_u32(dg.len() as u32);
-    w.put_f64_slice(dg);
-    put_compressed(&mut w, update);
-    w.into_vec()
-}
-
-pub fn decode_pp_msg(p: &[u8]) -> Result<(u32, Compressed, f64, Vec<f64>)> {
-    let mut r = ByteReader::new(p);
-    let id = r.get_u32()?;
-    let dl = r.get_f64()?;
-    let d = r.get_u32()? as usize;
-    let dg = r.get_f64_vec(d)?;
-    let update = get_compressed(&mut r)?;
-    Ok((id, update, dl, dg))
 }
 
 #[cfg(test)]
@@ -243,6 +305,26 @@ mod tests {
         assert!(need_loss);
     }
 
+    fn msg_with(payload: IndexPayload, loss: Option<f64>) -> ClientMsg {
+        let values = match &payload {
+            IndexPayload::Dense => vec![1.0; 10],
+            _ => vec![1.5, -2.0, 0.0],
+        };
+        ClientMsg {
+            client_id: 3,
+            grad: vec![0.5; 4],
+            update: Compressed {
+                payload,
+                values,
+                scale: 1.0,
+                encoding: ValueEncoding::F64,
+                n: 10,
+            },
+            l_i: 2.25,
+            loss,
+        }
+    }
+
     #[test]
     fn client_msg_roundtrip_all_payloads() {
         let payloads = vec![
@@ -252,23 +334,7 @@ mod tests {
             IndexPayload::Dense,
         ];
         for p in payloads {
-            let values = match &p {
-                IndexPayload::Dense => vec![1.0; 10],
-                _ => vec![1.5, -2.0, 0.0],
-            };
-            let m = ClientMsg {
-                client_id: 3,
-                grad: vec![0.5; 4],
-                update: Compressed {
-                    payload: p.clone(),
-                    values,
-                    scale: 1.0,
-                    encoding: ValueEncoding::F64,
-                    n: 10,
-                },
-                l_i: 2.25,
-                loss: Some(-0.75),
-            };
+            let m = msg_with(p, Some(-0.75));
             let dec = decode_client_msg(&encode_client_msg(&m)).unwrap();
             assert_eq!(dec.client_id, 3);
             assert_eq!(dec.grad, m.grad);
@@ -282,20 +348,78 @@ mod tests {
     }
 
     #[test]
-    fn pp_roundtrip() {
-        let c = Compressed {
-            payload: IndexPayload::Explicit(vec![1, 2]),
-            values: vec![0.5, -0.5],
-            scale: 1.0,
-            encoding: ValueEncoding::F64,
-            n: 6,
+    fn client_msg_wire_bytes_matches_encoder_exactly() {
+        // The satellite fix: the drivers' logical `wire_bytes()` must
+        // equal the framed size the TCP transport actually meters.
+        let payloads = vec![
+            IndexPayload::Explicit(vec![0, 5, 9]),
+            IndexPayload::Seed { seed: 0xDEAD, k: 3 },
+            IndexPayload::SeqStart { start: 7, k: 3 },
+            IndexPayload::Dense,
+        ];
+        for p in payloads {
+            for loss in [None, Some(0.125)] {
+                let m = msg_with(p.clone(), loss);
+                let framed =
+                    encode_client_msg(&m).len() as u64 + FRAME_HEADER_BYTES;
+                assert_eq!(
+                    m.wire_bytes(),
+                    framed,
+                    "payload {:?}, loss {:?}",
+                    m.update.payload,
+                    loss
+                );
+            }
+        }
+        // Pow2x16 values travel in 2 bytes each.
+        let m = ClientMsg {
+            client_id: 1,
+            grad: vec![0.0; 3],
+            update: Compressed {
+                payload: IndexPayload::Dense,
+                values: vec![2.0, -0.5, 1024.0],
+                scale: 8.0 / 9.0,
+                encoding: ValueEncoding::Pow2x16,
+                n: 3,
+            },
+            l_i: 0.0,
+            loss: None,
         };
-        let enc = encode_pp_msg(9, &c, -0.125, &[1.0, 2.0]);
-        let (id, c2, dl, dg) = decode_pp_msg(&enc).unwrap();
-        assert_eq!(id, 9);
-        assert_eq!(dl, -0.125);
-        assert_eq!(dg, vec![1.0, 2.0]);
-        assert_eq!(c2.values, c.values);
+        assert_eq!(
+            m.wire_bytes(),
+            encode_client_msg(&m).len() as u64 + FRAME_HEADER_BYTES
+        );
+    }
+
+    #[test]
+    fn frame_size_helpers_match_encoders() {
+        let x = vec![0.5; 7];
+        assert_eq!(
+            round_frame_bytes(x.len()),
+            encode_round(&x, 9, true).len() as u64 + FRAME_HEADER_BYTES
+        );
+        assert_eq!(
+            vec_frame_bytes(x.len()),
+            encode_vec(&x).len() as u64 + FRAME_HEADER_BYTES
+        );
+        assert_eq!(
+            scalar_frame_bytes(),
+            encode_scalar(1.5).len() as u64 + FRAME_HEADER_BYTES
+        );
+        assert_eq!(
+            scalar_vec_frame_bytes(x.len()),
+            encode_loss_grad(0.25, &x).len() as u64 + FRAME_HEADER_BYTES
+        );
+        assert_eq!(
+            register_frame_bytes(),
+            encode_register(3, 7, FAMILY_PP).len() as u64
+                + FRAME_HEADER_BYTES
+        );
+        assert_eq!(empty_frame_bytes(), FRAME_HEADER_BYTES);
+        let (id, d, fam) =
+            decode_register(&encode_register(3, 7, FAMILY_PP)).unwrap();
+        assert_eq!((id, d, fam), (3, 7, FAMILY_PP));
+        assert!(decode_register(&encode_register(1, 2, 9)).is_err());
     }
 
     #[test]

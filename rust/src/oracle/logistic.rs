@@ -97,7 +97,9 @@ impl LogisticOracle {
         h.fill_zero();
         let rows: Vec<&[f64]> =
             (0..self.at.rows()).map(|j| self.at.row(j)).collect();
-        h.sym_rank1_block_upper(&rows, &self.hw);
+        // Intra-client threading of the accumulate (§5.10 / ROADMAP):
+        // off by default (1 thread); bit-identical at any setting.
+        h.sym_rank1_block_upper_mt(&rows, &self.hw, simd::intra_threads());
         h.symmetrize_from_upper();
         h.add_diag(self.lam);
     }

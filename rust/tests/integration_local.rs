@@ -2,15 +2,16 @@
 //! every algorithm of the family, across both in-process transports.
 
 use fednl::algorithms::{
-    run_fednl, run_fednl_ls, run_fednl_pool, run_fednl_pp, ClientState,
-    LineSearchParams, Options, PPClientState, UpdateRule,
+    run_fednl, run_fednl_ls, run_fednl_pool, run_fednl_pp, run_fednl_pp_pool,
+    ClientState, LineSearchParams, Options, PPClientState, UpdateRule,
 };
 use fednl::compressors::{by_name, ALL_NAMES};
 use fednl::coordinator::{ClientPool, SeqPool, ThreadedPool};
 use fednl::data::{
     generate_synthetic, parse_libsvm_bytes, write_libsvm, Dataset, SynthSpec,
 };
-use fednl::oracle::LogisticOracle;
+use fednl::linalg::Mat;
+use fednl::oracle::{LogisticOracle, Oracle};
 
 fn problem(
     d_raw: usize,
@@ -180,6 +181,160 @@ fn deterministic_across_runs() {
     for (ra, rb) in ta.records.iter().zip(&tb.records) {
         assert_eq!(ra.grad_norm, rb.grad_norm);
         assert_eq!(ra.bytes_up, rb.bytes_up);
+    }
+}
+
+fn pp_clients(
+    ds: &Dataset,
+    n: usize,
+    comp: &str,
+    seed: u64,
+    x0: &[f64],
+) -> Vec<PPClientState> {
+    ds.split_even(n)
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .map(|(i, sh)| {
+            PPClientState::new(
+                i,
+                Box::new(LogisticOracle::new(sh, 1e-3)),
+                by_name(comp, ds.d, 8, seed + i as u64).unwrap(),
+                None,
+                x0,
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn fednl_pp_cross_transport_bit_identical() {
+    // FedNL-PP through the unified round engine: the slice reference,
+    // SeqPool and ThreadedPool (several worker counts) must produce
+    // bit-identical trajectories — same seeded participation subsets,
+    // same commit order (selection order), same out-of-band ‖∇f‖
+    // reduction (ascending client id on every transport).
+    let (ds, d) = problem(9, 6, 40, 107);
+    let x0 = vec![0.0; d];
+    let opts = Options { rounds: 40, ..Default::default() };
+    let (tau, seed) = (2usize, 99u64);
+
+    let mut ref_cs = pp_clients(&ds, 6, "topk", 5, &x0);
+    let t_ref = run_fednl_pp(&mut ref_cs, &opts, tau, seed, x0.clone());
+    let g0 = t_ref.records[0].grad_norm;
+    assert!(
+        t_ref.last_grad_norm() < g0 / 10.0,
+        "no PP progress: {} → {}",
+        g0,
+        t_ref.last_grad_norm()
+    );
+
+    let mut seq = SeqPool::new(pp_clients(&ds, 6, "topk", 5, &x0));
+    let t_seq =
+        run_fednl_pp_pool(&mut seq, &opts, tau, seed, x0.clone(), "pp-seq");
+
+    for (a, b) in t_ref.records.iter().zip(&t_seq.records) {
+        assert_eq!(a.grad_norm, b.grad_norm, "seq round {}", a.round);
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.bytes_up, b.bytes_up);
+    }
+
+    for workers in [1usize, 2, 6] {
+        let mut thr =
+            ThreadedPool::new(pp_clients(&ds, 6, "topk", 5, &x0), workers);
+        let t_thr = run_fednl_pp_pool(
+            &mut thr,
+            &opts,
+            tau,
+            seed,
+            x0.clone(),
+            "pp-thr",
+        );
+        for (a, b) in t_ref.records.iter().zip(&t_thr.records) {
+            assert_eq!(
+                a.grad_norm, b.grad_norm,
+                "workers={workers} round {}",
+                a.round
+            );
+            assert_eq!(a.loss, b.loss);
+            assert_eq!(a.bytes_up, b.bytes_up);
+        }
+    }
+}
+
+/// An oracle whose Hessian evaluation is artificially slow — a
+/// simulated straggler client.
+struct SlowOracle {
+    inner: LogisticOracle,
+    delay: std::time::Duration,
+}
+
+impl Oracle for SlowOracle {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn loss(&mut self, x: &[f64]) -> f64 {
+        self.inner.loss(x)
+    }
+
+    fn loss_grad(&mut self, x: &[f64], g: &mut [f64]) -> f64 {
+        self.inner.loss_grad(x, g)
+    }
+
+    fn loss_grad_hessian(
+        &mut self,
+        x: &[f64],
+        g: &mut [f64],
+        h: &mut Mat,
+    ) -> f64 {
+        std::thread::sleep(self.delay);
+        self.inner.loss_grad_hessian(x, g, h)
+    }
+}
+
+#[test]
+fn straggler_reply_order_does_not_change_trajectory() {
+    // Client 0 sleeps 20 ms per Hessian evaluation, so on a pool with
+    // one worker per client its round reply arrives *last* while the
+    // other replies wait in the commit buffer. Buffer-and-commit must
+    // still aggregate in ascending client id order: the trajectory is
+    // bit-identical to the no-straggler sequential reference.
+    let (ds, d) = problem(8, 4, 40, 108);
+    let make = |slow: bool| -> Vec<ClientState> {
+        ds.split_even(4)
+            .unwrap()
+            .into_iter()
+            .enumerate()
+            .map(|(i, sh)| {
+                let base = LogisticOracle::new(sh, 1e-3);
+                let oracle: Box<dyn Oracle> = if slow && i == 0 {
+                    Box::new(SlowOracle {
+                        inner: base,
+                        delay: std::time::Duration::from_millis(20),
+                    })
+                } else {
+                    Box::new(base)
+                };
+                ClientState::new(
+                    i,
+                    oracle,
+                    by_name("randseqk", d, 8, 60 + i as u64).unwrap(),
+                    None,
+                )
+            })
+            .collect()
+    };
+    let opts = Options { rounds: 6, track_loss: true, ..Default::default() };
+    let mut seq = SeqPool::new(make(false));
+    let t_seq = run_fednl_pool(&mut seq, &opts, vec![0.0; d], "seq");
+    let mut thr = ThreadedPool::new(make(true), 4);
+    let t_thr = run_fednl_pool(&mut thr, &opts, vec![0.0; d], "straggler");
+    assert_eq!(t_seq.records.len(), t_thr.records.len());
+    for (a, b) in t_seq.records.iter().zip(&t_thr.records) {
+        assert_eq!(a.grad_norm, b.grad_norm, "round {}", a.round);
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.bytes_up, b.bytes_up);
     }
 }
 

@@ -1,10 +1,11 @@
-//! Multi-node TCP integration: real sockets on loopback, the full wire
-//! protocol, all three algorithms — and trajectory equivalence with the
-//! in-process reference (the wire codec is bit-exact for f64).
+//! Multi-node TCP integration: real sockets on loopback, the full
+//! unified wire protocol, all three algorithms through the single round
+//! engine — and trajectory equivalence with the in-process reference
+//! (the wire codec is bit-exact for f64).
 
 use fednl::algorithms::{
     run_fednl, run_fednl_ls_pool, run_fednl_pool, run_fednl_pp,
-    run_fednl_pp_transport, ClientState, LineSearchParams, Options,
+    run_fednl_pp_pool, ClientState, LineSearchParams, Options,
     PPClientState,
 };
 use fednl::compressors::by_name;
@@ -13,6 +14,7 @@ use fednl::data::{generate_synthetic, Dataset, LibsvmSample, SynthSpec};
 use fednl::net::client::ClientMode;
 use fednl::net::run_client;
 use fednl::net::server::Bound;
+use fednl::net::wire;
 use fednl::oracle::LogisticOracle;
 
 fn dataset(d_raw: usize, n: usize, seed: u64) -> Dataset {
@@ -160,7 +162,7 @@ fn tcp_fednl_pp_matches_in_process() {
     let addr = bound.local_addr().unwrap().to_string();
     let handles = spawn_clients(&ds, N, "topk", &addr, true);
     let mut pool = bound.accept(N).unwrap();
-    let t_tcp = run_fednl_pp_transport(
+    let t_tcp = run_fednl_pp_pool(
         &mut pool,
         &opts,
         2,
@@ -176,6 +178,77 @@ fn tcp_fednl_pp_matches_in_process() {
         assert_eq!(a.grad_norm, b.grad_norm, "round {}", a.round);
     }
     assert!(t_tcp.last_grad_norm() < 1e-6);
+}
+
+#[test]
+fn logical_byte_accounting_matches_transport_exactly() {
+    // Satellite fix: `ClientMsg::wire_bytes()` and the drivers' frame
+    // size helpers are exact framed sizes, so an in-process run's
+    // logical byte counts must equal the TCP transport's metered
+    // counts up to the connection handshake, which the round loop does
+    // not model: one REGISTER frame per client (up) and the SET_ALPHA
+    // command (down) / ACK echo (up) pair.
+    let ds = dataset(8, 120, 12);
+    let d = ds.d;
+    const N: usize = 4;
+    let opts = Options {
+        rounds: 8,
+        track_loss: true,
+        warm_start: true,
+        ..Default::default()
+    };
+
+    let mut ref_clients: Vec<ClientState> = ds
+        .split_even(N)
+        .unwrap()
+        .into_iter()
+        .map(|sh| {
+            let id = sh.client_id;
+            ClientState::new(
+                id,
+                Box::new(LogisticOracle::new(sh, 1e-3)),
+                by_name("topk", d, 8, 100 + id as u64).unwrap(),
+                None,
+            )
+        })
+        .collect();
+    let t_ref = run_fednl(&mut ref_clients, &opts, vec![0.0; d]);
+
+    let bound = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = bound.local_addr().unwrap().to_string();
+    let handles = spawn_clients(&ds, N, "topk", &addr, false);
+    let mut pool = bound.accept(N).unwrap();
+    let t_tcp = run_fednl_pool(&mut pool, &opts, vec![0.0; d], "tcp-bytes");
+    pool.shutdown();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+
+    // Per client: one REGISTER frame + one ACK echo up, one SET_ALPHA
+    // command down.
+    let handshake_up =
+        (wire::register_frame_bytes() + wire::scalar_frame_bytes())
+            * N as u64;
+    let handshake_down = wire::scalar_frame_bytes() * N as u64;
+    assert_eq!(t_ref.records.len(), t_tcp.records.len());
+    for (a, b) in t_ref.records.iter().zip(&t_tcp.records) {
+        assert_eq!(
+            b.bytes_up,
+            a.bytes_up + handshake_up,
+            "round {}: logical up {} vs metered {}",
+            a.round,
+            a.bytes_up,
+            b.bytes_up
+        );
+        assert_eq!(
+            b.bytes_down,
+            a.bytes_down + handshake_down,
+            "round {}: logical down {} vs metered {}",
+            a.round,
+            a.bytes_down,
+            b.bytes_down
+        );
+    }
 }
 
 #[test]

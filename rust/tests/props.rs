@@ -219,6 +219,13 @@ fn prop_wire_roundtrip_fuzz() {
                 None
             },
         };
+        // Logical wire accounting is exact for every payload shape.
+        assert_eq!(
+            msg.wire_bytes(),
+            wire::encode_client_msg(&msg).len() as u64
+                + wire::FRAME_HEADER_BYTES,
+            "case {case}"
+        );
         let dec = wire::decode_client_msg(&wire::encode_client_msg(&msg))
             .unwrap_or_else(|e| panic!("case {case}: {e}"));
         assert_eq!(dec.client_id, msg.client_id);

@@ -181,6 +181,31 @@ fn prop_sym_rank1_matches_scalar_odd_shapes() {
     }
 }
 
+#[test]
+fn threaded_rank1_bit_identical_for_any_thread_count() {
+    // The intra-client threading (row-block partition over the upper
+    // triangle) must not change a single bit: each entry is written by
+    // exactly one thread with the same per-sample accumulation order
+    // as the single-threaded kernel.
+    for &d in &[3usize, 32, 37, 64, 301] {
+        let ns = 13;
+        let rows: Vec<Vec<f64>> =
+            (0..ns).map(|i| rvec(d, 900 + (d * 10 + i) as u64)).collect();
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let h = rvec(ns, 4242 + d as u64);
+        let mut m_ref = vec![0.0; d * d];
+        simd::sym_rank1_upper(&mut m_ref, d, &refs, &h);
+        for threads in [1usize, 2, 3, 4, 8, 64] {
+            let mut m_t = vec![0.0; d * d];
+            simd::sym_rank1_upper_threaded(&mut m_t, d, &refs, &h, threads);
+            assert_eq!(
+                m_ref, m_t,
+                "threaded rank-1 differs at d={d}, threads={threads}"
+            );
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
 // Determinism: identical runs → bit-identical trajectories.
 // ---------------------------------------------------------------------
@@ -221,9 +246,10 @@ fn make_clients(n: usize, compressor: &str, seed: u64) -> (Vec<ClientState>, usi
 
 #[test]
 fn threaded_pool_reductions_are_bit_reproducible() {
-    // eval_loss / loss_grad reduce worker partial sums in worker order,
-    // so two identical pools must agree bitwise even though reply
-    // arrival order differs run to run.
+    // eval_loss / loss_grad collect per-client replies and reduce them
+    // in ascending client-id order (the buffer-and-commit rule), so two
+    // identical pools must agree bitwise even though reply arrival
+    // order differs run to run.
     let (c1, d) = make_clients(7, "topk", 0xAB);
     let (c2, _) = make_clients(7, "topk", 0xAB);
     let mut p1 = ThreadedPool::new(c1, 3);
