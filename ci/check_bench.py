@@ -1,0 +1,178 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate (stdlib only).
+
+Compares a freshly emitted bench JSON against a committed baseline and
+fails (exit 1) when any tracked metric regressed by more than the
+threshold:
+
+* ``BENCH_kernels.json``      — per-kernel ``simd_ns``   (key: name, n)
+* ``BENCH_coordinator.json``  — per-pool   ``total_s``   (key: pool)
+
+Usage:
+    check_bench.py FRESH BASELINE          # gate (exit 1 on regression)
+    check_bench.py --update FRESH BASELINE # refresh the baseline file
+    check_bench.py --self-test             # verify the gate itself
+
+The slowdown threshold is 0.25 (25 %) by default and can be overridden
+with the ``BENCH_REGRESSION_THRESHOLD`` environment variable (e.g.
+``BENCH_REGRESSION_THRESHOLD=0.5`` on noisy runners).
+
+Baselines live in ``ci/baselines/`` and are refreshed by running the
+benches on a representative runner and committing the result of
+``--update`` (the first committed baselines are deliberately generous
+upper bounds — see ci/README.md).
+"""
+
+import json
+import os
+import sys
+
+
+def threshold():
+    return float(os.environ.get("BENCH_REGRESSION_THRESHOLD", "0.25"))
+
+
+def extract(doc):
+    """Return (mode, {key: metric_value}) for either bench schema."""
+    if "kernels" in doc:
+        rows = {}
+        for k in doc["kernels"]:
+            rows[f"{k['name']}[n={k['n']}]"] = float(k["simd_ns"])
+        return "kernels/simd_ns", rows
+    if "pools" in doc:
+        rows = {}
+        for p in doc["pools"]:
+            rows[p["pool"]] = float(p["total_s"])
+        return "coordinator/total_s", rows
+    raise SystemExit("unrecognized bench JSON: no 'kernels' or 'pools' key")
+
+
+def compare(fresh, base, thresh):
+    """Return (regressions, notes): regressions is a list of strings."""
+    fresh_mode, fresh_rows = extract(fresh)
+    base_mode, base_rows = extract(base)
+    if fresh_mode != base_mode:
+        raise SystemExit(
+            f"schema mismatch: fresh is {fresh_mode}, baseline is {base_mode}"
+        )
+    regressions, notes = [], []
+    for key, base_v in sorted(base_rows.items()):
+        if key not in fresh_rows:
+            # A tracked metric vanishing must not silently shrink the
+            # gate's coverage (renamed kernel, changed n, empty emit):
+            # schema drift has to be acknowledged via --update.
+            regressions.append(
+                f"  ! {key}: missing from fresh run "
+                f"(schema drift? refresh the baseline with --update)"
+            )
+            continue
+        fresh_v = fresh_rows[key]
+        if base_v <= 0:
+            notes.append(f"  ~ {key}: non-positive baseline {base_v}")
+            continue
+        ratio = fresh_v / base_v
+        line = f"{key}: {fresh_v:.1f} vs baseline {base_v:.1f} ({ratio:.2f}x)"
+        if ratio > 1.0 + thresh:
+            regressions.append(f"  ! {line}")
+        else:
+            notes.append(f"  . {line}")
+    for key in sorted(set(fresh_rows) - set(base_rows)):
+        notes.append(f"  + {key}: new metric (no baseline yet)")
+    return regressions, notes
+
+
+def self_test():
+    """The gate must trip on a fabricated >threshold slowdown and stay
+    quiet under one, for both schemas. Verifies the acceptance
+    criterion 'ci.yml fails when a committed baseline kernel is
+    artificially slowed >25%' without needing a Rust toolchain."""
+    base = {
+        "isa": "avx2",
+        "kernels": [
+            {"name": "dot", "n": 301, "simd_ns": 100.0},
+            {"name": "axpy", "n": 4096, "simd_ns": 1000.0},
+        ],
+    }
+    slowed = {
+        "isa": "avx2",
+        "kernels": [
+            {"name": "dot", "n": 301, "simd_ns": 130.0},  # +30% -> trip
+            {"name": "axpy", "n": 4096, "simd_ns": 1010.0},
+        ],
+    }
+    ok = {
+        "isa": "avx2",
+        "kernels": [
+            {"name": "dot", "n": 301, "simd_ns": 110.0},  # +10% -> pass
+            {"name": "axpy", "n": 4096, "simd_ns": 900.0},
+        ],
+    }
+    reg, _ = compare(slowed, base, 0.25)
+    assert len(reg) == 1 and "dot[n=301]" in reg[0], reg
+    reg, _ = compare(ok, base, 0.25)
+    assert reg == [], reg
+    # Threshold is honored.
+    reg, _ = compare(slowed, base, 0.50)
+    assert reg == [], reg
+
+    cbase = {"pools": [{"pool": "seq", "total_s": 1.0},
+                       {"pool": "threaded", "total_s": 0.5}]}
+    cslow = {"pools": [{"pool": "seq", "total_s": 1.3},
+                       {"pool": "threaded", "total_s": 0.5}]}
+    reg, _ = compare(cslow, cbase, 0.25)
+    assert len(reg) == 1 and reg[0].lstrip().startswith("! seq"), reg
+    # A tracked metric disappearing (schema drift / empty emit) must
+    # FAIL the gate, not silently shrink its coverage.
+    reg, notes = compare({"pools": []}, cbase, 0.25)
+    assert len(reg) == 2 and notes == [], (reg, notes)
+    reg, _ = compare(
+        {"kernels": [{"name": "dot", "n": 301, "simd_ns": 100.0}]},
+        base,
+        0.25,
+    )
+    assert len(reg) == 1 and "axpy[n=4096]" in reg[0], reg
+    print("check_bench.py self-test OK")
+
+
+def main(argv):
+    if "--self-test" in argv:
+        self_test()
+        return 0
+    update = "--update" in argv
+    paths = [a for a in argv if not a.startswith("--")]
+    if len(paths) != 2:
+        print(__doc__)
+        return 2
+    fresh_path, base_path = paths
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    if update:
+        os.makedirs(os.path.dirname(base_path) or ".", exist_ok=True)
+        with open(base_path, "w") as f:
+            json.dump(fresh, f, indent=2)
+            f.write("\n")
+        print(f"baseline {base_path} refreshed from {fresh_path}")
+        return 0
+    if not os.path.exists(base_path):
+        print(f"no baseline at {base_path}; bootstrap with --update")
+        return 1
+    with open(base_path) as f:
+        base = json.load(f)
+    thresh = threshold()
+    regressions, notes = compare(fresh, base, thresh)
+    mode, _ = extract(base)
+    print(f"bench gate [{mode}] threshold +{thresh:.0%} "
+          f"({fresh_path} vs {base_path})")
+    for n in notes:
+        print(n)
+    if regressions:
+        print(f"PERF REGRESSION (> +{thresh:.0%}):")
+        for r in regressions:
+            print(r)
+        return 1
+    print("bench gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -26,15 +26,49 @@
 //! clients' compute and in-flight network transfer, while the
 //! resulting f64 reduction stays bit-identical to the blocking
 //! sort-then-aggregate it replaces.
+//!
+//! # Fault-tolerant quorum rounds
+//!
+//! A round no longer requires every participant to answer. The pools
+//! certify participants that will *never* reply (fault injection, a
+//! missed reply deadline, a closed connection) through
+//! [`ClientPool::take_missing`]; the engine then applies the run's
+//! [`RoundPolicy`]:
+//!
+//! * [`OnMissing::Drop`] — the missing contribution is skipped: the
+//!   commit ladder skips the hole and the first-order reductions are
+//!   rescaled to the committed count (∇f and lᵏ become means over the
+//!   survivors; the Hessian state stays exact because a client that
+//!   never computed the round also never moved its local Hᵢᵏ);
+//! * [`OnMissing::Resample`] — FedNL-PP only: participation picks that
+//!   land on clients already known dead are replaced by fresh draws
+//!   from the same seeded sampler over the live remainder (see
+//!   [`select_pp_subset`]); failures detected mid-round still drop;
+//! * [`OnMissing::Reuse`] — the client's last committed message is
+//!   replayed in its slot with the Hessian update blanked (stale ∇fᵢ
+//!   and lᵢ, no double-applied Sᵢ). For FedNL-PP the deltas of a
+//!   missing participant are zero by definition, so Reuse degrades to
+//!   Drop there.
+//!
+//! The round *closes* only when every participant is accounted for
+//! (replied or certified missing) — the engine never closes on a
+//! wall-clock race, so given the same missing sets the trajectories
+//! are **bit-identical across SeqPool / ThreadedPool / RemotePool**,
+//! extending the buffer-and-commit determinism rule to lossy rounds
+//! (asserted by the fault-injection integration tests). If fewer than
+//! [`RoundPolicy::quorum`] messages commit, the engine aborts loudly.
+
+use std::time::Duration;
 
 use super::fednl_ls::LineSearchParams;
 use super::{ClientMsg, Options, ServerState};
+use crate::compressors::{Compressed, IndexPayload, ValueEncoding};
 use crate::coordinator::{ClientFamily, ClientPool};
 use crate::linalg::packed::PackedUpper;
 use crate::linalg::{vector, Cholesky, Mat};
 use crate::metrics::{RoundRecord, Trace};
 use crate::net::wire;
-use crate::rng::{sample_distinct, Pcg64};
+use crate::rng::{sample_distinct, Pcg64, Rng};
 use crate::utils::Stopwatch;
 
 /// What the master does with an aggregated round (the only part of the
@@ -51,14 +85,73 @@ pub enum StepPolicy<'a> {
     PartialParticipation { tau: usize, seed: u64 },
 }
 
+/// What the engine does with a participant whose reply will never
+/// arrive (see the module docs for the exact semantics per algorithm).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OnMissing {
+    /// Skip the contribution; rescale first-order reductions to the
+    /// committed count.
+    Drop,
+    /// FedNL-PP: replace known-dead participation picks with fresh
+    /// seeded draws over the live clients (elsewhere acts like Drop).
+    Resample,
+    /// Replay the client's last committed message with the Hessian
+    /// update blanked (FedNL/LS only; degrades to Drop for PP deltas).
+    Reuse,
+}
+
+impl OnMissing {
+    /// Parse a CLI spelling (`drop` | `resample` | `reuse`).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "drop" => Ok(OnMissing::Drop),
+            "resample" => Ok(OnMissing::Resample),
+            "reuse" => Ok(OnMissing::Reuse),
+            other => anyhow::bail!("unknown on-missing policy '{other}'"),
+        }
+    }
+}
+
+/// Fault-tolerance contract of one training run. The default policy
+/// (`quorum: None`, no deadline, [`OnMissing::Drop`]) reproduces the
+/// strict pre-fault behavior: with no faults injected nothing is ever
+/// missing, and a missing reply without quorum slack aborts the run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoundPolicy {
+    /// Minimum committed replies (arrived + reused) for a round to be
+    /// accepted; `None` = every participant. Clamped to the round's
+    /// participant count. A round that closes below quorum panics.
+    pub quorum: Option<usize>,
+    /// Per-client reply deadline, forwarded to the transport
+    /// ([`ClientPool::set_reply_deadline`]): `RemotePool` deregisters a
+    /// client whose reply misses it, and the deterministic fault
+    /// injector converts injected delays longer than this into drops.
+    pub deadline_ms: Option<u64>,
+    /// What to do with participants that never reply.
+    pub on_missing: OnMissing,
+}
+
+impl Default for RoundPolicy {
+    fn default() -> Self {
+        Self { quorum: None, deadline_ms: None, on_missing: OnMissing::Drop }
+    }
+}
+
 /// Buffer-and-commit: replies may arrive in any order, but `commit`
 /// sees them in the round's subset order (ascending client id for a
-/// full round). Early arrivals wait in `pending`.
+/// full round). Early arrivals wait in `pending`; participants
+/// certified missing become *holes* the commit ladder steps over, so
+/// the committed prefix order is invariant no matter when a loss is
+/// detected.
 pub(crate) struct CommitBuffer {
     /// client id → slot in the subset (usize::MAX = not participating).
     slot_of: Vec<usize>,
     pending: Vec<Option<ClientMsg>>,
+    /// Slots whose participant was certified missing.
+    hole: Vec<bool>,
     next: usize,
+    /// Messages committed so far (holes excluded).
+    committed: usize,
 }
 
 impl CommitBuffer {
@@ -81,8 +174,22 @@ impl CommitBuffer {
         Self {
             slot_of,
             pending: (0..m).map(|_| None).collect(),
+            hole: vec![false; m],
             next: 0,
+            committed: 0,
         }
+    }
+
+    fn slot(&self, client_id: usize) -> usize {
+        let slot = *self
+            .slot_of
+            .get(client_id)
+            .expect("client id out of range");
+        assert!(
+            slot != usize::MAX,
+            "reply from non-participating client {client_id}"
+        );
+        slot
     }
 
     /// Accept one arrived message; fire `commit` for it and for any
@@ -90,15 +197,12 @@ impl CommitBuffer {
     pub fn offer(
         &mut self,
         m: ClientMsg,
-        mut commit: impl FnMut(&ClientMsg),
+        commit: impl FnMut(&ClientMsg),
     ) {
-        let slot = *self
-            .slot_of
-            .get(m.client_id)
-            .expect("client id out of range");
+        let slot = self.slot(m.client_id);
         assert!(
-            slot != usize::MAX,
-            "reply from non-participating client {}",
+            !self.hole[slot],
+            "reply from client {} already certified missing",
             m.client_id
         );
         // A slot below `next` was already committed (and taken back to
@@ -110,10 +214,37 @@ impl CommitBuffer {
             m.client_id
         );
         self.pending[slot] = Some(m);
+        self.advance(commit);
+    }
+
+    /// Certify that a participant's reply will never arrive; its slot
+    /// becomes a hole the ladder steps over (unblocking any buffered
+    /// successors).
+    pub fn mark_missing(
+        &mut self,
+        client_id: u32,
+        commit: impl FnMut(&ClientMsg),
+    ) {
+        let slot = self.slot(client_id as usize);
+        assert!(
+            slot >= self.next && self.pending[slot].is_none(),
+            "client {client_id} reported missing after its reply committed"
+        );
+        assert!(!self.hole[slot], "client {client_id} reported missing twice");
+        self.hole[slot] = true;
+        self.advance(commit);
+    }
+
+    fn advance(&mut self, mut commit: impl FnMut(&ClientMsg)) {
         while self.next < self.pending.len() {
+            if self.hole[self.next] {
+                self.next += 1;
+                continue;
+            }
             match self.pending[self.next].take() {
                 Some(msg) => {
                     commit(&msg);
+                    self.committed += 1;
                     self.next += 1;
                 }
                 None => break,
@@ -124,6 +255,71 @@ impl CommitBuffer {
     pub fn is_complete(&self) -> bool {
         self.next == self.pending.len()
     }
+
+    /// Committed (non-hole) messages so far.
+    pub fn committed(&self) -> usize {
+        self.committed
+    }
+
+    /// Participants of the round (committed + holes + still pending).
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+/// Draw the FedNL-PP participation subset for one round. The base
+/// τ-sample is always drawn first, so the no-fault RNG stream (and
+/// therefore every pre-fault trajectory) is unchanged; under
+/// [`OnMissing::Resample`] picks that land on clients in `dead` are
+/// then replaced by fresh draws over the live, not-yet-selected
+/// remainder. A dead client is never drawn twice in one round, the
+/// result never contains a dead client, and the replacement draws
+/// consume the same seeded stream on every transport. If fewer live
+/// candidates exist than dead picks, the unreplaceable picks are
+/// removed (the effective subset shrinks).
+pub fn select_pp_subset(
+    rng: &mut Pcg64,
+    n: usize,
+    tau: usize,
+    dead: &[u32],
+    on_missing: OnMissing,
+) -> Vec<u32> {
+    let mut selected = sample_distinct(rng, n, tau);
+    if on_missing != OnMissing::Resample || dead.is_empty() {
+        return selected;
+    }
+    let mut is_dead = vec![false; n];
+    for &c in dead {
+        if (c as usize) < n {
+            is_dead[c as usize] = true;
+        }
+    }
+    let mut in_subset = vec![false; n];
+    for &c in &selected {
+        in_subset[c as usize] = true;
+    }
+    // Live candidates not already selected, ascending id; a partial
+    // Fisher–Yates over them replaces each dead pick in place (the
+    // replacement inherits the dead pick's selection-order slot).
+    let mut candidates: Vec<u32> = (0..n as u32)
+        .filter(|&c| !is_dead[c as usize] && !in_subset[c as usize])
+        .collect();
+    let mut next = 0usize;
+    for slot in 0..selected.len() {
+        if !is_dead[selected[slot] as usize] {
+            continue;
+        }
+        if next >= candidates.len() {
+            break; // not enough live clients; leftover dead picks drop below
+        }
+        let j =
+            next + rng.next_below((candidates.len() - next) as u64) as usize;
+        candidates.swap(next, j);
+        selected[slot] = candidates[next];
+        next += 1;
+    }
+    selected.retain(|&c| !is_dead[c as usize]);
+    selected
 }
 
 /// Run one member of the FedNL family against any client transport.
@@ -142,7 +338,9 @@ pub fn run_engine(
     }
 }
 
-/// FedNL / FedNL-LS: full-participation rounds over a [`ServerState`].
+/// FedNL / FedNL-LS: full-participation rounds over a [`ServerState`]
+/// (under faults: full-*intent* rounds — every client is asked, the
+/// quorum policy absorbs the ones that cannot answer).
 fn run_newton_family(
     pool: &mut dyn ClientPool,
     opts: &Options,
@@ -165,6 +363,8 @@ fn run_newton_family(
     );
     let d = pool.dim();
     let n = pool.n_clients();
+    let rp = opts.policy;
+    pool.set_reply_deadline(rp.deadline_ms.map(Duration::from_millis));
     let alpha = opts.alpha.unwrap_or_else(|| pool.default_alpha());
     pool.set_alpha(alpha);
     let mut server = ServerState::new(d, n, alpha, x0);
@@ -172,6 +372,9 @@ fn run_newton_family(
     let sw = Stopwatch::start();
     let mut bytes_up = 0u64;
     let mut bytes_down = 0u64;
+    // Last committed message per client, kept only under Reuse.
+    let mut reuse_cache: Vec<Option<ClientMsg>> =
+        (0..n).map(|_| None).collect();
     // (seconds blocked waiting for replies, seconds committing them) —
     // the wait/aggregate wall-clock split reported by the coordinator
     // bench.
@@ -189,6 +392,15 @@ fn run_newton_family(
     }
 
     for round in 0..opts.rounds {
+        pool.prepare_round(round);
+        // A *frozen* FedNL rejoiner needs no resync: its Hᵢ froze
+        // while it was unscheduled, exactly like the master's view of
+        // it. A fresh-state rejoiner (crashed process, TCP re-REGISTER)
+        // gets α resynced at admission, but its Hᵢ restarts at 0 while
+        // the master keeps the stale contribution — the Newton system
+        // is then approximate until the shifts re-learn ∇²fᵢ (known
+        // limit; exact resync needs a warm-start-style packed upload).
+        let _ = pool.take_rejoined();
         let x = server.x.clone();
         bytes_down += wire::round_frame_bytes(d) * n as u64;
         // LS always needs fᵢ(xᵏ) (Alg. 2 line 5).
@@ -196,10 +408,22 @@ fn run_newton_family(
         pool.submit_round(&x, None, round, need_loss);
         server.begin_round();
         let mut buf = CommitBuffer::new(n, None);
-        drain_and_commit(pool, &mut buf, &mut bytes_up, &mut timing, |m| {
-            server.apply_msg(m)
-        });
-        let (grad, loss) = server.finish_round();
+        let cache = if rp.on_missing == OnMissing::Reuse {
+            Some(&mut reuse_cache)
+        } else {
+            None
+        };
+        let (committed, missing) = drain_and_commit(
+            pool,
+            &mut buf,
+            &rp,
+            cache,
+            &mut bytes_up,
+            &mut timing,
+            |m| server.apply_msg(m),
+        );
+        check_quorum(&rp, committed, n, round, label);
+        let (grad, loss) = server.finish_round(committed);
         let gnorm = vector::norm2(&grad);
         let (up, down) =
             pool.transport_bytes().unwrap_or((bytes_up, bytes_down));
@@ -210,6 +434,8 @@ fn run_newton_family(
             bytes_up: up,
             bytes_down: down,
             elapsed: sw.elapsed_secs(),
+            committed: committed as u32,
+            missing: missing as u32,
         });
         if let Some(tol) = opts.tol_grad {
             if gnorm <= tol {
@@ -274,6 +500,8 @@ fn run_pp(
     );
     let d = pool.dim();
     let inv_n = 1.0 / n as f64;
+    let rp = opts.policy;
+    pool.set_reply_deadline(rp.deadline_ms.map(Duration::from_millis));
     let alpha = opts.alpha.unwrap_or_else(|| pool.default_alpha());
     pool.set_alpha(alpha);
     // Server init from client initials (line 2), H⁰ = 0.
@@ -285,6 +513,13 @@ fn run_pp(
     for (_, gi) in &init {
         vector::axpy(inv_n, gi, &mut g);
     }
+    // Per-client mirrors of the server-tracked (lᵢ, gᵢ): the running
+    // sums above cannot absorb a rejoining client's STATE pull on their
+    // own, so the engine keeps the per-client decomposition the deltas
+    // imply (O(n·d) memory) and resyncs rejoiners exactly.
+    let mut l_of: Vec<f64> = init.iter().map(|(li, _)| *li).collect();
+    let mut g_of: Vec<Vec<f64>> =
+        init.iter().map(|(_, gi)| gi.clone()).collect();
     let mut x = x0;
     let mut trace = Trace::new(label.to_string());
     let sw = Stopwatch::start();
@@ -295,6 +530,27 @@ fn run_pp(
     let mut timing = (0.0f64, 0.0f64);
 
     for round in 0..opts.rounds {
+        pool.prepare_round(round);
+        // Rejoin resync (STATE pull): fold the difference between the
+        // client's actual (lᵢ, gᵢ) and the engine's mirror into the
+        // running sums. For a frozen-then-thawed client the difference
+        // is exactly zero.
+        for ci in pool.take_rejoined() {
+            let i = ci as usize;
+            // A rejoiner lost again before answering the pull is
+            // skipped: it is deregistered and will not be scheduled.
+            let Some((l_new, g_new)) = pool.pull_state(ci) else {
+                continue;
+            };
+            bytes_down += wire::empty_frame_bytes();
+            bytes_up += wire::scalar_vec_frame_bytes(d);
+            l += (l_new - l_of[i]) * inv_n;
+            for j in 0..d {
+                g[j] += (g_new[j] - g_of[i][j]) * inv_n;
+            }
+            l_of[i] = l_new;
+            g_of[i] = g_new;
+        }
         // Line 4: xᵏ⁺¹ = (Hᵏ + lᵏI)⁻¹ gᵏ.
         let mut shift = l.max(0.0);
         for _ in 0..60 {
@@ -306,23 +562,41 @@ fn run_pp(
         }
         // Lines 5-6: sample Sᵏ, send xᵏ⁺¹ to the τ participants. The
         // seeded sampler lives here in the driver; every transport
-        // receives the same subset in the same order.
-        let selected = sample_distinct(&mut rng, n, tau);
-        bytes_down += wire::round_frame_bytes(d) * tau as u64;
+        // receives the same subset in the same order. Under the
+        // Resample policy, picks landing on known-dead clients are
+        // replaced by fresh seeded draws over the live remainder.
+        let dead = pool.dead_clients();
+        let selected =
+            select_pp_subset(&mut rng, n, tau, &dead, rp.on_missing);
+        bytes_down += wire::round_frame_bytes(d) * selected.len() as u64;
         pool.submit_round(&x, Some(&selected), round, false);
         let mut buf = CommitBuffer::new(n, Some(&selected));
-        drain_and_commit(pool, &mut buf, &mut bytes_up, &mut timing, |m| {
-            // Lines 18-20: incremental server state, committed in
-            // selection order.
-            vector::axpy(inv_n, &m.grad, &mut g);
-            l += inv_n * m.l_i;
-            pu.apply_sparse(
-                &mut h,
-                alpha * m.update.scale * inv_n,
-                &m.update.indices(),
-                &m.update.values,
-            );
-        });
+        let (committed, missing) = drain_and_commit(
+            pool,
+            &mut buf,
+            &rp,
+            // PP deltas must not be replayed (a missing participant's
+            // delta is zero by definition): Reuse degrades to Drop.
+            None,
+            &mut bytes_up,
+            &mut timing,
+            |m| {
+                // Lines 18-20: incremental server state, committed in
+                // selection order.
+                vector::axpy(inv_n, &m.grad, &mut g);
+                l += inv_n * m.l_i;
+                pu.apply_sparse(
+                    &mut h,
+                    alpha * m.update.scale * inv_n,
+                    &m.update.indices(),
+                    &m.update.values,
+                );
+                let i = m.client_id;
+                l_of[i] += m.l_i;
+                vector::axpy(1.0, &m.grad, &mut g_of[i]);
+            },
+        );
+        check_quorum(&rp, committed, selected.len(), round, label);
         // Out-of-band convergence measurement at xᵏ⁺¹ (the paper makes
         // the same caveat: ∇f(xᵏ) is not part of PP training). Because
         // this probe is measurement-only, it does NOT count toward the
@@ -340,6 +614,8 @@ fn run_pp(
             bytes_up: up,
             bytes_down: down,
             elapsed: sw.elapsed_secs(),
+            committed: committed as u32,
+            missing: missing as u32,
         });
         if let Some(tol) = opts.tol_grad {
             if gnorm <= tol {
@@ -352,30 +628,120 @@ fn run_pp(
     trace
 }
 
-/// Pump the pool until the round completes, feeding every arrival into
-/// the commit buffer. `timing` accumulates (wait, aggregate) seconds.
+/// Abort loudly when a round closed below quorum (`None` = all
+/// participants, clamped to the round's participant count).
+fn check_quorum(
+    rp: &RoundPolicy,
+    committed: usize,
+    participants: usize,
+    round: u64,
+    label: &str,
+) {
+    let need = rp
+        .quorum
+        .unwrap_or(participants)
+        .min(participants)
+        .max(1);
+    assert!(
+        committed >= need,
+        "{label}: round {round} closed with {committed}/{participants} \
+         commits, below quorum {need}"
+    );
+}
+
+/// The stale replay a [`OnMissing::Reuse`] commit injects: the cached
+/// message with the Hessian update blanked, so Sᵢ is never applied
+/// twice while the stale ∇fᵢ / lᵢ / fᵢ still stand in for the missing
+/// client in the first-order reductions.
+fn stale_replay(cached: &ClientMsg) -> ClientMsg {
+    ClientMsg {
+        client_id: cached.client_id,
+        grad: cached.grad.clone(),
+        update: Compressed {
+            payload: IndexPayload::Explicit(Vec::new()),
+            values: Vec::new(),
+            scale: 1.0,
+            encoding: ValueEncoding::F64,
+            n: cached.update.n,
+        },
+        l_i: cached.l_i,
+        loss: cached.loss,
+    }
+}
+
+/// Pump the pool until every participant of the round is accounted for
+/// — replied, or certified missing and resolved per the round policy.
+/// Returns (committed, missing) counts. `timing` accumulates
+/// (wait, aggregate) seconds; `cache` (Reuse only) holds each client's
+/// last committed message and is refreshed from this round's commits.
 fn drain_and_commit(
     pool: &mut dyn ClientPool,
     buf: &mut CommitBuffer,
+    policy: &RoundPolicy,
+    mut cache: Option<&mut Vec<Option<ClientMsg>>>,
     bytes_up: &mut u64,
     timing: &mut (f64, f64),
     mut commit: impl FnMut(&ClientMsg),
-) {
+) -> (usize, usize) {
+    let caching = cache.is_some();
+    // Fresh commits to fold back into the cache after the round (kept
+    // outside the commit closure so the cache stays readable for
+    // replay lookups mid-round). Reuse therefore costs one clone per
+    // committed message even on fault-free rounds — the policy is
+    // opt-in, and the copy is O(d + k) per client.
+    let mut fresh: Vec<ClientMsg> = Vec::new();
+    // Set once the pool reports the round closed (empty drain): one
+    // final `take_missing` pass then runs before the completeness
+    // assert, so losses certified together with the close are not
+    // stranded.
+    let mut pool_closed = false;
     loop {
+        // Resolve participants the pool certified as lost: Reuse
+        // replays the cached last commit in the lost client's slot,
+        // everything else leaves a hole the ladder skips.
+        for ci in pool.take_missing() {
+            let replay = match (&policy.on_missing, &cache) {
+                (OnMissing::Reuse, Some(c)) => {
+                    c[ci as usize].as_ref().map(stale_replay)
+                }
+                _ => None,
+            };
+            match replay {
+                // Replays travel no bytes — nothing was received.
+                Some(m) => buf.offer(m, &mut commit),
+                None => buf.mark_missing(ci, &mut commit),
+            }
+        }
+        if buf.is_complete() || pool_closed {
+            break;
+        }
         let sw = Stopwatch::start();
         let batch = pool.drain();
         timing.0 += sw.elapsed_secs();
         if batch.is_empty() {
-            break;
+            pool_closed = true;
+            continue;
         }
         let sw = Stopwatch::start();
         for m in batch {
             *bytes_up += m.wire_bytes();
+            if caching {
+                fresh.push(m.clone());
+            }
             buf.offer(m, &mut commit);
         }
         timing.1 += sw.elapsed_secs();
     }
-    assert!(buf.is_complete(), "round ended with missing client replies");
+    assert!(
+        buf.is_complete(),
+        "round ended with unaccounted client replies"
+    );
+    if let Some(c) = cache.as_deref_mut() {
+        for m in fresh {
+            c[m.client_id] = Some(m);
+        }
+    }
+    (buf.committed(), buf.len() - buf.committed())
 }
 
 #[cfg(test)]
@@ -408,6 +774,7 @@ mod tests {
             buf.offer(msg(id), |m| order.push(m.client_id));
         }
         assert!(buf.is_complete());
+        assert_eq!(buf.committed(), 4);
         assert_eq!(order, vec![0, 1, 2, 3]);
     }
 
@@ -423,6 +790,53 @@ mod tests {
         }
         assert!(buf.is_complete());
         assert_eq!(order, vec![3, 1, 2]);
+    }
+
+    #[test]
+    fn commit_buffer_hole_unblocks_successors() {
+        // Client 0 is certified missing while 1..3 already arrived:
+        // marking the hole must flush the buffered successors in
+        // order, and the committed count excludes the hole.
+        let mut buf = CommitBuffer::new(4, None);
+        let mut order = Vec::new();
+        for id in [2usize, 1, 3] {
+            buf.offer(msg(id), |m| order.push(m.client_id));
+        }
+        assert!(order.is_empty());
+        buf.mark_missing(0, |m| order.push(m.client_id));
+        assert!(buf.is_complete());
+        assert_eq!(order, vec![1, 2, 3]);
+        assert_eq!(buf.committed(), 3);
+        assert_eq!(buf.len(), 4);
+    }
+
+    #[test]
+    fn commit_buffer_hole_in_subset_order() {
+        let subset = [4u32, 0, 2];
+        let mut buf = CommitBuffer::new(5, Some(&subset));
+        let mut order = Vec::new();
+        buf.offer(msg(2), |m| order.push(m.client_id));
+        buf.mark_missing(0, |m| order.push(m.client_id));
+        buf.offer(msg(4), |m| order.push(m.client_id));
+        assert!(buf.is_complete());
+        assert_eq!(order, vec![4, 2]);
+        assert_eq!(buf.committed(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "certified missing")]
+    fn commit_buffer_rejects_reply_after_missing() {
+        let mut buf = CommitBuffer::new(2, None);
+        buf.mark_missing(1, |_| {});
+        buf.offer(msg(1), |_| {});
+    }
+
+    #[test]
+    #[should_panic(expected = "missing after its reply committed")]
+    fn commit_buffer_rejects_missing_after_commit() {
+        let mut buf = CommitBuffer::new(2, None);
+        buf.offer(msg(0), |_| {});
+        buf.mark_missing(0, |_| {});
     }
 
     #[test]
@@ -449,5 +863,59 @@ mod tests {
         let mut buf = CommitBuffer::new(2, None);
         buf.offer(msg(0), |_| {});
         buf.offer(msg(0), |_| {});
+    }
+
+    #[test]
+    fn select_pp_subset_matches_sampler_when_no_faults() {
+        // The base draw must consume the RNG exactly like the plain
+        // sampler so pre-fault trajectories are unchanged.
+        let mut a = Pcg64::seed_from_u64(42);
+        let mut b = Pcg64::seed_from_u64(42);
+        let plain = sample_distinct(&mut a, 10, 4);
+        let sel = select_pp_subset(&mut b, 10, 4, &[], OnMissing::Resample);
+        assert_eq!(plain, sel);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn select_pp_subset_resample_avoids_dead() {
+        let dead = [0u32, 3, 7];
+        for seed in 0..200u64 {
+            let mut rng = Pcg64::seed_from_u64(seed);
+            let sel =
+                select_pp_subset(&mut rng, 10, 5, &dead, OnMissing::Resample);
+            assert_eq!(sel.len(), 5, "seed {seed}");
+            let mut sorted = sel.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 5, "seed {seed}: duplicates in {sel:?}");
+            for c in &sel {
+                assert!(!dead.contains(c), "seed {seed}: dead {c} selected");
+            }
+        }
+    }
+
+    #[test]
+    fn select_pp_subset_shrinks_when_live_exhausted() {
+        // 4 clients, 3 dead, τ=3: at most the single live client can
+        // participate.
+        let dead = [0u32, 1, 2];
+        let mut rng = Pcg64::seed_from_u64(7);
+        let sel = select_pp_subset(&mut rng, 4, 3, &dead, OnMissing::Resample);
+        assert!(sel.len() <= 1);
+        for c in &sel {
+            assert_eq!(*c, 3);
+        }
+    }
+
+    #[test]
+    fn select_pp_subset_drop_keeps_dead_picks() {
+        // Under Drop the base sample is returned untouched (dead picks
+        // become runtime holes instead).
+        let mut a = Pcg64::seed_from_u64(9);
+        let mut b = Pcg64::seed_from_u64(9);
+        let plain = sample_distinct(&mut a, 8, 4);
+        let sel = select_pp_subset(&mut b, 8, 4, &[1, 2], OnMissing::Drop);
+        assert_eq!(plain, sel);
     }
 }

@@ -15,7 +15,9 @@ pub mod fednl_ls;
 pub mod fednl_pp;
 pub mod state;
 
-pub use engine::{run_engine, StepPolicy};
+pub use engine::{
+    run_engine, select_pp_subset, OnMissing, RoundPolicy, StepPolicy,
+};
 pub use fednl::{run_fednl, run_fednl_pool};
 pub use fednl_ls::{run_fednl_ls, run_fednl_ls_pool, LineSearchParams};
 pub use fednl_pp::{run_fednl_pp, run_fednl_pp_pool, PPClientState};
@@ -50,6 +52,10 @@ pub struct Options {
     /// Initialize Hᵢ⁰ = ∇²fᵢ(x⁰) (FedNL paper's warm start) instead of
     /// Hᵢ⁰ = 0. Costs one uncompressed d(d+1)/2 upload per client.
     pub warm_start: bool,
+    /// Fault-tolerance contract: quorum, reply deadline and the
+    /// missing-reply policy (see [`RoundPolicy`]). The default is the
+    /// strict pre-fault behavior.
+    pub policy: RoundPolicy,
 }
 
 impl Default for Options {
@@ -61,6 +67,7 @@ impl Default for Options {
             tol_grad: None,
             track_loss: false,
             warm_start: false,
+            policy: RoundPolicy::default(),
         }
     }
 }

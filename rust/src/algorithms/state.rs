@@ -238,16 +238,41 @@ impl ServerState {
     }
 
     /// Close the round (Alg. 1 lines 9–10): install lᵏ and return
-    /// (∇f(xᵏ), mean loss if every message carried one).
-    pub fn finish_round(&mut self) -> (Vec<f64>, Option<f64>) {
+    /// (∇f(xᵏ), mean loss if every message carried one). `committed`
+    /// is how many messages actually committed this round: under a
+    /// quorum policy with missing clients the first-order reductions
+    /// are rescaled to means over the survivors (∇f by n/committed on
+    /// top of the per-message 1/n weights; lᵏ and the loss divided by
+    /// the committed count). The full-round path (`committed == n`)
+    /// keeps the exact pre-fault expressions so trajectories stay
+    /// bitwise unchanged.
+    pub fn finish_round(&mut self, committed: usize) -> (Vec<f64>, Option<f64>) {
+        assert!(
+            committed >= 1 && committed <= self.n_clients,
+            "finish_round: committed {committed} out of 1..={}",
+            self.n_clients
+        );
         let inv_n = 1.0 / self.n_clients as f64;
-        self.l = self.l_acc * inv_n;
-        let loss = if self.have_loss {
-            Some(self.loss_acc * inv_n)
+        let mut grad = self.grad_acc.clone();
+        let loss;
+        if committed == self.n_clients {
+            self.l = self.l_acc * inv_n;
+            loss = if self.have_loss {
+                Some(self.loss_acc * inv_n)
+            } else {
+                None
+            };
         } else {
-            None
-        };
-        (self.grad_acc.clone(), loss)
+            let c = committed as f64;
+            vector::scale(self.n_clients as f64 / c, &mut grad);
+            self.l = self.l_acc / c;
+            loss = if self.have_loss {
+                Some(self.loss_acc / c)
+            } else {
+                None
+            };
+        }
+        (grad, loss)
     }
 
     /// Newton direction −[system]⁻¹ g under the given rule
@@ -335,7 +360,7 @@ mod tests {
         for m in &msgs {
             s.apply_msg(m);
         }
-        let (g, loss) = s.finish_round();
+        let (g, loss) = s.finish_round(2);
         assert!(loss.is_some());
         // Both clients identical → ∇f = ∇f₀ = Q·0 − b = −b = [−1, 1].
         assert!((g[0] + 1.0).abs() < 1e-14);
@@ -345,6 +370,29 @@ mod tests {
         assert_eq!(dir.len(), 2);
         // With l⁰ > 0 the step is damped but still a descent direction.
         assert!(vector::dot(&dir, &g) < 0.0);
+    }
+
+    #[test]
+    fn finish_round_rescales_to_committed_count() {
+        // 3 clients expected, only 2 commit: ∇f and lᵏ must become
+        // means over the survivors, not thirds.
+        let mut s = ServerState::new(2, 3, 1.0, vec![0.0, 0.0]);
+        let mut c0 = quad_client(0);
+        let mut c1 = quad_client(1);
+        let m0 = c0.round(&[0.0, 0.0], 0, true);
+        let m1 = c1.round(&[0.0, 0.0], 0, true);
+        s.begin_round();
+        s.apply_msg(&m0);
+        s.apply_msg(&m1);
+        let (g, loss) = s.finish_round(2);
+        // Identical clients → the survivor mean equals one client's
+        // values: ∇f = −b = [−1, 1].
+        assert!((g[0] + 1.0).abs() < 1e-12, "g[0]={}", g[0]);
+        assert!((g[1] - 1.0).abs() < 1e-12, "g[1]={}", g[1]);
+        let expected_l = (m0.l_i + m1.l_i) / 2.0;
+        assert!((s.l - expected_l).abs() < 1e-12);
+        let expected_f = (m0.loss.unwrap() + m1.loss.unwrap()) / 2.0;
+        assert!((loss.unwrap() - expected_f).abs() < 1e-12);
     }
 
     #[test]

@@ -40,6 +40,9 @@ pub fn run_gd(
             bytes_up,
             bytes_down,
             elapsed: sw.elapsed_secs(),
+            // Baseline reductions are all-or-nothing: full rounds only.
+            committed: n as u32,
+            missing: 0,
         });
         if gnorm <= opts.tol_grad {
             break;

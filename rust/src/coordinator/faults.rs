@@ -1,0 +1,426 @@
+//! Deterministic fault injection for any [`ClientPool`] transport.
+//!
+//! [`FaultPool`] wraps an inner pool and imposes a [`FaultPlan`] — a
+//! reproducible schedule of kills, dropped rounds and reply delays —
+//! entirely on the master side. Because every injected outcome is a
+//! pure function of (plan, round) and never of wall-clock races, the
+//! same plan produces **bit-identical trajectories** on `SeqPool`,
+//! `ThreadedPool` and `RemotePool` (asserted by the fault-injection
+//! integration tests): the lossy-round extension of the coordinator's
+//! buffer-and-commit determinism rule.
+//!
+//! # Injection semantics
+//!
+//! * `kill@R:C[-R2]` — client C is frozen from round R (inclusive)
+//!   until round R2 (exclusive; absent = forever): it is not scheduled,
+//!   is reported through [`ClientPool::dead_clients`], and on thawing
+//!   is reported through [`ClientPool::take_rejoined`] so the driver
+//!   can resync it (FedNL-PP pulls its STATE; a frozen client's state
+//!   never moved, so the resync is exact on every transport).
+//! * `drop@R:C` — client C does not participate in round R only.
+//! * `delay@R:C:MS` — client C's round-R reply is withheld for MS
+//!   milliseconds (a straggler). If MS exceeds the reply deadline of
+//!   the active [`RoundPolicy`], the delay deterministically becomes a
+//!   drop — the schedule decides, not the clock.
+//!
+//! Faults suppress the ROUND *delivery*: a faulted client never
+//! computes the round, so its local Hessian shift never advances and
+//! client/master bookkeeping stays consistent on every transport. (The
+//! realistic "client computed but the reply was lost" failure would
+//! desynchronize the local Hᵢ and needs a commit-ack protocol; the
+//! engine's `OnMissing::Reuse` policy covers the observable half —
+//! stale contributions — without the desync.) Logical byte accounting
+//! in the drivers still charges the suppressed command frames: the
+//! drop is modeled at the transport boundary.
+//!
+//! [`RoundPolicy`]: crate::algorithms::RoundPolicy
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{ClientFamily, ClientPool};
+use crate::algorithms::ClientMsg;
+
+/// One frozen interval of a client: [`from`, `until`) in rounds.
+///
+/// [`from`]: KillSpan::from
+/// [`until`]: KillSpan::until
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KillSpan {
+    pub client: u32,
+    pub from: u64,
+    /// First round the client is alive again; `None` = never rejoins.
+    pub until: Option<u64>,
+}
+
+/// A reproducible fault schedule (see the module docs for the textual
+/// schema parsed by [`FaultPlan::parse`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub kills: Vec<KillSpan>,
+    /// (round, client) participations to drop.
+    pub drops: Vec<(u64, u32)>,
+    /// (round, client, milliseconds) reply delays.
+    pub delays: Vec<(u64, u32, u64)>,
+}
+
+fn num<T: std::str::FromStr>(s: &str, ev: &str) -> Result<T> {
+    s.parse().map_err(|_| anyhow!("fault event '{ev}': bad number '{s}'"))
+}
+
+impl FaultPlan {
+    /// The empty plan (injects nothing).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty() && self.drops.is_empty() && self.delays.is_empty()
+    }
+
+    /// Parse the CLI schema: comma-separated events, each
+    /// `kill@R:C[-R2]` | `drop@R:C` | `delay@R:C:MS`.
+    ///
+    /// ```text
+    /// kill@6:1-18,delay@3:2:25,drop@12:0
+    /// ```
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = FaultPlan::default();
+        for ev in spec.split(',') {
+            let ev = ev.trim();
+            if ev.is_empty() {
+                continue;
+            }
+            let Some((kind, rest)) = ev.split_once('@') else {
+                bail!("fault event '{ev}': expected kind@round:client");
+            };
+            let Some((round, args)) = rest.split_once(':') else {
+                bail!("fault event '{ev}': expected kind@round:client");
+            };
+            let round: u64 = num(round, ev)?;
+            match kind {
+                "kill" => {
+                    let (client, until) = match args.split_once('-') {
+                        Some((c, r2)) => (c, Some(num(r2, ev)?)),
+                        None => (args, None),
+                    };
+                    let client = num(client, ev)?;
+                    if let Some(u) = until {
+                        if u <= round {
+                            bail!("fault event '{ev}': rejoin {u} <= kill {round}");
+                        }
+                    }
+                    plan.kills.push(KillSpan {
+                        client,
+                        from: round,
+                        until,
+                    });
+                }
+                "drop" => {
+                    plan.drops.push((round, num(args, ev)?));
+                }
+                "delay" => {
+                    let Some((client, ms)) = args.split_once(':') else {
+                        bail!("fault event '{ev}': expected delay@round:client:ms");
+                    };
+                    plan.delays.push((round, num(client, ev)?, num(ms, ev)?));
+                }
+                other => bail!("unknown fault kind '{other}' in '{ev}'"),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Builder: freeze `client` from `from` until `until` (exclusive).
+    pub fn with_kill(mut self, client: u32, from: u64, until: Option<u64>) -> Self {
+        self.kills.push(KillSpan {
+            client,
+            from,
+            until,
+        });
+        self
+    }
+
+    /// Builder: drop `client`'s participation in `round`.
+    pub fn with_drop(mut self, round: u64, client: u32) -> Self {
+        self.drops.push((round, client));
+        self
+    }
+
+    /// Builder: delay `client`'s round-`round` reply by `ms`.
+    pub fn with_delay(mut self, round: u64, client: u32, ms: u64) -> Self {
+        self.delays.push((round, client, ms));
+        self
+    }
+
+    /// Is `client` frozen at `round`?
+    pub fn dead_at(&self, client: u32, round: u64) -> bool {
+        self.kills.iter().any(|k| {
+            let open = match k.until {
+                Some(u) => round < u,
+                None => true,
+            };
+            k.client == client && round >= k.from && open
+        })
+    }
+
+    fn dropped_at(&self, client: u32, round: u64) -> bool {
+        self.drops.iter().any(|&(r, c)| r == round && c == client)
+    }
+
+    fn delay_at(&self, client: u32, round: u64) -> Option<u64> {
+        self.delays
+            .iter()
+            .find(|&&(r, c, _)| r == round && c == client)
+            .map(|&(_, _, ms)| ms)
+    }
+
+    fn max_client(&self) -> Option<u32> {
+        let kills = self.kills.iter().map(|k| k.client);
+        let drops = self.drops.iter().map(|&(_, c)| c);
+        let delays = self.delays.iter().map(|&(_, c, _)| c);
+        kills.chain(drops).chain(delays).max()
+    }
+}
+
+/// Imposes a [`FaultPlan`] on any inner [`ClientPool`] (see the module
+/// docs). Faults injected here combine with real transport failures
+/// the inner pool reports (`RemotePool` deadline/EOF deregistrations
+/// pass through untouched).
+pub struct FaultPool<P: ClientPool> {
+    inner: P,
+    plan: FaultPlan,
+    deadline: Option<Duration>,
+    /// Frozen flags as of the last prepared round (rejoin detection).
+    dead: Vec<bool>,
+    missing: Vec<u32>,
+    rejoined: Vec<u32>,
+    /// (client, release instant) reply holds for the round in flight.
+    holds: Vec<(u32, Instant)>,
+}
+
+impl<P: ClientPool> FaultPool<P> {
+    pub fn new(inner: P, plan: FaultPlan) -> Self {
+        let n = inner.n_clients();
+        if let Some(c) = plan.max_client() {
+            assert!(
+                (c as usize) < n,
+                "fault plan names client {c} but the pool has {n} clients"
+            );
+        }
+        Self {
+            inner,
+            plan,
+            deadline: None,
+            dead: vec![false; n],
+            missing: Vec::new(),
+            rejoined: Vec::new(),
+            holds: Vec::new(),
+        }
+    }
+
+    pub fn into_inner(self) -> P {
+        self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut P {
+        &mut self.inner
+    }
+
+    /// An injected delay longer than the reply deadline is a drop —
+    /// decided by the schedule, never by the clock.
+    fn delay_becomes_drop(&self, ms: u64) -> bool {
+        self.deadline.is_some_and(|dl| Duration::from_millis(ms) > dl)
+    }
+}
+
+impl<P: ClientPool> ClientPool for FaultPool<P> {
+    fn n_clients(&self) -> usize {
+        self.inner.n_clients()
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn family(&self) -> ClientFamily {
+        self.inner.family()
+    }
+
+    fn kind_name(&self) -> &'static str {
+        self.inner.kind_name()
+    }
+
+    fn default_alpha(&self) -> f64 {
+        self.inner.default_alpha()
+    }
+
+    fn set_alpha(&mut self, alpha: f64) {
+        self.inner.set_alpha(alpha);
+    }
+
+    fn prepare_round(&mut self, round: u64) {
+        self.inner.prepare_round(round);
+        for (c, was_dead) in self.dead.iter_mut().enumerate() {
+            let now_dead = self.plan.dead_at(c as u32, round);
+            if *was_dead && !now_dead {
+                self.rejoined.push(c as u32);
+            }
+            *was_dead = now_dead;
+        }
+    }
+
+    fn dead_clients(&self) -> Vec<u32> {
+        let mut out = self.inner.dead_clients();
+        for (c, dead) in self.dead.iter().enumerate() {
+            if *dead && !out.contains(&(c as u32)) {
+                out.push(c as u32);
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    fn take_missing(&mut self) -> Vec<u32> {
+        self.missing.extend(self.inner.take_missing());
+        std::mem::take(&mut self.missing)
+    }
+
+    fn take_rejoined(&mut self) -> Vec<u32> {
+        self.rejoined.extend(self.inner.take_rejoined());
+        std::mem::take(&mut self.rejoined)
+    }
+
+    fn set_reply_deadline(&mut self, deadline: Option<Duration>) {
+        self.deadline = deadline;
+        self.inner.set_reply_deadline(deadline);
+    }
+
+    fn submit_round(&mut self, x: &[f64], subset: Option<&[u32]>, round: u64, need_loss: bool) {
+        let all: Vec<u32>;
+        let participants: &[u32] = match subset {
+            Some(s) => s,
+            None => {
+                all = (0..self.n_clients() as u32).collect();
+                &all
+            }
+        };
+        self.holds.clear();
+        let mut live = Vec::with_capacity(participants.len());
+        for &ci in participants {
+            if self.plan.dead_at(ci, round) || self.plan.dropped_at(ci, round) {
+                self.missing.push(ci);
+                continue;
+            }
+            if let Some(ms) = self.plan.delay_at(ci, round) {
+                if self.delay_becomes_drop(ms) {
+                    self.missing.push(ci);
+                    continue;
+                }
+                self.holds.push((ci, Instant::now() + Duration::from_millis(ms)));
+            }
+            live.push(ci);
+        }
+        self.inner.submit_round(x, Some(&live), round, need_loss);
+    }
+
+    fn drain(&mut self) -> Vec<ClientMsg> {
+        let out = self.inner.drain();
+        // Enforce injected straggler delays: hold each delayed reply
+        // until its release instant. Wall-clock only — the commit order
+        // and trajectory are unaffected.
+        for m in &out {
+            let pos = self.holds.iter().position(|&(c, _)| c as usize == m.client_id);
+            if let Some(pos) = pos {
+                let (_, release) = self.holds.swap_remove(pos);
+                let now = Instant::now();
+                if release > now {
+                    std::thread::sleep(release - now);
+                }
+            }
+        }
+        out
+    }
+
+    fn eval_loss(&mut self, x: &[f64]) -> f64 {
+        self.inner.eval_loss(x)
+    }
+
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        self.inner.loss_grad(x)
+    }
+
+    fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {
+        self.inner.warm_start(x)
+    }
+
+    fn init_state(&mut self) -> Vec<(f64, Vec<f64>)> {
+        self.inner.init_state()
+    }
+
+    fn pull_state(&mut self, client: u32) -> Option<(f64, Vec<f64>)> {
+        self.inner.pull_state(client)
+    }
+
+    fn transport_bytes(&self) -> Option<(u64, u64)> {
+        self.inner.transport_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_schema() {
+        let plan = FaultPlan::parse("kill@6:1-18, delay@3:2:25, drop@12:0, kill@4:3").unwrap();
+        assert_eq!(plan.kills.len(), 2);
+        assert_eq!(plan.kills[0].client, 1);
+        assert_eq!(plan.kills[0].from, 6);
+        assert_eq!(plan.kills[0].until, Some(18));
+        assert_eq!(plan.kills[1].until, None);
+        assert_eq!(plan.drops, vec![(12, 0)]);
+        assert_eq!(plan.delays, vec![(3, 2, 25)]);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_events() {
+        assert!(FaultPlan::parse("boom@1:2").is_err());
+        assert!(FaultPlan::parse("kill@x:2").is_err());
+        assert!(FaultPlan::parse("kill@5:2-3").is_err()); // rejoin <= kill
+        assert!(FaultPlan::parse("delay@1:2").is_err()); // missing ms
+        assert!(FaultPlan::parse("drop12:0").is_err());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_matches_builder() {
+        let parsed = FaultPlan::parse("kill@2:0-5,drop@1:3,delay@4:2:30").unwrap();
+        let built = FaultPlan::none()
+            .with_kill(0, 2, Some(5))
+            .with_drop(1, 3)
+            .with_delay(4, 2, 30);
+        assert_eq!(parsed, built);
+    }
+
+    #[test]
+    fn dead_at_spans() {
+        let plan = FaultPlan::none().with_kill(1, 3, Some(6)).with_kill(2, 4, None);
+        assert!(!plan.dead_at(1, 2));
+        assert!(plan.dead_at(1, 3));
+        assert!(plan.dead_at(1, 5));
+        assert!(!plan.dead_at(1, 6));
+        assert!(plan.dead_at(2, 100));
+        assert!(!plan.dead_at(0, 3));
+    }
+
+    #[test]
+    fn delay_beyond_deadline_is_a_drop() {
+        // Pure schedule arithmetic — no pool needed beyond a stub.
+        let plan = FaultPlan::none().with_delay(0, 0, 500);
+        assert_eq!(plan.delay_at(0, 0), Some(500));
+        assert_eq!(plan.delay_at(0, 1), None);
+        assert_eq!(plan.delay_at(1, 0), None);
+    }
+}

@@ -37,6 +37,9 @@ enum Cmd {
     LossGrad { x: Arc<Vec<f64>> },
     WarmStart { x: Arc<Vec<f64>> },
     InitState,
+    /// Single-client (lᵢ, gᵢ) pull (FedNL-PP rejoin resync); only the
+    /// worker owning the client replies.
+    PullState(usize),
     SetAlpha(f64),
     Shutdown,
 }
@@ -165,6 +168,15 @@ impl ThreadedPool {
                                     let (l, g) = c.state();
                                     let _ =
                                         tx.send(Reply::State(c.id(), l, g));
+                                }
+                            }
+                            Cmd::PullState(id) => {
+                                for c in bucket.iter() {
+                                    if c.id() == id {
+                                        let (l, g) = c.state();
+                                        let _ = tx
+                                            .send(Reply::State(id, l, g));
+                                    }
                                 }
                             }
                             Cmd::SetAlpha(a) => {
@@ -346,6 +358,18 @@ impl ClientPool for ThreadedPool {
         }
         all.sort_by_key(|&(id, _, _)| id);
         all.into_iter().map(|(_, l, g)| (l, g)).collect()
+    }
+
+    fn pull_state(&mut self, client: u32) -> Option<(f64, Vec<f64>)> {
+        self.broadcast(|| Cmd::PullState(client as usize));
+        // Exactly one worker owns the client and replies.
+        match self.reply_rx.recv() {
+            Ok(Reply::State(id, l, g)) => {
+                assert_eq!(id, client as usize);
+                Some((l, g))
+            }
+            _ => panic!("worker died"),
+        }
     }
 }
 

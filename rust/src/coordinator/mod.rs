@@ -48,10 +48,40 @@
 //! [`PoolClient`] (plain FedNL / FedNL-LS clients *or* FedNL-PP
 //! clients), and the wire protocol uses one unified ROUND/MSG exchange
 //! for both (see `net::wire`).
+//!
+//! # Fault tolerance
+//!
+//! A round may lose participants. The pool-side contract (all default
+//! to the no-fault behavior, so the in-process pools stay trivially
+//! correct):
+//!
+//! * [`ClientPool::take_missing`] — participants of the round in
+//!   flight whose reply will **never** arrive (fault injection, missed
+//!   reply deadline, closed connection). `drain` must not return an
+//!   empty batch while replies are outstanding *unless* the lost ones
+//!   have been certified here — "empty batch" keeps meaning "the round
+//!   is closed at the transport level".
+//! * [`ClientPool::dead_clients`] / [`ClientPool::take_rejoined`] /
+//!   [`ClientPool::prepare_round`] — liveness bookkeeping for the
+//!   driver's participation sampling and rejoin resync.
+//! * [`ClientPool::set_reply_deadline`] / [`ClientPool::pull_state`] —
+//!   the reply deadline and the per-client STATE pull that the rejoin
+//!   resync rides on.
+//!
+//! Deterministic fault *injection* lives in [`faults::FaultPool`], a
+//! wrapper that imposes a seeded [`faults::FaultPlan`] on any inner
+//! transport — because the injection is master-side and never decided
+//! by wall clock, the same plan yields bit-identical trajectories on
+//! every transport (the lossy-round extension of the buffer-and-commit
+//! rule).
 
+pub mod faults;
 pub mod local_sim;
 
+pub use faults::{FaultPlan, FaultPool};
 pub use local_sim::ThreadedPool;
+
+use std::time::Duration;
 
 use crate::algorithms::{ClientMsg, ClientState, PPClientState};
 use crate::linalg::vector;
@@ -269,6 +299,53 @@ pub trait ClientPool {
     fn transport_bytes(&self) -> Option<(u64, u64)> {
         None
     }
+
+    // --- fault tolerance / liveness (defaults = nothing ever fails) ---
+
+    /// Called by the driver before it samples / submits round `round`:
+    /// transports refresh liveness state here (poll re-registrations,
+    /// advance a fault plan), so [`dead_clients`] and [`take_rejoined`]
+    /// reflect this round.
+    ///
+    /// [`dead_clients`]: ClientPool::dead_clients
+    /// [`take_rejoined`]: ClientPool::take_rejoined
+    fn prepare_round(&mut self, _round: u64) {}
+
+    /// Clients currently unable to participate (deregistered, or frozen
+    /// by fault injection). Used by the FedNL-PP resampling policy.
+    fn dead_clients(&self) -> Vec<u32> {
+        Vec::new()
+    }
+
+    /// Participants of the round in flight whose reply is certified to
+    /// never arrive. Drained by the round engine; returning an id here
+    /// releases the engine from waiting on it.
+    fn take_missing(&mut self) -> Vec<u32> {
+        Vec::new()
+    }
+
+    /// Clients that came back since the last call (thawed by the fault
+    /// plan, or re-registered over the wire). The FedNL-PP driver
+    /// resyncs each via [`pull_state`].
+    ///
+    /// [`pull_state`]: ClientPool::pull_state
+    fn take_rejoined(&mut self) -> Vec<u32> {
+        Vec::new()
+    }
+
+    /// Per-client reply deadline for the round exchange. In-process
+    /// transports ignore it; `RemotePool` deregisters clients whose
+    /// reply misses it, and the fault injector uses it to convert
+    /// injected delays beyond the deadline into deterministic drops.
+    fn set_reply_deadline(&mut self, _deadline: Option<Duration>) {}
+
+    /// Pull one client's current (lᵢ, gᵢ) (the FedNL-PP rejoin resync;
+    /// same exchange as the STATE bootstrap, but for a single client).
+    /// `None` means the client was lost again before answering — the
+    /// driver skips the resync (the client is dead and unscheduled).
+    fn pull_state(&mut self, _client: u32) -> Option<(f64, Vec<f64>)> {
+        panic!("per-client state pull not supported by this transport")
+    }
 }
 
 // --- shared sequential primitives (SeqPool / SlicePool) ---------------
@@ -387,6 +464,10 @@ impl<C: PoolClient> ClientPool for SeqPool<C> {
     fn init_state(&mut self) -> Vec<(f64, Vec<f64>)> {
         self.clients.iter().map(|c| c.state()).collect()
     }
+
+    fn pull_state(&mut self, client: u32) -> Option<(f64, Vec<f64>)> {
+        Some(self.clients[client as usize].state())
+    }
 }
 
 /// Adapter: a mutable client slice as a sequential pool (borrowing
@@ -465,5 +546,9 @@ impl<C: PoolClient> ClientPool for SlicePool<'_, C> {
 
     fn init_state(&mut self) -> Vec<(f64, Vec<f64>)> {
         self.clients.iter().map(|c| c.state()).collect()
+    }
+
+    fn pull_state(&mut self, client: u32) -> Option<(f64, Vec<f64>)> {
+        Some(self.clients[client as usize].state())
     }
 }

@@ -6,10 +6,12 @@ use super::{prepare_problem, HarnessCfg, Problem, ProblemSpec, Scale};
 use super::{A9A, PHISHING, W8A};
 use crate::algorithms::{
     run_fednl_ls_pool, run_fednl_pool, run_fednl_pp_pool, LineSearchParams,
-    Options,
+    OnMissing, Options, RoundPolicy,
 };
 use crate::baselines::{run_gd, run_lbfgs, run_nesterov, BaselineOptions};
-use crate::coordinator::ClientPool;
+use crate::coordinator::{
+    ClientPool, FaultPlan, FaultPool, SeqPool, ThreadedPool,
+};
 use crate::metrics::report::{sci, Table};
 use crate::metrics::rusage::ResourceSnapshot;
 use crate::metrics::Trace;
@@ -173,34 +175,30 @@ pub enum TcpAlgo {
     Lbfgs,
 }
 
-/// Run one multi-node experiment: master + `n_clients` client threads
-/// over loopback TCP. Returns (trace, wall seconds, init seconds).
-pub fn run_tcp_experiment(
+/// Spawn one TCP client thread per shard of `problem` (the paper runs
+/// these as separate Slurm nodes; the transport, wire format and
+/// algorithm logic are identical). `pp` selects the FedNL-PP client
+/// loop (initialized at x⁰ = 0). Shared by `run_tcp_experiment` and
+/// `fault_smoke`.
+type ClientHandle = std::thread::JoinHandle<Result<(u64, u64)>>;
+
+fn spawn_shard_clients(
     problem: &Problem,
     compressor: &str,
-    algo: TcpAlgo,
-    rounds: u64,
-    tol: Option<f64>,
+    addr: &str,
+    pp: bool,
     cfg: &HarnessCfg,
-) -> Result<(Trace, f64, f64)> {
+) -> Result<Vec<ClientHandle>> {
     use crate::algorithms::{ClientState, PPClientState};
     use crate::net::client::ClientMode;
     use crate::oracle::LogisticOracle;
 
-    let init_sw = Stopwatch::start();
     let d = problem.d();
     let lam = problem.spec.lam;
-    let shards = problem.dataset.split(problem.n_clients, problem.n_i)?;
-    let bound = Bound::bind("127.0.0.1:0")?;
-    let addr = bound.local_addr()?.to_string();
-    let is_pp = matches!(algo, TcpAlgo::FedNLPP { .. });
     let x0 = vec![0.0; d];
-
-    // Client threads (the paper runs these as separate Slurm nodes; the
-    // transport, wire format and algorithm logic are identical).
     let mut handles = Vec::new();
-    for shard in shards {
-        let addr = addr.clone();
+    for shard in problem.dataset.split(problem.n_clients, problem.n_i)? {
+        let addr = addr.to_string();
         let comp = crate::compressors::by_name(
             compressor,
             d,
@@ -211,7 +209,7 @@ pub fn run_tcp_experiment(
         handles.push(std::thread::spawn(move || {
             let id = shard.client_id;
             let oracle = Box::new(LogisticOracle::new(shard, lam));
-            let mode = if is_pp {
+            let mode = if pp {
                 ClientMode::PP(PPClientState::new(id, oracle, comp, None, &x0c))
             } else {
                 ClientMode::FedNL(ClientState::new(id, oracle, comp, None))
@@ -219,6 +217,27 @@ pub fn run_tcp_experiment(
             run_client(&addr, id, mode)
         }));
     }
+    Ok(handles)
+}
+
+/// Run one multi-node experiment: master + `n_clients` client threads
+/// over loopback TCP. Returns (trace, wall seconds, init seconds).
+pub fn run_tcp_experiment(
+    problem: &Problem,
+    compressor: &str,
+    algo: TcpAlgo,
+    rounds: u64,
+    tol: Option<f64>,
+    cfg: &HarnessCfg,
+) -> Result<(Trace, f64, f64)> {
+    let init_sw = Stopwatch::start();
+    let d = problem.d();
+    let bound = Bound::bind("127.0.0.1:0")?;
+    let addr = bound.local_addr()?.to_string();
+    let is_pp = matches!(algo, TcpAlgo::FedNLPP { .. });
+    let x0 = vec![0.0; d];
+    let handles =
+        spawn_shard_clients(problem, compressor, &addr, is_pp, cfg)?;
 
     let mut pool = bound.accept(problem.n_clients)?;
     let init_secs = init_sw.elapsed_secs() + problem.init_secs;
@@ -328,6 +347,189 @@ pub fn tcp_smoke(cfg: &HarnessCfg) -> Result<String> {
         ]);
     }
     out.push_str(&table.to_markdown());
+    Ok(out)
+}
+
+/// CI fault smoke: FedNL-PP under a deterministic [`FaultPlan`] — one
+/// client killed mid-run and rejoined, two injected stragglers, one
+/// dropped participation — on all three transports (SeqPool,
+/// ThreadedPool, TCP RemotePool), each wrapped in the same
+/// [`FaultPool`]. Asserts the three trajectories are **bit-identical**
+/// (the lossy-round determinism invariant) and still converge, then
+/// writes the per-round committed/missing trace to
+/// `faultsmoke_trace.json` (uploaded as a CI artifact).
+pub fn fault_smoke(cfg: &HarnessCfg) -> Result<String> {
+    cfg.ensure_out_dir()?;
+    let spec = ProblemSpec {
+        name: "faultsmoke",
+        d: 13,
+        n_i_full: 40,
+        n_clients_full: 5,
+        lam: 1e-3,
+    };
+    let mut p = prepare_problem(&spec, cfg)?;
+    p.n_clients = 5;
+    p.n_i = 40;
+    let d = p.d();
+    let x0 = vec![0.0; d];
+    let (tau, rounds) = (4usize, 30u64);
+    let plan_spec = "kill@6:1-18,delay@3:2:30,delay@9:4:30,drop@12:0";
+    let plan = FaultPlan::parse(plan_spec)?;
+    let policy = RoundPolicy {
+        quorum: Some(2),
+        deadline_ms: Some(2000),
+        on_missing: OnMissing::Drop,
+    };
+    let opts = Options { rounds, policy, ..Default::default() };
+
+    // Sequential reference.
+    let mut seq = FaultPool::new(
+        SeqPool::new(p.pp_clients("topk", K_MULT, cfg, &x0)?),
+        plan.clone(),
+    );
+    let t_seq = run_fednl_pp_pool(
+        &mut seq,
+        &opts,
+        tau,
+        cfg.seed,
+        x0.clone(),
+        "faultsmoke/seq",
+    );
+
+    // Multi-threaded simulator.
+    let mut thr = FaultPool::new(
+        ThreadedPool::new(
+            p.pp_clients("topk", K_MULT, cfg, &x0)?,
+            cfg.threads,
+        ),
+        plan.clone(),
+    );
+    let t_thr = run_fednl_pp_pool(
+        &mut thr,
+        &opts,
+        tau,
+        cfg.seed,
+        x0.clone(),
+        "faultsmoke/threaded",
+    );
+
+    // Real TCP loopback.
+    let bound = Bound::bind("127.0.0.1:0")?;
+    let addr = bound.local_addr()?.to_string();
+    let handles = spawn_shard_clients(&p, "topk", &addr, true, cfg)?;
+    let mut tcp = FaultPool::new(bound.accept(p.n_clients)?, plan);
+    let t_tcp = run_fednl_pp_pool(
+        &mut tcp,
+        &opts,
+        tau,
+        cfg.seed,
+        x0,
+        "faultsmoke/remote",
+    );
+    tcp.into_inner().shutdown();
+    for h in handles {
+        let _ = h.join();
+    }
+
+    // The lossy-round determinism invariant: same plan → bit-identical
+    // trajectories (and identical committed/missing accounting) on all
+    // three transports. FedNL-PP traces always report logical byte
+    // counters, so those must agree too.
+    for (t, name) in [(&t_thr, "threaded"), (&t_tcp, "remote")] {
+        anyhow::ensure!(
+            t.records.len() == t_seq.records.len(),
+            "faultsmoke: {name} ran {} rounds vs seq {}",
+            t.records.len(),
+            t_seq.records.len()
+        );
+        for (a, b) in t_seq.records.iter().zip(&t.records) {
+            anyhow::ensure!(
+                a.grad_norm.to_bits() == b.grad_norm.to_bits()
+                    && a.committed == b.committed
+                    && a.missing == b.missing
+                    && a.bytes_up == b.bytes_up,
+                "faultsmoke: {name} diverged from seq at round {}: \
+                 grad {:.17e} vs {:.17e}, committed {}/{} vs {}/{}",
+                a.round,
+                a.grad_norm,
+                b.grad_norm,
+                a.committed,
+                a.committed + a.missing,
+                b.committed,
+                b.committed + b.missing
+            );
+        }
+    }
+    // Faults actually engaged (the kill window makes losses all but
+    // certain with τ=4 of 5), recovery happened after the rejoin, and
+    // training still converged.
+    let lost: u32 = t_seq.records.iter().map(|r| r.missing).sum();
+    anyhow::ensure!(lost > 0, "faultsmoke: no fault ever engaged");
+    anyhow::ensure!(
+        t_seq.records.iter().filter(|r| r.round >= 18).all(|r| r.missing == 0),
+        "faultsmoke: losses after the rejoin round"
+    );
+    let first = t_seq.records.first().map(|r| r.grad_norm).unwrap_or(0.0);
+    let last = t_seq.last_grad_norm();
+    anyhow::ensure!(
+        last.is_finite() && last < first * 1e-2,
+        "faultsmoke: no convergence under faults ({first:.3e} → {last:.3e})"
+    );
+
+    // Artifact: the per-round fault accounting of the (identical)
+    // trajectories, plus the plan/policy that produced them.
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"plan\": \"{plan_spec}\",\n"));
+    json.push_str(
+        "  \"policy\": {\"quorum\": 2, \"deadline_ms\": 2000, \"on_missing\": \"drop\"},\n",
+    );
+    json.push_str(&format!(
+        "  \"n_clients\": {}, \"tau\": {tau}, \"rounds\": {rounds},\n",
+        p.n_clients
+    ));
+    json.push_str(
+        "  \"pools\": [\"seq\", \"threaded\", \"remote\"], \"bit_identical\": true,\n",
+    );
+    json.push_str("  \"trace\": [\n");
+    for (i, r) in t_seq.records.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"round\": {}, \"grad_norm\": {:e}, \"committed\": {}, \"missing\": {}}}{}\n",
+            r.round,
+            r.grad_norm,
+            r.committed,
+            r.missing,
+            if i + 1 < t_seq.records.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let json_path = format!("{}/faultsmoke_trace.json", cfg.out_dir);
+    std::fs::write(&json_path, &json)?;
+
+    let mut out = format!(
+        "## Fault smoke — FedNL-PP quorum rounds under `{plan_spec}` \
+         (n={}, τ={tau}, quorum=2, r={rounds})\n\n",
+        p.n_clients
+    );
+    let mut table = Table::new(&[
+        "Transport",
+        "||∇f||_final",
+        "Rounds",
+        "Lost contributions",
+        "Bit-identical to seq",
+    ]);
+    for (t, name) in
+        [(&t_seq, "seq"), (&t_thr, "threaded"), (&t_tcp, "remote")]
+    {
+        table.row(&[
+            name.to_string(),
+            sci(t.last_grad_norm()),
+            format!("{}", t.records.len()),
+            format!("{}", t.records.iter().map(|r| r.missing).sum::<u32>()),
+            "yes".to_string(),
+        ]);
+    }
+    out.push_str(&table.to_markdown());
+    out.push_str(&format!("\nPer-round trace written to {json_path}\n"));
     Ok(out)
 }
 

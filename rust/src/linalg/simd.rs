@@ -35,20 +35,39 @@ const ISA_AVX2: u8 = 2;
 
 static ISA: AtomicU8 = AtomicU8::new(ISA_UNKNOWN);
 
+/// CI / debugging override: `FEDNL_FORCE_SCALAR=1` (any value other
+/// than `0` / empty) pins the dispatcher to the portable scalar path
+/// even on AVX2 hosts, so both ISA paths get exercised on every PR.
+fn force_scalar_env() -> bool {
+    match std::env::var_os("FEDNL_FORCE_SCALAR") {
+        Some(v) => !v.is_empty() && v != "0",
+        None => false,
+    }
+}
+
 #[cold]
 fn detect() -> u8 {
-    #[cfg(target_arch = "x86_64")]
-    let isa = if is_x86_feature_detected!("avx2")
-        && is_x86_feature_detected!("fma")
-    {
+    let isa = if force_scalar_env() {
+        ISA_SCALAR
+    } else {
+        detect_hw()
+    };
+    ISA.store(isa, Ordering::Relaxed);
+    isa
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_hw() -> u8 {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
         ISA_AVX2
     } else {
         ISA_SCALAR
-    };
-    #[cfg(not(target_arch = "x86_64"))]
-    let isa = ISA_SCALAR;
-    ISA.store(isa, Ordering::Relaxed);
-    isa
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_hw() -> u8 {
+    ISA_SCALAR
 }
 
 #[inline(always)]

@@ -13,11 +13,12 @@
 use anyhow::{bail, Context, Result};
 use fednl::algorithms::{
     run_fednl_ls_pool, run_fednl_pool, run_fednl_pp_pool, ClientState,
-    LineSearchParams, Options, PPClientState, UpdateRule,
+    LineSearchParams, OnMissing, Options, PPClientState, RoundPolicy,
+    UpdateRule,
 };
 use fednl::cli::Args;
 use fednl::compressors::by_name;
-use fednl::coordinator::ThreadedPool;
+use fednl::coordinator::{ClientPool, FaultPlan, FaultPool, ThreadedPool};
 use fednl::data::{
     generate_synthetic, parse_libsvm_file, write_libsvm, Dataset, SynthSpec,
 };
@@ -58,14 +59,19 @@ fn print_usage() {
          \x20            [--k-mult 8] [--rounds 1000] [--clients 16] [--threads 0]\n\
          \x20            [--lam 1e-3] [--tau 12] [--tol T] [--oracle native|pjrt]\n\
          \x20            [--trace out.csv] [--warm-start] [--rule lk|mu] [--mu 1e-3]\n\
-         \x20            [--intra-threads 1]\n\
+         \x20            [--intra-threads 1] [--quorum Q] [--deadline-ms MS]\n\
+         \x20            [--on-missing drop|resample|reuse] [--fault-plan SPEC]\n\
          \x20 master     --listen ADDR --clients N --algo ... [--rounds R] [--tol T]\n\
+         \x20            [--quorum Q] [--deadline-ms MS] [--on-missing P] [--fault-plan SPEC]\n\
          \x20 client     --connect ADDR --id I --data SHARD [--algo fednl|fednl-pp]\n\
          \x20            [--compressor topk] [--k-mult 8] [--lam 1e-3]\n\
          \x20 verify     --data FILE [--lam 1e-3]   (finite-difference oracle check)\n\
-         \x20 experiment table1|table2|table3|table5|fig1..fig12|costmodel|tcpsmoke|all\n\
-         \x20            [--full] [--out-dir results] [--pjrt] [--threads N] [--seq]\n\
-         \x20 sysinfo"
+         \x20 experiment table1|table2|table3|table5|fig1..fig12|costmodel|tcpsmoke|\n\
+         \x20            faultsmoke|all [--full] [--out-dir results] [--pjrt]\n\
+         \x20            [--threads N] [--seq]\n\
+         \x20 sysinfo\n\n\
+         FAULT PLANS (--fault-plan): comma-separated kill@R:C[-R2] | drop@R:C |\n\
+         delay@R:C:MS — deterministic master-side injection (see coordinator::faults)."
     );
 }
 
@@ -155,6 +161,34 @@ fn build_oracle(
     }
 }
 
+/// Shared `--quorum` / `--deadline-ms` / `--on-missing` parsing for
+/// `train` and `master`.
+fn round_policy(args: &Args) -> Result<RoundPolicy> {
+    let quorum = match args.get("quorum") {
+        None => None,
+        Some(v) => Some(v.parse::<usize>().map_err(|_| {
+            anyhow::anyhow!("--quorum: expected integer, got '{v}'")
+        })?),
+    };
+    let deadline_ms = match args.get("deadline-ms") {
+        None => None,
+        Some(v) => Some(v.parse::<u64>().map_err(|_| {
+            anyhow::anyhow!("--deadline-ms: expected integer, got '{v}'")
+        })?),
+    };
+    let on_missing = OnMissing::parse(args.get_or("on-missing", "drop"))?;
+    Ok(RoundPolicy { quorum, deadline_ms, on_missing })
+}
+
+/// `--fault-plan SPEC` (empty plan when absent — the `FaultPool`
+/// wrapper is transparent then).
+fn fault_plan(args: &Args) -> Result<FaultPlan> {
+    match args.get("fault-plan") {
+        Some(spec) => FaultPlan::parse(spec),
+        None => Ok(FaultPlan::none()),
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let data = args.get("data").context("--data required")?;
     let algo = args.get_or("algo", "fednl");
@@ -187,8 +221,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         tol_grad: tol,
         track_loss: true,
         warm_start: args.flag("warm-start"),
+        policy: round_policy(args)?,
         ..Default::default()
     };
+    let plan = fault_plan(args)?;
     let x0 = vec![0.0; d];
     let mut rt: Option<PjrtRuntime> = None;
 
@@ -206,7 +242,8 @@ fn cmd_train(args: &Args) -> Result<()> {
                     ))
                 })
                 .collect::<Result<_>>()?;
-            let mut pool = ThreadedPool::new(clients, threads);
+            let mut pool =
+                FaultPool::new(ThreadedPool::new(clients, threads), plan);
             if algo == "fednl" {
                 run_fednl_pool(&mut pool, &opts, x0, &format!("FedNL/{comp}"))
             } else {
@@ -236,7 +273,8 @@ fn cmd_train(args: &Args) -> Result<()> {
                 .collect::<Result<_>>()?;
             // PP runs on the same multi-core pool as FedNL/LS now that
             // participation subsets are part of the pool API.
-            let mut pool = ThreadedPool::new(clients, threads);
+            let mut pool =
+                FaultPool::new(ThreadedPool::new(clients, threads), plan);
             run_fednl_pp_pool(
                 &mut pool,
                 &opts,
@@ -273,16 +311,17 @@ fn cmd_master(args: &Args) -> Result<()> {
     let tol = args.get("tol").map(|t| t.parse::<f64>()).transpose()?;
     let seed = args.get_u64("seed", 0x5EED)?;
     println!("master: waiting for {n_clients} clients on {listen} ...");
-    let mut pool = RemotePool::listen(listen, n_clients)?;
-    let d = {
-        use fednl::coordinator::ClientPool;
-        pool.dim()
-    };
+    let mut pool = FaultPool::new(
+        RemotePool::listen(listen, n_clients)?,
+        fault_plan(args)?,
+    );
+    let d = pool.dim();
     println!("master: all clients registered (d = {d})");
     let opts = Options {
         rounds,
         tol_grad: tol,
         track_loss: algo == "fednl-ls",
+        policy: round_policy(args)?,
         ..Default::default()
     };
     let x0 = vec![0.0; d];
@@ -301,7 +340,7 @@ fn cmd_master(args: &Args) -> Result<()> {
         }
         other => bail!("unknown algo '{other}'"),
     };
-    pool.shutdown();
+    pool.into_inner().shutdown();
     println!(
         "done: {} rounds, ||grad|| = {:.3e}, wall {}",
         trace.records.len(),
@@ -385,6 +424,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             "table5" => harness::table5(&cfg)?,
             "costmodel" => harness::costmodel(),
             "tcpsmoke" => harness::tcp_smoke(&cfg)?,
+            "faultsmoke" => harness::fault_smoke(&cfg)?,
             f if f.starts_with("fig") => {
                 let n: usize = f[3..].parse().context("figN")?;
                 if n <= 3 {
@@ -403,9 +443,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         ))
     };
     let all = [
-        "costmodel", "tcpsmoke", "table1", "table2", "table3", "table5",
-        "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
-        "fig9", "fig10", "fig11", "fig12",
+        "costmodel", "tcpsmoke", "faultsmoke", "table1", "table2", "table3",
+        "table5", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7",
+        "fig8", "fig9", "fig10", "fig11", "fig12",
     ];
     let list: Vec<&str> =
         if which == "all" { all.to_vec() } else { vec![which] };

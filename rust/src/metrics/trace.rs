@@ -21,6 +21,12 @@ pub struct RoundRecord {
     pub bytes_down: u64,
     /// Wall-clock seconds since training start.
     pub elapsed: f64,
+    /// Client messages committed this round (arrived + policy reuses).
+    /// Equals the participant count on a fault-free round.
+    pub committed: u32,
+    /// Participants whose contribution was lost this round (killed,
+    /// dropped, or past the reply deadline) under the quorum policy.
+    pub missing: u32,
 }
 
 /// A full training trace.
@@ -77,11 +83,20 @@ impl Trace {
 
     /// CSV with header; the figure-regeneration format.
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("round,grad_norm,loss,bytes_up,bytes_down,elapsed_s\n");
+        let mut s = String::from(
+            "round,grad_norm,loss,bytes_up,bytes_down,elapsed_s,committed,missing\n",
+        );
         for r in &self.records {
             s.push_str(&format!(
-                "{},{:e},{:e},{},{},{:.6}\n",
-                r.round, r.grad_norm, r.loss, r.bytes_up, r.bytes_down, r.elapsed
+                "{},{:e},{:e},{},{},{:.6},{},{}\n",
+                r.round,
+                r.grad_norm,
+                r.loss,
+                r.bytes_up,
+                r.bytes_down,
+                r.elapsed,
+                r.committed,
+                r.missing
             ));
         }
         s
@@ -106,6 +121,8 @@ mod tests {
             bytes_up: up,
             bytes_down: up / 2,
             elapsed: t,
+            committed: 4,
+            missing: 1,
         }
     }
 
@@ -130,8 +147,10 @@ mod tests {
         let lines: Vec<&str> = csv.trim().lines().collect();
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("round,"));
+        assert!(lines[0].ends_with("committed,missing"));
         assert!(lines[1].starts_with("0,"));
-        assert_eq!(lines[1].split(',').count(), 6);
+        assert_eq!(lines[1].split(',').count(), 8);
+        assert!(lines[1].ends_with("4,1"));
     }
 
     #[test]

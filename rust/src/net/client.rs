@@ -21,12 +21,33 @@ pub enum ClientMode {
     PP(PPClientState),
 }
 
+/// Optional client-side behaviors (fault drills and tests).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClientOpts {
+    /// After answering this many ROUND commands, announce a graceful
+    /// leave (`DEREGISTER`) and exit — simulating a departing client.
+    /// The master retires the connection and, under a quorum round
+    /// policy, keeps training on the survivors; this id may later
+    /// rejoin by running a fresh `run_client`.
+    pub leave_after_rounds: Option<u64>,
+}
+
 /// Connect to `addr`, register as `client_id`, serve until SHUTDOWN.
 /// Returns (bytes_sent, bytes_received).
 pub fn run_client(
     addr: &str,
     client_id: usize,
+    mode: ClientMode,
+) -> Result<(u64, u64)> {
+    run_client_with(addr, client_id, mode, ClientOpts::default())
+}
+
+/// As [`run_client`], with explicit [`ClientOpts`].
+pub fn run_client_with(
+    addr: &str,
+    client_id: usize,
     mut mode: ClientMode,
+    opts: ClientOpts,
 ) -> Result<(u64, u64)> {
     let (d, family) = match &mode {
         ClientMode::FedNL(c) => (c.dim(), wire::FAMILY_FEDNL),
@@ -39,6 +60,7 @@ pub fn run_client(
         &wire::encode_register(client_id as u32, d as u32, family),
     )?;
 
+    let mut rounds_served = 0u64;
     loop {
         let (tag, payload) = ch.recv()?;
         match tag {
@@ -52,6 +74,13 @@ pub fn run_client(
                     ClientMode::PP(c) => c.participate(&x, round, need_loss),
                 };
                 ch.send(c2s::MSG, &wire::encode_client_msg(&msg))?;
+                rounds_served += 1;
+                if let Some(k) = opts.leave_after_rounds {
+                    if rounds_served >= k {
+                        ch.send(c2s::DEREGISTER, &[])?;
+                        break;
+                    }
+                }
             }
             s2c::EVAL_LOSS => {
                 let x = wire::decode_vec(&payload)?;

@@ -56,6 +56,15 @@ impl Channel {
         Ok((tag, payload))
     }
 
+    /// Bound the time a blocking [`Channel::recv`] may wait (`None` =
+    /// wait forever). A timeout mid-frame desynchronizes the stream, so
+    /// callers that hit one must retire the channel — `RemotePool`
+    /// deregisters the client (the per-client reply deadline).
+    pub fn set_read_timeout(&self, dur: Option<std::time::Duration>) -> Result<()> {
+        self.stream.set_read_timeout(dur).context("set_read_timeout")?;
+        Ok(())
+    }
+
     pub fn peer_addr(&self) -> String {
         self.stream
             .peer_addr()

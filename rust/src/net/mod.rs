@@ -16,6 +16,6 @@ pub mod framing;
 pub mod server;
 pub mod wire;
 
-pub use client::run_client;
-pub use framing::FRAME_HEADER_BYTES;
+pub use client::{run_client, run_client_with, ClientOpts};
+pub use framing::{Channel, FRAME_HEADER_BYTES};
 pub use server::RemotePool;

@@ -10,9 +10,31 @@
 //! transfer (their frames accumulate in the OS socket buffers while the
 //! master aggregates; recv + decode themselves run on the master thread,
 //! between commits).
+//!
+//! # Liveness
+//!
+//! The pool survives client loss. A client is **deregistered** — its
+//! channel retired, its id reported dead — when any of these fire:
+//!
+//! * its round reply misses the per-client deadline installed by
+//!   [`ClientPool::set_reply_deadline`] (a `recv` timeout
+//!   desynchronizes the frame stream, so the channel cannot be kept);
+//! * its connection errors or closes (EOF — a crashed or departed
+//!   client);
+//! * it announces a graceful leave with the `DEREGISTER` frame.
+//!
+//! Deregistered participants of the round in flight surface through
+//! [`ClientPool::take_missing`], which is what lets the round engine
+//! close a quorum round instead of hanging. The listener stays open:
+//! a dead client id may **rejoin** by reconnecting and re-sending
+//! REGISTER (same id, dimension and family); rejoins are admitted in
+//! [`ClientPool::prepare_round`] and reported through
+//! [`ClientPool::take_rejoined`] so the FedNL-PP driver can resync the
+//! client via the existing STATE pull.
 
 use std::collections::VecDeque;
-use std::net::TcpListener;
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -23,16 +45,28 @@ use crate::coordinator::{ClientFamily, ClientPool};
 
 /// Master-side handle to n connected remote clients.
 pub struct RemotePool {
-    /// Channels indexed by registered client id.
-    channels: Vec<Channel>,
+    /// Channels indexed by registered client id (`None` = deregistered).
+    channels: Vec<Option<Channel>>,
+    /// Kept open after the initial accept so deregistered ids can
+    /// rejoin; non-blocking (polled in `prepare_round`).
+    listener: Option<TcpListener>,
     /// Algorithm family all clients declared at registration (pools
-    /// are family-homogeneous; enforced during accept).
+    /// are family-homogeneous; enforced during accept and rejoin).
     family: ClientFamily,
     d: usize,
     alpha: f64,
     /// Client ids of the round in flight, in subset order; replies are
     /// read (and surfaced to `drain`) in this order.
     pending: VecDeque<u32>,
+    /// Participants of the round in flight certified lost.
+    missing: Vec<u32>,
+    /// Ids re-admitted by `prepare_round` since the last take.
+    rejoined: Vec<u32>,
+    /// Per-client reply deadline for the round exchange.
+    deadline: Option<Duration>,
+    /// Byte counters of retired channels, so `transport_bytes` stays
+    /// cumulative across deregistrations. (received, sent).
+    retired_bytes: (u64, u64),
 }
 
 /// A bound-but-not-yet-populated master socket; lets callers learn the
@@ -104,27 +138,148 @@ impl RemotePool {
                      registered as {prev:?}: pools are family-homogeneous"
                 ),
             }
-            channels.push(ch);
+            channels.push(Some(ch));
         }
+        // Keep listening so deregistered ids can rejoin; polled
+        // non-blocking between rounds.
+        listener
+            .set_nonblocking(true)
+            .context("set_nonblocking on retained listener")?;
         Ok(Self {
             channels,
+            listener: Some(listener),
             family: family.unwrap(),
             d,
             alpha: 0.0,
             pending: VecDeque::new(),
+            missing: Vec::new(),
+            rejoined: Vec::new(),
+            deadline: None,
+            retired_bytes: (0, 0),
         })
     }
 
-    fn broadcast(&mut self, tag: u8, payload: &[u8]) -> Result<()> {
-        for ch in &mut self.channels {
-            ch.send(tag, payload)?;
+    /// Retire a client's channel (folding its byte counters into the
+    /// cumulative totals). The id may rejoin later.
+    fn deregister(&mut self, ci: usize) {
+        if let Some(ch) = self.channels[ci].take() {
+            self.retired_bytes.0 += ch.bytes_received;
+            self.retired_bytes.1 += ch.bytes_sent;
         }
-        Ok(())
     }
 
-    /// Politely shut all clients down.
+    /// Admit pending re-registrations of dead ids (non-blocking accept;
+    /// each admission handshake is individually bounded). Capped at one
+    /// accept per client slot per poll so a reconnect-looping peer
+    /// cannot stall the training loop inside `prepare_round`.
+    fn poll_rejoins(&mut self) {
+        for _ in 0..self.channels.len() {
+            // Borrow the listener only for the accept itself so the
+            // admission below can take `&mut self`.
+            let accepted = match &self.listener {
+                Some(l) => l.accept(),
+                None => return,
+            };
+            match accepted {
+                Ok((stream, _)) => {
+                    if let Some(id) = self.admit_rejoin(stream) {
+                        self.rejoined.push(id as u32);
+                    }
+                }
+                Err(_) => break, // WouldBlock (or transient error): done
+            }
+        }
+    }
+
+    /// Validate one reconnecting client; returns its id if admitted.
+    /// A malformed or conflicting registration drops the connection.
+    fn admit_rejoin(&mut self, stream: TcpStream) -> Option<usize> {
+        // The accepted socket may inherit the listener's non-blocking
+        // mode on some platforms; the handshake below is blocking but
+        // **bounded**: a stray connection that never completes REGISTER
+        // (port scan, health check, crashed client) must not hang the
+        // master inside `prepare_round`.
+        stream.set_nonblocking(false).ok()?;
+        let handshake = self.deadline.unwrap_or(Duration::from_secs(1));
+        stream.set_read_timeout(Some(handshake)).ok()?;
+        let mut ch = Channel::new(stream).ok()?;
+        let (tag, payload) = ch.recv().ok()?;
+        if tag != c2s::REGISTER {
+            return None;
+        }
+        let (id, dim, family) = wire::decode_register(&payload).ok()?;
+        let id = id as usize;
+        let family = match family {
+            wire::FAMILY_FEDNL => ClientFamily::FedNL,
+            _ => ClientFamily::PP,
+        };
+        let admissible = id < self.channels.len()
+            && self.channels[id].is_none()
+            && dim as usize == self.d
+            && family == self.family;
+        if !admissible {
+            return None;
+        }
+        // Resync the Hessian learning rate: a fresh-state rejoiner
+        // would otherwise run with its own default α while the master
+        // aggregates under the negotiated one. (Its Hᵢ cannot be
+        // resynced over the wire — see the ROADMAP known-limits note.)
+        if self.alpha > 0.0 {
+            let sent = ch
+                .send(s2c::SET_ALPHA, &wire::encode_scalar(self.alpha))
+                .is_ok();
+            let acked =
+                sent && matches!(ch.recv(), Ok((tag, _)) if tag == c2s::ACK);
+            if !acked {
+                return None;
+            }
+        }
+        self.channels[id] = Some(ch);
+        Some(id)
+    }
+
+    /// Send one command to every live client; returns the ids actually
+    /// sent (send failures deregister). The shared scaffolding of the
+    /// probe reductions.
+    fn ask_all(&mut self, tag: u8, payload: &[u8]) -> Vec<usize> {
+        let n = self.channels.len();
+        let mut asked = Vec::with_capacity(n);
+        for ci in 0..n {
+            if let Some(ch) = self.channels[ci].as_mut() {
+                match ch.send(tag, payload) {
+                    Ok(()) => asked.push(ci),
+                    Err(_) => self.deregister(ci),
+                }
+            }
+        }
+        asked
+    }
+
+    /// Blocking receive on one channel expecting `want` (the reply tag
+    /// of a reduction probe). On any failure — EOF, protocol
+    /// violation, a DEREGISTER announcement — the client is
+    /// deregistered and `None` returned so the reduction proceeds over
+    /// the survivors. The round-reply deadline deliberately does NOT
+    /// apply here: probes like WARM_START legitimately take longer
+    /// than a round reply (the full d(d+1)/2 Hessian), and
+    /// `RoundPolicy::deadline_ms` is scoped to the round exchange.
+    fn recv_expect(&mut self, ci: usize, want: u8) -> Option<Vec<u8>> {
+        let ch = self.channels[ci].as_mut()?;
+        let _ = ch.set_read_timeout(None);
+        match ch.recv() {
+            Ok((tag, payload)) if tag == want => Some(payload),
+            _ => {
+                self.deregister(ci);
+                None
+            }
+        }
+    }
+
+    /// Politely shut all (live) clients down.
     pub fn shutdown(&mut self) {
-        let _ = self.broadcast(s2c::SHUTDOWN, &[]);
+        for ch in self.channels.iter_mut().flatten() {
+            let _ = ch.send(s2c::SHUTDOWN, &[]);
+        }
     }
 }
 
@@ -158,18 +313,44 @@ impl ClientPool for RemotePool {
 
     fn set_alpha(&mut self, alpha: f64) {
         let payload = wire::encode_scalar(alpha);
-        for ch in &mut self.channels {
-            ch.send(s2c::SET_ALPHA, &payload).expect("set_alpha send");
-        }
+        let asked = self.ask_all(s2c::SET_ALPHA, &payload);
         let mut resolved = alpha;
-        for ch in &mut self.channels {
-            let (tag, p) = ch.recv().expect("set_alpha ack");
-            assert_eq!(tag, c2s::ACK);
-            if let Ok(a) = wire::decode_scalar(&p) {
-                resolved = a; // clients echo the α they actually use
+        for ci in asked {
+            if let Some(p) = self.recv_expect(ci, c2s::ACK) {
+                if let Ok(a) = wire::decode_scalar(&p) {
+                    resolved = a; // clients echo the α they actually use
+                }
             }
         }
         self.alpha = resolved;
+    }
+
+    fn prepare_round(&mut self, _round: u64) {
+        self.poll_rejoins();
+    }
+
+    fn dead_clients(&self) -> Vec<u32> {
+        self.channels
+            .iter()
+            .enumerate()
+            .filter(|(_, ch)| ch.is_none())
+            .map(|(ci, _)| ci as u32)
+            .collect()
+    }
+
+    fn take_missing(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.missing)
+    }
+
+    fn take_rejoined(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.rejoined)
+    }
+
+    fn set_reply_deadline(&mut self, deadline: Option<Duration>) {
+        // TcpStream::set_read_timeout errors on a zero Duration (which
+        // would silently *disable* the deadline at the `let _ =` call
+        // sites); clamp to the strictest representable timeout instead.
+        self.deadline = deadline.map(|d| d.max(Duration::from_millis(1)));
     }
 
     fn submit_round(
@@ -184,21 +365,26 @@ impl ClientPool for RemotePool {
         // All sends complete before any receive: every participant
         // computes concurrently. (Family mismatches are caught by the
         // round engine against `self.family`, which the clients
-        // declared at registration.)
-        match subset {
+        // declared at registration.) A dead participant — or one whose
+        // send fails right here — is certified missing instead of sent.
+        let all: Vec<u32>;
+        let participants: &[u32] = match subset {
+            Some(s) => s,
             None => {
-                for (ci, ch) in self.channels.iter_mut().enumerate() {
-                    ch.send(s2c::ROUND, &payload).expect("round send");
-                    self.pending.push_back(ci as u32);
-                }
+                all = (0..self.channels.len() as u32).collect();
+                &all
             }
-            Some(s) => {
-                for &ci in s {
-                    self.channels[ci as usize]
-                        .send(s2c::ROUND, &payload)
-                        .expect("round send");
-                    self.pending.push_back(ci);
-                }
+        };
+        for &ci in participants {
+            match self.channels[ci as usize].as_mut() {
+                Some(ch) => match ch.send(s2c::ROUND, &payload) {
+                    Ok(()) => self.pending.push_back(ci),
+                    Err(_) => {
+                        self.deregister(ci as usize);
+                        self.missing.push(ci);
+                    }
+                },
+                None => self.missing.push(ci),
             }
         }
     }
@@ -207,84 +393,155 @@ impl ClientPool for RemotePool {
         // One decoded reply per call, in subset order: while the caller
         // aggregates this message, the remaining clients keep computing
         // and their frames accumulate in the kernel socket buffers, so
-        // the next recv rarely blocks on a non-straggler.
-        match self.pending.pop_front() {
-            None => Vec::new(),
-            Some(ci) => {
-                let (tag, p) =
-                    self.channels[ci as usize].recv().expect("round reply");
-                assert_eq!(tag, c2s::MSG);
-                let m =
-                    wire::decode_client_msg(&p).expect("decode client msg");
-                // A reply must identify as the client whose channel it
-                // came over — fail at the culprit, not later at the
-                // commit buffer under an innocent client's id.
-                assert_eq!(
-                    m.client_id, ci as usize,
-                    "client on channel {ci} replied with id {}",
-                    m.client_id
-                );
-                vec![m]
+        // the next recv rarely blocks on a non-straggler. A reply that
+        // misses the deadline, a closed connection or a DEREGISTER
+        // announcement retires the client and certifies it missing;
+        // the empty batch still means "round closed".
+        while let Some(ci) = self.pending.pop_front() {
+            let Some(ch) = self.channels[ci as usize].as_mut() else {
+                self.missing.push(ci);
+                continue;
+            };
+            let _ = ch.set_read_timeout(self.deadline);
+            match ch.recv() {
+                Ok((tag, p)) if tag == c2s::MSG => {
+                    let m = wire::decode_client_msg(&p)
+                        .expect("decode client msg");
+                    // A reply must identify as the client whose channel
+                    // it came over — fail at the culprit, not later at
+                    // the commit buffer under an innocent client's id.
+                    assert_eq!(
+                        m.client_id, ci as usize,
+                        "client on channel {ci} replied with id {}",
+                        m.client_id
+                    );
+                    return vec![m];
+                }
+                Ok(_) => {
+                    // DEREGISTER (graceful leave) — or a protocol
+                    // violation, which retires the channel the same way
+                    // (never a panic: this is network-facing input).
+                    self.deregister(ci as usize);
+                    self.missing.push(ci);
+                }
+                Err(_) => {
+                    // Reply deadline missed, or the connection died.
+                    self.deregister(ci as usize);
+                    self.missing.push(ci);
+                }
             }
         }
+        Vec::new()
     }
 
     fn eval_loss(&mut self, x: &[f64]) -> f64 {
         let payload = wire::encode_vec(x);
-        self.broadcast(s2c::EVAL_LOSS, &payload).expect("eval broadcast");
+        let asked = self.ask_all(s2c::EVAL_LOSS, &payload);
         let mut sum = 0.0;
-        for ch in &mut self.channels {
-            let (tag, p) = ch.recv().expect("eval reply");
-            assert_eq!(tag, c2s::LOSS);
-            sum += wire::decode_scalar(&p).expect("loss");
+        let mut count = 0usize;
+        for ci in asked {
+            if let Some(p) = self.recv_expect(ci, c2s::LOSS) {
+                sum += wire::decode_scalar(&p).expect("loss");
+                count += 1;
+            }
         }
-        sum / self.channels.len() as f64
+        assert!(count > 0, "eval_loss: no live clients");
+        sum / count as f64
     }
 
     fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
         let payload = wire::encode_vec(x);
-        self.broadcast(s2c::LOSS_GRAD, &payload).expect("grad broadcast");
-        let inv_n = 1.0 / self.channels.len() as f64;
+        let asked = self.ask_all(s2c::LOSS_GRAD, &payload);
+        let mut parts: Vec<(f64, Vec<f64>)> = Vec::with_capacity(asked.len());
+        for ci in asked {
+            if let Some(p) = self.recv_expect(ci, c2s::GRAD) {
+                parts.push(wire::decode_loss_grad(&p).expect("grad decode"));
+            }
+        }
+        assert!(!parts.is_empty(), "loss_grad: no live clients");
+        let inv = 1.0 / parts.len() as f64;
         let mut loss = 0.0;
         let mut g = vec![0.0; x.len()];
-        for ch in &mut self.channels {
-            let (tag, p) = ch.recv().expect("grad reply");
-            assert_eq!(tag, c2s::GRAD);
-            let (l, gi) = wire::decode_loss_grad(&p).expect("grad decode");
+        for (l, gi) in &parts {
             loss += l;
-            crate::linalg::vector::axpy(inv_n, &gi, &mut g);
+            crate::linalg::vector::axpy(inv, gi, &mut g);
         }
-        (loss * inv_n, g)
+        (loss * inv, g)
     }
 
     fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {
         let payload = wire::encode_vec(x);
-        self.broadcast(s2c::WARM_START, &payload).expect("warm broadcast");
-        self.channels
-            .iter_mut()
-            .map(|ch| {
-                let (tag, p) = ch.recv().expect("warm reply");
-                assert_eq!(tag, c2s::WARM);
-                wire::decode_vec(&p).expect("warm decode")
-            })
-            .collect()
+        let asked = self.ask_all(s2c::WARM_START, &payload);
+        let mut packs = Vec::with_capacity(asked.len());
+        for ci in asked {
+            if let Some(p) = self.recv_expect(ci, c2s::WARM) {
+                packs.push(wire::decode_vec(&p).expect("warm decode"));
+            }
+        }
+        packs
     }
 
     fn init_state(&mut self) -> Vec<(f64, Vec<f64>)> {
-        self.broadcast(s2c::STATE, &[]).expect("state broadcast");
+        // The PP bootstrap needs every client's (lᵢ, gᵢ): the engine
+        // indexes the result by client id.
+        assert!(
+            self.channels.iter().all(|c| c.is_some()),
+            "init_state requires all clients registered"
+        );
+        for ch in self.channels.iter_mut().flatten() {
+            ch.send(s2c::STATE, &[]).expect("state broadcast");
+        }
         self.channels
             .iter_mut()
             .map(|ch| {
-                let (tag, p) = ch.recv().expect("state reply");
+                let (tag, p) =
+                    ch.as_mut().unwrap().recv().expect("state reply");
                 assert_eq!(tag, c2s::STATE);
                 wire::decode_loss_grad(&p).expect("state decode")
             })
             .collect()
     }
 
+    fn pull_state(&mut self, client: u32) -> Option<(f64, Vec<f64>)> {
+        // A rejoiner that dies (or stalls) again before answering the
+        // pull is re-deregistered and skipped — the resync must not
+        // take down the run the fault layer is protecting. The recv is
+        // bounded even without a configured deadline.
+        let ci = client as usize;
+        {
+            let ch = self.channels[ci].as_mut()?;
+            let timeout = self.deadline.or(Some(Duration::from_secs(5)));
+            let _ = ch.set_read_timeout(timeout);
+            if ch.send(s2c::STATE, &[]).is_ok() {
+                if let Ok((tag, p)) = ch.recv() {
+                    if tag == c2s::STATE {
+                        return Some(
+                            wire::decode_loss_grad(&p)
+                                .expect("state pull decode"),
+                        );
+                    }
+                }
+            }
+        }
+        self.deregister(ci);
+        None
+    }
+
     fn transport_bytes(&self) -> Option<(u64, u64)> {
-        let up = self.channels.iter().map(|c| c.bytes_received).sum();
-        let down = self.channels.iter().map(|c| c.bytes_sent).sum();
+        let up = self.retired_bytes.0
+            + self
+                .channels
+                .iter()
+                .flatten()
+                .map(|c| c.bytes_received)
+                .sum::<u64>();
+        let down = self.retired_bytes.1
+            + self
+                .channels
+                .iter()
+                .flatten()
+                .map(|c| c.bytes_sent)
+                .sum::<u64>();
         Some((up, down))
     }
 }

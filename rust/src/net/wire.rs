@@ -24,11 +24,23 @@
 //! | c2s | `ACK`       15 | f64                        |                |
 //! | c2s | `GRAD`      16 | (f, ∇f)                    |                |
 //! | c2s | `STATE`     17 | (lᵢ, gᵢ)                   |                |
+//! | c2s | `DEREGISTER`18 | —                          | —              |
 //!
 //! A FedNL client answers `ROUND` with its Alg. 1 message; a PP client
 //! answers the *same* tag with its Alg. 3 participation deltas — both
 //! travel as the unified [`ClientMsg`] codec. The retired PP-specific
 //! tags (`PP_ROUND` = 4, `PP_MSG` = 14) are left unassigned.
+//!
+//! # Liveness (fault-tolerant rounds)
+//!
+//! `DEREGISTER` announces a graceful leave: the master retires the
+//! connection and certifies the client missing for the round in
+//! flight; an abrupt EOF or a reply that misses the master's deadline
+//! has the same effect. **Rejoin** reuses `REGISTER`: a deregistered
+//! id reconnects and re-registers (same id, d and family) on the
+//! master's retained listener; under FedNL-PP the master then resyncs
+//! the client's server-tracked (lᵢ, gᵢ) through the existing `STATE`
+//! pull on the fresh channel. No rejoin-specific tags exist.
 //!
 //! # Byte accounting
 //!
@@ -71,6 +83,9 @@ pub mod c2s {
     pub const GRAD: u8 = 16;
     /// (lᵢ, gᵢ) reply to STATE (same codec as GRAD).
     pub const STATE: u8 = 17;
+    /// Graceful leave announcement (empty payload); rejoin reuses
+    /// REGISTER on the master's retained listener.
+    pub const DEREGISTER: u8 = 18;
 }
 
 // --- exact frame sizes ----------------------------------------------------

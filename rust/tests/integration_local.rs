@@ -3,10 +3,13 @@
 
 use fednl::algorithms::{
     run_fednl, run_fednl_ls, run_fednl_pool, run_fednl_pp, run_fednl_pp_pool,
-    ClientState, LineSearchParams, Options, PPClientState, UpdateRule,
+    ClientState, LineSearchParams, OnMissing, Options, PPClientState,
+    RoundPolicy, UpdateRule,
 };
 use fednl::compressors::{by_name, ALL_NAMES};
-use fednl::coordinator::{ClientPool, SeqPool, ThreadedPool};
+use fednl::coordinator::{
+    ClientPool, FaultPlan, FaultPool, SeqPool, ThreadedPool,
+};
 use fednl::data::{
     generate_synthetic, parse_libsvm_bytes, write_libsvm, Dataset, SynthSpec,
 };
@@ -335,6 +338,221 @@ fn straggler_reply_order_does_not_change_trajectory() {
         assert_eq!(a.grad_norm, b.grad_norm, "round {}", a.round);
         assert_eq!(a.loss, b.loss);
         assert_eq!(a.bytes_up, b.bytes_up);
+    }
+}
+
+#[test]
+fn fednl_quorum_drop_bit_identical_across_pools() {
+    // One client killed for a window and one one-round drop: under the
+    // Drop policy the engine rescales ∇f/lᵏ to the survivors. The same
+    // plan must produce bit-identical trajectories (and identical
+    // committed/missing accounting) on SeqPool and ThreadedPool.
+    let (ds, d) = problem(9, 5, 40, 120);
+    let plan = FaultPlan::parse("kill@3:1-9,drop@11:4").unwrap();
+    let opts = Options {
+        rounds: 40,
+        track_loss: true,
+        policy: RoundPolicy {
+            quorum: Some(3),
+            deadline_ms: None,
+            on_missing: OnMissing::Drop,
+        },
+        ..Default::default()
+    };
+    let mut seq = FaultPool::new(
+        SeqPool::new(clients(&ds, 5, "randseqk", 13)),
+        plan.clone(),
+    );
+    let t_seq = run_fednl_pool(&mut seq, &opts, vec![0.0; d], "fault-seq");
+    // The fault window actually engaged and healed.
+    let r3 = &t_seq.records[3];
+    assert_eq!((r3.committed, r3.missing), (4, 1), "kill window");
+    let r11 = &t_seq.records[11];
+    assert_eq!((r11.committed, r11.missing), (4, 1), "drop round");
+    let r15 = &t_seq.records[15];
+    assert_eq!((r15.committed, r15.missing), (5, 0), "post-rejoin");
+    for workers in [1usize, 2, 5] {
+        let mut thr = FaultPool::new(
+            ThreadedPool::new(clients(&ds, 5, "randseqk", 13), workers),
+            plan.clone(),
+        );
+        let t_thr =
+            run_fednl_pool(&mut thr, &opts, vec![0.0; d], "fault-thr");
+        assert_eq!(t_seq.records.len(), t_thr.records.len());
+        for (a, b) in t_seq.records.iter().zip(&t_thr.records) {
+            assert_eq!(
+                a.grad_norm.to_bits(),
+                b.grad_norm.to_bits(),
+                "workers={workers} round {}",
+                a.round
+            );
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.bytes_up, b.bytes_up);
+            assert_eq!((a.committed, a.missing), (b.committed, b.missing));
+        }
+    }
+    // Despite the losses the run still converges after the rejoin.
+    assert!(
+        t_seq.last_grad_norm() < 1e-6,
+        "no convergence under faults: {}",
+        t_seq.last_grad_norm()
+    );
+}
+
+#[test]
+fn fednl_reuse_replays_stale_contribution() {
+    // Under Reuse a frozen client's last committed message stands in:
+    // every round still commits n messages (no holes), and after the
+    // rejoin the run converges fully.
+    let (ds, d) = problem(8, 4, 40, 121);
+    let plan = FaultPlan::parse("kill@2:1-7").unwrap();
+    let opts = Options {
+        rounds: 50,
+        policy: RoundPolicy {
+            quorum: Some(2),
+            deadline_ms: None,
+            on_missing: OnMissing::Reuse,
+        },
+        ..Default::default()
+    };
+    let mut seq = FaultPool::new(
+        SeqPool::new(clients(&ds, 4, "topk", 17)),
+        plan.clone(),
+    );
+    let t_seq = run_fednl_pool(&mut seq, &opts, vec![0.0; d], "reuse-seq");
+    for r in &t_seq.records {
+        assert_eq!(r.committed, 4, "round {}: reuse must fill holes", r.round);
+        assert_eq!(r.missing, 0, "round {}", r.round);
+    }
+    assert!(t_seq.last_grad_norm() < 1e-6, "{}", t_seq.last_grad_norm());
+    // Bit-identical on the threaded pool.
+    let mut thr = FaultPool::new(
+        ThreadedPool::new(clients(&ds, 4, "topk", 17), 4),
+        plan,
+    );
+    let t_thr = run_fednl_pool(&mut thr, &opts, vec![0.0; d], "reuse-thr");
+    for (a, b) in t_seq.records.iter().zip(&t_thr.records) {
+        assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits());
+    }
+}
+
+#[test]
+fn pp_resample_avoids_dead_and_stays_bit_identical() {
+    // FedNL-PP with a client killed for a long window under Resample:
+    // the sampler never hands the dead client a slot, so no round
+    // loses a contribution, and the trajectories agree bitwise across
+    // pools. After the rejoin the client is resynced and the run
+    // converges fully.
+    let (ds, d) = problem(9, 6, 40, 122);
+    let x0 = vec![0.0; d];
+    let plan = FaultPlan::parse("kill@3:2-20").unwrap();
+    let opts = Options {
+        rounds: 80,
+        policy: RoundPolicy {
+            quorum: Some(2),
+            deadline_ms: None,
+            on_missing: OnMissing::Resample,
+        },
+        ..Default::default()
+    };
+    let (tau, seed) = (3usize, 55u64);
+    let mut seq = FaultPool::new(
+        SeqPool::new(pp_clients(&ds, 6, "topk", 5, &x0)),
+        plan.clone(),
+    );
+    let t_seq = run_fednl_pp_pool(
+        &mut seq,
+        &opts,
+        tau,
+        seed,
+        x0.clone(),
+        "pp-resample-seq",
+    );
+    for r in &t_seq.records {
+        assert_eq!(r.missing, 0, "round {}: resample left a hole", r.round);
+        assert_eq!(r.committed, tau as u32, "round {}", r.round);
+    }
+    assert!(t_seq.last_grad_norm() < 1e-5, "{}", t_seq.last_grad_norm());
+    for workers in [1usize, 3, 6] {
+        let mut thr = FaultPool::new(
+            ThreadedPool::new(pp_clients(&ds, 6, "topk", 5, &x0), workers),
+            plan.clone(),
+        );
+        let t_thr = run_fednl_pp_pool(
+            &mut thr,
+            &opts,
+            tau,
+            seed,
+            x0.clone(),
+            "pp-resample-thr",
+        );
+        for (a, b) in t_seq.records.iter().zip(&t_thr.records) {
+            assert_eq!(
+                a.grad_norm.to_bits(),
+                b.grad_norm.to_bits(),
+                "workers={workers} round {}",
+                a.round
+            );
+            assert_eq!(a.bytes_up, b.bytes_up);
+            assert_eq!((a.committed, a.missing), (b.committed, b.missing));
+        }
+    }
+}
+
+#[test]
+fn pp_kill_rejoin_resyncs_exactly() {
+    // A frozen-then-thawed PP client is resynced through the STATE
+    // pull; because its state never moved, the resync is a no-op and
+    // the post-rejoin run converges fully — bit-identically across
+    // pools (including the rejoin-round STATE-pull byte accounting).
+    let (ds, d) = problem(8, 5, 40, 123);
+    let x0 = vec![0.0; d];
+    let plan = FaultPlan::parse("kill@4:1-12").unwrap();
+    let opts = Options {
+        rounds: 80,
+        policy: RoundPolicy {
+            quorum: Some(1),
+            deadline_ms: None,
+            on_missing: OnMissing::Drop,
+        },
+        ..Default::default()
+    };
+    let (tau, seed) = (3usize, 77u64);
+    let mut seq = FaultPool::new(
+        SeqPool::new(pp_clients(&ds, 5, "randk", 9, &x0)),
+        plan.clone(),
+    );
+    let t_seq = run_fednl_pp_pool(
+        &mut seq,
+        &opts,
+        tau,
+        seed,
+        x0.clone(),
+        "pp-rejoin-seq",
+    );
+    assert!(
+        t_seq.records.iter().any(|r| r.missing > 0),
+        "kill window never engaged"
+    );
+    assert!(
+        t_seq
+            .records
+            .iter()
+            .filter(|r| r.round >= 12)
+            .all(|r| r.missing == 0),
+        "losses after the rejoin"
+    );
+    assert!(t_seq.last_grad_norm() < 1e-5, "{}", t_seq.last_grad_norm());
+    let mut thr = FaultPool::new(
+        ThreadedPool::new(pp_clients(&ds, 5, "randk", 9, &x0), 5),
+        plan,
+    );
+    let t_thr =
+        run_fednl_pp_pool(&mut thr, &opts, tau, seed, x0, "pp-rejoin-thr");
+    for (a, b) in t_seq.records.iter().zip(&t_thr.records) {
+        assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits());
+        assert_eq!(a.bytes_up, b.bytes_up);
+        assert_eq!(a.bytes_down, b.bytes_down);
     }
 }
 

@@ -5,16 +5,16 @@
 
 use fednl::algorithms::{
     run_fednl, run_fednl_ls_pool, run_fednl_pool, run_fednl_pp,
-    run_fednl_pp_pool, ClientState, LineSearchParams, Options,
-    PPClientState,
+    run_fednl_pp_pool, ClientState, LineSearchParams, OnMissing, Options,
+    PPClientState, RoundPolicy,
 };
 use fednl::compressors::by_name;
-use fednl::coordinator::ClientPool;
+use fednl::coordinator::{ClientPool, FaultPlan, FaultPool, SeqPool};
 use fednl::data::{generate_synthetic, Dataset, LibsvmSample, SynthSpec};
 use fednl::net::client::ClientMode;
-use fednl::net::run_client;
 use fednl::net::server::Bound;
 use fednl::net::wire;
+use fednl::net::{run_client, run_client_with, Channel, ClientOpts};
 use fednl::oracle::LogisticOracle;
 
 fn dataset(d_raw: usize, n: usize, seed: u64) -> Dataset {
@@ -272,6 +272,302 @@ fn transport_bytes_metered() {
     assert!(up > 0 && down > 0);
     assert!(up > down, "up {up} ≤ down {down}");
     assert_eq!(t.records.len(), 5);
+}
+
+fn pp_clients_for(
+    ds: &Dataset,
+    n: usize,
+    comp: &str,
+    x0: &[f64],
+) -> Vec<PPClientState> {
+    ds.split_even(n)
+        .unwrap()
+        .into_iter()
+        .map(|sh| {
+            let id = sh.client_id;
+            PPClientState::new(
+                id,
+                Box::new(LogisticOracle::new(sh, 1e-3)),
+                by_name(comp, ds.d, 8, 100 + id as u64).unwrap(),
+                None,
+                x0,
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn tcp_fault_plan_matches_in_process_bitwise() {
+    // The acceptance invariant: a FaultPlan with a mid-run kill+rejoin
+    // and injected stragglers, under quorum < n, produces bit-identical
+    // FedNL-PP trajectories on the in-process reference and the real
+    // TCP transport (both wrapped in the same master-side FaultPool).
+    let ds = dataset(7, 120, 31);
+    let d = ds.d;
+    const N: usize = 4;
+    let x0 = vec![0.0; d];
+    let plan =
+        FaultPlan::parse("kill@4:1-11,delay@2:0:20,delay@6:3:20,drop@13:2")
+            .unwrap();
+    let opts = Options {
+        rounds: 25,
+        policy: RoundPolicy {
+            quorum: Some(1),
+            deadline_ms: Some(2000),
+            on_missing: OnMissing::Drop,
+        },
+        ..Default::default()
+    };
+    let (tau, seed) = (3usize, 77u64);
+
+    let mut seq = FaultPool::new(
+        SeqPool::new(pp_clients_for(&ds, N, "topk", &x0)),
+        plan.clone(),
+    );
+    let t_seq = run_fednl_pp_pool(
+        &mut seq,
+        &opts,
+        tau,
+        seed,
+        x0.clone(),
+        "fault-seq",
+    );
+
+    let bound = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = bound.local_addr().unwrap().to_string();
+    let handles = spawn_clients(&ds, N, "topk", &addr, true);
+    let mut tcp = FaultPool::new(bound.accept(N).unwrap(), plan);
+    let t_tcp =
+        run_fednl_pp_pool(&mut tcp, &opts, tau, seed, x0, "fault-tcp");
+    tcp.into_inner().shutdown();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+
+    assert_eq!(t_seq.records.len(), t_tcp.records.len());
+    for (a, b) in t_seq.records.iter().zip(&t_tcp.records) {
+        assert_eq!(
+            a.grad_norm.to_bits(),
+            b.grad_norm.to_bits(),
+            "round {}",
+            a.round
+        );
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        // PP traces report logical byte counters on every transport.
+        assert_eq!(a.bytes_up, b.bytes_up);
+        assert_eq!(a.bytes_down, b.bytes_down);
+        assert_eq!((a.committed, a.missing), (b.committed, b.missing));
+    }
+    // The kill window engaged and healed after the rejoin.
+    assert!(t_seq.records.iter().any(|r| r.missing > 0));
+    // No scheduled faults after the drop at round 13.
+    assert!(t_seq
+        .records
+        .iter()
+        .filter(|r| r.round >= 14)
+        .all(|r| r.missing == 0));
+    let first = t_seq.records[0].grad_norm;
+    assert!(
+        t_seq.last_grad_norm() < first * 1e-2,
+        "{} -> {}",
+        first,
+        t_seq.last_grad_norm()
+    );
+}
+
+#[test]
+fn tcp_graceful_leave_then_rejoin() {
+    // Phase 1: client 2 serves two rounds, announces DEREGISTER and
+    // exits; under a quorum policy the master keeps training on the
+    // survivors. Phase 2: a replacement re-registers on the retained
+    // listener and full rounds resume.
+    let ds = dataset(6, 90, 32);
+    let d = ds.d;
+    const N: usize = 3;
+    let bound = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = bound.local_addr().unwrap().to_string();
+    let mut handles = Vec::new();
+    for shard in ds.split_even(N).unwrap() {
+        let addr = addr.clone();
+        let comp = by_name("identity", d, 8, 100 + shard.client_id as u64)
+            .unwrap();
+        handles.push(std::thread::spawn(move || {
+            let id = shard.client_id;
+            let oracle = Box::new(LogisticOracle::new(shard, 1e-3));
+            let opts = ClientOpts {
+                leave_after_rounds: if id == 2 { Some(2) } else { None },
+            };
+            run_client_with(
+                &addr,
+                id,
+                ClientMode::FedNL(ClientState::new(id, oracle, comp, None)),
+                opts,
+            )
+        }));
+    }
+    let mut pool = bound.accept(N).unwrap();
+    let opts = Options {
+        rounds: 5,
+        policy: RoundPolicy {
+            quorum: Some(1),
+            deadline_ms: None,
+            on_missing: OnMissing::Drop,
+        },
+        ..Default::default()
+    };
+    let t1 = run_fednl_pool(&mut pool, &opts, vec![0.0; d], "leave");
+    assert_eq!(t1.records[0].committed, 3);
+    assert_eq!(t1.records[1].committed, 3);
+    for r in &t1.records[2..] {
+        assert_eq!(
+            (r.committed, r.missing),
+            (2, 1),
+            "round {} after the leave",
+            r.round
+        );
+    }
+    assert_eq!(pool.dead_clients(), vec![2]);
+
+    // Replacement client for id 2 (fresh state) re-registers.
+    let sh = ds.split_even(N).unwrap().remove(2);
+    let comp = by_name("identity", d, 8, 102).unwrap();
+    let addr2 = addr.clone();
+    handles.push(std::thread::spawn(move || {
+        let oracle = Box::new(LogisticOracle::new(sh, 1e-3));
+        run_client(
+            &addr2,
+            2,
+            ClientMode::FedNL(ClientState::new(2, oracle, comp, None)),
+        )
+    }));
+    // Wait until the retained listener admits it (polled per round).
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        pool.prepare_round(0);
+        if pool.dead_clients().is_empty() {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "rejoin was never admitted"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert_eq!(pool.take_rejoined(), vec![2]);
+
+    // Phase 2: full rounds again (mechanics — every round commits 3).
+    let t2 = run_fednl_pool(&mut pool, &opts, vec![0.0; d], "rejoined");
+    for r in &t2.records {
+        assert_eq!((r.committed, r.missing), (3, 0), "round {}", r.round);
+    }
+    assert!(t2.last_grad_norm().is_finite());
+    pool.shutdown();
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+#[test]
+fn tcp_reply_deadline_deregisters_straggler() {
+    // A hand-rolled client that sleeps far beyond the reply deadline:
+    // the master deregisters it on the first round and keeps training
+    // on the survivors (quorum policy), never blocking on it again.
+    use fednl::net::wire::{c2s, s2c};
+    let ds = dataset(6, 90, 33);
+    let d = ds.d;
+    const N: usize = 3;
+    let bound = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = bound.local_addr().unwrap().to_string();
+    let mut handles = Vec::new();
+    // Two well-behaved clients.
+    for shard in ds.split_even(N).unwrap().into_iter().take(2) {
+        let addr = addr.clone();
+        let comp =
+            by_name("identity", d, 8, 100 + shard.client_id as u64).unwrap();
+        handles.push(std::thread::spawn(move || {
+            let id = shard.client_id;
+            let oracle = Box::new(LogisticOracle::new(shard, 1e-3));
+            let _ = run_client(
+                &addr,
+                id,
+                ClientMode::FedNL(ClientState::new(id, oracle, comp, None)),
+            );
+        }));
+    }
+    // The straggler: answers the handshake promptly, then sleeps 2 s
+    // before every round reply.
+    {
+        let sh = ds.split_even(N).unwrap().remove(2);
+        let comp = by_name("identity", d, 8, 102).unwrap();
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut state =
+                ClientState::new(2, Box::new(LogisticOracle::new(sh, 1e-3)), comp, None);
+            let stream = std::net::TcpStream::connect(&addr).unwrap();
+            let mut ch = Channel::new(stream).unwrap();
+            ch.send(
+                c2s::REGISTER,
+                &wire::encode_register(2, d as u32, wire::FAMILY_FEDNL),
+            )
+            .unwrap();
+            loop {
+                let Ok((tag, p)) = ch.recv() else { break };
+                match tag {
+                    s2c::ROUND => {
+                        let (x, round, need_loss) =
+                            wire::decode_round(&p).unwrap();
+                        std::thread::sleep(
+                            std::time::Duration::from_millis(2000),
+                        );
+                        let m = state.round(&x, round, need_loss);
+                        if ch
+                            .send(c2s::MSG, &wire::encode_client_msg(&m))
+                            .is_err()
+                        {
+                            break;
+                        }
+                    }
+                    s2c::SET_ALPHA => {
+                        let a = wire::decode_scalar(&p).unwrap();
+                        if a.is_finite() && a > 0.0 {
+                            state.alpha = a;
+                        }
+                        if ch
+                            .send(c2s::ACK, &wire::encode_scalar(state.alpha))
+                            .is_err()
+                        {
+                            break;
+                        }
+                    }
+                    _ => break,
+                }
+            }
+        }));
+    }
+    let mut pool = bound.accept(N).unwrap();
+    let opts = Options {
+        rounds: 4,
+        policy: RoundPolicy {
+            quorum: Some(2),
+            deadline_ms: Some(400),
+            on_missing: OnMissing::Drop,
+        },
+        ..Default::default()
+    };
+    let sw = std::time::Instant::now();
+    let t = run_fednl_pool(&mut pool, &opts, vec![0.0; d], "deadline");
+    // Round 0 paid the deadline once; later rounds skip the dead
+    // client at submit time (no per-round 400 ms stall).
+    assert!(sw.elapsed() < std::time::Duration::from_secs(5));
+    assert_eq!((t.records[0].committed, t.records[0].missing), (2, 1));
+    for r in &t.records[1..] {
+        assert_eq!((r.committed, r.missing), (2, 1), "round {}", r.round);
+    }
+    assert_eq!(pool.dead_clients(), vec![2]);
+    pool.shutdown();
+    for h in handles {
+        let _ = h.join();
+    }
 }
 
 #[test]

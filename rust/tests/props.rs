@@ -256,3 +256,181 @@ fn prop_toplek_never_exceeds_k() {
         );
     }
 }
+
+// ---------------------------------------------------------------------
+// Fault-tolerant quorum rounds (coordinator::faults + engine policy).
+// ---------------------------------------------------------------------
+
+/// For any seeded FaultPlan, quorum-round FedNL-PP trajectories are
+/// bit-identical across SeqPool and ThreadedPool — wall clock never
+/// decides an outcome, only the (plan, round) schedule does.
+#[test]
+fn prop_fault_plans_bit_identical_across_pools() {
+    use fednl::algorithms::{
+        run_fednl_pp_pool, OnMissing, Options, PPClientState, RoundPolicy,
+    };
+    use fednl::coordinator::{FaultPlan, FaultPool, SeqPool, ThreadedPool};
+    use fednl::data::{generate_synthetic, Dataset, SynthSpec};
+    use fednl::oracle::LogisticOracle;
+
+    let n_clients = 5usize;
+    let rounds = 15u64;
+    let make_clients = |seed: u64, x0: &[f64], d: usize| -> Vec<PPClientState> {
+        let spec = SynthSpec {
+            d_raw: d - 1,
+            n_samples: n_clients * 30,
+            density: 0.6,
+            noise: 1.0,
+            seed,
+        };
+        let synth = generate_synthetic(&spec);
+        let samples: Vec<fednl::data::LibsvmSample> = synth
+            .labels
+            .iter()
+            .zip(&synth.rows)
+            .map(|(l, r)| fednl::data::LibsvmSample {
+                label: *l,
+                features: r.clone(),
+            })
+            .collect();
+        let ds = Dataset::from_libsvm(&samples, spec.d_raw);
+        ds.split_even(n_clients)
+            .unwrap()
+            .into_iter()
+            .enumerate()
+            .map(|(i, sh)| {
+                PPClientState::new(
+                    i,
+                    Box::new(LogisticOracle::new(sh, 1e-3)),
+                    fednl::compressors::by_name("topk", d, 2, 40 + i as u64)
+                        .unwrap(),
+                    None,
+                    x0,
+                )
+            })
+            .collect()
+    };
+
+    let mut rng = Pcg64::seed_from_u64(0xFA17);
+    for case in 0..6u64 {
+        let d = 8usize;
+        let x0 = vec![0.0; d];
+        // Random plan: one kill span, up to two drops.
+        let victim = rng.next_below(n_clients as u64) as u32;
+        let from = 1 + rng.next_below(rounds - 4);
+        let until = from + 2 + rng.next_below(rounds - from - 2);
+        let mut plan = FaultPlan::none().with_kill(victim, from, Some(until));
+        for _ in 0..rng.next_below(3) {
+            let r = rng.next_below(rounds);
+            let c = rng.next_below(n_clients as u64) as u32;
+            // At most one drop per round: together with the single
+            // kill span, at most two of the τ=3 picks can be lost in
+            // any round, so quorum 1 holds *structurally* for every
+            // generated plan (not just this seed).
+            if !plan.drops.iter().any(|&(pr, _)| pr == r) {
+                plan = plan.with_drop(r, c);
+            }
+        }
+        let on_missing = if case % 2 == 0 {
+            OnMissing::Drop
+        } else {
+            OnMissing::Resample
+        };
+        let opts = Options {
+            rounds,
+            policy: RoundPolicy {
+                quorum: Some(1),
+                deadline_ms: None,
+                on_missing,
+            },
+            ..Default::default()
+        };
+        // τ=3 of 5: even with the kill and both drops landing on one
+        // round, at least one participant commits (quorum 1 holds).
+        let (tau, seed) = (3usize, 900 + case);
+
+        let mut seq = FaultPool::new(
+            SeqPool::new(make_clients(70 + case, &x0, d)),
+            plan.clone(),
+        );
+        let t_seq = run_fednl_pp_pool(
+            &mut seq,
+            &opts,
+            tau,
+            seed,
+            x0.clone(),
+            "prop-seq",
+        );
+        for workers in [2usize, 5] {
+            let mut thr = FaultPool::new(
+                ThreadedPool::new(make_clients(70 + case, &x0, d), workers),
+                plan.clone(),
+            );
+            let t_thr = run_fednl_pp_pool(
+                &mut thr,
+                &opts,
+                tau,
+                seed,
+                x0.clone(),
+                "prop-thr",
+            );
+            assert_eq!(t_seq.records.len(), t_thr.records.len());
+            for (a, b) in t_seq.records.iter().zip(&t_thr.records) {
+                assert!(
+                    a.grad_norm.to_bits() == b.grad_norm.to_bits()
+                        && a.bytes_up == b.bytes_up
+                        && a.committed == b.committed
+                        && a.missing == b.missing,
+                    "case {case} ({plan:?}, {on_missing:?}) workers={workers} \
+                     diverged at round {}",
+                    a.round
+                );
+            }
+        }
+    }
+}
+
+/// The Resample policy never hands a participation slot to a dead
+/// client (and a fortiori never selects one twice in a round), for any
+/// seed and any dead set, while keeping selections distinct and the
+/// subset size maximal given the live population.
+#[test]
+fn prop_resample_never_selects_dead() {
+    use fednl::algorithms::{select_pp_subset, OnMissing};
+    let mut rng = Pcg64::seed_from_u64(0xDEAD5EED);
+    for case in 0..300u64 {
+        let n = 2 + rng.next_below(12) as usize;
+        let tau = 1 + rng.next_below(n as u64) as usize;
+        let n_dead = rng.next_below(n as u64) as usize;
+        let mut dead: Vec<u32> = (0..n as u32).collect();
+        fednl::rng::shuffle(&mut rng, &mut dead);
+        dead.truncate(n_dead);
+        let mut draw = Pcg64::seed_from_u64(1000 + case);
+        let sel =
+            select_pp_subset(&mut draw, n, tau, &dead, OnMissing::Resample);
+        // No dead client ever selected.
+        for c in &sel {
+            assert!(
+                !dead.contains(c),
+                "case {case}: dead client {c} selected (dead={dead:?})"
+            );
+        }
+        // All distinct (no client — dead or live — selected twice).
+        let mut sorted = sel.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), sel.len(), "case {case}: duplicates");
+        // Maximal given the live population.
+        let live = n - n_dead;
+        assert_eq!(
+            sel.len(),
+            tau.min(live),
+            "case {case}: n={n} tau={tau} dead={n_dead}"
+        );
+        // Deterministic in the seed.
+        let mut draw2 = Pcg64::seed_from_u64(1000 + case);
+        let sel2 =
+            select_pp_subset(&mut draw2, n, tau, &dead, OnMissing::Resample);
+        assert_eq!(sel, sel2, "case {case}: not seed-deterministic");
+    }
+}
