@@ -7,6 +7,8 @@ threshold:
 
 * ``BENCH_kernels.json``      — per-kernel ``simd_ns``   (key: name, n)
 * ``BENCH_coordinator.json``  — per-pool   ``total_s``   (key: pool)
+* ``BENCH_shard.json``        — per-config ``total_s``   (key: key,
+  e.g. ``S=2/seq`` — one entry per shard-count/pool combination)
 
 Usage:
     check_bench.py FRESH BASELINE          # gate (exit 1 on regression)
@@ -44,7 +46,14 @@ def extract(doc):
         for p in doc["pools"]:
             rows[p["pool"]] = float(p["total_s"])
         return "coordinator/total_s", rows
-    raise SystemExit("unrecognized bench JSON: no 'kernels' or 'pools' key")
+    if "configs" in doc:
+        rows = {}
+        for c in doc["configs"]:
+            rows[c["key"]] = float(c["total_s"])
+        return "shard/total_s", rows
+    raise SystemExit(
+        "unrecognized bench JSON: no 'kernels', 'pools' or 'configs' key"
+    )
 
 
 def compare(fresh, base, thresh):
@@ -131,6 +140,19 @@ def self_test():
         0.25,
     )
     assert len(reg) == 1 and "axpy[n=4096]" in reg[0], reg
+
+    # Shard-tier schema: per-config total_s, keyed by "S=N/pool".
+    sbase = {"configs": [{"key": "S=1/seq", "shards": 1, "total_s": 1.0},
+                         {"key": "S=2/seq", "shards": 2, "total_s": 0.8}]}
+    sslow = {"configs": [{"key": "S=1/seq", "shards": 1, "total_s": 1.0},
+                         {"key": "S=2/seq", "shards": 2, "total_s": 1.1}]}
+    reg, _ = compare(sslow, sbase, 0.25)
+    assert len(reg) == 1 and "S=2/seq" in reg[0], reg
+    reg, _ = compare(sbase, sbase, 0.25)
+    assert reg == [], reg
+    # A vanished config fails the gate (schema drift).
+    reg, _ = compare({"configs": []}, sbase, 0.25)
+    assert len(reg) == 2, reg
     print("check_bench.py self-test OK")
 
 

@@ -7,7 +7,10 @@
 //! against its portable scalar fallback; with `--bench-json` the
 //! per-kernel timings are written to `BENCH_kernels.json` (see
 //! ROADMAP.md for the schema) so the perf trajectory is tracked across
-//! PRs.
+//! PRs. The `coordinator` and `shard` sections emit
+//! `BENCH_coordinator.json` / `BENCH_shard.json` the same way (the
+//! master's wait-vs-aggregate wall-clock split, flat and through the
+//! sharded aggregation tier).
 
 use fednl::compressors::{by_name, ALL_NAMES};
 use fednl::data::ClientShard;
@@ -394,6 +397,159 @@ fn main() {
                 ),
                 Err(e) => {
                     eprintln!("failed to write BENCH_coordinator.json: {e}")
+                }
+            }
+        }
+    }
+
+    if want("shard") {
+        // Sharded aggregation tier: wall-clock split of the same FedNL
+        // run at S=1 (flat) vs sharded S∈{2,3}, plus the per-shard
+        // wait/aggregate attribution. Emitted as BENCH_shard.json with
+        // --bench-json; `ci/check_bench.py` gates each config's
+        // total_s. Trajectories are bit-identical across configs (the
+        // tier's determinism invariant — asserted by the integration
+        // tests, spot-checked here).
+        use fednl::algorithms::{run_fednl_pool, ClientState, Options};
+        use fednl::coordinator::{SeqPool, ShardedPool, ShardStats};
+
+        let n_clients = 12;
+        let dd = 41;
+        let rounds = 30u64;
+        let make = || -> Vec<ClientState> {
+            (0..n_clients)
+                .map(|i| {
+                    let sh = random_shard(dd, 60, 300 + i as u64);
+                    ClientState::new(
+                        i,
+                        Box::new(LogisticOracle::new(sh, 1e-3)),
+                        by_name("topk", dd, 8, 700 + i as u64).unwrap(),
+                        None,
+                    )
+                })
+                .collect()
+        };
+        let opts = Options { rounds, track_loss: true, ..Default::default() };
+        struct ShardRun {
+            key: String,
+            shards: usize,
+            wait_s: f64,
+            aggregate_s: f64,
+            total_s: f64,
+            final_grad: f64,
+            per_shard: Vec<ShardStats>,
+        }
+        let mut runs: Vec<ShardRun> = Vec::new();
+        {
+            let mut pool = SeqPool::new(make());
+            let tr =
+                run_fednl_pool(&mut pool, &opts, vec![0.0; dd], "shard/S1");
+            runs.push(ShardRun {
+                key: "S=1/seq".into(),
+                shards: 1,
+                wait_s: tr.wait_secs,
+                aggregate_s: tr.aggregate_secs,
+                total_s: tr.total_elapsed(),
+                final_grad: tr.last_grad_norm(),
+                per_shard: Vec::new(),
+            });
+        }
+        for s in [2usize, 3] {
+            let mut pool = ShardedPool::new_seq(make(), s);
+            let tr = run_fednl_pool(
+                &mut pool,
+                &opts,
+                vec![0.0; dd],
+                &format!("shard/S{s}"),
+            );
+            runs.push(ShardRun {
+                key: format!("S={s}/seq"),
+                shards: s,
+                wait_s: tr.wait_secs,
+                aggregate_s: tr.aggregate_secs,
+                total_s: tr.total_elapsed(),
+                final_grad: tr.last_grad_norm(),
+                per_shard: pool.shard_stats().to_vec(),
+            });
+        }
+        {
+            let mut pool = ShardedPool::new_threaded(make(), 2, 0);
+            let tr = run_fednl_pool(
+                &mut pool,
+                &opts,
+                vec![0.0; dd],
+                "shard/S2thr",
+            );
+            runs.push(ShardRun {
+                key: "S=2/threaded".into(),
+                shards: 2,
+                wait_s: tr.wait_secs,
+                aggregate_s: tr.aggregate_secs,
+                total_s: tr.total_elapsed(),
+                final_grad: tr.last_grad_norm(),
+                per_shard: pool.shard_stats().to_vec(),
+            });
+        }
+        let g0 = runs[0].final_grad;
+        for r in &runs {
+            assert_eq!(
+                r.final_grad.to_bits(),
+                g0.to_bits(),
+                "{}: sharded trajectory diverged from flat",
+                r.key
+            );
+            println!(
+                "shard/{:<12} rounds={rounds}  wait {:>9.3}ms  aggregate {:>9.3}ms  total {:>9.3}ms",
+                r.key,
+                r.wait_s * 1e3,
+                r.aggregate_s * 1e3,
+                r.total_s * 1e3
+            );
+            for st in &r.per_shard {
+                println!(
+                    "  shard {} ({} clients): wait {:>9.3}ms  aggregate {:>9.3}ms  msgs {}",
+                    st.shard,
+                    st.clients,
+                    st.wait_s * 1e3,
+                    st.aggregate_s * 1e3,
+                    st.msgs
+                );
+            }
+        }
+        if json {
+            let mut s = String::from("{\n");
+            s.push_str(&format!(
+                "  \"rounds\": {rounds}, \"n_clients\": {n_clients}, \"d\": {dd}, \"cores\": {},\n",
+                fednl::utils::available_cores()
+            ));
+            s.push_str("  \"configs\": [\n");
+            for (i, r) in runs.iter().enumerate() {
+                s.push_str(&format!(
+                    "    {{\"key\": \"{}\", \"shards\": {}, \"wait_s\": {:.6}, \"aggregate_s\": {:.6}, \"total_s\": {:.6},\n",
+                    r.key, r.shards, r.wait_s, r.aggregate_s, r.total_s
+                ));
+                s.push_str("     \"per_shard\": [");
+                for (j, st) in r.per_shard.iter().enumerate() {
+                    s.push_str(&format!(
+                        "{}{{\"shard\": {}, \"clients\": {}, \"wait_s\": {:.6}, \"aggregate_s\": {:.6}, \"msgs\": {}}}",
+                        if j > 0 { ", " } else { "" },
+                        st.shard,
+                        st.clients,
+                        st.wait_s,
+                        st.aggregate_s,
+                        st.msgs
+                    ));
+                }
+                s.push_str("]}");
+                s.push_str(if i + 1 < runs.len() { ",\n" } else { "\n" });
+            }
+            s.push_str("  ]\n}\n");
+            match std::fs::write("BENCH_shard.json", s) {
+                Ok(()) => {
+                    println!("shard timings written to BENCH_shard.json")
+                }
+                Err(e) => {
+                    eprintln!("failed to write BENCH_shard.json: {e}")
                 }
             }
         }

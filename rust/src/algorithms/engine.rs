@@ -137,6 +137,54 @@ impl Default for RoundPolicy {
     }
 }
 
+impl RoundPolicy {
+    /// CLI-parse-time sanity checks, so an unsatisfiable policy fails
+    /// with a clear message *before* data loading and registration
+    /// instead of aborting (or hanging) mid-run:
+    ///
+    /// * `quorum` of 0, or larger than the client count, can never be
+    ///   met (the engine clamps per-round, but a CLI value above `n`
+    ///   is always a typo);
+    /// * a zero `deadline_ms` would make every reply late — "no
+    ///   deadline" is spelled by omitting the flag;
+    /// * an explicit `on_missing` policy on a remote (TCP) master
+    ///   without a reply deadline is inert against stragglers: a hung
+    ///   client that never closes its socket blocks the round forever
+    ///   before the policy can engage. (In-process pools and the fault
+    ///   injector certify losses without a clock, so `remote = false`
+    ///   skips this check.)
+    pub fn validate(
+        &self,
+        n_clients: usize,
+        remote: bool,
+        explicit_on_missing: bool,
+    ) -> anyhow::Result<()> {
+        if let Some(q) = self.quorum {
+            anyhow::ensure!(q >= 1, "--quorum must be at least 1");
+            anyhow::ensure!(
+                q <= n_clients,
+                "--quorum {q} exceeds the client count {n_clients}: the \
+                 quorum can never be met"
+            );
+        }
+        if let Some(ms) = self.deadline_ms {
+            anyhow::ensure!(
+                ms > 0,
+                "--deadline-ms 0 would declare every reply late; omit \
+                 the flag for 'no deadline'"
+            );
+        }
+        if remote && explicit_on_missing && self.deadline_ms.is_none() {
+            anyhow::bail!(
+                "--on-missing on a TCP master requires --deadline-ms: \
+                 without a reply deadline a hung client blocks the round \
+                 before the missing-policy can engage"
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Buffer-and-commit: replies may arrive in any order, but `commit`
 /// sees them in the round's subset order (ascending client id for a
 /// full round). Early arrivals wait in `pending`; participants
@@ -365,8 +413,18 @@ fn run_newton_family(
     let n = pool.n_clients();
     let rp = opts.policy;
     pool.set_reply_deadline(rp.deadline_ms.map(Duration::from_millis));
-    let alpha = opts.alpha.unwrap_or_else(|| pool.default_alpha());
-    pool.set_alpha(alpha);
+    // α negotiation: an explicit opts.alpha is installed everywhere; a
+    // transport that cannot know the theoretical α (TCP, relays) hands
+    // back NaN from default_alpha and set_alpha resolves the clients'
+    // own value — the server must aggregate with the α the clients
+    // actually use, on every topology (bit-identity across transports
+    // depends on it).
+    let requested = opts.alpha.unwrap_or_else(|| pool.default_alpha());
+    let alpha = pool.set_alpha(requested);
+    assert!(
+        alpha.is_finite() && alpha > 0.0,
+        "α negotiation failed: no client reported a usable α"
+    );
     let mut server = ServerState::new(d, n, alpha, x0);
     let mut trace = Trace::new(label.to_string());
     let sw = Stopwatch::start();
@@ -502,8 +560,13 @@ fn run_pp(
     let inv_n = 1.0 / n as f64;
     let rp = opts.policy;
     pool.set_reply_deadline(rp.deadline_ms.map(Duration::from_millis));
-    let alpha = opts.alpha.unwrap_or_else(|| pool.default_alpha());
-    pool.set_alpha(alpha);
+    // Same α negotiation as the Newton family (see run_newton_family).
+    let requested = opts.alpha.unwrap_or_else(|| pool.default_alpha());
+    let alpha = pool.set_alpha(requested);
+    assert!(
+        alpha.is_finite() && alpha > 0.0,
+        "α negotiation failed: no client reported a usable α"
+    );
     // Server init from client initials (line 2), H⁰ = 0.
     let mut h = Mat::zeros(d, d);
     let pu = PackedUpper::new(d);
@@ -863,6 +926,33 @@ mod tests {
         let mut buf = CommitBuffer::new(2, None);
         buf.offer(msg(0), |_| {});
         buf.offer(msg(0), |_| {});
+    }
+
+    #[test]
+    fn round_policy_validation() {
+        let ok = RoundPolicy {
+            quorum: Some(3),
+            deadline_ms: Some(500),
+            on_missing: OnMissing::Drop,
+        };
+        assert!(ok.validate(5, true, true).is_ok());
+        assert!(ok.validate(3, false, false).is_ok());
+        // Quorum above the client count, or zero, can never be met.
+        let q9 = RoundPolicy { quorum: Some(9), ..ok };
+        assert!(q9.validate(5, false, false).is_err());
+        let q0 = RoundPolicy { quorum: Some(0), ..ok };
+        assert!(q0.validate(5, false, false).is_err());
+        // A zero deadline declares every reply late.
+        let dl0 = RoundPolicy { deadline_ms: Some(0), ..ok };
+        assert!(dl0.validate(5, false, false).is_err());
+        // Explicit on-missing without a deadline: fatal only on the
+        // remote transport, where losses need a clock to be certified.
+        let no_dl = RoundPolicy { deadline_ms: None, ..ok };
+        assert!(no_dl.validate(5, true, true).is_err());
+        assert!(no_dl.validate(5, false, true).is_ok());
+        assert!(no_dl.validate(5, true, false).is_ok());
+        // The default policy is always valid.
+        assert!(RoundPolicy::default().validate(1, true, false).is_ok());
     }
 
     #[test]

@@ -132,6 +132,27 @@ impl FaultPlan {
         Ok(plan)
     }
 
+    /// Serialize back to the CLI schema parsed by [`FaultPlan::parse`]
+    /// (`parse(p.to_spec()) == p` for every plan; round-trip tested).
+    pub fn to_spec(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        for k in &self.kills {
+            match k.until {
+                Some(u) => {
+                    parts.push(format!("kill@{}:{}-{u}", k.from, k.client))
+                }
+                None => parts.push(format!("kill@{}:{}", k.from, k.client)),
+            }
+        }
+        for &(r, c) in &self.drops {
+            parts.push(format!("drop@{r}:{c}"));
+        }
+        for &(r, c, ms) in &self.delays {
+            parts.push(format!("delay@{r}:{c}:{ms}"));
+        }
+        parts.join(",")
+    }
+
     /// Builder: freeze `client` from `from` until `until` (exclusive).
     pub fn with_kill(mut self, client: u32, from: u64, until: Option<u64>) -> Self {
         self.kills.push(KillSpan {
@@ -256,8 +277,8 @@ impl<P: ClientPool> ClientPool for FaultPool<P> {
         self.inner.default_alpha()
     }
 
-    fn set_alpha(&mut self, alpha: f64) {
-        self.inner.set_alpha(alpha);
+    fn set_alpha(&mut self, alpha: f64) -> f64 {
+        self.inner.set_alpha(alpha)
     }
 
     fn prepare_round(&mut self, round: u64) {
@@ -343,12 +364,12 @@ impl<P: ClientPool> ClientPool for FaultPool<P> {
         out
     }
 
-    fn eval_loss(&mut self, x: &[f64]) -> f64 {
-        self.inner.eval_loss(x)
+    fn eval_loss_each(&mut self, x: &[f64]) -> Vec<(u32, f64)> {
+        self.inner.eval_loss_each(x)
     }
 
-    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
-        self.inner.loss_grad(x)
+    fn loss_grad_each(&mut self, x: &[f64]) -> Vec<(u32, f64, Vec<f64>)> {
+        self.inner.loss_grad_each(x)
     }
 
     fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {
@@ -392,6 +413,63 @@ mod tests {
         assert!(FaultPlan::parse("delay@1:2").is_err()); // missing ms
         assert!(FaultPlan::parse("drop12:0").is_err());
         assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_bad_ranges() {
+        // Degenerate and inverted kill windows.
+        assert!(FaultPlan::parse("kill@5:2-5").is_err()); // rejoin == kill
+        assert!(FaultPlan::parse("kill@9:0-3").is_err()); // rejoin < kill
+        // Well-formed boundary: rejoin exactly one round later is fine.
+        let p = FaultPlan::parse("kill@5:2-6").unwrap();
+        assert_eq!(p.kills[0].until, Some(6));
+        assert!(p.dead_at(2, 5) && !p.dead_at(2, 6));
+    }
+
+    #[test]
+    fn parse_rejects_negative_ids() {
+        // All fields are unsigned on the wire and in the schema; a
+        // leading minus must be a parse error, never a wrap-around.
+        assert!(FaultPlan::parse("kill@1:-2").is_err());
+        assert!(FaultPlan::parse("kill@-1:2").is_err());
+        assert!(FaultPlan::parse("drop@3:-1").is_err());
+        assert!(FaultPlan::parse("delay@2:-4:10").is_err());
+        assert!(FaultPlan::parse("delay@2:4:-10").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_junk_suffixes() {
+        assert!(FaultPlan::parse("drop@1:2x").is_err());
+        assert!(FaultPlan::parse("kill@1:2-3junk").is_err());
+        assert!(FaultPlan::parse("delay@1:2:3ms").is_err());
+        assert!(FaultPlan::parse("kill@1.5:2").is_err()); // float round
+        assert!(FaultPlan::parse("delay@1:2:3:4").is_err()); // extra field
+        // Stray separators around well-formed events stay accepted
+        // (empty segments are skipped), junk inside them is not.
+        assert!(FaultPlan::parse("drop@1:2,,").is_ok());
+        assert!(FaultPlan::parse("drop@1:2, drop@2:x").is_err());
+    }
+
+    #[test]
+    fn spec_round_trips_through_parser() {
+        let specs = [
+            "kill@6:1-18,drop@12:0,delay@3:2:25",
+            "kill@4:3",
+            "kill@0:0-1,kill@2:1,drop@0:0,drop@9:7,delay@1:0:0",
+            "",
+        ];
+        for spec in specs {
+            let plan = FaultPlan::parse(spec).unwrap();
+            let re = FaultPlan::parse(&plan.to_spec()).unwrap();
+            assert_eq!(plan, re, "spec '{spec}' did not round-trip");
+        }
+        // And builder → spec → parse reproduces the builder exactly.
+        let built = FaultPlan::none()
+            .with_kill(7, 1, None)
+            .with_kill(0, 3, Some(9))
+            .with_drop(2, 5)
+            .with_delay(4, 6, 125);
+        assert_eq!(FaultPlan::parse(&built.to_spec()).unwrap(), built);
     }
 
     #[test]

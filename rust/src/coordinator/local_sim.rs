@@ -23,7 +23,6 @@ use std::thread::JoinHandle;
 
 use super::{ClientFamily, ClientPool, PoolClient};
 use crate::algorithms::ClientMsg;
-use crate::linalg::vector;
 
 enum Cmd {
     Round {
@@ -232,11 +231,18 @@ impl ClientPool for ThreadedPool {
         self.default_alpha
     }
 
-    fn set_alpha(&mut self, alpha: f64) {
+    fn set_alpha(&mut self, alpha: f64) -> f64 {
+        // Query form (non-finite): the workers' clients keep their
+        // (identical, theoretical) α, cached at construction.
+        if !(alpha.is_finite() && alpha > 0.0) {
+            return self.default_alpha;
+        }
         self.broadcast(|| Cmd::SetAlpha(alpha));
         for _ in 0..self.workers.len() {
             let _ = self.reply_rx.recv();
         }
+        self.default_alpha = alpha;
+        alpha
     }
 
     fn submit_round(
@@ -288,47 +294,36 @@ impl ClientPool for ThreadedPool {
         out
     }
 
-    fn eval_loss(&mut self, x: &[f64]) -> f64 {
+    fn eval_loss_each(&mut self, x: &[f64]) -> Vec<(u32, f64)> {
         let x = Arc::new(x.to_vec());
         self.broadcast(|| Cmd::EvalLoss { x: Arc::clone(&x) });
-        // Collect in arrival order, reduce in client-id order: the f64
-        // summation order matches SeqPool's flat sum bit-for-bit.
-        let mut parts: Vec<(usize, f64)> =
-            Vec::with_capacity(self.n_clients);
+        // Collect in arrival order; the provided trait reduction sorts
+        // by client id, so the f64 summation order matches SeqPool's
+        // flat sum bit-for-bit.
+        let mut parts: Vec<(u32, f64)> = Vec::with_capacity(self.n_clients);
         for _ in 0..self.n_clients {
             match self.reply_rx.recv() {
-                Ok(Reply::Loss(id, l)) => parts.push((id, l)),
+                Ok(Reply::Loss(id, l)) => parts.push((id as u32, l)),
                 _ => panic!("worker died"),
             }
         }
-        parts.sort_by_key(|&(id, _)| id);
-        let mut sum = 0.0;
-        for &(_, l) in &parts {
-            sum += l;
-        }
-        sum / self.n_clients as f64
+        parts
     }
 
-    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+    fn loss_grad_each(&mut self, x: &[f64]) -> Vec<(u32, f64, Vec<f64>)> {
         let x = Arc::new(x.to_vec());
         self.broadcast(|| Cmd::LossGrad { x: Arc::clone(&x) });
-        let mut parts: Vec<(usize, f64, Vec<f64>)> =
+        let mut parts: Vec<(u32, f64, Vec<f64>)> =
             Vec::with_capacity(self.n_clients);
         for _ in 0..self.n_clients {
             match self.reply_rx.recv() {
-                Ok(Reply::LossGrad(id, l, g)) => parts.push((id, l, g)),
+                Ok(Reply::LossGrad(id, l, g)) => {
+                    parts.push((id as u32, l, g))
+                }
                 _ => panic!("worker died"),
             }
         }
-        parts.sort_by_key(|&(id, _, _)| id);
-        let inv_n = 1.0 / self.n_clients as f64;
-        let mut loss = 0.0;
-        let mut g = vec![0.0; x.len()];
-        for (_, l, gi) in &parts {
-            loss += l;
-            vector::axpy(inv_n, gi, &mut g);
-        }
-        (loss * inv_n, g)
+        parts
     }
 
     fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {

@@ -74,12 +74,29 @@
 //! by wall clock, the same plan yields bit-identical trajectories on
 //! every transport (the lossy-round extension of the buffer-and-commit
 //! rule).
+//!
+//! # Sharded aggregation (hierarchical masters)
+//!
+//! [`shard::ShardedPool`] fans the same pool API out to `S` shard
+//! aggregators, each owning a contiguous client-id partition; its TCP
+//! sibling is the relay tier in `net::relay`. The per-client reduction
+//! primitives below ([`ClientPool::eval_loss_each`],
+//! [`ClientPool::loss_grad_each`]) exist for that tier: a shard cannot
+//! forward a *partial f64 sum* upward without changing the reduction
+//! grouping (f64 addition is not associative — the fold `(a+b)+(c+d)`
+//! differs bitwise from `((a+b)+c)+d`), so shards forward per-client
+//! atoms and the provided [`ClientPool::eval_loss`] /
+//! [`ClientPool::loss_grad`] reductions reduce them in ascending
+//! client-id order on every topology. That is what keeps trajectories
+//! **bit-identical between unsharded and sharded runs for any S**.
 
 pub mod faults;
 pub mod local_sim;
+pub mod shard;
 
 pub use faults::{FaultPlan, FaultPool};
 pub use local_sim::ThreadedPool;
+pub use shard::{ShardedPool, ShardStats};
 
 use std::time::Duration;
 
@@ -230,11 +247,23 @@ pub trait ClientPool {
         "pool"
     }
 
-    /// Theoretical α of the clients' compressor class.
+    /// Theoretical α of the clients' compressor class. Transports that
+    /// cannot know it without asking (the TCP master, the relay tier)
+    /// return NaN — the "ask the clients" sentinel the `SET_ALPHA`
+    /// negotiation resolves (see [`set_alpha`]).
+    ///
+    /// [`set_alpha`]: ClientPool::set_alpha
     fn default_alpha(&self) -> f64;
 
-    /// Set the Hessian learning rate on every client.
-    fn set_alpha(&mut self, alpha: f64);
+    /// Negotiate the Hessian learning rate and return the **effective**
+    /// α the run must use. A finite positive `alpha` is installed on
+    /// every client (and echoed back); a non-finite `alpha` is the
+    /// query form — clients keep their own (theoretical) α and echo
+    /// it, so the master learns the value without overriding it. The
+    /// server must aggregate with the returned α, never the requested
+    /// one: client/server α agreement is what keeps `Hᵏ` the true
+    /// average of the `Hᵢᵏ`.
+    fn set_alpha(&mut self, alpha: f64) -> f64;
 
     /// Dispatch one client round without waiting for replies. `subset`
     /// is the participating client ids (`None` = all clients). Exactly
@@ -276,14 +305,54 @@ pub trait ClientPool {
         msgs
     }
 
+    /// Per-client losses at `x` — the probe primitive the reductions
+    /// are built on. One `(client id, fᵢ(x))` entry per *live* client,
+    /// in any order (the provided reductions sort). Shard tiers
+    /// concatenate their partitions' entries here, which is what keeps
+    /// the f64 reduction grouping identical on every topology.
+    fn eval_loss_each(&mut self, x: &[f64]) -> Vec<(u32, f64)>;
+
+    /// Per-client `(client id, fᵢ(x), ∇fᵢ(x))` entries, one per live
+    /// client, any order. Sibling of [`eval_loss_each`].
+    ///
+    /// [`eval_loss_each`]: ClientPool::eval_loss_each
+    fn loss_grad_each(&mut self, x: &[f64]) -> Vec<(u32, f64, Vec<f64>)>;
+
     /// Average local loss at `x` (line-search probe). Reduced in
-    /// ascending client id order on every transport.
-    fn eval_loss(&mut self, x: &[f64]) -> f64;
+    /// ascending client id order over the live clients on every
+    /// transport — a provided method so every topology (flat pools,
+    /// the sharded tier, the TCP relay tier) shares one reduction
+    /// order, bit for bit.
+    fn eval_loss(&mut self, x: &[f64]) -> f64 {
+        let mut parts = self.eval_loss_each(x);
+        assert!(!parts.is_empty(), "eval_loss: no live clients");
+        parts.sort_by_key(|&(id, _)| id);
+        let mut sum = 0.0;
+        for &(_, l) in &parts {
+            sum += l;
+        }
+        sum / parts.len() as f64
+    }
 
     /// Average (f(x), ∇f(x)) reduction — the first-order baselines'
     /// round primitive (one d-vector per client per call). Reduced in
-    /// ascending client id order on every transport.
-    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>);
+    /// ascending client id order over the live clients on every
+    /// transport (provided; see [`eval_loss`]).
+    ///
+    /// [`eval_loss`]: ClientPool::eval_loss
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        let mut parts = self.loss_grad_each(x);
+        assert!(!parts.is_empty(), "loss_grad: no live clients");
+        parts.sort_by_key(|&(id, _, _)| id);
+        let inv = 1.0 / parts.len() as f64;
+        let mut loss = 0.0;
+        let mut g = vec![0.0; x.len()];
+        for (_, l, gi) in &parts {
+            loss += l;
+            vector::axpy(inv, gi, &mut g);
+        }
+        (loss * inv, g)
+    }
 
     /// Warm-start Hᵢ⁰ = ∇²fᵢ(x⁰); returns packed Hᵢ⁰ per client
     /// (client-id order).
@@ -350,6 +419,46 @@ pub trait ClientPool {
 
 // --- shared sequential primitives (SeqPool / SlicePool) ---------------
 
+/// Find the client with global id `ci`. Sequential pools select subset
+/// members by *id*, not by position, so a pool may serve any contiguous
+/// (or even sparse) global-id partition — the shard tier hands each
+/// shard aggregator a slice of globally-numbered clients.
+/// In-process α negotiation: a finite positive request is installed on
+/// every client; the query form (non-finite) leaves the clients'
+/// (identical, theoretical) α in place. Either way the effective value
+/// is read back from the clients — the contract of
+/// [`ClientPool::set_alpha`].
+fn set_alpha_seq<C: PoolClient>(clients: &mut [C], alpha: f64) -> f64 {
+    if alpha.is_finite() && alpha > 0.0 {
+        for c in clients.iter_mut() {
+            c.set_alpha(alpha);
+        }
+    }
+    clients[0].alpha()
+}
+
+fn client_by_id<C: PoolClient>(clients: &mut [C], ci: u32) -> &mut C {
+    // The common layouts (ids 0..n, or a contiguous ascending
+    // partition base..base+m) resolve in O(1) via an offset probe, so
+    // subset dispatch stays O(|subset|) on the hot path; anything else
+    // falls back to a scan.
+    let base = clients[0].id();
+    let probe = (ci as usize).wrapping_sub(base);
+    let idx = if probe < clients.len()
+        && clients[probe].id() == ci as usize
+    {
+        probe
+    } else {
+        clients
+            .iter()
+            .position(|c| c.id() == ci as usize)
+            .unwrap_or_else(|| {
+                panic!("no client with id {ci} in this pool")
+            })
+    };
+    &mut clients[idx]
+}
+
 fn submit_seq<C: PoolClient>(
     clients: &mut [C],
     queue: &mut Vec<ClientMsg>,
@@ -367,30 +476,37 @@ fn submit_seq<C: PoolClient>(
         }
         Some(s) => {
             for &ci in s {
-                queue.push(clients[ci as usize].round(x, round, need_loss));
+                queue.push(client_by_id(clients, ci).round(
+                    x,
+                    round,
+                    need_loss,
+                ));
             }
         }
     }
 }
 
-fn eval_loss_seq<C: PoolClient>(clients: &mut [C], x: &[f64]) -> f64 {
-    let n = clients.len() as f64;
-    clients.iter_mut().map(|c| c.eval_loss(x)).sum::<f64>() / n
-}
-
-fn loss_grad_seq<C: PoolClient>(
+fn eval_loss_each_seq<C: PoolClient>(
     clients: &mut [C],
     x: &[f64],
-) -> (f64, Vec<f64>) {
-    let inv_n = 1.0 / clients.len() as f64;
-    let mut g = vec![0.0; x.len()];
-    let mut loss = 0.0;
-    for c in clients.iter_mut() {
-        let (l, gi) = c.eval_loss_grad(x);
-        loss += l;
-        vector::axpy(inv_n, &gi, &mut g);
-    }
-    (loss * inv_n, g)
+) -> Vec<(u32, f64)> {
+    clients
+        .iter_mut()
+        .map(|c| (c.id() as u32, c.eval_loss(x)))
+        .collect()
+}
+
+fn loss_grad_each_seq<C: PoolClient>(
+    clients: &mut [C],
+    x: &[f64],
+) -> Vec<(u32, f64, Vec<f64>)> {
+    clients
+        .iter_mut()
+        .map(|c| {
+            let (l, g) = c.eval_loss_grad(x);
+            (c.id() as u32, l, g)
+        })
+        .collect()
 }
 
 /// Sequential in-process pool — the reference implementation. Generic
@@ -429,10 +545,8 @@ impl<C: PoolClient> ClientPool for SeqPool<C> {
         self.clients[0].alpha()
     }
 
-    fn set_alpha(&mut self, alpha: f64) {
-        for c in &mut self.clients {
-            c.set_alpha(alpha);
-        }
+    fn set_alpha(&mut self, alpha: f64) -> f64 {
+        set_alpha_seq(&mut self.clients, alpha)
     }
 
     fn submit_round(
@@ -449,12 +563,12 @@ impl<C: PoolClient> ClientPool for SeqPool<C> {
         std::mem::take(&mut self.queue)
     }
 
-    fn eval_loss(&mut self, x: &[f64]) -> f64 {
-        eval_loss_seq(&mut self.clients, x)
+    fn eval_loss_each(&mut self, x: &[f64]) -> Vec<(u32, f64)> {
+        eval_loss_each_seq(&mut self.clients, x)
     }
 
-    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
-        loss_grad_seq(&mut self.clients, x)
+    fn loss_grad_each(&mut self, x: &[f64]) -> Vec<(u32, f64, Vec<f64>)> {
+        loss_grad_each_seq(&mut self.clients, x)
     }
 
     fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {
@@ -466,7 +580,7 @@ impl<C: PoolClient> ClientPool for SeqPool<C> {
     }
 
     fn pull_state(&mut self, client: u32) -> Option<(f64, Vec<f64>)> {
-        Some(self.clients[client as usize].state())
+        Some(client_by_id(&mut self.clients, client).state())
     }
 }
 
@@ -505,10 +619,8 @@ impl<C: PoolClient> ClientPool for SlicePool<'_, C> {
         self.clients[0].alpha()
     }
 
-    fn set_alpha(&mut self, alpha: f64) {
-        for c in self.clients.iter_mut() {
-            c.set_alpha(alpha);
-        }
+    fn set_alpha(&mut self, alpha: f64) -> f64 {
+        set_alpha_seq(&mut *self.clients, alpha)
     }
 
     fn submit_round(
@@ -532,12 +644,12 @@ impl<C: PoolClient> ClientPool for SlicePool<'_, C> {
         std::mem::take(&mut self.queue)
     }
 
-    fn eval_loss(&mut self, x: &[f64]) -> f64 {
-        eval_loss_seq(&mut *self.clients, x)
+    fn eval_loss_each(&mut self, x: &[f64]) -> Vec<(u32, f64)> {
+        eval_loss_each_seq(&mut *self.clients, x)
     }
 
-    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
-        loss_grad_seq(&mut *self.clients, x)
+    fn loss_grad_each(&mut self, x: &[f64]) -> Vec<(u32, f64, Vec<f64>)> {
+        loss_grad_each_seq(&mut *self.clients, x)
     }
 
     fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {
@@ -549,6 +661,6 @@ impl<C: PoolClient> ClientPool for SlicePool<'_, C> {
     }
 
     fn pull_state(&mut self, client: u32) -> Option<(f64, Vec<f64>)> {
-        Some(self.clients[client as usize].state())
+        Some(client_by_id(&mut *self.clients, client).state())
     }
 }

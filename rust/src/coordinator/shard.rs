@@ -1,0 +1,568 @@
+//! Sharded aggregation: hierarchical masters behind the pool API.
+//!
+//! A single master folding every client reply caps fan-in: the
+//! coordinator bench's `wait_s`/`total_s` split is time the master
+//! spends blocked in `drain()` while replies queue behind one consumer.
+//! [`ShardedPool`] inserts an aggregation tier: the client set is
+//! partitioned into `S` **contiguous global-id ranges**, each owned by
+//! one shard aggregator (any inner [`ClientPool`] — `SeqPool` and
+//! `ThreadedPool` partitions in-process here, a TCP relay process in
+//! `net::relay`), and the top-level master talks to `S` shards instead
+//! of `n` clients. FedNL's server update `Hᵏ += (α/n)Σᵢ Sᵢᵏ` is a sum
+//! of sums, so the tier changes *where* the folding happens, never the
+//! math.
+//!
+//! # Determinism: why shards forward atoms, not partial f64 sums
+//!
+//! The headline invariant of the tier is that **trajectories are
+//! bit-identical between unsharded and sharded runs for any S, for
+//! FedNL / FedNL-LS / FedNL-PP, on every transport**. f64 addition is
+//! not associative — folding `(g₀+g₁)+(g₂+g₃)` differs in the last ulp
+//! from `((g₀+g₁)+g₂)+g₃` — so a shard that forwarded a *summed*
+//! gradient partial would silently re-group the master's reduction and
+//! break the invariant for some S. The tier therefore pre-reduces at
+//! the **protocol** level, not the arithmetic level:
+//!
+//! * each shard commits its partition's replies internally in
+//!   round-subset order and forwards them upward as one ordered batch
+//!   (one `SHARD_MSG` frame per round on the TCP relay), together with
+//!   the partition's missing-certificates;
+//! * the master folds shard batches in ascending shard id; because the
+//!   partitions are contiguous ascending-id ranges, the engine's
+//!   [`CommitBuffer`] re-establishes exactly the unsharded commit
+//!   order, and the per-message f64 atoms make the commit arithmetic
+//!   invariant in `S`;
+//! * the probe reductions (`eval_loss`, `loss_grad`, `warm_start`,
+//!   `init_state`) concatenate per-client entries across shards, and
+//!   the provided [`ClientPool`] reductions reduce them in ascending
+//!   client id order — the same flat fold the unsharded pools use.
+//!
+//! (True arithmetic pre-reduction would need reproducible summation —
+//! a fixed-point superaccumulator — applied uniformly to the unsharded
+//! path too; noted in ROADMAP as future work.)
+//!
+//! # Fault tolerance through the tier
+//!
+//! The PR 3 machinery composes: a shard certifies its partition's lost
+//! clients upward through [`ClientPool::take_missing`], and a lost
+//! shard (TCP relay gone) certifies its **whole partition**, which the
+//! engine's quorum/`on_missing` policy then absorbs like any other
+//! loss. A master-side [`super::FaultPool`] wraps a `ShardedPool`
+//! unchanged, so the same `FaultPlan` yields bit-identical lossy
+//! trajectories sharded or not (asserted by the integration tests).
+//!
+//! [`CommitBuffer`]: crate::algorithms::engine
+
+use std::time::{Duration, Instant};
+
+use super::{ClientFamily, ClientPool, PoolClient, SeqPool, ThreadedPool};
+use crate::algorithms::ClientMsg;
+
+/// Per-shard accounting of one run: how long the master was blocked
+/// draining this shard, how long it spent committing this shard's
+/// batches, and how many messages the shard forwarded. The shard bench
+/// serializes these into `BENCH_shard.json`.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Clients of this shard's partition.
+    pub clients: usize,
+    /// Seconds the master spent blocked in this shard's `drain`.
+    pub wait_s: f64,
+    /// Seconds the master spent committing batches this shard served
+    /// (measured as the gap between serving a batch and the next
+    /// `drain` call).
+    pub aggregate_s: f64,
+    /// Round messages forwarded by this shard.
+    pub msgs: u64,
+}
+
+/// Contiguous balanced partition of `n` clients into `s` shards:
+/// shard `i` owns global ids `[i·n/s, (i+1)·n/s)`.
+pub fn partition(n: usize, s: usize) -> Vec<(u32, u32)> {
+    assert!(s >= 1 && s <= n, "need 1 <= shards ({s}) <= clients ({n})");
+    (0..s)
+        .map(|i| ((i * n / s) as u32, ((i + 1) * n / s) as u32))
+        .collect()
+}
+
+/// The in-process sharded aggregation tier (see the module docs). The
+/// TCP sibling — real relay processes — is `net::relay::RelayPool`;
+/// both present the same [`ClientPool`] face to the round engine.
+pub struct ShardedPool {
+    shards: Vec<Box<dyn ClientPool>>,
+    /// Global-id range `[lo, hi)` of each shard, ascending, contiguous
+    /// from 0.
+    ranges: Vec<(u32, u32)>,
+    n_clients: usize,
+    /// Per-shard "this round is fully drained" flags.
+    closed: Vec<bool>,
+    stats: Vec<ShardStats>,
+    /// (shard whose batch the caller is committing, when it was
+    /// served) — attributes the master's commit time per shard.
+    serving: Option<(usize, Instant)>,
+}
+
+impl ShardedPool {
+    /// Build the tier over pre-constructed shard aggregators. Each
+    /// `shards[i]` must own exactly the clients of `ranges[i]`, the
+    /// ranges must tile `0..n` contiguously in ascending order, and
+    /// the shards must agree on dimension and client family.
+    pub fn from_shards(
+        shards: Vec<Box<dyn ClientPool>>,
+        ranges: Vec<(u32, u32)>,
+    ) -> Self {
+        assert!(!shards.is_empty(), "need at least one shard");
+        assert_eq!(shards.len(), ranges.len());
+        let mut expect = 0u32;
+        for (s, &(lo, hi)) in ranges.iter().enumerate() {
+            assert!(
+                lo == expect && hi > lo,
+                "shard {s}: range [{lo}, {hi}) must continue at {expect}"
+            );
+            assert_eq!(
+                shards[s].n_clients(),
+                (hi - lo) as usize,
+                "shard {s}: pool size vs range mismatch"
+            );
+            expect = hi;
+        }
+        let d = shards[0].dim();
+        let family = shards[0].family();
+        for (s, sh) in shards.iter().enumerate() {
+            assert_eq!(sh.dim(), d, "shard {s}: dimension mismatch");
+            assert_eq!(
+                sh.family(),
+                family,
+                "shard {s}: shards are family-homogeneous"
+            );
+        }
+        let n_clients = expect as usize;
+        let n_shards = shards.len();
+        let stats = ranges
+            .iter()
+            .enumerate()
+            .map(|(shard, &(lo, hi))| ShardStats {
+                shard,
+                clients: (hi - lo) as usize,
+                wait_s: 0.0,
+                aggregate_s: 0.0,
+                msgs: 0,
+            })
+            .collect();
+        Self {
+            shards,
+            ranges,
+            n_clients,
+            closed: vec![true; n_shards],
+            stats,
+            serving: None,
+        }
+    }
+
+    /// Partition `clients` (ascending ids `0..n`) into `n_shards`
+    /// sequential shard aggregators.
+    pub fn new_seq<C: PoolClient + 'static>(
+        clients: Vec<C>,
+        n_shards: usize,
+    ) -> Self {
+        Self::build(clients, n_shards, |part| {
+            Box::new(SeqPool::new(part))
+        })
+    }
+
+    /// Partition `clients` into `n_shards` multi-threaded shard
+    /// aggregators (`workers` threads each; 0 = auto).
+    pub fn new_threaded<C: PoolClient + 'static>(
+        clients: Vec<C>,
+        n_shards: usize,
+        workers: usize,
+    ) -> Self {
+        Self::build(clients, n_shards, |part| {
+            Box::new(ThreadedPool::new(part, workers))
+        })
+    }
+
+    fn build<C: PoolClient + 'static>(
+        clients: Vec<C>,
+        n_shards: usize,
+        make: impl Fn(Vec<C>) -> Box<dyn ClientPool>,
+    ) -> Self {
+        for (i, c) in clients.iter().enumerate() {
+            assert_eq!(
+                c.id(),
+                i,
+                "sharded partitions need ascending client ids 0..n"
+            );
+        }
+        let ranges = partition(clients.len(), n_shards);
+        let mut rest = clients;
+        let mut shards: Vec<Box<dyn ClientPool>> = Vec::new();
+        for &(lo, hi) in &ranges {
+            let tail = rest.split_off((hi - lo) as usize);
+            shards.push(make(std::mem::replace(&mut rest, tail)));
+        }
+        Self::from_shards(shards, ranges)
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard owns global client id `client`.
+    pub fn shard_of(&self, client: u32) -> usize {
+        self.ranges
+            .iter()
+            .position(|&(lo, hi)| client >= lo && client < hi)
+            .unwrap_or_else(|| panic!("client {client} outside every shard"))
+    }
+
+    /// Per-shard wait/aggregate accounting accumulated so far.
+    pub fn shard_stats(&self) -> &[ShardStats] {
+        &self.stats
+    }
+
+    /// Close the commit-time attribution window of the last served
+    /// batch (called on every `drain` entry).
+    fn settle_serving(&mut self) {
+        if let Some((s, since)) = self.serving.take() {
+            self.stats[s].aggregate_s += since.elapsed().as_secs_f64();
+        }
+    }
+}
+
+impl ClientPool for ShardedPool {
+    fn n_clients(&self) -> usize {
+        self.n_clients
+    }
+
+    fn dim(&self) -> usize {
+        self.shards[0].dim()
+    }
+
+    fn family(&self) -> ClientFamily {
+        self.shards[0].family()
+    }
+
+    fn kind_name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn default_alpha(&self) -> f64 {
+        self.shards[0].default_alpha()
+    }
+
+    fn set_alpha(&mut self, alpha: f64) -> f64 {
+        let mut effective = alpha;
+        for sh in &mut self.shards {
+            effective = sh.set_alpha(alpha);
+        }
+        effective
+    }
+
+    fn prepare_round(&mut self, round: u64) {
+        for sh in &mut self.shards {
+            sh.prepare_round(round);
+        }
+    }
+
+    fn set_reply_deadline(&mut self, deadline: Option<Duration>) {
+        for sh in &mut self.shards {
+            sh.set_reply_deadline(deadline);
+        }
+    }
+
+    fn submit_round(
+        &mut self,
+        x: &[f64],
+        subset: Option<&[u32]>,
+        round: u64,
+        need_loss: bool,
+    ) {
+        assert!(
+            self.closed.iter().all(|c| *c),
+            "previous round not fully drained"
+        );
+        self.serving = None;
+        for s in 0..self.shards.len() {
+            let (lo, hi) = self.ranges[s];
+            match subset {
+                None => {
+                    self.shards[s].submit_round(x, None, round, need_loss);
+                    self.closed[s] = false;
+                }
+                Some(sub) => {
+                    // The partition's participants, in subset order —
+                    // the order this shard commits in.
+                    let part: Vec<u32> = sub
+                        .iter()
+                        .copied()
+                        .filter(|&c| c >= lo && c < hi)
+                        .collect();
+                    if part.is_empty() {
+                        self.closed[s] = true;
+                    } else {
+                        self.shards[s].submit_round(
+                            x,
+                            Some(&part),
+                            round,
+                            need_loss,
+                        );
+                        self.closed[s] = false;
+                    }
+                }
+            }
+        }
+    }
+
+    fn drain(&mut self) -> Vec<ClientMsg> {
+        self.settle_serving();
+        // Ascending shard id: the master folds shard batches in shard
+        // order; the engine's CommitBuffer restores global subset
+        // order, so this only determines *overlap*, never the result.
+        for s in 0..self.shards.len() {
+            if self.closed[s] {
+                continue;
+            }
+            let since = Instant::now();
+            let batch = self.shards[s].drain();
+            self.stats[s].wait_s += since.elapsed().as_secs_f64();
+            if batch.is_empty() {
+                self.closed[s] = true;
+                continue;
+            }
+            self.stats[s].msgs += batch.len() as u64;
+            self.serving = Some((s, Instant::now()));
+            return batch;
+        }
+        Vec::new()
+    }
+
+    fn take_missing(&mut self) -> Vec<u32> {
+        let mut out = Vec::new();
+        for sh in &mut self.shards {
+            out.extend(sh.take_missing());
+        }
+        out
+    }
+
+    fn dead_clients(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        for sh in &self.shards {
+            out.extend(sh.dead_clients());
+        }
+        out.sort_unstable();
+        out
+    }
+
+    fn take_rejoined(&mut self) -> Vec<u32> {
+        let mut out = Vec::new();
+        for sh in &mut self.shards {
+            out.extend(sh.take_rejoined());
+        }
+        out.sort_unstable();
+        out
+    }
+
+    fn eval_loss_each(&mut self, x: &[f64]) -> Vec<(u32, f64)> {
+        let mut out = Vec::with_capacity(self.n_clients);
+        for sh in &mut self.shards {
+            out.extend(sh.eval_loss_each(x));
+        }
+        out
+    }
+
+    fn loss_grad_each(&mut self, x: &[f64]) -> Vec<(u32, f64, Vec<f64>)> {
+        let mut out = Vec::with_capacity(self.n_clients);
+        for sh in &mut self.shards {
+            out.extend(sh.loss_grad_each(x));
+        }
+        out
+    }
+
+    fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {
+        // Shards return partition order (ascending global id);
+        // ascending shard id concatenation keeps the global order.
+        let mut out = Vec::with_capacity(self.n_clients);
+        for sh in &mut self.shards {
+            out.extend(sh.warm_start(x));
+        }
+        out
+    }
+
+    fn init_state(&mut self) -> Vec<(f64, Vec<f64>)> {
+        let mut out = Vec::with_capacity(self.n_clients);
+        for sh in &mut self.shards {
+            out.extend(sh.init_state());
+        }
+        out
+    }
+
+    fn pull_state(&mut self, client: u32) -> Option<(f64, Vec<f64>)> {
+        let s = self.shard_of(client);
+        self.shards[s].pull_state(client)
+    }
+
+    fn transport_bytes(&self) -> Option<(u64, u64)> {
+        // Metered only when every shard meters (the TCP relay tier);
+        // in-process partitions keep the drivers' logical accounting.
+        let mut up = 0u64;
+        let mut down = 0u64;
+        for sh in &self.shards {
+            let (u, d) = sh.transport_bytes()?;
+            up += u;
+            down += d;
+        }
+        Some((up, down))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::ClientState;
+    use crate::compressors::by_name;
+    use crate::coordinator::SeqPool;
+    use crate::data::{generate_synthetic, Dataset, SynthSpec};
+    use crate::oracle::LogisticOracle;
+
+    fn make_clients(n: usize, seed: u64) -> (Vec<ClientState>, usize) {
+        let spec = SynthSpec {
+            d_raw: 7,
+            n_samples: n * 24,
+            density: 0.6,
+            noise: 1.0,
+            seed,
+        };
+        let synth = generate_synthetic(&spec);
+        let samples: Vec<crate::data::LibsvmSample> = synth
+            .labels
+            .iter()
+            .zip(&synth.rows)
+            .map(|(l, r)| crate::data::LibsvmSample {
+                label: *l,
+                features: r.clone(),
+            })
+            .collect();
+        let ds = Dataset::from_libsvm(&samples, spec.d_raw);
+        let d = ds.d;
+        let cs = ds
+            .split_even(n)
+            .unwrap()
+            .into_iter()
+            .enumerate()
+            .map(|(i, sh)| {
+                ClientState::new(
+                    i,
+                    Box::new(LogisticOracle::new(sh, 1e-3)),
+                    by_name("topk", d, 2, seed + i as u64).unwrap(),
+                    None,
+                )
+            })
+            .collect();
+        (cs, d)
+    }
+
+    #[test]
+    fn partition_is_contiguous_and_balanced() {
+        assert_eq!(partition(6, 2), vec![(0, 3), (3, 6)]);
+        assert_eq!(partition(7, 3), vec![(0, 2), (2, 4), (4, 7)]);
+        assert_eq!(partition(5, 1), vec![(0, 5)]);
+        assert_eq!(partition(4, 4), vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let p = partition(1000, 7);
+        assert_eq!(p[0].0, 0);
+        assert_eq!(p.last().unwrap().1, 1000);
+        for w in p.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+            let (a, b) = (w[0].1 - w[0].0, w[1].1 - w[1].0);
+            assert!(a.abs_diff(b) <= 1, "unbalanced: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shards")]
+    fn partition_rejects_more_shards_than_clients() {
+        let _ = partition(3, 4);
+    }
+
+    #[test]
+    fn round_and_reductions_cover_all_clients() {
+        let (cs, d) = make_clients(6, 41);
+        let mut pool = ShardedPool::new_seq(cs, 3);
+        assert_eq!(pool.n_clients(), 6);
+        assert_eq!(pool.n_shards(), 3);
+        assert_eq!(pool.shard_of(0), 0);
+        assert_eq!(pool.shard_of(2), 1);
+        assert_eq!(pool.shard_of(5), 2);
+        let x = vec![0.1; d];
+        let msgs = pool.round(&x, 0, true);
+        let ids: Vec<usize> = msgs.iter().map(|m| m.client_id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+        let mut parts = pool.eval_loss_each(&x);
+        parts.sort_by_key(|&(id, _)| id);
+        let part_ids: Vec<u32> = parts.iter().map(|&(id, _)| id).collect();
+        assert_eq!(part_ids, vec![0, 1, 2, 3, 4, 5]);
+        // Stats observed a full round through every shard.
+        let served: u64 =
+            pool.shard_stats().iter().map(|s| s.msgs).sum();
+        assert_eq!(served, 6);
+    }
+
+    #[test]
+    fn subset_round_routes_to_owning_shards_only() {
+        let (cs, d) = make_clients(6, 42);
+        let mut pool = ShardedPool::new_seq(cs, 2);
+        let x = vec![0.05; d];
+        // Subset order [5, 0, 1]: shard 1 serves 5, shard 0 serves
+        // 0 then 1 (partition-restricted subset order).
+        pool.submit_round(&x, Some(&[5, 0, 1]), 0, false);
+        let mut got = Vec::new();
+        loop {
+            let batch = pool.drain();
+            if batch.is_empty() {
+                break;
+            }
+            got.extend(batch.into_iter().map(|m| m.client_id as u32));
+        }
+        assert_eq!(got, vec![0, 1, 5]);
+        // Pool reusable: an untouched-shard subset next.
+        pool.submit_round(&x, Some(&[4]), 1, false);
+        let mut got = Vec::new();
+        loop {
+            let batch = pool.drain();
+            if batch.is_empty() {
+                break;
+            }
+            got.extend(batch.into_iter().map(|m| m.client_id as u32));
+        }
+        assert_eq!(got, vec![4]);
+    }
+
+    #[test]
+    fn matches_flat_seq_pool_bitwise_on_probes() {
+        let (cs1, d) = make_clients(5, 43);
+        let (cs2, _) = make_clients(5, 43);
+        let mut flat = SeqPool::new(cs1);
+        let mut sharded = ShardedPool::new_seq(cs2, 2);
+        let x = vec![0.2; d];
+        assert_eq!(flat.eval_loss(&x).to_bits(), sharded.eval_loss(&x).to_bits());
+        let (l1, g1) = flat.loss_grad(&x);
+        let (l2, g2) = sharded.loss_grad(&x);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        for (a, b) in g1.iter().zip(&g2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must continue at")]
+    fn from_shards_rejects_gapped_ranges() {
+        let (cs, _) = make_clients(4, 44);
+        let mut it = cs.into_iter();
+        let a: Vec<ClientState> = it.by_ref().take(2).collect();
+        let b: Vec<ClientState> = it.collect();
+        let shards: Vec<Box<dyn ClientPool>> =
+            vec![Box::new(SeqPool::new(a)), Box::new(SeqPool::new(b))];
+        let _ = ShardedPool::from_shards(shards, vec![(0, 2), (3, 5)]);
+    }
+}

@@ -10,12 +10,15 @@ use crate::algorithms::{
 };
 use crate::baselines::{run_gd, run_lbfgs, run_nesterov, BaselineOptions};
 use crate::coordinator::{
-    ClientPool, FaultPlan, FaultPool, SeqPool, ThreadedPool,
+    shard, ClientPool, FaultPlan, FaultPool, SeqPool, ShardedPool,
+    ThreadedPool,
 };
 use crate::metrics::report::{sci, Table};
 use crate::metrics::rusage::ResourceSnapshot;
 use crate::metrics::Trace;
-use crate::net::{run_client, server::Bound};
+use crate::net::{
+    run_client, run_relay_on, server::Bound, RelayCfg, RelayPool,
+};
 use crate::utils::{human_bytes, human_secs, Stopwatch};
 
 /// Compressors in Table 1 order, with the paper's K = 8d.
@@ -530,6 +533,239 @@ pub fn fault_smoke(cfg: &HarnessCfg) -> Result<String> {
     }
     out.push_str(&table.to_markdown());
     out.push_str(&format!("\nPer-round trace written to {json_path}\n"));
+    Ok(out)
+}
+
+/// CI shard smoke: the sharded aggregation tier end to end — an
+/// unsharded sequential reference, an in-process `S=3` [`ShardedPool`]
+/// and a real `S=2` TCP **relay tier** over loopback (2 relay
+/// processes-as-threads + 6 clients), all running FedNL under the same
+/// [`FaultPlan`] and quorum policy. Asserts the tier's headline
+/// invariant — **bit-identical trajectories for every S and
+/// transport** — then writes per-shard wait/aggregate stats and the
+/// per-round trace to `shardsmoke_trace.json` (CI artifact).
+pub fn shard_smoke(cfg: &HarnessCfg) -> Result<String> {
+    cfg.ensure_out_dir()?;
+    let spec = ProblemSpec {
+        name: "shardsmoke",
+        d: 13,
+        n_i_full: 40,
+        n_clients_full: 6,
+        lam: 1e-3,
+    };
+    let mut p = prepare_problem(&spec, cfg)?;
+    p.n_clients = 6;
+    p.n_i = 40;
+    let d = p.d();
+    let x0 = vec![0.0; d];
+    let rounds = 20u64;
+    let plan_spec = "kill@2:1-8,drop@5:4";
+    let plan = FaultPlan::parse(plan_spec)?;
+    let policy = RoundPolicy {
+        quorum: Some(3),
+        deadline_ms: Some(2000),
+        on_missing: OnMissing::Drop,
+    };
+    let opts =
+        Options { rounds, track_loss: true, policy, ..Default::default() };
+
+    // Unsharded sequential reference.
+    let mut seq = FaultPool::new(
+        SeqPool::new(p.clients("topk", K_MULT, cfg)?),
+        plan.clone(),
+    );
+    let t_seq =
+        run_fednl_pool(&mut seq, &opts, x0.clone(), "shardsmoke/seq");
+
+    // In-process sharded tier, S = 3.
+    let mut sh3 = FaultPool::new(
+        ShardedPool::new_seq(p.clients("topk", K_MULT, cfg)?, 3),
+        plan.clone(),
+    );
+    let t_sh3 =
+        run_fednl_pool(&mut sh3, &opts, x0.clone(), "shardsmoke/S3");
+    let shard_stats: Vec<_> =
+        sh3.inner_mut().shard_stats().to_vec();
+
+    // Real TCP relay tier, S = 2: master ← 2 relays ← 6 clients, all
+    // over loopback in one process.
+    let ranges = shard::partition(p.n_clients, 2);
+    let master_bound = Bound::bind("127.0.0.1:0")?;
+    let master_addr = master_bound.local_addr()?.to_string();
+    let mut relay_handles = Vec::new();
+    let mut client_handles = Vec::new();
+    let all_shards = p.dataset.split(p.n_clients, p.n_i)?;
+    let mut shards_by_id: Vec<Option<crate::data::ClientShard>> =
+        all_shards.into_iter().map(Some).collect();
+    for (s, &(lo, hi)) in ranges.iter().enumerate() {
+        let relay_bound = Bound::bind("127.0.0.1:0")?;
+        let relay_addr = relay_bound.local_addr()?.to_string();
+        let rcfg = RelayCfg {
+            shard_id: s as u32,
+            base: lo,
+            count: (hi - lo) as usize,
+            listen: String::new(), // pre-bound below
+            connect: master_addr.clone(),
+        };
+        relay_handles.push(std::thread::spawn(move || {
+            run_relay_on(relay_bound, &rcfg)
+        }));
+        for ci in lo..hi {
+            let shard = shards_by_id[ci as usize].take().unwrap();
+            let addr = relay_addr.clone();
+            let comp = crate::compressors::by_name(
+                "topk",
+                d,
+                K_MULT,
+                cfg.seed + ci as u64,
+            )?;
+            client_handles.push(std::thread::spawn(move || {
+                use crate::algorithms::ClientState;
+                use crate::net::client::ClientMode;
+                use crate::oracle::LogisticOracle;
+                let id = shard.client_id;
+                let oracle =
+                    Box::new(LogisticOracle::new(shard, spec.lam));
+                run_client(
+                    &addr,
+                    id,
+                    ClientMode::FedNL(ClientState::new(
+                        id, oracle, comp, None,
+                    )),
+                )
+            }));
+        }
+    }
+    let mut relay_pool =
+        FaultPool::new(RelayPool::accept(master_bound, 2)?, plan);
+    let t_relay = run_fednl_pool(
+        &mut relay_pool,
+        &opts,
+        x0,
+        "shardsmoke/relay-S2",
+    );
+    relay_pool.into_inner().shutdown();
+    for h in relay_handles {
+        let _ = h.join();
+    }
+    for h in client_handles {
+        let _ = h.join();
+    }
+
+    // The headline invariant: same plan, same policy → bit-identical
+    // trajectories for S=1 / S=3 in-process / S=2 over TCP relays.
+    // (Byte columns are compared only for the in-process tier: the
+    // relay transport meters master↔relay traffic, a different — and
+    // honest — transport-level quantity.)
+    for (t, name, check_bytes) in
+        [(&t_sh3, "sharded-S3", true), (&t_relay, "relay-S2", false)]
+    {
+        anyhow::ensure!(
+            t.records.len() == t_seq.records.len(),
+            "shardsmoke: {name} ran {} rounds vs seq {}",
+            t.records.len(),
+            t_seq.records.len()
+        );
+        for (a, b) in t_seq.records.iter().zip(&t.records) {
+            anyhow::ensure!(
+                a.grad_norm.to_bits() == b.grad_norm.to_bits()
+                    && a.loss.to_bits() == b.loss.to_bits()
+                    && a.committed == b.committed
+                    && a.missing == b.missing
+                    && (!check_bytes || a.bytes_up == b.bytes_up),
+                "shardsmoke: {name} diverged from seq at round {}: \
+                 grad {:.17e} vs {:.17e}, committed {}/{} vs {}/{}",
+                a.round,
+                a.grad_norm,
+                b.grad_norm,
+                a.committed,
+                a.committed + a.missing,
+                b.committed,
+                b.committed + b.missing
+            );
+        }
+    }
+    let lost: u32 = t_seq.records.iter().map(|r| r.missing).sum();
+    anyhow::ensure!(lost > 0, "shardsmoke: no fault ever engaged");
+    let first = t_seq.records.first().map(|r| r.grad_norm).unwrap_or(0.0);
+    let last = t_seq.last_grad_norm();
+    anyhow::ensure!(
+        last.is_finite() && last < first * 1e-2,
+        "shardsmoke: no convergence under faults ({first:.3e} → {last:.3e})"
+    );
+
+    // Artifact: per-shard wait/aggregate split + the (identical)
+    // per-round trace.
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"plan\": \"{plan_spec}\",\n"));
+    json.push_str(
+        "  \"policy\": {\"quorum\": 3, \"deadline_ms\": 2000, \
+         \"on_missing\": \"drop\"},\n",
+    );
+    json.push_str(&format!(
+        "  \"n_clients\": {}, \"rounds\": {rounds},\n",
+        p.n_clients
+    ));
+    json.push_str(
+        "  \"configs\": [\"seq\", \"sharded-S3\", \"relay-S2\"], \
+         \"bit_identical\": true,\n",
+    );
+    json.push_str("  \"per_shard_S3\": [\n");
+    for (i, st) in shard_stats.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"shard\": {}, \"clients\": {}, \"wait_s\": {:.6}, \
+             \"aggregate_s\": {:.6}, \"msgs\": {}}}{}\n",
+            st.shard,
+            st.clients,
+            st.wait_s,
+            st.aggregate_s,
+            st.msgs,
+            if i + 1 < shard_stats.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n  \"trace\": [\n");
+    for (i, r) in t_seq.records.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"round\": {}, \"grad_norm\": {:e}, \"committed\": {}, \
+             \"missing\": {}}}{}\n",
+            r.round,
+            r.grad_norm,
+            r.committed,
+            r.missing,
+            if i + 1 < t_seq.records.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let json_path = format!("{}/shardsmoke_trace.json", cfg.out_dir);
+    std::fs::write(&json_path, &json)?;
+
+    let mut out = format!(
+        "## Shard smoke — FedNL through the sharded aggregation tier \
+         under `{plan_spec}` (n={}, quorum=3, r={rounds})\n\n",
+        p.n_clients
+    );
+    let mut table = Table::new(&[
+        "Topology",
+        "||∇f||_final",
+        "Rounds",
+        "Lost contributions",
+        "Bit-identical to seq",
+    ]);
+    for (t, name) in [
+        (&t_seq, "seq (S=1)"),
+        (&t_sh3, "sharded in-process (S=3)"),
+        (&t_relay, "TCP relay tier (S=2)"),
+    ] {
+        table.row(&[
+            name.to_string(),
+            sci(t.last_grad_norm()),
+            format!("{}", t.records.len()),
+            format!("{}", t.records.iter().map(|r| r.missing).sum::<u32>()),
+            "yes".to_string(),
+        ]);
+    }
+    out.push_str(&table.to_markdown());
+    out.push_str(&format!("\nPer-shard stats written to {json_path}\n"));
     Ok(out)
 }
 

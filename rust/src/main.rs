@@ -18,14 +18,17 @@ use fednl::algorithms::{
 };
 use fednl::cli::Args;
 use fednl::compressors::by_name;
-use fednl::coordinator::{ClientPool, FaultPlan, FaultPool, ThreadedPool};
+use fednl::coordinator::{
+    ClientPool, FaultPlan, FaultPool, ShardedPool, ThreadedPool,
+};
 use fednl::data::{
     generate_synthetic, parse_libsvm_file, write_libsvm, Dataset, SynthSpec,
 };
 use fednl::harness::{self, HarnessCfg, Scale};
 use fednl::metrics::rusage::ResourceSnapshot;
+use fednl::metrics::Trace;
 use fednl::net::client::ClientMode;
-use fednl::net::{run_client, RemotePool};
+use fednl::net::{run_client, run_relay, RelayCfg, RelayPool, RemotePool};
 use fednl::oracle::{numerics, LogisticOracle, Oracle};
 use fednl::runtime::PjrtRuntime;
 use fednl::utils::{human_secs, Stopwatch};
@@ -37,6 +40,7 @@ fn main() -> Result<()> {
         Some("split") => cmd_split(&args),
         Some("train") => cmd_train(&args),
         Some("master") => cmd_master(&args),
+        Some("relay") => cmd_relay(&args),
         Some("client") => cmd_client(&args),
         Some("verify") => cmd_verify(&args),
         Some("experiment") => cmd_experiment(&args),
@@ -62,16 +66,22 @@ fn print_usage() {
          \x20            [--intra-threads 1] [--quorum Q] [--deadline-ms MS]\n\
          \x20            [--on-missing drop|resample|reuse] [--fault-plan SPEC]\n\
          \x20 master     --listen ADDR --clients N --algo ... [--rounds R] [--tol T]\n\
-         \x20            [--quorum Q] [--deadline-ms MS] [--on-missing P] [--fault-plan SPEC]\n\
+         \x20            [--shards S] [--quorum Q] [--deadline-ms MS]\n\
+         \x20            [--on-missing P] [--fault-plan SPEC]\n\
+         \x20 relay      --connect MASTER --listen ADDR --shard I --base B --clients K\n\
+         \x20            (shard aggregator: clients of ids [B, B+K) connect here)\n\
          \x20 client     --connect ADDR --id I --data SHARD [--algo fednl|fednl-pp]\n\
          \x20            [--compressor topk] [--k-mult 8] [--lam 1e-3]\n\
          \x20 verify     --data FILE [--lam 1e-3]   (finite-difference oracle check)\n\
          \x20 experiment table1|table2|table3|table5|fig1..fig12|costmodel|tcpsmoke|\n\
-         \x20            faultsmoke|all [--full] [--out-dir results] [--pjrt]\n\
-         \x20            [--threads N] [--seq]\n\
+         \x20            faultsmoke|shardsmoke|all [--full] [--out-dir results]\n\
+         \x20            [--pjrt] [--threads N] [--seq]\n\
          \x20 sysinfo\n\n\
          FAULT PLANS (--fault-plan): comma-separated kill@R:C[-R2] | drop@R:C |\n\
-         delay@R:C:MS — deterministic master-side injection (see coordinator::faults)."
+         delay@R:C:MS — deterministic master-side injection (see coordinator::faults).\n\
+         SHARD TIER: `train --shards S` shards in-process; for TCP, run\n\
+         `master --shards S`, one `relay` per shard, and point each client at\n\
+         its shard's relay. Trajectories are bit-identical to unsharded runs."
     );
 }
 
@@ -162,8 +172,15 @@ fn build_oracle(
 }
 
 /// Shared `--quorum` / `--deadline-ms` / `--on-missing` parsing for
-/// `train` and `master`.
-fn round_policy(args: &Args) -> Result<RoundPolicy> {
+/// `train` and `master`, validated against the run's client count and
+/// transport at parse time (`RoundPolicy::validate`): an unsatisfiable
+/// policy fails here with a clear message instead of aborting — or
+/// hanging — mid-run.
+fn round_policy(
+    args: &Args,
+    n_clients: usize,
+    remote: bool,
+) -> Result<RoundPolicy> {
     let quorum = match args.get("quorum") {
         None => None,
         Some(v) => Some(v.parse::<usize>().map_err(|_| {
@@ -177,7 +194,9 @@ fn round_policy(args: &Args) -> Result<RoundPolicy> {
         })?),
     };
     let on_missing = OnMissing::parse(args.get_or("on-missing", "drop"))?;
-    Ok(RoundPolicy { quorum, deadline_ms, on_missing })
+    let policy = RoundPolicy { quorum, deadline_ms, on_missing };
+    policy.validate(n_clients, remote, args.get("on-missing").is_some())?;
+    Ok(policy)
 }
 
 /// `--fault-plan SPEC` (empty plan when absent — the `FaultPool`
@@ -211,6 +230,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     fednl::linalg::simd::set_intra_threads(
         args.get_usize("intra-threads", 1)?,
     );
+    // In-process sharded aggregation tier: S > 1 partitions the
+    // clients over S shard aggregators (bit-identical trajectories).
+    let n_shards = args.get_usize("shards", 1)?;
+    anyhow::ensure!(
+        n_shards >= 1 && n_shards <= n_clients,
+        "--shards must be in [1, {n_clients}]"
+    );
     let sw = Stopwatch::start();
     let (ds, shards) = load_shards(data, n_clients, seed)?;
     let d = ds.d;
@@ -221,7 +247,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         tol_grad: tol,
         track_loss: true,
         warm_start: args.flag("warm-start"),
-        policy: round_policy(args)?,
+        policy: round_policy(args, n_clients, false)?,
         ..Default::default()
     };
     let plan = fault_plan(args)?;
@@ -242,18 +268,34 @@ fn cmd_train(args: &Args) -> Result<()> {
                     ))
                 })
                 .collect::<Result<_>>()?;
-            let mut pool =
-                FaultPool::new(ThreadedPool::new(clients, threads), plan);
-            if algo == "fednl" {
-                run_fednl_pool(&mut pool, &opts, x0, &format!("FedNL/{comp}"))
+            let mut run = |pool: &mut dyn ClientPool| {
+                if algo == "fednl" {
+                    run_fednl_pool(
+                        pool,
+                        &opts,
+                        x0.clone(),
+                        &format!("FedNL/{comp}"),
+                    )
+                } else {
+                    run_fednl_ls_pool(
+                        pool,
+                        &opts,
+                        &LineSearchParams::default(),
+                        x0.clone(),
+                        &format!("FedNL-LS/{comp}"),
+                    )
+                }
+            };
+            if n_shards > 1 {
+                let mut pool = FaultPool::new(
+                    ShardedPool::new_threaded(clients, n_shards, threads),
+                    plan,
+                );
+                run(&mut pool)
             } else {
-                run_fednl_ls_pool(
-                    &mut pool,
-                    &opts,
-                    &LineSearchParams::default(),
-                    x0,
-                    &format!("FedNL-LS/{comp}"),
-                )
+                let mut pool =
+                    FaultPool::new(ThreadedPool::new(clients, threads), plan);
+                run(&mut pool)
             }
         }
         "fednl-pp" => {
@@ -273,16 +315,18 @@ fn cmd_train(args: &Args) -> Result<()> {
                 .collect::<Result<_>>()?;
             // PP runs on the same multi-core pool as FedNL/LS now that
             // participation subsets are part of the pool API.
-            let mut pool =
-                FaultPool::new(ThreadedPool::new(clients, threads), plan);
-            run_fednl_pp_pool(
-                &mut pool,
-                &opts,
-                tau,
-                seed,
-                x0,
-                &format!("FedNL-PP/{comp}"),
-            )
+            let label = format!("FedNL-PP/{comp}");
+            if n_shards > 1 {
+                let mut pool = FaultPool::new(
+                    ShardedPool::new_threaded(clients, n_shards, threads),
+                    plan,
+                );
+                run_fednl_pp_pool(&mut pool, &opts, tau, seed, x0, &label)
+            } else {
+                let mut pool =
+                    FaultPool::new(ThreadedPool::new(clients, threads), plan);
+                run_fednl_pp_pool(&mut pool, &opts, tau, seed, x0, &label)
+            }
         }
         other => bail!("unknown algo '{other}'"),
     };
@@ -303,44 +347,78 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_master(args: &Args) -> Result<()> {
-    let listen = args.get_or("listen", "0.0.0.0:7700");
-    let n_clients = args.get_usize("clients", 2)?;
-    let algo = args.get_or("algo", "fednl");
-    let rounds = args.get_u64("rounds", 100)?;
-    let tol = args.get("tol").map(|t| t.parse::<f64>()).transpose()?;
-    let seed = args.get_u64("seed", 0x5EED)?;
-    println!("master: waiting for {n_clients} clients on {listen} ...");
-    let mut pool = FaultPool::new(
-        RemotePool::listen(listen, n_clients)?,
-        fault_plan(args)?,
-    );
-    let d = pool.dim();
-    println!("master: all clients registered (d = {d})");
-    let opts = Options {
-        rounds,
-        tol_grad: tol,
-        track_loss: algo == "fednl-ls",
-        policy: round_policy(args)?,
-        ..Default::default()
-    };
-    let x0 = vec![0.0; d];
-    let trace = match algo {
-        "fednl" => run_fednl_pool(&mut pool, &opts, x0, "FedNL/tcp"),
+/// Algorithm dispatch shared by the flat and sharded TCP masters.
+fn run_master_algo(
+    pool: &mut dyn ClientPool,
+    args: &Args,
+    opts: &Options,
+    algo: &str,
+    n_clients: usize,
+    seed: u64,
+) -> Result<Trace> {
+    let x0 = vec![0.0; pool.dim()];
+    Ok(match algo {
+        "fednl" => run_fednl_pool(pool, opts, x0, "FedNL/tcp"),
         "fednl-ls" => run_fednl_ls_pool(
-            &mut pool,
-            &opts,
+            pool,
+            opts,
             &LineSearchParams::default(),
             x0,
             "FedNL-LS/tcp",
         ),
         "fednl-pp" => {
             let tau = args.get_usize("tau", (n_clients / 4).max(1))?;
-            run_fednl_pp_pool(&mut pool, &opts, tau, seed, x0, "FedNL-PP/tcp")
+            run_fednl_pp_pool(pool, opts, tau, seed, x0, "FedNL-PP/tcp")
         }
         other => bail!("unknown algo '{other}'"),
+    })
+}
+
+fn cmd_master(args: &Args) -> Result<()> {
+    let listen = args.get_or("listen", "0.0.0.0:7700");
+    let n_clients = args.get_usize("clients", 2)?;
+    let n_shards = args.get_usize("shards", 0)?;
+    let algo = args.get_or("algo", "fednl");
+    let rounds = args.get_u64("rounds", 100)?;
+    let tol = args.get("tol").map(|t| t.parse::<f64>()).transpose()?;
+    let seed = args.get_u64("seed", 0x5EED)?;
+    let opts = Options {
+        rounds,
+        tol_grad: tol,
+        track_loss: algo == "fednl-ls",
+        policy: round_policy(args, n_clients, true)?,
+        ..Default::default()
     };
-    pool.into_inner().shutdown();
+    let plan = fault_plan(args)?;
+    let trace = if n_shards > 0 {
+        // Sharded aggregation tier: S relay aggregators register, each
+        // owning a contiguous client partition (`fednl relay`).
+        println!("master: waiting for {n_shards} relays on {listen} ...");
+        let mut pool =
+            FaultPool::new(RelayPool::listen(listen, n_shards)?, plan);
+        anyhow::ensure!(
+            pool.inner_mut().n_clients() == n_clients,
+            "relays cover {} clients, --clients says {n_clients}",
+            pool.inner_mut().n_clients()
+        );
+        println!(
+            "master: all relays registered (d = {}, n = {n_clients})",
+            pool.dim()
+        );
+        let trace =
+            run_master_algo(&mut pool, args, &opts, algo, n_clients, seed)?;
+        pool.into_inner().shutdown();
+        trace
+    } else {
+        println!("master: waiting for {n_clients} clients on {listen} ...");
+        let mut pool =
+            FaultPool::new(RemotePool::listen(listen, n_clients)?, plan);
+        println!("master: all clients registered (d = {})", pool.dim());
+        let trace =
+            run_master_algo(&mut pool, args, &opts, algo, n_clients, seed)?;
+        pool.into_inner().shutdown();
+        trace
+    };
     println!(
         "done: {} rounds, ||grad|| = {:.3e}, wall {}",
         trace.records.len(),
@@ -350,6 +428,37 @@ fn cmd_master(args: &Args) -> Result<()> {
     if let Some(path) = args.get("trace") {
         trace.write_csv(path)?;
     }
+    Ok(())
+}
+
+fn cmd_relay(args: &Args) -> Result<()> {
+    let cfg = RelayCfg {
+        shard_id: args.get_usize("shard", 0)? as u32,
+        base: args.get_usize("base", 0)? as u32,
+        count: args.get_usize("clients", 2)?,
+        listen: args.get_or("listen", "0.0.0.0:7800").to_string(),
+        connect: args
+            .get("connect")
+            .context("--connect (master address) required")?
+            .to_string(),
+    };
+    println!(
+        "relay {}: serving clients [{}, {}) on {}, master {}",
+        cfg.shard_id,
+        cfg.base,
+        cfg.base as usize + cfg.count,
+        cfg.listen,
+        cfg.connect
+    );
+    let report = run_relay(&cfg)?;
+    println!(
+        "relay {}: down {} B in / {} B out, up {} B out / {} B in",
+        cfg.shard_id,
+        report.down_recv,
+        report.down_sent,
+        report.up_sent,
+        report.up_recv
+    );
     Ok(())
 }
 
@@ -425,6 +534,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             "costmodel" => harness::costmodel(),
             "tcpsmoke" => harness::tcp_smoke(&cfg)?,
             "faultsmoke" => harness::fault_smoke(&cfg)?,
+            "shardsmoke" => harness::shard_smoke(&cfg)?,
             f if f.starts_with("fig") => {
                 let n: usize = f[3..].parse().context("figN")?;
                 if n <= 3 {
@@ -443,9 +553,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         ))
     };
     let all = [
-        "costmodel", "tcpsmoke", "faultsmoke", "table1", "table2", "table3",
-        "table5", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7",
-        "fig8", "fig9", "fig10", "fig11", "fig12",
+        "costmodel", "tcpsmoke", "faultsmoke", "shardsmoke", "table1",
+        "table2", "table3", "table5", "fig1", "fig2", "fig3", "fig4",
+        "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
     ];
     let list: Vec<&str> =
         if which == "all" { all.to_vec() } else { vec![which] };

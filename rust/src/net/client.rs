@@ -145,9 +145,12 @@ pub fn run_client_with(
     Ok((ch.bytes_sent, ch.bytes_received))
 }
 
-/// The master may come up after the clients (Slurm-style co-scheduling):
-/// retry the connect with backoff.
-fn connect_with_retry(addr: &str, attempts: u32) -> Result<TcpStream> {
+/// The master may come up after the clients (Slurm-style co-scheduling;
+/// same for relays connecting upward): retry the connect with backoff.
+pub(crate) fn connect_with_retry(
+    addr: &str,
+    attempts: u32,
+) -> Result<TcpStream> {
     let mut delay = std::time::Duration::from_millis(20);
     for i in 0..attempts {
         match TcpStream::connect(addr) {

@@ -10,12 +10,20 @@
 //! * fixed-width 32-bit indices on the wire (beat varints);
 //! * RandK/RandSeqK transmit a PRG seed / start index, and the master
 //!   reconstructs the coordinate set.
+//!
+//! The [`relay`] module adds the sharded aggregation tier on top:
+//! relay aggregator processes that speak this client protocol downward
+//! and the `SHARD_*` frames upward, so master fan-in scales as the
+//! shard count instead of the client count (see `coordinator::shard`
+//! for the determinism contract).
 
 pub mod client;
 pub mod framing;
+pub mod relay;
 pub mod server;
 pub mod wire;
 
 pub use client::{run_client, run_client_with, ClientOpts};
 pub use framing::{Channel, FRAME_HEADER_BYTES};
+pub use relay::{run_relay, run_relay_on, RelayCfg, RelayPool};
 pub use server::RemotePool;

@@ -1,0 +1,762 @@
+//! The TCP shard tier: relay aggregator processes between the master
+//! and its clients (`coordinator::shard`'s real-network sibling).
+//!
+//! Topology (paper §9.3 star, one level deeper):
+//!
+//! ```text
+//!   master ──(S relay channels)── relay s ──(n/S client channels)── clients
+//! ```
+//!
+//! A relay ([`run_relay`]) is a [`RemotePool`] bound to its contiguous
+//! global-id partition `[base, base+count)` on the *downward* side —
+//! it speaks the ordinary client-facing wire protocol, so **clients
+//! cannot tell a relay from the master** — and a command-driven
+//! aggregator on the *upward* side, answering the `SHARD_*` frames
+//! (tag table in `net::wire`). Each round it fans the ROUND out to its
+//! partition, collects and orders the replies in round-subset order,
+//! certifies its losses, and forwards **one** `SHARD_MSG` frame: the
+//! master's fan-in per round drops from `n` messages on `n` sockets to
+//! `S` frames on `S` sockets, while relay-side recv/decode/deadline
+//! work runs in parallel across relays.
+//!
+//! [`RelayPool`] is the master-side face: a [`ClientPool`] over the
+//! whole client set, so the round engine drives a relayed deployment
+//! unchanged. Determinism is inherited from the shard contract
+//! (`coordinator::shard` module docs): relays forward per-client
+//! atoms in commit order, the master folds relay batches in ascending
+//! shard id, and the engine's commit buffer restores global subset
+//! order — trajectories are bit-identical to the unsharded run.
+//!
+//! # Liveness through the tier
+//!
+//! * A relay certifies its lost clients upward (`SHARD_MSG` carries
+//!   the partition's missing ids; `SHARD_PREPPED` its dead/rejoined
+//!   sets from the retained downward listener).
+//! * A lost **relay** (connection error, or a round reply missing the
+//!   deadline-plus-slack budget) is retired and its whole partition is
+//!   certified missing for the round in flight and reported dead
+//!   thereafter — the engine's quorum/`on_missing` policy absorbs it
+//!   like any other loss. Relay *re*-registration is not supported
+//!   (ROADMAP known limit); client rejoin under a live relay works
+//!   exactly as under a flat master.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::client::connect_with_retry;
+use super::framing::Channel;
+use super::server::Bound;
+use super::wire::{self, c2s, s2c};
+use crate::algorithms::ClientMsg;
+use crate::coordinator::{ClientFamily, ClientPool};
+
+/// Extra patience the master grants a relay on top of the per-client
+/// reply deadline: the relay must first wait out its own stragglers
+/// before its SHARD_MSG can exist.
+const RELAY_DEADLINE_SLACK: Duration = Duration::from_millis(2000);
+
+/// One relay process' configuration (CLI `fednl relay`).
+#[derive(Debug, Clone)]
+pub struct RelayCfg {
+    /// This relay's shard id (0-based, unique per master).
+    pub shard_id: u32,
+    /// First global client id of the partition.
+    pub base: u32,
+    /// Clients in the partition.
+    pub count: usize,
+    /// Downward listen address for the partition's clients.
+    pub listen: String,
+    /// Upward master address.
+    pub connect: String,
+}
+
+/// Byte totals a finished relay reports (downward pool, upward link).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RelayReport {
+    pub down_recv: u64,
+    pub down_sent: u64,
+    pub up_sent: u64,
+    pub up_recv: u64,
+}
+
+/// Run one relay aggregator to completion (returns after the master's
+/// SHUTDOWN, which is forwarded to the partition's clients).
+pub fn run_relay(cfg: &RelayCfg) -> Result<RelayReport> {
+    let bound = Bound::bind(&cfg.listen)?;
+    run_relay_on(bound, cfg)
+}
+
+/// As [`run_relay`] over a pre-bound downward listener (lets harnesses
+/// learn the ephemeral port before spawning the partition's clients).
+pub fn run_relay_on(bound: Bound, cfg: &RelayCfg) -> Result<RelayReport> {
+    // Downward first: the relay must know its partition's (d, family)
+    // before it can register upward.
+    let mut down = bound.accept_base(cfg.count, cfg.base)?;
+    let d = down.dim();
+    let family = match down.family() {
+        ClientFamily::FedNL => wire::FAMILY_FEDNL,
+        ClientFamily::PP => wire::FAMILY_PP,
+    };
+    let stream = connect_with_retry(&cfg.connect, 50)?;
+    let mut up = Channel::new(stream)?;
+    up.send(
+        c2s::SHARD_REGISTER,
+        &wire::encode_shard_register(
+            cfg.shard_id,
+            cfg.base,
+            cfg.count as u32,
+            d as u32,
+            family,
+        ),
+    )?;
+
+    loop {
+        // Master gone (EOF) = orderly end of the run from the relay's
+        // point of view: release the clients and exit.
+        let Ok((tag, payload)) = up.recv() else {
+            down.shutdown();
+            break;
+        };
+        match tag {
+            s2c::SHARD_ROUND => {
+                let (x, round, need_loss, deadline_ms, subset) =
+                    wire::decode_shard_round(&payload)?;
+                let deadline = (deadline_ms > 0)
+                    .then(|| Duration::from_millis(deadline_ms));
+                down.set_reply_deadline(deadline);
+                down.submit_round(&x, Some(&subset), round, need_loss);
+                let mut msgs: Vec<ClientMsg> = Vec::new();
+                loop {
+                    let batch = down.drain();
+                    if batch.is_empty() {
+                        break;
+                    }
+                    msgs.extend(batch);
+                }
+                let mut missing = down.take_missing();
+                // The shard-internal commit order: round-subset order.
+                // (RemotePool already surfaces replies in that order;
+                // sorting keeps the contract explicit and transport-
+                // independent.)
+                let pos = |ci: u32| {
+                    subset
+                        .iter()
+                        .position(|&c| c == ci)
+                        .expect("reply outside the round subset")
+                };
+                msgs.sort_by_key(|m| pos(m.client_id as u32));
+                missing.sort_by_key(|&c| pos(c));
+                up.send(
+                    c2s::SHARD_MSG,
+                    &wire::encode_shard_msg(cfg.shard_id, &msgs, &missing),
+                )?;
+            }
+            s2c::SHARD_PREP => {
+                let r = {
+                    let mut rd = crate::utils::ByteReader::new(&payload);
+                    rd.get_u64()?
+                };
+                down.prepare_round(r);
+                let rejoined = down.take_rejoined();
+                let dead = down.dead_clients();
+                up.send(
+                    c2s::SHARD_PREPPED,
+                    &wire::encode_shard_prepped(&rejoined, &dead),
+                )?;
+            }
+            s2c::SHARD_PULL => {
+                let client = {
+                    let mut rd = crate::utils::ByteReader::new(&payload);
+                    rd.get_u32()?
+                };
+                let state = down.pull_state(client);
+                up.send(
+                    c2s::SHARD_PULLED,
+                    &wire::encode_shard_pulled(
+                        state.as_ref().map(|(l, g)| (*l, g.as_slice())),
+                    ),
+                )?;
+            }
+            s2c::EVAL_LOSS => {
+                let x = wire::decode_vec(&payload)?;
+                let parts = down.eval_loss_each(&x);
+                up.send(c2s::SHARD_LOSSES, &wire::encode_id_scalars(&parts))?;
+            }
+            s2c::LOSS_GRAD => {
+                let x = wire::decode_vec(&payload)?;
+                let parts = down.loss_grad_each(&x);
+                up.send(
+                    c2s::SHARD_GRADS,
+                    &wire::encode_id_scalar_vecs(&parts),
+                )?;
+            }
+            s2c::WARM_START => {
+                let x = wire::decode_vec(&payload)?;
+                let packs = down.warm_start(&x);
+                up.send(c2s::SHARD_WARM, &wire::encode_vec_batch(&packs))?;
+            }
+            s2c::STATE => {
+                let states = down.init_state();
+                let parts: Vec<(u32, f64, Vec<f64>)> = states
+                    .into_iter()
+                    .enumerate()
+                    .map(|(slot, (l, g))| {
+                        (cfg.base + slot as u32, l, g)
+                    })
+                    .collect();
+                up.send(
+                    c2s::SHARD_STATES,
+                    &wire::encode_id_scalar_vecs(&parts),
+                )?;
+            }
+            s2c::SET_ALPHA => {
+                // Forward the negotiation (finite = install, NaN =
+                // query) and echo the partition's effective α upward.
+                let a = wire::decode_scalar(&payload)?;
+                let effective = down.set_alpha(a);
+                up.send(c2s::ACK, &wire::encode_scalar(effective))?;
+            }
+            s2c::SHUTDOWN => {
+                down.shutdown();
+                break;
+            }
+            other => anyhow::bail!("relay: unknown command tag {other}"),
+        }
+    }
+    let (down_recv, down_sent) = down.transport_bytes().unwrap_or((0, 0));
+    Ok(RelayReport {
+        down_recv,
+        down_sent,
+        up_sent: up.bytes_sent,
+        up_recv: up.bytes_received,
+    })
+}
+
+/// Master-side handle to `S` relay aggregators, presented as one
+/// [`ClientPool`] over the whole client set.
+pub struct RelayPool {
+    /// Upward channels indexed by shard id (`None` = lost relay).
+    relays: Vec<Option<Channel>>,
+    /// Global-id range `[lo, hi)` per shard (contiguous, ascending).
+    ranges: Vec<(u32, u32)>,
+    n_clients: usize,
+    d: usize,
+    family: ClientFamily,
+    alpha: f64,
+    /// Shards with an outstanding SHARD_MSG, ascending shard id.
+    pending: VecDeque<u32>,
+    /// Participants of the round in flight, per shard (cleared once
+    /// the shard's batch arrives; a relay lost mid-round certifies the
+    /// remainder).
+    outstanding: Vec<Vec<u32>>,
+    missing: Vec<u32>,
+    rejoined: Vec<u32>,
+    /// Dead clients per live shard, from the last SHARD_PREPPED poll.
+    shard_dead: Vec<Vec<u32>>,
+    deadline: Option<Duration>,
+    retired_bytes: (u64, u64),
+}
+
+impl RelayPool {
+    /// Listen on `addr` until exactly `n_shards` relays register; the
+    /// partitions must tile `0..n` contiguously.
+    pub fn listen(addr: &str, n_shards: usize) -> Result<Self> {
+        Self::accept(Bound::bind(addr)?, n_shards)
+    }
+
+    /// Accept `n_shards` relay registrations on a pre-bound socket.
+    pub fn accept(bound: Bound, n_shards: usize) -> Result<Self> {
+        let listener = bound.into_listener();
+        let mut relays: Vec<Option<Channel>> =
+            (0..n_shards).map(|_| None).collect();
+        let mut ranges: Vec<Option<(u32, u32)>> = vec![None; n_shards];
+        let mut d = 0u32;
+        let mut family = None;
+        let mut registered = 0;
+        while registered < n_shards {
+            let (stream, _) = listener.accept()?;
+            let mut ch = Channel::new(stream)?;
+            let (tag, payload) = ch.recv()?;
+            anyhow::ensure!(
+                tag == c2s::SHARD_REGISTER,
+                "expected SHARD_REGISTER"
+            );
+            let (sid, base, count, dim, fam) =
+                wire::decode_shard_register(&payload)?;
+            let sid = sid as usize;
+            anyhow::ensure!(sid < n_shards, "shard id {sid} out of range");
+            anyhow::ensure!(relays[sid].is_none(), "duplicate shard {sid}");
+            if d == 0 {
+                d = dim;
+            } else {
+                anyhow::ensure!(d == dim, "shard dimension mismatch");
+            }
+            let f = match fam {
+                wire::FAMILY_FEDNL => ClientFamily::FedNL,
+                _ => ClientFamily::PP,
+            };
+            match family {
+                None => family = Some(f),
+                Some(prev) => anyhow::ensure!(
+                    prev == f,
+                    "shard {sid} registered as {f:?} but earlier shards \
+                     as {prev:?}: the tier is family-homogeneous"
+                ),
+            }
+            relays[sid] = Some(ch);
+            ranges[sid] = Some((base, base + count));
+            registered += 1;
+        }
+        let ranges: Vec<(u32, u32)> =
+            ranges.into_iter().map(|r| r.unwrap()).collect();
+        let mut expect = 0u32;
+        for (s, &(lo, hi)) in ranges.iter().enumerate() {
+            anyhow::ensure!(
+                lo == expect,
+                "shard {s} partition starts at {lo}, expected {expect}: \
+                 partitions must tile 0..n contiguously in shard order"
+            );
+            expect = hi;
+        }
+        let n_shards_len = relays.len();
+        Ok(Self {
+            relays,
+            ranges,
+            n_clients: expect as usize,
+            d: d as usize,
+            family: family.context("no shards registered")?,
+            alpha: 0.0,
+            pending: VecDeque::new(),
+            outstanding: vec![Vec::new(); n_shards_len],
+            missing: Vec::new(),
+            rejoined: Vec::new(),
+            shard_dead: vec![Vec::new(); n_shards_len],
+            deadline: None,
+            retired_bytes: (0, 0),
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.relays.len()
+    }
+
+    /// Retire a relay: fold its byte meters, certify the round
+    /// participants it still owed, and mark its whole partition dead.
+    fn drop_relay(&mut self, s: usize) {
+        if let Some(ch) = self.relays[s].take() {
+            self.retired_bytes.0 += ch.bytes_received;
+            self.retired_bytes.1 += ch.bytes_sent;
+        }
+        self.missing.append(&mut self.outstanding[s]);
+        self.shard_dead[s].clear();
+    }
+
+    /// Send one command to every live relay; returns the shard ids
+    /// actually sent (send failures drop the relay).
+    fn ask_relays(&mut self, tag: u8, payload: &[u8]) -> Vec<usize> {
+        let mut asked = Vec::with_capacity(self.relays.len());
+        for s in 0..self.relays.len() {
+            if let Some(ch) = self.relays[s].as_mut() {
+                match ch.send(tag, payload) {
+                    Ok(()) => asked.push(s),
+                    Err(_) => self.drop_relay(s),
+                }
+            }
+        }
+        asked
+    }
+
+    /// Blocking receive of one probe reply from shard `s` (unbounded,
+    /// like `RemotePool`'s probe receives — WARM_START legitimately
+    /// exceeds round deadlines). Failures drop the relay and return
+    /// `None` so the reduction proceeds over the surviving partitions.
+    fn recv_expect(&mut self, s: usize, want: u8) -> Option<Vec<u8>> {
+        self.recv_expect_within(s, want, None)
+    }
+
+    /// As [`RelayPool::recv_expect`] with an explicit receive budget —
+    /// the per-round exchanges (SHARD_PREP) use `deadline + slack` so
+    /// a hung-but-connected relay is certified lost instead of
+    /// stalling the run the quorum policy is protecting.
+    fn recv_expect_within(
+        &mut self,
+        s: usize,
+        want: u8,
+        timeout: Option<Duration>,
+    ) -> Option<Vec<u8>> {
+        let ch = self.relays[s].as_mut()?;
+        let _ = ch.set_read_timeout(timeout);
+        match ch.recv() {
+            Ok((tag, payload)) if tag == want => Some(payload),
+            _ => {
+                self.drop_relay(s);
+                None
+            }
+        }
+    }
+
+    /// Politely shut the tier down (relays forward to their clients).
+    pub fn shutdown(&mut self) {
+        for ch in self.relays.iter_mut().flatten() {
+            let _ = ch.send(s2c::SHUTDOWN, &[]);
+        }
+    }
+}
+
+impl ClientPool for RelayPool {
+    fn n_clients(&self) -> usize {
+        self.n_clients
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn family(&self) -> ClientFamily {
+        self.family
+    }
+
+    fn kind_name(&self) -> &'static str {
+        "relay"
+    }
+
+    fn default_alpha(&self) -> f64 {
+        // NaN = "ask the tier": the SET_ALPHA negotiation cascades
+        // through the relays to the clients (see `RemotePool`).
+        if self.alpha > 0.0 {
+            self.alpha
+        } else {
+            f64::NAN
+        }
+    }
+
+    fn set_alpha(&mut self, alpha: f64) -> f64 {
+        let payload = wire::encode_scalar(alpha);
+        let asked = self.ask_relays(s2c::SET_ALPHA, &payload);
+        let mut echoes = Vec::with_capacity(asked.len());
+        for s in asked {
+            if let Some(p) = self.recv_expect(s, c2s::ACK) {
+                if let Ok(a) = wire::decode_scalar(&p) {
+                    echoes.push(a);
+                }
+            }
+        }
+        let (resolved, homogeneous) =
+            wire::fold_alpha_echoes(alpha, echoes);
+        // Mixed per-shard echoes: install the resolved α uniformly so
+        // every partition trains with the α the master aggregates with
+        // (mirrors RemotePool::set_alpha; no-op when homogeneous).
+        if !homogeneous && resolved.is_finite() && resolved > 0.0 {
+            let payload = wire::encode_scalar(resolved);
+            let asked = self.ask_relays(s2c::SET_ALPHA, &payload);
+            for s in asked {
+                let _ = self.recv_expect(s, c2s::ACK);
+            }
+        }
+        self.alpha = resolved;
+        resolved
+    }
+
+    fn set_reply_deadline(&mut self, deadline: Option<Duration>) {
+        self.deadline = deadline.map(|d| d.max(Duration::from_millis(1)));
+    }
+
+    fn prepare_round(&mut self, round: u64) {
+        // One liveness poll per relay per round: rejoins admitted by
+        // the relays' retained listeners surface here, and the dead
+        // sets feed the PP resampling policy.
+        let payload = {
+            let mut w = crate::utils::ByteWriter::with_capacity(8);
+            w.put_u64(round);
+            w.into_vec()
+        };
+        let asked = self.ask_relays(s2c::SHARD_PREP, &payload);
+        // Bounded per-round exchange: with a reply deadline configured
+        // a wedged relay must become a certified loss here, not a
+        // master hang (the flat master's prepare_round is non-blocking
+        // for the same reason).
+        let budget = self.deadline.map(|d| d + RELAY_DEADLINE_SLACK);
+        for s in asked {
+            match self.recv_expect_within(s, c2s::SHARD_PREPPED, budget) {
+                Some(p) => match wire::decode_shard_prepped(&p) {
+                    Ok((rejoined, dead)) => {
+                        self.rejoined.extend(rejoined);
+                        self.shard_dead[s] = dead;
+                    }
+                    Err(_) => self.drop_relay(s),
+                },
+                None => {}
+            }
+        }
+    }
+
+    fn dead_clients(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        for s in 0..self.relays.len() {
+            if self.relays[s].is_none() {
+                // A lost relay's whole partition is unreachable.
+                let (lo, hi) = self.ranges[s];
+                out.extend(lo..hi);
+            } else {
+                out.extend(self.shard_dead[s].iter().copied());
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    fn take_missing(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.missing)
+    }
+
+    fn take_rejoined(&mut self) -> Vec<u32> {
+        let mut out = std::mem::take(&mut self.rejoined);
+        out.sort_unstable();
+        out
+    }
+
+    fn submit_round(
+        &mut self,
+        x: &[f64],
+        subset: Option<&[u32]>,
+        round: u64,
+        need_loss: bool,
+    ) {
+        assert!(self.pending.is_empty(), "previous round not fully drained");
+        let deadline_ms =
+            self.deadline.map(|d| d.as_millis() as u64).unwrap_or(0);
+        for s in 0..self.relays.len() {
+            let (lo, hi) = self.ranges[s];
+            let part: Vec<u32> = match subset {
+                None => (lo..hi).collect(),
+                Some(sub) => sub
+                    .iter()
+                    .copied()
+                    .filter(|&c| c >= lo && c < hi)
+                    .collect(),
+            };
+            if part.is_empty() {
+                continue;
+            }
+            let Some(ch) = self.relays[s].as_mut() else {
+                self.missing.extend(part);
+                continue;
+            };
+            let payload = wire::encode_shard_round(
+                x,
+                round,
+                need_loss,
+                deadline_ms,
+                &part,
+            );
+            match ch.send(s2c::SHARD_ROUND, &payload) {
+                Ok(()) => {
+                    self.outstanding[s] = part;
+                    self.pending.push_back(s as u32);
+                }
+                Err(_) => {
+                    self.outstanding[s] = part;
+                    self.drop_relay(s);
+                }
+            }
+        }
+    }
+
+    fn drain(&mut self) -> Vec<ClientMsg> {
+        // One SHARD_MSG per call, ascending shard id: while the master
+        // commits shard s's batch, the later relays' frames queue in
+        // the OS socket buffers. A relay that cannot produce its frame
+        // within deadline + slack (or whose connection dies) certifies
+        // its whole outstanding partition.
+        while let Some(s) = self.pending.pop_front() {
+            let s = s as usize;
+            let Some(ch) = self.relays[s].as_mut() else {
+                self.missing.append(&mut self.outstanding[s]);
+                continue;
+            };
+            let timeout = self.deadline.map(|d| d + RELAY_DEADLINE_SLACK);
+            let _ = ch.set_read_timeout(timeout);
+            match ch.recv() {
+                Ok((tag, p)) if tag == c2s::SHARD_MSG => {
+                    // Network-facing input: a malformed or inconsistent
+                    // frame retires the relay (certifying its whole
+                    // outstanding partition) — never a panic, exactly
+                    // like `RemotePool::drain` treats a bad client.
+                    let Ok((sid, msgs, mut missing)) =
+                        wire::decode_shard_msg(&p)
+                    else {
+                        self.drop_relay(s);
+                        continue;
+                    };
+                    // Every id the relay accounts for must be one of
+                    // the participants we handed it, exactly once.
+                    // (Cloned so the failure paths below can mutate
+                    // the pool; partitions are O(n/S) ids.)
+                    let part = self.outstanding[s].clone();
+                    let mut accounted: Vec<u32> = msgs
+                        .iter()
+                        .map(|m| m.client_id as u32)
+                        .chain(missing.iter().copied())
+                        .collect();
+                    accounted.sort_unstable();
+                    let dups =
+                        accounted.windows(2).any(|w| w[0] == w[1]);
+                    let valid = sid as usize == s
+                        && !dups
+                        && accounted.iter().all(|c| part.contains(c));
+                    if !valid {
+                        self.drop_relay(s);
+                        continue;
+                    }
+                    // A participant the relay left unaccounted (it
+                    // must not: its downward pool certifies losses)
+                    // would hang the round engine — certify it here.
+                    for &c in &part {
+                        if !accounted.contains(&c) {
+                            missing.push(c);
+                        }
+                    }
+                    self.outstanding[s].clear();
+                    self.missing.extend(missing);
+                    if msgs.is_empty() {
+                        continue; // whole partition was certified
+                    }
+                    return msgs;
+                }
+                _ => self.drop_relay(s),
+            }
+        }
+        Vec::new()
+    }
+
+    fn eval_loss_each(&mut self, x: &[f64]) -> Vec<(u32, f64)> {
+        // Probe replies are network-facing input: a malformed batch
+        // retires the relay and the reduction proceeds over the
+        // surviving partitions (same rule as `drain`).
+        let payload = wire::encode_vec(x);
+        let asked = self.ask_relays(s2c::EVAL_LOSS, &payload);
+        let mut parts = Vec::with_capacity(self.n_clients);
+        for s in asked {
+            if let Some(p) = self.recv_expect(s, c2s::SHARD_LOSSES) {
+                match wire::decode_id_scalars(&p) {
+                    Ok(batch) => parts.extend(batch),
+                    Err(_) => self.drop_relay(s),
+                }
+            }
+        }
+        parts
+    }
+
+    fn loss_grad_each(&mut self, x: &[f64]) -> Vec<(u32, f64, Vec<f64>)> {
+        let payload = wire::encode_vec(x);
+        let asked = self.ask_relays(s2c::LOSS_GRAD, &payload);
+        let mut parts = Vec::with_capacity(self.n_clients);
+        for s in asked {
+            if let Some(p) = self.recv_expect(s, c2s::SHARD_GRADS) {
+                match wire::decode_id_scalar_vecs(&p) {
+                    Ok(batch) => parts.extend(batch),
+                    Err(_) => self.drop_relay(s),
+                }
+            }
+        }
+        parts
+    }
+
+    fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {
+        let payload = wire::encode_vec(x);
+        let asked = self.ask_relays(s2c::WARM_START, &payload);
+        let mut packs = Vec::with_capacity(self.n_clients);
+        for s in asked {
+            if let Some(p) = self.recv_expect(s, c2s::SHARD_WARM) {
+                match wire::decode_vec_batch(&p) {
+                    Ok(batch) => packs.extend(batch),
+                    Err(_) => self.drop_relay(s),
+                }
+            }
+        }
+        packs
+    }
+
+    fn init_state(&mut self) -> Vec<(f64, Vec<f64>)> {
+        // The PP bootstrap needs every client's (lᵢ, gᵢ), indexed by
+        // client id — require the full tier.
+        assert!(
+            self.relays.iter().all(|r| r.is_some()),
+            "init_state requires every relay registered"
+        );
+        let asked = self.ask_relays(s2c::STATE, &[]);
+        assert_eq!(asked.len(), self.n_shards(), "relay lost at bootstrap");
+        let mut parts: Vec<(u32, f64, Vec<f64>)> =
+            Vec::with_capacity(self.n_clients);
+        for s in asked {
+            let p = self
+                .recv_expect(s, c2s::SHARD_STATES)
+                .expect("relay lost at bootstrap");
+            parts.extend(
+                wire::decode_id_scalar_vecs(&p).expect("states decode"),
+            );
+        }
+        parts.sort_by_key(|&(id, _, _)| id);
+        assert!(
+            parts.iter().enumerate().all(|(i, &(id, _, _))| id as usize == i),
+            "init_state: incomplete client coverage"
+        );
+        parts.into_iter().map(|(_, l, g)| (l, g)).collect()
+    }
+
+    fn pull_state(&mut self, client: u32) -> Option<(f64, Vec<f64>)> {
+        let s = self
+            .ranges
+            .iter()
+            .position(|&(lo, hi)| client >= lo && client < hi)
+            .unwrap_or_else(|| {
+                panic!("client {client} outside every partition")
+            });
+        if self.relays[s].is_none() {
+            return None;
+        }
+        let payload = {
+            let mut w = crate::utils::ByteWriter::with_capacity(4);
+            w.put_u32(client);
+            w.into_vec()
+        };
+        {
+            let ch = self.relays[s].as_mut()?;
+            let timeout = self.deadline.or(Some(Duration::from_secs(5)));
+            let _ = ch.set_read_timeout(timeout);
+            if ch.send(s2c::SHARD_PULL, &payload).is_ok() {
+                if let Ok((tag, p)) = ch.recv() {
+                    if tag == c2s::SHARD_PULLED {
+                        // Malformed payload falls through to the
+                        // drop-relay path below (network input).
+                        if let Ok(state) = wire::decode_shard_pulled(&p) {
+                            return state;
+                        }
+                    }
+                }
+            }
+        }
+        self.drop_relay(s);
+        None
+    }
+
+    fn transport_bytes(&self) -> Option<(u64, u64)> {
+        let up = self.retired_bytes.0
+            + self
+                .relays
+                .iter()
+                .flatten()
+                .map(|c| c.bytes_received)
+                .sum::<u64>();
+        let down = self.retired_bytes.1
+            + self
+                .relays
+                .iter()
+                .flatten()
+                .map(|c| c.bytes_sent)
+                .sum::<u64>();
+        Some((up, down))
+    }
+}

@@ -44,9 +44,18 @@ use crate::algorithms::ClientMsg;
 use crate::coordinator::{ClientFamily, ClientPool};
 
 /// Master-side handle to n connected remote clients.
+///
+/// The pool may serve a **contiguous global-id partition** `[base,
+/// base+n)` instead of `[0, n)`: the shard tier's relay aggregator
+/// (`net::relay`) is exactly this pool bound to its partition, with
+/// every public id (registration, subsets, replies, liveness reports)
+/// staying global while channels are indexed by local slot.
 pub struct RemotePool {
-    /// Channels indexed by registered client id (`None` = deregistered).
+    /// Channels indexed by local slot = global id − `base`
+    /// (`None` = deregistered).
     channels: Vec<Option<Channel>>,
+    /// First global client id this pool serves.
+    base: u32,
     /// Kept open after the initial accept so deregistered ids can
     /// rejoin; non-blocking (polled in `prepare_round`).
     listener: Option<TcpListener>,
@@ -88,7 +97,22 @@ impl Bound {
 
     /// Accept until exactly `n_clients` clients register.
     pub fn accept(self, n_clients: usize) -> Result<RemotePool> {
-        RemotePool::accept_on(self.listener, n_clients)
+        RemotePool::accept_on(self.listener, n_clients, 0)
+    }
+
+    /// As [`Bound::accept`], serving the global-id partition
+    /// `[base, base+n_clients)` (the relay aggregator's downward face).
+    pub fn accept_base(
+        self,
+        n_clients: usize,
+        base: u32,
+    ) -> Result<RemotePool> {
+        RemotePool::accept_on(self.listener, n_clients, base)
+    }
+
+    /// Surrender the raw listener (shard-tier master bootstrap).
+    pub fn into_listener(self) -> TcpListener {
+        self.listener
     }
 }
 
@@ -100,7 +124,11 @@ impl RemotePool {
         Bound::bind(addr)?.accept(n_clients)
     }
 
-    fn accept_on(listener: TcpListener, n_clients: usize) -> Result<Self> {
+    fn accept_on(
+        listener: TcpListener,
+        n_clients: usize,
+        base: u32,
+    ) -> Result<Self> {
         let mut slots: Vec<Option<(Channel, u8)>> =
             (0..n_clients).map(|_| None).collect();
         let mut d = 0usize;
@@ -111,8 +139,12 @@ impl RemotePool {
             let (tag, payload) = ch.recv()?;
             anyhow::ensure!(tag == c2s::REGISTER, "expected REGISTER");
             let (id, dim, family) = wire::decode_register(&payload)?;
-            let id = id as usize;
-            anyhow::ensure!(id < n_clients, "client id {id} out of range");
+            anyhow::ensure!(
+                id >= base && ((id - base) as usize) < n_clients,
+                "client id {id} outside partition [{base}, {})",
+                base as usize + n_clients
+            );
+            let id = (id - base) as usize;
             anyhow::ensure!(slots[id].is_none(), "duplicate client id {id}");
             if d == 0 {
                 d = dim as usize;
@@ -147,6 +179,7 @@ impl RemotePool {
             .context("set_nonblocking on retained listener")?;
         Ok(Self {
             channels,
+            base,
             listener: Some(listener),
             family: family.unwrap(),
             d,
@@ -191,8 +224,9 @@ impl RemotePool {
         }
     }
 
-    /// Validate one reconnecting client; returns its id if admitted.
-    /// A malformed or conflicting registration drops the connection.
+    /// Validate one reconnecting client; returns its global id if
+    /// admitted. A malformed or conflicting registration drops the
+    /// connection.
     fn admit_rejoin(&mut self, stream: TcpStream) -> Option<usize> {
         // The accepted socket may inherit the listener's non-blocking
         // mode on some platforms; the handshake below is blocking but
@@ -208,13 +242,13 @@ impl RemotePool {
             return None;
         }
         let (id, dim, family) = wire::decode_register(&payload).ok()?;
-        let id = id as usize;
+        let slot = id.checked_sub(self.base)? as usize;
         let family = match family {
             wire::FAMILY_FEDNL => ClientFamily::FedNL,
             _ => ClientFamily::PP,
         };
-        let admissible = id < self.channels.len()
-            && self.channels[id].is_none()
+        let admissible = slot < self.channels.len()
+            && self.channels[slot].is_none()
             && dim as usize == self.d
             && family == self.family;
         if !admissible {
@@ -234,13 +268,13 @@ impl RemotePool {
                 return None;
             }
         }
-        self.channels[id] = Some(ch);
-        Some(id)
+        self.channels[slot] = Some(ch);
+        Some(id as usize)
     }
 
-    /// Send one command to every live client; returns the ids actually
-    /// sent (send failures deregister). The shared scaffolding of the
-    /// probe reductions.
+    /// Send one command to every live client; returns the local slots
+    /// actually sent (send failures deregister). The shared scaffolding
+    /// of the probe reductions.
     fn ask_all(&mut self, tag: u8, payload: &[u8]) -> Vec<usize> {
         let n = self.channels.len();
         let mut asked = Vec::with_capacity(n);
@@ -301,28 +335,46 @@ impl ClientPool for RemotePool {
     }
 
     fn default_alpha(&self) -> f64 {
-        // The master does not know the remote compressor class until it
-        // asks; clients reply to SET_ALPHA(NaN) with their α via ACK
-        // payload — handled in `set_alpha`. Default conservative 1.0.
+        // The master does not know the remote compressor class until
+        // it asks: NaN is the query sentinel — `set_alpha(NaN)` leaves
+        // the clients' theoretical α in place and resolves it from
+        // their ACK echoes, so the TCP run trains with exactly the α
+        // an in-process run of the same clients would use.
         if self.alpha > 0.0 {
             self.alpha
         } else {
-            1.0
+            f64::NAN
         }
     }
 
-    fn set_alpha(&mut self, alpha: f64) {
+    fn set_alpha(&mut self, alpha: f64) -> f64 {
         let payload = wire::encode_scalar(alpha);
         let asked = self.ask_all(s2c::SET_ALPHA, &payload);
-        let mut resolved = alpha;
+        let mut echoes = Vec::with_capacity(asked.len());
         for ci in asked {
             if let Some(p) = self.recv_expect(ci, c2s::ACK) {
                 if let Ok(a) = wire::decode_scalar(&p) {
-                    resolved = a; // clients echo the α they actually use
+                    echoes.push(a); // the α the client actually uses
                 }
             }
         }
+        let (resolved, homogeneous) =
+            wire::fold_alpha_echoes(alpha, echoes);
+        // Mixed echoes (clients registered with different compressor
+        // classes): a NaN query would otherwise leave each client on
+        // its own α while the server aggregates with one of them —
+        // silently wrong math. Install the resolved α uniformly; the
+        // second exchange happens only in the heterogeneous case, so
+        // the usual handshake byte accounting is unchanged.
+        if !homogeneous && resolved.is_finite() && resolved > 0.0 {
+            let payload = wire::encode_scalar(resolved);
+            let asked = self.ask_all(s2c::SET_ALPHA, &payload);
+            for ci in asked {
+                let _ = self.recv_expect(ci, c2s::ACK);
+            }
+        }
         self.alpha = resolved;
+        resolved
     }
 
     fn prepare_round(&mut self, _round: u64) {
@@ -334,7 +386,7 @@ impl ClientPool for RemotePool {
             .iter()
             .enumerate()
             .filter(|(_, ch)| ch.is_none())
-            .map(|(ci, _)| ci as u32)
+            .map(|(slot, _)| self.base + slot as u32)
             .collect()
     }
 
@@ -371,16 +423,19 @@ impl ClientPool for RemotePool {
         let participants: &[u32] = match subset {
             Some(s) => s,
             None => {
-                all = (0..self.channels.len() as u32).collect();
+                all = (0..self.channels.len() as u32)
+                    .map(|slot| self.base + slot)
+                    .collect();
                 &all
             }
         };
         for &ci in participants {
-            match self.channels[ci as usize].as_mut() {
+            let slot = (ci - self.base) as usize;
+            match self.channels[slot].as_mut() {
                 Some(ch) => match ch.send(s2c::ROUND, &payload) {
                     Ok(()) => self.pending.push_back(ci),
                     Err(_) => {
-                        self.deregister(ci as usize);
+                        self.deregister(slot);
                         self.missing.push(ci);
                     }
                 },
@@ -398,7 +453,8 @@ impl ClientPool for RemotePool {
         // announcement retires the client and certifies it missing;
         // the empty batch still means "round closed".
         while let Some(ci) = self.pending.pop_front() {
-            let Some(ch) = self.channels[ci as usize].as_mut() else {
+            let slot = (ci - self.base) as usize;
+            let Some(ch) = self.channels[slot].as_mut() else {
                 self.missing.push(ci);
                 continue;
             };
@@ -421,12 +477,12 @@ impl ClientPool for RemotePool {
                     // DEREGISTER (graceful leave) — or a protocol
                     // violation, which retires the channel the same way
                     // (never a panic: this is network-facing input).
-                    self.deregister(ci as usize);
+                    self.deregister(slot);
                     self.missing.push(ci);
                 }
                 Err(_) => {
                     // Reply deadline missed, or the connection died.
-                    self.deregister(ci as usize);
+                    self.deregister(slot);
                     self.missing.push(ci);
                 }
             }
@@ -434,39 +490,31 @@ impl ClientPool for RemotePool {
         Vec::new()
     }
 
-    fn eval_loss(&mut self, x: &[f64]) -> f64 {
+    fn eval_loss_each(&mut self, x: &[f64]) -> Vec<(u32, f64)> {
         let payload = wire::encode_vec(x);
         let asked = self.ask_all(s2c::EVAL_LOSS, &payload);
-        let mut sum = 0.0;
-        let mut count = 0usize;
-        for ci in asked {
-            if let Some(p) = self.recv_expect(ci, c2s::LOSS) {
-                sum += wire::decode_scalar(&p).expect("loss");
-                count += 1;
+        let mut parts = Vec::with_capacity(asked.len());
+        for slot in asked {
+            if let Some(p) = self.recv_expect(slot, c2s::LOSS) {
+                let l = wire::decode_scalar(&p).expect("loss");
+                parts.push((self.base + slot as u32, l));
             }
         }
-        assert!(count > 0, "eval_loss: no live clients");
-        sum / count as f64
+        parts
     }
 
-    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+    fn loss_grad_each(&mut self, x: &[f64]) -> Vec<(u32, f64, Vec<f64>)> {
         let payload = wire::encode_vec(x);
         let asked = self.ask_all(s2c::LOSS_GRAD, &payload);
-        let mut parts: Vec<(f64, Vec<f64>)> = Vec::with_capacity(asked.len());
-        for ci in asked {
-            if let Some(p) = self.recv_expect(ci, c2s::GRAD) {
-                parts.push(wire::decode_loss_grad(&p).expect("grad decode"));
+        let mut parts = Vec::with_capacity(asked.len());
+        for slot in asked {
+            if let Some(p) = self.recv_expect(slot, c2s::GRAD) {
+                let (l, g) =
+                    wire::decode_loss_grad(&p).expect("grad decode");
+                parts.push((self.base + slot as u32, l, g));
             }
         }
-        assert!(!parts.is_empty(), "loss_grad: no live clients");
-        let inv = 1.0 / parts.len() as f64;
-        let mut loss = 0.0;
-        let mut g = vec![0.0; x.len()];
-        for (l, gi) in &parts {
-            loss += l;
-            crate::linalg::vector::axpy(inv, gi, &mut g);
-        }
-        (loss * inv, g)
+        parts
     }
 
     fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {
@@ -507,7 +555,7 @@ impl ClientPool for RemotePool {
         // pull is re-deregistered and skipped — the resync must not
         // take down the run the fault layer is protecting. The recv is
         // bounded even without a configured deadline.
-        let ci = client as usize;
+        let ci = (client - self.base) as usize;
         {
             let ch = self.channels[ci].as_mut()?;
             let timeout = self.deadline.or(Some(Duration::from_secs(5)));

@@ -31,6 +31,33 @@
 //! travel as the unified [`ClientMsg`] codec. The retired PP-specific
 //! tags (`PP_ROUND` = 4, `PP_MSG` = 14) are left unassigned.
 //!
+//! # Shard tier (master ↔ relay)
+//!
+//! A relay aggregator (`net::relay`) speaks the table above *downward*
+//! to its clients unchanged, and these frames *upward* to the master:
+//!
+//! | dir | tag                 | payload                         | reply          |
+//! |-----|---------------------|---------------------------------|----------------|
+//! | s2c | `SHARD_ROUND`    20 | round, need_loss, deadline, x, subset | `SHARD_MSG` |
+//! | s2c | `SHARD_PREP`     21 | round                           | `SHARD_PREPPED`|
+//! | s2c | `SHARD_PULL`     22 | client id                       | `SHARD_PULLED` |
+//! | c2s | `SHARD_REGISTER` 23 | shard id, base, count, d, family| —              |
+//! | c2s | `SHARD_MSG`      24 | ordered [`ClientMsg`]s + missing|                |
+//! | c2s | `SHARD_LOSSES`   25 | per-client (id, fᵢ)             |                |
+//! | c2s | `SHARD_GRADS`    26 | per-client (id, fᵢ, ∇fᵢ)        |                |
+//! | c2s | `SHARD_WARM`     27 | ordered packed Hᵢ⁰ batch        |                |
+//! | c2s | `SHARD_STATES`   28 | per-client (id, lᵢ, gᵢ)         |                |
+//! | c2s | `SHARD_PREPPED`  29 | rejoined ids, dead ids          |                |
+//! | c2s | `SHARD_PULLED`   30 | present flag (+ lᵢ, gᵢ)         |                |
+//!
+//! The downward probe commands (`EVAL_LOSS`, `LOSS_GRAD`, `WARM_START`,
+//! `STATE`, `SET_ALPHA`, `SHUTDOWN`) are reused verbatim on the
+//! master → relay leg — only the replies differ, carrying **per-client
+//! atoms** rather than one value. That is deliberate: forwarding a
+//! partial f64 sum would re-group the master's reduction (f64 addition
+//! is not associative) and break the shard tier's bit-identical
+//! determinism invariant; see `coordinator::shard`.
+//!
 //! # Liveness (fault-tolerant rounds)
 //!
 //! `DEREGISTER` announces a graceful leave: the master retires the
@@ -70,6 +97,14 @@ pub mod s2c {
     pub const LOSS_GRAD: u8 = 7;
     /// State pull: PP client replies STATE with its current (lᵢ, gᵢ).
     pub const STATE: u8 = 8;
+    /// Shard tier: one relay round (round, need_loss, deadline, x,
+    /// participant subset); the relay replies SHARD_MSG.
+    pub const SHARD_ROUND: u8 = 20;
+    /// Shard tier: pre-round liveness poll; relay replies SHARD_PREPPED.
+    pub const SHARD_PREP: u8 = 21;
+    /// Shard tier: single-client STATE pull (PP rejoin resync); relay
+    /// replies SHARD_PULLED.
+    pub const SHARD_PULL: u8 = 22;
 }
 
 /// Frame tags, client → master.
@@ -86,6 +121,27 @@ pub mod c2s {
     /// Graceful leave announcement (empty payload); rejoin reuses
     /// REGISTER on the master's retained listener.
     pub const DEREGISTER: u8 = 18;
+    /// Shard tier: a relay announces (shard id, id base, client count,
+    /// d, family).
+    pub const SHARD_REGISTER: u8 = 23;
+    /// Shard tier: one round's partition batch — the shard's committed
+    /// [`crate::algorithms::ClientMsg`]s in round-subset order plus its
+    /// missing-certificates.
+    pub const SHARD_MSG: u8 = 24;
+    /// Per-client (id, fᵢ) batch (reply to EVAL_LOSS).
+    pub const SHARD_LOSSES: u8 = 25;
+    /// Per-client (id, fᵢ, ∇fᵢ) batch (reply to LOSS_GRAD).
+    pub const SHARD_GRADS: u8 = 26;
+    /// Ordered packed-Hᵢ⁰ batch (reply to WARM_START; ids implicit by
+    /// ascending order within the partition).
+    pub const SHARD_WARM: u8 = 27;
+    /// Per-client (id, lᵢ, gᵢ) batch (reply to STATE).
+    pub const SHARD_STATES: u8 = 28;
+    /// (rejoined ids, dead ids) liveness report (reply to SHARD_PREP).
+    pub const SHARD_PREPPED: u8 = 29;
+    /// Optional (lᵢ, gᵢ) of one client (reply to SHARD_PULL; absent if
+    /// the client was lost before answering).
+    pub const SHARD_PULLED: u8 = 30;
 }
 
 // --- exact frame sizes ----------------------------------------------------
@@ -306,6 +362,269 @@ pub fn decode_loss_grad(p: &[u8]) -> Result<(f64, Vec<f64>)> {
     Ok((loss, r.get_f64_vec(n)?))
 }
 
+/// Fold the SET_ALPHA ACK echoes of one negotiation round into
+/// `(resolved α, homogeneous?)`. Invalid echoes (non-finite, ≤ 0) are
+/// ignored, the last valid echo wins, and `homogeneous` turns false
+/// iff two valid echoes disagreed **bitwise** — the signal that the
+/// resolved α must be re-installed uniformly so every client trains
+/// with exactly the α the server aggregates with. Shared by the flat
+/// TCP master and the relay tier so the subtle comparison logic has
+/// one home.
+pub fn fold_alpha_echoes(
+    requested: f64,
+    echoes: impl IntoIterator<Item = f64>,
+) -> (f64, bool) {
+    let mut resolved = requested;
+    let mut homogeneous = true;
+    for a in echoes {
+        if a.is_finite() && a > 0.0 {
+            if resolved.is_finite()
+                && resolved > 0.0
+                && a.to_bits() != resolved.to_bits()
+            {
+                homogeneous = false;
+            }
+            resolved = a;
+        }
+    }
+    (resolved, homogeneous)
+}
+
+// --- shard-tier codecs ----------------------------------------------------
+
+/// SHARD_REGISTER: a relay announces which contiguous global-id
+/// partition it aggregates.
+pub fn encode_shard_register(
+    shard_id: u32,
+    base: u32,
+    count: u32,
+    d: u32,
+    family: u8,
+) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(17);
+    w.put_u32(shard_id);
+    w.put_u32(base);
+    w.put_u32(count);
+    w.put_u32(d);
+    w.put_u8(family);
+    w.into_vec()
+}
+
+/// Returns (shard_id, base, count, d, family).
+pub fn decode_shard_register(p: &[u8]) -> Result<(u32, u32, u32, u32, u8)> {
+    let mut r = ByteReader::new(p);
+    let shard_id = r.get_u32()?;
+    let base = r.get_u32()?;
+    let count = r.get_u32()?;
+    let d = r.get_u32()?;
+    let family = r.get_u8()?;
+    anyhow::ensure!(count > 0, "empty shard partition");
+    anyhow::ensure!(
+        family == FAMILY_FEDNL || family == FAMILY_PP,
+        "bad shard family {family}"
+    );
+    Ok((shard_id, base, count, d, family))
+}
+
+/// SHARD_ROUND: the relay-facing round command. `deadline_ms = 0`
+/// means no per-client reply deadline; `subset` holds the partition's
+/// participants (global ids, in round-subset order — the order the
+/// shard commits in).
+pub fn encode_shard_round(
+    x: &[f64],
+    round: u64,
+    need_loss: bool,
+    deadline_ms: u64,
+    subset: &[u32],
+) -> Vec<u8> {
+    let mut w =
+        ByteWriter::with_capacity(x.len() * 8 + subset.len() * 4 + 32);
+    w.put_u64(round);
+    w.put_u8(need_loss as u8);
+    w.put_u64(deadline_ms);
+    w.put_u32(x.len() as u32);
+    w.put_f64_slice(x);
+    w.put_u32(subset.len() as u32);
+    w.put_u32_slice(subset);
+    w.into_vec()
+}
+
+/// Returns (x, round, need_loss, deadline_ms, subset).
+pub fn decode_shard_round(
+    p: &[u8],
+) -> Result<(Vec<f64>, u64, bool, u64, Vec<u32>)> {
+    let mut r = ByteReader::new(p);
+    let round = r.get_u64()?;
+    let need_loss = r.get_u8()? != 0;
+    let deadline_ms = r.get_u64()?;
+    let nx = r.get_u32()? as usize;
+    let x = r.get_f64_vec(nx)?;
+    let ns = r.get_u32()? as usize;
+    let subset = r.get_u32_vec(ns)?;
+    Ok((x, round, need_loss, deadline_ms, subset))
+}
+
+/// SHARD_MSG: one round's partition batch — the shard's committed
+/// client messages **in round-subset order** (per-client atoms, so the
+/// master's commit arithmetic is invariant in the shard count) plus
+/// the partition's missing-certificates.
+pub fn encode_shard_msg(
+    shard_id: u32,
+    msgs: &[ClientMsg],
+    missing: &[u32],
+) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(64);
+    w.put_u32(shard_id);
+    w.put_u32(msgs.len() as u32);
+    for m in msgs {
+        let enc = encode_client_msg(m);
+        w.put_u32(enc.len() as u32);
+        w.put_bytes(&enc);
+    }
+    w.put_u32(missing.len() as u32);
+    w.put_u32_slice(missing);
+    w.into_vec()
+}
+
+/// Returns (shard_id, committed messages, missing ids).
+pub fn decode_shard_msg(
+    p: &[u8],
+) -> Result<(u32, Vec<ClientMsg>, Vec<u32>)> {
+    let mut r = ByteReader::new(p);
+    let shard_id = r.get_u32()?;
+    let nm = r.get_u32()? as usize;
+    let mut msgs = Vec::with_capacity(nm);
+    for _ in 0..nm {
+        let len = r.get_u32()? as usize;
+        msgs.push(decode_client_msg(r.get_bytes(len)?)?);
+    }
+    let nmiss = r.get_u32()? as usize;
+    let missing = r.get_u32_vec(nmiss)?;
+    Ok((shard_id, msgs, missing))
+}
+
+/// SHARD_LOSSES: per-client (id, scalar) batch.
+pub fn encode_id_scalars(parts: &[(u32, f64)]) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(4 + parts.len() * 12);
+    w.put_u32(parts.len() as u32);
+    for &(id, v) in parts {
+        w.put_u32(id);
+        w.put_f64(v);
+    }
+    w.into_vec()
+}
+
+pub fn decode_id_scalars(p: &[u8]) -> Result<Vec<(u32, f64)>> {
+    let mut r = ByteReader::new(p);
+    let n = r.get_u32()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let id = r.get_u32()?;
+        let v = r.get_f64()?;
+        out.push((id, v));
+    }
+    Ok(out)
+}
+
+/// SHARD_GRADS / SHARD_STATES: per-client (id, scalar, vector) batch.
+pub fn encode_id_scalar_vecs(parts: &[(u32, f64, Vec<f64>)]) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(4 + parts.len() * 16);
+    w.put_u32(parts.len() as u32);
+    for (id, v, g) in parts {
+        w.put_u32(*id);
+        w.put_f64(*v);
+        w.put_u32(g.len() as u32);
+        w.put_f64_slice(g);
+    }
+    w.into_vec()
+}
+
+pub fn decode_id_scalar_vecs(p: &[u8]) -> Result<Vec<(u32, f64, Vec<f64>)>> {
+    let mut r = ByteReader::new(p);
+    let n = r.get_u32()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let id = r.get_u32()?;
+        let v = r.get_f64()?;
+        let ng = r.get_u32()? as usize;
+        out.push((id, v, r.get_f64_vec(ng)?));
+    }
+    Ok(out)
+}
+
+/// SHARD_WARM: ordered batch of packed Hᵢ⁰ uploads (ascending client
+/// id within the partition; ids travel implicitly by order, matching
+/// [`crate::coordinator::ClientPool::warm_start`]'s id-less contract).
+pub fn encode_vec_batch(packs: &[Vec<f64>]) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(4 + packs.len() * 8);
+    w.put_u32(packs.len() as u32);
+    for v in packs {
+        w.put_u32(v.len() as u32);
+        w.put_f64_slice(v);
+    }
+    w.into_vec()
+}
+
+pub fn decode_vec_batch(p: &[u8]) -> Result<Vec<Vec<f64>>> {
+    let mut r = ByteReader::new(p);
+    let n = r.get_u32()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let nv = r.get_u32()? as usize;
+        out.push(r.get_f64_vec(nv)?);
+    }
+    Ok(out)
+}
+
+/// SHARD_PREPPED: (rejoined ids, dead ids) liveness report.
+pub fn encode_shard_prepped(rejoined: &[u32], dead: &[u32]) -> Vec<u8> {
+    let mut w =
+        ByteWriter::with_capacity(8 + (rejoined.len() + dead.len()) * 4);
+    w.put_u32(rejoined.len() as u32);
+    w.put_u32_slice(rejoined);
+    w.put_u32(dead.len() as u32);
+    w.put_u32_slice(dead);
+    w.into_vec()
+}
+
+pub fn decode_shard_prepped(p: &[u8]) -> Result<(Vec<u32>, Vec<u32>)> {
+    let mut r = ByteReader::new(p);
+    let nr = r.get_u32()? as usize;
+    let rejoined = r.get_u32_vec(nr)?;
+    let nd = r.get_u32()? as usize;
+    let dead = r.get_u32_vec(nd)?;
+    Ok((rejoined, dead))
+}
+
+/// SHARD_PULLED: one client's (lᵢ, gᵢ) if it was still reachable.
+pub fn encode_shard_pulled(state: Option<(f64, &[f64])>) -> Vec<u8> {
+    match state {
+        None => {
+            let mut w = ByteWriter::with_capacity(1);
+            w.put_u8(0);
+            w.into_vec()
+        }
+        Some((l, g)) => {
+            let mut w = ByteWriter::with_capacity(13 + g.len() * 8);
+            w.put_u8(1);
+            w.put_f64(l);
+            w.put_u32(g.len() as u32);
+            w.put_f64_slice(g);
+            w.into_vec()
+        }
+    }
+}
+
+pub fn decode_shard_pulled(p: &[u8]) -> Result<Option<(f64, Vec<f64>)>> {
+    let mut r = ByteReader::new(p);
+    if r.get_u8()? == 0 {
+        return Ok(None);
+    }
+    let l = r.get_f64()?;
+    let n = r.get_u32()? as usize;
+    Ok(Some((l, r.get_f64_vec(n)?)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -465,5 +784,130 @@ mod tests {
     fn corrupt_rejected() {
         assert!(decode_client_msg(&[1, 2, 3]).is_err());
         assert!(decode_round(&[]).is_err());
+    }
+
+    #[test]
+    fn fold_alpha_echoes_resolves_and_detects_mixes() {
+        // NaN query + homogeneous echoes: resolved, no re-install.
+        let (a, homog) =
+            fold_alpha_echoes(f64::NAN, vec![0.25, 0.25, 0.25]);
+        assert_eq!(a, 0.25);
+        assert!(homog);
+        // Mixed echoes flag the heterogeneity (last valid wins).
+        let (a, homog) = fold_alpha_echoes(f64::NAN, vec![0.25, 0.5]);
+        assert_eq!(a, 0.5);
+        assert!(!homog);
+        // Install mode: clients echo the installed value back.
+        let (a, homog) = fold_alpha_echoes(0.75, vec![0.75, 0.75]);
+        assert_eq!(a, 0.75);
+        assert!(homog);
+        // Invalid echoes are ignored, not treated as disagreement.
+        let (a, homog) =
+            fold_alpha_echoes(f64::NAN, vec![f64::NAN, 0.5, -1.0, 0.0]);
+        assert_eq!(a, 0.5);
+        assert!(homog);
+        // No valid echo at all: the (possibly NaN) request survives so
+        // the engine's finiteness assert can fail loudly.
+        let (a, _) = fold_alpha_echoes(f64::NAN, vec![]);
+        assert!(a.is_nan());
+    }
+
+    #[test]
+    fn shard_register_roundtrip() {
+        let enc = encode_shard_register(2, 6, 3, 21, FAMILY_PP);
+        let (sid, base, count, d, fam) =
+            decode_shard_register(&enc).unwrap();
+        assert_eq!((sid, base, count, d, fam), (2, 6, 3, 21, FAMILY_PP));
+        assert!(decode_shard_register(&encode_shard_register(
+            0, 0, 0, 4, FAMILY_FEDNL
+        ))
+        .is_err()); // empty partition
+        assert!(decode_shard_register(&encode_shard_register(
+            0, 0, 2, 4, 9
+        ))
+        .is_err()); // bad family
+    }
+
+    #[test]
+    fn shard_round_roundtrip() {
+        let x = vec![1.5, -0.25, 3.0];
+        let subset = vec![7u32, 3, 5];
+        let enc = encode_shard_round(&x, 11, true, 250, &subset);
+        let (x2, round, need_loss, deadline, sub2) =
+            decode_shard_round(&enc).unwrap();
+        assert_eq!(x2, x);
+        assert_eq!(round, 11);
+        assert!(need_loss);
+        assert_eq!(deadline, 250);
+        assert_eq!(sub2, subset);
+        assert!(decode_shard_round(&[1, 2]).is_err());
+    }
+
+    #[test]
+    fn shard_msg_roundtrip_preserves_order_and_missing() {
+        // The batch order IS the shard's commit order — the codec must
+        // preserve it exactly, along with every per-message field.
+        let msgs = vec![
+            msg_with(IndexPayload::Explicit(vec![0, 5, 9]), Some(-0.75)),
+            msg_with(IndexPayload::Seed { seed: 0xFEED, k: 3 }, None),
+            msg_with(IndexPayload::Dense, Some(2.5)),
+        ];
+        let missing = vec![9u32, 4];
+        let enc = encode_shard_msg(1, &msgs, &missing);
+        let (sid, dec, miss) = decode_shard_msg(&enc).unwrap();
+        assert_eq!(sid, 1);
+        assert_eq!(miss, missing);
+        assert_eq!(dec.len(), msgs.len());
+        for (a, b) in msgs.iter().zip(&dec) {
+            assert_eq!(a.client_id, b.client_id);
+            assert_eq!(a.grad, b.grad);
+            assert_eq!(a.l_i, b.l_i);
+            assert_eq!(a.loss, b.loss);
+            assert_eq!(a.update.values, b.update.values);
+            assert_eq!(a.update.indices(), b.update.indices());
+        }
+        // Empty batch (every participant missing) is legal.
+        let (_, dec, miss) =
+            decode_shard_msg(&encode_shard_msg(0, &[], &[2])).unwrap();
+        assert!(dec.is_empty());
+        assert_eq!(miss, vec![2]);
+        assert!(decode_shard_msg(&[0, 0]).is_err());
+    }
+
+    #[test]
+    fn shard_batch_codecs_roundtrip() {
+        let losses = vec![(0u32, 1.25), (3, -0.5), (7, f64::MIN_POSITIVE)];
+        assert_eq!(
+            decode_id_scalars(&encode_id_scalars(&losses)).unwrap(),
+            losses
+        );
+        let grads = vec![
+            (1u32, 0.5, vec![1.0, -2.0]),
+            (4, -3.25, vec![0.0, 5.5]),
+        ];
+        assert_eq!(
+            decode_id_scalar_vecs(&encode_id_scalar_vecs(&grads)).unwrap(),
+            grads
+        );
+        let warms = vec![vec![1.0, 2.0, 3.0], vec![-1.0]];
+        assert_eq!(
+            decode_vec_batch(&encode_vec_batch(&warms)).unwrap(),
+            warms
+        );
+        let (rj, dd) = decode_shard_prepped(&encode_shard_prepped(
+            &[3, 1],
+            &[7],
+        ))
+        .unwrap();
+        assert_eq!(rj, vec![3, 1]);
+        assert_eq!(dd, vec![7]);
+        assert_eq!(
+            decode_shard_pulled(&encode_shard_pulled(None)).unwrap(),
+            None
+        );
+        let pulled =
+            decode_shard_pulled(&encode_shard_pulled(Some((0.75, &[1.0, 2.0]))))
+                .unwrap();
+        assert_eq!(pulled, Some((0.75, vec![1.0, 2.0])));
     }
 }

@@ -2,13 +2,13 @@
 //! every algorithm of the family, across both in-process transports.
 
 use fednl::algorithms::{
-    run_fednl, run_fednl_ls, run_fednl_pool, run_fednl_pp, run_fednl_pp_pool,
-    ClientState, LineSearchParams, OnMissing, Options, PPClientState,
-    RoundPolicy, UpdateRule,
+    run_fednl, run_fednl_ls, run_fednl_ls_pool, run_fednl_pool,
+    run_fednl_pp, run_fednl_pp_pool, ClientState, LineSearchParams,
+    OnMissing, Options, PPClientState, RoundPolicy, UpdateRule,
 };
 use fednl::compressors::{by_name, ALL_NAMES};
 use fednl::coordinator::{
-    ClientPool, FaultPlan, FaultPool, SeqPool, ThreadedPool,
+    ClientPool, FaultPlan, FaultPool, SeqPool, ShardedPool, ThreadedPool,
 };
 use fednl::data::{
     generate_synthetic, parse_libsvm_bytes, write_libsvm, Dataset, SynthSpec,
@@ -553,6 +553,205 @@ fn pp_kill_rejoin_resyncs_exactly() {
         assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits());
         assert_eq!(a.bytes_up, b.bytes_up);
         assert_eq!(a.bytes_down, b.bytes_down);
+    }
+}
+
+#[test]
+fn sharded_matches_unsharded_bitwise_all_algorithms() {
+    // The shard tier's headline invariant, in-process: FedNL, FedNL-LS
+    // and FedNL-PP trajectories are bit-identical between the flat
+    // sequential reference (S=1) and the sharded tier at S ∈ {2, 3},
+    // over both sequential and threaded shard aggregators. Shards
+    // forward per-client atoms in commit order, so the master's f64
+    // arithmetic never re-groups (see coordinator::shard).
+    let (ds, d) = problem(10, 6, 40, 130);
+    let x0 = vec![0.0; d];
+    let opts = Options { rounds: 25, track_loss: true, ..Default::default() };
+
+    // FedNL + FedNL-LS references.
+    let mut seq = SeqPool::new(clients(&ds, 6, "randseqk", 19));
+    let t_fednl = run_fednl_pool(&mut seq, &opts, x0.clone(), "flat");
+    let mut seq = SeqPool::new(clients(&ds, 6, "randseqk", 19));
+    let t_ls = run_fednl_ls_pool(
+        &mut seq,
+        &opts,
+        &LineSearchParams::default(),
+        x0.clone(),
+        "flat-ls",
+    );
+    // FedNL-PP reference (τ crossing shard boundaries).
+    let (tau, seed) = (3usize, 91u64);
+    let opts_pp = Options { rounds: 40, ..Default::default() };
+    let mut seq = SeqPool::new(pp_clients(&ds, 6, "topk", 5, &x0));
+    let t_pp = run_fednl_pp_pool(
+        &mut seq,
+        &opts_pp,
+        tau,
+        seed,
+        x0.clone(),
+        "flat-pp",
+    );
+    assert!(t_fednl.last_grad_norm() < 1e-8);
+
+    let same = |a: &fednl::metrics::Trace, b: &fednl::metrics::Trace,
+                tag: &str| {
+        assert_eq!(a.records.len(), b.records.len(), "{tag}");
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_eq!(
+                ra.grad_norm.to_bits(),
+                rb.grad_norm.to_bits(),
+                "{tag} round {}",
+                ra.round
+            );
+            assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "{tag}");
+            assert_eq!(ra.bytes_up, rb.bytes_up, "{tag}");
+            assert_eq!(ra.bytes_down, rb.bytes_down, "{tag}");
+        }
+    };
+
+    for s in [2usize, 3] {
+        // Sequential shard aggregators.
+        let mut pool = ShardedPool::new_seq(clients(&ds, 6, "randseqk", 19), s);
+        let t = run_fednl_pool(&mut pool, &opts, x0.clone(), "sh");
+        same(&t_fednl, &t, &format!("fednl S={s} seq"));
+        // Threaded shard aggregators (replies stream out of order
+        // within each shard; commit order must still hold).
+        let mut pool =
+            ShardedPool::new_threaded(clients(&ds, 6, "randseqk", 19), s, 2);
+        let t = run_fednl_pool(&mut pool, &opts, x0.clone(), "sh-thr");
+        same(&t_fednl, &t, &format!("fednl S={s} threaded"));
+
+        let mut pool = ShardedPool::new_seq(clients(&ds, 6, "randseqk", 19), s);
+        let t = run_fednl_ls_pool(
+            &mut pool,
+            &opts,
+            &LineSearchParams::default(),
+            x0.clone(),
+            "sh-ls",
+        );
+        same(&t_ls, &t, &format!("ls S={s}"));
+
+        let mut pool =
+            ShardedPool::new_seq(pp_clients(&ds, 6, "topk", 5, &x0), s);
+        let t = run_fednl_pp_pool(
+            &mut pool,
+            &opts_pp,
+            tau,
+            seed,
+            x0.clone(),
+            "sh-pp",
+        );
+        same(&t_pp, &t, &format!("pp S={s} seq"));
+        let mut pool = ShardedPool::new_threaded(
+            pp_clients(&ds, 6, "topk", 5, &x0),
+            s,
+            2,
+        );
+        let t = run_fednl_pp_pool(
+            &mut pool,
+            &opts_pp,
+            tau,
+            seed,
+            x0.clone(),
+            "sh-pp-thr",
+        );
+        same(&t_pp, &t, &format!("pp S={s} threaded"));
+    }
+}
+
+#[test]
+fn sharded_under_fault_plan_bit_identical() {
+    // PR 3's fault machinery composes through the tier: the same
+    // FaultPlan (kill window + one-round drop, quorum rounds) yields
+    // bit-identical trajectories on the flat pool and on the sharded
+    // tier at S ∈ {2, 3} — including committed/missing accounting.
+    let (ds, d) = problem(9, 6, 40, 131);
+    let x0 = vec![0.0; d];
+    let plan = FaultPlan::parse("kill@3:1-12,drop@14:5").unwrap();
+    let opts = Options {
+        rounds: 30,
+        track_loss: true,
+        policy: RoundPolicy {
+            quorum: Some(3),
+            deadline_ms: None,
+            on_missing: OnMissing::Drop,
+        },
+        ..Default::default()
+    };
+    let mut flat = FaultPool::new(
+        SeqPool::new(clients(&ds, 6, "topk", 23)),
+        plan.clone(),
+    );
+    let t_flat = run_fednl_pool(&mut flat, &opts, x0.clone(), "flat");
+    assert!(t_flat.records.iter().any(|r| r.missing > 0));
+    for s in [2usize, 3] {
+        let mut pool = FaultPool::new(
+            ShardedPool::new_threaded(clients(&ds, 6, "topk", 23), s, 2),
+            plan.clone(),
+        );
+        let t = run_fednl_pool(&mut pool, &opts, x0.clone(), "sh");
+        assert_eq!(t_flat.records.len(), t.records.len());
+        for (a, b) in t_flat.records.iter().zip(&t.records) {
+            assert_eq!(
+                a.grad_norm.to_bits(),
+                b.grad_norm.to_bits(),
+                "S={s} round {}",
+                a.round
+            );
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.bytes_up, b.bytes_up);
+            assert_eq!((a.committed, a.missing), (b.committed, b.missing));
+        }
+    }
+
+    // FedNL-PP under a kill window with Resample through the tier.
+    let x0 = vec![0.0; d];
+    let plan = FaultPlan::parse("kill@2:4-20").unwrap();
+    let opts_pp = Options {
+        rounds: 50,
+        policy: RoundPolicy {
+            quorum: Some(2),
+            deadline_ms: None,
+            on_missing: OnMissing::Resample,
+        },
+        ..Default::default()
+    };
+    let (tau, seed) = (3usize, 57u64);
+    let mut flat = FaultPool::new(
+        SeqPool::new(pp_clients(&ds, 6, "topk", 5, &x0)),
+        plan.clone(),
+    );
+    let t_flat = run_fednl_pp_pool(
+        &mut flat,
+        &opts_pp,
+        tau,
+        seed,
+        x0.clone(),
+        "flat-pp",
+    );
+    for s in [2usize, 3] {
+        let mut pool = FaultPool::new(
+            ShardedPool::new_seq(pp_clients(&ds, 6, "topk", 5, &x0), s),
+            plan.clone(),
+        );
+        let t = run_fednl_pp_pool(
+            &mut pool,
+            &opts_pp,
+            tau,
+            seed,
+            x0.clone(),
+            "sh-pp",
+        );
+        for (a, b) in t_flat.records.iter().zip(&t.records) {
+            assert_eq!(
+                a.grad_norm.to_bits(),
+                b.grad_norm.to_bits(),
+                "pp S={s} round {}",
+                a.round
+            );
+            assert_eq!(a.bytes_up, b.bytes_up);
+            assert_eq!((a.committed, a.missing), (b.committed, b.missing));
+        }
     }
 }
 

@@ -9,12 +9,15 @@ use fednl::algorithms::{
     PPClientState, RoundPolicy,
 };
 use fednl::compressors::by_name;
-use fednl::coordinator::{ClientPool, FaultPlan, FaultPool, SeqPool};
+use fednl::coordinator::{shard, ClientPool, FaultPlan, FaultPool, SeqPool};
 use fednl::data::{generate_synthetic, Dataset, LibsvmSample, SynthSpec};
 use fednl::net::client::ClientMode;
 use fednl::net::server::Bound;
 use fednl::net::wire;
-use fednl::net::{run_client, run_client_with, Channel, ClientOpts};
+use fednl::net::{
+    run_client, run_client_with, run_relay_on, Channel, ClientOpts,
+    RelayCfg, RelayPool,
+};
 use fednl::oracle::LogisticOracle;
 
 fn dataset(d_raw: usize, n: usize, seed: u64) -> Dataset {
@@ -372,6 +375,314 @@ fn tcp_fault_plan_matches_in_process_bitwise() {
         "{} -> {}",
         first,
         t_seq.last_grad_norm()
+    );
+}
+
+/// Spawn a full relay tier on loopback: `n_shards` relay threads (one
+/// ephemeral listener each) plus one client thread per dataset shard,
+/// each connecting to the relay that owns its id. Returns the handles;
+/// the caller accepts the relays on `master_bound`.
+#[allow(clippy::type_complexity)]
+fn spawn_relay_tier(
+    ds: &Dataset,
+    n: usize,
+    n_shards: usize,
+    comp: &str,
+    master_addr: &str,
+    pp: bool,
+) -> (
+    Vec<std::thread::JoinHandle<anyhow::Result<fednl::net::relay::RelayReport>>>,
+    Vec<std::thread::JoinHandle<anyhow::Result<(u64, u64)>>>,
+) {
+    let d = ds.d;
+    let ranges = shard::partition(n, n_shards);
+    let mut shards_by_id: Vec<Option<fednl::data::ClientShard>> =
+        ds.split_even(n).unwrap().into_iter().map(Some).collect();
+    let mut relay_handles = Vec::new();
+    let mut client_handles = Vec::new();
+    for (s, &(lo, hi)) in ranges.iter().enumerate() {
+        let relay_bound = Bound::bind("127.0.0.1:0").unwrap();
+        let relay_addr = relay_bound.local_addr().unwrap().to_string();
+        let rcfg = RelayCfg {
+            shard_id: s as u32,
+            base: lo,
+            count: (hi - lo) as usize,
+            listen: String::new(),
+            connect: master_addr.to_string(),
+        };
+        relay_handles.push(std::thread::spawn(move || {
+            run_relay_on(relay_bound, &rcfg)
+        }));
+        for ci in lo..hi {
+            let sh = shards_by_id[ci as usize].take().unwrap();
+            let addr = relay_addr.clone();
+            let comp = by_name(comp, d, 8, 100 + ci as u64).unwrap();
+            client_handles.push(std::thread::spawn(move || {
+                let id = sh.client_id;
+                let oracle = Box::new(LogisticOracle::new(sh, 1e-3));
+                let mode = if pp {
+                    ClientMode::PP(PPClientState::new(
+                        id,
+                        oracle,
+                        comp,
+                        None,
+                        &vec![0.0; d],
+                    ))
+                } else {
+                    ClientMode::FedNL(ClientState::new(id, oracle, comp, None))
+                };
+                run_client(&addr, id, mode)
+            }));
+        }
+    }
+    (relay_handles, client_handles)
+}
+
+#[test]
+fn tcp_relay_tier_matches_unsharded_bitwise() {
+    // The sharded-master acceptance invariant over real sockets:
+    // FedNL (with warm start — exercises the SHARD_WARM batch path)
+    // through an S=2 relay tier is bit-identical to the flat
+    // sequential reference, round for round.
+    let ds = dataset(8, 120, 41);
+    let d = ds.d;
+    const N: usize = 5;
+    let opts = Options {
+        rounds: 15,
+        track_loss: true,
+        warm_start: true,
+        ..Default::default()
+    };
+
+    let mut ref_clients: Vec<ClientState> = ds
+        .split_even(N)
+        .unwrap()
+        .into_iter()
+        .map(|sh| {
+            let id = sh.client_id;
+            ClientState::new(
+                id,
+                Box::new(LogisticOracle::new(sh, 1e-3)),
+                by_name("randseqk", d, 8, 100 + id as u64).unwrap(),
+                None,
+            )
+        })
+        .collect();
+    let t_ref = run_fednl(&mut ref_clients, &opts, vec![0.0; d]);
+
+    let master = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = master.local_addr().unwrap().to_string();
+    let (relays, clients) =
+        spawn_relay_tier(&ds, N, 2, "randseqk", &addr, false);
+    let mut pool = RelayPool::accept(master, 2).unwrap();
+    assert_eq!(pool.n_clients(), N);
+    assert_eq!(pool.n_shards(), 2);
+    let t_tcp = run_fednl_pool(&mut pool, &opts, vec![0.0; d], "relay");
+    let (up, down) = pool.transport_bytes().unwrap();
+    pool.shutdown();
+    for h in relays {
+        h.join().unwrap().unwrap();
+    }
+    for h in clients {
+        h.join().unwrap().unwrap();
+    }
+
+    assert_eq!(t_ref.records.len(), t_tcp.records.len());
+    for (a, b) in t_ref.records.iter().zip(&t_tcp.records) {
+        assert_eq!(
+            a.grad_norm.to_bits(),
+            b.grad_norm.to_bits(),
+            "round {}",
+            a.round
+        );
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+    }
+    assert!(t_tcp.last_grad_norm() < 1e-8);
+    // The master↔relay channels metered real traffic in both
+    // directions (the trace's byte columns report these for FedNL).
+    assert!(up > 0 && down > 0);
+
+    // FedNL-LS through an S=3 tier: the Armijo backtracking probes
+    // ride EVAL_LOSS → SHARD_LOSSES per-client batches, whose
+    // ascending-id reduction must match the flat pool bit for bit.
+    let opts_ls = Options { rounds: 12, track_loss: true, ..Default::default() };
+    let ref_ls: Vec<ClientState> = ds
+        .split_even(N)
+        .unwrap()
+        .into_iter()
+        .map(|sh| {
+            let id = sh.client_id;
+            ClientState::new(
+                id,
+                Box::new(LogisticOracle::new(sh, 1e-3)),
+                by_name("toplek", d, 8, 100 + id as u64).unwrap(),
+                None,
+            )
+        })
+        .collect();
+    let mut flat = SeqPool::new(ref_ls);
+    let t_ref = run_fednl_ls_pool(
+        &mut flat,
+        &opts_ls,
+        &LineSearchParams::default(),
+        vec![0.0; d],
+        "flat-ls",
+    );
+    let master = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = master.local_addr().unwrap().to_string();
+    let (relays, clients) =
+        spawn_relay_tier(&ds, N, 3, "toplek", &addr, false);
+    let mut pool = RelayPool::accept(master, 3).unwrap();
+    let t_tcp = run_fednl_ls_pool(
+        &mut pool,
+        &opts_ls,
+        &LineSearchParams::default(),
+        vec![0.0; d],
+        "relay-ls",
+    );
+    pool.shutdown();
+    for h in relays {
+        h.join().unwrap().unwrap();
+    }
+    for h in clients {
+        h.join().unwrap().unwrap();
+    }
+    assert_eq!(t_ref.records.len(), t_tcp.records.len());
+    for (a, b) in t_ref.records.iter().zip(&t_tcp.records) {
+        assert_eq!(
+            a.grad_norm.to_bits(),
+            b.grad_norm.to_bits(),
+            "ls round {}",
+            a.round
+        );
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+    }
+
+    // FedNL-PP through the same tier: τ subsets cross shard
+    // boundaries, the bootstrap uses the SHARD_STATES batch, and the
+    // per-round ‖∇f‖ probe uses SHARD_GRADS. PP traces always report
+    // logical byte counters, so those must agree bitwise too.
+    let opts_pp = Options { rounds: 40, ..Default::default() };
+    let mut ref_pps: Vec<PPClientState> = ds
+        .split_even(N)
+        .unwrap()
+        .into_iter()
+        .map(|sh| {
+            let id = sh.client_id;
+            PPClientState::new(
+                id,
+                Box::new(LogisticOracle::new(sh, 1e-3)),
+                by_name("topk", d, 8, 100 + id as u64).unwrap(),
+                None,
+                &vec![0.0; d],
+            )
+        })
+        .collect();
+    let t_ref = run_fednl_pp(&mut ref_pps, &opts_pp, 3, 88, vec![0.0; d]);
+
+    let master = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = master.local_addr().unwrap().to_string();
+    let (relays, clients) = spawn_relay_tier(&ds, N, 2, "topk", &addr, true);
+    let mut pool = RelayPool::accept(master, 2).unwrap();
+    let t_tcp = run_fednl_pp_pool(
+        &mut pool,
+        &opts_pp,
+        3,
+        88,
+        vec![0.0; d],
+        "relay-pp",
+    );
+    pool.shutdown();
+    for h in relays {
+        h.join().unwrap().unwrap();
+    }
+    for h in clients {
+        h.join().unwrap().unwrap();
+    }
+    assert_eq!(t_ref.records.len(), t_tcp.records.len());
+    for (a, b) in t_ref.records.iter().zip(&t_tcp.records) {
+        assert_eq!(
+            a.grad_norm.to_bits(),
+            b.grad_norm.to_bits(),
+            "pp round {}",
+            a.round
+        );
+        assert_eq!(a.bytes_up, b.bytes_up);
+        assert_eq!(a.bytes_down, b.bytes_down);
+    }
+}
+
+#[test]
+fn tcp_relay_tier_fault_plan_bit_identical() {
+    // Faults compose through the tier over real sockets: the same
+    // FaultPlan (kill+rejoin window crossing shard boundaries, a
+    // one-round drop) under a quorum policy yields bit-identical
+    // FedNL-PP trajectories on the flat in-process reference and on an
+    // S=3 relay tier — including the rejoin-round STATE resync, which
+    // rides the SHARD_PULL frame.
+    let ds = dataset(7, 120, 42);
+    let d = ds.d;
+    const N: usize = 6;
+    let x0 = vec![0.0; d];
+    let plan = FaultPlan::parse("kill@3:1-10,drop@12:5").unwrap();
+    let opts = Options {
+        rounds: 25,
+        policy: RoundPolicy {
+            quorum: Some(1),
+            deadline_ms: Some(2000),
+            on_missing: OnMissing::Drop,
+        },
+        ..Default::default()
+    };
+    let (tau, seed) = (4usize, 67u64);
+
+    let mut flat = FaultPool::new(
+        SeqPool::new(pp_clients_for(&ds, N, "topk", &x0)),
+        plan.clone(),
+    );
+    let t_flat = run_fednl_pp_pool(
+        &mut flat,
+        &opts,
+        tau,
+        seed,
+        x0.clone(),
+        "fault-flat",
+    );
+    assert!(t_flat.records.iter().any(|r| r.missing > 0));
+
+    let master = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = master.local_addr().unwrap().to_string();
+    let (relays, clients) = spawn_relay_tier(&ds, N, 3, "topk", &addr, true);
+    let mut pool =
+        FaultPool::new(RelayPool::accept(master, 3).unwrap(), plan);
+    let t_tcp =
+        run_fednl_pp_pool(&mut pool, &opts, tau, seed, x0, "fault-relay");
+    pool.into_inner().shutdown();
+    for h in relays {
+        h.join().unwrap().unwrap();
+    }
+    for h in clients {
+        h.join().unwrap().unwrap();
+    }
+
+    assert_eq!(t_flat.records.len(), t_tcp.records.len());
+    for (a, b) in t_flat.records.iter().zip(&t_tcp.records) {
+        assert_eq!(
+            a.grad_norm.to_bits(),
+            b.grad_norm.to_bits(),
+            "round {}",
+            a.round
+        );
+        assert_eq!(a.bytes_up, b.bytes_up);
+        assert_eq!(a.bytes_down, b.bytes_down);
+        assert_eq!((a.committed, a.missing), (b.committed, b.missing));
+    }
+    let first = t_flat.records[0].grad_norm;
+    assert!(
+        t_flat.last_grad_norm() < first * 1e-2,
+        "{} -> {}",
+        first,
+        t_flat.last_grad_norm()
     );
 }
 
