@@ -7,8 +7,12 @@ threshold:
 
 * ``BENCH_kernels.json``      — per-kernel ``simd_ns``   (key: name, n)
 * ``BENCH_coordinator.json``  — per-pool   ``total_s``   (key: pool)
-* ``BENCH_shard.json``        — per-config ``total_s``   (key: key,
-  e.g. ``S=2/seq`` — one entry per shard-count/pool combination)
+* ``BENCH_shard.json``        — per-config ``total_s`` **and**
+  ``payload_bytes`` (per-round shard→master payload; a payload
+  regression fails CI exactly like a time regression) (key: key,
+  e.g. ``S=2/seq`` / ``S=2/seq/payload_bytes``)
+* ``BENCH_reduce.json``       — per-row    ``simd_ns``   (key: name, n;
+  the reproducible-summation kernels)
 
 Usage:
     check_bench.py FRESH BASELINE          # gate (exit 1 on regression)
@@ -50,9 +54,19 @@ def extract(doc):
         rows = {}
         for c in doc["configs"]:
             rows[c["key"]] = float(c["total_s"])
-        return "shard/total_s", rows
+            if "payload_bytes" in c:
+                rows[f"{c['key']}/payload_bytes"] = float(
+                    c["payload_bytes"]
+                )
+        return "shard/total_s+payload", rows
+    if "reduce" in doc:
+        rows = {}
+        for k in doc["reduce"]:
+            rows[f"{k['name']}[n={k['n']}]"] = float(k["simd_ns"])
+        return "reduce/simd_ns", rows
     raise SystemExit(
-        "unrecognized bench JSON: no 'kernels', 'pools' or 'configs' key"
+        "unrecognized bench JSON: no 'kernels', 'pools', 'configs' or "
+        "'reduce' key"
     )
 
 
@@ -141,18 +155,49 @@ def self_test():
     )
     assert len(reg) == 1 and "axpy[n=4096]" in reg[0], reg
 
-    # Shard-tier schema: per-config total_s, keyed by "S=N/pool".
-    sbase = {"configs": [{"key": "S=1/seq", "shards": 1, "total_s": 1.0},
-                         {"key": "S=2/seq", "shards": 2, "total_s": 0.8}]}
-    sslow = {"configs": [{"key": "S=1/seq", "shards": 1, "total_s": 1.0},
-                         {"key": "S=2/seq", "shards": 2, "total_s": 1.1}]}
+    # Shard-tier schema: per-config total_s AND payload_bytes, keyed
+    # by "S=N/pool" / "S=N/pool/payload_bytes".
+    sbase = {"configs": [{"key": "S=1/seq", "shards": 1, "total_s": 1.0,
+                          "payload_bytes": 50000},
+                         {"key": "S=2/seq", "shards": 2, "total_s": 0.8,
+                          "payload_bytes": 20000}]}
+    sslow = {"configs": [{"key": "S=1/seq", "shards": 1, "total_s": 1.0,
+                          "payload_bytes": 50000},
+                         {"key": "S=2/seq", "shards": 2, "total_s": 1.1,
+                          "payload_bytes": 20000}]}
     reg, _ = compare(sslow, sbase, 0.25)
     assert len(reg) == 1 and "S=2/seq" in reg[0], reg
     reg, _ = compare(sbase, sbase, 0.25)
     assert reg == [], reg
-    # A vanished config fails the gate (schema drift).
+    # A payload regression fails the gate exactly like a time one.
+    sfat = {"configs": [{"key": "S=1/seq", "shards": 1, "total_s": 1.0,
+                         "payload_bytes": 50000},
+                        {"key": "S=2/seq", "shards": 2, "total_s": 0.8,
+                         "payload_bytes": 31000}]}
+    reg, _ = compare(sfat, sbase, 0.25)
+    assert len(reg) == 1 and "S=2/seq/payload_bytes" in reg[0], reg
+    # A vanished config fails the gate (schema drift): both its time
+    # and payload rows disappear.
     reg, _ = compare({"configs": []}, sbase, 0.25)
-    assert len(reg) == 2, reg
+    assert len(reg) == 4, reg
+    # A baseline predating the payload column only gains notes.
+    old_base = {"configs": [{"key": "S=1/seq", "total_s": 1.0},
+                            {"key": "S=2/seq", "total_s": 0.8}]}
+    reg, notes = compare(sbase, old_base, 0.25)
+    assert reg == [], reg
+    assert any("payload_bytes" in n for n in notes), notes
+
+    # Reduce schema: per-row simd_ns, keyed like the kernel table.
+    rbase = {"reduce": [
+        {"name": "binned_accumulate", "n": 4096, "naive_ns": 900.0,
+         "scalar_ns": 4000.0, "simd_ns": 3000.0}]}
+    rslow = {"reduce": [
+        {"name": "binned_accumulate", "n": 4096, "naive_ns": 900.0,
+         "scalar_ns": 4000.0, "simd_ns": 3900.0}]}
+    reg, _ = compare(rslow, rbase, 0.25)
+    assert len(reg) == 1 and "binned_accumulate[n=4096]" in reg[0], reg
+    reg, _ = compare(rbase, rbase, 0.25)
+    assert reg == [], reg
     print("check_bench.py self-test OK")
 
 

@@ -10,7 +10,10 @@
 //! PRs. The `coordinator` and `shard` sections emit
 //! `BENCH_coordinator.json` / `BENCH_shard.json` the same way (the
 //! master's wait-vs-aggregate wall-clock split, flat and through the
-//! sharded aggregation tier).
+//! sharded aggregation tier, now with per-round shard→master
+//! `payload_bytes`); the `reduce` section emits `BENCH_reduce.json`
+//! (exact RepAcc superaccumulation vs naive f64 folding, scalar vs
+//! the dispatched AVX2-assisted kernel).
 
 use fednl::compressors::{by_name, ALL_NAMES};
 use fednl::data::ClientShard;
@@ -322,6 +325,141 @@ fn main() {
         }
     }
 
+    if want("reduce") {
+        // Reproducible-summation layer: RepAcc superaccumulation vs a
+        // naive f64 fold, scalar vs the dispatched (AVX2-assisted)
+        // bulk kernel. The accumulator is exact, so the interesting
+        // number is the slowdown paid for exactness — emitted as
+        // BENCH_reduce.json and gated on simd_ns by check_bench.py.
+        use fednl::linalg::reduce::RepAcc;
+
+        struct ReduceRow {
+            name: &'static str,
+            n: usize,
+            naive_ns: f64,
+            scalar_ns: f64,
+            simd_ns: f64,
+        }
+        let mut rng = Pcg64::seed_from_u64(0x5ED_0CE);
+        let mut rows = Vec::new();
+        for &n in &[301usize, 4096] {
+            let xs: Vec<f64> =
+                (0..n).map(|_| rng.next_gaussian()).collect();
+            let naive_ns = time_min(50, 400, || {
+                // The fold RepAcc replaces: 4-way unrolled f64 sum.
+                let chunks = xs.len() / 4;
+                let (mut s0, mut s1, mut s2, mut s3) =
+                    (0.0f64, 0.0, 0.0, 0.0);
+                for c in 0..chunks {
+                    let i = c * 4;
+                    s0 += xs[i];
+                    s1 += xs[i + 1];
+                    s2 += xs[i + 2];
+                    s3 += xs[i + 3];
+                }
+                let mut s = (s0 + s1) + (s2 + s3);
+                for &v in &xs[chunks * 4..] {
+                    s += v;
+                }
+                std::hint::black_box(s);
+            }) * 1e9;
+            let mut acc = RepAcc::new();
+            let scalar_ns = time_min(20, 200, || {
+                acc.reset();
+                acc.accumulate_slice_scalar(std::hint::black_box(&xs));
+                std::hint::black_box(&acc);
+            }) * 1e9;
+            let simd_ns = time_min(20, 200, || {
+                acc.reset();
+                acc.accumulate_slice(std::hint::black_box(&xs));
+                std::hint::black_box(&acc);
+            }) * 1e9;
+            rows.push(ReduceRow {
+                name: "binned_accumulate",
+                n,
+                naive_ns,
+                scalar_ns,
+                simd_ns,
+            });
+        }
+        // Shard-tier merge: S partial sums folded at the master — the
+        // per-round aggregate cost the pre-reduction leaves behind.
+        {
+            let n = 4096;
+            let xs: Vec<f64> =
+                (0..n).map(|_| rng.next_gaussian()).collect();
+            let mut parts: Vec<RepAcc> = (0..4)
+                .map(|s| {
+                    let mut a = RepAcc::new();
+                    a.accumulate_slice(&xs[s * n / 4..(s + 1) * n / 4]);
+                    a
+                })
+                .collect();
+            let naive_ns = time_min(200, 2000, || {
+                let mut s = 0.0f64;
+                for p in parts.iter() {
+                    s += std::hint::black_box(p.clone()).round();
+                }
+                std::hint::black_box(s);
+            }) * 1e9;
+            let mut acc = RepAcc::new();
+            let merge_ns = time_min(200, 2000, || {
+                acc.reset();
+                for p in parts.iter_mut() {
+                    acc.merge(p.clone());
+                }
+                std::hint::black_box(acc.round());
+            }) * 1e9;
+            rows.push(ReduceRow {
+                name: "repacc_merge4",
+                n,
+                naive_ns,
+                scalar_ns: merge_ns,
+                simd_ns: merge_ns,
+            });
+        }
+        for r in &rows {
+            println!(
+                "reduce/{:<20} n={:<6} naive {:>9.1}ns  scalar {:>9.1}ns  simd {:>9.1}ns  exactness x{:.2}",
+                r.name,
+                r.n,
+                r.naive_ns,
+                r.scalar_ns,
+                r.simd_ns,
+                if r.naive_ns > 0.0 { r.simd_ns / r.naive_ns } else { 0.0 }
+            );
+        }
+        if json {
+            let mut s = String::from("{\n");
+            s.push_str(&format!(
+                "  \"isa\": \"{}\",\n  \"cores\": {},\n",
+                simd::isa_name(),
+                fednl::utils::available_cores()
+            ));
+            s.push_str("  \"reduce\": [\n");
+            for (i, r) in rows.iter().enumerate() {
+                s.push_str(&format!(
+                    "    {{\"name\": \"{}\", \"n\": {}, \"naive_ns\": {:.1}, \"scalar_ns\": {:.1}, \"simd_ns\": {:.1}}}{}\n",
+                    r.name,
+                    r.n,
+                    r.naive_ns,
+                    r.scalar_ns,
+                    r.simd_ns,
+                    if i + 1 < rows.len() { "," } else { "" }
+                ));
+            }
+            s.push_str("  ]\n}\n");
+            match std::fs::write("BENCH_reduce.json", s) {
+                Ok(()) => {
+                    println!("reduce timings written to BENCH_reduce.json")
+                }
+                Err(e) => {
+                    eprintln!("failed to write BENCH_reduce.json: {e}")
+                }
+            }
+        }
+    }
+
     if want("coordinator") {
         // Streaming-pool wait vs aggregate wall-clock split: how much
         // of a FedNL run the master spends blocked on `drain()` vs
@@ -416,8 +554,8 @@ fn main() {
         let n_clients = 12;
         let dd = 41;
         let rounds = 30u64;
-        let make = || -> Vec<ClientState> {
-            (0..n_clients)
+        let make_n = |n: usize| -> Vec<ClientState> {
+            (0..n)
                 .map(|i| {
                     let sh = random_shard(dd, 60, 300 + i as u64);
                     ClientState::new(
@@ -429,6 +567,7 @@ fn main() {
                 })
                 .collect()
         };
+        let make = || make_n(n_clients);
         let opts = Options { rounds, track_loss: true, ..Default::default() };
         struct ShardRun {
             key: String,
@@ -436,6 +575,9 @@ fn main() {
             wait_s: f64,
             aggregate_s: f64,
             total_s: f64,
+            /// Shard→master payload per round: SHARD_SUM frames for
+            /// S>1, the per-client atom bytes for the flat S=1 run.
+            payload_bytes: u64,
             final_grad: f64,
             per_shard: Vec<ShardStats>,
         }
@@ -450,6 +592,12 @@ fn main() {
                 wait_s: tr.wait_secs,
                 aggregate_s: tr.aggregate_secs,
                 total_s: tr.total_elapsed(),
+                // Exactly the per-round MSG atom bytes: a FedNL run
+                // without warm start has no other upward traffic in
+                // the logical counters, so total/rounds is the clean
+                // flat-path counterpart of the SHARD_SUM frames the
+                // S>1 configs meter.
+                payload_bytes: tr.total_bytes_up() / rounds,
                 final_grad: tr.last_grad_norm(),
                 per_shard: Vec::new(),
             });
@@ -462,12 +610,18 @@ fn main() {
                 vec![0.0; dd],
                 &format!("shard/S{s}"),
             );
+            let payload: u64 = pool
+                .shard_stats()
+                .iter()
+                .map(|st| st.payload_bytes)
+                .sum();
             runs.push(ShardRun {
                 key: format!("S={s}/seq"),
                 shards: s,
                 wait_s: tr.wait_secs,
                 aggregate_s: tr.aggregate_secs,
                 total_s: tr.total_elapsed(),
+                payload_bytes: payload / rounds,
                 final_grad: tr.last_grad_norm(),
                 per_shard: pool.shard_stats().to_vec(),
             });
@@ -480,12 +634,18 @@ fn main() {
                 vec![0.0; dd],
                 "shard/S2thr",
             );
+            let payload: u64 = pool
+                .shard_stats()
+                .iter()
+                .map(|st| st.payload_bytes)
+                .sum();
             runs.push(ShardRun {
                 key: "S=2/threaded".into(),
                 shards: 2,
                 wait_s: tr.wait_secs,
                 aggregate_s: tr.aggregate_secs,
                 total_s: tr.total_elapsed(),
+                payload_bytes: payload / rounds,
                 final_grad: tr.last_grad_norm(),
                 per_shard: pool.shard_stats().to_vec(),
             });
@@ -498,21 +658,55 @@ fn main() {
                 "{}: sharded trajectory diverged from flat",
                 r.key
             );
+        }
+        // Payload independence of n (the pre-reduction claim): the
+        // same topology at 2n clients — SHARD_SUM payload per round
+        // stays O(S·d) while the flat atom payload doubles. Appended
+        // after the bit-identity assertion (different problem, its
+        // trajectory is not comparable to the n=12 runs).
+        {
+            let n2 = n_clients * 2;
+            let mut pool = ShardedPool::new_seq(make_n(n2), 2);
+            let tr = run_fednl_pool(
+                &mut pool,
+                &opts,
+                vec![0.0; dd],
+                "shard/S2n24",
+            );
+            let payload: u64 = pool
+                .shard_stats()
+                .iter()
+                .map(|st| st.payload_bytes)
+                .sum();
+            runs.push(ShardRun {
+                key: format!("S=2/seq/n{n2}"),
+                shards: 2,
+                wait_s: tr.wait_secs,
+                aggregate_s: tr.aggregate_secs,
+                total_s: tr.total_elapsed(),
+                payload_bytes: payload / rounds,
+                final_grad: tr.last_grad_norm(),
+                per_shard: pool.shard_stats().to_vec(),
+            });
+        }
+        for r in &runs {
             println!(
-                "shard/{:<12} rounds={rounds}  wait {:>9.3}ms  aggregate {:>9.3}ms  total {:>9.3}ms",
+                "shard/{:<14} rounds={rounds}  wait {:>9.3}ms  aggregate {:>9.3}ms  total {:>9.3}ms  payload/round {} B",
                 r.key,
                 r.wait_s * 1e3,
                 r.aggregate_s * 1e3,
-                r.total_s * 1e3
+                r.total_s * 1e3,
+                r.payload_bytes
             );
             for st in &r.per_shard {
                 println!(
-                    "  shard {} ({} clients): wait {:>9.3}ms  aggregate {:>9.3}ms  msgs {}",
+                    "  shard {} ({} clients): wait {:>9.3}ms  aggregate {:>9.3}ms  msgs {}  payload {} B",
                     st.shard,
                     st.clients,
                     st.wait_s * 1e3,
                     st.aggregate_s * 1e3,
-                    st.msgs
+                    st.msgs,
+                    st.payload_bytes
                 );
             }
         }
@@ -525,19 +719,25 @@ fn main() {
             s.push_str("  \"configs\": [\n");
             for (i, r) in runs.iter().enumerate() {
                 s.push_str(&format!(
-                    "    {{\"key\": \"{}\", \"shards\": {}, \"wait_s\": {:.6}, \"aggregate_s\": {:.6}, \"total_s\": {:.6},\n",
-                    r.key, r.shards, r.wait_s, r.aggregate_s, r.total_s
+                    "    {{\"key\": \"{}\", \"shards\": {}, \"wait_s\": {:.6}, \"aggregate_s\": {:.6}, \"total_s\": {:.6}, \"payload_bytes\": {},\n",
+                    r.key,
+                    r.shards,
+                    r.wait_s,
+                    r.aggregate_s,
+                    r.total_s,
+                    r.payload_bytes
                 ));
                 s.push_str("     \"per_shard\": [");
                 for (j, st) in r.per_shard.iter().enumerate() {
                     s.push_str(&format!(
-                        "{}{{\"shard\": {}, \"clients\": {}, \"wait_s\": {:.6}, \"aggregate_s\": {:.6}, \"msgs\": {}}}",
+                        "{}{{\"shard\": {}, \"clients\": {}, \"wait_s\": {:.6}, \"aggregate_s\": {:.6}, \"msgs\": {}, \"payload_bytes\": {}}}",
                         if j > 0 { ", " } else { "" },
                         st.shard,
                         st.clients,
                         st.wait_s,
                         st.aggregate_s,
-                        st.msgs
+                        st.msgs,
+                        st.payload_bytes
                     ));
                 }
                 s.push_str("]}");

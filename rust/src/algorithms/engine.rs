@@ -15,17 +15,28 @@
 //!   xᵏ⁺¹ from the persistent (Hᵏ, lᵏ, gᵏ) *before* sampling, then
 //!   stream the τ participants' deltas into the persistent state.
 //!
-//! # Incremental aggregation and the buffer-and-commit rule
+//! # Reproducible aggregation: the sum path and the atom path
 //!
-//! Replies stream out of [`ClientPool::drain`] in arrival order; the
-//! engine hands each to a [`CommitBuffer`], which re-establishes the
-//! round's deterministic commit order (subset order; ascending client
-//! id for a full round) and applies a message the moment its turn
-//! arrives. Early arrivals are buffered, so aggregation work —
-//! `Hᵏ += (α/n)·Sᵢᵏ`, gradient partial sums — overlaps with the slower
-//! clients' compute and in-flight network transfer, while the
-//! resulting f64 reduction stays bit-identical to the blocking
-//! sort-then-aggregate it replaces.
+//! Every round reduction folds into the exact superaccumulator state
+//! of [`RoundSum`] (`linalg::reduce`), which is associative and
+//! permutation-invariant — aggregation order, transport, thread count
+//! and shard grouping cannot perturb a bit of the result. The engine
+//! therefore has two interchangeable drain paths:
+//!
+//! * **sum path** (the FedNL/LS default): [`ClientPool::drain_sums`]
+//!   surfaces pre-reduced partial sums — one merged accumulator per
+//!   shard on the shard tiers (O(S·d) master fan-in), a folded batch
+//!   on flat pools — and the engine merges them in any order;
+//! * **atom path** (FedNL-PP, and [`OnMissing::Reuse`], which replays
+//!   cached per-client messages): replies stream out of
+//!   [`ClientPool::drain`] in arrival order and a [`CommitBuffer`]
+//!   books them in round-subset order — pure accounting now (duplicate
+//!   and hole detection, replay slots); the arithmetic no longer
+//!   depends on it.
+//!
+//! Exactness makes the two paths produce bit-identical trajectories
+//! (asserted by the integration tests), so the choice is purely about
+//! payload and per-client visibility.
 //!
 //! # Fault-tolerant quorum rounds
 //!
@@ -61,9 +72,9 @@
 use std::time::Duration;
 
 use super::fednl_ls::LineSearchParams;
-use super::{ClientMsg, Options, ServerState};
+use super::{ClientMsg, Options, RoundSum, ServerState};
 use crate::compressors::{Compressed, IndexPayload, ValueEncoding};
-use crate::coordinator::{ClientFamily, ClientPool};
+use crate::coordinator::{ClientFamily, ClientPool, RoundMode};
 use crate::linalg::packed::PackedUpper;
 use crate::linalg::{vector, Cholesky, Mat};
 use crate::metrics::{RoundRecord, Trace};
@@ -430,6 +441,18 @@ fn run_newton_family(
     let sw = Stopwatch::start();
     let mut bytes_up = 0u64;
     let mut bytes_down = 0u64;
+    // Reply-aggregation mode: the reproducible summation layer makes
+    // the round sum grouping-invariant, so the default is pre-reduced
+    // sums — shard tiers then forward one merged accumulator per shard
+    // (O(S·d) fan-in). Reuse is the one policy that still needs atom
+    // visibility (it replays cached per-client messages); exactness
+    // guarantees both paths produce bit-identical trajectories.
+    let sum_mode = rp.on_missing != OnMissing::Reuse;
+    pool.set_round_mode(if sum_mode {
+        RoundMode::Sums
+    } else {
+        RoundMode::Atoms
+    });
     // Last committed message per client, kept only under Reuse.
     let mut reuse_cache: Vec<Option<ClientMsg>> =
         (0..n).map(|_| None).collect();
@@ -465,21 +488,22 @@ fn run_newton_family(
         let need_loss = opts.track_loss || ls.is_some();
         pool.submit_round(&x, None, round, need_loss);
         server.begin_round();
-        let mut buf = CommitBuffer::new(n, None);
-        let cache = if rp.on_missing == OnMissing::Reuse {
-            Some(&mut reuse_cache)
+        let (committed, missing) = if sum_mode {
+            drain_and_sum(pool, n, &mut bytes_up, &mut timing, |s| {
+                server.apply_sum(s)
+            })
         } else {
-            None
+            let mut buf = CommitBuffer::new(n, None);
+            drain_and_commit(
+                pool,
+                &mut buf,
+                &rp,
+                Some(&mut reuse_cache),
+                &mut bytes_up,
+                &mut timing,
+                |m| server.apply_msg(m),
+            )
         };
-        let (committed, missing) = drain_and_commit(
-            pool,
-            &mut buf,
-            &rp,
-            cache,
-            &mut bytes_up,
-            &mut timing,
-            |m| server.apply_msg(m),
-        );
         check_quorum(&rp, committed, n, round, label);
         let (grad, loss) = server.finish_round(committed);
         let gnorm = vector::norm2(&grad);
@@ -560,6 +584,12 @@ fn run_pp(
     let inv_n = 1.0 / n as f64;
     let rp = opts.policy;
     pool.set_reply_deadline(rp.deadline_ms.map(Duration::from_millis));
+    // PP rounds stay on the atom path: the per-client deltas feed the
+    // engine's (lᵢ, gᵢ) mirrors (rejoin resync), and a τ-subset round
+    // is already sublinear fan-in. The cross-client folds below still
+    // run through the reproducible accumulator, so PP trajectories are
+    // grouping-invariant like the Newton family's.
+    pool.set_round_mode(RoundMode::Atoms);
     // Same α negotiation as the Newton family (see run_newton_family).
     let requested = opts.alpha.unwrap_or_else(|| pool.default_alpha());
     let alpha = pool.set_alpha(requested);
@@ -567,15 +597,27 @@ fn run_pp(
         alpha.is_finite() && alpha > 0.0,
         "α negotiation failed: no client reported a usable α"
     );
-    // Server init from client initials (line 2), H⁰ = 0.
+    // Server init from client initials (line 2), H⁰ = 0. Reproducible
+    // sums: exact Σ, one rounding, then the 1/n scaling.
     let mut h = Mat::zeros(d, d);
     let pu = PackedUpper::new(d);
     let init = pool.init_state();
-    let mut l: f64 = init.iter().map(|(li, _)| li).sum::<f64>() * inv_n;
-    let mut g = vec![0.0; d];
-    for (_, gi) in &init {
-        vector::axpy(inv_n, gi, &mut g);
-    }
+    let mut l = {
+        let mut acc = crate::linalg::reduce::RepAcc::new();
+        for (li, _) in &init {
+            acc.accumulate(*li);
+        }
+        acc.round() * inv_n
+    };
+    let mut g = {
+        let mut acc = crate::linalg::reduce::RepVec::new(d);
+        for (_, gi) in &init {
+            acc.accumulate(gi);
+        }
+        let mut g = acc.round_vec();
+        vector::scale(inv_n, &mut g);
+        g
+    };
     // Per-client mirrors of the server-tracked (lᵢ, gᵢ): the running
     // sums above cannot absorb a rejoining client's STATE pull on their
     // own, so the engine keeps the per-client decomposition the deltas
@@ -591,6 +633,8 @@ fn run_pp(
         wire::scalar_vec_frame_bytes(d) * init.len() as u64;
     let mut bytes_down = wire::empty_frame_bytes() * init.len() as u64;
     let mut timing = (0.0f64, 0.0f64);
+    // Per-round exact delta sums (reused allocation).
+    let mut rsum = RoundSum::new();
 
     for round in 0..opts.rounds {
         pool.prepare_round(round);
@@ -634,6 +678,7 @@ fn run_pp(
         bytes_down += wire::round_frame_bytes(d) * selected.len() as u64;
         pool.submit_round(&x, Some(&selected), round, false);
         let mut buf = CommitBuffer::new(n, Some(&selected));
+        rsum.reset();
         let (committed, missing) = drain_and_commit(
             pool,
             &mut buf,
@@ -644,22 +689,25 @@ fn run_pp(
             &mut bytes_up,
             &mut timing,
             |m| {
-                // Lines 18-20: incremental server state, committed in
-                // selection order.
-                vector::axpy(inv_n, &m.grad, &mut g);
-                l += inv_n * m.l_i;
-                pu.apply_sparse(
-                    &mut h,
-                    alpha * m.update.scale * inv_n,
-                    &m.update.indices(),
-                    &m.update.values,
-                );
+                // Lines 18-20: the round's delta sums fold into the
+                // exact accumulator (commit order irrelevant); the
+                // per-client mirrors track each participant's
+                // cumulative (lᵢ, gᵢ) for the rejoin resync.
+                rsum.absorb(m);
                 let i = m.client_id;
                 l_of[i] += m.l_i;
                 vector::axpy(1.0, &m.grad, &mut g_of[i]);
             },
         );
         check_quorum(&rp, committed, selected.len(), round, label);
+        // Fold the exact round deltas into the persistent state (one
+        // rounding per quantity, grouping-invariant).
+        l += inv_n * rsum.l.round();
+        if !rsum.grad.is_empty() {
+            let gd = rsum.grad.round_vec();
+            vector::axpy(inv_n, &gd, &mut g);
+        }
+        rsum.apply_hessian(&pu, &mut h, alpha * inv_n);
         // Out-of-band convergence measurement at xᵏ⁺¹ (the paper makes
         // the same caveat: ∇f(xᵏ) is not part of PP training). Because
         // this probe is measurement-only, it does NOT count toward the
@@ -730,6 +778,60 @@ fn stale_replay(cached: &ClientMsg) -> ClientMsg {
         l_i: cached.l_i,
         loss: cached.loss,
     }
+}
+
+/// Sum-mode round pump: pull pre-reduced [`RoundSum`]s until every
+/// participant is accounted for (absorbed into a sum, or certified
+/// missing). Because the sums are exact, no ordering or per-client
+/// buffering is needed — a shard tier hands the engine S merged
+/// accumulators instead of n atoms, and the absorbed state is
+/// bit-identical either way. Returns (committed, missing).
+fn drain_and_sum(
+    pool: &mut dyn ClientPool,
+    participants: usize,
+    bytes_up: &mut u64,
+    timing: &mut (f64, f64),
+    mut absorb: impl FnMut(RoundSum),
+) -> (usize, usize) {
+    let mut accounted = 0usize;
+    let mut missing = 0usize;
+    let mut pool_closed = false;
+    loop {
+        for _ci in pool.take_missing() {
+            missing += 1;
+            accounted += 1;
+        }
+        if accounted >= participants || pool_closed {
+            break;
+        }
+        let sw = Stopwatch::start();
+        let batch = pool.drain_sums();
+        timing.0 += sw.elapsed_secs();
+        if batch.is_empty() {
+            pool_closed = true;
+            continue;
+        }
+        let sw = Stopwatch::start();
+        for s in batch {
+            *bytes_up += s.wire_bytes;
+            accounted += s.committed as usize;
+            absorb(s);
+        }
+        timing.1 += sw.elapsed_secs();
+    }
+    // Losses certified together with the close are not stranded.
+    if accounted < participants {
+        for _ci in pool.take_missing() {
+            missing += 1;
+            accounted += 1;
+        }
+    }
+    assert!(
+        accounted == participants,
+        "round closed with {accounted}/{participants} participants \
+         accounted for"
+    );
+    (participants - missing, missing)
 }
 
 /// Pump the pool until every participant of the round is accounted for

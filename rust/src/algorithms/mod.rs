@@ -21,7 +21,7 @@ pub use engine::{
 pub use fednl::{run_fednl, run_fednl_pool};
 pub use fednl_ls::{run_fednl_ls, run_fednl_ls_pool, LineSearchParams};
 pub use fednl_pp::{run_fednl_pp, run_fednl_pp_pool, PPClientState};
-pub use state::{ClientMsg, ClientState, ServerState};
+pub use state::{ClientMsg, ClientState, RoundSum, ServerState};
 
 /// How the server forms the system matrix for the Newton step
 /// (Alg. 1 line 11).

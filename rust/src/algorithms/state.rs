@@ -9,8 +9,10 @@
 
 use crate::compressors::{Compressed, Compressor};
 use crate::linalg::packed::PackedUpper;
+use crate::linalg::reduce::{RepAcc, RepVec, SparseRepVec};
 use crate::linalg::{vector, Cholesky, Mat};
 use crate::oracle::Oracle;
+use crate::utils::{ByteReader, ByteWriter};
 
 /// What a client sends the master each round — the **unified** message
 /// of the whole algorithm family:
@@ -53,6 +55,172 @@ impl ClientMsg {
             + 1 // loss presence flag
             + if self.loss.is_some() { 8 } else { 0 }
             + self.update.wire_bytes()
+    }
+}
+
+/// The exact sum of a set of client round messages — the reproducible
+/// aggregation unit of the whole family (built on
+/// [`crate::linalg::reduce`]).
+///
+/// `absorb` folds one [`ClientMsg`] in; `merge` folds another
+/// `RoundSum` in. Both are **exactly associative and
+/// permutation-invariant**, so any grouping of the round's messages —
+/// the flat master absorbing atoms in arrival order, S shard
+/// aggregators each absorbing a partition and the master merging the
+/// S partial sums, any thread count, any transport — produces
+/// bit-identical state, and the one rounding per quantity happens at
+/// [`ServerState::finish_round`]. This is what lets the shard tier
+/// forward **one merged accumulator per shard** (`SHARD_SUM`,
+/// O(S·d) master fan-in) instead of per-client atoms (O(n·d)).
+///
+/// Field semantics: `grad` = Σ ∇fᵢ (raw, unweighted — weights are
+/// applied after rounding), `l` = Σ lᵢ, `loss` = Σ fᵢ (with
+/// `have_loss` false iff any absorbed message lacked one), `hess` = the
+/// sparse Σ scaleᵢ·Sᵢ in packed coordinates (each term is the one f64
+/// product `scaleᵢ·vᵢⱼ`; products round identically wherever they are
+/// computed, so shard-side and master-side absorption agree bitwise).
+#[derive(Debug, Clone, Default)]
+pub struct RoundSum {
+    pub grad: RepVec,
+    pub l: RepAcc,
+    pub loss: RepAcc,
+    pub have_loss: bool,
+    pub hess: SparseRepVec,
+    /// Messages folded into this sum.
+    pub committed: u32,
+    /// Transport bytes this sum cost: the folded atoms' wire bytes on
+    /// flat pools, the SHARD_SUM frame size on the shard tiers. Not
+    /// part of the wire codec (the receiver meters the frame itself).
+    pub wire_bytes: u64,
+}
+
+impl RoundSum {
+    pub fn new() -> Self {
+        Self { have_loss: true, ..Default::default() }
+    }
+
+    /// Reset to the empty sum, keeping every allocation.
+    pub fn reset(&mut self) {
+        self.grad.reset();
+        self.l.reset();
+        self.loss.reset();
+        self.have_loss = true;
+        self.hess.reset();
+        self.committed = 0;
+        self.wire_bytes = 0;
+    }
+
+    /// Fold one client message in (exact).
+    pub fn absorb(&mut self, m: &ClientMsg) {
+        self.grad.accumulate(&m.grad);
+        self.l.accumulate(m.l_i);
+        match m.loss {
+            Some(l) => self.loss.accumulate(l),
+            None => self.have_loss = false,
+        }
+        for (v, idx) in m.update.values.iter().zip(m.update.indices()) {
+            self.hess.add(idx, m.update.scale * v);
+        }
+        self.committed += 1;
+    }
+
+    /// Fold another partial sum in (exact; any merge tree).
+    pub fn merge(&mut self, other: RoundSum) {
+        self.grad.merge(other.grad);
+        self.l.merge(other.l);
+        self.loss.merge(other.loss);
+        self.have_loss &= other.have_loss;
+        self.hess.merge(other.hess);
+        self.committed += other.committed;
+        self.wire_bytes += other.wire_bytes;
+    }
+
+    /// Apply the rounded sparse Hessian sum to the dense Hᵏ:
+    /// `h += scale · round(Σᵢ scaleᵢ·Sᵢ)` at each touched packed
+    /// index, mirrored across the diagonal. The single place the
+    /// summed updates meet the matrix — shared by the Newton family
+    /// ([`ServerState::finish_round`]) and the FedNL-PP engine so the
+    /// two paths cannot drift.
+    pub fn apply_hessian(
+        &mut self,
+        pu: &PackedUpper,
+        h: &mut Mat,
+        scale: f64,
+    ) {
+        self.hess.for_each_rounded(|idx, v| {
+            let (i, j) = pu.pair(idx as usize);
+            h.add_at(i, j, scale * v);
+            if i != j {
+                h.add_at(j, i, scale * v);
+            }
+        });
+    }
+
+    /// Sum a batch of atoms, charging their individual wire bytes
+    /// (what a flat transport actually moved).
+    pub fn from_msgs(batch: &[ClientMsg]) -> Self {
+        let mut s = RoundSum::new();
+        for m in batch {
+            s.absorb(m);
+            s.wire_bytes += m.wire_bytes();
+        }
+        s
+    }
+
+    /// Exact byte length [`RoundSum::encode`] will produce — the
+    /// logical SHARD_SUM payload size (shard-tier byte accounting).
+    pub fn encoded_bytes(&mut self) -> u64 {
+        4 + 1
+            + self.l.encoded_bytes()
+            + self.loss.encoded_bytes()
+            + self.grad.encoded_bytes()
+            + self.hess.encoded_bytes()
+    }
+
+    /// Wire codec (committed, have_loss, l, loss, grad, hess);
+    /// `wire_bytes` intentionally excluded — the receiver meters it.
+    pub fn encode(&mut self, w: &mut ByteWriter) {
+        w.put_u32(self.committed);
+        w.put_u8(self.have_loss as u8);
+        self.l.encode(w);
+        self.loss.encode(w);
+        self.grad.encode(w);
+        self.hess.encode(w);
+    }
+
+    /// Decode against the run's dimension `d` (network-facing input:
+    /// the gradient sum must be a d-vector — or empty, for an
+    /// all-missing partition — and every sparse Hessian index must
+    /// fall inside the packed upper triangle, so a malformed frame is
+    /// an `Err` the transport can turn into a retired relay, never a
+    /// giant allocation or a downstream panic).
+    pub fn decode(
+        r: &mut ByteReader,
+        d: usize,
+    ) -> anyhow::Result<RoundSum> {
+        let committed = r.get_u32()?;
+        let have_loss = r.get_u8()? != 0;
+        let l = RepAcc::decode(r)?;
+        let loss = RepAcc::decode(r)?;
+        let grad = RepVec::decode(r, d)?;
+        anyhow::ensure!(
+            grad.is_empty() || grad.len() == d,
+            "RoundSum gradient length {} != dimension {d}",
+            grad.len()
+        );
+        let hess = SparseRepVec::decode(
+            r,
+            crate::linalg::packed::packed_len(d) as u32,
+        )?;
+        Ok(RoundSum {
+            grad,
+            l,
+            loss,
+            have_loss,
+            hess,
+            committed,
+            wire_bytes: 0,
+        })
     }
 }
 
@@ -167,13 +335,12 @@ pub struct ServerState {
     /// Current iterate xᵏ.
     pub x: Vec<f64>,
     // Round scratch:
-    grad_acc: Vec<f64>,
     sys: Mat,
-    // Incremental-aggregation accumulators (begin_round/apply_msg/
-    // finish_round):
-    l_acc: f64,
-    loss_acc: f64,
-    have_loss: bool,
+    /// Exact round accumulator (begin_round/apply_msg/apply_sum/
+    /// finish_round): every cross-client sum of the round lives here
+    /// as a reproducible superaccumulator, so commit order, transport,
+    /// thread count and shard grouping cannot perturb the result.
+    sum: RoundSum,
 }
 
 impl ServerState {
@@ -187,91 +354,75 @@ impl ServerState {
             alpha,
             pu: PackedUpper::new(d),
             x: x0,
-            grad_acc: vec![0.0; d],
             sys: Mat::zeros(d, d),
-            l_acc: 0.0,
-            loss_acc: 0.0,
-            have_loss: true,
+            sum: RoundSum::new(),
         }
     }
 
-    /// Install H⁰ = (1/n) Σ Hᵢ⁰ from warm-started clients.
+    /// Install H⁰ = (1/n) Σ Hᵢ⁰ from warm-started clients
+    /// (reproducible sum: exact Σ, then one rounding and one scaling
+    /// per packed entry — grouping-invariant like every other fold).
     pub fn init_h_from_packed(&mut self, packed: &[Vec<f64>]) {
         let inv_n = 1.0 / packed.len() as f64;
-        let mut acc = vec![0.0; self.pu.len()];
+        let mut acc = RepVec::new(self.pu.len());
         for p in packed {
-            vector::axpy(inv_n, p, &mut acc);
+            acc.accumulate(p);
         }
-        self.pu.unpack(&acc, &mut self.h);
+        let mut mean = acc.round_vec();
+        vector::scale(inv_n, &mut mean);
+        self.pu.unpack(&mean, &mut self.h);
     }
 
-    /// Reset the round accumulators before streaming messages into
-    /// [`ServerState::apply_msg`].
+    /// Reset the round accumulator before streaming messages into
+    /// [`ServerState::apply_msg`] / [`ServerState::apply_sum`].
     pub fn begin_round(&mut self) {
-        vector::fill_zero(&mut self.grad_acc);
-        self.l_acc = 0.0;
-        self.loss_acc = 0.0;
-        self.have_loss = true;
+        self.sum.reset();
     }
 
-    /// Fold one client's message into the round state: gradient partial
-    /// sum, lᵢ / loss accumulators, and the sparse Hessian update
-    /// Hᵏ ← Hᵏ + (α/n)·Sᵢᵏ (paper §5.6), applied **as the message
-    /// commits** so aggregation overlaps with the remaining clients'
-    /// compute / network latency. The caller commits messages in a
-    /// deterministic order (buffer-and-commit, ascending client id) so
-    /// the f64 reduction is bit-identical to the blocking aggregation.
+    /// Fold one client's message into the round sum (exact — see
+    /// [`RoundSum`]). Messages may be applied in **any order**: the
+    /// superaccumulator makes the round state grouping-invariant, so
+    /// the old buffer-and-commit order discipline is no longer what
+    /// determinism rests on.
     pub fn apply_msg(&mut self, m: &ClientMsg) {
-        let inv_n = 1.0 / self.n_clients as f64;
-        vector::axpy(inv_n, &m.grad, &mut self.grad_acc);
-        self.l_acc += m.l_i;
-        match m.loss {
-            Some(l) => self.loss_acc += l,
-            None => self.have_loss = false,
-        }
-        self.pu.apply_sparse(
-            &mut self.h,
-            self.alpha * m.update.scale * inv_n,
-            &m.update.indices(),
-            &m.update.values,
-        );
+        self.sum.absorb(m);
     }
 
-    /// Close the round (Alg. 1 lines 9–10): install lᵏ and return
-    /// (∇f(xᵏ), mean loss if every message carried one). `committed`
-    /// is how many messages actually committed this round: under a
-    /// quorum policy with missing clients the first-order reductions
-    /// are rescaled to means over the survivors (∇f by n/committed on
-    /// top of the per-message 1/n weights; lᵏ and the loss divided by
-    /// the committed count). The full-round path (`committed == n`)
-    /// keeps the exact pre-fault expressions so trajectories stay
-    /// bitwise unchanged.
+    /// Fold a pre-reduced partial sum in (the shard tier's merged
+    /// `SHARD_SUM`; exact, so S-shard runs match flat runs bitwise).
+    pub fn apply_sum(&mut self, s: RoundSum) {
+        self.sum.merge(s);
+    }
+
+    /// Close the round (Alg. 1 lines 9–10): perform the one rounding
+    /// per quantity, install lᵏ, apply the summed sparse Hessian
+    /// update Hᵏ ← Hᵏ + (α/n)·Σᵢ Sᵢᵏ, and return (∇f(xᵏ), mean loss if
+    /// every message carried one). `committed` is how many messages
+    /// actually committed: ∇f, lᵏ and the loss are means over the
+    /// survivors (round(Σ)·(1/committed)); the Hessian keeps the 1/n
+    /// weight per survivor (a client that never computed the round
+    /// never moved its local Hᵢᵏ either).
     pub fn finish_round(&mut self, committed: usize) -> (Vec<f64>, Option<f64>) {
         assert!(
             committed >= 1 && committed <= self.n_clients,
             "finish_round: committed {committed} out of 1..={}",
             self.n_clients
         );
-        let inv_n = 1.0 / self.n_clients as f64;
-        let mut grad = self.grad_acc.clone();
-        let loss;
-        if committed == self.n_clients {
-            self.l = self.l_acc * inv_n;
-            loss = if self.have_loss {
-                Some(self.loss_acc * inv_n)
-            } else {
-                None
-            };
+        let inv_c = 1.0 / committed as f64;
+        let mut grad = if self.sum.grad.is_empty() {
+            vec![0.0; self.d]
         } else {
-            let c = committed as f64;
-            vector::scale(self.n_clients as f64 / c, &mut grad);
-            self.l = self.l_acc / c;
-            loss = if self.have_loss {
-                Some(self.loss_acc / c)
-            } else {
-                None
-            };
-        }
+            self.sum.grad.round_vec()
+        };
+        vector::scale(inv_c, &mut grad);
+        self.l = self.sum.l.round() * inv_c;
+        let loss = if self.sum.have_loss {
+            Some(self.sum.loss.round() * inv_c)
+        } else {
+            None
+        };
+        let a = self.alpha / self.n_clients as f64;
+        self.sum.apply_hessian(&self.pu, &mut self.h, a);
         (grad, loss)
     }
 
@@ -400,5 +551,60 @@ mod tests {
         let mut c = quad_client(0);
         let msg = c.round(&[0.1, 0.2], 0, false);
         assert!(msg.wire_bytes() > 16);
+    }
+
+    #[test]
+    fn round_sum_grouping_invariant_and_codec_exact() {
+        // Σ over 4 messages: flat absorb in two different orders, and
+        // a 2+2 shard split merged, must agree bitwise — the exactness
+        // the shard tier's SHARD_SUM pre-reduction rests on.
+        let msgs: Vec<ClientMsg> = (0..4)
+            .map(|i| {
+                let mut c = quad_client(i);
+                c.round(&[0.1 * i as f64, -0.2], 0, true)
+            })
+            .collect();
+        let finish = |mut s: super::RoundSum| {
+            let g = s.grad.round_vec();
+            let l = s.l.round();
+            let f = s.loss.round();
+            let mut h = Vec::new();
+            s.hess.for_each_rounded(|i, v| h.push((i, v.to_bits())));
+            (
+                g.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                l.to_bits(),
+                f.to_bits(),
+                h,
+            )
+        };
+        let mut flat = super::RoundSum::new();
+        for m in &msgs {
+            flat.absorb(m);
+        }
+        let mut rev = super::RoundSum::new();
+        for m in msgs.iter().rev() {
+            rev.absorb(m);
+        }
+        let mut a = super::RoundSum::new();
+        a.absorb(&msgs[0]);
+        a.absorb(&msgs[1]);
+        let mut b = super::RoundSum::new();
+        b.absorb(&msgs[2]);
+        b.absorb(&msgs[3]);
+        a.merge(b);
+        let want = finish(flat.clone());
+        assert_eq!(finish(rev), want);
+        assert_eq!(finish(a.clone()), want);
+        // Codec: size helper exact, round-trip preserves the sums.
+        let mut w = ByteWriter::new();
+        let expect_len = a.encoded_bytes();
+        a.encode(&mut w);
+        assert_eq!(w.len() as u64, expect_len);
+        let mut r = ByteReader::new(w.as_slice());
+        let back = super::RoundSum::decode(&mut r, 2).unwrap();
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(back.committed, 4);
+        assert!(back.have_loss);
+        assert_eq!(finish(back), want);
     }
 }

@@ -39,8 +39,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use super::{ClientFamily, ClientPool};
-use crate::algorithms::ClientMsg;
+use super::{ClientFamily, ClientPool, RoundMode};
+use crate::algorithms::{ClientMsg, RoundSum};
 
 /// One frozen interval of a client: [`from`, `until`) in rounds.
 ///
@@ -219,6 +219,12 @@ pub struct FaultPool<P: ClientPool> {
     rejoined: Vec<u32>,
     /// (client, release instant) reply holds for the round in flight.
     holds: Vec<(u32, Instant)>,
+    /// The engine's requested reply-aggregation mode.
+    mode: RoundMode,
+    /// Latched per round at submit: injected delays need per-message
+    /// atom visibility, so a round with holds drops to the atom path
+    /// (exactness keeps the trajectory bit-identical either way).
+    round_atoms: bool,
 }
 
 impl<P: ClientPool> FaultPool<P> {
@@ -238,6 +244,8 @@ impl<P: ClientPool> FaultPool<P> {
             missing: Vec::new(),
             rejoined: Vec::new(),
             holds: Vec::new(),
+            mode: RoundMode::Atoms,
+            round_atoms: true,
         }
     }
 
@@ -343,7 +351,34 @@ impl<P: ClientPool> ClientPool for FaultPool<P> {
             }
             live.push(ci);
         }
+        // Rounds with injected stragglers need the atoms (each held
+        // reply is released individually); every other round forwards
+        // the engine's mode so shard tiers keep pre-reducing.
+        self.round_atoms =
+            self.mode == RoundMode::Atoms || !self.holds.is_empty();
+        self.inner.set_round_mode(if self.round_atoms {
+            RoundMode::Atoms
+        } else {
+            RoundMode::Sums
+        });
         self.inner.submit_round(x, Some(&live), round, need_loss);
+    }
+
+    fn set_round_mode(&mut self, mode: RoundMode) {
+        self.mode = mode;
+    }
+
+    fn drain_sums(&mut self) -> Vec<RoundSum> {
+        if !self.round_atoms {
+            return self.inner.drain_sums();
+        }
+        // Atom fallback (delay holds in flight): enforce the holds,
+        // then fold — bit-identical to the pre-reduced path.
+        let batch = self.drain();
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        vec![RoundSum::from_msgs(&batch)]
     }
 
     fn drain(&mut self) -> Vec<ClientMsg> {

@@ -20,18 +20,24 @@
 //! gradient overlaps with client j's compute and in-flight network
 //! transfer.
 //!
-//! # The buffer-and-commit determinism rule
+//! # Determinism by construction (reproducible summation)
 //!
-//! Streaming must not cost reproducibility. Replies may *arrive* in any
-//! order, but state is *committed* in a fixed order: the driver buffers
-//! early arrivals and applies messages in **round-subset order** (for a
-//! full round that is ascending client id; for a FedNL-PP round it is
-//! the seeded sampler's selection order, matching the sequential
-//! reference). All f64 reductions — message aggregation, `eval_loss`,
-//! `loss_grad`, `warm_start`, `init_state` — reduce in ascending client
-//! id order on every transport, so the three pools produce
-//! **bit-identical optimization trajectories** (asserted by the
-//! integration tests).
+//! Streaming must not cost reproducibility. Since the reproducible
+//! summation layer ([`crate::linalg::reduce`]) every cross-client f64
+//! reduction — message aggregation ([`crate::algorithms::RoundSum`]),
+//! `eval_loss`, `loss_grad`, `warm_start`, `init_state` — folds into
+//! an **exact, associative, permutation-invariant** superaccumulator
+//! and is rounded once at the end. Arrival order, commit order, thread
+//! count, transport and shard grouping therefore cannot perturb a
+//! single bit of the result: trajectories are bit-identical across
+//! pools **by construction**, not by order discipline (asserted by the
+//! integration tests, including deliberate stragglers and shuffled
+//! arrivals). The engine still buffers-and-commits in round-subset
+//! order on the atom path — the [`CommitBuffer`] guards duplicates,
+//! holes and the Reuse replay slots — but the ordering is bookkeeping
+//! now, not a numerical requirement.
+//!
+//! [`CommitBuffer`]: crate::algorithms::engine
 //!
 //! # Transports
 //!
@@ -79,16 +85,27 @@
 //!
 //! [`shard::ShardedPool`] fans the same pool API out to `S` shard
 //! aggregators, each owning a contiguous client-id partition; its TCP
-//! sibling is the relay tier in `net::relay`. The per-client reduction
-//! primitives below ([`ClientPool::eval_loss_each`],
-//! [`ClientPool::loss_grad_each`]) exist for that tier: a shard cannot
-//! forward a *partial f64 sum* upward without changing the reduction
-//! grouping (f64 addition is not associative — the fold `(a+b)+(c+d)`
-//! differs bitwise from `((a+b)+c)+d`), so shards forward per-client
-//! atoms and the provided [`ClientPool::eval_loss`] /
-//! [`ClientPool::loss_grad`] reductions reduce them in ascending
-//! client-id order on every topology. That is what keeps trajectories
-//! **bit-identical between unsharded and sharded runs for any S**.
+//! sibling is the relay tier in `net::relay`. Because the round
+//! arithmetic is exactly associative, shards **pre-reduce**: each
+//! forwards one merged [`RoundSum`] per round
+//! ([`ClientPool::drain_sums`], wire frame `SHARD_SUM`), cutting the
+//! master's fan-in payload and fold work from O(n·d) to O(S·d) while
+//! trajectories stay **bit-identical between unsharded and sharded
+//! runs for any S** — the merged sum equals the flat sum exactly, so
+//! the invariant holds by construction. The per-client probe
+//! primitives ([`ClientPool::eval_loss_each`],
+//! [`ClientPool::loss_grad_each`]) still surface atoms (their O(n)
+//! payloads are scalar-dominated), and the provided
+//! [`ClientPool::eval_loss`] / [`ClientPool::loss_grad`] reductions
+//! fold them through the same reproducible accumulator, so their
+//! results are grouping-invariant too. The FedNL-PP round path keeps
+//! per-client atoms on the wire: its deltas feed the engine's
+//! per-client (lᵢ, gᵢ) mirrors (rejoin resync) and its τ-subset
+//! fan-in is already sublinear — the master-side folds still run
+//! through [`RoundSum`], so PP trajectories share the
+//! grouping-invariance guarantee.
+//!
+//! [`RoundSum`]: crate::algorithms::RoundSum
 
 pub mod faults;
 pub mod local_sim;
@@ -100,8 +117,24 @@ pub use shard::{ShardedPool, ShardStats};
 
 use std::time::Duration;
 
-use crate::algorithms::{ClientMsg, ClientState, PPClientState};
-use crate::linalg::vector;
+use crate::algorithms::{ClientMsg, ClientState, PPClientState, RoundSum};
+use crate::linalg::reduce::{RepAcc, RepVec};
+
+/// How a pool surfaces the replies of the round in flight. Flat pools
+/// serve either mode from the same atom stream; the shard tiers must
+/// know **at submit time** (a relay's reply format is fixed when its
+/// `SHARD_ROUND` frame is sent), which is why this is a sticky setting
+/// rather than a `drain`-time choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundMode {
+    /// Per-client [`ClientMsg`] atoms through [`ClientPool::drain`]
+    /// (the FedNL-PP path, and the Reuse policy's replay cache).
+    Atoms,
+    /// Pre-reduced [`RoundSum`]s through [`ClientPool::drain_sums`]
+    /// (the FedNL/LS path: shard tiers forward one merged accumulator
+    /// per shard — O(S·d) master fan-in).
+    Sums,
+}
 
 /// Algorithm family of a client. The unified round exchange is
 /// family-agnostic on the wire, so the **driver** checks that its pool
@@ -284,6 +317,30 @@ pub trait ClientPool {
     /// batch once all participants have answered.
     fn drain(&mut self) -> Vec<ClientMsg>;
 
+    /// Select the reply-aggregation mode for subsequent rounds (see
+    /// [`RoundMode`]). Flat pools ignore it — their provided
+    /// [`drain_sums`] folds the atom stream server-side either way;
+    /// the shard tiers encode it into the round dispatch.
+    ///
+    /// [`drain_sums`]: ClientPool::drain_sums
+    fn set_round_mode(&mut self, _mode: RoundMode) {}
+
+    /// Sum-mode sibling of [`drain`]: blocks like `drain`, but surfaces
+    /// pre-reduced [`RoundSum`]s (empty = round closed). Exactness
+    /// makes the two paths interchangeable arithmetically — folding
+    /// atoms here (the provided default) or merging shard-side partial
+    /// sums yields bit-identical server state. Shard tiers override
+    /// this to forward one merged accumulator per shard.
+    ///
+    /// [`drain`]: ClientPool::drain
+    fn drain_sums(&mut self) -> Vec<RoundSum> {
+        let batch = self.drain();
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        vec![RoundSum::from_msgs(&batch)]
+    }
+
     /// Blocking shim: execute one round on every client and return the
     /// messages sorted by client id.
     fn round(
@@ -318,40 +375,43 @@ pub trait ClientPool {
     /// [`eval_loss_each`]: ClientPool::eval_loss_each
     fn loss_grad_each(&mut self, x: &[f64]) -> Vec<(u32, f64, Vec<f64>)>;
 
-    /// Average local loss at `x` (line-search probe). Reduced in
-    /// ascending client id order over the live clients on every
-    /// transport — a provided method so every topology (flat pools,
-    /// the sharded tier, the TCP relay tier) shares one reduction
-    /// order, bit for bit.
+    /// Average local loss at `x` (line-search probe). A provided
+    /// method folding the per-client atoms through the reproducible
+    /// accumulator ([`crate::linalg::reduce`]), so every topology —
+    /// flat pools, the sharded tier, the TCP relay tier — produces the
+    /// bit-identical value regardless of the order (or grouping) the
+    /// atoms arrive in. No sort needed: the sum is exact.
     fn eval_loss(&mut self, x: &[f64]) -> f64 {
-        let mut parts = self.eval_loss_each(x);
+        let parts = self.eval_loss_each(x);
         assert!(!parts.is_empty(), "eval_loss: no live clients");
-        parts.sort_by_key(|&(id, _)| id);
-        let mut sum = 0.0;
-        for &(_, l) in &parts {
-            sum += l;
-        }
-        sum / parts.len() as f64
+        let vals: Vec<f64> = parts.iter().map(|&(_, l)| l).collect();
+        let mut acc = RepAcc::new();
+        acc.accumulate_slice(&vals);
+        acc.round() / parts.len() as f64
     }
 
     /// Average (f(x), ∇f(x)) reduction — the first-order baselines'
-    /// round primitive (one d-vector per client per call). Reduced in
-    /// ascending client id order over the live clients on every
-    /// transport (provided; see [`eval_loss`]).
+    /// round primitive (one d-vector per client per call). Reduced
+    /// through the reproducible accumulator like [`eval_loss`]:
+    /// exact Σ, one rounding, then the 1/n scaling — grouping- and
+    /// order-invariant on every transport.
     ///
     /// [`eval_loss`]: ClientPool::eval_loss
     fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
-        let mut parts = self.loss_grad_each(x);
+        let parts = self.loss_grad_each(x);
         assert!(!parts.is_empty(), "loss_grad: no live clients");
-        parts.sort_by_key(|&(id, _, _)| id);
         let inv = 1.0 / parts.len() as f64;
-        let mut loss = 0.0;
-        let mut g = vec![0.0; x.len()];
+        let mut loss = RepAcc::new();
+        let mut gsum = RepVec::new(x.len());
         for (_, l, gi) in &parts {
-            loss += l;
-            vector::axpy(inv, gi, &mut g);
+            loss.accumulate(*l);
+            gsum.accumulate(gi);
         }
-        (loss * inv, g)
+        let mut g = gsum.round_vec();
+        for gj in g.iter_mut() {
+            *gj *= inv;
+        }
+        (loss.round() * inv, g)
     }
 
     /// Warm-start Hᵢ⁰ = ∇²fᵢ(x⁰); returns packed Hᵢ⁰ per client

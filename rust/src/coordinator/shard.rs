@@ -12,34 +12,32 @@
 //! of sums, so the tier changes *where* the folding happens, never the
 //! math.
 //!
-//! # Determinism: why shards forward atoms, not partial f64 sums
+//! # Determinism: true arithmetic pre-reduction
 //!
 //! The headline invariant of the tier is that **trajectories are
 //! bit-identical between unsharded and sharded runs for any S, for
-//! FedNL / FedNL-LS / FedNL-PP, on every transport**. f64 addition is
-//! not associative — folding `(g₀+g₁)+(g₂+g₃)` differs in the last ulp
-//! from `((g₀+g₁)+g₂)+g₃` — so a shard that forwarded a *summed*
-//! gradient partial would silently re-group the master's reduction and
-//! break the invariant for some S. The tier therefore pre-reduces at
-//! the **protocol** level, not the arithmetic level:
+//! FedNL / FedNL-LS / FedNL-PP, on every transport**. Since the
+//! reproducible summation layer ([`crate::linalg::reduce`]) the
+//! invariant holds **by construction**: every round quantity folds
+//! into an exact, associative superaccumulator
+//! ([`crate::algorithms::RoundSum`]), so a shard can sum its
+//! partition's replies **arithmetically** and forward one merged
+//! accumulator per round ([`ClientPool::drain_sums`]; `SHARD_SUM` on
+//! the TCP relay) — the master merges S partial sums and obtains
+//! bit-for-bit the state the flat fold of all n atoms produces.
+//! Master fan-in payload and fold work drop from O(n·d) to O(S·d).
 //!
-//! * each shard commits its partition's replies internally in
-//!   round-subset order and forwards them upward as one ordered batch
-//!   (one `SHARD_MSG` frame per round on the TCP relay), together with
-//!   the partition's missing-certificates;
-//! * the master folds shard batches in ascending shard id; because the
-//!   partitions are contiguous ascending-id ranges, the engine's
-//!   [`CommitBuffer`] re-establishes exactly the unsharded commit
-//!   order, and the per-message f64 atoms make the commit arithmetic
-//!   invariant in `S`;
+//! * FedNL / FedNL-LS rounds ride the sum path (full-participation
+//!   rounds are exactly where O(n·d) fan-in bites);
+//! * FedNL-PP rounds keep per-client atoms on the wire — the engine's
+//!   rejoin-resync mirrors need per-client deltas, and a τ-subset
+//!   round is already sublinear — while the master-side folds still
+//!   run through the same exact accumulator;
 //! * the probe reductions (`eval_loss`, `loss_grad`, `warm_start`,
-//!   `init_state`) concatenate per-client entries across shards, and
-//!   the provided [`ClientPool`] reductions reduce them in ascending
-//!   client id order — the same flat fold the unsharded pools use.
-//!
-//! (True arithmetic pre-reduction would need reproducible summation —
-//! a fixed-point superaccumulator — applied uniformly to the unsharded
-//! path too; noted in ROADMAP as future work.)
+//!   `init_state`) concatenate per-client entries across shards and
+//!   fold them through the provided reproducible [`ClientPool`]
+//!   reductions — grouping-invariant, so no ordering discipline is
+//!   needed anywhere.
 //!
 //! # Fault tolerance through the tier
 //!
@@ -56,7 +54,7 @@
 use std::time::{Duration, Instant};
 
 use super::{ClientFamily, ClientPool, PoolClient, SeqPool, ThreadedPool};
-use crate::algorithms::ClientMsg;
+use crate::algorithms::{ClientMsg, RoundSum};
 
 /// Per-shard accounting of one run: how long the master was blocked
 /// draining this shard, how long it spent committing this shard's
@@ -73,8 +71,13 @@ pub struct ShardStats {
     /// (measured as the gap between serving a batch and the next
     /// `drain` call).
     pub aggregate_s: f64,
-    /// Round messages forwarded by this shard.
+    /// Round messages folded by this shard.
     pub msgs: u64,
+    /// Logical shard→master payload bytes (the `SHARD_SUM` frames this
+    /// shard's pre-reduced rounds produced — what the TCP relay tier
+    /// would meter on the upward link). O(d) per round, independent of
+    /// the partition's client count.
+    pub payload_bytes: u64,
 }
 
 /// Contiguous balanced partition of `n` clients into `s` shards:
@@ -148,6 +151,7 @@ impl ShardedPool {
                 wait_s: 0.0,
                 aggregate_s: 0.0,
                 msgs: 0,
+                payload_bytes: 0,
             })
             .collect();
         Self {
@@ -334,6 +338,50 @@ impl ClientPool for ShardedPool {
             self.stats[s].msgs += batch.len() as u64;
             self.serving = Some((s, Instant::now()));
             return batch;
+        }
+        Vec::new()
+    }
+
+    fn drain_sums(&mut self) -> Vec<RoundSum> {
+        // The sum path: each shard's partition is pumped to closure
+        // and folded into **one** merged accumulator — exactly what a
+        // TCP relay ships as its SHARD_SUM frame. Ascending shard id,
+        // one shard per call; exactness makes the grouping invisible
+        // to the engine. The shard's missing-certificates surface
+        // through `take_missing` as on the atom path.
+        self.settle_serving();
+        for s in 0..self.shards.len() {
+            if self.closed[s] {
+                continue;
+            }
+            let since = Instant::now();
+            let mut acc = RoundSum::new();
+            loop {
+                let batch = self.shards[s].drain_sums();
+                if batch.is_empty() {
+                    break;
+                }
+                for sum in batch {
+                    acc.merge(sum);
+                }
+            }
+            self.closed[s] = true;
+            self.stats[s].wait_s += since.elapsed().as_secs_f64();
+            if acc.committed == 0 {
+                continue; // whole partition certified missing
+            }
+            self.stats[s].msgs += acc.committed as u64;
+            // Logical SHARD_SUM frame size (header + shard id + sum
+            // payload + empty missing list) — the byte accounting the
+            // TCP relay tier meters for real.
+            let bytes = crate::net::FRAME_HEADER_BYTES
+                + 4
+                + acc.encoded_bytes()
+                + 4;
+            acc.wire_bytes = bytes;
+            self.stats[s].payload_bytes += bytes;
+            self.serving = Some((s, Instant::now()));
+            return vec![acc];
         }
         Vec::new()
     }
@@ -552,6 +600,76 @@ mod tests {
         for (a, b) in g1.iter().zip(&g2) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn drain_sums_matches_atom_fold_and_meters_payload() {
+        // The pre-reduced path must produce exactly the sum the atom
+        // path produces (exact associativity), with one merged
+        // accumulator per shard and O(d) payload accounting.
+        let (cs1, d) = make_clients(6, 45);
+        let (cs2, _) = make_clients(6, 45);
+        let x = vec![0.15; d];
+        // Atom reference: flat fold of all six messages.
+        let mut flat = SeqPool::new(cs1);
+        flat.submit_round(&x, None, 0, true);
+        let mut all = Vec::new();
+        loop {
+            let batch = flat.drain();
+            if batch.is_empty() {
+                break;
+            }
+            all.extend(batch);
+        }
+        let mut want = crate::algorithms::RoundSum::from_msgs(&all);
+        // Sharded sum path.
+        let mut pool = ShardedPool::new_seq(cs2, 3);
+        pool.submit_round(&x, None, 0, true);
+        let mut merged = crate::algorithms::RoundSum::new();
+        let mut frames = 0;
+        loop {
+            let sums = pool.drain_sums();
+            if sums.is_empty() {
+                break;
+            }
+            for s in sums {
+                frames += 1;
+                merged.merge(s);
+            }
+        }
+        assert_eq!(frames, 3, "one merged sum per shard");
+        assert_eq!(merged.committed, 6);
+        assert_eq!(
+            merged.l.round().to_bits(),
+            want.l.round().to_bits()
+        );
+        let a: Vec<u64> = merged
+            .grad
+            .round_vec()
+            .iter()
+            .map(|v| v.to_bits())
+            .collect();
+        let b: Vec<u64> =
+            want.grad.round_vec().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+        // Payload metered per shard, and far below the atom bytes for
+        // the gradient-dominated part is not guaranteed at this tiny
+        // scale — only that it was recorded and is O(d)-shaped.
+        for st in pool.shard_stats() {
+            assert!(st.payload_bytes > 0, "shard {}", st.shard);
+            assert_eq!(st.msgs, 2);
+        }
+        // Pool is reusable for a next round after the sum path.
+        pool.submit_round(&x, None, 1, false);
+        let mut n = 0;
+        loop {
+            let sums = pool.drain_sums();
+            if sums.is_empty() {
+                break;
+            }
+            n += sums.iter().map(|s| s.committed).sum::<u32>();
+        }
+        assert_eq!(n, 6);
     }
 
     #[test]

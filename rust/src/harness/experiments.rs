@@ -654,12 +654,12 @@ pub fn shard_smoke(cfg: &HarnessCfg) -> Result<String> {
 
     // The headline invariant: same plan, same policy → bit-identical
     // trajectories for S=1 / S=3 in-process / S=2 over TCP relays.
-    // (Byte columns are compared only for the in-process tier: the
-    // relay transport meters master↔relay traffic, a different — and
-    // honest — transport-level quantity.)
-    for (t, name, check_bytes) in
-        [(&t_sh3, "sharded-S3", true), (&t_relay, "relay-S2", false)]
-    {
+    // (Byte columns are not compared across topologies: since the
+    // reproducible-summation layer the shard tiers pre-reduce and
+    // forward compact SHARD_SUM frames, so their upward payload
+    // *deliberately* differs from the flat pools' per-client atoms —
+    // that payload cut is the point, tracked by BENCH_shard.json.)
+    for (t, name) in [(&t_sh3, "sharded-S3"), (&t_relay, "relay-S2")] {
         anyhow::ensure!(
             t.records.len() == t_seq.records.len(),
             "shardsmoke: {name} ran {} rounds vs seq {}",
@@ -671,8 +671,7 @@ pub fn shard_smoke(cfg: &HarnessCfg) -> Result<String> {
                 a.grad_norm.to_bits() == b.grad_norm.to_bits()
                     && a.loss.to_bits() == b.loss.to_bits()
                     && a.committed == b.committed
-                    && a.missing == b.missing
-                    && (!check_bytes || a.bytes_up == b.bytes_up),
+                    && a.missing == b.missing,
                 "shardsmoke: {name} diverged from seq at round {}: \
                  grad {:.17e} vs {:.17e}, committed {}/{} vs {}/{}",
                 a.round,
@@ -714,12 +713,14 @@ pub fn shard_smoke(cfg: &HarnessCfg) -> Result<String> {
     for (i, st) in shard_stats.iter().enumerate() {
         json.push_str(&format!(
             "    {{\"shard\": {}, \"clients\": {}, \"wait_s\": {:.6}, \
-             \"aggregate_s\": {:.6}, \"msgs\": {}}}{}\n",
+             \"aggregate_s\": {:.6}, \"msgs\": {}, \
+             \"payload_bytes\": {}}}{}\n",
             st.shard,
             st.clients,
             st.wait_s,
             st.aggregate_s,
             st.msgs,
+            st.payload_bytes,
             if i + 1 < shard_stats.len() { "," } else { "" }
         ));
     }

@@ -12,6 +12,11 @@
 //! energy scans) route through [`simd`] — a runtime-dispatched kernel
 //! layer that selects AVX2+FMA intrinsics when the host supports them
 //! and falls back to portable 4-way-unrolled scalar loops otherwise.
+//!
+//! Cross-client sums additionally route through [`reduce`] — an exact
+//! fixed-point superaccumulator whose sums are associative and
+//! permutation-invariant, so reductions are bit-identical no matter
+//! how (or where) the terms were grouped.
 
 pub mod cholesky;
 pub mod eigen;
@@ -20,9 +25,11 @@ pub mod iterative;
 pub mod matrix;
 pub mod packed;
 pub mod qr;
+pub mod reduce;
 pub mod simd;
 pub mod vector;
 
 pub use cholesky::Cholesky;
 pub use matrix::Mat;
 pub use packed::{packed_idx, packed_len, PackedUpper};
+pub use reduce::{RepAcc, RepVec, SparseRepVec};

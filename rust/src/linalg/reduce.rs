@@ -1,0 +1,944 @@
+//! Reproducible f64 summation: an exact fixed-point superaccumulator.
+//!
+//! Every cross-client reduction in FedNL is a sum of f64 quantities —
+//! gradients, lᵢ distances, losses, sparse Hessian updates. Plain f64
+//! folding is **not associative**, so until this layer existed the
+//! whole determinism story rested on *order discipline*: every
+//! transport and every shard tier had to reduce in exactly the same
+//! grouping, and shards could only forward per-client atoms (O(n·d)
+//! fan-in). [`RepAcc`] removes the constraint at the arithmetic level,
+//! in the style of Demmel–Nguyen reproducible (binned) summation taken
+//! to its exact limit (a Kulisch-style long accumulator):
+//!
+//! * the running sum is held as a **fixed-point integer** spanning the
+//!   full f64 exponent range — [`LIMBS`] i64 limbs of [`LIMB_BITS`]
+//!   value bits each, limb `j` weighted 2^((j−[`BIAS_LIMB`])·32);
+//! * [`RepAcc::accumulate`] decomposes an f64 into (sign, 53-bit
+//!   mantissa, exponent) and adds it into at most three limbs —
+//!   **exact integer arithmetic**, no rounding anywhere;
+//! * therefore `accumulate`/[`RepAcc::merge`] are exactly associative
+//!   and permutation-invariant, and [`RepAcc::round`] performs the one
+//!   and only rounding (round-to-nearest-even of the exact sum) at the
+//!   very end.
+//!
+//! Consequences the coordination layer builds on: a sum is
+//! bit-identical no matter how the terms were grouped (flat master,
+//! S-shard pre-reduction, any arrival order, any thread count), and a
+//! shard can forward **one merged accumulator** instead of per-client
+//! atoms without perturbing the master's result by a single ulp.
+//!
+//! # Special values
+//!
+//! Non-finite inputs never touch the limbs; they are latched in a
+//! 3-bit special mask with IEEE "any-order sum" semantics: any NaN →
+//! NaN; +∞ and −∞ together → NaN; a single-signed ∞ → that ∞. This is
+//! itself permutation-invariant (unlike a sequential IEEE fold, where
+//! `inf + (-inf)` poisons only later terms). Signed zeros contribute
+//! nothing: the sum of `-0.0`s rounds to `+0.0` (numerically equal;
+//! documented divergence from a sequential IEEE fold). If the exact
+//! sum exceeds the f64 range, [`RepAcc::round`] returns ±∞ — the
+//! correctly rounded value, never a silently wrong finite number.
+//!
+//! # Wire form
+//!
+//! A freshly summed accumulator is *sparse in limbs*: values of
+//! similar magnitude touch a handful of adjacent limbs. The codec
+//! therefore ships only the `[lo, hi]` window of nonzero limbs
+//! (3 bytes of header + 8 bytes per limb — ~30–60 bytes for typical
+//! sums), which is what keeps `SHARD_SUM` frames compact.
+//!
+//! The bulk entry point [`RepAcc::accumulate_slice`] dispatches to
+//! [`crate::linalg::simd::binned_accumulate`] (AVX2-assisted decompose
+//! + scalar scatter, with a 4-way unrolled scalar fallback). Both ISA
+//! paths produce **identical limbs** — the arithmetic is integer-exact,
+//! so unlike the float kernels there is no cross-ISA divergence at all.
+
+use crate::utils::{ByteReader, ByteWriter};
+
+/// Value bits per limb (the limb *stride*; limbs are i64 so the upper
+/// 32 bits are carry headroom between propagations).
+pub const LIMB_BITS: u32 = 32;
+
+/// Limb count: weights run from 2^-1088 (limb 0) to 2^1056 (limb 67),
+/// covering every finite f64 (2^-1074 … 2^1023·(2−2^-52)) plus carry
+/// headroom far beyond any realistic term count.
+pub const LIMBS: usize = 68;
+
+/// Limb index whose bit 0 has weight 2^0.
+pub const BIAS_LIMB: usize = 34;
+
+/// Bit offset of weight 2^e inside the limb array: e + 32·BIAS_LIMB.
+const OFFSET_BIAS: i32 = (BIAS_LIMB as i32) * 32;
+
+/// Accumulations allowed between carry propagations. Each accumulate
+/// adds chunks < 2^32 to at most 3 limbs; starting from canonical
+/// limbs (< 2^32) the worst-case magnitude after k accumulates is
+/// (k+1)·2^32, so 2^30 keeps every limb comfortably inside i64.
+const PENDING_MAX: u32 = 1 << 30;
+
+/// Special-value mask bits (IEEE any-order-sum semantics).
+pub const SP_POS_INF: u8 = 1;
+pub const SP_NEG_INF: u8 = 2;
+pub const SP_NAN: u8 = 4;
+
+/// Decompose-and-add one f64 into the limb array. Exact; returns the
+/// special mask contribution (0 for finite inputs). Shared by the
+/// scalar and AVX2 bulk kernels in [`crate::linalg::simd`] so every
+/// path performs the identical integer operation.
+#[inline]
+pub(crate) fn accumulate_one(limbs: &mut [i64; LIMBS], x: f64) -> u8 {
+    let b = x.to_bits();
+    let exp = ((b >> 52) & 0x7ff) as i32;
+    let frac = b & ((1u64 << 52) - 1);
+    if exp == 0x7ff {
+        return if frac != 0 {
+            SP_NAN
+        } else if b >> 63 == 1 {
+            SP_NEG_INF
+        } else {
+            SP_POS_INF
+        };
+    }
+    if exp == 0 && frac == 0 {
+        return 0; // ±0 contributes nothing
+    }
+    let mant = if exp == 0 { frac } else { frac | (1u64 << 52) };
+    // value = mant · 2^(max(exp,1) − 1075)
+    add_mantissa(limbs, mant, exp.max(1) - 1075, b >> 63 == 1);
+    0
+}
+
+/// Exact scatter of a decomposed finite value `±mant · 2^e2` into the
+/// limb array (the shared core of the scalar and AVX2 bulk kernels).
+#[inline]
+pub(crate) fn add_mantissa(
+    limbs: &mut [i64; LIMBS],
+    mant: u64,
+    e2: i32,
+    neg: bool,
+) {
+    let off = (e2 + OFFSET_BIAS) as usize; // ≥ 14 by construction
+    let (j, sh) = (off >> 5, off & 31);
+    let wide = (mant as u128) << sh; // ≤ 2^84: spans ≤ 3 limbs
+    let c0 = (wide & 0xFFFF_FFFF) as i64;
+    let c1 = ((wide >> 32) & 0xFFFF_FFFF) as i64;
+    let c2 = ((wide >> 64) & 0xFFFF_FFFF) as i64;
+    if neg {
+        limbs[j] -= c0;
+        limbs[j + 1] -= c1;
+        limbs[j + 2] -= c2;
+    } else {
+        limbs[j] += c0;
+        limbs[j + 1] += c1;
+        limbs[j + 2] += c2;
+    }
+}
+
+/// Carry-propagate into canonical form: limbs 0..LIMBS−1 land in
+/// [0, 2^32), the top limb keeps the (signed) remainder. The
+/// represented value is unchanged — propagation commutes with every
+/// accumulate/merge, which is what makes the arithmetic associative.
+pub(crate) fn propagate_limbs(limbs: &mut [i64; LIMBS]) {
+    let mut carry: i64 = 0;
+    for l in limbs.iter_mut().take(LIMBS - 1) {
+        let v = *l as i128 + carry as i128;
+        let c = (v >> 32) as i64; // arithmetic shift: floor division
+        *l = (v - ((c as i128) << 32)) as i64; // in [0, 2^32)
+        carry = c;
+    }
+    limbs[LIMBS - 1] += carry;
+}
+
+/// Exact, reproducible f64 accumulator (see the module docs).
+#[derive(Debug, Clone)]
+pub struct RepAcc {
+    limbs: [i64; LIMBS],
+    /// Accumulates since the last propagation (carry-overflow guard).
+    pending: u32,
+    /// Latched non-finite state (SP_* bits).
+    special: u8,
+}
+
+impl Default for RepAcc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RepAcc {
+    pub fn new() -> Self {
+        Self { limbs: [0; LIMBS], pending: 0, special: 0 }
+    }
+
+    /// Reset to the empty sum (keeps the allocation-free layout).
+    pub fn reset(&mut self) {
+        self.limbs = [0; LIMBS];
+        self.pending = 0;
+        self.special = 0;
+    }
+
+    /// True iff nothing (finite or special) has been accumulated.
+    pub fn is_zero(&self) -> bool {
+        self.special == 0 && self.limbs.iter().all(|&l| l == 0)
+    }
+
+    /// Add one term. Exact — the represented sum after this call is
+    /// the mathematical sum, independent of call order.
+    #[inline]
+    pub fn accumulate(&mut self, x: f64) {
+        self.special |= accumulate_one(&mut self.limbs, x);
+        self.pending += 1;
+        if self.pending >= PENDING_MAX {
+            self.propagate();
+        }
+    }
+
+    /// Bulk accumulate through the runtime-dispatched kernel
+    /// (`simd::binned_accumulate`); limb-identical to a scalar loop.
+    pub fn accumulate_slice(&mut self, xs: &[f64]) {
+        self.propagate();
+        self.special |=
+            super::simd::binned_accumulate(&mut self.limbs, xs);
+        // The kernel propagates before returning.
+    }
+
+    /// Scalar-fallback bulk accumulate (microbench A/B partner of
+    /// [`RepAcc::accumulate_slice`]; results are limb-identical).
+    pub fn accumulate_slice_scalar(&mut self, xs: &[f64]) {
+        self.propagate();
+        self.special |=
+            super::simd::scalar::binned_accumulate(&mut self.limbs, xs);
+    }
+
+    /// Fold another accumulator in. Exact and symmetric: any merge
+    /// tree over any partition of the terms yields identical state.
+    pub fn merge(&mut self, mut other: RepAcc) {
+        self.propagate();
+        other.propagate();
+        for (a, b) in self.limbs.iter_mut().zip(other.limbs.iter()) {
+            *a += *b;
+        }
+        self.special |= other.special;
+        self.pending = 2; // canonical + canonical stays far below i64
+    }
+
+    pub(crate) fn propagate(&mut self) {
+        if self.pending != 0 {
+            propagate_limbs(&mut self.limbs);
+            self.pending = 0;
+        }
+    }
+
+    /// Round the exact sum to the nearest f64 (ties to even) — the
+    /// single rounding of the whole reduction. Non-finite inputs
+    /// resolve with IEEE any-order semantics; an exact sum beyond the
+    /// f64 range returns ±∞ (the correctly rounded value).
+    pub fn round(&mut self) -> f64 {
+        if self.special != 0 {
+            if self.special & SP_NAN != 0
+                || self.special & (SP_POS_INF | SP_NEG_INF)
+                    == SP_POS_INF | SP_NEG_INF
+            {
+                return f64::NAN;
+            }
+            return if self.special & SP_POS_INF != 0 {
+                f64::INFINITY
+            } else {
+                f64::NEG_INFINITY
+            };
+        }
+        let (limbs, neg) = self.magnitude();
+        let Some(h) = (0..LIMBS).rev().find(|&j| limbs[j] != 0) else {
+            return 0.0;
+        };
+        debug_assert!(limbs[h] > 0);
+        let bits_h = 64 - (limbs[h] as u64).leading_zeros() as i32;
+        // Exponent of the most significant bit of the magnitude.
+        let t = (h as i32 - BIAS_LIMB as i32) * 32 + bits_h - 1;
+        // Gather the top window (up to 3 limbs) into a u128; bits
+        // below the window only matter as a sticky flag.
+        let mut acc: u128 = limbs[h] as u128;
+        let mut e_lsb = (h as i32 - BIAS_LIMB as i32) * 32;
+        let mut lo_edge = h;
+        for _ in 0..2 {
+            if lo_edge == 0 {
+                break;
+            }
+            lo_edge -= 1;
+            acc = (acc << 32) | (limbs[lo_edge] as u128);
+            e_lsb -= 32;
+        }
+        let sticky_low = limbs[..lo_edge].iter().any(|&l| l != 0);
+        // Mantissa LSB exponent: 53 significant bits, or the subnormal
+        // floor 2^-1074. Contributions are multiples of 2^-1074, so
+        // t ≥ -1074 and the shift below is always ≥ 1.
+        let mut q = (t - 52).max(-1074);
+        let shift = (q - e_lsb) as u32;
+        debug_assert!(shift >= 1);
+        let mut m = (acc >> shift) as u64;
+        let round_bit = (acc >> (shift - 1)) & 1 == 1;
+        let sticky =
+            sticky_low || (acc & ((1u128 << (shift - 1)) - 1)) != 0;
+        if round_bit && (sticky || m & 1 == 1) {
+            m += 1;
+        }
+        if m == 1u64 << 53 {
+            m >>= 1;
+            q += 1;
+        }
+        let mag_bits = if m >= 1u64 << 52 {
+            let e = q + 1075; // biased exponent
+            if e >= 0x7ff {
+                0x7ff0_0000_0000_0000 // overflow: correctly rounds to ∞
+            } else {
+                ((e as u64) << 52) | (m & ((1u64 << 52) - 1))
+            }
+        } else {
+            debug_assert_eq!(q, -1074);
+            m // subnormal
+        };
+        f64::from_bits(mag_bits | if neg { 1u64 << 63 } else { 0 })
+    }
+
+    /// Canonical sign-magnitude view: (limbs of |value|, canonical —
+    /// every limb in [0, 2^32) except a tiny non-negative top —, and
+    /// whether the value is negative). The shared core of [`round`],
+    /// [`encode`] and [`encoded_bytes`]: the two's-complement-like
+    /// canonical form of a *negative* total carries a long run of
+    /// 2^32−1 limbs up to the sign-carrying top, so the compact wire
+    /// window must be taken over the magnitude, never the raw limbs.
+    ///
+    /// [`round`]: RepAcc::round
+    /// [`encode`]: RepAcc::encode
+    /// [`encoded_bytes`]: RepAcc::encoded_bytes
+    fn magnitude(&mut self) -> ([i64; LIMBS], bool) {
+        self.propagate();
+        let mut limbs = self.limbs;
+        // Canonical form: sign of the value = sign of the top limb.
+        let neg = limbs[LIMBS - 1] < 0;
+        if neg {
+            for l in limbs.iter_mut() {
+                *l = -*l;
+            }
+            propagate_limbs(&mut limbs);
+        }
+        (limbs, neg)
+    }
+
+    // --- compact wire form (sign + magnitude-limb window) ------------
+
+    const FLAG_NEG: u8 = 8;
+
+    /// Exact byte length [`RepAcc::encode`] will produce.
+    pub fn encoded_bytes(&mut self) -> u64 {
+        let (limbs, _) = self.magnitude();
+        3 + 8 * window_of(&limbs).map_or(0, |(lo, hi)| hi - lo + 1) as u64
+    }
+
+    /// Serialize: flags byte (special mask | sign bit), window start,
+    /// window length, magnitude limbs. Every magnitude limb of a real
+    /// sum is < 2^32 (values would need to reach 2^1088 otherwise), so
+    /// the window stays a handful of limbs for either sign.
+    pub fn encode(&mut self, w: &mut ByteWriter) {
+        let (limbs, neg) = self.magnitude();
+        w.put_u8(self.special | if neg { Self::FLAG_NEG } else { 0 });
+        match window_of(&limbs) {
+            None => {
+                w.put_u8(0);
+                w.put_u8(0);
+            }
+            Some((lo, hi)) => {
+                w.put_u8(lo as u8);
+                w.put_u8((hi - lo + 1) as u8);
+                for l in &limbs[lo..=hi] {
+                    w.put_u64(*l as u64);
+                }
+            }
+        }
+    }
+
+    /// Decode network-facing input: the window must fit, every limb
+    /// must be a valid magnitude limb (< 2^32 — rejects values no real
+    /// sum can produce and keeps all downstream limb arithmetic far
+    /// from i64 overflow), and the result is left one propagation away
+    /// from canonical (`pending = 1`), so merge/round always
+    /// canonicalize before touching it.
+    pub fn decode(r: &mut ByteReader) -> anyhow::Result<RepAcc> {
+        let flags = r.get_u8()?;
+        anyhow::ensure!(flags <= 0xf, "bad RepAcc flags {flags:#x}");
+        let special = flags & 0x7;
+        let neg = flags & Self::FLAG_NEG != 0;
+        let lo = r.get_u8()? as usize;
+        let count = r.get_u8()? as usize;
+        anyhow::ensure!(
+            lo + count <= LIMBS,
+            "RepAcc window [{lo}, {lo}+{count}) exceeds {LIMBS} limbs"
+        );
+        let mut acc = RepAcc::new();
+        acc.special = special;
+        for j in lo..lo + count {
+            let v = r.get_u64()?;
+            anyhow::ensure!(
+                v < 1 << 32,
+                "RepAcc limb {v:#x} out of magnitude range"
+            );
+            acc.limbs[j] = if neg { -(v as i64) } else { v as i64 };
+        }
+        acc.pending = 1;
+        Ok(acc)
+    }
+}
+
+/// `[lo, hi]` of the nonzero limbs (None = zero).
+fn window_of(limbs: &[i64; LIMBS]) -> Option<(usize, usize)> {
+    let lo = limbs.iter().position(|&l| l != 0)?;
+    let hi = limbs.iter().rposition(|&l| l != 0).unwrap();
+    Some((lo, hi))
+}
+
+/// A vector of accumulators: elementwise-exact folding of d-vectors
+/// (gradient sums, packed warm-start sums).
+#[derive(Debug, Clone, Default)]
+pub struct RepVec {
+    accs: Vec<RepAcc>,
+}
+
+impl RepVec {
+    pub fn new(d: usize) -> Self {
+        Self { accs: (0..d).map(|_| RepAcc::new()).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.accs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.accs.is_empty()
+    }
+
+    pub fn reset(&mut self) {
+        for a in &mut self.accs {
+            a.reset();
+        }
+    }
+
+    /// Elementwise `acc[j] += xs[j]`, exactly. An empty RepVec adopts
+    /// the length of the first slice it sees.
+    pub fn accumulate(&mut self, xs: &[f64]) {
+        if self.accs.is_empty() {
+            self.accs = (0..xs.len()).map(|_| RepAcc::new()).collect();
+        }
+        assert_eq!(self.accs.len(), xs.len(), "RepVec length mismatch");
+        // 4-way unrolled: independent decomposes, exact scatters.
+        let chunks = xs.len() / 4;
+        for c in 0..chunks {
+            let i = c * 4;
+            self.accs[i].accumulate(xs[i]);
+            self.accs[i + 1].accumulate(xs[i + 1]);
+            self.accs[i + 2].accumulate(xs[i + 2]);
+            self.accs[i + 3].accumulate(xs[i + 3]);
+        }
+        for i in chunks * 4..xs.len() {
+            self.accs[i].accumulate(xs[i]);
+        }
+    }
+
+    /// Elementwise merge. Either side may be empty (the identity).
+    pub fn merge(&mut self, other: RepVec) {
+        if other.accs.is_empty() {
+            return;
+        }
+        if self.accs.is_empty() {
+            self.accs = other.accs;
+            return;
+        }
+        assert_eq!(self.accs.len(), other.accs.len());
+        for (a, b) in self.accs.iter_mut().zip(other.accs) {
+            a.merge(b);
+        }
+    }
+
+    /// Round every component (the single rounding per component).
+    pub fn round_vec(&mut self) -> Vec<f64> {
+        self.accs.iter_mut().map(|a| a.round()).collect()
+    }
+
+    pub fn encoded_bytes(&mut self) -> u64 {
+        4 + self
+            .accs
+            .iter_mut()
+            .map(|a| a.encoded_bytes())
+            .sum::<u64>()
+    }
+
+    pub fn encode(&mut self, w: &mut ByteWriter) {
+        w.put_u32(self.accs.len() as u32);
+        for a in &mut self.accs {
+            a.encode(w);
+        }
+    }
+
+    /// Decode with an explicit length bound (network-facing input: a
+    /// bogus length must error before any allocation happens — the
+    /// same rule the `ByteReader` primitives follow).
+    pub fn decode(
+        r: &mut ByteReader,
+        max_len: usize,
+    ) -> anyhow::Result<RepVec> {
+        let n = r.get_u32()? as usize;
+        anyhow::ensure!(
+            n <= max_len,
+            "RepVec length {n} exceeds the expected bound {max_len}"
+        );
+        let mut accs = Vec::with_capacity(n);
+        for _ in 0..n {
+            accs.push(RepAcc::decode(r)?);
+        }
+        Ok(RepVec { accs })
+    }
+}
+
+/// A sparse map `index → RepAcc` for summing sparse contributions
+/// (the compressed Hessian updates). Slots persist across
+/// [`SparseRepVec::reset`] via a generation stamp, so steady-state
+/// rounds allocate nothing.
+#[derive(Debug, Clone, Default)]
+pub struct SparseRepVec {
+    slots: Vec<Option<Box<RepAcc>>>,
+    stamp: Vec<u32>,
+    touched: Vec<u32>,
+    gen: u32,
+}
+
+impl SparseRepVec {
+    pub fn new() -> Self {
+        Self {
+            slots: Vec::new(),
+            stamp: Vec::new(),
+            touched: Vec::new(),
+            gen: 1,
+        }
+    }
+
+    /// Entries touched since the last reset.
+    pub fn len(&self) -> usize {
+        self.touched.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.touched.is_empty()
+    }
+
+    pub fn reset(&mut self) {
+        // Lazy clear: bumping the generation invalidates every slot
+        // without touching their limbs (cleared on first reuse).
+        self.gen = self.gen.wrapping_add(1);
+        if self.gen == 0 {
+            // One full sweep every 2^32 resets keeps stamps unambiguous.
+            for s in &mut self.stamp {
+                *s = u32::MAX;
+            }
+            self.gen = 1;
+        }
+        self.touched.clear();
+    }
+
+    fn slot_mut(&mut self, idx: u32) -> &mut RepAcc {
+        let i = idx as usize;
+        if i >= self.slots.len() {
+            self.slots.resize_with(i + 1, || None);
+            self.stamp.resize(i + 1, self.gen.wrapping_sub(1));
+        }
+        if self.stamp[i] != self.gen {
+            self.stamp[i] = self.gen;
+            self.touched.push(idx);
+            let acc =
+                self.slots[i].get_or_insert_with(|| Box::new(RepAcc::new()));
+            acc.reset();
+        }
+        self.slots[i].as_mut().unwrap()
+    }
+
+    /// `sum[idx] += v`, exactly.
+    #[inline]
+    pub fn add(&mut self, idx: u32, v: f64) {
+        self.slot_mut(idx).accumulate(v);
+    }
+
+    /// Fold another sparse sum in (exact, any merge tree).
+    pub fn merge(&mut self, mut other: SparseRepVec) {
+        for k in 0..other.touched.len() {
+            let idx = other.touched[k];
+            let acc = other.slots[idx as usize].take().unwrap();
+            self.slot_mut(idx).merge(*acc);
+        }
+    }
+
+    /// Visit `(index, rounded sum)` in ascending index order.
+    pub fn for_each_rounded(&mut self, mut f: impl FnMut(u32, f64)) {
+        self.touched.sort_unstable();
+        for k in 0..self.touched.len() {
+            let idx = self.touched[k];
+            let v = self.slots[idx as usize].as_mut().unwrap().round();
+            f(idx, v);
+        }
+    }
+
+    pub fn encoded_bytes(&mut self) -> u64 {
+        let mut total = 4u64;
+        for k in 0..self.touched.len() {
+            let idx = self.touched[k] as usize;
+            total += 4 + self.slots[idx].as_mut().unwrap().encoded_bytes();
+        }
+        total
+    }
+
+    /// Serialize the touched entries in ascending index order.
+    pub fn encode(&mut self, w: &mut ByteWriter) {
+        self.touched.sort_unstable();
+        w.put_u32(self.touched.len() as u32);
+        for k in 0..self.touched.len() {
+            let idx = self.touched[k];
+            w.put_u32(idx);
+            self.slots[idx as usize].as_mut().unwrap().encode(w);
+        }
+    }
+
+    /// Decode with an explicit index bound (network-facing input):
+    /// every index must lie below `max_idx` — anything larger would
+    /// either balloon the slot table or panic downstream when applied
+    /// to the packed triangle — and duplicates are rejected (a
+    /// silently overwritten entry would be a silently wrong sum).
+    pub fn decode(
+        r: &mut ByteReader,
+        max_idx: u32,
+    ) -> anyhow::Result<SparseRepVec> {
+        let n = r.get_u32()? as usize;
+        anyhow::ensure!(
+            n <= max_idx as usize,
+            "SparseRepVec entry count {n} exceeds the index bound \
+             {max_idx}"
+        );
+        let mut out = SparseRepVec::new();
+        for _ in 0..n {
+            let idx = r.get_u32()?;
+            anyhow::ensure!(
+                idx < max_idx,
+                "SparseRepVec index {idx} out of bounds (< {max_idx})"
+            );
+            let acc = RepAcc::decode(r)?;
+            let i = idx as usize;
+            anyhow::ensure!(
+                i >= out.stamp.len() || out.stamp[i] != out.gen,
+                "duplicate SparseRepVec index {idx}"
+            );
+            *out.slot_mut(idx) = acc;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sum_rounded(xs: &[f64]) -> f64 {
+        let mut a = RepAcc::new();
+        for &x in xs {
+            a.accumulate(x);
+        }
+        a.round()
+    }
+
+    #[test]
+    fn exact_on_integers() {
+        // Integer-valued f64 sums that fit in 53 bits are exact.
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        assert_eq!(sum_rounded(&xs), 500500.0);
+        let xs = vec![3.0, -1.0, -2.0];
+        assert_eq!(sum_rounded(&xs).to_bits(), 0.0f64.to_bits());
+    }
+
+    #[test]
+    fn matches_i128_reference_on_scaled_integers() {
+        // Values that are exact multiples of 2^-40: the exact sum fits
+        // in i128 units of 2^-40, and Rust's i128→f64 cast rounds to
+        // nearest even — an independent reference for round().
+        let mut rng = crate::rng::Pcg64::seed_from_u64(0xACC);
+        use crate::rng::Rng;
+        for _ in 0..200 {
+            let n = 1 + (rng.next_u64() % 64) as usize;
+            let mut acc = RepAcc::new();
+            let mut exact: i128 = 0;
+            for _ in 0..n {
+                let m = (rng.next_u64() % (1 << 50)) as i64
+                    - (1i64 << 49);
+                let x = m as f64 / (1u64 << 40) as f64; // exact
+                acc.accumulate(x);
+                exact += m as i128;
+            }
+            let want = exact as f64 / (1u64 << 40) as f64;
+            assert_eq!(
+                acc.round().to_bits(),
+                want.to_bits(),
+                "exact={exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_value_round_trips_bitwise() {
+        let cases = [
+            1.0,
+            -1.0,
+            0.1,
+            -3.5e300,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            5e-324,         // min subnormal
+            -5e-324,
+            1.234e-310,     // subnormal
+            f64::MIN_POSITIVE / 2.0,
+        ];
+        for &x in &cases {
+            let mut a = RepAcc::new();
+            a.accumulate(x);
+            assert_eq!(a.round().to_bits(), x.to_bits(), "{x:e}");
+        }
+    }
+
+    #[test]
+    fn rounding_is_nearest_even() {
+        // 1.0 + 2^-53 rounds down to 1.0 (tie to even); adding one
+        // more ulp of dust tips it up.
+        let tie = [1.0, 2.0f64.powi(-53)];
+        assert_eq!(sum_rounded(&tie), 1.0);
+        let up = [1.0, 2.0f64.powi(-53), 2.0f64.powi(-80)];
+        assert_eq!(sum_rounded(&up), 1.0 + 2.0f64.powi(-52));
+        // 1.0 + 3·2^-54 is above the halfway point.
+        let up2 = [1.0, 2.0f64.powi(-53), 2.0f64.powi(-54)];
+        assert_eq!(sum_rounded(&up2), 1.0 + 2.0f64.powi(-52));
+    }
+
+    #[test]
+    fn catastrophic_cancellation_is_exact() {
+        // (1e16 + π) − 1e16 = π exactly — impossible for a naive fold.
+        let pi = std::f64::consts::PI;
+        let xs = [1e16, pi, -1e16];
+        assert_eq!(sum_rounded(&xs).to_bits(), pi.to_bits());
+        // Full-range cancellation down to a subnormal remainder.
+        let tiny = 5e-324;
+        let xs = [f64::MAX, tiny, -f64::MAX];
+        assert_eq!(sum_rounded(&xs).to_bits(), tiny.to_bits());
+    }
+
+    #[test]
+    fn overflow_rounds_to_infinity() {
+        let xs = [f64::MAX, f64::MAX];
+        assert_eq!(sum_rounded(&xs), f64::INFINITY);
+        let xs = [-f64::MAX, -f64::MAX, -f64::MAX];
+        assert_eq!(sum_rounded(&xs), f64::NEG_INFINITY);
+        // ...but cancelling back into range is exact, not sticky.
+        let xs = [f64::MAX, f64::MAX, -f64::MAX];
+        assert_eq!(sum_rounded(&xs).to_bits(), f64::MAX.to_bits());
+    }
+
+    #[test]
+    fn specials_follow_any_order_ieee_semantics() {
+        assert!(sum_rounded(&[f64::NAN, 1.0]).is_nan());
+        assert!(sum_rounded(&[f64::INFINITY, f64::NEG_INFINITY]).is_nan());
+        assert_eq!(
+            sum_rounded(&[f64::INFINITY, 1e308, 1e308]),
+            f64::INFINITY
+        );
+        assert_eq!(
+            sum_rounded(&[-1.0, f64::NEG_INFINITY]),
+            f64::NEG_INFINITY
+        );
+        // Permutation-invariant by construction.
+        assert!(sum_rounded(&[1.0, f64::NEG_INFINITY, f64::INFINITY])
+            .is_nan());
+    }
+
+    #[test]
+    fn signed_zeros_vanish() {
+        // Documented divergence from a sequential IEEE fold: -0.0
+        // terms contribute nothing and the empty/zero sum is +0.0.
+        assert_eq!(sum_rounded(&[-0.0, -0.0]).to_bits(), 0.0f64.to_bits());
+        assert_eq!(sum_rounded(&[]).to_bits(), 0.0f64.to_bits());
+    }
+
+    #[test]
+    fn negative_sums_encode_compactly() {
+        // Sign travels as a flag, the window over the *magnitude*: a
+        // negative total must not ship the long 2^32−1 borrow run of
+        // its two's-complement-like canonical form.
+        let mut pos = RepAcc::new();
+        pos.accumulate(1.0);
+        let mut neg = RepAcc::new();
+        neg.accumulate(-1.0);
+        assert_eq!(pos.encoded_bytes(), neg.encoded_bytes());
+        assert!(neg.encoded_bytes() <= 3 + 8 * 3, "{}", neg.encoded_bytes());
+        let mut w = ByteWriter::new();
+        neg.encode(&mut w);
+        assert_eq!(w.len() as u64, neg.encoded_bytes());
+        let mut back =
+            RepAcc::decode(&mut ByteReader::new(w.as_slice())).unwrap();
+        assert_eq!(back.round().to_bits(), (-1.0f64).to_bits());
+        // A decoded negative acc merges exactly.
+        let mut sum = RepAcc::new();
+        sum.accumulate(2.5);
+        sum.merge(back);
+        assert_eq!(sum.round(), 1.5);
+        // Hostile limb magnitudes (≥ 2^32) are a decode error, never
+        // downstream overflow.
+        let mut bad = ByteWriter::new();
+        bad.put_u8(0);
+        bad.put_u8(10);
+        bad.put_u8(1);
+        bad.put_u64(u64::MAX >> 1);
+        assert!(
+            RepAcc::decode(&mut ByteReader::new(bad.as_slice())).is_err()
+        );
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let xs: Vec<f64> =
+            (0..97).map(|i| ((i * 37) % 19) as f64 * 0.3 - 2.0).collect();
+        let mut whole = RepAcc::new();
+        for &x in &xs {
+            whole.accumulate(x);
+        }
+        for split in [1usize, 13, 48, 96] {
+            let mut a = RepAcc::new();
+            let mut b = RepAcc::new();
+            for &x in &xs[..split] {
+                a.accumulate(x);
+            }
+            for &x in &xs[split..] {
+                b.accumulate(x);
+            }
+            a.merge(b);
+            assert_eq!(a.round().to_bits(), whole.round().to_bits());
+        }
+    }
+
+    #[test]
+    fn codec_round_trips_and_sizes_agree() {
+        let mut rng = crate::rng::Pcg64::seed_from_u64(7);
+        use crate::rng::Rng;
+        for case in 0..50 {
+            let mut a = RepAcc::new();
+            for _ in 0..(case % 7) {
+                a.accumulate(rng.next_gaussian() * 10f64.powi(case - 25));
+            }
+            if case % 11 == 0 {
+                a.accumulate(f64::INFINITY);
+            }
+            let want = a.clone().round();
+            let expect_len = a.encoded_bytes();
+            let mut w = ByteWriter::new();
+            a.encode(&mut w);
+            assert_eq!(w.len() as u64, expect_len, "case {case}");
+            let mut r = ByteReader::new(w.as_slice());
+            let mut back = RepAcc::decode(&mut r).unwrap();
+            assert_eq!(r.remaining(), 0);
+            assert_eq!(back.round().to_bits(), want.to_bits());
+        }
+        // Corrupt windows are rejected.
+        let bad = [0u8, 60, 30]; // 60 + 30 > LIMBS
+        assert!(RepAcc::decode(&mut ByteReader::new(&bad)).is_err());
+    }
+
+    #[test]
+    fn repvec_folds_elementwise_and_merges() {
+        let rows = [
+            vec![1.0, 1e16, -2.0],
+            vec![2.0, 3.0, 4.0],
+            vec![-3.0, -1e16, 5.0],
+        ];
+        let mut v = RepVec::new(0);
+        for rws in &rows {
+            v.accumulate(rws);
+        }
+        assert_eq!(v.round_vec(), vec![0.0, 3.0, 7.0]);
+        // Merge of partitions equals the flat fold.
+        let mut a = RepVec::new(3);
+        a.accumulate(&rows[0]);
+        let mut b = RepVec::new(3);
+        b.accumulate(&rows[1]);
+        b.accumulate(&rows[2]);
+        a.merge(b);
+        assert_eq!(a.round_vec(), vec![0.0, 3.0, 7.0]);
+        // Codec.
+        let mut w = ByteWriter::new();
+        let expect = a.encoded_bytes();
+        a.encode(&mut w);
+        assert_eq!(w.len() as u64, expect);
+        let mut back =
+            RepVec::decode(&mut ByteReader::new(w.as_slice()), 3)
+                .unwrap();
+        assert_eq!(back.round_vec(), vec![0.0, 3.0, 7.0]);
+        // The length bound guards the allocation (network input).
+        assert!(
+            RepVec::decode(&mut ByteReader::new(w.as_slice()), 2)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn sparse_repvec_sums_merges_and_reuses_slots() {
+        let mut s = SparseRepVec::new();
+        s.add(5, 1.5);
+        s.add(2, -1.0);
+        s.add(5, 2.5);
+        let mut got = Vec::new();
+        s.for_each_rounded(|i, v| got.push((i, v)));
+        assert_eq!(got, vec![(2, -1.0), (5, 4.0)]);
+        // Reset reuses slots without bleeding previous sums.
+        s.reset();
+        assert!(s.is_empty());
+        s.add(5, 7.0);
+        let mut got = Vec::new();
+        s.for_each_rounded(|i, v| got.push((i, v)));
+        assert_eq!(got, vec![(5, 7.0)]);
+        // Merge unions indices and sums overlaps exactly.
+        let mut t = SparseRepVec::new();
+        t.add(5, 1.0);
+        t.add(9, 2.0);
+        s.merge(t);
+        let mut got = Vec::new();
+        s.for_each_rounded(|i, v| got.push((i, v)));
+        assert_eq!(got, vec![(5, 8.0), (9, 2.0)]);
+        // Codec round-trip preserves the entries.
+        let mut w = ByteWriter::new();
+        let expect = s.encoded_bytes();
+        s.encode(&mut w);
+        assert_eq!(w.len() as u64, expect);
+        let mut back =
+            SparseRepVec::decode(&mut ByteReader::new(w.as_slice()), 16)
+                .unwrap();
+        let mut got = Vec::new();
+        back.for_each_rounded(|i, v| got.push((i, v)));
+        assert_eq!(got, vec![(5, 8.0), (9, 2.0)]);
+        // Out-of-bound indices and duplicates are rejected, never
+        // silently absorbed (network input).
+        assert!(SparseRepVec::decode(
+            &mut ByteReader::new(w.as_slice()),
+            9
+        )
+        .is_err());
+        let mut dup = ByteWriter::new();
+        dup.put_u32(2);
+        for _ in 0..2 {
+            dup.put_u32(5);
+            RepAcc::new().encode(&mut dup);
+        }
+        assert!(SparseRepVec::decode(
+            &mut ByteReader::new(dup.as_slice()),
+            16
+        )
+        .is_err());
+    }
+}

@@ -321,6 +321,34 @@ pub fn intra_threads() -> usize {
     INTRA_THREADS.load(Ordering::Relaxed)
 }
 
+/// Bulk superaccumulate (reproducible-summation layer, see
+/// [`crate::linalg::reduce`]): fold every element of `xs` into the
+/// fixed-point accumulator `limbs`, returning the accumulated
+/// special-value mask (`reduce::SP_*` bits) for the non-finite terms.
+///
+/// Unlike the float kernels above, the arithmetic here is **integer
+/// exact**, so the AVX2 and scalar paths produce bit-identical limbs —
+/// dispatch affects throughput only, never the sum. The kernel
+/// carry-propagates internally and leaves `limbs` in canonical form.
+#[inline]
+pub fn binned_accumulate(
+    limbs: &mut [i64; super::reduce::LIMBS],
+    xs: &[f64],
+) -> u8 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if use_avx2() {
+            return unsafe { avx2::binned_accumulate(limbs, xs) };
+        }
+    }
+    scalar::binned_accumulate(limbs, xs)
+}
+
+/// Chunk length between carry propagations inside the bulk kernels
+/// (each term adds < 2^32 to a limb; 2^28 chunks keep limbs far from
+/// i64 overflow even on top of canonical state).
+const BINNED_CHUNK: usize = 1 << 28;
+
 /// Wrap-around contiguous gather: `out = src[(start + t) mod n]` for
 /// `t = 0..k` — at most two `memcpy`s (RandSeqK's cache-aware selection,
 /// paper App. C.4).
@@ -423,6 +451,37 @@ pub mod scalar {
         for i in 0..s.len() {
             out[i] = scale * (s[i] * (1.0 - s[i]));
         }
+    }
+
+    /// Bulk superaccumulate, 4-way unrolled (exact integer scatter;
+    /// see the dispatched [`super::binned_accumulate`]). The unroll
+    /// overlaps the four independent decomposes — the limb adds are
+    /// order-free because integer addition is associative.
+    pub fn binned_accumulate(
+        limbs: &mut [i64; crate::linalg::reduce::LIMBS],
+        xs: &[f64],
+    ) -> u8 {
+        use crate::linalg::reduce::{accumulate_one, propagate_limbs};
+        let mut special = 0u8;
+        for chunk in xs.chunks(super::BINNED_CHUNK) {
+            let mut i = 0;
+            while i + 4 <= chunk.len() {
+                special |= accumulate_one(limbs, chunk[i]);
+                special |= accumulate_one(limbs, chunk[i + 1]);
+                special |= accumulate_one(limbs, chunk[i + 2]);
+                special |= accumulate_one(limbs, chunk[i + 3]);
+                i += 4;
+            }
+            while i < chunk.len() {
+                special |= accumulate_one(limbs, chunk[i]);
+                i += 1;
+            }
+            propagate_limbs(limbs);
+        }
+        if xs.is_empty() {
+            propagate_limbs(limbs);
+        }
+        special
     }
 
     /// Upper-triangle rank-1 accumulate, 4 samples per sweep with four
@@ -727,6 +786,88 @@ mod avx2 {
             out[i] = scale * (s[i] * (1.0 - s[i]));
             i += 1;
         }
+    }
+
+    /// Bulk superaccumulate, AVX2-assisted: the (exponent, mantissa,
+    /// sign) decompose of 4 lanes runs on the integer units, the limb
+    /// scatter stays scalar (it is a data-dependent 3-limb add). The
+    /// arithmetic is integer-exact, so the result is **bit-identical**
+    /// to `scalar::binned_accumulate` — only throughput differs.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn binned_accumulate(
+        limbs: &mut [i64; crate::linalg::reduce::LIMBS],
+        xs: &[f64],
+    ) -> u8 {
+        use crate::linalg::reduce::{
+            accumulate_one, add_mantissa, propagate_limbs,
+        };
+        let mut special = 0u8;
+        let exp_mask = _mm256_set1_epi64x(0x7ff);
+        let frac_mask = _mm256_set1_epi64x((1i64 << 52) - 1);
+        let implicit = _mm256_set1_epi64x(1i64 << 52);
+        let zero = _mm256_setzero_si256();
+        for chunk in xs.chunks(super::BINNED_CHUNK) {
+            let n = chunk.len();
+            let p = chunk.as_ptr();
+            let mut i = 0;
+            while i + 4 <= n {
+                let b =
+                    _mm256_loadu_si256(p.add(i) as *const __m256i);
+                let exp = _mm256_and_si256(
+                    _mm256_srli_epi64::<52>(b),
+                    exp_mask,
+                );
+                let frac = _mm256_and_si256(b, frac_mask);
+                // Subnormal lanes (exp == 0) carry no implicit bit.
+                let is_sub = _mm256_cmpeq_epi64(exp, zero);
+                let mant = _mm256_or_si256(
+                    frac,
+                    _mm256_andnot_si256(is_sub, implicit),
+                );
+                let sign = _mm256_srli_epi64::<63>(b);
+                let mut mant_a = [0i64; 4];
+                let mut exp_a = [0i64; 4];
+                let mut sign_a = [0i64; 4];
+                _mm256_storeu_si256(
+                    mant_a.as_mut_ptr() as *mut __m256i,
+                    mant,
+                );
+                _mm256_storeu_si256(
+                    exp_a.as_mut_ptr() as *mut __m256i,
+                    exp,
+                );
+                _mm256_storeu_si256(
+                    sign_a.as_mut_ptr() as *mut __m256i,
+                    sign,
+                );
+                for lane in 0..4 {
+                    let e = exp_a[lane];
+                    let m = mant_a[lane] as u64;
+                    if e == 0x7ff || m == 0 {
+                        // Non-finite or ±0: the scalar slow path owns
+                        // the special/zero semantics.
+                        special |= accumulate_one(limbs, chunk[i + lane]);
+                        continue;
+                    }
+                    add_mantissa(
+                        limbs,
+                        m,
+                        (e as i32).max(1) - 1075,
+                        sign_a[lane] == 1,
+                    );
+                }
+                i += 4;
+            }
+            while i < n {
+                special |= accumulate_one(limbs, chunk[i]);
+                i += 1;
+            }
+            propagate_limbs(limbs);
+        }
+        if xs.is_empty() {
+            propagate_limbs(limbs);
+        }
+        special
     }
 
     /// Row-ranged rank-1 accumulate (see `scalar::sym_rank1_upper_rows`):

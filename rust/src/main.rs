@@ -66,8 +66,8 @@ fn print_usage() {
          \x20            [--intra-threads 1] [--quorum Q] [--deadline-ms MS]\n\
          \x20            [--on-missing drop|resample|reuse] [--fault-plan SPEC]\n\
          \x20 master     --listen ADDR --clients N --algo ... [--rounds R] [--tol T]\n\
-         \x20            [--shards S] [--quorum Q] [--deadline-ms MS]\n\
-         \x20            [--on-missing P] [--fault-plan SPEC]\n\
+         \x20            [--shards S] [--relay-slack-ms 2000] [--quorum Q]\n\
+         \x20            [--deadline-ms MS] [--on-missing P] [--fault-plan SPEC]\n\
          \x20 relay      --connect MASTER --listen ADDR --shard I --base B --clients K\n\
          \x20            (shard aggregator: clients of ids [B, B+K) connect here)\n\
          \x20 client     --connect ADDR --id I --data SHARD [--algo fednl|fednl-pp]\n\
@@ -390,12 +390,27 @@ fn cmd_master(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let plan = fault_plan(args)?;
+    // Relay forwarding slack (`deadline + slack` is how long the
+    // master waits for a relay's round frame before certifying the
+    // whole partition lost). Validated at parse time like the round
+    // policy: an explicit 0 can only be a mistake.
+    let relay_slack = fednl::net::relay::relay_slack_from_ms(
+        args.get_u64(
+            "relay-slack-ms",
+            fednl::net::relay::DEFAULT_RELAY_SLACK.as_millis() as u64,
+        )?,
+    )?;
+    anyhow::ensure!(
+        args.get("relay-slack-ms").is_none() || n_shards > 0,
+        "--relay-slack-ms only applies to a sharded master (--shards S)"
+    );
     let trace = if n_shards > 0 {
         // Sharded aggregation tier: S relay aggregators register, each
         // owning a contiguous client partition (`fednl relay`).
         println!("master: waiting for {n_shards} relays on {listen} ...");
         let mut pool =
             FaultPool::new(RelayPool::listen(listen, n_shards)?, plan);
+        pool.inner_mut().set_relay_slack(relay_slack);
         anyhow::ensure!(
             pool.inner_mut().n_clients() == n_clients,
             "relays cover {} clients, --clients says {n_clients}",

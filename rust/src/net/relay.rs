@@ -13,19 +13,25 @@
 //! cannot tell a relay from the master** — and a command-driven
 //! aggregator on the *upward* side, answering the `SHARD_*` frames
 //! (tag table in `net::wire`). Each round it fans the ROUND out to its
-//! partition, collects and orders the replies in round-subset order,
-//! certifies its losses, and forwards **one** `SHARD_MSG` frame: the
-//! master's fan-in per round drops from `n` messages on `n` sockets to
-//! `S` frames on `S` sockets, while relay-side recv/decode/deadline
-//! work runs in parallel across relays.
+//! partition, certifies its losses, and — in the default **sum mode**
+//! (the `SHARD_ROUND` `sum` flag) — folds every reply into one exact
+//! [`RoundSum`] superaccumulator and forwards a single compact
+//! `SHARD_SUM` frame: master fan-in drops from `n` messages of O(d)
+//! each (O(n·d) payload + fold work) to `S` frames of O(d) each
+//! (O(S·d)), independent of `n`, while relay-side recv/decode/fold
+//! work runs in parallel across relays. Atom mode (`SHARD_MSG`, the
+//! FedNL-PP path and rounds with injected straggler delays) remains
+//! available behind the same flag.
 //!
 //! [`RelayPool`] is the master-side face: a [`ClientPool`] over the
 //! whole client set, so the round engine drives a relayed deployment
-//! unchanged. Determinism is inherited from the shard contract
-//! (`coordinator::shard` module docs): relays forward per-client
-//! atoms in commit order, the master folds relay batches in ascending
-//! shard id, and the engine's commit buffer restores global subset
-//! order — trajectories are bit-identical to the unsharded run.
+//! unchanged. Determinism is inherited from the reproducible
+//! summation layer (`linalg::reduce`): the merged accumulators are
+//! exact, so merging S partial sums is bit-identical to folding all n
+//! atoms — trajectories match the unsharded run by construction, on
+//! either reply format.
+//!
+//! [`RoundSum`]: crate::algorithms::RoundSum
 //!
 //! # Liveness through the tier
 //!
@@ -49,13 +55,30 @@ use super::client::connect_with_retry;
 use super::framing::Channel;
 use super::server::Bound;
 use super::wire::{self, c2s, s2c};
-use crate::algorithms::ClientMsg;
-use crate::coordinator::{ClientFamily, ClientPool};
+use crate::algorithms::{ClientMsg, RoundSum};
+use crate::coordinator::{ClientFamily, ClientPool, RoundMode};
 
-/// Extra patience the master grants a relay on top of the per-client
-/// reply deadline: the relay must first wait out its own stragglers
-/// before its SHARD_MSG can exist.
-const RELAY_DEADLINE_SLACK: Duration = Duration::from_millis(2000);
+/// Default extra patience the master grants a relay on top of the
+/// per-client reply deadline: the relay must first wait out its own
+/// stragglers before its SHARD_SUM / SHARD_MSG can exist. Configurable
+/// per deployment via [`RelayPool::set_relay_slack`] (CLI
+/// `master --relay-slack-ms`).
+pub const DEFAULT_RELAY_SLACK: Duration = Duration::from_millis(2000);
+
+/// Validate a CLI `--relay-slack-ms` value. Zero would treat every
+/// relay as lost the moment a deadline is armed — "no custom slack"
+/// is spelled by omitting the flag (mirroring `RoundPolicy::validate`'s
+/// zero-deadline rule).
+pub fn relay_slack_from_ms(ms: u64) -> Result<Duration> {
+    anyhow::ensure!(
+        ms > 0,
+        "--relay-slack-ms 0 would certify every relay lost as soon as \
+         a reply deadline is set; omit the flag for the default \
+         {} ms",
+        DEFAULT_RELAY_SLACK.as_millis()
+    );
+    Ok(Duration::from_millis(ms))
+}
 
 /// One relay process' configuration (CLI `fednl relay`).
 #[derive(Debug, Clone)]
@@ -121,7 +144,7 @@ pub fn run_relay_on(bound: Bound, cfg: &RelayCfg) -> Result<RelayReport> {
         };
         match tag {
             s2c::SHARD_ROUND => {
-                let (x, round, need_loss, deadline_ms, subset) =
+                let (x, round, need_loss, sum, deadline_ms, subset) =
                     wire::decode_shard_round(&payload)?;
                 let deadline = (deadline_ms > 0)
                     .then(|| Duration::from_millis(deadline_ms));
@@ -136,22 +159,42 @@ pub fn run_relay_on(bound: Bound, cfg: &RelayCfg) -> Result<RelayReport> {
                     msgs.extend(batch);
                 }
                 let mut missing = down.take_missing();
-                // The shard-internal commit order: round-subset order.
-                // (RemotePool already surfaces replies in that order;
-                // sorting keeps the contract explicit and transport-
-                // independent.)
-                let pos = |ci: u32| {
-                    subset
-                        .iter()
-                        .position(|&c| c == ci)
-                        .expect("reply outside the round subset")
-                };
-                msgs.sort_by_key(|m| pos(m.client_id as u32));
-                missing.sort_by_key(|&c| pos(c));
-                up.send(
-                    c2s::SHARD_MSG,
-                    &wire::encode_shard_msg(cfg.shard_id, &msgs, &missing),
-                )?;
+                if sum {
+                    // Arithmetic pre-reduction: fold the partition's
+                    // replies into one exact superaccumulator — the
+                    // tier's O(S·d) fan-in. Fold order is irrelevant
+                    // (the sum is exact), so no sorting is needed.
+                    let mut merged = RoundSum::from_msgs(&msgs);
+                    up.send(
+                        c2s::SHARD_SUM,
+                        &wire::encode_shard_sum(
+                            cfg.shard_id,
+                            &mut merged,
+                            &missing,
+                        ),
+                    )?;
+                } else {
+                    // Atom mode: forward the per-client batch in
+                    // round-subset order. (RemotePool already surfaces
+                    // replies in that order; sorting keeps the
+                    // contract explicit and transport-independent.)
+                    let pos = |ci: u32| {
+                        subset
+                            .iter()
+                            .position(|&c| c == ci)
+                            .expect("reply outside the round subset")
+                    };
+                    msgs.sort_by_key(|m| pos(m.client_id as u32));
+                    missing.sort_by_key(|&c| pos(c));
+                    up.send(
+                        c2s::SHARD_MSG,
+                        &wire::encode_shard_msg(
+                            cfg.shard_id,
+                            &msgs,
+                            &missing,
+                        ),
+                    )?;
+                }
             }
             s2c::SHARD_PREP => {
                 let r = {
@@ -256,6 +299,12 @@ pub struct RelayPool {
     /// Dead clients per live shard, from the last SHARD_PREPPED poll.
     shard_dead: Vec<Vec<u32>>,
     deadline: Option<Duration>,
+    /// Forwarding patience on top of `deadline` (see
+    /// [`DEFAULT_RELAY_SLACK`]; CLI `master --relay-slack-ms`).
+    slack: Duration,
+    /// Reply format requested from the relays for subsequent rounds
+    /// (encoded into each SHARD_ROUND frame at submit time).
+    mode: RoundMode,
     retired_bytes: (u64, u64),
 }
 
@@ -334,12 +383,21 @@ impl RelayPool {
             rejoined: Vec::new(),
             shard_dead: vec![Vec::new(); n_shards_len],
             deadline: None,
+            slack: DEFAULT_RELAY_SLACK,
+            mode: RoundMode::Atoms,
             retired_bytes: (0, 0),
         })
     }
 
     pub fn n_shards(&self) -> usize {
         self.relays.len()
+    }
+
+    /// Configure the relay forwarding slack (the extra patience on top
+    /// of the per-client reply deadline before a silent relay is
+    /// certified lost). CLI: `master --relay-slack-ms`.
+    pub fn set_relay_slack(&mut self, slack: Duration) {
+        self.slack = slack.max(Duration::from_millis(1));
     }
 
     /// Retire a relay: fold its byte meters, certify the round
@@ -477,7 +535,7 @@ impl ClientPool for RelayPool {
         // a wedged relay must become a certified loss here, not a
         // master hang (the flat master's prepare_round is non-blocking
         // for the same reason).
-        let budget = self.deadline.map(|d| d + RELAY_DEADLINE_SLACK);
+        let budget = self.deadline.map(|d| d + self.slack);
         for s in asked {
             match self.recv_expect_within(s, c2s::SHARD_PREPPED, budget) {
                 Some(p) => match wire::decode_shard_prepped(&p) {
@@ -548,6 +606,7 @@ impl ClientPool for RelayPool {
                 x,
                 round,
                 need_loss,
+                self.mode == RoundMode::Sums,
                 deadline_ms,
                 &part,
             );
@@ -564,19 +623,77 @@ impl ClientPool for RelayPool {
         }
     }
 
-    fn drain(&mut self) -> Vec<ClientMsg> {
-        // One SHARD_MSG per call, ascending shard id: while the master
-        // commits shard s's batch, the later relays' frames queue in
-        // the OS socket buffers. A relay that cannot produce its frame
-        // within deadline + slack (or whose connection dies) certifies
-        // its whole outstanding partition.
+    fn set_round_mode(&mut self, mode: RoundMode) {
+        self.mode = mode;
+    }
+
+    fn drain_sums(&mut self) -> Vec<RoundSum> {
+        // Sum mode: one pre-reduced SHARD_SUM per relay per round,
+        // ascending shard id — O(S·d) master fan-in. Validation is
+        // count-based (committed + missing must tile the partition we
+        // dispatched); a malformed or inconsistent frame retires the
+        // relay and certifies its outstanding partition, never a
+        // panic (network-facing input rule).
+        debug_assert_eq!(self.mode, RoundMode::Sums);
         while let Some(s) = self.pending.pop_front() {
             let s = s as usize;
             let Some(ch) = self.relays[s].as_mut() else {
                 self.missing.append(&mut self.outstanding[s]);
                 continue;
             };
-            let timeout = self.deadline.map(|d| d + RELAY_DEADLINE_SLACK);
+            let timeout = self.deadline.map(|d| d + self.slack);
+            let _ = ch.set_read_timeout(timeout);
+            match ch.recv() {
+                Ok((tag, p)) if tag == c2s::SHARD_SUM => {
+                    let Ok((sid, mut sum, missing)) =
+                        wire::decode_shard_sum(&p, self.d)
+                    else {
+                        self.drop_relay(s);
+                        continue;
+                    };
+                    let part = &self.outstanding[s];
+                    let mut miss_sorted = missing.clone();
+                    miss_sorted.sort_unstable();
+                    let dups =
+                        miss_sorted.windows(2).any(|w| w[0] == w[1]);
+                    let valid = sid as usize == s
+                        && !dups
+                        && sum.committed as usize + missing.len()
+                            == part.len()
+                        && missing.iter().all(|c| part.contains(c));
+                    if !valid {
+                        self.drop_relay(s);
+                        continue;
+                    }
+                    self.outstanding[s].clear();
+                    self.missing.extend(missing);
+                    if sum.committed == 0 {
+                        continue; // whole partition certified
+                    }
+                    sum.wire_bytes = crate::net::FRAME_HEADER_BYTES
+                        + p.len() as u64;
+                    return vec![sum];
+                }
+                _ => self.drop_relay(s),
+            }
+        }
+        Vec::new()
+    }
+
+    fn drain(&mut self) -> Vec<ClientMsg> {
+        // One SHARD_MSG per call, ascending shard id: while the master
+        // commits shard s's batch, the later relays' frames queue in
+        // the OS socket buffers. A relay that cannot produce its frame
+        // within deadline + slack (or whose connection dies) certifies
+        // its whole outstanding partition.
+        debug_assert_eq!(self.mode, RoundMode::Atoms);
+        while let Some(s) = self.pending.pop_front() {
+            let s = s as usize;
+            let Some(ch) = self.relays[s].as_mut() else {
+                self.missing.append(&mut self.outstanding[s]);
+                continue;
+            };
+            let timeout = self.deadline.map(|d| d + self.slack);
             let _ = ch.set_read_timeout(timeout);
             match ch.recv() {
                 Ok((tag, p)) if tag == c2s::SHARD_MSG => {
@@ -758,5 +875,29 @@ impl ClientPool for RelayPool {
                 .map(|c| c.bytes_sent)
                 .sum::<u64>();
         Some((up, down))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relay_slack_validation() {
+        // Zero is rejected with a clear message (mirroring
+        // RoundPolicy::validate's zero-deadline rule); positive values
+        // parse to the exact duration.
+        let err = relay_slack_from_ms(0).unwrap_err().to_string();
+        assert!(err.contains("--relay-slack-ms"), "{err}");
+        assert!(err.contains("2000"), "{err}");
+        assert_eq!(
+            relay_slack_from_ms(1).unwrap(),
+            Duration::from_millis(1)
+        );
+        assert_eq!(
+            relay_slack_from_ms(7500).unwrap(),
+            Duration::from_millis(7500)
+        );
+        assert_eq!(DEFAULT_RELAY_SLACK, Duration::from_millis(2000));
     }
 }

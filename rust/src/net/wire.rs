@@ -38,7 +38,7 @@
 //!
 //! | dir | tag                 | payload                         | reply          |
 //! |-----|---------------------|---------------------------------|----------------|
-//! | s2c | `SHARD_ROUND`    20 | round, need_loss, deadline, x, subset | `SHARD_MSG` |
+//! | s2c | `SHARD_ROUND`    20 | round, need_loss, sum, deadline, x, subset | `SHARD_SUM` or `SHARD_MSG` |
 //! | s2c | `SHARD_PREP`     21 | round                           | `SHARD_PREPPED`|
 //! | s2c | `SHARD_PULL`     22 | client id                       | `SHARD_PULLED` |
 //! | c2s | `SHARD_REGISTER` 23 | shard id, base, count, d, family| —              |
@@ -49,14 +49,25 @@
 //! | c2s | `SHARD_STATES`   28 | per-client (id, lᵢ, gᵢ)         |                |
 //! | c2s | `SHARD_PREPPED`  29 | rejoined ids, dead ids          |                |
 //! | c2s | `SHARD_PULLED`   30 | present flag (+ lᵢ, gᵢ)         |                |
+//! | c2s | `SHARD_SUM`      31 | merged [`RoundSum`] + missing   |                |
+//!
+//! `SHARD_ROUND`'s `sum` flag selects the reply: set (the FedNL/LS
+//! default) the relay **pre-reduces arithmetically** — it folds its
+//! partition's replies into one exact [`RoundSum`] superaccumulator
+//! and answers a single compact `SHARD_SUM` frame (O(d), independent
+//! of the partition size); clear (FedNL-PP, or rounds with injected
+//! straggler delays) it answers the per-client `SHARD_MSG` batch.
+//! Exact associativity (`linalg::reduce`) makes the two replies
+//! arithmetically indistinguishable to the master, so the shard
+//! tier's bit-identity invariant holds on both.
 //!
 //! The downward probe commands (`EVAL_LOSS`, `LOSS_GRAD`, `WARM_START`,
 //! `STATE`, `SET_ALPHA`, `SHUTDOWN`) are reused verbatim on the
-//! master → relay leg — only the replies differ, carrying **per-client
-//! atoms** rather than one value. That is deliberate: forwarding a
-//! partial f64 sum would re-group the master's reduction (f64 addition
-//! is not associative) and break the shard tier's bit-identical
-//! determinism invariant; see `coordinator::shard`.
+//! master → relay leg — only the replies differ, carrying per-client
+//! atoms; the master folds them through the reproducible accumulator,
+//! so their grouping is free too.
+//!
+//! [`RoundSum`]: crate::algorithms::RoundSum
 //!
 //! # Liveness (fault-tolerant rounds)
 //!
@@ -142,6 +153,11 @@ pub mod c2s {
     /// Optional (lᵢ, gᵢ) of one client (reply to SHARD_PULL; absent if
     /// the client was lost before answering).
     pub const SHARD_PULLED: u8 = 30;
+    /// Shard tier, sum mode: one round's **pre-reduced** partition sum
+    /// — a merged [`crate::algorithms::RoundSum`] superaccumulator
+    /// plus the partition's missing-certificates. O(d) payload,
+    /// independent of the partition's client count.
+    pub const SHARD_SUM: u8 = 31;
 }
 
 // --- exact frame sizes ----------------------------------------------------
@@ -426,14 +442,16 @@ pub fn decode_shard_register(p: &[u8]) -> Result<(u32, u32, u32, u32, u8)> {
     Ok((shard_id, base, count, d, family))
 }
 
-/// SHARD_ROUND: the relay-facing round command. `deadline_ms = 0`
-/// means no per-client reply deadline; `subset` holds the partition's
-/// participants (global ids, in round-subset order — the order the
-/// shard commits in).
+/// SHARD_ROUND: the relay-facing round command. `sum` selects the
+/// reply format (true → one pre-reduced `SHARD_SUM`, false → the
+/// per-client `SHARD_MSG` batch); `deadline_ms = 0` means no
+/// per-client reply deadline; `subset` holds the partition's
+/// participants (global ids, in round-subset order).
 pub fn encode_shard_round(
     x: &[f64],
     round: u64,
     need_loss: bool,
+    sum: bool,
     deadline_ms: u64,
     subset: &[u32],
 ) -> Vec<u8> {
@@ -441,6 +459,7 @@ pub fn encode_shard_round(
         ByteWriter::with_capacity(x.len() * 8 + subset.len() * 4 + 32);
     w.put_u64(round);
     w.put_u8(need_loss as u8);
+    w.put_u8(sum as u8);
     w.put_u64(deadline_ms);
     w.put_u32(x.len() as u32);
     w.put_f64_slice(x);
@@ -449,19 +468,54 @@ pub fn encode_shard_round(
     w.into_vec()
 }
 
-/// Returns (x, round, need_loss, deadline_ms, subset).
+/// Returns (x, round, need_loss, sum, deadline_ms, subset).
 pub fn decode_shard_round(
     p: &[u8],
-) -> Result<(Vec<f64>, u64, bool, u64, Vec<u32>)> {
+) -> Result<(Vec<f64>, u64, bool, bool, u64, Vec<u32>)> {
     let mut r = ByteReader::new(p);
     let round = r.get_u64()?;
     let need_loss = r.get_u8()? != 0;
+    let sum = r.get_u8()? != 0;
     let deadline_ms = r.get_u64()?;
     let nx = r.get_u32()? as usize;
     let x = r.get_f64_vec(nx)?;
     let ns = r.get_u32()? as usize;
     let subset = r.get_u32_vec(ns)?;
-    Ok((x, round, need_loss, deadline_ms, subset))
+    Ok((x, round, need_loss, sum, deadline_ms, subset))
+}
+
+/// SHARD_SUM: one round's pre-reduced partition sum — the shard's
+/// merged [`crate::algorithms::RoundSum`] plus its
+/// missing-certificates. The accumulator codec is exact (integer
+/// limbs), so decode(encode(s)) represents the identical sum.
+pub fn encode_shard_sum(
+    shard_id: u32,
+    sum: &mut crate::algorithms::RoundSum,
+    missing: &[u32],
+) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(128);
+    w.put_u32(shard_id);
+    sum.encode(&mut w);
+    w.put_u32(missing.len() as u32);
+    w.put_u32_slice(missing);
+    w.into_vec()
+}
+
+/// Returns (shard_id, merged sum, missing ids). `d` is the run's
+/// dimension, bounding every decoded length/index (network-facing
+/// input: malformed frames become `Err` → a retired relay, never a
+/// panic or a giant allocation). The decoded sum's `wire_bytes` is 0
+/// — the receiver charges the actual frame size.
+pub fn decode_shard_sum(
+    p: &[u8],
+    d: usize,
+) -> Result<(u32, crate::algorithms::RoundSum, Vec<u32>)> {
+    let mut r = ByteReader::new(p);
+    let shard_id = r.get_u32()?;
+    let sum = crate::algorithms::RoundSum::decode(&mut r, d)?;
+    let nmiss = r.get_u32()? as usize;
+    let missing = r.get_u32_vec(nmiss)?;
+    Ok((shard_id, sum, missing))
 }
 
 /// SHARD_MSG: one round's partition batch — the shard's committed
@@ -832,15 +886,56 @@ mod tests {
     fn shard_round_roundtrip() {
         let x = vec![1.5, -0.25, 3.0];
         let subset = vec![7u32, 3, 5];
-        let enc = encode_shard_round(&x, 11, true, 250, &subset);
-        let (x2, round, need_loss, deadline, sub2) =
+        let enc = encode_shard_round(&x, 11, true, true, 250, &subset);
+        let (x2, round, need_loss, sum, deadline, sub2) =
             decode_shard_round(&enc).unwrap();
         assert_eq!(x2, x);
         assert_eq!(round, 11);
         assert!(need_loss);
+        assert!(sum);
         assert_eq!(deadline, 250);
         assert_eq!(sub2, subset);
+        let enc = encode_shard_round(&x, 0, false, false, 0, &[]);
+        let (_, _, _, sum, _, _) = decode_shard_round(&enc).unwrap();
+        assert!(!sum);
         assert!(decode_shard_round(&[1, 2]).is_err());
+    }
+
+    #[test]
+    fn shard_sum_roundtrip_is_exact() {
+        // The pre-reduced frame must reconstruct the *identical* sum:
+        // the accumulator codec ships exact integer limbs.
+        let msgs = vec![
+            msg_with(IndexPayload::Explicit(vec![0, 5, 9]), Some(0.5)),
+            msg_with(IndexPayload::SeqStart { start: 7, k: 3 }, Some(1e16)),
+        ];
+        let mut sum = crate::algorithms::RoundSum::from_msgs(&msgs);
+        let want_grad: Vec<u64> = sum
+            .clone()
+            .grad
+            .round_vec()
+            .iter()
+            .map(|v| v.to_bits())
+            .collect();
+        let want_l = sum.clone().l.round().to_bits();
+        let missing = vec![4u32, 8];
+        let enc = encode_shard_sum(2, &mut sum, &missing);
+        // d = 4 (the messages' gradient length; packed_len(4) = 10
+        // bounds the update indices, which run over n = 10).
+        let (sid, back, miss) = decode_shard_sum(&enc, 4).unwrap();
+        assert_eq!(sid, 2);
+        assert_eq!(miss, missing);
+        assert_eq!(back.committed, 2);
+        assert!(back.have_loss);
+        let mut back = back;
+        let got: Vec<u64> =
+            back.grad.round_vec().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want_grad);
+        assert_eq!(back.l.round().to_bits(), want_l);
+        assert!(decode_shard_sum(&[1, 2, 3], 4).is_err());
+        // Dimension mismatch / out-of-triangle indices are decode
+        // errors (→ drop_relay), never downstream panics.
+        assert!(decode_shard_sum(&enc, 3).is_err());
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! Property tests for the reproducible summation layer
+//! (`linalg::reduce`): the exactness/associativity contract the whole
+//! coordination stack now rests on. Random shuffles and random binary
+//! groupings of random f64 sets must produce **bit-identical** rounded
+//! sums; exponent extremes, signed zeros and non-finite inputs must
+//! resolve loudly and deterministically, never silently wrong.
+
+use fednl::linalg::reduce::{RepAcc, RepVec};
+use fednl::rng::{Pcg64, Rng};
+
+fn sum_seq(xs: &[f64]) -> u64 {
+    let mut a = RepAcc::new();
+    for &x in xs {
+        a.accumulate(x);
+    }
+    a.round().to_bits()
+}
+
+/// Random f64 with a wide exponent spread (±2^-e .. ±2^e scaled
+/// gaussians plus occasional subnormals and exact powers of two).
+fn wild(rng: &mut Pcg64, span: i32) -> f64 {
+    let e = (rng.next_u64() % (2 * span as u64 + 1)) as i32 - span;
+    match rng.next_u64() % 8 {
+        0 => 2.0f64.powi(e),                      // exact power of two
+        1 => -(2.0f64.powi(e)),
+        2 => f64::MIN_POSITIVE * (rng.next_f64() + 1e-3), // subnormal-ish
+        _ => rng.next_gaussian() * 2.0f64.powi(e),
+    }
+}
+
+/// Fold `xs` with a random binary grouping: split at a random point,
+/// recurse on both halves, merge. Every grouping must agree with the
+/// flat sequential fold, bit for bit.
+fn sum_random_tree(rng: &mut Pcg64, xs: &[f64]) -> RepAcc {
+    if xs.len() <= 1 {
+        let mut a = RepAcc::new();
+        if let Some(&x) = xs.first() {
+            a.accumulate(x);
+        }
+        return a;
+    }
+    let cut = 1 + (rng.next_u64() % (xs.len() as u64 - 1)) as usize;
+    let mut left = sum_random_tree(rng, &xs[..cut]);
+    let right = sum_random_tree(rng, &xs[cut..]);
+    left.merge(right);
+    left
+}
+
+#[test]
+fn prop_shuffles_and_groupings_are_bit_identical() {
+    let mut rng = Pcg64::seed_from_u64(0xD3_CA_FE);
+    for case in 0..120 {
+        let span = 20 + (case % 5) * 60; // up to ±2^260 spreads
+        let n = 1 + (rng.next_u64() % 40) as usize;
+        let xs: Vec<f64> =
+            (0..n).map(|_| wild(&mut rng, span as i32)).collect();
+        let want = sum_seq(&xs);
+        // Random shuffles.
+        let mut perm = xs.clone();
+        for _ in 0..4 {
+            for i in (1..perm.len()).rev() {
+                let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+                perm.swap(i, j);
+            }
+            assert_eq!(sum_seq(&perm), want, "case {case}: shuffle");
+        }
+        // Random binary merge trees (shard-shaped groupings).
+        for _ in 0..4 {
+            let mut tree = sum_random_tree(&mut rng, &perm);
+            assert_eq!(
+                tree.round().to_bits(),
+                want,
+                "case {case}: grouping"
+            );
+        }
+        // The dispatched bulk kernel and its scalar fallback agree
+        // with the one-at-a-time path exactly.
+        let mut bulk = RepAcc::new();
+        bulk.accumulate_slice(&xs);
+        assert_eq!(bulk.round().to_bits(), want, "case {case}: simd");
+        let mut bulk = RepAcc::new();
+        bulk.accumulate_slice_scalar(&xs);
+        assert_eq!(bulk.round().to_bits(), want, "case {case}: scalar");
+    }
+}
+
+#[test]
+fn prop_overflow_underflow_extremes() {
+    // Exact sums beyond the f64 range round to the correct infinity,
+    // and cancelling back into range recovers the exact remainder —
+    // the accumulator is never sticky-saturated.
+    let mut rng = Pcg64::seed_from_u64(0xFFF);
+    for _ in 0..50 {
+        let k = 2 + (rng.next_u64() % 6) as usize;
+        let xs: Vec<f64> = (0..k).map(|_| f64::MAX).collect();
+        assert_eq!(sum_seq(&xs), f64::INFINITY.to_bits());
+        let neg: Vec<f64> = xs.iter().map(|v| -v).collect();
+        assert_eq!(sum_seq(&neg), f64::NEG_INFINITY.to_bits());
+        // Cancel all but one copy, plus subnormal dust that must
+        // survive exactly.
+        let dust = 5e-324 * ((rng.next_u64() % 7) as f64);
+        let mut both = Vec::new();
+        both.extend_from_slice(&xs);
+        both.push(dust);
+        both.extend(neg.iter().take(k - 1));
+        let want = (f64::MAX + 0.0).to_bits(); // MAX + dust rounds to MAX
+        if dust == 0.0 {
+            assert_eq!(sum_seq(&both), want);
+        } else {
+            assert_eq!(sum_seq(&both), want, "dust {dust:e}");
+        }
+        // Pure subnormal arithmetic stays exact.
+        let tiny: Vec<f64> = (0..9).map(|_| 5e-324).collect();
+        assert_eq!(sum_seq(&tiny), (5e-324 * 9.0).to_bits());
+    }
+}
+
+#[test]
+fn prop_signed_zeros_and_specials_fail_loudly_never_wrong() {
+    // Signed zeros vanish (documented: the zero sum is +0.0).
+    assert_eq!(sum_seq(&[-0.0, 0.0, -0.0]), 0.0f64.to_bits());
+    // NaN poisons every grouping; mixed infinities are NaN; a
+    // single-signed infinity wins over any finite mass — all
+    // permutation-invariant by construction.
+    let mut rng = Pcg64::seed_from_u64(0xBAD);
+    let base: Vec<f64> = (0..10).map(|_| wild(&mut rng, 50)).collect();
+    for special in [
+        vec![f64::NAN],
+        vec![f64::INFINITY, f64::NEG_INFINITY],
+        vec![f64::NAN, f64::INFINITY],
+    ] {
+        let mut xs = base.clone();
+        xs.extend(&special);
+        for _ in 0..4 {
+            for i in (1..xs.len()).rev() {
+                let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+                xs.swap(i, j);
+            }
+            assert!(
+                f64::from_bits(sum_seq(&xs)).is_nan(),
+                "{special:?}"
+            );
+        }
+    }
+    let mut xs = base.clone();
+    xs.push(f64::INFINITY);
+    assert_eq!(sum_seq(&xs), f64::INFINITY.to_bits());
+    let mut xs = base;
+    xs.push(f64::NEG_INFINITY);
+    assert_eq!(sum_seq(&xs), f64::NEG_INFINITY.to_bits());
+}
+
+#[test]
+fn prop_matches_exact_integer_reference() {
+    // Terms that are exact multiples of 2^-48 with bounded magnitude:
+    // the true sum fits in i128 units, and Rust's i128→f64 cast is
+    // round-to-nearest-even — an independent oracle for round().
+    let mut rng = Pcg64::seed_from_u64(0x1234);
+    for case in 0..300 {
+        let n = 1 + (rng.next_u64() % 200) as usize;
+        let mut exact: i128 = 0;
+        let xs: Vec<f64> = (0..n)
+            .map(|_| {
+                let m = (rng.next_u64() % (1 << 52)) as i64
+                    - (1i64 << 51);
+                exact += m as i128;
+                m as f64 / (1u64 << 48) as f64 // exact in f64
+            })
+            .collect();
+        let want =
+            (exact as f64 / (1u64 << 48) as f64).to_bits();
+        assert_eq!(sum_seq(&xs), want, "case {case} n={n}");
+    }
+}
+
+#[test]
+fn prop_repvec_partition_invariance() {
+    // The gradient-fold shape: p vectors split into arbitrary
+    // contiguous shard partitions, each folded locally, partials
+    // merged — always equal to the flat fold (what makes SHARD_SUM
+    // safe for any S).
+    let mut rng = Pcg64::seed_from_u64(0x9E_C7);
+    for case in 0..40 {
+        let d = 1 + (rng.next_u64() % 24) as usize;
+        let p = 2 + (rng.next_u64() % 12) as usize;
+        let rows: Vec<Vec<f64>> = (0..p)
+            .map(|_| (0..d).map(|_| wild(&mut rng, 100)).collect())
+            .collect();
+        let mut flat = RepVec::new(d);
+        for r in &rows {
+            flat.accumulate(r);
+        }
+        let want: Vec<u64> =
+            flat.round_vec().iter().map(|v| v.to_bits()).collect();
+        for _ in 0..4 {
+            // Random partition into up to 4 contiguous shards.
+            let mut cuts = vec![0usize, p];
+            for _ in 0..(rng.next_u64() % 3) {
+                cuts.push((rng.next_u64() % (p as u64 + 1)) as usize);
+            }
+            cuts.sort_unstable();
+            let mut merged = RepVec::new(0);
+            for w in cuts.windows(2) {
+                let mut part = RepVec::new(d);
+                for r in &rows[w[0]..w[1]] {
+                    part.accumulate(r);
+                }
+                merged.merge(part);
+            }
+            let got: Vec<u64> = merged
+                .round_vec()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            assert_eq!(got, want, "case {case}");
+        }
+    }
+}

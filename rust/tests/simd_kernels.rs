@@ -151,6 +151,43 @@ fn prop_sigmoid_variance_scan_matches_scalar() {
 }
 
 #[test]
+fn prop_binned_accumulate_dispatched_equals_scalar_exactly() {
+    // Unlike the float kernels, the superaccumulate kernel is integer
+    // exact: the dispatched path must match the scalar fallback (and
+    // the one-at-a-time reference) BIT for bit — no tolerance, at
+    // every edge length including lane tails and specials.
+    use fednl::linalg::reduce::RepAcc;
+    for &n in &LENS {
+        let mut xs = rvec(n, 7000 + n as u64);
+        // Sprinkle magnitude extremes into the longer cases.
+        if n >= 7 {
+            xs[1] = 1e300;
+            xs[3] = -1e300;
+            xs[5] = 5e-324;
+        }
+        let mut one = RepAcc::new();
+        for &x in &xs {
+            one.accumulate(x);
+        }
+        let mut disp = RepAcc::new();
+        disp.accumulate_slice(&xs);
+        let mut sc = RepAcc::new();
+        sc.accumulate_slice_scalar(&xs);
+        let want = one.round().to_bits();
+        assert_eq!(disp.round().to_bits(), want, "n={n} dispatched");
+        assert_eq!(sc.round().to_bits(), want, "n={n} scalar");
+    }
+    // Specials survive the lane path identically.
+    let xs = vec![1.0, f64::INFINITY, 2.0, f64::NAN, -1.0, 0.5, 3.0, 4.0];
+    let mut disp = RepAcc::new();
+    disp.accumulate_slice(&xs);
+    let mut sc = RepAcc::new();
+    sc.accumulate_slice_scalar(&xs);
+    assert!(disp.round().is_nan());
+    assert!(sc.round().is_nan());
+}
+
+#[test]
 fn prop_sym_rank1_matches_scalar_odd_shapes() {
     // Odd d exercises every vector-tail length; odd sample counts
     // exercise the 4-sample blocking tail.
