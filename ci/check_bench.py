@@ -14,6 +14,13 @@ threshold:
 * ``BENCH_reduce.json``       — per-row    ``simd_ns``   (key: name, n;
   the reproducible-summation kernels)
 
+The kernel and reduce tables additionally carry an ``avx512_ns``
+column, gated as an *optional* metric (key suffix ``/avx512_ns``):
+the AVX-512 tier is a host+toolchain capability, so a fresh run whose
+column is ``null`` (runner without AVX-512, or the pinned pre-1.89
+toolchain) downgrades the comparison to a note instead of failing the
+gate. A present-and-slower ``avx512_ns`` fails like any other metric.
+
 Usage:
     check_bench.py FRESH BASELINE          # gate (exit 1 on regression)
     check_bench.py --update FRESH BASELINE # refresh the baseline file
@@ -38,12 +45,21 @@ def threshold():
     return float(os.environ.get("BENCH_REGRESSION_THRESHOLD", "0.25"))
 
 
+# Key suffix of metrics that depend on a host/toolchain capability: a
+# baseline entry missing from the fresh run is a note, not a failure.
+OPTIONAL_SUFFIX = "/avx512_ns"
+
+
 def extract(doc):
     """Return (mode, {key: metric_value}) for either bench schema."""
     if "kernels" in doc:
         rows = {}
         for k in doc["kernels"]:
             rows[f"{k['name']}[n={k['n']}]"] = float(k["simd_ns"])
+            if k.get("avx512_ns") is not None:
+                rows[f"{k['name']}[n={k['n']}]{OPTIONAL_SUFFIX}"] = float(
+                    k["avx512_ns"]
+                )
         return "kernels/simd_ns", rows
     if "pools" in doc:
         rows = {}
@@ -63,6 +79,10 @@ def extract(doc):
         rows = {}
         for k in doc["reduce"]:
             rows[f"{k['name']}[n={k['n']}]"] = float(k["simd_ns"])
+            if k.get("avx512_ns") is not None:
+                rows[f"{k['name']}[n={k['n']}]{OPTIONAL_SUFFIX}"] = float(
+                    k["avx512_ns"]
+                )
         return "reduce/simd_ns", rows
     raise SystemExit(
         "unrecognized bench JSON: no 'kernels', 'pools', 'configs' or "
@@ -81,6 +101,14 @@ def compare(fresh, base, thresh):
     regressions, notes = [], []
     for key, base_v in sorted(base_rows.items()):
         if key not in fresh_rows:
+            if key.endswith(OPTIONAL_SUFFIX):
+                # Capability-gated column: null on this runner (no
+                # AVX-512, or the pinned pre-1.89 toolchain) is an
+                # expected environment difference, not schema drift.
+                notes.append(
+                    f"  ~ {key}: tier unavailable on this runner (skipped)"
+                )
+                continue
             # A tracked metric vanishing must not silently shrink the
             # gate's coverage (renamed kernel, changed n, empty emit):
             # schema drift has to be acknowledged via --update.
@@ -154,6 +182,25 @@ def self_test():
         0.25,
     )
     assert len(reg) == 1 and "axpy[n=4096]" in reg[0], reg
+
+    # avx512_ns is an optional, capability-gated column: a numeric
+    # value is gated like any metric, a null (or absent) value in the
+    # fresh run only downgrades the baseline entry to a note.
+    abase = {"kernels": [
+        {"name": "dot", "n": 301, "simd_ns": 100.0, "avx512_ns": 60.0}]}
+    aslow = {"kernels": [
+        {"name": "dot", "n": 301, "simd_ns": 100.0, "avx512_ns": 90.0}]}
+    reg, _ = compare(aslow, abase, 0.25)
+    assert len(reg) == 1 and "dot[n=301]/avx512_ns" in reg[0], reg
+    anull = {"kernels": [
+        {"name": "dot", "n": 301, "simd_ns": 100.0, "avx512_ns": None}]}
+    reg, notes = compare(anull, abase, 0.25)
+    assert reg == [], reg
+    assert any("avx512_ns" in n and "unavailable" in n for n in notes), notes
+    # A fresh run gaining the column over an old baseline: note only.
+    reg, notes = compare(abase, anull, 0.25)
+    assert reg == [], reg
+    assert any("new metric" in n for n in notes), notes
 
     # Shard-tier schema: per-config total_s AND payload_bytes, keyed
     # by "S=N/pool" / "S=N/pool/payload_bytes".

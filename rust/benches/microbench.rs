@@ -4,16 +4,20 @@
 //! Run: `cargo bench --bench microbench [-- filter] [--bench-json]`
 //!
 //! The `kernels` section A/Bs every runtime-dispatched SIMD kernel
-//! against its portable scalar fallback; with `--bench-json` the
-//! per-kernel timings are written to `BENCH_kernels.json` (see
+//! against its portable scalar fallback, plus an `avx512_ns` column
+//! pinning each kernel to the AVX-512 tier where the host and the
+//! toolchain provide it (JSON `null` otherwise); with `--bench-json`
+//! the per-kernel timings are written to `BENCH_kernels.json` (see
 //! ROADMAP.md for the schema) so the perf trajectory is tracked across
 //! PRs. The `coordinator` and `shard` sections emit
 //! `BENCH_coordinator.json` / `BENCH_shard.json` the same way (the
 //! master's wait-vs-aggregate wall-clock split, flat and through the
-//! sharded aggregation tier, now with per-round shard→master
-//! `payload_bytes`); the `reduce` section emits `BENCH_reduce.json`
-//! (exact RepAcc superaccumulation vs naive f64 folding, scalar vs
-//! the dispatched AVX2-assisted kernel).
+//! sharded aggregation tier, with per-round shard→master
+//! `payload_bytes`; the coordinator section adds a deterministic
+//! straggler A/B of `--speculate` with an `overlap_s` column); the
+//! `reduce` section emits `BENCH_reduce.json` (exact RepAcc
+//! superaccumulation vs naive f64 folding, scalar vs the dispatched
+//! SIMD kernel, plus the pinned AVX-512 limb scatter).
 
 use fednl::compressors::{by_name, ALL_NAMES};
 use fednl::data::ClientShard;
@@ -52,12 +56,17 @@ fn time_min<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
     st.min()
 }
 
-/// One scalar-vs-dispatched A/B row for `BENCH_kernels.json`.
+/// One scalar-vs-dispatched A/B row for `BENCH_kernels.json`. The
+/// `avx512_ns` column pins the kernel to the AVX-512 tier via the
+/// `*_on` wrappers; it is `None` (JSON `null`) when the host or the
+/// toolchain lacks the tier, and for rows where a pinned tier makes no
+/// sense (the multithreaded row).
 struct KernelRow {
     name: &'static str,
     n: usize,
     scalar_ns: f64,
     simd_ns: f64,
+    avx512_ns: Option<f64>,
 }
 
 impl KernelRow {
@@ -70,6 +79,14 @@ impl KernelRow {
     }
 }
 
+/// `Option<f64>` → JSON number or `null` (hand-rolled writer).
+fn json_opt_ns(v: Option<f64>) -> String {
+    match v {
+        Some(ns) => format!("{ns:.1}"),
+        None => "null".into(),
+    }
+}
+
 /// A/B every dispatched kernel against its scalar fallback.
 fn bench_kernels() -> Vec<KernelRow> {
     let mut rng = Pcg64::seed_from_u64(0xBE_AC_11);
@@ -77,6 +94,7 @@ fn bench_kernels() -> Vec<KernelRow> {
     let d = 301; // W8A shape
     let pu = PackedUpper::new(d);
     let n_packed = pu.len();
+    let has512 = simd::isa_available(simd::Isa::Avx512);
 
     // dot / norm2_sq (margin-length and packed-length vectors).
     for &n in &[d, 4096] {
@@ -94,7 +112,16 @@ fn bench_kernels() -> Vec<KernelRow> {
                 std::hint::black_box(&b),
             ));
         }) * 1e9;
-        rows.push(KernelRow { name: "dot", n, scalar_ns, simd_ns });
+        let avx512_ns = has512.then(|| {
+            time_min(50, 400, || {
+                std::hint::black_box(simd::dot_on(
+                    simd::Isa::Avx512,
+                    std::hint::black_box(&a),
+                    std::hint::black_box(&b),
+                ));
+            }) * 1e9
+        });
+        rows.push(KernelRow { name: "dot", n, scalar_ns, simd_ns, avx512_ns });
     }
 
     // axpy (gradient accumulation sweep length).
@@ -103,13 +130,30 @@ fn bench_kernels() -> Vec<KernelRow> {
         let x: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
         let mut y1: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
         let mut y2 = y1.clone();
+        let mut y3 = y1.clone();
         let scalar_ns = time_min(50, 400, || {
             simd::scalar::axpy(1.000000001, std::hint::black_box(&x), &mut y1);
         }) * 1e9;
         let simd_ns = time_min(50, 400, || {
             simd::axpy(1.000000001, std::hint::black_box(&x), &mut y2);
         }) * 1e9;
-        rows.push(KernelRow { name: "axpy", n, scalar_ns, simd_ns });
+        let avx512_ns = has512.then(|| {
+            time_min(50, 400, || {
+                simd::axpy_on(
+                    simd::Isa::Avx512,
+                    1.000000001,
+                    std::hint::black_box(&x),
+                    &mut y3,
+                );
+            }) * 1e9
+        });
+        rows.push(KernelRow {
+            name: "axpy",
+            n,
+            scalar_ns,
+            simd_ns,
+            avx512_ns,
+        });
     }
 
     // §5.10 rank-1 Hessian accumulate (the hottest FedNL kernel).
@@ -127,11 +171,23 @@ fn bench_kernels() -> Vec<KernelRow> {
         let simd_ns = time_min(3, 30, || {
             simd::sym_rank1_upper(&mut m, d, &refs, &h);
         }) * 1e9;
+        let avx512_ns = has512.then(|| {
+            time_min(3, 30, || {
+                simd::sym_rank1_upper_on(
+                    simd::Isa::Avx512,
+                    &mut m,
+                    d,
+                    &refs,
+                    &h,
+                );
+            }) * 1e9
+        });
         rows.push(KernelRow {
             name: "sym_rank1_upper",
             n: d * n_i,
             scalar_ns,
             simd_ns,
+            avx512_ns,
         });
     }
 
@@ -159,6 +215,9 @@ fn bench_kernels() -> Vec<KernelRow> {
             n: d * n_i,
             scalar_ns,
             simd_ns,
+            // The threaded row A/Bs 1 core vs all cores on the
+            // *dispatched* kernel; a pinned tier is a different axis.
+            avx512_ns: None,
         });
     }
 
@@ -172,11 +231,22 @@ fn bench_kernels() -> Vec<KernelRow> {
         let simd_ns = time_min(20, 200, || {
             simd::energy_scan(pu.weights(), std::hint::black_box(&v), &mut e);
         }) * 1e9;
+        let avx512_ns = has512.then(|| {
+            time_min(20, 200, || {
+                simd::energy_scan_on(
+                    simd::Isa::Avx512,
+                    pu.weights(),
+                    std::hint::black_box(&v),
+                    &mut e,
+                );
+            }) * 1e9
+        });
         rows.push(KernelRow {
             name: "energy_scan",
             n: n_packed,
             scalar_ns,
             simd_ns,
+            avx512_ns,
         });
 
         let scalar_ns = time_min(20, 200, || {
@@ -191,11 +261,21 @@ fn bench_kernels() -> Vec<KernelRow> {
                 std::hint::black_box(&v),
             ));
         }) * 1e9;
+        let avx512_ns = has512.then(|| {
+            time_min(20, 200, || {
+                std::hint::black_box(simd::weighted_norm2_sq_on(
+                    simd::Isa::Avx512,
+                    pu.weights(),
+                    std::hint::black_box(&v),
+                ));
+            }) * 1e9
+        });
         rows.push(KernelRow {
             name: "weighted_norm2_sq",
             n: n_packed,
             scalar_ns,
             simd_ns,
+            avx512_ns,
         });
 
         let scalar_ns = time_min(20, 200, || {
@@ -204,11 +284,20 @@ fn bench_kernels() -> Vec<KernelRow> {
         let simd_ns = time_min(20, 200, || {
             std::hint::black_box(simd::abs_max(std::hint::black_box(&v)));
         }) * 1e9;
+        let avx512_ns = has512.then(|| {
+            time_min(20, 200, || {
+                std::hint::black_box(simd::abs_max_on(
+                    simd::Isa::Avx512,
+                    std::hint::black_box(&v),
+                ));
+            }) * 1e9
+        });
         rows.push(KernelRow {
             name: "abs_max",
             n: n_packed,
             scalar_ns,
             simd_ns,
+            avx512_ns,
         });
     }
 
@@ -223,17 +312,67 @@ fn bench_kernels() -> Vec<KernelRow> {
         let simd_ns = time_min(50, 400, || {
             simd::sigmoid_variance_scan(std::hint::black_box(&s), 0.01, &mut out);
         }) * 1e9;
+        let avx512_ns = has512.then(|| {
+            time_min(50, 400, || {
+                simd::sigmoid_variance_scan_on(
+                    simd::Isa::Avx512,
+                    std::hint::black_box(&s),
+                    0.01,
+                    &mut out,
+                );
+            }) * 1e9
+        });
         rows.push(KernelRow {
             name: "sigmoid_variance_scan",
             n,
             scalar_ns,
             simd_ns,
+            avx512_ns,
+        });
+    }
+
+    // Fused margin→σ(-z) scan. The "scalar" baseline is the libm-exp
+    // path the vectorized polynomial replaced (what `FEDNL_EXACT_EXP=1`
+    // restores), so the row meters the exp→poly win end to end.
+    {
+        let n = 4096;
+        let z: Vec<f64> =
+            (0..n).map(|_| rng.next_gaussian() * 12.0).collect();
+        let mut out = vec![0.0; n];
+        let scalar_ns = time_min(50, 400, || {
+            let z = std::hint::black_box(&z);
+            for (o, &zi) in out.iter_mut().zip(z.iter()) {
+                *o = simd::sigmoid_exact(-zi);
+            }
+        }) * 1e9;
+        let simd_ns = time_min(50, 400, || {
+            simd::sigmoid_neg_scan(std::hint::black_box(&z), &mut out);
+        }) * 1e9;
+        let avx512_ns = has512.then(|| {
+            time_min(50, 400, || {
+                simd::sigmoid_neg_scan_on(
+                    simd::Isa::Avx512,
+                    std::hint::black_box(&z),
+                    &mut out,
+                );
+            }) * 1e9
+        });
+        rows.push(KernelRow {
+            name: "sigmoid_neg_scan",
+            n,
+            scalar_ns,
+            simd_ns,
+            avx512_ns,
         });
     }
 
     for r in &rows {
+        let a512 = match r.avx512_ns {
+            Some(ns) => format!("{ns:>9.1}ns"),
+            None => format!("{:>11}", "-"),
+        };
         println!(
-            "kernel/{:<24} n={:<6} scalar {:>9.1}ns  simd {:>9.1}ns  ×{:.2}",
+            "kernel/{:<24} n={:<6} scalar {:>9.1}ns  simd {:>9.1}ns  avx512 {a512}  ×{:.2}",
             r.name,
             r.n,
             r.scalar_ns,
@@ -256,11 +395,12 @@ fn write_bench_json(rows: &[KernelRow]) -> std::io::Result<()> {
     s.push_str("  \"kernels\": [\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
-            "    {{\"name\": \"{}\", \"n\": {}, \"scalar_ns\": {:.1}, \"simd_ns\": {:.1}, \"speedup\": {:.3}}}{}\n",
+            "    {{\"name\": \"{}\", \"n\": {}, \"scalar_ns\": {:.1}, \"simd_ns\": {:.1}, \"avx512_ns\": {}, \"speedup\": {:.3}}}{}\n",
             r.name,
             r.n,
             r.scalar_ns,
             r.simd_ns,
+            json_opt_ns(r.avx512_ns),
             r.speedup(),
             if i + 1 < rows.len() { "," } else { "" }
         ));
@@ -331,7 +471,7 @@ fn main() {
         // bulk kernel. The accumulator is exact, so the interesting
         // number is the slowdown paid for exactness — emitted as
         // BENCH_reduce.json and gated on simd_ns by check_bench.py.
-        use fednl::linalg::reduce::RepAcc;
+        use fednl::linalg::reduce::{RepAcc, LIMBS};
 
         struct ReduceRow {
             name: &'static str,
@@ -339,7 +479,11 @@ fn main() {
             naive_ns: f64,
             scalar_ns: f64,
             simd_ns: f64,
+            /// Raw limb-scatter kernel pinned to the AVX-512 tier
+            /// (`None` when the tier is unavailable / inapplicable).
+            avx512_ns: Option<f64>,
         }
+        let has512 = simd::isa_available(simd::Isa::Avx512);
         let mut rng = Pcg64::seed_from_u64(0x5ED_0CE);
         let mut rows = Vec::new();
         for &n in &[301usize, 4096] {
@@ -374,12 +518,24 @@ fn main() {
                 acc.accumulate_slice(std::hint::black_box(&xs));
                 std::hint::black_box(&acc);
             }) * 1e9;
+            let avx512_ns = has512.then(|| {
+                let mut limbs = [0i64; LIMBS];
+                time_min(20, 200, || {
+                    limbs = [0i64; LIMBS];
+                    std::hint::black_box(simd::binned_accumulate_on(
+                        simd::Isa::Avx512,
+                        &mut limbs,
+                        std::hint::black_box(&xs),
+                    ));
+                }) * 1e9
+            });
             rows.push(ReduceRow {
                 name: "binned_accumulate",
                 n,
                 naive_ns,
                 scalar_ns,
                 simd_ns,
+                avx512_ns,
             });
         }
         // Shard-tier merge: S partial sums folded at the master — the
@@ -416,11 +572,17 @@ fn main() {
                 naive_ns,
                 scalar_ns: merge_ns,
                 simd_ns: merge_ns,
+                // Merging limb arrays is ISA-independent bookkeeping.
+                avx512_ns: None,
             });
         }
         for r in &rows {
+            let a512 = match r.avx512_ns {
+                Some(ns) => format!("{ns:>9.1}ns"),
+                None => format!("{:>11}", "-"),
+            };
             println!(
-                "reduce/{:<20} n={:<6} naive {:>9.1}ns  scalar {:>9.1}ns  simd {:>9.1}ns  exactness x{:.2}",
+                "reduce/{:<20} n={:<6} naive {:>9.1}ns  scalar {:>9.1}ns  simd {:>9.1}ns  avx512 {a512}  exactness x{:.2}",
                 r.name,
                 r.n,
                 r.naive_ns,
@@ -439,12 +601,13 @@ fn main() {
             s.push_str("  \"reduce\": [\n");
             for (i, r) in rows.iter().enumerate() {
                 s.push_str(&format!(
-                    "    {{\"name\": \"{}\", \"n\": {}, \"naive_ns\": {:.1}, \"scalar_ns\": {:.1}, \"simd_ns\": {:.1}}}{}\n",
+                    "    {{\"name\": \"{}\", \"n\": {}, \"naive_ns\": {:.1}, \"scalar_ns\": {:.1}, \"simd_ns\": {:.1}, \"avx512_ns\": {}}}{}\n",
                     r.name,
                     r.n,
                     r.naive_ns,
                     r.scalar_ns,
                     r.simd_ns,
+                    json_opt_ns(r.avx512_ns),
                     if i + 1 < rows.len() { "," } else { "" }
                 ));
             }
@@ -463,10 +626,20 @@ fn main() {
     if want("coordinator") {
         // Streaming-pool wait vs aggregate wall-clock split: how much
         // of a FedNL run the master spends blocked on `drain()` vs
-        // committing replies (buffer-and-commit). Emitted as
-        // BENCH_coordinator.json with --bench-json.
-        use fednl::algorithms::{run_fednl_pool, ClientState, Options};
-        use fednl::coordinator::{ClientPool, SeqPool, ThreadedPool};
+        // committing replies (buffer-and-commit), plus the speculative
+        // A/B — a deterministic straggler schedule (one over-deadline
+        // client per round, quorum n−1) run with and without
+        // `--speculate`. Speculation overlaps the server-side round
+        // finish with the straggler-detection wait, so the "+spec" row
+        // shows the same wait but a lower total and a nonzero
+        // `overlap_s`; both trajectories are bit-identical (asserted).
+        // Emitted as BENCH_coordinator.json with --bench-json.
+        use fednl::algorithms::{
+            run_fednl_pool, ClientState, Options, RoundPolicy,
+        };
+        use fednl::coordinator::{
+            ClientPool, FaultPlan, FaultPool, SeqPool, ThreadedPool,
+        };
 
         let n_clients = 8;
         let dd = 61;
@@ -485,46 +658,125 @@ fn main() {
                 .collect()
         };
         let opts = Options { rounds, track_loss: true, ..Default::default() };
-        let mut results: Vec<(String, f64, f64, f64)> = Vec::new();
+        struct CoordRun {
+            pool: String,
+            wait_s: f64,
+            aggregate_s: f64,
+            overlap_s: f64,
+            total_s: f64,
+        }
+        let mut results: Vec<CoordRun> = Vec::new();
         {
             let mut pool = SeqPool::new(make());
             let tr = run_fednl_pool(&mut pool, &opts, vec![0.0; dd], "coord/seq");
-            results.push((
-                pool.kind_name().to_string(),
-                tr.wait_secs,
-                tr.aggregate_secs,
-                tr.total_elapsed(),
-            ));
+            results.push(CoordRun {
+                pool: pool.kind_name().to_string(),
+                wait_s: tr.wait_secs,
+                aggregate_s: tr.aggregate_secs,
+                overlap_s: tr.overlap_secs,
+                total_s: tr.total_elapsed(),
+            });
         }
         {
             let mut pool = ThreadedPool::new(make(), 0);
             let tr =
                 run_fednl_pool(&mut pool, &opts, vec![0.0; dd], "coord/thr");
-            results.push((
-                pool.kind_name().to_string(),
-                tr.wait_secs,
-                tr.aggregate_secs,
-                tr.total_elapsed(),
-            ));
+            results.push(CoordRun {
+                pool: pool.kind_name().to_string(),
+                wait_s: tr.wait_secs,
+                aggregate_s: tr.aggregate_secs,
+                overlap_s: tr.overlap_secs,
+                total_s: tr.total_elapsed(),
+            });
         }
-        for (pool, wait, agg, total) in &results {
+        // Speculative A/B. Larger d so the overlapped server work
+        // (Hessian finish + Newton solve) is substantial; a short
+        // reply deadline so the per-round straggler window stays
+        // cheap. Client 7 exceeds the deadline every round, so each
+        // round closes on exactly the quorum-7 snapshot and every
+        // speculation is adopted.
+        let dd_f = 256;
+        let rounds_f = 12u64;
+        let deadline_ms = 30u64;
+        let make_f = || -> Vec<ClientState> {
+            (0..n_clients)
+                .map(|i| {
+                    let sh = random_shard(dd_f, 80, 900 + i as u64);
+                    ClientState::new(
+                        i,
+                        Box::new(LogisticOracle::new(sh, 1e-3)),
+                        by_name("topk", dd_f, 8, 1300 + i as u64).unwrap(),
+                        None,
+                    )
+                })
+                .collect()
+        };
+        let mut plan = FaultPlan::default();
+        for r in 0..=rounds_f {
+            plan = plan.with_delay(r, n_clients as u32 - 1, 1000);
+        }
+        let policy = RoundPolicy {
+            quorum: Some(n_clients - 1),
+            deadline_ms: Some(deadline_ms),
+            ..Default::default()
+        };
+        let mut grad_bits = Vec::new();
+        for speculate in [false, true] {
+            let opts_f = Options {
+                rounds: rounds_f,
+                track_loss: true,
+                policy,
+                speculate,
+                ..Default::default()
+            };
+            let mut pool =
+                FaultPool::new(ThreadedPool::new(make_f(), 0), plan.clone());
+            let label =
+                if speculate { "coord/faulty+spec" } else { "coord/faulty" };
+            let tr =
+                run_fednl_pool(&mut pool, &opts_f, vec![0.0; dd_f], label);
+            grad_bits.push(tr.last_grad_norm().to_bits());
+            results.push(CoordRun {
+                pool: if speculate {
+                    "faulty+spec".to_string()
+                } else {
+                    "faulty".to_string()
+                },
+                wait_s: tr.wait_secs,
+                aggregate_s: tr.aggregate_secs,
+                overlap_s: tr.overlap_secs,
+                total_s: tr.total_elapsed(),
+            });
+        }
+        assert_eq!(
+            grad_bits[0], grad_bits[1],
+            "speculative trajectory diverged from the inline path"
+        );
+        for r in &results {
             println!(
-                "coordinator/{pool:<10} rounds={rounds}  wait {:>9.3}ms  aggregate {:>9.3}ms  total {:>9.3}ms",
-                wait * 1e3,
-                agg * 1e3,
-                total * 1e3
+                "coordinator/{:<12} wait {:>9.3}ms  aggregate {:>9.3}ms  overlap {:>9.3}ms  total {:>9.3}ms",
+                r.pool,
+                r.wait_s * 1e3,
+                r.aggregate_s * 1e3,
+                r.overlap_s * 1e3,
+                r.total_s * 1e3
             );
         }
         if json {
             let mut s = String::from("{\n");
             s.push_str(&format!(
-                "  \"rounds\": {rounds}, \"n_clients\": {n_clients}, \"d\": {dd}, \"cores\": {},\n",
+                "  \"rounds\": {rounds}, \"n_clients\": {n_clients}, \"d\": {dd}, \"faulty_rounds\": {rounds_f}, \"faulty_d\": {dd_f}, \"cores\": {},\n",
                 fednl::utils::available_cores()
             ));
             s.push_str("  \"pools\": [\n");
-            for (i, (pool, wait, agg, total)) in results.iter().enumerate() {
+            for (i, r) in results.iter().enumerate() {
                 s.push_str(&format!(
-                    "    {{\"pool\": \"{pool}\", \"wait_s\": {wait:.6}, \"aggregate_s\": {agg:.6}, \"total_s\": {total:.6}}}{}\n",
+                    "    {{\"pool\": \"{}\", \"wait_s\": {:.6}, \"aggregate_s\": {:.6}, \"overlap_s\": {:.6}, \"total_s\": {:.6}}}{}\n",
+                    r.pool,
+                    r.wait_s,
+                    r.aggregate_s,
+                    r.overlap_s,
+                    r.total_s,
                     if i + 1 < results.len() { "," } else { "" }
                 ));
             }

@@ -1,0 +1,50 @@
+//! Build probe: AVX-512 intrinsics support.
+//!
+//! The `core::arch::x86_64` AVX-512 intrinsics (and the matching
+//! `#[target_feature(enable = "avx512f")]`) stabilized in rustc 1.89.
+//! The crate pins an older toolchain (see `rust-toolchain.toml`), so
+//! the AVX-512 backend in `linalg/simd.rs` is compiled only when the
+//! building compiler is new enough: `fednl_avx512` is set iff
+//! `rustc --version` reports ≥ 1.89. On older compilers the runtime
+//! dispatcher simply never offers the AVX-512 tier — `FEDNL_FORCE_ISA=
+//! avx512` clamps down to AVX2 with a warning, and every test that
+//! targets the AVX-512 path skips — so one source tree builds and
+//! passes everywhere while newer toolchains get the full backend.
+
+use std::process::Command;
+
+fn main() {
+    // Re-run only when the compiler changes, not on every source edit.
+    println!("cargo:rerun-if-changed=build.rs");
+    println!("cargo:rerun-if-env-changed=RUSTC");
+    println!("cargo:rustc-check-cfg=cfg(fednl_avx512)");
+    let rustc =
+        std::env::var_os("RUSTC").unwrap_or_else(|| "rustc".into());
+    let out = match Command::new(&rustc).arg("--version").output() {
+        Ok(o) if o.status.success() => o.stdout,
+        _ => return, // unknown compiler: leave the backend off
+    };
+    let version = String::from_utf8_lossy(&out);
+    if version_at_least(&version, 1, 89) {
+        println!("cargo:rustc-cfg=fednl_avx512");
+    }
+}
+
+/// Parse "rustc 1.89.0 (…)" / "rustc 1.90.0-nightly (…)" and compare
+/// against `(major, minor)`. Unparseable strings count as too old.
+fn version_at_least(version: &str, major: u32, minor: u32) -> bool {
+    let semver = match version.split_whitespace().nth(1) {
+        Some(v) => v,
+        None => return false,
+    };
+    let mut parts = semver.split(['.', '-', '+']);
+    let maj: u32 = match parts.next().and_then(|s| s.parse().ok()) {
+        Some(v) => v,
+        None => return false,
+    };
+    let min: u32 = match parts.next().and_then(|s| s.parse().ok()) {
+        Some(v) => v,
+        None => return false,
+    };
+    maj > major || (maj == major && min >= minor)
+}

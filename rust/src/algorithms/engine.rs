@@ -68,11 +68,28 @@
 //! extending the buffer-and-commit determinism rule to lossy rounds
 //! (asserted by the fault-injection integration tests). If fewer than
 //! [`RoundPolicy::quorum`] messages commit, the engine aborts loudly.
+//!
+//! # Speculative aggregation past quorum
+//!
+//! With [`Options::speculate`] (`--speculate`), the sum path overlaps
+//! the server-side round finish with straggler draining: the moment
+//! the quorum's commits have been absorbed while some participants are
+//! still outstanding, a snapshot of the server state runs
+//! `finish_round` + `newton_direction` on a helper thread. The result
+//! is adopted **iff** the round finally closes on exactly the
+//! snapshot's commit count (every outstanding participant was
+//! certified missing) — then the snapshot equals the final state and
+//! the precomputed step is, by construction, bit for bit the step the
+//! inline path would have produced. If any straggler's sum lands after
+//! the launch, the speculation is joined and discarded and the round
+//! finishes inline. Either way the trajectory is identical to the
+//! non-speculative run; the won overlap is reported as
+//! [`Trace::overlap_secs`] (`overlap_s` in `BENCH_coordinator.json`).
 
 use std::time::Duration;
 
 use super::fednl_ls::LineSearchParams;
-use super::{ClientMsg, Options, RoundSum, ServerState};
+use super::{ClientMsg, Options, RoundSum, ServerState, UpdateRule};
 use crate::compressors::{Compressed, IndexPayload, ValueEncoding};
 use crate::coordinator::{ClientFamily, ClientPool, RoundMode};
 use crate::linalg::packed::PackedUpper;
@@ -460,6 +477,9 @@ fn run_newton_family(
     // the wait/aggregate wall-clock split reported by the coordinator
     // bench.
     let mut timing = (0.0f64, 0.0f64);
+    // The quorum threshold `check_quorum` will enforce, hoisted so the
+    // speculative path can recognize "quorum is in" mid-drain.
+    let need = rp.quorum.unwrap_or(n).min(n).max(1);
 
     if opts.warm_start {
         let x = server.x.clone();
@@ -488,9 +508,28 @@ fn run_newton_family(
         let need_loss = opts.track_loss || ls.is_some();
         pool.submit_round(&x, None, round, need_loss);
         server.begin_round();
+        // Speculative aggregation past quorum (`--speculate`, sum path
+        // only): the moment the quorum's replies have committed while
+        // stragglers are still outstanding, snapshot the server and
+        // finish the round on a helper thread. See [`Speculation`] for
+        // the adoption rule that keeps this bit-identical.
+        let mut spec: Option<Speculation> = None;
         let (committed, missing) = if sum_mode {
+            let mut committed_live = 0usize;
             drain_and_sum(pool, n, &mut bytes_up, &mut timing, |s| {
-                server.apply_sum(s)
+                committed_live += s.committed as usize;
+                server.apply_sum(s);
+                if opts.speculate
+                    && spec.is_none()
+                    && committed_live >= need
+                    && committed_live < n
+                {
+                    spec = Some(Speculation::launch(
+                        &server,
+                        committed_live,
+                        opts.rule,
+                    ));
+                }
             })
         } else {
             let mut buf = CommitBuffer::new(n, None);
@@ -505,7 +544,29 @@ fn run_newton_family(
             )
         };
         check_quorum(&rp, committed, n, round, label);
-        let (grad, loss) = server.finish_round(committed);
+        // Resolve the speculation: adoptable iff the round closed on
+        // exactly the snapshot's commit count — then nothing was
+        // absorbed after launch, the helper's finish IS the inline
+        // finish bit for bit, and its runtime is overlap we saved. A
+        // late straggler makes the snapshot stale: join, discard, and
+        // finish inline exactly as the non-speculative engine would.
+        let mut spec_dir: Option<Vec<f64>> = None;
+        let (grad, loss) = match spec.take() {
+            Some(sp) if sp.committed == committed => {
+                let res =
+                    sp.handle.join().expect("speculation thread panicked");
+                trace.overlap_secs += res.busy_secs;
+                server = res.server;
+                spec_dir = Some(res.dir);
+                (res.grad, res.loss)
+            }
+            other => {
+                if let Some(sp) = other {
+                    drop(sp.handle.join());
+                }
+                server.finish_round(committed)
+            }
+        };
         let gnorm = vector::norm2(&grad);
         let (up, down) =
             pool.transport_bytes().unwrap_or((bytes_up, bytes_down));
@@ -524,7 +585,10 @@ fn run_newton_family(
                 break;
             }
         }
-        let dir = server.newton_direction(&grad, opts.rule);
+        let dir = match spec_dir {
+            Some(dir) => dir,
+            None => server.newton_direction(&grad, opts.rule),
+        };
         match ls {
             None => {
                 // Alg. 1 line 11.
@@ -777,6 +841,61 @@ fn stale_replay(cached: &ClientMsg) -> ClientMsg {
         },
         l_i: cached.l_i,
         loss: cached.loss,
+    }
+}
+
+/// What a speculative round finish hands back: the post-finish server
+/// state, the round's reductions, the Newton direction, and how long
+/// the (overlapped) work took.
+struct SpecResult {
+    server: ServerState,
+    grad: Vec<f64>,
+    loss: Option<f64>,
+    dir: Vec<f64>,
+    busy_secs: f64,
+}
+
+/// One in-flight speculative round finish (`--speculate`).
+///
+/// At launch the engine has absorbed exactly `committed` client
+/// commits — the quorum — and is still draining stragglers. A clone of
+/// the server state runs `finish_round(committed)` plus the Newton
+/// direction on a helper thread, overlapping the server-side work of
+/// the round with the wait. The adoption rule keeps the trajectory
+/// bit-identical by construction: the result is adopted **iff** the
+/// round finally closes on exactly `committed` commits, i.e. no
+/// further sum was absorbed after the snapshot — then the snapshot
+/// equals the final server state and the helper performed the exact
+/// computation the inline path would have. Any straggler that lands
+/// after launch bumps the final count, the stale speculation is joined
+/// and discarded, and the round finishes inline as if speculation were
+/// off.
+struct Speculation {
+    /// Commit count baked into the snapshot.
+    committed: usize,
+    handle: std::thread::JoinHandle<SpecResult>,
+}
+
+impl Speculation {
+    fn launch(
+        server: &ServerState,
+        committed: usize,
+        rule: UpdateRule,
+    ) -> Self {
+        let mut snap = server.clone();
+        let handle = std::thread::spawn(move || {
+            let sw = Stopwatch::start();
+            let (grad, loss) = snap.finish_round(committed);
+            let dir = snap.newton_direction(&grad, rule);
+            SpecResult {
+                server: snap,
+                grad,
+                loss,
+                dir,
+                busy_secs: sw.elapsed_secs(),
+            }
+        });
+        Speculation { committed, handle }
     }
 }
 

@@ -56,6 +56,14 @@ pub struct Options {
     /// missing-reply policy (see [`RoundPolicy`]). The default is the
     /// strict pre-fault behavior.
     pub policy: RoundPolicy,
+    /// Speculative aggregation past quorum (`--speculate`): once the
+    /// quorum's replies have committed, a snapshot of the server state
+    /// runs the round finish + Newton direction on a helper thread
+    /// while the engine keeps draining stragglers. If no straggler
+    /// arrives, the precomputed step is adopted; if one does, the
+    /// speculation is discarded and the round finishes inline —
+    /// bit-identical to the non-speculative trajectory either way.
+    pub speculate: bool,
 }
 
 impl Default for Options {
@@ -68,6 +76,7 @@ impl Default for Options {
             track_loss: false,
             warm_start: false,
             policy: RoundPolicy::default(),
+            speculate: false,
         }
     }
 }

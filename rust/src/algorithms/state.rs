@@ -322,7 +322,11 @@ impl ClientState {
     }
 }
 
-/// Master state (Alg. 1 lines 8–11).
+/// Master state (Alg. 1 lines 8–11). `Clone` so the engine's
+/// speculative-aggregation path (`--speculate`) can run the quorum
+/// finish on a snapshot while stragglers keep draining into the
+/// original.
+#[derive(Clone)]
 pub struct ServerState {
     pub d: usize,
     pub n_clients: usize,

@@ -21,7 +21,13 @@
 //! * `delay@R:C:MS` — client C's round-R reply is withheld for MS
 //!   milliseconds (a straggler). If MS exceeds the reply deadline of
 //!   the active [`RoundPolicy`], the delay deterministically becomes a
-//!   drop — the schedule decides, not the clock.
+//!   drop — the schedule decides, not the clock. The *certificate*,
+//!   however, only lands once the deadline has elapsed from submit:
+//!   a real transport cannot know a straggler is lost until its reply
+//!   deadline expires, so the wrapper reproduces that detection
+//!   latency instead of certifying clairvoyantly. The missing set is
+//!   still schedule-decided; only the instant within the round at
+//!   which it is reported is wall-clock.
 //!
 //! Faults suppress the ROUND *delivery*: a faulted client never
 //! computes the round, so its local Hessian shift never advances and
@@ -41,6 +47,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::{ClientFamily, ClientPool, RoundMode};
 use crate::algorithms::{ClientMsg, RoundSum};
+use crate::linalg::reduce::{RepAcc, RepVec};
 
 /// One frozen interval of a client: [`from`, `until`) in rounds.
 ///
@@ -219,6 +226,10 @@ pub struct FaultPool<P: ClientPool> {
     rejoined: Vec<u32>,
     /// (client, release instant) reply holds for the round in flight.
     holds: Vec<(u32, Instant)>,
+    /// Over-deadline stragglers of the round in flight: lost by the
+    /// schedule, but certified missing only once the reply deadline
+    /// expires (client, deadline instant) — see the module docs.
+    late_certs: Vec<(u32, Instant)>,
     /// The engine's requested reply-aggregation mode.
     mode: RoundMode,
     /// Latched per round at submit: injected delays need per-message
@@ -244,6 +255,7 @@ impl<P: ClientPool> FaultPool<P> {
             missing: Vec::new(),
             rejoined: Vec::new(),
             holds: Vec::new(),
+            late_certs: Vec::new(),
             mode: RoundMode::Atoms,
             round_atoms: true,
         }
@@ -258,9 +270,33 @@ impl<P: ClientPool> FaultPool<P> {
     }
 
     /// An injected delay longer than the reply deadline is a drop —
-    /// decided by the schedule, never by the clock.
+    /// decided by the schedule, never by the clock. The certificate
+    /// lands at deadline expiry (see [`Self::flush_late_certs`]).
     fn delay_becomes_drop(&self, ms: u64) -> bool {
         self.deadline.is_some_and(|dl| Duration::from_millis(ms) > dl)
+    }
+
+    /// Block until every pending over-deadline straggler's reply
+    /// deadline has expired, then certify them missing. Called once
+    /// the inner pool has no further replies this round: a real
+    /// transport blocks on the socket until the deadline before it
+    /// deregisters a straggler, and this wait is exactly the window
+    /// the engine's speculative aggregation overlaps with server-side
+    /// work. Which clients end up missing is decided by the schedule
+    /// alone; only the reporting instant is wall-clock.
+    fn flush_late_certs(&mut self) {
+        let Some(latest) =
+            self.late_certs.iter().map(|&(_, t)| t).max()
+        else {
+            return;
+        };
+        let now = Instant::now();
+        if latest > now {
+            std::thread::sleep(latest - now);
+        }
+        for (c, _) in self.late_certs.drain(..) {
+            self.missing.push(c);
+        }
     }
 }
 
@@ -336,6 +372,7 @@ impl<P: ClientPool> ClientPool for FaultPool<P> {
             }
         };
         self.holds.clear();
+        self.late_certs.clear();
         let mut live = Vec::with_capacity(participants.len());
         for &ci in participants {
             if self.plan.dead_at(ci, round) || self.plan.dropped_at(ci, round) {
@@ -344,7 +381,8 @@ impl<P: ClientPool> ClientPool for FaultPool<P> {
             }
             if let Some(ms) = self.plan.delay_at(ci, round) {
                 if self.delay_becomes_drop(ms) {
-                    self.missing.push(ci);
+                    let dl = self.deadline.unwrap();
+                    self.late_certs.push((ci, Instant::now() + dl));
                     continue;
                 }
                 self.holds.push((ci, Instant::now() + Duration::from_millis(ms)));
@@ -370,7 +408,11 @@ impl<P: ClientPool> ClientPool for FaultPool<P> {
 
     fn drain_sums(&mut self) -> Vec<RoundSum> {
         if !self.round_atoms {
-            return self.inner.drain_sums();
+            let out = self.inner.drain_sums();
+            if out.is_empty() {
+                self.flush_late_certs();
+            }
+            return out;
         }
         // Atom fallback (delay holds in flight): enforce the holds,
         // then fold — bit-identical to the pre-reduced path.
@@ -383,6 +425,13 @@ impl<P: ClientPool> ClientPool for FaultPool<P> {
 
     fn drain(&mut self) -> Vec<ClientMsg> {
         let out = self.inner.drain();
+        if out.is_empty() {
+            // No further replies this round: serve the detection
+            // latency of any over-deadline stragglers before the
+            // engine's closing `take_missing` pass.
+            self.flush_late_certs();
+            return out;
+        }
         // Enforce injected straggler delays: hold each delayed reply
         // until its release instant. Wall-clock only — the commit order
         // and trajectory are unaffected.
@@ -405,6 +454,13 @@ impl<P: ClientPool> ClientPool for FaultPool<P> {
 
     fn loss_grad_each(&mut self, x: &[f64]) -> Vec<(u32, f64, Vec<f64>)> {
         self.inner.loss_grad_each(x)
+    }
+
+    fn loss_grad_sum(&mut self, x: &[f64]) -> (RepAcc, RepVec, u32) {
+        // Delegate so the inner tier's pre-reduction (sharded/relay)
+        // is not lost behind the fault wrapper; the probe itself is
+        // measurement-only and exempt from injection.
+        self.inner.loss_grad_sum(x)
     }
 
     fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {

@@ -92,13 +92,15 @@
 //! master's fan-in payload and fold work from O(n·d) to O(S·d) while
 //! trajectories stay **bit-identical between unsharded and sharded
 //! runs for any S** — the merged sum equals the flat sum exactly, so
-//! the invariant holds by construction. The per-client probe
-//! primitives ([`ClientPool::eval_loss_each`],
-//! [`ClientPool::loss_grad_each`]) still surface atoms (their O(n)
-//! payloads are scalar-dominated), and the provided
-//! [`ClientPool::eval_loss`] / [`ClientPool::loss_grad`] reductions
-//! fold them through the same reproducible accumulator, so their
-//! results are grouping-invariant too. The FedNL-PP round path keeps
+//! the invariant holds by construction. The first-order probe gets the
+//! same treatment: [`ClientPool::loss_grad_sum`] surfaces the exact
+//! (Σfᵢ, Σ∇fᵢ) accumulator pair, pre-reduced shard-side by the
+//! aggregating tiers (`SHARD_GRAD_SUM` on the wire — one pair per
+//! shard instead of n dense gradients), and the provided
+//! [`ClientPool::loss_grad`] rounds-and-scales it once. The scalar
+//! probe ([`ClientPool::eval_loss_each`] /
+//! [`ClientPool::eval_loss`]) still surfaces atoms — its O(n) payload
+//! is scalar-dominated. The FedNL-PP round path keeps
 //! per-client atoms on the wire: its deltas feed the engine's
 //! per-client (lᵢ, gᵢ) mirrors (rejoin resync) and its τ-subset
 //! fan-in is already sublinear — the master-side folds still run
@@ -390,23 +392,40 @@ pub trait ClientPool {
         acc.round() / parts.len() as f64
     }
 
-    /// Average (f(x), ∇f(x)) reduction — the first-order baselines'
-    /// round primitive (one d-vector per client per call). Reduced
-    /// through the reproducible accumulator like [`eval_loss`]:
-    /// exact Σ, one rounding, then the 1/n scaling — grouping- and
-    /// order-invariant on every transport.
+    /// Pre-reduced first-order probe: the exact (Σfᵢ, Σ∇fᵢ)
+    /// superaccumulator pair over the live clients, plus their count —
+    /// no rounding, no scaling. The provided method folds the
+    /// per-client atoms of [`loss_grad_each`]; aggregating tiers
+    /// override it to merge partial sums formed next to the clients
+    /// (one accumulator pair per shard on the wire instead of n dense
+    /// gradients — the `SHARD_SUM` payload cut applied to the probe
+    /// path). Exactness of the accumulator makes every override
+    /// bit-identical to this default, so [`loss_grad`] is
+    /// grouping-invariant on every topology.
     ///
-    /// [`eval_loss`]: ClientPool::eval_loss
-    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+    /// [`loss_grad_each`]: ClientPool::loss_grad_each
+    /// [`loss_grad`]: ClientPool::loss_grad
+    fn loss_grad_sum(&mut self, x: &[f64]) -> (RepAcc, RepVec, u32) {
         let parts = self.loss_grad_each(x);
-        assert!(!parts.is_empty(), "loss_grad: no live clients");
-        let inv = 1.0 / parts.len() as f64;
         let mut loss = RepAcc::new();
         let mut gsum = RepVec::new(x.len());
         for (_, l, gi) in &parts {
             loss.accumulate(*l);
             gsum.accumulate(gi);
         }
+        (loss, gsum, parts.len() as u32)
+    }
+
+    /// Average (f(x), ∇f(x)) reduction — the first-order baselines'
+    /// round primitive and the FedNL-PP convergence probe. Built on
+    /// [`loss_grad_sum`]: exact Σ, one rounding, then the 1/n scaling
+    /// — grouping- and order-invariant on every transport.
+    ///
+    /// [`loss_grad_sum`]: ClientPool::loss_grad_sum
+    fn loss_grad(&mut self, x: &[f64]) -> (f64, Vec<f64>) {
+        let (mut loss, mut gsum, count) = self.loss_grad_sum(x);
+        assert!(count > 0, "loss_grad: no live clients");
+        let inv = 1.0 / count as f64;
         let mut g = gsum.round_vec();
         for gj in g.iter_mut() {
             *gj *= inv;

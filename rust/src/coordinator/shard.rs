@@ -55,6 +55,7 @@ use std::time::{Duration, Instant};
 
 use super::{ClientFamily, ClientPool, PoolClient, SeqPool, ThreadedPool};
 use crate::algorithms::{ClientMsg, RoundSum};
+use crate::linalg::reduce::{RepAcc, RepVec};
 
 /// Per-shard accounting of one run: how long the master was blocked
 /// draining this shard, how long it spent committing this shard's
@@ -426,6 +427,23 @@ impl ClientPool for ShardedPool {
             out.extend(sh.loss_grad_each(x));
         }
         out
+    }
+
+    fn loss_grad_sum(&mut self, x: &[f64]) -> (RepAcc, RepVec, u32) {
+        // Pre-reduced probe: each shard folds its partition next to
+        // the clients and hands back one (Σf, Σ∇f) accumulator pair
+        // (`SHARD_GRAD_SUM` on the TCP relay tier); merging them is
+        // exact, so the result is bit-identical to the flat fold.
+        let mut loss = RepAcc::new();
+        let mut gsum = RepVec::new(x.len());
+        let mut count = 0u32;
+        for sh in &mut self.shards {
+            let (l, g, c) = sh.loss_grad_sum(x);
+            loss.merge(l);
+            gsum.merge(g);
+            count += c;
+        }
+        (loss, gsum, count)
     }
 
     fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {

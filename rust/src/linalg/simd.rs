@@ -5,87 +5,200 @@
 //! solvers), the symmetric rank-1 Hessian accumulate (§5.10, ×3.07),
 //! the fused sigmoid pass (§5.7, ×1.50) and the |value|²-weighted scans
 //! the sparsifying compressors run every round (§5.11). This module
-//! implements each primitive twice:
+//! implements each primitive three times:
 //!
+//! * an **AVX-512** path (`avx512`) — 8 doubles per op, compiled only
+//!   when the building rustc ships the stable AVX-512 intrinsics
+//!   (≥ 1.89, probed by `build.rs` via the `fednl_avx512` cfg) and
+//!   entered only when the CPU reports `avx512f`;
 //! * an **AVX2+FMA** path (`core::arch::x86_64` intrinsics) selected at
 //!   runtime via `is_x86_feature_detected!` — no compile-time feature
 //!   flags, so one binary runs everywhere and uses the wide units when
-//!   they exist (the portable analogue of the paper's AVX-512 build);
+//!   they exist;
 //! * a **portable scalar** path ([`scalar`]), 4-way unrolled with
 //!   independent accumulators so LLVM can autovectorize to whatever the
 //!   baseline target offers (SSE2 on x86-64, NEON on aarch64).
 //!
 //! Dispatch is resolved once per process and cached in an atomic, so a
 //! kernel call costs one relaxed load on top of the work itself.
+//! `FEDNL_FORCE_ISA={scalar,avx2,avx512}` pins the decision for CI and
+//! A/B runs (clamped to what the host and build support, with a
+//! one-time warning); `FEDNL_FORCE_SCALAR=1` stays as a back-compat
+//! alias for `FEDNL_FORCE_ISA=scalar`.
 //!
 //! **Determinism contract:** for a fixed ISA decision every kernel
 //! reduces in a fixed order (fixed lane count, fixed accumulator tree),
 //! so repeated runs on the same machine produce bit-identical results —
 //! the property [`crate::coordinator::ThreadedPool`] relies on for
-//! bit-reproducible trajectories. The AVX2 and scalar paths may differ
-//! from each other by normal floating-point reassociation (tests bound
-//! this by an n·ε-scaled tolerance), but each path is individually
-//! deterministic.
+//! bit-reproducible trajectories. The AVX-512 path is constructed to be
+//! **bit-identical to AVX2** for every kernel: its 512-bit accumulators
+//! are lane-concatenations of AVX2's 256-bit accumulator pairs, its
+//! reductions extract those halves and finish with the AVX2 combine
+//! tree, and its FMA coverage matches AVX2's element for element (an
+//! 8-wide loop, one 4-wide step, then the same scalar tail). Enabling
+//! the wider tier therefore never changes a trajectory; only
+//! scalar ↔ vector moves reassociate (tests bound this by an n·ε-scaled
+//! tolerance). Integer kernels ([`binned_accumulate`]) are exact and
+//! bit-identical across **all** tiers.
+//!
+//! **Sigmoid accuracy budget:** [`sigmoid_neg_scan`] evaluates σ(−z)
+//! with a branch-free polynomial exp (the fdlibm reduction, plain
+//! mul/add/sub/div only — no FMA — so every tier computes the same
+//! rounding sequence). Design target: ≤ 2 ulp against the true σ;
+//! tests assert ≤ 3 ulp against the libm reference on [−40, 40] and
+//! ≤ 4 ulp over the full range, plus exact saturation (σ(x ≤ −746) = 0,
+//! σ(x ≥ 746) = 1, σ(±0) = ½ exactly). The polynomial output is
+//! per-element bit-identical across all three tiers. `FEDNL_EXACT_EXP=1`
+//! routes the scan through libm ([`sigmoid_exact`]) instead, which
+//! reproduces the pre-polynomial bitstream for determinism suites.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
 const ISA_UNKNOWN: u8 = 0;
 const ISA_SCALAR: u8 = 1;
 const ISA_AVX2: u8 = 2;
+const ISA_AVX512: u8 = 3;
 
 static ISA: AtomicU8 = AtomicU8::new(ISA_UNKNOWN);
 
-/// CI / debugging override: `FEDNL_FORCE_SCALAR=1` (any value other
-/// than `0` / empty) pins the dispatcher to the portable scalar path
-/// even on AVX2 hosts, so both ISA paths get exercised on every PR.
-fn force_scalar_env() -> bool {
+/// CI / debugging override: `FEDNL_FORCE_ISA={scalar,avx2,avx512}` pins
+/// the dispatcher to one tier so every ISA path gets exercised on every
+/// PR regardless of the host. An empty/whitespace value counts as
+/// unset; an unknown value panics (a typo must never silently fall back
+/// to autodetect). `FEDNL_FORCE_SCALAR=1` (any value other than `0`)
+/// remains as an alias for `FEDNL_FORCE_ISA=scalar`.
+fn forced_isa() -> Option<u8> {
+    if let Some(v) = std::env::var_os("FEDNL_FORCE_ISA") {
+        let v = v.to_string_lossy();
+        let v = v.trim();
+        if !v.is_empty() {
+            return Some(match v {
+                "scalar" => ISA_SCALAR,
+                "avx2" => ISA_AVX2,
+                "avx512" => ISA_AVX512,
+                other => panic!(
+                    "FEDNL_FORCE_ISA={other:?}: expected scalar | avx2 \
+                     | avx512"
+                ),
+            });
+        }
+    }
     match std::env::var_os("FEDNL_FORCE_SCALAR") {
-        Some(v) => !v.is_empty() && v != "0",
-        None => false,
+        Some(v) if !v.is_empty() && v != "0" => Some(ISA_SCALAR),
+        _ => None,
     }
 }
 
 #[cold]
 fn detect() -> u8 {
-    let isa = if force_scalar_env() {
-        ISA_SCALAR
-    } else {
-        detect_hw()
+    let hw = detect_hw();
+    let isa = match forced_isa() {
+        Some(want) => {
+            if want > hw {
+                // One-time (detection is cached): forcing a tier the
+                // host or build can't run clamps instead of crashing,
+                // so `FEDNL_FORCE_ISA=avx512` is safe everywhere.
+                eprintln!(
+                    "fednl: FEDNL_FORCE_ISA wants {} but this \
+                     host/build supports at most {}; clamping",
+                    tier_name(want),
+                    tier_name(hw)
+                );
+            }
+            want.min(hw)
+        }
+        None => hw,
     };
     ISA.store(isa, Ordering::Relaxed);
     isa
 }
 
+fn tier_name(isa: u8) -> &'static str {
+    match isa {
+        ISA_AVX512 => "avx512",
+        ISA_AVX2 => "avx2",
+        _ => "scalar",
+    }
+}
+
+/// Host CPU can run the AVX2+FMA tier.
 #[cfg(target_arch = "x86_64")]
+fn hw_avx2() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn hw_avx2() -> bool {
+    false
+}
+
+/// Host CPU can run the AVX-512 tier *and* this build compiled it (the
+/// intrinsics need rustc ≥ 1.89; see `build.rs`).
+#[cfg(all(target_arch = "x86_64", fednl_avx512))]
+fn hw_avx512() -> bool {
+    hw_avx2() && is_x86_feature_detected!("avx512f")
+}
+
+#[cfg(not(all(target_arch = "x86_64", fednl_avx512)))]
+fn hw_avx512() -> bool {
+    false
+}
+
 fn detect_hw() -> u8 {
-    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+    if hw_avx512() {
+        ISA_AVX512
+    } else if hw_avx2() {
         ISA_AVX2
     } else {
         ISA_SCALAR
     }
 }
 
-#[cfg(not(target_arch = "x86_64"))]
-fn detect_hw() -> u8 {
-    ISA_SCALAR
-}
-
 #[inline(always)]
-fn use_avx2() -> bool {
+fn isa() -> u8 {
     let isa = ISA.load(Ordering::Relaxed);
     if isa == ISA_UNKNOWN {
-        return detect() == ISA_AVX2;
+        return detect();
     }
-    isa == ISA_AVX2
+    isa
 }
 
-/// Name of the dispatched instruction set ("avx2" or "scalar") — used
-/// by benches and `BENCH_kernels.json`.
+/// Name of the dispatched instruction set ("avx512", "avx2" or
+/// "scalar") — used by benches and `BENCH_kernels.json`.
 pub fn isa_name() -> &'static str {
-    if use_avx2() {
-        "avx2"
-    } else {
-        "scalar"
+    tier_name(isa())
+}
+
+/// An explicitly pinnable kernel tier — tests and benches iterate
+/// [`Isa::ALL`], skip tiers where [`isa_available`] is false, and call
+/// the `*_on` kernel variants to compare paths on one host.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    Scalar,
+    Avx2,
+    Avx512,
+}
+
+impl Isa {
+    pub const ALL: [Isa; 3] = [Isa::Scalar, Isa::Avx2, Isa::Avx512];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+        }
+    }
+}
+
+/// Whether `which` can execute on this host and build. Scalar is always
+/// available; AVX-512 additionally requires a compiler new enough to
+/// ship the intrinsics (`fednl_avx512`, see `build.rs`).
+pub fn isa_available(which: Isa) -> bool {
+    match which {
+        Isa::Scalar => true,
+        Isa::Avx2 => hw_avx2(),
+        Isa::Avx512 => hw_avx512(),
     }
 }
 
@@ -96,12 +209,15 @@ pub fn isa_name() -> &'static str {
 /// Dot product `Σ a_i·b_i`.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    // Release-mode check: the AVX2 path does raw loads sized by `a`.
+    // Release-mode check: the vector paths do raw loads sized by `a`.
     assert_eq!(a.len(), b.len());
     #[cfg(target_arch = "x86_64")]
     {
-        if use_avx2() {
-            return unsafe { avx2::dot(a, b) };
+        match isa() {
+            #[cfg(fednl_avx512)]
+            ISA_AVX512 => return unsafe { avx512::dot(a, b) },
+            ISA_AVX2 => return unsafe { avx2::dot(a, b) },
+            _ => {}
         }
     }
     scalar::dot(a, b)
@@ -110,13 +226,15 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
 /// `y += alpha * x` (AXPY).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
-    // Release-mode check: the AVX2 path does raw stores sized by `x`.
+    // Release-mode check: the vector paths do raw stores sized by `x`.
     assert_eq!(x.len(), y.len());
     #[cfg(target_arch = "x86_64")]
     {
-        if use_avx2() {
-            unsafe { avx2::axpy(alpha, x, y) };
-            return;
+        match isa() {
+            #[cfg(fednl_avx512)]
+            ISA_AVX512 => return unsafe { avx512::axpy(alpha, x, y) },
+            ISA_AVX2 => return unsafe { avx2::axpy(alpha, x, y) },
+            _ => {}
         }
     }
     scalar::axpy(alpha, x, y)
@@ -134,9 +252,13 @@ pub fn add_scaled(a: &[f64], alpha: f64, b: &[f64], out: &mut [f64]) {
     assert!(a.len() == b.len() && b.len() == out.len());
     #[cfg(target_arch = "x86_64")]
     {
-        if use_avx2() {
-            unsafe { avx2::add_scaled(a, alpha, b, out) };
-            return;
+        match isa() {
+            #[cfg(fednl_avx512)]
+            ISA_AVX512 => {
+                return unsafe { avx512::add_scaled(a, alpha, b, out) }
+            }
+            ISA_AVX2 => return unsafe { avx2::add_scaled(a, alpha, b, out) },
+            _ => {}
         }
     }
     scalar::add_scaled(a, alpha, b, out)
@@ -147,8 +269,11 @@ pub fn add_scaled(a: &[f64], alpha: f64, b: &[f64], out: &mut [f64]) {
 pub fn abs_max(x: &[f64]) -> f64 {
     #[cfg(target_arch = "x86_64")]
     {
-        if use_avx2() {
-            return unsafe { avx2::abs_max(x) };
+        match isa() {
+            #[cfg(fednl_avx512)]
+            ISA_AVX512 => return unsafe { avx512::abs_max(x) },
+            ISA_AVX2 => return unsafe { avx2::abs_max(x) },
+            _ => {}
         }
     }
     scalar::abs_max(x)
@@ -162,9 +287,11 @@ pub fn energy_scan(w: &[f64], v: &[f64], out: &mut [f64]) {
     assert!(w.len() == v.len() && v.len() == out.len());
     #[cfg(target_arch = "x86_64")]
     {
-        if use_avx2() {
-            unsafe { avx2::energy_scan(w, v, out) };
-            return;
+        match isa() {
+            #[cfg(fednl_avx512)]
+            ISA_AVX512 => return unsafe { avx512::energy_scan(w, v, out) },
+            ISA_AVX2 => return unsafe { avx2::energy_scan(w, v, out) },
+            _ => {}
         }
     }
     scalar::energy_scan(w, v, out)
@@ -176,8 +303,11 @@ pub fn weighted_norm2_sq(w: &[f64], v: &[f64]) -> f64 {
     assert_eq!(w.len(), v.len());
     #[cfg(target_arch = "x86_64")]
     {
-        if use_avx2() {
-            return unsafe { avx2::weighted_norm2_sq(w, v) };
+        match isa() {
+            #[cfg(fednl_avx512)]
+            ISA_AVX512 => return unsafe { avx512::weighted_norm2_sq(w, v) },
+            ISA_AVX2 => return unsafe { avx2::weighted_norm2_sq(w, v) },
+            _ => {}
         }
     }
     scalar::weighted_norm2_sq(w, v)
@@ -190,9 +320,17 @@ pub fn sigmoid_variance_scan(s: &[f64], scale: f64, out: &mut [f64]) {
     assert_eq!(s.len(), out.len());
     #[cfg(target_arch = "x86_64")]
     {
-        if use_avx2() {
-            unsafe { avx2::sigmoid_variance_scan(s, scale, out) };
-            return;
+        match isa() {
+            #[cfg(fednl_avx512)]
+            ISA_AVX512 => {
+                return unsafe {
+                    avx512::sigmoid_variance_scan(s, scale, out)
+                }
+            }
+            ISA_AVX2 => {
+                return unsafe { avx2::sigmoid_variance_scan(s, scale, out) }
+            }
+            _ => {}
         }
     }
     scalar::sigmoid_variance_scan(s, scale, out)
@@ -234,9 +372,19 @@ pub fn sym_rank1_upper_rows(
     assert!(samples.iter().all(|s| s.len() == d));
     #[cfg(target_arch = "x86_64")]
     {
-        if use_avx2() {
-            unsafe { avx2::sym_rank1_upper_rows(block, d, u0, u1, samples, h) };
-            return;
+        match isa() {
+            #[cfg(fednl_avx512)]
+            ISA_AVX512 => {
+                return unsafe {
+                    avx512::sym_rank1_upper_rows(block, d, u0, u1, samples, h)
+                }
+            }
+            ISA_AVX2 => {
+                return unsafe {
+                    avx2::sym_rank1_upper_rows(block, d, u0, u1, samples, h)
+                }
+            }
+            _ => {}
         }
     }
     scalar::sym_rank1_upper_rows(block, d, u0, u1, samples, h)
@@ -337,8 +485,13 @@ pub fn binned_accumulate(
 ) -> u8 {
     #[cfg(target_arch = "x86_64")]
     {
-        if use_avx2() {
-            return unsafe { avx2::binned_accumulate(limbs, xs) };
+        match isa() {
+            #[cfg(fednl_avx512)]
+            ISA_AVX512 => {
+                return unsafe { avx512::binned_accumulate(limbs, xs) }
+            }
+            ISA_AVX2 => return unsafe { avx2::binned_accumulate(limbs, xs) },
+            _ => {}
         }
     }
     scalar::binned_accumulate(limbs, xs)
@@ -365,6 +518,350 @@ pub fn gather_window(
     let first = (n - start).min(k);
     out.extend_from_slice(&src[start..start + first]);
     out.extend_from_slice(&src[..k - first]);
+}
+
+// ---------------------------------------------------------------------
+// Vectorized sigmoid (polynomial exp with a tested accuracy budget).
+// ---------------------------------------------------------------------
+
+/// Exact-path sigmoid σ(x) = 1/(1+e⁻ˣ) via libm `exp` — the historical
+/// bitstream. [`crate::oracle::sigmoid`] forwards here; the fused scan
+/// falls back to it under `FEDNL_EXACT_EXP=1`.
+#[inline]
+pub fn sigmoid_exact(x: f64) -> f64 {
+    if x >= 0.0 {
+        let e = (-x).exp();
+        1.0 / (1.0 + e)
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+// fdlibm e_exp.c reduction constants: x = k·ln2 + r, |r| ≤ ln2/2, with
+// ln2 split hi/lo so `k·LN2_HI` is exact for the k range used here.
+// Defined by bit pattern — the hi/lo-split exactness argument depends
+// on these exact doubles, not on a decimal approximation of them.
+/// 1.44269504088896338700e0 (1/ln2).
+const EXP_INV_LN2: f64 = f64::from_bits(0x3FF71547652B82FE);
+/// 6.93147180369123816490e-1 (ln2 high part, 20 trailing zero bits).
+const EXP_LN2_HI: f64 = f64::from_bits(0x3FE62E42FEE00000);
+/// 1.90821492927058770002e-10 (ln2 low part).
+const EXP_LN2_LO: f64 = f64::from_bits(0x3DEA39EF35793C76);
+// Minimax coefficients for the fdlibm core polynomial on |r| ≤ ln2/2.
+/// 1.66666666666666019037e-1.
+const EXP_P1: f64 = f64::from_bits(0x3FC555555555553E);
+/// -2.77777777770155933842e-3.
+const EXP_P2: f64 = f64::from_bits(0xBF66C16C16BEBD93);
+/// 6.61375632143793436117e-5.
+const EXP_P3: f64 = f64::from_bits(0x3F11566AAF25DE2C);
+/// -1.65339022054652515390e-6.
+const EXP_P4: f64 = f64::from_bits(0xBEBBBD41C5D26BF1);
+/// 4.13813679705723846039e-8.
+const EXP_P5: f64 = f64::from_bits(0x3E66376972BEA4D0);
+// exp(−746) underflows to zero even through the subnormal range;
+// clamping the reduced argument here keeps `k` in a range where the
+// two-step scaling below cannot overflow an exponent field.
+const SIG_ARG_MIN: f64 = -746.0;
+
+/// 2^k for k ∈ [−1022, 1023] by direct exponent-field construction.
+#[inline]
+fn pow2i(k: i32) -> f64 {
+    f64::from_bits((((k + 1023) as i64) as u64) << 52)
+}
+
+/// Polynomial-path sigmoid, the scalar reference every vector lane
+/// mirrors operation for operation (plain mul/add/sub/div, no FMA):
+/// computes e = exp(−|x|) via the fdlibm reduction, then σ(x) as
+/// 1/(1+e) or e/(1+e) by sign. Public so tests can assert the ulp
+/// budget and cross-tier bit-identity directly.
+#[inline]
+pub fn sigmoid_poly(x: f64) -> f64 {
+    let ax = -x.abs();
+    // NaN passes the comparison path unclamped and poisons the result.
+    let a = if ax < SIG_ARG_MIN { SIG_ARG_MIN } else { ax };
+    let k = (a * EXP_INV_LN2).round_ties_even() as i32;
+    let kd = k as f64;
+    let hi = a - kd * EXP_LN2_HI;
+    let lo = kd * EXP_LN2_LO;
+    let r = hi - lo;
+    let t = r * r;
+    let c = r - t
+        * (EXP_P1 + t * (EXP_P2 + t * (EXP_P3 + t * (EXP_P4 + t * EXP_P5))));
+    let y = 1.0 - ((lo - (r * c) / (2.0 - c)) - hi);
+    // Two-step 2^k scaling: k ∈ [−1076, 0], each half ∈ [−538, 0] is a
+    // normal power of two, and the first multiply is exact.
+    let k1 = k >> 1;
+    let k2 = k - k1;
+    let e = (y * pow2i(k1)) * pow2i(k2);
+    let num = if x >= 0.0 { 1.0 } else { e };
+    num / (1.0 + e)
+}
+
+const EXACT_UNKNOWN: u8 = 0;
+const EXACT_LIBM: u8 = 1;
+const EXACT_POLY: u8 = 2;
+
+static EXACT_EXP: AtomicU8 = AtomicU8::new(EXACT_UNKNOWN);
+
+/// Latched `FEDNL_EXACT_EXP` check: non-empty, non-`0` routes the fused
+/// sigmoid scan through libm `exp` (the pre-polynomial bitstream).
+fn exact_exp() -> bool {
+    match EXACT_EXP.load(Ordering::Relaxed) {
+        EXACT_LIBM => true,
+        EXACT_POLY => false,
+        _ => {
+            let exact = match std::env::var_os("FEDNL_EXACT_EXP") {
+                Some(v) => !v.is_empty() && v != "0",
+                None => false,
+            };
+            EXACT_EXP.store(
+                if exact { EXACT_LIBM } else { EXACT_POLY },
+                Ordering::Relaxed,
+            );
+            exact
+        }
+    }
+}
+
+/// Fused sigmoid scan `out[i] = σ(−z[i])` — the oracle's per-sample
+/// pass (§5.7) with the margin sign folded in. Polynomial path by
+/// default (accuracy budget in the module docs, asserted by
+/// `tests/simd_kernels.rs`); `FEDNL_EXACT_EXP=1` switches to libm.
+#[inline]
+pub fn sigmoid_neg_scan(z: &[f64], out: &mut [f64]) {
+    assert_eq!(z.len(), out.len());
+    if exact_exp() {
+        for (o, &zi) in out.iter_mut().zip(z.iter()) {
+            *o = sigmoid_exact(-zi);
+        }
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        match isa() {
+            #[cfg(fednl_avx512)]
+            ISA_AVX512 => return unsafe { avx512::sigmoid_neg_scan(z, out) },
+            ISA_AVX2 => return unsafe { avx2::sigmoid_neg_scan(z, out) },
+            _ => {}
+        }
+    }
+    scalar::sigmoid_neg_scan(z, out)
+}
+
+// ---------------------------------------------------------------------
+// Pinned-tier kernel variants (tests / benches).
+// ---------------------------------------------------------------------
+//
+// Each `*_on` runs the kernel on an explicit [`Isa`] tier instead of
+// the dispatched one. Callers must check [`isa_available`] first; the
+// wrappers assert it (running AVX code on a host without it is UB, not
+// a wrong answer).
+
+macro_rules! assert_isa {
+    ($which:expr) => {
+        assert!(
+            isa_available($which),
+            "{} not available on this host/build",
+            $which.name()
+        );
+    };
+}
+
+/// [`dot`] pinned to `which`.
+pub fn dot_on(which: Isa, a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert_isa!(which);
+    match which {
+        Isa::Scalar => scalar::dot(a, b),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::dot(a, b) },
+        #[cfg(all(target_arch = "x86_64", fednl_avx512))]
+        Isa::Avx512 => unsafe { avx512::dot(a, b) },
+        #[allow(unreachable_patterns)]
+        _ => unreachable!(),
+    }
+}
+
+/// [`axpy`] pinned to `which`.
+pub fn axpy_on(which: Isa, alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    assert_isa!(which);
+    match which {
+        Isa::Scalar => scalar::axpy(alpha, x, y),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::axpy(alpha, x, y) },
+        #[cfg(all(target_arch = "x86_64", fednl_avx512))]
+        Isa::Avx512 => unsafe { avx512::axpy(alpha, x, y) },
+        #[allow(unreachable_patterns)]
+        _ => unreachable!(),
+    }
+}
+
+/// [`add_scaled`] pinned to `which`.
+pub fn add_scaled_on(
+    which: Isa,
+    a: &[f64],
+    alpha: f64,
+    b: &[f64],
+    out: &mut [f64],
+) {
+    assert!(a.len() == b.len() && b.len() == out.len());
+    assert_isa!(which);
+    match which {
+        Isa::Scalar => scalar::add_scaled(a, alpha, b, out),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::add_scaled(a, alpha, b, out) },
+        #[cfg(all(target_arch = "x86_64", fednl_avx512))]
+        Isa::Avx512 => unsafe { avx512::add_scaled(a, alpha, b, out) },
+        #[allow(unreachable_patterns)]
+        _ => unreachable!(),
+    }
+}
+
+/// [`abs_max`] pinned to `which`.
+pub fn abs_max_on(which: Isa, x: &[f64]) -> f64 {
+    assert_isa!(which);
+    match which {
+        Isa::Scalar => scalar::abs_max(x),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::abs_max(x) },
+        #[cfg(all(target_arch = "x86_64", fednl_avx512))]
+        Isa::Avx512 => unsafe { avx512::abs_max(x) },
+        #[allow(unreachable_patterns)]
+        _ => unreachable!(),
+    }
+}
+
+/// [`energy_scan`] pinned to `which`.
+pub fn energy_scan_on(which: Isa, w: &[f64], v: &[f64], out: &mut [f64]) {
+    assert!(w.len() == v.len() && v.len() == out.len());
+    assert_isa!(which);
+    match which {
+        Isa::Scalar => scalar::energy_scan(w, v, out),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::energy_scan(w, v, out) },
+        #[cfg(all(target_arch = "x86_64", fednl_avx512))]
+        Isa::Avx512 => unsafe { avx512::energy_scan(w, v, out) },
+        #[allow(unreachable_patterns)]
+        _ => unreachable!(),
+    }
+}
+
+/// [`weighted_norm2_sq`] pinned to `which`.
+pub fn weighted_norm2_sq_on(which: Isa, w: &[f64], v: &[f64]) -> f64 {
+    assert_eq!(w.len(), v.len());
+    assert_isa!(which);
+    match which {
+        Isa::Scalar => scalar::weighted_norm2_sq(w, v),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::weighted_norm2_sq(w, v) },
+        #[cfg(all(target_arch = "x86_64", fednl_avx512))]
+        Isa::Avx512 => unsafe { avx512::weighted_norm2_sq(w, v) },
+        #[allow(unreachable_patterns)]
+        _ => unreachable!(),
+    }
+}
+
+/// [`sigmoid_variance_scan`] pinned to `which`.
+pub fn sigmoid_variance_scan_on(
+    which: Isa,
+    s: &[f64],
+    scale: f64,
+    out: &mut [f64],
+) {
+    assert_eq!(s.len(), out.len());
+    assert_isa!(which);
+    match which {
+        Isa::Scalar => scalar::sigmoid_variance_scan(s, scale, out),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::sigmoid_variance_scan(s, scale, out) },
+        #[cfg(all(target_arch = "x86_64", fednl_avx512))]
+        Isa::Avx512 => unsafe {
+            avx512::sigmoid_variance_scan(s, scale, out)
+        },
+        #[allow(unreachable_patterns)]
+        _ => unreachable!(),
+    }
+}
+
+/// [`sym_rank1_upper`] pinned to `which` (full-matrix rows `0..d`).
+pub fn sym_rank1_upper_on(
+    which: Isa,
+    data: &mut [f64],
+    d: usize,
+    samples: &[&[f64]],
+    h: &[f64],
+) {
+    assert_eq!(data.len(), d * d);
+    sym_rank1_upper_rows_on(which, data, d, 0, d, samples, h)
+}
+
+/// [`sym_rank1_upper_rows`] pinned to `which`.
+pub fn sym_rank1_upper_rows_on(
+    which: Isa,
+    block: &mut [f64],
+    d: usize,
+    u0: usize,
+    u1: usize,
+    samples: &[&[f64]],
+    h: &[f64],
+) {
+    assert!(u0 <= u1 && u1 <= d);
+    assert_eq!(block.len(), (u1 - u0) * d);
+    assert_eq!(samples.len(), h.len());
+    assert!(samples.iter().all(|s| s.len() == d));
+    assert_isa!(which);
+    match which {
+        Isa::Scalar => {
+            scalar::sym_rank1_upper_rows(block, d, u0, u1, samples, h)
+        }
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            avx2::sym_rank1_upper_rows(block, d, u0, u1, samples, h)
+        },
+        #[cfg(all(target_arch = "x86_64", fednl_avx512))]
+        Isa::Avx512 => unsafe {
+            avx512::sym_rank1_upper_rows(block, d, u0, u1, samples, h)
+        },
+        #[allow(unreachable_patterns)]
+        _ => unreachable!(),
+    }
+}
+
+/// [`binned_accumulate`] pinned to `which` (limb-identical across all
+/// tiers — the property `tests/reduce_props.rs` asserts).
+pub fn binned_accumulate_on(
+    which: Isa,
+    limbs: &mut [i64; super::reduce::LIMBS],
+    xs: &[f64],
+) -> u8 {
+    assert_isa!(which);
+    match which {
+        Isa::Scalar => scalar::binned_accumulate(limbs, xs),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::binned_accumulate(limbs, xs) },
+        #[cfg(all(target_arch = "x86_64", fednl_avx512))]
+        Isa::Avx512 => unsafe { avx512::binned_accumulate(limbs, xs) },
+        #[allow(unreachable_patterns)]
+        _ => unreachable!(),
+    }
+}
+
+/// Polynomial-path [`sigmoid_neg_scan`] pinned to `which` (ignores the
+/// `FEDNL_EXACT_EXP` latch — tests compare tiers directly).
+pub fn sigmoid_neg_scan_on(which: Isa, z: &[f64], out: &mut [f64]) {
+    assert_eq!(z.len(), out.len());
+    assert_isa!(which);
+    match which {
+        Isa::Scalar => scalar::sigmoid_neg_scan(z, out),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::sigmoid_neg_scan(z, out) },
+        #[cfg(all(target_arch = "x86_64", fednl_avx512))]
+        Isa::Avx512 => unsafe { avx512::sigmoid_neg_scan(z, out) },
+        #[allow(unreachable_patterns)]
+        _ => unreachable!(),
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -450,6 +947,16 @@ pub mod scalar {
     pub fn sigmoid_variance_scan(s: &[f64], scale: f64, out: &mut [f64]) {
         for i in 0..s.len() {
             out[i] = scale * (s[i] * (1.0 - s[i]));
+        }
+    }
+
+    /// `out_i = σ(−z_i)`, polynomial path (see [`super::sigmoid_poly`]
+    /// — the per-element reference the vector tiers reproduce bit for
+    /// bit).
+    #[inline]
+    pub fn sigmoid_neg_scan(z: &[f64], out: &mut [f64]) {
+        for i in 0..z.len() {
+            out[i] = super::sigmoid_poly(-z[i]);
         }
     }
 
@@ -788,23 +1295,115 @@ mod avx2 {
         }
     }
 
-    /// Bulk superaccumulate, AVX2-assisted: the (exponent, mantissa,
-    /// sign) decompose of 4 lanes runs on the integer units, the limb
-    /// scatter stays scalar (it is a data-dependent 3-limb add). The
+    /// `out_i = σ(−z_i)`: 4-lane mirror of [`super::sigmoid_poly`] —
+    /// the identical mul/add/sub/div sequence per element (no FMA), so
+    /// every lane is bit-identical to the scalar reference.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn sigmoid_neg_scan(z: &[f64], out: &mut [f64]) {
+        let n = z.len();
+        let pz = z.as_ptr();
+        let po = out.as_mut_ptr();
+        let sign = _mm256_set1_pd(-0.0);
+        let arg_min = _mm256_set1_pd(super::SIG_ARG_MIN);
+        let inv_ln2 = _mm256_set1_pd(super::EXP_INV_LN2);
+        let ln2_hi = _mm256_set1_pd(super::EXP_LN2_HI);
+        let ln2_lo = _mm256_set1_pd(super::EXP_LN2_LO);
+        let p1 = _mm256_set1_pd(super::EXP_P1);
+        let p2 = _mm256_set1_pd(super::EXP_P2);
+        let p3 = _mm256_set1_pd(super::EXP_P3);
+        let p4 = _mm256_set1_pd(super::EXP_P4);
+        let p5 = _mm256_set1_pd(super::EXP_P5);
+        let one = _mm256_set1_pd(1.0);
+        let two = _mm256_set1_pd(2.0);
+        let zero = _mm256_setzero_pd();
+        let exp_bias = _mm256_set1_epi64x(1023);
+        let mut i = 0;
+        while i + 4 <= n {
+            let zv = _mm256_loadu_pd(pz.add(i));
+            // x = −z; a = clamp(−|x|): −|x| = −|z| is the sign-OR of z
+            // (the same single bit op as scalar `-x.abs()`), and MAXPD
+            // returns its *second* operand on NaN, so NaN stays NaN —
+            // exactly the scalar `if ax < MIN { MIN } else { ax }`.
+            let ax = _mm256_or_pd(sign, zv);
+            let a = _mm256_max_pd(arg_min, ax);
+            // k = round_ties_even(a / ln2): CVTPD2DQ rounds to nearest
+            // even under the default MXCSR, matching the scalar cast.
+            let k = _mm256_cvtpd_epi32(_mm256_mul_pd(a, inv_ln2));
+            let kd = _mm256_cvtepi32_pd(k);
+            let hi = _mm256_sub_pd(a, _mm256_mul_pd(kd, ln2_hi));
+            let lo = _mm256_mul_pd(kd, ln2_lo);
+            let r = _mm256_sub_pd(hi, lo);
+            let t = _mm256_mul_pd(r, r);
+            // Horner chain with plain mul/add — rounding for rounding
+            // the scalar reference.
+            let mut p = _mm256_add_pd(p4, _mm256_mul_pd(t, p5));
+            p = _mm256_add_pd(p3, _mm256_mul_pd(t, p));
+            p = _mm256_add_pd(p2, _mm256_mul_pd(t, p));
+            p = _mm256_add_pd(p1, _mm256_mul_pd(t, p));
+            let c = _mm256_sub_pd(r, _mm256_mul_pd(t, p));
+            let q = _mm256_div_pd(
+                _mm256_mul_pd(r, c),
+                _mm256_sub_pd(two, c),
+            );
+            let y = _mm256_sub_pd(
+                one,
+                _mm256_sub_pd(_mm256_sub_pd(lo, q), hi),
+            );
+            // e = (y · 2^(k/2)) · 2^(k−k/2): each factor is a normal
+            // power of two built directly in the exponent field.
+            let k1 = _mm_srai_epi32::<1>(k);
+            let k2 = _mm_sub_epi32(k, k1);
+            let s1 = _mm256_castsi256_pd(_mm256_slli_epi64::<52>(
+                _mm256_add_epi64(_mm256_cvtepi32_epi64(k1), exp_bias),
+            ));
+            let s2 = _mm256_castsi256_pd(_mm256_slli_epi64::<52>(
+                _mm256_add_epi64(_mm256_cvtepi32_epi64(k2), exp_bias),
+            ));
+            let e = _mm256_mul_pd(_mm256_mul_pd(y, s1), s2);
+            // num = 1 where x = −z ≥ 0 ⇔ z ≤ 0 (ordered compare: a NaN
+            // lane selects e, like the scalar branch).
+            let num = _mm256_blendv_pd(
+                e,
+                one,
+                _mm256_cmp_pd::<_CMP_LE_OQ>(zv, zero),
+            );
+            _mm256_storeu_pd(
+                po.add(i),
+                _mm256_div_pd(num, _mm256_add_pd(one, e)),
+            );
+            i += 4;
+        }
+        while i < n {
+            out[i] = super::sigmoid_poly(-z[i]);
+            i += 1;
+        }
+    }
+
+    /// Bulk superaccumulate with a **vectorized limb scatter**: the
+    /// (exponent, mantissa, sign) decompose *and* the 3-chunk limb
+    /// split of 4 lanes run on the integer units; only the final
+    /// indexed adds stay scalar (data-dependent addresses). All
     /// arithmetic is integer-exact, so the result is **bit-identical**
-    /// to `scalar::binned_accumulate` — only throughput differs.
+    /// to `scalar::binned_accumulate` — only throughput differs. A
+    /// group containing a non-finite lane falls back to the scalar
+    /// slow path for the whole group (safe: integer limb adds
+    /// commute, so group-internal order is irrelevant).
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn binned_accumulate(
         limbs: &mut [i64; crate::linalg::reduce::LIMBS],
         xs: &[f64],
     ) -> u8 {
-        use crate::linalg::reduce::{
-            accumulate_one, add_mantissa, propagate_limbs,
-        };
+        use crate::linalg::reduce::{accumulate_one, propagate_limbs};
         let mut special = 0u8;
         let exp_mask = _mm256_set1_epi64x(0x7ff);
         let frac_mask = _mm256_set1_epi64x((1i64 << 52) - 1);
         let implicit = _mm256_set1_epi64x(1i64 << 52);
+        let one = _mm256_set1_epi64x(1);
+        // exp.max(1) − 1075 + OFFSET_BIAS = exp.max(1) + 13.
+        let bias = _mm256_set1_epi64x(13);
+        let low32 = _mm256_set1_epi64x(0xFFFF_FFFF);
+        let sh_max = _mm256_set1_epi64x(63);
+        let five_bits = _mm256_set1_epi64x(31);
         let zero = _mm256_setzero_si256();
         for chunk in xs.chunks(super::BINNED_CHUNK) {
             let n = chunk.len();
@@ -817,44 +1416,82 @@ mod avx2 {
                     _mm256_srli_epi64::<52>(b),
                     exp_mask,
                 );
+                // Non-finite lanes (exp == 0x7ff): the scalar slow
+                // path owns the special semantics for the group.
+                let is_special = _mm256_cmpeq_epi64(exp, exp_mask);
+                if _mm256_movemask_pd(_mm256_castsi256_pd(is_special))
+                    != 0
+                {
+                    for lane in 0..4 {
+                        special |=
+                            accumulate_one(limbs, chunk[i + lane]);
+                    }
+                    i += 4;
+                    continue;
+                }
                 let frac = _mm256_and_si256(b, frac_mask);
-                // Subnormal lanes (exp == 0) carry no implicit bit.
+                // Subnormal lanes (exp == 0) carry no implicit bit and
+                // use the exp = 1 scale; ±0 flows through the vector
+                // path as an all-zero scatter — limb-identical to the
+                // scalar early return.
                 let is_sub = _mm256_cmpeq_epi64(exp, zero);
                 let mant = _mm256_or_si256(
                     frac,
                     _mm256_andnot_si256(is_sub, implicit),
                 );
-                let sign = _mm256_srli_epi64::<63>(b);
-                let mut mant_a = [0i64; 4];
-                let mut exp_a = [0i64; 4];
-                let mut sign_a = [0i64; 4];
-                _mm256_storeu_si256(
-                    mant_a.as_mut_ptr() as *mut __m256i,
-                    mant,
-                );
-                _mm256_storeu_si256(
-                    exp_a.as_mut_ptr() as *mut __m256i,
+                let eadj = _mm256_add_epi64(
                     exp,
+                    _mm256_and_si256(is_sub, one),
+                );
+                // off ∈ [14, 2059] ⇒ limb index j = off/32 ≤ 64 and
+                // j + 2 < LIMBS; shift sh = off mod 32.
+                let off = _mm256_add_epi64(eadj, bias);
+                let j = _mm256_srli_epi64::<5>(off);
+                let sh = _mm256_and_si256(off, five_bits);
+                // 96-bit split of mant << sh (mant < 2^53, sh < 32):
+                // c2 = mant >> (64−sh), written (mant >> (63−sh)) >> 1
+                // so the sh = 0 lane shifts by 63+1, not 64.
+                let lo = _mm256_sllv_epi64(mant, sh);
+                let c0 = _mm256_and_si256(lo, low32);
+                let c1 = _mm256_srli_epi64::<32>(lo);
+                let c2 = _mm256_srli_epi64::<1>(_mm256_srlv_epi64(
+                    mant,
+                    _mm256_sub_epi64(sh_max, sh),
+                ));
+                // Two's-complement negate the chunks of negative lanes
+                // (adding −c ≡ the scalar path's subtract).
+                let negm = _mm256_cmpgt_epi64(zero, b);
+                let c0 =
+                    _mm256_sub_epi64(_mm256_xor_si256(c0, negm), negm);
+                let c1 =
+                    _mm256_sub_epi64(_mm256_xor_si256(c1, negm), negm);
+                let c2 =
+                    _mm256_sub_epi64(_mm256_xor_si256(c2, negm), negm);
+                let mut j_a = [0i64; 4];
+                let mut c0_a = [0i64; 4];
+                let mut c1_a = [0i64; 4];
+                let mut c2_a = [0i64; 4];
+                _mm256_storeu_si256(
+                    j_a.as_mut_ptr() as *mut __m256i,
+                    j,
                 );
                 _mm256_storeu_si256(
-                    sign_a.as_mut_ptr() as *mut __m256i,
-                    sign,
+                    c0_a.as_mut_ptr() as *mut __m256i,
+                    c0,
+                );
+                _mm256_storeu_si256(
+                    c1_a.as_mut_ptr() as *mut __m256i,
+                    c1,
+                );
+                _mm256_storeu_si256(
+                    c2_a.as_mut_ptr() as *mut __m256i,
+                    c2,
                 );
                 for lane in 0..4 {
-                    let e = exp_a[lane];
-                    let m = mant_a[lane] as u64;
-                    if e == 0x7ff || m == 0 {
-                        // Non-finite or ±0: the scalar slow path owns
-                        // the special/zero semantics.
-                        special |= accumulate_one(limbs, chunk[i + lane]);
-                        continue;
-                    }
-                    add_mantissa(
-                        limbs,
-                        m,
-                        (e as i32).max(1) - 1075,
-                        sign_a[lane] == 1,
-                    );
+                    let j = j_a[lane] as usize;
+                    limbs[j] += c0_a[lane];
+                    limbs[j + 1] += c1_a[lane];
+                    limbs[j + 2] += c2_a[lane];
                 }
                 i += 4;
             }
@@ -948,6 +1585,551 @@ mod avx2 {
     }
 }
 
+// ---------------------------------------------------------------------
+// AVX-512 path (x86-64 + rustc ≥ 1.89 only; see `build.rs`). Every
+// kernel is constructed to be bit-identical to the AVX2 tier: 512-bit
+// accumulators are lane-concatenations of AVX2's 256-bit accumulator
+// pairs, reductions extract those halves and finish with the exact AVX2
+// combine tree, and FMA coverage matches AVX2 element for element (an
+// 8-wide loop, one 4-wide step, the same scalar tail). Logical ops on
+// 512-bit floats go through the integer domain (`_mm512_and_epi64` /
+// `_mm512_or_epi64`) so only AVX512F is required — no DQ/VL.
+// ---------------------------------------------------------------------
+
+#[cfg(all(target_arch = "x86_64", fednl_avx512))]
+mod avx512 {
+    use core::arch::x86_64::*;
+
+    /// AVX2's horizontal sum, bit for bit: (l0 + l1) + (l2 + l3).
+    #[inline]
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    unsafe fn hsum256(v: __m256d) -> f64 {
+        let mut buf = [0.0f64; 4];
+        _mm256_storeu_pd(buf.as_mut_ptr(), v);
+        (buf[0] + buf[1]) + (buf[2] + buf[3])
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        // z0 = acc0 ‖ acc1, z1 = acc2 ‖ acc3 of the AVX2 kernel: the
+        // 16-per-iteration partition assigns the same elements to the
+        // same accumulator lanes, so the reduction below reproduces
+        // the AVX2 sum exactly.
+        let mut z0 = _mm512_setzero_pd();
+        let mut z1 = _mm512_setzero_pd();
+        let mut i = 0;
+        while i + 16 <= n {
+            z0 = _mm512_fmadd_pd(
+                _mm512_loadu_pd(pa.add(i)),
+                _mm512_loadu_pd(pb.add(i)),
+                z0,
+            );
+            z1 = _mm512_fmadd_pd(
+                _mm512_loadu_pd(pa.add(i + 8)),
+                _mm512_loadu_pd(pb.add(i + 8)),
+                z1,
+            );
+            i += 16;
+        }
+        let mut acc0 = _mm512_extractf64x4_pd::<0>(z0);
+        let acc1 = _mm512_extractf64x4_pd::<1>(z0);
+        let acc2 = _mm512_extractf64x4_pd::<0>(z1);
+        let acc3 = _mm512_extractf64x4_pd::<1>(z1);
+        while i + 4 <= n {
+            acc0 = _mm256_fmadd_pd(
+                _mm256_loadu_pd(pa.add(i)),
+                _mm256_loadu_pd(pb.add(i)),
+                acc0,
+            );
+            i += 4;
+        }
+        let acc = _mm256_add_pd(
+            _mm256_add_pd(acc0, acc1),
+            _mm256_add_pd(acc2, acc3),
+        );
+        let mut s = hsum256(acc);
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = x.len();
+        let va8 = _mm512_set1_pd(alpha);
+        let va4 = _mm256_set1_pd(alpha);
+        let px = x.as_ptr();
+        let py = y.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let y0 = _mm512_fmadd_pd(
+                va8,
+                _mm512_loadu_pd(px.add(i)),
+                _mm512_loadu_pd(py.add(i)),
+            );
+            _mm512_storeu_pd(py.add(i), y0);
+            i += 8;
+        }
+        // One 4-wide step keeps the FMA-covered element set identical
+        // to AVX2's (⌊n/4⌋·4) before the mul+add scalar tail.
+        while i + 4 <= n {
+            let y0 = _mm256_fmadd_pd(
+                va4,
+                _mm256_loadu_pd(px.add(i)),
+                _mm256_loadu_pd(py.add(i)),
+            );
+            _mm256_storeu_pd(py.add(i), y0);
+            i += 4;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub unsafe fn add_scaled(
+        a: &[f64],
+        alpha: f64,
+        b: &[f64],
+        out: &mut [f64],
+    ) {
+        let n = a.len();
+        let va8 = _mm512_set1_pd(alpha);
+        let va4 = _mm256_set1_pd(alpha);
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let po = out.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let o = _mm512_fmadd_pd(
+                va8,
+                _mm512_loadu_pd(pb.add(i)),
+                _mm512_loadu_pd(pa.add(i)),
+            );
+            _mm512_storeu_pd(po.add(i), o);
+            i += 8;
+        }
+        while i + 4 <= n {
+            let o = _mm256_fmadd_pd(
+                va4,
+                _mm256_loadu_pd(pb.add(i)),
+                _mm256_loadu_pd(pa.add(i)),
+            );
+            _mm256_storeu_pd(po.add(i), o);
+            i += 4;
+        }
+        while i < n {
+            out[i] = a[i] + alpha * b[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub unsafe fn abs_max(x: &[f64]) -> f64 {
+        let n = x.len();
+        let px = x.as_ptr();
+        let mask = _mm512_set1_epi64(i64::MAX);
+        let mut m = _mm512_setzero_pd();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm512_castsi512_pd(_mm512_and_epi64(
+                mask,
+                _mm512_castpd_si512(_mm512_loadu_pd(px.add(i))),
+            ));
+            // VMAXPD returns the second operand on NaN — accumulator
+            // there, so NaN inputs stay transparent (max over the
+            // non-NaN |x| multiset is grouping-invariant, hence equal
+            // to the AVX2 result despite the wider lanes).
+            m = _mm512_max_pd(v, m);
+            i += 8;
+        }
+        let mut buf = [0.0f64; 8];
+        _mm512_storeu_pd(buf.as_mut_ptr(), m);
+        let mut s = buf[0];
+        for &b in &buf[1..] {
+            s = s.max(b);
+        }
+        while i < n {
+            s = s.max(x[i].abs());
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub unsafe fn energy_scan(w: &[f64], v: &[f64], out: &mut [f64]) {
+        // Elementwise (two roundings per element) — identical at any
+        // lane width, so no 4-wide step is needed.
+        let n = v.len();
+        let (pw, pv) = (w.as_ptr(), v.as_ptr());
+        let po = out.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let vv = _mm512_loadu_pd(pv.add(i));
+            let e = _mm512_mul_pd(
+                _mm512_loadu_pd(pw.add(i)),
+                _mm512_mul_pd(vv, vv),
+            );
+            _mm512_storeu_pd(po.add(i), e);
+            i += 8;
+        }
+        while i < n {
+            out[i] = w[i] * (v[i] * v[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub unsafe fn weighted_norm2_sq(w: &[f64], v: &[f64]) -> f64 {
+        let n = v.len();
+        let (pw, pv) = (w.as_ptr(), v.as_ptr());
+        // z = acc0 ‖ acc1 of the AVX2 kernel (8-per-iteration).
+        let mut z = _mm512_setzero_pd();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v0 = _mm512_loadu_pd(pv.add(i));
+            z = _mm512_fmadd_pd(
+                _mm512_mul_pd(_mm512_loadu_pd(pw.add(i)), v0),
+                v0,
+                z,
+            );
+            i += 8;
+        }
+        let mut acc0 = _mm512_extractf64x4_pd::<0>(z);
+        let acc1 = _mm512_extractf64x4_pd::<1>(z);
+        while i + 4 <= n {
+            let v0 = _mm256_loadu_pd(pv.add(i));
+            acc0 = _mm256_fmadd_pd(
+                _mm256_mul_pd(_mm256_loadu_pd(pw.add(i)), v0),
+                v0,
+                acc0,
+            );
+            i += 4;
+        }
+        let mut s = hsum256(_mm256_add_pd(acc0, acc1));
+        while i < n {
+            s += w[i] * (v[i] * v[i]);
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub unsafe fn sigmoid_variance_scan(
+        s: &[f64],
+        scale: f64,
+        out: &mut [f64],
+    ) {
+        let n = s.len();
+        let vscale = _mm512_set1_pd(scale);
+        let one = _mm512_set1_pd(1.0);
+        let ps = s.as_ptr();
+        let po = out.as_mut_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let sv = _mm512_loadu_pd(ps.add(i));
+            let t = _mm512_mul_pd(sv, _mm512_sub_pd(one, sv));
+            _mm512_storeu_pd(po.add(i), _mm512_mul_pd(vscale, t));
+            i += 8;
+        }
+        while i < n {
+            out[i] = scale * (s[i] * (1.0 - s[i]));
+            i += 1;
+        }
+    }
+
+    /// 8-lane mirror of [`super::sigmoid_poly`] — identical per-lane
+    /// operation sequence to the scalar/AVX2 paths (elementwise, no
+    /// cross-lane reduction), so bit-identical at any width.
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub unsafe fn sigmoid_neg_scan(z: &[f64], out: &mut [f64]) {
+        let n = z.len();
+        let pz = z.as_ptr();
+        let po = out.as_mut_ptr();
+        let sign = _mm512_set1_epi64((-0.0f64).to_bits() as i64);
+        let arg_min = _mm512_set1_pd(super::SIG_ARG_MIN);
+        let inv_ln2 = _mm512_set1_pd(super::EXP_INV_LN2);
+        let ln2_hi = _mm512_set1_pd(super::EXP_LN2_HI);
+        let ln2_lo = _mm512_set1_pd(super::EXP_LN2_LO);
+        let p1 = _mm512_set1_pd(super::EXP_P1);
+        let p2 = _mm512_set1_pd(super::EXP_P2);
+        let p3 = _mm512_set1_pd(super::EXP_P3);
+        let p4 = _mm512_set1_pd(super::EXP_P4);
+        let p5 = _mm512_set1_pd(super::EXP_P5);
+        let one = _mm512_set1_pd(1.0);
+        let two = _mm512_set1_pd(2.0);
+        let zero = _mm512_setzero_pd();
+        let exp_bias = _mm512_set1_epi64(1023);
+        let mut i = 0;
+        while i + 8 <= n {
+            let zv = _mm512_loadu_pd(pz.add(i));
+            // −|z| via sign-OR in the integer domain (AVX512F only).
+            let ax = _mm512_castsi512_pd(_mm512_or_epi64(
+                sign,
+                _mm512_castpd_si512(zv),
+            ));
+            let a = _mm512_max_pd(arg_min, ax);
+            let k = _mm512_cvtpd_epi32(_mm512_mul_pd(a, inv_ln2));
+            let kd = _mm512_cvtepi32_pd(k);
+            let hi = _mm512_sub_pd(a, _mm512_mul_pd(kd, ln2_hi));
+            let lo = _mm512_mul_pd(kd, ln2_lo);
+            let r = _mm512_sub_pd(hi, lo);
+            let t = _mm512_mul_pd(r, r);
+            let mut p = _mm512_add_pd(p4, _mm512_mul_pd(t, p5));
+            p = _mm512_add_pd(p3, _mm512_mul_pd(t, p));
+            p = _mm512_add_pd(p2, _mm512_mul_pd(t, p));
+            p = _mm512_add_pd(p1, _mm512_mul_pd(t, p));
+            let c = _mm512_sub_pd(r, _mm512_mul_pd(t, p));
+            let q = _mm512_div_pd(
+                _mm512_mul_pd(r, c),
+                _mm512_sub_pd(two, c),
+            );
+            let y = _mm512_sub_pd(
+                one,
+                _mm512_sub_pd(_mm512_sub_pd(lo, q), hi),
+            );
+            let k1 = _mm256_srai_epi32::<1>(k);
+            let k2 = _mm256_sub_epi32(k, k1);
+            let s1 = _mm512_castsi512_pd(_mm512_slli_epi64::<52>(
+                _mm512_add_epi64(_mm512_cvtepi32_epi64(k1), exp_bias),
+            ));
+            let s2 = _mm512_castsi512_pd(_mm512_slli_epi64::<52>(
+                _mm512_add_epi64(_mm512_cvtepi32_epi64(k2), exp_bias),
+            ));
+            let e = _mm512_mul_pd(_mm512_mul_pd(y, s1), s2);
+            let le = _mm512_cmp_pd_mask::<_CMP_LE_OQ>(zv, zero);
+            let num = _mm512_mask_blend_pd(le, e, one);
+            _mm512_storeu_pd(
+                po.add(i),
+                _mm512_div_pd(num, _mm512_add_pd(one, e)),
+            );
+            i += 8;
+        }
+        while i < n {
+            out[i] = super::sigmoid_poly(-z[i]);
+            i += 1;
+        }
+    }
+
+    /// 8-lane variant of the AVX2 vectorized limb scatter (see
+    /// `avx2::binned_accumulate`); integer-exact, limb-identical to
+    /// every other tier.
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub unsafe fn binned_accumulate(
+        limbs: &mut [i64; crate::linalg::reduce::LIMBS],
+        xs: &[f64],
+    ) -> u8 {
+        use crate::linalg::reduce::{accumulate_one, propagate_limbs};
+        let mut special = 0u8;
+        let exp_mask = _mm512_set1_epi64(0x7ff);
+        let frac_mask = _mm512_set1_epi64((1i64 << 52) - 1);
+        let implicit = _mm512_set1_epi64(1i64 << 52);
+        let one = _mm512_set1_epi64(1);
+        let bias = _mm512_set1_epi64(13);
+        let low32 = _mm512_set1_epi64(0xFFFF_FFFF);
+        let sh_max = _mm512_set1_epi64(63);
+        let five_bits = _mm512_set1_epi64(31);
+        let zero = _mm512_setzero_si512();
+        for chunk in xs.chunks(super::BINNED_CHUNK) {
+            let n = chunk.len();
+            let p = chunk.as_ptr();
+            let mut i = 0;
+            while i + 8 <= n {
+                // Bit-preserving integer load via the pd move (the
+                // `_mm512_loadu_si512` signature varies across stdarch
+                // versions; this form does not).
+                let b = _mm512_castpd_si512(_mm512_loadu_pd(p.add(i)));
+                let exp = _mm512_and_epi64(
+                    _mm512_srli_epi64::<52>(b),
+                    exp_mask,
+                );
+                if _mm512_cmpeq_epi64_mask(exp, exp_mask) != 0 {
+                    for lane in 0..8 {
+                        special |=
+                            accumulate_one(limbs, chunk[i + lane]);
+                    }
+                    i += 8;
+                    continue;
+                }
+                let frac = _mm512_and_epi64(b, frac_mask);
+                let not_sub = _mm512_cmpneq_epi64_mask(exp, zero);
+                let mant =
+                    _mm512_mask_or_epi64(frac, not_sub, frac, implicit);
+                let eadj = _mm512_max_epi64(exp, one);
+                let off = _mm512_add_epi64(eadj, bias);
+                let j = _mm512_srli_epi64::<5>(off);
+                let sh = _mm512_and_epi64(off, five_bits);
+                let lo = _mm512_sllv_epi64(mant, sh);
+                let c0 = _mm512_and_epi64(lo, low32);
+                let c1 = _mm512_srli_epi64::<32>(lo);
+                let c2 = _mm512_srli_epi64::<1>(_mm512_srlv_epi64(
+                    mant,
+                    _mm512_sub_epi64(sh_max, sh),
+                ));
+                let m_neg = _mm512_cmplt_epi64_mask(b, zero);
+                let c0 = _mm512_mask_sub_epi64(c0, m_neg, zero, c0);
+                let c1 = _mm512_mask_sub_epi64(c1, m_neg, zero, c1);
+                let c2 = _mm512_mask_sub_epi64(c2, m_neg, zero, c2);
+                let mut j_a = [0i64; 8];
+                let mut c0_a = [0i64; 8];
+                let mut c1_a = [0i64; 8];
+                let mut c2_a = [0i64; 8];
+                _mm512_storeu_pd(
+                    j_a.as_mut_ptr() as *mut f64,
+                    _mm512_castsi512_pd(j),
+                );
+                _mm512_storeu_pd(
+                    c0_a.as_mut_ptr() as *mut f64,
+                    _mm512_castsi512_pd(c0),
+                );
+                _mm512_storeu_pd(
+                    c1_a.as_mut_ptr() as *mut f64,
+                    _mm512_castsi512_pd(c1),
+                );
+                _mm512_storeu_pd(
+                    c2_a.as_mut_ptr() as *mut f64,
+                    _mm512_castsi512_pd(c2),
+                );
+                for lane in 0..8 {
+                    let j = j_a[lane] as usize;
+                    limbs[j] += c0_a[lane];
+                    limbs[j + 1] += c1_a[lane];
+                    limbs[j + 2] += c2_a[lane];
+                }
+                i += 8;
+            }
+            while i < n {
+                special |= accumulate_one(limbs, chunk[i]);
+                i += 1;
+            }
+            propagate_limbs(limbs);
+        }
+        if xs.is_empty() {
+            propagate_limbs(limbs);
+        }
+        special
+    }
+
+    /// Row-ranged rank-1 accumulate: per-element FMA chain order is
+    /// identical to AVX2 (c0 → c1 → c2 → c3 per column), and the
+    /// vector-covered column set matches AVX2's ⌊(d−u)/4⌋·4 via the
+    /// 8-then-4-then-scalar structure.
+    #[target_feature(enable = "avx512f", enable = "avx2", enable = "fma")]
+    pub unsafe fn sym_rank1_upper_rows(
+        block: &mut [f64],
+        d: usize,
+        u0: usize,
+        u1: usize,
+        samples: &[&[f64]],
+        h: &[f64],
+    ) {
+        debug_assert_eq!(block.len(), (u1 - u0) * d);
+        let mut b = 0;
+        while b + 4 <= samples.len() {
+            let (a0, a1, a2, a3) =
+                (samples[b], samples[b + 1], samples[b + 2], samples[b + 3]);
+            let (h0, h1, h2, h3) = (h[b], h[b + 1], h[b + 2], h[b + 3]);
+            let (p0, p1, p2, p3) =
+                (a0.as_ptr(), a1.as_ptr(), a2.as_ptr(), a3.as_ptr());
+            for u in u0..u1 {
+                let s0 = h0 * a0[u];
+                let s1 = h1 * a1[u];
+                let s2 = h2 * a2[u];
+                let s3 = h3 * a3[u];
+                let w0 = _mm512_set1_pd(s0);
+                let w1 = _mm512_set1_pd(s1);
+                let w2 = _mm512_set1_pd(s2);
+                let w3 = _mm512_set1_pd(s3);
+                let c0 = _mm256_set1_pd(s0);
+                let c1 = _mm256_set1_pd(s1);
+                let c2 = _mm256_set1_pd(s2);
+                let c3 = _mm256_set1_pd(s3);
+                let row = block.as_mut_ptr().add((u - u0) * d);
+                let mut v = u;
+                while v + 8 <= d {
+                    let mut acc = _mm512_loadu_pd(row.add(v));
+                    acc = _mm512_fmadd_pd(
+                        w0,
+                        _mm512_loadu_pd(p0.add(v)),
+                        acc,
+                    );
+                    acc = _mm512_fmadd_pd(
+                        w1,
+                        _mm512_loadu_pd(p1.add(v)),
+                        acc,
+                    );
+                    acc = _mm512_fmadd_pd(
+                        w2,
+                        _mm512_loadu_pd(p2.add(v)),
+                        acc,
+                    );
+                    acc = _mm512_fmadd_pd(
+                        w3,
+                        _mm512_loadu_pd(p3.add(v)),
+                        acc,
+                    );
+                    _mm512_storeu_pd(row.add(v), acc);
+                    v += 8;
+                }
+                while v + 4 <= d {
+                    let mut acc = _mm256_loadu_pd(row.add(v));
+                    acc = _mm256_fmadd_pd(c0, _mm256_loadu_pd(p0.add(v)), acc);
+                    acc = _mm256_fmadd_pd(c1, _mm256_loadu_pd(p1.add(v)), acc);
+                    acc = _mm256_fmadd_pd(c2, _mm256_loadu_pd(p2.add(v)), acc);
+                    acc = _mm256_fmadd_pd(c3, _mm256_loadu_pd(p3.add(v)), acc);
+                    _mm256_storeu_pd(row.add(v), acc);
+                    v += 4;
+                }
+                while v < d {
+                    *row.add(v) +=
+                        s0 * a0[v] + s1 * a1[v] + s2 * a2[v] + s3 * a3[v];
+                    v += 1;
+                }
+            }
+            b += 4;
+        }
+        while b < samples.len() {
+            let a = samples[b];
+            let hb = h[b];
+            let pa = a.as_ptr();
+            for u in u0..u1 {
+                let s = hb * a[u];
+                let w = _mm512_set1_pd(s);
+                let c = _mm256_set1_pd(s);
+                let row = block.as_mut_ptr().add((u - u0) * d);
+                let mut v = u;
+                while v + 8 <= d {
+                    let acc = _mm512_fmadd_pd(
+                        w,
+                        _mm512_loadu_pd(pa.add(v)),
+                        _mm512_loadu_pd(row.add(v)),
+                    );
+                    _mm512_storeu_pd(row.add(v), acc);
+                    v += 8;
+                }
+                while v + 4 <= d {
+                    let acc = _mm256_fmadd_pd(
+                        c,
+                        _mm256_loadu_pd(pa.add(v)),
+                        _mm256_loadu_pd(row.add(v)),
+                    );
+                    _mm256_storeu_pd(row.add(v), acc);
+                    v += 4;
+                }
+                while v < d {
+                    *row.add(v) += s * a[v];
+                    v += 1;
+                }
+            }
+            b += 1;
+        }
+    }
+}
+
 // Scalar-vs-dispatched equivalence properties live in
 // `tests/simd_kernels.rs` (tier-1); only dispatch mechanics are unit
 // tested here.
@@ -958,9 +2140,47 @@ mod tests {
     #[test]
     fn isa_resolves() {
         let name = isa_name();
-        assert!(name == "avx2" || name == "scalar");
+        assert!(
+            name == "avx512" || name == "avx2" || name == "scalar",
+            "unexpected isa {name:?}"
+        );
         // Second call hits the cache and must agree.
         assert_eq!(isa_name(), name);
+        // The dispatched tier must report as available, and the
+        // pinned-tier names must round-trip.
+        for which in Isa::ALL {
+            assert_eq!(
+                which.name(),
+                match which {
+                    Isa::Scalar => "scalar",
+                    Isa::Avx2 => "avx2",
+                    Isa::Avx512 => "avx512",
+                }
+            );
+            if which.name() == name {
+                assert!(isa_available(which));
+            }
+        }
+    }
+
+    #[test]
+    fn sigmoid_poly_edges() {
+        // Exact values the accuracy budget pins down (module docs);
+        // the dense ulp sweep lives in tests/simd_kernels.rs.
+        assert_eq!(sigmoid_poly(0.0).to_bits(), 0.5f64.to_bits());
+        assert_eq!(sigmoid_poly(-0.0).to_bits(), 0.5f64.to_bits());
+        assert_eq!(sigmoid_poly(-746.0), 0.0);
+        assert_eq!(sigmoid_poly(-1e4), 0.0);
+        assert_eq!(sigmoid_poly(746.0), 1.0);
+        assert_eq!(sigmoid_poly(1e4), 1.0);
+        assert_eq!(sigmoid_poly(f64::NEG_INFINITY), 0.0);
+        assert_eq!(sigmoid_poly(f64::INFINITY), 1.0);
+        assert!(sigmoid_poly(f64::NAN).is_nan());
+        // Symmetry within one ulp: σ(x) + σ(−x) = 1.
+        for x in [-30.0, -2.0, 0.7, 13.5] {
+            let s = sigmoid_poly(x) + sigmoid_poly(-x);
+            assert!((s - 1.0).abs() < 1e-15, "x={x}: {s}");
+        }
     }
 
     #[test]

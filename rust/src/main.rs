@@ -65,9 +65,11 @@ fn print_usage() {
          \x20            [--trace out.csv] [--warm-start] [--rule lk|mu] [--mu 1e-3]\n\
          \x20            [--intra-threads 1] [--quorum Q] [--deadline-ms MS]\n\
          \x20            [--on-missing drop|resample|reuse] [--fault-plan SPEC]\n\
+         \x20            [--speculate]\n\
          \x20 master     --listen ADDR --clients N --algo ... [--rounds R] [--tol T]\n\
          \x20            [--shards S] [--relay-slack-ms 2000] [--quorum Q]\n\
          \x20            [--deadline-ms MS] [--on-missing P] [--fault-plan SPEC]\n\
+         \x20            [--speculate]\n\
          \x20 relay      --connect MASTER --listen ADDR --shard I --base B --clients K\n\
          \x20            (shard aggregator: clients of ids [B, B+K) connect here)\n\
          \x20 client     --connect ADDR --id I --data SHARD [--algo fednl|fednl-pp]\n\
@@ -248,6 +250,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         track_loss: true,
         warm_start: args.flag("warm-start"),
         policy: round_policy(args, n_clients, false)?,
+        speculate: args.flag("speculate"),
         ..Default::default()
     };
     let plan = fault_plan(args)?;
@@ -340,6 +343,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         trace.last_grad_norm(),
         fednl::utils::human_bytes(trace.total_bytes_up()),
     );
+    if trace.overlap_secs > 0.0 {
+        println!(
+            "speculation overlapped {} of server work with straggler wait",
+            human_secs(trace.overlap_secs)
+        );
+    }
     if let Some(path) = args.get("trace") {
         trace.write_csv(path)?;
         println!("trace written to {path}");
@@ -387,6 +396,7 @@ fn cmd_master(args: &Args) -> Result<()> {
         tol_grad: tol,
         track_loss: algo == "fednl-ls",
         policy: round_policy(args, n_clients, true)?,
+        speculate: args.flag("speculate"),
         ..Default::default()
     };
     let plan = fault_plan(args)?;

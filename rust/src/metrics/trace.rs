@@ -43,6 +43,11 @@ pub struct Trace {
     /// per-run wait-vs-aggregate wall-clock split reported by
     /// `BENCH_coordinator.json`.
     pub aggregate_secs: f64,
+    /// Total seconds of server-side work (quorum finish + Newton
+    /// direction) that ran **overlapped** with straggler draining under
+    /// `--speculate` — wait time the speculation converted into
+    /// compute. Zero when speculation is off or never fired.
+    pub overlap_secs: f64,
 }
 
 impl Trace {
@@ -52,6 +57,7 @@ impl Trace {
             label: label.into(),
             wait_secs: 0.0,
             aggregate_secs: 0.0,
+            overlap_secs: 0.0,
         }
     }
 

@@ -235,6 +235,19 @@ pub fn run_relay_on(bound: Bound, cfg: &RelayCfg) -> Result<RelayReport> {
                     &wire::encode_id_scalar_vecs(&parts),
                 )?;
             }
+            s2c::LOSS_GRAD_SUM => {
+                // Pre-reduced probe: fold the partition's (fᵢ, ∇fᵢ)
+                // next to the clients and ship one exact accumulator
+                // pair — O(d) upward instead of n dense gradients.
+                let x = wire::decode_vec(&payload)?;
+                let (mut loss, mut grad, count) = down.loss_grad_sum(&x);
+                up.send(
+                    c2s::SHARD_GRAD_SUM,
+                    &wire::encode_shard_grad_sum(
+                        count, &mut loss, &mut grad,
+                    ),
+                )?;
+            }
             s2c::WARM_START => {
                 let x = wire::decode_vec(&payload)?;
                 let packs = down.warm_start(&x);
@@ -779,6 +792,41 @@ impl ClientPool for RelayPool {
             }
         }
         parts
+    }
+
+    fn loss_grad_sum(
+        &mut self,
+        x: &[f64],
+    ) -> (
+        crate::linalg::reduce::RepAcc,
+        crate::linalg::reduce::RepVec,
+        u32,
+    ) {
+        // Pre-reduced probe over the tier: one SHARD_GRAD_SUM frame
+        // per relay (O(S·d) fan-in) merged exactly — bit-identical to
+        // the flat atom fold. A malformed reply retires the relay and
+        // the reduction proceeds over the surviving partitions (same
+        // rule as the other probes).
+        let payload = wire::encode_vec(x);
+        let asked = self.ask_relays(s2c::LOSS_GRAD_SUM, &payload);
+        let mut loss = crate::linalg::reduce::RepAcc::new();
+        let mut grad = crate::linalg::reduce::RepVec::new(self.d);
+        let mut count = 0u32;
+        for s in asked {
+            if let Some(p) = self.recv_expect(s, c2s::SHARD_GRAD_SUM) {
+                match wire::decode_shard_grad_sum(&p, self.d) {
+                    // A short gradient accumulator is as malformed as
+                    // an undecodable one (merge requires length d).
+                    Ok((c, l, g)) if g.len() == self.d => {
+                        loss.merge(l);
+                        grad.merge(g);
+                        count += c;
+                    }
+                    _ => self.drop_relay(s),
+                }
+            }
+        }
+        (loss, grad, count)
     }
 
     fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {

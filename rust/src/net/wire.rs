@@ -50,6 +50,8 @@
 //! | c2s | `SHARD_PREPPED`  29 | rejoined ids, dead ids          |                |
 //! | c2s | `SHARD_PULLED`   30 | present flag (+ lᵢ, gᵢ)         |                |
 //! | c2s | `SHARD_SUM`      31 | merged [`RoundSum`] + missing   |                |
+//! | s2c | `LOSS_GRAD_SUM`   9 | x                               | `SHARD_GRAD_SUM` |
+//! | c2s | `SHARD_GRAD_SUM` 32 | count, Σfᵢ acc, Σ∇fᵢ acc        |                |
 //!
 //! `SHARD_ROUND`'s `sum` flag selects the reply: set (the FedNL/LS
 //! default) the relay **pre-reduces arithmetically** — it folds its
@@ -65,7 +67,12 @@
 //! `STATE`, `SET_ALPHA`, `SHUTDOWN`) are reused verbatim on the
 //! master → relay leg — only the replies differ, carrying per-client
 //! atoms; the master folds them through the reproducible accumulator,
-//! so their grouping is free too.
+//! so their grouping is free too. The dense first-order probe
+//! additionally has a pre-reduced form: `LOSS_GRAD_SUM` asks the relay
+//! to fold its partition's (fᵢ, ∇fᵢ) into one exact accumulator pair
+//! and answer a compact `SHARD_GRAD_SUM` frame — one O(d) payload per
+//! shard instead of n dense gradients, bit-identical to the atom fold
+//! by exactness.
 //!
 //! [`RoundSum`]: crate::algorithms::RoundSum
 //!
@@ -108,6 +115,11 @@ pub mod s2c {
     pub const LOSS_GRAD: u8 = 7;
     /// State pull: PP client replies STATE with its current (lᵢ, gᵢ).
     pub const STATE: u8 = 8;
+    /// Pre-reduced first-order probe (shard tier): the relay folds its
+    /// partition's (fᵢ, ∇fᵢ) into one exact accumulator pair and
+    /// replies SHARD_GRAD_SUM — the `SHARD_SUM` payload cut applied to
+    /// the FedNL-PP convergence probe.
+    pub const LOSS_GRAD_SUM: u8 = 9;
     /// Shard tier: one relay round (round, need_loss, deadline, x,
     /// participant subset); the relay replies SHARD_MSG.
     pub const SHARD_ROUND: u8 = 20;
@@ -158,6 +170,10 @@ pub mod c2s {
     /// plus the partition's missing-certificates. O(d) payload,
     /// independent of the partition's client count.
     pub const SHARD_SUM: u8 = 31;
+    /// Pre-reduced (count, Σfᵢ, Σ∇fᵢ) accumulator pair over the
+    /// partition's live clients (reply to LOSS_GRAD_SUM). O(d)
+    /// payload, independent of the partition's client count.
+    pub const SHARD_GRAD_SUM: u8 = 32;
 }
 
 // --- exact frame sizes ----------------------------------------------------
@@ -516,6 +532,38 @@ pub fn decode_shard_sum(
     let nmiss = r.get_u32()? as usize;
     let missing = r.get_u32_vec(nmiss)?;
     Ok((shard_id, sum, missing))
+}
+
+/// SHARD_GRAD_SUM: the partition's pre-reduced first-order probe —
+/// live-client count plus the exact (Σfᵢ, Σ∇fᵢ) accumulator pair.
+pub fn encode_shard_grad_sum(
+    count: u32,
+    loss: &mut crate::linalg::reduce::RepAcc,
+    grad: &mut crate::linalg::reduce::RepVec,
+) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(128);
+    w.put_u32(count);
+    loss.encode(&mut w);
+    grad.encode(&mut w);
+    w.into_vec()
+}
+
+/// Returns (count, Σfᵢ acc, Σ∇fᵢ acc). `d` bounds the decoded gradient
+/// length (network-facing input: malformed frames become `Err` → a
+/// retired relay, never a panic or a giant allocation).
+pub fn decode_shard_grad_sum(
+    p: &[u8],
+    d: usize,
+) -> Result<(
+    u32,
+    crate::linalg::reduce::RepAcc,
+    crate::linalg::reduce::RepVec,
+)> {
+    let mut r = ByteReader::new(p);
+    let count = r.get_u32()?;
+    let loss = crate::linalg::reduce::RepAcc::decode(&mut r)?;
+    let grad = crate::linalg::reduce::RepVec::decode(&mut r, d)?;
+    Ok((count, loss, grad))
 }
 
 /// SHARD_MSG: one round's partition batch — the shard's committed
@@ -936,6 +984,42 @@ mod tests {
         // Dimension mismatch / out-of-triangle indices are decode
         // errors (→ drop_relay), never downstream panics.
         assert!(decode_shard_sum(&enc, 3).is_err());
+    }
+
+    #[test]
+    fn shard_grad_sum_roundtrip_is_exact() {
+        // The pre-reduced probe frame must survive the wire bit-for-
+        // bit: the master's rounded (f, ∇f) must equal the relay-side
+        // fold exactly.
+        use crate::linalg::reduce::{RepAcc, RepVec};
+        let mut loss = RepAcc::new();
+        let mut grad = RepVec::new(3);
+        for (l, g) in [
+            (0.125, [1.0e-9, -3.5, 2.0f64.powi(40)]),
+            (-7.25e11, [0.3, 0.3, 0.3]),
+            (1e-300, [-1.0, 1e200, -0.0]),
+        ] {
+            loss.accumulate(l);
+            grad.accumulate(&g);
+        }
+        let want_l = loss.clone().round().to_bits();
+        let want_g: Vec<u64> = grad
+            .clone()
+            .round_vec()
+            .iter()
+            .map(|v| v.to_bits())
+            .collect();
+        let enc = encode_shard_grad_sum(3, &mut loss, &mut grad);
+        let (count, mut bl, mut bg) =
+            decode_shard_grad_sum(&enc, 3).unwrap();
+        assert_eq!(count, 3);
+        assert_eq!(bl.round().to_bits(), want_l);
+        let got: Vec<u64> =
+            bg.round_vec().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want_g);
+        // Bounded decode: a frame claiming a longer gradient errors.
+        assert!(decode_shard_grad_sum(&enc, 2).is_err());
+        assert!(decode_shard_grad_sum(&[1, 2], 3).is_err());
     }
 
     #[test]

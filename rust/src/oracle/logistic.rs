@@ -15,7 +15,7 @@
 //!   the rank-1 Hessian accumulate all run on the runtime-dispatched
 //!   SIMD kernels in [`crate::linalg::simd`] (§5.4).
 
-use super::{sigmoid, softplus, Oracle};
+use super::{softplus, Oracle};
 use crate::data::ClientShard;
 use crate::linalg::{simd, vector, Mat};
 
@@ -59,15 +59,15 @@ impl LogisticOracle {
     }
 
     /// Stage 1: margins + sigmoids at `x` (shared by everything below).
-    /// One fused pass per sample row (§5.7): the margin dot product runs
-    /// on the dispatched SIMD kernel and the sigmoid is evaluated while
-    /// the row is still hot in cache.
+    /// The margin dot products run on the dispatched SIMD kernel, then
+    /// one vectorized [`simd::sigmoid_neg_scan`] evaluates every σ(−z)
+    /// (§5.7) — the polynomial exp with the tested ulp budget, or libm
+    /// under `FEDNL_EXACT_EXP=1`.
     fn compute_margins(&mut self, x: &[f64]) {
         for j in 0..self.at.rows() {
-            let zj = simd::dot(self.at.row(j), x);
-            self.z[j] = zj;
-            self.sig_neg[j] = sigmoid(-zj);
+            self.z[j] = simd::dot(self.at.row(j), x);
         }
+        simd::sigmoid_neg_scan(&self.z, &mut self.sig_neg);
     }
 
     fn loss_from_margins(&self, x: &[f64]) -> f64 {

@@ -65,16 +65,13 @@ pub fn softplus(x: f64) -> f64 {
     }
 }
 
-/// Numerically stable sigmoid σ(x) = 1/(1+e⁻ˣ).
+/// Numerically stable sigmoid σ(x) = 1/(1+e⁻ˣ) via libm `exp` (the
+/// exact path; the oracle hot loop uses the vectorized polynomial
+/// kernel [`crate::linalg::simd::sigmoid_neg_scan`] instead unless
+/// `FEDNL_EXACT_EXP=1`).
 #[inline]
 pub fn sigmoid(x: f64) -> f64 {
-    if x >= 0.0 {
-        let e = (-x).exp();
-        1.0 / (1.0 + e)
-    } else {
-        let e = x.exp();
-        e / (1.0 + e)
-    }
+    crate::linalg::simd::sigmoid_exact(x)
 }
 
 #[cfg(test)]

@@ -5,7 +5,8 @@
 //! sums; exponent extremes, signed zeros and non-finite inputs must
 //! resolve loudly and deterministically, never silently wrong.
 
-use fednl::linalg::reduce::{RepAcc, RepVec};
+use fednl::linalg::reduce::{RepAcc, RepVec, LIMBS};
+use fednl::linalg::simd;
 use fednl::rng::{Pcg64, Rng};
 
 fn sum_seq(xs: &[f64]) -> u64 {
@@ -81,6 +82,35 @@ fn prop_shuffles_and_groupings_are_bit_identical() {
         let mut bulk = RepAcc::new();
         bulk.accumulate_slice_scalar(&xs);
         assert_eq!(bulk.round().to_bits(), want, "case {case}: scalar");
+        // Every available pinned tier scatters the exact same limbs
+        // (not merely the same rounded sum) — the raw kernel contract
+        // behind the dispatched path above.
+        let mut want_limbs = None;
+        for which in simd::Isa::ALL {
+            if !simd::isa_available(which) {
+                continue; // CI's forced-ISA legs cover absent tiers
+            }
+            let mut limbs = [0i64; LIMBS];
+            let flags =
+                simd::binned_accumulate_on(which, &mut limbs, &xs);
+            match &want_limbs {
+                None => want_limbs = Some((limbs, flags)),
+                Some((wl, wf)) => {
+                    assert_eq!(
+                        &limbs,
+                        wl,
+                        "case {case}: {} limbs diverge",
+                        which.name()
+                    );
+                    assert_eq!(
+                        flags,
+                        *wf,
+                        "case {case}: {} flags diverge",
+                        which.name()
+                    );
+                }
+            }
+        }
     }
 }
 

@@ -244,6 +244,253 @@ fn threaded_rank1_bit_identical_for_any_thread_count() {
 }
 
 // ---------------------------------------------------------------------
+// Pinned-tier ISA matrix: the AVX-512 backend must be bit-identical
+// to AVX2 for every kernel (its accumulators are lane-concatenations
+// of AVX2's and its reductions finish with the AVX2 combine tree —
+// the module-doc contract), and the limb scatter must be
+// limb-identical across all three tiers. Hosts or builds without a
+// tier skip with a note rather than fail: the CI forced-ISA matrix
+// legs pick the coverage up where the tier exists.
+// ---------------------------------------------------------------------
+
+/// Skip helper: `false` (with a stderr note) when `which` is missing.
+fn tier_or_skip(which: simd::Isa, test: &str) -> bool {
+    if simd::isa_available(which) {
+        return true;
+    }
+    eprintln!("{test}: skipping, {} tier unavailable here", which.name());
+    false
+}
+
+#[test]
+fn prop_avx512_bitwise_equals_avx2_on_every_kernel() {
+    if !tier_or_skip(simd::Isa::Avx512, "avx512-vs-avx2") {
+        return;
+    }
+    let (lo, hi) = (simd::Isa::Avx2, simd::Isa::Avx512);
+    for &n in &LENS {
+        let a = rvec(n, 11_000 + n as u64);
+        let b = rvec(n, 12_000 + n as u64);
+        let w: Vec<f64> = (0..n).map(|i| 1.0 + (i % 5) as f64).collect();
+
+        assert_eq!(
+            simd::dot_on(lo, &a, &b).to_bits(),
+            simd::dot_on(hi, &a, &b).to_bits(),
+            "dot n={n}"
+        );
+        assert_eq!(
+            simd::abs_max_on(lo, &a).to_bits(),
+            simd::abs_max_on(hi, &a).to_bits(),
+            "abs_max n={n}"
+        );
+        assert_eq!(
+            simd::weighted_norm2_sq_on(lo, &w, &a).to_bits(),
+            simd::weighted_norm2_sq_on(hi, &w, &a).to_bits(),
+            "weighted_norm2_sq n={n}"
+        );
+
+        let mut y1 = b.clone();
+        let mut y2 = b.clone();
+        simd::axpy_on(lo, -0.7312, &a, &mut y1);
+        simd::axpy_on(hi, -0.7312, &a, &mut y2);
+        let mut o1 = vec![0.0; n];
+        let mut o2 = vec![0.0; n];
+        simd::add_scaled_on(lo, &a, 1.618, &b, &mut o1);
+        simd::add_scaled_on(hi, &a, 1.618, &b, &mut o2);
+        let mut e1 = vec![0.0; n];
+        let mut e2 = vec![0.0; n];
+        simd::energy_scan_on(lo, &w, &a, &mut e1);
+        simd::energy_scan_on(hi, &w, &a, &mut e2);
+        let mut v1 = vec![0.0; n];
+        let mut v2 = vec![0.0; n];
+        simd::sigmoid_variance_scan_on(lo, &w, 0.0125, &mut v1);
+        simd::sigmoid_variance_scan_on(hi, &w, 0.0125, &mut v2);
+        for i in 0..n {
+            assert_eq!(y1[i].to_bits(), y2[i].to_bits(), "axpy n={n} i={i}");
+            assert_eq!(
+                o1[i].to_bits(),
+                o2[i].to_bits(),
+                "add_scaled n={n} i={i}"
+            );
+            assert_eq!(
+                e1[i].to_bits(),
+                e2[i].to_bits(),
+                "energy_scan n={n} i={i}"
+            );
+            assert_eq!(
+                v1[i].to_bits(),
+                v2[i].to_bits(),
+                "sigmoid_variance_scan n={n} i={i}"
+            );
+        }
+    }
+    // Rank-1 Hessian accumulate across vector-tail widths.
+    for &d in &[1usize, 3, 7, 8, 13, 31] {
+        let ns = 5;
+        let rows: Vec<Vec<f64>> = (0..ns)
+            .map(|i| rvec(d, 13_000 + (d * 10 + i) as u64))
+            .collect();
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let h = rvec(ns, 14_000 + d as u64);
+        let mut m1 = vec![0.0; d * d];
+        let mut m2 = vec![0.0; d * d];
+        simd::sym_rank1_upper_on(lo, &mut m1, d, &refs, &h);
+        simd::sym_rank1_upper_on(hi, &mut m2, d, &refs, &h);
+        for i in 0..d * d {
+            assert_eq!(
+                m1[i].to_bits(),
+                m2[i].to_bits(),
+                "sym_rank1_upper d={d} i={i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_limb_scatter_is_limb_identical_across_all_tiers() {
+    // The superaccumulate scatter is integer-exact: every available
+    // tier must produce the exact same limb array and specials flag,
+    // including at magnitude extremes and denormals.
+    use fednl::linalg::reduce::LIMBS;
+    for &n in &LENS {
+        let mut xs = rvec(n, 15_000 + n as u64);
+        if n >= 7 {
+            xs[0] = 1e300;
+            xs[2] = -1e300;
+            xs[4] = 5e-324;
+            xs[6] = -0.0;
+        }
+        let mut want: Option<([i64; LIMBS], u8)> = None;
+        for which in simd::Isa::ALL {
+            if !simd::isa_available(which) {
+                eprintln!(
+                    "limb-identity: skipping {} tier (unavailable)",
+                    which.name()
+                );
+                continue;
+            }
+            let mut limbs = [0i64; LIMBS];
+            let flags = simd::binned_accumulate_on(which, &mut limbs, &xs);
+            match &want {
+                None => want = Some((limbs, flags)),
+                Some((wl, wf)) => {
+                    assert_eq!(
+                        &limbs,
+                        wl,
+                        "{} limbs diverge at n={n}",
+                        which.name()
+                    );
+                    assert_eq!(
+                        flags,
+                        *wf,
+                        "{} specials flag diverges at n={n}",
+                        which.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Vectorized polynomial sigmoid: accuracy budget and cross-tier
+// bit-identity (the raw-speed rung's accuracy contract).
+// ---------------------------------------------------------------------
+
+/// ULP distance between two same-signed finite doubles (σ ∈ [0, 1], so
+/// the monotone bits-as-integer trick applies directly).
+fn ulp_dist(a: f64, b: f64) -> u64 {
+    (a.to_bits() as i64 - b.to_bits() as i64).unsigned_abs()
+}
+
+#[test]
+fn sigmoid_poly_accuracy_budget_vs_libm() {
+    // ≤ 3 ulp on the dense working range, ≤ 4 ulp over the full
+    // range, against the libm reference (`sigmoid_exact`) that
+    // `FEDNL_EXACT_EXP=1` restores. The scalar tier IS the polynomial
+    // reference (the vector tiers reproduce it bit for bit below), so
+    // the budget is asserted on it — no SIMD hardware required.
+    let mut z = Vec::new();
+    let steps = 160_000;
+    for i in 0..=steps {
+        z.push(-40.0 + 80.0 * i as f64 / steps as f64);
+    }
+    let mut out = vec![0.0; z.len()];
+    simd::sigmoid_neg_scan_on(simd::Isa::Scalar, &z, &mut out);
+    for (zi, oi) in z.iter().zip(&out) {
+        let want = simd::sigmoid_exact(-zi);
+        assert!(
+            ulp_dist(*oi, want) <= 3,
+            "sigmoid poly off by {} ulp at z={zi}: {oi} vs {want}",
+            ulp_dist(*oi, want)
+        );
+    }
+    // Full range (log-spaced magnitudes out to the saturation cliff).
+    let mut z = vec![0.0, -0.0];
+    let mut m = 1e-300f64;
+    while m < 745.0 {
+        z.push(m);
+        z.push(-m);
+        m *= 1.37;
+    }
+    let mut out = vec![0.0; z.len()];
+    simd::sigmoid_neg_scan_on(simd::Isa::Scalar, &z, &mut out);
+    for (zi, oi) in z.iter().zip(&out) {
+        let want = simd::sigmoid_exact(-zi);
+        assert!(
+            ulp_dist(*oi, want) <= 4,
+            "sigmoid poly off by {} ulp at z={zi}: {oi} vs {want}",
+            ulp_dist(*oi, want)
+        );
+    }
+    // Exact saturation and the exact midpoint.
+    let z = [746.0, 800.0, f64::INFINITY, -746.0, -800.0,
+        f64::NEG_INFINITY, 0.0, -0.0];
+    let mut out = vec![0.0; z.len()];
+    simd::sigmoid_neg_scan_on(simd::Isa::Scalar, &z, &mut out);
+    // out = σ(−z): big positive z saturates to 0, big negative to 1.
+    assert_eq!(out[0].to_bits(), 0.0f64.to_bits());
+    assert_eq!(out[1].to_bits(), 0.0f64.to_bits());
+    assert_eq!(out[2].to_bits(), 0.0f64.to_bits());
+    assert_eq!(out[3].to_bits(), 1.0f64.to_bits());
+    assert_eq!(out[4].to_bits(), 1.0f64.to_bits());
+    assert_eq!(out[5].to_bits(), 1.0f64.to_bits());
+    assert_eq!(out[6].to_bits(), 0.5f64.to_bits());
+    assert_eq!(out[7].to_bits(), 0.5f64.to_bits());
+}
+
+#[test]
+fn sigmoid_poly_is_bit_identical_across_tiers() {
+    // Elementwise polynomial with an identical operation sequence per
+    // lane: every available tier must agree with the scalar reference
+    // bit for bit, at every edge length.
+    for &n in &LENS {
+        let mut z = rvec(n, 16_000 + n as u64);
+        for (i, zi) in z.iter_mut().enumerate() {
+            *zi *= 1.0 + 30.0 * (i % 3) as f64; // reach the far tails
+        }
+        let mut want = vec![0.0; n];
+        simd::sigmoid_neg_scan_on(simd::Isa::Scalar, &z, &mut want);
+        for which in [simd::Isa::Avx2, simd::Isa::Avx512] {
+            if !tier_or_skip(which, "sigmoid-poly-identity") {
+                continue;
+            }
+            let mut got = vec![0.0; n];
+            simd::sigmoid_neg_scan_on(which, &z, &mut got);
+            for i in 0..n {
+                assert_eq!(
+                    got[i].to_bits(),
+                    want[i].to_bits(),
+                    "{} sigmoid poly diverges at n={n} i={i} z={}",
+                    which.name(),
+                    z[i]
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // Determinism: identical runs → bit-identical trajectories.
 // ---------------------------------------------------------------------
 
