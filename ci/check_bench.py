@@ -6,7 +6,12 @@ fails (exit 1) when any tracked metric regressed by more than the
 threshold:
 
 * ``BENCH_kernels.json``      — per-kernel ``simd_ns``   (key: name, n)
-* ``BENCH_coordinator.json``  — per-pool   ``total_s``   (key: pool)
+* ``BENCH_coordinator.json``  — per-pool   ``total_s`` **and**, where
+  emitted (the ``event100k`` readiness-transport scaling row),
+  ``idle_client_bytes`` (steady-state server-side bookkeeping per
+  registered client; a memory regression fails CI exactly like a time
+  regression) (key: pool, e.g. ``event100k`` /
+  ``event100k/idle_client_bytes``)
 * ``BENCH_shard.json``        — per-config ``total_s`` **and**
   ``payload_bytes`` (per-round shard→master payload; a payload
   regression fails CI exactly like a time regression) (key: key,
@@ -65,7 +70,11 @@ def extract(doc):
         rows = {}
         for p in doc["pools"]:
             rows[p["pool"]] = float(p["total_s"])
-        return "coordinator/total_s", rows
+            if p.get("idle_client_bytes") is not None:
+                rows[f"{p['pool']}/idle_client_bytes"] = float(
+                    p["idle_client_bytes"]
+                )
+        return "coordinator/total_s+idle", rows
     if "configs" in doc:
         rows = {}
         for c in doc["configs"]:
@@ -172,6 +181,18 @@ def self_test():
                        {"pool": "threaded", "total_s": 0.5}]}
     reg, _ = compare(cslow, cbase, 0.25)
     assert len(reg) == 1 and reg[0].lstrip().startswith("! seq"), reg
+    # The event-transport scaling row gates its idle-memory metric
+    # exactly like a timing: a >threshold per-client growth trips.
+    ibase = {"pools": [
+        {"pool": "event100k", "total_s": 10.0, "idle_client_bytes": 100.0}]}
+    igrow = {"pools": [
+        {"pool": "event100k", "total_s": 10.0, "idle_client_bytes": 200.0}]}
+    reg, _ = compare(igrow, ibase, 0.25)
+    assert (
+        len(reg) == 1 and "event100k/idle_client_bytes" in reg[0]
+    ), reg
+    reg, _ = compare(ibase, ibase, 0.25)
+    assert reg == [], reg
     # A tracked metric disappearing (schema drift / empty emit) must
     # FAIL the gate, not silently shrink its coverage.
     reg, notes = compare({"pools": []}, cbase, 0.25)

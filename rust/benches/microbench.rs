@@ -664,6 +664,9 @@ fn main() {
             aggregate_s: f64,
             overlap_s: f64,
             total_s: f64,
+            /// Steady-state server-side bookkeeping per registered
+            /// client (the event-transport scaling row only).
+            idle_client_bytes: Option<f64>,
         }
         let mut results: Vec<CoordRun> = Vec::new();
         {
@@ -675,6 +678,7 @@ fn main() {
                 aggregate_s: tr.aggregate_secs,
                 overlap_s: tr.overlap_secs,
                 total_s: tr.total_elapsed(),
+                idle_client_bytes: None,
             });
         }
         {
@@ -687,6 +691,7 @@ fn main() {
                 aggregate_s: tr.aggregate_secs,
                 overlap_s: tr.overlap_secs,
                 total_s: tr.total_elapsed(),
+                idle_client_bytes: None,
             });
         }
         // Speculative A/B. Larger d so the overlapped server work
@@ -746,15 +751,81 @@ fn main() {
                 aggregate_s: tr.aggregate_secs,
                 overlap_s: tr.overlap_secs,
                 total_s: tr.total_elapsed(),
+                idle_client_bytes: None,
             });
         }
         assert_eq!(
             grad_bits[0], grad_bits[1],
             "speculative trajectory diverged from the inline path"
         );
+        // Readiness-transport scaling row: 100k multiplexed clients
+        // over 16 loopback group sockets through one EventPool master
+        // (tiny per-client problem — the measured quantity is the
+        // transport: registration, two full rounds, and the idle
+        // per-client bookkeeping gated by ci/check_bench.py).
+        #[cfg(unix)]
+        {
+            use fednl::net::server::Bound;
+            use fednl::net::{run_mux_clients, EventPool};
+            let n_big = 100_000usize;
+            let groups = 16usize;
+            let d_big = 6usize;
+            let per = n_big / groups;
+            let bound = Bound::bind("127.0.0.1:0").unwrap();
+            let addr = bound.local_addr().unwrap().to_string();
+            let mut handles = Vec::new();
+            for g in 0..groups {
+                let addr = addr.clone();
+                handles.push(std::thread::spawn(move || {
+                    let mut clients: Vec<ClientState> = (g * per
+                        ..(g + 1) * per)
+                        .map(|i| {
+                            let sh = random_shard(d_big, 2, 3000 + i as u64);
+                            ClientState::new(
+                                i,
+                                Box::new(LogisticOracle::new(sh, 1e-3)),
+                                by_name("topk", d_big, 8, 7000 + i as u64)
+                                    .unwrap(),
+                                None,
+                            )
+                        })
+                        .collect();
+                    run_mux_clients(&mut clients, g as u32, &addr).unwrap();
+                }));
+            }
+            let mut pool = EventPool::accept(bound, n_big).unwrap();
+            let opts_big = Options { rounds: 2, ..Default::default() };
+            let tr = run_fednl_pool(
+                &mut pool,
+                &opts_big,
+                vec![0.0; d_big],
+                "coord/event100k",
+            );
+            let idle = pool.idle_bytes_per_client();
+            pool.shutdown();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert!(
+                tr.records.iter().all(|r| r.committed as usize == n_big),
+                "event100k: rounds incomplete"
+            );
+            results.push(CoordRun {
+                pool: "event100k".to_string(),
+                wait_s: tr.wait_secs,
+                aggregate_s: tr.aggregate_secs,
+                overlap_s: tr.overlap_secs,
+                total_s: tr.total_elapsed(),
+                idle_client_bytes: Some(idle),
+            });
+        }
         for r in &results {
+            let idle = r
+                .idle_client_bytes
+                .map(|b| format!("  idle {b:>7.1} B/client"))
+                .unwrap_or_default();
             println!(
-                "coordinator/{:<12} wait {:>9.3}ms  aggregate {:>9.3}ms  overlap {:>9.3}ms  total {:>9.3}ms",
+                "coordinator/{:<12} wait {:>9.3}ms  aggregate {:>9.3}ms  overlap {:>9.3}ms  total {:>9.3}ms{idle}",
                 r.pool,
                 r.wait_s * 1e3,
                 r.aggregate_s * 1e3,
@@ -770,13 +841,18 @@ fn main() {
             ));
             s.push_str("  \"pools\": [\n");
             for (i, r) in results.iter().enumerate() {
+                let idle = r
+                    .idle_client_bytes
+                    .map(|b| format!(", \"idle_client_bytes\": {b:.1}"))
+                    .unwrap_or_default();
                 s.push_str(&format!(
-                    "    {{\"pool\": \"{}\", \"wait_s\": {:.6}, \"aggregate_s\": {:.6}, \"overlap_s\": {:.6}, \"total_s\": {:.6}}}{}\n",
+                    "    {{\"pool\": \"{}\", \"wait_s\": {:.6}, \"aggregate_s\": {:.6}, \"overlap_s\": {:.6}, \"total_s\": {:.6}{}}}{}\n",
                     r.pool,
                     r.wait_s,
                     r.aggregate_s,
                     r.overlap_s,
                     r.total_s,
+                    idle,
                     if i + 1 < results.len() { "," } else { "" }
                 ));
             }

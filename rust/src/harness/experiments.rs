@@ -606,6 +606,7 @@ pub fn shard_smoke(cfg: &HarnessCfg) -> Result<String> {
             count: (hi - lo) as usize,
             listen: String::new(), // pre-bound below
             connect: master_addr.clone(),
+            event: false,
         };
         relay_handles.push(std::thread::spawn(move || {
             run_relay_on(relay_bound, &rcfg)
@@ -767,6 +768,311 @@ pub fn shard_smoke(cfg: &HarnessCfg) -> Result<String> {
     }
     out.push_str(&table.to_markdown());
     out.push_str(&format!("\nPer-shard stats written to {json_path}\n"));
+    Ok(out)
+}
+
+/// CI mux smoke: the readiness-based transport end to end. Two legs:
+///
+/// 1. **Bit-identity** (n = 6): FedNL under a [`FaultPlan`] + quorum
+///    policy on a sequential reference, on an `EventPool` master
+///    serving two `--mux` groups (3 clients each, one socket per
+///    group), and on an `EventPool` master serving six plain blocking
+///    clients. All three trajectories must be bit-identical — the
+///    transport changes *when* replies arrive, never *what* is
+///    computed.
+/// 2. **Scale** (CI: 3k, `--full`: 100k multiplexed clients): one
+///    master, a handful of group sockets, two real FedNL rounds.
+///    Asserts full registration, full commitment, and idle
+///    server-side bookkeeping ≤ 4 KiB per client
+///    (`EventPool::idle_bytes_per_client`).
+///
+/// Writes the per-round trace and the scale stats to
+/// `muxsmoke_trace.json` (CI artifact).
+#[cfg(not(unix))]
+pub fn mux_smoke(_cfg: &HarnessCfg) -> Result<String> {
+    anyhow::bail!("muxsmoke requires a unix host (epoll/poll)")
+}
+
+/// See the unix docs above.
+#[cfg(unix)]
+pub fn mux_smoke(cfg: &HarnessCfg) -> Result<String> {
+    use crate::algorithms::ClientState;
+    use crate::data::{
+        generate_synthetic, parse_libsvm_bytes, write_libsvm, Dataset,
+        SynthSpec,
+    };
+    use crate::net::{run_mux_clients, EventPool, MuxReport};
+    use crate::oracle::LogisticOracle;
+
+    cfg.ensure_out_dir()?;
+
+    // --- leg 1: bit-identity under faults --------------------------
+    let spec = ProblemSpec {
+        name: "muxsmoke",
+        d: 13,
+        n_i_full: 40,
+        n_clients_full: 6,
+        lam: 1e-3,
+    };
+    let mut p = prepare_problem(&spec, cfg)?;
+    p.n_clients = 6;
+    p.n_i = 40;
+    let d = p.d();
+    let x0 = vec![0.0; d];
+    let rounds = 20u64;
+    let plan_spec = "kill@2:1-8,drop@5:4";
+    let plan = FaultPlan::parse(plan_spec)?;
+    let policy = RoundPolicy {
+        quorum: Some(3),
+        deadline_ms: Some(2000),
+        on_missing: OnMissing::Drop,
+    };
+    let opts =
+        Options { rounds, track_loss: true, policy, ..Default::default() };
+
+    // Sequential reference.
+    let mut seq = FaultPool::new(
+        SeqPool::new(p.clients("topk", K_MULT, cfg)?),
+        plan.clone(),
+    );
+    let t_seq = run_fednl_pool(&mut seq, &opts, x0.clone(), "muxsmoke/seq");
+
+    // EventPool master ← two mux groups of 3 (one socket each).
+    let bound = Bound::bind("127.0.0.1:0")?;
+    let addr = bound.local_addr()?.to_string();
+    let mut all = p.clients("topk", K_MULT, cfg)?;
+    let tail = all.split_off(3);
+    let mut mux_handles = Vec::new();
+    for (gid, mut group) in [(0u32, all), (1u32, tail)] {
+        let addr = addr.clone();
+        mux_handles.push(std::thread::spawn(move || {
+            run_mux_clients(&mut group, gid, &addr)
+        }));
+    }
+    let mut ev =
+        FaultPool::new(EventPool::accept(bound, p.n_clients)?, plan.clone());
+    let t_mux = run_fednl_pool(&mut ev, &opts, x0.clone(), "muxsmoke/mux");
+    ev.into_inner().shutdown();
+    for h in mux_handles {
+        let _ = h.join();
+    }
+
+    // EventPool master ← six plain blocking clients (the unchanged
+    // `fednl client` path over the readiness loop).
+    let bound = Bound::bind("127.0.0.1:0")?;
+    let addr = bound.local_addr()?.to_string();
+    let plain_handles = spawn_shard_clients(&p, "topk", &addr, false, cfg)?;
+    let mut evp =
+        FaultPool::new(EventPool::accept(bound, p.n_clients)?, plan);
+    let t_plain =
+        run_fednl_pool(&mut evp, &opts, x0.clone(), "muxsmoke/plain");
+    evp.into_inner().shutdown();
+    for h in plain_handles {
+        let _ = h.join();
+    }
+
+    // Same plan, same policy → bit-identical trajectories. (Byte
+    // columns are not compared: mux groups pre-reduce into SHARD_SUM
+    // frames, so the wire payload deliberately differs — that cut is
+    // the point.)
+    for (t, name) in [(&t_mux, "event+mux"), (&t_plain, "event+plain")] {
+        anyhow::ensure!(
+            t.records.len() == t_seq.records.len(),
+            "muxsmoke: {name} ran {} rounds vs seq {}",
+            t.records.len(),
+            t_seq.records.len()
+        );
+        for (a, b) in t_seq.records.iter().zip(&t.records) {
+            anyhow::ensure!(
+                a.grad_norm.to_bits() == b.grad_norm.to_bits()
+                    && a.loss.to_bits() == b.loss.to_bits()
+                    && a.committed == b.committed
+                    && a.missing == b.missing,
+                "muxsmoke: {name} diverged from seq at round {}: \
+                 grad {:.17e} vs {:.17e}, committed {}/{} vs {}/{}",
+                a.round,
+                a.grad_norm,
+                b.grad_norm,
+                a.committed,
+                a.committed + a.missing,
+                b.committed,
+                b.committed + b.missing
+            );
+        }
+    }
+    let lost: u32 = t_seq.records.iter().map(|r| r.missing).sum();
+    anyhow::ensure!(lost > 0, "muxsmoke: no fault ever engaged");
+    let first = t_seq.records.first().map(|r| r.grad_norm).unwrap_or(0.0);
+    let last = t_seq.last_grad_norm();
+    anyhow::ensure!(
+        last.is_finite() && last < first * 1e-2,
+        "muxsmoke: no convergence under faults ({first:.3e} → {last:.3e})"
+    );
+
+    // --- leg 2: scale ----------------------------------------------
+    // One master, `groups` sockets, `total` registered clients, two
+    // real FedNL rounds on a tiny problem (d = 6, n_i = 2).
+    let (total, groups) = match cfg.scale {
+        Scale::Full => (100_000usize, 16usize),
+        Scale::Ci => (3_000usize, 6usize),
+    };
+    let per_group = total / groups;
+    let lam = 1e-3;
+    let synth = generate_synthetic(&SynthSpec {
+        d_raw: 5,
+        n_samples: total * 2,
+        density: 0.5,
+        noise: 1.0,
+        seed: cfg.seed,
+    });
+    let text = write_libsvm(&synth);
+    let (samples, d_raw) = parse_libsvm_bytes(text.as_bytes())?;
+    let mut ds = Dataset::from_libsvm(&samples, d_raw.max(5));
+    ds.reshuffle(cfg.seed ^ 0xD5);
+    let sd = ds.d;
+    let mut shards = ds.split_even(total)?;
+    let bound = Bound::bind("127.0.0.1:0")?;
+    let addr = bound.local_addr()?.to_string();
+    let mut scale_handles: Vec<
+        std::thread::JoinHandle<Result<MuxReport>>,
+    > = Vec::new();
+    for g in 0..groups {
+        let chunk: Vec<crate::data::ClientShard> =
+            shards.drain(0..per_group).collect();
+        let addr = addr.clone();
+        let seed = cfg.seed;
+        let gid = g as u32;
+        scale_handles.push(std::thread::spawn(move || {
+            let mut clients: Vec<ClientState> = chunk
+                .into_iter()
+                .map(|sh| -> Result<ClientState> {
+                    let id = sh.client_id;
+                    let comp = crate::compressors::by_name(
+                        "topk",
+                        sd,
+                        K_MULT,
+                        seed + id as u64,
+                    )?;
+                    Ok(ClientState::new(
+                        id,
+                        Box::new(LogisticOracle::new(sh, lam)),
+                        comp,
+                        None,
+                    ))
+                })
+                .collect::<Result<_>>()?;
+            run_mux_clients(&mut clients, gid, &addr)
+        }));
+    }
+    let reg_sw = Stopwatch::start();
+    let mut big = EventPool::accept(bound, total)?;
+    let reg_secs = reg_sw.elapsed_secs();
+    anyhow::ensure!(
+        big.n_clients() == total && big.dead_clients().is_empty(),
+        "muxsmoke: scale registration incomplete"
+    );
+    let scale_sw = Stopwatch::start();
+    let scale_opts = Options { rounds: 2, ..Default::default() };
+    let t_scale = run_fednl_pool(
+        &mut big,
+        &scale_opts,
+        vec![0.0; sd],
+        "muxsmoke/scale",
+    );
+    let scale_secs = scale_sw.elapsed_secs();
+    let idle_bytes = big.idle_bytes_per_client();
+    big.shutdown();
+    for h in scale_handles {
+        match h.join() {
+            Ok(r) => drop(r?),
+            Err(_) => anyhow::bail!("muxsmoke: scale group panicked"),
+        }
+    }
+    anyhow::ensure!(
+        t_scale.records.len() == 2
+            && t_scale
+                .records
+                .iter()
+                .all(|r| r.committed as usize == total && r.missing == 0),
+        "muxsmoke: scale rounds incomplete"
+    );
+    anyhow::ensure!(
+        t_scale.last_grad_norm().is_finite(),
+        "muxsmoke: scale run diverged"
+    );
+    anyhow::ensure!(
+        idle_bytes <= 4096.0,
+        "muxsmoke: idle bookkeeping {idle_bytes:.1} B/client exceeds 4 KiB"
+    );
+
+    // Artifact.
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"plan\": \"{plan_spec}\",\n"));
+    json.push_str(
+        "  \"policy\": {\"quorum\": 3, \"deadline_ms\": 2000, \
+         \"on_missing\": \"drop\"},\n",
+    );
+    json.push_str(&format!(
+        "  \"n_clients\": {}, \"rounds\": {rounds},\n",
+        p.n_clients
+    ));
+    json.push_str(
+        "  \"configs\": [\"seq\", \"event+mux\", \"event+plain\"], \
+         \"bit_identical\": true,\n",
+    );
+    json.push_str(&format!(
+        "  \"scale\": {{\"clients\": {total}, \"groups\": {groups}, \
+         \"register_s\": {reg_secs:.3}, \"rounds_s\": {scale_secs:.3}, \
+         \"idle_bytes_per_client\": {idle_bytes:.1}}},\n"
+    ));
+    json.push_str("  \"trace\": [\n");
+    for (i, r) in t_seq.records.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"round\": {}, \"grad_norm\": {:e}, \"committed\": {}, \
+             \"missing\": {}}}{}\n",
+            r.round,
+            r.grad_norm,
+            r.committed,
+            r.missing,
+            if i + 1 < t_seq.records.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let json_path = format!("{}/muxsmoke_trace.json", cfg.out_dir);
+    std::fs::write(&json_path, &json)?;
+
+    let mut out = format!(
+        "## Mux smoke — FedNL through the readiness transport under \
+         `{plan_spec}` (n={}, quorum=3, r={rounds})\n\n",
+        p.n_clients
+    );
+    let mut table = Table::new(&[
+        "Topology",
+        "||∇f||_final",
+        "Rounds",
+        "Lost contributions",
+        "Bit-identical to seq",
+    ]);
+    for (t, name) in [
+        (&t_seq, "seq"),
+        (&t_mux, "event master, 2 mux groups"),
+        (&t_plain, "event master, 6 plain clients"),
+    ] {
+        table.row(&[
+            name.to_string(),
+            sci(t.last_grad_norm()),
+            format!("{}", t.records.len()),
+            format!("{}", t.records.iter().map(|r| r.missing).sum::<u32>()),
+            "yes".to_string(),
+        ]);
+    }
+    out.push_str(&table.to_markdown());
+    out.push_str(&format!(
+        "\nScale: {total} multiplexed clients over {groups} sockets — \
+         registered in {reg_secs:.2}s, 2 rounds in {scale_secs:.2}s, \
+         idle bookkeeping {idle_bytes:.1} B/client \
+         (details in {json_path})\n"
+    ));
     Ok(out)
 }
 

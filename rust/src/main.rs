@@ -69,21 +69,25 @@ fn print_usage() {
          \x20 master     --listen ADDR --clients N --algo ... [--rounds R] [--tol T]\n\
          \x20            [--shards S] [--relay-slack-ms 2000] [--quorum Q]\n\
          \x20            [--deadline-ms MS] [--on-missing P] [--fault-plan SPEC]\n\
-         \x20            [--speculate]\n\
+         \x20            [--speculate] [--event]\n\
          \x20 relay      --connect MASTER --listen ADDR --shard I --base B --clients K\n\
-         \x20            (shard aggregator: clients of ids [B, B+K) connect here)\n\
+         \x20            [--event] (shard aggregator: ids [B, B+K) connect here)\n\
          \x20 client     --connect ADDR --id I --data SHARD [--algo fednl|fednl-pp]\n\
-         \x20            [--compressor topk] [--k-mult 8] [--lam 1e-3]\n\
+         \x20            [--compressor topk] [--k-mult 8] [--lam 1e-3] [--mux N]\n\
          \x20 verify     --data FILE [--lam 1e-3]   (finite-difference oracle check)\n\
          \x20 experiment table1|table2|table3|table5|fig1..fig12|costmodel|tcpsmoke|\n\
-         \x20            faultsmoke|shardsmoke|all [--full] [--out-dir results]\n\
-         \x20            [--pjrt] [--threads N] [--seq]\n\
+         \x20            faultsmoke|shardsmoke|muxsmoke|all [--full]\n\
+         \x20            [--out-dir results] [--pjrt] [--threads N] [--seq]\n\
          \x20 sysinfo\n\n\
          FAULT PLANS (--fault-plan): comma-separated kill@R:C[-R2] | drop@R:C |\n\
          delay@R:C:MS — deterministic master-side injection (see coordinator::faults).\n\
          SHARD TIER: `train --shards S` shards in-process; for TCP, run\n\
          `master --shards S`, one `relay` per shard, and point each client at\n\
-         its shard's relay. Trajectories are bit-identical to unsharded runs."
+         its shard's relay. Trajectories are bit-identical to unsharded runs.\n\
+         EVENT TRANSPORT: `master --event` serves every connection from one\n\
+         readiness loop (epoll); `client --mux N` hosts N simulated clients\n\
+         of ids [I, I+N) behind one socket — 100k+ clients, one master,\n\
+         bit-identical trajectories."
     );
 }
 
@@ -434,6 +438,31 @@ fn cmd_master(args: &Args) -> Result<()> {
             run_master_algo(&mut pool, args, &opts, algo, n_clients, seed)?;
         pool.into_inner().shutdown();
         trace
+    } else if args.flag("event") {
+        // Readiness transport: every socket (plain clients and
+        // `--mux` groups alike) served from one epoll loop.
+        #[cfg(unix)]
+        {
+            println!(
+                "master: waiting for {n_clients} clients (event transport) \
+                 on {listen} ..."
+            );
+            let bound = fednl::net::server::Bound::bind(listen)?;
+            let mut pool = FaultPool::new(
+                fednl::net::EventPool::accept(bound, n_clients)?,
+                plan,
+            );
+            println!("master: all clients registered (d = {})", pool.dim());
+            let trace = run_master_algo(
+                &mut pool, args, &opts, algo, n_clients, seed,
+            )?;
+            pool.into_inner().shutdown();
+            trace
+        }
+        #[cfg(not(unix))]
+        {
+            bail!("--event requires a unix host (epoll/poll)");
+        }
     } else {
         println!("master: waiting for {n_clients} clients on {listen} ...");
         let mut pool =
@@ -466,6 +495,7 @@ fn cmd_relay(args: &Args) -> Result<()> {
             .get("connect")
             .context("--connect (master address) required")?
             .to_string(),
+        event: args.flag("event"),
     };
     println!(
         "relay {}: serving clients [{}, {}) on {}, master {}",
@@ -498,6 +528,59 @@ fn cmd_client(args: &Args) -> Result<()> {
     let algo = args.get_or("algo", "fednl");
     // Interleave dataset parsing with connection establishment (§7).
     let (samples, d_raw) = parse_libsvm_file(data)?;
+    let mux = args.get_usize("mux", 0)?;
+    if mux > 0 {
+        // Multiplexed mode: host `mux` simulated clients of global ids
+        // [id, id+mux) behind ONE socket. The shard file is split
+        // evenly — the in-process clients share the parse, the
+        // process, and the frame codec, so idle cost per hosted
+        // client is their local data plus algorithm state only.
+        let mut ds = Dataset::from_libsvm(&samples, d_raw);
+        ds.reshuffle(seed);
+        let d = ds.d;
+        let shards = ds.split_even(mux)?;
+        let x0 = vec![0.0; d];
+        let report = match algo {
+            "fednl-pp" => {
+                let mut clients: Vec<PPClientState> = shards
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, sh)| -> Result<PPClientState> {
+                        let gid = id + i;
+                        Ok(PPClientState::new(
+                            gid,
+                            Box::new(LogisticOracle::new(sh, lam)),
+                            by_name(comp, d, k_mult, seed + gid as u64)?,
+                            None,
+                            &x0,
+                        ))
+                    })
+                    .collect::<Result<_>>()?;
+                fednl::net::run_mux_clients(&mut clients, id as u32, addr)?
+            }
+            _ => {
+                let mut clients: Vec<ClientState> = shards
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, sh)| -> Result<ClientState> {
+                        let gid = id + i;
+                        Ok(ClientState::new(
+                            gid,
+                            Box::new(LogisticOracle::new(sh, lam)),
+                            by_name(comp, d, k_mult, seed + gid as u64)?,
+                            None,
+                        ))
+                    })
+                    .collect::<Result<_>>()?;
+                fednl::net::run_mux_clients(&mut clients, id as u32, addr)?
+            }
+        };
+        println!(
+            "mux group {id} (+{mux}): sent {} B, received {} B",
+            report.up_sent, report.up_recv
+        );
+        return Ok(());
+    }
     let ds = Dataset::from_libsvm(&samples, d_raw);
     let d = ds.d;
     let shard = fednl::data::ClientShard { client_id: id, at: ds.at };
@@ -560,6 +643,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             "tcpsmoke" => harness::tcp_smoke(&cfg)?,
             "faultsmoke" => harness::fault_smoke(&cfg)?,
             "shardsmoke" => harness::shard_smoke(&cfg)?,
+            "muxsmoke" => harness::mux_smoke(&cfg)?,
             f if f.starts_with("fig") => {
                 let n: usize = f[3..].parse().context("figN")?;
                 if n <= 3 {
@@ -578,9 +662,10 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         ))
     };
     let all = [
-        "costmodel", "tcpsmoke", "faultsmoke", "shardsmoke", "table1",
-        "table2", "table3", "table5", "fig1", "fig2", "fig3", "fig4",
-        "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
+        "costmodel", "tcpsmoke", "faultsmoke", "shardsmoke", "muxsmoke",
+        "table1", "table2", "table3", "table5", "fig1", "fig2", "fig3",
+        "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
+        "fig12",
     ];
     let list: Vec<&str> =
         if which == "all" { all.to_vec() } else { vec![which] };

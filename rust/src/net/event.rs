@@ -1,0 +1,1480 @@
+//! Readiness-based master transport: one thread, 100k+ clients.
+//!
+//! [`EventPool`] replaces the blocking per-connection reads of
+//! `net::server::RemotePool` with a single epoll-driven loop (see
+//! `net::sys`) running **inline on the master thread** inside the
+//! `ClientPool` calls — no event threads, no locks, no tokio. Every
+//! socket is non-blocking; each connection owns a small read/write
+//! state machine over the shared frame codec:
+//!
+//! * **read**: whatever the socket has is pulled into one scratch
+//!   buffer shared by all connections and reassembled by the
+//!   connection's [`FrameDecoder`] — partial-frame memory is allocated
+//!   lazily per frame and released on completion, so an *idle*
+//!   connection holds no payload buffers;
+//! * **write**: outbound frames are pre-encoded once
+//!   ([`encode_frame`]) and reference-counted — a round broadcast is
+//!   one `Arc` queued to every participant, not one copy per client.
+//!   A partial write parks the remainder as `(frame, offset)` and
+//!   arms `EPOLLOUT`; the interest is dropped as soon as the queue
+//!   drains.
+//!
+//! # Two connection kinds, one listener
+//!
+//! * **Plain** (`REGISTER`) — one remote client per socket, exactly
+//!   the frames `RemotePool` speaks, so existing `fednl client`
+//!   processes work unchanged.
+//! * **Group** (`SHARD_REGISTER`) — a client-side multiplexer
+//!   (`net::mux`, CLI `client --mux N`) hosting a contiguous
+//!   partition of simulated clients behind one socket. The group
+//!   speaks the `SHARD_*` batch frames — the same codecs the relay
+//!   tier's upward face uses — so a round costs one command frame and
+//!   one (pre-reduced or batched) reply per *group*, and per-idle-
+//!   client server state shrinks to a few bytes of bookkeeping
+//!   (`conn_of` slot + awaiting flag), metered honestly by
+//!   [`EventPool::idle_bytes_per_client`].
+//!
+//! # Determinism
+//!
+//! The pool changes *when* replies arrive, never *what* is computed:
+//! every cross-client reduction still folds through the exact
+//! reproducible accumulators (`linalg::reduce`), and the engine's
+//! buffer-and-commit layer already accepts arrival-order replies.
+//! Trajectories are therefore bit-identical to `SeqPool` /
+//! `ThreadedPool` / blocking `RemotePool` runs, with and without
+//! faults and shards (asserted by `tests/integration_event.rs`).
+//!
+//! # Liveness
+//!
+//! The `RemotePool` contract carries over: a reply missing the
+//! installed deadline, a dead connection, or a `DEREGISTER`
+//! announcement retires the connection and certifies its round
+//! participants missing ([`ClientPool::take_missing`]); the listener
+//! stays open and re-registrations (plain ids *or* whole groups) are
+//! admitted in [`ClientPool::prepare_round`]. Group replies get the
+//! relay tier's extra forwarding slack on top of the deadline (the
+//! group must first wait out its own members).
+
+#![cfg(unix)]
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::framing::{encode_frame, Channel, FrameDecoder};
+use super::relay::DEFAULT_RELAY_SLACK;
+use super::server::Bound;
+use super::sys::{Poller, Ready};
+use super::wire::{self, c2s, s2c};
+use crate::algorithms::{ClientMsg, RoundSum};
+use crate::coordinator::{ClientFamily, ClientPool, RoundMode};
+
+/// `conn_of` sentinel: client slot currently unregistered.
+const NO_CONN: u32 = u32::MAX;
+
+/// Read scratch shared by every connection (sized to a few frames of
+/// typical round traffic; bigger frames just take several reads).
+const SCRATCH_BYTES: usize = 64 << 10;
+
+/// What a connection multiplexes.
+enum ConnKind {
+    /// One remote client (global id).
+    Plain { id: u32 },
+    /// A mux group hosting the global-id partition `[lo, hi)`; `sid`
+    /// is the group id it registered with (echoed in its batch frames).
+    Group { sid: u32, lo: u32, hi: u32 },
+}
+
+/// Per-connection non-blocking state machine.
+struct Conn {
+    stream: TcpStream,
+    kind: ConnKind,
+    decoder: FrameDecoder,
+    /// Outbound frames not yet fully written: (shared encoded frame,
+    /// byte offset already written).
+    outq: VecDeque<(Arc<Vec<u8>>, usize)>,
+    /// Whether `EPOLLOUT` interest is currently armed.
+    want_write: bool,
+    bytes_sent: u64,
+    bytes_received: u64,
+}
+
+impl Conn {
+    /// Steady-state bookkeeping bytes this connection holds (the
+    /// idle-memory meter; excludes the kernel's socket buffers).
+    fn idle_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.decoder.buffered_bytes()
+            + self
+                .outq
+                .iter()
+                .map(|(f, _)| f.capacity())
+                .sum::<usize>()
+    }
+}
+
+/// What the pool currently expects from its connections (one logical
+/// exchange is in flight at a time — the `ClientPool` call structure
+/// guarantees it).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Expect {
+    /// Between exchanges: only DEREGISTER is meaningful.
+    Idle,
+    /// A round is in flight: MSG (plain) / SHARD_MSG / SHARD_SUM.
+    Round,
+    /// A probe broadcast: one reply per connection, with the
+    /// kind-specific tag.
+    Probe { plain: u8, group: u8 },
+}
+
+/// Readiness-based master pool (see module docs).
+pub struct EventPool {
+    poller: Poller,
+    /// Kept open (non-blocking) for rejoins, polled in
+    /// `prepare_round` — never registered with the poller, so pending
+    /// connections cannot wake the round loop.
+    listener: TcpListener,
+    /// Connections; the vector index is the poller token.
+    conns: Vec<Option<Conn>>,
+    /// Per client slot (global id − base): connection index, or
+    /// [`NO_CONN`]. Four bytes per client — the dominant per-idle-
+    /// client cost.
+    conn_of: Vec<u32>,
+    base: u32,
+    d: usize,
+    family: ClientFamily,
+    alpha: f64,
+    mode: RoundMode,
+    deadline: Option<Duration>,
+    /// Extra patience for group replies on top of `deadline` (the
+    /// group waits out its own members first — relay-tier rule).
+    slack: Duration,
+
+    // --- round in flight ---
+    /// Per client slot: reply still owed this round.
+    awaiting: Vec<bool>,
+    outstanding: usize,
+    /// Per connection: participant ids handed to a *group* this round.
+    group_await: Vec<Vec<u32>>,
+    ready_msgs: Vec<ClientMsg>,
+    ready_sums: Vec<RoundSum>,
+    /// Armed at submit: plain replies due; groups get `+ slack`.
+    due_plain: Option<Instant>,
+    due_group: Option<Instant>,
+
+    // --- probe in flight ---
+    expect: Expect,
+    /// Per connection: probe reply payload, once arrived.
+    probe_replies: Vec<Option<Vec<u8>>>,
+
+    missing: Vec<u32>,
+    rejoined: Vec<u32>,
+    retired_bytes: (u64, u64),
+    scratch: Vec<u8>,
+    events: Vec<Ready>,
+}
+
+impl EventPool {
+    /// Accept registrations until the partition `[base, base+n)` is
+    /// fully covered — by plain clients, mux groups, or any mix — then
+    /// switch every socket to the non-blocking state machine.
+    pub fn accept_base(
+        bound: Bound,
+        n_clients: usize,
+        base: u32,
+    ) -> Result<Self> {
+        let listener = bound.into_listener();
+        let mut conns: Vec<Option<Conn>> = Vec::new();
+        let mut conn_of = vec![NO_CONN; n_clients];
+        let mut covered = 0usize;
+        let mut d = 0usize;
+        let mut family: Option<ClientFamily> = None;
+        let mut check_family =
+            |family: &mut Option<ClientFamily>, f: u8| -> Result<()> {
+                let f = match f {
+                    wire::FAMILY_FEDNL => ClientFamily::FedNL,
+                    _ => ClientFamily::PP,
+                };
+                match *family {
+                    None => *family = Some(f),
+                    Some(prev) => anyhow::ensure!(
+                        prev == f,
+                        "registration as {f:?} after earlier {prev:?}: \
+                         pools are family-homogeneous"
+                    ),
+                }
+                Ok(())
+            };
+        while covered < n_clients {
+            let (stream, _) = listener.accept()?;
+            let mut ch = Channel::new(stream)?;
+            let (tag, payload) = ch.recv()?;
+            let kind = match tag {
+                c2s::REGISTER => {
+                    let (id, dim, fam) = wire::decode_register(&payload)?;
+                    anyhow::ensure!(
+                        id >= base && ((id - base) as usize) < n_clients,
+                        "client id {id} outside partition [{base}, {})",
+                        base as usize + n_clients
+                    );
+                    let slot = (id - base) as usize;
+                    anyhow::ensure!(
+                        conn_of[slot] == NO_CONN,
+                        "duplicate client id {id}"
+                    );
+                    if d == 0 {
+                        d = dim as usize;
+                    } else {
+                        anyhow::ensure!(
+                            d == dim as usize,
+                            "dimension mismatch"
+                        );
+                    }
+                    check_family(&mut family, fam)?;
+                    conn_of[slot] = conns.len() as u32;
+                    covered += 1;
+                    ConnKind::Plain { id }
+                }
+                c2s::SHARD_REGISTER => {
+                    let (sid, lo, count, dim, fam) =
+                        wire::decode_shard_register(&payload)?;
+                    let hi = lo + count;
+                    anyhow::ensure!(
+                        lo >= base
+                            && ((hi - base) as usize) <= n_clients,
+                        "group [{lo}, {hi}) outside partition \
+                         [{base}, {})",
+                        base as usize + n_clients
+                    );
+                    if d == 0 {
+                        d = dim as usize;
+                    } else {
+                        anyhow::ensure!(
+                            d == dim as usize,
+                            "dimension mismatch"
+                        );
+                    }
+                    check_family(&mut family, fam)?;
+                    for ci in lo..hi {
+                        let slot = (ci - base) as usize;
+                        anyhow::ensure!(
+                            conn_of[slot] == NO_CONN,
+                            "duplicate client id {ci} (group overlap)"
+                        );
+                        conn_of[slot] = conns.len() as u32;
+                    }
+                    covered += count as usize;
+                    ConnKind::Group { sid, lo, hi }
+                }
+                other => anyhow::bail!(
+                    "expected REGISTER or SHARD_REGISTER, got tag {other}"
+                ),
+            };
+            let (stream, sent, received) = ch.into_parts();
+            stream
+                .set_nonblocking(true)
+                .context("set_nonblocking on registered connection")?;
+            conns.push(Some(Conn {
+                stream,
+                kind,
+                decoder: FrameDecoder::new(),
+                outq: VecDeque::new(),
+                want_write: false,
+                bytes_sent: sent,
+                bytes_received: received,
+            }));
+        }
+        listener
+            .set_nonblocking(true)
+            .context("set_nonblocking on retained listener")?;
+        let mut poller = Poller::new().context("poller")?;
+        for (idx, c) in conns.iter().enumerate() {
+            let c = c.as_ref().unwrap();
+            poller.register(
+                c.stream.as_raw_fd(),
+                idx as u64,
+                true,
+                false,
+            )?;
+        }
+        let n_conns = conns.len();
+        Ok(Self {
+            poller,
+            listener,
+            conns,
+            conn_of,
+            base,
+            d,
+            family: family.context("no registrations")?,
+            alpha: 0.0,
+            mode: RoundMode::Atoms,
+            deadline: None,
+            slack: DEFAULT_RELAY_SLACK,
+            awaiting: vec![false; n_clients],
+            outstanding: 0,
+            group_await: vec![Vec::new(); n_conns],
+            ready_msgs: Vec::new(),
+            ready_sums: Vec::new(),
+            due_plain: None,
+            due_group: None,
+            expect: Expect::Idle,
+            probe_replies: vec![None; n_conns],
+            missing: Vec::new(),
+            rejoined: Vec::new(),
+            retired_bytes: (0, 0),
+            scratch: vec![0u8; SCRATCH_BYTES],
+            events: Vec::new(),
+        })
+    }
+
+    /// As [`EventPool::accept_base`] for the canonical `[0, n)`
+    /// partition.
+    pub fn accept(bound: Bound, n_clients: usize) -> Result<Self> {
+        Self::accept_base(bound, n_clients, 0)
+    }
+
+    /// Configure the group-reply slack (mirrors
+    /// [`super::relay::RelayPool::set_relay_slack`]).
+    pub fn set_group_slack(&mut self, slack: Duration) {
+        self.slack = slack.max(Duration::from_millis(1));
+    }
+
+    /// Estimated steady-state server-side bookkeeping bytes per
+    /// registered client: the pool's per-client tables plus every
+    /// connection's state machine, divided by the client count. This
+    /// is the honest per-idle-client meter — process RSS would also
+    /// charge whatever else lives in the process (e.g. the in-process
+    /// mux threads of a loopback benchmark).
+    pub fn idle_bytes_per_client(&self) -> f64 {
+        let mut total = std::mem::size_of::<Self>()
+            + self.conn_of.capacity() * std::mem::size_of::<u32>()
+            + self.awaiting.capacity()
+            + self.probe_replies.capacity()
+                * std::mem::size_of::<Option<Vec<u8>>>()
+            + self.scratch.capacity()
+            + (self.missing.capacity() + self.rejoined.capacity())
+                * std::mem::size_of::<u32>();
+        for c in self.conns.iter().flatten() {
+            total += std::mem::size_of::<Option<Conn>>() + c.idle_bytes();
+        }
+        for g in &self.group_await {
+            total += g.capacity() * std::mem::size_of::<u32>();
+        }
+        total as f64 / self.conn_of.len().max(1) as f64
+    }
+
+    /// Politely shut all live connections down (groups forward to
+    /// their hosted clients).
+    pub fn shutdown(&mut self) {
+        let frame = Arc::new(encode_frame(s2c::SHUTDOWN, &[]));
+        for idx in 0..self.conns.len() {
+            if self.conns[idx].is_some() {
+                let _ = self.queue_frame(idx, frame.clone());
+            }
+        }
+        // Give queued bytes a brief chance to flush.
+        let until = Instant::now() + Duration::from_millis(200);
+        while self.conns.iter().flatten().any(|c| !c.outq.is_empty()) {
+            let now = Instant::now();
+            if now >= until {
+                break;
+            }
+            let _ = self.pump(Some(until - now));
+        }
+    }
+
+    // --- connection plumbing -----------------------------------------
+
+    /// Retire connection `idx`: fold its byte meters, release its
+    /// client slots, certify its in-flight participants missing.
+    fn retire(&mut self, idx: usize) {
+        let Some(conn) = self.conns[idx].take() else {
+            return;
+        };
+        self.poller.deregister(conn.stream.as_raw_fd());
+        self.retired_bytes.0 += conn.bytes_received;
+        self.retired_bytes.1 += conn.bytes_sent;
+        let (lo, hi) = match conn.kind {
+            ConnKind::Plain { id } => (id, id + 1),
+            ConnKind::Group { lo, hi, .. } => (lo, hi),
+        };
+        for ci in lo..hi {
+            let slot = (ci - self.base) as usize;
+            self.conn_of[slot] = NO_CONN;
+            if self.awaiting[slot] {
+                self.awaiting[slot] = false;
+                self.outstanding -= 1;
+                self.missing.push(ci);
+            }
+        }
+        self.group_await[idx].clear();
+    }
+
+    /// Queue one pre-encoded frame to connection `idx`, writing as
+    /// much as the socket takes right now. Returns `false` (and
+    /// retires the connection) on a write error.
+    fn queue_frame(&mut self, idx: usize, frame: Arc<Vec<u8>>) -> bool {
+        let Some(conn) = self.conns[idx].as_mut() else {
+            return false;
+        };
+        conn.bytes_sent += frame.len() as u64;
+        if !conn.outq.is_empty() {
+            conn.outq.push_back((frame, 0));
+            return true;
+        }
+        let mut off = 0usize;
+        loop {
+            match conn.stream.write(&frame[off..]) {
+                Ok(0) => {
+                    self.retire(idx);
+                    return false;
+                }
+                Ok(n) => {
+                    off += n;
+                    if off == frame.len() {
+                        return true;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    conn.outq.push_back((frame, off));
+                    self.set_write_interest(idx, true);
+                    return true;
+                }
+                Err(_) => {
+                    self.retire(idx);
+                    return false;
+                }
+            }
+        }
+    }
+
+    fn set_write_interest(&mut self, idx: usize, want: bool) {
+        let Some(conn) = self.conns[idx].as_mut() else {
+            return;
+        };
+        if conn.want_write == want {
+            return;
+        }
+        conn.want_write = want;
+        let _ = self.poller.reregister(
+            conn.stream.as_raw_fd(),
+            idx as u64,
+            true,
+            want,
+        );
+    }
+
+    /// Resume the write queue after an `EPOLLOUT` wakeup.
+    fn flush_writes(&mut self, idx: usize) {
+        loop {
+            let Some(conn) = self.conns[idx].as_mut() else {
+                return;
+            };
+            let Some((frame, off)) = conn.outq.front_mut() else {
+                self.set_write_interest(idx, false);
+                return;
+            };
+            match conn.stream.write(&frame[*off..]) {
+                Ok(0) => {
+                    self.retire(idx);
+                    return;
+                }
+                Ok(n) => {
+                    *off += n;
+                    if *off == frame.len() {
+                        conn.outq.pop_front();
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(_) => {
+                    self.retire(idx);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Drain the socket's readable bytes into frames and dispatch
+    /// them. Retires the connection on EOF, error, or any protocol
+    /// violation.
+    fn pump_reads(&mut self, idx: usize) {
+        loop {
+            if self.conns[idx].is_none() {
+                return;
+            }
+            let frames = {
+                let conn = self.conns[idx].as_mut().unwrap();
+                match conn.stream.read(&mut self.scratch) {
+                    Ok(0) => {
+                        // EOF: clean close between frames, truncation
+                        // mid-frame — retired either way.
+                        self.retire(idx);
+                        return;
+                    }
+                    Ok(n) => {
+                        conn.bytes_received += n as u64;
+                        match conn.decoder.push(&self.scratch[..n]) {
+                            Ok(frames) => frames,
+                            Err(_) => {
+                                self.retire(idx);
+                                return;
+                            }
+                        }
+                    }
+                    Err(e)
+                        if e.kind() == ErrorKind::Interrupted =>
+                    {
+                        continue;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        return;
+                    }
+                    Err(_) => {
+                        self.retire(idx);
+                        return;
+                    }
+                }
+            };
+            for (tag, payload) in frames {
+                if self.conns[idx].is_none() {
+                    return;
+                }
+                self.handle_frame(idx, tag, payload);
+            }
+        }
+    }
+
+    /// Dispatch one decoded frame against the current expectation.
+    fn handle_frame(&mut self, idx: usize, tag: u8, payload: Vec<u8>) {
+        // A graceful leave is legal at any time.
+        if tag == c2s::DEREGISTER {
+            self.retire(idx);
+            return;
+        }
+        match self.expect {
+            Expect::Round => self.handle_round_frame(idx, tag, payload),
+            Expect::Probe { plain, group } => {
+                let want = match self.conns[idx].as_ref().unwrap().kind {
+                    ConnKind::Plain { .. } => plain,
+                    ConnKind::Group { .. } => group,
+                };
+                if tag == want && self.probe_replies[idx].is_none() {
+                    self.probe_replies[idx] = Some(payload);
+                } else {
+                    // Wrong tag or duplicate reply: protocol
+                    // violation, same rule as `recv_expect`.
+                    self.retire(idx);
+                }
+            }
+            Expect::Idle => {
+                // Unsolicited traffic between exchanges: network-
+                // facing input, retire rather than panic.
+                self.retire(idx);
+            }
+        }
+    }
+
+    /// Round-reply state machine (per connection kind).
+    fn handle_round_frame(
+        &mut self,
+        idx: usize,
+        tag: u8,
+        payload: Vec<u8>,
+    ) {
+        let kind_ok = match self.conns[idx].as_ref().unwrap().kind {
+            ConnKind::Plain { id } => {
+                if tag != c2s::MSG {
+                    false
+                } else {
+                    match wire::decode_client_msg(&payload) {
+                        Ok(m) if m.client_id == id as usize => {
+                            let slot = (id - self.base) as usize;
+                            if self.awaiting[slot] {
+                                self.awaiting[slot] = false;
+                                self.outstanding -= 1;
+                                self.ready_msgs.push(m);
+                                true
+                            } else {
+                                false // reply nobody asked for
+                            }
+                        }
+                        _ => false, // undecodable or misidentified
+                    }
+                }
+            }
+            ConnKind::Group { sid, .. } => match tag {
+                c2s::SHARD_MSG => {
+                    self.absorb_group_msgs(idx, sid, &payload)
+                }
+                c2s::SHARD_SUM => {
+                    self.absorb_group_sum(idx, sid, &payload)
+                }
+                _ => false,
+            },
+        };
+        if !kind_ok {
+            self.retire(idx);
+        }
+    }
+
+    /// Validate and absorb a group's per-client atom batch (mirrors
+    /// `RelayPool::drain`'s checks). Returns false on any violation.
+    fn absorb_group_msgs(
+        &mut self,
+        idx: usize,
+        sid: u32,
+        payload: &[u8],
+    ) -> bool {
+        let Ok((got_sid, msgs, mut missing)) =
+            wire::decode_shard_msg(payload)
+        else {
+            return false;
+        };
+        let part = std::mem::take(&mut self.group_await[idx]);
+        let mut accounted: Vec<u32> = msgs
+            .iter()
+            .map(|m| m.client_id as u32)
+            .chain(missing.iter().copied())
+            .collect();
+        accounted.sort_unstable();
+        let dups = accounted.windows(2).any(|w| w[0] == w[1]);
+        let valid = got_sid == sid
+            && !part.is_empty()
+            && !dups
+            && accounted.iter().all(|c| part.contains(c));
+        if !valid {
+            self.group_await[idx] = part;
+            return false;
+        }
+        // Anything the group left unaccounted is certified here so
+        // the round can close (it must not happen: the group certifies
+        // its own losses).
+        for &c in &part {
+            if !accounted.contains(&c) {
+                missing.push(c);
+            }
+        }
+        for &c in &part {
+            let slot = (c - self.base) as usize;
+            debug_assert!(self.awaiting[slot]);
+            self.awaiting[slot] = false;
+            self.outstanding -= 1;
+        }
+        self.missing.extend(missing);
+        self.ready_msgs.extend(msgs);
+        true
+    }
+
+    /// Validate and absorb a group's pre-reduced round sum (mirrors
+    /// `RelayPool::drain_sums`'s checks).
+    fn absorb_group_sum(
+        &mut self,
+        idx: usize,
+        sid: u32,
+        payload: &[u8],
+    ) -> bool {
+        let Ok((got_sid, mut sum, missing)) =
+            wire::decode_shard_sum(payload, self.d)
+        else {
+            return false;
+        };
+        let part = std::mem::take(&mut self.group_await[idx]);
+        let mut miss_sorted = missing.clone();
+        miss_sorted.sort_unstable();
+        let dups = miss_sorted.windows(2).any(|w| w[0] == w[1]);
+        let valid = got_sid == sid
+            && !part.is_empty()
+            && !dups
+            && sum.committed as usize + missing.len() == part.len()
+            && missing.iter().all(|c| part.contains(c));
+        if !valid {
+            self.group_await[idx] = part;
+            return false;
+        }
+        for &c in &part {
+            let slot = (c - self.base) as usize;
+            debug_assert!(self.awaiting[slot]);
+            self.awaiting[slot] = false;
+            self.outstanding -= 1;
+        }
+        self.missing.extend(missing);
+        if sum.committed > 0 {
+            sum.wire_bytes = crate::net::FRAME_HEADER_BYTES
+                + payload.len() as u64;
+            self.ready_sums.push(sum);
+        }
+        true
+    }
+
+    /// One readiness wait + event dispatch. Returns after the kernel
+    /// reported (or the timeout expired).
+    fn pump(&mut self, timeout: Option<Duration>) -> Result<()> {
+        let mut events = std::mem::take(&mut self.events);
+        events.clear();
+        let res = self.poller.wait(&mut events, timeout);
+        for ev in &events {
+            let idx = ev.token as usize;
+            if ev.writable {
+                self.flush_writes(idx);
+            }
+            if ev.readable {
+                self.pump_reads(idx);
+            }
+        }
+        self.events = events;
+        res.map(|_| ()).context("poller wait")
+    }
+
+    /// Expire overdue round participants: plain connections at the
+    /// deadline, groups at deadline + slack (they wait out their own
+    /// members first). Mirrors the blocking pools' per-reply timeouts.
+    fn expire_overdue(&mut self, now: Instant) {
+        let plain_over =
+            self.due_plain.is_some_and(|t| now >= t);
+        let group_over =
+            self.due_group.is_some_and(|t| now >= t);
+        if !plain_over && !group_over {
+            return;
+        }
+        for idx in 0..self.conns.len() {
+            let Some(conn) = self.conns[idx].as_ref() else {
+                continue;
+            };
+            let overdue = match conn.kind {
+                ConnKind::Plain { id } => {
+                    plain_over
+                        && self.awaiting[(id - self.base) as usize]
+                }
+                ConnKind::Group { .. } => {
+                    group_over && !self.group_await[idx].is_empty()
+                }
+            };
+            if overdue {
+                self.retire(idx);
+            }
+        }
+    }
+
+    /// Next armed due-instant that is still relevant.
+    fn next_due(&self) -> Option<Instant> {
+        let plain_waiting = self.conns.iter().flatten().any(|c| {
+            matches!(c.kind, ConnKind::Plain { id }
+                if self.awaiting[(id - self.base) as usize])
+        });
+        let group_waiting = (0..self.conns.len())
+            .any(|i| !self.group_await[i].is_empty());
+        match (
+            self.due_plain.filter(|_| plain_waiting),
+            self.due_group.filter(|_| group_waiting),
+        ) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    // --- broadcast + collect (probe scaffolding) ----------------------
+
+    /// Queue one pre-encoded command to every live connection of
+    /// either kind; returns the connection indices queued.
+    fn ask_all(&mut self, tag: u8, payload: &[u8]) -> Vec<usize> {
+        let frame = Arc::new(encode_frame(tag, payload));
+        let mut asked = Vec::new();
+        for idx in 0..self.conns.len() {
+            if self.conns[idx].is_some()
+                && self.queue_frame(idx, frame.clone())
+            {
+                asked.push(idx);
+            }
+        }
+        asked
+    }
+
+    /// Pump until every asked connection has replied (or been
+    /// retired). Unbounded like the blocking pools' probe receives —
+    /// WARM_START legitimately exceeds round deadlines. Returns
+    /// `(conn index, payload)` in ascending connection order.
+    fn collect_probe(
+        &mut self,
+        asked: &[usize],
+        plain: u8,
+        group: u8,
+    ) -> Vec<(usize, Vec<u8>)> {
+        self.expect = Expect::Probe { plain, group };
+        loop {
+            let done = asked.iter().all(|&i| {
+                self.conns[i].is_none()
+                    || self.probe_replies[i].is_some()
+            });
+            if done {
+                break;
+            }
+            if self.pump(None).is_err() {
+                break;
+            }
+        }
+        self.expect = Expect::Idle;
+        let mut out = Vec::with_capacity(asked.len());
+        for &i in asked {
+            if let Some(p) = self.probe_replies[i].take() {
+                out.push((i, p));
+            }
+        }
+        out
+    }
+
+    /// Global ids a connection covers.
+    fn conn_range(&self, idx: usize) -> (u32, u32) {
+        match self.conns[idx].as_ref().unwrap().kind {
+            ConnKind::Plain { id } => (id, id + 1),
+            ConnKind::Group { lo, hi, .. } => (lo, hi),
+        }
+    }
+
+    // --- rejoin admission --------------------------------------------
+
+    /// Non-blocking accept loop (bounded per poll, like
+    /// `RemotePool::poll_rejoins`): re-admit dead plain ids or whole
+    /// dead groups.
+    fn poll_rejoins(&mut self) {
+        for _ in 0..self.conn_of.len().max(1) {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if let Some((lo, hi)) = self.admit_rejoin(stream) {
+                        self.rejoined.extend(lo..hi);
+                    }
+                }
+                Err(_) => break, // WouldBlock or transient: done
+            }
+        }
+    }
+
+    /// Bounded blocking handshake for one reconnecting peer; returns
+    /// the re-admitted global-id range. Malformed or conflicting
+    /// registrations drop the connection (network-facing input).
+    fn admit_rejoin(
+        &mut self,
+        stream: TcpStream,
+    ) -> Option<(u32, u32)> {
+        stream.set_nonblocking(false).ok()?;
+        let handshake =
+            self.deadline.unwrap_or(Duration::from_secs(1));
+        stream.set_read_timeout(Some(handshake)).ok()?;
+        let mut ch = Channel::new(stream).ok()?;
+        let (tag, payload) = ch.recv().ok()?;
+        let (kind, lo, hi) = match tag {
+            c2s::REGISTER => {
+                let (id, dim, fam) =
+                    wire::decode_register(&payload).ok()?;
+                let slot =
+                    id.checked_sub(self.base)? as usize;
+                let fam = match fam {
+                    wire::FAMILY_FEDNL => ClientFamily::FedNL,
+                    _ => ClientFamily::PP,
+                };
+                let ok = slot < self.conn_of.len()
+                    && self.conn_of[slot] == NO_CONN
+                    && dim as usize == self.d
+                    && fam == self.family;
+                if !ok {
+                    return None;
+                }
+                (ConnKind::Plain { id }, id, id + 1)
+            }
+            c2s::SHARD_REGISTER => {
+                let (sid, lo, count, dim, fam) =
+                    wire::decode_shard_register(&payload).ok()?;
+                let hi = lo + count;
+                let fam = match fam {
+                    wire::FAMILY_FEDNL => ClientFamily::FedNL,
+                    _ => ClientFamily::PP,
+                };
+                let lo_slot = lo.checked_sub(self.base)? as usize;
+                let hi_slot = hi.checked_sub(self.base)? as usize;
+                let ok = hi_slot <= self.conn_of.len()
+                    && (lo_slot..hi_slot)
+                        .all(|s| self.conn_of[s] == NO_CONN)
+                    && dim as usize == self.d
+                    && fam == self.family;
+                if !ok {
+                    return None;
+                }
+                (ConnKind::Group { sid, lo, hi }, lo, hi)
+            }
+            _ => return None,
+        };
+        // α resync, as in `RemotePool::admit_rejoin`: a fresh-state
+        // rejoiner must train with the negotiated α.
+        if self.alpha > 0.0 {
+            let sent = ch
+                .send(s2c::SET_ALPHA, &wire::encode_scalar(self.alpha))
+                .is_ok();
+            let acked = sent
+                && matches!(ch.recv(), Ok((t, _)) if t == c2s::ACK);
+            if !acked {
+                return None;
+            }
+        }
+        let (stream, sent, received) = ch.into_parts();
+        stream.set_read_timeout(None).ok()?;
+        stream.set_nonblocking(true).ok()?;
+        // Reuse a retired token slot when one exists.
+        let idx = match self.conns.iter().position(|c| c.is_none()) {
+            Some(i) => i,
+            None => {
+                self.conns.push(None);
+                self.group_await.push(Vec::new());
+                self.probe_replies.push(None);
+                self.conns.len() - 1
+            }
+        };
+        self.poller
+            .register(stream.as_raw_fd(), idx as u64, true, false)
+            .ok()?;
+        self.conns[idx] = Some(Conn {
+            stream,
+            kind,
+            decoder: FrameDecoder::new(),
+            outq: VecDeque::new(),
+            want_write: false,
+            bytes_sent: sent,
+            bytes_received: received,
+        });
+        for ci in lo..hi {
+            self.conn_of[(ci - self.base) as usize] = idx as u32;
+        }
+        Some((lo, hi))
+    }
+}
+
+impl ClientPool for EventPool {
+    fn n_clients(&self) -> usize {
+        self.conn_of.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn family(&self) -> ClientFamily {
+        self.family
+    }
+
+    fn kind_name(&self) -> &'static str {
+        "event"
+    }
+
+    fn default_alpha(&self) -> f64 {
+        // NaN = "ask the clients" sentinel (see `RemotePool`).
+        if self.alpha > 0.0 {
+            self.alpha
+        } else {
+            f64::NAN
+        }
+    }
+
+    fn set_alpha(&mut self, alpha: f64) -> f64 {
+        let payload = wire::encode_scalar(alpha);
+        let asked = self.ask_all(s2c::SET_ALPHA, &payload);
+        let replies =
+            self.collect_probe(&asked, c2s::ACK, c2s::ACK);
+        let mut echoes = Vec::with_capacity(replies.len());
+        for (_, p) in replies {
+            if let Ok(a) = wire::decode_scalar(&p) {
+                echoes.push(a);
+            }
+        }
+        let (resolved, homogeneous) =
+            wire::fold_alpha_echoes(alpha, echoes);
+        // Heterogeneous echoes: install the resolved α uniformly
+        // (second exchange only in that case — see `RemotePool`).
+        if !homogeneous && resolved.is_finite() && resolved > 0.0 {
+            let payload = wire::encode_scalar(resolved);
+            let asked = self.ask_all(s2c::SET_ALPHA, &payload);
+            let _ = self.collect_probe(&asked, c2s::ACK, c2s::ACK);
+        }
+        self.alpha = resolved;
+        resolved
+    }
+
+    fn prepare_round(&mut self, _round: u64) {
+        self.poll_rejoins();
+    }
+
+    fn dead_clients(&self) -> Vec<u32> {
+        self.conn_of
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c == NO_CONN)
+            .map(|(slot, _)| self.base + slot as u32)
+            .collect()
+    }
+
+    fn take_missing(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.missing)
+    }
+
+    fn take_rejoined(&mut self) -> Vec<u32> {
+        let mut out = std::mem::take(&mut self.rejoined);
+        out.sort_unstable();
+        out
+    }
+
+    fn set_reply_deadline(&mut self, deadline: Option<Duration>) {
+        self.deadline =
+            deadline.map(|d| d.max(Duration::from_millis(1)));
+    }
+
+    fn set_round_mode(&mut self, mode: RoundMode) {
+        self.mode = mode;
+    }
+
+    fn submit_round(
+        &mut self,
+        x: &[f64],
+        subset: Option<&[u32]>,
+        round: u64,
+        need_loss: bool,
+    ) {
+        assert!(
+            self.outstanding == 0
+                && self.ready_msgs.is_empty()
+                && self.ready_sums.is_empty(),
+            "previous round not fully drained"
+        );
+        self.expect = Expect::Round;
+        // The plain-client broadcast is encoded **once** and shared by
+        // every participant's write queue (built lazily: an all-group
+        // topology never encodes it).
+        let mut plain_frame: Option<Arc<Vec<u8>>> = None;
+        // Per-group participant lists, collected first so each group
+        // gets exactly one command frame.
+        let mut group_parts: Vec<(usize, Vec<u32>)> = Vec::new();
+        let all: Vec<u32>;
+        let participants: &[u32] = match subset {
+            Some(s) => s,
+            None => {
+                all = (0..self.conn_of.len() as u32)
+                    .map(|slot| self.base + slot)
+                    .collect();
+                &all
+            }
+        };
+        for &ci in participants {
+            let slot = (ci - self.base) as usize;
+            let c = self.conn_of[slot];
+            if c == NO_CONN {
+                self.missing.push(ci);
+                continue;
+            }
+            let idx = c as usize;
+            match self.conns[idx].as_ref().unwrap().kind {
+                ConnKind::Plain { .. } => {
+                    let frame = plain_frame
+                        .get_or_insert_with(|| {
+                            Arc::new(encode_frame(
+                                s2c::ROUND,
+                                &wire::encode_round(
+                                    x, round, need_loss,
+                                ),
+                            ))
+                        })
+                        .clone();
+                    self.awaiting[slot] = true;
+                    self.outstanding += 1;
+                    // A failed send retires the connection, which
+                    // flips the awaiting flag into a missing cert.
+                    let _ = self.queue_frame(idx, frame);
+                }
+                ConnKind::Group { .. } => {
+                    match group_parts
+                        .iter_mut()
+                        .find(|(i, _)| *i == idx)
+                    {
+                        Some((_, part)) => part.push(ci),
+                        None => group_parts.push((idx, vec![ci])),
+                    }
+                }
+            }
+        }
+        let deadline_ms = self
+            .deadline
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        for (idx, part) in group_parts {
+            for &ci in &part {
+                self.awaiting[(ci - self.base) as usize] = true;
+            }
+            self.outstanding += part.len();
+            self.group_await[idx] = part;
+            let payload = wire::encode_shard_round(
+                x,
+                round,
+                need_loss,
+                self.mode == RoundMode::Sums,
+                deadline_ms,
+                &self.group_await[idx],
+            );
+            let frame =
+                Arc::new(encode_frame(s2c::SHARD_ROUND, &payload));
+            let _ = self.queue_frame(idx, frame);
+        }
+        let now = Instant::now();
+        self.due_plain = self.deadline.map(|d| now + d);
+        self.due_group =
+            self.deadline.map(|d| now + d + self.slack);
+    }
+
+    fn drain(&mut self) -> Vec<ClientMsg> {
+        loop {
+            if !self.ready_msgs.is_empty() {
+                return std::mem::take(&mut self.ready_msgs);
+            }
+            if self.outstanding == 0 {
+                self.expect = Expect::Idle;
+                return Vec::new();
+            }
+            let now = Instant::now();
+            self.expire_overdue(now);
+            if self.outstanding == 0 {
+                continue;
+            }
+            let timeout = self
+                .next_due()
+                .map(|t| t.saturating_duration_since(now));
+            if self.pump(timeout).is_err() {
+                // Poller failure: certify everything outstanding so
+                // the engine can close the round.
+                for idx in 0..self.conns.len() {
+                    if self.conns[idx].is_some() {
+                        self.retire(idx);
+                    }
+                }
+            }
+        }
+    }
+
+    fn drain_sums(&mut self) -> Vec<RoundSum> {
+        loop {
+            if !self.ready_sums.is_empty() {
+                return std::mem::take(&mut self.ready_sums);
+            }
+            if !self.ready_msgs.is_empty() {
+                // Plain participants reply with atoms even in sum
+                // mode; fold them here (exact, so grouping-invariant).
+                let batch = std::mem::take(&mut self.ready_msgs);
+                return vec![RoundSum::from_msgs(&batch)];
+            }
+            if self.outstanding == 0 {
+                self.expect = Expect::Idle;
+                return Vec::new();
+            }
+            let now = Instant::now();
+            self.expire_overdue(now);
+            if self.outstanding == 0 {
+                continue;
+            }
+            let timeout = self
+                .next_due()
+                .map(|t| t.saturating_duration_since(now));
+            if self.pump(timeout).is_err() {
+                for idx in 0..self.conns.len() {
+                    if self.conns[idx].is_some() {
+                        self.retire(idx);
+                    }
+                }
+            }
+        }
+    }
+
+    fn eval_loss_each(&mut self, x: &[f64]) -> Vec<(u32, f64)> {
+        let payload = wire::encode_vec(x);
+        let asked = self.ask_all(s2c::EVAL_LOSS, &payload);
+        let replies = self.collect_probe(
+            &asked,
+            c2s::LOSS,
+            c2s::SHARD_LOSSES,
+        );
+        let mut parts = Vec::new();
+        for (idx, p) in replies {
+            match self.conns[idx].as_ref().unwrap().kind {
+                ConnKind::Plain { id } => {
+                    match wire::decode_scalar(&p) {
+                        Ok(l) => parts.push((id, l)),
+                        Err(_) => self.retire(idx),
+                    }
+                }
+                ConnKind::Group { .. } => {
+                    match wire::decode_id_scalars(&p) {
+                        Ok(batch) => parts.extend(batch),
+                        Err(_) => self.retire(idx),
+                    }
+                }
+            }
+        }
+        parts
+    }
+
+    fn loss_grad_each(
+        &mut self,
+        x: &[f64],
+    ) -> Vec<(u32, f64, Vec<f64>)> {
+        let payload = wire::encode_vec(x);
+        let asked = self.ask_all(s2c::LOSS_GRAD, &payload);
+        let replies = self.collect_probe(
+            &asked,
+            c2s::GRAD,
+            c2s::SHARD_GRADS,
+        );
+        let mut parts = Vec::new();
+        for (idx, p) in replies {
+            match self.conns[idx].as_ref().unwrap().kind {
+                ConnKind::Plain { id } => {
+                    match wire::decode_loss_grad(&p) {
+                        Ok((l, g)) => parts.push((id, l, g)),
+                        Err(_) => self.retire(idx),
+                    }
+                }
+                ConnKind::Group { .. } => {
+                    match wire::decode_id_scalar_vecs(&p) {
+                        Ok(batch) => parts.extend(batch),
+                        Err(_) => self.retire(idx),
+                    }
+                }
+            }
+        }
+        parts
+    }
+
+    fn loss_grad_sum(
+        &mut self,
+        x: &[f64],
+    ) -> (
+        crate::linalg::reduce::RepAcc,
+        crate::linalg::reduce::RepVec,
+        u32,
+    ) {
+        // Pre-reduced probe: groups fold next to their clients and
+        // ship one exact accumulator pair (O(d) per group instead of
+        // O(count·d)); plain clients upload dense gradients folded
+        // here. Exactness keeps every mix bit-identical to the flat
+        // fold.
+        let payload = wire::encode_vec(x);
+        let mut asked_plain = Vec::new();
+        let mut asked_group = Vec::new();
+        for idx in 0..self.conns.len() {
+            let Some(conn) = self.conns[idx].as_ref() else {
+                continue;
+            };
+            match conn.kind {
+                ConnKind::Plain { .. } => asked_plain.push(idx),
+                ConnKind::Group { .. } => asked_group.push(idx),
+            }
+        }
+        let plain_frame =
+            Arc::new(encode_frame(s2c::LOSS_GRAD, &payload));
+        let group_frame =
+            Arc::new(encode_frame(s2c::LOSS_GRAD_SUM, &payload));
+        let mut asked = Vec::new();
+        for &idx in &asked_plain {
+            if self.queue_frame(idx, plain_frame.clone()) {
+                asked.push(idx);
+            }
+        }
+        for &idx in &asked_group {
+            if self.queue_frame(idx, group_frame.clone()) {
+                asked.push(idx);
+            }
+        }
+        asked.sort_unstable();
+        let replies = self.collect_probe(
+            &asked,
+            c2s::GRAD,
+            c2s::SHARD_GRAD_SUM,
+        );
+        let mut loss = crate::linalg::reduce::RepAcc::new();
+        let mut grad = crate::linalg::reduce::RepVec::new(self.d);
+        let mut count = 0u32;
+        for (idx, p) in replies {
+            match self.conns[idx].as_ref().unwrap().kind {
+                ConnKind::Plain { .. } => {
+                    match wire::decode_loss_grad(&p) {
+                        Ok((l, g)) if g.len() == self.d => {
+                            loss.accumulate(l);
+                            grad.accumulate(&g);
+                            count += 1;
+                        }
+                        _ => self.retire(idx),
+                    }
+                }
+                ConnKind::Group { .. } => {
+                    match wire::decode_shard_grad_sum(&p, self.d) {
+                        Ok((c, l, g)) if g.len() == self.d => {
+                            loss.merge(l);
+                            grad.merge(g);
+                            count += c;
+                        }
+                        _ => self.retire(idx),
+                    }
+                }
+            }
+        }
+        (loss, grad, count)
+    }
+
+    fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {
+        let payload = wire::encode_vec(x);
+        let asked = self.ask_all(s2c::WARM_START, &payload);
+        let replies = self.collect_probe(
+            &asked,
+            c2s::WARM,
+            c2s::SHARD_WARM,
+        );
+        let mut packs = Vec::new();
+        for (idx, p) in replies {
+            match self.conns[idx].as_ref().unwrap().kind {
+                ConnKind::Plain { .. } => match wire::decode_vec(&p) {
+                    Ok(v) => packs.push(v),
+                    Err(_) => self.retire(idx),
+                },
+                ConnKind::Group { .. } => {
+                    match wire::decode_vec_batch(&p) {
+                        Ok(batch) => packs.extend(batch),
+                        Err(_) => self.retire(idx),
+                    }
+                }
+            }
+        }
+        packs
+    }
+
+    fn init_state(&mut self) -> Vec<(f64, Vec<f64>)> {
+        assert!(
+            self.conn_of.iter().all(|&c| c != NO_CONN),
+            "init_state requires all clients registered"
+        );
+        let asked = self.ask_all(s2c::STATE, &[]);
+        let replies = self.collect_probe(
+            &asked,
+            c2s::STATE,
+            c2s::SHARD_STATES,
+        );
+        let mut parts: Vec<(u32, f64, Vec<f64>)> =
+            Vec::with_capacity(self.conn_of.len());
+        for (idx, p) in replies {
+            match self.conns[idx].as_ref().unwrap().kind {
+                ConnKind::Plain { id } => {
+                    let (l, g) = wire::decode_loss_grad(&p)
+                        .expect("state decode");
+                    parts.push((id, l, g));
+                }
+                ConnKind::Group { .. } => parts.extend(
+                    wire::decode_id_scalar_vecs(&p)
+                        .expect("states decode"),
+                ),
+            }
+        }
+        parts.sort_by_key(|&(id, _, _)| id);
+        assert!(
+            parts.iter().enumerate().all(|(i, &(id, _, _))| {
+                id as usize == self.base as usize + i
+            }),
+            "init_state: incomplete client coverage"
+        );
+        parts.into_iter().map(|(_, l, g)| (l, g)).collect()
+    }
+
+    fn pull_state(&mut self, client: u32) -> Option<(f64, Vec<f64>)> {
+        let slot = (client - self.base) as usize;
+        let c = self.conn_of[slot];
+        if c == NO_CONN {
+            return None;
+        }
+        let idx = c as usize;
+        let (cmd, payload, plain, group) =
+            match self.conns[idx].as_ref().unwrap().kind {
+                ConnKind::Plain { .. } => (
+                    s2c::STATE,
+                    Vec::new(),
+                    c2s::STATE,
+                    c2s::STATE,
+                ),
+                ConnKind::Group { .. } => {
+                    let mut w =
+                        crate::utils::ByteWriter::with_capacity(4);
+                    w.put_u32(client);
+                    (
+                        s2c::SHARD_PULL,
+                        w.into_vec(),
+                        c2s::SHARD_PULLED,
+                        c2s::SHARD_PULLED,
+                    )
+                }
+            };
+        let frame = Arc::new(encode_frame(cmd, &payload));
+        if !self.queue_frame(idx, frame) {
+            return None;
+        }
+        // Bounded wait (deadline or 5 s): a rejoiner that stalls again
+        // must not take down the run the fault layer protects.
+        let budget =
+            self.deadline.unwrap_or(Duration::from_secs(5));
+        let due = Instant::now() + budget;
+        self.expect = Expect::Probe { plain, group };
+        while self.conns[idx].is_some()
+            && self.probe_replies[idx].is_none()
+        {
+            let now = Instant::now();
+            if now >= due {
+                break;
+            }
+            if self.pump(Some(due - now)).is_err() {
+                break;
+            }
+        }
+        self.expect = Expect::Idle;
+        let Some(p) = self.probe_replies[idx].take() else {
+            self.retire(idx);
+            return None;
+        };
+        let state = match self.conns[idx].as_ref().unwrap().kind {
+            ConnKind::Plain { .. } => {
+                wire::decode_loss_grad(&p).ok().map(Some)
+            }
+            ConnKind::Group { .. } => {
+                wire::decode_shard_pulled(&p).ok()
+            }
+        };
+        match state {
+            Some(s) => s,
+            None => {
+                self.retire(idx);
+                None
+            }
+        }
+    }
+
+    fn transport_bytes(&self) -> Option<(u64, u64)> {
+        let up = self.retired_bytes.0
+            + self
+                .conns
+                .iter()
+                .flatten()
+                .map(|c| c.bytes_received)
+                .sum::<u64>();
+        let down = self.retired_bytes.1
+            + self
+                .conns
+                .iter()
+                .flatten()
+                .map(|c| c.bytes_sent)
+                .sum::<u64>();
+        Some((up, down))
+    }
+}

@@ -4,8 +4,23 @@
 //! buffered and flushed once per frame; reads use `read_exact`. The
 //! stream is configured with `TCP_NODELAY` (paper §7: Nagle disabled —
 //! frames are explicitly sized, the OS must not delay small ones).
+//!
+//! Two faces share the codec:
+//!
+//! * [`Channel`] — the blocking face (clients, relays, the blocking
+//!   `RemotePool`). Its write path handles partial writes explicitly:
+//!   a `write` may return short, `Interrupted`, or `WouldBlock` (a
+//!   socket with `SO_SNDTIMEO`, or one switched to non-blocking mode
+//!   by a peer of the event loop) — [`write_full`] retries until the
+//!   frame is fully handed to the kernel, so a frame can never be
+//!   silently truncated mid-stream.
+//! * [`FrameDecoder`] + [`encode_frame`] — the incremental face the
+//!   readiness-based `EventPool` drives: bytes arrive in arbitrary
+//!   chunks from non-blocking reads and are reassembled into frames;
+//!   outbound frames are pre-encoded once (header + payload in one
+//!   buffer) and written as far as the socket accepts.
 
-use std::io::{Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::TcpStream;
 
 use anyhow::{Context, Result};
@@ -18,6 +33,49 @@ pub const MAX_FRAME: usize = 256 << 20;
 /// drivers' logical byte accounting includes this so it matches the
 /// transport's metered counts exactly.
 pub const FRAME_HEADER_BYTES: u64 = 5;
+
+/// Encode one complete frame (header + payload) into a single buffer.
+/// The event loop pre-encodes every outbound frame this way so a round
+/// broadcast is built **once** and shared (`Arc`) across connections,
+/// and partial writes resume from a byte offset into one contiguous
+/// slice.
+pub fn encode_frame(tag: u8, payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() <= MAX_FRAME, "frame too large");
+    let mut buf = Vec::with_capacity(5 + payload.len());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.push(tag);
+    buf.extend_from_slice(payload);
+    buf
+}
+
+/// Write `buf` to completion on a (nominally) blocking stream,
+/// handling the three partial-write outcomes `Write::write` is allowed
+/// to produce:
+///
+/// * a short `Ok(n)` — resume at `buf[n..]`;
+/// * `Interrupted` — retry immediately (no bytes were consumed);
+/// * `WouldBlock` — the socket has a send timeout, or was left
+///   non-blocking by a platform quirk: wait until it is writable and
+///   resume. Treating this as an error would desynchronize the frame
+///   stream after a *partial* header/payload write.
+///
+/// `Ok(0)` from a non-empty buffer means the peer is gone — an error,
+/// not a silent truncation.
+pub fn write_full(stream: &mut TcpStream, buf: &[u8]) -> Result<()> {
+    let mut off = 0;
+    while off < buf.len() {
+        match stream.write(&buf[off..]) {
+            Ok(0) => anyhow::bail!("write returned 0: peer closed"),
+            Ok(n) => off += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                super::sys::wait_writable(stream)?;
+            }
+            Err(e) => return Err(e).context("frame write"),
+        }
+    }
+    Ok(())
+}
 
 /// A framed, metered TCP channel.
 pub struct Channel {
@@ -37,8 +95,10 @@ impl Channel {
         let mut header = [0u8; 5];
         header[..4].copy_from_slice(&(payload.len() as u32).to_le_bytes());
         header[4] = tag;
-        self.stream.write_all(&header)?;
-        self.stream.write_all(payload)?;
+        // Explicit partial-write handling (write_full) — a short write
+        // must resume, never silently truncate the frame stream.
+        write_full(&mut self.stream, &header)?;
+        write_full(&mut self.stream, payload)?;
         self.stream.flush()?;
         self.bytes_sent += FRAME_HEADER_BYTES + payload.len() as u64;
         Ok(())
@@ -70,6 +130,90 @@ impl Channel {
             .peer_addr()
             .map(|a| a.to_string())
             .unwrap_or_else(|_| "?".into())
+    }
+
+    /// Surrender the raw stream plus the byte meters accumulated so
+    /// far. The event loop admits connections through a blocking
+    /// [`Channel`] handshake, then takes the socket over into its
+    /// non-blocking state machine — seeding the connection's meters
+    /// with the handshake bytes keeps `transport_bytes` cumulative.
+    pub fn into_parts(self) -> (TcpStream, u64, u64) {
+        (self.stream, self.bytes_sent, self.bytes_received)
+    }
+}
+
+/// Incremental frame reassembly for non-blocking reads.
+///
+/// The event loop reads whatever the socket has into a shared scratch
+/// buffer and feeds it here; the decoder buffers a partial header in a
+/// 5-byte array and allocates the payload buffer **lazily** (only once
+/// a header announces a frame, sized exactly to it, released when the
+/// frame completes) — an idle connection holds no payload memory,
+/// which is what keeps per-idle-client server memory flat.
+#[derive(Default)]
+pub struct FrameDecoder {
+    header: [u8; 5],
+    header_len: usize,
+    payload: Vec<u8>,
+}
+
+impl FrameDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed one chunk; returns every frame completed by it (possibly
+    /// none, possibly several). A frame announcing more than
+    /// [`MAX_FRAME`] bytes is a protocol error — the caller retires
+    /// the connection.
+    pub fn push(
+        &mut self,
+        mut chunk: &[u8],
+    ) -> Result<Vec<(u8, Vec<u8>)>> {
+        let mut out = Vec::new();
+        while !chunk.is_empty() {
+            if self.header_len < 5 {
+                let take = (5 - self.header_len).min(chunk.len());
+                self.header[self.header_len..self.header_len + take]
+                    .copy_from_slice(&chunk[..take]);
+                self.header_len += take;
+                chunk = &chunk[take..];
+                if self.header_len < 5 {
+                    break;
+                }
+                let len = u32::from_le_bytes(
+                    self.header[..4].try_into().unwrap(),
+                ) as usize;
+                anyhow::ensure!(len <= MAX_FRAME, "oversized frame: {len}");
+                self.payload = Vec::with_capacity(len);
+            }
+            let need = self.announced_len() - self.payload.len();
+            let take = need.min(chunk.len());
+            self.payload.extend_from_slice(&chunk[..take]);
+            chunk = &chunk[take..];
+            if self.payload.len() == self.announced_len() {
+                let tag = self.header[4];
+                out.push((tag, std::mem::take(&mut self.payload)));
+                self.header_len = 0;
+            }
+        }
+        Ok(out)
+    }
+
+    fn announced_len(&self) -> usize {
+        debug_assert_eq!(self.header_len, 5);
+        u32::from_le_bytes(self.header[..4].try_into().unwrap()) as usize
+    }
+
+    /// True between frames: no partial header or payload buffered.
+    /// EOF while mid-frame is a truncation, not a clean close.
+    pub fn is_idle(&self) -> bool {
+        self.header_len == 0
+    }
+
+    /// Bytes of buffered partial-frame state (the idle-memory meter).
+    pub fn buffered_bytes(&self) -> usize {
+        self.header_len + self.payload.capacity()
     }
 }
 
@@ -114,5 +258,81 @@ mod tests {
         let mut ch = Channel::new(TcpStream::connect(addr).unwrap()).unwrap();
         ch.send(1, &[]).unwrap();
         t.join().unwrap();
+    }
+
+    #[test]
+    fn decoder_reassembles_byte_by_byte() {
+        // Worst-case delivery: every byte in its own chunk, two frames
+        // back to back (incl. an empty payload).
+        let mut stream = encode_frame(7, &[1, 2, 3]);
+        stream.extend_from_slice(&encode_frame(9, &[]));
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        for &b in &stream {
+            got.extend(dec.push(&[b]).unwrap());
+        }
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], (7, vec![1, 2, 3]));
+        assert_eq!(got[1], (9, Vec::new()));
+        assert!(dec.is_idle());
+        assert_eq!(dec.buffered_bytes(), 0);
+    }
+
+    #[test]
+    fn decoder_split_across_header_and_payload() {
+        // One chunk ends exactly at the header boundary, the next
+        // carries the payload plus the start of a second frame.
+        let f1 = encode_frame(3, &[10, 20, 30, 40]);
+        let f2 = encode_frame(4, &[99]);
+        let mut dec = FrameDecoder::new();
+        assert!(dec.push(&f1[..5]).unwrap().is_empty());
+        assert!(!dec.is_idle());
+        let mut rest = f1[5..].to_vec();
+        rest.extend_from_slice(&f2);
+        let got = dec.push(&rest).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], (3, vec![10, 20, 30, 40]));
+        assert_eq!(got[1], (4, vec![99]));
+        assert!(dec.is_idle());
+    }
+
+    #[test]
+    fn decoder_multiple_frames_one_chunk() {
+        let mut stream = Vec::new();
+        for tag in 0..5u8 {
+            stream.extend_from_slice(&encode_frame(tag, &[tag; 3]));
+        }
+        let got = FrameDecoder::new().push(&stream).unwrap();
+        assert_eq!(got.len(), 5);
+        for (tag, p) in got {
+            assert_eq!(p, vec![tag; 3]);
+        }
+    }
+
+    #[test]
+    fn decoder_rejects_oversized_frame() {
+        let mut header = [0u8; 5];
+        header[..4]
+            .copy_from_slice(&((MAX_FRAME as u32) + 1).to_le_bytes());
+        let mut dec = FrameDecoder::new();
+        assert!(dec.push(&header).is_err());
+    }
+
+    #[test]
+    fn encode_frame_matches_channel_wire_format() {
+        // Channel::recv must accept what encode_frame produces: send a
+        // pre-encoded frame as raw bytes, read it back as a frame.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut ch = Channel::new(s).unwrap();
+            ch.recv().unwrap()
+        });
+        let mut s = TcpStream::connect(addr).unwrap();
+        write_full(&mut s, &encode_frame(42, &[5, 6, 7])).unwrap();
+        let (tag, p) = t.join().unwrap();
+        assert_eq!(tag, 42);
+        assert_eq!(p, vec![5, 6, 7]);
     }
 }

@@ -11,19 +11,44 @@
 //! * RandK/RandSeqK transmit a PRG seed / start index, and the master
 //!   reconstructs the coordinate set.
 //!
+//! Two master transports implement the same `ClientPool` contract:
+//!
+//! * [`server::RemotePool`] — one blocking socket per client, replies
+//!   read in subset order. Simple, and fine up to a few hundred
+//!   connections.
+//! * [`event::EventPool`] — readiness-based: every socket is
+//!   non-blocking and a single epoll loop ([`sys`]) drives per-
+//!   connection read/write state machines (incremental
+//!   `framing::FrameDecoder` in, `Arc`-shared pre-encoded frames
+//!   out), inline on the master thread. Combined with the client-side
+//!   multiplexer ([`mux`], CLI `client --mux N`) it holds 100k+
+//!   registered clients behind a handful of sockets at a few bytes of
+//!   idle bookkeeping per client. Trajectories are bit-identical to
+//!   the blocking transports — arrival order changes, arithmetic does
+//!   not (every reduction is an exact superaccumulator).
+//!
 //! The [`relay`] module adds the sharded aggregation tier on top:
 //! relay aggregator processes that speak this client protocol downward
 //! and the `SHARD_*` frames upward, so master fan-in scales as the
 //! shard count instead of the client count (see `coordinator::shard`
-//! for the determinism contract).
+//! for the determinism contract). A mux group reuses those `SHARD_*`
+//! frames verbatim — to the master it is indistinguishable from a
+//! relay fronting remote clients.
 
 pub mod client;
+#[cfg(unix)]
+pub mod event;
 pub mod framing;
+pub mod mux;
 pub mod relay;
 pub mod server;
+pub(crate) mod sys;
 pub mod wire;
 
 pub use client::{run_client, run_client_with, ClientOpts};
+#[cfg(unix)]
+pub use event::EventPool;
 pub use framing::{Channel, FRAME_HEADER_BYTES};
+pub use mux::{run_mux_clients, MuxReport};
 pub use relay::{run_relay, run_relay_on, RelayCfg, RelayPool};
 pub use server::RemotePool;

@@ -1,0 +1,208 @@
+//! Client-side multiplexer: thousands of simulated clients, one socket.
+//!
+//! [`run_mux_clients`] hosts a contiguous partition of in-process
+//! clients behind a single TCP connection to an [`EventPool`] master
+//! (or, transitively, to a relay's downward `EventPool` face). It is
+//! the `SlicePool` idea extended over TCP: the hosted clients live in
+//! one process — sharing the loaded dataset, the allocator, and one
+//! frame codec — while the wire carries one *batched* exchange per
+//! group instead of one connection per client.
+//!
+//! The protocol is deliberately **not new**: a mux group registers
+//! with `SHARD_REGISTER` and then speaks exactly the relay tier's
+//! upward frames (`SHARD_ROUND` → `SHARD_MSG`/`SHARD_SUM`, probe
+//! batches, `SHARD_PREP`, …), so the master cannot distinguish a mux
+//! group from a relay fronting remote clients — one validation path,
+//! one codec, bit-identical arithmetic. The serve loop below mirrors
+//! `run_relay_on` with the downward `RemotePool` replaced by an
+//! in-process [`SlicePool`]; the only semantic difference is liveness:
+//! hosted clients cannot individually die or rejoin, so `SHARD_PREP`
+//! always reports empty rejoin/dead sets and a lost group is the unit
+//! of failure (the master certifies the whole partition missing).
+//!
+//! [`EventPool`]: super::event::EventPool
+
+use anyhow::{Context, Result};
+
+use super::client::connect_with_retry;
+use super::framing::Channel;
+use super::wire::{self, c2s, s2c};
+use crate::algorithms::{ClientMsg, RoundSum};
+use crate::coordinator::{ClientFamily, ClientPool, PoolClient, SlicePool};
+
+/// Byte totals a finished mux group reports (upward link only — there
+/// is no downward transport).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MuxReport {
+    pub up_sent: u64,
+    pub up_recv: u64,
+}
+
+/// Host `clients` (contiguous ascending ids) behind one connection to
+/// `connect`, serving rounds and probes until the master's SHUTDOWN
+/// (or EOF). `group_id` is echoed in every batch frame so the master
+/// can validate provenance; it only needs to be stable per connection,
+/// not globally unique.
+pub fn run_mux_clients<C: PoolClient>(
+    clients: &mut [C],
+    group_id: u32,
+    connect: &str,
+) -> Result<MuxReport> {
+    anyhow::ensure!(!clients.is_empty(), "mux group hosts no clients");
+    let base = clients[0].id() as u32;
+    anyhow::ensure!(
+        clients
+            .iter()
+            .enumerate()
+            .all(|(i, c)| c.id() == base as usize + i),
+        "mux group ids must be contiguous ascending"
+    );
+    let mut pool = SlicePool::new(clients);
+    let d = pool.dim();
+    let family = match pool.family() {
+        ClientFamily::FedNL => wire::FAMILY_FEDNL,
+        ClientFamily::PP => wire::FAMILY_PP,
+    };
+    let stream = connect_with_retry(connect, 50)?;
+    let mut up = Channel::new(stream)?;
+    up.send(
+        c2s::SHARD_REGISTER,
+        &wire::encode_shard_register(
+            group_id,
+            base,
+            pool.n_clients() as u32,
+            d as u32,
+            family,
+        ),
+    )
+    .context("mux registration")?;
+
+    loop {
+        // Master gone (EOF) = orderly end of the run.
+        let Ok((tag, payload)) = up.recv() else { break };
+        match tag {
+            s2c::SHARD_ROUND => {
+                let (x, round, need_loss, sum, deadline_ms, subset) =
+                    wire::decode_shard_round(&payload)?;
+                // The deadline is advisory here: in-process clients
+                // compute synchronously, so the group either replies
+                // in full or (if wedged) blows the master's
+                // group-slack budget and is retired whole.
+                let _ = deadline_ms;
+                pool.submit_round(&x, Some(&subset), round, need_loss);
+                let mut msgs: Vec<ClientMsg> = Vec::new();
+                loop {
+                    let batch = pool.drain();
+                    if batch.is_empty() {
+                        break;
+                    }
+                    msgs.extend(batch);
+                }
+                if sum {
+                    // Pre-reduce next to the clients: one exact
+                    // superaccumulator upward, O(d) regardless of the
+                    // hosted count.
+                    let mut merged = RoundSum::from_msgs(&msgs);
+                    up.send(
+                        c2s::SHARD_SUM,
+                        &wire::encode_shard_sum(
+                            group_id,
+                            &mut merged,
+                            &[],
+                        ),
+                    )?;
+                } else {
+                    // Atom mode, round-subset order (the relay-tier
+                    // contract; SlicePool already surfaces replies in
+                    // that order, the sort keeps it explicit).
+                    let pos = |ci: u32| {
+                        subset
+                            .iter()
+                            .position(|&c| c == ci)
+                            .expect("reply outside the round subset")
+                    };
+                    msgs.sort_by_key(|m| pos(m.client_id as u32));
+                    up.send(
+                        c2s::SHARD_MSG,
+                        &wire::encode_shard_msg(group_id, &msgs, &[]),
+                    )?;
+                }
+            }
+            s2c::SHARD_PREP => {
+                // Hosted clients have no independent liveness:
+                // nothing rejoins, nothing dies, reply empty.
+                up.send(
+                    c2s::SHARD_PREPPED,
+                    &wire::encode_shard_prepped(&[], &[]),
+                )?;
+            }
+            s2c::SHARD_PULL => {
+                let client = {
+                    let mut rd = crate::utils::ByteReader::new(&payload);
+                    rd.get_u32()?
+                };
+                let state = pool.pull_state(client);
+                up.send(
+                    c2s::SHARD_PULLED,
+                    &wire::encode_shard_pulled(
+                        state.as_ref().map(|(l, g)| (*l, g.as_slice())),
+                    ),
+                )?;
+            }
+            s2c::EVAL_LOSS => {
+                let x = wire::decode_vec(&payload)?;
+                let parts = pool.eval_loss_each(&x);
+                up.send(
+                    c2s::SHARD_LOSSES,
+                    &wire::encode_id_scalars(&parts),
+                )?;
+            }
+            s2c::LOSS_GRAD => {
+                let x = wire::decode_vec(&payload)?;
+                let parts = pool.loss_grad_each(&x);
+                up.send(
+                    c2s::SHARD_GRADS,
+                    &wire::encode_id_scalar_vecs(&parts),
+                )?;
+            }
+            s2c::LOSS_GRAD_SUM => {
+                let x = wire::decode_vec(&payload)?;
+                let (mut loss, mut grad, count) = pool.loss_grad_sum(&x);
+                up.send(
+                    c2s::SHARD_GRAD_SUM,
+                    &wire::encode_shard_grad_sum(
+                        count, &mut loss, &mut grad,
+                    ),
+                )?;
+            }
+            s2c::WARM_START => {
+                let x = wire::decode_vec(&payload)?;
+                let packs = pool.warm_start(&x);
+                up.send(
+                    c2s::SHARD_WARM,
+                    &wire::encode_vec_batch(&packs),
+                )?;
+            }
+            s2c::STATE => {
+                let states = pool.init_state();
+                let parts: Vec<(u32, f64, Vec<f64>)> = states
+                    .into_iter()
+                    .enumerate()
+                    .map(|(slot, (l, g))| (base + slot as u32, l, g))
+                    .collect();
+                up.send(
+                    c2s::SHARD_STATES,
+                    &wire::encode_id_scalar_vecs(&parts),
+                )?;
+            }
+            s2c::SET_ALPHA => {
+                let a = wire::decode_scalar(&payload)?;
+                let effective = pool.set_alpha(a);
+                up.send(c2s::ACK, &wire::encode_scalar(effective))?;
+            }
+            s2c::SHUTDOWN => break,
+            other => anyhow::bail!("mux: unknown command tag {other}"),
+        }
+    }
+    Ok(MuxReport { up_sent: up.bytes_sent, up_recv: up.bytes_received })
+}

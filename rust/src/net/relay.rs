@@ -93,6 +93,36 @@ pub struct RelayCfg {
     pub listen: String,
     /// Upward master address.
     pub connect: String,
+    /// Serve the downward partition through the readiness-based
+    /// [`EventPool`] instead of the blocking [`RemotePool`] (CLI
+    /// `relay --event`): one poll loop for the whole partition, and
+    /// mux groups (`client --mux N`) can register under this relay.
+    /// Unix-only; ignored (with an error at startup) elsewhere.
+    ///
+    /// [`EventPool`]: super::event::EventPool
+    /// [`RemotePool`]: super::server::RemotePool
+    pub event: bool,
+}
+
+/// The relay's downward face: any master-side transport that can also
+/// politely release its clients at end of run. Object-safe so
+/// [`run_relay_on`] can pick the blocking or readiness transport at
+/// startup without duplicating the serve loop.
+trait DownFace: ClientPool {
+    fn shutdown(&mut self);
+}
+
+impl DownFace for super::server::RemotePool {
+    fn shutdown(&mut self) {
+        super::server::RemotePool::shutdown(self);
+    }
+}
+
+#[cfg(unix)]
+impl DownFace for super::event::EventPool {
+    fn shutdown(&mut self) {
+        super::event::EventPool::shutdown(self);
+    }
 }
 
 /// Byte totals a finished relay reports (downward pool, upward link).
@@ -116,7 +146,20 @@ pub fn run_relay(cfg: &RelayCfg) -> Result<RelayReport> {
 pub fn run_relay_on(bound: Bound, cfg: &RelayCfg) -> Result<RelayReport> {
     // Downward first: the relay must know its partition's (d, family)
     // before it can register upward.
-    let mut down = bound.accept_base(cfg.count, cfg.base)?;
+    let mut down: Box<dyn DownFace> = if cfg.event {
+        #[cfg(unix)]
+        {
+            Box::new(super::event::EventPool::accept_base(
+                bound, cfg.count, cfg.base,
+            )?)
+        }
+        #[cfg(not(unix))]
+        {
+            anyhow::bail!("--event requires a unix host (epoll/poll)");
+        }
+    } else {
+        Box::new(bound.accept_base(cfg.count, cfg.base)?)
+    };
     let d = down.dim();
     let family = match down.family() {
         ClientFamily::FedNL => wire::FAMILY_FEDNL,

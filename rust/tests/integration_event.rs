@@ -1,0 +1,374 @@
+//! Readiness-transport integration: the epoll-driven `EventPool`
+//! master and the client-side multiplexer over real loopback sockets.
+//!
+//! The headline invariants of the event transport:
+//! * trajectories are **bit-identical** to the blocking transports
+//!   (`RemotePool`) and the in-process reference under the same seed —
+//!   mixed plain/mux topologies included;
+//! * faults compose: the same `FaultPlan` under a quorum policy yields
+//!   bit-identical runs on the readiness transport;
+//! * it scales: ≥10k multiplexed clients register through one master
+//!   socket loop at a few bytes of idle bookkeeping per client.
+
+#![cfg(unix)]
+
+use fednl::algorithms::{
+    run_fednl, run_fednl_ls_pool, run_fednl_pool, run_fednl_pp_pool,
+    ClientState, LineSearchParams, OnMissing, Options, PPClientState,
+    RoundPolicy,
+};
+use fednl::compressors::by_name;
+use fednl::coordinator::{ClientPool, FaultPlan, FaultPool, SeqPool};
+use fednl::data::{generate_synthetic, Dataset, LibsvmSample, SynthSpec};
+use fednl::net::client::ClientMode;
+use fednl::net::server::Bound;
+use fednl::net::{run_client, run_mux_clients, EventPool, MuxReport};
+use fednl::oracle::LogisticOracle;
+
+fn dataset(d_raw: usize, n: usize, seed: u64) -> Dataset {
+    let spec =
+        SynthSpec { d_raw, n_samples: n, density: 0.5, noise: 1.0, seed };
+    let synth = generate_synthetic(&spec);
+    let samples: Vec<LibsvmSample> = synth
+        .labels
+        .iter()
+        .zip(&synth.rows)
+        .map(|(l, r)| LibsvmSample { label: *l, features: r.clone() })
+        .collect();
+    let mut ds = Dataset::from_libsvm(&samples, d_raw);
+    ds.reshuffle(seed);
+    ds
+}
+
+fn fednl_clients(ds: &Dataset, n: usize, comp: &str) -> Vec<ClientState> {
+    ds.split_even(n)
+        .unwrap()
+        .into_iter()
+        .map(|sh| {
+            let id = sh.client_id;
+            ClientState::new(
+                id,
+                Box::new(LogisticOracle::new(sh, 1e-3)),
+                by_name(comp, ds.d, 8, 100 + id as u64).unwrap(),
+                None,
+            )
+        })
+        .collect()
+}
+
+fn pp_clients(
+    ds: &Dataset,
+    n: usize,
+    comp: &str,
+    x0: &[f64],
+) -> Vec<PPClientState> {
+    ds.split_even(n)
+        .unwrap()
+        .into_iter()
+        .map(|sh| {
+            let id = sh.client_id;
+            PPClientState::new(
+                id,
+                Box::new(LogisticOracle::new(sh, 1e-3)),
+                by_name(comp, ds.d, 8, 100 + id as u64).unwrap(),
+                None,
+                x0,
+            )
+        })
+        .collect()
+}
+
+/// Spawn a mixed topology against `addr`: clients with ids covered by
+/// `mux_groups` (contiguous `(gid, lo, hi)` ranges) are hosted by one
+/// mux thread per group; every other id gets a plain blocking client
+/// thread — exactly the processes `fednl client [--mux N]` would run.
+#[allow(clippy::type_complexity)]
+fn spawn_mixed(
+    ds: &Dataset,
+    n: usize,
+    comp: &str,
+    addr: &str,
+    pp: bool,
+    mux_groups: &[(u32, usize, usize)],
+) -> (
+    Vec<std::thread::JoinHandle<anyhow::Result<MuxReport>>>,
+    Vec<std::thread::JoinHandle<anyhow::Result<(u64, u64)>>>,
+) {
+    let d = ds.d;
+    let x0 = vec![0.0; d];
+    let mut fednl_by_id: Vec<Option<ClientState>> = Vec::new();
+    let mut pp_by_id: Vec<Option<PPClientState>> = Vec::new();
+    if pp {
+        pp_by_id = pp_clients(ds, n, comp, &x0).into_iter().map(Some).collect();
+    } else {
+        fednl_by_id = fednl_clients(ds, n, comp).into_iter().map(Some).collect();
+    }
+    let mut muxed = vec![false; n];
+    let mut mux_handles = Vec::new();
+    for &(gid, lo, hi) in mux_groups {
+        let addr = addr.to_string();
+        for slot in lo..hi {
+            muxed[slot] = true;
+        }
+        if pp {
+            let mut group: Vec<PPClientState> = (lo..hi)
+                .map(|i| pp_by_id[i].take().unwrap())
+                .collect();
+            mux_handles.push(std::thread::spawn(move || {
+                run_mux_clients(&mut group, gid, &addr)
+            }));
+        } else {
+            let mut group: Vec<ClientState> = (lo..hi)
+                .map(|i| fednl_by_id[i].take().unwrap())
+                .collect();
+            mux_handles.push(std::thread::spawn(move || {
+                run_mux_clients(&mut group, gid, &addr)
+            }));
+        }
+    }
+    let mut plain_handles = Vec::new();
+    for id in 0..n {
+        if muxed[id] {
+            continue;
+        }
+        let addr = addr.to_string();
+        let mode = if pp {
+            ClientMode::PP(pp_by_id[id].take().unwrap())
+        } else {
+            ClientMode::FedNL(fednl_by_id[id].take().unwrap())
+        };
+        plain_handles.push(std::thread::spawn(move || {
+            run_client(&addr, id, mode)
+        }));
+    }
+    (mux_handles, plain_handles)
+}
+
+#[test]
+fn event_pool_mixed_topology_matches_reference_bitwise() {
+    // 16 clients — two mux groups of 5 plus 6 plain blocking clients —
+    // through one EventPool master: FedNL with warm start (exercises
+    // the SHARD_WARM batch and the shared-broadcast write path) must
+    // be bit-identical to the in-process sequential reference.
+    let ds = dataset(9, 320, 7);
+    let d = ds.d;
+    const N: usize = 16;
+    let opts = Options {
+        rounds: 20,
+        track_loss: true,
+        warm_start: true,
+        ..Default::default()
+    };
+
+    let mut ref_clients = fednl_clients(&ds, N, "randseqk");
+    let t_ref = run_fednl(&mut ref_clients, &opts, vec![0.0; d]);
+
+    let bound = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = bound.local_addr().unwrap().to_string();
+    let (muxes, plains) = spawn_mixed(
+        &ds,
+        N,
+        "randseqk",
+        &addr,
+        false,
+        &[(0, 0, 5), (1, 5, 10)],
+    );
+    let mut pool = EventPool::accept(bound, N).unwrap();
+    assert_eq!(pool.n_clients(), N);
+    let t_ev = run_fednl_pool(&mut pool, &opts, vec![0.0; d], "event");
+    pool.shutdown();
+    for h in muxes {
+        h.join().unwrap().unwrap();
+    }
+    for h in plains {
+        h.join().unwrap().unwrap();
+    }
+
+    assert_eq!(t_ref.records.len(), t_ev.records.len());
+    for (a, b) in t_ref.records.iter().zip(&t_ev.records) {
+        assert_eq!(
+            a.grad_norm.to_bits(),
+            b.grad_norm.to_bits(),
+            "round {}",
+            a.round
+        );
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+    }
+    assert!(t_ev.last_grad_norm() < 1e-8);
+
+    // FedNL-LS through an all-mux topology: the Armijo backtracking
+    // probes ride EVAL_LOSS → SHARD_LOSSES batches.
+    let opts_ls =
+        Options { rounds: 12, track_loss: true, ..Default::default() };
+    let mut flat = SeqPool::new(fednl_clients(&ds, N, "toplek"));
+    let t_ref = run_fednl_ls_pool(
+        &mut flat,
+        &opts_ls,
+        &LineSearchParams::default(),
+        vec![0.0; d],
+        "flat-ls",
+    );
+    let bound = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = bound.local_addr().unwrap().to_string();
+    let (muxes, plains) = spawn_mixed(
+        &ds,
+        N,
+        "toplek",
+        &addr,
+        false,
+        &[(0, 0, 8), (1, 8, 16)],
+    );
+    assert!(plains.is_empty());
+    let mut pool = EventPool::accept(bound, N).unwrap();
+    let t_ev = run_fednl_ls_pool(
+        &mut pool,
+        &opts_ls,
+        &LineSearchParams::default(),
+        vec![0.0; d],
+        "event-ls",
+    );
+    pool.shutdown();
+    for h in muxes {
+        h.join().unwrap().unwrap();
+    }
+    assert_eq!(t_ref.records.len(), t_ev.records.len());
+    for (a, b) in t_ref.records.iter().zip(&t_ev.records) {
+        assert_eq!(
+            a.grad_norm.to_bits(),
+            b.grad_norm.to_bits(),
+            "ls round {}",
+            a.round
+        );
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+    }
+}
+
+#[test]
+fn event_pool_fault_plan_bit_identical() {
+    // The same FaultPlan (kill+rejoin window over a mux-hosted client,
+    // injected stragglers, a one-round drop) under quorum < n yields
+    // bit-identical FedNL-PP trajectories on the in-process reference
+    // and on the readiness transport. The rejoin-round state resync
+    // rides SHARD_PULL into the mux group.
+    let ds = dataset(7, 120, 31);
+    let d = ds.d;
+    const N: usize = 6;
+    let x0 = vec![0.0; d];
+    let plan =
+        FaultPlan::parse("kill@4:1-11,delay@2:0:20,delay@6:3:20,drop@13:2")
+            .unwrap();
+    let opts = Options {
+        rounds: 25,
+        policy: RoundPolicy {
+            quorum: Some(1),
+            deadline_ms: Some(2000),
+            on_missing: OnMissing::Drop,
+        },
+        ..Default::default()
+    };
+    let (tau, seed) = (3usize, 77u64);
+
+    let mut seq = FaultPool::new(
+        SeqPool::new(pp_clients(&ds, N, "topk", &x0)),
+        plan.clone(),
+    );
+    let t_seq = run_fednl_pp_pool(
+        &mut seq,
+        &opts,
+        tau,
+        seed,
+        x0.clone(),
+        "fault-seq",
+    );
+    assert!(t_seq.records.iter().any(|r| r.missing > 0));
+
+    let bound = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = bound.local_addr().unwrap().to_string();
+    let (muxes, plains) =
+        spawn_mixed(&ds, N, "topk", &addr, true, &[(0, 0, 3)]);
+    let mut pool =
+        FaultPool::new(EventPool::accept(bound, N).unwrap(), plan);
+    let t_ev =
+        run_fednl_pp_pool(&mut pool, &opts, tau, seed, x0, "fault-event");
+    pool.into_inner().shutdown();
+    for h in muxes {
+        h.join().unwrap().unwrap();
+    }
+    for h in plains {
+        h.join().unwrap().unwrap();
+    }
+
+    assert_eq!(t_seq.records.len(), t_ev.records.len());
+    for (a, b) in t_seq.records.iter().zip(&t_ev.records) {
+        assert_eq!(
+            a.grad_norm.to_bits(),
+            b.grad_norm.to_bits(),
+            "round {}",
+            a.round
+        );
+        // PP traces report logical byte counters on every transport,
+        // and the mux batches preserve per-client atoms exactly.
+        assert_eq!(a.bytes_up, b.bytes_up);
+        assert_eq!(a.bytes_down, b.bytes_down);
+        assert_eq!((a.committed, a.missing), (b.committed, b.missing));
+    }
+    let first = t_seq.records[0].grad_norm;
+    assert!(
+        t_seq.last_grad_norm() < first * 1e-2,
+        "{} -> {}",
+        first,
+        t_seq.last_grad_norm()
+    );
+}
+
+#[test]
+fn event_pool_registers_10k_mux_clients() {
+    // Scale: 10 000 multiplexed clients over 4 group sockets through
+    // one readiness loop, two real FedNL rounds, full commitment, and
+    // idle server-side bookkeeping ≤ 4 KiB per client.
+    const N: usize = 10_000;
+    const GROUPS: usize = 4;
+    let ds = dataset(5, 2 * N, 13);
+    let d = ds.d;
+    let mut shards = ds.split_even(N).unwrap();
+    let bound = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = bound.local_addr().unwrap().to_string();
+    let per = N / GROUPS;
+    let mut handles = Vec::new();
+    for gid in 0..GROUPS as u32 {
+        let chunk: Vec<fednl::data::ClientShard> =
+            shards.drain(0..per).collect();
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut group: Vec<ClientState> = chunk
+                .into_iter()
+                .map(|sh| {
+                    let id = sh.client_id;
+                    ClientState::new(
+                        id,
+                        Box::new(LogisticOracle::new(sh, 1e-3)),
+                        by_name("topk", d, 8, 100 + id as u64).unwrap(),
+                        None,
+                    )
+                })
+                .collect();
+            run_mux_clients(&mut group, gid, &addr)
+        }));
+    }
+    let mut pool = EventPool::accept(bound, N).unwrap();
+    assert_eq!(pool.n_clients(), N);
+    assert!(pool.dead_clients().is_empty());
+    let opts = Options { rounds: 2, ..Default::default() };
+    let t = run_fednl_pool(&mut pool, &opts, vec![0.0; d], "event-10k");
+    let idle = pool.idle_bytes_per_client();
+    pool.shutdown();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    assert_eq!(t.records.len(), 2);
+    for r in &t.records {
+        assert_eq!((r.committed, r.missing), (N as u32, 0), "round {}", r.round);
+    }
+    assert!(t.last_grad_norm().is_finite());
+    assert!(idle <= 4096.0, "idle bookkeeping {idle:.1} B/client");
+}

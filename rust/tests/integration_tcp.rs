@@ -409,6 +409,7 @@ fn spawn_relay_tier(
             count: (hi - lo) as usize,
             listen: String::new(),
             connect: master_addr.to_string(),
+            event: false,
         };
         relay_handles.push(std::thread::spawn(move || {
             run_relay_on(relay_bound, &rcfg)
