@@ -82,6 +82,7 @@ const NO_CONN: u32 = u32::MAX;
 const SCRATCH_BYTES: usize = 64 << 10;
 
 /// What a connection multiplexes.
+#[derive(Clone, Copy)]
 enum ConnKind {
     /// One remote client (global id).
     Plain { id: u32 },
@@ -169,8 +170,12 @@ pub struct EventPool {
 
     // --- probe in flight ---
     expect: Expect,
-    /// Per connection: probe reply payload, once arrived.
-    probe_replies: Vec<Option<Vec<u8>>>,
+    /// Per connection: probe reply payload, once arrived, paired with
+    /// the replier's kind *captured at arrival*. A peer may legally
+    /// reply and disconnect inside one readable batch — the EOF
+    /// retires the connection before the probe caller looks at the
+    /// reply, so the reply must stay usable without touching `conns`.
+    probe_replies: Vec<Option<(ConnKind, Vec<u8>)>>,
 
     missing: Vec<u32>,
     rejoined: Vec<u32>,
@@ -355,7 +360,7 @@ impl EventPool {
             + self.conn_of.capacity() * std::mem::size_of::<u32>()
             + self.awaiting.capacity()
             + self.probe_replies.capacity()
-                * std::mem::size_of::<Option<Vec<u8>>>()
+                * std::mem::size_of::<Option<(ConnKind, Vec<u8>)>>()
             + self.scratch.capacity()
             + (self.missing.capacity() + self.rejoined.capacity())
                 * std::mem::size_of::<u32>();
@@ -417,12 +422,14 @@ impl EventPool {
 
     /// Queue one pre-encoded frame to connection `idx`, writing as
     /// much as the socket takes right now. Returns `false` (and
-    /// retires the connection) on a write error.
+    /// retires the connection) on a write error. Byte meters count
+    /// bytes as the kernel accepts them — a frame parked in `outq`
+    /// when the connection dies never inflates `transport_bytes`,
+    /// matching the blocking transports' per-write accounting.
     fn queue_frame(&mut self, idx: usize, frame: Arc<Vec<u8>>) -> bool {
         let Some(conn) = self.conns[idx].as_mut() else {
             return false;
         };
-        conn.bytes_sent += frame.len() as u64;
         if !conn.outq.is_empty() {
             conn.outq.push_back((frame, 0));
             return true;
@@ -435,6 +442,7 @@ impl EventPool {
                     return false;
                 }
                 Ok(n) => {
+                    conn.bytes_sent += n as u64;
                     off += n;
                     if off == frame.len() {
                         return true;
@@ -487,7 +495,9 @@ impl EventPool {
                 }
                 Ok(n) => {
                     *off += n;
-                    if *off == frame.len() {
+                    let done = *off == frame.len();
+                    conn.bytes_sent += n as u64;
+                    if done {
                         conn.outq.pop_front();
                     }
                 }
@@ -561,12 +571,13 @@ impl EventPool {
         match self.expect {
             Expect::Round => self.handle_round_frame(idx, tag, payload),
             Expect::Probe { plain, group } => {
-                let want = match self.conns[idx].as_ref().unwrap().kind {
+                let kind = self.conns[idx].as_ref().unwrap().kind;
+                let want = match kind {
                     ConnKind::Plain { .. } => plain,
                     ConnKind::Group { .. } => group,
                 };
                 if tag == want && self.probe_replies[idx].is_none() {
-                    self.probe_replies[idx] = Some(payload);
+                    self.probe_replies[idx] = Some((kind, payload));
                 } else {
                     // Wrong tag or duplicate reply: protocol
                     // violation, same rule as `recv_expect`.
@@ -645,10 +656,17 @@ impl EventPool {
             .collect();
         accounted.sort_unstable();
         let dups = accounted.windows(2).any(|w| w[0] == w[1]);
+        // Membership via binary search on sorted copies: atoms-mode
+        // groups can span thousands of clients, and this runs on the
+        // master's single event thread every round.
+        let mut part_sorted = part.clone();
+        part_sorted.sort_unstable();
         let valid = got_sid == sid
             && !part.is_empty()
             && !dups
-            && accounted.iter().all(|c| part.contains(c));
+            && accounted
+                .iter()
+                .all(|c| part_sorted.binary_search(c).is_ok());
         if !valid {
             self.group_await[idx] = part;
             return false;
@@ -657,7 +675,7 @@ impl EventPool {
         // the round can close (it must not happen: the group certifies
         // its own losses).
         for &c in &part {
-            if !accounted.contains(&c) {
+            if accounted.binary_search(&c).is_err() {
                 missing.push(c);
             }
         }
@@ -689,11 +707,15 @@ impl EventPool {
         let mut miss_sorted = missing.clone();
         miss_sorted.sort_unstable();
         let dups = miss_sorted.windows(2).any(|w| w[0] == w[1]);
+        let mut part_sorted = part.clone();
+        part_sorted.sort_unstable();
         let valid = got_sid == sid
             && !part.is_empty()
             && !dups
             && sum.committed as usize + missing.len() == part.len()
-            && missing.iter().all(|c| part.contains(c));
+            && miss_sorted
+                .iter()
+                .all(|c| part_sorted.binary_search(c).is_ok());
         if !valid {
             self.group_await[idx] = part;
             return false;
@@ -799,13 +821,17 @@ impl EventPool {
     /// Pump until every asked connection has replied (or been
     /// retired). Unbounded like the blocking pools' probe receives —
     /// WARM_START legitimately exceeds round deadlines. Returns
-    /// `(conn index, payload)` in ascending connection order.
+    /// `(conn index, kind at reply time, payload)` in ascending
+    /// connection order. The index may name a slot that retired
+    /// *after* replying (reply + EOF in one readable batch) — callers
+    /// must derive everything from the captured kind, never from
+    /// `conns[idx]`.
     fn collect_probe(
         &mut self,
         asked: &[usize],
         plain: u8,
         group: u8,
-    ) -> Vec<(usize, Vec<u8>)> {
+    ) -> Vec<(usize, ConnKind, Vec<u8>)> {
         self.expect = Expect::Probe { plain, group };
         loop {
             let done = asked.iter().all(|&i| {
@@ -822,19 +848,11 @@ impl EventPool {
         self.expect = Expect::Idle;
         let mut out = Vec::with_capacity(asked.len());
         for &i in asked {
-            if let Some(p) = self.probe_replies[i].take() {
-                out.push((i, p));
+            if let Some((kind, p)) = self.probe_replies[i].take() {
+                out.push((i, kind, p));
             }
         }
         out
-    }
-
-    /// Global ids a connection covers.
-    fn conn_range(&self, idx: usize) -> (u32, u32) {
-        match self.conns[idx].as_ref().unwrap().kind {
-            ConnKind::Plain { id } => (id, id + 1),
-            ConnKind::Group { lo, hi, .. } => (lo, hi),
-        }
     }
 
     // --- rejoin admission --------------------------------------------
@@ -934,6 +952,9 @@ impl EventPool {
                 self.conns.len() - 1
             }
         };
+        // A reply stashed by the slot's previous occupant must never
+        // be attributed to (or block a reply from) the rejoiner.
+        self.probe_replies[idx] = None;
         self.poller
             .register(stream.as_raw_fd(), idx as u64, true, false)
             .ok()?;
@@ -985,7 +1006,7 @@ impl ClientPool for EventPool {
         let replies =
             self.collect_probe(&asked, c2s::ACK, c2s::ACK);
         let mut echoes = Vec::with_capacity(replies.len());
-        for (_, p) in replies {
+        for (_, _, p) in replies {
             if let Ok(a) = wire::decode_scalar(&p) {
                 echoes.push(a);
             }
@@ -1202,8 +1223,8 @@ impl ClientPool for EventPool {
             c2s::SHARD_LOSSES,
         );
         let mut parts = Vec::new();
-        for (idx, p) in replies {
-            match self.conns[idx].as_ref().unwrap().kind {
+        for (idx, kind, p) in replies {
+            match kind {
                 ConnKind::Plain { id } => {
                     match wire::decode_scalar(&p) {
                         Ok(l) => parts.push((id, l)),
@@ -1233,8 +1254,8 @@ impl ClientPool for EventPool {
             c2s::SHARD_GRADS,
         );
         let mut parts = Vec::new();
-        for (idx, p) in replies {
-            match self.conns[idx].as_ref().unwrap().kind {
+        for (idx, kind, p) in replies {
+            match kind {
                 ConnKind::Plain { id } => {
                     match wire::decode_loss_grad(&p) {
                         Ok((l, g)) => parts.push((id, l, g)),
@@ -1301,8 +1322,8 @@ impl ClientPool for EventPool {
         let mut loss = crate::linalg::reduce::RepAcc::new();
         let mut grad = crate::linalg::reduce::RepVec::new(self.d);
         let mut count = 0u32;
-        for (idx, p) in replies {
-            match self.conns[idx].as_ref().unwrap().kind {
+        for (idx, kind, p) in replies {
+            match kind {
                 ConnKind::Plain { .. } => {
                     match wire::decode_loss_grad(&p) {
                         Ok((l, g)) if g.len() == self.d => {
@@ -1337,8 +1358,8 @@ impl ClientPool for EventPool {
             c2s::SHARD_WARM,
         );
         let mut packs = Vec::new();
-        for (idx, p) in replies {
-            match self.conns[idx].as_ref().unwrap().kind {
+        for (idx, kind, p) in replies {
+            match kind {
                 ConnKind::Plain { .. } => match wire::decode_vec(&p) {
                     Ok(v) => packs.push(v),
                     Err(_) => self.retire(idx),
@@ -1367,17 +1388,23 @@ impl ClientPool for EventPool {
         );
         let mut parts: Vec<(u32, f64, Vec<f64>)> =
             Vec::with_capacity(self.conn_of.len());
-        for (idx, p) in replies {
-            match self.conns[idx].as_ref().unwrap().kind {
+        // Malformed state frames retire the sender like every other
+        // probe decoder; the coverage assert below then reports the
+        // bootstrap failure (mirrors `RelayPool::init_state`).
+        for (idx, kind, p) in replies {
+            match kind {
                 ConnKind::Plain { id } => {
-                    let (l, g) = wire::decode_loss_grad(&p)
-                        .expect("state decode");
-                    parts.push((id, l, g));
+                    match wire::decode_loss_grad(&p) {
+                        Ok((l, g)) => parts.push((id, l, g)),
+                        Err(_) => self.retire(idx),
+                    }
                 }
-                ConnKind::Group { .. } => parts.extend(
-                    wire::decode_id_scalar_vecs(&p)
-                        .expect("states decode"),
-                ),
+                ConnKind::Group { .. } => {
+                    match wire::decode_id_scalar_vecs(&p) {
+                        Ok(batch) => parts.extend(batch),
+                        Err(_) => self.retire(idx),
+                    }
+                }
             }
         }
         parts.sort_by_key(|&(id, _, _)| id);
@@ -1439,11 +1466,20 @@ impl ClientPool for EventPool {
             }
         }
         self.expect = Expect::Idle;
-        let Some(p) = self.probe_replies[idx].take() else {
+        // A stray tag-matching frame from a *different* conn during
+        // this one-target probe would be stashed and never taken —
+        // wipe everything but our slot so it cannot masquerade as a
+        // duplicate in a later exchange.
+        for (i, r) in self.probe_replies.iter_mut().enumerate() {
+            if i != idx {
+                *r = None;
+            }
+        }
+        let Some((kind, p)) = self.probe_replies[idx].take() else {
             self.retire(idx);
             return None;
         };
-        let state = match self.conns[idx].as_ref().unwrap().kind {
+        let state = match kind {
             ConnKind::Plain { .. } => {
                 wire::decode_loss_grad(&p).ok().map(Some)
             }
