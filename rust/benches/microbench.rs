@@ -877,7 +877,9 @@ fn main() {
         // tier's determinism invariant — asserted by the integration
         // tests, spot-checked here).
         use fednl::algorithms::{run_fednl_pool, ClientState, Options};
-        use fednl::coordinator::{SeqPool, ShardedPool, ShardStats};
+        use fednl::coordinator::{
+            ClientPool, SeqPool, ShardedPool, ShardStats,
+        };
 
         let n_clients = 12;
         let dd = 41;
@@ -969,6 +971,53 @@ fn main() {
                 .sum();
             runs.push(ShardRun {
                 key: "S=2/threaded".into(),
+                shards: 2,
+                wait_s: tr.wait_secs,
+                aggregate_s: tr.aggregate_secs,
+                total_s: tr.total_elapsed(),
+                payload_bytes: payload / rounds,
+                final_grad: tr.last_grad_norm(),
+                per_shard: pool.shard_stats().to_vec(),
+            });
+        }
+        {
+            // Depth-3 tree: 2 top-level shards, each itself a
+            // ShardedPool over 2 sub-shard aggregators — the
+            // in-process analogue of a `relay --parent 2` tree. Exact
+            // pre-reduction composes tier over tier, so this run joins
+            // the bit-identity assertion below.
+            let half = (n_clients / 2) as u32;
+            let mk_inner = |part: Vec<ClientState>, lo: u32, hi: u32| {
+                let mid = lo + (hi - lo) / 2;
+                let mut a = part;
+                let b = a.split_off((mid - lo) as usize);
+                let subs: Vec<Box<dyn ClientPool>> =
+                    vec![Box::new(SeqPool::new(a)), Box::new(SeqPool::new(b))];
+                ShardedPool::from_shards(subs, vec![(lo, mid), (mid, hi)])
+            };
+            let mut lo_part = make();
+            let hi_part = lo_part.split_off(half as usize);
+            let top: Vec<Box<dyn ClientPool>> = vec![
+                Box::new(mk_inner(lo_part, 0, half)),
+                Box::new(mk_inner(hi_part, half, n_clients as u32)),
+            ];
+            let mut pool = ShardedPool::from_shards(
+                top,
+                vec![(0, half), (half, n_clients as u32)],
+            );
+            let tr = run_fednl_pool(
+                &mut pool,
+                &opts,
+                vec![0.0; dd],
+                "shard/deep",
+            );
+            let payload: u64 = pool
+                .shard_stats()
+                .iter()
+                .map(|st| st.payload_bytes)
+                .sum();
+            runs.push(ShardRun {
+                key: "deep/2x2/seq".into(),
                 shards: 2,
                 wait_s: tr.wait_secs,
                 aggregate_s: tr.aggregate_secs,

@@ -480,6 +480,11 @@ fn run_newton_family(
     // The quorum threshold `check_quorum` will enforce, hoisted so the
     // speculative path can recognize "quorum is in" mid-drain.
     let need = rp.quorum.unwrap_or(n).min(n).max(1);
+    // Commit watermark per client: the last round whose commit counted
+    // this client's own reply. Drives the rejoin RESYNC resolution of
+    // the commit-ack protocol — a rejoiner's staged shift is applied
+    // iff its round is at or below this watermark.
+    let mut last_commit: Vec<Option<u64>> = vec![None; n];
 
     if opts.warm_start {
         let x = server.x.clone();
@@ -494,14 +499,32 @@ fn run_newton_family(
 
     for round in 0..opts.rounds {
         pool.prepare_round(round);
-        // A *frozen* FedNL rejoiner needs no resync: its Hᵢ froze
-        // while it was unscheduled, exactly like the master's view of
-        // it. A fresh-state rejoiner (crashed process, TCP re-REGISTER)
-        // gets α resynced at admission, but its Hᵢ restarts at 0 while
-        // the master keeps the stale contribution — the Newton system
-        // is then approximate until the shifts re-learn ∇²fᵢ (known
-        // limit; exact resync needs a warm-start-style packed upload).
-        let _ = pool.take_rejoined();
+        // Rejoin resolution (commit-ack protocol): each rejoiner's
+        // staged-but-unacked shift resolves against this engine's
+        // commit watermark — applied iff its round committed here
+        // (the reply was delivered but the ack was lost), discarded
+        // otherwise. Exactly-once either way. A *frozen* in-process
+        // rejoiner stages nothing, so resolution is a no-op, exactly
+        // like the pre-failover behavior.
+        for ci in pool.take_rejoined() {
+            pool.resolve_staged(ci, last_commit[ci as usize]);
+        }
+        // Fresh-state rejoiners (`REG_FRESH`): rebuild the exact
+        // server-side H = (1/n)ΣHᵢ from a full packed-Hᵢ pull, so a
+        // process that restarted with reset state resyncs bitwise.
+        // When the pull cannot be exact (some peer is dead or cannot
+        // serve it), fall back to the old approximate behavior: the
+        // shifts re-learn ∇²fᵢ over the following rounds.
+        if !pool.take_fresh_rejoined().is_empty() {
+            if let Some(packed) = pool.pull_h_packed() {
+                bytes_down += wire::empty_frame_bytes() * n as u64;
+                bytes_up += packed
+                    .iter()
+                    .map(|p| wire::vec_frame_bytes(p.len()))
+                    .sum::<u64>();
+                server.init_h_from_packed(&packed);
+            }
+        }
         let x = server.x.clone();
         bytes_down += wire::round_frame_bytes(d) * n as u64;
         // LS always needs fᵢ(xᵏ) (Alg. 2 line 5).
@@ -514,23 +537,35 @@ fn run_newton_family(
         // finish the round on a helper thread. See [`Speculation`] for
         // the adoption rule that keeps this bit-identical.
         let mut spec: Option<Speculation> = None;
-        let (committed, missing) = if sum_mode {
+        // `acked`: clients whose own reply was absorbed this round —
+        // the commit-ack recipients. A Reuse replay is *committed*
+        // (trace accounting) but never acked: the client did not
+        // deliver the round, so its watermark must not advance.
+        let (committed, missing, acked) = if sum_mode {
             let mut committed_live = 0usize;
-            drain_and_sum(pool, n, &mut bytes_up, &mut timing, |s| {
-                committed_live += s.committed as usize;
-                server.apply_sum(s);
-                if opts.speculate
-                    && spec.is_none()
-                    && committed_live >= need
-                    && committed_live < n
-                {
-                    spec = Some(Speculation::launch(
-                        &server,
-                        committed_live,
-                        opts.rule,
-                    ));
-                }
-            })
+            let (c, mut missing_ids) =
+                drain_and_sum(pool, n, &mut bytes_up, &mut timing, |s| {
+                    committed_live += s.committed as usize;
+                    server.apply_sum(s);
+                    if opts.speculate
+                        && spec.is_none()
+                        && committed_live >= need
+                        && committed_live < n
+                    {
+                        spec = Some(Speculation::launch(
+                            &server,
+                            committed_live,
+                            opts.rule,
+                        ));
+                    }
+                });
+            // Sums carry counts, not ids: the absorbed set is the
+            // complement of the certified-missing set.
+            missing_ids.sort_unstable();
+            let acked: Vec<u32> = (0..n as u32)
+                .filter(|ci| missing_ids.binary_search(ci).is_err())
+                .collect();
+            (c, missing_ids.len(), acked)
         } else {
             let mut buf = CommitBuffer::new(n, None);
             drain_and_commit(
@@ -544,6 +579,14 @@ fn run_newton_family(
             )
         };
         check_quorum(&rp, committed, n, round, label);
+        // Announce the round's commit to the repliers it counted and
+        // advance their watermarks. The pools forward ROUND_ACK only
+        // to registrants that asked (`REG_WANTS_ACK`); their FIFO
+        // channels order it before the next round's command.
+        pool.ack_round(round, &acked);
+        for &ci in &acked {
+            last_commit[ci as usize] = Some(round);
+        }
         // Resolve the speculation: adoptable iff the round closed on
         // exactly the snapshot's commit count — then nothing was
         // absorbed after launch, the helper's finish IS the inline
@@ -743,7 +786,7 @@ fn run_pp(
         pool.submit_round(&x, Some(&selected), round, false);
         let mut buf = CommitBuffer::new(n, Some(&selected));
         rsum.reset();
-        let (committed, missing) = drain_and_commit(
+        let (committed, missing, _arrived) = drain_and_commit(
             pool,
             &mut buf,
             &rp,
@@ -904,20 +947,20 @@ impl Speculation {
 /// missing). Because the sums are exact, no ordering or per-client
 /// buffering is needed — a shard tier hands the engine S merged
 /// accumulators instead of n atoms, and the absorbed state is
-/// bit-identical either way. Returns (committed, missing).
+/// bit-identical either way. Returns (committed, missing ids).
 fn drain_and_sum(
     pool: &mut dyn ClientPool,
     participants: usize,
     bytes_up: &mut u64,
     timing: &mut (f64, f64),
     mut absorb: impl FnMut(RoundSum),
-) -> (usize, usize) {
+) -> (usize, Vec<u32>) {
     let mut accounted = 0usize;
-    let mut missing = 0usize;
+    let mut missing: Vec<u32> = Vec::new();
     let mut pool_closed = false;
     loop {
-        for _ci in pool.take_missing() {
-            missing += 1;
+        for ci in pool.take_missing() {
+            missing.push(ci);
             accounted += 1;
         }
         if accounted >= participants || pool_closed {
@@ -940,8 +983,8 @@ fn drain_and_sum(
     }
     // Losses certified together with the close are not stranded.
     if accounted < participants {
-        for _ci in pool.take_missing() {
-            missing += 1;
+        for ci in pool.take_missing() {
+            missing.push(ci);
             accounted += 1;
         }
     }
@@ -950,14 +993,17 @@ fn drain_and_sum(
         "round closed with {accounted}/{participants} participants \
          accounted for"
     );
-    (participants - missing, missing)
+    (participants - missing.len(), missing)
 }
 
 /// Pump the pool until every participant of the round is accounted for
 /// — replied, or certified missing and resolved per the round policy.
-/// Returns (committed, missing) counts. `timing` accumulates
-/// (wait, aggregate) seconds; `cache` (Reuse only) holds each client's
-/// last committed message and is refreshed from this round's commits.
+/// Returns (committed, missing, arrived ids): `arrived` lists the
+/// participants whose *own* reply was offered (Reuse replays are
+/// committed but not arrived — the commit-ack watermark must not
+/// advance on a replay). `timing` accumulates (wait, aggregate)
+/// seconds; `cache` (Reuse only) holds each client's last committed
+/// message and is refreshed from this round's commits.
 fn drain_and_commit(
     pool: &mut dyn ClientPool,
     buf: &mut CommitBuffer,
@@ -966,7 +1012,7 @@ fn drain_and_commit(
     bytes_up: &mut u64,
     timing: &mut (f64, f64),
     mut commit: impl FnMut(&ClientMsg),
-) -> (usize, usize) {
+) -> (usize, usize, Vec<u32>) {
     let caching = cache.is_some();
     // Fresh commits to fold back into the cache after the round (kept
     // outside the commit closure so the cache stays readable for
@@ -974,6 +1020,7 @@ fn drain_and_commit(
     // committed message even on fault-free rounds — the policy is
     // opt-in, and the copy is O(d + k) per client.
     let mut fresh: Vec<ClientMsg> = Vec::new();
+    let mut arrived: Vec<u32> = Vec::new();
     // Set once the pool reports the round closed (empty drain): one
     // final `take_missing` pass then runs before the completeness
     // assert, so losses certified together with the close are not
@@ -1012,6 +1059,7 @@ fn drain_and_commit(
             if caching {
                 fresh.push(m.clone());
             }
+            arrived.push(m.client_id as u32);
             buf.offer(m, &mut commit);
         }
         timing.1 += sw.elapsed_secs();
@@ -1025,7 +1073,8 @@ fn drain_and_commit(
             c[m.client_id] = Some(m);
         }
     }
-    (buf.committed(), buf.len() - buf.committed())
+    arrived.sort_unstable();
+    (buf.committed(), buf.len() - buf.committed(), arrived)
 }
 
 #[cfg(test)]
@@ -1228,5 +1277,218 @@ mod tests {
         let plain = sample_distinct(&mut a, 8, 4);
         let sel = select_pp_subset(&mut b, 8, 4, &[1, 2], OnMissing::Drop);
         assert_eq!(plain, sel);
+    }
+
+    use crate::algorithms::ClientState;
+    use crate::compressors::by_name;
+    use crate::coordinator::SeqPool;
+    use crate::data::{generate_synthetic, Dataset, SynthSpec};
+    use crate::oracle::LogisticOracle;
+
+    fn make_clients(n: usize, seed: u64) -> (Vec<ClientState>, usize) {
+        let spec = SynthSpec {
+            d_raw: 7,
+            n_samples: n * 24,
+            density: 0.6,
+            noise: 1.0,
+            seed,
+        };
+        let synth = generate_synthetic(&spec);
+        let samples: Vec<crate::data::LibsvmSample> = synth
+            .labels
+            .iter()
+            .zip(&synth.rows)
+            .map(|(l, r)| crate::data::LibsvmSample {
+                label: *l,
+                features: r.clone(),
+            })
+            .collect();
+        let ds = Dataset::from_libsvm(&samples, spec.d_raw);
+        let d = ds.d;
+        let cs = ds
+            .split_even(n)
+            .unwrap()
+            .into_iter()
+            .enumerate()
+            .map(|(i, sh)| {
+                ClientState::new(
+                    i,
+                    Box::new(LogisticOracle::new(sh, 1e-3)),
+                    by_name("topk", d, 2, seed + i as u64).unwrap(),
+                    None,
+                )
+            })
+            .collect();
+        (cs, d)
+    }
+
+    /// [`SeqPool`] wrapper recording the engine's commit-ack calls and
+    /// scripting one fresh rejoiner, so the ack/resolve sequencing can
+    /// be asserted without a transport.
+    struct RecordingPool {
+        inner: SeqPool<ClientState>,
+        rejoiner: u32,
+        rejoin_at: u64,
+        round: u64,
+        acks: Vec<(u64, Vec<u32>)>,
+        resolves: Vec<(u32, Option<u64>)>,
+        pulls: usize,
+    }
+
+    impl ClientPool for RecordingPool {
+        fn n_clients(&self) -> usize {
+            self.inner.n_clients()
+        }
+
+        fn dim(&self) -> usize {
+            self.inner.dim()
+        }
+
+        fn family(&self) -> ClientFamily {
+            self.inner.family()
+        }
+
+        fn default_alpha(&self) -> f64 {
+            self.inner.default_alpha()
+        }
+
+        fn set_alpha(&mut self, alpha: f64) -> f64 {
+            self.inner.set_alpha(alpha)
+        }
+
+        fn submit_round(
+            &mut self,
+            x: &[f64],
+            subset: Option<&[u32]>,
+            round: u64,
+            need_loss: bool,
+        ) {
+            self.inner.submit_round(x, subset, round, need_loss);
+        }
+
+        fn drain(&mut self) -> Vec<ClientMsg> {
+            self.inner.drain()
+        }
+
+        fn eval_loss_each(&mut self, x: &[f64]) -> Vec<(u32, f64)> {
+            self.inner.eval_loss_each(x)
+        }
+
+        fn loss_grad_each(
+            &mut self,
+            x: &[f64],
+        ) -> Vec<(u32, f64, Vec<f64>)> {
+            self.inner.loss_grad_each(x)
+        }
+
+        fn warm_start(&mut self, x: &[f64]) -> Vec<Vec<f64>> {
+            self.inner.warm_start(x)
+        }
+
+        fn init_state(&mut self) -> Vec<(f64, Vec<f64>)> {
+            self.inner.init_state()
+        }
+
+        fn prepare_round(&mut self, round: u64) {
+            self.round = round;
+        }
+
+        fn take_rejoined(&mut self) -> Vec<u32> {
+            if self.round == self.rejoin_at {
+                vec![self.rejoiner]
+            } else {
+                Vec::new()
+            }
+        }
+
+        fn take_fresh_rejoined(&mut self) -> Vec<u32> {
+            if self.round == self.rejoin_at {
+                vec![self.rejoiner]
+            } else {
+                Vec::new()
+            }
+        }
+
+        fn ack_round(&mut self, round: u64, committed: &[u32]) {
+            self.acks.push((round, committed.to_vec()));
+        }
+
+        fn resolve_staged(
+            &mut self,
+            client: u32,
+            last_commit: Option<u64>,
+        ) {
+            self.resolves.push((client, last_commit));
+        }
+
+        fn pull_h_packed(&mut self) -> Option<Vec<Vec<f64>>> {
+            self.pulls += 1;
+            Some(self.inner.clients.iter().map(|c| c.packed_h()).collect())
+        }
+    }
+
+    #[test]
+    fn engine_acks_every_round_and_resolves_rejoiners() {
+        let rounds = 4u64;
+        let opts = Options { rounds, ..Default::default() };
+        // Reference: a plain SeqPool with no rejoin scripted.
+        let (cs, d) = make_clients(3, 77);
+        let mut reference = SeqPool::new(cs);
+        let reference = run_engine(
+            &mut reference,
+            &opts,
+            StepPolicy::Newton,
+            vec![0.0; d],
+            "ref",
+        );
+        // Recorded run: client 1 surfaces as a *fresh* rejoiner at
+        // round 2's prepare.
+        let (cs, d2) = make_clients(3, 77);
+        assert_eq!(d, d2);
+        let mut pool = RecordingPool {
+            inner: SeqPool::new(cs),
+            rejoiner: 1,
+            rejoin_at: 2,
+            round: 0,
+            acks: Vec::new(),
+            resolves: Vec::new(),
+            pulls: 0,
+        };
+        let trace = run_engine(
+            &mut pool,
+            &opts,
+            StepPolicy::Newton,
+            vec![0.0; d],
+            "recorded",
+        );
+        // Every round acks its full committed set, in order.
+        assert_eq!(pool.acks.len(), rounds as usize);
+        for (r, (round, ids)) in pool.acks.iter().enumerate() {
+            assert_eq!(*round, r as u64);
+            assert_eq!(ids, &[0, 1, 2]);
+        }
+        // The rejoiner resolves against the watermark of the last
+        // round that counted its reply — round 1, the one before the
+        // rejoin surfaced.
+        assert_eq!(pool.resolves, vec![(1, Some(1))]);
+        // One exact H pull for the fresh rejoiner.
+        assert_eq!(pool.pulls, 1);
+        // The pull lands at round 2's *prepare*, after x² was already
+        // fixed: rounds 0..=2 stay bitwise on the reference. The
+        // rebuilt H — clients' α·Sᵢᵏ shifts summed exactly, one /n —
+        // equals the server's per-round (α/n)-accumulated H only up to
+        // last-bit roundings, so round 3 may drift by ulps.
+        assert_eq!(reference.records.len(), trace.records.len());
+        for (a, b) in reference.records.iter().zip(&trace.records) {
+            assert_eq!(a.committed, b.committed);
+            assert_eq!(a.missing, b.missing);
+            if a.round <= 2 {
+                assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits());
+            } else {
+                let rel = (a.grad_norm - b.grad_norm).abs()
+                    / a.grad_norm.max(f64::MIN_POSITIVE);
+                assert!(rel < 1e-9, "round {}: rel drift {rel}", a.round);
+            }
+        }
     }
 }

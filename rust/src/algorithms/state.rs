@@ -224,6 +224,18 @@ impl RoundSum {
     }
 }
 
+/// A computed-but-unacknowledged round application: the scaled sparse
+/// shift Hᵢ ← Hᵢ + αSᵢ, withheld until the master acknowledges the
+/// round's commit (the commit-ack protocol — see `net::wire`). The
+/// deltas are the exact per-index products `α·scale·vⱼ` the immediate
+/// apply would have added, so commit-then-apply is bitwise identical
+/// to the unstaged path.
+#[derive(Debug, Clone)]
+struct StagedApply {
+    round: u64,
+    deltas: Vec<(u32, f64)>,
+}
+
 /// Per-client FedNL state: local oracle + Hessian shift + compressor.
 pub struct ClientState {
     pub id: usize,
@@ -234,6 +246,12 @@ pub struct ClientState {
     /// Hessian learning rate α (same value server-side).
     pub alpha: f64,
     pub pu: PackedUpper,
+    /// At most one round's shift in flight (commit-ack staging). The
+    /// ack for round k always resolves before round k+1 is computed
+    /// (TCP FIFO: ROUND_ACK(k) precedes ROUND(k+1); a reconnect
+    /// resolves via RESYNC first), so a pending stage when a new
+    /// staged round arrives is stale and discarded.
+    staged: Option<StagedApply>,
     // Reused round buffers (no allocation in the loop, §5.13):
     hess: Mat,
     hess_packed: Vec<f64>,
@@ -260,6 +278,7 @@ impl ClientState {
             h_shift: vec![0.0; n],
             alpha,
             pu,
+            staged: None,
             hess: Mat::zeros(d, d),
             hess_packed: vec![0.0; n],
             diff: vec![0.0; n],
@@ -285,6 +304,36 @@ impl ClientState {
     /// One FedNL client round at iterate `x` (Alg. 1 lines 4–6).
     /// `need_loss` additionally returns fᵢ(xᵏ) (FedNL-LS line 5).
     pub fn round(&mut self, x: &[f64], round: u64, need_loss: bool) -> ClientMsg {
+        self.round_inner(x, round, need_loss, false)
+    }
+
+    /// [`ClientState::round`] under the commit-ack protocol: the shift
+    /// update Hᵢᵏ⁺¹ = Hᵢᵏ + αSᵢᵏ is **staged**, not applied — it lands
+    /// only on [`commit_staged`] (the master's `ROUND_ACK`) or a
+    /// favorable [`resolve_staged`] (rejoin `RESYNC`). Closes the
+    /// "computed but reply lost" hole: a round the master never
+    /// committed leaves this client's state bitwise identical to never
+    /// having computed it, which is exactly what the deterministic
+    /// fault plan's frozen-client semantics assume.
+    ///
+    /// [`commit_staged`]: ClientState::commit_staged
+    /// [`resolve_staged`]: ClientState::resolve_staged
+    pub fn round_staged(
+        &mut self,
+        x: &[f64],
+        round: u64,
+        need_loss: bool,
+    ) -> ClientMsg {
+        self.round_inner(x, round, need_loss, true)
+    }
+
+    fn round_inner(
+        &mut self,
+        x: &[f64],
+        round: u64,
+        need_loss: bool,
+        stage: bool,
+    ) -> ClientMsg {
         let loss = self.oracle.loss_grad_hessian(
             x,
             &mut self.grad_buf,
@@ -298,8 +347,22 @@ impl ClientState {
         let update = self.compressor.compress(&self.pu, &self.diff, round);
         // Hᵢᵏ⁺¹ = Hᵢᵏ + α Sᵢᵏ, sparse in packed coords (line 6).
         let a = self.alpha * update.scale;
-        for (v, idx) in update.values.iter().zip(update.indices()) {
-            self.h_shift[idx as usize] += a * v;
+        if stage {
+            // A still-pending stage is stale (its round was never
+            // acked yet the master moved on) — drop it.
+            self.staged = Some(StagedApply {
+                round,
+                deltas: update
+                    .values
+                    .iter()
+                    .zip(update.indices())
+                    .map(|(v, idx)| (idx, a * v))
+                    .collect(),
+            });
+        } else {
+            for (v, idx) in update.values.iter().zip(update.indices()) {
+                self.h_shift[idx as usize] += a * v;
+            }
         }
         ClientMsg {
             client_id: self.id,
@@ -308,6 +371,53 @@ impl ClientState {
             l_i,
             loss: if need_loss { Some(loss) } else { None },
         }
+    }
+
+    /// Round of the shift currently staged, if any (test hook).
+    pub fn staged_round(&self) -> Option<u64> {
+        self.staged.as_ref().map(|s| s.round)
+    }
+
+    /// Apply the staged shift: the master committed `round` with this
+    /// client's reply counted (`ROUND_ACK`). A stage newer than the
+    /// acked round is impossible on an ordered channel and is kept; an
+    /// older one is stale and applied too (its commit was simply
+    /// reported late).
+    pub fn commit_staged(&mut self, round: u64) {
+        if let Some(s) = self.staged.take() {
+            if s.round > round {
+                self.staged = Some(s);
+                return;
+            }
+            for &(idx, dv) in &s.deltas {
+                self.h_shift[idx as usize] += dv;
+            }
+        }
+    }
+
+    /// Drop the staged shift without applying it (the master certified
+    /// the round missed this client).
+    pub fn discard_staged(&mut self) {
+        self.staged = None;
+    }
+
+    /// Rejoin resolution against the master's commit watermark
+    /// (`RESYNC`): a staged round the master committed (≤
+    /// `last_commit`) is applied — the reply was delivered but the ack
+    /// was lost; anything newer (or any stage when the master never
+    /// committed us) is discarded — the reply never made it. Both
+    /// windows land on exactly-once application.
+    pub fn resolve_staged(&mut self, last_commit: Option<u64>) {
+        match (self.staged.as_ref(), last_commit) {
+            (Some(s), Some(lc)) if s.round <= lc => self.commit_staged(lc),
+            _ => self.discard_staged(),
+        }
+    }
+
+    /// Current packed Hᵢ (the exact-resync upload a fresh-state
+    /// rejoiner's `PULL_H` round collects).
+    pub fn packed_h(&self) -> Vec<f64> {
+        self.h_shift.clone()
     }
 
     /// Loss-only evaluation (line-search probes).
@@ -548,6 +658,77 @@ mod tests {
         assert!((s.l - expected_l).abs() < 1e-12);
         let expected_f = (m0.loss.unwrap() + m1.loss.unwrap()) / 2.0;
         assert!((loss.unwrap() - expected_f).abs() < 1e-12);
+    }
+
+    #[test]
+    fn staged_commit_matches_unstaged_bitwise() {
+        let mut plain = quad_client(0);
+        let mut staged = quad_client(0);
+        let x = [0.3, -0.7];
+        let m1 = plain.round(&x, 0, true);
+        let m2 = staged.round_staged(&x, 0, true);
+        assert_eq!(m1.l_i.to_bits(), m2.l_i.to_bits());
+        // Before the ack the staged client hasn't moved.
+        assert_eq!(staged.h_shift, vec![0.0; staged.h_shift.len()]);
+        assert_eq!(staged.staged_round(), Some(0));
+        staged.commit_staged(0);
+        assert_eq!(staged.staged_round(), None);
+        let a: Vec<u64> =
+            plain.h_shift.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u64> =
+            staged.h_shift.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+        // Double commit is a no-op (exactly-once).
+        staged.commit_staged(0);
+        let b2: Vec<u64> =
+            staged.h_shift.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn resolve_staged_applies_acked_discards_unacked() {
+        // Ack-lost window: reply delivered (master committed round 3),
+        // ack lost, rejoin RESYNC(last_commit = 3) → apply.
+        let mut c = quad_client(0);
+        c.round_staged(&[0.1, 0.2], 3, false);
+        c.resolve_staged(Some(3));
+        assert_eq!(c.staged_round(), None);
+        assert!(c.h_shift.iter().any(|&v| v != 0.0));
+        // Reply-lost window: staged round 4, master only committed 3
+        // → discard; state must equal never-computed (frozen client).
+        let mut lost = quad_client(0);
+        let frozen = quad_client(0);
+        lost.round_staged(&[0.1, 0.2], 4, false);
+        lost.resolve_staged(Some(3));
+        let a: Vec<u64> =
+            lost.h_shift.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u64> =
+            frozen.h_shift.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+        // No commit watermark at all → discard too.
+        let mut none = quad_client(0);
+        none.round_staged(&[0.1, 0.2], 0, false);
+        none.resolve_staged(None);
+        assert!(none.h_shift.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn new_staged_round_supersedes_stale_stage() {
+        let mut c = quad_client(0);
+        c.round_staged(&[0.1, 0.2], 1, false);
+        c.round_staged(&[0.2, 0.1], 2, false);
+        assert_eq!(c.staged_round(), Some(2));
+        // Committing the newer round applies only the newer deltas.
+        c.commit_staged(2);
+        assert_eq!(c.staged_round(), None);
+    }
+
+    #[test]
+    fn packed_h_reflects_committed_state() {
+        let mut c = quad_client(0);
+        assert_eq!(c.packed_h(), vec![0.0; c.h_shift.len()]);
+        c.round(&[0.5, 0.5], 0, false);
+        assert_eq!(c.packed_h(), c.h_shift);
     }
 
     #[test]

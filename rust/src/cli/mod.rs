@@ -78,6 +78,20 @@ impl Args {
         }
     }
 
+    /// Comma-separated list option (`--key a,b,c`); empty when the
+    /// option is absent. Empty segments are dropped, so a trailing
+    /// comma is harmless.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .map(|v| {
+                v.split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(str::to_string)
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
     pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -126,6 +140,13 @@ mod tests {
         let a = parse(&["run", "--fast"]);
         assert!(a.flag("fast"));
         assert_eq!(a.get("fast"), None);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["client", "--fallback", "a:1,b:2,"]);
+        assert_eq!(a.get_list("fallback"), vec!["a:1", "b:2"]);
+        assert!(a.get_list("absent").is_empty());
     }
 
     #[test]

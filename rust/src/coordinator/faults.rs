@@ -28,14 +28,23 @@
 //!   latency instead of certifying clairvoyantly. The missing set is
 //!   still schedule-decided; only the instant within the round at
 //!   which it is reported is wall-clock.
+//! * `killrelay@R:S` — shard S's **aggregator** dies at round R: its
+//!   whole partition misses round R and rejoins at R+1 (the adoption
+//!   heal). On transports with a shard layout the event is desugared
+//!   into per-client kill spans (deterministic bookkeeping); on the
+//!   relay tier the shard's channel is additionally severed for real
+//!   ([`ClientPool::kill_shard`]), so clients fail over to the master
+//!   and the partition-adoption path runs end-to-end — with a
+//!   trajectory bit-identical to the desugared flat reference.
 //!
 //! Faults suppress the ROUND *delivery*: a faulted client never
 //! computes the round, so its local Hessian shift never advances and
-//! client/master bookkeeping stays consistent on every transport. (The
-//! realistic "client computed but the reply was lost" failure would
-//! desynchronize the local Hᵢ and needs a commit-ack protocol; the
-//! engine's `OnMissing::Reuse` policy covers the observable half —
-//! stale contributions — without the desync.) Logical byte accounting
+//! client/master bookkeeping stays consistent on every transport. The
+//! realistic "client computed but the reply was lost" failure is
+//! closed by the commit-ack protocol (`net::wire`): failover clients
+//! stage each round's shift until the master's `ROUND_ACK`, so a
+//! computed-but-uncommitted round leaves the client bitwise identical
+//! to the frozen semantics injected here. Logical byte accounting
 //! in the drivers still charges the suppressed command frames: the
 //! drop is modeled at the transport boundary.
 //!
@@ -70,6 +79,14 @@ pub struct FaultPlan {
     pub drops: Vec<(u64, u32)>,
     /// (round, client, milliseconds) reply delays.
     pub delays: Vec<(u64, u32, u64)>,
+    /// (round, shard) relay kills: shard S's aggregator dies at round
+    /// R — its whole partition misses round R and is adopted/rejoined
+    /// at R+1. Desugared into per-client [`KillSpan`]s once the shard
+    /// layout is known ([`FaultPlan::desugar_relay_kills`]); on the
+    /// relay tier the kill additionally severs the real channel
+    /// ([`super::ClientPool::kill_shard`]) so partition adoption runs
+    /// end-to-end.
+    pub relay_kills: Vec<(u64, u32)>,
 }
 
 fn num<T: std::str::FromStr>(s: &str, ev: &str) -> Result<T> {
@@ -83,14 +100,18 @@ impl FaultPlan {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.kills.is_empty() && self.drops.is_empty() && self.delays.is_empty()
+        self.kills.is_empty()
+            && self.drops.is_empty()
+            && self.delays.is_empty()
+            && self.relay_kills.is_empty()
     }
 
     /// Parse the CLI schema: comma-separated events, each
-    /// `kill@R:C[-R2]` | `drop@R:C` | `delay@R:C:MS`.
+    /// `kill@R:C[-R2]` | `drop@R:C` | `delay@R:C:MS` |
+    /// `killrelay@R:S`.
     ///
     /// ```text
-    /// kill@6:1-18,delay@3:2:25,drop@12:0
+    /// kill@6:1-18,delay@3:2:25,drop@12:0,killrelay@4:1
     /// ```
     pub fn parse(spec: &str) -> Result<Self> {
         let mut plan = FaultPlan::default();
@@ -127,6 +148,9 @@ impl FaultPlan {
                 "drop" => {
                     plan.drops.push((round, num(args, ev)?));
                 }
+                "killrelay" => {
+                    plan.relay_kills.push((round, num(args, ev)?));
+                }
                 "delay" => {
                     let Some((client, ms)) = args.split_once(':') else {
                         bail!("fault event '{ev}': expected delay@round:client:ms");
@@ -157,6 +181,9 @@ impl FaultPlan {
         for &(r, c, ms) in &self.delays {
             parts.push(format!("delay@{r}:{c}:{ms}"));
         }
+        for &(r, s) in &self.relay_kills {
+            parts.push(format!("killrelay@{r}:{s}"));
+        }
         parts.join(",")
     }
 
@@ -180,6 +207,42 @@ impl FaultPlan {
     pub fn with_delay(mut self, round: u64, client: u32, ms: u64) -> Self {
         self.delays.push((round, client, ms));
         self
+    }
+
+    /// Builder: kill shard `shard`'s relay at round `round` (partition
+    /// misses `round`, adopted/rejoined at `round + 1`).
+    pub fn with_relay_kill(mut self, round: u64, shard: u32) -> Self {
+        self.relay_kills.push((round, shard));
+        self
+    }
+
+    /// Lower every relay kill onto per-client [`KillSpan`]s against
+    /// the given contiguous shard partition (`ranges[s] = (lo, hi)`):
+    /// `killrelay@R:S` ≡ `kill@R:c-(R+1)` for every c in S's range —
+    /// the partition misses exactly round R and rejoins at R+1, which
+    /// is precisely what the relay tier's adoption path observably
+    /// does. The `relay_kills` themselves are kept (the relay tier
+    /// still severs the real channel); callers relying on this plan's
+    /// bookkeeping alone get the bit-identical flat equivalent.
+    pub fn desugar_relay_kills(&mut self, ranges: &[(u32, u32)]) {
+        for &(round, shard) in &self.relay_kills {
+            let (lo, hi) = *ranges
+                .get(shard as usize)
+                .unwrap_or_else(|| {
+                    panic!(
+                        "killrelay names shard {shard} but the layout \
+                         has {} shards",
+                        ranges.len()
+                    )
+                });
+            for client in lo..hi {
+                self.kills.push(KillSpan {
+                    client,
+                    from: round,
+                    until: Some(round + 1),
+                });
+            }
+        }
     }
 
     /// Is `client` frozen at `round`?
@@ -236,11 +299,58 @@ pub struct FaultPool<P: ClientPool> {
     /// atom visibility, so a round with holds drops to the atom path
     /// (exactness keeps the trajectory bit-identical either way).
     round_atoms: bool,
+    /// Relay kills to apply natively — (round, shard, applied). Only
+    /// populated when the inner pool supports a real shard kill; the
+    /// plan's desugared per-client spans carry the deterministic
+    /// bookkeeping either way, the native kill additionally severs the
+    /// channel so partition adoption runs for real.
+    native_kills: Vec<(u64, u32, bool)>,
 }
 
 impl<P: ClientPool> FaultPool<P> {
     pub fn new(inner: P, plan: FaultPlan) -> Self {
+        let ranges = inner.shard_ranges();
+        Self::build(inner, plan, ranges)
+    }
+
+    /// [`FaultPool::new`] with an explicit shard layout: lets
+    /// `killrelay@R:S` events run on **flat** transports (SeqPool,
+    /// ThreadedPool, RemotePool, EventPool) by desugaring them against
+    /// the same contiguous partition [`super::shard::partition`] would
+    /// produce — the flat reference trajectory a relay-tree failover
+    /// run must match bitwise.
+    pub fn with_shard_layout(
+        inner: P,
+        plan: FaultPlan,
+        n_shards: usize,
+    ) -> Self {
+        let ranges = super::shard::partition(inner.n_clients(), n_shards);
+        Self::build(inner, plan, Some(ranges))
+    }
+
+    fn build(
+        inner: P,
+        mut plan: FaultPlan,
+        ranges: Option<Vec<(u32, u32)>>,
+    ) -> Self {
         let n = inner.n_clients();
+        let mut native_kills = Vec::new();
+        if !plan.relay_kills.is_empty() {
+            let ranges = ranges.unwrap_or_else(|| {
+                panic!(
+                    "killrelay@R:S needs a shard layout: wrap a sharded \
+                     transport or use FaultPool::with_shard_layout"
+                )
+            });
+            plan.desugar_relay_kills(&ranges);
+            if inner.supports_shard_kill() {
+                native_kills = plan
+                    .relay_kills
+                    .iter()
+                    .map(|&(r, s)| (r, s, false))
+                    .collect();
+            }
+        }
         if let Some(c) = plan.max_client() {
             assert!(
                 (c as usize) < n,
@@ -258,6 +368,7 @@ impl<P: ClientPool> FaultPool<P> {
             late_certs: Vec::new(),
             mode: RoundMode::Atoms,
             round_atoms: true,
+            native_kills,
         }
     }
 
@@ -354,7 +465,40 @@ impl<P: ClientPool> ClientPool for FaultPool<P> {
 
     fn take_rejoined(&mut self) -> Vec<u32> {
         self.rejoined.extend(self.inner.take_rejoined());
+        // A natively-killed partition is reported twice — by the
+        // desugared plan spans *and* by the transport's adoption path;
+        // dedup (sorted: deterministic order on every transport).
+        self.rejoined.sort_unstable();
+        self.rejoined.dedup();
         std::mem::take(&mut self.rejoined)
+    }
+
+    fn take_fresh_rejoined(&mut self) -> Vec<u32> {
+        self.inner.take_fresh_rejoined()
+    }
+
+    fn ack_round(&mut self, round: u64, committed: &[u32]) {
+        self.inner.ack_round(round, committed);
+    }
+
+    fn resolve_staged(&mut self, client: u32, last_commit: Option<u64>) {
+        self.inner.resolve_staged(client, last_commit);
+    }
+
+    fn pull_h_packed(&mut self) -> Option<Vec<Vec<f64>>> {
+        self.inner.pull_h_packed()
+    }
+
+    fn supports_shard_kill(&self) -> bool {
+        self.inner.supports_shard_kill()
+    }
+
+    fn kill_shard(&mut self, shard: u32) {
+        self.inner.kill_shard(shard);
+    }
+
+    fn shard_ranges(&self) -> Option<Vec<(u32, u32)>> {
+        self.inner.shard_ranges()
     }
 
     fn set_reply_deadline(&mut self, deadline: Option<Duration>) {
@@ -363,6 +507,17 @@ impl<P: ClientPool> ClientPool for FaultPool<P> {
     }
 
     fn submit_round(&mut self, x: &[f64], subset: Option<&[u32]>, round: u64, need_loss: bool) {
+        // Scripted relay deaths land here, before the round goes out:
+        // the partition is already suppressed below (its desugared
+        // kill spans), severing the channel now makes the real
+        // failover — client reconnection, partition adoption — run
+        // inside exactly the round the schedule names.
+        for nk in &mut self.native_kills {
+            if nk.0 == round && !nk.2 {
+                self.inner.kill_shard(nk.1);
+                nk.2 = true;
+            }
+        }
         let all: Vec<u32>;
         let participants: &[u32] = match subset {
             Some(s) => s,
@@ -486,7 +641,10 @@ mod tests {
 
     #[test]
     fn parse_full_schema() {
-        let plan = FaultPlan::parse("kill@6:1-18, delay@3:2:25, drop@12:0, kill@4:3").unwrap();
+        let plan = FaultPlan::parse(
+            "kill@6:1-18, delay@3:2:25, drop@12:0, kill@4:3, killrelay@5:1",
+        )
+        .unwrap();
         assert_eq!(plan.kills.len(), 2);
         assert_eq!(plan.kills[0].client, 1);
         assert_eq!(plan.kills[0].from, 6);
@@ -494,6 +652,60 @@ mod tests {
         assert_eq!(plan.kills[1].until, None);
         assert_eq!(plan.drops, vec![(12, 0)]);
         assert_eq!(plan.delays, vec![(3, 2, 25)]);
+        assert_eq!(plan.relay_kills, vec![(5, 1)]);
+    }
+
+    #[test]
+    fn killrelay_parses_and_round_trips() {
+        let plan = FaultPlan::parse("killrelay@4:0,killrelay@7:2").unwrap();
+        assert_eq!(plan.relay_kills, vec![(4, 0), (7, 2)]);
+        assert!(!plan.is_empty());
+        let re = FaultPlan::parse(&plan.to_spec()).unwrap();
+        assert_eq!(plan, re);
+        // Builder ≡ parser.
+        let built =
+            FaultPlan::none().with_relay_kill(4, 0).with_relay_kill(7, 2);
+        assert_eq!(built, plan);
+    }
+
+    #[test]
+    fn killrelay_rejects_malformed() {
+        assert!(FaultPlan::parse("killrelay@1:-2").is_err()); // neg shard
+        assert!(FaultPlan::parse("killrelay@-1:2").is_err()); // neg round
+        assert!(FaultPlan::parse("killrelay@1:2x").is_err()); // junk
+        assert!(FaultPlan::parse("killrelay@x:2").is_err());
+        assert!(FaultPlan::parse("killrelay@1.5:2").is_err());
+        assert!(FaultPlan::parse("killrelay@1:2-3").is_err()); // no spans
+        assert!(FaultPlan::parse("killrelay@5").is_err()); // missing :S
+    }
+
+    #[test]
+    fn killrelay_desugars_to_partition_kill_spans() {
+        let mut plan = FaultPlan::parse("killrelay@2:1").unwrap();
+        plan.desugar_relay_kills(&[(0, 2), (2, 5)]);
+        // Shard 1's range [2, 5): each client frozen exactly round 2.
+        assert_eq!(
+            plan.kills,
+            vec![
+                KillSpan { client: 2, from: 2, until: Some(3) },
+                KillSpan { client: 3, from: 2, until: Some(3) },
+                KillSpan { client: 4, from: 2, until: Some(3) },
+            ]
+        );
+        // The relay event survives desugaring (the native trigger).
+        assert_eq!(plan.relay_kills, vec![(2, 1)]);
+        for c in 2..5u32 {
+            assert!(plan.dead_at(c, 2));
+            assert!(!plan.dead_at(c, 1) && !plan.dead_at(c, 3));
+        }
+        assert!(!plan.dead_at(0, 2) && !plan.dead_at(1, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "has 2 shards")]
+    fn killrelay_bad_shard_id_panics_at_desugar() {
+        let mut plan = FaultPlan::parse("killrelay@1:5").unwrap();
+        plan.desugar_relay_kills(&[(0, 2), (2, 4)]);
     }
 
     #[test]
@@ -582,6 +794,62 @@ mod tests {
         assert!(!plan.dead_at(1, 6));
         assert!(plan.dead_at(2, 100));
         assert!(!plan.dead_at(0, 3));
+    }
+
+    #[test]
+    fn killrelay_on_flat_pool_freezes_partition_for_one_round() {
+        use crate::algorithms::ClientState;
+        use crate::compressors::Identity;
+        use crate::linalg::Mat;
+        use crate::oracle::QuadraticOracle;
+        let clients: Vec<ClientState> = (0..4)
+            .map(|i| {
+                let q = Mat::from_rows(&[&[2.0, 0.5], &[0.5, 1.5]]);
+                ClientState::new(
+                    i,
+                    Box::new(QuadraticOracle::new(q, vec![1.0, -1.0])),
+                    Box::new(Identity),
+                    None,
+                )
+            })
+            .collect();
+        let pool = super::super::SeqPool::new(clients);
+        let plan = FaultPlan::parse("killrelay@1:1").unwrap();
+        // Flat transport: the explicit layout desugars the relay kill.
+        let mut fp = FaultPool::with_shard_layout(pool, plan, 2);
+        let drain_all = |fp: &mut FaultPool<_>| {
+            let mut got = Vec::new();
+            loop {
+                let b = fp.drain();
+                if b.is_empty() {
+                    break;
+                }
+                got.extend(b.into_iter().map(|m| m.client_id as u32));
+            }
+            got
+        };
+        // Round 0: everyone lives.
+        fp.prepare_round(0);
+        assert!(fp.take_rejoined().is_empty());
+        fp.submit_round(&[0.0, 0.0], None, 0, false);
+        assert_eq!(drain_all(&mut fp).len(), 4);
+        assert!(fp.take_missing().is_empty());
+        // Round 1: shard 1's partition (clients 2, 3) is dead.
+        fp.prepare_round(1);
+        assert_eq!(fp.dead_clients(), vec![2, 3]);
+        fp.submit_round(&[0.0, 0.0], None, 1, false);
+        let mut committed = drain_all(&mut fp);
+        committed.sort_unstable();
+        assert_eq!(committed, vec![0, 1]);
+        let mut missing = fp.take_missing();
+        missing.sort_unstable();
+        assert_eq!(missing, vec![2, 3]);
+        // Round 2: the partition is adopted/rejoined.
+        fp.prepare_round(2);
+        assert_eq!(fp.take_rejoined(), vec![2, 3]);
+        assert!(fp.dead_clients().is_empty());
+        fp.submit_round(&[0.0, 0.0], None, 2, false);
+        assert_eq!(drain_all(&mut fp).len(), 4);
     }
 
     #[test]

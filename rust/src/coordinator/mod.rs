@@ -73,6 +73,18 @@
 //! * [`ClientPool::set_reply_deadline`] / [`ClientPool::pull_state`] —
 //!   the reply deadline and the per-client STATE pull that the rejoin
 //!   resync rides on.
+//! * [`ClientPool::ack_round`] / [`ClientPool::resolve_staged`] /
+//!   [`ClientPool::take_fresh_rejoined`] /
+//!   [`ClientPool::pull_h_packed`] — the commit-ack protocol: clients
+//!   that may fail over stage each round's apply until the master
+//!   acknowledges the commit, and a rejoiner resolves (or exactly
+//!   re-uploads) its state so "reply lost" and "ack lost" both land on
+//!   exactly-once application.
+//! * [`ClientPool::kill_shard`] / [`ClientPool::supports_shard_kill`] /
+//!   [`ClientPool::shard_ranges`] — scripted relay-failure injection:
+//!   native on the relay tier (the shard's channel is severed and the
+//!   master adopts the orphaned partition), desugared to per-client
+//!   kills elsewhere, bit-identical either way.
 //!
 //! Deterministic fault *injection* lives in [`faults::FaultPool`], a
 //! wrapper that imposes a seeded [`faults::FaultPlan`] on any inner
@@ -493,6 +505,72 @@ pub trait ClientPool {
     /// driver skips the resync (the client is dead and unscheduled).
     fn pull_state(&mut self, _client: u32) -> Option<(f64, Vec<f64>)> {
         panic!("per-client state pull not supported by this transport")
+    }
+
+    // --- commit acks / shard failover (defaults = in-process: the
+    // reply channel is the commit, nothing stages, relays never die) ---
+
+    /// Announce that round `round` closed with `committed`'s replies
+    /// counted. TCP transports forward a `ROUND_ACK` to each committed
+    /// client that registered with `wants_ack` (the commit-ack
+    /// protocol); everyone else ignores it. In-process pools no-op:
+    /// their clients' applies are synchronous with the drain.
+    fn ack_round(&mut self, _round: u64, _committed: &[u32]) {}
+
+    /// Resolve a rejoiner's staged round application against the
+    /// engine's commit watermark for that id (`RESYNC` on the wire:
+    /// apply staged round ≤ `last_commit`, discard anything newer).
+    /// Called by the driver for every id surfaced by
+    /// [`take_rejoined`] before the client is scheduled again.
+    ///
+    /// [`take_rejoined`]: ClientPool::take_rejoined
+    fn resolve_staged(&mut self, _client: u32, _last_commit: Option<u64>) {}
+
+    /// Subset of the last [`take_rejoined`] batch that re-registered
+    /// with the `fresh` flag (restarted process, empty in-memory
+    /// state): these need the exact Hᵢ resync via [`pull_h_packed`].
+    /// Must be drained after `take_rejoined` (it is a refinement of
+    /// that batch, not an independent stream).
+    ///
+    /// [`take_rejoined`]: ClientPool::take_rejoined
+    /// [`pull_h_packed`]: ClientPool::pull_h_packed
+    fn take_fresh_rejoined(&mut self) -> Vec<u32> {
+        Vec::new()
+    }
+
+    /// Exact H resync: every live FedNL client's packed Hᵢ, in
+    /// client-id order (`PULL_H` broadcast on the wire). `None` means
+    /// the transport cannot (or some client failed to answer) — the
+    /// driver falls back to its approximate rejoin handling.
+    fn pull_h_packed(&mut self) -> Option<Vec<Vec<f64>>> {
+        None
+    }
+
+    /// True iff [`kill_shard`] is wired to a real failure path (the
+    /// relay tier: severing the shard's channel exercises partition
+    /// adoption end-to-end). The fault injector uses this to decide
+    /// between a native `killrelay` and its per-client desugaring.
+    ///
+    /// [`kill_shard`]: ClientPool::kill_shard
+    fn supports_shard_kill(&self) -> bool {
+        false
+    }
+
+    /// Sever shard `shard`'s aggregator abruptly (scripted `killrelay`
+    /// injection). Only meaningful when [`supports_shard_kill`]; the
+    /// default panics so a misrouted injection fails loudly.
+    ///
+    /// [`supports_shard_kill`]: ClientPool::supports_shard_kill
+    fn kill_shard(&mut self, _shard: u32) {
+        panic!("shard kill not supported by this transport")
+    }
+
+    /// The contiguous global-id partition of each shard, ascending, if
+    /// this pool aggregates through shards. The fault injector uses it
+    /// to desugar `killrelay@R:S` into per-client kills on transports
+    /// without a native kill path.
+    fn shard_ranges(&self) -> Option<Vec<(u32, u32)>> {
+        None
     }
 }
 

@@ -96,7 +96,8 @@ pub fn partition(n: usize, s: usize) -> Vec<(u32, u32)> {
 pub struct ShardedPool {
     shards: Vec<Box<dyn ClientPool>>,
     /// Global-id range `[lo, hi)` of each shard, ascending, contiguous
-    /// from 0.
+    /// from the pool's base (0 for a top-level tier; an inner tier of
+    /// a deeper tree serves its own contiguous sub-partition).
     ranges: Vec<(u32, u32)>,
     n_clients: usize,
     /// Per-shard "this round is fully drained" flags.
@@ -109,16 +110,21 @@ pub struct ShardedPool {
 
 impl ShardedPool {
     /// Build the tier over pre-constructed shard aggregators. Each
-    /// `shards[i]` must own exactly the clients of `ranges[i]`, the
-    /// ranges must tile `0..n` contiguously in ascending order, and
-    /// the shards must agree on dimension and client family.
+    /// `shards[i]` must own exactly the clients of `ranges[i]` and the
+    /// ranges must tile a contiguous ascending global-id interval
+    /// (starting at 0 for a top-level tier; an inner tier of a deeper
+    /// tree tiles its own `[base, base+m)` sub-partition — a
+    /// `ShardedPool` is itself a [`ClientPool`], so tiers nest into
+    /// S-ary trees of any depth and the exact pre-reduction composes).
+    /// The shards must agree on dimension and client family.
     pub fn from_shards(
         shards: Vec<Box<dyn ClientPool>>,
         ranges: Vec<(u32, u32)>,
     ) -> Self {
         assert!(!shards.is_empty(), "need at least one shard");
         assert_eq!(shards.len(), ranges.len());
-        let mut expect = 0u32;
+        let base = ranges[0].0;
+        let mut expect = base;
         for (s, &(lo, hi)) in ranges.iter().enumerate() {
             assert!(
                 lo == expect && hi > lo,
@@ -141,7 +147,7 @@ impl ShardedPool {
                 "shard {s}: shards are family-homogeneous"
             );
         }
-        let n_clients = expect as usize;
+        let n_clients = (expect - base) as usize;
         let n_shards = shards.len();
         let stats = ranges
             .iter()
@@ -469,6 +475,48 @@ impl ClientPool for ShardedPool {
         self.shards[s].pull_state(client)
     }
 
+    fn take_fresh_rejoined(&mut self) -> Vec<u32> {
+        let mut out = Vec::new();
+        for sh in &mut self.shards {
+            out.extend(sh.take_fresh_rejoined());
+        }
+        out.sort_unstable();
+        out
+    }
+
+    fn ack_round(&mut self, round: u64, committed: &[u32]) {
+        for s in 0..self.shards.len() {
+            let (lo, hi) = self.ranges[s];
+            let part: Vec<u32> = committed
+                .iter()
+                .copied()
+                .filter(|&c| c >= lo && c < hi)
+                .collect();
+            if !part.is_empty() {
+                self.shards[s].ack_round(round, &part);
+            }
+        }
+    }
+
+    fn resolve_staged(&mut self, client: u32, last_commit: Option<u64>) {
+        let s = self.shard_of(client);
+        self.shards[s].resolve_staged(client, last_commit);
+    }
+
+    fn pull_h_packed(&mut self) -> Option<Vec<Vec<f64>>> {
+        // Exact only if every shard can serve its partition (ascending
+        // shard order keeps global client-id order).
+        let mut out = Vec::with_capacity(self.n_clients);
+        for sh in &mut self.shards {
+            out.extend(sh.pull_h_packed()?);
+        }
+        Some(out)
+    }
+
+    fn shard_ranges(&self) -> Option<Vec<(u32, u32)>> {
+        Some(self.ranges.clone())
+    }
+
     fn transport_bytes(&self) -> Option<(u64, u64)> {
         // Metered only when every shard meters (the TCP relay tier);
         // in-process partitions keep the drivers' logical accounting.
@@ -688,6 +736,77 @@ mod tests {
             n += sums.iter().map(|s| s.committed).sum::<u32>();
         }
         assert_eq!(n, 6);
+    }
+
+    #[test]
+    fn nested_shard_tiers_match_flat_bitwise() {
+        // A depth-3 tree built from in-process tiers: the outer pool
+        // serves [0,6) through shard 0 = SeqPool([0,2)) and shard 1 =
+        // an inner ShardedPool serving [2,6) (base 2 > 0) with its own
+        // two SeqPool leaves. Pre-reduction must compose exactly: the
+        // merged sum and every probe are bit-identical to a flat pool.
+        let (cs1, d) = make_clients(6, 46);
+        let (cs2, _) = make_clients(6, 46);
+        let mut flat = SeqPool::new(cs1);
+
+        let mut it = cs2.into_iter();
+        let a: Vec<ClientState> = it.by_ref().take(2).collect();
+        let b: Vec<ClientState> = it.by_ref().take(2).collect();
+        let c: Vec<ClientState> = it.collect();
+        let inner_shards: Vec<Box<dyn ClientPool>> =
+            vec![Box::new(SeqPool::new(b)), Box::new(SeqPool::new(c))];
+        let inner =
+            ShardedPool::from_shards(inner_shards, vec![(2, 4), (4, 6)]);
+        assert_eq!(inner.n_clients(), 4);
+        let outer_shards: Vec<Box<dyn ClientPool>> =
+            vec![Box::new(SeqPool::new(a)), Box::new(inner)];
+        let mut tree =
+            ShardedPool::from_shards(outer_shards, vec![(0, 2), (2, 6)]);
+        assert_eq!(tree.n_clients(), 6);
+        assert_eq!(
+            tree.shard_ranges(),
+            Some(vec![(0, 2), (2, 6)])
+        );
+
+        let x = vec![0.12; d];
+        assert_eq!(
+            flat.eval_loss(&x).to_bits(),
+            tree.eval_loss(&x).to_bits()
+        );
+        // Sum-mode round: the tree pre-reduces per tier; the merge of
+        // its (at most two) top-level sums must equal the flat fold.
+        flat.submit_round(&x, None, 0, true);
+        let mut all = Vec::new();
+        loop {
+            let batch = flat.drain();
+            if batch.is_empty() {
+                break;
+            }
+            all.extend(batch);
+        }
+        let mut want = crate::algorithms::RoundSum::from_msgs(&all);
+        tree.submit_round(&x, None, 0, true);
+        let mut got = crate::algorithms::RoundSum::new();
+        loop {
+            let sums = tree.drain_sums();
+            if sums.is_empty() {
+                break;
+            }
+            for s in sums {
+                got.merge(s);
+            }
+        }
+        assert_eq!(got.committed, 6);
+        assert_eq!(got.l.round().to_bits(), want.l.round().to_bits());
+        let a: Vec<u64> =
+            got.grad.round_vec().iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u64> =
+            want.grad.round_vec().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+        // Hook routing reaches through the tiers.
+        assert!(tree.pull_state(5).is_some());
+        tree.resolve_staged(3, None);
+        tree.ack_round(0, &[0, 1, 2, 3, 4, 5]);
     }
 
     #[test]

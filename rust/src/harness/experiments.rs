@@ -606,7 +606,7 @@ pub fn shard_smoke(cfg: &HarnessCfg) -> Result<String> {
             count: (hi - lo) as usize,
             listen: String::new(), // pre-bound below
             connect: master_addr.clone(),
-            event: false,
+            ..Default::default()
         };
         relay_handles.push(std::thread::spawn(move || {
             run_relay_on(relay_bound, &rcfg)
@@ -1073,6 +1073,327 @@ pub fn mux_smoke(cfg: &HarnessCfg) -> Result<String> {
          idle bookkeeping {idle_bytes:.1} B/client \
          (details in {json_path})\n"
     ));
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// CI failover smoke: relay trees + scripted failover.
+// ---------------------------------------------------------------------
+
+/// One depth-3 relay-tree run for [`fail_smoke`]: master ← parent
+/// relay P (`--parent 2`) ← child relays A, B ← clients 0..3, plus a
+/// depth-2 arm master ← leaf relay C ← clients 3..6. Every client
+/// carries `--fallback master`, so when the [`FaultPlan`]'s
+/// `killrelay@R:0` severs P — and, by upward-EOF propagation, A and B
+/// — the orphans re-register at the master and are adopted at the
+/// next `prepare_round`. `leaf_event` switches the *leaf* relays'
+/// downward faces to the readiness transport (`--event`); the inner
+/// node P always runs blocking (`--parent` and `--event` are
+/// exclusive).
+fn run_failover_tree(
+    p: &Problem,
+    lam: f64,
+    cfg: &HarnessCfg,
+    plan: &FaultPlan,
+    opts: &Options,
+    leaf_event: bool,
+    label: &str,
+) -> Result<Trace> {
+    use crate::net::{run_client_with, ClientOpts};
+
+    let d = p.d();
+    let master_bound = Bound::bind("127.0.0.1:0")?;
+    let master_addr = master_bound.local_addr()?.to_string();
+    let mut relay_handles = Vec::new();
+    let mut client_handles = Vec::new();
+    let all_shards = p.dataset.split(p.n_clients, p.n_i)?;
+    let mut shards_by_id: Vec<Option<crate::data::ClientShard>> =
+        all_shards.into_iter().map(Some).collect();
+
+    // Inner node P: master-visible shard 0 over clients [0, 3); its
+    // downward face is a RelayPool serving the two child relays.
+    let p_bound = Bound::bind("127.0.0.1:0")?;
+    let p_addr = p_bound.local_addr()?.to_string();
+    let pcfg = RelayCfg {
+        shard_id: 0,
+        base: 0,
+        count: 3,
+        listen: String::new(), // pre-bound below
+        connect: master_addr.clone(),
+        children: Some(2),
+        ..Default::default()
+    };
+    relay_handles
+        .push(std::thread::spawn(move || run_relay_on(p_bound, &pcfg)));
+
+    // Leaves: A = [0, 2) and B = [2, 3) under P, C = [3, 6) directly
+    // under the master. (lo, hi, leaf address) per leaf.
+    let mut leaves: Vec<(u32, u32, String)> = Vec::new();
+    for (s, &(lo, hi)) in shard::partition(3, 2).iter().enumerate() {
+        let leaf_bound = Bound::bind("127.0.0.1:0")?;
+        let leaf_addr = leaf_bound.local_addr()?.to_string();
+        let rcfg = RelayCfg {
+            shard_id: s as u32,
+            base: lo,
+            count: (hi - lo) as usize,
+            listen: String::new(),
+            connect: p_addr.clone(),
+            event: leaf_event,
+            ..Default::default()
+        };
+        relay_handles.push(std::thread::spawn(move || {
+            run_relay_on(leaf_bound, &rcfg)
+        }));
+        leaves.push((lo, hi, leaf_addr));
+    }
+    let c_bound = Bound::bind("127.0.0.1:0")?;
+    let c_addr = c_bound.local_addr()?.to_string();
+    let ccfg = RelayCfg {
+        shard_id: 1,
+        base: 3,
+        count: 3,
+        listen: String::new(),
+        connect: master_addr.clone(),
+        event: leaf_event,
+        ..Default::default()
+    };
+    relay_handles
+        .push(std::thread::spawn(move || run_relay_on(c_bound, &ccfg)));
+    leaves.push((3, 6, c_addr));
+
+    for (lo, hi, leaf_addr) in leaves {
+        for ci in lo..hi {
+            let shard = shards_by_id[ci as usize].take().unwrap();
+            let addr = leaf_addr.clone();
+            let fallback = master_addr.clone();
+            let comp = crate::compressors::by_name(
+                "topk",
+                d,
+                K_MULT,
+                cfg.seed + ci as u64,
+            )?;
+            client_handles.push(std::thread::spawn(move || {
+                use crate::algorithms::ClientState;
+                use crate::net::client::ClientMode;
+                use crate::oracle::LogisticOracle;
+                let id = shard.client_id;
+                let oracle = Box::new(LogisticOracle::new(shard, lam));
+                run_client_with(
+                    &addr,
+                    id,
+                    ClientMode::FedNL(ClientState::new(
+                        id, oracle, comp, None,
+                    )),
+                    ClientOpts {
+                        fallback: vec![fallback],
+                        ..Default::default()
+                    },
+                )
+            }));
+        }
+    }
+    let mut pool =
+        FaultPool::new(RelayPool::accept(master_bound, 2)?, plan.clone());
+    let trace = run_fednl_pool(&mut pool, opts, vec![0.0; d], label);
+    pool.into_inner().shutdown();
+    for h in relay_handles {
+        let _ = h.join();
+    }
+    for h in client_handles {
+        let _ = h.join();
+    }
+    Ok(trace)
+}
+
+/// CI failover smoke: kill a relay mid-run and watch the run heal to
+/// the same bits. A flat sequential reference (the `killrelay` spec
+/// desugared over `shard::partition(6, 2)`) is compared against a
+/// depth-3 relay tree — master ← parent P (`--parent 2`) ← child
+/// relays A, B — where round 6's `killrelay@6:0` natively severs P
+/// mid-run: the subtree dies by upward-EOF propagation, the three
+/// orphaned clients rotate to their `--fallback` master address, and
+/// the master adopts them at the next `prepare_round`. The tree runs
+/// twice, with blocking and `--event` leaf relays. All trajectories
+/// must be bit-identical, losses confined to the kill round, and the
+/// commit-ack protocol must deliver exactly-once resumption (warm
+/// rejoin: no fresh pull, no double-apply). Writes the per-round
+/// accounting to `failsmoke_trace.json` (CI artifact).
+pub fn fail_smoke(cfg: &HarnessCfg) -> Result<String> {
+    cfg.ensure_out_dir()?;
+    let spec = ProblemSpec {
+        name: "failsmoke",
+        d: 13,
+        n_i_full: 40,
+        n_clients_full: 6,
+        lam: 1e-3,
+    };
+    let mut p = prepare_problem(&spec, cfg)?;
+    p.n_clients = 6;
+    p.n_i = 40;
+    let x0 = vec![0.0; p.d()];
+    let rounds = 20u64;
+    let kill_round = 6u64;
+    let plan_spec = "killrelay@6:0";
+    let plan = FaultPlan::parse(plan_spec)?;
+    let policy = RoundPolicy {
+        quorum: Some(3),
+        deadline_ms: Some(2000),
+        on_missing: OnMissing::Drop,
+    };
+    let opts =
+        Options { rounds, track_loss: true, policy, ..Default::default() };
+
+    // Flat reference: killrelay@R:S needs a shard layout to desugar
+    // against, so the flat pool is told the master-level partition.
+    let mut flat = FaultPool::with_shard_layout(
+        SeqPool::new(p.clients("topk", K_MULT, cfg)?),
+        plan.clone(),
+        2,
+    );
+    let t_flat =
+        run_fednl_pool(&mut flat, &opts, x0.clone(), "failsmoke/flat");
+
+    // Depth-3 tree, blocking leaf relays; then again with `--event`
+    // leaves (unix only — the readiness transport needs epoll/poll).
+    let t_block = run_failover_tree(
+        &p,
+        spec.lam,
+        cfg,
+        &plan,
+        &opts,
+        false,
+        "failsmoke/tree-blocking",
+    )?;
+    let t_event = if cfg!(unix) {
+        Some(run_failover_tree(
+            &p,
+            spec.lam,
+            cfg,
+            &plan,
+            &opts,
+            true,
+            "failsmoke/tree-event",
+        )?)
+    } else {
+        None
+    };
+
+    // The tentpole invariant: killing a relay mid-run heals to a
+    // trajectory bit-identical to the flat desugared plan, on both
+    // transports. (Byte columns are not compared: the tree pre-reduces
+    // and carries ack frames, so its wire totals deliberately differ.)
+    let mut legs = vec![(&t_block, "tree-blocking")];
+    if let Some(t) = t_event.as_ref() {
+        legs.push((t, "tree-event"));
+    }
+    for (t, name) in &legs {
+        anyhow::ensure!(
+            t.records.len() == t_flat.records.len(),
+            "failsmoke: {name} ran {} rounds vs flat {}",
+            t.records.len(),
+            t_flat.records.len()
+        );
+        for (a, b) in t_flat.records.iter().zip(&t.records) {
+            anyhow::ensure!(
+                a.grad_norm.to_bits() == b.grad_norm.to_bits()
+                    && a.loss.to_bits() == b.loss.to_bits()
+                    && a.committed == b.committed
+                    && a.missing == b.missing,
+                "failsmoke: {name} diverged from flat at round {}: \
+                 grad {:.17e} vs {:.17e}, committed {}/{} vs {}/{}",
+                a.round,
+                a.grad_norm,
+                b.grad_norm,
+                a.committed,
+                a.committed + a.missing,
+                b.committed,
+                b.committed + b.missing
+            );
+        }
+    }
+    // The kill engaged (P's whole partition lost for one round), the
+    // adoption healed it by the next round, and training converged.
+    let lost: u32 = t_flat.records.iter().map(|r| r.missing).sum();
+    anyhow::ensure!(lost == 3, "failsmoke: expected 3 lost, got {lost}");
+    anyhow::ensure!(
+        t_flat
+            .records
+            .iter()
+            .all(|r| (r.round == kill_round) == (r.missing > 0)),
+        "failsmoke: losses outside the kill round"
+    );
+    let first = t_flat.records.first().map(|r| r.grad_norm).unwrap_or(0.0);
+    let last = t_flat.last_grad_norm();
+    anyhow::ensure!(
+        last.is_finite() && last < first * 1e-2,
+        "failsmoke: no convergence under failover ({first:.3e} → {last:.3e})"
+    );
+
+    // Artifact: topology + the (identical) per-round accounting.
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"plan\": \"{plan_spec}\",\n"));
+    json.push_str(
+        "  \"policy\": {\"quorum\": 3, \"deadline_ms\": 2000, \
+         \"on_missing\": \"drop\"},\n",
+    );
+    json.push_str(&format!(
+        "  \"n_clients\": {}, \"rounds\": {rounds}, \
+         \"kill_round\": {kill_round},\n",
+        p.n_clients
+    ));
+    json.push_str(
+        "  \"topology\": \"master <- [P(--parent 2) <- [A(0..2), \
+         B(2..3)], C(3..6)]\",\n",
+    );
+    json.push_str(&format!(
+        "  \"configs\": [\"flat\", \"tree-blocking\"{}], \
+         \"bit_identical\": true,\n",
+        if t_event.is_some() { ", \"tree-event\"" } else { "" }
+    ));
+    json.push_str("  \"trace\": [\n");
+    for (i, r) in t_flat.records.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"round\": {}, \"grad_norm\": {:e}, \"committed\": {}, \
+             \"missing\": {}}}{}\n",
+            r.round,
+            r.grad_norm,
+            r.committed,
+            r.missing,
+            if i + 1 < t_flat.records.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let json_path = format!("{}/failsmoke_trace.json", cfg.out_dir);
+    std::fs::write(&json_path, &json)?;
+
+    let mut out = format!(
+        "## Failover smoke — depth-3 relay tree under `{plan_spec}` \
+         (n={}, quorum=3, r={rounds})\n\n",
+        p.n_clients
+    );
+    let mut table = Table::new(&[
+        "Topology",
+        "||∇f||_final",
+        "Rounds",
+        "Lost contributions",
+        "Bit-identical to flat",
+    ]);
+    let mut rows = vec![(&t_flat, "flat (desugared killrelay)")];
+    rows.push((&t_block, "depth-3 tree, blocking leaves"));
+    if let Some(t) = t_event.as_ref() {
+        rows.push((t, "depth-3 tree, --event leaves"));
+    }
+    for (t, name) in rows {
+        table.row(&[
+            name.to_string(),
+            sci(t.last_grad_norm()),
+            format!("{}", t.records.len()),
+            format!("{}", t.records.iter().map(|r| r.missing).sum::<u32>()),
+            "yes".to_string(),
+        ]);
+    }
+    out.push_str(&table.to_markdown());
+    out.push_str(&format!("\nPer-round trace written to {json_path}\n"));
     Ok(out)
 }
 

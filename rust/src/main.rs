@@ -28,7 +28,9 @@ use fednl::harness::{self, HarnessCfg, Scale};
 use fednl::metrics::rusage::ResourceSnapshot;
 use fednl::metrics::Trace;
 use fednl::net::client::ClientMode;
-use fednl::net::{run_client, run_relay, RelayCfg, RelayPool, RemotePool};
+use fednl::net::{
+    run_client_with, run_relay, ClientOpts, RelayCfg, RelayPool, RemotePool,
+};
 use fednl::oracle::{numerics, LogisticOracle, Oracle};
 use fednl::runtime::PjrtRuntime;
 use fednl::utils::{human_secs, Stopwatch};
@@ -67,23 +69,31 @@ fn print_usage() {
          \x20            [--on-missing drop|resample|reuse] [--fault-plan SPEC]\n\
          \x20            [--speculate]\n\
          \x20 master     --listen ADDR --clients N --algo ... [--rounds R] [--tol T]\n\
-         \x20            [--shards S] [--relay-slack-ms 2000] [--quorum Q]\n\
-         \x20            [--deadline-ms MS] [--on-missing P] [--fault-plan SPEC]\n\
-         \x20            [--speculate] [--event]\n\
+         \x20            [--shards S] [--relay-slack-ms 2000] [--adopt-grace-ms 2000]\n\
+         \x20            [--quorum Q] [--deadline-ms MS] [--on-missing P]\n\
+         \x20            [--fault-plan SPEC] [--speculate] [--event]\n\
          \x20 relay      --connect MASTER --listen ADDR --shard I --base B --clients K\n\
-         \x20            [--event] (shard aggregator: ids [B, B+K) connect here)\n\
+         \x20            [--event] [--parent S] [--die-after-round R]\n\
+         \x20            (shard aggregator: ids [B, B+K) connect here; --parent S\n\
+         \x20            serves S child relays instead of clients — S-ary trees)\n\
          \x20 client     --connect ADDR --id I --data SHARD [--algo fednl|fednl-pp]\n\
          \x20            [--compressor topk] [--k-mult 8] [--lam 1e-3] [--mux N]\n\
+         \x20            [--fallback A1,A2] [--fresh]\n\
          \x20 verify     --data FILE [--lam 1e-3]   (finite-difference oracle check)\n\
          \x20 experiment table1|table2|table3|table5|fig1..fig12|costmodel|tcpsmoke|\n\
-         \x20            faultsmoke|shardsmoke|muxsmoke|all [--full]\n\
+         \x20            faultsmoke|shardsmoke|muxsmoke|failsmoke|all [--full]\n\
          \x20            [--out-dir results] [--pjrt] [--threads N] [--seq]\n\
          \x20 sysinfo\n\n\
          FAULT PLANS (--fault-plan): comma-separated kill@R:C[-R2] | drop@R:C |\n\
-         delay@R:C:MS — deterministic master-side injection (see coordinator::faults).\n\
+         delay@R:C:MS | killrelay@R:S — deterministic master-side injection\n\
+         (see coordinator::faults; killrelay needs a master-visible shard S).\n\
          SHARD TIER: `train --shards S` shards in-process; for TCP, run\n\
          `master --shards S`, one `relay` per shard, and point each client at\n\
-         its shard's relay. Trajectories are bit-identical to unsharded runs.\n\
+         its shard's relay. `relay --parent K` nests relays into S-ary trees.\n\
+         Trajectories are bit-identical to unsharded runs.\n\
+         FAILOVER: `client --fallback` clients stage each round and commit on\n\
+         ROUND_ACK; when their relay dies they reconnect up the fallback list\n\
+         and the master adopts the orphaned ids — same bits as a flat run.\n\
          EVENT TRANSPORT: `master --event` serves every connection from one\n\
          readiness loop (epoll); `client --mux N` hosts N simulated clients\n\
          of ids [I, I+N) behind one socket — 100k+ clients, one master,\n\
@@ -418,6 +428,13 @@ fn cmd_master(args: &Args) -> Result<()> {
         args.get("relay-slack-ms").is_none() || n_shards > 0,
         "--relay-slack-ms only applies to a sharded master (--shards S)"
     );
+    // Adoption grace: how long the master's rejoin barrier waits for a
+    // severed partition's clients to fail over before abandoning the
+    // ids (`RelayPool::adopt_orphans`).
+    anyhow::ensure!(
+        args.get("adopt-grace-ms").is_none() || n_shards > 0,
+        "--adopt-grace-ms only applies to a sharded master (--shards S)"
+    );
     let trace = if n_shards > 0 {
         // Sharded aggregation tier: S relay aggregators register, each
         // owning a contiguous client partition (`fednl relay`).
@@ -425,6 +442,14 @@ fn cmd_master(args: &Args) -> Result<()> {
         let mut pool =
             FaultPool::new(RelayPool::listen(listen, n_shards)?, plan);
         pool.inner_mut().set_relay_slack(relay_slack);
+        if let Some(ms) = args.get("adopt-grace-ms") {
+            let ms: u64 = ms
+                .parse()
+                .context("--adopt-grace-ms: expected milliseconds")?;
+            pool.inner_mut().set_adopt_grace(
+                fednl::net::relay::adopt_grace_from_ms(ms)?,
+            );
+        }
         anyhow::ensure!(
             pool.inner_mut().n_clients() == n_clients,
             "relays cover {} clients, --clients says {n_clients}",
@@ -496,15 +521,35 @@ fn cmd_relay(args: &Args) -> Result<()> {
             .context("--connect (master address) required")?
             .to_string(),
         event: args.flag("event"),
+        children: match args.get_usize("parent", 0)? {
+            0 => None,
+            k => Some(k),
+        },
+        die_after_round: args
+            .get("die-after-round")
+            .map(|v| v.parse::<u64>())
+            .transpose()
+            .context("--die-after-round: expected round number")?,
     };
-    println!(
-        "relay {}: serving clients [{}, {}) on {}, master {}",
-        cfg.shard_id,
-        cfg.base,
-        cfg.base as usize + cfg.count,
-        cfg.listen,
-        cfg.connect
-    );
+    match cfg.children {
+        Some(k) => println!(
+            "relay {}: parent of {k} child relays (ids [{}, {})) on {}, \
+             master {}",
+            cfg.shard_id,
+            cfg.base,
+            cfg.base as usize + cfg.count,
+            cfg.listen,
+            cfg.connect
+        ),
+        None => println!(
+            "relay {}: serving clients [{}, {}) on {}, master {}",
+            cfg.shard_id,
+            cfg.base,
+            cfg.base as usize + cfg.count,
+            cfg.listen,
+            cfg.connect
+        ),
+    }
     let report = run_relay(&cfg)?;
     println!(
         "relay {}: down {} B in / {} B out, up {} B out / {} B in",
@@ -526,10 +571,26 @@ fn cmd_client(args: &Args) -> Result<()> {
     let lam = args.get_f64("lam", 1e-3)?;
     let seed = args.get_u64("seed", 0x5EED)?;
     let algo = args.get_or("algo", "fednl");
+    // Failover: `--fallback a:1,b:2` names the addresses to rotate to
+    // (in order) when the current connection dies mid-run; `--fresh`
+    // announces restarted-with-reset-state for the exact Hᵢ resync.
+    // FedNL-family only — PP clients carry no staged state to commit.
+    let fallback = args.get_list("fallback");
+    let fresh = args.flag("fresh");
+    anyhow::ensure!(
+        algo != "fednl-pp" || (fallback.is_empty() && !fresh),
+        "--fallback/--fresh run the FedNL commit-ack protocol; \
+         fednl-pp clients have no staged state to resync"
+    );
     // Interleave dataset parsing with connection establishment (§7).
     let (samples, d_raw) = parse_libsvm_file(data)?;
     let mux = args.get_usize("mux", 0)?;
     if mux > 0 {
+        anyhow::ensure!(
+            fallback.is_empty() && !fresh,
+            "--fallback/--fresh are per-connection client behaviors; \
+             a --mux group fails (and is certified) as a unit"
+        );
         // Multiplexed mode: host `mux` simulated clients of global ids
         // [id, id+mux) behind ONE socket. The shard file is split
         // evenly — the in-process clients share the parse, the
@@ -596,7 +657,8 @@ fn cmd_client(args: &Args) -> Result<()> {
         )),
         _ => ClientMode::FedNL(ClientState::new(id, oracle, compressor, None)),
     };
-    let (sent, recv) = run_client(addr, id, mode)?;
+    let opts = ClientOpts { fallback, fresh, ..Default::default() };
+    let (sent, recv) = run_client_with(addr, id, mode, opts)?;
     println!("client {id}: sent {sent} B, received {recv} B");
     Ok(())
 }
@@ -644,6 +706,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             "faultsmoke" => harness::fault_smoke(&cfg)?,
             "shardsmoke" => harness::shard_smoke(&cfg)?,
             "muxsmoke" => harness::mux_smoke(&cfg)?,
+            "failsmoke" => harness::fail_smoke(&cfg)?,
             f if f.starts_with("fig") => {
                 let n: usize = f[3..].parse().context("figN")?;
                 if n <= 3 {
@@ -663,9 +726,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     };
     let all = [
         "costmodel", "tcpsmoke", "faultsmoke", "shardsmoke", "muxsmoke",
-        "table1", "table2", "table3", "table5", "fig1", "fig2", "fig3",
-        "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
-        "fig12",
+        "failsmoke", "table1", "table2", "table3", "table5", "fig1", "fig2",
+        "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
+        "fig11", "fig12",
     ];
     let list: Vec<&str> =
         if which == "all" { all.to_vec() } else { vec![which] };

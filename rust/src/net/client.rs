@@ -4,6 +4,25 @@
 //! Connection establishment is interleaved with dataset loading by the
 //! caller (paper §7): the caller parses its shard while the TCP connect
 //! happens, then hands both to [`run_client`].
+//!
+//! # Failover (`--fallback`)
+//!
+//! A client given fallback addresses ([`ClientOpts::fallback`])
+//! registers with `REG_WANTS_ACK` and runs the commit-ack protocol:
+//! each ROUND's Hᵢ shift is **staged** ([`ClientState::round_staged`])
+//! and applied only on the master's `ROUND_ACK`. When its connection
+//! dies mid-run — a severed relay kills its whole subtree — the client
+//! rotates to the next address in `primary, fallback…` order,
+//! re-REGISTERs warm, and resolves the staged shift against the
+//! `RESYNC` commit watermark the adopter sends: applied iff the master
+//! committed that round, discarded otherwise — exactly-once either
+//! way, closing the "computed but reply lost" hole. An orderly end is
+//! always an explicit SHUTDOWN frame, so EOF is never ambiguous.
+//!
+//! `--fresh` additionally announces `REG_FRESH` on the initial
+//! registration: the process restarted with reset state, so the engine
+//! re-pulls every client's packed Hᵢ (`PULL_H`) and rebuilds the exact
+//! server-side average.
 
 use std::net::TcpStream;
 
@@ -22,7 +41,7 @@ pub enum ClientMode {
 }
 
 /// Optional client-side behaviors (fault drills and tests).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct ClientOpts {
     /// After answering this many ROUND commands, announce a graceful
     /// leave (`DEREGISTER`) and exit — simulating a departing client.
@@ -30,6 +49,21 @@ pub struct ClientOpts {
     /// policy, keeps training on the survivors; this id may later
     /// rejoin by running a fresh `run_client`.
     pub leave_after_rounds: Option<u64>,
+    /// Addresses to fail over to (in order, after the primary) when
+    /// the current connection dies mid-run. Non-empty enables the
+    /// commit-ack protocol (`REG_WANTS_ACK`); FedNL-family only.
+    pub fallback: Vec<String>,
+    /// Announce `REG_FRESH` on the initial registration: this process
+    /// restarted with reset state and needs the exact Hᵢ resync.
+    pub fresh: bool,
+}
+
+/// How one serve session over a single channel ended.
+enum Served {
+    /// Orderly end: SHUTDOWN, or the scripted graceful leave.
+    Done,
+    /// The connection died mid-run — rotate to the next address.
+    Lost,
 }
 
 /// Connect to `addr`, register as `client_id`, serve until SHUTDOWN.
@@ -53,54 +87,198 @@ pub fn run_client_with(
         ClientMode::FedNL(c) => (c.dim(), wire::FAMILY_FEDNL),
         ClientMode::PP(c) => (c.dim(), wire::FAMILY_PP),
     };
-    let stream = connect_with_retry(addr, 50)?;
-    let mut ch = Channel::new(stream)?;
-    ch.send(
-        c2s::REGISTER,
-        &wire::encode_register(client_id as u32, d as u32, family),
-    )?;
-
+    let wants_ack = !opts.fallback.is_empty();
+    anyhow::ensure!(
+        !wants_ack || matches!(mode, ClientMode::FedNL(_)),
+        "--fallback failover runs the commit-ack protocol, which \
+         stages the FedNL Hᵢ shift; PP clients have no staged state"
+    );
+    anyhow::ensure!(
+        !opts.fresh || matches!(mode, ClientMode::FedNL(_)),
+        "--fresh is a FedNL Hᵢ resync; PP clients carry no Hᵢ"
+    );
+    let addrs: Vec<&str> = std::iter::once(addr)
+        .chain(opts.fallback.iter().map(|s| s.as_str()))
+        .collect();
+    // Cleared once a registration demonstrably landed (first inbound
+    // frame): a REGISTER lost with its connection must be re-announced
+    // fresh, or the engine would skip the exact resync.
+    let mut fresh_pending = opts.fresh;
+    let mut next_addr = 0usize;
     let mut rounds_served = 0u64;
+    let mut total = (0u64, 0u64);
     loop {
-        let (tag, payload) = ch.recv()?;
+        let target = addrs[next_addr % addrs.len()];
+        let stream = connect_with_retry(target, 50)?;
+        let mut ch = Channel::new(stream)?;
+        let mut flags = 0u8;
+        if wants_ack {
+            flags |= wire::REG_WANTS_ACK;
+        }
+        if fresh_pending {
+            flags |= wire::REG_FRESH;
+        }
+        let registered = ch.send(
+            c2s::REGISTER,
+            &wire::encode_register(
+                client_id as u32,
+                d as u32,
+                family,
+                flags,
+            ),
+        );
+        let served = match registered {
+            Ok(()) => serve(
+                &mut ch,
+                &mut mode,
+                &opts,
+                wants_ack,
+                &mut rounds_served,
+                &mut fresh_pending,
+            ),
+            // A failover client that cannot even register rotates on;
+            // anyone else reports the broken connection.
+            Err(e) if !wants_ack => Err(e),
+            Err(_) => Ok(Served::Lost),
+        };
+        total.0 += ch.bytes_sent;
+        total.1 += ch.bytes_received;
+        match served? {
+            Served::Done => return Ok(total),
+            Served::Lost => next_addr += 1,
+        }
+    }
+}
+
+/// Send that maps a failover client's dead connection to a pending
+/// rotation instead of an error: `Ok(true)` = sent, `Ok(false)` =
+/// lost (only when failover is allowed).
+fn fsend(
+    ch: &mut Channel,
+    wants_ack: bool,
+    tag: u8,
+    payload: &[u8],
+) -> Result<bool> {
+    match ch.send(tag, payload) {
+        Ok(()) => Ok(true),
+        Err(_) if wants_ack => Ok(false),
+        Err(e) => Err(e),
+    }
+}
+
+/// Serve one registered channel until it ends. Decode failures and
+/// protocol violations stay hard errors; only *connection* loss turns
+/// into [`Served::Lost`] (and only for failover clients).
+fn serve(
+    ch: &mut Channel,
+    mode: &mut ClientMode,
+    opts: &ClientOpts,
+    wants_ack: bool,
+    rounds_served: &mut u64,
+    fresh_pending: &mut bool,
+) -> Result<Served> {
+    loop {
+        let (tag, payload) = match ch.recv() {
+            Ok(f) => f,
+            Err(_) if wants_ack => return Ok(Served::Lost),
+            Err(e) => return Err(e),
+        };
+        // Any inbound frame proves the registration was admitted.
+        *fresh_pending = false;
         match tag {
             s2c::ROUND => {
                 // Unified round command: a FedNL client answers with
                 // its Alg. 1 message, a PP client with its Alg. 3
                 // participation deltas — same MSG codec either way.
                 let (x, round, need_loss) = wire::decode_round(&payload)?;
-                let msg = match &mut mode {
-                    ClientMode::FedNL(c) => c.round(&x, round, need_loss),
-                    ClientMode::PP(c) => c.participate(&x, round, need_loss),
-                };
-                ch.send(c2s::MSG, &wire::encode_client_msg(&msg))?;
-                rounds_served += 1;
-                if let Some(k) = opts.leave_after_rounds {
-                    if rounds_served >= k {
-                        ch.send(c2s::DEREGISTER, &[])?;
-                        break;
+                let msg = match mode {
+                    // Failover clients stage the shift; it lands on
+                    // ROUND_ACK (or a favorable rejoin RESYNC).
+                    ClientMode::FedNL(c) if wants_ack => {
+                        c.round_staged(&x, round, need_loss)
                     }
+                    ClientMode::FedNL(c) => c.round(&x, round, need_loss),
+                    ClientMode::PP(c) => {
+                        c.participate(&x, round, need_loss)
+                    }
+                };
+                if !fsend(
+                    ch,
+                    wants_ack,
+                    c2s::MSG,
+                    &wire::encode_client_msg(&msg),
+                )? {
+                    return Ok(Served::Lost);
+                }
+                *rounds_served += 1;
+                if let Some(k) = opts.leave_after_rounds {
+                    if *rounds_served >= k {
+                        let _ = ch.send(c2s::DEREGISTER, &[]);
+                        return Ok(Served::Done);
+                    }
+                }
+            }
+            s2c::ROUND_ACK => {
+                let c = match mode {
+                    ClientMode::FedNL(c) => c,
+                    _ => anyhow::bail!("ROUND_ACK sent to a PP client"),
+                };
+                c.commit_staged(wire::decode_round_ack(&payload)?);
+            }
+            s2c::RESYNC => {
+                let c = match mode {
+                    ClientMode::FedNL(c) => c,
+                    _ => anyhow::bail!("RESYNC sent to a PP client"),
+                };
+                c.resolve_staged(wire::decode_resync(&payload)?);
+            }
+            s2c::PULL_H => {
+                // Sent to *every* client when some fresh rejoiner
+                // needs the exact server-side H rebuilt — not gated on
+                // this client's own flags.
+                let c = match mode {
+                    ClientMode::FedNL(c) => c,
+                    _ => anyhow::bail!("PULL_H sent to a PP client"),
+                };
+                let packed = c.packed_h();
+                if !fsend(
+                    ch,
+                    wants_ack,
+                    c2s::WARM,
+                    &wire::encode_vec(&packed),
+                )? {
+                    return Ok(Served::Lost);
                 }
             }
             s2c::EVAL_LOSS => {
                 let x = wire::decode_vec(&payload)?;
-                let l = match &mut mode {
+                let l = match mode {
                     ClientMode::FedNL(c) => c.eval_loss(&x),
                     ClientMode::PP(c) => c.oracle.loss(&x),
                 };
-                ch.send(c2s::LOSS, &wire::encode_scalar(l))?;
+                if !fsend(ch, wants_ack, c2s::LOSS, &wire::encode_scalar(l))?
+                {
+                    return Ok(Served::Lost);
+                }
             }
             s2c::WARM_START => {
                 let x = wire::decode_vec(&payload)?;
-                let packed = match &mut mode {
+                let packed = match mode {
                     ClientMode::FedNL(c) => c.warm_start(&x),
                     _ => anyhow::bail!("WARM_START sent to a PP client"),
                 };
-                ch.send(c2s::WARM, &wire::encode_vec(&packed))?;
+                if !fsend(
+                    ch,
+                    wants_ack,
+                    c2s::WARM,
+                    &wire::encode_vec(&packed),
+                )? {
+                    return Ok(Served::Lost);
+                }
             }
             s2c::LOSS_GRAD => {
                 let x = wire::decode_vec(&payload)?;
-                let (l, g) = match &mut mode {
+                let (l, g) = match mode {
                     ClientMode::FedNL(c) => c.eval_loss_grad(&x),
                     ClientMode::PP(c) => {
                         let mut g = vec![0.0; x.len()];
@@ -108,21 +286,32 @@ pub fn run_client_with(
                         (l, g)
                     }
                 };
-                ch.send(c2s::GRAD, &wire::encode_loss_grad(l, &g))?;
+                if !fsend(
+                    ch,
+                    wants_ack,
+                    c2s::GRAD,
+                    &wire::encode_loss_grad(l, &g),
+                )? {
+                    return Ok(Served::Lost);
+                }
             }
             s2c::STATE => {
-                let c = match &mut mode {
+                let c = match mode {
                     ClientMode::PP(c) => c,
                     _ => anyhow::bail!("STATE sent to a FedNL client"),
                 };
-                ch.send(
+                if !fsend(
+                    ch,
+                    wants_ack,
                     c2s::STATE,
                     &wire::encode_loss_grad(c.l_i, &c.g_i),
-                )?;
+                )? {
+                    return Ok(Served::Lost);
+                }
             }
             s2c::SET_ALPHA => {
                 let a = wire::decode_scalar(&payload)?;
-                let effective = match &mut mode {
+                let effective = match mode {
                     ClientMode::FedNL(c) => {
                         if a.is_finite() && a > 0.0 {
                             c.alpha = a;
@@ -136,13 +325,19 @@ pub fn run_client_with(
                         c.alpha
                     }
                 };
-                ch.send(c2s::ACK, &wire::encode_scalar(effective))?;
+                if !fsend(
+                    ch,
+                    wants_ack,
+                    c2s::ACK,
+                    &wire::encode_scalar(effective),
+                )? {
+                    return Ok(Served::Lost);
+                }
             }
-            s2c::SHUTDOWN => break,
+            s2c::SHUTDOWN => return Ok(Served::Done),
             other => anyhow::bail!("unknown command tag {other}"),
         }
     }
-    Ok((ch.bytes_sent, ch.bytes_received))
 }
 
 /// The master may come up after the clients (Slurm-style co-scheduling;

@@ -179,6 +179,12 @@ pub struct EventPool {
 
     missing: Vec<u32>,
     rejoined: Vec<u32>,
+    /// Fresh-state rejoiners (`REG_FRESH`) since last taken by the
+    /// engine's exact-resync path.
+    fresh: Vec<u32>,
+    /// Per client slot: the registrant asked for commit acks
+    /// (`REG_WANTS_ACK`). Gates ROUND_ACK / RESYNC traffic.
+    acks: Vec<bool>,
     retired_bytes: (u64, u64),
     scratch: Vec<u8>,
     events: Vec<Ready>,
@@ -196,6 +202,7 @@ impl EventPool {
         let listener = bound.into_listener();
         let mut conns: Vec<Option<Conn>> = Vec::new();
         let mut conn_of = vec![NO_CONN; n_clients];
+        let mut acks = vec![false; n_clients];
         let mut covered = 0usize;
         let mut d = 0usize;
         let mut family: Option<ClientFamily> = None;
@@ -221,7 +228,10 @@ impl EventPool {
             let (tag, payload) = ch.recv()?;
             let kind = match tag {
                 c2s::REGISTER => {
-                    let (id, dim, fam) = wire::decode_register(&payload)?;
+                    // REG_FRESH on the *initial* registration is
+                    // vacuous — there is no prior state to resync.
+                    let (id, dim, fam, flags) =
+                        wire::decode_register(&payload)?;
                     anyhow::ensure!(
                         id >= base && ((id - base) as usize) < n_clients,
                         "client id {id} outside partition [{base}, {})",
@@ -242,11 +252,15 @@ impl EventPool {
                     }
                     check_family(&mut family, fam)?;
                     conn_of[slot] = conns.len() as u32;
+                    acks[slot] = flags & wire::REG_WANTS_ACK != 0;
                     covered += 1;
                     ConnKind::Plain { id }
                 }
                 c2s::SHARD_REGISTER => {
-                    let (sid, lo, count, dim, fam) =
+                    // Mux-hosted clients never stage applies, so a
+                    // group's flags stay unused here (the codec already
+                    // rejects anything but REG_WANTS_ACK).
+                    let (sid, lo, count, dim, fam, _flags) =
                         wire::decode_shard_register(&payload)?;
                     let hi = lo + count;
                     anyhow::ensure!(
@@ -331,6 +345,8 @@ impl EventPool {
             probe_replies: vec![None; n_conns],
             missing: Vec::new(),
             rejoined: Vec::new(),
+            fresh: Vec::new(),
+            acks,
             retired_bytes: (0, 0),
             scratch: vec![0u8; SCRATCH_BYTES],
             events: Vec::new(),
@@ -349,6 +365,13 @@ impl EventPool {
         self.slack = slack.max(Duration::from_millis(1));
     }
 
+    /// Did any registrant ask for commit acks (`REG_WANTS_ACK`)? A
+    /// relay serving this pool as its downward face ORs this into its
+    /// own upward registration.
+    pub fn wants_ack_any(&self) -> bool {
+        self.acks.iter().any(|&a| a)
+    }
+
     /// Estimated steady-state server-side bookkeeping bytes per
     /// registered client: the pool's per-client tables plus every
     /// connection's state machine, divided by the client count. This
@@ -362,7 +385,10 @@ impl EventPool {
             + self.probe_replies.capacity()
                 * std::mem::size_of::<Option<(ConnKind, Vec<u8>)>>()
             + self.scratch.capacity()
-            + (self.missing.capacity() + self.rejoined.capacity())
+            + self.acks.capacity()
+            + (self.missing.capacity()
+                + self.rejoined.capacity()
+                + self.fresh.capacity())
                 * std::mem::size_of::<u32>();
         for c in self.conns.iter().flatten() {
             total += std::mem::size_of::<Option<Conn>>() + c.idle_bytes();
@@ -886,9 +912,9 @@ impl EventPool {
         stream.set_read_timeout(Some(handshake)).ok()?;
         let mut ch = Channel::new(stream).ok()?;
         let (tag, payload) = ch.recv().ok()?;
-        let (kind, lo, hi) = match tag {
+        let (kind, lo, hi, flags) = match tag {
             c2s::REGISTER => {
-                let (id, dim, fam) =
+                let (id, dim, fam, flags) =
                     wire::decode_register(&payload).ok()?;
                 let slot =
                     id.checked_sub(self.base)? as usize;
@@ -903,10 +929,10 @@ impl EventPool {
                 if !ok {
                     return None;
                 }
-                (ConnKind::Plain { id }, id, id + 1)
+                (ConnKind::Plain { id }, id, id + 1, flags)
             }
             c2s::SHARD_REGISTER => {
-                let (sid, lo, count, dim, fam) =
+                let (sid, lo, count, dim, fam, _flags) =
                     wire::decode_shard_register(&payload).ok()?;
                 let hi = lo + count;
                 let fam = match fam {
@@ -923,7 +949,9 @@ impl EventPool {
                 if !ok {
                     return None;
                 }
-                (ConnKind::Group { sid, lo, hi }, lo, hi)
+                // Hosted clients never stage; a rejoining group
+                // carries no ack or fresh semantics of its own.
+                (ConnKind::Group { sid, lo, hi }, lo, hi, 0u8)
             }
             _ => return None,
         };
@@ -969,6 +997,13 @@ impl EventPool {
         });
         for ci in lo..hi {
             self.conn_of[(ci - self.base) as usize] = idx as u32;
+        }
+        if let ConnKind::Plain { id } = kind {
+            let slot = (id - self.base) as usize;
+            self.acks[slot] = flags & wire::REG_WANTS_ACK != 0;
+            if flags & wire::REG_FRESH != 0 {
+                self.fresh.push(id);
+            }
         }
         Some((lo, hi))
     }
@@ -1045,6 +1080,97 @@ impl ClientPool for EventPool {
         let mut out = std::mem::take(&mut self.rejoined);
         out.sort_unstable();
         out
+    }
+
+    fn take_fresh_rejoined(&mut self) -> Vec<u32> {
+        let mut out = std::mem::take(&mut self.fresh);
+        out.sort_unstable();
+        out
+    }
+
+    fn ack_round(&mut self, round: u64, committed: &[u32]) {
+        // One shared frame, queued only to registrants that asked
+        // (`REG_WANTS_ACK`); mux-hosted group members never do. The
+        // engine calls this between rounds (Expect::Idle), and
+        // ROUND_ACK solicits no reply, so the state machine is
+        // untouched. FIFO write queues order ROUND_ACK(k) before the
+        // next round's command.
+        let frame = Arc::new(encode_frame(
+            s2c::ROUND_ACK,
+            &wire::encode_round_ack(round),
+        ));
+        for &cid in committed {
+            let Some(slot) = cid.checked_sub(self.base) else {
+                continue;
+            };
+            let slot = slot as usize;
+            if slot >= self.conn_of.len() || !self.acks[slot] {
+                continue;
+            }
+            let c = self.conn_of[slot];
+            if c == NO_CONN {
+                continue;
+            }
+            let idx = c as usize;
+            if matches!(
+                self.conns[idx].as_ref().map(|c| c.kind),
+                Some(ConnKind::Plain { .. })
+            ) {
+                let _ = self.queue_frame(idx, frame.clone());
+            }
+        }
+    }
+
+    fn resolve_staged(&mut self, client: u32, last_commit: Option<u64>) {
+        let Some(slot) = client.checked_sub(self.base) else {
+            return;
+        };
+        let slot = slot as usize;
+        if slot >= self.conn_of.len() || !self.acks[slot] {
+            return;
+        }
+        let c = self.conn_of[slot];
+        if c == NO_CONN {
+            return;
+        }
+        let idx = c as usize;
+        if matches!(
+            self.conns[idx].as_ref().map(|c| c.kind),
+            Some(ConnKind::Plain { .. })
+        ) {
+            let frame = Arc::new(encode_frame(
+                s2c::RESYNC,
+                &wire::encode_resync(last_commit),
+            ));
+            let _ = self.queue_frame(idx, frame);
+        }
+    }
+
+    fn pull_h_packed(&mut self) -> Option<Vec<Vec<f64>>> {
+        // Exact resync needs every peer's stored Hᵢ. Mux groups host
+        // simulated clients with no staging/fresh path, so a topology
+        // containing one falls back to the approximate warm resync.
+        if self.conn_of.iter().any(|&c| c == NO_CONN) {
+            return None;
+        }
+        if self.conns.iter().flatten().any(|c| {
+            matches!(c.kind, ConnKind::Group { .. })
+        }) {
+            return None;
+        }
+        let asked = self.ask_all(s2c::PULL_H, &[]);
+        let replies =
+            self.collect_probe(&asked, c2s::WARM, c2s::SHARD_WARM);
+        let mut slots: Vec<Option<Vec<f64>>> =
+            vec![None; self.conn_of.len()];
+        for (_, kind, p) in replies {
+            let ConnKind::Plain { id } = kind else {
+                return None;
+            };
+            let pack = wire::decode_vec(&p).ok()?;
+            slots[(id - self.base) as usize] = Some(pack);
+        }
+        slots.into_iter().collect()
     }
 
     fn set_reply_deadline(&mut self, deadline: Option<Duration>) {

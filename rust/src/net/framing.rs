@@ -125,6 +125,33 @@ impl Channel {
         Ok(())
     }
 
+    /// Non-destructive liveness probe: has the peer closed its end?
+    /// Flips the socket non-blocking for one `MSG_PEEK` — `Ok(0)` is
+    /// EOF, pending bytes or `WouldBlock` mean the peer is alive, any
+    /// other error means the connection is gone. `RelayPool` sweeps
+    /// this at the top of `prepare_round` so a relay that died since
+    /// the last round is certified *before* the round is submitted —
+    /// the same round the loss becomes visible on in-process pools —
+    /// instead of surfacing as a silent zero-reply partition at
+    /// deadline expiry.
+    pub fn peek_eof(&self) -> bool {
+        if self.stream.set_nonblocking(true).is_err() {
+            return true;
+        }
+        let mut probe = [0u8; 1];
+        let dead = match self.stream.peek(&mut probe) {
+            Ok(0) => true,
+            Ok(_) => false,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => false,
+            Err(e) if e.kind() == ErrorKind::Interrupted => false,
+            Err(_) => true,
+        };
+        if self.stream.set_nonblocking(false).is_err() {
+            return true;
+        }
+        dead
+    }
+
     pub fn peer_addr(&self) -> String {
         self.stream
             .peer_addr()
@@ -316,6 +343,29 @@ mod tests {
             .copy_from_slice(&((MAX_FRAME as u32) + 1).to_le_bytes());
         let mut dec = FrameDecoder::new();
         assert!(dec.push(&header).is_err());
+    }
+
+    #[test]
+    fn peek_eof_detects_closed_peer_without_consuming() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (s, _) = listener.accept().unwrap();
+        let mut server = Channel::new(s).unwrap();
+        let mut client = Channel::new(client).unwrap();
+        // Live, idle peer: not EOF.
+        assert!(!server.peek_eof());
+        // Pending bytes: still not EOF, and the probe must not consume
+        // them — the frame is read back intact afterwards.
+        client.send(7, &[1, 2, 3]).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!server.peek_eof());
+        let (tag, p) = server.recv().unwrap();
+        assert_eq!((tag, p), (7, vec![1, 2, 3]));
+        // Closed peer: EOF.
+        drop(client);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(server.peek_eof());
     }
 
     #[test]

@@ -73,6 +73,7 @@ pub fn run_mux_clients<C: PoolClient>(
             pool.n_clients() as u32,
             d as u32,
             family,
+            0, // hosted clients never stage — no ack traffic wanted
         ),
     )
     .context("mux registration")?;
@@ -133,7 +134,7 @@ pub fn run_mux_clients<C: PoolClient>(
                 // nothing rejoins, nothing dies, reply empty.
                 up.send(
                     c2s::SHARD_PREPPED,
-                    &wire::encode_shard_prepped(&[], &[]),
+                    &wire::encode_shard_prepped(&[], &[], &[]),
                 )?;
             }
             s2c::SHARD_PULL => {

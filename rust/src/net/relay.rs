@@ -33,21 +33,46 @@
 //!
 //! [`RoundSum`]: crate::algorithms::RoundSum
 //!
+//! # Recursive trees
+//!
+//! The tier nests: a relay started with `--parent k` serves `k` child
+//! *relays* on its downward side — its downward face is a [`RelayPool`]
+//! instead of a [`RemotePool`] — so S-ary trees of any depth compose
+//! from the same two node kinds. Every tier pre-reduces (`SHARD_SUM`
+//! merges are exact and associative), so fan-in stays O(S) per node
+//! and the root's trajectory is bit-identical to the flat run on any
+//! topology.
+//!
+//! [`RemotePool`]: super::server::RemotePool
+//!
 //! # Liveness through the tier
 //!
 //! * A relay certifies its lost clients upward (`SHARD_MSG` carries
-//!   the partition's missing ids; `SHARD_PREPPED` its dead/rejoined
-//!   sets from the retained downward listener).
+//!   the partition's missing ids; `SHARD_PREPPED` its dead/rejoined/
+//!   fresh sets from the retained downward listener).
 //! * A lost **relay** (connection error, or a round reply missing the
 //!   deadline-plus-slack budget) is retired and its whole partition is
-//!   certified missing for the round in flight and reported dead
-//!   thereafter — the engine's quorum/`on_missing` policy absorbs it
-//!   like any other loss. Relay *re*-registration is not supported
-//!   (ROADMAP known limit); client rejoin under a live relay works
-//!   exactly as under a flat master.
+//!   certified missing for the round in flight — the engine's
+//!   quorum/`on_missing` policy absorbs it like any other loss. A
+//!   severed relay kills its subtree abruptly (no downward SHUTDOWN),
+//!   so its clients notice and **fail over**: they reconnect to a
+//!   fallback address (`client --fallback`) — the master or a
+//!   surviving ancestor relay — which **adopts** them: re-REGISTERed
+//!   orphans are served over embedded direct channels from then on.
+//!   The adopting node's `prepare_round` waits up to the adoption
+//!   grace (`master --adopt-grace-ms`) for a severed partition to
+//!   re-register, so the rejoin lands one round after the loss on
+//!   every transport.
+//! * Exactly-once application across the failover is guaranteed by the
+//!   commit-ack protocol (`net::wire` § commit acks): clients that
+//!   registered with `REG_WANTS_ACK` stage each round's Hᵢ shift until
+//!   the master's ROUND_ACK, and a rejoiner's RESYNC watermark decides
+//!   whether a stranded stage is applied (reply lost after commit) or
+//!   discarded (round never committed).
 
 use std::collections::VecDeque;
-use std::time::Duration;
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -80,8 +105,26 @@ pub fn relay_slack_from_ms(ms: u64) -> Result<Duration> {
     Ok(Duration::from_millis(ms))
 }
 
+/// Default adoption grace: how long `prepare_round` waits for a
+/// severed partition's clients to re-register directly before giving
+/// them up as dead. Configurable via CLI `master --adopt-grace-ms`.
+pub const DEFAULT_ADOPT_GRACE: Duration = Duration::from_millis(2000);
+
+/// Validate a CLI `--adopt-grace-ms` value (same zero rule as
+/// [`relay_slack_from_ms`]: spell "default" by omitting the flag).
+pub fn adopt_grace_from_ms(ms: u64) -> Result<Duration> {
+    anyhow::ensure!(
+        ms > 0,
+        "--adopt-grace-ms 0 would abandon every severed partition \
+         before its clients could fail over; omit the flag for the \
+         default {} ms",
+        DEFAULT_ADOPT_GRACE.as_millis()
+    );
+    Ok(Duration::from_millis(ms))
+}
+
 /// One relay process' configuration (CLI `fednl relay`).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct RelayCfg {
     /// This relay's shard id (0-based, unique per master).
     pub shard_id: u32,
@@ -102,6 +145,19 @@ pub struct RelayCfg {
     /// [`EventPool`]: super::event::EventPool
     /// [`RemotePool`]: super::server::RemotePool
     pub event: bool,
+    /// `Some(k)`: this node is an inner relay of a tree — its downward
+    /// face is a [`RelayPool`] serving `k` child *relays* (or mux
+    /// groups) whose partitions tile `[base, base+count)`, instead of
+    /// `count` direct client connections (CLI `relay --parent k`).
+    /// Exclusive with `event` (the inner tier has its own transports).
+    pub children: Option<usize>,
+    /// Scripted failover injection (CLI `relay --die-after-round R`):
+    /// after fanning round `R` out to the partition — so every client
+    /// computes, and stages under commit-ack — exit abruptly: no
+    /// upward reply, no downward SHUTDOWN. The master certifies the
+    /// partition missing for round `R` and adopts its clients at the
+    /// next `prepare_round`.
+    pub die_after_round: Option<u64>,
 }
 
 /// The relay's downward face: any master-side transport that can also
@@ -110,11 +166,19 @@ pub struct RelayCfg {
 /// startup without duplicating the serve loop.
 trait DownFace: ClientPool {
     fn shutdown(&mut self);
+    /// Did any downstream registrant ask for commit acks
+    /// (`REG_WANTS_ACK`)? OR-folded into this node's own upward
+    /// registration so SHARD_ACK traffic only flows where needed.
+    fn wants_ack_any(&self) -> bool;
 }
 
 impl DownFace for super::server::RemotePool {
     fn shutdown(&mut self) {
         super::server::RemotePool::shutdown(self);
+    }
+
+    fn wants_ack_any(&self) -> bool {
+        super::server::RemotePool::wants_ack_any(self)
     }
 }
 
@@ -122,6 +186,20 @@ impl DownFace for super::server::RemotePool {
 impl DownFace for super::event::EventPool {
     fn shutdown(&mut self) {
         super::event::EventPool::shutdown(self);
+    }
+
+    fn wants_ack_any(&self) -> bool {
+        super::event::EventPool::wants_ack_any(self)
+    }
+}
+
+impl DownFace for RelayPool {
+    fn shutdown(&mut self) {
+        RelayPool::shutdown(self);
+    }
+
+    fn wants_ack_any(&self) -> bool {
+        RelayPool::wants_ack_any(self)
     }
 }
 
@@ -146,7 +224,26 @@ pub fn run_relay(cfg: &RelayCfg) -> Result<RelayReport> {
 pub fn run_relay_on(bound: Bound, cfg: &RelayCfg) -> Result<RelayReport> {
     // Downward first: the relay must know its partition's (d, family)
     // before it can register upward.
-    let mut down: Box<dyn DownFace> = if cfg.event {
+    let mut down: Box<dyn DownFace> = if let Some(k) = cfg.children {
+        // Inner node of a relay tree: the downward face is itself a
+        // RelayPool over k child relays whose partitions tile this
+        // node's range — every tier pre-reduces, fan-in stays O(S).
+        anyhow::ensure!(
+            !cfg.event,
+            "--parent and --event are exclusive: the child tier \
+             brings its own downward transports"
+        );
+        anyhow::ensure!(k > 0, "--parent needs at least one child");
+        let pool = RelayPool::accept_base(bound, k, cfg.base)?;
+        anyhow::ensure!(
+            pool.n_clients() == cfg.count,
+            "child partitions cover {} clients but this relay serves \
+             {} (they must tile [base, base+count))",
+            pool.n_clients(),
+            cfg.count
+        );
+        Box::new(pool)
+    } else if cfg.event {
         #[cfg(unix)]
         {
             Box::new(super::event::EventPool::accept_base(
@@ -165,6 +262,14 @@ pub fn run_relay_on(bound: Bound, cfg: &RelayCfg) -> Result<RelayReport> {
         ClientFamily::FedNL => wire::FAMILY_FEDNL,
         ClientFamily::PP => wire::FAMILY_PP,
     };
+    // OR of the partition's commit-ack appetite: the parent only fans
+    // SHARD_ACK frames down branches that contain staging clients, so
+    // non-failover runs see zero ack bytes anywhere in the tree.
+    let flags = if down.wants_ack_any() {
+        wire::REG_WANTS_ACK
+    } else {
+        0
+    };
     let stream = connect_with_retry(&cfg.connect, 50)?;
     let mut up = Channel::new(stream)?;
     up.send(
@@ -175,14 +280,17 @@ pub fn run_relay_on(bound: Bound, cfg: &RelayCfg) -> Result<RelayReport> {
             cfg.count as u32,
             d as u32,
             family,
+            flags,
         ),
     )?;
 
     loop {
-        // Master gone (EOF) = orderly end of the run from the relay's
-        // point of view: release the clients and exit.
+        // Upward link gone (EOF or error) = this relay is severed from
+        // the tree. Die abruptly — no downward SHUTDOWN — so the
+        // subtree's clients observe the loss and fail over to their
+        // fallback addresses. An orderly end of run is always an
+        // explicit SHUTDOWN frame.
         let Ok((tag, payload)) = up.recv() else {
-            down.shutdown();
             break;
         };
         match tag {
@@ -192,22 +300,51 @@ pub fn run_relay_on(bound: Bound, cfg: &RelayCfg) -> Result<RelayReport> {
                 let deadline = (deadline_ms > 0)
                     .then(|| Duration::from_millis(deadline_ms));
                 down.set_reply_deadline(deadline);
+                down.set_round_mode(if sum {
+                    RoundMode::Sums
+                } else {
+                    RoundMode::Atoms
+                });
                 down.submit_round(&x, Some(&subset), round, need_loss);
-                let mut msgs: Vec<ClientMsg> = Vec::new();
-                loop {
-                    let batch = down.drain();
-                    if batch.is_empty() {
-                        break;
+                if cfg.die_after_round == Some(round) {
+                    // Scripted failover: the partition has the round
+                    // (clients compute — and stage, under commit-ack).
+                    // Drain their replies so every client finished its
+                    // local step, then die abruptly: no upward frame,
+                    // no downward SHUTDOWN. Dropping `down` severs the
+                    // subtree; the parent certifies the partition
+                    // missing and adoption heals it next round.
+                    if sum {
+                        while !down.drain_sums().is_empty() {}
+                    } else {
+                        while !down.drain().is_empty() {}
                     }
-                    msgs.extend(batch);
+                    let (down_recv, down_sent) =
+                        down.transport_bytes().unwrap_or((0, 0));
+                    return Ok(RelayReport {
+                        down_recv,
+                        down_sent,
+                        up_sent: up.bytes_sent,
+                        up_recv: up.bytes_received,
+                    });
                 }
-                let mut missing = down.take_missing();
                 if sum {
-                    // Arithmetic pre-reduction: fold the partition's
-                    // replies into one exact superaccumulator — the
-                    // tier's O(S·d) fan-in. Fold order is irrelevant
-                    // (the sum is exact), so no sorting is needed.
-                    let mut merged = RoundSum::from_msgs(&msgs);
+                    // Arithmetic pre-reduction: merge the partition's
+                    // pre-reduced sums (one per sub-tier) or fold its
+                    // atom replies into one exact superaccumulator —
+                    // the tier's O(S·d) fan-in. Merge order is
+                    // irrelevant (the sum is exact).
+                    let mut merged = RoundSum::new();
+                    loop {
+                        let sums = down.drain_sums();
+                        if sums.is_empty() {
+                            break;
+                        }
+                        for s in sums {
+                            merged.merge(s);
+                        }
+                    }
+                    let missing = down.take_missing();
                     up.send(
                         c2s::SHARD_SUM,
                         &wire::encode_shard_sum(
@@ -217,6 +354,15 @@ pub fn run_relay_on(bound: Bound, cfg: &RelayCfg) -> Result<RelayReport> {
                         ),
                     )?;
                 } else {
+                    let mut msgs: Vec<ClientMsg> = Vec::new();
+                    loop {
+                        let batch = down.drain();
+                        if batch.is_empty() {
+                            break;
+                        }
+                        msgs.extend(batch);
+                    }
+                    let mut missing = down.take_missing();
                     // Atom mode: forward the per-client batch in
                     // round-subset order. (RemotePool already surfaces
                     // replies in that order; sorting keeps the
@@ -246,11 +392,34 @@ pub fn run_relay_on(bound: Bound, cfg: &RelayCfg) -> Result<RelayReport> {
                 };
                 down.prepare_round(r);
                 let rejoined = down.take_rejoined();
+                let fresh = down.take_fresh_rejoined();
                 let dead = down.dead_clients();
                 up.send(
                     c2s::SHARD_PREPPED,
-                    &wire::encode_shard_prepped(&rejoined, &dead),
+                    &wire::encode_shard_prepped(&rejoined, &dead, &fresh),
                 )?;
+            }
+            s2c::SHARD_ACK => {
+                // Commit fan-out: the parent committed `round` with
+                // these partition ids counted — forward so staging
+                // clients apply their staged Hᵢ shift. No reply (acks
+                // ride ahead of the next ROUND on the same FIFO).
+                let (round, ids) = wire::decode_shard_ack(&payload)?;
+                down.ack_round(round, &ids);
+            }
+            s2c::RESYNC => {
+                // Rejoin watermark for one client of the partition:
+                // route it down the tier (the leaf pool emits the
+                // client-facing 9-byte RESYNC).
+                let (client, lc) = wire::decode_shard_resync(&payload)?;
+                down.resolve_staged(client, lc);
+            }
+            s2c::PULL_H => {
+                // Exact Hᵢ resync pull: batch the partition's packed
+                // Hessians upward (empty batch = partition incomplete,
+                // the root falls back to the approximate resync).
+                let packs = down.pull_h_packed().unwrap_or_default();
+                up.send(c2s::SHARD_WARM, &wire::encode_vec_batch(&packs))?;
             }
             s2c::SHARD_PULL => {
                 let client = {
@@ -333,31 +502,71 @@ pub fn run_relay_on(bound: Bound, cfg: &RelayCfg) -> Result<RelayReport> {
     })
 }
 
+/// One failed-over client served directly by the adopting node after
+/// its relay died (the "embedded RemotePool slot" of the adoption
+/// path).
+struct Adopted {
+    id: u32,
+    ch: Channel,
+    /// Registered with `REG_WANTS_ACK` (it did, if it failed over —
+    /// tracked anyway so ack gating stays uniform).
+    wants_ack: bool,
+}
+
 /// Master-side handle to `S` relay aggregators, presented as one
-/// [`ClientPool`] over the whole client set.
+/// [`ClientPool`] over the whole client set. Doubles as the downward
+/// face of an inner tree node (`relay --parent`), where the "client
+/// set" is that node's contiguous sub-partition.
 pub struct RelayPool {
     /// Upward channels indexed by shard id (`None` = lost relay).
     relays: Vec<Option<Channel>>,
-    /// Global-id range `[lo, hi)` per shard (contiguous, ascending).
+    /// Global-id range `[lo, hi)` per shard (contiguous, ascending
+    /// from `base`).
     ranges: Vec<(u32, u32)>,
+    /// First global id served (0 at the root; an inner tree node
+    /// serves its own partition).
+    base: u32,
     n_clients: usize,
     d: usize,
     family: ClientFamily,
     alpha: f64,
+    /// Kept open after registration so a severed partition's clients
+    /// can fail over here; polled (non-blocking) in `prepare_round`.
+    listener: Option<TcpListener>,
     /// Shards with an outstanding SHARD_MSG, ascending shard id.
     pending: VecDeque<u32>,
+    /// Adopted clients with an outstanding ROUND reply, subset order.
+    adopted_pending: VecDeque<u32>,
     /// Participants of the round in flight, per shard (cleared once
     /// the shard's batch arrives; a relay lost mid-round certifies the
     /// remainder).
     outstanding: Vec<Vec<u32>>,
     missing: Vec<u32>,
     rejoined: Vec<u32>,
+    /// Rejoiners that re-registered with `REG_FRESH` (blank Hᵢ) since
+    /// the last take — the engine's exact-resync trigger.
+    fresh: Vec<u32>,
     /// Dead clients per live shard, from the last SHARD_PREPPED poll.
     shard_dead: Vec<Vec<u32>>,
+    /// `REG_WANTS_ACK` per shard, from registration: SHARD_ACK frames
+    /// only flow down branches that asked for them.
+    shard_ack: Vec<bool>,
+    /// Failed-over clients served directly (their relay died).
+    adopted: Vec<Adopted>,
+    /// Ids severed with their relay, awaiting direct re-registration:
+    /// the next `prepare_round` blocks up to `adopt_grace` for them.
+    orphans: Vec<u32>,
+    /// Orphans the grace expired on: reported dead, admitted if they
+    /// ever do come back, never waited for again.
+    abandoned: Vec<u32>,
     deadline: Option<Duration>,
     /// Forwarding patience on top of `deadline` (see
     /// [`DEFAULT_RELAY_SLACK`]; CLI `master --relay-slack-ms`).
     slack: Duration,
+    /// How long `prepare_round` waits for a severed partition to fail
+    /// over (see [`DEFAULT_ADOPT_GRACE`]; CLI `master
+    /// --adopt-grace-ms`).
+    adopt_grace: Duration,
     /// Reply format requested from the relays for subsequent rounds
     /// (encoded into each SHARD_ROUND frame at submit time).
     mode: RoundMode,
@@ -373,10 +582,22 @@ impl RelayPool {
 
     /// Accept `n_shards` relay registrations on a pre-bound socket.
     pub fn accept(bound: Bound, n_shards: usize) -> Result<Self> {
+        Self::accept_base(bound, n_shards, 0)
+    }
+
+    /// As [`RelayPool::accept`] for the global-id partition starting
+    /// at `base` — the downward face of an inner tree node, whose
+    /// children tile `[base, base+n)` instead of `[0, n)`.
+    pub fn accept_base(
+        bound: Bound,
+        n_shards: usize,
+        pool_base: u32,
+    ) -> Result<Self> {
         let listener = bound.into_listener();
         let mut relays: Vec<Option<Channel>> =
             (0..n_shards).map(|_| None).collect();
         let mut ranges: Vec<Option<(u32, u32)>> = vec![None; n_shards];
+        let mut acks = vec![false; n_shards];
         let mut d = 0u32;
         let mut family = None;
         let mut registered = 0;
@@ -388,7 +609,7 @@ impl RelayPool {
                 tag == c2s::SHARD_REGISTER,
                 "expected SHARD_REGISTER"
             );
-            let (sid, base, count, dim, fam) =
+            let (sid, base, count, dim, fam, flags) =
                 wire::decode_shard_register(&payload)?;
             let sid = sid as usize;
             anyhow::ensure!(sid < n_shards, "shard id {sid} out of range");
@@ -412,34 +633,50 @@ impl RelayPool {
             }
             relays[sid] = Some(ch);
             ranges[sid] = Some((base, base + count));
+            acks[sid] = flags & wire::REG_WANTS_ACK != 0;
             registered += 1;
         }
         let ranges: Vec<(u32, u32)> =
             ranges.into_iter().map(|r| r.unwrap()).collect();
-        let mut expect = 0u32;
+        let mut expect = pool_base;
         for (s, &(lo, hi)) in ranges.iter().enumerate() {
             anyhow::ensure!(
                 lo == expect,
                 "shard {s} partition starts at {lo}, expected {expect}: \
-                 partitions must tile 0..n contiguously in shard order"
+                 partitions must tile the pool's range contiguously in \
+                 shard order"
             );
             expect = hi;
         }
+        // Keep listening so a severed partition can fail over here;
+        // polled non-blocking between rounds.
+        listener
+            .set_nonblocking(true)
+            .context("set_nonblocking on retained relay listener")?;
         let n_shards_len = relays.len();
         Ok(Self {
             relays,
             ranges,
-            n_clients: expect as usize,
+            base: pool_base,
+            n_clients: (expect - pool_base) as usize,
             d: d as usize,
             family: family.context("no shards registered")?,
             alpha: 0.0,
+            listener: Some(listener),
             pending: VecDeque::new(),
+            adopted_pending: VecDeque::new(),
             outstanding: vec![Vec::new(); n_shards_len],
             missing: Vec::new(),
             rejoined: Vec::new(),
+            fresh: Vec::new(),
             shard_dead: vec![Vec::new(); n_shards_len],
+            shard_ack: acks,
+            adopted: Vec::new(),
+            orphans: Vec::new(),
+            abandoned: Vec::new(),
             deadline: None,
             slack: DEFAULT_RELAY_SLACK,
+            adopt_grace: DEFAULT_ADOPT_GRACE,
             mode: RoundMode::Atoms,
             retired_bytes: (0, 0),
         })
@@ -456,15 +693,158 @@ impl RelayPool {
         self.slack = slack.max(Duration::from_millis(1));
     }
 
+    /// Configure the adoption grace (how long `prepare_round` waits
+    /// for a severed partition's clients to fail over before they are
+    /// abandoned as dead). CLI: `master --adopt-grace-ms`.
+    pub fn set_adopt_grace(&mut self, grace: Duration) {
+        self.adopt_grace = grace.max(Duration::from_millis(1));
+    }
+
+    /// Did any registrant of this tier ask for commit acks?
+    pub fn wants_ack_any(&self) -> bool {
+        self.shard_ack.iter().any(|&a| a)
+            || self.adopted.iter().any(|a| a.wants_ack)
+    }
+
     /// Retire a relay: fold its byte meters, certify the round
-    /// participants it still owed, and mark its whole partition dead.
+    /// participants it still owed, and orphan its partition — the ids
+    /// are reported dead until (and unless) their clients fail over
+    /// to this node's retained listener and are adopted.
     fn drop_relay(&mut self, s: usize) {
         if let Some(ch) = self.relays[s].take() {
             self.retired_bytes.0 += ch.bytes_received;
             self.retired_bytes.1 += ch.bytes_sent;
+            // First severance of this shard: every id not already
+            // served directly becomes an orphan the next
+            // prepare_round waits for — except ids the relay itself
+            // reported dead, which have nobody left to fail over
+            // (they are abandoned immediately, though still admitted
+            // if they ever reconnect).
+            let (lo, hi) = self.ranges[s];
+            for c in lo..hi {
+                if self.adopted.iter().any(|a| a.id == c) {
+                    continue;
+                }
+                if self.shard_dead[s].contains(&c) {
+                    self.abandoned.push(c);
+                } else {
+                    self.orphans.push(c);
+                }
+            }
         }
         self.missing.append(&mut self.outstanding[s]);
         self.shard_dead[s].clear();
+    }
+
+    /// Retire one adopted client's channel (folding its byte meters);
+    /// the id may fail over again later.
+    fn retire_adopted(&mut self, id: u32) {
+        if let Some(pos) = self.adopted.iter().position(|a| a.id == id) {
+            let a = self.adopted.swap_remove(pos);
+            self.retired_bytes.0 += a.ch.bytes_received;
+            self.retired_bytes.1 += a.ch.bytes_sent;
+            self.abandoned.push(id);
+        }
+    }
+
+    fn adopted_mut(&mut self, id: u32) -> Option<&mut Adopted> {
+        self.adopted.iter_mut().find(|a| a.id == id)
+    }
+
+    /// Non-blocking accept sweep: admit any orphaned (or abandoned)
+    /// id re-registering directly. Returns how many were adopted.
+    fn poll_adoptions(&mut self) -> usize {
+        let mut admitted = 0;
+        // Cap accepts per sweep so a reconnect-looping peer cannot
+        // stall `prepare_round` (mirrors RemotePool::poll_rejoins).
+        for _ in 0..self.n_clients.max(1) {
+            let accepted = match &self.listener {
+                Some(l) => l.accept(),
+                None => return admitted,
+            };
+            match accepted {
+                Ok((stream, _)) => {
+                    if self.admit_adoption(stream).is_some() {
+                        admitted += 1;
+                    }
+                }
+                Err(_) => break, // WouldBlock (or transient): done
+            }
+        }
+        admitted
+    }
+
+    /// Validate one failed-over client; returns its global id if
+    /// adopted. A malformed or conflicting registration drops the
+    /// connection (same non-panicking rule as every network input).
+    fn admit_adoption(&mut self, stream: TcpStream) -> Option<u32> {
+        stream.set_nonblocking(false).ok()?;
+        let handshake = self.deadline.unwrap_or(Duration::from_secs(1));
+        stream.set_read_timeout(Some(handshake)).ok()?;
+        let mut ch = Channel::new(stream).ok()?;
+        let (tag, payload) = ch.recv().ok()?;
+        if tag != c2s::REGISTER {
+            return None;
+        }
+        let (id, dim, family, flags) =
+            wire::decode_register(&payload).ok()?;
+        let family = match family {
+            wire::FAMILY_FEDNL => ClientFamily::FedNL,
+            _ => ClientFamily::PP,
+        };
+        let orphaned = self.orphans.contains(&id)
+            || self.abandoned.contains(&id);
+        let admissible = orphaned
+            && dim as usize == self.d
+            && family == self.family
+            && self.adopted.iter().all(|a| a.id != id);
+        if !admissible {
+            return None;
+        }
+        // Resync the Hessian learning rate, exactly like a flat-master
+        // rejoin (`RemotePool::admit_rejoin`): the adopted client must
+        // train under the α this node aggregates with.
+        if self.alpha > 0.0 {
+            let sent = ch
+                .send(s2c::SET_ALPHA, &wire::encode_scalar(self.alpha))
+                .is_ok();
+            let acked = sent
+                && matches!(ch.recv(), Ok((tag, _)) if tag == c2s::ACK);
+            if !acked {
+                return None;
+            }
+        }
+        self.orphans.retain(|&c| c != id);
+        self.abandoned.retain(|&c| c != id);
+        self.adopted.push(Adopted {
+            id,
+            ch,
+            wants_ack: flags & wire::REG_WANTS_ACK != 0,
+        });
+        self.rejoined.push(id);
+        if flags & wire::REG_FRESH != 0 {
+            self.fresh.push(id);
+        }
+        Some(id)
+    }
+
+    /// The adoption barrier: if a partition was severed since the
+    /// last round, block up to `adopt_grace` for its clients to fail
+    /// over; whoever misses the grace is abandoned (reported dead, no
+    /// further waiting). With no fresh orphans this is one
+    /// non-blocking sweep.
+    fn adopt_orphans(&mut self) {
+        if self.orphans.is_empty() {
+            self.poll_adoptions();
+            return;
+        }
+        let deadline = Instant::now() + self.adopt_grace;
+        while !self.orphans.is_empty() && Instant::now() < deadline {
+            if self.poll_adoptions() == 0 {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+        self.abandoned.append(&mut self.orphans);
     }
 
     /// Send one command to every live relay; returns the shard ids
@@ -490,6 +870,63 @@ impl RelayPool {
         self.recv_expect_within(s, want, None)
     }
 
+    /// Receive one adopted client's round reply (deadline-bounded).
+    /// Returns the message plus its framed byte size; failures retire
+    /// the client and certify it missing.
+    fn recv_adopted_msg(&mut self, ci: u32) -> Option<(ClientMsg, u64)> {
+        let deadline = self.deadline;
+        let Some(a) = self.adopted_mut(ci) else {
+            self.missing.push(ci);
+            return None;
+        };
+        let _ = a.ch.set_read_timeout(deadline);
+        if let Ok((tag, p)) = a.ch.recv() {
+            if tag == c2s::MSG {
+                if let Ok(m) = wire::decode_client_msg(&p) {
+                    if m.client_id == ci as usize {
+                        let bytes = crate::net::FRAME_HEADER_BYTES
+                            + p.len() as u64;
+                        return Some((m, bytes));
+                    }
+                }
+            }
+        }
+        // Deadline missed, connection died, or a protocol violation:
+        // retire and certify (never a panic — network-facing input).
+        self.retire_adopted(ci);
+        self.missing.push(ci);
+        None
+    }
+
+    /// Send one probe command to every adopted client; returns the ids
+    /// actually sent (send failures retire).
+    fn ask_adopted(&mut self, tag: u8, payload: &[u8]) -> Vec<u32> {
+        let ids: Vec<u32> = self.adopted.iter().map(|a| a.id).collect();
+        let mut asked = Vec::with_capacity(ids.len());
+        for id in ids {
+            let Some(a) = self.adopted_mut(id) else { continue };
+            match a.ch.send(tag, payload) {
+                Ok(()) => asked.push(id),
+                Err(_) => self.retire_adopted(id),
+            }
+        }
+        asked
+    }
+
+    /// Blocking receive of one probe reply from adopted client `ci`
+    /// (unbounded, mirroring [`RelayPool::recv_expect`]).
+    fn recv_adopted_expect(&mut self, ci: u32, want: u8) -> Option<Vec<u8>> {
+        let a = self.adopted_mut(ci)?;
+        let _ = a.ch.set_read_timeout(None);
+        match a.ch.recv() {
+            Ok((tag, payload)) if tag == want => Some(payload),
+            _ => {
+                self.retire_adopted(ci);
+                None
+            }
+        }
+    }
+
     /// As [`RelayPool::recv_expect`] with an explicit receive budget —
     /// the per-round exchanges (SHARD_PREP) use `deadline + slack` so
     /// a hung-but-connected relay is certified lost instead of
@@ -511,10 +948,14 @@ impl RelayPool {
         }
     }
 
-    /// Politely shut the tier down (relays forward to their clients).
+    /// Politely shut the tier down (relays forward to their clients;
+    /// adopted clients are released directly).
     pub fn shutdown(&mut self) {
         for ch in self.relays.iter_mut().flatten() {
             let _ = ch.send(s2c::SHUTDOWN, &[]);
+        }
+        for a in &mut self.adopted {
+            let _ = a.ch.send(s2c::SHUTDOWN, &[]);
         }
     }
 }
@@ -578,6 +1019,31 @@ impl ClientPool for RelayPool {
     }
 
     fn prepare_round(&mut self, round: u64) {
+        // A relay that died since the last exchange (EOF on its
+        // channel) is certified *before* this round is dispatched —
+        // the silent-partition fix: quorum math sees the loss in the
+        // same round on every transport, instead of a zero-reply
+        // round that only surfaces at drain time.
+        for s in 0..self.relays.len() {
+            let dead = self.relays[s]
+                .as_ref()
+                .is_some_and(|ch| ch.peek_eof());
+            if dead {
+                self.drop_relay(s);
+            }
+        }
+        let dead_adopted: Vec<u32> = self
+            .adopted
+            .iter()
+            .filter(|a| a.ch.peek_eof())
+            .map(|a| a.id)
+            .collect();
+        for id in dead_adopted {
+            self.retire_adopted(id);
+        }
+        // Adoption barrier: freshly severed partitions get one grace
+        // window to fail over before they are abandoned as dead.
+        self.adopt_orphans();
         // One liveness poll per relay per round: rejoins admitted by
         // the relays' retained listeners surface here, and the dead
         // sets feed the PP resampling policy.
@@ -590,13 +1056,16 @@ impl ClientPool for RelayPool {
         // Bounded per-round exchange: with a reply deadline configured
         // a wedged relay must become a certified loss here, not a
         // master hang (the flat master's prepare_round is non-blocking
-        // for the same reason).
-        let budget = self.deadline.map(|d| d + self.slack);
+        // for the same reason). The budget covers a child's own
+        // adoption barrier, which runs inside its SHARD_PREP handling.
+        let budget =
+            self.deadline.map(|d| d + self.slack + self.adopt_grace);
         for s in asked {
             match self.recv_expect_within(s, c2s::SHARD_PREPPED, budget) {
                 Some(p) => match wire::decode_shard_prepped(&p) {
-                    Ok((rejoined, dead)) => {
+                    Ok((rejoined, dead, fresh)) => {
                         self.rejoined.extend(rejoined);
+                        self.fresh.extend(fresh);
                         self.shard_dead[s] = dead;
                     }
                     Err(_) => self.drop_relay(s),
@@ -607,16 +1076,17 @@ impl ClientPool for RelayPool {
     }
 
     fn dead_clients(&self) -> Vec<u32> {
+        // Live relays report their partitions' dead sets; a severed
+        // partition's ids are dead while orphaned or abandoned (an
+        // adopted id is alive again and appears in neither list).
         let mut out = Vec::new();
         for s in 0..self.relays.len() {
-            if self.relays[s].is_none() {
-                // A lost relay's whole partition is unreachable.
-                let (lo, hi) = self.ranges[s];
-                out.extend(lo..hi);
-            } else {
+            if self.relays[s].is_some() {
                 out.extend(self.shard_dead[s].iter().copied());
             }
         }
+        out.extend(self.orphans.iter().copied());
+        out.extend(self.abandoned.iter().copied());
         out.sort_unstable();
         out
     }
@@ -631,6 +1101,12 @@ impl ClientPool for RelayPool {
         out
     }
 
+    fn take_fresh_rejoined(&mut self) -> Vec<u32> {
+        let mut out = std::mem::take(&mut self.fresh);
+        out.sort_unstable();
+        out
+    }
+
     fn submit_round(
         &mut self,
         x: &[f64],
@@ -639,8 +1115,13 @@ impl ClientPool for RelayPool {
         need_loss: bool,
     ) {
         assert!(self.pending.is_empty(), "previous round not fully drained");
+        assert!(
+            self.adopted_pending.is_empty(),
+            "previous round not fully drained"
+        );
         let deadline_ms =
             self.deadline.map(|d| d.as_millis() as u64).unwrap_or(0);
+        let round_payload = wire::encode_round(x, round, need_loss);
         for s in 0..self.relays.len() {
             let (lo, hi) = self.ranges[s];
             let part: Vec<u32> = match subset {
@@ -654,10 +1135,25 @@ impl ClientPool for RelayPool {
             if part.is_empty() {
                 continue;
             }
-            let Some(ch) = self.relays[s].as_mut() else {
-                self.missing.extend(part);
+            if self.relays[s].is_none() {
+                // Severed partition: adopted participants are served
+                // over their direct channels (the flat client
+                // protocol); the rest are certified missing.
+                for ci in part {
+                    let Some(a) = self.adopted_mut(ci) else {
+                        self.missing.push(ci);
+                        continue;
+                    };
+                    match a.ch.send(s2c::ROUND, &round_payload) {
+                        Ok(()) => self.adopted_pending.push_back(ci),
+                        Err(_) => {
+                            self.retire_adopted(ci);
+                            self.missing.push(ci);
+                        }
+                    }
+                }
                 continue;
-            };
+            }
             let payload = wire::encode_shard_round(
                 x,
                 round,
@@ -666,6 +1162,7 @@ impl ClientPool for RelayPool {
                 deadline_ms,
                 &part,
             );
+            let ch = self.relays[s].as_mut().unwrap();
             match ch.send(s2c::SHARD_ROUND, &payload) {
                 Ok(()) => {
                     self.outstanding[s] = part;
@@ -731,6 +1228,23 @@ impl ClientPool for RelayPool {
                     return vec![sum];
                 }
                 _ => self.drop_relay(s),
+            }
+        }
+        // Adopted clients answer with flat atom replies; fold them
+        // into one exact accumulator (order-irrelevant: the merge is
+        // exact, so the healed topology stays bit-identical).
+        if !self.adopted_pending.is_empty() {
+            let mut merged = RoundSum::new();
+            let mut bytes = 0u64;
+            while let Some(ci) = self.adopted_pending.pop_front() {
+                if let Some((m, b)) = self.recv_adopted_msg(ci) {
+                    merged.absorb(&m);
+                    bytes += b;
+                }
+            }
+            if merged.committed > 0 {
+                merged.wire_bytes = bytes;
+                return vec![merged];
             }
         }
         Vec::new()
@@ -801,6 +1315,12 @@ impl ClientPool for RelayPool {
                 _ => self.drop_relay(s),
             }
         }
+        // Adopted clients reply one atom each, in subset order.
+        while let Some(ci) = self.adopted_pending.pop_front() {
+            if let Some((m, _)) = self.recv_adopted_msg(ci) {
+                return vec![m];
+            }
+        }
         Vec::new()
     }
 
@@ -810,6 +1330,7 @@ impl ClientPool for RelayPool {
         // surviving partitions (same rule as `drain`).
         let payload = wire::encode_vec(x);
         let asked = self.ask_relays(s2c::EVAL_LOSS, &payload);
+        let adopted = self.ask_adopted(s2c::EVAL_LOSS, &payload);
         let mut parts = Vec::with_capacity(self.n_clients);
         for s in asked {
             if let Some(p) = self.recv_expect(s, c2s::SHARD_LOSSES) {
@@ -819,18 +1340,35 @@ impl ClientPool for RelayPool {
                 }
             }
         }
+        for ci in adopted {
+            if let Some(p) = self.recv_adopted_expect(ci, c2s::LOSS) {
+                match wire::decode_scalar(&p) {
+                    Ok(l) => parts.push((ci, l)),
+                    Err(_) => self.retire_adopted(ci),
+                }
+            }
+        }
         parts
     }
 
     fn loss_grad_each(&mut self, x: &[f64]) -> Vec<(u32, f64, Vec<f64>)> {
         let payload = wire::encode_vec(x);
         let asked = self.ask_relays(s2c::LOSS_GRAD, &payload);
+        let adopted = self.ask_adopted(s2c::LOSS_GRAD, &payload);
         let mut parts = Vec::with_capacity(self.n_clients);
         for s in asked {
             if let Some(p) = self.recv_expect(s, c2s::SHARD_GRADS) {
                 match wire::decode_id_scalar_vecs(&p) {
                     Ok(batch) => parts.extend(batch),
                     Err(_) => self.drop_relay(s),
+                }
+            }
+        }
+        for ci in adopted {
+            if let Some(p) = self.recv_adopted_expect(ci, c2s::GRAD) {
+                match wire::decode_loss_grad(&p) {
+                    Ok((l, g)) => parts.push((ci, l, g)),
+                    Err(_) => self.retire_adopted(ci),
                 }
             }
         }
@@ -852,6 +1390,7 @@ impl ClientPool for RelayPool {
         // rule as the other probes).
         let payload = wire::encode_vec(x);
         let asked = self.ask_relays(s2c::LOSS_GRAD_SUM, &payload);
+        let adopted = self.ask_adopted(s2c::LOSS_GRAD, &payload);
         let mut loss = crate::linalg::reduce::RepAcc::new();
         let mut grad = crate::linalg::reduce::RepVec::new(self.d);
         let mut count = 0u32;
@@ -866,6 +1405,21 @@ impl ClientPool for RelayPool {
                         count += c;
                     }
                     _ => self.drop_relay(s),
+                }
+            }
+        }
+        // Adopted atoms accumulate into the same exact reduction the
+        // flat pools use — grouping-invariant, so the healed topology
+        // probes bit-identically.
+        for ci in adopted {
+            if let Some(p) = self.recv_adopted_expect(ci, c2s::GRAD) {
+                match wire::decode_loss_grad(&p) {
+                    Ok((l, g)) if g.len() == self.d => {
+                        loss.accumulate(l);
+                        grad.accumulate(&g);
+                        count += 1;
+                    }
+                    _ => self.retire_adopted(ci),
                 }
             }
         }
@@ -907,14 +1461,36 @@ impl ClientPool for RelayPool {
             );
         }
         parts.sort_by_key(|&(id, _, _)| id);
+        let base = self.base;
         assert!(
-            parts.iter().enumerate().all(|(i, &(id, _, _))| id as usize == i),
+            parts.len() == self.n_clients
+                && parts
+                    .iter()
+                    .enumerate()
+                    .all(|(i, &(id, _, _))| id == base + i as u32),
             "init_state: incomplete client coverage"
         );
         parts.into_iter().map(|(_, l, g)| (l, g)).collect()
     }
 
     fn pull_state(&mut self, client: u32) -> Option<(f64, Vec<f64>)> {
+        // An adopted client answers the pull over its direct channel.
+        if self.adopted.iter().any(|a| a.id == client) {
+            let deadline = self.deadline.or(Some(Duration::from_secs(5)));
+            let a = self.adopted_mut(client)?;
+            let _ = a.ch.set_read_timeout(deadline);
+            if a.ch.send(s2c::STATE, &[]).is_ok() {
+                if let Ok((tag, p)) = a.ch.recv() {
+                    if tag == c2s::STATE {
+                        if let Ok(state) = wire::decode_loss_grad(&p) {
+                            return Some(state);
+                        }
+                    }
+                }
+            }
+            self.retire_adopted(client);
+            return None;
+        }
         let s = self
             .ranges
             .iter()
@@ -950,6 +1526,135 @@ impl ClientPool for RelayPool {
         None
     }
 
+    fn ack_round(&mut self, round: u64, committed: &[u32]) {
+        // Commit fan-out: one SHARD_ACK per live shard that asked for
+        // acks (carrying its committed ids), one ROUND_ACK per adopted
+        // staging client. Branches without staging registrants see
+        // zero ack bytes, so non-failover runs meter unchanged.
+        for s in 0..self.relays.len() {
+            if !self.shard_ack[s] || self.relays[s].is_none() {
+                continue;
+            }
+            let (lo, hi) = self.ranges[s];
+            let part: Vec<u32> = committed
+                .iter()
+                .copied()
+                .filter(|&c| c >= lo && c < hi)
+                .filter(|&c| self.adopted.iter().all(|a| a.id != c))
+                .collect();
+            if part.is_empty() {
+                continue;
+            }
+            let payload = wire::encode_shard_ack(round, &part);
+            let ch = self.relays[s].as_mut().unwrap();
+            if ch.send(s2c::SHARD_ACK, &payload).is_err() {
+                self.drop_relay(s);
+            }
+        }
+        let ack_ids: Vec<u32> = self
+            .adopted
+            .iter()
+            .filter(|a| a.wants_ack && committed.contains(&a.id))
+            .map(|a| a.id)
+            .collect();
+        let payload = wire::encode_round_ack(round);
+        for id in ack_ids {
+            let Some(a) = self.adopted_mut(id) else { continue };
+            if a.ch.send(s2c::ROUND_ACK, &payload).is_err() {
+                self.retire_adopted(id);
+            }
+        }
+    }
+
+    fn resolve_staged(&mut self, client: u32, last_commit: Option<u64>) {
+        // Route the rejoin watermark to wherever the client is served
+        // now: directly if adopted, down its shard's tier otherwise.
+        if self.adopted.iter().any(|a| a.id == client) {
+            let payload = wire::encode_resync(last_commit);
+            let Some(a) = self.adopted_mut(client) else { return };
+            if a.ch.send(s2c::RESYNC, &payload).is_err() {
+                self.retire_adopted(client);
+            }
+            return;
+        }
+        let Some(s) = self
+            .ranges
+            .iter()
+            .position(|&(lo, hi)| client >= lo && client < hi)
+        else {
+            return;
+        };
+        if !self.shard_ack[s] {
+            return; // no staging registrants down that branch
+        }
+        let payload = wire::encode_shard_resync(client, last_commit);
+        if let Some(ch) = self.relays[s].as_mut() {
+            if ch.send(s2c::RESYNC, &payload).is_err() {
+                self.drop_relay(s);
+            }
+        }
+    }
+
+    fn pull_h_packed(&mut self) -> Option<Vec<Vec<f64>>> {
+        // Exact Hᵢ resync: every client of the tier must answer, in
+        // global id order — a single hole (dead id, severed shard,
+        // short batch) degrades to `None` and the engine falls back
+        // to the approximate resync.
+        let mut slots: Vec<Option<Vec<f64>>> = vec![None; self.n_clients];
+        let asked = self.ask_relays(s2c::PULL_H, &[]);
+        let adopted = self.ask_adopted(s2c::PULL_H, &[]);
+        for s in asked {
+            let (lo, hi) = self.ranges[s];
+            let Some(p) = self.recv_expect(s, c2s::SHARD_WARM) else {
+                continue;
+            };
+            let Ok(packs) = wire::decode_vec_batch(&p) else {
+                self.drop_relay(s);
+                continue;
+            };
+            if packs.len() != (hi - lo) as usize {
+                continue; // partition incomplete (adoptees answer
+                          // directly; holes fail the pull below)
+            }
+            for (i, pack) in packs.into_iter().enumerate() {
+                slots[(lo - self.base) as usize + i] = Some(pack);
+            }
+        }
+        for ci in adopted {
+            if let Some(p) = self.recv_adopted_expect(ci, c2s::WARM) {
+                match wire::decode_vec(&p) {
+                    Ok(pack) => {
+                        slots[(ci - self.base) as usize] = Some(pack)
+                    }
+                    Err(_) => self.retire_adopted(ci),
+                }
+            }
+        }
+        slots.into_iter().collect()
+    }
+
+    fn supports_shard_kill(&self) -> bool {
+        true
+    }
+
+    fn kill_shard(&mut self, shard: u32) {
+        // Scripted failover injection: sever the upward channel to
+        // this relay abruptly. The relay observes EOF, dies without a
+        // downward SHUTDOWN, and its clients fail over; adoption at
+        // the next `prepare_round` heals the partition.
+        let s = shard as usize;
+        assert!(
+            s < self.relays.len(),
+            "killrelay names shard {shard} but the tier has {} shards",
+            self.relays.len()
+        );
+        self.drop_relay(s);
+    }
+
+    fn shard_ranges(&self) -> Option<Vec<(u32, u32)>> {
+        Some(self.ranges.clone())
+    }
+
     fn transport_bytes(&self) -> Option<(u64, u64)> {
         let up = self.retired_bytes.0
             + self
@@ -957,6 +1662,11 @@ impl ClientPool for RelayPool {
                 .iter()
                 .flatten()
                 .map(|c| c.bytes_received)
+                .sum::<u64>()
+            + self
+                .adopted
+                .iter()
+                .map(|a| a.ch.bytes_received)
                 .sum::<u64>();
         let down = self.retired_bytes.1
             + self
@@ -964,7 +1674,8 @@ impl ClientPool for RelayPool {
                 .iter()
                 .flatten()
                 .map(|c| c.bytes_sent)
-                .sum::<u64>();
+                .sum::<u64>()
+            + self.adopted.iter().map(|a| a.ch.bytes_sent).sum::<u64>();
         Some((up, down))
     }
 }
@@ -990,5 +1701,17 @@ mod tests {
             Duration::from_millis(7500)
         );
         assert_eq!(DEFAULT_RELAY_SLACK, Duration::from_millis(2000));
+    }
+
+    #[test]
+    fn adopt_grace_validation() {
+        let err = adopt_grace_from_ms(0).unwrap_err().to_string();
+        assert!(err.contains("--adopt-grace-ms"), "{err}");
+        assert!(err.contains("2000"), "{err}");
+        assert_eq!(
+            adopt_grace_from_ms(250).unwrap(),
+            Duration::from_millis(250)
+        );
+        assert_eq!(DEFAULT_ADOPT_GRACE, Duration::from_millis(2000));
     }
 }

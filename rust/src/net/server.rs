@@ -31,6 +31,18 @@
 //! [`ClientPool::prepare_round`] and reported through
 //! [`ClientPool::take_rejoined`] so the FedNL-PP driver can resync the
 //! client via the existing STATE pull.
+//!
+//! Clients that register with `REG_WANTS_ACK` run the commit-ack
+//! protocol (`net::wire` § commit acks): the pool sends them a
+//! ROUND_ACK after each committed round ([`ClientPool::ack_round`])
+//! and a RESYNC watermark on rejoin ([`ClientPool::resolve_staged`]),
+//! closing the "client computed but the reply was lost" hole
+//! exactly-once. A rejoiner carrying `REG_FRESH` (blank Hᵢ) surfaces
+//! through [`ClientPool::take_fresh_rejoined`]; the engine then pulls
+//! every client's packed Hᵢ ([`ClientPool::pull_h_packed`]) to rebuild
+//! the server Hessian exactly. Clients that registered without the
+//! flag are never sent any of these frames, so existing deployments
+//! meter byte-for-byte as before.
 
 use std::collections::VecDeque;
 use std::net::{TcpListener, TcpStream};
@@ -71,6 +83,12 @@ pub struct RemotePool {
     missing: Vec<u32>,
     /// Ids re-admitted by `prepare_round` since the last take.
     rejoined: Vec<u32>,
+    /// Rejoiners that carried `REG_FRESH` since the last take.
+    fresh: Vec<u32>,
+    /// `REG_WANTS_ACK` per slot: commit acks and resync watermarks
+    /// only flow to clients that asked (a client without the flag
+    /// treats those tags as protocol violations).
+    acks: Vec<bool>,
     /// Per-client reply deadline for the round exchange.
     deadline: Option<Duration>,
     /// Byte counters of retired channels, so `transport_bytes` stays
@@ -129,7 +147,7 @@ impl RemotePool {
         n_clients: usize,
         base: u32,
     ) -> Result<Self> {
-        let mut slots: Vec<Option<(Channel, u8)>> =
+        let mut slots: Vec<Option<(Channel, u8, u8)>> =
             (0..n_clients).map(|_| None).collect();
         let mut d = 0usize;
         let mut registered = 0;
@@ -138,7 +156,8 @@ impl RemotePool {
             let mut ch = Channel::new(stream)?;
             let (tag, payload) = ch.recv()?;
             anyhow::ensure!(tag == c2s::REGISTER, "expected REGISTER");
-            let (id, dim, family) = wire::decode_register(&payload)?;
+            let (id, dim, family, flags) =
+                wire::decode_register(&payload)?;
             anyhow::ensure!(
                 id >= base && ((id - base) as usize) < n_clients,
                 "client id {id} outside partition [{base}, {})",
@@ -151,13 +170,16 @@ impl RemotePool {
             } else {
                 anyhow::ensure!(d == dim as usize, "dimension mismatch");
             }
-            slots[id] = Some((ch, family));
+            // REG_FRESH on the *initial* registration is vacuous
+            // (everyone starts fresh) — only `acks` is recorded.
+            slots[id] = Some((ch, family, flags));
             registered += 1;
         }
         let mut channels = Vec::with_capacity(n_clients);
+        let mut acks = Vec::with_capacity(n_clients);
         let mut family = None;
         for (id, s) in slots.into_iter().enumerate() {
-            let (ch, f) = s.unwrap();
+            let (ch, f, flags) = s.unwrap();
             let f = match f {
                 wire::FAMILY_FEDNL => ClientFamily::FedNL,
                 _ => ClientFamily::PP,
@@ -171,6 +193,7 @@ impl RemotePool {
                 ),
             }
             channels.push(Some(ch));
+            acks.push(flags & wire::REG_WANTS_ACK != 0);
         }
         // Keep listening so deregistered ids can rejoin; polled
         // non-blocking between rounds.
@@ -187,9 +210,17 @@ impl RemotePool {
             pending: VecDeque::new(),
             missing: Vec::new(),
             rejoined: Vec::new(),
+            fresh: Vec::new(),
+            acks,
             deadline: None,
             retired_bytes: (0, 0),
         })
+    }
+
+    /// Did any registrant ask for commit acks (`REG_WANTS_ACK`)? The
+    /// relay tier ORs this into its own upward registration.
+    pub fn wants_ack_any(&self) -> bool {
+        self.acks.iter().any(|&a| a)
     }
 
     /// Retire a client's channel (folding its byte counters into the
@@ -241,7 +272,8 @@ impl RemotePool {
         if tag != c2s::REGISTER {
             return None;
         }
-        let (id, dim, family) = wire::decode_register(&payload).ok()?;
+        let (id, dim, family, flags) =
+            wire::decode_register(&payload).ok()?;
         let slot = id.checked_sub(self.base)? as usize;
         let family = match family {
             wire::FAMILY_FEDNL => ClientFamily::FedNL,
@@ -256,8 +288,8 @@ impl RemotePool {
         }
         // Resync the Hessian learning rate: a fresh-state rejoiner
         // would otherwise run with its own default α while the master
-        // aggregates under the negotiated one. (Its Hᵢ cannot be
-        // resynced over the wire — see the ROADMAP known-limits note.)
+        // aggregates under the negotiated one. (Its Hᵢ is resynced by
+        // the engine via `PULL_H` when the rejoiner sets `REG_FRESH`.)
         if self.alpha > 0.0 {
             let sent = ch
                 .send(s2c::SET_ALPHA, &wire::encode_scalar(self.alpha))
@@ -269,6 +301,10 @@ impl RemotePool {
             }
         }
         self.channels[slot] = Some(ch);
+        self.acks[slot] = flags & wire::REG_WANTS_ACK != 0;
+        if flags & wire::REG_FRESH != 0 {
+            self.fresh.push(id);
+        }
         Some(id as usize)
     }
 
@@ -396,6 +432,67 @@ impl ClientPool for RemotePool {
 
     fn take_rejoined(&mut self) -> Vec<u32> {
         std::mem::take(&mut self.rejoined)
+    }
+
+    fn take_fresh_rejoined(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.fresh)
+    }
+
+    fn ack_round(&mut self, round: u64, committed: &[u32]) {
+        // Commit acks go only to registrants that asked for them
+        // (`REG_WANTS_ACK`); everyone else treats the tag as a
+        // protocol violation, and the wire stays byte-identical to a
+        // run without failover. TCP FIFO ordering guarantees each
+        // client sees ROUND_ACK(k) before ROUND(k+1).
+        let payload = wire::encode_round_ack(round);
+        for &cid in committed {
+            let Some(slot) = cid.checked_sub(self.base) else {
+                continue;
+            };
+            let slot = slot as usize;
+            if slot >= self.channels.len() || !self.acks[slot] {
+                continue;
+            }
+            if let Some(ch) = self.channels[slot].as_mut() {
+                if ch.send(s2c::ROUND_ACK, &payload).is_err() {
+                    self.deregister(slot);
+                }
+            }
+        }
+    }
+
+    fn resolve_staged(&mut self, client: u32, last_commit: Option<u64>) {
+        let Some(slot) = client.checked_sub(self.base) else {
+            return;
+        };
+        let slot = slot as usize;
+        if slot >= self.channels.len() || !self.acks[slot] {
+            return;
+        }
+        let payload = wire::encode_resync(last_commit);
+        if let Some(ch) = self.channels[slot].as_mut() {
+            if ch.send(s2c::RESYNC, &payload).is_err() {
+                self.deregister(slot);
+            }
+        }
+    }
+
+    fn pull_h_packed(&mut self) -> Option<Vec<Vec<f64>>> {
+        // Exact resync needs every peer's packed Hᵢ; with any slot
+        // dead the caller falls back to the approximate warm path.
+        if self.channels.iter().any(|c| c.is_none()) {
+            return None;
+        }
+        let asked = self.ask_all(s2c::PULL_H, &[]);
+        if asked.len() != self.channels.len() {
+            return None;
+        }
+        let mut packs = Vec::with_capacity(asked.len());
+        for ci in asked {
+            let p = self.recv_expect(ci, c2s::WARM)?;
+            packs.push(wire::decode_vec(&p).expect("pull_h decode"));
+        }
+        Some(packs)
     }
 
     fn set_reply_deadline(&mut self, deadline: Option<Duration>) {

@@ -25,6 +25,9 @@
 //! | c2s | `GRAD`      16 | (f, ∇f)                    |                |
 //! | c2s | `STATE`     17 | (lᵢ, gᵢ)                   |                |
 //! | c2s | `DEREGISTER`18 | —                          | —              |
+//! | s2c | `ROUND_ACK` 33 | committed round            | —              |
+//! | s2c | `RESYNC`    35 | last committed round (opt) | —              |
+//! | s2c | `PULL_H`    36 | —                          | `WARM`         |
 //!
 //! A FedNL client answers `ROUND` with its Alg. 1 message; a PP client
 //! answers the *same* tag with its Alg. 3 participation deltas — both
@@ -52,6 +55,7 @@
 //! | c2s | `SHARD_SUM`      31 | merged [`RoundSum`] + missing   |                |
 //! | s2c | `LOSS_GRAD_SUM`   9 | x                               | `SHARD_GRAD_SUM` |
 //! | c2s | `SHARD_GRAD_SUM` 32 | count, Σfᵢ acc, Σ∇fᵢ acc        |                |
+//! | s2c | `SHARD_ACK`      34 | committed round, client ids     | —              |
 //!
 //! `SHARD_ROUND`'s `sum` flag selects the reply: set (the FedNL/LS
 //! default) the relay **pre-reduces arithmetically** — it folds its
@@ -85,7 +89,30 @@
 //! id reconnects and re-registers (same id, d and family) on the
 //! master's retained listener; under FedNL-PP the master then resyncs
 //! the client's server-tracked (lᵢ, gᵢ) through the existing `STATE`
-//! pull on the fresh channel. No rejoin-specific tags exist.
+//! pull on the fresh channel.
+//!
+//! # Commit acks (exactly-once round application)
+//!
+//! A reply can be computed but lost (relay death, severed channel)
+//! between the client's compute and the master's commit — the client
+//! must not apply its own Hᵢ shift for a round the master never
+//! counted. Clients that register with the `REG_WANTS_ACK` flag
+//! therefore **stage** each round's Hᵢ shift and apply it only on the
+//! master's `ROUND_ACK` (carrying the committed round). On rejoin the
+//! master answers the re-`REGISTER` with `RESYNC`, naming the last
+//! round it committed for that id — the client applies a staged shift
+//! with `round ≤ last_commit` (reply delivered, ack lost) and discards
+//! anything newer (reply lost), closing both halves of the window with
+//! exactly-once semantics. The shard tier forwards acks as one
+//! `SHARD_ACK` (round + the partition's committed ids) per round, and
+//! only toward shards that registered a `wants_ack` downstream, so
+//! runs without failover clients ship zero extra bytes.
+//!
+//! A rejoiner that declares the `REG_FRESH` flag (new process, empty
+//! state) additionally triggers an **exact** Hᵢ resync: the master
+//! broadcasts `PULL_H` and every live FedNL client uploads its packed
+//! Hᵢ (a `WARM` reply; relays batch them as `SHARD_WARM`), letting the
+//! server rebuild H = (1/n)ΣHᵢ exactly instead of approximately.
 //!
 //! # Byte accounting
 //!
@@ -128,6 +155,22 @@ pub mod s2c {
     /// Shard tier: single-client STATE pull (PP rejoin resync); relay
     /// replies SHARD_PULLED.
     pub const SHARD_PULL: u8 = 22;
+    /// Commit ack: the master committed this round with the client's
+    /// reply counted — the client may apply its staged Hᵢ shift. Sent
+    /// only to clients that registered with `REG_WANTS_ACK`.
+    pub const ROUND_ACK: u8 = 33;
+    /// Shard-tier commit ack: (round, committed ids) fan-out; the
+    /// relay forwards per-client ROUND_ACKs (or nested SHARD_ACKs)
+    /// downward. Sent only to shards whose registration carried
+    /// `wants_ack`.
+    pub const SHARD_ACK: u8 = 34;
+    /// Rejoin resync: the last round the master committed for this id
+    /// (absent = none). Resolves the client's staged shift with
+    /// exactly-once semantics.
+    pub const RESYNC: u8 = 35;
+    /// Exact Hᵢ resync pull: a FedNL client uploads its packed Hᵢ as a
+    /// WARM reply (relays batch as SHARD_WARM). Empty payload.
+    pub const PULL_H: u8 = 36;
 }
 
 /// Frame tags, client → master.
@@ -253,29 +296,48 @@ pub fn decode_scalar(p: &[u8]) -> Result<f64> {
 pub const FAMILY_FEDNL: u8 = 0;
 pub const FAMILY_PP: u8 = 1;
 
-pub fn encode_register(client_id: u32, d: u32, family: u8) -> Vec<u8> {
-    let mut w = ByteWriter::with_capacity(9);
+/// REGISTER flag: the client stages round applications and expects
+/// `ROUND_ACK` / `RESYNC` (the commit-ack protocol; set by failover
+/// clients).
+pub const REG_WANTS_ACK: u8 = 1;
+/// REGISTER flag: the rejoiner restarted with empty state and needs
+/// the exact `PULL_H` resync (never set on a first registration).
+pub const REG_FRESH: u8 = 2;
+
+pub fn encode_register(
+    client_id: u32,
+    d: u32,
+    family: u8,
+    flags: u8,
+) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(10);
     w.put_u32(client_id);
     w.put_u32(d);
     w.put_u8(family);
+    w.put_u8(flags);
     w.into_vec()
 }
 
-pub fn decode_register(p: &[u8]) -> Result<(u32, u32, u8)> {
+pub fn decode_register(p: &[u8]) -> Result<(u32, u32, u8, u8)> {
     let mut r = ByteReader::new(p);
     let id = r.get_u32()?;
     let d = r.get_u32()?;
     let family = r.get_u8()?;
+    let flags = r.get_u8()?;
     anyhow::ensure!(
         family == FAMILY_FEDNL || family == FAMILY_PP,
         "bad client family {family}"
     );
-    Ok((id, d, family))
+    anyhow::ensure!(
+        flags & !(REG_WANTS_ACK | REG_FRESH) == 0,
+        "bad register flags {flags:#x}"
+    );
+    Ok((id, d, family, flags))
 }
 
-/// Framed size of a REGISTER frame (id + d + family byte).
+/// Framed size of a REGISTER frame (id + d + family + flags bytes).
 pub fn register_frame_bytes() -> u64 {
-    FRAME_HEADER_BYTES + 9
+    FRAME_HEADER_BYTES + 10
 }
 
 fn put_compressed(w: &mut ByteWriter, c: &Compressed) {
@@ -425,37 +487,142 @@ pub fn fold_alpha_echoes(
 // --- shard-tier codecs ----------------------------------------------------
 
 /// SHARD_REGISTER: a relay announces which contiguous global-id
-/// partition it aggregates.
+/// partition it aggregates. `flags` carries the OR of the partition's
+/// downstream REGISTER flags that matter upward (today just
+/// [`REG_WANTS_ACK`]: set iff some downstream client stages applies,
+/// so SHARD_ACK frames only flow where needed).
 pub fn encode_shard_register(
     shard_id: u32,
     base: u32,
     count: u32,
     d: u32,
     family: u8,
+    flags: u8,
 ) -> Vec<u8> {
-    let mut w = ByteWriter::with_capacity(17);
+    let mut w = ByteWriter::with_capacity(18);
     w.put_u32(shard_id);
     w.put_u32(base);
     w.put_u32(count);
     w.put_u32(d);
     w.put_u8(family);
+    w.put_u8(flags);
     w.into_vec()
 }
 
-/// Returns (shard_id, base, count, d, family).
-pub fn decode_shard_register(p: &[u8]) -> Result<(u32, u32, u32, u32, u8)> {
+/// Returns (shard_id, base, count, d, family, flags).
+pub fn decode_shard_register(
+    p: &[u8],
+) -> Result<(u32, u32, u32, u32, u8, u8)> {
     let mut r = ByteReader::new(p);
     let shard_id = r.get_u32()?;
     let base = r.get_u32()?;
     let count = r.get_u32()?;
     let d = r.get_u32()?;
     let family = r.get_u8()?;
+    let flags = r.get_u8()?;
     anyhow::ensure!(count > 0, "empty shard partition");
     anyhow::ensure!(
         family == FAMILY_FEDNL || family == FAMILY_PP,
         "bad shard family {family}"
     );
-    Ok((shard_id, base, count, d, family))
+    anyhow::ensure!(
+        flags & !REG_WANTS_ACK == 0,
+        "bad shard register flags {flags:#x}"
+    );
+    Ok((shard_id, base, count, d, family, flags))
+}
+
+// --- commit-ack / resync codecs -------------------------------------------
+
+/// ROUND_ACK: the round the master just committed (with this client's
+/// reply counted).
+pub fn encode_round_ack(round: u64) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(8);
+    w.put_u64(round);
+    w.into_vec()
+}
+
+pub fn decode_round_ack(p: &[u8]) -> Result<u64> {
+    ByteReader::new(p).get_u64()
+}
+
+/// Framed size of a ROUND_ACK frame.
+pub fn round_ack_frame_bytes() -> u64 {
+    FRAME_HEADER_BYTES + 8
+}
+
+/// SHARD_ACK: the committed round plus the partition's committed ids
+/// (global), for the relay to fan out downward.
+pub fn encode_shard_ack(round: u64, ids: &[u32]) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(12 + ids.len() * 4);
+    w.put_u64(round);
+    w.put_u32(ids.len() as u32);
+    w.put_u32_slice(ids);
+    w.into_vec()
+}
+
+pub fn decode_shard_ack(p: &[u8]) -> Result<(u64, Vec<u32>)> {
+    let mut r = ByteReader::new(p);
+    let round = r.get_u64()?;
+    let n = r.get_u32()? as usize;
+    Ok((round, r.get_u32_vec(n)?))
+}
+
+/// Framed size of a SHARD_ACK frame carrying `n` committed ids.
+pub fn shard_ack_frame_bytes(n: usize) -> u64 {
+    FRAME_HEADER_BYTES + 8 + 4 + 4 * n as u64
+}
+
+/// RESYNC: the last round the master committed for the rejoining id
+/// (`None` = it never committed one). The client resolves its staged
+/// apply against this watermark.
+pub fn encode_resync(last_commit: Option<u64>) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(9);
+    match last_commit {
+        Some(r) => {
+            w.put_u8(1);
+            w.put_u64(r);
+        }
+        None => {
+            w.put_u8(0);
+            w.put_u64(0);
+        }
+    }
+    w.into_vec()
+}
+
+pub fn decode_resync(p: &[u8]) -> Result<Option<u64>> {
+    let mut r = ByteReader::new(p);
+    let has = r.get_u8()? != 0;
+    let round = r.get_u64()?;
+    Ok(if has { Some(round) } else { None })
+}
+
+/// Framed size of a RESYNC frame.
+pub fn resync_frame_bytes() -> u64 {
+    FRAME_HEADER_BYTES + 9
+}
+
+/// Shard-directed RESYNC: the relay command variant carrying the
+/// target client id ahead of the watermark (the relay routes it down
+/// its tier until the leaf pool emits the 9-byte client RESYNC).
+pub fn encode_shard_resync(
+    client: u32,
+    last_commit: Option<u64>,
+) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(13);
+    w.put_u32(client);
+    let rest = encode_resync(last_commit);
+    w.put_bytes(&rest);
+    w.into_vec()
+}
+
+pub fn decode_shard_resync(p: &[u8]) -> Result<(u32, Option<u64>)> {
+    anyhow::ensure!(p.len() == 13, "bad shard resync len {}", p.len());
+    let mut r = ByteReader::new(p);
+    let client = r.get_u32()?;
+    let lc = decode_resync(&p[4..])?;
+    Ok((client, lc))
 }
 
 /// SHARD_ROUND: the relay-facing round command. `sum` selects the
@@ -678,24 +845,37 @@ pub fn decode_vec_batch(p: &[u8]) -> Result<Vec<Vec<f64>>> {
     Ok(out)
 }
 
-/// SHARD_PREPPED: (rejoined ids, dead ids) liveness report.
-pub fn encode_shard_prepped(rejoined: &[u32], dead: &[u32]) -> Vec<u8> {
-    let mut w =
-        ByteWriter::with_capacity(8 + (rejoined.len() + dead.len()) * 4);
+/// SHARD_PREPPED: (rejoined ids, dead ids, fresh-rejoined ids)
+/// liveness report. `fresh` ⊆ `rejoined`: the rejoiners that came
+/// back with `REG_FRESH` (blank Hᵢ) and need the packed-H resync
+/// instead of the warm-start approximation.
+pub fn encode_shard_prepped(
+    rejoined: &[u32],
+    dead: &[u32],
+    fresh: &[u32],
+) -> Vec<u8> {
+    let n = rejoined.len() + dead.len() + fresh.len();
+    let mut w = ByteWriter::with_capacity(12 + n * 4);
     w.put_u32(rejoined.len() as u32);
     w.put_u32_slice(rejoined);
     w.put_u32(dead.len() as u32);
     w.put_u32_slice(dead);
+    w.put_u32(fresh.len() as u32);
+    w.put_u32_slice(fresh);
     w.into_vec()
 }
 
-pub fn decode_shard_prepped(p: &[u8]) -> Result<(Vec<u32>, Vec<u32>)> {
+pub fn decode_shard_prepped(
+    p: &[u8],
+) -> Result<(Vec<u32>, Vec<u32>, Vec<u32>)> {
     let mut r = ByteReader::new(p);
     let nr = r.get_u32()? as usize;
     let rejoined = r.get_u32_vec(nr)?;
     let nd = r.get_u32()? as usize;
     let dead = r.get_u32_vec(nd)?;
-    Ok((rejoined, dead))
+    let nf = r.get_u32()? as usize;
+    let fresh = r.get_u32_vec(nf)?;
+    Ok((rejoined, dead, fresh))
 }
 
 /// SHARD_PULLED: one client's (lᵢ, gᵢ) if it was still reachable.
@@ -848,14 +1028,65 @@ mod tests {
         );
         assert_eq!(
             register_frame_bytes(),
-            encode_register(3, 7, FAMILY_PP).len() as u64
+            encode_register(3, 7, FAMILY_PP, 0).len() as u64
                 + FRAME_HEADER_BYTES
         );
         assert_eq!(empty_frame_bytes(), FRAME_HEADER_BYTES);
-        let (id, d, fam) =
-            decode_register(&encode_register(3, 7, FAMILY_PP)).unwrap();
-        assert_eq!((id, d, fam), (3, 7, FAMILY_PP));
-        assert!(decode_register(&encode_register(1, 2, 9)).is_err());
+        let (id, d, fam, flags) =
+            decode_register(&encode_register(3, 7, FAMILY_PP, 0)).unwrap();
+        assert_eq!((id, d, fam, flags), (3, 7, FAMILY_PP, 0));
+        assert!(decode_register(&encode_register(1, 2, 9, 0)).is_err());
+    }
+
+    #[test]
+    fn register_flags_roundtrip_and_validate() {
+        let flags = REG_WANTS_ACK | REG_FRESH;
+        let (id, d, fam, got) =
+            decode_register(&encode_register(5, 3, FAMILY_FEDNL, flags))
+                .unwrap();
+        assert_eq!((id, d, fam, got), (5, 3, FAMILY_FEDNL, flags));
+        // Unknown flag bits are a protocol error, not silently ignored.
+        assert!(decode_register(&encode_register(5, 3, FAMILY_FEDNL, 4))
+            .is_err());
+        // The old 9-byte REGISTER (no flags byte) no longer parses.
+        assert!(decode_register(&[0, 0, 0, 0, 3, 0, 0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn ack_resync_codecs_roundtrip() {
+        assert_eq!(decode_round_ack(&encode_round_ack(17)).unwrap(), 17);
+        assert_eq!(
+            round_ack_frame_bytes(),
+            encode_round_ack(17).len() as u64 + FRAME_HEADER_BYTES
+        );
+        let (r, ids) =
+            decode_shard_ack(&encode_shard_ack(9, &[2, 5, 3])).unwrap();
+        assert_eq!(r, 9);
+        assert_eq!(ids, vec![2, 5, 3]);
+        assert_eq!(
+            shard_ack_frame_bytes(3),
+            encode_shard_ack(9, &[2, 5, 3]).len() as u64
+                + FRAME_HEADER_BYTES
+        );
+        assert_eq!(
+            decode_resync(&encode_resync(Some(4))).unwrap(),
+            Some(4)
+        );
+        assert_eq!(decode_resync(&encode_resync(None)).unwrap(), None);
+        assert_eq!(
+            resync_frame_bytes(),
+            encode_resync(None).len() as u64 + FRAME_HEADER_BYTES
+        );
+        let (c, lc) =
+            decode_shard_resync(&encode_shard_resync(7, Some(3))).unwrap();
+        assert_eq!((c, lc), (7, Some(3)));
+        let (c, lc) =
+            decode_shard_resync(&encode_shard_resync(2, None)).unwrap();
+        assert_eq!((c, lc), (2, None));
+        assert!(decode_round_ack(&[1]).is_err());
+        assert!(decode_shard_ack(&[1, 2]).is_err());
+        assert!(decode_resync(&[]).is_err());
+        assert!(decode_shard_resync(&[0, 0, 0, 0, 1]).is_err());
     }
 
     #[test]
@@ -916,18 +1147,36 @@ mod tests {
 
     #[test]
     fn shard_register_roundtrip() {
-        let enc = encode_shard_register(2, 6, 3, 21, FAMILY_PP);
-        let (sid, base, count, d, fam) =
+        let enc =
+            encode_shard_register(2, 6, 3, 21, FAMILY_PP, REG_WANTS_ACK);
+        let (sid, base, count, d, fam, flags) =
             decode_shard_register(&enc).unwrap();
-        assert_eq!((sid, base, count, d, fam), (2, 6, 3, 21, FAMILY_PP));
+        assert_eq!(
+            (sid, base, count, d, fam, flags),
+            (2, 6, 3, 21, FAMILY_PP, REG_WANTS_ACK)
+        );
         assert!(decode_shard_register(&encode_shard_register(
-            0, 0, 0, 4, FAMILY_FEDNL
+            0,
+            0,
+            0,
+            4,
+            FAMILY_FEDNL,
+            0
         ))
         .is_err()); // empty partition
         assert!(decode_shard_register(&encode_shard_register(
-            0, 0, 2, 4, 9
+            0, 0, 2, 4, 9, 0
         ))
         .is_err()); // bad family
+        assert!(decode_shard_register(&encode_shard_register(
+            0,
+            0,
+            2,
+            4,
+            FAMILY_FEDNL,
+            REG_FRESH
+        ))
+        .is_err()); // fresh is not a shard-level flag
     }
 
     #[test]
@@ -1073,13 +1322,15 @@ mod tests {
             decode_vec_batch(&encode_vec_batch(&warms)).unwrap(),
             warms
         );
-        let (rj, dd) = decode_shard_prepped(&encode_shard_prepped(
+        let (rj, dd, fr) = decode_shard_prepped(&encode_shard_prepped(
             &[3, 1],
             &[7],
+            &[1],
         ))
         .unwrap();
         assert_eq!(rj, vec![3, 1]);
         assert_eq!(dd, vec![7]);
+        assert_eq!(fr, vec![1]);
         assert_eq!(
             decode_shard_pulled(&encode_shard_pulled(None)).unwrap(),
             None

@@ -372,3 +372,151 @@ fn event_pool_registers_10k_mux_clients() {
     assert!(t.last_grad_norm().is_finite());
     assert!(idle <= 4096.0, "idle bookkeeping {idle:.1} B/client");
 }
+
+#[test]
+fn event_leaf_relay_tree_killrelay_heals_bit_identical() {
+    // The failover tentpole on the readiness transport: the same
+    // depth-3 tree as the blocking-TCP test — master ← parent P
+    // (`--parent 2`) ← child relays A, B — but every *leaf* relay
+    // serves its clients through an `--event` downward face (the
+    // inner node P must stay blocking; `--parent` and `--event` are
+    // exclusive). `killrelay@4:0` severs P mid-run, the orphaned
+    // clients rotate to `--fallback` and the master adopts them; the
+    // healed trajectory must be bit-identical to the flat desugared
+    // plan, with losses confined to the kill round.
+    use fednl::coordinator::shard;
+    use fednl::net::{
+        run_client_with, run_relay_on, ClientOpts, RelayCfg, RelayPool,
+    };
+
+    let ds = dataset(8, 120, 53);
+    let d = ds.d;
+    const N: usize = 6;
+    let x0 = vec![0.0; d];
+    let plan = FaultPlan::parse("killrelay@4:0").unwrap();
+    let opts = Options {
+        rounds: 14,
+        policy: RoundPolicy {
+            quorum: Some(3),
+            deadline_ms: Some(2000),
+            on_missing: OnMissing::Drop,
+        },
+        ..Default::default()
+    };
+
+    let mut flat = FaultPool::with_shard_layout(
+        SeqPool::new(fednl_clients(&ds, N, "topk")),
+        plan.clone(),
+        2,
+    );
+    let t_flat =
+        run_fednl_pool(&mut flat, &opts, x0.clone(), "evtree-flat");
+
+    let master = Bound::bind("127.0.0.1:0").unwrap();
+    let master_addr = master.local_addr().unwrap().to_string();
+    let mut shards_by_id: Vec<Option<fednl::data::ClientShard>> =
+        ds.split_even(N).unwrap().into_iter().map(Some).collect();
+    let mut relays = Vec::new();
+    let mut clients = Vec::new();
+
+    let p_bound = Bound::bind("127.0.0.1:0").unwrap();
+    let p_addr = p_bound.local_addr().unwrap().to_string();
+    let pcfg = RelayCfg {
+        shard_id: 0,
+        base: 0,
+        count: 3,
+        listen: String::new(),
+        connect: master_addr.clone(),
+        children: Some(2),
+        ..Default::default()
+    };
+    relays.push(std::thread::spawn(move || run_relay_on(p_bound, &pcfg)));
+
+    let mut leaves: Vec<(u32, u32, String)> = Vec::new();
+    for (s, &(lo, hi)) in shard::partition(3, 2).iter().enumerate() {
+        let leaf_bound = Bound::bind("127.0.0.1:0").unwrap();
+        let leaf_addr = leaf_bound.local_addr().unwrap().to_string();
+        let rcfg = RelayCfg {
+            shard_id: s as u32,
+            base: lo,
+            count: (hi - lo) as usize,
+            listen: String::new(),
+            connect: p_addr.clone(),
+            event: true,
+            ..Default::default()
+        };
+        relays.push(std::thread::spawn(move || {
+            run_relay_on(leaf_bound, &rcfg)
+        }));
+        leaves.push((lo, hi, leaf_addr));
+    }
+    let c_bound = Bound::bind("127.0.0.1:0").unwrap();
+    let c_addr = c_bound.local_addr().unwrap().to_string();
+    let ccfg = RelayCfg {
+        shard_id: 1,
+        base: 3,
+        count: 3,
+        listen: String::new(),
+        connect: master_addr.clone(),
+        event: true,
+        ..Default::default()
+    };
+    relays.push(std::thread::spawn(move || run_relay_on(c_bound, &ccfg)));
+    leaves.push((3, 6, c_addr));
+
+    for (lo, hi, leaf_addr) in leaves {
+        for ci in lo..hi {
+            let sh = shards_by_id[ci as usize].take().unwrap();
+            let addr = leaf_addr.clone();
+            let fallback = master_addr.clone();
+            let comp = by_name("topk", d, 8, 100 + ci as u64).unwrap();
+            clients.push(std::thread::spawn(move || {
+                let id = sh.client_id;
+                let oracle = Box::new(LogisticOracle::new(sh, 1e-3));
+                run_client_with(
+                    &addr,
+                    id,
+                    ClientMode::FedNL(ClientState::new(
+                        id, oracle, comp, None,
+                    )),
+                    ClientOpts {
+                        fallback: vec![fallback],
+                        ..Default::default()
+                    },
+                )
+            }));
+        }
+    }
+    let mut pool =
+        FaultPool::new(RelayPool::accept(master, 2).unwrap(), plan);
+    let t_tree = run_fednl_pool(&mut pool, &opts, x0, "evtree-kill");
+    pool.into_inner().shutdown();
+    for h in relays {
+        h.join().unwrap().unwrap();
+    }
+    for h in clients {
+        h.join().unwrap().unwrap();
+    }
+
+    assert_eq!(t_flat.records.len(), t_tree.records.len());
+    for (a, b) in t_flat.records.iter().zip(&t_tree.records) {
+        assert_eq!(
+            a.grad_norm.to_bits(),
+            b.grad_norm.to_bits(),
+            "round {}",
+            a.round
+        );
+        assert_eq!((a.committed, a.missing), (b.committed, b.missing));
+    }
+    for r in &t_tree.records {
+        let expect = if r.round == 4 { (3, 3) } else { (6, 0) };
+        assert_eq!((r.committed, r.missing), expect, "round {}", r.round);
+    }
+    let first = t_tree.records[0].grad_norm;
+    assert!(
+        t_tree.last_grad_norm() < first * 1e-2,
+        "{} -> {}",
+        first,
+        t_tree.last_grad_norm()
+    );
+}

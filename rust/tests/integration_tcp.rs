@@ -391,7 +391,11 @@ fn spawn_relay_tier(
     master_addr: &str,
     pp: bool,
 ) -> (
-    Vec<std::thread::JoinHandle<anyhow::Result<fednl::net::relay::RelayReport>>>,
+    Vec<
+        std::thread::JoinHandle<
+            anyhow::Result<fednl::net::relay::RelayReport>,
+        >,
+    >,
     Vec<std::thread::JoinHandle<anyhow::Result<(u64, u64)>>>,
 ) {
     let d = ds.d;
@@ -409,7 +413,7 @@ fn spawn_relay_tier(
             count: (hi - lo) as usize,
             listen: String::new(),
             connect: master_addr.to_string(),
-            event: false,
+            ..Default::default()
         };
         relay_handles.push(std::thread::spawn(move || {
             run_relay_on(relay_bound, &rcfg)
@@ -708,6 +712,7 @@ fn tcp_graceful_leave_then_rejoin() {
             let oracle = Box::new(LogisticOracle::new(shard, 1e-3));
             let opts = ClientOpts {
                 leave_after_rounds: if id == 2 { Some(2) } else { None },
+                ..Default::default()
             };
             run_client_with(
                 &addr,
@@ -819,7 +824,7 @@ fn tcp_reply_deadline_deregisters_straggler() {
             let mut ch = Channel::new(stream).unwrap();
             ch.send(
                 c2s::REGISTER,
-                &wire::encode_register(2, d as u32, wire::FAMILY_FEDNL),
+                &wire::encode_register(2, d as u32, wire::FAMILY_FEDNL, 0),
             )
             .unwrap();
             loop {
@@ -909,4 +914,304 @@ fn duplicate_client_id_rejected() {
     // The client threads will error out when the master drops; ignore.
     let _ = h1.join();
     let _ = h2.join();
+}
+
+/// Spawn the failover depth-3 tree against `master_addr`: parent
+/// relay P (`--parent 2`, master shard 0, ids 0..3) over child relays
+/// A = [0,2) and B = [2,3), plus leaf relay C (master shard 1, ids
+/// 3..6) — every client carrying `--fallback master_addr` so a severed
+/// subtree rotates to the master and is adopted.
+#[allow(clippy::type_complexity)]
+fn spawn_relay_tree(
+    ds: &Dataset,
+    comp: &str,
+    master_addr: &str,
+) -> (
+    Vec<
+        std::thread::JoinHandle<
+            anyhow::Result<fednl::net::relay::RelayReport>,
+        >,
+    >,
+    Vec<std::thread::JoinHandle<anyhow::Result<(u64, u64)>>>,
+) {
+    let d = ds.d;
+    let mut shards_by_id: Vec<Option<fednl::data::ClientShard>> =
+        ds.split_even(6).unwrap().into_iter().map(Some).collect();
+    let mut relays = Vec::new();
+    let mut clients = Vec::new();
+
+    let p_bound = Bound::bind("127.0.0.1:0").unwrap();
+    let p_addr = p_bound.local_addr().unwrap().to_string();
+    let pcfg = RelayCfg {
+        shard_id: 0,
+        base: 0,
+        count: 3,
+        listen: String::new(),
+        connect: master_addr.to_string(),
+        children: Some(2),
+        ..Default::default()
+    };
+    relays.push(std::thread::spawn(move || run_relay_on(p_bound, &pcfg)));
+
+    let mut leaves: Vec<(u32, u32, String)> = Vec::new();
+    for (s, &(lo, hi)) in shard::partition(3, 2).iter().enumerate() {
+        let leaf_bound = Bound::bind("127.0.0.1:0").unwrap();
+        let leaf_addr = leaf_bound.local_addr().unwrap().to_string();
+        let rcfg = RelayCfg {
+            shard_id: s as u32,
+            base: lo,
+            count: (hi - lo) as usize,
+            listen: String::new(),
+            connect: p_addr.clone(),
+            ..Default::default()
+        };
+        relays.push(std::thread::spawn(move || {
+            run_relay_on(leaf_bound, &rcfg)
+        }));
+        leaves.push((lo, hi, leaf_addr));
+    }
+    let c_bound = Bound::bind("127.0.0.1:0").unwrap();
+    let c_addr = c_bound.local_addr().unwrap().to_string();
+    let ccfg = RelayCfg {
+        shard_id: 1,
+        base: 3,
+        count: 3,
+        listen: String::new(),
+        connect: master_addr.to_string(),
+        ..Default::default()
+    };
+    relays.push(std::thread::spawn(move || run_relay_on(c_bound, &ccfg)));
+    leaves.push((3, 6, c_addr));
+
+    for (lo, hi, leaf_addr) in leaves {
+        for ci in lo..hi {
+            let sh = shards_by_id[ci as usize].take().unwrap();
+            let addr = leaf_addr.clone();
+            let fallback = master_addr.to_string();
+            let comp = by_name(comp, d, 8, 100 + ci as u64).unwrap();
+            clients.push(std::thread::spawn(move || {
+                let id = sh.client_id;
+                let oracle = Box::new(LogisticOracle::new(sh, 1e-3));
+                run_client_with(
+                    &addr,
+                    id,
+                    ClientMode::FedNL(ClientState::new(
+                        id, oracle, comp, None,
+                    )),
+                    ClientOpts {
+                        fallback: vec![fallback],
+                        ..Default::default()
+                    },
+                )
+            }));
+        }
+    }
+    (relays, clients)
+}
+
+#[test]
+fn tcp_relay_tree_killrelay_heals_bit_identical() {
+    // The failover tentpole over real sockets: `killrelay@4:0` severs
+    // the inner node P of a depth-3 tree mid-run; its subtree (both
+    // child relays and their 3 clients) dies by upward-EOF
+    // propagation, the orphans rotate to `--fallback` and the master
+    // adopts them at the next prepare_round. The healed trajectory
+    // must be bit-identical to the same plan desugared on a flat
+    // sequential pool, with losses confined to the kill round.
+    let ds = dataset(8, 120, 51);
+    let d = ds.d;
+    const N: usize = 6;
+    let x0 = vec![0.0; d];
+    let plan = FaultPlan::parse("killrelay@4:0").unwrap();
+    let opts = Options {
+        rounds: 14,
+        policy: RoundPolicy {
+            quorum: Some(3),
+            deadline_ms: Some(2000),
+            on_missing: OnMissing::Drop,
+        },
+        ..Default::default()
+    };
+
+    let flat_clients: Vec<ClientState> = ds
+        .split_even(N)
+        .unwrap()
+        .into_iter()
+        .map(|sh| {
+            let id = sh.client_id;
+            ClientState::new(
+                id,
+                Box::new(LogisticOracle::new(sh, 1e-3)),
+                by_name("topk", d, 8, 100 + id as u64).unwrap(),
+                None,
+            )
+        })
+        .collect();
+    let mut flat = FaultPool::with_shard_layout(
+        SeqPool::new(flat_clients),
+        plan.clone(),
+        2,
+    );
+    let t_flat = run_fednl_pool(&mut flat, &opts, x0.clone(), "tree-flat");
+
+    let master = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = master.local_addr().unwrap().to_string();
+    let (relays, clients) = spawn_relay_tree(&ds, "topk", &addr);
+    let mut pool =
+        FaultPool::new(RelayPool::accept(master, 2).unwrap(), plan);
+    let t_tree = run_fednl_pool(&mut pool, &opts, x0, "tree-kill");
+    pool.into_inner().shutdown();
+    for h in relays {
+        h.join().unwrap().unwrap();
+    }
+    for h in clients {
+        h.join().unwrap().unwrap();
+    }
+
+    assert_eq!(t_flat.records.len(), t_tree.records.len());
+    for (a, b) in t_flat.records.iter().zip(&t_tree.records) {
+        assert_eq!(
+            a.grad_norm.to_bits(),
+            b.grad_norm.to_bits(),
+            "round {}",
+            a.round
+        );
+        assert_eq!((a.committed, a.missing), (b.committed, b.missing));
+    }
+    // Exactly P's partition, exactly the kill round; healed after.
+    for r in &t_flat.records {
+        let expect = if r.round == 4 { (3, 3) } else { (6, 0) };
+        assert_eq!((r.committed, r.missing), expect, "round {}", r.round);
+    }
+    let first = t_flat.records[0].grad_norm;
+    assert!(
+        t_flat.last_grad_norm() < first * 1e-2,
+        "{} -> {}",
+        first,
+        t_flat.last_grad_norm()
+    );
+}
+
+#[test]
+fn tcp_relay_die_after_round_discards_staged_exactly_once() {
+    // The commit-ack reply-lost window end to end: relay 0 fans round
+    // 4 to its partition (every client computes and *stages* under
+    // commit-ack), drains the replies, then dies without forwarding
+    // upward. The master certifies the partition missing for round 4
+    // in the same round (EOF sweep), adopts the orphans at round 5,
+    // and the rejoin RESYNC carries watermark 3 — so the staged round
+    // 4 is discarded, never double-applied. The run must be
+    // bit-identical to `killrelay@4:0` desugared flat, where those
+    // clients never computed round 4 at all: exactly-once either way.
+    let ds = dataset(8, 120, 52);
+    let d = ds.d;
+    const N: usize = 6;
+    let x0 = vec![0.0; d];
+    let opts = Options {
+        rounds: 12,
+        policy: RoundPolicy {
+            quorum: Some(3),
+            deadline_ms: Some(2000),
+            on_missing: OnMissing::Drop,
+        },
+        ..Default::default()
+    };
+
+    let plan = FaultPlan::parse("killrelay@4:0").unwrap();
+    let flat_clients: Vec<ClientState> = ds
+        .split_even(N)
+        .unwrap()
+        .into_iter()
+        .map(|sh| {
+            let id = sh.client_id;
+            ClientState::new(
+                id,
+                Box::new(LogisticOracle::new(sh, 1e-3)),
+                by_name("topk", d, 8, 100 + id as u64).unwrap(),
+                None,
+            )
+        })
+        .collect();
+    let mut flat = FaultPool::with_shard_layout(
+        SeqPool::new(flat_clients),
+        plan,
+        2,
+    );
+    let t_flat = run_fednl_pool(&mut flat, &opts, x0.clone(), "die-flat");
+
+    // Flat S=2 relay tier; relay 0 scripted to die after round 4.
+    let master = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = master.local_addr().unwrap().to_string();
+    let mut shards_by_id: Vec<Option<fednl::data::ClientShard>> =
+        ds.split_even(N).unwrap().into_iter().map(Some).collect();
+    let mut relays = Vec::new();
+    let mut clients = Vec::new();
+    for (s, &(lo, hi)) in shard::partition(N, 2).iter().enumerate() {
+        let relay_bound = Bound::bind("127.0.0.1:0").unwrap();
+        let relay_addr = relay_bound.local_addr().unwrap().to_string();
+        let rcfg = RelayCfg {
+            shard_id: s as u32,
+            base: lo,
+            count: (hi - lo) as usize,
+            listen: String::new(),
+            connect: addr.clone(),
+            die_after_round: if s == 0 { Some(4) } else { None },
+            ..Default::default()
+        };
+        relays.push(std::thread::spawn(move || {
+            run_relay_on(relay_bound, &rcfg)
+        }));
+        for ci in lo..hi {
+            let sh = shards_by_id[ci as usize].take().unwrap();
+            let caddr = relay_addr.clone();
+            let fallback = addr.clone();
+            let comp = by_name("topk", d, 8, 100 + ci as u64).unwrap();
+            clients.push(std::thread::spawn(move || {
+                let id = sh.client_id;
+                let oracle = Box::new(LogisticOracle::new(sh, 1e-3));
+                run_client_with(
+                    &caddr,
+                    id,
+                    ClientMode::FedNL(ClientState::new(
+                        id, oracle, comp, None,
+                    )),
+                    ClientOpts {
+                        fallback: vec![fallback],
+                        ..Default::default()
+                    },
+                )
+            }));
+        }
+    }
+    let mut pool = RelayPool::accept(master, 2).unwrap();
+    let t_die = run_fednl_pool(&mut pool, &opts, x0, "die-relay");
+    pool.shutdown();
+    for h in relays {
+        h.join().unwrap().unwrap();
+    }
+    for h in clients {
+        h.join().unwrap().unwrap();
+    }
+
+    assert_eq!(t_flat.records.len(), t_die.records.len());
+    for (a, b) in t_flat.records.iter().zip(&t_die.records) {
+        assert_eq!(
+            a.grad_norm.to_bits(),
+            b.grad_norm.to_bits(),
+            "round {}",
+            a.round
+        );
+        assert_eq!((a.committed, a.missing), (b.committed, b.missing));
+    }
+    for r in &t_die.records {
+        let expect = if r.round == 4 { (3, 3) } else { (6, 0) };
+        assert_eq!((r.committed, r.missing), expect, "round {}", r.round);
+    }
+    let first = t_die.records[0].grad_norm;
+    assert!(
+        t_die.last_grad_norm() < first * 1e-2,
+        "{} -> {}",
+        first,
+        t_die.last_grad_norm()
+    );
 }
