@@ -758,6 +758,36 @@ fn main() {
             grad_bits[0], grad_bits[1],
             "speculative trajectory diverged from the inline path"
         );
+        // Defense-overhead A/B (`--defense median` vs off) on the same
+        // clean problem as the seq/threaded rows: enabling a robust
+        // fold pays for the atom round path (per-client commits
+        // instead of pre-reduced sums) plus the coordinate-wise
+        // total_cmp sort at the master. Both rows are gated generously
+        // by ci/check_bench.py so a pathological fold regression fails
+        // the bench job.
+        for defense in [None, Some(fednl::robust::Defense::Median)] {
+            let opts_d = Options {
+                rounds,
+                track_loss: true,
+                defense,
+                ..Default::default()
+            };
+            let (label, row) = if defense.is_some() {
+                ("coord/defense", "defense/median")
+            } else {
+                ("coord/nodefense", "defense/off")
+            };
+            let mut pool = ThreadedPool::new(make(), 0);
+            let tr = run_fednl_pool(&mut pool, &opts_d, vec![0.0; dd], label);
+            results.push(CoordRun {
+                pool: row.to_string(),
+                wait_s: tr.wait_secs,
+                aggregate_s: tr.aggregate_secs,
+                overlap_s: tr.overlap_secs,
+                total_s: tr.total_elapsed(),
+                idle_client_bytes: None,
+            });
+        }
         // Readiness-transport scaling row: 100k multiplexed clients
         // over 16 loopback group sockets through one EventPool master
         // (tiny per-client problem — the measured quantity is the

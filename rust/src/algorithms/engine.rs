@@ -97,6 +97,7 @@ use crate::linalg::{vector, Cholesky, Mat};
 use crate::metrics::{RoundRecord, Trace};
 use crate::net::wire;
 use crate::rng::{sample_distinct, Pcg64, Rng};
+use crate::robust::Defense;
 use crate::utils::Stopwatch;
 
 /// What the master does with an aggregated round (the only part of the
@@ -461,10 +462,13 @@ fn run_newton_family(
     // Reply-aggregation mode: the reproducible summation layer makes
     // the round sum grouping-invariant, so the default is pre-reduced
     // sums — shard tiers then forward one merged accumulator per shard
-    // (O(S·d) fan-in). Reuse is the one policy that still needs atom
-    // visibility (it replays cached per-client messages); exactness
-    // guarantees both paths produce bit-identical trajectories.
-    let sum_mode = rp.on_missing != OnMissing::Reuse;
+    // (O(S·d) fan-in). Two features still need atom visibility: Reuse
+    // (it replays cached per-client messages) and `--defense` (robust
+    // folds are per-client or non-associative; see `crate::robust`).
+    // Exactness guarantees both paths produce bit-identical
+    // trajectories.
+    let sum_mode =
+        rp.on_missing != OnMissing::Reuse && opts.defense.is_none();
     pool.set_round_mode(if sum_mode {
         RoundMode::Sums
     } else {
@@ -541,6 +545,11 @@ fn run_newton_family(
         // the commit-ack recipients. A Reuse replay is *committed*
         // (trace accounting) but never acked: the client did not
         // deliver the round, so its watermark must not advance.
+        //
+        // `flagged`: contributions the defense altered or excluded
+        // this round (NormClip: clipped messages; trimmed mean: 2F;
+        // median: m−1). Always 0 when undefended.
+        let mut flagged = 0u32;
         let (committed, missing, acked) = if sum_mode {
             let mut committed_live = 0usize;
             let (c, mut missing_ids) =
@@ -568,15 +577,44 @@ fn run_newton_family(
             (c, missing_ids.len(), acked)
         } else {
             let mut buf = CommitBuffer::new(n, None);
-            drain_and_commit(
+            // Round buffer for the non-associative defenses: the
+            // committed messages are folded into one synthetic
+            // sum-equivalent message after the round closes (see
+            // `crate::robust`). NormClip stays streaming — each
+            // commit is clipped (or passed through untouched) and
+            // absorbed immediately.
+            let mut robust_buf: Vec<ClientMsg> = Vec::new();
+            let res = drain_and_commit(
                 pool,
                 &mut buf,
                 &rp,
                 Some(&mut reuse_cache),
                 &mut bytes_up,
                 &mut timing,
-                |m| server.apply_msg(m),
-            )
+                |m| match opts.defense {
+                    Some(Defense::NormClip(tau)) => {
+                        match crate::robust::clip(m, tau) {
+                            Some(clipped) => {
+                                flagged += 1;
+                                server.apply_msg(&clipped);
+                            }
+                            None => server.apply_msg(m),
+                        }
+                    }
+                    Some(_) => robust_buf.push(m.clone()),
+                    None => server.apply_msg(m),
+                },
+            );
+            if let Some(def) = opts.defense {
+                if !def.is_per_client() && !robust_buf.is_empty() {
+                    let (synth, fl) = def
+                        .aggregate(&robust_buf)
+                        .expect("defense fold failed");
+                    flagged = fl;
+                    server.apply_msg(&synth);
+                }
+            }
+            res
         };
         check_quorum(&rp, committed, n, round, label);
         // Announce the round's commit to the repliers it counted and
@@ -622,6 +660,7 @@ fn run_newton_family(
             elapsed: sw.elapsed_secs(),
             committed: committed as u32,
             missing: missing as u32,
+            flagged,
         });
         if let Some(tol) = opts.tol_grad {
             if gnorm <= tol {
@@ -681,6 +720,15 @@ fn run_pp(
 ) -> Trace {
     let n = pool.n_clients();
     assert!(tau >= 1 && tau <= n, "tau must be in [1, n]");
+    // PP aggregates *deltas* into persistent state; a robust fold of
+    // deltas does not defend the accumulated (Hᵏ, lᵏ, gᵏ), so the
+    // combination is rejected rather than silently half-applied. The
+    // CLI surfaces the same error before data loading.
+    assert!(
+        opts.defense.is_none(),
+        "--defense supports the Newton family (fednl, fednl-ls) only, \
+         not FedNL-PP"
+    );
     assert_eq!(
         pool.family(),
         ClientFamily::PP,
@@ -834,6 +882,7 @@ fn run_pp(
             elapsed: sw.elapsed_secs(),
             committed: committed as u32,
             missing: missing as u32,
+            flagged: 0,
         });
         if let Some(tol) = opts.tol_grad {
             if gnorm <= tol {
@@ -1291,6 +1340,7 @@ mod tests {
             n_samples: n * 24,
             density: 0.6,
             noise: 1.0,
+            label_bias: 0.0,
             seed,
         };
         let synth = generate_synthetic(&spec);

@@ -193,6 +193,7 @@ mod tests {
             n_samples: n * 40,
             density: 0.6,
             noise: 1.0,
+            label_bias: 0.0,
             seed,
         };
         let synth = generate_synthetic(&spec);

@@ -64,6 +64,14 @@ pub struct Options {
     /// speculation is discarded and the round finishes inline —
     /// bit-identical to the non-speculative trajectory either way.
     pub speculate: bool,
+    /// Byzantine-robust server-side aggregation (`--defense`): the
+    /// committed round is folded through the selected
+    /// [`crate::robust::Defense`] before the server state update.
+    /// Median/trimmed-mean are not associative, so any defense forces
+    /// the atom [`crate::coordinator::RoundMode`] (shards forward
+    /// per-client atoms; speculation, a sum-path feature, never
+    /// engages). Newton family only — FedNL-PP rejects it.
+    pub defense: Option<crate::robust::Defense>,
 }
 
 impl Default for Options {
@@ -77,6 +85,7 @@ impl Default for Options {
             warm_start: false,
             policy: RoundPolicy::default(),
             speculate: false,
+            defense: None,
         }
     }
 }

@@ -43,6 +43,7 @@ pub fn run_gd(
             // Baseline reductions are all-or-nothing: full rounds only.
             committed: n as u32,
             missing: 0,
+            flagged: 0,
         });
         if gnorm <= opts.tol_grad {
             break;
@@ -78,6 +79,7 @@ pub(crate) mod tests {
             n_samples: n * 40,
             density: 0.7,
             noise: 1.0,
+            label_bias: 0.0,
             seed,
         };
         let synth = generate_synthetic(&spec);

@@ -46,6 +46,7 @@ pub fn run_lbfgs(
             // Baseline reductions are all-or-nothing: full rounds only.
             committed: n as u32,
             missing: 0,
+            flagged: 0,
         });
         if gnorm <= opts.tol_grad {
             break;

@@ -43,6 +43,7 @@ pub fn run_nesterov(
             // Baseline reductions are all-or-nothing: full rounds only.
             committed: n as u32,
             missing: 0,
+            flagged: 0,
         });
         if gnorm <= opts.tol_grad {
             break;

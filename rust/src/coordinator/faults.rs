@@ -36,6 +36,21 @@
 //!   ([`ClientPool::kill_shard`]), so clients fail over to the master
 //!   and the partition-adoption path runs end-to-end — with a
 //!   trajectory bit-identical to the desugared flat reference.
+//! * `corrupt@R:C:MODE` — client C turns **Byzantine** for round R:
+//!   its reply is mutated in the wrapper before commit. MODE is one of
+//!   `scale:K` (gradient and Hessian update scaled by K), `signflip`
+//!   (both negated), `garbage` (both replaced by a seeded random
+//!   payload — the PRG seed is a pure function of (round, client), so
+//!   the garbage is the same bytes on every transport) or `zero`
+//!   (both zeroed; the message still arrives, distinguishing a silent
+//!   attacker from a crash). `l_i` and the optional loss stay honest:
+//!   the schema corrupts exactly the aggregated model quantities, so
+//!   defenses are evaluated against the update channel they guard.
+//!   A corruption round latches the wrapper's per-message atom
+//!   fallback (like injected delays): shard tiers forward per-client
+//!   atoms that round and the mutation lands master-side before the
+//!   fold — `drain_sums` callers stay bit-identical by the exactness
+//!   of the reproducible summation layer, and no new wire tags exist.
 //!
 //! Faults suppress the ROUND *delivery*: a faulted client never
 //! computes the round, so its local Hessian shift never advances and
@@ -57,6 +72,7 @@ use anyhow::{anyhow, bail, Result};
 use super::{ClientFamily, ClientPool, RoundMode};
 use crate::algorithms::{ClientMsg, RoundSum};
 use crate::linalg::reduce::{RepAcc, RepVec};
+use crate::rng::{Pcg64, Rng};
 
 /// One frozen interval of a client: [`from`, `until`) in rounds.
 ///
@@ -68,6 +84,62 @@ pub struct KillSpan {
     pub from: u64,
     /// First round the client is alive again; `None` = never rejoins.
     pub until: Option<u64>,
+}
+
+/// How a Byzantine client mutates its round reply (`corrupt@R:C:MODE`
+/// in the schema; see the module docs for the exact semantics).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CorruptMode {
+    /// Gradient and Hessian update scaled by K (`scale:K`).
+    Scale(f64),
+    /// Gradient and Hessian update negated (`signflip`).
+    SignFlip,
+    /// Gradient and Hessian-update values replaced by a seeded random
+    /// payload (`garbage`). The PRG seed is a pure function of
+    /// (round, client): identical bytes on every transport.
+    Garbage,
+    /// Gradient and Hessian update zeroed (`zero`) — the reply still
+    /// arrives, so the attack is invisible to liveness accounting.
+    Zero,
+}
+
+impl CorruptMode {
+    fn parse(s: &str, ev: &str) -> Result<Self> {
+        match s {
+            "signflip" => Ok(Self::SignFlip),
+            "garbage" => Ok(Self::Garbage),
+            "zero" => Ok(Self::Zero),
+            _ => {
+                if let Some(k) = s.strip_prefix("scale:") {
+                    let k: f64 = num(k, ev)?;
+                    if !k.is_finite() {
+                        bail!(
+                            "fault event '{ev}': corrupt scale must \
+                             be finite, got '{k}'"
+                        );
+                    }
+                    Ok(Self::Scale(k))
+                } else {
+                    bail!(
+                        "fault event '{ev}': unknown corrupt mode \
+                         '{s}' (expected scale:K | signflip | \
+                         garbage | zero)"
+                    )
+                }
+            }
+        }
+    }
+
+    fn to_spec(self) -> String {
+        match self {
+            // `{}` prints the shortest round-trippable f64, so
+            // parse(to_spec()) restores the exact bits.
+            Self::Scale(k) => format!("scale:{k}"),
+            Self::SignFlip => "signflip".to_string(),
+            Self::Garbage => "garbage".to_string(),
+            Self::Zero => "zero".to_string(),
+        }
+    }
 }
 
 /// A reproducible fault schedule (see the module docs for the textual
@@ -87,6 +159,9 @@ pub struct FaultPlan {
     /// ([`super::ClientPool::kill_shard`]) so partition adoption runs
     /// end-to-end.
     pub relay_kills: Vec<(u64, u32)>,
+    /// (round, client, mode) Byzantine reply corruptions. Multiple
+    /// entries for the same (round, client) compose in plan order.
+    pub corruptions: Vec<(u64, u32, CorruptMode)>,
 }
 
 fn num<T: std::str::FromStr>(s: &str, ev: &str) -> Result<T> {
@@ -104,14 +179,16 @@ impl FaultPlan {
             && self.drops.is_empty()
             && self.delays.is_empty()
             && self.relay_kills.is_empty()
+            && self.corruptions.is_empty()
     }
 
     /// Parse the CLI schema: comma-separated events, each
     /// `kill@R:C[-R2]` | `drop@R:C` | `delay@R:C:MS` |
-    /// `killrelay@R:S`.
+    /// `killrelay@R:S` | `corrupt@R:C:MODE` with MODE one of
+    /// `scale:K` | `signflip` | `garbage` | `zero`.
     ///
     /// ```text
-    /// kill@6:1-18,delay@3:2:25,drop@12:0,killrelay@4:1
+    /// kill@6:1-18,delay@3:2:25,drop@12:0,corrupt@4:1:scale:100
     /// ```
     pub fn parse(spec: &str) -> Result<Self> {
         let mut plan = FaultPlan::default();
@@ -157,6 +234,23 @@ impl FaultPlan {
                     };
                     plan.delays.push((round, num(client, ev)?, num(ms, ev)?));
                 }
+                "corrupt" => {
+                    // MODE may itself carry a ':' (scale:K), so split
+                    // the client off first and hand the rest to the
+                    // mode parser.
+                    let Some((client, mode)) = args.split_once(':')
+                    else {
+                        bail!(
+                            "fault event '{ev}': expected \
+                             corrupt@round:client:mode"
+                        );
+                    };
+                    plan.corruptions.push((
+                        round,
+                        num(client, ev)?,
+                        CorruptMode::parse(mode, ev)?,
+                    ));
+                }
                 other => bail!("unknown fault kind '{other}' in '{ev}'"),
             }
         }
@@ -183,6 +277,9 @@ impl FaultPlan {
         }
         for &(r, s) in &self.relay_kills {
             parts.push(format!("killrelay@{r}:{s}"));
+        }
+        for &(r, c, m) in &self.corruptions {
+            parts.push(format!("corrupt@{r}:{c}:{}", m.to_spec()));
         }
         parts.join(",")
     }
@@ -213,6 +310,17 @@ impl FaultPlan {
     /// misses `round`, adopted/rejoined at `round + 1`).
     pub fn with_relay_kill(mut self, round: u64, shard: u32) -> Self {
         self.relay_kills.push((round, shard));
+        self
+    }
+
+    /// Builder: make `client` Byzantine for `round` with `mode`.
+    pub fn with_corrupt(
+        mut self,
+        round: u64,
+        client: u32,
+        mode: CorruptMode,
+    ) -> Self {
+        self.corruptions.push((round, client, mode));
         self
     }
 
@@ -271,7 +379,64 @@ impl FaultPlan {
         let kills = self.kills.iter().map(|k| k.client);
         let drops = self.drops.iter().map(|&(_, c)| c);
         let delays = self.delays.iter().map(|&(_, c, _)| c);
-        kills.chain(drops).chain(delays).max()
+        let corrupts = self.corruptions.iter().map(|&(_, c, _)| c);
+        kills.chain(drops).chain(delays).chain(corrupts).max()
+    }
+}
+
+/// The `garbage` payload PRG seed: a pure function of (round, client)
+/// so the same plan yields the same bytes on every transport.
+fn garbage_seed(round: u64, client: u32) -> u64 {
+    round
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((client as u64) << 17)
+        ^ 0xBAD5_EED0_C0FF_EE00
+}
+
+/// Mutate one committed reply according to `mode` (module docs list
+/// the exact semantics per mode). Structure-preserving except `zero`'s
+/// neutralized scale: index payloads, value-vector lengths and the
+/// encoding stay as sent, so logical byte accounting stays identical
+/// across transports.
+fn corrupt_msg(
+    m: &mut ClientMsg,
+    mode: CorruptMode,
+    round: u64,
+    client: u32,
+) {
+    match mode {
+        CorruptMode::Scale(k) => {
+            for g in &mut m.grad {
+                *g *= k;
+            }
+            m.update.scale *= k;
+        }
+        CorruptMode::SignFlip => {
+            for g in &mut m.grad {
+                *g = -*g;
+            }
+            m.update.scale = -m.update.scale;
+        }
+        CorruptMode::Zero => {
+            for g in &mut m.grad {
+                *g = 0.0;
+            }
+            // scale = 0 zeroes every update entry while keeping the
+            // payload shape (and wire size) exactly as sent; the
+            // superaccumulator absorbs signed zeros as no-ops.
+            m.update.scale = 0.0;
+        }
+        CorruptMode::Garbage => {
+            let mut rng =
+                Pcg64::seed_from_u64(garbage_seed(round, client));
+            for g in &mut m.grad {
+                *g = rng.next_gaussian();
+            }
+            for v in &mut m.update.values {
+                *v = rng.next_gaussian();
+            }
+            m.update.scale = 1.0;
+        }
     }
 }
 
@@ -295,10 +460,17 @@ pub struct FaultPool<P: ClientPool> {
     late_certs: Vec<(u32, Instant)>,
     /// The engine's requested reply-aggregation mode.
     mode: RoundMode,
-    /// Latched per round at submit: injected delays need per-message
-    /// atom visibility, so a round with holds drops to the atom path
-    /// (exactness keeps the trajectory bit-identical either way).
+    /// Latched per round at submit: injected delays and corruptions
+    /// need per-message atom visibility, so such a round drops to the
+    /// atom path (exactness keeps the trajectory bit-identical either
+    /// way).
     round_atoms: bool,
+    /// Corruptions scheduled for the round in flight (client, mode),
+    /// resolved against the live set at submit; applied to matching
+    /// replies as they pass through [`Self::drain`].
+    corrupt_now: Vec<(u32, CorruptMode)>,
+    /// The round in flight (seeds the `garbage` payload PRG).
+    corrupt_round: u64,
     /// Relay kills to apply natively — (round, shard, applied). Only
     /// populated when the inner pool supports a real shard kill; the
     /// plan's desugared per-client spans carry the deterministic
@@ -368,6 +540,8 @@ impl<P: ClientPool> FaultPool<P> {
             late_certs: Vec::new(),
             mode: RoundMode::Atoms,
             round_atoms: true,
+            corrupt_now: Vec::new(),
+            corrupt_round: 0,
             native_kills,
         }
     }
@@ -544,11 +718,25 @@ impl<P: ClientPool> ClientPool for FaultPool<P> {
             }
             live.push(ci);
         }
+        // Corruptions scheduled for this round against live repliers;
+        // mutation happens in drain(), on the master side, before the
+        // engine (or the sum fold below) ever sees the reply.
+        self.corrupt_now = self
+            .plan
+            .corruptions
+            .iter()
+            .filter(|&&(r, c, _)| r == round && live.contains(&c))
+            .map(|&(_, c, m)| (c, m))
+            .collect();
+        self.corrupt_round = round;
         // Rounds with injected stragglers need the atoms (each held
-        // reply is released individually); every other round forwards
-        // the engine's mode so shard tiers keep pre-reducing.
-        self.round_atoms =
-            self.mode == RoundMode::Atoms || !self.holds.is_empty();
+        // reply is released individually), and so do corruption
+        // rounds (the mutation targets one client's reply); every
+        // other round forwards the engine's mode so shard tiers keep
+        // pre-reducing.
+        self.round_atoms = self.mode == RoundMode::Atoms
+            || !self.holds.is_empty()
+            || !self.corrupt_now.is_empty();
         self.inner.set_round_mode(if self.round_atoms {
             RoundMode::Atoms
         } else {
@@ -569,8 +757,11 @@ impl<P: ClientPool> ClientPool for FaultPool<P> {
             }
             return out;
         }
-        // Atom fallback (delay holds in flight): enforce the holds,
-        // then fold — bit-identical to the pre-reduced path.
+        // Atom fallback (delay holds or corruptions in flight):
+        // enforce the holds and apply the scheduled corruptions, then
+        // fold — bit-identical to the pre-reduced path (and on a
+        // corruption round the fold happens *after* the mutation, so
+        // sum-mode callers see exactly the Byzantine inputs).
         let batch = self.drain();
         if batch.is_empty() {
             return Vec::new();
@@ -579,7 +770,7 @@ impl<P: ClientPool> ClientPool for FaultPool<P> {
     }
 
     fn drain(&mut self) -> Vec<ClientMsg> {
-        let out = self.inner.drain();
+        let mut out = self.inner.drain();
         if out.is_empty() {
             // No further replies this round: serve the detection
             // latency of any over-deadline stragglers before the
@@ -597,6 +788,19 @@ impl<P: ClientPool> ClientPool for FaultPool<P> {
                 let now = Instant::now();
                 if release > now {
                     std::thread::sleep(release - now);
+                }
+            }
+        }
+        // Byzantine mutation: every reply passes through this return
+        // path exactly once (held replies included), so each scheduled
+        // corruption lands exactly once; duplicate (round, client)
+        // events compose in plan order.
+        if !self.corrupt_now.is_empty() {
+            for m in &mut out {
+                for &(c, mode) in &self.corrupt_now {
+                    if c as usize == m.client_id {
+                        corrupt_msg(m, mode, self.corrupt_round, c);
+                    }
                 }
             }
         }
@@ -666,6 +870,158 @@ mod tests {
         let built =
             FaultPlan::none().with_relay_kill(4, 0).with_relay_kill(7, 2);
         assert_eq!(built, plan);
+    }
+
+    #[test]
+    fn corrupt_parses_and_round_trips() {
+        let spec = "corrupt@2:1:scale:100,corrupt@3:0:signflip,\
+                    corrupt@4:2:garbage,corrupt@5:3:zero,\
+                    corrupt@6:1:scale:-0.5";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(
+            plan.corruptions,
+            vec![
+                (2, 1, CorruptMode::Scale(100.0)),
+                (3, 0, CorruptMode::SignFlip),
+                (4, 2, CorruptMode::Garbage),
+                (5, 3, CorruptMode::Zero),
+                (6, 1, CorruptMode::Scale(-0.5)),
+            ]
+        );
+        assert!(!plan.is_empty());
+        let re = FaultPlan::parse(&plan.to_spec()).unwrap();
+        assert_eq!(plan, re);
+        // Builder ≡ parser.
+        let built = FaultPlan::none()
+            .with_corrupt(2, 1, CorruptMode::Scale(100.0))
+            .with_corrupt(3, 0, CorruptMode::SignFlip)
+            .with_corrupt(4, 2, CorruptMode::Garbage)
+            .with_corrupt(5, 3, CorruptMode::Zero)
+            .with_corrupt(6, 1, CorruptMode::Scale(-0.5));
+        assert_eq!(built, plan);
+        // Non-integer K round-trips bit-exactly through the shortest
+        // f64 Display form.
+        let p = FaultPlan::parse("corrupt@1:2:scale:0.1").unwrap();
+        assert_eq!(FaultPlan::parse(&p.to_spec()).unwrap(), p);
+    }
+
+    #[test]
+    fn corrupt_rejects_malformed() {
+        // Bad K.
+        assert!(FaultPlan::parse("corrupt@1:2:scale:abc").is_err());
+        assert!(FaultPlan::parse("corrupt@1:2:scale:").is_err());
+        assert!(FaultPlan::parse("corrupt@1:2:scale").is_err());
+        assert!(FaultPlan::parse("corrupt@1:2:scale:1x").is_err());
+        assert!(FaultPlan::parse("corrupt@1:2:scale:inf").is_err());
+        assert!(FaultPlan::parse("corrupt@1:2:scale:NaN").is_err());
+        // Unknown mode.
+        assert!(FaultPlan::parse("corrupt@1:2:boom").is_err());
+        assert!(FaultPlan::parse("corrupt@1:2:").is_err());
+        // Junk suffixes on argument-free modes.
+        assert!(FaultPlan::parse("corrupt@1:2:zerox").is_err());
+        assert!(FaultPlan::parse("corrupt@1:2:zero:5").is_err());
+        assert!(FaultPlan::parse("corrupt@1:2:signflip:1").is_err());
+        assert!(FaultPlan::parse("corrupt@1:2:garbagey").is_err());
+        // Missing fields / negative ids.
+        assert!(FaultPlan::parse("corrupt@1:2").is_err());
+        assert!(FaultPlan::parse("corrupt@1").is_err());
+        assert!(FaultPlan::parse("corrupt@1:-2:zero").is_err());
+        assert!(FaultPlan::parse("corrupt@-1:2:zero").is_err());
+    }
+
+    #[test]
+    fn corrupt_injects_deterministically_on_flat_pool() {
+        use crate::algorithms::ClientState;
+        use crate::compressors::Identity;
+        use crate::linalg::Mat;
+        use crate::oracle::QuadraticOracle;
+        let mk_clients = || -> Vec<ClientState> {
+            (0..4)
+                .map(|i| {
+                    let q =
+                        Mat::from_rows(&[&[2.0, 0.5], &[0.5, 1.5]]);
+                    ClientState::new(
+                        i,
+                        Box::new(QuadraticOracle::new(
+                            q,
+                            vec![1.0, -1.0],
+                        )),
+                        Box::new(Identity),
+                        None,
+                    )
+                })
+                .collect()
+        };
+        let plan = FaultPlan::parse(
+            "corrupt@1:0:garbage,corrupt@1:1:scale:100,\
+             corrupt@1:2:zero,corrupt@1:3:signflip",
+        )
+        .unwrap();
+        let drain_all = |fp: &mut FaultPool<_>| {
+            let mut got: Vec<ClientMsg> = Vec::new();
+            loop {
+                let b = fp.drain();
+                if b.is_empty() {
+                    break;
+                }
+                got.extend(b);
+            }
+            got.sort_by_key(|m| m.client_id);
+            got
+        };
+        let run = |p: FaultPlan| {
+            let mut fp = FaultPool::new(
+                super::super::SeqPool::new(mk_clients()),
+                p,
+            );
+            let x = [0.3, -0.2];
+            let mut r1 = Vec::new();
+            for round in 0..2u64 {
+                fp.prepare_round(round);
+                fp.submit_round(&x, None, round, false);
+                r1 = drain_all(&mut fp);
+            }
+            r1
+        };
+        // Honest reference: the same clients under the empty plan.
+        // Client-side state evolves identically (corruption is master-
+        // side only), so its round-1 batch is exactly what the
+        // corrupted run's replies looked like before mutation.
+        let clean = run(FaultPlan::none());
+        let dirty = run(plan.clone());
+        assert_eq!(clean.len(), 4);
+        assert_eq!(dirty.len(), 4);
+        // garbage: differs from honest and is non-zero.
+        assert_ne!(dirty[0].grad, clean[0].grad);
+        assert!(dirty[0].grad.iter().any(|&g| g != 0.0));
+        // scale:100 multiplies the gradient exactly.
+        for (c, d) in clean[1].grad.iter().zip(&dirty[1].grad) {
+            assert_eq!(d.to_bits(), (c * 100.0).to_bits());
+        }
+        assert_eq!(dirty[1].update.scale, clean[1].update.scale * 100.0);
+        // zero blanks the gradient and neutralizes the update scale.
+        assert!(dirty[2].grad.iter().all(|&g| g == 0.0));
+        assert_eq!(dirty[2].update.scale, 0.0);
+        assert_eq!(dirty[2].update.values, clean[2].update.values);
+        // signflip negates exactly.
+        for (c, d) in clean[3].grad.iter().zip(&dirty[3].grad) {
+            assert_eq!(d.to_bits(), (-c).to_bits());
+        }
+        // Pure function of (plan, round): a second run reproduces the
+        // corrupted batch bit-for-bit, garbage payload included.
+        let dirty2 = run(plan);
+        for (a, b) in dirty.iter().zip(&dirty2) {
+            assert_eq!(a.client_id, b.client_id);
+            let bits = |v: &[f64]| -> Vec<u64> {
+                v.iter().map(|x| x.to_bits()).collect()
+            };
+            assert_eq!(bits(&a.grad), bits(&b.grad));
+            assert_eq!(bits(&a.update.values), bits(&b.update.values));
+            assert_eq!(
+                a.update.scale.to_bits(),
+                b.update.scale.to_bits()
+            );
+        }
     }
 
     #[test]

@@ -396,6 +396,7 @@ mod tests {
             n_samples: n * 30,
             density: 0.6,
             noise: 1.0,
+            label_bias: 0.0,
             seed,
         };
         let synth = generate_synthetic(&spec);

@@ -125,7 +125,7 @@ pub mod faults;
 pub mod local_sim;
 pub mod shard;
 
-pub use faults::{FaultPlan, FaultPool};
+pub use faults::{CorruptMode, FaultPlan, FaultPool};
 pub use local_sim::ThreadedPool;
 pub use shard::{ShardedPool, ShardStats};
 

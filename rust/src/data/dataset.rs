@@ -95,6 +95,147 @@ impl Dataset {
         let n_i = self.n_samples() / n_clients;
         self.split(n_clients, n_i)
     }
+
+    /// Split into explicitly sized shards — the non-IID client-size
+    /// knob. Shard `c` takes the next `sizes[c]` samples in order;
+    /// leftover samples are dropped as in [`Dataset::split`]. Pair
+    /// with [`power_law_sizes`] for Zipf-like size heterogeneity.
+    pub fn split_sizes(
+        &self,
+        sizes: &[usize],
+    ) -> anyhow::Result<Vec<ClientShard>> {
+        anyhow::ensure!(
+            !sizes.is_empty() && sizes.iter().all(|&s| s > 0),
+            "empty split"
+        );
+        let total: usize = sizes.iter().sum();
+        anyhow::ensure!(
+            total <= self.n_samples(),
+            "split needs {} samples, dataset has {}",
+            total,
+            self.n_samples()
+        );
+        let mut shards = Vec::with_capacity(sizes.len());
+        let mut start = 0;
+        for (c, &n_i) in sizes.iter().enumerate() {
+            let mut at = Mat::zeros(n_i, self.d);
+            for r in 0..n_i {
+                at.row_mut(r).copy_from_slice(self.at.row(start + r));
+            }
+            start += n_i;
+            shards.push(ClientShard { client_id: c, at });
+        }
+        Ok(shards)
+    }
+
+    /// Label-skew non-IID split: each client draws a `skew` fraction
+    /// of its `n_i` samples from its *preferred* label class (even
+    /// client ids prefer `+1`, odd prefer `−1`) and the rest from the
+    /// other class, falling back to whichever class still has samples
+    /// once one pool runs dry. Labels are recovered from the absorbed
+    /// intercept column (row = b·[a, 1], so sign(at[r][d−1]) = b).
+    /// Both class pools are shuffled with `seed`, making the split a
+    /// pure function of (dataset, n_clients, n_i, skew, seed) —
+    /// reproducible across transports and runs. `skew = 0.5` is a
+    /// balanced draw; `skew = 1.0` gives each client one label class.
+    pub fn split_label_skew(
+        &self,
+        n_clients: usize,
+        n_i: usize,
+        skew: f64,
+        seed: u64,
+    ) -> anyhow::Result<Vec<ClientShard>> {
+        anyhow::ensure!(n_clients > 0 && n_i > 0, "empty split");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&skew),
+            "label skew must be in [0, 1], got {skew}"
+        );
+        anyhow::ensure!(
+            n_clients * n_i <= self.n_samples(),
+            "split needs {} samples, dataset has {}",
+            n_clients * n_i,
+            self.n_samples()
+        );
+        let d = self.d;
+        let mut pos: Vec<u32> = Vec::new();
+        let mut neg: Vec<u32> = Vec::new();
+        for r in 0..self.n_samples() {
+            if self.at.row(r)[d - 1] >= 0.0 {
+                pos.push(r as u32);
+            } else {
+                neg.push(r as u32);
+            }
+        }
+        let mut rng = Pcg64::seed_from_u64(seed);
+        shuffle(&mut rng, &mut pos);
+        shuffle(&mut rng, &mut neg);
+        let n_pref = ((skew * n_i as f64).round() as usize).min(n_i);
+        let mut shards = Vec::with_capacity(n_clients);
+        for c in 0..n_clients {
+            let (pref, other) = if c % 2 == 0 {
+                (&mut pos, &mut neg)
+            } else {
+                (&mut neg, &mut pos)
+            };
+            let mut at = Mat::zeros(n_i, d);
+            for r in 0..n_i {
+                let src = if r < n_pref {
+                    pref.pop().or_else(|| other.pop())
+                } else {
+                    other.pop().or_else(|| pref.pop())
+                };
+                // Unreachable given the ensure! above, but keep the
+                // invariant explicit rather than unwrapping.
+                let src = match src {
+                    Some(s) => s as usize,
+                    None => anyhow::bail!("label-skew split ran dry"),
+                };
+                at.row_mut(r).copy_from_slice(self.at.row(src));
+            }
+            shards.push(ClientShard { client_id: c, at });
+        }
+        Ok(shards)
+    }
+}
+
+/// Power-law client sizes for non-IID experiments: client `c`'s share
+/// of `total` is proportional to (c+1)^−gamma (Zipf-like; `gamma = 0`
+/// is the even IID split, larger gamma concentrates data on low-id
+/// clients). Every client gets at least one sample and the sizes sum
+/// to exactly `total`. Fully deterministic — pair with
+/// [`Dataset::split_sizes`].
+pub fn power_law_sizes(
+    n_clients: usize,
+    total: usize,
+    gamma: f64,
+) -> Vec<usize> {
+    assert!(
+        n_clients > 0 && total >= n_clients,
+        "power_law_sizes needs ≥ 1 sample per client"
+    );
+    let w: Vec<f64> =
+        (0..n_clients).map(|c| ((c + 1) as f64).powf(-gamma)).collect();
+    let wsum: f64 = w.iter().sum();
+    let mut sizes: Vec<usize> = w
+        .iter()
+        .map(|wi| ((total as f64 * wi / wsum) as usize).max(1))
+        .collect();
+    let mut assigned: usize = sizes.iter().sum();
+    // The 1-sample floor can over-assign; shave the largest shards.
+    while assigned > total {
+        let i = (0..n_clients).max_by_key(|&i| sizes[i]).unwrap();
+        sizes[i] -= 1;
+        assigned -= 1;
+    }
+    // Flooring under-assigns by < n_clients; top up head-first so the
+    // remainder follows the same heavy-head shape.
+    let mut c = 0;
+    while assigned < total {
+        sizes[c % n_clients] += 1;
+        assigned += 1;
+        c += 1;
+    }
+    sizes
 }
 
 /// One client's local data (FedNL never moves raw data off the client).
@@ -174,5 +315,89 @@ mod tests {
         let se = ds.split_even(3).unwrap();
         assert_eq!(se.len(), 3);
         assert_eq!(se[0].n_i(), 1);
+    }
+
+    /// n_pos positive then n_neg negative samples, distinguishable by
+    /// their first column (±(r+1)); intercept column carries the sign.
+    fn labeled(n_pos: usize, n_neg: usize) -> Dataset {
+        let n = n_pos + n_neg;
+        let mut at = Mat::zeros(n, 2);
+        for r in 0..n {
+            let b = if r < n_pos { 1.0 } else { -1.0 };
+            let row = at.row_mut(r);
+            row[0] = b * (r as f64 + 1.0);
+            row[1] = b;
+        }
+        Dataset::from_dense(at)
+    }
+
+    #[test]
+    fn split_sizes_shapes_and_errors() {
+        let ds = toy(); // 4 samples
+        let shards = ds.split_sizes(&[2, 1]).unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].n_i(), 2);
+        assert_eq!(shards[1].n_i(), 1);
+        assert_eq!(shards[1].client_id, 1);
+        // shard 1 starts where shard 0 ended (leftover row 3 dropped)
+        assert_eq!(shards[1].at.row(0), ds.at.row(2));
+        assert!(ds.split_sizes(&[3, 2]).is_err());
+        assert!(ds.split_sizes(&[2, 0]).is_err());
+        assert!(ds.split_sizes(&[]).is_err());
+    }
+
+    #[test]
+    fn power_law_sizes_shape() {
+        assert_eq!(power_law_sizes(4, 100, 0.0), vec![25, 25, 25, 25]);
+        let z = power_law_sizes(4, 100, 1.0);
+        assert_eq!(z.iter().sum::<usize>(), 100);
+        assert!(z.windows(2).all(|w| w[0] >= w[1]), "{z:?}");
+        assert!(z[0] >= 2 * z[3], "gamma=1 head/tail too flat: {z:?}");
+        // the 1-sample floor engages and still sums exactly
+        let f = power_law_sizes(8, 10, 5.0);
+        assert_eq!(f.iter().sum::<usize>(), 10);
+        assert!(f.iter().all(|&s| s >= 1), "{f:?}");
+        // determinism
+        assert_eq!(power_law_sizes(7, 997, 1.3), power_law_sizes(7, 997, 1.3));
+    }
+
+    #[test]
+    fn label_skew_split_is_seeded_and_skewed() {
+        let ds = labeled(8, 8);
+        let a = ds.split_label_skew(4, 4, 1.0, 9).unwrap();
+        let b = ds.split_label_skew(4, 4, 1.0, 9).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at, "same seed must reproduce the split");
+        }
+        // skew = 1: even clients all-positive, odd all-negative
+        for sh in &a {
+            let want = if sh.client_id % 2 == 0 { 1.0 } else { -1.0 };
+            for r in 0..sh.n_i() {
+                assert_eq!(sh.at.row(r)[1], want, "client {}", sh.client_id);
+            }
+        }
+        // a different seed reorders the pools
+        let c = ds.split_label_skew(4, 4, 1.0, 10).unwrap();
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.at != y.at),
+            "seed had no effect"
+        );
+        // skew = 0.5 draws a balanced 2 + 2 per client
+        for sh in &ds.split_label_skew(2, 4, 0.5, 9).unwrap() {
+            let pos =
+                (0..4).filter(|&r| sh.at.row(r)[1] > 0.0).count();
+            assert_eq!(pos, 2, "client {}", sh.client_id);
+        }
+        // pool exhaustion falls back to the other class: 12+4 split,
+        // client 0 takes 8 of the 12 positives, client 1 wants 8
+        // negatives but only 4 exist — gets 4 neg + 4 pos.
+        let skew = labeled(12, 4);
+        let sh = skew.split_label_skew(2, 8, 1.0, 1).unwrap();
+        let neg1 =
+            (0..8).filter(|&r| sh[1].at.row(r)[1] < 0.0).count();
+        assert_eq!(neg1, 4);
+        // asking for more samples than exist errors
+        assert!(ds.split_label_skew(5, 4, 1.0, 1).is_err());
+        assert!(ds.split_label_skew(2, 4, 1.5, 1).is_err());
     }
 }

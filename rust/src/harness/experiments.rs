@@ -536,6 +536,296 @@ pub fn fault_smoke(cfg: &HarnessCfg) -> Result<String> {
     Ok(out)
 }
 
+/// CI corruption smoke: the Byzantine robustness subsystem end to
+/// end. Two `scale:100` attackers (clients 0 and 3 of 6) corrupt
+/// every round from round 2 on, via `corrupt@` events in the same
+/// [`FaultPlan`] on every leg:
+///
+/// 1. **Undefended**: the corrupted FedNL run on SeqPool and
+///    ThreadedPool — bit-identical to each other (deterministic
+///    injection is a pure function of (plan, round)), and visibly
+///    *not* converging: the aggregated gradient is dominated by the
+///    ×100 payloads, so the reported ‖∇f‖ stays large.
+/// 2. **Defended** (`--defense median`): the same plan and problem on
+///    SeqPool, ThreadedPool, an in-process `S=3` [`ShardedPool`]
+///    (shards forward per-client atoms under a defense), a TCP
+///    [`RemotePool`] and — on unix — an `EventPool` master. All
+///    trajectories must be bit-identical, converge ≥ 100× below the
+///    round-0 gradient norm, and flag m−1 contributions per round
+///    (the median's trace accounting).
+///
+/// Writes both trajectories to `corruptsmoke_trace.json` (CI
+/// artifact).
+pub fn corrupt_smoke(cfg: &HarnessCfg) -> Result<String> {
+    use crate::coordinator::CorruptMode;
+    use crate::robust::Defense;
+
+    cfg.ensure_out_dir()?;
+    let spec = ProblemSpec {
+        name: "corruptsmoke",
+        d: 13,
+        n_i_full: 40,
+        n_clients_full: 6,
+        lam: 1e-3,
+    };
+    let mut p = prepare_problem(&spec, cfg)?;
+    p.n_clients = 6;
+    p.n_i = 40;
+    let d = p.d();
+    let x0 = vec![0.0; d];
+    let rounds = 30u64;
+    let mut plan = FaultPlan::none();
+    for r in 2..rounds {
+        plan = plan
+            .with_corrupt(r, 0, CorruptMode::Scale(100.0))
+            .with_corrupt(r, 3, CorruptMode::Scale(100.0));
+    }
+    let plan_spec = plan.to_spec();
+    let opts_und =
+        Options { rounds, warm_start: true, ..Default::default() };
+    let opts_def =
+        Options { defense: Some(Defense::Median), ..opts_und.clone() };
+
+    // --- undefended legs --------------------------------------------
+    let mut und_seq = FaultPool::new(
+        SeqPool::new(p.clients("topk", K_MULT, cfg)?),
+        plan.clone(),
+    );
+    let t_und = run_fednl_pool(
+        &mut und_seq,
+        &opts_und,
+        x0.clone(),
+        "corruptsmoke/undef/seq",
+    );
+    let mut und_thr = FaultPool::new(
+        ThreadedPool::new(p.clients("topk", K_MULT, cfg)?, cfg.threads),
+        plan.clone(),
+    );
+    let t_und_thr = run_fednl_pool(
+        &mut und_thr,
+        &opts_und,
+        x0.clone(),
+        "corruptsmoke/undef/threaded",
+    );
+
+    // --- defended legs ----------------------------------------------
+    let mut def_seq = FaultPool::new(
+        SeqPool::new(p.clients("topk", K_MULT, cfg)?),
+        plan.clone(),
+    );
+    let t_def = run_fednl_pool(
+        &mut def_seq,
+        &opts_def,
+        x0.clone(),
+        "corruptsmoke/median/seq",
+    );
+    let mut def_thr = FaultPool::new(
+        ThreadedPool::new(p.clients("topk", K_MULT, cfg)?, cfg.threads),
+        plan.clone(),
+    );
+    let t_def_thr = run_fednl_pool(
+        &mut def_thr,
+        &opts_def,
+        x0.clone(),
+        "corruptsmoke/median/threaded",
+    );
+    let mut def_shard = FaultPool::new(
+        ShardedPool::new_threaded(
+            p.clients("topk", K_MULT, cfg)?,
+            3,
+            cfg.threads,
+        ),
+        plan.clone(),
+    );
+    let t_def_shard = run_fednl_pool(
+        &mut def_shard,
+        &opts_def,
+        x0.clone(),
+        "corruptsmoke/median/sharded",
+    );
+    let bound = Bound::bind("127.0.0.1:0")?;
+    let addr = bound.local_addr()?.to_string();
+    let handles = spawn_shard_clients(&p, "topk", &addr, false, cfg)?;
+    let mut tcp = FaultPool::new(bound.accept(p.n_clients)?, plan.clone());
+    let t_def_tcp = run_fednl_pool(
+        &mut tcp,
+        &opts_def,
+        x0.clone(),
+        "corruptsmoke/median/remote",
+    );
+    tcp.into_inner().shutdown();
+    for h in handles {
+        let _ = h.join();
+    }
+    #[cfg(unix)]
+    let t_def_ev = {
+        let bound = Bound::bind("127.0.0.1:0")?;
+        let addr = bound.local_addr()?.to_string();
+        let handles = spawn_shard_clients(&p, "topk", &addr, false, cfg)?;
+        let mut ev = FaultPool::new(
+            crate::net::EventPool::accept(bound, p.n_clients)?,
+            plan.clone(),
+        );
+        let t = run_fednl_pool(
+            &mut ev,
+            &opts_def,
+            x0.clone(),
+            "corruptsmoke/median/event",
+        );
+        ev.into_inner().shutdown();
+        for h in handles {
+            let _ = h.join();
+        }
+        Some(t)
+    };
+    #[cfg(not(unix))]
+    let t_def_ev: Option<Trace> = None;
+
+    // Bit-identity under the same corrupt-bearing plan — the attack
+    // mutation and the defense fold are both pure functions of
+    // (plan, round, committed set), so the transport cannot move a
+    // bit. (Byte columns are excluded: TCP pools meter transport
+    // bytes, in-process pools report logical counters.)
+    let identical = |a: &Trace, b: &Trace, name: &str| -> Result<()> {
+        anyhow::ensure!(
+            a.records.len() == b.records.len(),
+            "corruptsmoke: {name} ran {} rounds vs {} on the reference",
+            b.records.len(),
+            a.records.len()
+        );
+        for (x, y) in a.records.iter().zip(&b.records) {
+            anyhow::ensure!(
+                x.grad_norm.to_bits() == y.grad_norm.to_bits()
+                    && x.committed == y.committed
+                    && x.missing == y.missing
+                    && x.flagged == y.flagged,
+                "corruptsmoke: {name} diverged at round {}: \
+                 grad {:.17e} vs {:.17e}, flagged {} vs {}",
+                x.round,
+                x.grad_norm,
+                y.grad_norm,
+                x.flagged,
+                y.flagged
+            );
+        }
+        Ok(())
+    };
+    identical(&t_und, &t_und_thr, "undefended/threaded")?;
+    identical(&t_def, &t_def_thr, "median/threaded")?;
+    identical(&t_def, &t_def_shard, "median/sharded")?;
+    identical(&t_def, &t_def_tcp, "median/remote")?;
+    if let Some(t) = &t_def_ev {
+        identical(&t_def, t, "median/event")?;
+    }
+
+    // Flagged accounting: the undefended run never flags; the median
+    // passes one order statistic through, flagging m−1 = 5 per round.
+    anyhow::ensure!(
+        t_und.records.iter().all(|r| r.flagged == 0),
+        "corruptsmoke: undefended run flagged contributions"
+    );
+    anyhow::ensure!(
+        t_def.records.iter().all(|r| r.committed == 6
+            && r.missing == 0
+            && r.flagged == 5),
+        "corruptsmoke: defended flagged/committed accounting off"
+    );
+
+    // The headline A/B: the undefended run visibly degrades (the ×100
+    // attackers dominate the mean — negated comparisons so a NaN/inf
+    // blow-up also counts as degraded), the defended run converges.
+    let und_first = t_und.records.first().map(|r| r.grad_norm).unwrap_or(0.0);
+    let und_last = t_und.last_grad_norm();
+    anyhow::ensure!(
+        !(und_last < und_first * 1e-1),
+        "corruptsmoke: undefended run converged anyway \
+         ({und_first:.3e} → {und_last:.3e}); attack ineffective"
+    );
+    let def_first = t_def.records.first().map(|r| r.grad_norm).unwrap_or(0.0);
+    let def_last = t_def.last_grad_norm();
+    anyhow::ensure!(
+        def_last.is_finite() && def_last < def_first * 1e-2,
+        "corruptsmoke: defended run did not converge \
+         ({def_first:.3e} → {def_last:.3e})"
+    );
+    anyhow::ensure!(
+        !(und_last < def_last * 1e3),
+        "corruptsmoke: defense gap below 1000× \
+         ({und_last:.3e} vs {def_last:.3e})"
+    );
+
+    // Artifact: both trajectories round by round, plus the plan.
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"plan\": \"{plan_spec}\",\n"));
+    json.push_str("  \"defense\": \"median\",\n");
+    json.push_str(&format!(
+        "  \"n_clients\": {}, \"rounds\": {rounds}, \
+         \"attackers\": [0, 3],\n",
+        p.n_clients
+    ));
+    json.push_str(&format!(
+        "  \"pools\": {{\"undefended\": [\"seq\", \"threaded\"], \
+         \"defended\": [\"seq\", \"threaded\", \"sharded\", \
+         \"remote\"{}]}},\n",
+        if t_def_ev.is_some() { ", \"event\"" } else { "" }
+    ));
+    json.push_str("  \"bit_identical\": true,\n");
+    json.push_str("  \"trace\": [\n");
+    for (i, (u, v)) in
+        t_und.records.iter().zip(&t_def.records).enumerate()
+    {
+        json.push_str(&format!(
+            "    {{\"round\": {}, \"undefended\": {:e}, \
+             \"defended\": {:e}, \"flagged\": {}}}{}\n",
+            u.round,
+            u.grad_norm,
+            v.grad_norm,
+            v.flagged,
+            if i + 1 < t_und.records.len().min(t_def.records.len()) {
+                ","
+            } else {
+                ""
+            }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let json_path = format!("{}/corruptsmoke_trace.json", cfg.out_dir);
+    std::fs::write(&json_path, &json)?;
+
+    let mut out = format!(
+        "## Corruption smoke — 2 `scale:100` attackers of n={}, \
+         undefended vs `--defense median` (r={rounds})\n\n",
+        p.n_clients
+    );
+    let mut table = Table::new(&[
+        "Leg",
+        "||∇f||_first",
+        "||∇f||_final",
+        "Flagged/round",
+        "Bit-identical legs",
+    ]);
+    table.row(&[
+        "undefended".to_string(),
+        sci(und_first),
+        sci(und_last),
+        "0".to_string(),
+        "seq, threaded".to_string(),
+    ]);
+    table.row(&[
+        "median".to_string(),
+        sci(def_first),
+        sci(def_last),
+        "5".to_string(),
+        format!(
+            "seq, threaded, sharded, remote{}",
+            if t_def_ev.is_some() { ", event" } else { "" }
+        ),
+    ]);
+    out.push_str(&table.to_markdown());
+    out.push_str(&format!("\nPer-round trace written to {json_path}\n"));
+    Ok(out)
+}
+
 /// CI shard smoke: the sharded aggregation tier end to end — an
 /// unsharded sequential reference, an in-process `S=3` [`ShardedPool`]
 /// and a real `S=2` TCP **relay tier** over loopback (2 relay
@@ -923,6 +1213,7 @@ pub fn mux_smoke(cfg: &HarnessCfg) -> Result<String> {
         n_samples: total * 2,
         density: 0.5,
         noise: 1.0,
+        label_bias: 0.0,
         seed: cfg.seed,
     });
     let text = write_libsvm(&synth);

@@ -74,6 +74,7 @@ pub fn prepare_problem(
         n_samples: total,
         density: 0.25,
         noise: 1.0,
+        label_bias: 0.0,
         seed: cfg.seed,
     });
     // Real text round-trip: serializer → parser (exercises the paper's

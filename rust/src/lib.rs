@@ -40,6 +40,7 @@ pub mod metrics;
 pub mod net;
 pub mod oracle;
 pub mod rng;
+pub mod robust;
 pub mod runtime;
 pub mod utils;
 

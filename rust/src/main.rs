@@ -67,11 +67,12 @@ fn print_usage() {
          \x20            [--trace out.csv] [--warm-start] [--rule lk|mu] [--mu 1e-3]\n\
          \x20            [--intra-threads 1] [--quorum Q] [--deadline-ms MS]\n\
          \x20            [--on-missing drop|resample|reuse] [--fault-plan SPEC]\n\
-         \x20            [--speculate]\n\
+         \x20            [--speculate] [--defense SPEC]\n\
          \x20 master     --listen ADDR --clients N --algo ... [--rounds R] [--tol T]\n\
          \x20            [--shards S] [--relay-slack-ms 2000] [--adopt-grace-ms 2000]\n\
          \x20            [--quorum Q] [--deadline-ms MS] [--on-missing P]\n\
          \x20            [--fault-plan SPEC] [--speculate] [--event]\n\
+         \x20            [--defense SPEC]\n\
          \x20 relay      --connect MASTER --listen ADDR --shard I --base B --clients K\n\
          \x20            [--event] [--parent S] [--die-after-round R]\n\
          \x20            (shard aggregator: ids [B, B+K) connect here; --parent S\n\
@@ -81,12 +82,17 @@ fn print_usage() {
          \x20            [--fallback A1,A2] [--fresh]\n\
          \x20 verify     --data FILE [--lam 1e-3]   (finite-difference oracle check)\n\
          \x20 experiment table1|table2|table3|table5|fig1..fig12|costmodel|tcpsmoke|\n\
-         \x20            faultsmoke|shardsmoke|muxsmoke|failsmoke|all [--full]\n\
-         \x20            [--out-dir results] [--pjrt] [--threads N] [--seq]\n\
+         \x20            faultsmoke|shardsmoke|muxsmoke|failsmoke|corruptsmoke|all\n\
+         \x20            [--full] [--out-dir results] [--pjrt] [--threads N] [--seq]\n\
          \x20 sysinfo\n\n\
          FAULT PLANS (--fault-plan): comma-separated kill@R:C[-R2] | drop@R:C |\n\
-         delay@R:C:MS | killrelay@R:S — deterministic master-side injection\n\
-         (see coordinator::faults; killrelay needs a master-visible shard S).\n\
+         delay@R:C:MS | killrelay@R:S | corrupt@R:C:MODE with MODE one of\n\
+         scale:K | signflip | garbage | zero (Byzantine payload corruption) —\n\
+         deterministic master-side injection (see coordinator::faults;\n\
+         killrelay needs a master-visible shard S).\n\
+         DEFENSES (--defense): normclip:TAU | median | trimmedmean:F — robust\n\
+         server-side aggregation (see the robust module; fednl/fednl-ls only;\n\
+         median and trimmed mean route per-client atoms through shard tiers).\n\
          SHARD TIER: `train --shards S` shards in-process; for TCP, run\n\
          `master --shards S`, one `relay` per shard, and point each client at\n\
          its shard's relay. `relay --parent K` nests relays into S-ary trees.\n\
@@ -224,6 +230,27 @@ fn fault_plan(args: &Args) -> Result<FaultPlan> {
     }
 }
 
+/// `--defense SPEC` (`normclip:TAU` | `median` | `trimmedmean:F`),
+/// shared by `train` and `master`. Newton family only: FedNL-PP
+/// aggregates *deltas* into persistent state, which a robust fold of
+/// one round cannot defend — rejected here, before data loading.
+fn defense_opt(
+    args: &Args,
+    algo: &str,
+) -> Result<Option<fednl::robust::Defense>> {
+    match args.get("defense") {
+        None => Ok(None),
+        Some(spec) => {
+            anyhow::ensure!(
+                algo != "fednl-pp",
+                "--defense supports the Newton family (fednl, fednl-ls) \
+                 only, not fednl-pp"
+            );
+            Ok(Some(fednl::robust::Defense::parse(spec)?))
+        }
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let data = args.get("data").context("--data required")?;
     let algo = args.get_or("algo", "fednl");
@@ -265,6 +292,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         warm_start: args.flag("warm-start"),
         policy: round_policy(args, n_clients, false)?,
         speculate: args.flag("speculate"),
+        defense: defense_opt(args, algo)?,
         ..Default::default()
     };
     let plan = fault_plan(args)?;
@@ -411,6 +439,7 @@ fn cmd_master(args: &Args) -> Result<()> {
         track_loss: algo == "fednl-ls",
         policy: round_policy(args, n_clients, true)?,
         speculate: args.flag("speculate"),
+        defense: defense_opt(args, algo)?,
         ..Default::default()
     };
     let plan = fault_plan(args)?;
@@ -707,6 +736,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             "shardsmoke" => harness::shard_smoke(&cfg)?,
             "muxsmoke" => harness::mux_smoke(&cfg)?,
             "failsmoke" => harness::fail_smoke(&cfg)?,
+            "corruptsmoke" => harness::corrupt_smoke(&cfg)?,
             f if f.starts_with("fig") => {
                 let n: usize = f[3..].parse().context("figN")?;
                 if n <= 3 {
@@ -726,9 +756,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     };
     let all = [
         "costmodel", "tcpsmoke", "faultsmoke", "shardsmoke", "muxsmoke",
-        "failsmoke", "table1", "table2", "table3", "table5", "fig1", "fig2",
-        "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
-        "fig11", "fig12",
+        "failsmoke", "corruptsmoke", "table1", "table2", "table3", "table5",
+        "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
+        "fig9", "fig10", "fig11", "fig12",
     ];
     let list: Vec<&str> =
         if which == "all" { all.to_vec() } else { vec![which] };

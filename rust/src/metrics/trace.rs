@@ -27,6 +27,12 @@ pub struct RoundRecord {
     /// Participants whose contribution was lost this round (killed,
     /// dropped, or past the reply deadline) under the quorum policy.
     pub missing: u32,
+    /// Contributions the `--defense` robust fold altered or excluded
+    /// this round: NormClip counts clipped messages, `trimmedmean:F`
+    /// reports 2F (F discarded per coordinate from each end), median
+    /// reports committed−1 (only the middle order statistic passes
+    /// through). Always 0 when undefended.
+    pub flagged: u32,
 }
 
 /// A full training trace.
@@ -90,11 +96,12 @@ impl Trace {
     /// CSV with header; the figure-regeneration format.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,grad_norm,loss,bytes_up,bytes_down,elapsed_s,committed,missing\n",
+            "round,grad_norm,loss,bytes_up,bytes_down,elapsed_s,\
+             committed,missing,flagged\n",
         );
         for r in &self.records {
             s.push_str(&format!(
-                "{},{:e},{:e},{},{},{:.6},{},{}\n",
+                "{},{:e},{:e},{},{},{:.6},{},{},{}\n",
                 r.round,
                 r.grad_norm,
                 r.loss,
@@ -102,7 +109,8 @@ impl Trace {
                 r.bytes_down,
                 r.elapsed,
                 r.committed,
-                r.missing
+                r.missing,
+                r.flagged
             ));
         }
         s
@@ -129,6 +137,7 @@ mod tests {
             elapsed: t,
             committed: 4,
             missing: 1,
+            flagged: 2,
         }
     }
 
@@ -153,10 +162,10 @@ mod tests {
         let lines: Vec<&str> = csv.trim().lines().collect();
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("round,"));
-        assert!(lines[0].ends_with("committed,missing"));
+        assert!(lines[0].ends_with("committed,missing,flagged"));
         assert!(lines[1].starts_with("0,"));
-        assert_eq!(lines[1].split(',').count(), 8);
-        assert!(lines[1].ends_with("4,1"));
+        assert_eq!(lines[1].split(',').count(), 9);
+        assert!(lines[1].ends_with("4,1,2"));
     }
 
     #[test]

@@ -1,0 +1,528 @@
+//! Byzantine-robust server-side aggregation (`--defense`).
+//!
+//! The attack half of the robustness subsystem lives in
+//! `coordinator::faults` (`corrupt@R:C:MODE` events, injected
+//! deterministically by `FaultPool` before commit). This module is the
+//! defense half: pluggable robust folds applied at the master's
+//! [`ServerState`](crate::algorithms::ServerState) aggregation point
+//! in `algorithms::engine`, selected with `--defense`:
+//!
+//! * `normclip:TAU` — per-client L2 clipping: each committed message's
+//!   joint contribution vector (the gradient concatenated with the
+//!   effective Hessian-update entries `scale·vⱼ`) is rescaled by
+//!   γ = min(1, τ/‖·‖₂) before it is absorbed. A message at or below
+//!   the threshold is passed through **untouched** (the comparison is
+//!   `‖·‖² ≤ τ²`; no value is rewritten), so a clip threshold no
+//!   honest client reaches leaves the trajectory bit-identical to the
+//!   undefended run.
+//! * `median` — coordinate-wise median across the round's committed
+//!   messages, over gradient coordinates, `lᵢ`, losses, and every
+//!   packed Hessian-update coordinate.
+//! * `trimmedmean:F` — coordinate-wise trimmed mean: per coordinate,
+//!   the F smallest and F largest contributions are discarded and the
+//!   survivors averaged. `F = 0` discards nothing and reproduces the
+//!   undefended mean bit for bit (see below). A round whose committed
+//!   count m does not satisfy 2F < m aborts loudly.
+//!
+//! # The sum-equivalent fold
+//!
+//! The engine's round bookkeeping — `finish_round(committed)` with its
+//! single rounding per quantity, the 1/committed first-order scaling
+//! and the α/n Hessian weight — is left byte-for-byte untouched.
+//! Instead of teaching [`ServerState`](crate::algorithms::ServerState)
+//! about robust statistics, [`Defense::aggregate`] compresses the
+//! round's m committed messages into **one synthetic message** whose
+//! entries are *sum-equivalents*: per coordinate, the robust statistic
+//! multiplied back up to sum scale (median·m; trimmed-mean
+//! Σkept·(m/(m−2F))), so the engine's mean-of-committed division
+//! recovers exactly the robust statistic. Absorbing a single message
+//! into the exact superaccumulators is lossless, which is what makes
+//! the `trimmedmean:0` ≡ undefended property *bitwise*: the kept-value
+//! sum is formed in the same exact accumulator the undefended path
+//! uses, the scale factor m/(m−0) is exactly 1.0, and one absorbed
+//! f64 re-rounds to itself.
+//!
+//! Missing compressed coordinates are treated as explicit zeros: a
+//! TopK client that did not select packed index j contributed 0 to j
+//! in the undefended sum, so the robust order statistics at j see a
+//! multiset padded with zeros up to m. (Coordinate-wise median
+//! therefore suppresses coordinates fewer than half the clients
+//! selected — the correct robust reading of a sparse round.)
+//!
+//! # Ordering and transports
+//!
+//! Median and trimmed mean are **not associative**, so the engine
+//! forces the atom `RoundMode` while a defense is enabled — shard
+//! tiers and mux groups forward per-client atoms exactly as FedNL-PP
+//! rounds already do, with no new wire tags. The folds themselves sort
+//! by `f64::total_cmp`, and the per-coordinate inputs are fixed sets,
+//! so the synthetic message — and hence the trajectory — is
+//! bit-identical across SeqPool / ThreadedPool / RemotePool /
+//! EventPool under any arrival order. NormClip is per-client and
+//! commutes with pre-reduction, so a future relay-side hook could
+//! clip *before* `SHARD_SUM` folding and restore O(S) fan-in under
+//! it; the present implementation applies every defense at the
+//! master's atom fold for uniformity.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::algorithms::ClientMsg;
+use crate::compressors::{Compressed, IndexPayload, ValueEncoding};
+use crate::linalg::reduce::RepAcc;
+
+/// A server-side robust aggregation rule (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Defense {
+    /// Per-client joint L2 clip to the given threshold τ.
+    NormClip(f64),
+    /// Coordinate-wise median across the round's committed messages.
+    Median,
+    /// Coordinate-wise trimmed mean discarding the F smallest and F
+    /// largest contributions per coordinate.
+    TrimmedMean(usize),
+}
+
+impl Defense {
+    /// Parse a CLI spelling: `normclip:TAU` | `median` |
+    /// `trimmedmean:F`.
+    pub fn parse(s: &str) -> Result<Self> {
+        if s == "median" {
+            return Ok(Defense::Median);
+        }
+        if let Some(t) = s.strip_prefix("normclip:") {
+            let tau: f64 = t
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad normclip threshold '{t}'"))?;
+            ensure!(
+                tau.is_finite() && tau > 0.0,
+                "normclip threshold must be finite and positive, got '{t}'"
+            );
+            return Ok(Defense::NormClip(tau));
+        }
+        if let Some(f) = s.strip_prefix("trimmedmean:") {
+            let f: usize = f.parse().map_err(|_| {
+                anyhow::anyhow!("bad trimmedmean trim count '{f}'")
+            })?;
+            return Ok(Defense::TrimmedMean(f));
+        }
+        bail!(
+            "unknown defense '{s}' (expected normclip:TAU | median | \
+             trimmedmean:F)"
+        )
+    }
+
+    /// The canonical CLI spelling (inverse of [`Defense::parse`]).
+    pub fn to_spec(self) -> String {
+        match self {
+            Defense::NormClip(t) => format!("normclip:{t}"),
+            Defense::Median => "median".to_string(),
+            Defense::TrimmedMean(f) => format!("trimmedmean:{f}"),
+        }
+    }
+
+    /// Whether the defense transforms messages one at a time (NormClip)
+    /// rather than folding the whole round (median / trimmed mean).
+    pub fn is_per_client(self) -> bool {
+        matches!(self, Defense::NormClip(_))
+    }
+
+    /// Robust sum-equivalent of one coordinate's m contributions
+    /// (module docs): sorts, applies the order statistic, scales back
+    /// to sum scale so the engine's 1/committed division recovers the
+    /// statistic. Median/TrimmedMean only.
+    fn fold(self, vals: &mut [f64]) -> f64 {
+        let m = vals.len();
+        vals.sort_unstable_by(|a, b| a.total_cmp(b));
+        match self {
+            Defense::Median => {
+                let med = if m % 2 == 1 {
+                    vals[m / 2]
+                } else {
+                    0.5 * (vals[m / 2 - 1] + vals[m / 2])
+                };
+                med * m as f64
+            }
+            Defense::TrimmedMean(f) => {
+                // Exact sum of the kept slice; the scale factor is
+                // exactly 1.0 when f = 0, so round(Σ)·1.0 is the
+                // undefended sum bit for bit.
+                let mut acc = RepAcc::new();
+                for &v in &vals[f..m - f] {
+                    acc.accumulate(v);
+                }
+                acc.round() * (m as f64 / (m - 2 * f) as f64)
+            }
+            Defense::NormClip(_) => {
+                unreachable!("NormClip is per-client, not a round fold")
+            }
+        }
+    }
+
+    /// How many contributions the defense altered or excluded this
+    /// round — the trace's `flagged` column. Median passes only the
+    /// middle order statistic(s) through, so it reports m−1;
+    /// TrimmedMean discards F from each end (2F); NormClip reports
+    /// the clipped-message count from the engine instead.
+    fn flagged(self, m: usize) -> u32 {
+        match self {
+            Defense::Median => (m - 1) as u32,
+            Defense::TrimmedMean(f) => (2 * f) as u32,
+            Defense::NormClip(_) => 0,
+        }
+    }
+
+    /// Fold a round's committed messages into one synthetic
+    /// sum-equivalent message (module docs) plus the `flagged` count.
+    /// Median/TrimmedMean only; the engine applies NormClip per
+    /// message via [`clip`].
+    ///
+    /// The synthetic message carries `client_id = 0` (it is absorbed,
+    /// never booked), an `Explicit`/`F64` update with `scale = 1.0`,
+    /// and a loss only when every input carried one (mirroring the
+    /// undefended `have_loss` rule).
+    pub fn aggregate(self, msgs: &[ClientMsg]) -> Result<(ClientMsg, u32)> {
+        ensure!(!msgs.is_empty(), "defense fold over an empty round");
+        let m = msgs.len();
+        if let Defense::TrimmedMean(f) = self {
+            ensure!(
+                2 * f < m,
+                "trimmedmean:{f} needs more than 2·{f} committed \
+                 messages, got {m}"
+            );
+        }
+        let d = msgs[0].grad.len();
+        let n = msgs[0].update.n;
+        for msg in msgs {
+            ensure!(
+                msg.grad.len() == d && msg.update.n == n,
+                "inconsistent message shapes in one round"
+            );
+        }
+        // Gradient coordinates: every message carries all d.
+        let mut vals = Vec::with_capacity(m);
+        let mut grad = Vec::with_capacity(d);
+        for j in 0..d {
+            vals.clear();
+            vals.extend(msgs.iter().map(|msg| msg.grad[j]));
+            grad.push(self.fold(&mut vals));
+        }
+        // lᵢ, and the loss when every input carried one.
+        vals.clear();
+        vals.extend(msgs.iter().map(|msg| msg.l_i));
+        let l_i = self.fold(&mut vals);
+        let loss = if msgs.iter().all(|msg| msg.loss.is_some()) {
+            vals.clear();
+            vals.extend(msgs.iter().map(|msg| msg.loss.unwrap()));
+            Some(self.fold(&mut vals))
+        } else {
+            None
+        };
+        // Hessian update: union of the packed indices any message
+        // selected, each coordinate's multiset padded with zeros to m
+        // (a client that did not select index j contributed 0 there).
+        // BTreeMap keeps the synthetic payload in ascending-index
+        // order deterministically.
+        let mut per_idx: BTreeMap<u32, Vec<f64>> = BTreeMap::new();
+        for msg in msgs {
+            for (v, idx) in
+                msg.update.values.iter().zip(msg.update.indices())
+            {
+                per_idx
+                    .entry(idx)
+                    .or_default()
+                    .push(msg.update.scale * v);
+            }
+        }
+        let mut indices = Vec::with_capacity(per_idx.len());
+        let mut values = Vec::with_capacity(per_idx.len());
+        for (idx, mut col) in per_idx {
+            ensure!(
+                col.len() <= m,
+                "duplicate packed index {idx} within one message"
+            );
+            col.resize(m, 0.0);
+            indices.push(idx);
+            values.push(self.fold(&mut col));
+        }
+        let synth = ClientMsg {
+            client_id: 0,
+            grad,
+            update: Compressed {
+                payload: IndexPayload::Explicit(indices),
+                values,
+                scale: 1.0,
+                encoding: ValueEncoding::F64,
+                n,
+            },
+            l_i,
+            loss,
+        };
+        Ok((synth, self.flagged(m)))
+    }
+}
+
+/// NormClip one committed message: γ = min(1, τ/ν) with
+/// ν² = ‖grad‖² + Σⱼ(scale·vⱼ)² — the joint L2 norm of everything the
+/// message folds into the server state (lᵢ and the loss are scalars
+/// the attack model leaves honest; they pass through). Returns `None`
+/// when ν ≤ τ — a true no-op, no value is rewritten — otherwise the
+/// clipped copy (gradient scaled, `update.scale` scaled; the encoded
+/// values stay untouched so wire accounting is unchanged). A
+/// non-finite norm (a NaN smuggled into the payload) clips to zero.
+pub fn clip(msg: &ClientMsg, tau: f64) -> Option<ClientMsg> {
+    let mut ss = 0.0f64;
+    for g in &msg.grad {
+        ss += g * g;
+    }
+    for v in &msg.update.values {
+        let w = msg.update.scale * v;
+        ss += w * w;
+    }
+    if ss <= tau * tau {
+        return None;
+    }
+    let gamma = if ss.is_nan() { 0.0 } else { tau / ss.sqrt() };
+    let mut out = msg.clone();
+    for g in &mut out.grad {
+        *g *= gamma;
+    }
+    out.update.scale *= gamma;
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{run_engine, Options, StepPolicy};
+    use crate::compressors::by_name;
+    use crate::coordinator::SeqPool;
+    use crate::data::{generate_synthetic, Dataset, SynthSpec};
+    use crate::oracle::LogisticOracle;
+    use crate::rng::{shuffle, Pcg64};
+
+    fn msg(
+        id: usize,
+        grad: Vec<f64>,
+        idx: Vec<u32>,
+        vals: Vec<f64>,
+        scale: f64,
+        l_i: f64,
+    ) -> ClientMsg {
+        ClientMsg {
+            client_id: id,
+            grad,
+            update: Compressed {
+                payload: IndexPayload::Explicit(idx),
+                values: vals,
+                scale,
+                encoding: ValueEncoding::F64,
+                n: 6,
+            },
+            l_i,
+            loss: None,
+        }
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects() {
+        for spec in ["normclip:2.5", "median", "trimmedmean:1"] {
+            let d = Defense::parse(spec).unwrap();
+            assert_eq!(d.to_spec(), spec);
+            assert_eq!(Defense::parse(&d.to_spec()).unwrap(), d);
+        }
+        assert_eq!(
+            Defense::parse("normclip:10").unwrap(),
+            Defense::NormClip(10.0)
+        );
+        for bad in [
+            "", "mean", "medianx", "median:3", "normclip", "normclip:",
+            "normclip:abc", "normclip:0", "normclip:-1", "normclip:inf",
+            "normclip:NaN", "trimmedmean", "trimmedmean:",
+            "trimmedmean:-1", "trimmedmean:1.5", "trimmedmean:abc",
+        ] {
+            assert!(Defense::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn median_fold_is_permutation_invariant() {
+        // Three clients with disjoint sparse updates; shuffling the
+        // commit order must not move a bit of the synthetic message.
+        let msgs = vec![
+            msg(0, vec![1.0, -2.0], vec![0, 3], vec![0.5, 0.25], 2.0, 0.1),
+            msg(1, vec![-0.5, 4.0], vec![3, 5], vec![1.5, -0.75], 1.0, 0.3),
+            msg(2, vec![100.0, 0.0], vec![0, 5], vec![-9.0, 8.0], 1.0, 0.2),
+        ];
+        let (base, flagged) = Defense::Median.aggregate(&msgs).unwrap();
+        assert_eq!(flagged, 2);
+        let mut rng = Pcg64::seed_from_u64(42);
+        for _ in 0..8 {
+            let mut perm = msgs.clone();
+            shuffle(&mut rng, &mut perm);
+            let (got, _) = Defense::Median.aggregate(&perm).unwrap();
+            assert_eq!(got.grad.len(), base.grad.len());
+            for (a, b) in got.grad.iter().zip(&base.grad) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(got.l_i.to_bits(), base.l_i.to_bits());
+            assert_eq!(got.update.indices(), base.update.indices());
+            for (a, b) in got.update.values.iter().zip(&base.update.values)
+            {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        // Median sum-equivalents: grad j=0 → median(1,-0.5,100)·3;
+        // packed idx 0 is {1.0, -9.0, 0} → median 0·3 = 0.
+        assert_eq!(base.grad[0].to_bits(), (1.0f64 * 3.0).to_bits());
+        assert_eq!(base.update.indices(), vec![0, 3, 5]);
+        assert_eq!(base.update.values[0].to_bits(), 0.0f64.to_bits());
+    }
+
+    #[test]
+    fn trimmed_mean_discards_extremes() {
+        // Five contributions at grad[0]: one huge outlier each side;
+        // f=1 keeps {-1, 0, 2} → sum-equivalent 1·(5/3).
+        let msgs: Vec<ClientMsg> = [(-1e9, 0), (2.0, 1), (0.0, 2),
+            (-1.0, 3), (1e9, 4)]
+            .iter()
+            .map(|&(g, id)| {
+                msg(id, vec![g], vec![0], vec![g], 1.0, 0.0)
+            })
+            .collect();
+        let (synth, flagged) =
+            Defense::TrimmedMean(1).aggregate(&msgs).unwrap();
+        assert_eq!(flagged, 2);
+        let want = 1.0 * (5.0 / 3.0);
+        assert_eq!(synth.grad[0].to_bits(), want.to_bits());
+        assert_eq!(synth.update.values[0].to_bits(), want.to_bits());
+        // f too large for the committed count aborts loudly.
+        assert!(Defense::TrimmedMean(2).aggregate(&msgs).is_err());
+        assert!(Defense::TrimmedMean(3).aggregate(&msgs).is_err());
+    }
+
+    #[test]
+    fn trimmed_mean_zero_is_the_exact_sum() {
+        // f=0 sum-equivalents must equal the exact RepAcc sum bit for
+        // bit — the undefended absorb of the same values.
+        let msgs = vec![
+            msg(0, vec![0.1, 1e17], vec![1], vec![0.25], 2.0, 0.7),
+            msg(1, vec![0.2, 1.0], vec![1, 4], vec![-0.5, 3.0], 1.0, -0.7),
+            msg(2, vec![0.3, -1e17], vec![4], vec![1e-3], 4.0, 0.1),
+        ];
+        let (synth, flagged) =
+            Defense::TrimmedMean(0).aggregate(&msgs).unwrap();
+        assert_eq!(flagged, 0);
+        for j in 0..2 {
+            let mut acc = RepAcc::new();
+            for m in &msgs {
+                acc.accumulate(m.grad[j]);
+            }
+            assert_eq!(synth.grad[j].to_bits(), acc.round().to_bits());
+        }
+        // Packed index 1: 2.0·0.25 + 1.0·(−0.5) = 0.
+        let mut acc = RepAcc::new();
+        acc.accumulate(2.0 * 0.25);
+        acc.accumulate(-0.5);
+        assert_eq!(synth.update.values[0].to_bits(), acc.round().to_bits());
+    }
+
+    #[test]
+    fn clip_is_identity_below_threshold() {
+        let m = msg(0, vec![3.0, 4.0], vec![2], vec![1.0], 0.5, 1.0);
+        // ν² = 9 + 16 + 0.25 = 25.25.
+        assert!(clip(&m, 5.025).is_none(), "ν ≈ 5.02 ≤ τ must pass");
+        let clipped = clip(&m, 0.5).expect("ν > τ must clip");
+        let gamma = 0.5 / 25.25f64.sqrt();
+        assert_eq!(clipped.grad[0].to_bits(), (3.0 * gamma).to_bits());
+        assert_eq!(clipped.grad[1].to_bits(), (4.0 * gamma).to_bits());
+        assert_eq!(
+            clipped.update.scale.to_bits(),
+            (0.5 * gamma).to_bits()
+        );
+        // Encoded values and l_i pass through untouched.
+        assert_eq!(clipped.update.values, m.update.values);
+        assert_eq!(clipped.l_i.to_bits(), m.l_i.to_bits());
+        // A NaN payload clips to zero, never propagates.
+        let bad = msg(1, vec![f64::NAN], vec![], vec![], 1.0, 0.0);
+        let z = clip(&bad, 1.0).unwrap();
+        assert_eq!(z.grad[0].to_bits(), 0.0f64.to_bits());
+    }
+
+    fn make_clients(
+        n: usize,
+        seed: u64,
+    ) -> (Vec<crate::algorithms::ClientState>, usize) {
+        let spec = SynthSpec {
+            d_raw: 7,
+            n_samples: n * 24,
+            density: 0.6,
+            noise: 1.0,
+            label_bias: 0.0,
+            seed,
+        };
+        let synth = generate_synthetic(&spec);
+        let samples: Vec<crate::data::LibsvmSample> = synth
+            .labels
+            .iter()
+            .zip(&synth.rows)
+            .map(|(l, r)| crate::data::LibsvmSample {
+                label: *l,
+                features: r.clone(),
+            })
+            .collect();
+        let ds = Dataset::from_libsvm(&samples, spec.d_raw);
+        let d = ds.d;
+        let cs = ds
+            .split_even(n)
+            .unwrap()
+            .into_iter()
+            .enumerate()
+            .map(|(i, sh)| {
+                crate::algorithms::ClientState::new(
+                    i,
+                    Box::new(LogisticOracle::new(sh, 1e-3)),
+                    by_name("topk", d, 2, seed + i as u64).unwrap(),
+                    None,
+                )
+            })
+            .collect();
+        (cs, d)
+    }
+
+    fn run_with(defense: Option<Defense>) -> Vec<u64> {
+        let (cs, d) = make_clients(5, 1234);
+        let mut pool = SeqPool::new(cs);
+        let opts = Options {
+            rounds: 8,
+            warm_start: true,
+            defense,
+            ..Default::default()
+        };
+        let trace = run_engine(
+            &mut pool,
+            &opts,
+            StepPolicy::Newton,
+            vec![0.0; d],
+            "robust-prop",
+        );
+        trace.records.iter().map(|r| r.grad_norm.to_bits()).collect()
+    }
+
+    #[test]
+    fn huge_normclip_is_bitwise_undefended() {
+        // A threshold no honest client reaches: the clip never fires,
+        // the atom path equals the sum path by exactness, so the
+        // trajectory is the undefended one bit for bit.
+        assert_eq!(run_with(None), run_with(Some(Defense::NormClip(1e300))));
+    }
+
+    #[test]
+    fn trimmed_mean_zero_is_bitwise_undefended() {
+        assert_eq!(
+            run_with(None),
+            run_with(Some(Defense::TrimmedMean(0)))
+        );
+    }
+}

@@ -18,7 +18,9 @@ use fednl::algorithms::{
     RoundPolicy,
 };
 use fednl::compressors::by_name;
-use fednl::coordinator::{ClientPool, FaultPlan, FaultPool, SeqPool};
+use fednl::coordinator::{
+    ClientPool, CorruptMode, FaultPlan, FaultPool, SeqPool,
+};
 use fednl::data::{generate_synthetic, Dataset, LibsvmSample, SynthSpec};
 use fednl::net::client::ClientMode;
 use fednl::net::server::Bound;
@@ -26,8 +28,14 @@ use fednl::net::{run_client, run_mux_clients, EventPool, MuxReport};
 use fednl::oracle::LogisticOracle;
 
 fn dataset(d_raw: usize, n: usize, seed: u64) -> Dataset {
-    let spec =
-        SynthSpec { d_raw, n_samples: n, density: 0.5, noise: 1.0, seed };
+    let spec = SynthSpec {
+        d_raw,
+        n_samples: n,
+        density: 0.5,
+        noise: 1.0,
+        label_bias: 0.0,
+        seed,
+    };
     let synth = generate_synthetic(&spec);
     let samples: Vec<LibsvmSample> = synth
         .labels
@@ -318,6 +326,78 @@ fn event_pool_fault_plan_bit_identical() {
         "{} -> {}",
         first,
         t_seq.last_grad_norm()
+    );
+}
+
+#[test]
+fn event_pool_corrupt_plan_defended_bit_identical() {
+    // Byzantine corruption + the median defense over the readiness
+    // transport with a mixed topology (clients 0–2 behind one mux
+    // group, 3–5 plain): corruption is injected master-side after the
+    // mux batches are unpacked into per-client atoms, so the
+    // trajectory — including the robust fold and its `flagged`
+    // accounting — must match the in-process reference bit for bit.
+    // One attacker lives inside the mux group and one outside.
+    let ds = dataset(8, 180, 43);
+    let d = ds.d;
+    const N: usize = 6;
+    let x0 = vec![0.0; d];
+    let rounds = 18u64;
+    let mut plan = FaultPlan::none();
+    for r in 2..rounds {
+        plan = plan
+            .with_corrupt(r, 1, CorruptMode::Scale(100.0))
+            .with_corrupt(r, 4, CorruptMode::Scale(100.0));
+    }
+    let opts = Options {
+        rounds,
+        warm_start: true,
+        defense: Some(fednl::robust::Defense::Median),
+        ..Default::default()
+    };
+
+    let mut seq = FaultPool::new(
+        SeqPool::new(fednl_clients(&ds, N, "topk")),
+        plan.clone(),
+    );
+    let t_seq =
+        run_fednl_pool(&mut seq, &opts, x0.clone(), "corrupt-def-seq");
+
+    let bound = Bound::bind("127.0.0.1:0").unwrap();
+    let addr = bound.local_addr().unwrap().to_string();
+    let (muxes, plains) =
+        spawn_mixed(&ds, N, "topk", &addr, false, &[(0, 0, 3)]);
+    let mut pool =
+        FaultPool::new(EventPool::accept(bound, N).unwrap(), plan);
+    let t_ev =
+        run_fednl_pool(&mut pool, &opts, x0, "corrupt-def-event");
+    pool.into_inner().shutdown();
+    for h in muxes {
+        h.join().unwrap().unwrap();
+    }
+    for h in plains {
+        h.join().unwrap().unwrap();
+    }
+
+    assert_eq!(t_seq.records.len(), t_ev.records.len());
+    for (a, b) in t_seq.records.iter().zip(&t_ev.records) {
+        assert_eq!(
+            a.grad_norm.to_bits(),
+            b.grad_norm.to_bits(),
+            "round {}",
+            a.round
+        );
+        assert_eq!((a.committed, a.missing), (b.committed, b.missing));
+        assert_eq!(a.flagged, b.flagged, "round {}", a.round);
+    }
+    // The median fold flags committed−1 on every round, and the
+    // defended run converges despite the two ×100 attackers.
+    assert!(t_seq.records.iter().all(|r| r.flagged == (N as u32) - 1));
+    let first = t_seq.records[0].grad_norm;
+    let last = t_seq.last_grad_norm();
+    assert!(
+        last.is_finite() && last < first * 1e-2,
+        "{first} -> {last}"
     );
 }
 

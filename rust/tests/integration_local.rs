@@ -8,7 +8,8 @@ use fednl::algorithms::{
 };
 use fednl::compressors::{by_name, ALL_NAMES};
 use fednl::coordinator::{
-    ClientPool, FaultPlan, FaultPool, SeqPool, ShardedPool, ThreadedPool,
+    ClientPool, CorruptMode, FaultPlan, FaultPool, SeqPool, ShardedPool,
+    ThreadedPool,
 };
 use fednl::data::{
     generate_synthetic, parse_libsvm_bytes, write_libsvm, Dataset, SynthSpec,
@@ -27,6 +28,7 @@ fn problem(
         n_samples: n_clients * n_i,
         density: 0.4,
         noise: 1.0,
+        label_bias: 0.0,
         seed,
     };
     // Text round-trip on every test: generator → LIBSVM → parser.
@@ -763,6 +765,148 @@ fn sharded_under_fault_plan_bit_identical() {
             );
             assert_eq!(a.bytes_up, b.bytes_up);
             assert_eq!((a.committed, a.missing), (b.committed, b.missing));
+        }
+    }
+}
+
+#[test]
+fn corrupt_plan_bit_identical_across_pools() {
+    // Deterministic corruption: the same `corrupt@` plan — one event
+    // of every mode — must yield bit-identical (possibly diverging!)
+    // trajectories on SeqPool, ThreadedPool at several worker counts,
+    // and the sharded tier, because the injection is a pure function
+    // of (plan, round, client), not of reply arrival order.
+    let (ds, d) = problem(9, 5, 40, 150);
+    let x0 = vec![0.0; d];
+    let plan = FaultPlan::none()
+        .with_corrupt(2, 1, CorruptMode::Scale(50.0))
+        .with_corrupt(3, 0, CorruptMode::SignFlip)
+        .with_corrupt(5, 4, CorruptMode::Garbage)
+        .with_corrupt(7, 2, CorruptMode::Zero);
+    // The parser round-trips the programmatic plan.
+    assert_eq!(FaultPlan::parse(&plan.to_spec()).unwrap().to_spec(),
+               plan.to_spec());
+    let opts = Options { rounds: 12, track_loss: true, ..Default::default() };
+    let mut seq = FaultPool::new(
+        SeqPool::new(clients(&ds, 5, "topk", 33)),
+        plan.clone(),
+    );
+    let t_ref = run_fednl_pool(&mut seq, &opts, x0.clone(), "corrupt-seq");
+    // The attack engaged: the corrupted trajectory differs from clean.
+    let mut clean = SeqPool::new(clients(&ds, 5, "topk", 33));
+    let t_clean = run_fednl_pool(&mut clean, &opts, x0.clone(), "clean");
+    assert!(
+        t_ref
+            .records
+            .iter()
+            .zip(&t_clean.records)
+            .any(|(a, b)| a.grad_norm.to_bits() != b.grad_norm.to_bits()),
+        "corrupt plan had no effect"
+    );
+    for workers in [1usize, 2, 5] {
+        let mut thr = FaultPool::new(
+            ThreadedPool::new(clients(&ds, 5, "topk", 33), workers),
+            plan.clone(),
+        );
+        let t = run_fednl_pool(&mut thr, &opts, x0.clone(), "corrupt-thr");
+        assert_eq!(t_ref.records.len(), t.records.len());
+        for (a, b) in t_ref.records.iter().zip(&t.records) {
+            assert_eq!(
+                a.grad_norm.to_bits(),
+                b.grad_norm.to_bits(),
+                "workers={workers} round {}",
+                a.round
+            );
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.bytes_up, b.bytes_up);
+        }
+    }
+    for s in [2usize, 3] {
+        let mut sh = FaultPool::new(
+            ShardedPool::new_threaded(clients(&ds, 5, "topk", 33), s, 2),
+            plan.clone(),
+        );
+        let t = run_fednl_pool(&mut sh, &opts, x0.clone(), "corrupt-sh");
+        for (a, b) in t_ref.records.iter().zip(&t.records) {
+            assert_eq!(
+                a.grad_norm.to_bits(),
+                b.grad_norm.to_bits(),
+                "S={s} round {}",
+                a.round
+            );
+        }
+    }
+}
+
+#[test]
+fn defenses_bit_identical_across_pools_and_converge() {
+    // The robust fold under a persistent scale attack: median and
+    // trimmedmean:1 both neutralize two ×50 attackers out of six
+    // clients (4 honest > 2f), converge, flag the documented count,
+    // and stay bit-identical across SeqPool / ThreadedPool / the
+    // sharded tier (the fold sorts with total_cmp over the committed
+    // set, so arrival order and shard grouping are unobservable).
+    let (ds, d) = problem(9, 6, 40, 151);
+    let x0 = vec![0.0; d];
+    let rounds = 25u64;
+    let mut plan = FaultPlan::none();
+    for r in 2..rounds {
+        plan = plan
+            .with_corrupt(r, 1, CorruptMode::Scale(50.0))
+            .with_corrupt(r, 4, CorruptMode::Scale(50.0));
+    }
+    for (defense, want_flagged) in [
+        (fednl::robust::Defense::Median, 5u32),
+        (fednl::robust::Defense::TrimmedMean(1), 2u32),
+    ] {
+        let opts = Options {
+            rounds,
+            warm_start: true,
+            defense: Some(defense),
+            ..Default::default()
+        };
+        let mut seq = FaultPool::new(
+            SeqPool::new(clients(&ds, 6, "topk", 37)),
+            plan.clone(),
+        );
+        let t_ref = run_fednl_pool(&mut seq, &opts, x0.clone(), "def-seq");
+        let g0 = t_ref.records[0].grad_norm;
+        assert!(
+            t_ref.last_grad_norm().is_finite()
+                && t_ref.last_grad_norm() < g0 * 1e-2,
+            "{defense:?} did not converge: {} → {}",
+            g0,
+            t_ref.last_grad_norm()
+        );
+        for r in t_ref.records.iter().filter(|r| r.round >= 2) {
+            assert_eq!(
+                r.flagged, want_flagged,
+                "{defense:?} round {}",
+                r.round
+            );
+        }
+        let mut thr = FaultPool::new(
+            ThreadedPool::new(clients(&ds, 6, "topk", 37), 3),
+            plan.clone(),
+        );
+        let t_thr = run_fednl_pool(&mut thr, &opts, x0.clone(), "def-thr");
+        let mut sh = FaultPool::new(
+            ShardedPool::new_threaded(clients(&ds, 6, "topk", 37), 3, 2),
+            plan.clone(),
+        );
+        let t_sh = run_fednl_pool(&mut sh, &opts, x0.clone(), "def-sh");
+        for t in [&t_thr, &t_sh] {
+            assert_eq!(t_ref.records.len(), t.records.len());
+            for (a, b) in t_ref.records.iter().zip(&t.records) {
+                assert_eq!(
+                    a.grad_norm.to_bits(),
+                    b.grad_norm.to_bits(),
+                    "{defense:?} round {}",
+                    a.round
+                );
+                assert_eq!(a.flagged, b.flagged);
+                assert_eq!((a.committed, a.missing), (b.committed, b.missing));
+            }
         }
     }
 }

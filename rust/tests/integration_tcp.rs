@@ -9,7 +9,9 @@ use fednl::algorithms::{
     PPClientState, RoundPolicy,
 };
 use fednl::compressors::by_name;
-use fednl::coordinator::{shard, ClientPool, FaultPlan, FaultPool, SeqPool};
+use fednl::coordinator::{
+    shard, ClientPool, CorruptMode, FaultPlan, FaultPool, SeqPool,
+};
 use fednl::data::{generate_synthetic, Dataset, LibsvmSample, SynthSpec};
 use fednl::net::client::ClientMode;
 use fednl::net::server::Bound;
@@ -21,8 +23,14 @@ use fednl::net::{
 use fednl::oracle::LogisticOracle;
 
 fn dataset(d_raw: usize, n: usize, seed: u64) -> Dataset {
-    let spec =
-        SynthSpec { d_raw, n_samples: n, density: 0.5, noise: 1.0, seed };
+    let spec = SynthSpec {
+        d_raw,
+        n_samples: n,
+        density: 0.5,
+        noise: 1.0,
+        label_bias: 0.0,
+        seed,
+    };
     let synth = generate_synthetic(&spec);
     let samples: Vec<LibsvmSample> = synth
         .labels
@@ -376,6 +384,100 @@ fn tcp_fault_plan_matches_in_process_bitwise() {
         first,
         t_seq.last_grad_norm()
     );
+}
+
+#[test]
+fn tcp_corrupt_plan_and_defense_match_in_process_bitwise() {
+    // Byzantine corruption is injected master-side in the FaultPool,
+    // so the same `corrupt@` plan must reproduce the in-process FedNL
+    // trajectory bit-for-bit over real sockets — both undefended (the
+    // raw attack) and under `--defense median` (the robust fold sees
+    // identical committed sets on every transport). Byte columns are
+    // transport-metered for FedNL over TCP and deliberately not
+    // compared; the defended run must also converge while the
+    // undefended one must not.
+    let ds = dataset(8, 180, 41);
+    let d = ds.d;
+    const N: usize = 6;
+    let x0 = vec![0.0; d];
+    let rounds = 18u64;
+    let mut plan = FaultPlan::none();
+    for r in 2..rounds {
+        plan = plan
+            .with_corrupt(r, 0, CorruptMode::Scale(100.0))
+            .with_corrupt(r, 3, CorruptMode::Scale(100.0));
+    }
+    let fednl_clients = || -> Vec<ClientState> {
+        ds.split_even(N)
+            .unwrap()
+            .into_iter()
+            .map(|sh| {
+                let id = sh.client_id;
+                ClientState::new(
+                    id,
+                    Box::new(LogisticOracle::new(sh, 1e-3)),
+                    by_name("topk", d, 8, 100 + id as u64).unwrap(),
+                    None,
+                )
+            })
+            .collect()
+    };
+    for defense in [None, Some(fednl::robust::Defense::Median)] {
+        let opts = Options {
+            rounds,
+            warm_start: true,
+            defense,
+            ..Default::default()
+        };
+        let mut seq = FaultPool::new(
+            SeqPool::new(fednl_clients()),
+            plan.clone(),
+        );
+        let t_seq =
+            run_fednl_pool(&mut seq, &opts, x0.clone(), "corrupt-seq");
+
+        let bound = Bound::bind("127.0.0.1:0").unwrap();
+        let addr = bound.local_addr().unwrap().to_string();
+        let handles = spawn_clients(&ds, N, "topk", &addr, false);
+        let mut tcp = FaultPool::new(bound.accept(N).unwrap(), plan.clone());
+        let t_tcp =
+            run_fednl_pool(&mut tcp, &opts, x0.clone(), "corrupt-tcp");
+        tcp.into_inner().shutdown();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+
+        assert_eq!(t_seq.records.len(), t_tcp.records.len());
+        for (a, b) in t_seq.records.iter().zip(&t_tcp.records) {
+            assert_eq!(
+                a.grad_norm.to_bits(),
+                b.grad_norm.to_bits(),
+                "defense={defense:?} round {}",
+                a.round
+            );
+            assert_eq!((a.committed, a.missing), (b.committed, b.missing));
+            assert_eq!(a.flagged, b.flagged, "round {}", a.round);
+        }
+        let first = t_seq.records[0].grad_norm;
+        let last = t_seq.last_grad_norm();
+        match defense {
+            // Negated so a NaN/inf blow-up also counts as degraded.
+            None => assert!(
+                !(last < first * 1e-1),
+                "attack ineffective: {first:.3e} -> {last:.3e}"
+            ),
+            Some(_) => {
+                assert!(
+                    last.is_finite() && last < first * 1e-2,
+                    "defense failed: {first:.3e} -> {last:.3e}"
+                );
+                assert!(t_seq
+                    .records
+                    .iter()
+                    .all(|r| r.flagged == (N as u32) - 1));
+            }
+        }
+    }
 }
 
 /// Spawn a full relay tier on loopback: `n_shards` relay threads (one

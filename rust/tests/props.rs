@@ -281,6 +281,7 @@ fn prop_fault_plans_bit_identical_across_pools() {
             n_samples: n_clients * 30,
             density: 0.6,
             noise: 1.0,
+            label_bias: 0.0,
             seed,
         };
         let synth = generate_synthetic(&spec);

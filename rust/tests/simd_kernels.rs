@@ -500,6 +500,7 @@ fn make_clients(n: usize, compressor: &str, seed: u64) -> (Vec<ClientState>, usi
         n_samples: n * 40,
         density: 0.6,
         noise: 1.0,
+        label_bias: 0.0,
         seed,
     };
     let synth = generate_synthetic(&spec);
