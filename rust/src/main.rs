@@ -231,9 +231,11 @@ fn fault_plan(args: &Args) -> Result<FaultPlan> {
 }
 
 /// `--defense SPEC` (`normclip:TAU` | `median` | `trimmedmean:F`),
-/// shared by `train` and `master`. Newton family only: FedNL-PP
+/// shared by `train` and `master`. Allowlisted to the engines that
+/// actually consult `Options.defense` (fednl, fednl-ls): FedNL-PP
 /// aggregates *deltas* into persistent state, which a robust fold of
-/// one round cannot defend — rejected here, before data loading.
+/// one round cannot defend, and any other algo would silently ignore
+/// the flag — both rejected here, before data loading.
 fn defense_opt(
     args: &Args,
     algo: &str,
@@ -242,9 +244,9 @@ fn defense_opt(
         None => Ok(None),
         Some(spec) => {
             anyhow::ensure!(
-                algo != "fednl-pp",
+                matches!(algo, "fednl" | "fednl-ls"),
                 "--defense supports the Newton family (fednl, fednl-ls) \
-                 only, not fednl-pp"
+                 only, not '{algo}'"
             );
             Ok(Some(fednl::robust::Defense::parse(spec)?))
         }

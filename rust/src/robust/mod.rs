@@ -223,25 +223,31 @@ impl Defense {
         // selected, each coordinate's multiset padded with zeros to m
         // (a client that did not select index j contributed 0 there).
         // BTreeMap keeps the synthetic payload in ascending-index
-        // order deterministically.
-        let mut per_idx: BTreeMap<u32, Vec<f64>> = BTreeMap::new();
-        for msg in msgs {
+        // order deterministically. Each column remembers the last
+        // message that touched it so a duplicated index *within* one
+        // message is rejected outright — inferring duplicates from the
+        // aggregate column length would miss a double-count whenever
+        // some other message skipped that index.
+        let mut per_idx: BTreeMap<u32, (usize, Vec<f64>)> = BTreeMap::new();
+        for (mi, msg) in msgs.iter().enumerate() {
             for (v, idx) in
                 msg.update.values.iter().zip(msg.update.indices())
             {
-                per_idx
+                let col = per_idx
                     .entry(idx)
-                    .or_default()
-                    .push(msg.update.scale * v);
+                    .or_insert_with(|| (usize::MAX, Vec::new()));
+                ensure!(
+                    col.0 != mi,
+                    "duplicate packed index {idx} within one message"
+                );
+                col.0 = mi;
+                col.1.push(msg.update.scale * v);
             }
         }
         let mut indices = Vec::with_capacity(per_idx.len());
         let mut values = Vec::with_capacity(per_idx.len());
-        for (idx, mut col) in per_idx {
-            ensure!(
-                col.len() <= m,
-                "duplicate packed index {idx} within one message"
-            );
+        for (idx, (_, mut col)) in per_idx {
+            debug_assert!(col.len() <= m, "column {idx} overfull");
             col.resize(m, 0.0);
             indices.push(idx);
             values.push(self.fold(&mut col));
@@ -270,7 +276,11 @@ impl Defense {
 /// when ν ≤ τ — a true no-op, no value is rewritten — otherwise the
 /// clipped copy (gradient scaled, `update.scale` scaled; the encoded
 /// values stay untouched so wire accounting is unchanged). A
-/// non-finite norm (a NaN smuggled into the payload) clips to zero.
+/// non-finite norm (a NaN or ±∞ smuggled into the payload) clips to
+/// zero outright — grad, `update.scale`, *and* the encoded values are
+/// overwritten with 0.0, because scaling by γ = 0 would leave the
+/// poisoned entries in place (NaN·0 = NaN, and the engine absorbs
+/// `scale·vⱼ` per packed value).
 pub fn clip(msg: &ClientMsg, tau: f64) -> Option<ClientMsg> {
     let mut ss = 0.0f64;
     for g in &msg.grad {
@@ -283,12 +293,18 @@ pub fn clip(msg: &ClientMsg, tau: f64) -> Option<ClientMsg> {
     if ss <= tau * tau {
         return None;
     }
-    let gamma = if ss.is_nan() { 0.0 } else { tau / ss.sqrt() };
     let mut out = msg.clone();
-    for g in &mut out.grad {
-        *g *= gamma;
+    if ss.is_finite() {
+        let gamma = tau / ss.sqrt();
+        for g in &mut out.grad {
+            *g *= gamma;
+        }
+        out.update.scale *= gamma;
+    } else {
+        out.grad.fill(0.0);
+        out.update.values.fill(0.0);
+        out.update.scale = 0.0;
     }
-    out.update.scale *= gamma;
     Some(out)
 }
 
@@ -444,10 +460,43 @@ mod tests {
         // Encoded values and l_i pass through untouched.
         assert_eq!(clipped.update.values, m.update.values);
         assert_eq!(clipped.l_i.to_bits(), m.l_i.to_bits());
-        // A NaN payload clips to zero, never propagates.
-        let bad = msg(1, vec![f64::NAN], vec![], vec![], 1.0, 0.0);
-        let z = clip(&bad, 1.0).unwrap();
-        assert_eq!(z.grad[0].to_bits(), 0.0f64.to_bits());
+        // A NaN payload clips to zero, never propagates — grad,
+        // scale, AND encoded values (the engine absorbs scale·vⱼ, and
+        // 0·NaN is still NaN, so γ-scaling alone would not disarm it).
+        let bad = msg(
+            1,
+            vec![f64::NAN, 1.0],
+            vec![2, 4],
+            vec![f64::NAN, f64::INFINITY],
+            2.0,
+            0.0,
+        );
+        let z = clip(&bad, 1.0).expect("non-finite ν must clip");
+        for g in &z.grad {
+            assert_eq!(g.to_bits(), 0.0f64.to_bits());
+        }
+        assert_eq!(z.update.scale.to_bits(), 0.0f64.to_bits());
+        for v in &z.update.values {
+            assert_eq!(v.to_bits(), 0.0f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn duplicate_packed_index_within_one_message_rejected() {
+        // The duplicate lives at an index no other message selected,
+        // so the column never exceeds m entries — only per-message
+        // tracking can catch the double count.
+        let good = msg(0, vec![1.0], vec![0, 1], vec![1.0, 2.0], 1.0, 0.0);
+        let dup = msg(1, vec![1.0], vec![3, 3], vec![1.0, 2.0], 1.0, 0.0);
+        for defense in [Defense::Median, Defense::TrimmedMean(0)] {
+            let err = defense
+                .aggregate(&[good.clone(), dup.clone()])
+                .unwrap_err();
+            assert!(
+                err.to_string().contains("duplicate packed index 3"),
+                "unexpected error: {err}"
+            );
+        }
     }
 
     fn make_clients(
