@@ -91,6 +91,9 @@ use std::time::Duration;
 use super::fednl_ls::LineSearchParams;
 use super::{ClientMsg, Options, RoundSum, ServerState, UpdateRule};
 use crate::compressors::{Compressed, IndexPayload, ValueEncoding};
+use crate::coordinator::checkpoint::{
+    self, AlgoSnap, CheckpointCfg, Snapshot,
+};
 use crate::coordinator::{ClientFamily, ClientPool, RoundMode};
 use crate::linalg::packed::PackedUpper;
 use crate::linalg::{vector, Cholesky, Mat};
@@ -407,11 +410,27 @@ pub fn run_engine(
     x0: Vec<f64>,
     label: &str,
 ) -> Trace {
+    run_engine_from(pool, opts, policy, x0, label, None)
+}
+
+/// [`run_engine`] resuming from a durable coordinator [`Snapshot`]
+/// (`master --restore`): the engine reinstalls the snapshot state
+/// verbatim — aggregate, watermarks, byte meters, trace prefix, RNG
+/// position — and continues at `snap.round_next`, producing a
+/// trajectory bit-identical to the uninterrupted run.
+pub fn run_engine_from(
+    pool: &mut dyn ClientPool,
+    opts: &Options,
+    policy: StepPolicy<'_>,
+    x0: Vec<f64>,
+    label: &str,
+    resume: Option<Snapshot>,
+) -> Trace {
     match policy {
         StepPolicy::PartialParticipation { tau, seed } => {
-            run_pp(pool, opts, tau, seed, x0, label)
+            run_pp(pool, opts, tau, seed, x0, label, resume)
         }
-        _ => run_newton_family(pool, opts, policy, x0, label),
+        _ => run_newton_family(pool, opts, policy, x0, label, resume),
     }
 }
 
@@ -424,6 +443,7 @@ fn run_newton_family(
     policy: StepPolicy<'_>,
     x0: Vec<f64>,
     label: &str,
+    resume: Option<Snapshot>,
 ) -> Trace {
     let ls: Option<&LineSearchParams> = match policy {
         StepPolicy::LineSearch(p) => Some(p),
@@ -448,11 +468,23 @@ fn run_newton_family(
     // own value — the server must aggregate with the α the clients
     // actually use, on every topology (bit-identity across transports
     // depends on it).
-    let requested = opts.alpha.unwrap_or_else(|| pool.default_alpha());
+    // On resume the snapshot's α is re-installed verbatim — the
+    // trajectory is a function of its exact bits, so a renegotiation
+    // that settled elsewhere would silently fork the run.
+    let requested = match &resume {
+        Some(snap) => snap.alpha,
+        None => opts.alpha.unwrap_or_else(|| pool.default_alpha()),
+    };
     let alpha = pool.set_alpha(requested);
     assert!(
         alpha.is_finite() && alpha > 0.0,
         "α negotiation failed: no client reported a usable α"
+    );
+    let ck: Option<&CheckpointCfg> = opts.checkpoint.as_ref();
+    assert!(
+        ck.is_none() || !opts.speculate,
+        "--speculate is incompatible with checkpointing: a snapshot \
+         cannot capture an in-flight speculation"
     );
     let mut server = ServerState::new(d, n, alpha, x0);
     let mut trace = Trace::new(label.to_string());
@@ -490,7 +522,7 @@ fn run_newton_family(
     // iff its round is at or below this watermark.
     let mut last_commit: Vec<Option<u64>> = vec![None; n];
 
-    if opts.warm_start {
+    if resume.is_none() && opts.warm_start {
         let x = server.x.clone();
         bytes_down += wire::vec_frame_bytes(d) * n as u64;
         let packed = pool.warm_start(&x);
@@ -501,7 +533,76 @@ fn run_newton_family(
         server.init_h_from_packed(&packed);
     }
 
-    for round in 0..opts.rounds {
+    // ROUND_ACK gating under checkpointing: acks buffer here and are
+    // released only once a snapshot covering their round is durable, so
+    // no client ever permanently commits a round a restored master
+    // could re-run (the crash-safety half of exactly-once). The staged
+    // ladder on failover clients grows to the checkpoint cadence in the
+    // meantime.
+    let mut pending_acks: Vec<(u64, Vec<u32>)> = Vec::new();
+    let mut start_round = 0u64;
+    if let Some(snap) = &resume {
+        // `master --restore`: reinstall the durable coordinator state
+        // and continue at the recorded round. The reconnecting clients
+        // resolve their staged ladders against the restored watermark
+        // through the ordinary rejoin path below.
+        let (s, lc, rc) = install_newton_snapshot(snap, d, n, alpha);
+        server = s;
+        last_commit = lc;
+        reuse_cache = rc;
+        bytes_up = snap.bytes_up;
+        bytes_down = snap.bytes_down;
+        trace.records = snap.records.clone();
+        start_round =
+            if snap.finished { opts.rounds } else { snap.round_next };
+    } else if let Some(cfg) = ck {
+        // Round-0 baseline: even a crash before the first cadence
+        // boundary (killmaster@0 included) has a restore point.
+        let snap = newton_snap(
+            &server,
+            &last_commit,
+            &reuse_cache,
+            &trace,
+            (bytes_up, bytes_down),
+            0,
+            false,
+            &rp,
+            label,
+            &cfg.plan_spec,
+        );
+        checkpoint::write_snapshot(&cfg.dir, &snap)
+            .expect("checkpoint write failed");
+    }
+
+    for round in start_round..opts.rounds {
+        // Scripted coordinator crash (`killmaster@R`), in-process
+        // flavor: entering round R, drop every piece of master state
+        // and rebuild it from the latest durable snapshot — the same
+        // restore path `master --restore` runs after a real SIGKILL.
+        // The in-process clients survive, exactly like TCP clients
+        // outliving the killed master process.
+        if pool.take_master_kill(round) {
+            let cfg = ck.expect(
+                "killmaster@R requires checkpointing (--checkpoint-dir)",
+            );
+            let snap = checkpoint::load_latest(&cfg.dir)
+                .expect("checkpoint load failed")
+                .expect("killmaster@R fired with no snapshot on disk");
+            assert_eq!(
+                snap.round_next, round,
+                "killmaster@{round}: the latest snapshot resumes at a \
+                 different round; align --checkpoint-every with the \
+                 kill round"
+            );
+            let (s, lc, rc) = install_newton_snapshot(&snap, d, n, alpha);
+            server = s;
+            last_commit = lc;
+            reuse_cache = rc;
+            bytes_up = snap.bytes_up;
+            bytes_down = snap.bytes_down;
+            trace.records = snap.records.clone();
+            pending_acks.clear();
+        }
         pool.prepare_round(round);
         // Rejoin resolution (commit-ack protocol): each rejoiner's
         // staged-but-unacked shift resolves against this engine's
@@ -510,8 +611,39 @@ fn run_newton_family(
         // otherwise. Exactly-once either way. A *frozen* in-process
         // rejoiner stages nothing, so resolution is a no-op, exactly
         // like the pre-failover behavior.
-        for ci in pool.take_rejoined() {
-            pool.resolve_staged(ci, last_commit[ci as usize]);
+        let rejoined = pool.take_rejoined();
+        if !rejoined.is_empty() {
+            // Under checkpointing, the RESYNC watermark must never run
+            // ahead of the durable state: the rejoiner permanently
+            // commits staged rounds at or below the watermark, and a
+            // later master crash must not re-run them. Force a covering
+            // snapshot before resolving (also makes a subsequent
+            // PULL_H exact — no pending staged shifts remain).
+            if let Some(cfg) = ck {
+                if !pending_acks.is_empty() {
+                    let snap = newton_snap(
+                        &server,
+                        &last_commit,
+                        &reuse_cache,
+                        &trace,
+                        (bytes_up, bytes_down),
+                        round,
+                        false,
+                        &rp,
+                        label,
+                        &cfg.plan_spec,
+                    );
+                    write_and_flush_acks(
+                        cfg,
+                        &snap,
+                        pool,
+                        &mut pending_acks,
+                    );
+                }
+            }
+            for ci in rejoined {
+                pool.resolve_staged(ci, last_commit[ci as usize]);
+            }
         }
         // Fresh-state rejoiners (`REG_FRESH`): rebuild the exact
         // server-side H = (1/n)ΣHᵢ from a full packed-Hᵢ pull, so a
@@ -620,8 +752,14 @@ fn run_newton_family(
         // Announce the round's commit to the repliers it counted and
         // advance their watermarks. The pools forward ROUND_ACK only
         // to registrants that asked (`REG_WANTS_ACK`); their FIFO
-        // channels order it before the next round's command.
-        pool.ack_round(round, &acked);
+        // channels order it before the next round's command. Under
+        // checkpointing the ack is deferred until the covering
+        // snapshot is durable (see `pending_acks` above).
+        if ck.is_some() {
+            pending_acks.push((round, acked.clone()));
+        } else {
+            pool.ack_round(round, &acked);
+        }
         for &ci in &acked {
             last_commit[ci as usize] = Some(round);
         }
@@ -701,6 +839,45 @@ fn run_newton_family(
                 );
             }
         }
+        // Durable checkpoint every `every` rounds, written *after* the
+        // x-update so the snapshot is exactly the state the next round
+        // reads; the deferred ROUND_ACKs it covers flush right after.
+        if let Some(cfg) = ck {
+            if (round + 1) % cfg.every == 0 {
+                let snap = newton_snap(
+                    &server,
+                    &last_commit,
+                    &reuse_cache,
+                    &trace,
+                    (bytes_up, bytes_down),
+                    round + 1,
+                    false,
+                    &rp,
+                    label,
+                    &cfg.plan_spec,
+                );
+                write_and_flush_acks(cfg, &snap, pool, &mut pending_acks);
+            }
+        }
+    }
+    if let Some(cfg) = ck {
+        // Terminal snapshot, marked finished so restoring a completed
+        // run executes zero further rounds. Also flushes the acks a
+        // tolerance break left pending.
+        let round_next = trace.records.last().map_or(0, |r| r.round + 1);
+        let snap = newton_snap(
+            &server,
+            &last_commit,
+            &reuse_cache,
+            &trace,
+            (bytes_up, bytes_down),
+            round_next,
+            true,
+            &rp,
+            label,
+            &cfg.plan_spec,
+        );
+        write_and_flush_acks(cfg, &snap, pool, &mut pending_acks);
     }
     trace.wait_secs = timing.0;
     trace.aggregate_secs = timing.1;
@@ -717,6 +894,7 @@ fn run_pp(
     seed: u64,
     x0: Vec<f64>,
     label: &str,
+    resume: Option<Snapshot>,
 ) -> Trace {
     let n = pool.n_clients();
     assert!(tau >= 1 && tau <= n, "tau must be in [1, n]");
@@ -790,8 +968,78 @@ fn run_pp(
     let mut timing = (0.0f64, 0.0f64);
     // Per-round exact delta sums (reused allocation).
     let mut rsum = RoundSum::new();
+    let ck: Option<&CheckpointCfg> = opts.checkpoint.as_ref();
+    let mut start_round = 0u64;
+    if let Some(snap) = &resume {
+        // `--restore`: the persistent (Hᵏ, lᵏ, gᵏ), the per-client
+        // mirrors, and the subset sampler resume mid-stream from the
+        // snapshot; the init_state pull above is discarded (its byte
+        // charges are overwritten by the snapshot's meters).
+        install_pp_snapshot(
+            snap, d, n, &mut h, &mut l, &mut g, &mut l_of, &mut g_of,
+            &mut rng, &mut x,
+        );
+        assert_eq!(
+            alpha.to_bits(),
+            snap.alpha.to_bits(),
+            "restored α differs from the snapshot's"
+        );
+        bytes_up = snap.bytes_up;
+        bytes_down = snap.bytes_down;
+        trace.records = snap.records.clone();
+        start_round =
+            if snap.finished { opts.rounds } else { snap.round_next };
+    } else if let Some(cfg) = ck {
+        // Round-0 baseline (see run_newton_family).
+        let snap = pp_snap(
+            d,
+            n,
+            alpha,
+            &h,
+            l,
+            &g,
+            &l_of,
+            &g_of,
+            &rng,
+            &x,
+            &trace,
+            (bytes_up, bytes_down),
+            0,
+            false,
+            &rp,
+            label,
+            &cfg.plan_spec,
+        );
+        checkpoint::write_snapshot(&cfg.dir, &snap)
+            .expect("checkpoint write failed");
+    }
 
-    for round in 0..opts.rounds {
+    for round in start_round..opts.rounds {
+        // Scripted coordinator crash (`killmaster@R`), in-process
+        // flavor — see run_newton_family. PP has no ack protocol to
+        // flush: the mirrors, sampler position, and aggregates all
+        // live in the snapshot.
+        if pool.take_master_kill(round) {
+            let cfg = ck.expect(
+                "killmaster@R requires checkpointing (--checkpoint-dir)",
+            );
+            let snap = checkpoint::load_latest(&cfg.dir)
+                .expect("checkpoint load failed")
+                .expect("killmaster@R fired with no snapshot on disk");
+            assert_eq!(
+                snap.round_next, round,
+                "killmaster@{round}: the latest snapshot resumes at a \
+                 different round; align --checkpoint-every with the \
+                 kill round"
+            );
+            install_pp_snapshot(
+                &snap, d, n, &mut h, &mut l, &mut g, &mut l_of,
+                &mut g_of, &mut rng, &mut x,
+            );
+            bytes_up = snap.bytes_up;
+            bytes_down = snap.bytes_down;
+            trace.records = snap.records.clone();
+        }
         pool.prepare_round(round);
         // Rejoin resync (STATE pull): fold the difference between the
         // client's actual (lᵢ, gᵢ) and the engine's mirror into the
@@ -889,10 +1137,252 @@ fn run_pp(
                 break;
             }
         }
+        // Durable checkpoint at the cadence boundary: state after the
+        // round's folds, sampler past the round's draws — exactly what
+        // round + 1 reads.
+        if let Some(cfg) = ck {
+            if (round + 1) % cfg.every == 0 {
+                let snap = pp_snap(
+                    d,
+                    n,
+                    alpha,
+                    &h,
+                    l,
+                    &g,
+                    &l_of,
+                    &g_of,
+                    &rng,
+                    &x,
+                    &trace,
+                    (bytes_up, bytes_down),
+                    round + 1,
+                    false,
+                    &rp,
+                    label,
+                    &cfg.plan_spec,
+                );
+                checkpoint::write_snapshot(&cfg.dir, &snap)
+                    .expect("checkpoint write failed");
+                let _ = checkpoint::prune(
+                    &cfg.dir,
+                    checkpoint::KEEP_SNAPSHOTS,
+                );
+            }
+        }
+    }
+    if let Some(cfg) = ck {
+        // Terminal snapshot (see run_newton_family).
+        let round_next = trace.records.last().map_or(0, |r| r.round + 1);
+        let snap = pp_snap(
+            d,
+            n,
+            alpha,
+            &h,
+            l,
+            &g,
+            &l_of,
+            &g_of,
+            &rng,
+            &x,
+            &trace,
+            (bytes_up, bytes_down),
+            round_next,
+            true,
+            &rp,
+            label,
+            &cfg.plan_spec,
+        );
+        checkpoint::write_snapshot(&cfg.dir, &snap)
+            .expect("checkpoint write failed");
+        let _ = checkpoint::prune(&cfg.dir, checkpoint::KEEP_SNAPSHOTS);
     }
     trace.wait_secs = timing.0;
     trace.aggregate_secs = timing.1;
     trace
+}
+
+/// Rebuild the Newton-family coordinator state from a durable
+/// [`Snapshot`] — shared by `--restore` and the in-process
+/// `killmaster@R` rebuild. The aggregate H and shift l land in a fresh
+/// [`ServerState`] at the snapshot's iterate; the per-round scratch
+/// (`sys`, `sum`) is rebuilt by the next round's `begin_round` /
+/// `newton_direction` exactly as in an uninterrupted run.
+fn install_newton_snapshot(
+    snap: &Snapshot,
+    d: usize,
+    n: usize,
+    alpha: f64,
+) -> (ServerState, Vec<Option<u64>>, Vec<Option<ClientMsg>>) {
+    assert_eq!(
+        (snap.d, snap.n),
+        (d, n),
+        "snapshot shape (d={}, n={}) does not match the run",
+        snap.d,
+        snap.n
+    );
+    assert_eq!(
+        alpha.to_bits(),
+        snap.alpha.to_bits(),
+        "restored α differs from the snapshot's"
+    );
+    let AlgoSnap::Newton { h, l, last_commit, reuse_cache } = &snap.algo
+    else {
+        panic!(
+            "snapshot holds FedNL-PP state but the run is Newton-family"
+        );
+    };
+    let mut server = ServerState::new(d, n, alpha, snap.x.clone());
+    server.h.as_mut_slice().copy_from_slice(h);
+    server.l = *l;
+    (server, last_commit.clone(), reuse_cache.clone())
+}
+
+/// Reinstall the FedNL-PP driver state from a durable [`Snapshot`]:
+/// persistent aggregates, per-client mirrors, iterate, and the subset
+/// sampler mid-stream (bit-exact continuation of the draw sequence).
+#[allow(clippy::too_many_arguments)]
+fn install_pp_snapshot(
+    snap: &Snapshot,
+    d: usize,
+    n: usize,
+    h: &mut Mat,
+    l: &mut f64,
+    g: &mut Vec<f64>,
+    l_of: &mut Vec<f64>,
+    g_of: &mut Vec<Vec<f64>>,
+    rng: &mut Pcg64,
+    x: &mut Vec<f64>,
+) {
+    assert_eq!(
+        (snap.d, snap.n),
+        (d, n),
+        "snapshot shape (d={}, n={}) does not match the run",
+        snap.d,
+        snap.n
+    );
+    let AlgoSnap::Pp {
+        h: sh,
+        l: sl,
+        g: sg,
+        l_of: slo,
+        g_of: sgo,
+        rng_state,
+        rng_inc,
+    } = &snap.algo
+    else {
+        panic!(
+            "snapshot holds Newton-family state but the run is FedNL-PP"
+        );
+    };
+    h.as_mut_slice().copy_from_slice(sh);
+    *l = *sl;
+    *g = sg.clone();
+    *l_of = slo.clone();
+    *g_of = sgo.clone();
+    *rng = Pcg64::from_parts(*rng_state, *rng_inc);
+    *x = snap.x.clone();
+}
+
+/// Assemble a Newton-family [`Snapshot`] of the coordinator state as it
+/// stands entering `round_next`.
+#[allow(clippy::too_many_arguments)]
+fn newton_snap(
+    server: &ServerState,
+    last_commit: &[Option<u64>],
+    reuse_cache: &[Option<ClientMsg>],
+    trace: &Trace,
+    bytes: (u64, u64),
+    round_next: u64,
+    finished: bool,
+    rp: &RoundPolicy,
+    label: &str,
+    plan_spec: &str,
+) -> Snapshot {
+    Snapshot {
+        finished,
+        round_next,
+        d: server.d,
+        n: server.n_clients,
+        alpha: server.alpha,
+        bytes_up: bytes.0,
+        bytes_down: bytes.1,
+        x: server.x.clone(),
+        label: label.to_string(),
+        plan_spec: plan_spec.to_string(),
+        policy: *rp,
+        algo: AlgoSnap::Newton {
+            h: server.h.as_slice().to_vec(),
+            l: server.l,
+            last_commit: last_commit.to_vec(),
+            reuse_cache: reuse_cache.to_vec(),
+        },
+        records: trace.records.clone(),
+    }
+}
+
+/// Assemble a FedNL-PP [`Snapshot`] entering `round_next`.
+#[allow(clippy::too_many_arguments)]
+fn pp_snap(
+    d: usize,
+    n: usize,
+    alpha: f64,
+    h: &Mat,
+    l: f64,
+    g: &[f64],
+    l_of: &[f64],
+    g_of: &[Vec<f64>],
+    rng: &Pcg64,
+    x: &[f64],
+    trace: &Trace,
+    bytes: (u64, u64),
+    round_next: u64,
+    finished: bool,
+    rp: &RoundPolicy,
+    label: &str,
+    plan_spec: &str,
+) -> Snapshot {
+    let (rng_state, rng_inc) = rng.state_parts();
+    Snapshot {
+        finished,
+        round_next,
+        d,
+        n,
+        alpha,
+        bytes_up: bytes.0,
+        bytes_down: bytes.1,
+        x: x.to_vec(),
+        label: label.to_string(),
+        plan_spec: plan_spec.to_string(),
+        policy: *rp,
+        algo: AlgoSnap::Pp {
+            h: h.as_slice().to_vec(),
+            l,
+            g: g.to_vec(),
+            l_of: l_of.to_vec(),
+            g_of: g_of.to_vec(),
+            rng_state,
+            rng_inc,
+        },
+        records: trace.records.clone(),
+    }
+}
+
+/// Write a snapshot durably, prune superseded ones, and only then
+/// release the deferred `ROUND_ACK`s it covers — the ordering IS the
+/// crash-safety invariant: a client learns its round committed only
+/// after the commit is on disk.
+fn write_and_flush_acks(
+    cfg: &CheckpointCfg,
+    snap: &Snapshot,
+    pool: &mut dyn ClientPool,
+    pending: &mut Vec<(u64, Vec<u32>)>,
+) {
+    checkpoint::write_snapshot(&cfg.dir, snap)
+        .expect("checkpoint write failed");
+    let _ = checkpoint::prune(&cfg.dir, checkpoint::KEEP_SNAPSHOTS);
+    for (r, acked) in pending.drain(..) {
+        pool.ack_round(r, &acked);
+    }
 }
 
 /// Abort loudly when a round closed below quorum (`None` = all

@@ -16,7 +16,8 @@ pub mod fednl_pp;
 pub mod state;
 
 pub use engine::{
-    run_engine, select_pp_subset, OnMissing, RoundPolicy, StepPolicy,
+    run_engine, run_engine_from, select_pp_subset, OnMissing, RoundPolicy,
+    StepPolicy,
 };
 pub use fednl::{run_fednl, run_fednl_pool};
 pub use fednl_ls::{run_fednl_ls, run_fednl_ls_pool, LineSearchParams};
@@ -72,6 +73,14 @@ pub struct Options {
     /// per-client atoms; speculation, a sum-path feature, never
     /// engages). Newton family only — FedNL-PP rejects it.
     pub defense: Option<crate::robust::Defense>,
+    /// Durable checkpointing (`--checkpoint-dir` / `--checkpoint-every`):
+    /// the engine writes an atomic, checksummed snapshot of the
+    /// coordinator state every `every` rounds and defers `ROUND_ACK`s
+    /// until the covering snapshot is durable, so a crashed-and-
+    /// restored master resumes **bit-identically** (see
+    /// [`crate::coordinator::checkpoint`]). Mutually exclusive with
+    /// `speculate` (a snapshot cannot capture in-flight speculation).
+    pub checkpoint: Option<crate::coordinator::CheckpointCfg>,
 }
 
 impl Default for Options {
@@ -86,6 +95,7 @@ impl Default for Options {
             policy: RoundPolicy::default(),
             speculate: false,
             defense: None,
+            checkpoint: None,
         }
     }
 }

@@ -224,16 +224,21 @@ impl RoundSum {
     }
 }
 
-/// A computed-but-unacknowledged round application: the scaled sparse
-/// shift Hᵢ ← Hᵢ + αSᵢ, withheld until the master acknowledges the
-/// round's commit (the commit-ack protocol — see `net::wire`). The
-/// deltas are the exact per-index products `α·scale·vⱼ` the immediate
-/// apply would have added, so commit-then-apply is bitwise identical
-/// to the unstaged path.
+/// A computed-but-unacknowledged round application under the
+/// commit-ack protocol (see `net::wire`). The shift Hᵢ ← Hᵢ + αSᵢ is
+/// applied **eagerly** — the compute path is bit-for-bit the unstaged
+/// one, so trajectories are invariant to when (or whether) acks
+/// arrive — and `prev` records the exact pre-apply `h_shift` value at
+/// every touched packed index, in touch order. Rolling the entries
+/// back newest-first restores those stored bits verbatim, so an
+/// unacknowledged round can be *undone* exactly (no `a + δ − δ ≠ a`
+/// float hazard), which is what lets a checkpoint-restoring master
+/// defer acks for several rounds and still resync rejoiners bitwise.
 #[derive(Debug, Clone)]
 struct StagedApply {
     round: u64,
-    deltas: Vec<(u32, f64)>,
+    /// (packed index, pre-apply value) per touched coordinate.
+    prev: Vec<(u32, f64)>,
 }
 
 /// Per-client FedNL state: local oracle + Hessian shift + compressor.
@@ -246,12 +251,13 @@ pub struct ClientState {
     /// Hessian learning rate α (same value server-side).
     pub alpha: f64,
     pub pu: PackedUpper,
-    /// At most one round's shift in flight (commit-ack staging). The
-    /// ack for round k always resolves before round k+1 is computed
-    /// (TCP FIFO: ROUND_ACK(k) precedes ROUND(k+1); a reconnect
-    /// resolves via RESYNC first), so a pending stage when a new
-    /// staged round arrives is stale and discarded.
-    staged: Option<StagedApply>,
+    /// The ladder of rounds applied but not yet acknowledged, in
+    /// ascending round order (commit-ack staging). With per-round acks
+    /// (TCP FIFO: ROUND_ACK(k) precedes ROUND(k+1)) the ladder never
+    /// exceeds one entry; a checkpointing master that acks only after
+    /// a durable snapshot lets several rounds pile up, and a rejoin
+    /// RESYNC rolls the unacknowledged suffix back newest-first.
+    staged: Vec<StagedApply>,
     // Reused round buffers (no allocation in the loop, §5.13):
     hess: Mat,
     hess_packed: Vec<f64>,
@@ -278,7 +284,7 @@ impl ClientState {
             h_shift: vec![0.0; n],
             alpha,
             pu,
-            staged: None,
+            staged: Vec::new(),
             hess: Mat::zeros(d, d),
             hess_packed: vec![0.0; n],
             diff: vec![0.0; n],
@@ -308,13 +314,15 @@ impl ClientState {
     }
 
     /// [`ClientState::round`] under the commit-ack protocol: the shift
-    /// update Hᵢᵏ⁺¹ = Hᵢᵏ + αSᵢᵏ is **staged**, not applied — it lands
-    /// only on [`commit_staged`] (the master's `ROUND_ACK`) or a
-    /// favorable [`resolve_staged`] (rejoin `RESYNC`). Closes the
-    /// "computed but reply lost" hole: a round the master never
-    /// committed leaves this client's state bitwise identical to never
-    /// having computed it, which is exactly what the deterministic
-    /// fault plan's frozen-client semantics assume.
+    /// update Hᵢᵏ⁺¹ = Hᵢᵏ + αSᵢᵏ is applied eagerly (bitwise the
+    /// unstaged compute) but recorded as **revocable** — the master's
+    /// `ROUND_ACK` ([`commit_staged`]) makes it permanent, and an
+    /// unfavorable rejoin `RESYNC` ([`resolve_staged`]) rolls it back
+    /// to the exact pre-round bits. Closes the "computed but reply
+    /// lost" hole: a round the master never committed leaves this
+    /// client's state bitwise identical to never having computed it,
+    /// which is exactly what the deterministic fault plan's
+    /// frozen-client semantics assume.
     ///
     /// [`commit_staged`]: ClientState::commit_staged
     /// [`resolve_staged`]: ClientState::resolve_staged
@@ -348,17 +356,15 @@ impl ClientState {
         // Hᵢᵏ⁺¹ = Hᵢᵏ + α Sᵢᵏ, sparse in packed coords (line 6).
         let a = self.alpha * update.scale;
         if stage {
-            // A still-pending stage is stale (its round was never
-            // acked yet the master moved on) — drop it.
-            self.staged = Some(StagedApply {
-                round,
-                deltas: update
-                    .values
-                    .iter()
-                    .zip(update.indices())
-                    .map(|(v, idx)| (idx, a * v))
-                    .collect(),
-            });
+            // Eager apply with exact undo info: record the pre-apply
+            // bits at every touched index, then take the same
+            // `+= a*v` step the unstaged path takes.
+            let mut prev = Vec::with_capacity(update.values.len());
+            for (v, idx) in update.values.iter().zip(update.indices()) {
+                prev.push((idx, self.h_shift[idx as usize]));
+                self.h_shift[idx as usize] += a * v;
+            }
+            self.staged.push(StagedApply { round, prev });
         } else {
             for (v, idx) in update.values.iter().zip(update.indices()) {
                 self.h_shift[idx as usize] += a * v;
@@ -373,45 +379,57 @@ impl ClientState {
         }
     }
 
-    /// Round of the shift currently staged, if any (test hook).
+    /// Round of the newest revocable shift, if any (test hook).
     pub fn staged_round(&self) -> Option<u64> {
-        self.staged.as_ref().map(|s| s.round)
+        self.staged.last().map(|s| s.round)
     }
 
-    /// Apply the staged shift: the master committed `round` with this
-    /// client's reply counted (`ROUND_ACK`). A stage newer than the
-    /// acked round is impossible on an ordered channel and is kept; an
-    /// older one is stale and applied too (its commit was simply
-    /// reported late).
+    /// Revocable entries currently on the ladder (test hook).
+    pub fn staged_len(&self) -> usize {
+        self.staged.len()
+    }
+
+    /// The master committed every round up to and including `round`
+    /// with this client's reply counted (`ROUND_ACK`): shifts at or
+    /// below it become permanent — their rollback records are dropped.
+    /// The shifts themselves were applied eagerly at compute time, so
+    /// this touches no floats; a second ack of the same round is a
+    /// no-op (exactly-once).
     pub fn commit_staged(&mut self, round: u64) {
-        if let Some(s) = self.staged.take() {
-            if s.round > round {
-                self.staged = Some(s);
-                return;
-            }
-            for &(idx, dv) in &s.deltas {
-                self.h_shift[idx as usize] += dv;
+        self.staged.retain(|s| s.round > round);
+    }
+
+    /// Roll back every revocable shift, newest first, restoring the
+    /// recorded pre-apply bits verbatim (the master certified the
+    /// rounds missed this client).
+    pub fn discard_staged(&mut self) {
+        while let Some(s) = self.staged.pop() {
+            for &(idx, old) in s.prev.iter().rev() {
+                self.h_shift[idx as usize] = old;
             }
         }
-    }
-
-    /// Drop the staged shift without applying it (the master certified
-    /// the round missed this client).
-    pub fn discard_staged(&mut self) {
-        self.staged = None;
     }
 
     /// Rejoin resolution against the master's commit watermark
-    /// (`RESYNC`): a staged round the master committed (≤
-    /// `last_commit`) is applied — the reply was delivered but the ack
-    /// was lost; anything newer (or any stage when the master never
-    /// committed us) is discarded — the reply never made it. Both
-    /// windows land on exactly-once application.
+    /// (`RESYNC`): staged rounds the master committed (≤
+    /// `last_commit`) become permanent — the replies were delivered
+    /// even if the acks were lost; anything newer (or everything, when
+    /// the master never committed us) is rolled back newest-first —
+    /// those replies never made it. Both windows land on exactly-once
+    /// application, and the rollback restores stored bits, so the
+    /// surviving state is exactly the watermark-round state.
     pub fn resolve_staged(&mut self, last_commit: Option<u64>) {
-        match (self.staged.as_ref(), last_commit) {
-            (Some(s), Some(lc)) if s.round <= lc => self.commit_staged(lc),
-            _ => self.discard_staged(),
+        while let Some(s) = self.staged.last() {
+            if last_commit.is_some_and(|lc| s.round <= lc) {
+                break;
+            }
+            let s = self.staged.pop().unwrap();
+            for &(idx, old) in s.prev.iter().rev() {
+                self.h_shift[idx as usize] = old;
+            }
         }
+        // Whatever remains is at or below the watermark: permanent.
+        self.staged.clear();
     }
 
     /// Current packed Hᵢ (the exact-resync upload a fresh-state
@@ -668,21 +686,26 @@ mod tests {
         let m1 = plain.round(&x, 0, true);
         let m2 = staged.round_staged(&x, 0, true);
         assert_eq!(m1.l_i.to_bits(), m2.l_i.to_bits());
-        // Before the ack the staged client hasn't moved.
-        assert_eq!(staged.h_shift, vec![0.0; staged.h_shift.len()]);
-        assert_eq!(staged.staged_round(), Some(0));
-        staged.commit_staged(0);
-        assert_eq!(staged.staged_round(), None);
+        // Eager apply: the staged client's shift matches the unstaged
+        // one bitwise *before* the ack — staging only records undo
+        // bits, so the compute path is invariant to ack cadence.
         let a: Vec<u64> =
             plain.h_shift.iter().map(|v| v.to_bits()).collect();
         let b: Vec<u64> =
             staged.h_shift.iter().map(|v| v.to_bits()).collect();
         assert_eq!(a, b);
-        // Double commit is a no-op (exactly-once).
+        assert_eq!(staged.staged_round(), Some(0));
+        // The ack only drops the rollback record; floats untouched.
         staged.commit_staged(0);
+        assert_eq!(staged.staged_round(), None);
         let b2: Vec<u64> =
             staged.h_shift.iter().map(|v| v.to_bits()).collect();
         assert_eq!(b, b2);
+        // Double commit is a no-op (exactly-once).
+        staged.commit_staged(0);
+        let b3: Vec<u64> =
+            staged.h_shift.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(b, b3);
     }
 
     #[test]
@@ -713,14 +736,35 @@ mod tests {
     }
 
     #[test]
-    fn new_staged_round_supersedes_stale_stage() {
+    fn staged_ladder_rolls_back_suffix_above_watermark() {
+        // Two revocable rounds deep (the shape deferred acks under
+        // --checkpoint-every K produce), then RESYNC(last_commit = 1):
+        // round 2 rolls back bitwise, round 1 survives.
         let mut c = quad_client(0);
         c.round_staged(&[0.1, 0.2], 1, false);
+        let after_r1: Vec<u64> =
+            c.h_shift.iter().map(|v| v.to_bits()).collect();
         c.round_staged(&[0.2, 0.1], 2, false);
         assert_eq!(c.staged_round(), Some(2));
-        // Committing the newer round applies only the newer deltas.
-        c.commit_staged(2);
+        assert_eq!(c.staged_len(), 2);
+        c.resolve_staged(Some(1));
         assert_eq!(c.staged_round(), None);
+        let healed: Vec<u64> =
+            c.h_shift.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(healed, after_r1);
+        // Full discard rolls a fresh two-deep ladder back to zero.
+        let mut d = quad_client(0);
+        d.round_staged(&[0.1, 0.2], 1, false);
+        d.round_staged(&[0.2, 0.1], 2, false);
+        d.discard_staged();
+        assert!(d.h_shift.iter().all(|&v| v == 0.0));
+        // Partial commit keeps the newer round revocable.
+        let mut e = quad_client(0);
+        e.round_staged(&[0.1, 0.2], 1, false);
+        e.round_staged(&[0.2, 0.1], 2, false);
+        e.commit_staged(1);
+        assert_eq!(e.staged_round(), Some(2));
+        assert_eq!(e.staged_len(), 1);
     }
 
     #[test]

@@ -1,0 +1,764 @@
+//! Coordinator checkpoint/restore: versioned, checksummed snapshots of
+//! everything the training trajectory is a function of, so a master
+//! killed mid-run resumes **bit-identically** (the determinism-by-
+//! construction guarantee — exact superaccumulators, seeded RNG
+//! streams, commit watermarks — extends across a process boundary).
+//!
+//! # Snapshot field inventory (version 1)
+//!
+//! Every snapshot is one flat byte string, fixed-width LE fields in
+//! this exact order (`[]` = length-prefixed with a u32 count):
+//!
+//! | field             | type            | meaning                                  |
+//! |-------------------|-----------------|------------------------------------------|
+//! | magic             | u32 `0x464E434B`| `"FNCK"`                                 |
+//! | version           | u8 = 1          | codec version (mismatch = reject)        |
+//! | algo              | u8              | 0 = Newton family (FedNL/LS), 1 = PP     |
+//! | finished          | u8              | 1 = the run completed (tol or rounds)    |
+//! | round_next        | u64             | first round the restored run executes    |
+//! | d                 | u64             | model dimension                          |
+//! | n                 | u64             | client count                             |
+//! | alpha             | f64             | negotiated α (re-installed on restore)   |
+//! | bytes_up/down     | u64 × 2         | cumulative logical byte meters           |
+//! | x                 | f64[]           | model iterate entering `round_next`      |
+//! | label             | str             | trace label                              |
+//! | plan_spec         | str             | FaultPlan spec (provenance; may be "")   |
+//! | policy            | u64 ×2 + u8     | quorum / deadline_ms (`u64::MAX` = None) + on_missing |
+//! | — algo = 0 —      |                 |                                          |
+//! | h                 | f64[d·d]        | server H = (1/n)ΣHᵢ, row-major           |
+//! | l                 | f64             | server Lipschitz shift l                 |
+//! | last_commit       | u64[n]          | per-client commit watermark (`u64::MAX` = never) |
+//! | reuse_cache       | (u8 + msg?)[n]  | `OnMissing::Reuse` replay slots ([`ClientMsg`] wire codec) |
+//! | — algo = 1 —      |                 |                                          |
+//! | h                 | f64[d·d]        | persistent Hᵏ                            |
+//! | l                 | f64             | persistent lᵏ                            |
+//! | g                 | f64[d]          | persistent gᵏ                            |
+//! | l_of              | f64[n]          | per-client lᵢ mirrors                    |
+//! | g_of              | f64[n·d]        | per-client gᵢ mirrors, row-major         |
+//! | rng               | u64 × 4         | subset sampler mid-stream (state hi/lo, inc hi/lo) |
+//! | — both —          |                 |                                          |
+//! | records           | record[]        | the trace so far (9 fields each, `RoundRecord` order) |
+//! | crc32             | u32             | IEEE 802.3 over every preceding byte     |
+//!
+//! `elapsed` in the stored records is the original run's wall clock —
+//! faithful provenance, excluded from bitwise comparisons like every
+//! other timing figure in this repo.
+//!
+//! # Atomic-write protocol
+//!
+//! A snapshot for `round_next = R` is durable or absent, never torn:
+//!
+//! 1. encode + crc32 into `ck-<R, zero-padded to 12>.fnck.tmp`;
+//! 2. `File::sync_all` (fsync) the temp file;
+//! 3. `fs::rename` onto `ck-<R>.fnck` (atomic on POSIX).
+//!
+//! [`load_latest`] scans the directory descending by round and returns
+//! the first snapshot that decodes — a crash between steps leaves at
+//! worst a stale `.tmp` (ignored) or a truncated/corrupt tail file
+//! (rejected by length/magic/version/crc checks, falling back to the
+//! previous snapshot). [`prune`] keeps the newest `keep` snapshots so
+//! a run checkpointing every round doesn't grow the directory without
+//! bound; the engine prunes to 3 after each write, which also bounds
+//! how far a restore can fall back.
+//!
+//! The ack protocol makes the fallback *safe*, not just available: the
+//! engine defers `ROUND_ACK`s until a snapshot covering the round is
+//! durable, so any round a client might have committed permanently is
+//! at or below every surviving snapshot's watermark (see the engine's
+//! checkpoint section).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::algorithms::{ClientMsg, OnMissing, RoundPolicy};
+use crate::metrics::RoundRecord;
+use crate::net::wire::{decode_client_msg, encode_client_msg};
+use crate::utils::digest::crc32;
+use crate::utils::{ByteReader, ByteWriter};
+
+const MAGIC: u32 = 0x464E_434B; // "FNCK"
+const VERSION: u8 = 1;
+const SNAP_EXT: &str = "fnck";
+/// Snapshots the engine keeps per directory (newest first); older ones
+/// are pruned after each successful write.
+pub const KEEP_SNAPSHOTS: usize = 3;
+
+/// Checkpointing knobs, carried on `Options` (`--checkpoint-dir DIR
+/// --checkpoint-every K`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointCfg {
+    /// Snapshot directory (created on first write).
+    pub dir: String,
+    /// Write a snapshot after every `every`-th round (≥ 1). The staged
+    /// ack ladder on failover clients grows to this depth: acks are
+    /// withheld until the covering snapshot is durable.
+    pub every: u64,
+    /// FaultPlan spec the run was launched with, recorded for
+    /// provenance ("" = no faults).
+    pub plan_spec: String,
+}
+
+impl CheckpointCfg {
+    pub fn new(dir: impl Into<String>, every: u64) -> Self {
+        assert!(every >= 1, "--checkpoint-every must be >= 1");
+        Self { dir: dir.into(), every, plan_spec: String::new() }
+    }
+}
+
+/// Algorithm-specific half of a snapshot.
+#[derive(Debug, Clone)]
+pub enum AlgoSnap {
+    /// FedNL / FedNL-LS: the `ServerState` aggregate plus the ack
+    /// protocol's commit watermarks and the `Reuse` replay cache.
+    Newton {
+        /// H, row-major d×d.
+        h: Vec<f64>,
+        /// Lipschitz shift l.
+        l: f64,
+        /// Per-client last committed round (`None` = never).
+        last_commit: Vec<Option<u64>>,
+        /// `OnMissing::Reuse` replay slots.
+        reuse_cache: Vec<Option<ClientMsg>>,
+    },
+    /// FedNL-PP: the persistent (Hᵏ, lᵏ, gᵏ), the per-client (lᵢ, gᵢ)
+    /// mirrors, and the subset sampler mid-stream.
+    Pp {
+        /// Hᵏ, row-major d×d.
+        h: Vec<f64>,
+        /// lᵏ.
+        l: f64,
+        /// gᵏ.
+        g: Vec<f64>,
+        /// Per-client lᵢ mirrors.
+        l_of: Vec<f64>,
+        /// Per-client gᵢ mirrors.
+        g_of: Vec<Vec<f64>>,
+        /// Subset sampler (state, inc), mid-stream.
+        rng_state: u128,
+        /// See `rng_state`.
+        rng_inc: u128,
+    },
+}
+
+/// One durable coordinator snapshot — the full field inventory in the
+/// module docs.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// The run completed (tolerance or round budget); restoring a
+    /// finished snapshot runs zero further rounds.
+    pub finished: bool,
+    /// First round the restored run executes.
+    pub round_next: u64,
+    pub d: usize,
+    pub n: usize,
+    /// Negotiated α, re-installed verbatim on restore.
+    pub alpha: f64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    /// Model iterate entering `round_next`.
+    pub x: Vec<f64>,
+    pub label: String,
+    /// FaultPlan spec (provenance; "" = none).
+    pub plan_spec: String,
+    pub policy: RoundPolicy,
+    pub algo: AlgoSnap,
+    /// Per-round trace so far (rounds `0..round_next`).
+    pub records: Vec<RoundRecord>,
+}
+
+const NONE_U64: u64 = u64::MAX;
+
+fn put_opt_u64(w: &mut ByteWriter, v: Option<u64>) {
+    w.put_u64(v.unwrap_or(NONE_U64));
+}
+
+fn get_opt_u64(r: &mut ByteReader) -> Result<Option<u64>> {
+    let v = r.get_u64()?;
+    Ok(if v == NONE_U64 { None } else { Some(v) })
+}
+
+fn put_str(w: &mut ByteWriter, s: &str) {
+    w.put_u32(s.len() as u32);
+    w.put_bytes(s.as_bytes());
+}
+
+fn get_str(r: &mut ByteReader) -> Result<String> {
+    let n = r.get_u32()? as usize;
+    Ok(String::from_utf8(r.get_bytes(n)?.to_vec())?)
+}
+
+fn put_u128(w: &mut ByteWriter, v: u128) {
+    w.put_u64((v >> 64) as u64);
+    w.put_u64(v as u64);
+}
+
+fn get_u128(r: &mut ByteReader) -> Result<u128> {
+    let hi = r.get_u64()? as u128;
+    let lo = r.get_u64()? as u128;
+    Ok((hi << 64) | lo)
+}
+
+impl Snapshot {
+    /// Encode to the version-1 byte string (crc32 trailer included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w =
+            ByteWriter::with_capacity(64 + 8 * (self.d * self.d + self.d));
+        w.put_u32(MAGIC);
+        w.put_u8(VERSION);
+        w.put_u8(match &self.algo {
+            AlgoSnap::Newton { .. } => 0,
+            AlgoSnap::Pp { .. } => 1,
+        });
+        w.put_u8(self.finished as u8);
+        w.put_u64(self.round_next);
+        w.put_u64(self.d as u64);
+        w.put_u64(self.n as u64);
+        w.put_f64(self.alpha);
+        w.put_u64(self.bytes_up);
+        w.put_u64(self.bytes_down);
+        w.put_u32(self.x.len() as u32);
+        w.put_f64_slice(&self.x);
+        put_str(&mut w, &self.label);
+        put_str(&mut w, &self.plan_spec);
+        put_opt_u64(&mut w, self.policy.quorum.map(|q| q as u64));
+        put_opt_u64(&mut w, self.policy.deadline_ms);
+        w.put_u8(match self.policy.on_missing {
+            OnMissing::Drop => 0,
+            OnMissing::Resample => 1,
+            OnMissing::Reuse => 2,
+        });
+        match &self.algo {
+            AlgoSnap::Newton { h, l, last_commit, reuse_cache } => {
+                w.put_u32(h.len() as u32);
+                w.put_f64_slice(h);
+                w.put_f64(*l);
+                w.put_u32(last_commit.len() as u32);
+                for &lc in last_commit {
+                    put_opt_u64(&mut w, lc);
+                }
+                w.put_u32(reuse_cache.len() as u32);
+                for slot in reuse_cache {
+                    match slot {
+                        None => w.put_u8(0),
+                        Some(m) => {
+                            w.put_u8(1);
+                            let enc = encode_client_msg(m);
+                            w.put_u32(enc.len() as u32);
+                            w.put_bytes(&enc);
+                        }
+                    }
+                }
+            }
+            AlgoSnap::Pp { h, l, g, l_of, g_of, rng_state, rng_inc } => {
+                w.put_u32(h.len() as u32);
+                w.put_f64_slice(h);
+                w.put_f64(*l);
+                w.put_u32(g.len() as u32);
+                w.put_f64_slice(g);
+                w.put_u32(l_of.len() as u32);
+                w.put_f64_slice(l_of);
+                w.put_u32(g_of.len() as u32);
+                for gi in g_of {
+                    w.put_u32(gi.len() as u32);
+                    w.put_f64_slice(gi);
+                }
+                put_u128(&mut w, *rng_state);
+                put_u128(&mut w, *rng_inc);
+            }
+        }
+        w.put_u32(self.records.len() as u32);
+        for rec in &self.records {
+            w.put_u64(rec.round);
+            w.put_f64(rec.grad_norm);
+            w.put_f64(rec.loss);
+            w.put_u64(rec.bytes_up);
+            w.put_u64(rec.bytes_down);
+            w.put_f64(rec.elapsed);
+            w.put_u32(rec.committed);
+            w.put_u32(rec.missing);
+            w.put_u32(rec.flagged);
+        }
+        let crc = crc32(w.as_slice());
+        w.put_u32(crc);
+        w.into_vec()
+    }
+
+    /// Decode and validate a version-1 byte string. Truncation, a bad
+    /// magic/version, trailing garbage and any bit flip (crc mismatch)
+    /// are all `Err` — [`load_latest`] turns them into fallback.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        anyhow::ensure!(bytes.len() >= 4, "snapshot truncated");
+        let (payload, trailer) = bytes.split_at(bytes.len() - 4);
+        let stored = ByteReader::new(trailer).get_u32()?;
+        let computed = crc32(payload);
+        anyhow::ensure!(
+            stored == computed,
+            "snapshot checksum mismatch (stored {stored:#010x}, computed {computed:#010x})"
+        );
+        let mut r = ByteReader::new(payload);
+        let magic = r.get_u32()?;
+        anyhow::ensure!(magic == MAGIC, "bad snapshot magic {magic:#010x}");
+        let version = r.get_u8()?;
+        anyhow::ensure!(
+            version == VERSION,
+            "unsupported snapshot version {version} (expected {VERSION})"
+        );
+        let algo_tag = r.get_u8()?;
+        let finished = r.get_u8()? != 0;
+        let round_next = r.get_u64()?;
+        let d = r.get_u64()? as usize;
+        let n = r.get_u64()? as usize;
+        let alpha = r.get_f64()?;
+        let bytes_up = r.get_u64()?;
+        let bytes_down = r.get_u64()?;
+        let nx = r.get_u32()? as usize;
+        let x = r.get_f64_vec(nx)?;
+        let label = get_str(&mut r)?;
+        let plan_spec = get_str(&mut r)?;
+        let quorum = get_opt_u64(&mut r)?.map(|q| q as usize);
+        let deadline_ms = get_opt_u64(&mut r)?;
+        let on_missing = match r.get_u8()? {
+            0 => OnMissing::Drop,
+            1 => OnMissing::Resample,
+            2 => OnMissing::Reuse,
+            t => bail!("bad on_missing tag {t}"),
+        };
+        let algo = match algo_tag {
+            0 => {
+                let nh = r.get_u32()? as usize;
+                let h = r.get_f64_vec(nh)?;
+                let l = r.get_f64()?;
+                let nlc = r.get_u32()? as usize;
+                let mut last_commit = Vec::with_capacity(nlc);
+                for _ in 0..nlc {
+                    last_commit.push(get_opt_u64(&mut r)?);
+                }
+                let nrc = r.get_u32()? as usize;
+                let mut reuse_cache = Vec::with_capacity(nrc);
+                for _ in 0..nrc {
+                    reuse_cache.push(if r.get_u8()? != 0 {
+                        let len = r.get_u32()? as usize;
+                        Some(decode_client_msg(r.get_bytes(len)?)?)
+                    } else {
+                        None
+                    });
+                }
+                AlgoSnap::Newton { h, l, last_commit, reuse_cache }
+            }
+            1 => {
+                let nh = r.get_u32()? as usize;
+                let h = r.get_f64_vec(nh)?;
+                let l = r.get_f64()?;
+                let ng = r.get_u32()? as usize;
+                let g = r.get_f64_vec(ng)?;
+                let nl = r.get_u32()? as usize;
+                let l_of = r.get_f64_vec(nl)?;
+                let ngof = r.get_u32()? as usize;
+                let mut g_of = Vec::with_capacity(ngof);
+                for _ in 0..ngof {
+                    let ni = r.get_u32()? as usize;
+                    g_of.push(r.get_f64_vec(ni)?);
+                }
+                let rng_state = get_u128(&mut r)?;
+                let rng_inc = get_u128(&mut r)?;
+                AlgoSnap::Pp { h, l, g, l_of, g_of, rng_state, rng_inc }
+            }
+            t => bail!("bad algo tag {t}"),
+        };
+        let nrec = r.get_u32()? as usize;
+        let mut records = Vec::with_capacity(nrec);
+        for _ in 0..nrec {
+            records.push(RoundRecord {
+                round: r.get_u64()?,
+                grad_norm: r.get_f64()?,
+                loss: r.get_f64()?,
+                bytes_up: r.get_u64()?,
+                bytes_down: r.get_u64()?,
+                elapsed: r.get_f64()?,
+                committed: r.get_u32()?,
+                missing: r.get_u32()?,
+                flagged: r.get_u32()?,
+            });
+        }
+        anyhow::ensure!(
+            r.remaining() == 0,
+            "snapshot has {} trailing bytes",
+            r.remaining()
+        );
+        Ok(Snapshot {
+            finished,
+            round_next,
+            d,
+            n,
+            alpha,
+            bytes_up,
+            bytes_down,
+            x,
+            label,
+            plan_spec,
+            policy: RoundPolicy { quorum, deadline_ms, on_missing },
+            algo,
+            records,
+        })
+    }
+}
+
+/// `ck-<round_next, zero-padded>.fnck` — zero padding makes the
+/// lexicographic directory order the numeric round order.
+fn snapshot_path(dir: &Path, round_next: u64) -> PathBuf {
+    dir.join(format!("ck-{round_next:012}.{SNAP_EXT}"))
+}
+
+/// Parse a snapshot file name back to its `round_next`.
+fn parse_round(name: &str) -> Option<u64> {
+    let rest = name.strip_prefix("ck-")?;
+    let digits = rest.strip_suffix(&format!(".{SNAP_EXT}"))?;
+    digits.parse().ok()
+}
+
+/// The directory's snapshot files, ascending by round.
+fn snapshot_files(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(out)
+        }
+        Err(e) => {
+            return Err(e)
+                .with_context(|| format!("reading {}", dir.display()))
+        }
+    };
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(round) = parse_round(name) {
+            out.push((round, entry.path()));
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Write `snap` durably under `dir` (created if absent) with the
+/// atomic temp + fsync + rename protocol. Returns the final path.
+pub fn write_snapshot(dir: &str, snap: &Snapshot) -> Result<PathBuf> {
+    let dir = Path::new(dir);
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let path = snapshot_path(dir, snap.round_next);
+    let tmp = path.with_extension(format!("{SNAP_EXT}.tmp"));
+    let bytes = snap.encode();
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(&bytes)?;
+        f.sync_all()?; // durable before it can be named a snapshot
+    }
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(path)
+}
+
+/// Load the newest snapshot that decodes, falling back across a
+/// corrupt or truncated tail. `Ok(None)` = the directory holds no
+/// snapshot at all; a directory whose *every* snapshot is corrupt is
+/// an error (restoring from nothing would silently restart training).
+pub fn load_latest(dir: &str) -> Result<Option<Snapshot>> {
+    let files = snapshot_files(Path::new(dir))?;
+    if files.is_empty() {
+        return Ok(None);
+    }
+    let mut last_err = None;
+    for (_, path) in files.iter().rev() {
+        let attempt = std::fs::read(path)
+            .map_err(anyhow::Error::from)
+            .and_then(|bytes| Snapshot::decode(&bytes));
+        match attempt {
+            Ok(snap) => return Ok(Some(snap)),
+            Err(e) => {
+                eprintln!(
+                    "[checkpoint] skipping {}: {e}",
+                    path.display()
+                );
+                last_err = Some(e);
+            }
+        }
+    }
+    Err(last_err.unwrap().context(format!(
+        "no valid snapshot among {} candidate(s) in {dir}",
+        files.len()
+    )))
+}
+
+/// Delete all but the newest `keep` snapshots (best-effort: an
+/// unlinkable stale file never fails the run).
+pub fn prune(dir: &str, keep: usize) -> Result<()> {
+    let files = snapshot_files(Path::new(dir))?;
+    if files.len() > keep {
+        for (_, path) in &files[..files.len() - keep] {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::{Compressed, IndexPayload, ValueEncoding};
+
+    fn newton_snap() -> Snapshot {
+        let msg = ClientMsg {
+            client_id: 1,
+            grad: vec![0.5, -1.25, 3.0],
+            update: Compressed {
+                payload: IndexPayload::Explicit(vec![0, 4]),
+                values: vec![1.5, -2.0],
+                scale: 0.75,
+                encoding: ValueEncoding::F64,
+                n: 6,
+            },
+            l_i: 2.25,
+            loss: Some(-0.125),
+        };
+        Snapshot {
+            finished: false,
+            round_next: 7,
+            d: 3,
+            n: 2,
+            alpha: 0.5,
+            bytes_up: 12345,
+            bytes_down: 67890,
+            x: vec![1.0, -2.5, 1e-300],
+            label: "fednl-ckpt".into(),
+            plan_spec: "kill@2:1,corrupt@3:0:garbage".into(),
+            policy: RoundPolicy {
+                quorum: Some(1),
+                deadline_ms: Some(250),
+                on_missing: OnMissing::Reuse,
+            },
+            algo: AlgoSnap::Newton {
+                h: (0..9).map(|i| i as f64 * 0.125).collect(),
+                l: 0.0625,
+                last_commit: vec![Some(6), None],
+                reuse_cache: vec![Some(msg), None],
+            },
+            records: vec![RoundRecord {
+                round: 6,
+                grad_norm: 1e-3,
+                loss: 0.7,
+                bytes_up: 100,
+                bytes_down: 200,
+                elapsed: 0.01,
+                committed: 2,
+                missing: 0,
+                flagged: 0,
+            }],
+        }
+    }
+
+    fn pp_snap() -> Snapshot {
+        Snapshot {
+            finished: true,
+            round_next: 3,
+            d: 2,
+            n: 3,
+            alpha: 1.0,
+            bytes_up: 1,
+            bytes_down: 2,
+            x: vec![0.5, -0.5],
+            label: "pp-ckpt".into(),
+            plan_spec: String::new(),
+            policy: RoundPolicy::default(),
+            algo: AlgoSnap::Pp {
+                h: vec![1.0, 0.0, 0.0, 1.0],
+                l: 0.25,
+                g: vec![-1.0, 2.0],
+                l_of: vec![0.1, 0.2, 0.3],
+                g_of: vec![
+                    vec![1.0, 2.0],
+                    vec![3.0, 4.0],
+                    vec![5.0, 6.0],
+                ],
+                rng_state: (7u128 << 64) | 9,
+                rng_inc: (11u128 << 64) | 13,
+            },
+            records: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn codec_round_trips_every_field() {
+        for snap in [newton_snap(), pp_snap()] {
+            let back = Snapshot::decode(&snap.encode()).unwrap();
+            assert_eq!(back.finished, snap.finished);
+            assert_eq!(back.round_next, snap.round_next);
+            assert_eq!((back.d, back.n), (snap.d, snap.n));
+            assert_eq!(back.alpha.to_bits(), snap.alpha.to_bits());
+            assert_eq!(
+                (back.bytes_up, back.bytes_down),
+                (snap.bytes_up, snap.bytes_down)
+            );
+            let bits =
+                |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&back.x), bits(&snap.x));
+            assert_eq!(back.label, snap.label);
+            assert_eq!(back.plan_spec, snap.plan_spec);
+            assert_eq!(back.policy, snap.policy);
+            assert_eq!(back.records.len(), snap.records.len());
+            for (a, b) in back.records.iter().zip(&snap.records) {
+                assert_eq!(a.round, b.round);
+                assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits());
+                assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+                assert_eq!(
+                    (a.bytes_up, a.bytes_down),
+                    (b.bytes_up, b.bytes_down)
+                );
+                assert_eq!(
+                    (a.committed, a.missing, a.flagged),
+                    (b.committed, b.missing, b.flagged)
+                );
+            }
+            match (&back.algo, &snap.algo) {
+                (
+                    AlgoSnap::Newton { h, l, last_commit, reuse_cache },
+                    AlgoSnap::Newton {
+                        h: h2,
+                        l: l2,
+                        last_commit: lc2,
+                        reuse_cache: rc2,
+                    },
+                ) => {
+                    assert_eq!(bits(h), bits(h2));
+                    assert_eq!(l.to_bits(), l2.to_bits());
+                    assert_eq!(last_commit, lc2);
+                    assert_eq!(reuse_cache.len(), rc2.len());
+                    let (a, b) = (
+                        reuse_cache[0].as_ref().unwrap(),
+                        rc2[0].as_ref().unwrap(),
+                    );
+                    assert_eq!(a.client_id, b.client_id);
+                    assert_eq!(bits(&a.grad), bits(&b.grad));
+                    assert_eq!(a.l_i.to_bits(), b.l_i.to_bits());
+                    assert_eq!(a.loss, b.loss);
+                    assert_eq!(a.update.indices(), b.update.indices());
+                    assert_eq!(bits(&a.update.values), bits(&b.update.values));
+                    assert!(reuse_cache[1].is_none());
+                }
+                (
+                    AlgoSnap::Pp {
+                        h,
+                        l,
+                        g,
+                        l_of,
+                        g_of,
+                        rng_state,
+                        rng_inc,
+                    },
+                    AlgoSnap::Pp {
+                        h: h2,
+                        l: l2,
+                        g: g2,
+                        l_of: lo2,
+                        g_of: go2,
+                        rng_state: rs2,
+                        rng_inc: ri2,
+                    },
+                ) => {
+                    assert_eq!(bits(h), bits(h2));
+                    assert_eq!(l.to_bits(), l2.to_bits());
+                    assert_eq!(bits(g), bits(g2));
+                    assert_eq!(bits(l_of), bits(lo2));
+                    assert_eq!(g_of, go2);
+                    assert_eq!((rng_state, rng_inc), (rs2, ri2));
+                }
+                _ => panic!("algo tag flipped through the codec"),
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_any_corruption() {
+        let bytes = newton_snap().encode();
+        // Truncation at every prefix length.
+        for cut in 0..bytes.len() {
+            assert!(
+                Snapshot::decode(&bytes[..cut]).is_err(),
+                "truncation to {cut} bytes accepted"
+            );
+        }
+        // A single bit flip anywhere trips the crc (or a field check).
+        for byte in [0, 4, 5, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[byte] ^= 0x10;
+            assert!(
+                Snapshot::decode(&bad).is_err(),
+                "bit flip at byte {byte} accepted"
+            );
+        }
+        // Trailing garbage is rejected, not silently ignored.
+        let mut long = bytes.clone();
+        long.extend_from_slice(&[0, 0, 0, 0, 0]);
+        assert!(Snapshot::decode(&long).is_err());
+    }
+
+    #[test]
+    fn atomic_write_load_latest_and_prune() {
+        let dir = std::env::temp_dir().join(format!(
+            "fnck-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.to_str().unwrap().to_string();
+
+        // Empty / missing directory: no snapshot, not an error.
+        assert!(load_latest(&dir_s).unwrap().is_none());
+
+        let mut snap = newton_snap();
+        for round in [3u64, 5, 7] {
+            snap.round_next = round;
+            write_snapshot(&dir_s, &snap).unwrap();
+        }
+        assert_eq!(load_latest(&dir_s).unwrap().unwrap().round_next, 7);
+
+        // Corrupt tail (bit flip) falls back to the previous snapshot;
+        // a truncated tail likewise.
+        let tail = snapshot_path(&dir, 7);
+        let mut bytes = std::fs::read(&tail).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&tail, &bytes).unwrap();
+        assert_eq!(load_latest(&dir_s).unwrap().unwrap().round_next, 5);
+        std::fs::write(&tail, &bytes[..10]).unwrap();
+        assert_eq!(load_latest(&dir_s).unwrap().unwrap().round_next, 5);
+
+        // A stale .tmp (crash between write and rename) is invisible.
+        std::fs::write(dir.join("ck-000000000009.fnck.tmp"), b"junk")
+            .unwrap();
+        assert_eq!(load_latest(&dir_s).unwrap().unwrap().round_next, 5);
+
+        // Prune keeps the newest `keep` files.
+        snap.round_next = 9;
+        write_snapshot(&dir_s, &snap).unwrap();
+        prune(&dir_s, 2).unwrap();
+        let names = snapshot_files(&dir).unwrap();
+        assert_eq!(
+            names.iter().map(|(r, _)| *r).collect::<Vec<_>>(),
+            vec![7, 9]
+        );
+
+        // Every remaining snapshot corrupt = a hard error, not a
+        // silent cold start.
+        for (_, p) in &names {
+            std::fs::write(p, b"garbage").unwrap();
+        }
+        assert!(load_latest(&dir_s).is_err());
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

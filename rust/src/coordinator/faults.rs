@@ -51,6 +51,22 @@
 //!   atoms that round and the mutation lands master-side before the
 //!   fold — `drain_sums` callers stay bit-identical by the exactness
 //!   of the reproducible summation layer, and no new wire tags exist.
+//! * `delaydist@R1-R2:lognormal:MU:SIGMA` — every client's reply in
+//!   rounds [R1, R2) is withheld for a **drawn** number of
+//!   milliseconds, ⌊exp(MU + SIGMA·z)⌉ with z a standard Gaussian
+//!   from a Pcg64 seeded by a pure function of (round, client) — the
+//!   same seeding discipline as `garbage`, so the same plan draws the
+//!   same stragglers on every transport. Draws beyond the reply
+//!   deadline become drops exactly like scripted `delay@` events; a
+//!   scripted `delay@R:C:MS` naming the same (round, client) takes
+//!   precedence over the distribution.
+//! * `killmaster@R` — the **coordinator** dies entering round R. The
+//!   engine reacts by dropping its aggregate state and rebuilding it
+//!   from the latest durable checkpoint ([`super::checkpoint`]); the
+//!   `crashsmoke` harness SIGKILLs and relaunches the real master
+//!   process at the same schedule point. Requires checkpointing
+//!   (`--checkpoint-dir`); the restored trajectory is bit-identical
+//!   to the uninterrupted run.
 //!
 //! Faults suppress the ROUND *delivery*: a faulted client never
 //! computes the round, so its local Hessian shift never advances and
@@ -162,6 +178,13 @@ pub struct FaultPlan {
     /// (round, client, mode) Byzantine reply corruptions. Multiple
     /// entries for the same (round, client) compose in plan order.
     pub corruptions: Vec<(u64, u32, CorruptMode)>,
+    /// (from, until, mu, sigma) lognormal straggler-delay windows:
+    /// every reply in rounds [from, until) is held for a seeded
+    /// per-(round, client) draw of ⌊exp(mu + sigma·z)⌉ ms.
+    pub delay_dists: Vec<(u64, u64, f64, f64)>,
+    /// Rounds at which the coordinator itself dies (`killmaster@R`):
+    /// the engine rebuilds from the latest durable checkpoint.
+    pub master_kills: Vec<u64>,
 }
 
 fn num<T: std::str::FromStr>(s: &str, ev: &str) -> Result<T> {
@@ -180,12 +203,15 @@ impl FaultPlan {
             && self.delays.is_empty()
             && self.relay_kills.is_empty()
             && self.corruptions.is_empty()
+            && self.delay_dists.is_empty()
+            && self.master_kills.is_empty()
     }
 
     /// Parse the CLI schema: comma-separated events, each
     /// `kill@R:C[-R2]` | `drop@R:C` | `delay@R:C:MS` |
-    /// `killrelay@R:S` | `corrupt@R:C:MODE` with MODE one of
-    /// `scale:K` | `signflip` | `garbage` | `zero`.
+    /// `killrelay@R:S` | `corrupt@R:C:MODE` (MODE one of
+    /// `scale:K` | `signflip` | `garbage` | `zero`) |
+    /// `delaydist@R1-R2:lognormal:MU:SIGMA` | `killmaster@R`.
     ///
     /// ```text
     /// kill@6:1-18,delay@3:2:25,drop@12:0,corrupt@4:1:scale:100
@@ -200,6 +226,57 @@ impl FaultPlan {
             let Some((kind, rest)) = ev.split_once('@') else {
                 bail!("fault event '{ev}': expected kind@round:client");
             };
+            // Events whose round field is not a plain integer before
+            // the first ':' are handled before the generic split:
+            // killmaster@R carries no argument at all, delaydist's
+            // round field is a span.
+            if kind == "killmaster" {
+                plan.master_kills.push(num(rest, ev)?);
+                continue;
+            }
+            if kind == "delaydist" {
+                let Some((span, dist)) = rest.split_once(':') else {
+                    bail!(
+                        "fault event '{ev}': expected \
+                         delaydist@R1-R2:lognormal:MU:SIGMA"
+                    );
+                };
+                let Some((from, until)) = span.split_once('-') else {
+                    bail!(
+                        "fault event '{ev}': expected round span R1-R2"
+                    );
+                };
+                let from: u64 = num(from, ev)?;
+                let until: u64 = num(until, ev)?;
+                if until <= from {
+                    bail!(
+                        "fault event '{ev}': span end {until} <= \
+                         start {from}"
+                    );
+                }
+                let Some(params) = dist.strip_prefix("lognormal:")
+                else {
+                    bail!(
+                        "fault event '{ev}': unknown delay \
+                         distribution (expected lognormal:MU:SIGMA)"
+                    );
+                };
+                let Some((mu, sigma)) = params.split_once(':') else {
+                    bail!(
+                        "fault event '{ev}': expected lognormal:MU:SIGMA"
+                    );
+                };
+                let mu: f64 = num(mu, ev)?;
+                let sigma: f64 = num(sigma, ev)?;
+                if !mu.is_finite() || !sigma.is_finite() || sigma < 0.0 {
+                    bail!(
+                        "fault event '{ev}': mu must be finite and \
+                         sigma finite and >= 0"
+                    );
+                }
+                plan.delay_dists.push((from, until, mu, sigma));
+                continue;
+            }
             let Some((round, args)) = rest.split_once(':') else {
                 bail!("fault event '{ev}': expected kind@round:client");
             };
@@ -281,6 +358,16 @@ impl FaultPlan {
         for &(r, c, m) in &self.corruptions {
             parts.push(format!("corrupt@{r}:{c}:{}", m.to_spec()));
         }
+        for &(from, until, mu, sigma) in &self.delay_dists {
+            // `{}` prints the shortest round-trippable f64, so
+            // parse(to_spec()) restores the exact bits.
+            parts.push(format!(
+                "delaydist@{from}-{until}:lognormal:{mu}:{sigma}"
+            ));
+        }
+        for &r in &self.master_kills {
+            parts.push(format!("killmaster@{r}"));
+        }
         parts.join(",")
     }
 
@@ -321,6 +408,25 @@ impl FaultPlan {
         mode: CorruptMode,
     ) -> Self {
         self.corruptions.push((round, client, mode));
+        self
+    }
+
+    /// Builder: lognormal straggler delays over rounds [from, until).
+    pub fn with_delay_dist(
+        mut self,
+        from: u64,
+        until: u64,
+        mu: f64,
+        sigma: f64,
+    ) -> Self {
+        self.delay_dists.push((from, until, mu, sigma));
+        self
+    }
+
+    /// Builder: kill the coordinator entering `round` (rebuilt from
+    /// the latest durable checkpoint).
+    pub fn with_master_kill(mut self, round: u64) -> Self {
+        self.master_kills.push(round);
         self
     }
 
@@ -375,6 +481,26 @@ impl FaultPlan {
             .map(|&(_, _, ms)| ms)
     }
 
+    /// The distributional delay for (client, round), if a
+    /// `delaydist` window covers the round: ⌊exp(mu + sigma·z)⌉ ms
+    /// with z drawn from a Pcg64 seeded purely by (round, client) —
+    /// the same draw on every transport. The first matching window
+    /// wins (windows compose by order, like scripted events).
+    fn dist_delay_at(&self, client: u32, round: u64) -> Option<u64> {
+        self.delay_dists
+            .iter()
+            .find(|&&(from, until, _, _)| round >= from && round < until)
+            .map(|&(_, _, mu, sigma)| {
+                dist_delay_ms(mu, sigma, round, client)
+            })
+    }
+
+    /// Scripted delays take precedence over distributional draws.
+    fn effective_delay_at(&self, client: u32, round: u64) -> Option<u64> {
+        self.delay_at(client, round)
+            .or_else(|| self.dist_delay_at(client, round))
+    }
+
     fn max_client(&self) -> Option<u32> {
         let kills = self.kills.iter().map(|k| k.client);
         let drops = self.drops.iter().map(|&(_, c)| c);
@@ -391,6 +517,26 @@ fn garbage_seed(round: u64, client: u32) -> u64 {
         .wrapping_mul(0x9E37_79B9_7F4A_7C15)
         .wrapping_add((client as u64) << 17)
         ^ 0xBAD5_EED0_C0FF_EE00
+}
+
+/// The `delaydist` draw PRG seed — same discipline as
+/// [`garbage_seed`], different tweak constant so a plan combining
+/// both never correlates its garbage bytes with its straggler draws.
+fn dist_seed(round: u64, client: u32) -> u64 {
+    round
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((client as u64) << 17)
+        ^ 0xD15C_0DE1_5EED_F00D
+}
+
+/// One lognormal delay draw in milliseconds: ⌊exp(mu + sigma·z)⌉ with
+/// z standard Gaussian. Pure in (mu, sigma, round, client); the f64 →
+/// u64 cast saturates, so extreme draws become effectively-infinite
+/// delays (a drop under any reply deadline) rather than wrapping.
+fn dist_delay_ms(mu: f64, sigma: f64, round: u64, client: u32) -> u64 {
+    let mut rng = Pcg64::seed_from_u64(dist_seed(round, client));
+    let z = rng.next_gaussian();
+    (mu + sigma * z).exp().round() as u64
 }
 
 /// Mutate one committed reply according to `mode` (module docs list
@@ -554,6 +700,30 @@ impl<P: ClientPool> FaultPool<P> {
         &mut self.inner
     }
 
+    /// Re-prime the rejoin-detection flags for a restored master
+    /// resuming at `round`: a freshly constructed wrapper starts with
+    /// every client live, so a client whose kill span ends exactly at
+    /// the resume round would otherwise never surface through
+    /// [`ClientPool::take_rejoined`] (and would miss its resync).
+    /// Also marks native relay kills scheduled before `round` as
+    /// already applied. Call once, before the resumed run's first
+    /// `prepare_round`; a fault wrapper that survived in-process
+    /// (`killmaster@R` on Seq/Threaded pools) keeps its live flags
+    /// and must *not* be re-primed.
+    pub fn prime_liveness(&mut self, round: u64) {
+        if round == 0 {
+            return;
+        }
+        for (c, dead) in self.dead.iter_mut().enumerate() {
+            *dead = self.plan.dead_at(c as u32, round - 1);
+        }
+        for nk in &mut self.native_kills {
+            if nk.0 < round {
+                nk.2 = true;
+            }
+        }
+    }
+
     /// An injected delay longer than the reply deadline is a drop —
     /// decided by the schedule, never by the clock. The certificate
     /// lands at deadline expiry (see [`Self::flush_late_certs`]).
@@ -675,6 +845,13 @@ impl<P: ClientPool> ClientPool for FaultPool<P> {
         self.inner.shard_ranges()
     }
 
+    fn take_master_kill(&mut self, round: u64) -> bool {
+        // Pure schedule lookup (the engine asks exactly once per
+        // round), so the injection is idempotent across the very
+        // reconstruction it triggers.
+        self.plan.master_kills.contains(&round)
+    }
+
     fn set_reply_deadline(&mut self, deadline: Option<Duration>) {
         self.deadline = deadline;
         self.inner.set_reply_deadline(deadline);
@@ -708,7 +885,7 @@ impl<P: ClientPool> ClientPool for FaultPool<P> {
                 self.missing.push(ci);
                 continue;
             }
-            if let Some(ms) = self.plan.delay_at(ci, round) {
+            if let Some(ms) = self.plan.effective_delay_at(ci, round) {
                 if self.delay_becomes_drop(ms) {
                     let dl = self.deadline.unwrap();
                     self.late_certs.push((ci, Instant::now() + dl));
@@ -1215,5 +1392,132 @@ mod tests {
         assert_eq!(plan.delay_at(0, 0), Some(500));
         assert_eq!(plan.delay_at(0, 1), None);
         assert_eq!(plan.delay_at(1, 0), None);
+    }
+
+    #[test]
+    fn delaydist_parses_and_round_trips() {
+        let plan =
+            FaultPlan::parse("delaydist@2-6:lognormal:3.5:0.75").unwrap();
+        assert_eq!(plan.delay_dists, vec![(2, 6, 3.5, 0.75)]);
+        assert!(!plan.is_empty());
+        let re = FaultPlan::parse(&plan.to_spec()).unwrap();
+        assert_eq!(plan, re);
+        // Builder ≡ parser, and non-integer params round-trip
+        // bit-exactly through the shortest f64 Display form.
+        let built = FaultPlan::none().with_delay_dist(2, 6, 3.5, 0.75);
+        assert_eq!(built, plan);
+        let p =
+            FaultPlan::parse("delaydist@0-3:lognormal:-0.1:0.3").unwrap();
+        assert_eq!(FaultPlan::parse(&p.to_spec()).unwrap(), p);
+    }
+
+    #[test]
+    fn delaydist_rejects_malformed() {
+        // Bad / missing round spans.
+        assert!(FaultPlan::parse("delaydist@2:lognormal:1:1").is_err());
+        assert!(FaultPlan::parse("delaydist@5-5:lognormal:1:1").is_err());
+        assert!(FaultPlan::parse("delaydist@6-2:lognormal:1:1").is_err());
+        assert!(FaultPlan::parse("delaydist@x-2:lognormal:1:1").is_err());
+        assert!(FaultPlan::parse("delaydist@1--2:lognormal:1:1").is_err());
+        // Unknown distribution / missing params.
+        assert!(FaultPlan::parse("delaydist@1-2:uniform:1:1").is_err());
+        assert!(FaultPlan::parse("delaydist@1-2:lognormal:1").is_err());
+        assert!(FaultPlan::parse("delaydist@1-2:lognormal").is_err());
+        assert!(FaultPlan::parse("delaydist@1-2").is_err());
+        // Non-finite / negative-sigma parameters.
+        assert!(FaultPlan::parse("delaydist@1-2:lognormal:inf:1").is_err());
+        assert!(FaultPlan::parse("delaydist@1-2:lognormal:1:NaN").is_err());
+        assert!(FaultPlan::parse("delaydist@1-2:lognormal:1:-0.5").is_err());
+        assert!(FaultPlan::parse("delaydist@1-2:lognormal:1:1x").is_err());
+        // Extra trailing field.
+        assert!(FaultPlan::parse("delaydist@1-2:lognormal:1:1:9").is_err());
+    }
+
+    #[test]
+    fn delaydist_draws_are_seeded_and_windowed() {
+        let plan = FaultPlan::none().with_delay_dist(3, 5, 4.0, 0.5);
+        // Outside the window: no draw.
+        assert_eq!(plan.dist_delay_at(0, 2), None);
+        assert_eq!(plan.dist_delay_at(0, 5), None);
+        // Inside: deterministic (pure in (round, client))...
+        let d = plan.dist_delay_at(1, 3).unwrap();
+        assert_eq!(plan.dist_delay_at(1, 3), Some(d));
+        // ...and varying across clients and rounds (lognormal with
+        // sigma > 0 — three equal draws would mean broken seeding).
+        let draws = [
+            plan.dist_delay_at(0, 3).unwrap(),
+            plan.dist_delay_at(1, 3).unwrap(),
+            plan.dist_delay_at(0, 4).unwrap(),
+        ];
+        assert!(
+            draws[0] != draws[1] || draws[1] != draws[2],
+            "all draws equal: {draws:?}"
+        );
+        // A scripted delay on the same (round, client) wins.
+        let plan = plan.with_delay(3, 1, 7);
+        assert_eq!(plan.effective_delay_at(1, 3), Some(7));
+        assert_eq!(plan.effective_delay_at(0, 3), Some(draws[0]));
+    }
+
+    #[test]
+    fn killmaster_parses_and_round_trips() {
+        let plan = FaultPlan::parse("killmaster@4,killmaster@9").unwrap();
+        assert_eq!(plan.master_kills, vec![4, 9]);
+        assert!(!plan.is_empty());
+        let re = FaultPlan::parse(&plan.to_spec()).unwrap();
+        assert_eq!(plan, re);
+        let built = FaultPlan::none().with_master_kill(4).with_master_kill(9);
+        assert_eq!(built, plan);
+        // Composes with client-facing events in one spec.
+        let plan = FaultPlan::parse(
+            "kill@2:1-4,killmaster@3,corrupt@5:0:zero",
+        )
+        .unwrap();
+        assert_eq!(plan.master_kills, vec![3]);
+        assert_eq!(plan.kills.len(), 1);
+        assert_eq!(plan.corruptions.len(), 1);
+        assert_eq!(FaultPlan::parse(&plan.to_spec()).unwrap(), plan);
+    }
+
+    #[test]
+    fn killmaster_rejects_malformed() {
+        assert!(FaultPlan::parse("killmaster@").is_err());
+        assert!(FaultPlan::parse("killmaster@x").is_err());
+        assert!(FaultPlan::parse("killmaster@-3").is_err());
+        assert!(FaultPlan::parse("killmaster@1.5").is_err());
+        // The old generic error path must not swallow a client field.
+        assert!(FaultPlan::parse("killmaster@3:1").is_err());
+        assert!(FaultPlan::parse("killmaster3").is_err());
+    }
+
+    #[test]
+    fn prime_liveness_restores_rejoin_detection() {
+        use crate::algorithms::ClientState;
+        use crate::compressors::Identity;
+        use crate::linalg::Mat;
+        use crate::oracle::QuadraticOracle;
+        let clients: Vec<ClientState> = (0..3)
+            .map(|i| {
+                let q = Mat::from_rows(&[&[2.0, 0.5], &[0.5, 1.5]]);
+                ClientState::new(
+                    i,
+                    Box::new(QuadraticOracle::new(q, vec![1.0, -1.0])),
+                    Box::new(Identity),
+                    None,
+                )
+            })
+            .collect();
+        // Client 1 frozen rounds [2, 5): a master restored at round 5
+        // must report its thaw even though the wrapper never saw
+        // rounds 2..5.
+        let plan = FaultPlan::none().with_kill(1, 2, Some(5));
+        let mut fp =
+            FaultPool::new(super::super::SeqPool::new(clients), plan);
+        fp.prime_liveness(5);
+        fp.prepare_round(5);
+        assert_eq!(fp.take_rejoined(), vec![1]);
+        // Idempotent on the engine's schedule: the kill round itself
+        // is looked up, not consumed.
+        assert!(!ClientPool::take_master_kill(&mut fp, 5));
     }
 }

@@ -121,10 +121,12 @@
 //!
 //! [`RoundSum`]: crate::algorithms::RoundSum
 
+pub mod checkpoint;
 pub mod faults;
 pub mod local_sim;
 pub mod shard;
 
+pub use checkpoint::{AlgoSnap, CheckpointCfg, Snapshot};
 pub use faults::{CorruptMode, FaultPlan, FaultPool};
 pub use local_sim::ThreadedPool;
 pub use shard::{ShardedPool, ShardStats};
@@ -571,6 +573,16 @@ pub trait ClientPool {
     /// without a native kill path.
     fn shard_ranges(&self) -> Option<Vec<(u32, u32)>> {
         None
+    }
+
+    /// Scripted master-crash injection (`killmaster@R`): true iff the
+    /// coordinator should die *now*, entering round `round`. The
+    /// engine reacts by dropping its aggregate state and rebuilding it
+    /// from the latest durable checkpoint — the in-process analogue of
+    /// the `crashsmoke` supervisor SIGKILLing the real master process.
+    /// Only the fault injector ever returns true.
+    fn take_master_kill(&mut self, _round: u64) -> bool {
+        false
     }
 }
 

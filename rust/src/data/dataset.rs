@@ -198,6 +198,68 @@ impl Dataset {
     }
 }
 
+/// How a dataset is partitioned across clients — the CLI/harness-facing
+/// selector over the split primitives (`--split` / `--label-skew`).
+/// Every variant is a pure function of (dataset, n_clients, n_i, seed),
+/// so trajectories stay bit-reproducible across transports.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SplitSpec {
+    /// IID equal shards (the paper's default).
+    Even,
+    /// Zipf-like size heterogeneity: client c's share ∝ (c+1)^−γ
+    /// (`--split power_law:GAMMA`; see [`power_law_sizes`]).
+    PowerLaw(f64),
+    /// Label-skew non-IID: each client draws this fraction of its
+    /// samples from its preferred class (`--label-skew P`; see
+    /// [`Dataset::split_label_skew`]).
+    LabelSkew(f64),
+}
+
+impl SplitSpec {
+    /// Parse the `--split` argument: `even` | `power_law:GAMMA`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        if s == "even" {
+            return Ok(Self::Even);
+        }
+        if let Some(g) = s.strip_prefix("power_law:") {
+            let gamma: f64 = g.parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "--split power_law:GAMMA: bad gamma '{g}'"
+                )
+            })?;
+            anyhow::ensure!(
+                gamma.is_finite() && gamma >= 0.0,
+                "--split power_law: gamma must be finite and >= 0"
+            );
+            return Ok(Self::PowerLaw(gamma));
+        }
+        anyhow::bail!("unknown --split '{s}' (even | power_law:GAMMA)")
+    }
+
+    /// Produce the shards: `n_clients` clients over a `n_clients × n_i`
+    /// sample budget. `Even` is exactly [`Dataset::split`], so the
+    /// default path is byte-for-byte the historical behavior.
+    pub fn shards(
+        &self,
+        ds: &Dataset,
+        n_clients: usize,
+        n_i: usize,
+        seed: u64,
+    ) -> anyhow::Result<Vec<ClientShard>> {
+        match self {
+            Self::Even => ds.split(n_clients, n_i),
+            Self::PowerLaw(gamma) => ds.split_sizes(&power_law_sizes(
+                n_clients,
+                n_clients * n_i,
+                *gamma,
+            )),
+            Self::LabelSkew(p) => {
+                ds.split_label_skew(n_clients, n_i, *p, seed)
+            }
+        }
+    }
+}
+
 /// Power-law client sizes for non-IID experiments: client `c`'s share
 /// of `total` is proportional to (c+1)^−gamma (Zipf-like; `gamma = 0`
 /// is the even IID split, larger gamma concentrates data on low-id
@@ -329,6 +391,38 @@ mod tests {
             row[1] = b;
         }
         Dataset::from_dense(at)
+    }
+
+    #[test]
+    fn split_spec_parses_and_matches_primitives() {
+        assert_eq!(SplitSpec::parse("even").unwrap(), SplitSpec::Even);
+        assert_eq!(
+            SplitSpec::parse("power_law:1.5").unwrap(),
+            SplitSpec::PowerLaw(1.5)
+        );
+        for bad in
+            ["zipf", "power_law:", "power_law:x", "power_law:-1", ""]
+        {
+            assert!(SplitSpec::parse(bad).is_err(), "accepted '{bad}'");
+        }
+        // Even delegates to split() exactly (the IID default must stay
+        // byte-for-byte the historical behavior).
+        let ds = toy();
+        let a = SplitSpec::Even.shards(&ds, 2, 2, 9).unwrap();
+        let b = ds.split(2, 2).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+        }
+        // PowerLaw(0) is the even per-size split over the same budget.
+        let p = SplitSpec::PowerLaw(0.0).shards(&ds, 2, 2, 9).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0].n_i() + p[1].n_i(), 4);
+        // LabelSkew is seeded-deterministic.
+        let s1 = SplitSpec::LabelSkew(1.0).shards(&ds, 2, 2, 9).unwrap();
+        let s2 = SplitSpec::LabelSkew(1.0).shards(&ds, 2, 2, 9).unwrap();
+        for (x, y) in s1.iter().zip(&s2) {
+            assert_eq!(x.at, y.at);
+        }
     }
 
     #[test]

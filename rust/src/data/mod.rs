@@ -8,6 +8,6 @@ pub mod dataset;
 pub mod libsvm;
 pub mod synth;
 
-pub use dataset::{power_law_sizes, ClientShard, Dataset};
+pub use dataset::{power_law_sizes, ClientShard, Dataset, SplitSpec};
 pub use libsvm::{parse_libsvm_bytes, parse_libsvm_file, LibsvmSample};
 pub use synth::{generate_synthetic, write_libsvm, SynthSpec};

@@ -826,6 +826,299 @@ pub fn corrupt_smoke(cfg: &HarnessCfg) -> Result<String> {
     Ok(out)
 }
 
+// ---------------------------------------------------------------------
+// CI crash smoke: SIGKILL the real TCP master mid-run, relaunch it
+// with --restore, and require the healed trajectory bitwise-equal to
+// an uninterrupted reference.
+// ---------------------------------------------------------------------
+
+/// Master crash-recovery drill over real TCP. One master process
+/// (`fednl master --checkpoint-dir --checkpoint-every 1`) serves six
+/// warm in-process failover clients (`--fallback` pointing back at the
+/// master's own address). A supervisor thread watches the snapshot
+/// directory and SIGKILLs the master once a snapshot covering round 8
+/// is durable; the clients rotate through their fallback list while a
+/// second master relaunches on the same address with `--restore`. The
+/// healed run's full CSV trace (restored records below the watermark,
+/// live rounds above) must be bit-identical to an uninterrupted
+/// in-process reference under the *same* fault plan — two `scale:100`
+/// Byzantine attackers folded out by `--defense median`, plus
+/// `delaydist@` lognormal straggler draws, all composing through the
+/// restore. (The CSV comparison is exact because `{:e}` is Rust's
+/// shortest round-trip float form.)
+///
+/// Writes `crashsmoke_trace.json` (CI artifact).
+pub fn crash_smoke(cfg: &HarnessCfg) -> Result<String> {
+    use crate::algorithms::ClientState;
+    use crate::coordinator::CorruptMode;
+    use crate::net::client::ClientMode;
+    use crate::net::{run_client_with, ClientOpts};
+    use crate::oracle::LogisticOracle;
+    use crate::robust::Defense;
+    use anyhow::Context;
+    use std::process::{Command, Stdio};
+
+    cfg.ensure_out_dir()?;
+    let spec = ProblemSpec {
+        name: "crashsmoke",
+        d: 13,
+        n_i_full: 40,
+        n_clients_full: 6,
+        lam: 1e-3,
+    };
+    let mut p = prepare_problem(&spec, cfg)?;
+    p.n_clients = 6;
+    p.n_i = 40;
+    let d = p.d();
+    let x0 = vec![0.0; d];
+    let rounds = 24u64;
+    // The faults that must compose through the restore: two scale:100
+    // attackers under the median defense (so the snapshot's defense
+    // accounting is load-bearing), and lognormal straggler draws
+    // (median ≈ e^3.9 ≈ 50 ms a reply) that both pace the run enough
+    // for the supervisor to land its SIGKILL mid-flight and prove the
+    // per-(round, client) draws replay identically on the healed leg.
+    let mut plan = FaultPlan::none().with_delay_dist(0, rounds, 3.9, 0.3);
+    for r in 2..rounds {
+        plan = plan
+            .with_corrupt(r, 0, CorruptMode::Scale(100.0))
+            .with_corrupt(r, 3, CorruptMode::Scale(100.0));
+    }
+    let plan_spec = plan.to_spec();
+    let opts = Options {
+        rounds,
+        defense: Some(Defense::Median),
+        ..Default::default()
+    };
+
+    // --- uninterrupted in-process reference --------------------------
+    let mut reference = FaultPool::new(
+        SeqPool::new(p.clients("topk", K_MULT, cfg)?),
+        plan.clone(),
+    );
+    let t_ref =
+        run_fednl_pool(&mut reference, &opts, x0, "crashsmoke/reference");
+
+    // --- TCP leg: master subprocess + warm failover clients ----------
+    let ck_dir = format!("{}/crashsmoke_ck", cfg.out_dir);
+    let _ = std::fs::remove_dir_all(&ck_dir);
+    let healed_csv = format!("{}/crashsmoke_healed.csv", cfg.out_dir);
+    let _ = std::fs::remove_file(&healed_csv);
+    // Pick a free loopback port, then hand the *address* to the master
+    // process: the clients hold it in their --fallback rotation, so
+    // the relaunched master must come back on the very same one.
+    let addr = {
+        let probe = Bound::bind("127.0.0.1:0")?;
+        probe.local_addr()?.to_string()
+    };
+    let exe = std::env::current_exe().context("locating fednl binary")?;
+    let master_args = |extra: &[&str]| -> Vec<String> {
+        let mut v = vec![
+            "master".to_string(),
+            "--listen".to_string(),
+            addr.clone(),
+            "--clients".to_string(),
+            p.n_clients.to_string(),
+            "--algo".to_string(),
+            "fednl".to_string(),
+            "--rounds".to_string(),
+            rounds.to_string(),
+            "--fault-plan".to_string(),
+            plan_spec.clone(),
+            "--defense".to_string(),
+            "median".to_string(),
+            "--checkpoint-dir".to_string(),
+            ck_dir.clone(),
+            "--checkpoint-every".to_string(),
+            "1".to_string(),
+        ];
+        v.extend(extra.iter().map(|s| s.to_string()));
+        v
+    };
+    let mut master = Command::new(&exe)
+        .args(master_args(&[]))
+        .stdout(Stdio::null())
+        .spawn()
+        .context("spawning crashsmoke master")?;
+
+    let lam = p.spec.lam;
+    let mut handles = Vec::new();
+    for shard in cfg.split.shards(&p.dataset, p.n_clients, p.n_i, cfg.seed)? {
+        let addr = addr.clone();
+        let comp = crate::compressors::by_name(
+            "topk",
+            d,
+            K_MULT,
+            cfg.seed + shard.client_id as u64,
+        )?;
+        handles.push(std::thread::spawn(move || {
+            let id = shard.client_id;
+            let oracle = Box::new(LogisticOracle::new(shard, lam));
+            let mode =
+                ClientMode::FedNL(ClientState::new(id, oracle, comp, None));
+            let opts = ClientOpts {
+                fallback: vec![addr.clone()],
+                ..Default::default()
+            };
+            run_client_with(&addr, id, mode, opts)
+        }));
+    }
+
+    // Supervisor: wait until a snapshot covering round `kill_after` is
+    // durable, then SIGKILL the master — a real process death at an
+    // unscripted instant (possibly mid-write; the corrupt-tail
+    // fallback in `load_latest` absorbs that).
+    let kill_after = 8u64;
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_secs(120);
+    let killed_at = loop {
+        anyhow::ensure!(
+            std::time::Instant::now() < deadline,
+            "crashsmoke: no snapshot covering round {kill_after} in 120 s"
+        );
+        if let Some(status) = master.try_wait()? {
+            anyhow::bail!(
+                "crashsmoke: master exited ({status}) before the SIGKILL"
+            );
+        }
+        let newest = std::fs::read_dir(&ck_dir)
+            .ok()
+            .into_iter()
+            .flatten()
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                e.file_name()
+                    .to_str()?
+                    .strip_prefix("ck-")?
+                    .strip_suffix(".fnck")?
+                    .parse::<u64>()
+                    .ok()
+            })
+            .max();
+        match newest {
+            Some(r) if r >= kill_after => break r,
+            _ => std::thread::sleep(std::time::Duration::from_millis(5)),
+        }
+    };
+    master.kill().context("SIGKILL crashsmoke master")?;
+    let _ = master.wait();
+    anyhow::ensure!(
+        killed_at < rounds,
+        "crashsmoke: master already finished (snapshot {killed_at}); \
+         nothing was interrupted"
+    );
+
+    // Relaunch on the same address with --restore; the healed master
+    // writes the full trajectory CSV.
+    let status = Command::new(&exe)
+        .args(master_args(&["--restore", &ck_dir, "--trace", &healed_csv]))
+        .stdout(Stdio::null())
+        .status()
+        .context("relaunching crashsmoke master --restore")?;
+    anyhow::ensure!(
+        status.success(),
+        "crashsmoke: restored master failed ({status})"
+    );
+    for h in handles {
+        let _ = h.join();
+    }
+
+    // Parse the healed CSV back (bit-exact by the {:e} round-trip) and
+    // require bitwise equality with the reference. Byte and elapsed
+    // columns are excluded as everywhere else: TCP pools meter
+    // transport bytes, in-process pools logical counters.
+    let csv = std::fs::read_to_string(&healed_csv)
+        .with_context(|| format!("reading {healed_csv}"))?;
+    let mut healed: Vec<(u64, f64, usize, usize, usize)> = Vec::new();
+    for line in csv.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        anyhow::ensure!(
+            f.len() == 9,
+            "crashsmoke: malformed CSV row '{line}'"
+        );
+        healed.push((
+            f[0].parse()?,
+            f[1].parse()?,
+            f[6].parse()?,
+            f[7].parse()?,
+            f[8].parse()?,
+        ));
+    }
+    anyhow::ensure!(
+        healed.len() == t_ref.records.len(),
+        "crashsmoke: healed run has {} rounds, reference {}",
+        healed.len(),
+        t_ref.records.len()
+    );
+    for (h, r) in healed.iter().zip(&t_ref.records) {
+        anyhow::ensure!(
+            h.0 == r.round
+                && h.1.to_bits() == r.grad_norm.to_bits()
+                && h.2 == r.committed
+                && h.3 == r.missing
+                && h.4 == r.flagged,
+            "crashsmoke: healed trajectory diverged at round {}: \
+             grad {:.17e} vs {:.17e}, committed {} vs {}",
+            r.round,
+            h.1,
+            r.grad_norm,
+            h.2,
+            r.committed
+        );
+    }
+
+    // Artifact: the healed-vs-reference trajectory plus kill metadata.
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"plan\": \"{plan_spec}\",\n"));
+    json.push_str(&format!(
+        "  \"n_clients\": {}, \"rounds\": {rounds}, \
+         \"kill_after_snapshot\": {kill_after}, \
+         \"killed_at_snapshot\": {killed_at},\n",
+        p.n_clients
+    ));
+    json.push_str("  \"defense\": \"median\", \"bit_identical\": true,\n");
+    json.push_str("  \"trace\": [\n");
+    for (i, (h, r)) in healed.iter().zip(&t_ref.records).enumerate() {
+        json.push_str(&format!(
+            "    {{\"round\": {}, \"healed\": {:e}, \"reference\": {:e}, \
+             \"committed\": {}, \"flagged\": {}}}{}\n",
+            h.0,
+            h.1,
+            r.grad_norm,
+            h.2,
+            h.4,
+            if i + 1 < healed.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let json_path = format!("{}/crashsmoke_trace.json", cfg.out_dir);
+    std::fs::write(&json_path, &json)?;
+
+    let mut out = format!(
+        "## Crash smoke — TCP master SIGKILLed after snapshot \
+         {killed_at} of r={rounds}, relaunched with `--restore` \
+         (median defense + lognormal stragglers composing through \
+         the restore)\n\n"
+    );
+    let mut table =
+        Table::new(&["Leg", "Rounds", "||∇f||_final", "Bit-identical"]);
+    table.row(&[
+        "reference (seq, uninterrupted)".to_string(),
+        t_ref.records.len().to_string(),
+        sci(t_ref.last_grad_norm()),
+        "—".to_string(),
+    ]);
+    table.row(&[
+        format!("healed (tcp, SIGKILL@ck-{killed_at}, --restore)"),
+        healed.len().to_string(),
+        sci(healed.last().map(|h| h.1).unwrap_or(f64::NAN)),
+        "yes".to_string(),
+    ]);
+    out.push_str(&table.to_markdown());
+    out.push_str(&format!("\nPer-round trace written to {json_path}\n"));
+    Ok(out)
+}
+
 /// CI shard smoke: the sharded aggregation tier end to end — an
 /// unsharded sequential reference, an in-process `S=3` [`ShardedPool`]
 /// and a real `S=2` TCP **relay tier** over loopback (2 relay

@@ -39,6 +39,12 @@ pub struct HarnessCfg {
     /// Artifact dir for PJRT oracles.
     pub artifacts: String,
     pub seed: u64,
+    /// Synthetic label-balance skew (`--label-bias B`; 0 = balanced,
+    /// fed into [`crate::data::SynthSpec::label_bias`]).
+    pub label_bias: f64,
+    /// Client data partition (`--split power_law:G` /
+    /// `--label-skew P`); the default is the paper's IID equal split.
+    pub split: crate::data::SplitSpec,
 }
 
 impl Default for HarnessCfg {
@@ -51,6 +57,8 @@ impl Default for HarnessCfg {
             pjrt: false,
             artifacts: "artifacts".into(),
             seed: 0x5EED,
+            label_bias: 0.0,
+            split: crate::data::SplitSpec::Even,
         }
     }
 }

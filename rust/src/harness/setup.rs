@@ -74,7 +74,7 @@ pub fn prepare_problem(
         n_samples: total,
         density: 0.25,
         noise: 1.0,
-        label_bias: 0.0,
+        label_bias: cfg.label_bias,
         seed: cfg.seed,
     });
     // Real text round-trip: serializer → parser (exercises the paper's
@@ -108,7 +108,12 @@ impl Problem {
         cfg: &HarnessCfg,
     ) -> Result<Vec<ClientState>> {
         let d = self.d();
-        let shards = self.dataset.split(self.n_clients, self.n_i)?;
+        let shards = cfg.split.shards(
+            &self.dataset,
+            self.n_clients,
+            self.n_i,
+            cfg.seed,
+        )?;
         let runtime = if cfg.pjrt {
             Some(PjrtRuntime::load(&cfg.artifacts)?)
         } else {
@@ -139,7 +144,12 @@ impl Problem {
         x0: &[f64],
     ) -> Result<Vec<PPClientState>> {
         let d = self.d();
-        let shards = self.dataset.split(self.n_clients, self.n_i)?;
+        let shards = cfg.split.shards(
+            &self.dataset,
+            self.n_clients,
+            self.n_i,
+            cfg.seed,
+        )?;
         shards
             .into_iter()
             .enumerate()

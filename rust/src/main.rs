@@ -12,17 +12,19 @@
 
 use anyhow::{bail, Context, Result};
 use fednl::algorithms::{
-    run_fednl_ls_pool, run_fednl_pool, run_fednl_pp_pool, ClientState,
-    LineSearchParams, OnMissing, Options, PPClientState, RoundPolicy,
-    UpdateRule,
+    run_engine_from, run_fednl_ls_pool, run_fednl_pool, run_fednl_pp_pool,
+    ClientState, LineSearchParams, OnMissing, Options, PPClientState,
+    RoundPolicy, StepPolicy, UpdateRule,
 };
 use fednl::cli::Args;
 use fednl::compressors::by_name;
 use fednl::coordinator::{
-    ClientPool, FaultPlan, FaultPool, ShardedPool, ThreadedPool,
+    checkpoint, CheckpointCfg, ClientPool, FaultPlan, FaultPool,
+    ShardedPool, Snapshot, ThreadedPool,
 };
 use fednl::data::{
-    generate_synthetic, parse_libsvm_file, write_libsvm, Dataset, SynthSpec,
+    generate_synthetic, parse_libsvm_file, write_libsvm, Dataset, SplitSpec,
+    SynthSpec,
 };
 use fednl::harness::{self, HarnessCfg, Scale};
 use fednl::metrics::rusage::ResourceSnapshot;
@@ -60,6 +62,7 @@ fn print_usage() {
          USAGE: fednl <subcommand> [options]\n\n\
          SUBCOMMANDS:\n\
          \x20 datagen    --preset w8a|a9a|phishing|quickstart|tiny --out FILE [--seed N]\n\
+         \x20            [--label-bias B]\n\
          \x20 split      FILE OUTDIR --clients N [--ni M] [--seed N]\n\
          \x20 train      --data FILE --algo fednl|fednl-ls|fednl-pp [--compressor topk]\n\
          \x20            [--k-mult 8] [--rounds 1000] [--clients 16] [--threads 0]\n\
@@ -68,11 +71,15 @@ fn print_usage() {
          \x20            [--intra-threads 1] [--quorum Q] [--deadline-ms MS]\n\
          \x20            [--on-missing drop|resample|reuse] [--fault-plan SPEC]\n\
          \x20            [--speculate] [--defense SPEC]\n\
+         \x20            [--checkpoint-dir DIR] [--checkpoint-every K]\n\
+         \x20            [--split even|power_law:G] [--label-skew P]\n\
          \x20 master     --listen ADDR --clients N --algo ... [--rounds R] [--tol T]\n\
          \x20            [--shards S] [--relay-slack-ms 2000] [--adopt-grace-ms 2000]\n\
          \x20            [--quorum Q] [--deadline-ms MS] [--on-missing P]\n\
          \x20            [--fault-plan SPEC] [--speculate] [--event]\n\
          \x20            [--defense SPEC]\n\
+         \x20            [--checkpoint-dir DIR] [--checkpoint-every K]\n\
+         \x20            [--restore DIR]\n\
          \x20 relay      --connect MASTER --listen ADDR --shard I --base B --clients K\n\
          \x20            [--event] [--parent S] [--die-after-round R]\n\
          \x20            (shard aggregator: ids [B, B+K) connect here; --parent S\n\
@@ -82,14 +89,30 @@ fn print_usage() {
          \x20            [--fallback A1,A2] [--fresh]\n\
          \x20 verify     --data FILE [--lam 1e-3]   (finite-difference oracle check)\n\
          \x20 experiment table1|table2|table3|table5|fig1..fig12|costmodel|tcpsmoke|\n\
-         \x20            faultsmoke|shardsmoke|muxsmoke|failsmoke|corruptsmoke|all\n\
+         \x20            faultsmoke|shardsmoke|muxsmoke|failsmoke|corruptsmoke|\n\
+         \x20            crashsmoke|all\n\
          \x20            [--full] [--out-dir results] [--pjrt] [--threads N] [--seq]\n\
+         \x20            [--label-bias B] [--split SPEC] [--label-skew P]\n\
          \x20 sysinfo\n\n\
          FAULT PLANS (--fault-plan): comma-separated kill@R:C[-R2] | drop@R:C |\n\
-         delay@R:C:MS | killrelay@R:S | corrupt@R:C:MODE with MODE one of\n\
+         delay@R:C:MS | delaydist@R1-R2:lognormal:MU:SIGMA | killrelay@R:S |\n\
+         killmaster@R | corrupt@R:C:MODE with MODE one of\n\
          scale:K | signflip | garbage | zero (Byzantine payload corruption) —\n\
          deterministic master-side injection (see coordinator::faults;\n\
-         killrelay needs a master-visible shard S).\n\
+         killrelay needs a master-visible shard S; killmaster needs\n\
+         --checkpoint-dir and drops the coordinator's in-memory state at\n\
+         round R, rebuilding it from the latest snapshot).\n\
+         CHECKPOINTS: --checkpoint-dir DIR --checkpoint-every K write a\n\
+         versioned, checksummed snapshot of the full coordinator state\n\
+         every K rounds (atomic rename; last 3 kept). `master --restore\n\
+         DIR` relaunches from the latest valid snapshot: clients\n\
+         reconnect via --fallback, staged rounds above the restored\n\
+         watermark are discarded and at-or-below applied (exactly-once),\n\
+         and the healed trajectory is bit-identical to an uninterrupted\n\
+         run. `experiment crashsmoke` rehearses the full cycle over TCP.\n\
+         NON-IID: datagen --label-bias B skews the global label balance;\n\
+         --split power_law:G gives Zipf-like client sizes; --label-skew P\n\
+         sorts P of each client's quota by label (see data::SplitSpec).\n\
          DEFENSES (--defense): normclip:TAU | median | trimmedmean:F — robust\n\
          server-side aggregation (see the robust module; fednl/fednl-ls only;\n\
          median and trimmed mean route per-client atoms through shard tiers).\n\
@@ -114,6 +137,9 @@ fn cmd_datagen(args: &Args) -> Result<()> {
     let mut spec = SynthSpec::preset(preset)
         .with_context(|| format!("unknown preset '{preset}'"))?;
     spec.seed = seed;
+    // Non-IID knob: skew the label balance of the generated problem
+    // (0 = balanced; see SynthSpec::label_bias).
+    spec.label_bias = args.get_f64("label-bias", 0.0)?;
     let sw = Stopwatch::start();
     let data = generate_synthetic(&spec);
     let text = write_libsvm(&data);
@@ -166,11 +192,15 @@ fn load_shards(
     path: &str,
     n_clients: usize,
     seed: u64,
+    split: &SplitSpec,
 ) -> Result<(Dataset, Vec<fednl::data::ClientShard>)> {
     let (samples, d_raw) = parse_libsvm_file(path)?;
     let mut ds = Dataset::from_libsvm(&samples, d_raw);
     ds.reshuffle(seed);
-    let shards = ds.split_even(n_clients)?;
+    // `SplitSpec::Even` here reproduces the historical
+    // `split_even(n_clients)` byte-for-byte (same n_i derivation).
+    let n_i = ds.n_samples() / n_clients;
+    let shards = split.shards(&ds, n_clients, n_i, seed)?;
     Ok((ds, shards))
 }
 
@@ -253,6 +283,60 @@ fn defense_opt(
     }
 }
 
+/// `--checkpoint-dir DIR [--checkpoint-every K]`, shared by `train`
+/// and `master`. A restored master (`master --restore DIR`) keeps
+/// extending the same snapshot ladder, so `restore` doubles as the
+/// checkpoint directory when `--checkpoint-dir` is absent. A
+/// `killmaster@R` rehearsal rebuilds the coordinator from disk, so a
+/// plan that schedules one without a checkpoint directory is rejected
+/// here, before data loading.
+fn checkpoint_cfg(
+    args: &Args,
+    restore: Option<&str>,
+    plan: &FaultPlan,
+) -> Result<Option<CheckpointCfg>> {
+    match args.get("checkpoint-dir").or(restore) {
+        Some(dir) => {
+            let every = args.get_u64("checkpoint-every", 1)?;
+            anyhow::ensure!(every >= 1, "--checkpoint-every must be >= 1");
+            let mut cfg = CheckpointCfg::new(dir, every);
+            cfg.plan_spec = args.get_or("fault-plan", "").to_string();
+            Ok(Some(cfg))
+        }
+        None => {
+            anyhow::ensure!(
+                args.get("checkpoint-every").is_none(),
+                "--checkpoint-every needs --checkpoint-dir"
+            );
+            anyhow::ensure!(
+                plan.master_kills.is_empty(),
+                "killmaster@R requires --checkpoint-dir: the rebuilt \
+                 coordinator restores from the snapshot ladder"
+            );
+            Ok(None)
+        }
+    }
+}
+
+/// `--split even|power_law:GAMMA` / `--label-skew P` → client
+/// partition spec (two spellings of the same knob, so mutually
+/// exclusive). Absent both, the paper's IID equal split.
+fn split_spec(args: &Args) -> Result<SplitSpec> {
+    match (args.get("split"), args.get("label-skew")) {
+        (Some(_), Some(_)) => {
+            bail!("--split and --label-skew are mutually exclusive")
+        }
+        (Some(spec), None) => SplitSpec::parse(spec),
+        (None, Some(p)) => {
+            let p: f64 = p.parse().map_err(|_| {
+                anyhow::anyhow!("--label-skew: expected number, got '{p}'")
+            })?;
+            Ok(SplitSpec::LabelSkew(p))
+        }
+        (None, None) => Ok(SplitSpec::Even),
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let data = args.get("data").context("--data required")?;
     let algo = args.get_or("algo", "fednl");
@@ -283,9 +367,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         "--shards must be in [1, {n_clients}]"
     );
     let sw = Stopwatch::start();
-    let (ds, shards) = load_shards(data, n_clients, seed)?;
+    let (ds, shards) = load_shards(data, n_clients, seed, &split_spec(args)?)?;
     let d = ds.d;
     let init = sw.elapsed_secs();
+    let plan = fault_plan(args)?;
     let opts = Options {
         rounds,
         rule,
@@ -295,9 +380,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         policy: round_policy(args, n_clients, false)?,
         speculate: args.flag("speculate"),
         defense: defense_opt(args, algo)?,
+        checkpoint: checkpoint_cfg(args, None, &plan)?,
         ..Default::default()
     };
-    let plan = fault_plan(args)?;
     let x0 = vec![0.0; d];
     let mut rt: Option<PjrtRuntime> = None;
 
@@ -401,6 +486,8 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 /// Algorithm dispatch shared by the flat and sharded TCP masters.
+/// `resume` (from `--restore DIR`) re-enters the engine mid-trajectory;
+/// `None` is exactly the historical fresh-start dispatch.
 fn run_master_algo(
     pool: &mut dyn ClientPool,
     args: &Args,
@@ -408,20 +495,37 @@ fn run_master_algo(
     algo: &str,
     n_clients: usize,
     seed: u64,
+    resume: Option<Snapshot>,
 ) -> Result<Trace> {
     let x0 = vec![0.0; pool.dim()];
+    let ls = LineSearchParams::default();
     Ok(match algo {
-        "fednl" => run_fednl_pool(pool, opts, x0, "FedNL/tcp"),
-        "fednl-ls" => run_fednl_ls_pool(
+        "fednl" => run_engine_from(
             pool,
             opts,
-            &LineSearchParams::default(),
+            StepPolicy::Newton,
+            x0,
+            "FedNL/tcp",
+            resume,
+        ),
+        "fednl-ls" => run_engine_from(
+            pool,
+            opts,
+            StepPolicy::LineSearch(&ls),
             x0,
             "FedNL-LS/tcp",
+            resume,
         ),
         "fednl-pp" => {
             let tau = args.get_usize("tau", (n_clients / 4).max(1))?;
-            run_fednl_pp_pool(pool, opts, tau, seed, x0, "FedNL-PP/tcp")
+            run_engine_from(
+                pool,
+                opts,
+                StepPolicy::PartialParticipation { tau, seed },
+                x0,
+                "FedNL-PP/tcp",
+                resume,
+            )
         }
         other => bail!("unknown algo '{other}'"),
     })
@@ -435,6 +539,47 @@ fn cmd_master(args: &Args) -> Result<()> {
     let rounds = args.get_u64("rounds", 100)?;
     let tol = args.get("tol").map(|t| t.parse::<f64>()).transpose()?;
     let seed = args.get_u64("seed", 0x5EED)?;
+    let plan = fault_plan(args)?;
+    // `--restore DIR`: crash recovery. Load the latest valid snapshot
+    // (corrupt tails are skipped by `load_latest`) and re-enter the
+    // engine at its `round_next`; clients reconnect through their
+    // `--fallback` rotation and the staged-commit RESYNC protocol
+    // replays exactly-once. Restore is wired for the flat blocking
+    // master only: the relay tier and the event transport have their
+    // own failover stories (PR 7/8), and a PP master would also need
+    // the clients' persistent state to survive, which TCP clients
+    // rebuild fresh.
+    let restore_dir = args.get("restore");
+    let snap: Option<Snapshot> = match restore_dir {
+        Some(dir) => {
+            anyhow::ensure!(
+                n_shards == 0 && !args.flag("event"),
+                "--restore supports the flat blocking master only \
+                 (no --shards / --event)"
+            );
+            anyhow::ensure!(
+                algo != "fednl-pp",
+                "--restore over TCP supports the Newton family only: \
+                 reconnecting fednl-pp clients rebuild their persistent \
+                 state from scratch, which the snapshot cannot heal"
+            );
+            let s = checkpoint::load_latest(dir)?.with_context(|| {
+                format!("--restore {dir}: no valid snapshot found")
+            })?;
+            anyhow::ensure!(
+                s.n == n_clients,
+                "--restore: snapshot has n = {}, --clients says {n_clients}",
+                s.n
+            );
+            println!(
+                "master: restoring from {dir} (round {}, {})",
+                s.round_next,
+                if s.finished { "finished" } else { "in flight" }
+            );
+            Some(s)
+        }
+        None => None,
+    };
     let opts = Options {
         rounds,
         tol_grad: tol,
@@ -442,9 +587,9 @@ fn cmd_master(args: &Args) -> Result<()> {
         policy: round_policy(args, n_clients, true)?,
         speculate: args.flag("speculate"),
         defense: defense_opt(args, algo)?,
+        checkpoint: checkpoint_cfg(args, restore_dir, &plan)?,
         ..Default::default()
     };
-    let plan = fault_plan(args)?;
     // Relay forwarding slack (`deadline + slack` is how long the
     // master waits for a relay's round frame before certifying the
     // whole partition lost). Validated at parse time like the round
@@ -490,8 +635,9 @@ fn cmd_master(args: &Args) -> Result<()> {
             "master: all relays registered (d = {}, n = {n_clients})",
             pool.dim()
         );
-        let trace =
-            run_master_algo(&mut pool, args, &opts, algo, n_clients, seed)?;
+        let trace = run_master_algo(
+            &mut pool, args, &opts, algo, n_clients, seed, None,
+        )?;
         pool.into_inner().shutdown();
         trace
     } else if args.flag("event") {
@@ -510,7 +656,7 @@ fn cmd_master(args: &Args) -> Result<()> {
             );
             println!("master: all clients registered (d = {})", pool.dim());
             let trace = run_master_algo(
-                &mut pool, args, &opts, algo, n_clients, seed,
+                &mut pool, args, &opts, algo, n_clients, seed, None,
             )?;
             pool.into_inner().shutdown();
             trace
@@ -521,11 +667,30 @@ fn cmd_master(args: &Args) -> Result<()> {
         }
     } else {
         println!("master: waiting for {n_clients} clients on {listen} ...");
-        let mut pool =
-            FaultPool::new(RemotePool::listen(listen, n_clients)?, plan);
+        // A restored master re-binds the address the killed one owned;
+        // retry while the dead process's sockets drain out of
+        // TIME_WAIT (clients hold this address in their --fallback
+        // rotation, so it must be the same one).
+        let bound = if snap.is_some() {
+            fednl::net::server::Bound::bind_retry(listen, 100)?
+        } else {
+            fednl::net::server::Bound::bind(listen)?
+        };
+        let mut pool = FaultPool::new(bound.accept(n_clients)?, plan);
         println!("master: all clients registered (d = {})", pool.dim());
-        let trace =
-            run_master_algo(&mut pool, args, &opts, algo, n_clients, seed)?;
+        if let Some(s) = &snap {
+            // Every client that registered with a restored master is a
+            // reconnection: mark them all rejoined so the engine's
+            // first prepare resolves their staged commit ladders via
+            // RESYNC against the restored watermarks, and advance the
+            // fault plan's liveness cursor past the rounds already
+            // replayed from the snapshot.
+            pool.inner_mut().mark_all_rejoined();
+            pool.prime_liveness(s.round_next);
+        }
+        let trace = run_master_algo(
+            &mut pool, args, &opts, algo, n_clients, seed, snap,
+        )?;
         pool.into_inner().shutdown();
         trace
     };
@@ -723,6 +888,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         pjrt: args.flag("pjrt"),
         artifacts: args.get_or("artifacts", "artifacts").to_string(),
         seed: args.get_u64("seed", 0x5EED)?,
+        label_bias: args.get_f64("label-bias", 0.0)?,
+        split: split_spec(args)?,
     };
     cfg.ensure_out_dir()?;
     let run = |name: &str| -> Result<String> {
@@ -739,6 +906,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             "muxsmoke" => harness::mux_smoke(&cfg)?,
             "failsmoke" => harness::fail_smoke(&cfg)?,
             "corruptsmoke" => harness::corrupt_smoke(&cfg)?,
+            "crashsmoke" => harness::crash_smoke(&cfg)?,
             f if f.starts_with("fig") => {
                 let n: usize = f[3..].parse().context("figN")?;
                 if n <= 3 {
@@ -758,9 +926,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     };
     let all = [
         "costmodel", "tcpsmoke", "faultsmoke", "shardsmoke", "muxsmoke",
-        "failsmoke", "corruptsmoke", "table1", "table2", "table3", "table5",
-        "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
-        "fig9", "fig10", "fig11", "fig12",
+        "failsmoke", "corruptsmoke", "crashsmoke", "table1", "table2",
+        "table3", "table5", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
+        "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
     ];
     let list: Vec<&str> =
         if which == "all" { all.to_vec() } else { vec![which] };

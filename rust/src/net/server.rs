@@ -113,6 +113,24 @@ impl Bound {
         Ok(self.listener.local_addr()?)
     }
 
+    /// [`Bound::bind`], retried while the killed previous owner's
+    /// sockets drain out of TIME_WAIT — the restored-master relaunch
+    /// (`master --restore`) must come back on the *same* address its
+    /// clients hold in their `--fallback` rotation.
+    pub fn bind_retry(addr: &str, attempts: u32) -> Result<Self> {
+        assert!(attempts >= 1);
+        for i in 0..attempts {
+            match Self::bind(addr) {
+                Ok(b) => return Ok(b),
+                Err(e) if i + 1 == attempts => return Err(e),
+                Err(_) => {
+                    std::thread::sleep(Duration::from_millis(100))
+                }
+            }
+        }
+        unreachable!()
+    }
+
     /// Accept until exactly `n_clients` clients register.
     pub fn accept(self, n_clients: usize) -> Result<RemotePool> {
         RemotePool::accept_on(self.listener, n_clients, 0)
@@ -170,13 +188,18 @@ impl RemotePool {
             } else {
                 anyhow::ensure!(d == dim as usize, "dimension mismatch");
             }
-            // REG_FRESH on the *initial* registration is vacuous
-            // (everyone starts fresh) — only `acks` is recorded.
+            // REG_FRESH is recorded even on the *initial* registration:
+            // for a cold start it is vacuous (everyone starts fresh and
+            // the engine's PULL_H rebuild is a no-op on zero state), but
+            // a restored master's initial accept IS the reconnect of
+            // clients that outlived the crash — a fresh registrant among
+            // them must trigger the exact Hᵢ rebuild.
             slots[id] = Some((ch, family, flags));
             registered += 1;
         }
         let mut channels = Vec::with_capacity(n_clients);
         let mut acks = Vec::with_capacity(n_clients);
+        let mut fresh = Vec::with_capacity(n_clients);
         let mut family = None;
         for (id, s) in slots.into_iter().enumerate() {
             let (ch, f, flags) = s.unwrap();
@@ -194,6 +217,9 @@ impl RemotePool {
             }
             channels.push(Some(ch));
             acks.push(flags & wire::REG_WANTS_ACK != 0);
+            if flags & wire::REG_FRESH != 0 {
+                fresh.push(base + id as u32);
+            }
         }
         // Keep listening so deregistered ids can rejoin; polled
         // non-blocking between rounds.
@@ -210,7 +236,7 @@ impl RemotePool {
             pending: VecDeque::new(),
             missing: Vec::new(),
             rejoined: Vec::new(),
-            fresh: Vec::new(),
+            fresh,
             acks,
             deadline: None,
             retired_bytes: (0, 0),
@@ -221,6 +247,19 @@ impl RemotePool {
     /// relay tier ORs this into its own upward registration.
     pub fn wants_ack_any(&self) -> bool {
         self.acks.iter().any(|&a| a)
+    }
+
+    /// Treat every connected client as a rejoiner — the restored-master
+    /// bootstrap (`master --restore`). The initial accept of a restored
+    /// run IS the reconnect of clients that outlived the crash, so the
+    /// engine's first `prepare_round` must resolve each client's staged
+    /// ladder against the restored commit watermark (RESYNC) exactly as
+    /// it would after an in-run failover. `REG_FRESH` registrants were
+    /// already recorded during the accept.
+    pub fn mark_all_rejoined(&mut self) {
+        self.rejoined = (0..self.channels.len() as u32)
+            .map(|slot| self.base + slot)
+            .collect();
     }
 
     /// Retire a client's channel (folding its byte counters into the

@@ -1,0 +1,297 @@
+//! Checkpoint/restore integration: a scripted `killmaster@R`
+//! coordinator crash at EVERY round of a faulty run must heal
+//! bit-identically, across the algorithm family and both in-process
+//! transports.
+//!
+//! The engine writes a durable snapshot each round (the
+//! `--checkpoint-every 1` cadence), the fault plan schedules the
+//! coordinator's death entering round R, and the engine drops its
+//! entire aggregate state (model, per-client Hᵢ mirrors, commit
+//! watermarks, α, RNG stream positions, byte meters) and rebuilds it
+//! from disk before continuing. The healed trace must match an
+//! uninterrupted run of the same plan bit for bit — grad norms,
+//! losses, committed/missing/flagged accounting — with Byzantine
+//! corruption, a robust defense and drawn straggler delays composing
+//! through the restore.
+
+use fednl::algorithms::{
+    run_engine_from, run_fednl_ls_pool, run_fednl_pool, run_fednl_pp_pool,
+    ClientState, LineSearchParams, Options, PPClientState, StepPolicy,
+};
+use fednl::compressors::by_name;
+use fednl::coordinator::{
+    checkpoint, CheckpointCfg, ClientPool, CorruptMode, FaultPlan,
+    FaultPool, SeqPool, ThreadedPool,
+};
+use fednl::data::{
+    generate_synthetic, parse_libsvm_bytes, write_libsvm, Dataset, SynthSpec,
+};
+use fednl::metrics::Trace;
+use fednl::oracle::LogisticOracle;
+use fednl::robust::Defense;
+
+const N_CLIENTS: usize = 4;
+const N_I: usize = 30;
+const ROUNDS: u64 = 8;
+
+fn dataset(seed: u64) -> Dataset {
+    let spec = SynthSpec {
+        d_raw: 8,
+        n_samples: N_CLIENTS * N_I,
+        density: 0.5,
+        noise: 1.0,
+        label_bias: 0.0,
+        seed,
+    };
+    // Text round-trip on every test: generator → LIBSVM → parser.
+    let text = write_libsvm(&generate_synthetic(&spec));
+    let (samples, got_d) = parse_libsvm_bytes(text.as_bytes()).unwrap();
+    let mut ds = Dataset::from_libsvm(&samples, got_d.max(8));
+    ds.reshuffle(seed ^ 0xABCD);
+    ds
+}
+
+fn fednl_clients(ds: &Dataset) -> Vec<ClientState> {
+    ds.split_even(N_CLIENTS)
+        .unwrap()
+        .into_iter()
+        .map(|sh| {
+            let id = sh.client_id;
+            ClientState::new(
+                id,
+                Box::new(LogisticOracle::new(sh, 1e-3)),
+                by_name("topk", ds.d, 4, 100 + id as u64).unwrap(),
+                None,
+            )
+        })
+        .collect()
+}
+
+fn pp_clients(ds: &Dataset, x0: &[f64]) -> Vec<PPClientState> {
+    ds.split_even(N_CLIENTS)
+        .unwrap()
+        .into_iter()
+        .map(|sh| {
+            let id = sh.client_id;
+            PPClientState::new(
+                id,
+                Box::new(LogisticOracle::new(sh, 1e-3)),
+                by_name("topk", ds.d, 4, 100 + id as u64).unwrap(),
+                None,
+                x0,
+            )
+        })
+        .collect()
+}
+
+/// The faults every leg runs under (killmaster events are layered on
+/// top): two corruptions and a window of drawn lognormal delays
+/// (median ≈ e^1 ≈ 3 ms — enough to prove the draws replay, cheap
+/// enough to run 50+ legs).
+fn base_plan() -> FaultPlan {
+    FaultPlan::none()
+        .with_corrupt(3, 1, CorruptMode::SignFlip)
+        .with_corrupt(5, 0, CorruptMode::Scale(10.0))
+        .with_delay_dist(2, 4, 1.0, 0.5)
+}
+
+/// One run of `algo` on a Seq or Threaded pool under `plan`, with or
+/// without checkpointing. The Newton family additionally folds under
+/// the median defense, so the snapshot's flagged accounting is
+/// load-bearing; PP aggregates deltas and runs undefended.
+fn run_leg(
+    ds: &Dataset,
+    algo: &str,
+    threaded: bool,
+    plan: &FaultPlan,
+    ck: Option<CheckpointCfg>,
+) -> Trace {
+    let d = ds.d;
+    let x0 = vec![0.0; d];
+    let opts = Options {
+        rounds: ROUNDS,
+        track_loss: true,
+        defense: if algo == "fednl-pp" {
+            None
+        } else {
+            Some(Defense::Median)
+        },
+        checkpoint: ck,
+        ..Default::default()
+    };
+    if algo == "fednl-pp" {
+        let clients = pp_clients(ds, &x0);
+        let run = |pool: &mut dyn ClientPool| {
+            run_fednl_pp_pool(pool, &opts, 2, 7, x0.clone(), "ck/pp")
+        };
+        if threaded {
+            let mut pool =
+                FaultPool::new(ThreadedPool::new(clients, 2), plan.clone());
+            run(&mut pool)
+        } else {
+            let mut pool =
+                FaultPool::new(SeqPool::new(clients), plan.clone());
+            run(&mut pool)
+        }
+    } else {
+        let clients = fednl_clients(ds);
+        let run = |pool: &mut dyn ClientPool| {
+            if algo == "fednl" {
+                run_fednl_pool(pool, &opts, x0.clone(), "ck/newton")
+            } else {
+                run_fednl_ls_pool(
+                    pool,
+                    &opts,
+                    &LineSearchParams::default(),
+                    x0.clone(),
+                    "ck/ls",
+                )
+            }
+        };
+        if threaded {
+            let mut pool =
+                FaultPool::new(ThreadedPool::new(clients, 2), plan.clone());
+            run(&mut pool)
+        } else {
+            let mut pool =
+                FaultPool::new(SeqPool::new(clients), plan.clone());
+            run(&mut pool)
+        }
+    }
+}
+
+/// Bitwise trace equality on everything the trajectory is a function
+/// of (bytes and elapsed are metering, not trajectory).
+fn assert_identical(a: &Trace, b: &Trace, what: &str) {
+    assert_eq!(
+        a.records.len(),
+        b.records.len(),
+        "{what}: round counts differ"
+    );
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert!(
+            x.round == y.round
+                && x.grad_norm.to_bits() == y.grad_norm.to_bits()
+                && x.loss.to_bits() == y.loss.to_bits()
+                && x.committed == y.committed
+                && x.missing == y.missing
+                && x.flagged == y.flagged,
+            "{what}: diverged at round {}: grad {:.17e} vs {:.17e}, \
+             committed {} vs {}, flagged {} vs {}",
+            x.round,
+            x.grad_norm,
+            y.grad_norm,
+            x.committed,
+            y.committed,
+            x.flagged,
+            y.flagged
+        );
+    }
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("fednl-ck-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The property: for every algorithm, on both in-process pools, a
+/// coordinator crash entering ANY round R heals into the
+/// uninterrupted trajectory, bit for bit.
+#[test]
+fn killmaster_at_every_round_heals_bit_identically() {
+    let ds = dataset(42);
+    for algo in ["fednl", "fednl-ls", "fednl-pp"] {
+        for threaded in [false, true] {
+            let reference =
+                run_leg(&ds, algo, threaded, &base_plan(), None);
+            assert_eq!(reference.records.len() as u64, ROUNDS);
+            for r in 0..ROUNDS {
+                let dir =
+                    tmp_dir(&format!("{algo}-{}-{r}", threaded as u8));
+                let plan = base_plan().with_master_kill(r);
+                let healed = run_leg(
+                    &ds,
+                    algo,
+                    threaded,
+                    &plan,
+                    Some(CheckpointCfg::new(dir.to_str().unwrap(), 1)),
+                );
+                assert!(
+                    std::fs::read_dir(&dir)
+                        .map(|mut d| d.next().is_some())
+                        .unwrap_or(false),
+                    "{algo}: no snapshots written to {}",
+                    dir.display()
+                );
+                assert_identical(
+                    &reference,
+                    &healed,
+                    &format!(
+                        "{algo}/{} killmaster@{r}",
+                        if threaded { "threaded" } else { "seq" }
+                    ),
+                );
+                let _ = std::fs::remove_dir_all(&dir);
+            }
+        }
+    }
+}
+
+/// A finished run's terminal snapshot restores to a finished run:
+/// zero further rounds, the preloaded trace bit-identical — and the
+/// `--checkpoint-every 2` cadence leaves the terminal round loadable.
+#[test]
+fn terminal_snapshot_restores_finished() {
+    let ds = dataset(9);
+    let dir = tmp_dir("terminal");
+    let plan = FaultPlan::none();
+    let first = run_leg(
+        &ds,
+        "fednl",
+        false,
+        &plan,
+        Some(CheckpointCfg::new(dir.to_str().unwrap(), 2)),
+    );
+    let snap = checkpoint::load_latest(dir.to_str().unwrap())
+        .unwrap()
+        .expect("terminal snapshot missing");
+    assert!(snap.finished);
+    assert_eq!(snap.round_next, ROUNDS);
+    let opts = Options {
+        rounds: ROUNDS,
+        track_loss: true,
+        defense: Some(Defense::Median),
+        ..Default::default()
+    };
+    let mut pool = SeqPool::new(fednl_clients(&ds));
+    let resumed = run_engine_from(
+        &mut pool,
+        &opts,
+        StepPolicy::Newton,
+        vec![0.0; ds.d],
+        "ck/resume",
+        Some(snap),
+    );
+    assert_identical(&first, &resumed, "terminal restore");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Speculation overlaps server work with an unfinished round — a
+/// snapshot cannot capture that in-flight state, so the combination
+/// is rejected up front.
+#[test]
+#[should_panic(expected = "--speculate is incompatible with checkpointing")]
+fn speculate_with_checkpointing_panics() {
+    let ds = dataset(7);
+    let dir = tmp_dir("speculate");
+    let opts = Options {
+        rounds: 2,
+        speculate: true,
+        checkpoint: Some(CheckpointCfg::new(dir.to_str().unwrap(), 1)),
+        ..Default::default()
+    };
+    let mut pool = SeqPool::new(fednl_clients(&ds));
+    let _ = run_fednl_pool(&mut pool, &opts, vec![0.0; ds.d], "ck/spec");
+}
